@@ -1,0 +1,86 @@
+//! EXP-A1 ablation: the two independent exact solvers (dense simplex vs
+//! parametric max-flow bisection) must agree on random instances; compare
+//! their latencies across placement families and problem sizes.
+//!
+//! Run: `cargo bench --bench ablation_solvers`
+
+use std::time::Duration;
+
+use usec::optim::{solve_load_matrix, SolveParams, SolverKind};
+use usec::placement::{Placement, PlacementKind};
+use usec::util::benchkit::Bench;
+use usec::util::Rng;
+
+fn main() {
+    let mut rng = Rng::new(77);
+    let cases = [
+        ("rep N=6 G=6 J=3", Placement::build(PlacementKind::Repetition, 6, 6, 3).unwrap()),
+        ("cyc N=6 G=6 J=3", Placement::build(PlacementKind::Cyclic, 6, 6, 3).unwrap()),
+        ("man N=6 G=20 J=3", Placement::build(PlacementKind::Man, 6, 20, 3).unwrap()),
+        ("cyc N=12 G=24 J=4", Placement::build(PlacementKind::Cyclic, 12, 24, 4).unwrap()),
+        ("man N=8 G=56 J=3", Placement::build(PlacementKind::Man, 8, 56, 3).unwrap()),
+    ];
+
+    // agreement sweep
+    let mut max_gap = 0.0f64;
+    let mut checked = 0usize;
+    for (_, p) in &cases {
+        let avail: Vec<usize> = (0..p.machines()).collect();
+        for s_cnt in 0..2usize {
+            for _ in 0..50 {
+                let speeds: Vec<f64> = (0..p.machines())
+                    .map(|_| rng.exponential(1.0).max(0.02))
+                    .collect();
+                let a = solve_load_matrix(
+                    p,
+                    &avail,
+                    &speeds,
+                    &SolveParams {
+                        stragglers: s_cnt,
+                        solver: SolverKind::Simplex,
+                        ..Default::default()
+                    },
+                )
+                .unwrap();
+                let b = solve_load_matrix(
+                    p,
+                    &avail,
+                    &speeds,
+                    &SolveParams {
+                        stragglers: s_cnt,
+                        solver: SolverKind::ParametricFlow,
+                        ..Default::default()
+                    },
+                )
+                .unwrap();
+                let gap = (a.time - b.time).abs() / a.time.max(1e-12);
+                max_gap = max_gap.max(gap);
+                checked += 1;
+            }
+        }
+    }
+    println!("solver agreement: {checked} random instances, max relative gap {max_gap:.2e}");
+    assert!(max_gap < 1e-5, "solvers disagree");
+
+    // latency comparison
+    let mut bench = Bench::with_budget(Duration::from_millis(300), 3000);
+    for (label, p) in &cases {
+        let avail: Vec<usize> = (0..p.machines()).collect();
+        let speeds: Vec<f64> = (0..p.machines())
+            .map(|i| 1.0 + (i % 5) as f64)
+            .collect();
+        for (sname, solver) in [
+            ("simplex", SolverKind::Simplex),
+            ("flow", SolverKind::ParametricFlow),
+        ] {
+            let params = SolveParams {
+                solver,
+                ..Default::default()
+            };
+            bench.run(&format!("{label} [{sname}]"), || {
+                solve_load_matrix(p, &avail, &speeds, &params).unwrap().time
+            });
+        }
+    }
+    println!("{}", bench.table());
+}

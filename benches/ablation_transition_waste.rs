@@ -1,0 +1,65 @@
+//! EXP-A5 ablation: transition waste ([2], paper §I) across elastic
+//! transitions — naive per-step re-solve vs the stabilized assignment.
+//!
+//! Run: `cargo bench --bench ablation_transition_waste`
+
+use usec::linalg::partition::submatrix_ranges;
+use usec::optim::transition::{stabilize, transition_waste};
+use usec::optim::{build_assignment, SolveParams};
+use usec::placement::{Placement, PlacementKind};
+use usec::sched::ElasticityTrace;
+use usec::util::fmt::render_table;
+
+fn main() {
+    let p = Placement::build(PlacementKind::Cyclic, 6, 6, 3).unwrap();
+    let speeds = vec![1.0, 2.0, 4.0, 8.0, 16.0, 32.0];
+    let sub_rows: Vec<usize> = submatrix_ranges(6000, 6)
+        .unwrap()
+        .iter()
+        .map(|r| r.len())
+        .collect();
+    let params = SolveParams::default();
+    let steps = 200;
+
+    let mut rows = Vec::new();
+    for (label, stabilized) in [("naive re-solve", false), ("stabilized", true)] {
+        let mut trace = ElasticityTrace::bernoulli(6, 0.25, 0.5, 3, 99);
+        let mut prev: Option<usec::optim::Assignment> = None;
+        let mut total_waste = 0usize;
+        let mut transitions = 0usize;
+        for _ in 0..steps {
+            let avail = trace.next_step();
+            if p.check_feasible(&avail, 0).is_err() {
+                continue;
+            }
+            let mut a = build_assignment(&p, &avail, &speeds, &params, &sub_rows).unwrap();
+            if let Some(old) = &prev {
+                if stabilized {
+                    stabilize(old, &mut a);
+                }
+                total_waste += transition_waste(old, &a);
+                transitions += 1;
+            }
+            a.validate(&sub_rows).unwrap();
+            prev = Some(a);
+        }
+        rows.push(vec![
+            label.to_string(),
+            transitions.to_string(),
+            total_waste.to_string(),
+            format!("{:.1}", total_waste as f64 / transitions.max(1) as f64),
+        ]);
+    }
+    println!(
+        "EXP-A5: transition waste over {steps} elastic steps (q=6000, cyclic, \
+         preempt 0.25 / arrive 0.5)\n"
+    );
+    println!(
+        "{}",
+        render_table(
+            &["policy", "transitions", "total waste (rows)", "waste/transition"],
+            &rows
+        )
+    );
+    println!("(waste = rows moved between machines beyond the load-change minimum [2])");
+}

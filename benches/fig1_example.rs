@@ -1,0 +1,35 @@
+//! EXP-F1 bench: regenerate paper Fig. 1 (load matrices + computation
+//! times) and measure the per-instance solve latency.
+//!
+//! Run: `cargo bench --bench fig1_example`
+
+use std::time::Duration;
+
+use usec::exp::fig1;
+use usec::optim::{solve_load_matrix, SolveParams, SolverKind};
+use usec::placement::{Placement, PlacementKind};
+use usec::util::benchkit::Bench;
+
+fn main() {
+    println!("{}", fig1::report().expect("fig1"));
+
+    let speeds = fig1::fig1_speeds();
+    let avail: Vec<usize> = (0..6).collect();
+    let mut bench = Bench::with_budget(Duration::from_millis(400), 5000);
+    for (label, kind, solver) in [
+        ("solve fig1 repetition (simplex)", PlacementKind::Repetition, SolverKind::Simplex),
+        ("solve fig1 cyclic (simplex)", PlacementKind::Cyclic, SolverKind::Simplex),
+        ("solve fig1 repetition (flow)", PlacementKind::Repetition, SolverKind::ParametricFlow),
+        ("solve fig1 cyclic (flow)", PlacementKind::Cyclic, SolverKind::ParametricFlow),
+    ] {
+        let p = Placement::build(kind, 6, 6, 3).unwrap();
+        let params = SolveParams {
+            solver,
+            ..Default::default()
+        };
+        bench.run(label, || {
+            solve_load_matrix(&p, &avail, &speeds, &params).unwrap().time
+        });
+    }
+    println!("{}", bench.table());
+}

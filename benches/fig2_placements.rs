@@ -1,0 +1,26 @@
+//! EXP-F2/T1 bench: regenerate paper Fig. 2 histograms and Table I moments
+//! over 5000 exponential speed realizations (override with `FIG2_N`).
+//!
+//! Run: `cargo bench --bench fig2_placements`
+
+use usec::exp::fig2::{report, Fig2Params};
+
+fn main() {
+    let realizations = std::env::var("FIG2_N")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(5000);
+    let t0 = std::time::Instant::now();
+    let out = report(&Fig2Params {
+        realizations,
+        ..Default::default()
+    })
+    .expect("fig2");
+    println!("{out}");
+    println!(
+        "({} realizations x 3 placements solved in {:.2?}; {:.2} solves/ms)",
+        realizations,
+        t0.elapsed(),
+        (realizations * 3) as f64 / t0.elapsed().as_millis().max(1) as f64
+    );
+}

@@ -1,0 +1,33 @@
+//! EXP-F3 bench: regenerate paper Fig. 3 (straggler-tolerant assignment)
+//! and measure the solve + filling pipeline latency.
+//!
+//! Run: `cargo bench --bench fig3_straggler`
+
+use std::time::Duration;
+
+use usec::exp::fig3;
+use usec::linalg::partition::submatrix_ranges;
+use usec::optim::{build_assignment, SolveParams};
+use usec::placement::{Placement, PlacementKind};
+use usec::util::benchkit::Bench;
+
+fn main() {
+    println!("{}", fig3::report().expect("fig3"));
+
+    let p = Placement::build(PlacementKind::Repetition, 6, 6, 3).unwrap();
+    let avail: Vec<usize> = (0..6).collect();
+    let speeds = vec![1.0; 6];
+    let sub_rows: Vec<usize> = submatrix_ranges(3600, 6)
+        .unwrap()
+        .iter()
+        .map(|r| r.len())
+        .collect();
+    let mut bench = Bench::with_budget(Duration::from_millis(400), 5000);
+    for s in 0..3usize {
+        let params = SolveParams::with_stragglers(s);
+        bench.run(&format!("solve+fill+quantize S={s}"), || {
+            build_assignment(&p, &avail, &speeds, &params, &sub_rows).unwrap()
+        });
+    }
+    println!("{}", bench.table());
+}

@@ -1,0 +1,75 @@
+//! EXP-F4 bench: the paper's headline end-to-end experiment — elastic
+//! power iteration, heterogeneous (Algorithm 1) vs uniform assignment,
+//! without stragglers (Fig. 4 top) and with 2 injected stragglers per
+//! iteration (Fig. 4 bottom).
+//!
+//! Environment overrides: `FIG4_Q` (matrix dim, paper scale = 6000; note
+//! that PJRT artifacts are baked for the `make artifacts COLS=… Q=…`
+//! shapes), `FIG4_STEPS`, `FIG4_BACKEND` (host|pjrt).
+//!
+//! Run: `cargo bench --bench fig4_power_iteration`
+
+use usec::config::types::BackendKind;
+use usec::exp::fig4::{report, Fig4Params};
+
+fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name)
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+fn main() {
+    let base = Fig4Params {
+        q: env_usize("FIG4_Q", 1536),
+        steps: env_usize("FIG4_STEPS", 40),
+        backend: std::env::var("FIG4_BACKEND")
+            .ok()
+            .and_then(|v| BackendKind::parse(&v).ok())
+            .unwrap_or(BackendKind::Host),
+        ..Default::default()
+    };
+
+    // Fig. 4 top: no stragglers
+    println!("{}", report(&base).expect("fig4 top (no stragglers)"));
+
+    // Fig. 4 bottom, paper's reading (§V runs S = 0): 2 *slow* stragglers
+    // per iteration that the master must wait for. Fixed victims (the same
+    // overloaded instances every step) — exactly what Algorithm 1's EWMA
+    // speed tracking exists to absorb.
+    let bottom = Fig4Params {
+        injected: 2,
+        tolerance: 0,
+        slowdown: 3.0,
+        fixed_victims: true,
+        ..base
+    };
+    println!("{}", report(&bottom).expect("fig4 bottom (2 slow stragglers)"));
+
+    // Variant: fresh random victims each step (unpredictable — the EWMA
+    // cannot learn them, so the gain shrinks toward the top-panel split of
+    // non-straggler time only).
+    let random_victims = Fig4Params {
+        fixed_victims: false,
+        ..bottom
+    };
+    println!(
+        "{}",
+        report(&random_victims).expect("fig4 variant (random slow stragglers)")
+    );
+
+    // Variant: redundant-assignment straggler tolerance (S = 2, dropped
+    // stragglers). With J = 3 replicas and S = 2 the assignment is fully
+    // constrained (every replica computes everything), so both policies
+    // coincide — included to document that boundary.
+    let drop_variant = Fig4Params {
+        injected: 2,
+        tolerance: 2,
+        slowdown: 0.0,
+        ..base
+    };
+    println!(
+        "{}",
+        report(&drop_variant).expect("fig4 variant (S=2, dropped)")
+    );
+}

@@ -1,0 +1,115 @@
+//! Hot-path microbenchmarks (the §Perf numbers in EXPERIMENTS.md):
+//!
+//! * assignment solve (simplex/flow), filling, quantization — the master's
+//!   per-step control path;
+//! * tile mat-vec on the host backend and (when artifacts exist) the PJRT
+//!   backend — the worker's per-tile data path;
+//! * one full master/worker step end-to-end.
+//!
+//! Run: `cargo bench --bench hotpath`
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use usec::config::types::AssignPolicy;
+use usec::linalg::partition::submatrix_ranges;
+use usec::linalg::gen;
+use usec::optim::{build_assignment, solve_load_matrix, SolveParams, SolverKind};
+use usec::placement::{Placement, PlacementKind};
+use usec::runtime::BackendSpec;
+use usec::sched::cluster::Cluster;
+use usec::sched::master::{Master, MasterConfig};
+use usec::sched::worker::{WorkerConfig, WorkerStorage};
+use usec::util::benchkit::Bench;
+
+fn main() {
+    let mut bench = Bench::with_budget(Duration::from_millis(500), 20_000);
+
+    // ---- control path ----
+    let p = Placement::build(PlacementKind::Man, 6, 20, 3).unwrap();
+    let avail: Vec<usize> = (0..6).collect();
+    let speeds = vec![1.3, 2.1, 0.7, 4.0, 1.1, 2.9];
+    for (name, solver) in [
+        ("solve MAN G=20 (simplex)", SolverKind::Simplex),
+        ("solve MAN G=20 (flow)", SolverKind::ParametricFlow),
+    ] {
+        let params = SolveParams {
+            solver,
+            ..Default::default()
+        };
+        bench.run(name, || {
+            solve_load_matrix(&p, &avail, &speeds, &params).unwrap().time
+        });
+    }
+    let sub_rows: Vec<usize> = submatrix_ranges(6000, 20).unwrap().iter().map(|r| r.len()).collect();
+    let params = SolveParams::with_stragglers(1);
+    bench.run("solve+fill+quantize MAN S=1 q=6000", || {
+        build_assignment(&p, &avail, &speeds, &params, &sub_rows).unwrap()
+    });
+
+    // ---- data path: tile matvec ----
+    let cols = 1536usize;
+    let tile = 128usize;
+    let x: Vec<f32> = (0..tile * cols).map(|i| (i % 13) as f32 * 0.1).collect();
+    let w: Vec<f32> = (0..cols).map(|i| (i % 7) as f32 * 0.01).collect();
+    let host = BackendSpec::Host.instantiate().unwrap();
+    bench.run("matvec tile 128x1536 (host)", || {
+        host.matvec_tile(&x, tile, cols, &w).unwrap()
+    });
+    let artifact_dir = usec::apps::harness::artifact_dir();
+    if artifact_dir.join("manifest.json").exists() {
+        let pjrt = BackendSpec::Pjrt { dir: artifact_dir }.instantiate().unwrap();
+        if pjrt.tile_rows() == Some(tile) {
+            bench.run("matvec tile 128x1536 (pjrt)", || {
+                pjrt.matvec_tile(&x, tile, cols, &w).unwrap()
+            });
+            let y: Vec<f32> = (0..cols).map(|i| (i % 5) as f32).collect();
+            bench.run("normalize q=1536 (pjrt)", || pjrt.normalize(&y).unwrap());
+            bench.run("normalize q=1536 (host)", || host.normalize(&y).unwrap());
+        }
+    }
+
+    // ---- end-to-end master step (host backend, 6 workers) ----
+    let q = 960;
+    let g = 6;
+    let placement = Placement::build(PlacementKind::Cyclic, 6, g, 3).unwrap();
+    let ranges = submatrix_ranges(q, g).unwrap();
+    let matrix = Arc::new(gen::random_dense(q, q, 1));
+    let arc_ranges = Arc::new(ranges.clone());
+    let configs: Vec<WorkerConfig> = (0..6)
+        .map(|id| WorkerConfig {
+            id,
+            backend: BackendSpec::Host,
+            speed: 1.0 + id as f64,
+            tile_rows: 128,
+            storage: WorkerStorage {
+                matrix: Arc::clone(&matrix),
+                sub_ranges: Arc::clone(&arc_ranges),
+            },
+        })
+        .collect();
+    let cluster = Cluster::spawn(configs).unwrap();
+    let mut master = Master::new(MasterConfig {
+        placement,
+        sub_ranges: ranges,
+        params: SolveParams::default(),
+        policy: AssignPolicy::Heterogeneous,
+        gamma: 0.5,
+        initial_speeds: (0..6).map(|i| 1.0 + i as f64).collect(),
+        row_cost_ns: 0,
+        recovery_timeout: Duration::from_secs(30),
+    })
+    .unwrap();
+    let w_vec = Arc::new(vec![0.01f32; q]);
+    let mut step = 0usize;
+    let mut e2e = Bench::with_budget(Duration::from_millis(1500), 200);
+    e2e.run("master step E2E q=960 (host, 6 workers)", || {
+        let out = master.step(&cluster, step, &w_vec, &avail, &[]).unwrap();
+        step += 1;
+        out.y.len()
+    });
+
+    println!("{}", bench.table());
+    println!("{}", e2e.table());
+    cluster.shutdown();
+}

@@ -1,0 +1,55 @@
+//! Elasticity demo: machines come and go mid-computation (the phenomenon
+//! the paper is named after) while power iteration keeps converging.
+//!
+//! Uses a Bernoulli preemption/arrival trace and prints a per-step
+//! timeline: which machines were up, who reported, how the master's speed
+//! estimates adapted, and the convergence metric.
+//!
+//! Run: `cargo run --release --example elastic_timeline`
+
+use usec::config::types::RunConfig;
+
+fn main() -> Result<(), usec::Error> {
+    let cfg = RunConfig {
+        q: 768,
+        r: 768,
+        steps: 60,
+        preempt_prob: 0.25,
+        arrive_prob: 0.45,
+        min_available: 3, // trace keeps ≥ J machines so every step is feasible
+        row_cost_ns: 50_000,
+        seed: 42,
+        speeds: vec![1.0, 2.4, 0.8, 2.0, 1.2, 2.8],
+        ..Default::default()
+    };
+    println!(
+        "elastic power iteration: q={}, {} steps, preempt p={}, arrive p={}\n",
+        cfg.q, cfg.steps, cfg.preempt_prob, cfg.arrive_prob
+    );
+
+    let res = usec::apps::run_power_iteration(&cfg)?;
+    println!("step  avail  reported  wall(ms)  solve(us)  pred-c     NMSE");
+    println!("{}", "-".repeat(66));
+    for s in res.timeline.steps() {
+        println!(
+            "{:>4}  {:>5}  {:>8}  {:>8.1}  {:>9.0}  {:>6.3}  {:>9.2e}",
+            s.step,
+            s.available,
+            s.reported,
+            s.wall.as_secs_f64() * 1e3,
+            s.solve.as_secs_f64() * 1e6,
+            s.predicted_c,
+            s.metric
+        );
+    }
+    println!(
+        "\nfinal NMSE {:.3e} after {:?} total wall",
+        res.final_nmse,
+        res.timeline.total_wall()
+    );
+    println!(
+        "(availability varied across steps; every transition re-solved the \
+         assignment, no computation was lost)"
+    );
+    Ok(())
+}

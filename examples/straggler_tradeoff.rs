@@ -1,0 +1,61 @@
+//! Remark 1 demo: computation time vs straggler tolerance.
+//!
+//! Sweeps S = 0..3 over the three placements, printing the optimal
+//! `c(M*)` (theory, LP) and a measured elastic run with S injected
+//! stragglers per step (practice). Time grows with S — the paper's
+//! robustness trade-off.
+//!
+//! Run: `cargo run --release --example straggler_tradeoff`
+
+use usec::config::types::RunConfig;
+use usec::optim::{solve_load_matrix, SolveParams};
+use usec::placement::{Placement, PlacementKind};
+use usec::util::fmt::render_table;
+
+fn main() -> Result<(), usec::Error> {
+    // --- theory: optimal c vs S (paper Remark 1) ---
+    let speeds = vec![1.0, 2.0, 4.0, 8.0, 16.0, 32.0];
+    let avail: Vec<usize> = (0..6).collect();
+    let mut rows = Vec::new();
+    for (name, kind, g) in [
+        ("repetition", PlacementKind::Repetition, 6),
+        ("cyclic", PlacementKind::Cyclic, 6),
+        ("man", PlacementKind::Man, 20),
+    ] {
+        let p = Placement::build(kind, 6, g, 3)?;
+        let mut cells = vec![name.to_string()];
+        for s in 0..3usize {
+            let sol = solve_load_matrix(&p, &avail, &speeds, &SolveParams::with_stragglers(s))?;
+            cells.push(format!("{:.4}", sol.time));
+        }
+        rows.push(cells);
+    }
+    println!("optimal computation time c* vs straggler tolerance (s = [1,2,4,8,16,32]):\n");
+    println!("{}", render_table(&["placement", "S=0", "S=1", "S=2"], &rows));
+
+    // --- practice: measured elastic runs with injected stragglers ---
+    println!("\nmeasured elastic power iteration (q=384, 15 steps, stragglers injected = S):\n");
+    let mut rows = Vec::new();
+    for s in 0..3usize {
+        let cfg = RunConfig {
+            q: 384,
+            r: 384,
+            steps: 15,
+            stragglers: s,
+            injected_stragglers: s,
+            row_cost_ns: 100_000,
+            speeds: speeds.clone(),
+            seed: 7,
+            ..Default::default()
+        };
+        let res = usec::apps::run_power_iteration(&cfg)?;
+        rows.push(vec![
+            format!("S={s}"),
+            format!("{:.3}s", res.timeline.total_wall().as_secs_f64()),
+            format!("{:.2e}", res.final_nmse),
+        ]);
+    }
+    println!("{}", render_table(&["tolerance", "total wall", "final NMSE"], &rows));
+    println!("(wall time grows with S: every row is computed 1+S times)");
+    Ok(())
+}

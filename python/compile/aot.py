@@ -1,0 +1,109 @@
+"""AOT pipeline: lower the L2/L1 functions to HLO *text* artifacts.
+
+Run once at build time (``make artifacts``); the Rust runtime loads the
+text with ``HloModuleProto::from_text_file`` and compiles it on the PJRT
+CPU client. HLO text — NOT ``.serialize()`` — is the interchange format:
+jax >= 0.5 emits protos with 64-bit instruction ids that the crate's
+xla_extension 0.5.1 rejects; the text parser reassigns ids (see
+/opt/xla-example/README.md).
+
+Artifacts (shapes baked in, recorded in ``manifest.json``):
+
+* ``matvec_t{T}_c{C}.hlo.txt``   — tile_matvec(f32[T,C], f32[C]) -> (f32[T],)
+* ``normalize_q{Q}.hlo.txt``     — combine_normalize(f32[Q]) -> (f32[Q], f32)
+* ``dot_q{Q}.hlo.txt``           — rayleigh_dot(f32[Q], f32[Q]) -> (f32,)
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def lower_artifacts(tile_rows: int, cols: int, q: int):
+    """Yield (name, metadata, hlo_text) for every artifact."""
+    specs = [
+        (
+            f"matvec_t{tile_rows}_c{cols}",
+            {
+                "kind": "matvec",
+                "tile_rows": tile_rows,
+                "cols": cols,
+                "inputs": [[tile_rows, cols], [cols]],
+                "outputs": [[tile_rows]],
+            },
+            jax.jit(model.tile_matvec).lower(f32(tile_rows, cols), f32(cols)),
+        ),
+        (
+            f"normalize_q{q}",
+            {
+                "kind": "normalize",
+                "q": q,
+                "inputs": [[q]],
+                "outputs": [[q], []],
+            },
+            jax.jit(model.combine_normalize).lower(f32(q)),
+        ),
+        (
+            f"dot_q{q}",
+            {
+                "kind": "dot",
+                "q": q,
+                "inputs": [[q], [q]],
+                "outputs": [[]],
+            },
+            jax.jit(model.rayleigh_dot).lower(f32(q), f32(q)),
+        ),
+    ]
+    for name, meta, lowered in specs:
+        yield name, meta, to_hlo_text(lowered)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--outdir", default="../artifacts", help="artifact directory")
+    ap.add_argument("--tile-rows", type=int, default=128,
+                    help="rows per worker execution tile")
+    ap.add_argument("--cols", type=int, default=1536, help="matrix columns r")
+    ap.add_argument("--q", type=int, default=1536, help="matrix rows q")
+    args = ap.parse_args()
+
+    os.makedirs(args.outdir, exist_ok=True)
+    manifest = {
+        "tile_rows": args.tile_rows,
+        "cols": args.cols,
+        "q": args.q,
+        "artifacts": [],
+    }
+    for name, meta, text in lower_artifacts(args.tile_rows, args.cols, args.q):
+        path = f"{name}.hlo.txt"
+        with open(os.path.join(args.outdir, path), "w") as f:
+            f.write(text)
+        manifest["artifacts"].append({"name": name, "path": path, **meta})
+        print(f"wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(args.outdir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote manifest.json ({len(manifest['artifacts'])} artifacts)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,84 @@
+"""L1 Pallas kernel: tiled mat-vec `y = X @ w` for one row tile.
+
+The kernel is the compute hot-spot of the USEC worker: each worker executes
+it once per assigned row tile (`TILE_R` rows of a stored sub-matrix).
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the grid streams
+`(BLOCK_R, BLOCK_C)` blocks of the tile through VMEM and reduces over the
+column dimension with an accumulation pattern (`@pl.when(k == 0)` zero-init,
+`+=` thereafter). `BLOCK_R × BLOCK_C` is sized for the VMEM budget; the
+`jnp.dot` inside the block maps to the MXU. `interpret=True` is mandatory on
+this CPU-only image — real-TPU lowering emits a Mosaic custom-call the CPU
+PJRT plugin cannot execute (see /opt/xla-example/README.md).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+#: Default execution-tile height (rows per PJRT execution). Must match the
+#: Rust side's `tile_rows` (artifacts record it in the manifest).
+DEFAULT_TILE_ROWS = 128
+
+#: VMEM block budget: BLOCK_R×BLOCK_C f32 ≈ 64×256×4 B = 64 KiB per x-block.
+DEFAULT_BLOCK_R = 64
+DEFAULT_BLOCK_C = 256
+
+
+def _largest_divisor_leq(n: int, cap: int) -> int:
+    """Largest divisor of `n` that is ≤ cap (≥ 1)."""
+    for d in range(min(cap, n), 0, -1):
+        if n % d == 0:
+            return d
+    return 1
+
+
+def pick_blocks(tile_rows: int, cols: int,
+                block_r: int = DEFAULT_BLOCK_R,
+                block_c: int = DEFAULT_BLOCK_C):
+    """Choose block sizes that exactly divide the tile (no masking needed)."""
+    return (_largest_divisor_leq(tile_rows, block_r),
+            _largest_divisor_leq(cols, block_c))
+
+
+def _matvec_kernel(x_ref, w_ref, o_ref):
+    """Grid point (i, k): accumulate X[i-block] @ w[k-block] into y[i-block].
+
+    Column blocks (`k`) form the reduction; the output block is revisited
+    once per `k`, so it is zero-initialized at `k == 0`.
+    """
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("block_r", "block_c"))
+def matvec(x, w, *, block_r: int = DEFAULT_BLOCK_R, block_c: int = DEFAULT_BLOCK_C):
+    """`y = x @ w` via the Pallas kernel.
+
+    x: f32[tile_rows, cols], w: f32[cols] -> f32[tile_rows].
+    Block sizes are clamped to divisors of the shape, so any shape works;
+    powers of two get the intended blocking.
+    """
+    tile_rows, cols = x.shape
+    br, bc = pick_blocks(tile_rows, cols, block_r, block_c)
+    grid = (tile_rows // br, cols // bc)
+    return pl.pallas_call(
+        _matvec_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((br, bc), lambda i, k: (i, k)),
+            pl.BlockSpec((bc,), lambda i, k: (k,)),
+        ],
+        out_specs=pl.BlockSpec((br,), lambda i, k: (i,)),
+        out_shape=jax.ShapeDtypeStruct((tile_rows,), jnp.float32),
+        interpret=True,  # CPU-only image; see module docstring
+    )(x, w)

@@ -1,0 +1,33 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+Every Pallas kernel in this package must agree with the corresponding
+function here (pytest enforces it across a hypothesis sweep of shapes).
+These references are also what the L2 model would compute without the
+custom kernel, so they double as the "fusion baseline" for the perf notes.
+"""
+
+import jax.numpy as jnp
+
+
+def matvec(x, w):
+    """y = X @ w for a row tile X[tile_rows, cols], w[cols] -> y[tile_rows]."""
+    return jnp.dot(x, w, preferred_element_type=jnp.float32)
+
+
+def normalize(y):
+    """Unit-normalize; returns (y/||y||, ||y||). Zero-safe (returns y, 0)."""
+    n = jnp.linalg.norm(y)
+    safe = jnp.where(n > 0.0, n, 1.0)
+    return y / safe, n
+
+
+def dot(a, b):
+    """Rayleigh-quotient numerator <a, b>."""
+    return jnp.dot(a, b, preferred_element_type=jnp.float32)
+
+
+def power_step(x, b):
+    """One full power-iteration step b <- X b / ||X b|| (test oracle)."""
+    y = matvec(x, b)
+    bn, n = normalize(y)
+    return bn, n

@@ -1,0 +1,44 @@
+"""L2: the JAX compute graph of the USEC worker and master.
+
+Three build-time-lowered functions (all AOT-compiled to HLO text by
+`aot.py`; Rust loads them via PJRT and Python never runs at request time):
+
+* ``tile_matvec`` — the worker hot path: one assigned row tile times the
+  iterate, through the L1 Pallas kernel.
+* ``combine_normalize`` — the master step: normalize the assembled
+  ``y = X b`` and report its norm (the power-iteration eigenvalue
+  estimate as iterates converge).
+* ``rayleigh_dot`` — optional eigenvalue refinement ``<b, X b>``.
+
+``power_step_local`` is a pure-JAX reference of one *whole* step over the
+full matrix, used by pytest to check that tile decomposition + combine is
+exactly equivalent to the undistributed computation.
+"""
+
+import jax.numpy as jnp
+
+from compile.kernels import matvec as matvec_kernel
+from compile.kernels import ref
+
+
+def tile_matvec(x_tile, w):
+    """Worker: y_tile = X_tile @ w (L1 Pallas kernel). Returns a 1-tuple."""
+    return (matvec_kernel.matvec(x_tile, w),)
+
+
+def combine_normalize(y):
+    """Master: unit-normalize the assembled product; return (b_next, norm)."""
+    bn, n = ref.normalize(y)
+    return (bn, n)
+
+
+def rayleigh_dot(a, b):
+    """Master: <a, b> for the Rayleigh-quotient eigenvalue estimate."""
+    return (ref.dot(a, b),)
+
+
+def power_step_local(x, b):
+    """Reference: one full power-iteration step on one host (tests only)."""
+    y = ref.matvec(x, b)
+    bn, n = ref.normalize(y)
+    return (bn, n)

@@ -1,0 +1,58 @@
+"""AOT pipeline: artifacts lower to loadable HLO text with stable shapes."""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from compile import aot
+
+
+@pytest.fixture(scope="module")
+def artifacts():
+    return list(aot.lower_artifacts(tile_rows=32, cols=64, q=48))
+
+
+def test_three_artifacts(artifacts):
+    names = [n for n, _, _ in artifacts]
+    assert names == ["matvec_t32_c64", "normalize_q48", "dot_q48"]
+
+
+def test_hlo_text_structure(artifacts):
+    for name, _meta, text in artifacts:
+        assert text.startswith("HloModule"), name
+        assert "ENTRY" in text, name
+        # tuple return convention (rust side unwraps with to_tuple*)
+        assert "tuple" in text, name
+
+
+def test_matvec_artifact_shapes(artifacts):
+    name, meta, text = artifacts[0]
+    assert meta["inputs"] == [[32, 64], [64]]
+    assert meta["outputs"] == [[32]]
+    assert "f32[32,64]" in text
+    assert "f32[64]" in text
+
+
+def test_normalize_artifact_has_two_outputs(artifacts):
+    _, meta, text = artifacts[1]
+    assert meta["outputs"] == [[48], []]
+    assert "f32[48]" in text
+
+
+def test_cli_writes_manifest(tmp_path):
+    out = tmp_path / "arts"
+    subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--outdir", str(out),
+         "--tile-rows", "16", "--cols", "32", "--q", "24"],
+        check=True,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(aot.__file__))),
+    )
+    manifest = json.loads((out / "manifest.json").read_text())
+    assert manifest["tile_rows"] == 16
+    assert len(manifest["artifacts"]) == 3
+    for a in manifest["artifacts"]:
+        assert (out / a["path"]).exists()
+        assert (out / a["path"]).read_text().startswith("HloModule")

@@ -1,0 +1,115 @@
+"""L1 correctness: the Pallas matvec kernel vs the pure-jnp oracle.
+
+This is the core correctness signal for the kernel that every USEC worker
+executes. Hypothesis sweeps tile shapes (divisible and ragged), value
+scales, and block-size overrides; fixed cases pin the artifact shapes.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import matvec as mk
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _rand(shape, seed, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.uniform(-scale, scale, size=shape), dtype=jnp.float32)
+
+
+def assert_matches_ref(x, w, **kw):
+    got = mk.matvec(x, w, **kw)
+    want = ref.matvec(x, w)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-4)
+
+
+class TestFixedShapes:
+    def test_artifact_shape_128x1536(self):
+        assert_matches_ref(_rand((128, 1536), 0), _rand((1536,), 1))
+
+    def test_single_block(self):
+        assert_matches_ref(_rand((8, 16), 2), _rand((16,), 3))
+
+    def test_one_row(self):
+        assert_matches_ref(_rand((1, 64), 4), _rand((64,), 5))
+
+    def test_one_col(self):
+        assert_matches_ref(_rand((64, 1), 6), _rand((1,), 7))
+
+    def test_zero_matrix(self):
+        x = jnp.zeros((32, 32), jnp.float32)
+        w = _rand((32,), 8)
+        np.testing.assert_array_equal(np.asarray(mk.matvec(x, w)), np.zeros(32))
+
+    def test_identity(self):
+        x = jnp.eye(16, dtype=jnp.float32)
+        w = _rand((16,), 9)
+        np.testing.assert_allclose(np.asarray(mk.matvec(x, w)),
+                                   np.asarray(w), rtol=1e-6)
+
+
+class TestBlocking:
+    def test_pick_blocks_divides(self):
+        br, bc = mk.pick_blocks(128, 1536)
+        assert 128 % br == 0 and 1536 % bc == 0
+
+    def test_pick_blocks_prime_dims(self):
+        br, bc = mk.pick_blocks(127, 6007)
+        assert br >= 1 and bc >= 1
+        assert 127 % br == 0 and 6007 % bc == 0
+
+    def test_paper_scale_cols_6000(self):
+        # 6000 is not a multiple of 256; blocking must still be exact
+        br, bc = mk.pick_blocks(128, 6000)
+        assert 6000 % bc == 0
+        assert_matches_ref(_rand((128, 6000), 10, 0.1), _rand((6000,), 11, 0.1))
+
+    def test_explicit_block_override(self):
+        assert_matches_ref(_rand((64, 128), 12), _rand((128,), 13),
+                           block_r=16, block_c=32)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    rows=st.integers(min_value=1, max_value=192),
+    cols=st.integers(min_value=1, max_value=384),
+    seed=st.integers(min_value=0, max_value=2**31),
+    scale=st.sampled_from([0.01, 1.0, 100.0]),
+)
+def test_matvec_matches_ref_sweep(rows, cols, seed, scale):
+    x = _rand((rows, cols), seed, scale)
+    w = _rand((cols,), seed + 1, scale)
+    got = mk.matvec(x, w)
+    want = ref.matvec(x, w)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-4 * scale * scale)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    rows=st.sampled_from([32, 64, 128]),
+    cols=st.sampled_from([256, 512, 1536]),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_matvec_artifact_family(rows, cols, seed):
+    """The shapes the AOT pipeline actually bakes."""
+    assert_matches_ref(_rand((rows, cols), seed), _rand((cols,), seed + 1))
+
+
+def test_special_values_finite():
+    """Large-but-finite values must not overflow the f32 accumulation."""
+    x = jnp.full((16, 16), 1e20, jnp.float32)
+    w = jnp.full((16,), 1e20, jnp.float32)
+    y = mk.matvec(x, w)
+    assert np.all(np.isinf(np.asarray(y)))  # documents saturation behaviour
+
+    x = jnp.full((16, 16), 1e3, jnp.float32)
+    w = jnp.full((16,), 1e3, jnp.float32)
+    y = mk.matvec(x, w)
+    np.testing.assert_allclose(np.asarray(y), np.full(16, 16e6), rtol=1e-6)

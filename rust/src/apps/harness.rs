@@ -1,0 +1,199 @@
+//! Shared app harness: build placement + cluster + master + chaos from a
+//! [`RunConfig`], and drive generic elastic iterations.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::config::types::{BackendKind, RunConfig};
+use crate::error::{Error, Result};
+use crate::linalg::partition::{submatrix_ranges, RowRange};
+use crate::linalg::Matrix;
+use crate::metrics::{StepRecord, Timeline};
+use crate::placement::Placement;
+use crate::runtime::{Backend, BackendSpec};
+use crate::sched::master::{Master, MasterConfig};
+use crate::sched::worker::{WorkerConfig, WorkerStorage};
+use crate::sched::{Cluster, ElasticityTrace, StragglerInjector};
+use crate::sched::straggler::StraggleMode;
+
+/// Everything needed to run elastic steps over one matrix.
+pub struct Harness {
+    pub placement: Placement,
+    pub sub_ranges: Vec<RowRange>,
+    pub cluster: Cluster,
+    pub master: Master,
+    /// Master-side combine backend.
+    pub combine: Backend,
+    pub trace: ElasticityTrace,
+    pub injector: StragglerInjector,
+    pub timeline: Timeline,
+    cfg: RunConfig,
+}
+
+impl Harness {
+    /// Wire up workers, master, trace and chaos from config + data matrix.
+    pub fn build(cfg: &RunConfig, matrix: Arc<Matrix>) -> Result<Harness> {
+        cfg.validate()?;
+        if matrix.rows() != cfg.q || matrix.cols() != cfg.r {
+            return Err(Error::Shape(format!(
+                "matrix is {}x{}, config says {}x{}",
+                matrix.rows(),
+                matrix.cols(),
+                cfg.q,
+                cfg.r
+            )));
+        }
+        let placement = Placement::build(cfg.placement, cfg.n, cfg.g, cfg.j)?;
+        let sub_ranges = submatrix_ranges(cfg.q, cfg.g)?;
+
+        let speeds = if cfg.speeds.is_empty() {
+            crate::sched::speed::ec2_mixed_profile(cfg.n)
+        } else {
+            cfg.speeds.clone()
+        };
+
+        let backend_spec = BackendSpec::from_kind(cfg.backend, artifact_dir());
+        let ranges = Arc::new(sub_ranges.clone());
+        let configs: Vec<WorkerConfig> = (0..cfg.n)
+            .map(|id| WorkerConfig {
+                id,
+                backend: backend_spec.clone(),
+                speed: speeds[id],
+                tile_rows: cfg.tile_rows,
+                storage: WorkerStorage {
+                    matrix: Arc::clone(&matrix),
+                    sub_ranges: Arc::clone(&ranges),
+                },
+            })
+            .collect();
+        let cluster = Cluster::spawn(configs)?;
+
+        let master = Master::new(MasterConfig {
+            placement: placement.clone(),
+            sub_ranges: sub_ranges.clone(),
+            params: cfg.solve_params(),
+            policy: cfg.policy,
+            gamma: cfg.gamma,
+            initial_speeds: vec![], // master learns speeds (Algorithm 1)
+            row_cost_ns: cfg.row_cost_ns,
+            recovery_timeout: Duration::from_secs(60),
+        })?;
+
+        let combine = BackendSpec::from_kind(
+            // PJRT combine only works when artifacts match q; fall back.
+            if cfg.backend == BackendKind::Pjrt {
+                cfg.backend
+            } else {
+                BackendKind::Host
+            },
+            artifact_dir(),
+        )
+        .instantiate()?;
+
+        let trace = if cfg.preempt_prob > 0.0 || cfg.arrive_prob > 0.0 {
+            ElasticityTrace::bernoulli(
+                cfg.n,
+                cfg.preempt_prob,
+                cfg.arrive_prob,
+                cfg.min_available.max(cfg.j), // keep runs feasible by default
+                cfg.seed ^ 0xE1A5,
+            )
+        } else {
+            ElasticityTrace::static_all(cfg.n)
+        };
+        let injector = if cfg.injected_stragglers > 0 {
+            let mode = if cfg.straggler_slowdown > 1.0 {
+                StraggleMode::Slow(cfg.straggler_slowdown)
+            } else {
+                StraggleMode::Drop
+            };
+            if cfg.straggler_fixed {
+                // deterministic victims drawn once from the seed
+                let mut rng = crate::util::Rng::new(cfg.seed ^ 0x57A6);
+                let victims = rng.sample_indices(cfg.n, cfg.injected_stragglers.min(cfg.n));
+                StragglerInjector::fixed(victims, mode)
+            } else {
+                StragglerInjector::new(cfg.injected_stragglers, mode, cfg.seed ^ 0x57A6)
+            }
+        } else {
+            StragglerInjector::none()
+        };
+
+        Ok(Harness {
+            placement,
+            sub_ranges,
+            cluster,
+            master,
+            combine,
+            trace,
+            injector,
+            timeline: Timeline::new(),
+            cfg: cfg.clone(),
+        })
+    }
+
+    /// Run `steps` elastic iterations. Per step the caller's `update`
+    /// receives the master combine backend, the current iterate `w_t`, and
+    /// the assembled product `y_t = X w_t`, and returns `(w_{t+1}, metric)`.
+    /// Infeasible steps (availability below `1+S` replicas for some
+    /// sub-matrix) are skipped and recorded with the previous metric.
+    pub fn run<F>(&mut self, w0: Vec<f32>, steps: usize, mut update: F) -> Result<Vec<f32>>
+    where
+        F: FnMut(&Backend, &[f32], Vec<f32>) -> Result<(Vec<f32>, f64)>,
+    {
+        let mut w = Arc::new(w0);
+        let mut last_metric = f64::NAN;
+        for step in 0..steps {
+            let avail = self.trace.next_step();
+            if self
+                .placement
+                .check_feasible(&avail, self.cfg.stragglers)
+                .is_err()
+            {
+                crate::log_debug!("step {step}: infeasible availability {avail:?}, skipping");
+                self.timeline.push(StepRecord {
+                    step,
+                    available: avail.len(),
+                    reported: 0,
+                    stragglers: 0,
+                    wall: Duration::ZERO,
+                    solve: Duration::ZERO,
+                    predicted_c: f64::NAN,
+                    metric: last_metric,
+                });
+                continue;
+            }
+            let victims = self.injector.choose(&avail);
+            let out = self
+                .master
+                .step(&self.cluster, step, &w, &avail, &victims)?;
+            let (next, metric) = update(&self.combine, &w, out.y)?;
+            last_metric = metric;
+            self.timeline.push(StepRecord {
+                step,
+                available: avail.len(),
+                reported: out.reporters.len(),
+                stragglers: victims.len(),
+                wall: out.wall,
+                solve: out.solve,
+                predicted_c: out.predicted_c,
+                metric,
+            });
+            w = Arc::new(next);
+        }
+        Ok(Arc::try_unwrap(w).unwrap_or_else(|a| (*a).clone()))
+    }
+
+    pub fn config(&self) -> &RunConfig {
+        &self.cfg
+    }
+}
+
+/// Artifact directory: `$USEC_ARTIFACTS` or `<crate>/artifacts`.
+pub fn artifact_dir() -> std::path::PathBuf {
+    std::env::var_os("USEC_ARTIFACTS")
+        .map(Into::into)
+        .unwrap_or_else(|| {
+            std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+        })
+}

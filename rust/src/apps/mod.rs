@@ -1,0 +1,19 @@
+//! Applications on the elastic substrate.
+//!
+//! All three are iterative mat-vec workloads — exactly the computation
+//! class the paper targets (`y_t = X w_t` per step, eq. 1):
+//!
+//! * [`power_iteration`] — the paper's §V evaluation workload.
+//! * [`ridge`] — Richardson iteration for ridge regression
+//!   (`w ← w + η(b − (A+λI)w)`).
+//! * [`pagerank`] — damped PageRank over a column-stochastic link matrix.
+//!
+//! Each app builds the cluster + master from a [`crate::config::RunConfig`]
+//! via [`harness`] and drives its own iterate-update rule on the master.
+
+pub mod harness;
+pub mod pagerank;
+pub mod power_iteration;
+pub mod ridge;
+
+pub use power_iteration::{run_power_iteration, PowerIterationResult};

@@ -1,0 +1,163 @@
+//! Power iteration over the elastic cluster (paper §V).
+//!
+//! `b_{k+1} = X b_k / ‖X b_k‖` with the mat-vec distributed per Algorithm
+//! 1. The matrix is synthetic symmetric with a planted dominant eigenpair
+//! (DESIGN.md §3), so the Fig. 4 y-axis — NMSE between the estimate and the
+//! true dominant eigenvector — is computable exactly.
+
+use std::sync::Arc;
+
+use crate::config::types::RunConfig;
+use crate::error::{Error, Result};
+use crate::linalg::gen::{planted_symmetric, PlantedMatrix};
+use crate::linalg::ops;
+use crate::metrics::Timeline;
+
+use super::harness::Harness;
+
+/// Outcome of an elastic power-iteration run.
+#[derive(Debug)]
+pub struct PowerIterationResult {
+    pub timeline: Timeline,
+    /// Final iterate (unit-norm estimate of the dominant eigenvector).
+    pub eigvec: Vec<f32>,
+    /// Final eigenvalue estimate (`‖X b‖` at the last step).
+    pub eigval: f64,
+    /// Final NMSE against the planted eigenvector.
+    pub final_nmse: f64,
+    /// Planted ground truth for external checks.
+    pub truth_eigval: f64,
+}
+
+/// Default planted eigenvalue / spectral-gap parameters.
+pub const PLANT_EIGVAL: f64 = 10.0;
+pub const PLANT_GAP: f64 = 0.35;
+
+/// Build the workload matrix for a config (deterministic in `cfg.seed`).
+pub fn workload(cfg: &RunConfig) -> Result<PlantedMatrix> {
+    if cfg.q != cfg.r {
+        return Err(Error::Config(format!(
+            "power iteration needs a square matrix (q={}, r={})",
+            cfg.q, cfg.r
+        )));
+    }
+    Ok(planted_symmetric(cfg.q, PLANT_EIGVAL, PLANT_GAP, cfg.seed))
+}
+
+/// Run elastic power iteration per `cfg`.
+pub fn run_power_iteration(cfg: &RunConfig) -> Result<PowerIterationResult> {
+    let plant = workload(cfg)?;
+    let truth = plant.eigvec.clone();
+    let matrix = Arc::new(plant.matrix);
+    let mut harness = Harness::build(cfg, matrix)?;
+
+    // b₀: deterministic unit vector (all-ones) — same for every policy so
+    // Fig. 4 comparisons share trajectories.
+    let mut b0 = vec![1.0f32; cfg.q];
+    ops::normalize(&mut b0);
+
+    let mut eigval = 0.0f64;
+    let final_b = harness.run(b0, cfg.steps, |combine, _w, y| {
+        let (b_next, norm) = combine.normalize(&y)?;
+        eigval = norm;
+        let nmse = ops::nmse_signless(&b_next, &truth);
+        Ok((b_next, nmse))
+    })?;
+
+    let final_nmse = ops::nmse_signless(&final_b, &truth);
+    Ok(PowerIterationResult {
+        timeline: std::mem::take(&mut harness.timeline),
+        eigvec: final_b,
+        eigval,
+        final_nmse,
+        truth_eigval: PLANT_EIGVAL,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::types::{AssignPolicy, RunConfig};
+
+    fn small_cfg() -> RunConfig {
+        RunConfig {
+            q: 120,
+            r: 120,
+            steps: 60,
+            seed: 3,
+            speeds: vec![1.0, 2.0, 4.0, 8.0, 16.0, 32.0],
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn converges_to_planted_eigenpair() {
+        let cfg = small_cfg();
+        let res = run_power_iteration(&cfg).unwrap();
+        assert!(
+            res.final_nmse < 0.05,
+            "did not converge: nmse {}",
+            res.final_nmse
+        );
+        assert!(
+            (res.eigval - res.truth_eigval).abs() < 0.5,
+            "eigenvalue estimate {} vs {}",
+            res.eigval,
+            res.truth_eigval
+        );
+        assert_eq!(res.timeline.len(), 60);
+        // NMSE decreases overall
+        let series = res.timeline.metric_series();
+        assert!(series.last().unwrap().1 < series[0].1);
+    }
+
+    #[test]
+    fn uniform_policy_also_converges() {
+        let mut cfg = small_cfg();
+        cfg.policy = AssignPolicy::Uniform;
+        let res = run_power_iteration(&cfg).unwrap();
+        assert!(res.final_nmse < 0.05, "nmse {}", res.final_nmse);
+    }
+
+    #[test]
+    fn straggler_tolerant_run_with_injection() {
+        let mut cfg = small_cfg();
+        cfg.stragglers = 1;
+        cfg.injected_stragglers = 1;
+        cfg.steps = 40;
+        let res = run_power_iteration(&cfg).unwrap();
+        assert!(res.final_nmse < 0.1, "nmse {}", res.final_nmse);
+        // stragglers were actually injected
+        assert!(res.timeline.steps().iter().any(|s| s.stragglers > 0));
+        // and the master never needed the dropped worker
+        for s in res.timeline.steps() {
+            assert!(s.reported + s.stragglers <= s.available + 1);
+        }
+    }
+
+    #[test]
+    fn elastic_run_with_preemptions() {
+        let mut cfg = small_cfg();
+        cfg.preempt_prob = 0.3;
+        cfg.arrive_prob = 0.5;
+        cfg.min_available = 3;
+        cfg.steps = 50;
+        let res = run_power_iteration(&cfg).unwrap();
+        // availability must have varied
+        let avails: std::collections::BTreeSet<usize> = res
+            .timeline
+            .steps()
+            .iter()
+            .map(|s| s.available)
+            .collect();
+        assert!(avails.len() > 1, "trace never changed: {avails:?}");
+        assert!(res.final_nmse < 0.1, "nmse {}", res.final_nmse);
+    }
+
+    #[test]
+    fn rejects_non_square() {
+        let mut cfg = small_cfg();
+        cfg.r = 64;
+        assert!(run_power_iteration(&cfg).is_err());
+    }
+}

@@ -1,0 +1,218 @@
+//! A small declarative CLI parser (replaces `clap`, unavailable offline).
+//!
+//! Supports `--flag value`, `--flag=value`, boolean `--flag`, positional
+//! subcommands, defaults, and generated `--help` text.
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+
+/// Declaration of one flag.
+#[derive(Debug, Clone)]
+pub struct ArgSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    /// `None` ⇒ boolean flag; `Some(default)` ⇒ valued flag.
+    pub default: Option<String>,
+}
+
+impl ArgSpec {
+    pub fn flag(name: &'static str, help: &'static str) -> Self {
+        ArgSpec {
+            name,
+            help,
+            default: None,
+        }
+    }
+    pub fn opt(name: &'static str, default: &str, help: &'static str) -> Self {
+        ArgSpec {
+            name,
+            help,
+            default: Some(default.to_string()),
+        }
+    }
+}
+
+/// Parsed arguments.
+#[derive(Debug, Clone)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse `argv` (without the program name) against the spec.
+    pub fn parse(argv: &[String], specs: &[ArgSpec]) -> Result<Args> {
+        let mut values = BTreeMap::new();
+        let mut flags = Vec::new();
+        let mut positional = Vec::new();
+        for s in specs {
+            if let Some(d) = &s.default {
+                values.insert(s.name.to_string(), d.clone());
+            }
+        }
+        let find = |name: &str| specs.iter().find(|s| s.name == name);
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(stripped) = a.strip_prefix("--") {
+                let (name, inline) = match stripped.split_once('=') {
+                    Some((n, v)) => (n, Some(v.to_string())),
+                    None => (stripped, None),
+                };
+                let spec = find(name)
+                    .ok_or_else(|| Error::Config(format!("unknown flag --{name}")))?;
+                match (&spec.default, inline) {
+                    (None, None) => flags.push(name.to_string()),
+                    (None, Some(v)) => {
+                        return Err(Error::Config(format!(
+                            "--{name} is a boolean flag (got value '{v}')"
+                        )))
+                    }
+                    (Some(_), Some(v)) => {
+                        values.insert(name.to_string(), v);
+                    }
+                    (Some(_), None) => {
+                        i += 1;
+                        let v = argv.get(i).ok_or_else(|| {
+                            Error::Config(format!("--{name} expects a value"))
+                        })?;
+                        values.insert(name.to_string(), v.clone());
+                    }
+                }
+            } else {
+                positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(Args {
+            values,
+            flags,
+            positional,
+        })
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_usize(&self, name: &str) -> Result<usize> {
+        let v = self.require(name)?;
+        v.parse()
+            .map_err(|_| Error::Config(format!("--{name} expects an integer, got '{v}'")))
+    }
+
+    pub fn get_f64(&self, name: &str) -> Result<f64> {
+        let v = self.require(name)?;
+        v.parse()
+            .map_err(|_| Error::Config(format!("--{name} expects a number, got '{v}'")))
+    }
+
+    pub fn get_u64(&self, name: &str) -> Result<u64> {
+        let v = self.require(name)?;
+        v.parse()
+            .map_err(|_| Error::Config(format!("--{name} expects an integer, got '{v}'")))
+    }
+
+    fn require(&self, name: &str) -> Result<&str> {
+        self.get(name)
+            .ok_or_else(|| Error::Config(format!("missing --{name}")))
+    }
+
+    /// Comma-separated list of numbers (`--speeds 1,2,4`).
+    pub fn get_f64_list(&self, name: &str) -> Result<Vec<f64>> {
+        let v = self.require(name)?;
+        if v.is_empty() {
+            return Ok(Vec::new());
+        }
+        v.split(',')
+            .map(|p| {
+                p.trim().parse().map_err(|_| {
+                    Error::Config(format!("--{name}: '{p}' is not a number"))
+                })
+            })
+            .collect()
+    }
+}
+
+/// Render generated help text.
+pub fn help_text(prog: &str, about: &str, specs: &[ArgSpec]) -> String {
+    let mut out = format!("{prog} — {about}\n\nFLAGS:\n");
+    for s in specs {
+        let def = s
+            .default
+            .as_ref()
+            .map(|d| format!(" [default: {d}]"))
+            .unwrap_or_default();
+        out.push_str(&format!("  --{:<18} {}{}\n", s.name, s.help, def));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn specs() -> Vec<ArgSpec> {
+        vec![
+            ArgSpec::opt("steps", "100", "number of steps"),
+            ArgSpec::opt("speeds", "1,2,4", "speed vector"),
+            ArgSpec::flag("verbose", "chatty output"),
+        ]
+    }
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = Args::parse(&[], &specs()).unwrap();
+        assert_eq!(a.get_usize("steps").unwrap(), 100);
+        assert!(!a.has("verbose"));
+    }
+
+    #[test]
+    fn space_and_equals_forms() {
+        let a = Args::parse(&sv(&["--steps", "5", "--speeds=9,9"]), &specs()).unwrap();
+        assert_eq!(a.get_usize("steps").unwrap(), 5);
+        assert_eq!(a.get_f64_list("speeds").unwrap(), vec![9.0, 9.0]);
+    }
+
+    #[test]
+    fn boolean_flags() {
+        let a = Args::parse(&sv(&["--verbose"]), &specs()).unwrap();
+        assert!(a.has("verbose"));
+        assert!(Args::parse(&sv(&["--verbose=yes"]), &specs()).is_err());
+    }
+
+    #[test]
+    fn positional_and_unknown() {
+        let a = Args::parse(&sv(&["run", "--steps", "2"]), &specs()).unwrap();
+        assert_eq!(a.positional(), &["run".to_string()]);
+        assert!(Args::parse(&sv(&["--bogus"]), &specs()).is_err());
+    }
+
+    #[test]
+    fn missing_value_and_bad_types() {
+        assert!(Args::parse(&sv(&["--steps"]), &specs()).is_err());
+        let a = Args::parse(&sv(&["--steps", "abc"]), &specs()).unwrap();
+        assert!(a.get_usize("steps").is_err());
+    }
+
+    #[test]
+    fn help_lists_flags() {
+        let h = help_text("usec", "elastic computing", &specs());
+        assert!(h.contains("--steps"));
+        assert!(h.contains("[default: 100]"));
+    }
+}

@@ -1,0 +1,43 @@
+//! Declarative CLI flag parser (offline replacement for `clap`) and the
+//! `usec` binary's subcommand dispatch.
+
+pub mod args;
+
+pub use args::{ArgSpec, Args};
+
+use crate::error::Result;
+
+/// Top-level subcommand dispatch for the `usec` binary.
+pub fn dispatch(argv: &[String]) -> Result<()> {
+    let cmd = argv.first().map(|s| s.as_str()).unwrap_or("help");
+    let rest = if argv.is_empty() { &[] } else { &argv[1..] };
+    match cmd {
+        "run" => crate::exp::run_cli(rest),
+        "exp" => crate::exp::exp_cli(rest),
+        "solve" => crate::exp::solve_cli(rest),
+        "help" | "--help" | "-h" => {
+            println!("{}", top_help());
+            Ok(())
+        }
+        other => Err(crate::error::Error::Config(format!(
+            "unknown subcommand '{other}' (try `usec help`)"
+        ))),
+    }
+}
+
+fn top_help() -> String {
+    let mut s = String::from(
+        "usec — Heterogeneous Uncoded Storage Elastic Computing\n\n\
+         USAGE: usec <subcommand> [flags]\n\nSUBCOMMANDS:\n\
+         \x20 run     run an elastic power-iteration workload end-to-end\n\
+         \x20 exp     regenerate a paper experiment (fig1|fig2|fig3|fig4)\n\
+         \x20 solve   solve one assignment instance and print M*\n\
+         \x20 help    this text\n\n",
+    );
+    s.push_str(&args::help_text(
+        "usec run",
+        "elastic run flags",
+        &crate::config::RunConfig::arg_specs(),
+    ));
+    s
+}

@@ -1,0 +1,6 @@
+//! Run configuration: typed config structs + file/CLI loading — see
+//! [`types`].
+
+pub mod types;
+
+pub use types::RunConfig;

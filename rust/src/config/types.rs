@@ -1,0 +1,322 @@
+//! Typed run configuration, buildable from CLI flags.
+//!
+//! One [`RunConfig`] fully determines an elastic run: geometry (`q, r, G,
+//! J, N`), placement, straggler tolerance, solver, elasticity/straggler
+//! randomness, speed model, backend, and seeds. Experiments construct it
+//! programmatically; the `usec` binary builds it from flags.
+
+use crate::cli::{ArgSpec, Args};
+use crate::error::{Error, Result};
+use crate::optim::{SolveParams, SolverKind};
+use crate::placement::PlacementKind;
+
+/// Which compute backend workers use.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum BackendKind {
+    /// Pure-Rust reference kernels (always available; test oracle).
+    #[default]
+    Host,
+    /// PJRT CPU client running the AOT artifacts from `artifacts/`.
+    Pjrt,
+}
+
+impl BackendKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "host" | "rust" => Ok(BackendKind::Host),
+            "pjrt" | "xla" => Ok(BackendKind::Pjrt),
+            other => Err(Error::Config(format!("unknown backend '{other}'"))),
+        }
+    }
+    pub fn name(&self) -> &'static str {
+        match self {
+            BackendKind::Host => "host",
+            BackendKind::Pjrt => "pjrt",
+        }
+    }
+}
+
+/// Assignment policy for the master.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum AssignPolicy {
+    /// The paper's heterogeneous-optimal assignment (solve (6)/(8) + fill).
+    #[default]
+    Heterogeneous,
+    /// Uniform speed-oblivious split (Fig. 4 baseline).
+    Uniform,
+    /// Paper's closed-form cyclic design for homogeneous speeds.
+    CyclicHomogeneous,
+}
+
+impl AssignPolicy {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "hetero" | "heterogeneous" | "optimal" => Ok(AssignPolicy::Heterogeneous),
+            "uniform" | "homo" | "homogeneous" => Ok(AssignPolicy::Uniform),
+            "cyclic" | "cyclic-homogeneous" => Ok(AssignPolicy::CyclicHomogeneous),
+            other => Err(Error::Config(format!("unknown policy '{other}'"))),
+        }
+    }
+    pub fn name(&self) -> &'static str {
+        match self {
+            AssignPolicy::Heterogeneous => "heterogeneous",
+            AssignPolicy::Uniform => "uniform",
+            AssignPolicy::CyclicHomogeneous => "cyclic-homogeneous",
+        }
+    }
+}
+
+/// Full configuration of an elastic run.
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    /// Matrix rows (`q`) and columns (`r`).
+    pub q: usize,
+    pub r: usize,
+    /// Sub-matrix count `G`, replication `J`, machine count `N`.
+    pub g: usize,
+    pub j: usize,
+    pub n: usize,
+    pub placement: PlacementKind,
+    /// Straggler tolerance `S`.
+    pub stragglers: usize,
+    /// Stragglers actually injected per step (Fig. 4 bottom uses 2).
+    pub injected_stragglers: usize,
+    /// Injected-straggler behaviour: `0.0` ⇒ drop (never report; requires
+    /// `stragglers ≥ injected` to make progress), `> 1.0` ⇒ report that
+    /// factor slower (the paper's §V EC2 stragglers: slow, not lost).
+    pub straggler_slowdown: f64,
+    /// `true` ⇒ the same machines straggle every step (an overloaded
+    /// instance), letting the EWMA learn them; `false` ⇒ fresh uniform
+    /// victims per step.
+    pub straggler_fixed: bool,
+    pub solver: SolverKind,
+    pub policy: AssignPolicy,
+    pub backend: BackendKind,
+    /// Computation steps `T`.
+    pub steps: usize,
+    /// EWMA speed-estimate factor `γ` (Algorithm 1 line 4).
+    pub gamma: f64,
+    /// Per-step preemption / arrival probabilities of the elasticity trace.
+    pub preempt_prob: f64,
+    pub arrive_prob: f64,
+    /// Minimum number of machines the trace keeps available.
+    pub min_available: usize,
+    /// Worker speed multipliers (relative; length `N`). Empty ⇒ EC2-like
+    /// defaults from [`crate::sched::speed`].
+    pub speeds: Vec<f64>,
+    /// Simulated per-row compute cost used by the speed throttle, in
+    /// nanoseconds at speed 1.0 (0 disables throttling).
+    pub row_cost_ns: u64,
+    /// PJRT tile rows (must match the AOT artifact).
+    pub tile_rows: usize,
+    pub seed: u64,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            q: 1536,
+            r: 1536,
+            g: 6,
+            j: 3,
+            n: 6,
+            placement: PlacementKind::Repetition,
+            stragglers: 0,
+            injected_stragglers: 0,
+            straggler_slowdown: 0.0,
+            straggler_fixed: false,
+            solver: SolverKind::Simplex,
+            policy: AssignPolicy::Heterogeneous,
+            backend: BackendKind::Host,
+            steps: 50,
+            gamma: 0.5,
+            preempt_prob: 0.0,
+            arrive_prob: 0.0,
+            min_available: 0,
+            speeds: Vec::new(),
+            row_cost_ns: 0,
+            tile_rows: 128,
+            seed: 7,
+        }
+    }
+}
+
+impl RunConfig {
+    /// CLI flag declarations matching [`RunConfig::from_args`].
+    pub fn arg_specs() -> Vec<ArgSpec> {
+        vec![
+            ArgSpec::opt("q", "1536", "matrix rows"),
+            ArgSpec::opt("r", "1536", "matrix cols"),
+            ArgSpec::opt("g", "6", "sub-matrix count G"),
+            ArgSpec::opt("j", "3", "replication factor J"),
+            ArgSpec::opt("n", "6", "machine count N"),
+            ArgSpec::opt("placement", "repetition", "repetition|cyclic|man"),
+            ArgSpec::opt("stragglers", "0", "straggler tolerance S"),
+            ArgSpec::opt("inject-stragglers", "0", "stragglers injected per step"),
+            ArgSpec::opt(
+                "straggler-slowdown",
+                "0",
+                "0 = drop stragglers, >1 = slow them by that factor",
+            ),
+            ArgSpec::flag("straggler-fixed", "same victims every step"),
+            ArgSpec::opt("solver", "simplex", "simplex|flow"),
+            ArgSpec::opt("policy", "hetero", "hetero|uniform|cyclic"),
+            ArgSpec::opt("backend", "host", "host|pjrt"),
+            ArgSpec::opt("steps", "50", "computation steps T"),
+            ArgSpec::opt("gamma", "0.5", "EWMA speed factor"),
+            ArgSpec::opt("preempt-prob", "0", "per-step preemption probability"),
+            ArgSpec::opt("arrive-prob", "0", "per-step arrival probability"),
+            ArgSpec::opt("min-available", "0", "trace keeps at least this many VMs"),
+            ArgSpec::opt("speeds", "", "comma-separated speed multipliers"),
+            ArgSpec::opt("row-cost-ns", "0", "simulated ns per row at speed 1"),
+            ArgSpec::opt("tile-rows", "128", "PJRT tile rows (match artifacts)"),
+            ArgSpec::opt("seed", "7", "PRNG seed"),
+        ]
+    }
+
+    /// Build from parsed CLI args.
+    pub fn from_args(a: &Args) -> Result<RunConfig> {
+        let cfg = RunConfig {
+            q: a.get_usize("q")?,
+            r: a.get_usize("r")?,
+            g: a.get_usize("g")?,
+            j: a.get_usize("j")?,
+            n: a.get_usize("n")?,
+            placement: PlacementKind::parse(a.get("placement").unwrap_or("repetition"))?,
+            stragglers: a.get_usize("stragglers")?,
+            injected_stragglers: a.get_usize("inject-stragglers")?,
+            straggler_slowdown: a.get_f64("straggler-slowdown")?,
+            straggler_fixed: a.has("straggler-fixed"),
+            solver: SolverKind::parse(a.get("solver").unwrap_or("simplex"))?,
+            policy: AssignPolicy::parse(a.get("policy").unwrap_or("hetero"))?,
+            backend: BackendKind::parse(a.get("backend").unwrap_or("host"))?,
+            steps: a.get_usize("steps")?,
+            gamma: a.get_f64("gamma")?,
+            preempt_prob: a.get_f64("preempt-prob")?,
+            arrive_prob: a.get_f64("arrive-prob")?,
+            min_available: a.get_usize("min-available")?,
+            speeds: a.get_f64_list("speeds")?,
+            row_cost_ns: a.get_u64("row-cost-ns")?,
+            tile_rows: a.get_usize("tile-rows")?,
+            seed: a.get_u64("seed")?,
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Structural sanity checks.
+    pub fn validate(&self) -> Result<()> {
+        if self.q == 0 || self.r == 0 {
+            return Err(Error::Config("q and r must be positive".into()));
+        }
+        if self.g == 0 || self.g > self.q {
+            return Err(Error::Config(format!(
+                "G={} must be in [1, q={}]",
+                self.g, self.q
+            )));
+        }
+        if self.j == 0 || self.j > self.n {
+            return Err(Error::Config(format!(
+                "J={} must be in [1, N={}]",
+                self.j, self.n
+            )));
+        }
+        if !self.speeds.is_empty() && self.speeds.len() != self.n {
+            return Err(Error::Config(format!(
+                "{} speeds given for N={} machines",
+                self.speeds.len(),
+                self.n
+            )));
+        }
+        if !(0.0..=1.0).contains(&self.gamma) {
+            return Err(Error::Config(format!("gamma {} not in [0,1]", self.gamma)));
+        }
+        for (name, p) in [
+            ("preempt-prob", self.preempt_prob),
+            ("arrive-prob", self.arrive_prob),
+        ] {
+            if !(0.0..=1.0).contains(&p) {
+                return Err(Error::Config(format!("{name} {p} not in [0,1]")));
+            }
+        }
+        if self.tile_rows == 0 {
+            return Err(Error::Config("tile-rows must be positive".into()));
+        }
+        if self.injected_stragglers > self.stragglers && self.stragglers > 0 {
+            // allowed (the system then misses rows) but suspicious for
+            // experiments that expect full recovery
+        }
+        Ok(())
+    }
+
+    /// Solve parameters derived from this config.
+    pub fn solve_params(&self) -> SolveParams {
+        SolveParams {
+            stragglers: self.stragglers,
+            solver: self.solver,
+            ..Default::default()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_valid() {
+        RunConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn from_args_roundtrip() {
+        let argv: Vec<String> = [
+            "--q",
+            "6000",
+            "--placement",
+            "cyclic",
+            "--speeds",
+            "1,2,4,8,16,32",
+            "--stragglers",
+            "1",
+            "--solver",
+            "flow",
+            "--policy",
+            "uniform",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        let a = Args::parse(&argv, &RunConfig::arg_specs()).unwrap();
+        let cfg = RunConfig::from_args(&a).unwrap();
+        assert_eq!(cfg.q, 6000);
+        assert_eq!(cfg.placement, PlacementKind::Cyclic);
+        assert_eq!(cfg.speeds, vec![1.0, 2.0, 4.0, 8.0, 16.0, 32.0]);
+        assert_eq!(cfg.stragglers, 1);
+        assert_eq!(cfg.solver, SolverKind::ParametricFlow);
+        assert_eq!(cfg.policy, AssignPolicy::Uniform);
+    }
+
+    #[test]
+    fn validation_rejects_bad_geometry() {
+        let mut c = RunConfig::default();
+        c.j = 10; // > N
+        assert!(c.validate().is_err());
+        let mut c = RunConfig::default();
+        c.speeds = vec![1.0, 2.0]; // wrong length
+        assert!(c.validate().is_err());
+        let mut c = RunConfig::default();
+        c.gamma = 1.5;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn backend_and_policy_parse() {
+        assert_eq!(BackendKind::parse("pjrt").unwrap(), BackendKind::Pjrt);
+        assert!(BackendKind::parse("gpu").is_err());
+        assert_eq!(
+            AssignPolicy::parse("optimal").unwrap(),
+            AssignPolicy::Heterogeneous
+        );
+    }
+}

@@ -1,0 +1,131 @@
+//! MDS-style coding matrices over the reals.
+//!
+//! Any `L` rows of the `N×L` coding matrix must be invertible — and,
+//! because we decode in floating point, *well-conditioned*. A Vandermonde
+//! matrix on Chebyshev nodes keeps every `L×L` minor invertible with
+//! moderate condition numbers at the small `L` used here.
+
+use crate::error::{Error, Result};
+use crate::linalg::solve::Lu;
+
+/// An `N×L` real MDS coding matrix.
+#[derive(Debug, Clone)]
+pub struct CodingMatrix {
+    n: usize,
+    l: usize,
+    /// Row-major `n×l`.
+    a: Vec<f64>,
+}
+
+impl CodingMatrix {
+    /// Vandermonde on Chebyshev nodes: `A[n, l] = T_l(x_n)` with
+    /// `x_n = cos(π(2n+1)/(2N))` — i.e. columns are Chebyshev polynomials
+    /// evaluated at distinct nodes, so every minor is nonsingular.
+    pub fn chebyshev(n: usize, l: usize) -> Result<CodingMatrix> {
+        if l == 0 || l > n {
+            return Err(Error::Config(format!("coding needs 1 ≤ L ≤ N (L={l}, N={n})")));
+        }
+        let mut a = vec![0.0; n * l];
+        for row in 0..n {
+            let x = (std::f64::consts::PI * (2.0 * row as f64 + 1.0) / (2.0 * n as f64)).cos();
+            // Chebyshev recurrence T_0 = 1, T_1 = x, T_k = 2x T_{k-1} − T_{k-2}
+            let mut t_prev = 1.0;
+            let mut t_cur = x;
+            for col in 0..l {
+                let v = match col {
+                    0 => 1.0,
+                    1 => x,
+                    _ => {
+                        let t_next = 2.0 * x * t_cur - t_prev;
+                        t_prev = t_cur;
+                        t_cur = t_next;
+                        t_next
+                    }
+                };
+                a[row * l + col] = v;
+            }
+        }
+        Ok(CodingMatrix { n, l, a })
+    }
+
+    pub fn machines(&self) -> usize {
+        self.n
+    }
+
+    pub fn blocks(&self) -> usize {
+        self.l
+    }
+
+    /// Coefficients of machine `n`'s stored combination.
+    pub fn row(&self, n: usize) -> &[f64] {
+        &self.a[n * self.l..(n + 1) * self.l]
+    }
+
+    /// LU of the sub-matrix restricted to `machines` (must have length L).
+    pub fn restricted_lu(&self, machines: &[usize]) -> Result<Lu> {
+        if machines.len() != self.l {
+            return Err(Error::Shape(format!(
+                "decode needs exactly L={} machines, got {}",
+                self.l,
+                machines.len()
+            )));
+        }
+        let mut sub = Vec::with_capacity(self.l * self.l);
+        for &m in machines {
+            if m >= self.n {
+                return Err(Error::Config(format!("machine {m} out of range")));
+            }
+            sub.extend_from_slice(self.row(m));
+        }
+        Lu::factor(&sub, self.l, 1e-12)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dimensions_and_rows() {
+        let c = CodingMatrix::chebyshev(6, 3).unwrap();
+        assert_eq!(c.machines(), 6);
+        assert_eq!(c.blocks(), 3);
+        assert_eq!(c.row(0).len(), 3);
+        assert_eq!(c.row(2)[0], 1.0); // T_0 ≡ 1
+    }
+
+    #[test]
+    fn every_minor_invertible() {
+        let c = CodingMatrix::chebyshev(6, 3).unwrap();
+        // all C(6,3) = 20 subsets decode
+        for subset in crate::placement::builders::combinations(6, 3) {
+            c.restricted_lu(&subset).unwrap();
+        }
+    }
+
+    #[test]
+    fn decode_roundtrip() {
+        // encode a known y-vector, decode from an arbitrary subset
+        let c = CodingMatrix::chebyshev(5, 3).unwrap();
+        let y = [2.0, -1.0, 0.5]; // per-block values at one row index
+        let coded: Vec<f64> = (0..5)
+            .map(|m| c.row(m).iter().zip(&y).map(|(a, v)| a * v).sum())
+            .collect();
+        let subset = [0usize, 2, 4];
+        let lu = c.restricted_lu(&subset).unwrap();
+        let rhs: Vec<f64> = subset.iter().map(|&m| coded[m]).collect();
+        let decoded = lu.solve(&rhs).unwrap();
+        for (d, t) in decoded.iter().zip(&y) {
+            assert!((d - t).abs() < 1e-10, "{d} vs {t}");
+        }
+    }
+
+    #[test]
+    fn rejects_bad_params() {
+        assert!(CodingMatrix::chebyshev(3, 4).is_err());
+        assert!(CodingMatrix::chebyshev(3, 0).is_err());
+        let c = CodingMatrix::chebyshev(4, 2).unwrap();
+        assert!(c.restricted_lu(&[0]).is_err());
+        assert!(c.restricted_lu(&[0, 9]).is_err());
+    }
+}

@@ -1,0 +1,26 @@
+//! CSEC baseline — Coded Storage Elastic Computing (Yang et al. \[1\],
+//! heterogeneous variant of Woolsey et al. \[5\]).
+//!
+//! The system the paper positions USEC *against*. `X` is row-partitioned
+//! into `L` blocks; machine `n` stores one *coded* block
+//! `C_n = Σ_l A[n,l] · X_l` (an MDS-style combination, `1/L` of the
+//! uncoded storage). Every machine's coded block is row-aligned, so coded
+//! row `i` computed at any `L` distinct machines decodes — via the
+//! coding matrix restricted to those machines — into row `i` of all `L`
+//! original blocks.
+//!
+//! Trade-off demonstrated by `benches/ablation_csec_baseline.rs`:
+//!
+//! * CSEC reaches the *unconstrained* optimum `c* = (coded rows)·L/Σs`
+//!   with only `1/L` storage — placement never binds because every
+//!   machine can substitute for any other.
+//! * USEC pays `J×` storage but needs **no decode** (CSEC's master does an
+//!   `L×L` solve per coded row) and no floating-point conditioning risk,
+//!   and works for computations that don't commute with linear coding —
+//!   the paper's motivation.
+
+pub mod coding;
+pub mod pipeline;
+
+pub use coding::CodingMatrix;
+pub use pipeline::{csec_optimal_time, CsecSystem};

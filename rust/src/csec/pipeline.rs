@@ -1,0 +1,271 @@
+//! The CSEC compute pipeline: encode → assign (filling over coded rows) →
+//! coded mat-vec → decode, all in-process (the baseline does not need the
+//! threaded cluster to make the comparison — compute cost and decode cost
+//! are measured directly).
+
+use crate::error::{Error, Result};
+use crate::linalg::partition::{quantize_fractions, submatrix_ranges};
+use crate::linalg::{ops, Matrix};
+use crate::optim::filling;
+
+use super::coding::CodingMatrix;
+
+/// A CSEC deployment: every machine holds one coded block of `q/L` rows.
+pub struct CsecSystem {
+    coding: CodingMatrix,
+    /// Coded blocks, one `q/L × r` matrix per machine.
+    coded: Vec<Matrix>,
+    block_rows: usize,
+    cols: usize,
+}
+
+impl CsecSystem {
+    /// Encode `x` into `n` coded blocks with recovery threshold `l`.
+    /// Requires `l | x.rows()`.
+    pub fn encode(x: &Matrix, n: usize, l: usize) -> Result<CsecSystem> {
+        if x.rows() % l != 0 {
+            return Err(Error::Shape(format!(
+                "CSEC needs L | q (q={}, L={l})",
+                x.rows()
+            )));
+        }
+        let coding = CodingMatrix::chebyshev(n, l)?;
+        let block_rows = x.rows() / l;
+        let parts = submatrix_ranges(x.rows(), l)?;
+        let mut coded = Vec::with_capacity(n);
+        for m in 0..n {
+            let coeffs = coding.row(m);
+            let mut c = Matrix::zeros(block_rows, x.cols());
+            for (li, part) in parts.iter().enumerate() {
+                let a = coeffs[li] as f32;
+                let src = x.row_block(part.lo, part.hi);
+                let dst = c.data_mut();
+                for (d, s) in dst.iter_mut().zip(src) {
+                    *d += a * s;
+                }
+            }
+            coded.push(c);
+        }
+        Ok(CsecSystem {
+            coding,
+            coded,
+            block_rows,
+            cols: x.cols(),
+        })
+    }
+
+    pub fn block_rows(&self) -> usize {
+        self.block_rows
+    }
+
+    /// Storage per machine as a fraction of `X` (CSEC's selling point).
+    pub fn storage_fraction(&self) -> f64 {
+        1.0 / self.coding.blocks() as f64
+    }
+
+    /// One coded elastic step: assign coded rows to the available machines
+    /// by the filling algorithm (coverage `L`), compute, decode, return
+    /// `y = X w` plus the realized computation time in sub-matrix units.
+    pub fn step(&self, avail: &[usize], speeds: &[f64], w: &[f32]) -> Result<(Vec<f32>, f64)> {
+        let l = self.coding.blocks();
+        if avail.len() < l {
+            return Err(Error::infeasible(format!(
+                "CSEC needs ≥ L={l} machines, {} available",
+                avail.len()
+            )));
+        }
+        if w.len() != self.cols {
+            return Err(Error::Shape(format!("w of {} for r={}", w.len(), self.cols)));
+        }
+
+        // Optimal fractional loads: every machine stores the whole coded
+        // block, so the relaxed program has no placement constraint — the
+        // water-filled optimum is proportional-to-speed, capped at 1.
+        let loads = proportional_loads(avail, speeds, l as f64)?;
+        let f = filling::fill(&loads, l)?;
+        let row_sets = quantize_fractions(&f.alphas, self.block_rows)?;
+
+        // Compute: machine m computes its coded rows for every row set
+        // containing it. Realized time = max load/speed.
+        let mut realized: f64 = 0.0;
+        for &(m, mu) in &loads {
+            realized = realized.max(mu / speeds[m]);
+        }
+
+        // Per row set: L machines computed those coded rows → decode.
+        let mut y = vec![0.0f32; self.block_rows * l];
+        for (p, rows) in f.psets.iter().zip(&row_sets) {
+            if rows.is_empty() {
+                continue;
+            }
+            let lu = self.coding.restricted_lu(p)?;
+            // coded results for this row set: one vector per machine in p
+            let mut coded_vals = vec![0.0f64; p.len()];
+            for i in rows.lo..rows.hi {
+                for (k, &m) in p.iter().enumerate() {
+                    let row = self.coded[m].row(i);
+                    coded_vals[k] = ops::dot(row, w);
+                }
+                let decoded = lu.solve(&coded_vals)?;
+                for (li, &v) in decoded.iter().enumerate() {
+                    y[li * self.block_rows + i] = v as f32;
+                }
+            }
+        }
+        Ok((y, realized))
+    }
+}
+
+/// Water-filling of `total` units proportional to speed with per-machine
+/// cap 1 (the CSEC relaxed optimum when storage never binds).
+fn proportional_loads(avail: &[usize], speeds: &[f64], total: f64) -> Result<Vec<(usize, f64)>> {
+    let mut remaining = total;
+    let mut active: Vec<usize> = avail.to_vec();
+    let mut load = vec![0.0f64; speeds.len()];
+    // iteratively cap machines that would exceed μ = 1
+    for _ in 0..avail.len() + 1 {
+        let speed_sum: f64 = active.iter().map(|&m| speeds[m]).sum();
+        if speed_sum <= 0.0 {
+            return Err(Error::infeasible("no capacity left in CSEC assignment"));
+        }
+        let mut capped = Vec::new();
+        let mut assigned = 0.0;
+        for &m in &active {
+            let share = remaining * speeds[m] / speed_sum;
+            if share >= 1.0 - 1e-12 {
+                load[m] = 1.0;
+                assigned += 1.0;
+                capped.push(m);
+            }
+        }
+        if capped.is_empty() {
+            for &m in &active {
+                load[m] = remaining * speeds[m] / speed_sum;
+            }
+            remaining = 0.0;
+            break;
+        }
+        active.retain(|m| !capped.contains(m));
+        remaining -= assigned;
+        if active.is_empty() {
+            break;
+        }
+    }
+    if remaining > 1e-9 {
+        return Err(Error::infeasible(format!(
+            "CSEC could not place {remaining} units (all machines capped)"
+        )));
+    }
+    Ok(avail
+        .iter()
+        .map(|&m| (m, load[m]))
+        .filter(|&(_, x)| x > 0.0)
+        .collect())
+}
+
+/// The CSEC optimal computation time for the given availability/speeds:
+/// `max(L/Σs, 1/max_k …)` — equals the water-filled bottleneck.
+pub fn csec_optimal_time(avail: &[usize], speeds: &[f64], l: usize) -> Result<f64> {
+    let loads = proportional_loads(avail, speeds, l as f64)?;
+    Ok(loads
+        .iter()
+        .map(|&(m, mu)| mu / speeds[m])
+        .fold(0.0, f64::max))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::gen;
+
+    #[test]
+    fn encode_decodes_exactly() {
+        let x = gen::random_dense(60, 40, 3);
+        let sys = CsecSystem::encode(&x, 6, 3).unwrap();
+        assert_eq!(sys.block_rows(), 20);
+        assert!((sys.storage_fraction() - 1.0 / 3.0).abs() < 1e-12);
+        let w: Vec<f32> = (0..40).map(|i| (i as f32) * 0.05 - 1.0).collect();
+        let speeds = vec![1.0, 2.0, 4.0, 8.0, 16.0, 32.0];
+        let avail: Vec<usize> = (0..6).collect();
+        let (y, time) = sys.step(&avail, &speeds, &w).unwrap();
+        let want = x.matvec(&w).unwrap();
+        for (a, e) in y.iter().zip(&want) {
+            assert!((a - e).abs() < 2e-3 * (1.0 + e.abs()), "{a} vs {e}");
+        }
+        assert!(time > 0.0);
+    }
+
+    #[test]
+    fn elastic_subset_still_decodes() {
+        let x = gen::random_dense(30, 24, 4);
+        let sys = CsecSystem::encode(&x, 6, 3).unwrap();
+        let w = vec![0.25f32; 24];
+        let speeds = vec![1.0; 6];
+        // only 3 machines up — exactly the recovery threshold
+        let (y, _) = sys.step(&[1, 3, 5], &speeds, &w).unwrap();
+        let want = x.matvec(&w).unwrap();
+        for (a, e) in y.iter().zip(&want) {
+            assert!((a - e).abs() < 2e-3 * (1.0 + e.abs()));
+        }
+    }
+
+    #[test]
+    fn below_threshold_rejected() {
+        let x = gen::random_dense(30, 10, 5);
+        let sys = CsecSystem::encode(&x, 6, 3).unwrap();
+        assert!(sys.step(&[0, 1], &vec![1.0; 6], &vec![0.0; 10]).is_err());
+    }
+
+    #[test]
+    fn optimal_time_matches_work_conservation_when_uncapped() {
+        // total speed large relative to L ⇒ no caps ⇒ c = L/Σs
+        let speeds = vec![2.0, 3.0, 5.0, 7.0, 11.0, 13.0];
+        let avail: Vec<usize> = (0..6).collect();
+        let c = csec_optimal_time(&avail, &speeds, 3).unwrap();
+        let sum: f64 = speeds.iter().sum();
+        assert!((c - 3.0 / sum).abs() < 1e-9);
+    }
+
+    #[test]
+    fn caps_respected_with_dominant_machine() {
+        // one machine so fast the proportional share would exceed 1
+        let speeds = vec![100.0, 1.0, 1.0, 1.0];
+        let avail: Vec<usize> = (0..4).collect();
+        let c = csec_optimal_time(&avail, &speeds, 2).unwrap();
+        // machine 0 capped at μ=1 → c ≥ 1/100; remaining 1 unit over the
+        // three slow machines → c = (1/3)/1
+        assert!((c - 1.0 / 3.0).abs() < 1e-9, "c = {c}");
+    }
+
+    #[test]
+    fn csec_beats_usec_repetition_under_elasticity() {
+        // the structural advantage: coded storage never strands work
+        let speeds = vec![1.0, 2.0, 4.0, 8.0, 16.0, 32.0];
+        let avail: Vec<usize> = (0..6).collect();
+        let c_csec = csec_optimal_time(&avail, &speeds, 3).unwrap();
+        let p = crate::placement::Placement::build(
+            crate::placement::PlacementKind::Repetition,
+            6,
+            6,
+            3,
+        )
+        .unwrap();
+        // USEC repetition at G=6: paper value 3/7 in sub-matrix units →
+        // normalize to per-X units (÷ G) for comparison
+        let sol = crate::optim::solve_load_matrix(
+            &p,
+            &avail,
+            &speeds.iter().map(|s| s * 6.0).collect::<Vec<_>>(),
+            &crate::optim::SolveParams::default(),
+        )
+        .unwrap();
+        // CSEC time is per coded block of q/3 rows at coverage 3: per-X
+        // normalize by L as well
+        assert!(
+            c_csec / 3.0 <= sol.time + 1e-9,
+            "csec {} vs usec repetition {}",
+            c_csec / 3.0,
+            sol.time
+        );
+    }
+}

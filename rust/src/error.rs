@@ -1,0 +1,65 @@
+//! Crate-wide error type.
+
+/// Crate result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Errors surfaced by the USEC library.
+#[derive(Debug, thiserror::Error)]
+pub enum Error {
+    /// A placement was structurally invalid (bad parameters, uncovered
+    /// sub-matrix, wrong replication factor, ...).
+    #[error("invalid placement: {0}")]
+    InvalidPlacement(String),
+
+    /// The assignment problem is infeasible for the given availability /
+    /// straggler tolerance (e.g. a sub-matrix has fewer than `1+S`
+    /// available replicas).
+    #[error("infeasible assignment: {0}")]
+    Infeasible(String),
+
+    /// An optimization routine failed to converge or detected an internal
+    /// inconsistency (should not happen on well-posed inputs).
+    #[error("solver error: {0}")]
+    Solver(String),
+
+    /// Configuration file / CLI parsing error.
+    #[error("config error: {0}")]
+    Config(String),
+
+    /// Artifact manifest / HLO loading error.
+    #[error("runtime error: {0}")]
+    Runtime(String),
+
+    /// Cluster orchestration failure (worker panicked, channel closed, ...).
+    #[error("cluster error: {0}")]
+    Cluster(String),
+
+    /// Shape mismatch in linear-algebra operations.
+    #[error("shape error: {0}")]
+    Shape(String),
+
+    /// Wrapped I/O error.
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+
+    /// Wrapped XLA/PJRT error.
+    #[error("xla error: {0}")]
+    Xla(String),
+}
+
+impl Error {
+    /// Helper: build an [`Error::Infeasible`].
+    pub fn infeasible(msg: impl Into<String>) -> Self {
+        Error::Infeasible(msg.into())
+    }
+    /// Helper: build an [`Error::Solver`].
+    pub fn solver(msg: impl Into<String>) -> Self {
+        Error::Solver(msg.into())
+    }
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}

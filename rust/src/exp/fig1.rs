@@ -1,0 +1,91 @@
+//! EXP-F1 — paper Fig. 1 + in-text computation times.
+//!
+//! N=6, G=6, J=3, s=\[1,2,4,8,16,32\]; solve (6) under the repetition and
+//! cyclic placements. The paper reports `c_rep = 0.4286 (=3/7)` and
+//! `c_cyc = 0.1429 (=1/7)`.
+
+use crate::error::Result;
+use crate::optim::{solve_load_matrix, Solution, SolveParams};
+use crate::placement::{Placement, PlacementKind};
+
+/// Fig. 1's speed vector.
+pub fn fig1_speeds() -> Vec<f64> {
+    vec![1.0, 2.0, 4.0, 8.0, 16.0, 32.0]
+}
+
+/// One placement's Fig. 1 result.
+#[derive(Debug)]
+pub struct Fig1Row {
+    pub placement: PlacementKind,
+    pub solution: Solution,
+    /// Paper's reported value for cross-checking.
+    pub paper_time: f64,
+}
+
+/// Solve both placements of Fig. 1.
+pub fn run() -> Result<Vec<Fig1Row>> {
+    let speeds = fig1_speeds();
+    let avail: Vec<usize> = (0..6).collect();
+    let params = SolveParams::default();
+    let mut rows = Vec::new();
+    for (kind, paper_time) in [
+        (PlacementKind::Repetition, 3.0 / 7.0),
+        (PlacementKind::Cyclic, 1.0 / 7.0),
+    ] {
+        let p = Placement::build(kind, 6, 6, 3)?;
+        let solution = solve_load_matrix(&p, &avail, &speeds, &params)?;
+        rows.push(Fig1Row {
+            placement: kind,
+            solution,
+            paper_time,
+        });
+    }
+    Ok(rows)
+}
+
+/// Render the Fig. 1 report (μ matrices + times vs paper).
+pub fn report() -> Result<String> {
+    let rows = run()?;
+    let mut out = String::new();
+    out.push_str("EXP-F1 (paper Fig. 1): N=6, G=6, J=3, s=[1,2,4,8,16,32]\n\n");
+    for r in &rows {
+        out.push_str(&format!(
+            "{} placement: c = {:.4} (paper: {:.4})\n",
+            r.placement.name(),
+            r.solution.time,
+            r.paper_time
+        ));
+        out.push_str(&crate::util::fmt::render_load_matrix(
+            &r.solution.load.to_rows(),
+            "X",
+            "m",
+        ));
+        out.push('\n');
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matches_paper_times() {
+        for r in run().unwrap() {
+            assert!(
+                (r.solution.time - r.paper_time).abs() < 1e-6,
+                "{}: {} vs paper {}",
+                r.placement.name(),
+                r.solution.time,
+                r.paper_time
+            );
+        }
+    }
+
+    #[test]
+    fn report_renders() {
+        let rep = report().unwrap();
+        assert!(rep.contains("repetition placement: c = 0.4286"));
+        assert!(rep.contains("cyclic placement: c = 0.1429"));
+    }
+}

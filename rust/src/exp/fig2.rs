@@ -1,0 +1,277 @@
+//! EXP-F2 / EXP-T1 — paper Fig. 2 histograms + Table I moments.
+//!
+//! 5000 random speed vectors; per realization solve (6) under repetition
+//! (G=6), cyclic (G=6) and MAN (G=C(6,3)=20) placements and compare the
+//! optimal computation times.
+//!
+//! **Normalization** (DESIGN.md §5): speeds are drawn per *machine* as
+//! `σ[n] ~ Exp(1)` in "fractions of X per unit time"; each placement's
+//! Definition-2 speed is `s[n] = σ[n]·G`, making the optimal `c` a
+//! wall-time comparable across different `G`. With `G = G_ref = 6` this
+//! reduces to the paper's setup exactly.
+
+use crate::error::Result;
+use crate::metrics::{Histogram, Stats};
+use crate::optim::{solve_load_matrix, SolveParams};
+use crate::placement::{Placement, PlacementKind};
+use crate::util::Rng;
+
+/// Experiment parameters.
+#[derive(Debug, Clone)]
+pub struct Fig2Params {
+    pub realizations: usize,
+    pub seed: u64,
+    /// Exponential rate for speed draws.
+    pub lambda: f64,
+    pub solver: crate::optim::SolverKind,
+}
+
+impl Default for Fig2Params {
+    fn default() -> Self {
+        Fig2Params {
+            realizations: 5000,
+            seed: 2021,
+            // The paper does not state the exponential rate. λ = 0.64
+            // (mean speed ≈ 1.56) reproduces Table I's means to within
+            // Monte-Carlo error (cyclic 0.149, repetition 0.230, MAN
+            // 0.144); see EXPERIMENTS.md for the calibration note.
+            lambda: 0.64,
+            solver: crate::optim::SolverKind::Simplex,
+        }
+    }
+}
+
+/// Per-placement aggregate results.
+#[derive(Debug)]
+pub struct PlacementSeries {
+    pub kind: PlacementKind,
+    pub times: Vec<f64>,
+    pub stats: Stats,
+    pub histogram: Histogram,
+}
+
+/// Strictly-worse / exactly-tied counts for one pairwise comparison.
+#[derive(Debug, Clone, Copy)]
+pub struct WinCount {
+    pub worse: usize,
+    pub tied: usize,
+}
+
+/// Full experiment output.
+#[derive(Debug)]
+pub struct Fig2Result {
+    pub repetition: PlacementSeries,
+    pub cyclic: PlacementSeries,
+    pub man: PlacementSeries,
+    /// Pairwise comparisons (paper reports 68, 9, 1621 of 5000; on many
+    /// draws two placements share the *same* optimum — both hit the
+    /// work-conservation bound — and the paper's large third count is
+    /// consistent with strict fp comparison splitting those ties).
+    pub cyclic_vs_rep: WinCount,
+    pub man_vs_rep: WinCount,
+    pub man_vs_cyclic: WinCount,
+}
+
+fn series(kind: PlacementKind, times: Vec<f64>) -> PlacementSeries {
+    let mut stats = Stats::new();
+    let mut histogram = Histogram::new(0.0, 0.8, 40);
+    for &t in &times {
+        stats.push(t);
+        histogram.push(t);
+    }
+    PlacementSeries {
+        kind,
+        times,
+        stats,
+        histogram,
+    }
+}
+
+/// Run the sweep.
+pub fn run(params: &Fig2Params) -> Result<Fig2Result> {
+    let n = 6;
+    let avail: Vec<usize> = (0..n).collect();
+    let placements = [
+        (PlacementKind::Repetition, Placement::build(PlacementKind::Repetition, n, 6, 3)?),
+        (PlacementKind::Cyclic, Placement::build(PlacementKind::Cyclic, n, 6, 3)?),
+        (PlacementKind::Man, Placement::build(PlacementKind::Man, n, 20, 3)?),
+    ];
+    let solve_params = SolveParams {
+        solver: params.solver,
+        ..Default::default()
+    };
+
+    let mut rng = Rng::new(params.seed);
+    let mut times: [Vec<f64>; 3] = [
+        Vec::with_capacity(params.realizations),
+        Vec::with_capacity(params.realizations),
+        Vec::with_capacity(params.realizations),
+    ];
+    for _ in 0..params.realizations {
+        // σ[n] ~ Exp(λ): X-fractions per unit time
+        let sigma: Vec<f64> = (0..n).map(|_| rng.exponential(params.lambda).max(1e-6)).collect();
+        for (i, (_, p)) in placements.iter().enumerate() {
+            let g = p.submatrices() as f64;
+            let s: Vec<f64> = sigma.iter().map(|&x| x * g).collect();
+            let sol = solve_load_matrix(p, &avail, &s, &solve_params)?;
+            times[i].push(sol.time);
+        }
+    }
+    let [rep_t, cyc_t, man_t] = times;
+    // Tie-tolerant comparison: on many draws two placements share the same
+    // optimum exactly (both hit the work-conservation bound), so strict fp
+    // comparison would attribute ~half of those ties to either side. Count
+    // genuine losses and ties separately.
+    let compare = |a: &[f64], b: &[f64]| {
+        let rel = |x: f64, y: f64| (x - y).abs() <= 1e-7 * (1.0 + y.abs());
+        WinCount {
+            worse: a
+                .iter()
+                .zip(b)
+                .filter(|(&x, &y)| x > y && !rel(x, y))
+                .count(),
+            tied: a.iter().zip(b).filter(|(&x, &y)| rel(x, y)).count(),
+        }
+    };
+    Ok(Fig2Result {
+        cyclic_vs_rep: compare(&cyc_t, &rep_t),
+        man_vs_rep: compare(&man_t, &rep_t),
+        man_vs_cyclic: compare(&man_t, &cyc_t),
+        repetition: series(PlacementKind::Repetition, rep_t),
+        cyclic: series(PlacementKind::Cyclic, cyc_t),
+        man: series(PlacementKind::Man, man_t),
+    })
+}
+
+/// Render the Fig. 2 + Table I report.
+pub fn report(params: &Fig2Params) -> Result<String> {
+    let r = run(params)?;
+    let mut out = String::new();
+    out.push_str(&format!(
+        "EXP-F2/T1 (paper Fig. 2 + Table I): {} realizations, σ ~ Exp({})\n\n",
+        params.realizations, params.lambda
+    ));
+    let table = crate::util::fmt::render_table(
+        &["computation time", "cyclic", "repetition", "MAN"],
+        &[
+            vec![
+                "mean".into(),
+                format!("{:.4}", r.cyclic.stats.mean()),
+                format!("{:.4}", r.repetition.stats.mean()),
+                format!("{:.4}", r.man.stats.mean()),
+            ],
+            vec![
+                "variance".into(),
+                format!("{:.4}", r.cyclic.stats.variance()),
+                format!("{:.4}", r.repetition.stats.variance()),
+                format!("{:.4}", r.man.stats.variance()),
+            ],
+            vec![
+                "paper mean".into(),
+                "0.1492".into(),
+                "0.2296".into(),
+                "0.1442".into(),
+            ],
+            vec![
+                "paper variance".into(),
+                "0.0033".into(),
+                "0.0114".into(),
+                "0.0032".into(),
+            ],
+        ],
+    );
+    out.push_str(&table);
+    out.push_str(&format!(
+        "\nwin counts (of {}), 'worse (+ exact ties)':\n\
+         cyclic worse than repetition: {} (+{} ties)   [paper 68]\n\
+         man worse than repetition:    {} (+{} ties)   [paper 9]\n\
+         man worse than cyclic:        {} (+{} ties)   [paper 1621 — consistent\n\
+         \x20   with strict fp comparison splitting the tied optima]\n",
+        params.realizations,
+        r.cyclic_vs_rep.worse,
+        r.cyclic_vs_rep.tied,
+        r.man_vs_rep.worse,
+        r.man_vs_rep.tied,
+        r.man_vs_cyclic.worse,
+        r.man_vs_cyclic.tied
+    ));
+    for s in [&r.repetition, &r.cyclic, &r.man] {
+        out.push_str(&format!("\nhistogram of c(M), {} placement:\n", s.kind.name()));
+        out.push_str(&s.histogram.render(50));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick() -> Fig2Result {
+        run(&Fig2Params {
+            realizations: 300,
+            seed: 9,
+            ..Default::default()
+        })
+        .unwrap()
+    }
+
+    #[test]
+    fn ordering_matches_paper_shape() {
+        let r = quick();
+        // MAN ≤ cyclic < repetition in mean (paper Table I shape)
+        assert!(r.man.stats.mean() <= r.cyclic.stats.mean() + 1e-9);
+        assert!(r.cyclic.stats.mean() < r.repetition.stats.mean());
+        // variance ordering too
+        assert!(r.man.stats.variance() < r.repetition.stats.variance());
+    }
+
+    #[test]
+    fn win_counts_shape() {
+        let r = quick();
+        // cyclic rarely loses to repetition; MAN essentially never does;
+        // MAN vs cyclic ties on a large fraction of draws (both often hit
+        // the work-conservation bound) — the paper's 1621/5000 "worse"
+        // matches strict tie-splitting of those.
+        let n = 300.0;
+        assert!((r.cyclic_vs_rep.worse as f64) < 0.1 * n);
+        assert!(r.man_vs_rep.worse <= r.cyclic_vs_rep.worse);
+        assert!((r.man_vs_cyclic.tied as f64) > 0.2 * n);
+        // genuinely-worse MAN-vs-cyclic cases are rare
+        assert!((r.man_vs_cyclic.worse as f64) < 0.2 * n);
+    }
+
+    #[test]
+    fn man_rarely_loses_to_repetition() {
+        // Not a per-realization domination (the paper itself observes 9
+        // counterexamples in 5000): MAN wins the overwhelming majority.
+        let r = quick();
+        let losses = r
+            .man
+            .times
+            .iter()
+            .zip(&r.repetition.times)
+            .filter(|(m, rep)| *m > &(*rep + 1e-9))
+            .count();
+        assert!(
+            (losses as f64) < 0.02 * r.man.times.len() as f64,
+            "MAN lost to repetition {losses} times"
+        );
+    }
+
+    #[test]
+    fn deterministic_by_seed() {
+        let a = run(&Fig2Params {
+            realizations: 50,
+            seed: 4,
+            ..Default::default()
+        })
+        .unwrap();
+        let b = run(&Fig2Params {
+            realizations: 50,
+            seed: 4,
+            ..Default::default()
+        })
+        .unwrap();
+        assert_eq!(a.cyclic.times, b.cyclic.times);
+    }
+}

@@ -1,0 +1,177 @@
+//! Paper experiment harnesses (one module per table/figure), shared by the
+//! benches (`benches/fig*_*.rs`) and the `usec exp` subcommand.
+//!
+//! | module | paper artifact | bench |
+//! |---|---|---|
+//! | [`fig1`] | Fig. 1 + in-text `c` values | `fig1_example` |
+//! | [`fig2`] | Fig. 2 histograms + Table I | `fig2_placements` |
+//! | [`fig3`] | Fig. 3 straggler example | `fig3_straggler` |
+//! | [`fig4`] | Fig. 4 power-iteration E2E | `fig4_power_iteration` |
+
+pub mod fig1;
+pub mod fig2;
+pub mod fig3;
+pub mod fig4;
+
+use crate::cli::{ArgSpec, Args};
+use crate::config::RunConfig;
+use crate::error::{Error, Result};
+
+/// `usec run …` — full elastic power-iteration run from CLI flags.
+pub fn run_cli(argv: &[String]) -> Result<()> {
+    let args = Args::parse(argv, &RunConfig::arg_specs())?;
+    let cfg = RunConfig::from_args(&args)?;
+    let res = crate::apps::run_power_iteration(&cfg)?;
+    println!(
+        "power iteration: {} steps, backend={}, policy={}, placement={}",
+        cfg.steps,
+        cfg.backend.name(),
+        cfg.policy.name(),
+        cfg.placement.name()
+    );
+    println!(
+        "final NMSE {:.3e}, eigenvalue estimate {:.4} (truth {:.4}), total wall {:?}",
+        res.final_nmse,
+        res.eigval,
+        res.truth_eigval,
+        res.timeline.total_wall()
+    );
+    println!("\nper-step series (CSV):\n{}", res.timeline.to_csv());
+    Ok(())
+}
+
+/// `usec exp <fig1|fig2|fig3|fig4|fig4s> [--realizations N] [--q N] …`
+pub fn exp_cli(argv: &[String]) -> Result<()> {
+    let which = argv
+        .first()
+        .ok_or_else(|| Error::Config("usage: usec exp <fig1|fig2|fig3|fig4|fig4s>".into()))?;
+    let rest = &argv[1..];
+    let specs = vec![
+        ArgSpec::opt("realizations", "5000", "fig2: speed draws"),
+        ArgSpec::opt("seed", "2021", "PRNG seed"),
+        ArgSpec::opt("q", "1536", "fig4: matrix dimension"),
+        ArgSpec::opt("steps", "40", "fig4: iteration count"),
+        ArgSpec::opt("row-cost-ns", "20000", "fig4: simulated ns/row"),
+        ArgSpec::opt("backend", "host", "fig4: host|pjrt"),
+    ];
+    let args = Args::parse(rest, &specs)?;
+    let out = match which.as_str() {
+        "fig1" => fig1::report()?,
+        "fig2" | "table1" => fig2::report(&fig2::Fig2Params {
+            realizations: args.get_usize("realizations")?,
+            seed: args.get_u64("seed")?,
+            ..Default::default()
+        })?,
+        "fig3" => fig3::report()?,
+        "fig4" | "fig4s" => fig4::report(&fig4::Fig4Params {
+            q: args.get_usize("q")?,
+            steps: args.get_usize("steps")?,
+            row_cost_ns: args.get_u64("row-cost-ns")?,
+            seed: args.get_u64("seed")?,
+            backend: crate::config::types::BackendKind::parse(
+                args.get("backend").unwrap_or("host"),
+            )?,
+            injected: if which == "fig4s" { 2 } else { 0 },
+            tolerance: 0, // paper §V: S = 0; stragglers are slow, not lost
+            slowdown: if which == "fig4s" { 3.0 } else { 0.0 },
+            fixed_victims: which == "fig4s",
+        })?,
+        other => {
+            return Err(Error::Config(format!(
+                "unknown experiment '{other}' (fig1|fig2|fig3|fig4|fig4s)"
+            )))
+        }
+    };
+    println!("{out}");
+    Ok(())
+}
+
+/// `usec solve --placement cyclic --speeds 1,2,4,8,16,32 [--stragglers S]`
+/// — one-shot assignment solve, prints `M*` and `c*`.
+pub fn solve_cli(argv: &[String]) -> Result<()> {
+    let specs = vec![
+        ArgSpec::opt("placement", "cyclic", "repetition|cyclic|man"),
+        ArgSpec::opt("n", "6", "machines"),
+        ArgSpec::opt("g", "6", "sub-matrices"),
+        ArgSpec::opt("j", "3", "replication"),
+        ArgSpec::opt("speeds", "1,2,4,8,16,32", "speed vector"),
+        ArgSpec::opt("avail", "", "available machines (default: all)"),
+        ArgSpec::opt("stragglers", "0", "straggler tolerance S"),
+        ArgSpec::opt("solver", "simplex", "simplex|flow"),
+    ];
+    let args = Args::parse(argv, &specs)?;
+    let kind = crate::placement::PlacementKind::parse(args.get("placement").unwrap())?;
+    let n = args.get_usize("n")?;
+    let p = crate::placement::Placement::build(kind, n, args.get_usize("g")?, args.get_usize("j")?)?;
+    let speeds = args.get_f64_list("speeds")?;
+    let avail: Vec<usize> = match args.get("avail") {
+        Some("") | None => (0..n).collect(),
+        Some(list) => list
+            .split(',')
+            .map(|x| {
+                x.trim()
+                    .parse()
+                    .map_err(|_| Error::Config(format!("bad machine id '{x}'")))
+            })
+            .collect::<Result<_>>()?,
+    };
+    let params = crate::optim::SolveParams {
+        stragglers: args.get_usize("stragglers")?,
+        solver: crate::optim::SolverKind::parse(args.get("solver").unwrap())?,
+        ..Default::default()
+    };
+    let sol = crate::optim::solve_load_matrix(&p, &avail, &speeds, &params)?;
+    println!(
+        "placement={} N={} G={} J={} S={} solver={}",
+        kind.name(),
+        n,
+        p.submatrices(),
+        p.replication(),
+        params.stragglers,
+        params.solver.name()
+    );
+    println!("c* = {:.6}\n", sol.time);
+    println!(
+        "{}",
+        crate::util::fmt::render_load_matrix(&sol.load.to_rows(), "X", "m")
+    );
+    println!("machine loads μ[n] = {:?}", sol.load.machine_loads());
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn solve_cli_runs() {
+        solve_cli(&sv(&["--placement", "cyclic"])).unwrap();
+        solve_cli(&sv(&["--placement", "rep", "--stragglers", "1", "--speeds", "1,1,1,1,1,1"]))
+            .unwrap();
+    }
+
+    #[test]
+    fn exp_cli_fig1_and_fig3() {
+        exp_cli(&sv(&["fig1"])).unwrap();
+        exp_cli(&sv(&["fig3"])).unwrap();
+        assert!(exp_cli(&sv(&["nope"])).is_err());
+        assert!(exp_cli(&[]).is_err());
+    }
+
+    #[test]
+    fn exp_cli_fig2_small() {
+        exp_cli(&sv(&["fig2", "--realizations", "30"])).unwrap();
+    }
+
+    #[test]
+    fn run_cli_small() {
+        run_cli(&sv(&[
+            "--q", "60", "--r", "60", "--steps", "5", "--speeds", "1,2,3,4,5,6",
+        ]))
+        .unwrap();
+    }
+}

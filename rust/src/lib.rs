@@ -1,0 +1,64 @@
+//! # USEC — Heterogeneous Uncoded Storage Elastic Computing
+//!
+//! A production-quality implementation of the USEC framework of
+//! Ji, Zhang & Wan (2021): elastic master/worker matrix computation over
+//! *uncoded* replicated storage, with exact heterogeneous computation
+//! assignment and optional straggler tolerance.
+//!
+//! The crate is the Layer-3 (Rust) coordinator of a three-layer stack:
+//!
+//! * **L1** — a Pallas tiled mat-vec kernel (build-time Python, see
+//!   `python/compile/kernels/`), lowered together with
+//! * **L2** — the JAX power-iteration step graph (`python/compile/model.py`)
+//!   into HLO text artifacts under `artifacts/`, which
+//! * **L3** — this crate loads via the PJRT CPU client ([`runtime`]) and
+//!   drives from the elastic scheduler ([`sched`]). Python never runs on
+//!   the request path.
+//!
+//! ## Core concepts
+//!
+//! * [`placement`] — how the `q×r` data matrix `X`, row-partitioned into
+//!   `G` sub-matrices, is replicated uncoded onto `J` of `N` machines
+//!   (repetition / cyclic / MAN / custom placements).
+//! * [`optim`] — the paper's optimization framework: the relaxed convex
+//!   program (eq. 6 / eq. 8) solved exactly (simplex + parametric-flow
+//!   cross-check) and the *filling algorithm* (Algorithm 2) that converts
+//!   the optimal load matrix `M*` into a concrete `1+S`-redundant
+//!   computation assignment.
+//! * [`sched`] — Algorithm 1: the adaptive master/worker loop with EWMA
+//!   speed estimation, elasticity traces and straggler injection.
+//! * [`runtime`] — PJRT artifact loading/execution plus a pure-Rust host
+//!   backend so everything is testable without artifacts.
+//! * [`apps`] — power iteration, ridge regression and PageRank built on the
+//!   elastic substrate.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use usec::placement::{Placement, PlacementKind};
+//! use usec::optim::{solve_load_matrix, SolveParams};
+//!
+//! // 6 machines, 6 sub-matrices, replication factor 3, cyclic placement.
+//! let p = Placement::build(PlacementKind::Cyclic, 6, 6, 3).unwrap();
+//! let speeds = vec![1.0, 2.0, 4.0, 8.0, 16.0, 32.0];
+//! let avail: Vec<usize> = (0..6).collect();
+//! let sol = solve_load_matrix(&p, &avail, &speeds, &SolveParams::default()).unwrap();
+//! println!("optimal computation time: {}", sol.time);
+//! ```
+
+pub mod apps;
+pub mod cli;
+pub mod config;
+pub mod csec;
+pub mod error;
+pub mod exp;
+pub mod linalg;
+pub mod metrics;
+pub mod optim;
+pub mod placement;
+pub mod runtime;
+pub mod sched;
+pub mod testing;
+pub mod util;
+
+pub use error::{Error, Result};

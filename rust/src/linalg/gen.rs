@@ -1,0 +1,139 @@
+//! Synthetic matrix generators with controlled spectra.
+//!
+//! The paper's Fig. 4 uses a dense 6000×6000 symmetric matrix on EC2. We
+//! plant a known dominant eigenpair so NMSE against the *true* eigenvector
+//! is measurable without an external eigensolver (DESIGN.md §3).
+
+use crate::linalg::{ops, Matrix};
+use crate::util::Rng;
+
+/// A symmetric matrix together with its planted dominant eigenpair.
+#[derive(Debug, Clone)]
+pub struct PlantedMatrix {
+    pub matrix: Matrix,
+    /// Unit-norm dominant eigenvector.
+    pub eigvec: Vec<f32>,
+    /// Dominant eigenvalue.
+    pub eigval: f64,
+}
+
+/// Build `A = λ·u uᵀ + ε·(B + Bᵀ)/2` with `u` a random unit vector and `B`
+/// i.i.d. uniform noise. `ε` is sized so the noise spectral radius
+/// (≈ `ε·√(3n)` w.h.p.) stays below `gap·λ`, guaranteeing `u` dominates.
+///
+/// `n` is the dimension; `gap ∈ (0,1)` controls the relative spectral gap
+/// (smaller gap ⇒ slower power-iteration convergence).
+pub fn planted_symmetric(n: usize, eigval: f64, gap: f64, seed: u64) -> PlantedMatrix {
+    assert!(n > 0 && (0.0..1.0).contains(&gap));
+    let mut rng = Rng::new(seed);
+
+    // random unit dominant eigenvector
+    let mut u: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+    ops::normalize(&mut u);
+
+    // noise scale: uniform[-0.5,0.5) entries have variance 1/12; symmetric
+    // random matrix spectral norm ≈ 2σ√n = √(n/3); keep it at gap·λ/2.
+    let eps = (gap * eigval * 0.5) / (n as f64 / 3.0).sqrt();
+
+    let mut m = Matrix::zeros(n, n);
+    let data = m.data_mut();
+    // fill upper triangle with symmetric noise + rank-1 plant
+    for i in 0..n {
+        for j in i..n {
+            let noise = (rng.f64() - 0.5) * eps;
+            let plant = eigval * u[i] as f64 * u[j] as f64;
+            let v = (plant + noise) as f32;
+            data[i * n + j] = v;
+            data[j * n + i] = v;
+        }
+    }
+    PlantedMatrix {
+        matrix: m,
+        eigvec: u,
+        eigval,
+    }
+}
+
+/// Uniform random dense matrix in `[-0.5, 0.5)` (generic workloads).
+pub fn random_dense(rows: usize, cols: usize, seed: u64) -> Matrix {
+    let mut rng = Rng::new(seed);
+    let mut m = Matrix::zeros(rows, cols);
+    rng.fill_f32(m.data_mut());
+    m
+}
+
+/// Row-stochastic "link" matrix for the PageRank example: random sparse-ish
+/// column pattern, rows normalized to sum to 1.
+pub fn random_stochastic(n: usize, seed: u64) -> Matrix {
+    let mut rng = Rng::new(seed);
+    let mut m = Matrix::zeros(n, n);
+    for r in 0..n {
+        // each "page" links to ~log2(n)+2 others
+        let k = ((n as f64).log2() as usize + 2).min(n);
+        let targets = rng.sample_indices(n, k);
+        let w = 1.0 / k as f32;
+        for t in targets {
+            m.set(r, t, w);
+        }
+    }
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn planted_matrix_is_symmetric() {
+        let p = planted_symmetric(64, 10.0, 0.5, 1);
+        assert!(p.matrix.is_symmetric(0.0));
+    }
+
+    #[test]
+    fn planted_eigvec_is_unit() {
+        let p = planted_symmetric(64, 10.0, 0.5, 2);
+        assert!((ops::norm2(&p.eigvec) - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn power_iteration_recovers_plant() {
+        let p = planted_symmetric(128, 8.0, 0.4, 3);
+        let mut b: Vec<f32> = vec![1.0; 128];
+        ops::normalize(&mut b);
+        for _ in 0..200 {
+            b = p.matrix.matvec(&b).unwrap();
+            ops::normalize(&mut b);
+        }
+        // The noise term perturbs the true dominant eigenvector away from
+        // the plant by O(‖E‖/λ·gap), so a small floor remains.
+        let nmse = ops::nmse_signless(&b, &p.eigvec);
+        assert!(nmse < 0.05, "nmse = {nmse}");
+        // Rayleigh quotient ≈ planted eigenvalue
+        let ab = p.matrix.matvec(&b).unwrap();
+        let lambda = ops::dot(&ab, &b);
+        assert!((lambda - 8.0).abs() < 0.5, "lambda = {lambda}");
+    }
+
+    #[test]
+    fn random_dense_in_range() {
+        let m = random_dense(8, 8, 7);
+        assert!(m.data().iter().all(|&x| (-0.5..0.5).contains(&x)));
+    }
+
+    #[test]
+    fn stochastic_rows_sum_to_one() {
+        let m = random_stochastic(32, 9);
+        for r in 0..32 {
+            let s: f32 = m.row(r).iter().sum();
+            assert!((s - 1.0).abs() < 1e-5, "row {r} sums to {s}");
+        }
+    }
+
+    #[test]
+    fn deterministic_by_seed() {
+        let a = planted_symmetric(16, 5.0, 0.5, 42);
+        let b = planted_symmetric(16, 5.0, 0.5, 42);
+        assert_eq!(a.matrix, b.matrix);
+        assert_eq!(a.eigvec, b.eigvec);
+    }
+}

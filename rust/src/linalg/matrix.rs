@@ -1,0 +1,185 @@
+//! Row-major dense `f32` matrix.
+
+use crate::error::{Error, Result};
+
+/// A dense row-major `f32` matrix (`rows × cols`).
+///
+/// `f32` matches the PJRT artifact dtype; the reference kernels accumulate
+/// in `f64` so the host backend is a high-precision oracle for the
+/// artifact path.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Matrix {
+    rows: usize,
+    cols: usize,
+    data: Vec<f32>,
+}
+
+impl Matrix {
+    /// Zero-filled matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Matrix {
+            rows,
+            cols,
+            data: vec![0.0; rows * cols],
+        }
+    }
+
+    /// Build from a flat row-major buffer.
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Result<Self> {
+        if data.len() != rows * cols {
+            return Err(Error::Shape(format!(
+                "buffer of {} elements cannot be {rows}x{cols}",
+                data.len()
+            )));
+        }
+        Ok(Matrix { rows, cols, data })
+    }
+
+    /// Identity matrix.
+    pub fn eye(n: usize) -> Self {
+        let mut m = Matrix::zeros(n, n);
+        for i in 0..n {
+            m.data[i * n + i] = 1.0;
+        }
+        m
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Flat row-major data.
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    /// Mutable flat data.
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    /// Element accessor.
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> f32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c]
+    }
+
+    /// Element setter.
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: f32) {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c] = v;
+    }
+
+    /// A view of row `r`.
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Borrow rows `[lo, hi)` as a contiguous slice (row-major submatrix).
+    pub fn row_block(&self, lo: usize, hi: usize) -> &[f32] {
+        assert!(lo <= hi && hi <= self.rows, "row block {lo}..{hi} of {}", self.rows);
+        &self.data[lo * self.cols..hi * self.cols]
+    }
+
+    /// Copy rows `[lo, hi)` into a new matrix.
+    pub fn slice_rows(&self, lo: usize, hi: usize) -> Matrix {
+        Matrix {
+            rows: hi - lo,
+            cols: self.cols,
+            data: self.row_block(lo, hi).to_vec(),
+        }
+    }
+
+    /// `self * v` with `f64` accumulation.
+    pub fn matvec(&self, v: &[f32]) -> Result<Vec<f32>> {
+        if v.len() != self.cols {
+            return Err(Error::Shape(format!(
+                "matvec: vector length {} vs {} columns",
+                v.len(),
+                self.cols
+            )));
+        }
+        let mut out = vec![0.0f32; self.rows];
+        ops::matvec_into(&self.data, self.rows, self.cols, v, &mut out);
+        Ok(out)
+    }
+
+    /// Symmetry check (used by generator tests).
+    pub fn is_symmetric(&self, tol: f32) -> bool {
+        if self.rows != self.cols {
+            return false;
+        }
+        for i in 0..self.rows {
+            for j in (i + 1)..self.cols {
+                if (self.at(i, j) - self.at(j, i)).abs() > tol {
+                    return false;
+                }
+            }
+        }
+        true
+    }
+}
+
+use super::ops;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_access() {
+        let m = Matrix::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]).unwrap();
+        assert_eq!(m.at(0, 0), 1.0);
+        assert_eq!(m.at(1, 2), 6.0);
+        assert_eq!(m.row(1), &[4., 5., 6.]);
+    }
+
+    #[test]
+    fn bad_shape_rejected() {
+        assert!(Matrix::from_vec(2, 3, vec![0.0; 5]).is_err());
+    }
+
+    #[test]
+    fn eye_matvec_is_identity() {
+        let m = Matrix::eye(4);
+        let v = vec![1., 2., 3., 4.];
+        assert_eq!(m.matvec(&v).unwrap(), v);
+    }
+
+    #[test]
+    fn matvec_known() {
+        let m = Matrix::from_vec(2, 2, vec![1., 2., 3., 4.]).unwrap();
+        let y = m.matvec(&[1., 1.]).unwrap();
+        assert_eq!(y, vec![3., 7.]);
+    }
+
+    #[test]
+    fn matvec_shape_mismatch() {
+        let m = Matrix::zeros(2, 2);
+        assert!(m.matvec(&[1.0]).is_err());
+    }
+
+    #[test]
+    fn row_blocks() {
+        let m = Matrix::from_vec(3, 2, vec![0., 1., 2., 3., 4., 5.]).unwrap();
+        assert_eq!(m.row_block(1, 3), &[2., 3., 4., 5.]);
+        let s = m.slice_rows(0, 1);
+        assert_eq!(s.rows(), 1);
+        assert_eq!(s.data(), &[0., 1.]);
+    }
+
+    #[test]
+    fn symmetry_check() {
+        let m = Matrix::from_vec(2, 2, vec![1., 2., 2., 1.]).unwrap();
+        assert!(m.is_symmetric(0.0));
+        let m2 = Matrix::from_vec(2, 2, vec![1., 2., 3., 1.]).unwrap();
+        assert!(!m2.is_symmetric(0.5));
+    }
+}

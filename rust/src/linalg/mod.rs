@@ -1,0 +1,16 @@
+//! Dense linear algebra substrate.
+//!
+//! The data plane of the USEC system: the row-major data matrix `X`, its
+//! row partition into `G` sub-matrices and fixed-size tiles, reference
+//! mat-vec / norm kernels (used by the host backend and by tests as the
+//! oracle for the PJRT path), and synthetic matrix generators with planted
+//! spectra for the power-iteration experiments.
+
+pub mod gen;
+pub mod matrix;
+pub mod ops;
+pub mod partition;
+pub mod solve;
+
+pub use matrix::Matrix;
+pub use partition::{RowRange, TilePlan};

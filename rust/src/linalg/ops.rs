@@ -1,0 +1,147 @@
+//! Reference vector/matrix kernels (host backend + test oracle).
+//!
+//! These are the CPU hot-path fallbacks: `matvec_into` is what a worker
+//! executes per tile when running with the host backend instead of PJRT.
+//! Accumulation is in `f64` to serve as a numerics oracle.
+
+/// `out[r] = Σ_c a[r*cols + c] * v[c]` for `r < rows`.
+///
+/// Unrolled-by-4 inner loop over columns; `f64` accumulators.
+pub fn matvec_into(a: &[f32], rows: usize, cols: usize, v: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(a.len(), rows * cols);
+    debug_assert_eq!(v.len(), cols);
+    debug_assert_eq!(out.len(), rows);
+    for r in 0..rows {
+        let row = &a[r * cols..(r + 1) * cols];
+        // 8 independent f64 accumulators: enough ILP to keep the FMA ports
+        // busy while preserving the f64-accumulation oracle property
+        // (§Perf iteration 3: +29 % over the 4-wide version).
+        let mut acc = [0.0f64; 8];
+        let mut row_it = row.chunks_exact(8);
+        let mut v_it = v.chunks_exact(8);
+        for (rc, vc) in (&mut row_it).zip(&mut v_it) {
+            for k in 0..8 {
+                acc[k] += rc[k] as f64 * vc[k] as f64;
+            }
+        }
+        for (x, y) in row_it.remainder().iter().zip(v_it.remainder()) {
+            acc[0] += *x as f64 * *y as f64;
+        }
+        out[r] = acc.iter().sum::<f64>() as f32;
+    }
+}
+
+/// Euclidean norm with `f64` accumulation.
+pub fn norm2(v: &[f32]) -> f64 {
+    v.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()
+}
+
+/// In-place scale: `v *= s`.
+pub fn scale(v: &mut [f32], s: f32) {
+    for x in v.iter_mut() {
+        *x *= s;
+    }
+}
+
+/// Normalize to unit norm; returns the original norm. Zero vectors are
+/// left untouched (returns 0).
+pub fn normalize(v: &mut [f32]) -> f64 {
+    let n = norm2(v);
+    if n > 0.0 {
+        let inv = (1.0 / n) as f32;
+        scale(v, inv);
+    }
+    n
+}
+
+/// Dot product with `f64` accumulation.
+pub fn dot(a: &[f32], b: &[f32]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(&x, &y)| x as f64 * y as f64).sum()
+}
+
+/// Normalized mean-square error between an estimate and a reference
+/// direction, sign-invariant (eigenvectors are defined up to sign):
+/// `min(|e - r|², |e + r|²) / |r|²`.
+pub fn nmse_signless(est: &[f32], reference: &[f32]) -> f64 {
+    debug_assert_eq!(est.len(), reference.len());
+    let mut plus = 0.0f64;
+    let mut minus = 0.0f64;
+    let mut rnorm = 0.0f64;
+    for (&e, &r) in est.iter().zip(reference) {
+        let (e, r) = (e as f64, r as f64);
+        plus += (e - r) * (e - r);
+        minus += (e + r) * (e + r);
+        rnorm += r * r;
+    }
+    if rnorm == 0.0 {
+        return f64::INFINITY;
+    }
+    plus.min(minus) / rnorm
+}
+
+/// `y += x` elementwise.
+pub fn axpy1(y: &mut [f32], x: &[f32]) {
+    debug_assert_eq!(y.len(), x.len());
+    for (yi, &xi) in y.iter_mut().zip(x) {
+        *yi += xi;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matvec_matches_naive() {
+        let rows = 7;
+        let cols = 13; // non-multiple of 4 exercises the tail loop
+        let a: Vec<f32> = (0..rows * cols).map(|i| (i % 11) as f32 - 5.0).collect();
+        let v: Vec<f32> = (0..cols).map(|i| (i as f32) * 0.5 - 3.0).collect();
+        let mut out = vec![0.0; rows];
+        matvec_into(&a, rows, cols, &v, &mut out);
+        for r in 0..rows {
+            let expect: f32 = (0..cols).map(|c| a[r * cols + c] * v[c]).sum();
+            assert!((out[r] - expect).abs() < 1e-4, "row {r}");
+        }
+    }
+
+    #[test]
+    fn norm_and_normalize() {
+        let mut v = vec![3.0, 4.0];
+        assert_eq!(norm2(&v), 5.0);
+        let n = normalize(&mut v);
+        assert_eq!(n, 5.0);
+        assert!((norm2(&v) - 1.0).abs() < 1e-7);
+    }
+
+    #[test]
+    fn normalize_zero_vector_noop() {
+        let mut v = vec![0.0; 4];
+        assert_eq!(normalize(&mut v), 0.0);
+        assert_eq!(v, vec![0.0; 4]);
+    }
+
+    #[test]
+    fn dot_product() {
+        assert_eq!(dot(&[1., 2., 3.], &[4., 5., 6.]), 32.0);
+    }
+
+    #[test]
+    fn nmse_sign_invariant() {
+        let r = vec![1.0f32, 0.0, 0.0];
+        let e_pos = vec![1.0f32, 0.0, 0.0];
+        let e_neg = vec![-1.0f32, 0.0, 0.0];
+        assert_eq!(nmse_signless(&e_pos, &r), 0.0);
+        assert_eq!(nmse_signless(&e_neg, &r), 0.0);
+        let e_off = vec![0.0f32, 1.0, 0.0];
+        assert!((nmse_signless(&e_off, &r) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn axpy_accumulates() {
+        let mut y = vec![1.0f32, 2.0];
+        axpy1(&mut y, &[10.0, 20.0]);
+        assert_eq!(y, vec![11.0, 22.0]);
+    }
+}

@@ -1,0 +1,251 @@
+//! Row partitioning: sub-matrices, fractional-assignment quantization, tiles.
+//!
+//! Three granularities (DESIGN.md §6):
+//!
+//! 1. **Sub-matrices** — the paper's `G`-way row partition of `X`.
+//! 2. **Assignment rows** — the filling algorithm's fractional intervals
+//!    quantized to whole rows (largest-remainder, exactly conservative).
+//! 3. **Tiles** — fixed `TILE_R`-row blocks matching the AOT-compiled
+//!    PJRT executable shape; a worker runs `ceil(len/TILE_R)` executions
+//!    per assigned range, zero-padding the final ragged tile.
+
+use crate::error::{Error, Result};
+
+/// A half-open row interval `[lo, hi)`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct RowRange {
+    pub lo: usize,
+    pub hi: usize,
+}
+
+impl RowRange {
+    pub fn new(lo: usize, hi: usize) -> Self {
+        assert!(lo <= hi, "RowRange {lo}..{hi}");
+        RowRange { lo, hi }
+    }
+
+    pub fn len(&self) -> usize {
+        self.hi - self.lo
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.lo == self.hi
+    }
+
+    pub fn contains(&self, row: usize) -> bool {
+        self.lo <= row && row < self.hi
+    }
+
+    /// Intersection (possibly empty).
+    pub fn intersect(&self, other: &RowRange) -> RowRange {
+        let lo = self.lo.max(other.lo);
+        let hi = self.hi.min(other.hi).max(lo);
+        RowRange { lo, hi }
+    }
+
+    /// Shift by a base offset (sub-matrix-local → global rows).
+    pub fn offset(&self, base: usize) -> RowRange {
+        RowRange {
+            lo: self.lo + base,
+            hi: self.hi + base,
+        }
+    }
+}
+
+/// Balanced partition of `q` rows into `g_count` contiguous sub-matrices.
+///
+/// When `g_count` divides `q` every part has exactly `q/g_count` rows (the
+/// paper's setting); otherwise the first `q % g_count` parts get one extra
+/// row. The parts tile `[0, q)` exactly.
+pub fn submatrix_ranges(q: usize, g_count: usize) -> Result<Vec<RowRange>> {
+    if g_count == 0 || q < g_count {
+        return Err(Error::Shape(format!(
+            "cannot partition {q} rows into {g_count} sub-matrices"
+        )));
+    }
+    let base = q / g_count;
+    let extra = q % g_count;
+    let mut out = Vec::with_capacity(g_count);
+    let mut lo = 0;
+    for g in 0..g_count {
+        let len = base + usize::from(g < extra);
+        out.push(RowRange::new(lo, lo + len));
+        lo += len;
+    }
+    debug_assert_eq!(lo, q);
+    Ok(out)
+}
+
+/// Quantize fractional interval sizes to whole rows, conserving the total.
+///
+/// `fractions` are non-negative and sum to (approximately) 1; the result is
+/// a list of contiguous [`RowRange`]s covering `[0, rows)` whose lengths are
+/// the largest-remainder rounding of `fractions[i] * rows`. Every length
+/// differs from its exact value by less than 1 row.
+pub fn quantize_fractions(fractions: &[f64], rows: usize) -> Result<Vec<RowRange>> {
+    if fractions.is_empty() {
+        return Err(Error::Shape("no fractions to quantize".into()));
+    }
+    let sum: f64 = fractions.iter().sum();
+    if fractions.iter().any(|&f| f < -1e-12) || (sum - 1.0).abs() > 1e-6 {
+        return Err(Error::Shape(format!(
+            "fractions must be >= 0 and sum to 1 (sum = {sum})"
+        )));
+    }
+    let exact: Vec<f64> = fractions.iter().map(|&f| f.max(0.0) * rows as f64).collect();
+    let mut lens: Vec<usize> = exact.iter().map(|&e| e.floor() as usize).collect();
+    let assigned: usize = lens.iter().sum();
+    let mut deficit = rows - assigned.min(rows);
+    // distribute the remaining rows by largest fractional remainder
+    let mut order: Vec<usize> = (0..fractions.len()).collect();
+    order.sort_by(|&a, &b| {
+        let ra = exact[a] - exact[a].floor();
+        let rb = exact[b] - exact[b].floor();
+        rb.partial_cmp(&ra).unwrap().then(a.cmp(&b))
+    });
+    for &i in &order {
+        if deficit == 0 {
+            break;
+        }
+        lens[i] += 1;
+        deficit -= 1;
+    }
+    let mut out = Vec::with_capacity(lens.len());
+    let mut lo = 0;
+    for len in lens {
+        out.push(RowRange::new(lo, lo + len));
+        lo += len;
+    }
+    if lo != rows {
+        return Err(Error::Shape(format!(
+            "quantization covered {lo} of {rows} rows"
+        )));
+    }
+    Ok(out)
+}
+
+/// Tile planner: splits an assigned range into `TILE_R`-row execution units.
+#[derive(Debug, Clone, Copy)]
+pub struct TilePlan {
+    tile: usize,
+}
+
+impl TilePlan {
+    pub fn new(tile: usize) -> Self {
+        assert!(tile > 0);
+        TilePlan { tile }
+    }
+
+    pub fn tile_rows(&self) -> usize {
+        self.tile
+    }
+
+    /// Execution units for a range: all `tile` rows except possibly the
+    /// last, which is ragged (the executor zero-pads it).
+    pub fn plan(&self, range: RowRange) -> Vec<RowRange> {
+        let mut out = Vec::with_capacity(range.len().div_ceil(self.tile));
+        let mut lo = range.lo;
+        while lo < range.hi {
+            let hi = (lo + self.tile).min(range.hi);
+            out.push(RowRange::new(lo, hi));
+            lo = hi;
+        }
+        out
+    }
+
+    /// Number of PJRT executions for a range.
+    pub fn count(&self, range: RowRange) -> usize {
+        range.len().div_ceil(self.tile)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn submatrix_even_split() {
+        let parts = submatrix_ranges(6000, 6).unwrap();
+        assert_eq!(parts.len(), 6);
+        assert!(parts.iter().all(|p| p.len() == 1000));
+        assert_eq!(parts[0].lo, 0);
+        assert_eq!(parts[5].hi, 6000);
+    }
+
+    #[test]
+    fn submatrix_uneven_split_conserves_rows() {
+        let parts = submatrix_ranges(10, 3).unwrap();
+        let lens: Vec<usize> = parts.iter().map(|p| p.len()).collect();
+        assert_eq!(lens, vec![4, 3, 3]);
+        assert_eq!(parts.last().unwrap().hi, 10);
+    }
+
+    #[test]
+    fn submatrix_rejects_degenerate() {
+        assert!(submatrix_ranges(3, 0).is_err());
+        assert!(submatrix_ranges(2, 3).is_err());
+    }
+
+    #[test]
+    fn quantize_exact_thirds() {
+        let r = quantize_fractions(&[1.0 / 3.0, 1.0 / 3.0, 1.0 / 3.0], 9).unwrap();
+        assert_eq!(r.iter().map(|x| x.len()).collect::<Vec<_>>(), vec![3, 3, 3]);
+    }
+
+    #[test]
+    fn quantize_conserves_total_rows() {
+        let fr = [0.143, 0.262, 0.095, 0.5];
+        let r = quantize_fractions(&fr, 1000).unwrap();
+        assert_eq!(r.iter().map(|x| x.len()).sum::<usize>(), 1000);
+        assert_eq!(r.last().unwrap().hi, 1000);
+        // each part within 1 row of exact
+        for (range, f) in r.iter().zip(fr) {
+            assert!((range.len() as f64 - f * 1000.0).abs() < 1.0);
+        }
+    }
+
+    #[test]
+    fn quantize_handles_zero_fractions() {
+        let r = quantize_fractions(&[0.0, 1.0, 0.0], 5).unwrap();
+        assert_eq!(r[0].len(), 0);
+        assert_eq!(r[1].len(), 5);
+        assert_eq!(r[2].len(), 0);
+    }
+
+    #[test]
+    fn quantize_rejects_bad_sum() {
+        assert!(quantize_fractions(&[0.5, 0.2], 10).is_err());
+        assert!(quantize_fractions(&[-0.1, 1.1], 10).is_err());
+    }
+
+    #[test]
+    fn tiles_cover_range() {
+        let plan = TilePlan::new(512);
+        let tiles = plan.plan(RowRange::new(100, 1700));
+        assert_eq!(tiles.len(), 4); // 1600 rows → 3 full + 1 ragged
+        assert_eq!(tiles[0], RowRange::new(100, 612));
+        assert_eq!(tiles.last().unwrap().hi, 1700);
+        let covered: usize = tiles.iter().map(|t| t.len()).sum();
+        assert_eq!(covered, 1600);
+        assert_eq!(plan.count(RowRange::new(100, 1700)), 4);
+    }
+
+    #[test]
+    fn tile_empty_range() {
+        let plan = TilePlan::new(64);
+        assert!(plan.plan(RowRange::new(5, 5)).is_empty());
+        assert_eq!(plan.count(RowRange::new(5, 5)), 0);
+    }
+
+    #[test]
+    fn range_ops() {
+        let a = RowRange::new(0, 10);
+        let b = RowRange::new(5, 15);
+        assert_eq!(a.intersect(&b), RowRange::new(5, 10));
+        assert!(a.contains(9));
+        assert!(!a.contains(10));
+        assert_eq!(a.offset(100), RowRange::new(100, 110));
+        let disjoint = RowRange::new(20, 30);
+        assert!(a.intersect(&disjoint).is_empty());
+    }
+}

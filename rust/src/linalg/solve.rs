@@ -1,0 +1,167 @@
+//! Dense linear solves: LU with partial pivoting (`f64`).
+//!
+//! Substrate for the CSEC baseline's decoder (the master must invert the
+//! coding matrix restricted to the reporting machines).
+
+use crate::error::{Error, Result};
+
+/// LU factorization (in place) with partial pivoting of a square matrix.
+#[derive(Debug, Clone)]
+pub struct Lu {
+    n: usize,
+    /// Packed L\U factors, row-major.
+    lu: Vec<f64>,
+    /// Row permutation.
+    piv: Vec<usize>,
+}
+
+impl Lu {
+    /// Factor `a` (row-major `n×n`). Errors on singular (|pivot| < tol).
+    pub fn factor(a: &[f64], n: usize, tol: f64) -> Result<Lu> {
+        if a.len() != n * n {
+            return Err(Error::Shape(format!("{} elements for {n}x{n}", a.len())));
+        }
+        let mut lu = a.to_vec();
+        let mut piv: Vec<usize> = (0..n).collect();
+        for k in 0..n {
+            // pivot: largest |entry| in column k at/below row k
+            let mut p = k;
+            let mut best = lu[k * n + k].abs();
+            for r in (k + 1)..n {
+                let v = lu[r * n + k].abs();
+                if v > best {
+                    best = v;
+                    p = r;
+                }
+            }
+            if best < tol {
+                return Err(Error::solver(format!(
+                    "singular matrix at pivot {k} (|p| = {best:.3e})"
+                )));
+            }
+            if p != k {
+                for c in 0..n {
+                    lu.swap(k * n + c, p * n + c);
+                }
+                piv.swap(k, p);
+            }
+            let pivot = lu[k * n + k];
+            for r in (k + 1)..n {
+                let f = lu[r * n + k] / pivot;
+                lu[r * n + k] = f;
+                for c in (k + 1)..n {
+                    lu[r * n + c] -= f * lu[k * n + c];
+                }
+            }
+        }
+        Ok(Lu { n, lu, piv })
+    }
+
+    /// Solve `A x = b` for one right-hand side.
+    pub fn solve(&self, b: &[f64]) -> Result<Vec<f64>> {
+        if b.len() != self.n {
+            return Err(Error::Shape(format!("rhs of {} for n={}", b.len(), self.n)));
+        }
+        let n = self.n;
+        // apply permutation
+        let mut x: Vec<f64> = self.piv.iter().map(|&p| b[p]).collect();
+        // forward substitution (L has unit diagonal)
+        for r in 1..n {
+            for c in 0..r {
+                x[r] -= self.lu[r * n + c] * x[c];
+            }
+        }
+        // back substitution
+        for r in (0..n).rev() {
+            for c in (r + 1)..n {
+                x[r] -= self.lu[r * n + c] * x[c];
+            }
+            x[r] /= self.lu[r * n + r];
+        }
+        Ok(x)
+    }
+
+    /// Solve for many right-hand sides arranged as columns of a row-major
+    /// `n×m` matrix; returns the solution in the same layout.
+    pub fn solve_many(&self, b: &[f64], m: usize) -> Result<Vec<f64>> {
+        if b.len() != self.n * m {
+            return Err(Error::Shape(format!(
+                "{} elements for {}x{m}",
+                b.len(),
+                self.n
+            )));
+        }
+        let mut out = vec![0.0; self.n * m];
+        let mut col = vec![0.0; self.n];
+        for j in 0..m {
+            for i in 0..self.n {
+                col[i] = b[i * m + j];
+            }
+            let x = self.solve(&col)?;
+            for i in 0..self.n {
+                out[i * m + j] = x[i];
+            }
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn solves_known_system() {
+        // A = [[2,1],[1,3]], b = [5, 10] → x = [1, 3]
+        let lu = Lu::factor(&[2.0, 1.0, 1.0, 3.0], 2, 1e-12).unwrap();
+        let x = lu.solve(&[5.0, 10.0]).unwrap();
+        assert!((x[0] - 1.0).abs() < 1e-12);
+        assert!((x[1] - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pivoting_handles_zero_diagonal() {
+        // A = [[0,1],[1,0]] needs a row swap
+        let lu = Lu::factor(&[0.0, 1.0, 1.0, 0.0], 2, 1e-12).unwrap();
+        let x = lu.solve(&[2.0, 3.0]).unwrap();
+        assert_eq!(x, vec![3.0, 2.0]);
+    }
+
+    #[test]
+    fn singular_detected() {
+        assert!(Lu::factor(&[1.0, 2.0, 2.0, 4.0], 2, 1e-9).is_err());
+    }
+
+    #[test]
+    fn random_roundtrip() {
+        let n = 8;
+        let mut rng = crate::util::Rng::new(5);
+        let a: Vec<f64> = (0..n * n).map(|_| rng.f64() - 0.5).collect();
+        // diagonal dominance for a well-conditioned test
+        let mut a2 = a.clone();
+        for i in 0..n {
+            a2[i * n + i] += 4.0;
+        }
+        let x_true: Vec<f64> = (0..n).map(|i| i as f64 - 3.0).collect();
+        let b: Vec<f64> = (0..n)
+            .map(|r| (0..n).map(|c| a2[r * n + c] * x_true[c]).sum())
+            .collect();
+        let lu = Lu::factor(&a2, n, 1e-12).unwrap();
+        let x = lu.solve(&b).unwrap();
+        for (got, want) in x.iter().zip(&x_true) {
+            assert!((got - want).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn solve_many_matches_single() {
+        let a = [3.0, 1.0, 1.0, 2.0];
+        let lu = Lu::factor(&a, 2, 1e-12).unwrap();
+        let b = [1.0, 2.0, 3.0, 4.0]; // two columns
+        let xs = lu.solve_many(&b, 2).unwrap();
+        let x0 = lu.solve(&[1.0, 3.0]).unwrap();
+        let x1 = lu.solve(&[2.0, 4.0]).unwrap();
+        assert!((xs[0] - x0[0]).abs() < 1e-12 && (xs[2] - x0[1]).abs() < 1e-12);
+        assert!((xs[1] - x1[0]).abs() < 1e-12 && (xs[3] - x1[1]).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,11 @@
+//! `usec` — CLI entrypoint. Subcommands are wired up as the library
+//! modules land; see `usec help`.
+
+fn main() {
+    usec::util::log::init();
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = usec::cli::dispatch(&argv) {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}

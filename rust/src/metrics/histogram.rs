@@ -1,0 +1,105 @@
+//! Fixed-bucket histogram over a closed range (Fig. 2 reproduction).
+
+/// A histogram with `buckets` equal-width bins over `[lo, hi)`.
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    lo: f64,
+    hi: f64,
+    counts: Vec<u64>,
+    below: u64,
+    above: u64,
+}
+
+impl Histogram {
+    pub fn new(lo: f64, hi: f64, buckets: usize) -> Self {
+        assert!(hi > lo && buckets > 0);
+        Histogram {
+            lo,
+            hi,
+            counts: vec![0; buckets],
+            below: 0,
+            above: 0,
+        }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        if x < self.lo {
+            self.below += 1;
+        } else if x >= self.hi {
+            self.above += 1;
+        } else {
+            let b = ((x - self.lo) / (self.hi - self.lo) * self.counts.len() as f64) as usize;
+            let last = self.counts.len() - 1;
+            self.counts[b.min(last)] += 1;
+        }
+    }
+
+    pub fn counts(&self) -> &[u64] {
+        &self.counts
+    }
+
+    pub fn outliers(&self) -> (u64, u64) {
+        (self.below, self.above)
+    }
+
+    pub fn total(&self) -> u64 {
+        self.counts.iter().sum::<u64>() + self.below + self.above
+    }
+
+    /// Bucket midpoints (x-axis for plotting/reporting).
+    pub fn midpoints(&self) -> Vec<f64> {
+        let w = (self.hi - self.lo) / self.counts.len() as f64;
+        (0..self.counts.len())
+            .map(|i| self.lo + w * (i as f64 + 0.5))
+            .collect()
+    }
+
+    /// Render as an ASCII bar chart.
+    pub fn render(&self, width: usize) -> String {
+        let max = self.counts.iter().copied().max().unwrap_or(1).max(1);
+        let mids = self.midpoints();
+        let mut out = String::new();
+        for (m, &c) in mids.iter().zip(&self.counts) {
+            let bar = "#".repeat((c as usize * width) / max as usize);
+            out.push_str(&format!("{m:8.4} | {bar} {c}\n"));
+        }
+        if self.below + self.above > 0 {
+            out.push_str(&format!(
+                "(outliers: {} below, {} above)\n",
+                self.below, self.above
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn buckets_and_outliers() {
+        let mut h = Histogram::new(0.0, 1.0, 4);
+        for &x in &[-0.1, 0.0, 0.1, 0.3, 0.6, 0.9, 1.0, 2.0] {
+            h.push(x);
+        }
+        assert_eq!(h.counts(), &[2, 1, 1, 1]);
+        assert_eq!(h.outliers(), (1, 2));
+        assert_eq!(h.total(), 8);
+    }
+
+    #[test]
+    fn midpoints_centered() {
+        let h = Histogram::new(0.0, 1.0, 2);
+        assert_eq!(h.midpoints(), vec![0.25, 0.75]);
+    }
+
+    #[test]
+    fn render_contains_counts() {
+        let mut h = Histogram::new(0.0, 1.0, 2);
+        h.push(0.1);
+        h.push(0.2);
+        let r = h.render(10);
+        assert!(r.contains("2"));
+    }
+}

@@ -1,0 +1,9 @@
+//! Measurement: streaming statistics, histograms, per-step timelines.
+
+pub mod histogram;
+pub mod stats;
+pub mod timeline;
+
+pub use histogram::Histogram;
+pub use stats::Stats;
+pub use timeline::{StepRecord, Timeline};

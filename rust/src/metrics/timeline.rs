@@ -1,0 +1,143 @@
+//! Per-step records of an elastic run (Fig. 4 series + EXPERIMENTS.md logs).
+
+use std::time::Duration;
+
+/// What happened in one elastic computation step.
+#[derive(Debug, Clone)]
+pub struct StepRecord {
+    pub step: usize,
+    /// Machines available this step (`|N_t|`).
+    pub available: usize,
+    /// Machines that actually reported (≥ `available − S`).
+    pub reported: usize,
+    /// Stragglers injected this step.
+    pub stragglers: usize,
+    /// Wall-clock time of the step (scheduling + compute + combine).
+    pub wall: Duration,
+    /// Time spent solving the assignment problem.
+    pub solve: Duration,
+    /// Predicted computation time `c(M*)` in sub-matrix units.
+    pub predicted_c: f64,
+    /// Application metric (power iteration: NMSE vs true eigenvector).
+    pub metric: f64,
+}
+
+/// An append-only run log.
+#[derive(Debug, Clone, Default)]
+pub struct Timeline {
+    steps: Vec<StepRecord>,
+}
+
+impl Timeline {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, r: StepRecord) {
+        self.steps.push(r);
+    }
+
+    pub fn steps(&self) -> &[StepRecord] {
+        &self.steps
+    }
+
+    pub fn len(&self) -> usize {
+        self.steps.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.steps.is_empty()
+    }
+
+    /// Total wall-clock across steps.
+    pub fn total_wall(&self) -> Duration {
+        self.steps.iter().map(|s| s.wall).sum()
+    }
+
+    /// Cumulative (elapsed, metric) series — the Fig. 4 y-vs-x data.
+    pub fn metric_series(&self) -> Vec<(f64, f64)> {
+        let mut t = 0.0;
+        self.steps
+            .iter()
+            .map(|s| {
+                t += s.wall.as_secs_f64();
+                (t, s.metric)
+            })
+            .collect()
+    }
+
+    /// First elapsed time at which the metric drops below `threshold`.
+    pub fn time_to_metric(&self, threshold: f64) -> Option<f64> {
+        self.metric_series()
+            .into_iter()
+            .find(|&(_, m)| m < threshold)
+            .map(|(t, _)| t)
+    }
+
+    /// CSV dump (step, elapsed, metric, available, reported, solve_ms).
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from("step,elapsed_s,metric,available,reported,solve_ms\n");
+        let mut t = 0.0;
+        for s in &self.steps {
+            t += s.wall.as_secs_f64();
+            out.push_str(&format!(
+                "{},{:.6},{:.6e},{},{},{:.3}\n",
+                s.step,
+                t,
+                s.metric,
+                s.available,
+                s.reported,
+                s.solve.as_secs_f64() * 1e3
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(step: usize, wall_ms: u64, metric: f64) -> StepRecord {
+        StepRecord {
+            step,
+            available: 6,
+            reported: 6,
+            stragglers: 0,
+            wall: Duration::from_millis(wall_ms),
+            solve: Duration::from_micros(100),
+            predicted_c: 0.15,
+            metric,
+        }
+    }
+
+    #[test]
+    fn series_accumulates_time() {
+        let mut t = Timeline::new();
+        t.push(rec(0, 100, 0.5));
+        t.push(rec(1, 100, 0.05));
+        let s = t.metric_series();
+        assert!((s[0].0 - 0.1).abs() < 1e-9);
+        assert!((s[1].0 - 0.2).abs() < 1e-9);
+        assert_eq!(t.total_wall(), Duration::from_millis(200));
+    }
+
+    #[test]
+    fn time_to_metric_threshold() {
+        let mut t = Timeline::new();
+        t.push(rec(0, 100, 0.5));
+        t.push(rec(1, 100, 0.05));
+        t.push(rec(2, 100, 0.001));
+        assert!((t.time_to_metric(0.1).unwrap() - 0.2).abs() < 1e-9);
+        assert!(t.time_to_metric(1e-9).is_none());
+    }
+
+    #[test]
+    fn csv_has_rows() {
+        let mut t = Timeline::new();
+        t.push(rec(0, 10, 0.5));
+        let csv = t.to_csv();
+        assert_eq!(csv.lines().count(), 2);
+        assert!(csv.starts_with("step,"));
+    }
+}

@@ -1,0 +1,371 @@
+//! Materialized computation assignments: fractional row sets → whole rows →
+//! per-machine task lists.
+//!
+//! This is the hand-off point between the optimizer and the cluster: the
+//! master builds an [`Assignment`] each time step and ships each worker its
+//! [`Task`] list (sub-matrix id + local row range).
+
+use crate::error::{Error, Result};
+use crate::linalg::partition::{quantize_fractions, RowRange};
+use crate::placement::Placement;
+
+use super::filling::{fill, Filling};
+use super::homogeneous;
+use super::types::{LoadMatrix, SolveParams};
+
+/// A unit of worker work: rows `rows` (sub-matrix-local) of sub-matrix `g`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Task {
+    pub g: usize,
+    pub rows: RowRange,
+}
+
+/// The assignment for one sub-matrix: `F_g` row sets with their machines.
+#[derive(Debug, Clone)]
+pub struct SubAssignment {
+    pub g: usize,
+    /// Fractions `α_f` (sum 1).
+    pub alphas: Vec<f64>,
+    /// Machines per row set (`|P_f| = 1+S`).
+    pub psets: Vec<Vec<usize>>,
+    /// Quantized local row ranges, tiling `[0, rows_g)`.
+    pub row_sets: Vec<RowRange>,
+}
+
+/// A complete per-step computation assignment `{F_g, M_g, P_g}` (paper
+/// §II-B notation).
+#[derive(Debug, Clone)]
+pub struct Assignment {
+    pub stragglers: usize,
+    pub machines: usize,
+    pub subs: Vec<SubAssignment>,
+}
+
+impl Assignment {
+    /// Task list for machine `n`, adjacent ranges merged, ordered by
+    /// `(g, rows.lo)`.
+    pub fn tasks_for(&self, n: usize) -> Vec<Task> {
+        let mut tasks: Vec<Task> = Vec::new();
+        for sub in &self.subs {
+            let mut ranges: Vec<RowRange> = sub
+                .psets
+                .iter()
+                .zip(&sub.row_sets)
+                .filter(|(p, r)| p.contains(&n) && !r.is_empty())
+                .map(|(_, r)| *r)
+                .collect();
+            ranges.sort_by_key(|r| r.lo);
+            // merge adjacency
+            let mut merged: Vec<RowRange> = Vec::new();
+            for r in ranges {
+                match merged.last_mut() {
+                    Some(last) if last.hi == r.lo => last.hi = r.hi,
+                    _ => merged.push(r),
+                }
+            }
+            tasks.extend(merged.into_iter().map(|rows| Task { g: sub.g, rows }));
+        }
+        tasks
+    }
+
+    /// Rows assigned to machine `n` in total.
+    pub fn rows_for(&self, n: usize) -> usize {
+        self.tasks_for(n).iter().map(|t| t.rows.len()).sum()
+    }
+
+    /// The load matrix *realized* after quantization (fractions of each
+    /// sub-matrix measured in whole rows).
+    pub fn realized_load_matrix(&self, sub_rows: &[usize]) -> LoadMatrix {
+        let g_count = self.subs.len();
+        let mut m = LoadMatrix::zeros(g_count, self.machines);
+        for sub in &self.subs {
+            let rows_g = sub_rows[sub.g] as f64;
+            for (p, r) in sub.psets.iter().zip(&sub.row_sets) {
+                for &n in p {
+                    m.set(sub.g, n, m.get(sub.g, n) + r.len() as f64 / rows_g);
+                }
+            }
+        }
+        m
+    }
+
+    /// Structural validation: row sets tile each sub-matrix, every row set
+    /// has exactly `1+S` *distinct* machines (hence any `S` stragglers
+    /// leave at least one survivor — constraint (7c)).
+    pub fn validate(&self, sub_rows: &[usize]) -> Result<()> {
+        let cover = 1 + self.stragglers;
+        for sub in &self.subs {
+            // tiling check
+            let mut lo = 0usize;
+            for r in &sub.row_sets {
+                if r.lo != lo {
+                    return Err(Error::solver(format!(
+                        "X_{}: row sets do not tile (gap at {lo})",
+                        sub.g
+                    )));
+                }
+                lo = r.hi;
+            }
+            if lo != sub_rows[sub.g] {
+                return Err(Error::solver(format!(
+                    "X_{}: row sets cover {lo} of {} rows",
+                    sub.g, sub_rows[sub.g]
+                )));
+            }
+            for (p, r) in sub.psets.iter().zip(&sub.row_sets) {
+                if r.is_empty() {
+                    continue;
+                }
+                let mut q = p.clone();
+                q.sort_unstable();
+                q.dedup();
+                if q.len() != cover || p.len() != cover {
+                    return Err(Error::solver(format!(
+                        "X_{}: row set {:?} has machines {:?}, need {cover} distinct",
+                        sub.g, r, p
+                    )));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Rows of sub-matrix `g` recoverable from `reporters` (machines whose
+    /// results arrived): a row is recovered iff at least one machine of its
+    /// row set reported. Returns the recovered local ranges.
+    pub fn recovered_rows(&self, g: usize, reporters: &[usize]) -> Vec<RowRange> {
+        self.subs[g]
+            .psets
+            .iter()
+            .zip(&self.subs[g].row_sets)
+            .filter(|(p, r)| !r.is_empty() && p.iter().any(|m| reporters.contains(m)))
+            .map(|(_, r)| *r)
+            .collect()
+    }
+}
+
+/// Build the heterogeneous-optimal assignment for one time step:
+/// solve (6)/(8) → filling algorithm per sub-matrix → row quantization.
+///
+/// `sub_rows[g]` is the number of rows of sub-matrix `g`.
+pub fn build_assignment(
+    placement: &Placement,
+    avail: &[usize],
+    speeds: &[f64],
+    params: &SolveParams,
+    sub_rows: &[usize],
+) -> Result<Assignment> {
+    let sol = super::solve_load_matrix(placement, avail, speeds, params)?;
+    assignment_from_load(placement, &sol.load, params.stragglers, sub_rows)
+}
+
+/// Build the speed-oblivious baseline assignment (uniform split — the
+/// "homogeneous task assignment" of Fig. 4).
+pub fn build_uniform_assignment(
+    placement: &Placement,
+    avail: &[usize],
+    params: &SolveParams,
+    sub_rows: &[usize],
+) -> Result<Assignment> {
+    let load = homogeneous::uniform_load_matrix(placement, avail, params.stragglers)?;
+    assignment_from_load(placement, &load, params.stragglers, sub_rows)
+}
+
+/// Build the paper's closed-form homogeneous cyclic design (§IV), which
+/// needs no LP: equal row sets, cyclic `1+S` replication.
+pub fn build_cyclic_homogeneous_assignment(
+    placement: &Placement,
+    avail: &[usize],
+    stragglers: usize,
+    sub_rows: &[usize],
+) -> Result<Assignment> {
+    placement.check_feasible(avail, stragglers)?;
+    let mut subs = Vec::with_capacity(placement.submatrices());
+    for g in 0..placement.submatrices() {
+        let reps = placement.available_replicas(g, avail);
+        let f = homogeneous::cyclic_assignment(&reps, stragglers)?;
+        subs.push(materialize(g, f, sub_rows[g])?);
+    }
+    Ok(Assignment {
+        stragglers,
+        machines: placement.machines(),
+        subs,
+    })
+}
+
+/// Shared: load matrix → filling → quantization.
+pub fn assignment_from_load(
+    placement: &Placement,
+    load: &LoadMatrix,
+    stragglers: usize,
+    sub_rows: &[usize],
+) -> Result<Assignment> {
+    if sub_rows.len() != placement.submatrices() {
+        return Err(Error::Shape(format!(
+            "sub_rows has {} entries for G={}",
+            sub_rows.len(),
+            placement.submatrices()
+        )));
+    }
+    let cover = 1 + stragglers;
+    let mut subs = Vec::with_capacity(placement.submatrices());
+    for g in 0..placement.submatrices() {
+        let loads: Vec<(usize, f64)> = (0..placement.machines())
+            .map(|n| (n, load.get(g, n)))
+            .filter(|&(_, mu)| mu > 0.0)
+            .collect();
+        let f = fill(&loads, cover)?;
+        subs.push(materialize(g, f, sub_rows[g])?);
+    }
+    Ok(Assignment {
+        stragglers,
+        machines: placement.machines(),
+        subs,
+    })
+}
+
+fn materialize(g: usize, f: Filling, rows: usize) -> Result<SubAssignment> {
+    let row_sets = quantize_fractions(&f.alphas, rows)?;
+    Ok(SubAssignment {
+        g,
+        alphas: f.alphas,
+        psets: f.psets,
+        row_sets,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::placement::PlacementKind;
+
+    fn setup() -> (Placement, Vec<usize>, Vec<f64>, Vec<usize>) {
+        let p = Placement::build(PlacementKind::Cyclic, 6, 6, 3).unwrap();
+        let avail: Vec<usize> = (0..6).collect();
+        let speeds = vec![1.0, 2.0, 4.0, 8.0, 16.0, 32.0];
+        let sub_rows = vec![1000; 6];
+        (p, avail, speeds, sub_rows)
+    }
+
+    #[test]
+    fn hetero_assignment_valid_and_tight() {
+        let (p, avail, speeds, sub_rows) = setup();
+        let a =
+            build_assignment(&p, &avail, &speeds, &SolveParams::default(), &sub_rows).unwrap();
+        a.validate(&sub_rows).unwrap();
+        // realized (post-quantization) time within a row of optimal 1/7
+        let m = a.realized_load_matrix(&sub_rows);
+        let t = m.computation_time(&speeds, &avail);
+        assert!((t - 1.0 / 7.0).abs() < 0.01, "realized c = {t}");
+    }
+
+    #[test]
+    fn straggler_assignment_recoverable() {
+        let (p, avail, speeds, sub_rows) = setup();
+        let a = build_assignment(
+            &p,
+            &avail,
+            &speeds,
+            &SolveParams::with_stragglers(1),
+            &sub_rows,
+        )
+        .unwrap();
+        a.validate(&sub_rows).unwrap();
+        // any single straggler leaves every row recoverable
+        for straggler in 0..6 {
+            let reporters: Vec<usize> = (0..6).filter(|&n| n != straggler).collect();
+            for g in 0..6 {
+                let rec = a.recovered_rows(g, &reporters);
+                let total: usize = rec.iter().map(|r| r.len()).sum();
+                assert_eq!(total, 1000, "g={g} straggler={straggler}");
+            }
+        }
+    }
+
+    #[test]
+    fn tasks_merge_adjacent_ranges() {
+        let (p, avail, speeds, sub_rows) = setup();
+        let a =
+            build_assignment(&p, &avail, &speeds, &SolveParams::default(), &sub_rows).unwrap();
+        for n in 0..6 {
+            let tasks = a.tasks_for(n);
+            for w in tasks.windows(2) {
+                if w[0].g == w[1].g {
+                    assert!(
+                        w[0].rows.hi < w[1].rows.lo,
+                        "adjacent/overlapping tasks not merged: {:?}",
+                        w
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn no_straggler_rows_partition_exactly() {
+        let (p, avail, speeds, sub_rows) = setup();
+        let a =
+            build_assignment(&p, &avail, &speeds, &SolveParams::default(), &sub_rows).unwrap();
+        // S=0: each row of each sub-matrix computed exactly once
+        for g in 0..6 {
+            let mut hit = vec![0u32; 1000];
+            for n in 0..6 {
+                for t in a.tasks_for(n).iter().filter(|t| t.g == g) {
+                    for r in t.rows.lo..t.rows.hi {
+                        hit[r] += 1;
+                    }
+                }
+            }
+            assert!(hit.iter().all(|&h| h == 1), "g={g}");
+        }
+    }
+
+    #[test]
+    fn uniform_baseline_ignores_speeds() {
+        let (p, avail, _speeds, sub_rows) = setup();
+        let a =
+            build_uniform_assignment(&p, &avail, &SolveParams::default(), &sub_rows).unwrap();
+        a.validate(&sub_rows).unwrap();
+        // every machine gets the same number of rows (3 stored submatrices × 1000/3)
+        let rows: Vec<usize> = (0..6).map(|n| a.rows_for(n)).collect();
+        let (lo, hi) = (rows.iter().min().unwrap(), rows.iter().max().unwrap());
+        // quantization may shift up to one row per stored sub-matrix
+        assert!(hi - lo <= 6, "uniform split imbalanced: {rows:?}");
+    }
+
+    #[test]
+    fn cyclic_homogeneous_design_valid() {
+        let (p, avail, _speeds, sub_rows) = setup();
+        let a = build_cyclic_homogeneous_assignment(&p, &avail, 1, &sub_rows).unwrap();
+        a.validate(&sub_rows).unwrap();
+        // S=1 cyclic: every machine covers 2/3 of each stored sub-matrix
+        let m = a.realized_load_matrix(&sub_rows);
+        for g in 0..6 {
+            assert!((m.coverage(g) - 2.0).abs() < 0.01);
+        }
+    }
+
+    #[test]
+    fn realized_matches_mu_within_quantization() {
+        let (p, avail, speeds, sub_rows) = setup();
+        let sol =
+            crate::optim::solve_load_matrix(&p, &avail, &speeds, &SolveParams::default())
+                .unwrap();
+        let a = assignment_from_load(&p, &sol.load, 0, &sub_rows).unwrap();
+        let m = a.realized_load_matrix(&sub_rows);
+        for g in 0..6 {
+            for n in 0..6 {
+                let diff = (m.get(g, n) - sol.load.get(g, n)).abs();
+                // quantization error bounded by (F_g rows)/1000 ≈ a few rows
+                assert!(diff < 0.02, "μ[{g},{n}] drifted {diff}");
+            }
+        }
+    }
+
+    #[test]
+    fn rejects_wrong_sub_rows_len() {
+        let (p, avail, speeds, _) = setup();
+        let r = build_assignment(&p, &avail, &speeds, &SolveParams::default(), &[100; 3]);
+        assert!(r.is_err());
+    }
+}

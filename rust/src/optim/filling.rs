@@ -1,0 +1,247 @@
+//! The *filling algorithm* (paper Algorithm 2, after \[5\]/\[6\]).
+//!
+//! Converts an optimal per-sub-matrix load vector `μ*_g` (machine loads for
+//! one sub-matrix, each `≤ 1`, summing to `L = 1+S`) into `F` fractional
+//! row sets of sizes `α_1..α_F` (summing to 1), each assigned to exactly
+//! `L` machines, such that machine `n`'s total assigned fraction equals
+//! `μ*_g[n]` exactly. Existence is guaranteed by `max μ ≤ (Σμ)/L`, which
+//! holds because `μ ≤ 1` and `Σμ = L`.
+//!
+//! The rule per round (paper lines 5–16): pick the machine with the
+//! *smallest* non-zero remaining load plus the `L−1` *largest*; fill them
+//! with `α = min((Σm)/L − m[ℓ_{N'−L+1}], m[ℓ_1])` (or drain the smallest
+//! when only `L` machines remain). Each round either zeroes the smallest
+//! element or makes the `(N'−L+1)`-th element equal to the running average,
+//! so the loop terminates within `N_g` rounds.
+
+use crate::error::{Error, Result};
+
+/// One sub-matrix's filling-algorithm output.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Filling {
+    /// Row-set fractions `α_f` (sum to 1).
+    pub alphas: Vec<f64>,
+    /// Machines computing each row set (`|P_f| = 1+S`), global machine ids.
+    pub psets: Vec<Vec<usize>>,
+}
+
+/// Numerical zero threshold for remaining loads.
+const ZERO: f64 = 1e-11;
+
+/// Run the filling algorithm for one sub-matrix.
+///
+/// * `loads` — pairs `(machine, μ*_g[machine])` with positive load (zeros
+///   are allowed and skipped).
+/// * `cover` — `L = 1+S`, the replication of each row set.
+pub fn fill(loads: &[(usize, f64)], cover: usize) -> Result<Filling> {
+    if cover == 0 {
+        return Err(Error::solver("cover (1+S) must be ≥ 1"));
+    }
+    let l = cover;
+    // remaining load per participating machine
+    let mut machines: Vec<usize> = Vec::new();
+    let mut m: Vec<f64> = Vec::new();
+    for &(n, mu) in loads {
+        if mu < -ZERO {
+            return Err(Error::solver(format!("negative load μ[{n}] = {mu}")));
+        }
+        if mu > ZERO {
+            machines.push(n);
+            m.push(mu);
+        }
+    }
+    let total: f64 = m.iter().sum();
+    let target = total / l as f64;
+    if m.iter().any(|&x| x > target + 1e-6) {
+        return Err(Error::infeasible(format!(
+            "filling precondition violated: max load {} > Σ/L = {target}",
+            m.iter().cloned().fold(0.0, f64::max)
+        )));
+    }
+    if machines.len() < l {
+        return Err(Error::infeasible(format!(
+            "only {} machines with positive load, need at least L={l}",
+            machines.len()
+        )));
+    }
+
+    let mut alphas = Vec::new();
+    let mut psets: Vec<Vec<usize>> = Vec::new();
+    // Safety bound: each round zeroes an element or caps one at the
+    // average; 4·N is generous.
+    let max_rounds = 4 * machines.len() + 8;
+    for _ in 0..max_rounds {
+        // indices of non-zero entries sorted ascending by remaining load
+        let mut idx: Vec<usize> = (0..m.len()).filter(|&i| m[i] > ZERO).collect();
+        if idx.is_empty() {
+            break;
+        }
+        idx.sort_by(|&a, &b| m[a].partial_cmp(&m[b]).unwrap().then(a.cmp(&b)));
+        let n_prime = idx.len();
+        if n_prime < l {
+            return Err(Error::solver(format!(
+                "filling ran out of machines ({n_prime} < L={l}); residual {:?}",
+                m
+            )));
+        }
+        let l_prime: f64 = idx.iter().map(|&i| m[i]).sum();
+        // P = smallest + (L−1) largest
+        let mut p: Vec<usize> = Vec::with_capacity(l);
+        p.push(idx[0]);
+        p.extend_from_slice(&idx[n_prime - (l - 1)..]);
+        debug_assert_eq!(p.len(), l);
+
+        let alpha = if n_prime >= l + 1 {
+            // largest element NOT in P is ℓ[N'−L+1] (1-indexed) = idx[n'−l]
+            let cap = l_prime / l as f64 - m[idx[n_prime - l]];
+            cap.min(m[idx[0]])
+        } else {
+            // exactly L machines remain: drain the smallest
+            m[idx[0]]
+        };
+        let alpha = alpha.max(0.0);
+        if alpha <= ZERO {
+            // numerical stall — drain the smallest to guarantee progress
+            let alpha = m[idx[0]];
+            for &i in &p {
+                m[i] -= alpha;
+            }
+            alphas.push(alpha);
+            psets.push(p.iter().map(|&i| machines[i]).collect());
+            continue;
+        }
+        for &i in &p {
+            m[i] -= alpha;
+        }
+        alphas.push(alpha);
+        psets.push(p.iter().map(|&i| machines[i]).collect());
+    }
+    if m.iter().any(|&x| x > 1e-7) {
+        return Err(Error::solver(format!(
+            "filling did not drain loads: residual {m:?}"
+        )));
+    }
+    // snap: fractions must sum to exactly 1 for quantization downstream
+    let s: f64 = alphas.iter().sum();
+    if (s - 1.0).abs() > 1e-6 {
+        return Err(Error::solver(format!("filling fractions sum to {s} ≠ 1")));
+    }
+    for a in alphas.iter_mut() {
+        *a /= s;
+    }
+    Ok(Filling { alphas, psets })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Per-machine assigned fraction must reproduce the input loads.
+    fn check_fidelity(loads: &[(usize, f64)], f: &Filling) {
+        for &(n, mu) in loads {
+            let got: f64 = f
+                .alphas
+                .iter()
+                .zip(&f.psets)
+                .filter(|(_, p)| p.contains(&n))
+                .map(|(a, _)| a)
+                .sum();
+            assert!(
+                (got - mu).abs() < 1e-7,
+                "machine {n}: assigned {got} vs load {mu}"
+            );
+        }
+    }
+
+    #[test]
+    fn no_stragglers_is_partition() {
+        // L=1: row sets are disjoint intervals, one machine each
+        let loads = [(0, 0.5), (1, 0.3), (2, 0.2)];
+        let f = fill(&loads, 1).unwrap();
+        assert!((f.alphas.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        assert!(f.psets.iter().all(|p| p.len() == 1));
+        check_fidelity(&loads, &f);
+    }
+
+    #[test]
+    fn homogeneous_s1() {
+        // 3 machines, load 2/3 each, L=2
+        let loads = [(0, 2.0 / 3.0), (1, 2.0 / 3.0), (2, 2.0 / 3.0)];
+        let f = fill(&loads, 2).unwrap();
+        assert!((f.alphas.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+        assert!(f.psets.iter().all(|p| p.len() == 2));
+        check_fidelity(&loads, &f);
+        // each pair of machines distinct within a set
+        for p in &f.psets {
+            assert_ne!(p[0], p[1]);
+        }
+    }
+
+    #[test]
+    fn heterogeneous_s1() {
+        // Σ = 2, max < Σ/L = 1
+        let loads = [(3, 0.9), (5, 0.7), (8, 0.4)];
+        let f = fill(&loads, 2).unwrap();
+        check_fidelity(&loads, &f);
+        assert!(f.psets.iter().all(|p| p.len() == 2));
+        // machines are the global ids we passed in
+        for p in &f.psets {
+            for &n in p {
+                assert!([3, 5, 8].contains(&n));
+            }
+        }
+    }
+
+    #[test]
+    fn four_machines_s2() {
+        // L = 3, Σ = 3, max ≤ 1
+        let loads = [(0, 1.0), (1, 0.8), (2, 0.7), (3, 0.5)];
+        let f = fill(&loads, 3).unwrap();
+        check_fidelity(&loads, &f);
+        for p in &f.psets {
+            assert_eq!(p.len(), 3);
+            let mut q = p.clone();
+            q.sort_unstable();
+            q.dedup();
+            assert_eq!(q.len(), 3, "machines within a row set must be distinct");
+        }
+    }
+
+    #[test]
+    fn terminates_within_linear_rounds() {
+        // paper: completes within N_t iterations
+        let loads: Vec<(usize, f64)> = (0..12).map(|i| (i, 1.0 / 6.0)).collect();
+        let f = fill(&loads, 2).unwrap();
+        assert!(f.alphas.len() <= 12 + 1, "rounds = {}", f.alphas.len());
+        check_fidelity(&loads, &f);
+    }
+
+    #[test]
+    fn rejects_precondition_violation() {
+        // max > Σ/L
+        let loads = [(0, 1.5), (1, 0.3), (2, 0.2)];
+        assert!(fill(&loads, 2).is_err());
+    }
+
+    #[test]
+    fn rejects_too_few_machines() {
+        let loads = [(0, 1.0)];
+        assert!(fill(&loads, 2).is_err());
+    }
+
+    #[test]
+    fn skips_zero_loads() {
+        let loads = [(0, 0.5), (1, 0.0), (2, 0.5)];
+        let f = fill(&loads, 1).unwrap();
+        check_fidelity(&loads, &f);
+        assert!(f.psets.iter().all(|p| !p.contains(&1)));
+    }
+
+    #[test]
+    fn single_machine_l1() {
+        let loads = [(4, 1.0)];
+        let f = fill(&loads, 1).unwrap();
+        assert_eq!(f.alphas, vec![1.0]);
+        assert_eq!(f.psets, vec![vec![4]]);
+    }
+}

@@ -1,0 +1,129 @@
+//! Homogeneous-speed designs (paper §IV "Proposed USEC with homogeneous
+//! computation assignment") and the uniform-split baseline.
+//!
+//! Two distinct things live here:
+//!
+//! * [`cyclic_assignment`] — the paper's closed-form design for equal
+//!   speeds: `F_g = N_g` equal row sets, row set `f` computed by machines
+//!   `{f, …, f+S} mod N_g` (cyclically within the replicas of `X_g`).
+//! * [`uniform_load_matrix`] — the *baseline* of Fig. 4: split every
+//!   sub-matrix equally among its available replicas, ignoring speeds.
+//!   This is what a speed-oblivious scheduler would do; the paper's ~20 %
+//!   gain is measured against it.
+
+use crate::error::Result;
+use crate::placement::Placement;
+
+use super::filling::Filling;
+use super::types::LoadMatrix;
+
+/// The paper's homogeneous cyclic design for one sub-matrix: `N_g` equal
+/// row sets; set `f` is computed by the `1+S` cyclically-consecutive
+/// replicas starting at `f`.
+///
+/// `replicas` — available machines storing the sub-matrix (sorted).
+pub fn cyclic_assignment(replicas: &[usize], stragglers: usize) -> Result<Filling> {
+    let n_g = replicas.len();
+    let l = 1 + stragglers;
+    if n_g < l {
+        return Err(crate::error::Error::infeasible(format!(
+            "{n_g} replicas cannot tolerate S={stragglers}"
+        )));
+    }
+    let alpha = 1.0 / n_g as f64;
+    let mut alphas = Vec::with_capacity(n_g);
+    let mut psets = Vec::with_capacity(n_g);
+    for f in 0..n_g {
+        alphas.push(alpha);
+        psets.push((0..l).map(|k| replicas[(f + k) % n_g]).collect());
+    }
+    Ok(Filling { alphas, psets })
+}
+
+/// Uniform (speed-oblivious) load matrix: `μ[g,n] = (1+S)/|N_g ∩ N_t|`
+/// for every available replica of `g`.
+pub fn uniform_load_matrix(
+    placement: &Placement,
+    avail: &[usize],
+    stragglers: usize,
+) -> Result<LoadMatrix> {
+    placement.check_feasible(avail, stragglers)?;
+    let cover = (1 + stragglers) as f64;
+    let mut load = LoadMatrix::zeros(placement.submatrices(), placement.machines());
+    for g in 0..placement.submatrices() {
+        let reps = placement.available_replicas(g, avail);
+        let share = cover / reps.len() as f64;
+        for n in reps {
+            load.set(g, n, share);
+        }
+    }
+    Ok(load)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::placement::PlacementKind;
+
+    #[test]
+    fn cyclic_no_stragglers_partitions() {
+        let f = cyclic_assignment(&[2, 5, 7], 0).unwrap();
+        assert_eq!(f.alphas.len(), 3);
+        assert!((f.alphas.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        assert_eq!(f.psets, vec![vec![2], vec![5], vec![7]]);
+    }
+
+    #[test]
+    fn cyclic_s1_wraps() {
+        let f = cyclic_assignment(&[10, 11, 12], 1).unwrap();
+        assert_eq!(f.psets, vec![vec![10, 11], vec![11, 12], vec![12, 10]]);
+        // every machine appears in exactly 1+S = 2 row sets → load 2/3
+        for m in [10, 11, 12] {
+            let load: f64 = f
+                .alphas
+                .iter()
+                .zip(&f.psets)
+                .filter(|(_, p)| p.contains(&m))
+                .map(|(a, _)| a)
+                .sum();
+            assert!((load - 2.0 / 3.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn cyclic_infeasible_detected() {
+        assert!(cyclic_assignment(&[1, 2], 2).is_err());
+    }
+
+    #[test]
+    fn uniform_balanced_full_availability() {
+        let p = Placement::build(PlacementKind::Cyclic, 6, 6, 3).unwrap();
+        let avail: Vec<usize> = (0..6).collect();
+        let m = uniform_load_matrix(&p, &avail, 0).unwrap();
+        m.validate(&p, &avail, 0, 1e-12).unwrap();
+        // every machine stores 3 sub-matrices, each split 3 ways → load 1
+        for n in 0..6 {
+            assert!((m.machine_load(n) - 1.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn uniform_with_preemption_rebalances() {
+        let p = Placement::build(PlacementKind::Cyclic, 6, 6, 3).unwrap();
+        let avail = vec![0, 1, 2, 3, 4]; // machine 5 preempted
+        let m = uniform_load_matrix(&p, &avail, 0).unwrap();
+        m.validate(&p, &avail, 0, 1e-12).unwrap();
+        assert_eq!(m.machine_load(5), 0.0);
+    }
+
+    #[test]
+    fn uniform_straggler_coverage() {
+        let p = Placement::build(PlacementKind::Repetition, 6, 6, 3).unwrap();
+        let avail: Vec<usize> = (0..6).collect();
+        let m = uniform_load_matrix(&p, &avail, 1).unwrap();
+        m.validate(&p, &avail, 1, 1e-12).unwrap();
+        for g in 0..6 {
+            assert!((m.coverage(g) - 2.0).abs() < 1e-12);
+        }
+    }
+}

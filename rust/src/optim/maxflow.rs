@@ -1,0 +1,193 @@
+//! Dinic max-flow on small dense-ish graphs with `f64` capacities.
+//!
+//! Used as the feasibility oracle of the parametric USEC solver
+//! ([`super::parametric`]): for a candidate time `c`, the assignment LP is
+//! feasible iff a three-layer flow network (source → sub-matrices →
+//! machines → sink) carries `(1+S)·G` units.
+
+/// A directed edge with residual capacity.
+#[derive(Debug, Clone)]
+struct Edge {
+    to: usize,
+    cap: f64,
+    /// index of the reverse edge in `graph[to]`
+    rev: usize,
+}
+
+/// Dinic max-flow solver.
+#[derive(Debug, Clone)]
+pub struct MaxFlow {
+    graph: Vec<Vec<Edge>>,
+    level: Vec<i32>,
+    iter: Vec<usize>,
+}
+
+/// Handle to an added edge, for reading its final flow.
+#[derive(Debug, Clone, Copy)]
+pub struct EdgeRef {
+    from: usize,
+    idx: usize,
+}
+
+impl MaxFlow {
+    pub fn new(nodes: usize) -> Self {
+        MaxFlow {
+            graph: vec![Vec::new(); nodes],
+            level: vec![0; nodes],
+            iter: vec![0; nodes],
+        }
+    }
+
+    pub fn nodes(&self) -> usize {
+        self.graph.len()
+    }
+
+    /// Add a directed edge `from → to` with capacity `cap`.
+    pub fn add_edge(&mut self, from: usize, to: usize, cap: f64) -> EdgeRef {
+        assert!(from < self.graph.len() && to < self.graph.len());
+        assert!(cap >= 0.0);
+        let idx = self.graph[from].len();
+        let rev = self.graph[to].len();
+        self.graph[from].push(Edge { to, cap, rev });
+        self.graph[to].push(Edge {
+            to: from,
+            cap: 0.0,
+            rev: idx,
+        });
+        EdgeRef { from, idx }
+    }
+
+    /// Flow currently carried by an edge (reverse residual).
+    pub fn flow(&self, e: EdgeRef) -> f64 {
+        let edge = &self.graph[e.from][e.idx];
+        self.graph[edge.to][edge.rev].cap
+    }
+
+    fn bfs(&mut self, s: usize, t: usize, eps: f64) -> bool {
+        self.level.iter_mut().for_each(|l| *l = -1);
+        let mut q = std::collections::VecDeque::new();
+        self.level[s] = 0;
+        q.push_back(s);
+        while let Some(v) = q.pop_front() {
+            for e in &self.graph[v] {
+                if e.cap > eps && self.level[e.to] < 0 {
+                    self.level[e.to] = self.level[v] + 1;
+                    q.push_back(e.to);
+                }
+            }
+        }
+        self.level[t] >= 0
+    }
+
+    fn dfs(&mut self, v: usize, t: usize, f: f64, eps: f64) -> f64 {
+        if v == t {
+            return f;
+        }
+        while self.iter[v] < self.graph[v].len() {
+            let i = self.iter[v];
+            let (to, cap, rev) = {
+                let e = &self.graph[v][i];
+                (e.to, e.cap, e.rev)
+            };
+            if cap > eps && self.level[v] < self.level[to] {
+                let d = self.dfs(to, t, f.min(cap), eps);
+                if d > eps {
+                    self.graph[v][i].cap -= d;
+                    self.graph[to][rev].cap += d;
+                    return d;
+                }
+            }
+            self.iter[v] += 1;
+        }
+        0.0
+    }
+
+    /// Maximum flow from `s` to `t`. `eps` treats tiny residuals as zero
+    /// (required with floating-point capacities).
+    pub fn max_flow(&mut self, s: usize, t: usize, eps: f64) -> f64 {
+        assert_ne!(s, t);
+        let mut flow = 0.0;
+        while self.bfs(s, t, eps) {
+            self.iter.iter_mut().for_each(|i| *i = 0);
+            loop {
+                let f = self.dfs(s, t, f64::INFINITY, eps);
+                if f <= eps {
+                    break;
+                }
+                flow += f;
+            }
+        }
+        flow
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trivial_path() {
+        let mut mf = MaxFlow::new(3);
+        mf.add_edge(0, 1, 5.0);
+        mf.add_edge(1, 2, 3.0);
+        assert!((mf.max_flow(0, 2, 1e-12) - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn classic_diamond() {
+        // s=0, t=3; two paths with a cross edge
+        let mut mf = MaxFlow::new(4);
+        mf.add_edge(0, 1, 10.0);
+        mf.add_edge(0, 2, 10.0);
+        mf.add_edge(1, 2, 1.0);
+        mf.add_edge(1, 3, 8.0);
+        mf.add_edge(2, 3, 10.0);
+        assert!((mf.max_flow(0, 3, 1e-12) - 18.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fractional_capacities() {
+        let mut mf = MaxFlow::new(4);
+        mf.add_edge(0, 1, 0.3);
+        mf.add_edge(0, 2, 0.7);
+        mf.add_edge(1, 3, 1.0);
+        mf.add_edge(2, 3, 0.5);
+        let f = mf.max_flow(0, 3, 1e-12);
+        assert!((f - 0.8).abs() < 1e-9, "{f}");
+    }
+
+    #[test]
+    fn edge_flow_readback() {
+        let mut mf = MaxFlow::new(3);
+        let e1 = mf.add_edge(0, 1, 5.0);
+        let e2 = mf.add_edge(1, 2, 3.0);
+        mf.max_flow(0, 2, 1e-12);
+        assert!((mf.flow(e1) - 3.0).abs() < 1e-9);
+        assert!((mf.flow(e2) - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn disconnected_zero_flow() {
+        let mut mf = MaxFlow::new(4);
+        mf.add_edge(0, 1, 5.0);
+        mf.add_edge(2, 3, 5.0);
+        assert_eq!(mf.max_flow(0, 3, 1e-12), 0.0);
+    }
+
+    #[test]
+    fn bipartite_matching_structure() {
+        // 2 sources-side units into 3 sinks-side with unit caps: flow = 2
+        let mut mf = MaxFlow::new(7); // s,a,b,x,y,z,t
+        mf.add_edge(0, 1, 1.0);
+        mf.add_edge(0, 2, 1.0);
+        for a in [1, 2] {
+            for x in [3, 4, 5] {
+                mf.add_edge(a, x, 1.0);
+            }
+        }
+        for x in [3, 4, 5] {
+            mf.add_edge(x, 6, 1.0);
+        }
+        assert!((mf.max_flow(0, 6, 1e-12) - 2.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,157 @@
+//! The paper's optimization framework (§II, §IV).
+//!
+//! Pipeline for one elastic time step:
+//!
+//! 1. [`solve_load_matrix`] — solve the relaxed convex program (eq. 6 for
+//!    `S = 0`, eq. 8 for `S > 0`) exactly for the optimal load matrix `M*`
+//!    (`μ[g,n]`) and computation time `c*`. Two independent exact solvers
+//!    are provided and cross-checked: a dense two-phase [`simplex`] LP and
+//!    a [`parametric`] bisection over max-flow feasibility ([`maxflow`]).
+//! 2. [`filling`] — Algorithm 2: convert each column `μ*_g` into `F_g`
+//!    row sets, each computed by exactly `1+S` machines.
+//! 3. [`assignment`] — quantize the fractional row sets to whole rows /
+//!    tiles and materialize per-machine task lists.
+//!
+//! [`homogeneous`] implements the paper's homogeneous-speed cyclic design
+//! and the uniform-split baseline used by Fig. 4.
+
+pub mod assignment;
+pub mod filling;
+pub mod homogeneous;
+pub mod maxflow;
+pub mod parametric;
+pub mod simplex;
+pub mod transition;
+pub mod types;
+
+pub use assignment::{
+    assignment_from_load, build_assignment, Assignment, SubAssignment, Task,
+};
+pub use types::{LoadMatrix, Solution, SolveParams, SolverKind};
+
+use crate::error::{Error, Result};
+use crate::placement::Placement;
+
+/// Solve the relaxed program for the optimal load matrix `M*` (eq. 6/8).
+///
+/// * `placement` — the uncoded storage placement `Z`.
+/// * `avail` — available machine ids `N_t` (preempted machines excluded).
+/// * `speeds` — full-length (`N`) speed vector `s`; only available entries
+///   are read. Units: sub-matrices per unit time (Definition 2).
+/// * `params.stragglers` — `S`; coverage per sub-matrix becomes `1+S`.
+///
+/// Returns `M*` and the optimal time `c* = max_n μ[n]/s[n]`.
+pub fn solve_load_matrix(
+    placement: &Placement,
+    avail: &[usize],
+    speeds: &[f64],
+    params: &SolveParams,
+) -> Result<Solution> {
+    validate_inputs(placement, avail, speeds, params)?;
+    match params.solver {
+        SolverKind::Simplex => simplex::solve_usec(placement, avail, speeds, params),
+        SolverKind::ParametricFlow => parametric::solve_usec(placement, avail, speeds, params),
+    }
+}
+
+/// Speed-aware lower bound on the computation time (used as an optimality
+/// certificate in tests): work conservation over every machine subset that
+/// exclusively serves some sub-matrix set. This returns the simple global
+/// bound `(1+S)·G / Σ_{n∈N_t} s[n]` plus the per-sub-matrix bound
+/// `max_g (1+S)/Σ_{n∈N_g∩N_t} s[n]`.
+pub fn lower_bound(
+    placement: &Placement,
+    avail: &[usize],
+    speeds: &[f64],
+    stragglers: usize,
+) -> f64 {
+    let cover = (1 + stragglers) as f64;
+    let total_speed: f64 = avail.iter().map(|&n| speeds[n]).sum();
+    let mut bound: f64 = cover * placement.submatrices() as f64 / total_speed;
+    for g in 0..placement.submatrices() {
+        let sg: f64 = placement
+            .available_replicas(g, avail)
+            .iter()
+            .map(|&n| speeds[n])
+            .sum();
+        if sg > 0.0 {
+            bound = bound.max(cover / sg);
+        }
+    }
+    bound
+}
+
+pub(crate) fn validate_inputs(
+    placement: &Placement,
+    avail: &[usize],
+    speeds: &[f64],
+    params: &SolveParams,
+) -> Result<()> {
+    if avail.is_empty() {
+        return Err(Error::infeasible("no machines available"));
+    }
+    if speeds.len() != placement.machines() {
+        return Err(Error::Shape(format!(
+            "speed vector length {} vs N={}",
+            speeds.len(),
+            placement.machines()
+        )));
+    }
+    if let Some(&bad) = avail.iter().find(|&&n| n >= placement.machines()) {
+        return Err(Error::Config(format!(
+            "available machine {bad} out of range (N={})",
+            placement.machines()
+        )));
+    }
+    let mut seen = vec![false; placement.machines()];
+    for &n in avail {
+        if seen[n] {
+            return Err(Error::Config(format!("machine {n} listed twice in N_t")));
+        }
+        seen[n] = true;
+    }
+    for &n in avail {
+        if !(speeds[n] > 0.0) {
+            return Err(Error::Config(format!(
+                "machine {n} has non-positive speed {}",
+                speeds[n]
+            )));
+        }
+    }
+    placement.check_feasible(avail, params.stragglers)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::placement::PlacementKind;
+
+    #[test]
+    fn validate_rejects_bad_inputs() {
+        let p = Placement::build(PlacementKind::Cyclic, 6, 6, 3).unwrap();
+        let s = vec![1.0; 6];
+        let params = SolveParams::default();
+        assert!(validate_inputs(&p, &[], &s, &params).is_err());
+        assert!(validate_inputs(&p, &[0, 0], &s, &params).is_err());
+        assert!(validate_inputs(&p, &[9], &s, &params).is_err());
+        assert!(validate_inputs(&p, &[0], &vec![1.0; 3], &params).is_err());
+        let mut s2 = s.clone();
+        s2[1] = 0.0;
+        assert!(validate_inputs(&p, &[0, 1], &s2, &params).is_err());
+        assert!(validate_inputs(&p, &(0..6).collect::<Vec<_>>(), &s, &params).is_ok());
+    }
+
+    #[test]
+    fn lower_bound_global_and_local() {
+        let p = Placement::build(PlacementKind::Repetition, 6, 6, 3).unwrap();
+        let avail: Vec<usize> = (0..6).collect();
+        let s = vec![1.0, 2.0, 4.0, 8.0, 16.0, 32.0];
+        // repetition group 1 = machines {0,1,2}, total speed 7, serves 3
+        // sub-matrices exclusively → bound ≥ 3/7 via ... the per-g bound is
+        // 1/7; global bound is 6/63 = 2/21. The true c* is 3/7 (group bound
+        // is not captured by this simple function — solver tests assert it).
+        let b = lower_bound(&p, &avail, &s, 0);
+        assert!(b >= 6.0 / 63.0 - 1e-12);
+        assert!(b <= 3.0 / 7.0 + 1e-12);
+    }
+}

@@ -1,0 +1,209 @@
+//! Parametric-flow solver for the USEC program (eq. 6/8).
+//!
+//! Independent of the simplex path ([`super::simplex`]): feasibility of a
+//! candidate time `c` is a max-flow question on the three-layer network
+//!
+//! ```text
+//!   source --(1+S)--> sub-matrix g --(1 per stored replica)--> machine n --(c·s[n])--> sink
+//! ```
+//!
+//! The program is feasible at `c` iff the max flow equals `(1+S)·G`, and
+//! `c ↦ maxflow(c)` is concave and non-decreasing, so the optimal `c*` is
+//! found by bisection. The final flow *is* an optimal load matrix. Used as
+//! a cross-check oracle for the simplex solver (ablation EXP-A1) and as an
+//! alternative production solver.
+
+use crate::error::Result;
+use crate::placement::Placement;
+
+use super::maxflow::MaxFlow;
+use super::simplex::edges;
+use super::types::{LoadMatrix, Solution, SolveParams};
+
+/// Flow value achieved at candidate time `c`, plus the per-edge flows.
+fn flow_at(
+    placement: &Placement,
+    avail: &[usize],
+    speeds: &[f64],
+    cover: f64,
+    c: f64,
+) -> (f64, Vec<f64>) {
+    let g_count = placement.submatrices();
+    let e = edges(placement, avail);
+    // node ids: 0 = source, 1..=G sub-matrices, G+1.. machines, last = sink
+    let src = 0;
+    let g_base = 1;
+    let m_base = 1 + g_count;
+    let sink = m_base + avail.len();
+    let mut mf = MaxFlow::new(sink + 1);
+    // O(1) machine-node lookup (§Perf iteration 4)
+    let mut index_of = vec![usize::MAX; placement.machines()];
+    for (i, &n) in avail.iter().enumerate() {
+        index_of[n] = m_base + i;
+    }
+    let m_index = |n: usize| index_of[n];
+
+    for g in 0..g_count {
+        mf.add_edge(src, g_base + g, cover);
+    }
+    let mut edge_refs = Vec::with_capacity(e.len());
+    for &(g, n) in &e {
+        edge_refs.push(mf.add_edge(g_base + g, m_index(n), 1.0));
+    }
+    for &n in avail {
+        mf.add_edge(m_index(n), sink, c * speeds[n]);
+    }
+    let total = mf.max_flow(src, sink, 1e-13);
+    let flows = edge_refs.iter().map(|&er| mf.flow(er)).collect();
+    (total, flows)
+}
+
+/// Solve eq. (6)/(8) by bisection on `c` with flow feasibility oracles.
+pub fn solve_usec(
+    placement: &Placement,
+    avail: &[usize],
+    speeds: &[f64],
+    params: &SolveParams,
+) -> Result<Solution> {
+    let cover = (1 + params.stragglers) as f64;
+    let g_count = placement.submatrices();
+    let target = cover * g_count as f64;
+
+    // Bracket: lower bound from work conservation, upper bound from the
+    // uniform-split feasible point.
+    let mut lo = super::lower_bound(placement, avail, speeds, params.stragglers);
+    let mut hi = {
+        let uniform = super::homogeneous::uniform_load_matrix(placement, avail, params.stragglers)?;
+        uniform.computation_time(speeds, avail)
+    };
+    debug_assert!(hi >= lo - 1e-12, "bracket inverted: {lo} > {hi}");
+    hi = hi.max(lo);
+
+    // Shrink-to-fit: the optimum may sit exactly at `lo`.
+    let feasible = |c: f64| {
+        let (f, _) = flow_at(placement, avail, speeds, cover, c);
+        f >= target - 1e-9
+    };
+    if !feasible(hi) {
+        // can only happen through fp dust on the uniform bound
+        hi *= 1.0 + 1e-9;
+    }
+    let tol = params.tol.max(1e-13);
+    for _ in 0..200 {
+        if hi - lo <= tol * hi.max(1.0) {
+            break;
+        }
+        let mid = 0.5 * (lo + hi);
+        if feasible(mid) {
+            hi = mid;
+        } else {
+            lo = mid;
+        }
+    }
+
+    // Materialize the load matrix at the feasible endpoint.
+    let (_, flows) = flow_at(placement, avail, speeds, cover, hi);
+    let e = edges(placement, avail);
+    let mut load = LoadMatrix::zeros(g_count, placement.machines());
+    for (k, &(g, n)) in e.iter().enumerate() {
+        let v = flows[k].clamp(0.0, 1.0);
+        if v > 1e-12 {
+            load.set(g, n, v);
+        }
+    }
+    // Exact coverage can be off by fp dust; renormalize each sub-matrix.
+    for g in 0..g_count {
+        let c = load.coverage(g);
+        if c > 0.0 && (c - cover).abs() > 1e-12 {
+            let scale = cover / c;
+            for n in 0..placement.machines() {
+                let v = load.get(g, n);
+                if v > 0.0 {
+                    load.set(g, n, (v * scale).min(1.0));
+                }
+            }
+        }
+    }
+    let time = load.computation_time(speeds, avail);
+    Ok(Solution { load, time })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::types::SolverKind;
+    use crate::placement::PlacementKind;
+    use crate::util::Rng;
+
+    fn avail_all(n: usize) -> Vec<usize> {
+        (0..n).collect()
+    }
+
+    #[test]
+    fn fig1_cyclic_matches_paper() {
+        let p = Placement::build(PlacementKind::Cyclic, 6, 6, 3).unwrap();
+        let s = vec![1.0, 2.0, 4.0, 8.0, 16.0, 32.0];
+        let sol = solve_usec(&p, &avail_all(6), &s, &SolveParams::default()).unwrap();
+        assert!((sol.time - 1.0 / 7.0).abs() < 1e-6, "c = {}", sol.time);
+        sol.load.validate(&p, &avail_all(6), 0, 1e-6).unwrap();
+    }
+
+    #[test]
+    fn fig1_repetition_matches_paper() {
+        let p = Placement::build(PlacementKind::Repetition, 6, 6, 3).unwrap();
+        let s = vec![1.0, 2.0, 4.0, 8.0, 16.0, 32.0];
+        let sol = solve_usec(&p, &avail_all(6), &s, &SolveParams::default()).unwrap();
+        assert!((sol.time - 3.0 / 7.0).abs() < 1e-6, "c = {}", sol.time);
+    }
+
+    #[test]
+    fn agrees_with_simplex_on_random_instances() {
+        let mut rng = Rng::new(99);
+        for trial in 0..40 {
+            let (kind, g) = match trial % 3 {
+                0 => (PlacementKind::Repetition, 6),
+                1 => (PlacementKind::Cyclic, 6),
+                _ => (PlacementKind::Man, 20),
+            };
+            let p = Placement::build(kind, 6, g, 3).unwrap();
+            let speeds: Vec<f64> = (0..6).map(|_| rng.exponential(1.0)).collect();
+            let s_cnt = trial % 2;
+            let params_lp = SolveParams {
+                stragglers: s_cnt,
+                solver: SolverKind::Simplex,
+                ..Default::default()
+            };
+            let params_flow = SolveParams {
+                stragglers: s_cnt,
+                solver: SolverKind::ParametricFlow,
+                ..Default::default()
+            };
+            let a = crate::optim::solve_load_matrix(&p, &avail_all(6), &speeds, &params_lp)
+                .unwrap();
+            let b = crate::optim::solve_load_matrix(&p, &avail_all(6), &speeds, &params_flow)
+                .unwrap();
+            assert!(
+                (a.time - b.time).abs() < 1e-6 * (1.0 + a.time),
+                "trial {trial}: simplex {} vs flow {}",
+                a.time,
+                b.time
+            );
+        }
+    }
+
+    #[test]
+    fn straggler_flow_solution_valid() {
+        let p = Placement::build(PlacementKind::Man, 6, 20, 3).unwrap();
+        let s = vec![3.0, 1.0, 2.0, 5.0, 0.5, 4.0];
+        let params = SolveParams {
+            stragglers: 2,
+            solver: SolverKind::ParametricFlow,
+            ..Default::default()
+        };
+        let sol = solve_usec(&p, &avail_all(6), &s, &params).unwrap();
+        sol.load.validate(&p, &avail_all(6), 2, 1e-6).unwrap();
+        // optimality certificate: time ≥ lower bound
+        let lb = crate::optim::lower_bound(&p, &avail_all(6), &s, 2);
+        assert!(sol.time >= lb - 1e-9);
+    }
+}

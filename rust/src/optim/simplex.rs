@@ -1,0 +1,525 @@
+//! Dense two-phase simplex LP solver + the USEC program (eq. 6/8) on top.
+//!
+//! A general-purpose exact (up to f64) solver for
+//! `min cᵀx  s.t.  A x {≤,=,≥} b,  x ≥ 0`
+//! with Bland's anti-cycling rule. Problems here are tiny (≤ ~200 rows /
+//! columns), so a dense tableau is the right tool: simple, auditable, and
+//! fast enough to run inside the per-step scheduling loop.
+
+use crate::error::{Error, Result};
+use crate::placement::Placement;
+
+use super::types::{LoadMatrix, Solution, SolveParams};
+
+/// Constraint sense.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Sense {
+    Le,
+    Eq,
+    Ge,
+}
+
+/// A linear program in the supported canonical form.
+#[derive(Debug, Clone, Default)]
+pub struct LinearProgram {
+    /// Objective coefficients (minimization).
+    pub objective: Vec<f64>,
+    /// Constraint rows: coefficients, sense, rhs.
+    pub rows: Vec<(Vec<f64>, Sense, f64)>,
+}
+
+impl LinearProgram {
+    pub fn new(nvars: usize) -> Self {
+        LinearProgram {
+            objective: vec![0.0; nvars],
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn nvars(&self) -> usize {
+        self.objective.len()
+    }
+
+    /// Add a constraint; `coeffs` is a sparse list of `(var, coeff)`.
+    pub fn constrain(&mut self, coeffs: &[(usize, f64)], sense: Sense, rhs: f64) {
+        let mut row = vec![0.0; self.nvars()];
+        for &(j, a) in coeffs {
+            row[j] += a;
+        }
+        self.rows.push((row, sense, rhs));
+    }
+}
+
+/// Solver outcome: optimal objective value and primal point.
+#[derive(Debug, Clone)]
+pub struct LpSolution {
+    pub objective: f64,
+    pub x: Vec<f64>,
+}
+
+/// Solve with two-phase dense simplex. Errors on infeasible or unbounded.
+pub fn solve(lp: &LinearProgram, tol: f64) -> Result<LpSolution> {
+    let n = lp.nvars();
+    let m = lp.rows.len();
+    if n == 0 || m == 0 {
+        return Err(Error::solver("empty LP"));
+    }
+
+    // Count auxiliary columns.
+    let mut n_slack = 0; // one per Le / Ge row
+    let mut n_art = 0; // one per Eq / Ge row (after b-normalization)
+    // Normalize rows so b >= 0.
+    let mut rows: Vec<(Vec<f64>, Sense, f64)> = lp
+        .rows
+        .iter()
+        .map(|(a, s, b)| {
+            if *b < 0.0 {
+                let flipped = match s {
+                    Sense::Le => Sense::Ge,
+                    Sense::Ge => Sense::Le,
+                    Sense::Eq => Sense::Eq,
+                };
+                (a.iter().map(|v| -v).collect(), flipped, -b)
+            } else {
+                (a.clone(), *s, *b)
+            }
+        })
+        .collect();
+    for (_, s, _) in &rows {
+        match s {
+            Sense::Le | Sense::Ge => n_slack += 1,
+            Sense::Eq => {}
+        }
+        match s {
+            Sense::Ge | Sense::Eq => n_art += 1,
+            Sense::Le => {}
+        }
+    }
+
+    let total = n + n_slack + n_art;
+    // tableau: m rows × (total + 1 rhs)
+    let width = total + 1;
+    let mut t = vec![0.0f64; m * width];
+    let mut basis = vec![usize::MAX; m];
+    let mut slack_j = n;
+    let mut art_j = n + n_slack;
+    let mut art_cols: Vec<usize> = Vec::with_capacity(n_art);
+
+    for (i, (a, s, b)) in rows.drain(..).enumerate() {
+        let r = &mut t[i * width..(i + 1) * width];
+        r[..n].copy_from_slice(&a);
+        r[total] = b;
+        match s {
+            Sense::Le => {
+                r[slack_j] = 1.0;
+                basis[i] = slack_j;
+                slack_j += 1;
+            }
+            Sense::Ge => {
+                r[slack_j] = -1.0;
+                slack_j += 1;
+                r[art_j] = 1.0;
+                basis[i] = art_j;
+                art_cols.push(art_j);
+                art_j += 1;
+            }
+            Sense::Eq => {
+                r[art_j] = 1.0;
+                basis[i] = art_j;
+                art_cols.push(art_j);
+                art_j += 1;
+            }
+        }
+    }
+
+    // ---- Phase 1: minimize sum of artificials ----
+    if n_art > 0 {
+        let mut obj = vec![0.0f64; width];
+        for &j in &art_cols {
+            obj[j] = 1.0;
+        }
+        // reduced costs: subtract basic (artificial) rows
+        for i in 0..m {
+            if art_cols.contains(&basis[i]) {
+                let row = t[i * width..(i + 1) * width].to_vec();
+                for j in 0..width {
+                    obj[j] -= row[j];
+                }
+            }
+        }
+        let phase1 = run_simplex(&mut t, &mut basis, &mut obj, m, width, total, tol)?;
+        if phase1.abs() > tol.max(1e-7) {
+            return Err(Error::infeasible(format!(
+                "LP infeasible (phase-1 objective {phase1:.3e})"
+            )));
+        }
+        // pivot any artificial still in the basis out (or zero row)
+        for i in 0..m {
+            if art_cols.contains(&basis[i]) {
+                let mut pivoted = false;
+                for j in 0..n + n_slack {
+                    if t[i * width + j].abs() > tol {
+                        pivot(&mut t, &mut basis, m, width, i, j);
+                        pivoted = true;
+                        break;
+                    }
+                }
+                if !pivoted {
+                    // redundant row; keep artificial at value 0
+                }
+            }
+        }
+    }
+
+    // ---- Phase 2: minimize the real objective ----
+    let mut obj = vec![0.0f64; width];
+    obj[..n].copy_from_slice(&lp.objective);
+    // make artificial columns unusable
+    for &j in &art_cols {
+        obj[j] = f64::INFINITY;
+    }
+    // express objective in terms of non-basic variables
+    for i in 0..m {
+        let bj = basis[i];
+        if bj < total && obj[bj] != 0.0 && obj[bj].is_finite() {
+            let coeff = obj[bj];
+            let row = t[i * width..(i + 1) * width].to_vec();
+            for j in 0..width {
+                if obj[j].is_finite() {
+                    obj[j] -= coeff * row[j];
+                }
+            }
+        }
+    }
+    let neg_obj_val = run_simplex(&mut t, &mut basis, &mut obj, m, width, total, tol)?;
+
+    // extract primal point
+    let mut x = vec![0.0f64; n];
+    for i in 0..m {
+        if basis[i] < n {
+            x[basis[i]] = t[i * width + total];
+        }
+    }
+    let objective = lp
+        .objective
+        .iter()
+        .zip(&x)
+        .map(|(c, v)| c * v)
+        .sum::<f64>();
+    // consistency: tableau objective should agree with recomputed cᵀx
+    debug_assert!(
+        (objective - neg_obj_val).abs() <= 1e-6 * (1.0 + objective.abs()),
+        "tableau obj {neg_obj_val} vs cᵀx {objective}"
+    );
+    Ok(LpSolution { objective, x })
+}
+
+/// Run simplex iterations on the tableau until optimal. Returns the
+/// objective value (in original minimization sense).
+#[allow(clippy::too_many_arguments)]
+fn run_simplex(
+    t: &mut [f64],
+    basis: &mut [usize],
+    obj: &mut [f64],
+    m: usize,
+    width: usize,
+    total: usize,
+    tol: f64,
+) -> Result<f64> {
+    let mut obj_val = {
+        // objective constant: -Σ basic contributions is already folded into
+        // obj[width-1]? We track the value via obj's rhs slot.
+        obj[width - 1]
+    };
+    let max_iters = 50 * (m + total).max(100);
+    // Pivot rule (§Perf iteration 1): Dantzig (most negative reduced cost)
+    // is ~2× faster on the USEC LPs than Bland's rule, but can cycle on
+    // degenerate vertices. We run Dantzig while the objective improves and
+    // fall back to Bland's anti-cycling rule after a stall streak.
+    let mut stall = 0usize;
+    let stall_limit = 2 * (m + total);
+    for _iter in 0..max_iters {
+        let use_bland = stall > stall_limit;
+        let mut enter = None;
+        if use_bland {
+            // Bland: smallest index with negative reduced cost
+            for j in 0..total {
+                if obj[j].is_finite() && obj[j] < -tol {
+                    enter = Some(j);
+                    break;
+                }
+            }
+        } else {
+            // Dantzig: most negative reduced cost
+            let mut best = -tol;
+            for j in 0..total {
+                if obj[j].is_finite() && obj[j] < best {
+                    best = obj[j];
+                    enter = Some(j);
+                }
+            }
+        }
+        let Some(e) = enter else {
+            return Ok(-obj_val);
+        };
+        // leaving row: min ratio, ties by smallest basis index (Bland)
+        let mut leave: Option<usize> = None;
+        let mut best = f64::INFINITY;
+        for i in 0..m {
+            let a = t[i * width + e];
+            if a > tol {
+                let ratio = t[i * width + total] / a;
+                if ratio < best - 1e-12
+                    || (ratio < best + 1e-12
+                        && leave.map(|l| basis[i] < basis[l]).unwrap_or(false))
+                {
+                    best = ratio;
+                    leave = Some(i);
+                }
+            }
+        }
+        let Some(l) = leave else {
+            return Err(Error::solver("LP unbounded"));
+        };
+        pivot(t, basis, m, width, l, e);
+        // update reduced costs
+        let coeff = obj[e];
+        if coeff != 0.0 {
+            let row = t[l * width..(l + 1) * width].to_vec();
+            for j in 0..width {
+                if obj[j].is_finite() {
+                    obj[j] -= coeff * row[j];
+                }
+            }
+        }
+        let new_val = obj[width - 1];
+        if (new_val - obj_val).abs() <= 1e-15 * (1.0 + obj_val.abs()) {
+            stall += 1; // degenerate pivot — count toward the Bland switch
+        } else {
+            stall = 0;
+        }
+        obj_val = new_val;
+    }
+    Err(Error::solver("simplex iteration limit exceeded"))
+}
+
+fn pivot(t: &mut [f64], basis: &mut [usize], m: usize, width: usize, l: usize, e: usize) {
+    let p = t[l * width + e];
+    debug_assert!(p.abs() > 0.0);
+    let inv = 1.0 / p;
+    for j in 0..width {
+        t[l * width + j] *= inv;
+    }
+    let lrow = t[l * width..(l + 1) * width].to_vec();
+    for i in 0..m {
+        if i == l {
+            continue;
+        }
+        let f = t[i * width + e];
+        if f != 0.0 {
+            for j in 0..width {
+                t[i * width + j] -= f * lrow[j];
+            }
+        }
+    }
+    basis[l] = e;
+}
+
+// ---------------------------------------------------------------------------
+// USEC program (eq. 6 / eq. 8)
+// ---------------------------------------------------------------------------
+
+/// Edge list of the USEC program: `(g, n)` pairs with `X_g ∈ Z_n`, `n`
+/// available. Variable `k` of the LP is edge `k`; the last variable is `c`.
+/// Availability is mask-tested (O(1) per edge rather than a scan of `N_t`
+/// — §Perf iteration 4, matters at simulator scale N≈100).
+pub(crate) fn edges(placement: &Placement, avail: &[usize]) -> Vec<(usize, usize)> {
+    let mut mask = vec![false; placement.machines()];
+    for &n in avail {
+        mask[n] = true;
+    }
+    let mut e = Vec::new();
+    for g in 0..placement.submatrices() {
+        for &n in placement.machines_storing(g) {
+            if mask[n] {
+                e.push((g, n));
+            }
+        }
+    }
+    e
+}
+
+/// Solve eq. (6)/(8) via the simplex LP.
+pub fn solve_usec(
+    placement: &Placement,
+    avail: &[usize],
+    speeds: &[f64],
+    params: &SolveParams,
+) -> Result<Solution> {
+    let cover = (1 + params.stragglers) as f64;
+    let e = edges(placement, avail);
+    let nvar = e.len() + 1; // + c
+    let c_var = e.len();
+
+    let mut lp = LinearProgram::new(nvar);
+    lp.objective[c_var] = 1.0;
+
+    // coverage: Σ_n μ[g,n] = 1+S
+    for g in 0..placement.submatrices() {
+        let coeffs: Vec<(usize, f64)> = e
+            .iter()
+            .enumerate()
+            .filter(|(_, &(eg, _))| eg == g)
+            .map(|(k, _)| (k, 1.0))
+            .collect();
+        lp.constrain(&coeffs, Sense::Eq, cover);
+    }
+    // time: Σ_g μ[g,n] − s[n]·c ≤ 0
+    for &n in avail {
+        let mut coeffs: Vec<(usize, f64)> = e
+            .iter()
+            .enumerate()
+            .filter(|(_, &(_, en))| en == n)
+            .map(|(k, _)| (k, 1.0))
+            .collect();
+        coeffs.push((c_var, -speeds[n]));
+        lp.constrain(&coeffs, Sense::Le, 0.0);
+    }
+    // bounds: μ[g,n] ≤ 1
+    for k in 0..e.len() {
+        lp.constrain(&[(k, 1.0)], Sense::Le, 1.0);
+    }
+
+    let sol = solve(&lp, params.tol)?;
+    let mut load = LoadMatrix::zeros(placement.submatrices(), placement.machines());
+    for (k, &(g, n)) in e.iter().enumerate() {
+        // clamp fp dust
+        let v = sol.x[k].clamp(0.0, 1.0);
+        if v > 1e-12 {
+            load.set(g, n, v);
+        }
+    }
+    let time = load.computation_time(speeds, avail);
+    Ok(Solution { load, time })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::placement::PlacementKind;
+
+    #[test]
+    fn lp_basic_le() {
+        // max x+y s.t. x+2y<=4, 3x+y<=6  → min -(x+y); opt at (1.6,1.2)=2.8
+        let mut lp = LinearProgram::new(2);
+        lp.objective = vec![-1.0, -1.0];
+        lp.constrain(&[(0, 1.0), (1, 2.0)], Sense::Le, 4.0);
+        lp.constrain(&[(0, 3.0), (1, 1.0)], Sense::Le, 6.0);
+        let s = solve(&lp, 1e-10).unwrap();
+        assert!((s.objective + 2.8).abs() < 1e-8, "{}", s.objective);
+        assert!((s.x[0] - 1.6).abs() < 1e-8);
+        assert!((s.x[1] - 1.2).abs() < 1e-8);
+    }
+
+    #[test]
+    fn lp_equality_and_ge() {
+        // min x+y s.t. x+y>=2, x=0.5 → opt 2 at (0.5,1.5)
+        let mut lp = LinearProgram::new(2);
+        lp.objective = vec![1.0, 1.0];
+        lp.constrain(&[(0, 1.0), (1, 1.0)], Sense::Ge, 2.0);
+        lp.constrain(&[(0, 1.0)], Sense::Eq, 0.5);
+        let s = solve(&lp, 1e-10).unwrap();
+        assert!((s.objective - 2.0).abs() < 1e-8);
+        assert!((s.x[0] - 0.5).abs() < 1e-8);
+    }
+
+    #[test]
+    fn lp_negative_rhs_normalized() {
+        // min x s.t. -x <= -3  (i.e. x >= 3)
+        let mut lp = LinearProgram::new(1);
+        lp.objective = vec![1.0];
+        lp.constrain(&[(0, -1.0)], Sense::Le, -3.0);
+        let s = solve(&lp, 1e-10).unwrap();
+        assert!((s.x[0] - 3.0).abs() < 1e-8);
+    }
+
+    #[test]
+    fn lp_infeasible_detected() {
+        let mut lp = LinearProgram::new(1);
+        lp.objective = vec![1.0];
+        lp.constrain(&[(0, 1.0)], Sense::Le, 1.0);
+        lp.constrain(&[(0, 1.0)], Sense::Ge, 2.0);
+        assert!(matches!(solve(&lp, 1e-10), Err(Error::Infeasible(_))));
+    }
+
+    #[test]
+    fn lp_unbounded_detected() {
+        let mut lp = LinearProgram::new(1);
+        lp.objective = vec![-1.0]; // max x, no upper constraint
+        lp.constrain(&[(0, 1.0)], Sense::Ge, 0.0);
+        assert!(solve(&lp, 1e-10).is_err());
+    }
+
+    #[test]
+    fn lp_degenerate_does_not_cycle() {
+        // classic degenerate vertex; Bland's rule must terminate
+        let mut lp = LinearProgram::new(2);
+        lp.objective = vec![-1.0, -1.0];
+        lp.constrain(&[(0, 1.0)], Sense::Le, 1.0);
+        lp.constrain(&[(0, 1.0), (1, 1.0)], Sense::Le, 1.0);
+        lp.constrain(&[(1, 1.0)], Sense::Le, 1.0);
+        let s = solve(&lp, 1e-10).unwrap();
+        assert!((s.objective + 1.0).abs() < 1e-8);
+    }
+
+    // ---- the paper's Fig. 1 numbers ----
+
+    #[test]
+    fn fig1_repetition_time() {
+        let p = Placement::build(PlacementKind::Repetition, 6, 6, 3).unwrap();
+        let avail: Vec<usize> = (0..6).collect();
+        let s = vec![1.0, 2.0, 4.0, 8.0, 16.0, 32.0];
+        let sol = solve_usec(&p, &avail, &s, &SolveParams::default()).unwrap();
+        assert!(
+            (sol.time - 3.0 / 7.0).abs() < 1e-8,
+            "repetition c = {} vs paper 0.4286",
+            sol.time
+        );
+        sol.load.validate(&p, &avail, 0, 1e-8).unwrap();
+    }
+
+    #[test]
+    fn fig1_cyclic_time() {
+        let p = Placement::build(PlacementKind::Cyclic, 6, 6, 3).unwrap();
+        let avail: Vec<usize> = (0..6).collect();
+        let s = vec![1.0, 2.0, 4.0, 8.0, 16.0, 32.0];
+        let sol = solve_usec(&p, &avail, &s, &SolveParams::default()).unwrap();
+        assert!(
+            (sol.time - 1.0 / 7.0).abs() < 1e-8,
+            "cyclic c = {} vs paper 0.1429",
+            sol.time
+        );
+        sol.load.validate(&p, &avail, 0, 1e-8).unwrap();
+    }
+
+    #[test]
+    fn straggler_coverage_respected() {
+        let p = Placement::build(PlacementKind::Repetition, 6, 6, 3).unwrap();
+        let avail: Vec<usize> = (0..6).collect();
+        let s = vec![1.0; 6];
+        let sol = solve_usec(&p, &avail, &s, &SolveParams::with_stragglers(1)).unwrap();
+        sol.load.validate(&p, &avail, 1, 1e-8).unwrap();
+        // each group of 3 identical machines shares 6 units → c* = 2
+        assert!((sol.time - 2.0).abs() < 1e-8, "c = {}", sol.time);
+    }
+
+    #[test]
+    fn elastic_subset_solvable() {
+        let p = Placement::build(PlacementKind::Cyclic, 6, 6, 3).unwrap();
+        let avail = vec![0, 2, 3, 5]; // machines 1 and 4 preempted
+        let s = vec![1.0, 2.0, 4.0, 8.0, 16.0, 32.0];
+        let sol = solve_usec(&p, &avail, &s, &SolveParams::default()).unwrap();
+        sol.load.validate(&p, &avail, 0, 1e-8).unwrap();
+        assert!(sol.time > 0.0);
+    }
+}

@@ -1,0 +1,240 @@
+//! Core optimization types: load matrices, solutions, solver parameters.
+
+use crate::error::{Error, Result};
+use crate::placement::Placement;
+
+/// Which exact solver backs [`super::solve_load_matrix`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SolverKind {
+    /// Dense two-phase simplex on the LP (6)/(8). Exact (up to f64).
+    #[default]
+    Simplex,
+    /// Bisection on `c` with Dinic max-flow feasibility oracles.
+    ParametricFlow,
+}
+
+impl SolverKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "simplex" | "lp" => Ok(SolverKind::Simplex),
+            "flow" | "parametric" | "maxflow" => Ok(SolverKind::ParametricFlow),
+            other => Err(Error::Config(format!("unknown solver '{other}'"))),
+        }
+    }
+    pub fn name(&self) -> &'static str {
+        match self {
+            SolverKind::Simplex => "simplex",
+            SolverKind::ParametricFlow => "parametric-flow",
+        }
+    }
+}
+
+/// Parameters of the per-step assignment solve.
+#[derive(Debug, Clone)]
+pub struct SolveParams {
+    /// Straggler tolerance `S` (coverage per sub-matrix = `1+S`).
+    pub stragglers: usize,
+    /// Solver backend.
+    pub solver: SolverKind,
+    /// Numerical tolerance (bisection width / simplex pivot epsilon).
+    pub tol: f64,
+}
+
+impl Default for SolveParams {
+    fn default() -> Self {
+        SolveParams {
+            stragglers: 0,
+            solver: SolverKind::Simplex,
+            tol: 1e-10,
+        }
+    }
+}
+
+impl SolveParams {
+    pub fn with_stragglers(stragglers: usize) -> Self {
+        SolveParams {
+            stragglers,
+            ..Default::default()
+        }
+    }
+}
+
+/// The computation load matrix `M` (Definition 1): `μ[g][n]`, the fraction
+/// of sub-matrix `g`'s rows machine `n` computes. Stored dense `G×N` with
+/// zeros for machines that do not store `g` or are preempted.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LoadMatrix {
+    g: usize,
+    n: usize,
+    mu: Vec<f64>,
+}
+
+impl LoadMatrix {
+    pub fn zeros(g: usize, n: usize) -> Self {
+        LoadMatrix {
+            g,
+            n,
+            mu: vec![0.0; g * n],
+        }
+    }
+
+    pub fn submatrices(&self) -> usize {
+        self.g
+    }
+
+    pub fn machines(&self) -> usize {
+        self.n
+    }
+
+    #[inline]
+    pub fn get(&self, g: usize, n: usize) -> f64 {
+        self.mu[g * self.n + n]
+    }
+
+    #[inline]
+    pub fn set(&mut self, g: usize, n: usize, v: f64) {
+        self.mu[g * self.n + n] = v;
+    }
+
+    /// Column `g` as a dense vector over all machines.
+    pub fn row_g(&self, g: usize) -> &[f64] {
+        &self.mu[g * self.n..(g + 1) * self.n]
+    }
+
+    /// Machine load `μ[n] = Σ_g μ[g,n]` (Definition 1, eq. 3).
+    pub fn machine_load(&self, n: usize) -> f64 {
+        (0..self.g).map(|g| self.get(g, n)).sum()
+    }
+
+    /// All machine loads.
+    pub fn machine_loads(&self) -> Vec<f64> {
+        (0..self.n).map(|n| self.machine_load(n)).collect()
+    }
+
+    /// Coverage of sub-matrix `g`: `Σ_n μ[g,n]` (should equal `1+S`).
+    pub fn coverage(&self, g: usize) -> f64 {
+        self.row_g(g).iter().sum()
+    }
+
+    /// Computation time `c(M) = max_n μ[n]/s[n]` (Definition 3, eq. 4).
+    pub fn computation_time(&self, speeds: &[f64], avail: &[usize]) -> f64 {
+        avail
+            .iter()
+            .map(|&n| self.machine_load(n) / speeds[n])
+            .fold(0.0, f64::max)
+    }
+
+    /// Structural validation against a placement: support ⊆ storage,
+    /// `0 ≤ μ ≤ 1`, coverage = `1+S` (within `tol`).
+    pub fn validate(
+        &self,
+        placement: &Placement,
+        avail: &[usize],
+        stragglers: usize,
+        tol: f64,
+    ) -> Result<()> {
+        let cover = (1 + stragglers) as f64;
+        for g in 0..self.g {
+            for n in 0..self.n {
+                let v = self.get(g, n);
+                if v != 0.0 && !placement.stores(n, g) {
+                    return Err(Error::solver(format!(
+                        "μ[{g},{n}] = {v} but machine {n} does not store X_{g}"
+                    )));
+                }
+                if v != 0.0 && !avail.contains(&n) {
+                    return Err(Error::solver(format!(
+                        "μ[{g},{n}] = {v} but machine {n} is preempted"
+                    )));
+                }
+                if !(-tol..=1.0 + tol).contains(&v) {
+                    return Err(Error::solver(format!("μ[{g},{n}] = {v} out of [0,1]")));
+                }
+            }
+            let c = self.coverage(g);
+            if (c - cover).abs() > tol {
+                return Err(Error::solver(format!(
+                    "coverage of X_{g} is {c}, expected {cover}"
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    /// Dense rows (for display): `mu[g][n]`.
+    pub fn to_rows(&self) -> Vec<Vec<f64>> {
+        (0..self.g).map(|g| self.row_g(g).to_vec()).collect()
+    }
+}
+
+/// Output of [`super::solve_load_matrix`].
+#[derive(Debug, Clone)]
+pub struct Solution {
+    /// Optimal load matrix `M*`.
+    pub load: LoadMatrix,
+    /// Optimal computation time `c*` (sub-matrix units).
+    pub time: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::placement::PlacementKind;
+
+    #[test]
+    fn loads_and_coverage() {
+        let mut m = LoadMatrix::zeros(2, 3);
+        m.set(0, 0, 0.5);
+        m.set(0, 1, 0.5);
+        m.set(1, 1, 1.0);
+        assert_eq!(m.machine_load(1), 1.5);
+        assert_eq!(m.coverage(0), 1.0);
+        assert_eq!(m.coverage(1), 1.0);
+        let t = m.computation_time(&[1.0, 3.0, 1.0], &[0, 1, 2]);
+        assert!((t - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn validate_checks_support() {
+        let p = Placement::build(PlacementKind::Repetition, 6, 6, 3).unwrap();
+        let avail: Vec<usize> = (0..6).collect();
+        let mut m = LoadMatrix::zeros(6, 6);
+        // machine 3 does not store X_0 under repetition
+        m.set(0, 3, 1.0);
+        assert!(m.validate(&p, &avail, 0, 1e-9).is_err());
+        // fix: machine 0 stores X_0
+        m.set(0, 3, 0.0);
+        m.set(0, 0, 1.0);
+        for g in 1..6 {
+            let reps = p.machines_storing(g).to_vec();
+            m.set(g, reps[0], 1.0);
+        }
+        assert!(m.validate(&p, &avail, 0, 1e-9).is_ok());
+    }
+
+    #[test]
+    fn validate_checks_coverage_and_bounds() {
+        let p = Placement::build(PlacementKind::Cyclic, 4, 4, 2).unwrap();
+        let avail: Vec<usize> = (0..4).collect();
+        let mut m = LoadMatrix::zeros(4, 4);
+        for g in 0..4 {
+            m.set(g, g, 0.6); // coverage 0.6 ≠ 1
+        }
+        assert!(m.validate(&p, &avail, 0, 1e-9).is_err());
+        let mut m2 = LoadMatrix::zeros(4, 4);
+        for g in 0..4 {
+            m2.set(g, g, 1.2); // out of [0,1]
+        }
+        assert!(m2.validate(&p, &avail, 0, 1e-9).is_err());
+    }
+
+    #[test]
+    fn solver_kind_parse() {
+        assert_eq!(SolverKind::parse("lp").unwrap(), SolverKind::Simplex);
+        assert_eq!(
+            SolverKind::parse("flow").unwrap(),
+            SolverKind::ParametricFlow
+        );
+        assert!(SolverKind::parse("?").is_err());
+    }
+}

@@ -1,0 +1,212 @@
+//! Constructors for the named placement families.
+
+use crate::error::{Error, Result};
+
+use super::spec::{Placement, PlacementKind};
+
+/// Fractional repetition placement (paper Fig. 1a).
+///
+/// Machines form `N/J` groups of `J`; group `k` stores the `k`-th block of
+/// `G/(N/J)` sub-matrices (every machine in a group stores the whole
+/// block). Requires `J | N` and `(N/J) | G`.
+pub fn repetition(n: usize, g: usize, j: usize) -> Result<Placement> {
+    check_common(n, g, j)?;
+    if n % j != 0 {
+        return Err(Error::InvalidPlacement(format!(
+            "repetition needs J | N (N={n}, J={j})"
+        )));
+    }
+    let groups = n / j;
+    if g % groups != 0 {
+        return Err(Error::InvalidPlacement(format!(
+            "repetition needs (N/J) | G (G={g}, N/J={groups})"
+        )));
+    }
+    let per_group = g / groups;
+    let mut replicas = Vec::with_capacity(g);
+    for gi in 0..g {
+        let group = gi / per_group;
+        replicas.push((group * j..(group + 1) * j).collect());
+    }
+    Placement::from_replicas(PlacementKind::Repetition, n, replicas)
+}
+
+/// Cyclic placement (paper Fig. 1b): sub-matrix `g` is stored on machines
+/// `{g, g+1, …, g+J−1} mod N`. Natural when `G = N`; for `G = m·N` the
+/// pattern wraps `m` times.
+pub fn cyclic(n: usize, g: usize, j: usize) -> Result<Placement> {
+    check_common(n, g, j)?;
+    if g % n != 0 {
+        return Err(Error::InvalidPlacement(format!(
+            "cyclic needs N | G for balanced storage (G={g}, N={n})"
+        )));
+    }
+    let mut replicas = Vec::with_capacity(g);
+    for gi in 0..g {
+        replicas.push((0..j).map(|k| (gi + k) % n).collect());
+    }
+    Placement::from_replicas(PlacementKind::Cyclic, n, replicas)
+}
+
+/// Maddah-Ali–Niesen subset placement (paper Fig. 2 / Table I): the
+/// sub-matrices are distributed one-per-`J`-subset of the `N` machines
+/// (in lexicographic subset order), repeated `m` times when
+/// `G = m·C(N,J)`. Requires `C(N,J) | G`.
+pub fn man(n: usize, g: usize, j: usize) -> Result<Placement> {
+    check_common(n, g, j)?;
+    let subsets = combinations(n, j);
+    let c = subsets.len();
+    if g % c != 0 {
+        return Err(Error::InvalidPlacement(format!(
+            "MAN needs C(N,J) | G (G={g}, C({n},{j})={c})"
+        )));
+    }
+    let mut replicas = Vec::with_capacity(g);
+    for gi in 0..g {
+        replicas.push(subsets[gi % c].clone());
+    }
+    Placement::from_replicas(PlacementKind::Man, n, replicas)
+}
+
+fn check_common(n: usize, g: usize, j: usize) -> Result<()> {
+    if n == 0 || g == 0 || j == 0 {
+        return Err(Error::InvalidPlacement(
+            "N, G, J must all be positive".into(),
+        ));
+    }
+    if j > n {
+        return Err(Error::InvalidPlacement(format!(
+            "replication J={j} exceeds N={n}"
+        )));
+    }
+    Ok(())
+}
+
+/// All `k`-subsets of `[0, n)` in lexicographic order.
+pub fn combinations(n: usize, k: usize) -> Vec<Vec<usize>> {
+    let mut out = Vec::new();
+    let mut cur = Vec::with_capacity(k);
+    fn rec(start: usize, n: usize, k: usize, cur: &mut Vec<usize>, out: &mut Vec<Vec<usize>>) {
+        if cur.len() == k {
+            out.push(cur.clone());
+            return;
+        }
+        let need = k - cur.len();
+        for i in start..=(n - need) {
+            cur.push(i);
+            rec(i + 1, n, k, cur, out);
+            cur.pop();
+        }
+    }
+    if k <= n {
+        rec(0, n, k, &mut cur, &mut out);
+    }
+    out
+}
+
+/// Binomial coefficient (used by experiment configs to size `G` for MAN).
+pub fn binomial(n: usize, k: usize) -> usize {
+    if k > n {
+        return 0;
+    }
+    let k = k.min(n - k);
+    let mut acc: u128 = 1;
+    for i in 0..k {
+        acc = acc * (n - i) as u128 / (i + 1) as u128;
+    }
+    acc as usize
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn repetition_paper_fig1a() {
+        // N=6, G=6, J=3 → machines {0,1,2} store X1..X3, {3,4,5} store X4..X6
+        let p = repetition(6, 6, 3).unwrap();
+        assert_eq!(p.machines_storing(0), &[0, 1, 2]);
+        assert_eq!(p.machines_storing(2), &[0, 1, 2]);
+        assert_eq!(p.machines_storing(3), &[3, 4, 5]);
+        assert_eq!(p.machines_storing(5), &[3, 4, 5]);
+        // every machine stores half the matrix
+        for n in 0..6 {
+            assert_eq!(p.storage_fraction(n), 0.5);
+        }
+    }
+
+    #[test]
+    fn cyclic_paper_fig1b() {
+        let p = cyclic(6, 6, 3).unwrap();
+        assert_eq!(p.machines_storing(0), &[0, 1, 2]);
+        assert_eq!(p.machines_storing(4), &[0, 4, 5]);
+        assert_eq!(p.machines_storing(5), &[0, 1, 5]);
+        for n in 0..6 {
+            assert_eq!(p.storage_fraction(n), 0.5);
+        }
+    }
+
+    #[test]
+    fn man_n6_j3() {
+        let p = man(6, 20, 3).unwrap();
+        assert_eq!(p.submatrices(), 20);
+        // lexicographically first and last 3-subsets
+        assert_eq!(p.machines_storing(0), &[0, 1, 2]);
+        assert_eq!(p.machines_storing(19), &[3, 4, 5]);
+        // balanced: each machine in C(5,2)=10 subsets → stores half
+        for n in 0..6 {
+            assert_eq!(p.storage_fraction(n), 0.5);
+        }
+    }
+
+    #[test]
+    fn man_repeats_for_multiples() {
+        let p = man(4, 12, 2).unwrap(); // C(4,2)=6, m=2
+        assert_eq!(p.machines_storing(0), p.machines_storing(6));
+    }
+
+    #[test]
+    fn invalid_divisibility_rejected() {
+        assert!(repetition(6, 7, 3).is_err()); // (N/J)=2 does not divide 7
+        assert!(repetition(5, 6, 3).is_err()); // J does not divide N
+        assert!(cyclic(6, 5, 3).is_err());
+        assert!(man(6, 19, 3).is_err());
+        assert!(cyclic(4, 4, 5).is_err()); // J > N
+        assert!(repetition(0, 0, 0).is_err());
+    }
+
+    #[test]
+    fn combinations_count_and_order() {
+        let c = combinations(5, 3);
+        assert_eq!(c.len(), 10);
+        assert_eq!(c[0], vec![0, 1, 2]);
+        assert_eq!(c[9], vec![2, 3, 4]);
+        // all distinct
+        let mut seen = c.clone();
+        seen.sort();
+        seen.dedup();
+        assert_eq!(seen.len(), 10);
+    }
+
+    #[test]
+    fn binomial_values() {
+        assert_eq!(binomial(6, 3), 20);
+        assert_eq!(binomial(5, 0), 1);
+        assert_eq!(binomial(5, 5), 1);
+        assert_eq!(binomial(4, 7), 0);
+        assert_eq!(binomial(52, 5), 2_598_960);
+    }
+
+    #[test]
+    fn every_family_has_exactly_j_replicas() {
+        for p in [
+            repetition(6, 6, 3).unwrap(),
+            cyclic(6, 12, 3).unwrap(),
+            man(6, 20, 3).unwrap(),
+        ] {
+            for g in 0..p.submatrices() {
+                assert_eq!(p.machines_storing(g).len(), 3);
+            }
+        }
+    }
+}

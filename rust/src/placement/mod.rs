@@ -1,0 +1,20 @@
+//! Uncoded storage placements (paper §II, §III).
+//!
+//! A placement assigns each of the `G` sub-matrices of `X` to exactly `J`
+//! of the `N` machines, *uncoded* (plain replication — the defining feature
+//! of USEC vs. CSEC). Implemented families:
+//!
+//! * `repetition` — fractional repetition: machines form `N/J` groups of
+//!   `J`; each group stores `G/(N/J)` sub-matrices (paper Fig. 1a).
+//! * `cyclic` — sub-matrix `g` lives on `J` cyclically-consecutive
+//!   machines (paper Fig. 1b), the gradient-coding classic.
+//! * `man` — Maddah-Ali–Niesen subset placement: one sub-matrix (or `m`)
+//!   per `J`-subset of machines, `G = m·C(N,J)` (paper Fig. 2, Table I).
+//! * Custom — any explicit replica map, validated.
+
+pub mod builders;
+pub mod optimizer;
+pub mod spec;
+pub mod storage_constrained;
+
+pub use spec::{Placement, PlacementKind};

@@ -1,0 +1,265 @@
+//! The [`Placement`] type: replica maps + validation + queries.
+
+use std::collections::BTreeSet;
+
+use crate::error::{Error, Result};
+
+/// Placement family identifier.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PlacementKind {
+    /// Fractional repetition (groups of `J` machines).
+    Repetition,
+    /// Cyclic placement (`J` consecutive machines per sub-matrix).
+    Cyclic,
+    /// Maddah-Ali–Niesen subset placement (`G = m·C(N,J)`).
+    Man,
+    /// Explicit replica map.
+    Custom,
+}
+
+impl PlacementKind {
+    /// Parse from a CLI string.
+    pub fn parse(s: &str) -> Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "repetition" | "rep" => Ok(PlacementKind::Repetition),
+            "cyclic" | "cyc" => Ok(PlacementKind::Cyclic),
+            "man" => Ok(PlacementKind::Man),
+            "custom" => Ok(PlacementKind::Custom),
+            other => Err(Error::Config(format!("unknown placement '{other}'"))),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            PlacementKind::Repetition => "repetition",
+            PlacementKind::Cyclic => "cyclic",
+            PlacementKind::Man => "man",
+            PlacementKind::Custom => "custom",
+        }
+    }
+}
+
+/// An uncoded storage placement: which machines store which sub-matrix.
+///
+/// Machines and sub-matrices are 0-indexed internally (the paper is
+/// 1-indexed; display code adds 1).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Placement {
+    kind: PlacementKind,
+    n: usize,
+    g: usize,
+    j: usize,
+    /// `replicas[g]` — sorted machines storing sub-matrix `g` (`N_g`).
+    replicas: Vec<Vec<usize>>,
+    /// `stores[n]` — sub-matrices stored by machine `n` (`Z_n`).
+    stores: Vec<BTreeSet<usize>>,
+}
+
+impl Placement {
+    /// Build one of the named placement families. See [`super::builders`].
+    pub fn build(kind: PlacementKind, n: usize, g: usize, j: usize) -> Result<Self> {
+        match kind {
+            PlacementKind::Repetition => super::builders::repetition(n, g, j),
+            PlacementKind::Cyclic => super::builders::cyclic(n, g, j),
+            PlacementKind::Man => super::builders::man(n, g, j),
+            PlacementKind::Custom => Err(Error::InvalidPlacement(
+                "custom placements are built with Placement::from_replicas".into(),
+            )),
+        }
+    }
+
+    /// Build from an explicit replica map (`replicas[g]` = machines).
+    pub fn from_replicas(
+        kind: PlacementKind,
+        n: usize,
+        replicas: Vec<Vec<usize>>,
+    ) -> Result<Self> {
+        let g = replicas.len();
+        if g == 0 || n == 0 {
+            return Err(Error::InvalidPlacement("empty placement".into()));
+        }
+        let j = replicas[0].len();
+        let mut sorted_replicas = Vec::with_capacity(g);
+        let mut stores = vec![BTreeSet::new(); n];
+        for (gi, reps) in replicas.into_iter().enumerate() {
+            if reps.is_empty() {
+                return Err(Error::InvalidPlacement(format!(
+                    "sub-matrix {gi} has no replicas"
+                )));
+            }
+            if reps.len() != j {
+                return Err(Error::InvalidPlacement(format!(
+                    "sub-matrix {gi} has {} replicas, expected J={j}",
+                    reps.len()
+                )));
+            }
+            let set: BTreeSet<usize> = reps.iter().copied().collect();
+            if set.len() != reps.len() {
+                return Err(Error::InvalidPlacement(format!(
+                    "sub-matrix {gi} has duplicate replicas"
+                )));
+            }
+            if let Some(&bad) = set.iter().find(|&&m| m >= n) {
+                return Err(Error::InvalidPlacement(format!(
+                    "sub-matrix {gi} references machine {bad} >= N={n}"
+                )));
+            }
+            for &m in &set {
+                stores[m].insert(gi);
+            }
+            sorted_replicas.push(set.into_iter().collect());
+        }
+        Ok(Placement {
+            kind,
+            n,
+            g,
+            j,
+            replicas: sorted_replicas,
+            stores,
+        })
+    }
+
+    pub fn kind(&self) -> PlacementKind {
+        self.kind
+    }
+
+    /// Number of machines `N`.
+    pub fn machines(&self) -> usize {
+        self.n
+    }
+
+    /// Number of sub-matrices `G`.
+    pub fn submatrices(&self) -> usize {
+        self.g
+    }
+
+    /// Replication factor `J`.
+    pub fn replication(&self) -> usize {
+        self.j
+    }
+
+    /// Machines storing sub-matrix `g` (`N_g`), sorted.
+    pub fn machines_storing(&self, g: usize) -> &[usize] {
+        &self.replicas[g]
+    }
+
+    /// Sub-matrices stored by machine `n` (`Z_n`).
+    pub fn stored_by(&self, n: usize) -> impl Iterator<Item = usize> + '_ {
+        self.stores[n].iter().copied()
+    }
+
+    /// Whether machine `n` stores sub-matrix `g`.
+    pub fn stores(&self, n: usize, g: usize) -> bool {
+        self.stores[n].contains(&g)
+    }
+
+    /// Fraction of `X` stored by machine `n` (`|Z_n|/G`).
+    pub fn storage_fraction(&self, n: usize) -> f64 {
+        self.stores[n].len() as f64 / self.g as f64
+    }
+
+    /// Available replicas of `g` given the availability set.
+    pub fn available_replicas(&self, g: usize, avail: &[usize]) -> Vec<usize> {
+        self.replicas[g]
+            .iter()
+            .copied()
+            .filter(|m| avail.contains(m))
+            .collect()
+    }
+
+    /// Check that every sub-matrix keeps at least `1 + s` available
+    /// replicas — the feasibility precondition of problems (6)/(8).
+    pub fn check_feasible(&self, avail: &[usize], stragglers: usize) -> Result<()> {
+        for g in 0..self.g {
+            let have = self.available_replicas(g, avail).len();
+            if have < 1 + stragglers {
+                return Err(Error::infeasible(format!(
+                    "sub-matrix {g} has {have} available replicas, needs {}",
+                    1 + stragglers
+                )));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> Placement {
+        Placement::from_replicas(
+            PlacementKind::Custom,
+            4,
+            vec![vec![0, 1], vec![1, 2], vec![2, 3]],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn from_replicas_builds_indices() {
+        let p = toy();
+        assert_eq!(p.machines(), 4);
+        assert_eq!(p.submatrices(), 3);
+        assert_eq!(p.replication(), 2);
+        assert_eq!(p.machines_storing(1), &[1, 2]);
+        assert_eq!(p.stored_by(2).collect::<Vec<_>>(), vec![1, 2]);
+        assert!(p.stores(0, 0));
+        assert!(!p.stores(0, 2));
+    }
+
+    #[test]
+    fn storage_fraction() {
+        let p = toy();
+        assert_eq!(p.storage_fraction(1), 2.0 / 3.0);
+        assert_eq!(p.storage_fraction(3), 1.0 / 3.0);
+    }
+
+    #[test]
+    fn rejects_out_of_range_machine() {
+        let r = Placement::from_replicas(PlacementKind::Custom, 2, vec![vec![0, 5]]);
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn rejects_duplicate_replicas() {
+        let r = Placement::from_replicas(PlacementKind::Custom, 3, vec![vec![1, 1]]);
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn rejects_ragged_replication() {
+        let r = Placement::from_replicas(
+            PlacementKind::Custom,
+            3,
+            vec![vec![0, 1], vec![2]],
+        );
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn available_replicas_filters() {
+        let p = toy();
+        assert_eq!(p.available_replicas(1, &[0, 2, 3]), vec![2]);
+        assert_eq!(p.available_replicas(0, &[2, 3]), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn feasibility_check() {
+        let p = toy();
+        assert!(p.check_feasible(&[0, 1, 2, 3], 1).is_ok());
+        // with machine 3 preempted, sub-matrix 2 has one replica: S=1 infeasible
+        assert!(p.check_feasible(&[0, 1, 2], 1).is_err());
+        assert!(p.check_feasible(&[0, 1, 2], 0).is_ok());
+    }
+
+    #[test]
+    fn kind_parsing() {
+        assert_eq!(
+            PlacementKind::parse("cyclic").unwrap(),
+            PlacementKind::Cyclic
+        );
+        assert_eq!(PlacementKind::parse("REP").unwrap(), PlacementKind::Repetition);
+        assert!(PlacementKind::parse("bogus").is_err());
+    }
+}

@@ -1,0 +1,155 @@
+//! Storage-constrained placement (the paper's heterogeneous-storage
+//! extension direction, after Woolsey et al. \[6\]).
+//!
+//! Machines may have unequal storage budgets `k_n` (number of sub-matrices
+//! machine `n` can hold). [`build`] constructs a `J`-replica placement
+//! respecting the budgets, greedily assigning each sub-matrix's replicas
+//! to the machines with the most *remaining* budget — optionally weighted
+//! by speed, so fast machines hold more data and the assignment LP has
+//! room to exploit them.
+
+use crate::error::{Error, Result};
+
+use super::spec::{Placement, PlacementKind};
+
+/// Build a placement for budgets `capacities[n]` (in sub-matrices).
+///
+/// Feasibility requires `Σ k_n ≥ G·J` and `|{n : k_n > 0}| ≥ J` at every
+/// assignment round; the greedy max-remaining-budget rule guarantees this
+/// whenever `Σ k_n ≥ G·J` and `k_n ≤ G` for all `n` (each sub-matrix needs
+/// `J` *distinct* machines).
+///
+/// `speed_weight` — optional speeds; ties in remaining budget are broken
+/// toward faster machines, and the initial ordering favors them.
+pub fn build(
+    g: usize,
+    j: usize,
+    capacities: &[usize],
+    speed_weight: Option<&[f64]>,
+) -> Result<Placement> {
+    let n = capacities.len();
+    if g == 0 || j == 0 || j > n {
+        return Err(Error::InvalidPlacement(format!(
+            "bad storage-constrained parameters (G={g}, J={j}, N={n})"
+        )));
+    }
+    if let Some(s) = speed_weight {
+        if s.len() != n {
+            return Err(Error::Shape(format!("{} speeds for N={n}", s.len())));
+        }
+    }
+    let total: usize = capacities.iter().sum();
+    if total < g * j {
+        return Err(Error::InvalidPlacement(format!(
+            "total capacity {total} < G·J = {}",
+            g * j
+        )));
+    }
+    if capacities.iter().any(|&k| k > g) {
+        return Err(Error::InvalidPlacement(
+            "a machine's capacity exceeds G (cannot store duplicates)".into(),
+        ));
+    }
+
+    let mut remaining = capacities.to_vec();
+    let speed = |m: usize| speed_weight.map(|s| s[m]).unwrap_or(1.0);
+    let mut replicas: Vec<Vec<usize>> = Vec::with_capacity(g);
+    for gi in 0..g {
+        // J machines with the largest remaining budget (speed tie-break)
+        let mut order: Vec<usize> = (0..n).filter(|&m| remaining[m] > 0).collect();
+        if order.len() < j {
+            return Err(Error::InvalidPlacement(format!(
+                "capacities exhausted at sub-matrix {gi}: only {} machines left",
+                order.len()
+            )));
+        }
+        order.sort_by(|&a, &b| {
+            remaining[b]
+                .cmp(&remaining[a])
+                .then(speed(b).partial_cmp(&speed(a)).unwrap())
+                .then(a.cmp(&b))
+        });
+        let chosen: Vec<usize> = order[..j].to_vec();
+        for &m in &chosen {
+            remaining[m] -= 1;
+        }
+        replicas.push(chosen);
+    }
+    Placement::from_replicas(PlacementKind::Custom, n, replicas)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::{solve_load_matrix, SolveParams};
+
+    #[test]
+    fn uniform_budgets_reduce_to_balanced_placement() {
+        // k_n = G·J/N for all n: storage ends up perfectly balanced
+        let p = build(6, 3, &[3; 6], None).unwrap();
+        for m in 0..6 {
+            assert_eq!(p.stored_by(m).count(), 3, "machine {m}");
+        }
+        for g in 0..6 {
+            assert_eq!(p.machines_storing(g).len(), 3);
+        }
+    }
+
+    #[test]
+    fn skewed_budgets_respected() {
+        // one big machine, several small ones
+        let caps = [6, 4, 3, 2, 2, 1];
+        let p = build(6, 3, &caps, None).unwrap();
+        for (m, &k) in caps.iter().enumerate() {
+            assert!(
+                p.stored_by(m).count() <= k,
+                "machine {m} over budget: {} > {k}",
+                p.stored_by(m).count()
+            );
+        }
+        // all 18 replica slots used (Σ caps = 18 = G·J)
+        let held: usize = (0..6).map(|m| p.stored_by(m).count()).collect::<Vec<_>>().iter().sum();
+        assert_eq!(held, 18);
+    }
+
+    #[test]
+    fn insufficient_capacity_rejected() {
+        assert!(build(6, 3, &[2; 6], None).is_err()); // 12 < 18
+        assert!(build(6, 3, &[18, 0, 0, 0, 0, 0], None).is_err()); // k > G
+        assert!(build(6, 7, &[6; 6], None).is_err()); // J > N
+    }
+
+    #[test]
+    fn exhaustion_mid_build_detected() {
+        // Σ = 18 but concentrated: three machines hold 6 each ⇒ after they
+        // exhaust... they never do (6 = G), so use a genuinely bad split:
+        // Σ = 18 with only 2 machines positive at the end is impossible
+        // since k ≤ G; verify a feasible tight case instead.
+        let p = build(6, 3, &[6, 6, 6, 0, 0, 0], None).unwrap();
+        for g in 0..6 {
+            assert_eq!(p.machines_storing(g), &[0, 1, 2]);
+        }
+    }
+
+    #[test]
+    fn speed_weighting_gives_fast_machines_more_data() {
+        // surplus capacity: fast machines should be preferred
+        let caps = [4; 6]; // Σ = 24 > 18
+        let speeds = [1.0, 1.0, 1.0, 8.0, 8.0, 8.0];
+        let p = build(6, 3, &caps, Some(&speeds)).unwrap();
+        let slow: usize = (0..3).map(|m| p.stored_by(m).count()).sum();
+        let fast: usize = (3..6).map(|m| p.stored_by(m).count()).sum();
+        assert!(fast >= slow, "fast {fast} vs slow {slow}");
+    }
+
+    #[test]
+    fn resulting_placement_is_solvable() {
+        let caps = [5, 4, 3, 3, 2, 1];
+        let speeds = vec![1.0, 2.0, 4.0, 8.0, 16.0, 32.0];
+        let p = build(6, 3, &caps, Some(&speeds)).unwrap();
+        let avail: Vec<usize> = (0..6).collect();
+        let sol = solve_load_matrix(&p, &avail, &speeds, &SolveParams::default()).unwrap();
+        sol.load.validate(&p, &avail, 0, 1e-8).unwrap();
+        assert!(sol.time > 0.0);
+    }
+}

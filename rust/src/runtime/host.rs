@@ -1,0 +1,76 @@
+//! Pure-Rust host backend: the `linalg::ops` reference kernels.
+
+use crate::error::{Error, Result};
+use crate::linalg::ops;
+
+/// Always-available backend; also the numerics oracle for PJRT.
+#[derive(Debug, Default)]
+pub struct HostBackend;
+
+impl HostBackend {
+    pub fn new() -> Self {
+        HostBackend
+    }
+
+    pub fn matvec_tile(&self, x: &[f32], rows: usize, cols: usize, w: &[f32]) -> Result<Vec<f32>> {
+        if x.len() != rows * cols {
+            return Err(Error::Shape(format!(
+                "tile buffer {} != {rows}x{cols}",
+                x.len()
+            )));
+        }
+        if w.len() != cols {
+            return Err(Error::Shape(format!("w length {} != cols {cols}", w.len())));
+        }
+        let mut out = vec![0.0f32; rows];
+        ops::matvec_into(x, rows, cols, w, &mut out);
+        Ok(out)
+    }
+
+    pub fn normalize(&self, y: &[f32]) -> Result<(Vec<f32>, f64)> {
+        let mut b = y.to_vec();
+        let n = ops::normalize(&mut b);
+        Ok((b, n))
+    }
+
+    pub fn dot(&self, a: &[f32], b: &[f32]) -> Result<f64> {
+        if a.len() != b.len() {
+            return Err(Error::Shape(format!(
+                "dot length mismatch {} vs {}",
+                a.len(),
+                b.len()
+            )));
+        }
+        Ok(ops::dot(a, b))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matvec_and_shapes() {
+        let h = HostBackend::new();
+        let x = vec![1.0, 2.0, 3.0, 4.0];
+        let y = h.matvec_tile(&x, 2, 2, &[1.0, 1.0]).unwrap();
+        assert_eq!(y, vec![3.0, 7.0]);
+        assert!(h.matvec_tile(&x, 3, 2, &[1.0, 1.0]).is_err());
+        assert!(h.matvec_tile(&x, 2, 2, &[1.0]).is_err());
+    }
+
+    #[test]
+    fn normalize_returns_norm() {
+        let h = HostBackend::new();
+        let (b, n) = h.normalize(&[3.0, 4.0]).unwrap();
+        assert_eq!(n, 5.0);
+        assert!((b[0] - 0.6).abs() < 1e-7);
+    }
+
+    #[test]
+    fn dot_checks_lengths() {
+        let h = HostBackend::new();
+        assert_eq!(h.dot(&[1.0, 2.0], &[3.0, 4.0]).unwrap(), 11.0);
+        assert!(h.dot(&[1.0], &[1.0, 2.0]).is_err());
+    }
+}

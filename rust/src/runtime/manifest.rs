@@ -1,0 +1,138 @@
+//! Artifact manifest (`artifacts/manifest.json`) written by the Python AOT
+//! pipeline and consumed by [`super::pjrt`].
+
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+use crate::util::json::Json;
+
+/// One AOT artifact entry.
+#[derive(Debug, Clone)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub path: PathBuf,
+    pub kind: String,
+}
+
+/// Parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    /// Tile height baked into the matvec artifact.
+    pub tile_rows: usize,
+    /// Matrix columns `r` baked into the matvec artifact.
+    pub cols: usize,
+    /// Vector length `q` baked into normalize/dot artifacts.
+    pub q: usize,
+    pub artifacts: Vec<ArtifactEntry>,
+}
+
+impl Manifest {
+    /// Load `manifest.json` from an artifact directory.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            Error::Runtime(format!(
+                "cannot read {} (run `make artifacts` first): {e}",
+                path.display()
+            ))
+        })?;
+        Self::parse(&text, dir)
+    }
+
+    /// Parse manifest text (paths resolved relative to `dir`).
+    pub fn parse(text: &str, dir: &Path) -> Result<Manifest> {
+        let v = Json::parse(text)?;
+        let req = |k: &str| {
+            v.get_usize(k)
+                .ok_or_else(|| Error::Runtime(format!("manifest missing numeric '{k}'")))
+        };
+        let tile_rows = req("tile_rows")?;
+        let cols = req("cols")?;
+        let q = req("q")?;
+        let arr = v
+            .get("artifacts")
+            .and_then(|a| a.items())
+            .ok_or_else(|| Error::Runtime("manifest missing 'artifacts' array".into()))?;
+        let mut artifacts = Vec::with_capacity(arr.len());
+        for item in arr {
+            let name = item
+                .get_str("name")
+                .ok_or_else(|| Error::Runtime("artifact missing 'name'".into()))?;
+            let rel = item
+                .get_str("path")
+                .ok_or_else(|| Error::Runtime("artifact missing 'path'".into()))?;
+            let kind = item
+                .get_str("kind")
+                .ok_or_else(|| Error::Runtime("artifact missing 'kind'".into()))?;
+            artifacts.push(ArtifactEntry {
+                name: name.to_string(),
+                path: dir.join(rel),
+                kind: kind.to_string(),
+            });
+        }
+        Ok(Manifest {
+            tile_rows,
+            cols,
+            q,
+            artifacts,
+        })
+    }
+
+    /// Find the artifact of a given kind.
+    pub fn find(&self, kind: &str) -> Result<&ArtifactEntry> {
+        self.artifacts
+            .iter()
+            .find(|a| a.kind == kind)
+            .ok_or_else(|| Error::Runtime(format!("no '{kind}' artifact in manifest")))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+        "tile_rows": 128, "cols": 1536, "q": 1536,
+        "artifacts": [
+            {"name": "matvec_t128_c1536", "path": "matvec_t128_c1536.hlo.txt", "kind": "matvec"},
+            {"name": "normalize_q1536", "path": "normalize_q1536.hlo.txt", "kind": "normalize"},
+            {"name": "dot_q1536", "path": "dot_q1536.hlo.txt", "kind": "dot"}
+        ]
+    }"#;
+
+    #[test]
+    fn parse_sample() {
+        let m = Manifest::parse(SAMPLE, Path::new("/arts")).unwrap();
+        assert_eq!(m.tile_rows, 128);
+        assert_eq!(m.cols, 1536);
+        assert_eq!(m.artifacts.len(), 3);
+        let mv = m.find("matvec").unwrap();
+        assert_eq!(mv.path, Path::new("/arts/matvec_t128_c1536.hlo.txt"));
+        assert!(m.find("conv").is_err());
+    }
+
+    #[test]
+    fn missing_fields_rejected() {
+        assert!(Manifest::parse("{}", Path::new(".")).is_err());
+        assert!(Manifest::parse(
+            r#"{"tile_rows": 1, "cols": 2, "q": 3, "artifacts": [{"name": "x"}]}"#,
+            Path::new(".")
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn load_generated_manifest_if_present() {
+        // integration against the real `make artifacts` output when built
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("manifest.json").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            assert!(m.find("matvec").is_ok());
+            assert!(m.find("normalize").is_ok());
+            assert!(m.find("dot").is_ok());
+            for a in &m.artifacts {
+                assert!(a.path.exists(), "{} missing", a.path.display());
+            }
+        }
+    }
+}

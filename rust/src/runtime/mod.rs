@@ -1,0 +1,104 @@
+//! Compute backends: PJRT artifact execution + pure-Rust host fallback.
+//!
+//! Workers execute their assigned row tiles through a [`Backend`]:
+//!
+//! * [`host::HostBackend`] — the `linalg::ops` reference kernels. Always
+//!   available; the numerics oracle for the PJRT path and the default for
+//!   tests.
+//! * [`pjrt::PjrtBackend`] — loads the HLO-text artifacts produced by
+//!   `make artifacts` (`python/compile/aot.py`), compiles them once on a
+//!   PJRT CPU client, and executes them on the hot path. Python never runs
+//!   here.
+//!
+//! The `xla` crate's `PjRtClient` is `Rc`-based (not `Send`), so backends
+//! are instantiated *per worker thread* from a shareable [`BackendSpec`].
+
+pub mod host;
+pub mod manifest;
+pub mod pjrt;
+
+pub use manifest::Manifest;
+
+use std::path::PathBuf;
+
+use crate::config::types::BackendKind;
+use crate::error::Result;
+
+/// Shareable recipe for building a backend on a worker thread.
+#[derive(Debug, Clone)]
+pub enum BackendSpec {
+    /// Pure-Rust reference kernels.
+    Host,
+    /// PJRT CPU client over the artifact directory.
+    Pjrt { dir: PathBuf },
+}
+
+impl BackendSpec {
+    /// Build from config (`artifacts/` is the conventional directory).
+    pub fn from_kind(kind: BackendKind, artifact_dir: impl Into<PathBuf>) -> Self {
+        match kind {
+            BackendKind::Host => BackendSpec::Host,
+            BackendKind::Pjrt => BackendSpec::Pjrt {
+                dir: artifact_dir.into(),
+            },
+        }
+    }
+
+    /// Instantiate on the current thread.
+    pub fn instantiate(&self) -> Result<Backend> {
+        match self {
+            BackendSpec::Host => Ok(Backend::Host(host::HostBackend::new())),
+            BackendSpec::Pjrt { dir } => Ok(Backend::Pjrt(pjrt::PjrtBackend::load(dir)?)),
+        }
+    }
+}
+
+/// A worker/master compute backend (enum dispatch keeps the hot path free
+/// of vtable indirection).
+pub enum Backend {
+    Host(host::HostBackend),
+    Pjrt(pjrt::PjrtBackend),
+}
+
+impl Backend {
+    /// `y = X_tile · w` where `x` is `rows × cols` row-major. `rows` may be
+    /// ragged (less than the artifact tile); the PJRT path zero-pads.
+    pub fn matvec_tile(&self, x: &[f32], rows: usize, cols: usize, w: &[f32]) -> Result<Vec<f32>> {
+        match self {
+            Backend::Host(h) => h.matvec_tile(x, rows, cols, w),
+            Backend::Pjrt(p) => p.matvec_tile(x, rows, cols, w),
+        }
+    }
+
+    /// Master combine: unit-normalize, returning `(b_next, ‖y‖)`.
+    pub fn normalize(&self, y: &[f32]) -> Result<(Vec<f32>, f64)> {
+        match self {
+            Backend::Host(h) => h.normalize(y),
+            Backend::Pjrt(p) => p.normalize(y),
+        }
+    }
+
+    /// `<a, b>` (Rayleigh-quotient numerator).
+    pub fn dot(&self, a: &[f32], b: &[f32]) -> Result<f64> {
+        match self {
+            Backend::Host(h) => h.dot(a, b),
+            Backend::Pjrt(p) => p.dot(a, b),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Backend::Host(_) => "host",
+            Backend::Pjrt(_) => "pjrt",
+        }
+    }
+
+    /// The natural execution-tile height (PJRT: baked artifact shape; host:
+    /// any — returns `None`).
+    pub fn tile_rows(&self) -> Option<usize> {
+        match self {
+            Backend::Host(_) => None,
+            Backend::Pjrt(p) => Some(p.tile_rows()),
+        }
+    }
+}

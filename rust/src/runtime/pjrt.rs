@@ -1,0 +1,222 @@
+//! PJRT backend: load HLO-text artifacts, compile once, execute on the hot
+//! path.
+//!
+//! Follows the pattern of `/opt/xla-example/load_hlo`: HLO *text* →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `PjRtClient::compile` → `execute`. One compiled executable per artifact;
+//! compilation happens once at backend construction (worker spawn), never
+//! per step.
+//!
+//! Ragged tiles (final rows of an assigned range) are zero-padded to the
+//! baked `tile_rows`; padded outputs are truncated before returning, so the
+//! math is exact.
+
+use std::path::Path;
+
+use crate::error::{Error, Result};
+
+use super::manifest::Manifest;
+
+/// A PJRT CPU backend over one artifact directory.
+pub struct PjrtBackend {
+    #[allow(dead_code)] // owns the executables' runtime
+    client: xla::PjRtClient,
+    matvec: xla::PjRtLoadedExecutable,
+    normalize: xla::PjRtLoadedExecutable,
+    dot: xla::PjRtLoadedExecutable,
+    tile_rows: usize,
+    cols: usize,
+    q: usize,
+}
+
+impl PjrtBackend {
+    /// Load + compile all artifacts in `dir`.
+    pub fn load(dir: &Path) -> Result<PjrtBackend> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        let compile = |kind: &str| -> Result<xla::PjRtLoadedExecutable> {
+            let entry = manifest.find(kind)?;
+            let path = entry.path.to_str().ok_or_else(|| {
+                Error::Runtime(format!("non-UTF8 artifact path {:?}", entry.path))
+            })?;
+            let proto = xla::HloModuleProto::from_text_file(path)?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            Ok(client.compile(&comp)?)
+        };
+        Ok(PjrtBackend {
+            matvec: compile("matvec")?,
+            normalize: compile("normalize")?,
+            dot: compile("dot")?,
+            client,
+            tile_rows: manifest.tile_rows,
+            cols: manifest.cols,
+            q: manifest.q,
+        })
+    }
+
+    /// Baked execution-tile height.
+    pub fn tile_rows(&self) -> usize {
+        self.tile_rows
+    }
+
+    /// Baked column count.
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Baked master vector length.
+    pub fn q(&self) -> usize {
+        self.q
+    }
+
+    pub fn matvec_tile(&self, x: &[f32], rows: usize, cols: usize, w: &[f32]) -> Result<Vec<f32>> {
+        if cols != self.cols {
+            return Err(Error::Runtime(format!(
+                "artifact baked for {} cols, got {cols} (re-run `make artifacts COLS={cols}`)",
+                self.cols
+            )));
+        }
+        if rows > self.tile_rows {
+            return Err(Error::Shape(format!(
+                "tile of {rows} rows exceeds artifact tile_rows {}",
+                self.tile_rows
+            )));
+        }
+        if x.len() != rows * cols || w.len() != cols {
+            return Err(Error::Shape(format!(
+                "matvec_tile buffers: x={} ({rows}x{cols}), w={}",
+                x.len(),
+                w.len()
+            )));
+        }
+        // zero-pad ragged tiles to the baked shape
+        let x_lit = if rows == self.tile_rows {
+            xla::Literal::vec1(x)
+        } else {
+            let mut padded = vec![0.0f32; self.tile_rows * cols];
+            padded[..x.len()].copy_from_slice(x);
+            xla::Literal::vec1(&padded)
+        }
+        .reshape(&[self.tile_rows as i64, cols as i64])?;
+        let w_lit = xla::Literal::vec1(w);
+
+        let result = self.matvec.execute::<xla::Literal>(&[x_lit, w_lit])?[0][0]
+            .to_literal_sync()?;
+        let y = result.to_tuple1()?;
+        let mut out = y.to_vec::<f32>()?;
+        out.truncate(rows);
+        Ok(out)
+    }
+
+    pub fn normalize(&self, y: &[f32]) -> Result<(Vec<f32>, f64)> {
+        if y.len() != self.q {
+            return Err(Error::Runtime(format!(
+                "normalize artifact baked for q={}, got {} (re-run `make artifacts Q={}`)",
+                self.q,
+                y.len(),
+                y.len()
+            )));
+        }
+        let y_lit = xla::Literal::vec1(y);
+        let result = self.normalize.execute::<xla::Literal>(&[y_lit])?[0][0]
+            .to_literal_sync()?;
+        let (b, n) = result.to_tuple2()?;
+        let b_vec = b.to_vec::<f32>()?;
+        let n_val = n.to_vec::<f32>()?;
+        Ok((b_vec, n_val.first().copied().unwrap_or(0.0) as f64))
+    }
+
+    pub fn dot(&self, a: &[f32], b: &[f32]) -> Result<f64> {
+        if a.len() != self.q || b.len() != self.q {
+            return Err(Error::Runtime(format!(
+                "dot artifact baked for q={}, got {}/{}",
+                self.q,
+                a.len(),
+                b.len()
+            )));
+        }
+        let a_lit = xla::Literal::vec1(a);
+        let b_lit = xla::Literal::vec1(b);
+        let result = self.dot.execute::<xla::Literal>(&[a_lit, b_lit])?[0][0]
+            .to_literal_sync()?;
+        let d = result.to_tuple1()?;
+        let v = d.to_vec::<f32>()?;
+        Ok(v.first().copied().unwrap_or(0.0) as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    //! These tests require `make artifacts` to have run (they are skipped
+    //! otherwise so `cargo test` works on a fresh checkout). The heavier
+    //! PJRT-vs-host equivalence tests live in `tests/runtime_pjrt.rs`.
+    use super::*;
+
+    fn artifact_dir() -> Option<std::path::PathBuf> {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        dir.join("manifest.json").exists().then_some(dir)
+    }
+
+    #[test]
+    fn load_and_execute_full_tile() {
+        let Some(dir) = artifact_dir() else { return };
+        let b = PjrtBackend::load(&dir).unwrap();
+        let (rows, cols) = (b.tile_rows(), b.cols());
+        let x: Vec<f32> = (0..rows * cols).map(|i| (i % 7) as f32 - 3.0).collect();
+        let w: Vec<f32> = (0..cols).map(|i| ((i % 5) as f32 - 2.0) * 0.1).collect();
+        let y = b.matvec_tile(&x, rows, cols, &w).unwrap();
+        assert_eq!(y.len(), rows);
+        // oracle
+        let host = crate::runtime::host::HostBackend::new();
+        let want = host.matvec_tile(&x, rows, cols, &w).unwrap();
+        for (a, e) in y.iter().zip(&want) {
+            assert!((a - e).abs() < 1e-2 + 1e-4 * e.abs(), "{a} vs {e}");
+        }
+    }
+
+    #[test]
+    fn ragged_tile_zero_padded() {
+        let Some(dir) = artifact_dir() else { return };
+        let b = PjrtBackend::load(&dir).unwrap();
+        let cols = b.cols();
+        let rows = 5; // ragged
+        let x: Vec<f32> = (0..rows * cols).map(|i| (i % 3) as f32).collect();
+        let w: Vec<f32> = vec![0.5; cols];
+        let y = b.matvec_tile(&x, rows, cols, &w).unwrap();
+        assert_eq!(y.len(), rows);
+        let host = crate::runtime::host::HostBackend::new();
+        let want = host.matvec_tile(&x, rows, cols, &w).unwrap();
+        for (a, e) in y.iter().zip(&want) {
+            assert!((a - e).abs() < 1e-2, "{a} vs {e}");
+        }
+    }
+
+    #[test]
+    fn shape_guards() {
+        let Some(dir) = artifact_dir() else { return };
+        let b = PjrtBackend::load(&dir).unwrap();
+        assert!(b.matvec_tile(&[0.0; 4], 2, 2, &[0.0; 2]).is_err()); // wrong cols
+        assert!(b
+            .matvec_tile(&vec![0.0; (b.tile_rows() + 1) * b.cols()], b.tile_rows() + 1, b.cols(), &vec![0.0; b.cols()])
+            .is_err()); // too many rows
+        assert!(b.normalize(&[0.0; 3]).is_err()); // wrong q
+    }
+
+    #[test]
+    fn normalize_and_dot_match_host() {
+        let Some(dir) = artifact_dir() else { return };
+        let b = PjrtBackend::load(&dir).unwrap();
+        let q = b.q();
+        let y: Vec<f32> = (0..q).map(|i| ((i % 11) as f32 - 5.0) * 0.3).collect();
+        let (bn, n) = b.normalize(&y).unwrap();
+        let host = crate::runtime::host::HostBackend::new();
+        let (hn, hnorm) = host.normalize(&y).unwrap();
+        assert!((n - hnorm).abs() < 1e-2 * (1.0 + hnorm));
+        for (a, e) in bn.iter().zip(&hn) {
+            assert!((a - e).abs() < 1e-4);
+        }
+        let d = b.dot(&y, &y).unwrap();
+        let hd = host.dot(&y, &y).unwrap();
+        assert!((d - hd).abs() < 1e-2 * (1.0 + hd.abs()));
+    }
+}

@@ -1,0 +1,205 @@
+//! Cluster lifecycle: spawn worker threads, route messages, join on drop.
+
+use std::sync::mpsc::{self, Receiver, Sender};
+use std::thread::JoinHandle;
+
+use crate::error::{Error, Result};
+
+use super::protocol::{ToMaster, ToWorker, WorkOrder};
+use super::worker::{run_worker, WorkerConfig};
+
+/// A running set of worker threads plus the master-side channel ends.
+pub struct Cluster {
+    senders: Vec<Sender<ToWorker>>,
+    receiver: Receiver<ToMaster>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl Cluster {
+    /// Spawn one thread per worker config.
+    pub fn spawn(configs: Vec<WorkerConfig>) -> Result<Cluster> {
+        if configs.is_empty() {
+            return Err(Error::Cluster("no workers to spawn".into()));
+        }
+        let (tx_master, rx_master) = mpsc::channel();
+        let mut senders = Vec::with_capacity(configs.len());
+        let mut handles = Vec::with_capacity(configs.len());
+        for cfg in configs {
+            let (tx_w, rx_w) = mpsc::channel();
+            let tx_m = tx_master.clone();
+            let id = cfg.id;
+            let handle = std::thread::Builder::new()
+                .name(format!("usec-worker-{id}"))
+                .spawn(move || run_worker(cfg, rx_w, tx_m))
+                .map_err(|e| Error::Cluster(format!("spawn worker {id}: {e}")))?;
+            senders.push(tx_w);
+            handles.push(handle);
+        }
+        Ok(Cluster {
+            senders,
+            receiver: rx_master,
+            handles,
+        })
+    }
+
+    /// Number of workers.
+    pub fn size(&self) -> usize {
+        self.senders.len()
+    }
+
+    /// Send a work order to one worker.
+    pub fn send(&self, worker: usize, order: WorkOrder) -> Result<()> {
+        self.senders
+            .get(worker)
+            .ok_or_else(|| Error::Cluster(format!("no worker {worker}")))?
+            .send(ToWorker::Work(order))
+            .map_err(|_| Error::Cluster(format!("worker {worker} channel closed")))
+    }
+
+    /// Blocking receive with timeout.
+    pub fn recv_timeout(&self, timeout: std::time::Duration) -> Result<ToMaster> {
+        self.receiver
+            .recv_timeout(timeout)
+            .map_err(|e| Error::Cluster(format!("recv: {e}")))
+    }
+
+    /// Drain any pending messages without blocking (late reports).
+    pub fn drain(&self) -> Vec<ToMaster> {
+        let mut out = Vec::new();
+        while let Ok(m) = self.receiver.try_recv() {
+            out.push(m);
+        }
+        out
+    }
+
+    /// Ask all workers to exit and join them.
+    pub fn shutdown(mut self) {
+        for s in &self.senders {
+            let _ = s.send(ToWorker::Shutdown);
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Cluster {
+    fn drop(&mut self) {
+        for s in &self.senders {
+            let _ = s.send(ToWorker::Shutdown);
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::partition::{submatrix_ranges, RowRange};
+    use crate::linalg::{gen, Matrix};
+    use crate::optim::Task;
+    use crate::runtime::BackendSpec;
+    use crate::sched::worker::WorkerStorage;
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    fn make_cluster(n: usize) -> Cluster {
+        let q = 40;
+        let matrix: Arc<Matrix> = Arc::new(gen::random_dense(q, q, 3));
+        let ranges = Arc::new(submatrix_ranges(q, 4).unwrap());
+        let configs = (0..n)
+            .map(|id| WorkerConfig {
+                id,
+                backend: BackendSpec::Host,
+                speed: 1.0,
+                tile_rows: 8,
+                storage: WorkerStorage {
+                    matrix: Arc::clone(&matrix),
+                    sub_ranges: Arc::clone(&ranges),
+                },
+            })
+            .collect();
+        Cluster::spawn(configs).unwrap()
+    }
+
+    #[test]
+    fn spawn_and_shutdown() {
+        let c = make_cluster(4);
+        assert_eq!(c.size(), 4);
+        c.shutdown();
+    }
+
+    #[test]
+    fn routes_work_and_reports() {
+        let c = make_cluster(3);
+        for id in 0..3 {
+            c.send(
+                id,
+                WorkOrder {
+                    step: 7,
+                    w: Arc::new(vec![1.0; 40]),
+                    tasks: vec![Task {
+                        g: id,
+                        rows: RowRange::new(0, 5),
+                    }],
+                    row_cost_ns: 0,
+                    straggle: None,
+                },
+            )
+            .unwrap();
+        }
+        let mut seen = std::collections::BTreeSet::new();
+        for _ in 0..3 {
+            match c.recv_timeout(Duration::from_secs(5)).unwrap() {
+                ToMaster::Report(r) => {
+                    assert_eq!(r.step, 7);
+                    seen.insert(r.worker);
+                }
+                ToMaster::Failed { error, .. } => panic!("worker failed: {error}"),
+            }
+        }
+        assert_eq!(seen.len(), 3);
+        c.shutdown();
+    }
+
+    #[test]
+    fn send_to_missing_worker_errors() {
+        let c = make_cluster(2);
+        let bad = c.send(
+            9,
+            WorkOrder {
+                step: 0,
+                w: Arc::new(vec![]),
+                tasks: vec![],
+                row_cost_ns: 0,
+                straggle: None,
+            },
+        );
+        assert!(bad.is_err());
+        c.shutdown();
+    }
+
+    #[test]
+    fn drain_collects_pending() {
+        let c = make_cluster(2);
+        for id in 0..2 {
+            c.send(
+                id,
+                WorkOrder {
+                    step: 1,
+                    w: Arc::new(vec![1.0; 40]),
+                    tasks: vec![],
+                    row_cost_ns: 0,
+                    straggle: None,
+                },
+            )
+            .unwrap();
+        }
+        std::thread::sleep(Duration::from_millis(200));
+        let drained = c.drain();
+        assert_eq!(drained.len(), 2);
+        c.shutdown();
+    }
+}

@@ -1,0 +1,149 @@
+//! Elasticity traces: which machines are available at each step.
+//!
+//! Substitutes the cloud provider's preemption behaviour (DESIGN.md §3):
+//! the algorithms only ever observe the availability set `N_t`, so a trace
+//! generator exercising preemptions/arrivals reproduces the paper's
+//! environment. Three modes: static, scripted, and a Bernoulli birth-death
+//! process with a floor on `|N_t|`.
+
+use crate::util::Rng;
+
+/// Availability-set generator.
+#[derive(Debug, Clone)]
+pub enum ElasticityTrace {
+    /// All `n` machines available every step.
+    Static { n: usize },
+    /// Explicit per-step availability lists (cycled if shorter than the
+    /// run). Useful for regression tests and replaying recorded traces.
+    Scripted { steps: Vec<Vec<usize>>, cursor: usize },
+    /// Birth-death process: each available machine is preempted with
+    /// probability `preempt` per step; each preempted machine returns with
+    /// probability `arrive`. `|N_t|` never drops below `min_available`.
+    Bernoulli {
+        state: Vec<bool>,
+        preempt: f64,
+        arrive: f64,
+        min_available: usize,
+        rng: Rng,
+    },
+}
+
+impl ElasticityTrace {
+    pub fn static_all(n: usize) -> Self {
+        ElasticityTrace::Static { n }
+    }
+
+    pub fn scripted(steps: Vec<Vec<usize>>) -> Self {
+        assert!(!steps.is_empty(), "scripted trace needs at least one step");
+        ElasticityTrace::Scripted { steps, cursor: 0 }
+    }
+
+    pub fn bernoulli(n: usize, preempt: f64, arrive: f64, min_available: usize, seed: u64) -> Self {
+        assert!(min_available <= n);
+        ElasticityTrace::Bernoulli {
+            state: vec![true; n],
+            preempt,
+            arrive,
+            min_available,
+            rng: Rng::new(seed),
+        }
+    }
+
+    /// Availability set for the next step (sorted machine ids, non-empty
+    /// unless a scripted step is empty).
+    pub fn next_step(&mut self) -> Vec<usize> {
+        match self {
+            ElasticityTrace::Static { n } => (0..*n).collect(),
+            ElasticityTrace::Scripted { steps, cursor } => {
+                let s = steps[*cursor % steps.len()].clone();
+                *cursor += 1;
+                s
+            }
+            ElasticityTrace::Bernoulli {
+                state,
+                preempt,
+                arrive,
+                min_available,
+                rng,
+            } => {
+                // arrivals first (preempted machines may come back)
+                for up in state.iter_mut() {
+                    if !*up && rng.chance(*arrive) {
+                        *up = true;
+                    }
+                }
+                // preemptions, respecting the floor
+                let mut up_count = state.iter().filter(|&&u| u).count();
+                for i in 0..state.len() {
+                    if state[i] && up_count > *min_available && rng.chance(*preempt) {
+                        state[i] = false;
+                        up_count -= 1;
+                    }
+                }
+                // never return an empty set — resurrect one machine
+                if up_count == 0 {
+                    let i = rng.below(state.len());
+                    state[i] = true;
+                }
+                (0..state.len()).filter(|&i| state[i]).collect()
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn static_trace_is_constant() {
+        let mut t = ElasticityTrace::static_all(4);
+        assert_eq!(t.next_step(), vec![0, 1, 2, 3]);
+        assert_eq!(t.next_step(), vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn scripted_trace_cycles() {
+        let mut t = ElasticityTrace::scripted(vec![vec![0, 1], vec![2]]);
+        assert_eq!(t.next_step(), vec![0, 1]);
+        assert_eq!(t.next_step(), vec![2]);
+        assert_eq!(t.next_step(), vec![0, 1]);
+    }
+
+    #[test]
+    fn bernoulli_respects_floor() {
+        let mut t = ElasticityTrace::bernoulli(6, 0.9, 0.0, 3, 42);
+        for _ in 0..50 {
+            let a = t.next_step();
+            assert!(a.len() >= 3, "floor violated: {a:?}");
+        }
+    }
+
+    #[test]
+    fn bernoulli_never_empty_even_without_floor() {
+        let mut t = ElasticityTrace::bernoulli(3, 1.0, 0.0, 0, 7);
+        for _ in 0..20 {
+            assert!(!t.next_step().is_empty());
+        }
+    }
+
+    #[test]
+    fn bernoulli_machines_return() {
+        let mut t = ElasticityTrace::bernoulli(4, 0.5, 0.5, 0, 11);
+        let mut seen_counts = std::collections::BTreeSet::new();
+        for _ in 0..200 {
+            seen_counts.insert(t.next_step().len());
+        }
+        // the process must actually move around
+        assert!(seen_counts.len() > 1, "trace never changed: {seen_counts:?}");
+    }
+
+    #[test]
+    fn bernoulli_deterministic_by_seed() {
+        let mut a = ElasticityTrace::bernoulli(6, 0.3, 0.3, 1, 5);
+        let mut b = ElasticityTrace::bernoulli(6, 0.3, 0.3, 1, 5);
+        for _ in 0..20 {
+            assert_eq!(a.next_step(), b.next_step());
+        }
+    }
+}

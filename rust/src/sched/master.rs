@@ -1,0 +1,422 @@
+//! The master machine (Algorithm 1 lines 3–7, 16–17).
+//!
+//! [`Master::step`] performs one elastic computation step: solve the
+//! assignment for the current speed estimates, ship work orders, wait
+//! until the received segments *cover every row of `y`* (with straggler
+//! tolerance `S`, coverage is guaranteed after any `N_t − S` reports),
+//! assemble `y_t`, and fold measured speeds into the EWMA estimator.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::config::types::AssignPolicy;
+use crate::error::{Error, Result};
+use crate::linalg::partition::RowRange;
+use crate::optim::{self, Assignment, SolveParams};
+use crate::placement::Placement;
+
+use super::cluster::Cluster;
+use super::protocol::{ToMaster, WorkOrder};
+use super::speed::SpeedEstimator;
+use super::straggler::StraggleMode;
+
+/// Master configuration (static across steps).
+#[derive(Clone)]
+pub struct MasterConfig {
+    pub placement: Placement,
+    /// Global row range of each sub-matrix.
+    pub sub_ranges: Vec<RowRange>,
+    pub params: SolveParams,
+    pub policy: AssignPolicy,
+    /// EWMA factor γ.
+    pub gamma: f64,
+    /// Initial speed guess `ŝ₀` (uniform prior if empty).
+    pub initial_speeds: Vec<f64>,
+    /// Simulated per-row cost forwarded to workers (throttle).
+    pub row_cost_ns: u64,
+    /// How long to wait for coverage before declaring the step lost.
+    pub recovery_timeout: Duration,
+}
+
+/// What one step produced.
+#[derive(Debug)]
+pub struct StepOutcome {
+    /// Assembled product `y_t = X w_t`.
+    pub y: Vec<f32>,
+    /// Workers whose reports were used.
+    pub reporters: Vec<usize>,
+    /// Wall-clock of the whole step (solve + compute + assemble).
+    pub wall: Duration,
+    /// Time spent in the assignment solver.
+    pub solve: Duration,
+    /// Predicted computation time `c(M*)` under the *estimated* speeds.
+    pub predicted_c: f64,
+}
+
+/// Result summary of a full run (filled by the apps layer).
+#[derive(Debug)]
+pub struct RunResult {
+    pub timeline: crate::metrics::Timeline,
+    pub final_iterate: Vec<f32>,
+    pub eigval_estimate: f64,
+}
+
+/// The elastic master.
+pub struct Master {
+    cfg: MasterConfig,
+    estimator: SpeedEstimator,
+    q: usize,
+    sub_rows: Vec<usize>,
+}
+
+impl Master {
+    pub fn new(cfg: MasterConfig) -> Result<Master> {
+        let n = cfg.placement.machines();
+        if cfg.sub_ranges.len() != cfg.placement.submatrices() {
+            return Err(Error::Shape(format!(
+                "{} sub-ranges for G={}",
+                cfg.sub_ranges.len(),
+                cfg.placement.submatrices()
+            )));
+        }
+        let estimator = if cfg.initial_speeds.is_empty() {
+            SpeedEstimator::uniform(cfg.gamma, n)
+        } else {
+            if cfg.initial_speeds.len() != n {
+                return Err(Error::Shape(format!(
+                    "{} initial speeds for N={n}",
+                    cfg.initial_speeds.len()
+                )));
+            }
+            SpeedEstimator::new(cfg.gamma, cfg.initial_speeds.clone())
+        };
+        let q = cfg.sub_ranges.iter().map(|r| r.len()).sum();
+        let sub_rows = cfg.sub_ranges.iter().map(|r| r.len()).collect();
+        Ok(Master {
+            cfg,
+            estimator,
+            q,
+            sub_rows,
+        })
+    }
+
+    /// Current speed estimates `ŝ`.
+    pub fn speed_estimate(&self) -> &[f64] {
+        self.estimator.estimate()
+    }
+
+    /// Build this step's assignment under the configured policy.
+    pub fn plan(&self, avail: &[usize]) -> Result<Assignment> {
+        let speeds = self.estimator.estimate();
+        match self.cfg.policy {
+            AssignPolicy::Heterogeneous => optim::build_assignment(
+                &self.cfg.placement,
+                avail,
+                speeds,
+                &self.cfg.params,
+                &self.sub_rows,
+            ),
+            AssignPolicy::Uniform => optim::assignment::build_uniform_assignment(
+                &self.cfg.placement,
+                avail,
+                &self.cfg.params,
+                &self.sub_rows,
+            ),
+            AssignPolicy::CyclicHomogeneous => {
+                optim::assignment::build_cyclic_homogeneous_assignment(
+                    &self.cfg.placement,
+                    avail,
+                    self.cfg.params.stragglers,
+                    &self.sub_rows,
+                )
+            }
+        }
+    }
+
+    /// One elastic computation step (Algorithm 1 lines 3–7 + 16).
+    ///
+    /// `stragglers` are the chaos-injected victims for this step (the
+    /// master ships the instruction; a real deployment would simply
+    /// experience them).
+    pub fn step(
+        &mut self,
+        cluster: &Cluster,
+        step: usize,
+        w: &Arc<Vec<f32>>,
+        avail: &[usize],
+        stragglers: &[(usize, StraggleMode)],
+    ) -> Result<StepOutcome> {
+        let t0 = Instant::now();
+
+        // ---- solve ----
+        let solve_start = Instant::now();
+        let assignment = self.plan(avail)?;
+        let solve = solve_start.elapsed();
+        let predicted_c = assignment
+            .realized_load_matrix(&self.sub_rows)
+            .computation_time(self.estimator.estimate(), avail);
+
+        // ---- dispatch ----
+        let mut expected = 0usize;
+        for &n in avail {
+            let tasks = assignment.tasks_for(n);
+            if tasks.is_empty() {
+                continue;
+            }
+            let straggle = stragglers
+                .iter()
+                .find(|&&(m, _)| m == n)
+                .map(|&(_, mode)| mode);
+            // A dead worker (channel closed — backend init failure or
+            // panic) is tolerated like a straggler: redundancy or the
+            // coverage timeout decides the step's fate, not the dispatch.
+            match cluster.send(
+                n,
+                WorkOrder {
+                    step,
+                    w: Arc::clone(w),
+                    tasks,
+                    row_cost_ns: self.cfg.row_cost_ns,
+                    straggle,
+                },
+            ) {
+                Ok(()) => expected += 1,
+                Err(e) => {
+                    crate::log_warn!("step {step}: dispatch to worker {n} failed: {e}");
+                }
+            }
+        }
+        if expected == 0 {
+            return Err(Error::infeasible("no worker received any task"));
+        }
+
+        // ---- collect until coverage ----
+        let mut y = vec![0.0f32; self.q];
+        let mut covered = vec![false; self.q];
+        let mut missing = self.q;
+        let mut reporters = Vec::new();
+        let mut measurements: Vec<(usize, f64)> = Vec::new();
+        let deadline = Instant::now() + self.cfg.recovery_timeout;
+
+        while missing > 0 {
+            let now = Instant::now();
+            if now >= deadline {
+                return Err(Error::Cluster(format!(
+                    "step {step}: coverage timeout with {missing} rows missing \
+                     ({}/{} reports)",
+                    reporters.len(),
+                    expected
+                )));
+            }
+            match cluster.recv_timeout(deadline - now) {
+                Ok(ToMaster::Report(r)) => {
+                    if r.step != step {
+                        continue; // stale report from a previous step
+                    }
+                    for seg in &r.segments {
+                        debug_assert_eq!(seg.values.len(), seg.rows.len());
+                        for (i, row) in (seg.rows.lo..seg.rows.hi).enumerate() {
+                            if !covered[row] {
+                                covered[row] = true;
+                                missing -= 1;
+                            }
+                            y[row] = seg.values[i];
+                        }
+                    }
+                    if let Some(v) = r.measured_speed {
+                        measurements.push((r.worker, v));
+                    }
+                    reporters.push(r.worker);
+                }
+                Ok(ToMaster::Failed { worker, error, .. }) => {
+                    crate::log_warn!("worker {worker} failed in step {step}: {error}");
+                }
+                Err(_) => {
+                    return Err(Error::Cluster(format!(
+                        "step {step}: coverage timeout with {missing} rows missing"
+                    )));
+                }
+            }
+        }
+
+        // ---- speed update (Algorithm 1 line 4, next step's estimate) ----
+        self.estimator.update_all(&measurements);
+
+        Ok(StepOutcome {
+            y,
+            reporters,
+            wall: t0.elapsed(),
+            solve,
+            predicted_c,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::types::AssignPolicy;
+    use crate::linalg::partition::submatrix_ranges;
+    use crate::linalg::{gen, Matrix};
+    use crate::placement::PlacementKind;
+    use crate::runtime::BackendSpec;
+    use crate::sched::worker::{WorkerConfig, WorkerStorage};
+
+    fn build(q: usize, speeds: &[f64], policy: AssignPolicy, s: usize) -> (Master, Cluster, Arc<Matrix>) {
+        let n = speeds.len();
+        let placement = Placement::build(PlacementKind::Cyclic, n, n, 3).unwrap();
+        let sub_ranges = submatrix_ranges(q, n).unwrap();
+        let matrix = Arc::new(gen::random_dense(q, q, 9));
+        let ranges = Arc::new(sub_ranges.clone());
+        let configs: Vec<WorkerConfig> = (0..n)
+            .map(|id| WorkerConfig {
+                id,
+                backend: BackendSpec::Host,
+                speed: speeds[id],
+                tile_rows: 16,
+                storage: WorkerStorage {
+                    matrix: Arc::clone(&matrix),
+                    sub_ranges: Arc::clone(&ranges),
+                },
+            })
+            .collect();
+        let cluster = Cluster::spawn(configs).unwrap();
+        let master = Master::new(MasterConfig {
+            placement,
+            sub_ranges,
+            params: SolveParams::with_stragglers(s),
+            policy,
+            gamma: 0.5,
+            initial_speeds: speeds.to_vec(),
+            row_cost_ns: 0,
+            recovery_timeout: Duration::from_secs(10),
+        })
+        .unwrap();
+        (master, cluster, matrix)
+    }
+
+    fn oracle_y(matrix: &Matrix, w: &[f32]) -> Vec<f32> {
+        matrix.matvec(w).unwrap()
+    }
+
+    #[test]
+    fn step_assembles_exact_product() {
+        let speeds = vec![1.0, 2.0, 4.0, 8.0, 16.0, 32.0];
+        let (mut master, cluster, matrix) = build(60, &speeds, AssignPolicy::Heterogeneous, 0);
+        let w = Arc::new(vec![0.25f32; 60]);
+        let avail: Vec<usize> = (0..6).collect();
+        let out = master.step(&cluster, 0, &w, &avail, &[]).unwrap();
+        let want = oracle_y(&matrix, &w);
+        for (a, e) in out.y.iter().zip(&want) {
+            assert!((a - e).abs() < 1e-4, "{a} vs {e}");
+        }
+        assert!(!out.reporters.is_empty());
+        assert!(out.predicted_c > 0.0);
+        cluster.shutdown();
+    }
+
+    #[test]
+    fn step_with_preempted_machines() {
+        let speeds = vec![1.0; 6];
+        let (mut master, cluster, matrix) = build(60, &speeds, AssignPolicy::Heterogeneous, 0);
+        let w = Arc::new(vec![1.0f32; 60]);
+        // cyclic J=3 placement tolerates 2 preemptions for S=0
+        let avail = vec![0, 2, 3, 5];
+        let out = master.step(&cluster, 1, &w, &avail, &[]).unwrap();
+        let want = oracle_y(&matrix, &w);
+        for (a, e) in out.y.iter().zip(&want) {
+            assert!((a - e).abs() < 1e-3);
+        }
+        assert!(out.reporters.iter().all(|r| avail.contains(r)));
+        cluster.shutdown();
+    }
+
+    #[test]
+    fn straggler_tolerant_step_recovers_with_drop() {
+        let speeds = vec![1.0; 6];
+        let (mut master, cluster, matrix) = build(60, &speeds, AssignPolicy::Heterogeneous, 1);
+        let w = Arc::new(vec![0.5f32; 60]);
+        let avail: Vec<usize> = (0..6).collect();
+        let out = master
+            .step(&cluster, 2, &w, &avail, &[(3, StraggleMode::Drop)])
+            .unwrap();
+        assert!(!out.reporters.contains(&3));
+        let want = oracle_y(&matrix, &w);
+        for (a, e) in out.y.iter().zip(&want) {
+            assert!((a - e).abs() < 1e-3);
+        }
+        cluster.shutdown();
+    }
+
+    #[test]
+    fn unprotected_step_times_out_under_drop() {
+        let speeds = vec![1.0; 6];
+        let (mut master, cluster, _) = build(60, &speeds, AssignPolicy::Heterogeneous, 0);
+        master.cfg.recovery_timeout = Duration::from_millis(400);
+        let w = Arc::new(vec![0.5f32; 60]);
+        let avail: Vec<usize> = (0..6).collect();
+        let r = master.step(&cluster, 3, &w, &avail, &[(0, StraggleMode::Drop)]);
+        assert!(r.is_err(), "S=0 cannot survive a dropped worker");
+        cluster.shutdown();
+    }
+
+    #[test]
+    fn speed_estimates_adapt_from_reports() {
+        let speeds = vec![0.5, 4.0, 1.0, 1.0, 1.0, 1.0];
+        let n = speeds.len();
+        let placement = Placement::build(PlacementKind::Cyclic, n, n, 3).unwrap();
+        let q = 120;
+        let sub_ranges = submatrix_ranges(q, n).unwrap();
+        let matrix = Arc::new(gen::random_dense(q, q, 11));
+        let ranges = Arc::new(sub_ranges.clone());
+        let configs: Vec<WorkerConfig> = (0..n)
+            .map(|id| WorkerConfig {
+                id,
+                backend: BackendSpec::Host,
+                speed: speeds[id],
+                tile_rows: 16,
+                storage: WorkerStorage {
+                    matrix: Arc::clone(&matrix),
+                    sub_ranges: Arc::clone(&ranges),
+                },
+            })
+            .collect();
+        let cluster = Cluster::spawn(configs).unwrap();
+        // master starts with a WRONG uniform prior and must learn
+        let mut master = Master::new(MasterConfig {
+            placement,
+            sub_ranges,
+            params: SolveParams::default(),
+            policy: AssignPolicy::Heterogeneous,
+            gamma: 0.6,
+            initial_speeds: vec![],
+            row_cost_ns: 300_000, // 0.3ms/row → measurable ratios
+            recovery_timeout: Duration::from_secs(20),
+        })
+        .unwrap();
+        let w = Arc::new(vec![0.1f32; q]);
+        let avail: Vec<usize> = (0..n).collect();
+        for step in 0..6 {
+            master.step(&cluster, step, &w, &avail, &[]).unwrap();
+        }
+        let est = master.speed_estimate();
+        // measured units are sub-matrices/sec; only ratios matter
+        let ratio = est[1] / est[0];
+        assert!(
+            ratio > 3.0,
+            "estimator did not learn the 8x speed gap: {est:?}"
+        );
+        cluster.shutdown();
+    }
+
+    #[test]
+    fn uniform_policy_ignores_estimates() {
+        let speeds = vec![1.0, 32.0, 1.0, 1.0, 1.0, 1.0];
+        let (master, cluster, _) = build(60, &speeds, AssignPolicy::Uniform, 0);
+        let a = master.plan(&(0..6).collect::<Vec<_>>()).unwrap();
+        let rows: Vec<usize> = (0..6).map(|n| a.rows_for(n)).collect();
+        let spread = rows.iter().max().unwrap() - rows.iter().min().unwrap();
+        assert!(spread <= 6, "uniform policy skewed: {rows:?}");
+        cluster.shutdown();
+    }
+}

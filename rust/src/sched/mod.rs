@@ -1,0 +1,34 @@
+//! The elastic coordinator — the paper's Algorithm 1.
+//!
+//! A master thread drives `T` computation steps. Each step it:
+//!
+//! 1. reads the availability set `N_t` from an [`elastic::ElasticityTrace`],
+//! 2. re-solves the computation assignment for the current speed estimates
+//!    (`optim::build_assignment` — LP + filling algorithm),
+//! 3. ships `(w_t, tasks)` to the available workers ([`protocol`]),
+//! 4. waits until the received reports *cover* every row (at most
+//!    `N_t − S` workers needed by construction),
+//! 5. assembles `y_t = X w_t`, normalizes, and
+//! 6. updates the per-machine speed estimates with an EWMA
+//!    ([`speed::SpeedEstimator`], Algorithm 1 line 4) from the measured
+//!    speeds the workers report (line 14).
+//!
+//! Workers are OS threads with a per-machine speed *throttle* simulating
+//! the paper's heterogeneous EC2 VMs (DESIGN.md §3), and a
+//! [`straggler::StragglerInjector`] can mark workers as dropped/slow per
+//! step (Fig. 4 bottom).
+
+pub mod cluster;
+pub mod elastic;
+pub mod master;
+pub mod protocol;
+pub mod sim;
+pub mod speed;
+pub mod straggler;
+pub mod worker;
+
+pub use cluster::Cluster;
+pub use elastic::ElasticityTrace;
+pub use master::{Master, RunResult};
+pub use speed::SpeedEstimator;
+pub use straggler::StragglerInjector;

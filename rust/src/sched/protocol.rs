@@ -1,0 +1,98 @@
+//! Master ↔ worker message types (in-process transport over mpsc).
+//!
+//! The data plane stays cheap: the iterate `w_t` is shared via `Arc`, and
+//! workers return only their computed row segments (global row ids), so a
+//! step moves `O(q)` floats, not `O(q·J)`.
+
+use std::sync::Arc;
+
+use crate::linalg::partition::RowRange;
+use crate::optim::Task;
+
+use super::straggler::StraggleMode;
+
+/// One step's work for one worker.
+#[derive(Debug, Clone)]
+pub struct WorkOrder {
+    pub step: usize,
+    /// The iterate `w_t` (shared, read-only).
+    pub w: Arc<Vec<f32>>,
+    /// Assigned tasks (sub-matrix-local row ranges).
+    pub tasks: Vec<Task>,
+    /// Speed-throttle target: ns per row at speed 1.0 (0 ⇒ no throttle).
+    pub row_cost_ns: u64,
+    /// Straggler instruction injected by the master's chaos layer.
+    pub straggle: Option<StraggleMode>,
+}
+
+/// One computed segment: global rows `[rows.lo, rows.hi)` of `y`.
+#[derive(Debug, Clone)]
+pub struct Segment {
+    pub rows: RowRange,
+    pub values: Vec<f32>,
+}
+
+/// A worker's report for one step.
+#[derive(Debug)]
+pub struct WorkerReport {
+    pub worker: usize,
+    pub step: usize,
+    /// Computed segments in *global* row coordinates.
+    pub segments: Vec<Segment>,
+    /// Measured speed `ν[n] = μ[n]/(τ₂−τ₁)` in sub-matrix units/s
+    /// (Algorithm 1 line 14); `None` when no work was assigned.
+    pub measured_speed: Option<f64>,
+    /// Worker-side elapsed time.
+    pub elapsed: std::time::Duration,
+}
+
+/// Master → worker control/data messages.
+#[derive(Debug)]
+pub enum ToWorker {
+    Work(WorkOrder),
+    Shutdown,
+}
+
+/// Worker → master messages.
+#[derive(Debug)]
+pub enum ToMaster {
+    Report(WorkerReport),
+    /// A worker died (panic or backend failure) — failure injection path.
+    Failed { worker: usize, step: usize, error: String },
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn segment_carries_global_rows() {
+        let s = Segment {
+            rows: RowRange::new(100, 104),
+            values: vec![1.0; 4],
+        };
+        assert_eq!(s.rows.len(), s.values.len());
+    }
+
+    #[test]
+    fn work_order_shares_iterate() {
+        let w = Arc::new(vec![0.5f32; 8]);
+        let o1 = WorkOrder {
+            step: 0,
+            w: Arc::clone(&w),
+            tasks: vec![],
+            row_cost_ns: 0,
+            straggle: None,
+        };
+        let o2 = WorkOrder {
+            step: 0,
+            w: Arc::clone(&w),
+            tasks: vec![],
+            row_cost_ns: 0,
+            straggle: None,
+        };
+        assert_eq!(Arc::strong_count(&w), 3);
+        drop((o1, o2));
+        assert_eq!(Arc::strong_count(&w), 1);
+    }
+}

@@ -1,0 +1,216 @@
+//! Step-synchronous cluster simulator (virtual time, no threads).
+//!
+//! The real system ([`super::master`]) is step-synchronous by construction
+//! — one assignment, one barrier, one combine per step — so a faithful
+//! simulator needs no event queue: per step it solves the assignment with
+//! the master's *estimated* speeds, realizes the step time against the
+//! *true* (drifting, noisy) speeds, and feeds measurements back into the
+//! EWMA. This makes sweeps tractable that threads cannot reach (hundreds
+//! of machines × thousands of steps × policy grid), used by
+//! `benches/ablation_scale.rs`.
+
+use crate::config::types::AssignPolicy;
+use crate::error::Result;
+use crate::optim::{self, SolveParams};
+use crate::placement::Placement;
+use crate::util::Rng;
+
+use super::speed::SpeedEstimator;
+
+/// Simulator parameters.
+#[derive(Debug, Clone)]
+pub struct SimParams {
+    pub placement: Placement,
+    /// True base speeds (sub-matrix units / time).
+    pub true_speeds: Vec<f64>,
+    pub params: SolveParams,
+    pub policy: AssignPolicy,
+    pub gamma: f64,
+    pub steps: usize,
+    /// Per-step multiplicative measurement noise half-width (e.g. 0.2 ⇒
+    /// measurements in ×[0.8, 1.2]).
+    pub measurement_noise: f64,
+    /// Per-step probability a machine's true speed is re-drawn ×[0.5, 2).
+    pub drift_prob: f64,
+    /// Per-step preemption / arrival probabilities.
+    pub preempt: f64,
+    pub arrive: f64,
+    pub min_available: usize,
+    pub seed: u64,
+}
+
+/// Aggregate simulation output.
+#[derive(Debug)]
+pub struct SimResult {
+    /// Realized per-step times (virtual units), skipped steps excluded.
+    pub step_times: Vec<f64>,
+    /// Steps skipped as infeasible.
+    pub skipped: usize,
+    /// Mean wall-clock of the assignment solve (real seconds).
+    pub mean_solve_s: f64,
+    /// Total virtual time.
+    pub total_time: f64,
+}
+
+/// Run the simulation.
+pub fn simulate(p: &SimParams) -> Result<SimResult> {
+    let n = p.placement.machines();
+    assert_eq!(p.true_speeds.len(), n);
+    let mut rng = Rng::new(p.seed);
+    let mut truth = p.true_speeds.clone();
+    let mut est = SpeedEstimator::uniform(p.gamma, n);
+    let mut up = vec![true; n];
+    let mut trace = super::elastic::ElasticityTrace::bernoulli(
+        n,
+        p.preempt,
+        p.arrive,
+        p.min_available,
+        p.seed ^ 0xE1A5,
+    );
+    let _ = &mut up;
+
+    let mut step_times = Vec::with_capacity(p.steps);
+    let mut skipped = 0usize;
+    let mut solve_total = 0.0f64;
+    let mut solves = 0usize;
+
+    for _ in 0..p.steps {
+        // drift
+        for t in truth.iter_mut() {
+            if rng.chance(p.drift_prob) {
+                *t *= rng.range_f64(0.5, 2.0);
+            }
+        }
+        let avail = if p.preempt > 0.0 || p.arrive > 0.0 {
+            trace.next_step()
+        } else {
+            (0..n).collect()
+        };
+        if p.placement.check_feasible(&avail, p.params.stragglers).is_err() {
+            skipped += 1;
+            continue;
+        }
+
+        let t0 = std::time::Instant::now();
+        let load = match p.policy {
+            AssignPolicy::Heterogeneous => {
+                optim::solve_load_matrix(&p.placement, &avail, est.estimate(), &p.params)?.load
+            }
+            AssignPolicy::Uniform | AssignPolicy::CyclicHomogeneous => {
+                optim::homogeneous::uniform_load_matrix(
+                    &p.placement,
+                    &avail,
+                    p.params.stragglers,
+                )?
+            }
+        };
+        solve_total += t0.elapsed().as_secs_f64();
+        solves += 1;
+
+        // realized step time under TRUE speeds
+        let step_time = load.computation_time(&truth, &avail);
+        step_times.push(step_time);
+
+        // measurements: per available machine with work, noisy true speed
+        for &m in &avail {
+            if load.machine_load(m) > 0.0 {
+                let noise = 1.0 + p.measurement_noise * (rng.f64() * 2.0 - 1.0);
+                est.update(m, truth[m] * noise);
+            }
+        }
+    }
+    let total_time = step_times.iter().sum();
+    Ok(SimResult {
+        total_time,
+        skipped,
+        mean_solve_s: if solves > 0 { solve_total / solves as f64 } else { 0.0 },
+        step_times,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::placement::PlacementKind;
+
+    fn base(policy: AssignPolicy, n: usize) -> SimParams {
+        SimParams {
+            placement: Placement::build(PlacementKind::Cyclic, n, n, 3).unwrap(),
+            true_speeds: (0..n).map(|i| 1.0 + (i % 4) as f64).collect(),
+            params: SolveParams::default(),
+            policy,
+            gamma: 0.5,
+            steps: 200,
+            measurement_noise: 0.1,
+            drift_prob: 0.0,
+            preempt: 0.0,
+            arrive: 0.0,
+            min_available: 3,
+            seed: 9,
+        }
+    }
+
+    #[test]
+    fn hetero_beats_uniform_in_simulation() {
+        let h = simulate(&base(AssignPolicy::Heterogeneous, 6)).unwrap();
+        let u = simulate(&base(AssignPolicy::Uniform, 6)).unwrap();
+        assert!(
+            h.total_time < u.total_time * 0.95,
+            "hetero {} vs uniform {}",
+            h.total_time,
+            u.total_time
+        );
+    }
+
+    #[test]
+    fn converges_to_near_oracle_without_drift() {
+        let p = base(AssignPolicy::Heterogeneous, 6);
+        let r = simulate(&p).unwrap();
+        // oracle time for this placement/speeds
+        let avail: Vec<usize> = (0..6).collect();
+        let oracle = optim::solve_load_matrix(
+            &p.placement,
+            &avail,
+            &p.true_speeds,
+            &p.params,
+        )
+        .unwrap()
+        .time;
+        // late steps should be within noise of oracle
+        let tail: f64 =
+            r.step_times[150..].iter().sum::<f64>() / (r.step_times.len() - 150) as f64;
+        assert!(
+            tail < oracle * 1.25,
+            "tail mean {tail} vs oracle {oracle}"
+        );
+    }
+
+    #[test]
+    fn scales_to_many_machines() {
+        let mut p = base(AssignPolicy::Heterogeneous, 30);
+        p.steps = 20;
+        let r = simulate(&p).unwrap();
+        assert_eq!(r.step_times.len(), 20);
+        assert!(r.mean_solve_s < 0.5, "solve too slow: {}", r.mean_solve_s);
+    }
+
+    #[test]
+    fn elastic_simulation_skips_infeasible() {
+        let mut p = base(AssignPolicy::Heterogeneous, 6);
+        p.preempt = 0.5;
+        p.arrive = 0.3;
+        p.min_available = 1; // may go infeasible for cyclic J=3
+        let r = simulate(&p).unwrap();
+        assert_eq!(r.step_times.len() + r.skipped, 200);
+    }
+
+    #[test]
+    fn drift_is_tracked() {
+        let mut p = base(AssignPolicy::Heterogeneous, 6);
+        p.drift_prob = 0.05;
+        p.steps = 500;
+        let r = simulate(&p).unwrap();
+        assert_eq!(r.step_times.len(), 500);
+        assert!(r.total_time.is_finite());
+    }
+}

@@ -1,0 +1,146 @@
+//! Speed estimation (Algorithm 1 lines 1, 4, 14) and speed profiles.
+//!
+//! The master never knows true speeds; it maintains `ŝ` and updates it
+//! each step from worker-measured `ν[n] = μ[n]/(τ₂−τ₁)` with
+//! `ŝ ← γ·ν + (1−γ)·ŝ`. Machines that did not report (preempted or
+//! straggling) keep their previous estimate.
+
+/// EWMA speed estimator.
+#[derive(Debug, Clone)]
+pub struct SpeedEstimator {
+    gamma: f64,
+    estimate: Vec<f64>,
+}
+
+impl SpeedEstimator {
+    /// Start from an initial guess `ŝ₀` (Algorithm 1 line 1 initializes all
+    /// workers to the same prior).
+    pub fn new(gamma: f64, initial: Vec<f64>) -> Self {
+        assert!((0.0..=1.0).contains(&gamma), "gamma {gamma} not in [0,1]");
+        assert!(initial.iter().all(|&s| s > 0.0), "speeds must be positive");
+        SpeedEstimator {
+            gamma,
+            estimate: initial,
+        }
+    }
+
+    /// Uniform prior of `1.0` for `n` machines.
+    pub fn uniform(gamma: f64, n: usize) -> Self {
+        Self::new(gamma, vec![1.0; n])
+    }
+
+    /// Current estimate `ŝ`.
+    pub fn estimate(&self) -> &[f64] {
+        &self.estimate
+    }
+
+    /// Fold in one measurement (Algorithm 1 line 4).
+    pub fn update(&mut self, machine: usize, measured: f64) {
+        if measured > 0.0 && measured.is_finite() {
+            let s = &mut self.estimate[machine];
+            *s = self.gamma * measured + (1.0 - self.gamma) * *s;
+        }
+    }
+
+    /// Fold in a batch of `(machine, ν)` measurements.
+    pub fn update_all(&mut self, measurements: &[(usize, f64)]) {
+        for &(n, v) in measurements {
+            self.update(n, v);
+        }
+    }
+}
+
+/// EC2-like speed profiles (DESIGN.md §3). The paper's testbed mixes 3×
+/// t2.large and 3× t2.xlarge; measured throughputs differ ~2× between the
+/// classes plus significant within-class variation (\[4\]'s observation).
+pub fn ec2_mixed_profile(n: usize) -> Vec<f64> {
+    // Interleave large (≈1.0) and xlarge (≈2.2) instances with ±15 %
+    // deterministic jitter. Interleaving matters: under the repetition
+    // placement the replica groups are consecutive machines, and a real
+    // EC2 allocation mixes instance classes within a group — that
+    // within-group heterogeneity is precisely what the paper's assignment
+    // exploits.
+    (0..n)
+        .map(|i| {
+            let base = if i % 2 == 0 { 1.0 } else { 2.2 };
+            let jitter = 1.0 + 0.15 * (((i * 7 + 3) as f64) * 2.399).sin();
+            base * jitter
+        })
+        .collect()
+}
+
+/// The paper's Fig. 1 example speeds, extended/truncated to `n`.
+pub fn geometric_profile(n: usize) -> Vec<f64> {
+    (0..n).map(|i| 2f64.powi(i as i32 % 6)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ewma_converges_to_truth() {
+        let mut e = SpeedEstimator::uniform(0.5, 1);
+        for _ in 0..40 {
+            e.update(0, 4.0);
+        }
+        assert!((e.estimate()[0] - 4.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn gamma_zero_never_moves() {
+        let mut e = SpeedEstimator::new(0.0, vec![2.0]);
+        e.update(0, 100.0);
+        assert_eq!(e.estimate()[0], 2.0);
+    }
+
+    #[test]
+    fn gamma_one_tracks_instantly() {
+        let mut e = SpeedEstimator::new(1.0, vec![2.0]);
+        e.update(0, 7.0);
+        assert_eq!(e.estimate()[0], 7.0);
+    }
+
+    #[test]
+    fn missing_reports_keep_estimate() {
+        let mut e = SpeedEstimator::new(0.5, vec![1.0, 1.0]);
+        e.update_all(&[(0, 3.0)]);
+        assert!(e.estimate()[0] > 1.0);
+        assert_eq!(e.estimate()[1], 1.0);
+    }
+
+    #[test]
+    fn rejects_garbage_measurements() {
+        let mut e = SpeedEstimator::new(0.5, vec![1.0]);
+        e.update(0, -1.0);
+        e.update(0, f64::NAN);
+        e.update(0, f64::INFINITY);
+        assert_eq!(e.estimate()[0], 1.0);
+    }
+
+    #[test]
+    fn profiles_have_expected_shape() {
+        let p = ec2_mixed_profile(6);
+        assert_eq!(p.len(), 6);
+        assert!(p.iter().all(|&s| s > 0.0));
+        // interleaved: every xlarge (odd) is faster than every large (even)
+        for odd in [1, 3, 5] {
+            for even in [0, 2, 4] {
+                assert!(p[odd] > p[even], "{p:?}");
+            }
+        }
+        let g = geometric_profile(6);
+        assert_eq!(g, vec![1.0, 2.0, 4.0, 8.0, 16.0, 32.0]);
+    }
+
+    #[test]
+    fn tracks_drifting_speed() {
+        let mut e = SpeedEstimator::new(0.5, vec![1.0]);
+        // speed drifts up; estimate follows within a few steps
+        for step in 0..30 {
+            let truth = 1.0 + step as f64 * 0.1;
+            e.update(0, truth);
+        }
+        assert!((e.estimate()[0] - 3.9).abs() < 0.2);
+    }
+}

@@ -1,0 +1,126 @@
+//! Straggler injection (Fig. 4 bottom: "2 stragglers each iteration").
+//!
+//! A straggler is a machine that accepted work but fails to report in
+//! time. The injector picks `k` victims uniformly from the available set
+//! each step; victims either never report (`Drop`) or report after a
+//! multiplicative slowdown (`Slow`). The master must still recover `y_t`
+//! from the remaining reports whenever the assignment tolerates `S ≥ k`.
+
+use crate::util::Rng;
+
+/// What an injected straggler does with its work order.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum StraggleMode {
+    /// Never report this step.
+    Drop,
+    /// Report, but `factor`× slower than its throttle target.
+    Slow(f64),
+}
+
+/// Per-step straggler chooser.
+#[derive(Debug, Clone)]
+pub struct StragglerInjector {
+    per_step: usize,
+    mode: StraggleMode,
+    rng: Rng,
+    /// When set, the same machines straggle every step (the "overloaded
+    /// instance" reading of the paper's EC2 stragglers) instead of fresh
+    /// uniform victims per step.
+    fixed: Option<Vec<usize>>,
+}
+
+impl StragglerInjector {
+    pub fn none() -> Self {
+        StragglerInjector {
+            per_step: 0,
+            mode: StraggleMode::Drop,
+            rng: Rng::new(0),
+            fixed: None,
+        }
+    }
+
+    pub fn new(per_step: usize, mode: StraggleMode, seed: u64) -> Self {
+        StragglerInjector {
+            per_step,
+            mode,
+            rng: Rng::new(seed),
+            fixed: None,
+        }
+    }
+
+    /// The same `victims` straggle every step.
+    pub fn fixed(victims: Vec<usize>, mode: StraggleMode) -> Self {
+        StragglerInjector {
+            per_step: victims.len(),
+            mode,
+            rng: Rng::new(0),
+            fixed: Some(victims),
+        }
+    }
+
+    pub fn per_step(&self) -> usize {
+        self.per_step
+    }
+
+    /// Choose victims for this step: a map `machine → mode` (victims only).
+    pub fn choose(&mut self, avail: &[usize]) -> Vec<(usize, StraggleMode)> {
+        if let Some(victims) = &self.fixed {
+            return victims
+                .iter()
+                .filter(|v| avail.contains(v))
+                .map(|&v| (v, self.mode))
+                .collect();
+        }
+        let k = self.per_step.min(avail.len().saturating_sub(1));
+        if k == 0 {
+            return Vec::new();
+        }
+        let picks = self.rng.sample_indices(avail.len(), k);
+        picks.into_iter().map(|i| (avail[i], self.mode)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn none_injects_nothing() {
+        let mut inj = StragglerInjector::none();
+        assert!(inj.choose(&[0, 1, 2]).is_empty());
+    }
+
+    #[test]
+    fn chooses_k_distinct_victims_from_avail() {
+        let mut inj = StragglerInjector::new(2, StraggleMode::Drop, 3);
+        for _ in 0..50 {
+            let v = inj.choose(&[1, 3, 5, 7, 9]);
+            assert_eq!(v.len(), 2);
+            let mut ms: Vec<usize> = v.iter().map(|&(m, _)| m).collect();
+            ms.sort_unstable();
+            ms.dedup();
+            assert_eq!(ms.len(), 2);
+            assert!(ms.iter().all(|m| [1, 3, 5, 7, 9].contains(m)));
+        }
+    }
+
+    #[test]
+    fn never_stragglers_everyone() {
+        // keeps at least one non-straggler even if per_step >= |avail|
+        let mut inj = StragglerInjector::new(5, StraggleMode::Drop, 4);
+        let v = inj.choose(&[0, 1, 2]);
+        assert_eq!(v.len(), 2);
+    }
+
+    #[test]
+    fn victims_vary_across_steps() {
+        let mut inj = StragglerInjector::new(1, StraggleMode::Drop, 9);
+        let mut seen = std::collections::BTreeSet::new();
+        for _ in 0..60 {
+            for (m, _) in inj.choose(&[0, 1, 2, 3, 4, 5]) {
+                seen.insert(m);
+            }
+        }
+        assert!(seen.len() >= 4, "victims not spread: {seen:?}");
+    }
+}

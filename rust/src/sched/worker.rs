@@ -1,0 +1,304 @@
+//! Worker VM: owns (a view of) its stored sub-matrices, executes assigned
+//! row tiles through a [`crate::runtime::Backend`], throttles to its
+//! simulated speed, and reports measured speed back (Algorithm 1 lines
+//! 8–15).
+//!
+//! The speed throttle is the EC2-heterogeneity substitute (DESIGN.md §3):
+//! after computing its tiles, a worker sleeps up to
+//! `assigned_rows · row_cost_ns / speed` so wall-clock per step reflects
+//! the configured speed ratios. With `row_cost_ns = 0` the throttle is off
+//! and true compute speed shows through.
+
+use std::sync::mpsc::{Receiver, Sender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::linalg::partition::{RowRange, TilePlan};
+use crate::linalg::Matrix;
+use crate::runtime::BackendSpec;
+
+use super::protocol::{Segment, ToMaster, ToWorker, WorkOrder, WorkerReport};
+use super::straggler::StraggleMode;
+
+/// Read-only storage view a worker holds.
+///
+/// The full matrix is shared host RAM (an `Arc`); each worker only ever
+/// reads the rows of its placed sub-matrices, which is exactly the uncoded
+/// USEC storage model without duplicating gigabytes per simulated VM.
+#[derive(Clone)]
+pub struct WorkerStorage {
+    pub matrix: Arc<Matrix>,
+    /// Global row range of each sub-matrix `X_g`.
+    pub sub_ranges: Arc<Vec<RowRange>>,
+}
+
+/// Static per-worker configuration.
+#[derive(Clone)]
+pub struct WorkerConfig {
+    pub id: usize,
+    pub backend: BackendSpec,
+    /// True speed multiplier (the master only ever sees estimates).
+    pub speed: f64,
+    /// Execution-tile height (must match PJRT artifacts when used).
+    pub tile_rows: usize,
+    pub storage: WorkerStorage,
+}
+
+/// Worker thread body. Runs until `Shutdown` or channel close.
+pub fn run_worker(cfg: WorkerConfig, rx: Receiver<ToWorker>, tx: Sender<ToMaster>) {
+    let backend = match cfg.backend.instantiate() {
+        Ok(b) => b,
+        Err(e) => {
+            let _ = tx.send(ToMaster::Failed {
+                worker: cfg.id,
+                step: 0,
+                error: format!("backend init: {e}"),
+            });
+            return;
+        }
+    };
+    let tile = TilePlan::new(cfg.tile_rows);
+    while let Ok(msg) = rx.recv() {
+        match msg {
+            ToWorker::Shutdown => break,
+            ToWorker::Work(order) => {
+                let step = order.step;
+                match execute_order(&cfg, &backend, &tile, &order) {
+                    Ok(Some(report)) => {
+                        let _ = tx.send(ToMaster::Report(report));
+                    }
+                    Ok(None) => {} // injected Drop straggler: stay silent
+                    Err(e) => {
+                        let _ = tx.send(ToMaster::Failed {
+                            worker: cfg.id,
+                            step,
+                            error: e.to_string(),
+                        });
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Execute one work order; `Ok(None)` means an injected Drop straggler.
+fn execute_order(
+    cfg: &WorkerConfig,
+    backend: &crate::runtime::Backend,
+    tile: &TilePlan,
+    order: &WorkOrder,
+) -> crate::error::Result<Option<WorkerReport>> {
+    let start = Instant::now();
+    let cols = cfg.storage.matrix.cols();
+    let mut segments = Vec::new();
+    let mut assigned_rows = 0usize;
+    let mut mu = 0.0f64; // load in sub-matrix units
+
+    for task in &order.tasks {
+        let sub = cfg.storage.sub_ranges[task.g];
+        let global = task.rows.offset(sub.lo);
+        debug_assert!(global.hi <= sub.hi, "task overruns sub-matrix");
+        assigned_rows += global.len();
+        mu += task.rows.len() as f64 / sub.len() as f64;
+        for t in tile.plan(global) {
+            let x = cfg.storage.matrix.row_block(t.lo, t.hi);
+            let y = backend.matvec_tile(x, t.len(), cols, &order.w)?;
+            segments.push(Segment { rows: t, values: y });
+        }
+    }
+
+    // speed throttle: emulate a machine of speed `cfg.speed`
+    let mut target_ns = if cfg.speed > 0.0 {
+        (assigned_rows as f64 * order.row_cost_ns as f64 / cfg.speed) as u64
+    } else {
+        0
+    };
+    let straggle = order.straggle;
+    if let Some(StraggleMode::Slow(f)) = straggle {
+        target_ns = (target_ns as f64 * f) as u64;
+    }
+    let elapsed = start.elapsed();
+    let target = Duration::from_nanos(target_ns);
+    if elapsed < target {
+        std::thread::sleep(target - elapsed);
+    }
+
+    if matches!(straggle, Some(StraggleMode::Drop)) {
+        return Ok(None);
+    }
+
+    let total = start.elapsed();
+    let measured_speed = if assigned_rows > 0 && total.as_secs_f64() > 0.0 {
+        Some(mu / total.as_secs_f64())
+    } else {
+        None
+    };
+    Ok(Some(WorkerReport {
+        worker: cfg.id,
+        step: order.step,
+        segments,
+        measured_speed,
+        elapsed: total,
+    }))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::gen;
+    use crate::optim::Task;
+    use std::sync::mpsc;
+
+    fn storage(q: usize, g: usize) -> WorkerStorage {
+        let m = gen::random_dense(q, q, 5);
+        let ranges = crate::linalg::partition::submatrix_ranges(q, g).unwrap();
+        WorkerStorage {
+            matrix: Arc::new(m),
+            sub_ranges: Arc::new(ranges),
+        }
+    }
+
+    fn order(tasks: Vec<Task>, q: usize, straggle: Option<StraggleMode>) -> WorkOrder {
+        WorkOrder {
+            step: 1,
+            w: Arc::new(vec![0.1f32; q]),
+            tasks,
+            row_cost_ns: 0,
+            straggle,
+        }
+    }
+
+    fn spawn_worker(cfg: WorkerConfig) -> (Sender<ToWorker>, Receiver<ToMaster>) {
+        let (tx_w, rx_w) = mpsc::channel();
+        let (tx_m, rx_m) = mpsc::channel();
+        std::thread::spawn(move || run_worker(cfg, rx_w, tx_m));
+        (tx_w, rx_m)
+    }
+
+    fn cfg(id: usize, speed: f64) -> WorkerConfig {
+        WorkerConfig {
+            id,
+            backend: BackendSpec::Host,
+            speed,
+            tile_rows: 16,
+            storage: storage(60, 6),
+        }
+    }
+
+    #[test]
+    fn computes_assigned_rows_correctly() {
+        let c = cfg(0, 1.0);
+        let matrix = Arc::clone(&c.storage.matrix);
+        let (tx, rx) = spawn_worker(c);
+        // sub-matrix 2 covers global rows 20..30; assign local rows 3..9
+        tx.send(ToWorker::Work(order(
+            vec![Task {
+                g: 2,
+                rows: RowRange::new(3, 9),
+            }],
+            60,
+            None,
+        )))
+        .unwrap();
+        let ToMaster::Report(r) = rx.recv_timeout(Duration::from_secs(5)).unwrap() else {
+            panic!("expected report");
+        };
+        assert_eq!(r.worker, 0);
+        assert_eq!(r.step, 1);
+        let total: usize = r.segments.iter().map(|s| s.rows.len()).sum();
+        assert_eq!(total, 6);
+        // numerics: matches direct matvec on those rows
+        let w = vec![0.1f32; 60];
+        for seg in &r.segments {
+            for (i, row) in (seg.rows.lo..seg.rows.hi).enumerate() {
+                let want: f32 = matrix.row(row).iter().zip(&w).map(|(a, b)| a * b).sum();
+                assert!((seg.values[i] - want).abs() < 1e-4);
+            }
+        }
+        assert!(r.measured_speed.unwrap() > 0.0);
+        tx.send(ToWorker::Shutdown).unwrap();
+    }
+
+    #[test]
+    fn empty_order_reports_no_speed() {
+        let (tx, rx) = spawn_worker(cfg(1, 1.0));
+        tx.send(ToWorker::Work(order(vec![], 60, None))).unwrap();
+        let ToMaster::Report(r) = rx.recv_timeout(Duration::from_secs(5)).unwrap() else {
+            panic!("expected report");
+        };
+        assert!(r.segments.is_empty());
+        assert!(r.measured_speed.is_none());
+        tx.send(ToWorker::Shutdown).unwrap();
+    }
+
+    #[test]
+    fn drop_straggler_stays_silent() {
+        let (tx, rx) = spawn_worker(cfg(2, 1.0));
+        tx.send(ToWorker::Work(order(
+            vec![Task {
+                g: 0,
+                rows: RowRange::new(0, 10),
+            }],
+            60,
+            Some(StraggleMode::Drop),
+        )))
+        .unwrap();
+        assert!(rx.recv_timeout(Duration::from_millis(300)).is_err());
+        tx.send(ToWorker::Shutdown).unwrap();
+    }
+
+    #[test]
+    fn throttle_slows_reports() {
+        let mut c = cfg(3, 1.0);
+        c.speed = 0.5; // half speed
+        let (tx, rx) = spawn_worker(c);
+        let mut o = order(
+            vec![Task {
+                g: 0,
+                rows: RowRange::new(0, 10),
+            }],
+            60,
+            None,
+        );
+        o.row_cost_ns = 2_000_000; // 2ms/row at speed 1 → 40ms at 0.5
+        tx.send(ToWorker::Work(o)).unwrap();
+        let ToMaster::Report(r) = rx.recv_timeout(Duration::from_secs(5)).unwrap() else {
+            panic!("expected report");
+        };
+        assert!(
+            r.elapsed >= Duration::from_millis(35),
+            "throttle not applied: {:?}",
+            r.elapsed
+        );
+        tx.send(ToWorker::Shutdown).unwrap();
+    }
+
+    #[test]
+    fn measured_speed_tracks_throttle_ratio() {
+        // two workers with 2x speed ratio must report ~2x measured speed
+        let run = |speed: f64| {
+            let mut c = cfg(4, speed);
+            c.speed = speed;
+            let (tx, rx) = spawn_worker(c);
+            let mut o = order(
+                vec![Task {
+                    g: 1,
+                    rows: RowRange::new(0, 10),
+                }],
+                60,
+                None,
+            );
+            o.row_cost_ns = 8_000_000; // 80ms at speed 1 — dwarfs sleep jitter
+            tx.send(ToWorker::Work(o)).unwrap();
+            let ToMaster::Report(r) = rx.recv_timeout(Duration::from_secs(5)).unwrap() else {
+                panic!("expected report");
+            };
+            tx.send(ToWorker::Shutdown).unwrap();
+            r.measured_speed.unwrap()
+        };
+        let slow = run(1.0);
+        let fast = run(2.0);
+        let ratio = fast / slow;
+        assert!((1.5..2.6).contains(&ratio), "speed ratio {ratio}");
+    }
+}

@@ -1,0 +1,3 @@
+//! Test support: mini property-testing framework — see [`prop`].
+
+pub mod prop;

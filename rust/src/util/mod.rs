@@ -1,0 +1,13 @@
+//! Small self-contained utilities: PRNG, JSON, formatting, logging.
+//!
+//! The build environment is fully offline with a minimal crate set, so the
+//! usual ecosystem crates (`rand`, `serde_json`, `env_logger`) are replaced
+//! by the focused implementations in this module.
+
+pub mod benchkit;
+pub mod fmt;
+pub mod json;
+pub mod log;
+pub mod rng;
+
+pub use rng::Rng;

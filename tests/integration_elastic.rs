@@ -1,0 +1,207 @@
+//! Integration tests: the full master/worker pipeline on the host backend
+//! under elasticity, stragglers, and failure injection.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use usec::config::types::{AssignPolicy, RunConfig};
+use usec::linalg::partition::submatrix_ranges;
+use usec::linalg::gen;
+use usec::optim::SolveParams;
+use usec::placement::{Placement, PlacementKind};
+use usec::runtime::BackendSpec;
+use usec::sched::cluster::Cluster;
+use usec::sched::master::{Master, MasterConfig};
+use usec::sched::straggler::StraggleMode;
+use usec::sched::worker::{WorkerConfig, WorkerStorage};
+
+fn spawn(
+    q: usize,
+    g: usize,
+    n: usize,
+    j: usize,
+    speeds: &[f64],
+    policy: AssignPolicy,
+    s: usize,
+) -> (Master, Cluster, Arc<usec::linalg::Matrix>) {
+    let placement = Placement::build(PlacementKind::Cyclic, n, g, j).unwrap();
+    let sub_ranges = submatrix_ranges(q, g).unwrap();
+    let matrix = Arc::new(gen::random_dense(q, q, 21));
+    let ranges = Arc::new(sub_ranges.clone());
+    let configs: Vec<WorkerConfig> = (0..n)
+        .map(|id| WorkerConfig {
+            id,
+            backend: BackendSpec::Host,
+            speed: speeds[id],
+            tile_rows: 32,
+            storage: WorkerStorage {
+                matrix: Arc::clone(&matrix),
+                sub_ranges: Arc::clone(&ranges),
+            },
+        })
+        .collect();
+    let cluster = Cluster::spawn(configs).unwrap();
+    let master = Master::new(MasterConfig {
+        placement,
+        sub_ranges,
+        params: SolveParams::with_stragglers(s),
+        policy,
+        gamma: 0.5,
+        initial_speeds: speeds.to_vec(),
+        row_cost_ns: 0,
+        recovery_timeout: Duration::from_secs(15),
+    })
+    .unwrap();
+    (master, cluster, matrix)
+}
+
+#[test]
+fn many_steps_remain_exact() {
+    let speeds = vec![1.0, 3.0, 2.0, 5.0, 1.5, 4.0];
+    let (mut master, cluster, matrix) = spawn(192, 6, 6, 3, &speeds, AssignPolicy::Heterogeneous, 0);
+    let avail: Vec<usize> = (0..6).collect();
+    let mut w = Arc::new(vec![0.5f32; 192]);
+    for step in 0..20 {
+        let out = master.step(&cluster, step, &w, &avail, &[]).unwrap();
+        let want = matrix.matvec(&w).unwrap();
+        for (a, e) in out.y.iter().zip(&want) {
+            assert!((a - e).abs() < 2e-3 * (1.0 + e.abs()), "step {step}");
+        }
+        // feed a fresh normalized iterate
+        let mut next = out.y.clone();
+        usec::linalg::ops::normalize(&mut next);
+        w = Arc::new(next);
+    }
+    cluster.shutdown();
+}
+
+#[test]
+fn churn_between_steps_is_safe() {
+    // availability changes every step; results stay exact
+    let speeds = vec![1.0; 6];
+    let (mut master, cluster, matrix) = spawn(120, 6, 6, 3, &speeds, AssignPolicy::Heterogeneous, 0);
+    let w = Arc::new(vec![1.0f32; 120]);
+    let want = matrix.matvec(&w).unwrap();
+    let avail_sets: Vec<Vec<usize>> = vec![
+        (0..6).collect(),
+        vec![0, 1, 2, 3],
+        vec![1, 2, 3, 4, 5],
+        vec![0, 2, 4],     // cyclic J=3: every sub-matrix still has a replica
+        (0..6).collect(),
+    ];
+    for (step, avail) in avail_sets.iter().enumerate() {
+        let out = master.step(&cluster, step, &w, avail, &[]).unwrap();
+        for (a, e) in out.y.iter().zip(&want) {
+            assert!((a - e).abs() < 1e-3, "step {step} avail {avail:?}");
+        }
+    }
+    cluster.shutdown();
+}
+
+#[test]
+fn two_stragglers_with_s2_tolerance() {
+    let speeds = vec![2.0, 1.0, 3.0, 1.0, 2.0, 1.0];
+    let (mut master, cluster, matrix) = spawn(120, 6, 6, 3, &speeds, AssignPolicy::Heterogeneous, 2);
+    let avail: Vec<usize> = (0..6).collect();
+    let w = Arc::new(vec![0.25f32; 120]);
+    let want = matrix.matvec(&w).unwrap();
+    let out = master
+        .step(
+            &cluster,
+            0,
+            &w,
+            &avail,
+            &[(1, StraggleMode::Drop), (4, StraggleMode::Drop)],
+        )
+        .unwrap();
+    assert!(!out.reporters.contains(&1) && !out.reporters.contains(&4));
+    for (a, e) in out.y.iter().zip(&want) {
+        assert!((a - e).abs() < 1e-3);
+    }
+    cluster.shutdown();
+}
+
+#[test]
+fn slow_stragglers_delay_but_do_not_break() {
+    let speeds = vec![1.0; 6];
+    let (mut master, cluster, matrix) = spawn(60, 6, 6, 3, &speeds, AssignPolicy::Heterogeneous, 1);
+    let avail: Vec<usize> = (0..6).collect();
+    let w = Arc::new(vec![1.0f32; 60]);
+    let want = matrix.matvec(&w).unwrap();
+    // Slow straggler: with S=1 the master can finish without it
+    let out = master
+        .step(&cluster, 0, &w, &avail, &[(2, StraggleMode::Slow(50.0))])
+        .unwrap();
+    for (a, e) in out.y.iter().zip(&want) {
+        assert!((a - e).abs() < 1e-3);
+    }
+    cluster.shutdown();
+}
+
+#[test]
+fn stale_reports_from_previous_step_ignored() {
+    // a slow straggler's report for step t arrives during step t+1 and
+    // must not pollute it
+    let speeds = vec![1.0; 6];
+    let (mut master, cluster, matrix) = spawn(60, 6, 6, 3, &speeds, AssignPolicy::Heterogeneous, 1);
+    let avail: Vec<usize> = (0..6).collect();
+    let w1 = Arc::new(vec![1.0f32; 60]);
+    let w2 = Arc::new(vec![-2.0f32; 60]);
+    master
+        .step(&cluster, 0, &w1, &avail, &[(0, StraggleMode::Slow(30.0))])
+        .unwrap();
+    // step 1 runs while worker 0 may still be sleeping on step 0's order
+    let out = master.step(&cluster, 1, &w2, &avail, &[]).unwrap();
+    let want = matrix.matvec(&w2).unwrap();
+    for (a, e) in out.y.iter().zip(&want) {
+        assert!((a - e).abs() < 1e-3, "stale data leaked into step 1");
+    }
+    cluster.shutdown();
+}
+
+#[test]
+fn uniform_vs_hetero_loads_differ_under_skew() {
+    let speeds = vec![1.0, 1.0, 1.0, 10.0, 10.0, 10.0];
+    let (master_h, cluster_h, _) = spawn(120, 6, 6, 3, &speeds, AssignPolicy::Heterogeneous, 0);
+    let (master_u, cluster_u, _) = spawn(120, 6, 6, 3, &speeds, AssignPolicy::Uniform, 0);
+    let avail: Vec<usize> = (0..6).collect();
+    let a_h = master_h.plan(&avail).unwrap();
+    let a_u = master_u.plan(&avail).unwrap();
+    let rows_h: Vec<usize> = (0..6).map(|n| a_h.rows_for(n)).collect();
+    let rows_u: Vec<usize> = (0..6).map(|n| a_u.rows_for(n)).collect();
+    // hetero gives the fast class (machines 3-5) strictly more rows overall
+    let fast_h: usize = rows_h[3..].iter().sum();
+    let fast_u: usize = rows_u[3..].iter().sum();
+    assert!(fast_h > fast_u, "hetero {rows_h:?} vs uniform {rows_u:?}");
+    assert!(rows_h[0] < rows_u[0]);
+    cluster_h.shutdown();
+    cluster_u.shutdown();
+}
+
+#[test]
+fn full_run_config_pipeline_with_all_features() {
+    // end-to-end through the public RunConfig API: elasticity + stragglers
+    // + heterogeneous speeds + EWMA adaptation, all at once
+    let cfg = RunConfig {
+        q: 240,
+        r: 240,
+        steps: 30,
+        stragglers: 1,
+        injected_stragglers: 1,
+        preempt_prob: 0.2,
+        arrive_prob: 0.5,
+        min_available: 4,
+        row_cost_ns: 30_000,
+        gamma: 0.6,
+        speeds: vec![1.0, 2.5, 0.8, 3.0, 1.4, 2.0],
+        seed: 31,
+        ..Default::default()
+    };
+    let res = usec::apps::run_power_iteration(&cfg).unwrap();
+    assert_eq!(res.timeline.len(), 30);
+    assert!(
+        res.final_nmse < 0.2,
+        "did not converge under churn: {}",
+        res.final_nmse
+    );
+}

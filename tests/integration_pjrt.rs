@@ -1,0 +1,109 @@
+//! Integration tests over the PJRT backend: the full three-layer stack
+//! (Pallas kernel → JAX model → HLO text → PJRT execution from the Rust
+//! hot path).
+//!
+//! These tests require `make artifacts` (they self-skip otherwise so a
+//! fresh checkout still passes `cargo test`). Artifact shapes are baked at
+//! tile_rows=128, cols=q=1536 by the default Makefile.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use usec::config::types::{AssignPolicy, BackendKind, RunConfig};
+use usec::linalg::partition::submatrix_ranges;
+use usec::linalg::gen;
+use usec::optim::SolveParams;
+use usec::placement::{Placement, PlacementKind};
+use usec::runtime::{BackendSpec, Manifest};
+use usec::sched::cluster::Cluster;
+use usec::sched::master::{Master, MasterConfig};
+use usec::sched::worker::{WorkerConfig, WorkerStorage};
+
+fn artifacts() -> Option<(std::path::PathBuf, Manifest)> {
+    let dir = usec::apps::harness::artifact_dir();
+    let m = Manifest::load(&dir).ok()?;
+    Some((dir, m))
+}
+
+#[test]
+fn pjrt_worker_cluster_matches_host_oracle() {
+    let Some((dir, manifest)) = artifacts() else {
+        eprintln!("skipping: no artifacts (run `make artifacts`)");
+        return;
+    };
+    let q = manifest.cols; // square workload at the baked shape
+    let g = 6;
+    let n = 6;
+    let placement = Placement::build(PlacementKind::Repetition, n, g, 3).unwrap();
+    let sub_ranges = submatrix_ranges(q, g).unwrap();
+    let matrix = Arc::new(gen::random_dense(q, q, 77));
+    let ranges = Arc::new(sub_ranges.clone());
+    let configs: Vec<WorkerConfig> = (0..n)
+        .map(|id| WorkerConfig {
+            id,
+            backend: BackendSpec::Pjrt { dir: dir.clone() },
+            speed: 1.0 + id as f64 * 0.5,
+            tile_rows: manifest.tile_rows,
+            storage: WorkerStorage {
+                matrix: Arc::clone(&matrix),
+                sub_ranges: Arc::clone(&ranges),
+            },
+        })
+        .collect();
+    let cluster = Cluster::spawn(configs).unwrap();
+    let mut master = Master::new(MasterConfig {
+        placement,
+        sub_ranges,
+        params: SolveParams::default(),
+        policy: AssignPolicy::Heterogeneous,
+        gamma: 0.5,
+        initial_speeds: (0..n).map(|i| 1.0 + i as f64 * 0.5).collect(),
+        row_cost_ns: 0,
+        recovery_timeout: Duration::from_secs(120),
+    })
+    .unwrap();
+
+    let w = Arc::new(vec![0.01f32; q]);
+    let avail: Vec<usize> = (0..n).collect();
+    let out = master.step(&cluster, 0, &w, &avail, &[]).unwrap();
+
+    // oracle: host matvec
+    let want = matrix.matvec(&w).unwrap();
+    let mut max_err = 0.0f32;
+    for (a, e) in out.y.iter().zip(&want) {
+        max_err = max_err.max((a - e).abs());
+    }
+    assert!(max_err < 1e-2, "PJRT vs host max err {max_err}");
+    cluster.shutdown();
+}
+
+#[test]
+fn pjrt_power_iteration_converges() {
+    let Some((_, manifest)) = artifacts() else {
+        eprintln!("skipping: no artifacts (run `make artifacts`)");
+        return;
+    };
+    if manifest.cols != manifest.q {
+        eprintln!("skipping: artifacts not square");
+        return;
+    }
+    let cfg = RunConfig {
+        q: manifest.q,
+        r: manifest.cols,
+        steps: 8,
+        backend: BackendKind::Pjrt,
+        tile_rows: manifest.tile_rows,
+        speeds: vec![1.0, 2.0, 1.5, 2.5, 1.2, 2.2],
+        seed: 55,
+        ..Default::default()
+    };
+    let res = usec::apps::run_power_iteration(&cfg).unwrap();
+    // 8 steps is enough for NMSE to fall well below the random start
+    let series = res.timeline.metric_series();
+    assert!(
+        series.last().unwrap().1 < series[0].1 * 0.5,
+        "no convergence on PJRT: {series:?}"
+    );
+    // the eigenvalue estimate is already in the right neighbourhood
+    assert!((res.eigval - res.truth_eigval).abs() < 2.0);
+}

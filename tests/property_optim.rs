@@ -1,0 +1,270 @@
+//! Property tests over the optimization pipeline (own prop framework —
+//! DESIGN.md §8): solver optimality certificates, filling-algorithm
+//! invariants, quantizer conservation, and recovery guarantees, across
+//! randomly generated placements / speeds / availability.
+
+use usec::linalg::partition::quantize_fractions;
+use usec::optim::{
+    assignment_from_load, build_assignment, lower_bound, solve_load_matrix, SolveParams,
+    SolverKind,
+};
+use usec::testing::prop::{gen, run, Config};
+
+/// The LP solution must be feasible, meet the work-conservation lower
+/// bound, and agree with the independent parametric-flow solver.
+#[test]
+fn solver_certificates_on_random_instances() {
+    run(Config::default().cases(60).name("solver-certificates"), |rng| {
+        let p = gen::placement(rng);
+        let n = p.machines();
+        let speeds = gen::speeds(rng, n);
+        let avail = gen::availability(rng, n);
+        let s_cnt = rng.below(3);
+        let params = SolveParams {
+            stragglers: s_cnt,
+            solver: SolverKind::Simplex,
+            ..Default::default()
+        };
+        if p.check_feasible(&avail, s_cnt).is_err() {
+            return; // infeasible instance — covered by the error tests
+        }
+        let sol = solve_load_matrix(&p, &avail, &speeds, &params).unwrap();
+        // structural feasibility
+        sol.load.validate(&p, &avail, s_cnt, 1e-6).unwrap();
+        // optimality certificate 1: meets the lower bound
+        let lb = lower_bound(&p, &avail, &speeds, s_cnt);
+        assert!(
+            sol.time >= lb - 1e-7 * (1.0 + lb),
+            "time {} below lower bound {lb}",
+            sol.time
+        );
+        // optimality certificate 2: the independent solver agrees
+        let flow = solve_load_matrix(
+            &p,
+            &avail,
+            &speeds,
+            &SolveParams {
+                stragglers: s_cnt,
+                solver: SolverKind::ParametricFlow,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        assert!(
+            (sol.time - flow.time).abs() < 1e-5 * (1.0 + sol.time),
+            "simplex {} vs flow {}",
+            sol.time,
+            flow.time
+        );
+    });
+}
+
+/// Filling + quantization preserves coverage exactly: every row of every
+/// sub-matrix is covered by exactly `1+S` distinct machines.
+#[test]
+fn assignment_coverage_on_random_instances() {
+    run(Config::default().cases(40).name("assignment-coverage"), |rng| {
+        let p = gen::placement(rng);
+        let n = p.machines();
+        let speeds = gen::speeds(rng, n);
+        let avail = gen::availability(rng, n);
+        let s_cnt = rng.below(3);
+        if p.check_feasible(&avail, s_cnt).is_err() {
+            return;
+        }
+        let rows = 60 + rng.below(500);
+        let sub_rows: Vec<usize> = (0..p.submatrices()).map(|_| rows).collect();
+        let params = SolveParams {
+            stragglers: s_cnt,
+            ..Default::default()
+        };
+        let a = build_assignment(&p, &avail, &speeds, &params, &sub_rows).unwrap();
+        a.validate(&sub_rows).unwrap();
+
+        // exact coverage count per row
+        for g in 0..p.submatrices() {
+            let mut hits = vec![0usize; rows];
+            for &m in &avail {
+                for t in a.tasks_for(m).iter().filter(|t| t.g == g) {
+                    for r in t.rows.lo..t.rows.hi {
+                        hits[r] += 1;
+                    }
+                }
+            }
+            for (r, &h) in hits.iter().enumerate() {
+                assert_eq!(h, 1 + s_cnt, "g={g} row={r} covered {h} times");
+            }
+        }
+
+        // recovery: any S reporters missing still covers everything
+        if s_cnt > 0 && avail.len() > s_cnt {
+            let victims = rng.sample_indices(avail.len(), s_cnt);
+            let reporters: Vec<usize> = avail
+                .iter()
+                .enumerate()
+                .filter(|(i, _)| !victims.contains(i))
+                .map(|(_, &m)| m)
+                .collect();
+            for g in 0..p.submatrices() {
+                let covered: usize = a
+                    .recovered_rows(g, &reporters)
+                    .iter()
+                    .map(|x| x.len())
+                    .sum();
+                assert_eq!(covered, rows, "g={g} not recoverable");
+            }
+        }
+    });
+}
+
+/// The heterogeneous optimum is never worse than the uniform baseline
+/// (it is the LP optimum; uniform is one feasible point).
+#[test]
+fn optimum_dominates_uniform_baseline() {
+    run(Config::default().cases(50).name("optimum-dominates"), |rng| {
+        let p = gen::placement(rng);
+        let n = p.machines();
+        let speeds = gen::speeds(rng, n);
+        let avail = gen::availability(rng, n);
+        if p.check_feasible(&avail, 0).is_err() {
+            return;
+        }
+        let sol = solve_load_matrix(&p, &avail, &speeds, &SolveParams::default()).unwrap();
+        let uniform =
+            usec::optim::homogeneous::uniform_load_matrix(&p, &avail, 0).unwrap();
+        let uniform_time = uniform.computation_time(&speeds, &avail);
+        assert!(
+            sol.time <= uniform_time + 1e-9,
+            "optimal {} worse than uniform {uniform_time}",
+            sol.time
+        );
+    });
+}
+
+/// Quantization conserves rows for arbitrary fraction vectors.
+#[test]
+fn quantizer_conservation() {
+    run(Config::default().cases(200).name("quantizer"), |rng| {
+        let k = 1 + rng.below(12);
+        let mut fr: Vec<f64> = (0..k).map(|_| rng.f64().max(1e-9)).collect();
+        let sum: f64 = fr.iter().sum();
+        for f in fr.iter_mut() {
+            *f /= sum;
+        }
+        let rows = 1 + rng.below(5000);
+        let ranges = quantize_fractions(&fr, rows).unwrap();
+        assert_eq!(ranges.iter().map(|r| r.len()).sum::<usize>(), rows);
+        assert_eq!(ranges.last().unwrap().hi, rows);
+        for (r, f) in ranges.iter().zip(&fr) {
+            assert!(
+                (r.len() as f64 - f * rows as f64).abs() < 1.0 + 1e-9,
+                "range {} vs exact {}",
+                r.len(),
+                f * rows as f64
+            );
+        }
+    });
+}
+
+/// Monotonicity (Remark 1): c*(S) is non-decreasing in S.
+#[test]
+fn straggler_tolerance_monotone() {
+    run(Config::default().cases(40).name("tradeoff-monotone"), |rng| {
+        let p = gen::placement(rng);
+        let n = p.machines();
+        let speeds = gen::speeds(rng, n);
+        let avail: Vec<usize> = (0..n).collect();
+        let mut last = 0.0f64;
+        for s in 0..p.replication().min(3) {
+            if p.check_feasible(&avail, s).is_err() {
+                break;
+            }
+            let sol =
+                solve_load_matrix(&p, &avail, &speeds, &SolveParams::with_stragglers(s))
+                    .unwrap();
+            assert!(
+                sol.time >= last - 1e-9,
+                "c*({s}) = {} < c*({}) = {last}",
+                sol.time,
+                s as i64 - 1
+            );
+            last = sol.time;
+        }
+    });
+}
+
+/// Elastic transition safety: re-solving after any feasible preemption
+/// pattern still yields a valid assignment (no work is lost).
+#[test]
+fn elastic_transition_safety() {
+    run(Config::default().cases(40).name("elastic-transitions"), |rng| {
+        let p = gen::placement(rng);
+        let n = p.machines();
+        let speeds = gen::speeds(rng, n);
+        let sub_rows: Vec<usize> = (0..p.submatrices()).map(|_| 120).collect();
+        // random walk over availability sets
+        let mut avail: Vec<usize> = (0..n).collect();
+        for _ in 0..6 {
+            // preempt or restore one machine
+            if rng.chance(0.5) && avail.len() > 1 {
+                let i = rng.below(avail.len());
+                avail.remove(i);
+            } else {
+                let missing: Vec<usize> =
+                    (0..n).filter(|m| !avail.contains(m)).collect();
+                if !missing.is_empty() {
+                    avail.push(missing[rng.below(missing.len())]);
+                    avail.sort_unstable();
+                }
+            }
+            if p.check_feasible(&avail, 0).is_err() {
+                continue;
+            }
+            let a =
+                build_assignment(&p, &avail, &speeds, &SolveParams::default(), &sub_rows)
+                    .unwrap();
+            a.validate(&sub_rows).unwrap();
+            // only available machines get work
+            for m in 0..n {
+                if !avail.contains(&m) {
+                    assert!(a.tasks_for(m).is_empty(), "preempted machine {m} got work");
+                }
+            }
+        }
+    });
+}
+
+/// Load fidelity: the filling algorithm reproduces the LP loads exactly
+/// (before quantization).
+#[test]
+fn filling_load_fidelity() {
+    run(Config::default().cases(60).name("filling-fidelity"), |rng| {
+        let p = gen::placement(rng);
+        let n = p.machines();
+        let speeds = gen::speeds(rng, n);
+        let avail: Vec<usize> = (0..n).collect();
+        let s_cnt = rng.below(p.replication().min(3));
+        if p.check_feasible(&avail, s_cnt).is_err() {
+            return;
+        }
+        let params = SolveParams {
+            stragglers: s_cnt,
+            ..Default::default()
+        };
+        let sol = solve_load_matrix(&p, &avail, &speeds, &params).unwrap();
+        // huge row count ⇒ quantization error → 0; compare fractional loads
+        let sub_rows: Vec<usize> = (0..p.submatrices()).map(|_| 1_000_000).collect();
+        let a = assignment_from_load(&p, &sol.load, s_cnt, &sub_rows).unwrap();
+        let realized = a.realized_load_matrix(&sub_rows);
+        for g in 0..p.submatrices() {
+            for m in 0..n {
+                let want = sol.load.get(g, m);
+                let got = realized.get(g, m);
+                assert!(
+                    (want - got).abs() < 1e-4,
+                    "μ[{g},{m}]: filling {got} vs LP {want}"
+                );
+            }
+        }
+    });
+}
