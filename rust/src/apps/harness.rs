@@ -1,5 +1,12 @@
-//! Shared app harness: build placement + cluster + master + chaos from a
+//! Shared app harness: build placement + transport + master + chaos from a
 //! [`RunConfig`], and drive generic elastic iterations.
+//!
+//! The transport is pluggable ([`crate::net`]): with `cfg.workers` empty
+//! the harness spawns in-process worker threads ([`LocalTransport`],
+//! zero-copy `Arc` data plane); with worker addresses it dials remote
+//! `usec worker` daemons over TCP and the run becomes genuinely
+//! distributed. Worker liveness feeds the availability set each step, so a
+//! dropped connection acts exactly like an elasticity-trace preemption.
 
 use std::sync::Arc;
 use std::time::Duration;
@@ -9,18 +16,23 @@ use crate::error::{Error, Result};
 use crate::linalg::partition::{submatrix_ranges, RowRange};
 use crate::linalg::Matrix;
 use crate::metrics::{StepRecord, Timeline};
+use crate::net::{
+    AnyTransport, Hello, LocalTransport, TcpOptions, TcpPeer, TcpTransport, Transport,
+    WorkloadSpec, DEFAULT_HEARTBEAT_MS, WIRE_VERSION,
+};
 use crate::placement::Placement;
 use crate::runtime::{Backend, BackendSpec};
 use crate::sched::master::{Master, MasterConfig};
-use crate::sched::worker::{WorkerConfig, WorkerStorage};
-use crate::sched::{Cluster, ElasticityTrace, StragglerInjector};
 use crate::sched::straggler::StraggleMode;
+use crate::sched::worker::{WorkerConfig, WorkerStorage};
+use crate::sched::{ElasticityTrace, StragglerInjector};
 
 /// Everything needed to run elastic steps over one matrix.
 pub struct Harness {
     pub placement: Placement,
     pub sub_ranges: Vec<RowRange>,
-    pub cluster: Cluster,
+    /// Worker channel — local threads or TCP daemons.
+    pub transport: AnyTransport,
     pub master: Master,
     /// Master-side combine backend.
     pub combine: Backend,
@@ -32,7 +44,22 @@ pub struct Harness {
 
 impl Harness {
     /// Wire up workers, master, trace and chaos from config + data matrix.
+    ///
+    /// Local transport only; apps whose workload can be regenerated from a
+    /// seed should call [`Harness::build_with_workload`] so the run can
+    /// also span TCP worker daemons.
     pub fn build(cfg: &RunConfig, matrix: Arc<Matrix>) -> Result<Harness> {
+        Harness::build_with_workload(cfg, matrix, None)
+    }
+
+    /// Like [`Harness::build`], with a [`WorkloadSpec`] describing how
+    /// remote workers regenerate their (uncoded) stored sub-matrices when
+    /// `cfg.workers` names TCP daemons.
+    pub fn build_with_workload(
+        cfg: &RunConfig,
+        matrix: Arc<Matrix>,
+        workload: Option<WorkloadSpec>,
+    ) -> Result<Harness> {
         cfg.validate()?;
         if matrix.rows() != cfg.q || matrix.cols() != cfg.r {
             return Err(Error::Shape(format!(
@@ -52,21 +79,59 @@ impl Harness {
             cfg.speeds.clone()
         };
 
-        let backend_spec = BackendSpec::from_kind(cfg.backend, artifact_dir());
-        let ranges = Arc::new(sub_ranges.clone());
-        let configs: Vec<WorkerConfig> = (0..cfg.n)
-            .map(|id| WorkerConfig {
-                id,
-                backend: backend_spec.clone(),
-                speed: speeds[id],
-                tile_rows: cfg.tile_rows,
-                storage: WorkerStorage {
-                    matrix: Arc::clone(&matrix),
-                    sub_ranges: Arc::clone(&ranges),
-                },
-            })
-            .collect();
-        let cluster = Cluster::spawn(configs)?;
+        let transport = if cfg.workers.is_empty() {
+            let backend_spec = BackendSpec::from_kind(cfg.backend, artifact_dir());
+            let ranges = Arc::new(sub_ranges.clone());
+            let configs: Vec<WorkerConfig> = (0..cfg.n)
+                .map(|id| WorkerConfig {
+                    id,
+                    backend: backend_spec.clone(),
+                    speed: speeds[id],
+                    tile_rows: cfg.tile_rows,
+                    storage: WorkerStorage {
+                        matrix: Arc::clone(&matrix),
+                        sub_ranges: Arc::clone(&ranges),
+                    },
+                })
+                .collect();
+            AnyTransport::Local(LocalTransport::spawn(configs)?)
+        } else {
+            let spec = workload.ok_or_else(|| {
+                Error::Config(
+                    "this workload cannot run on TCP workers: no deterministic \
+                     workload spec to ship in the handshake"
+                        .into(),
+                )
+            })?;
+            if spec.rows() != cfg.q || spec.cols() != cfg.r {
+                return Err(Error::Shape(format!(
+                    "workload spec is {}x{}, config says {}x{}",
+                    spec.rows(),
+                    spec.cols(),
+                    cfg.q,
+                    cfg.r
+                )));
+            }
+            let peers: Vec<TcpPeer> = cfg
+                .workers
+                .iter()
+                .enumerate()
+                .map(|(id, addr)| TcpPeer {
+                    addr: addr.clone(),
+                    hello: Hello {
+                        version: WIRE_VERSION,
+                        worker: id,
+                        speed: speeds[id],
+                        tile_rows: cfg.tile_rows,
+                        backend: cfg.backend,
+                        g: cfg.g,
+                        heartbeat_ms: DEFAULT_HEARTBEAT_MS,
+                        workload: spec.clone(),
+                    },
+                })
+                .collect();
+            AnyTransport::Tcp(TcpTransport::connect(peers, TcpOptions::default())?)
+        };
 
         let master = Master::new(MasterConfig {
             placement: placement.clone(),
@@ -122,7 +187,7 @@ impl Harness {
         Ok(Harness {
             placement,
             sub_ranges,
-            cluster,
+            transport,
             master,
             combine,
             trace,
@@ -137,6 +202,10 @@ impl Harness {
     /// the assembled product `y_t = X w_t`, and returns `(w_{t+1}, metric)`.
     /// Infeasible steps (availability below `1+S` replicas for some
     /// sub-matrix) are skipped and recorded with the previous metric.
+    ///
+    /// The availability set is the elasticity trace *intersected with
+    /// transport liveness*: a worker whose connection died is preempted
+    /// until it comes back, whatever the trace says.
     pub fn run<F>(&mut self, w0: Vec<f32>, steps: usize, mut update: F) -> Result<Vec<f32>>
     where
         F: FnMut(&Backend, &[f32], Vec<f32>) -> Result<(Vec<f32>, f64)>,
@@ -144,7 +213,13 @@ impl Harness {
         let mut w = Arc::new(w0);
         let mut last_metric = f64::NAN;
         for step in 0..steps {
-            let avail = self.trace.next_step();
+            let alive = self.transport.alive();
+            let avail: Vec<usize> = self
+                .trace
+                .next_step()
+                .into_iter()
+                .filter(|&n| alive.get(n).copied().unwrap_or(false))
+                .collect();
             if self
                 .placement
                 .check_feasible(&avail, self.cfg.stragglers)
@@ -166,7 +241,7 @@ impl Harness {
             let victims = self.injector.choose(&avail);
             let out = self
                 .master
-                .step(&self.cluster, step, &w, &avail, &victims)?;
+                .step(&self.transport, step, &w, &avail, &victims)?;
             let (next, metric) = update(&self.combine, &w, out.y)?;
             last_metric = metric;
             self.timeline.push(StepRecord {

@@ -45,11 +45,22 @@ pub fn workload(cfg: &RunConfig) -> Result<PlantedMatrix> {
 }
 
 /// Run elastic power iteration per `cfg`.
+///
+/// When `cfg.workers` lists TCP daemons, the deterministic workload spec
+/// travels in the handshake and the remote workers regenerate the same
+/// planted matrix from the seed — the run is then distributed across
+/// processes with bit-identical storage.
 pub fn run_power_iteration(cfg: &RunConfig) -> Result<PowerIterationResult> {
     let plant = workload(cfg)?;
     let truth = plant.eigvec.clone();
     let matrix = Arc::new(plant.matrix);
-    let mut harness = Harness::build(cfg, matrix)?;
+    let spec = crate::net::WorkloadSpec::PlantedSymmetric {
+        q: cfg.q,
+        eigval: PLANT_EIGVAL,
+        gap: PLANT_GAP,
+        seed: cfg.seed,
+    };
+    let mut harness = Harness::build_with_workload(cfg, matrix, Some(spec))?;
 
     // b₀: deterministic unit vector (all-ones) — same for every policy so
     // Fig. 4 comparisons share trajectories.

@@ -13,6 +13,8 @@ pub fn dispatch(argv: &[String]) -> Result<()> {
     let rest = if argv.is_empty() { &[] } else { &argv[1..] };
     match cmd {
         "run" => crate::exp::run_cli(rest),
+        "master" => crate::exp::master_cli(rest),
+        "worker" => crate::net::daemon::worker_cli(rest),
         "exp" => crate::exp::exp_cli(rest),
         "solve" => crate::exp::solve_cli(rest),
         "help" | "--help" | "-h" => {
@@ -30,6 +32,8 @@ fn top_help() -> String {
         "usec — Heterogeneous Uncoded Storage Elastic Computing\n\n\
          USAGE: usec <subcommand> [flags]\n\nSUBCOMMANDS:\n\
          \x20 run     run an elastic power-iteration workload end-to-end\n\
+         \x20 master  distributed run over TCP worker daemons (--workers host:port,...)\n\
+         \x20 worker  worker daemon serving a master over TCP (--listen host:port)\n\
          \x20 exp     regenerate a paper experiment (fig1|fig2|fig3|fig4)\n\
          \x20 solve   solve one assignment instance and print M*\n\
          \x20 help    this text\n\n",

@@ -110,6 +110,14 @@ pub struct RunConfig {
     /// PJRT tile rows (must match the AOT artifact).
     pub tile_rows: usize,
     pub seed: u64,
+    /// TCP worker daemon addresses (`host:port`). Empty ⇒ in-process
+    /// worker threads over the zero-copy local transport; non-empty ⇒ the
+    /// run dials `usec worker` daemons and `n` must equal the list length
+    /// ([`RunConfig::from_args`] aligns `n` automatically).
+    pub workers: Vec<String>,
+    /// Path for the machine-readable per-step timeline dump (JSON). Empty
+    /// ⇒ no dump.
+    pub json_out: String,
 }
 
 impl Default for RunConfig {
@@ -137,6 +145,8 @@ impl Default for RunConfig {
             row_cost_ns: 0,
             tile_rows: 128,
             seed: 7,
+            workers: Vec::new(),
+            json_out: String::new(),
         }
     }
 }
@@ -171,6 +181,13 @@ impl RunConfig {
             ArgSpec::opt("row-cost-ns", "0", "simulated ns per row at speed 1"),
             ArgSpec::opt("tile-rows", "128", "PJRT tile rows (match artifacts)"),
             ArgSpec::opt("seed", "7", "PRNG seed"),
+            ArgSpec::opt(
+                "workers",
+                "",
+                "comma-separated worker daemon addresses (host:port); \
+                 sets N and switches to the TCP transport",
+            ),
+            ArgSpec::opt("json-out", "", "write the per-step timeline JSON here"),
         ]
     }
 
@@ -199,7 +216,14 @@ impl RunConfig {
             row_cost_ns: a.get_u64("row-cost-ns")?,
             tile_rows: a.get_usize("tile-rows")?,
             seed: a.get_u64("seed")?,
+            workers: parse_worker_list(a.get("workers").unwrap_or("")),
+            json_out: a.get("json-out").unwrap_or("").to_string(),
         };
+        let mut cfg = cfg;
+        if !cfg.workers.is_empty() {
+            // the worker list is authoritative for the machine count
+            cfg.n = cfg.workers.len();
+        }
         cfg.validate()?;
         Ok(cfg)
     }
@@ -242,11 +266,23 @@ impl RunConfig {
         if self.tile_rows == 0 {
             return Err(Error::Config("tile-rows must be positive".into()));
         }
+        if !self.workers.is_empty() && self.workers.len() != self.n {
+            return Err(Error::Config(format!(
+                "{} worker addresses given for N={} machines",
+                self.workers.len(),
+                self.n
+            )));
+        }
         if self.injected_stragglers > self.stragglers && self.stragglers > 0 {
             // allowed (the system then misses rows) but suspicious for
             // experiments that expect full recovery
         }
         Ok(())
+    }
+
+    /// Whether this run dials remote TCP workers.
+    pub fn is_distributed(&self) -> bool {
+        !self.workers.is_empty()
     }
 
     /// Solve parameters derived from this config.
@@ -259,6 +295,15 @@ impl RunConfig {
     }
 }
 
+/// Split a `host:port,host:port` list, tolerating blanks.
+fn parse_worker_list(s: &str) -> Vec<String> {
+    s.split(',')
+        .map(str::trim)
+        .filter(|p| !p.is_empty())
+        .map(str::to_string)
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -266,6 +311,24 @@ mod tests {
     #[test]
     fn default_is_valid() {
         RunConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn worker_list_sets_n_and_validates() {
+        let argv: Vec<String> = ["--workers", "h1:1,h2:2,h3:3", "--speeds", "1,2,3"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        let a = Args::parse(&argv, &RunConfig::arg_specs()).unwrap();
+        let cfg = RunConfig::from_args(&a).unwrap();
+        assert_eq!(cfg.n, 3);
+        assert!(cfg.is_distributed());
+        assert_eq!(cfg.workers, vec!["h1:1", "h2:2", "h3:3"]);
+
+        // programmatic mismatch rejected
+        let mut bad = RunConfig::default();
+        bad.workers = vec!["h:1".into()]; // N stays 6
+        assert!(bad.validate().is_err());
     }
 
     #[test]

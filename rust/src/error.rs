@@ -1,50 +1,86 @@
 //! Crate-wide error type.
+//!
+//! Hand-rolled `Display`/`Error` impls (the `thiserror` derive crate is not
+//! part of the offline crate set).
+
+use std::fmt;
+
+#[cfg(not(feature = "xla"))]
+use crate::runtime::xla_stub as xla;
 
 /// Crate result alias.
 pub type Result<T> = std::result::Result<T, Error>;
 
 /// Errors surfaced by the USEC library.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum Error {
     /// A placement was structurally invalid (bad parameters, uncovered
     /// sub-matrix, wrong replication factor, ...).
-    #[error("invalid placement: {0}")]
     InvalidPlacement(String),
 
     /// The assignment problem is infeasible for the given availability /
     /// straggler tolerance (e.g. a sub-matrix has fewer than `1+S`
     /// available replicas).
-    #[error("infeasible assignment: {0}")]
     Infeasible(String),
 
     /// An optimization routine failed to converge or detected an internal
     /// inconsistency (should not happen on well-posed inputs).
-    #[error("solver error: {0}")]
     Solver(String),
 
     /// Configuration file / CLI parsing error.
-    #[error("config error: {0}")]
     Config(String),
 
     /// Artifact manifest / HLO loading error.
-    #[error("runtime error: {0}")]
     Runtime(String),
 
-    /// Cluster orchestration failure (worker panicked, channel closed, ...).
-    #[error("cluster error: {0}")]
+    /// Cluster orchestration failure (worker panicked, channel closed,
+    /// connection refused, ...).
     Cluster(String),
 
+    /// Wire-protocol failure (malformed frame, codec mismatch, version
+    /// handshake rejection).
+    Wire(String),
+
     /// Shape mismatch in linear-algebra operations.
-    #[error("shape error: {0}")]
     Shape(String),
 
     /// Wrapped I/O error.
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
 
     /// Wrapped XLA/PJRT error.
-    #[error("xla error: {0}")]
     Xla(String),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::InvalidPlacement(m) => write!(f, "invalid placement: {m}"),
+            Error::Infeasible(m) => write!(f, "infeasible assignment: {m}"),
+            Error::Solver(m) => write!(f, "solver error: {m}"),
+            Error::Config(m) => write!(f, "config error: {m}"),
+            Error::Runtime(m) => write!(f, "runtime error: {m}"),
+            Error::Cluster(m) => write!(f, "cluster error: {m}"),
+            Error::Wire(m) => write!(f, "wire error: {m}"),
+            Error::Shape(m) => write!(f, "shape error: {m}"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+            Error::Xla(m) => write!(f, "xla error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
 }
 
 impl Error {
@@ -56,10 +92,38 @@ impl Error {
     pub fn solver(msg: impl Into<String>) -> Self {
         Error::Solver(msg.into())
     }
+    /// Helper: build an [`Error::Wire`].
+    pub fn wire(msg: impl Into<String>) -> Self {
+        Error::Wire(msg.into())
+    }
 }
 
 impl From<xla::Error> for Error {
     fn from(e: xla::Error) -> Self {
         Error::Xla(e.to_string())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_formats_match_variants() {
+        assert_eq!(
+            Error::Config("bad flag".into()).to_string(),
+            "config error: bad flag"
+        );
+        assert_eq!(
+            Error::wire("short frame").to_string(),
+            "wire error: short frame"
+        );
+    }
+
+    #[test]
+    fn io_error_wraps_with_source() {
+        let e: Error = std::io::Error::new(std::io::ErrorKind::Other, "boom").into();
+        assert!(e.to_string().contains("boom"));
+        assert!(std::error::Error::source(&e).is_some());
     }
 }

@@ -21,13 +21,37 @@ use crate::error::{Error, Result};
 pub fn run_cli(argv: &[String]) -> Result<()> {
     let args = Args::parse(argv, &RunConfig::arg_specs())?;
     let cfg = RunConfig::from_args(&args)?;
-    let res = crate::apps::run_power_iteration(&cfg)?;
+    run_and_report(&cfg)
+}
+
+/// `usec master --workers host:port,… [run flags]` — the same elastic
+/// power-iteration run, distributed over TCP worker daemons.
+pub fn master_cli(argv: &[String]) -> Result<()> {
+    let args = Args::parse(argv, &RunConfig::arg_specs())?;
+    let cfg = RunConfig::from_args(&args)?;
+    if !cfg.is_distributed() {
+        return Err(Error::Config(
+            "usec master requires --workers host:port,host:port,…".into(),
+        ));
+    }
+    run_and_report(&cfg)
+}
+
+/// Shared `run`/`master` body: execute, print the human summary, and dump
+/// the machine-readable timeline when `--json-out` is set.
+fn run_and_report(cfg: &RunConfig) -> Result<()> {
+    let res = crate::apps::run_power_iteration(cfg)?;
     println!(
-        "power iteration: {} steps, backend={}, policy={}, placement={}",
+        "power iteration: {} steps, backend={}, policy={}, placement={}, transport={}",
         cfg.steps,
         cfg.backend.name(),
         cfg.policy.name(),
-        cfg.placement.name()
+        cfg.placement.name(),
+        if cfg.is_distributed() {
+            "tcp"
+        } else {
+            "local"
+        }
     );
     println!(
         "final NMSE {:.3e}, eigenvalue estimate {:.4} (truth {:.4}), total wall {:?}",
@@ -36,6 +60,26 @@ pub fn run_cli(argv: &[String]) -> Result<()> {
         res.truth_eigval,
         res.timeline.total_wall()
     );
+    if !cfg.json_out.is_empty() {
+        let doc = crate::util::json::ObjBuilder::new()
+            .str("app", "power-iteration")
+            .str("backend", cfg.backend.name())
+            .str("policy", cfg.policy.name())
+            .str("placement", cfg.placement.name())
+            .str(
+                "transport",
+                if cfg.is_distributed() { "tcp" } else { "local" },
+            )
+            .num("n", cfg.n as f64)
+            .num("seed", cfg.seed as f64)
+            .num("final_nmse", res.final_nmse)
+            .num("eigval", res.eigval)
+            .num("truth_eigval", res.truth_eigval)
+            .val("timeline", res.timeline.to_json())
+            .build();
+        std::fs::write(&cfg.json_out, format!("{doc}\n"))?;
+        println!("wrote timeline JSON to {}", cfg.json_out);
+    }
     println!("\nper-step series (CSV):\n{}", res.timeline.to_csv());
     Ok(())
 }
@@ -173,5 +217,28 @@ mod tests {
             "--q", "60", "--r", "60", "--steps", "5", "--speeds", "1,2,3,4,5,6",
         ]))
         .unwrap();
+    }
+
+    #[test]
+    fn run_cli_writes_json_out() {
+        let path = std::env::temp_dir().join("usec_run_cli_json_out_test.json");
+        let p = path.to_str().unwrap();
+        run_cli(&sv(&[
+            "--q", "60", "--r", "60", "--steps", "3", "--speeds", "1,2,3,4,5,6",
+            "--json-out", p,
+        ]))
+        .unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let j = crate::util::json::Json::parse(text.trim()).unwrap();
+        assert_eq!(j.get_str("app"), Some("power-iteration"));
+        assert_eq!(j.get_str("transport"), Some("local"));
+        let tl = j.get("timeline").unwrap();
+        assert_eq!(tl.get_usize("steps"), Some(3));
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn master_cli_requires_workers() {
+        assert!(master_cli(&sv(&["--q", "60", "--r", "60"])).is_err());
     }
 }

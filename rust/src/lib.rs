@@ -27,6 +27,12 @@
 //!   computation assignment.
 //! * [`sched`] — Algorithm 1: the adaptive master/worker loop with EWMA
 //!   speed estimation, elasticity traces and straggler injection.
+//! * [`net`] — the pluggable master↔worker transport: in-process mpsc
+//!   channels ([`net::LocalTransport`], zero-copy `Arc` data plane) or
+//!   length-prefixed little-endian TCP frames ([`net::TcpTransport`] +
+//!   the `usec worker` daemon) with a versioned handshake and
+//!   heartbeat-based liveness, so one power-iteration run can span
+//!   separate worker processes. A dropped connection is a preemption.
 //! * [`runtime`] — PJRT artifact loading/execution plus a pure-Rust host
 //!   backend so everything is testable without artifacts.
 //! * [`apps`] — power iteration, ridge regression and PageRank built on the
@@ -54,6 +60,7 @@ pub mod error;
 pub mod exp;
 pub mod linalg;
 pub mod metrics;
+pub mod net;
 pub mod optim;
 pub mod placement;
 pub mod runtime;

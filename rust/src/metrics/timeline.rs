@@ -2,6 +2,8 @@
 
 use std::time::Duration;
 
+use crate::util::json::{Json, ObjBuilder};
+
 /// What happened in one elastic computation step.
 #[derive(Debug, Clone)]
 pub struct StepRecord {
@@ -74,6 +76,38 @@ impl Timeline {
             .map(|(t, _)| t)
     }
 
+    /// JSON dump: one object per step plus cumulative elapsed seconds —
+    /// the machine-readable twin of [`Timeline::to_csv`] (`--json-out`),
+    /// so benches and the net integration tests can diff runs.
+    pub fn to_json(&self) -> Json {
+        // NaN (skipped steps carry NaN metrics) is not valid JSON — null.
+        let num_or_null = |v: f64| if v.is_finite() { Json::Num(v) } else { Json::Null };
+        let mut t = 0.0;
+        let steps: Vec<Json> = self
+            .steps
+            .iter()
+            .map(|s| {
+                t += s.wall.as_secs_f64();
+                ObjBuilder::new()
+                    .num("step", s.step as f64)
+                    .num("available", s.available as f64)
+                    .num("reported", s.reported as f64)
+                    .num("stragglers", s.stragglers as f64)
+                    .num("wall_s", s.wall.as_secs_f64())
+                    .num("elapsed_s", t)
+                    .num("solve_s", s.solve.as_secs_f64())
+                    .val("predicted_c", num_or_null(s.predicted_c))
+                    .val("metric", num_or_null(s.metric))
+                    .build()
+            })
+            .collect();
+        ObjBuilder::new()
+            .num("steps", self.steps.len() as f64)
+            .num("total_wall_s", self.total_wall().as_secs_f64())
+            .val("timeline", Json::Arr(steps))
+            .build()
+    }
+
     /// CSV dump (step, elapsed, metric, available, reported, solve_ms).
     pub fn to_csv(&self) -> String {
         let mut out = String::from("step,elapsed_s,metric,available,reported,solve_ms\n");
@@ -139,5 +173,24 @@ mod tests {
         let csv = t.to_csv();
         assert_eq!(csv.lines().count(), 2);
         assert!(csv.starts_with("step,"));
+    }
+
+    #[test]
+    fn json_round_trips_and_nulls_nan() {
+        let mut t = Timeline::new();
+        t.push(rec(0, 100, 0.5));
+        let mut skipped = rec(1, 0, f64::NAN);
+        skipped.predicted_c = f64::NAN;
+        t.push(skipped);
+        let j = t.to_json();
+        // parses back as valid JSON despite the NaN metric
+        let text = j.to_string();
+        let back = crate::util::json::Json::parse(&text).unwrap();
+        assert_eq!(back.get_usize("steps"), Some(2));
+        let steps = back.get("timeline").unwrap().items().unwrap();
+        assert_eq!(steps.len(), 2);
+        assert_eq!(steps[0].get_num("metric"), Some(0.5));
+        assert_eq!(steps[1].get("metric"), Some(&crate::util::json::Json::Null));
+        assert!((steps[1].get_num("elapsed_s").unwrap() - 0.1).abs() < 1e-9);
     }
 }

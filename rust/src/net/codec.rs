@@ -1,0 +1,614 @@
+//! Explicit little-endian binary codec for the master↔worker wire protocol.
+//!
+//! Every message is a tag byte followed by a fixed field layout (all
+//! integers little-endian, floats as IEEE-754 LE bit patterns):
+//!
+//! | tag | message | direction | body |
+//! |-----|---------|-----------|------|
+//! | `1` | `Hello` | master → worker | magic `u32`, version `u16`, worker `u32`, speed `f64`, tile_rows `u32`, backend `u8`, G `u32`, heartbeat_ms `u32`, workload |
+//! | `2` | `HelloAck` | worker → master | version `u16`, worker `u32` |
+//! | `3` | `Work` | master → worker | step `u64`, row_cost_ns `u64`, straggle `u8`(+`f64`), w `vec<f32>`, tasks `u32` × {g `u32`, lo `u64`, hi `u64`} |
+//! | `4` | `Report` | worker → master | worker `u32`, step `u64`, elapsed_ns `u64`, speed `u8`(+`f64`), segments `u32` × {lo `u64`, hi `u64`, values `vec<f32>`} |
+//! | `5` | `Failed` | worker → master | worker `u32`, step `u64`, error `str` |
+//! | `6` | `Heartbeat` | worker → master | worker `u32`, seq `u64` |
+//! | `7` | `Shutdown` | master → worker | — |
+//!
+//! `vec<f32>` is a `u32` element count followed by raw LE `f32`s; `str` is
+//! a `u32` byte count followed by UTF-8. The workload spec is kind `u8`
+//! (`1` planted-symmetric, `2` random-dense), q `u64`, r `u64`, seed
+//! `u64`, eigval `f64`, gap `f64`.
+//!
+//! Decoding validates everything it can: counts are bounded by the bytes
+//! actually present, segment value counts must equal their row ranges, row
+//! ranges must be ordered, and trailing bytes are rejected.
+
+use std::io::{Read, Write};
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::config::types::BackendKind;
+use crate::error::{Error, Result};
+use crate::linalg::partition::RowRange;
+use crate::optim::Task;
+use crate::sched::protocol::{Segment, WorkOrder, WorkerReport};
+use crate::sched::straggler::StraggleMode;
+
+use super::frame;
+use super::transport::WorkloadSpec;
+
+/// Wire-protocol version; bumped on any incompatible layout change. The
+/// handshake rejects mismatches on both sides.
+pub const WIRE_VERSION: u16 = 1;
+
+/// Handshake magic ("USEC" in ASCII) — catches non-USEC peers immediately.
+pub const HELLO_MAGIC: u32 = 0x5553_4543;
+
+const TAG_HELLO: u8 = 1;
+const TAG_HELLO_ACK: u8 = 2;
+const TAG_WORK: u8 = 3;
+const TAG_REPORT: u8 = 4;
+const TAG_FAILED: u8 = 5;
+const TAG_HEARTBEAT: u8 = 6;
+const TAG_SHUTDOWN: u8 = 7;
+
+/// Sanity cap on list counts (tasks, segments). Real runs are orders of
+/// magnitude below; a malformed count is rejected before allocation.
+const MAX_LIST: usize = 1 << 20;
+
+/// Master → worker handshake: identity, compute profile, and the workload
+/// the worker must materialize its storage from.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Hello {
+    pub version: u16,
+    pub worker: usize,
+    /// Speed multiplier the worker's throttle emulates.
+    pub speed: f64,
+    pub tile_rows: usize,
+    pub backend: BackendKind,
+    /// Sub-matrix count `G` (determines the worker's row partition).
+    pub g: usize,
+    /// Worker → master heartbeat period in milliseconds (0 disables).
+    pub heartbeat_ms: u32,
+    pub workload: WorkloadSpec,
+}
+
+/// Worker → master handshake acknowledgement.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HelloAck {
+    pub version: u16,
+    pub worker: usize,
+}
+
+/// Every message that can travel on the wire.
+#[derive(Debug, Clone, PartialEq)]
+pub enum WireMsg {
+    Hello(Hello),
+    HelloAck(HelloAck),
+    Work(WorkOrder),
+    Report(WorkerReport),
+    Failed {
+        worker: usize,
+        step: usize,
+        error: String,
+    },
+    Heartbeat {
+        worker: usize,
+        seq: u64,
+    },
+    Shutdown,
+}
+
+// ---------------------------------------------------------------- encoder
+
+struct Enc {
+    buf: Vec<u8>,
+}
+
+impl Enc {
+    fn new(tag: u8) -> Enc {
+        Enc { buf: vec![tag] }
+    }
+    fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+    fn u16(&mut self, v: u16) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn f64(&mut self, v: f64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn f32s(&mut self, v: &[f32]) {
+        self.u32(v.len() as u32);
+        for x in v {
+            self.buf.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+    fn str(&mut self, s: &str) {
+        self.u32(s.len() as u32);
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+}
+
+fn enc_workload(e: &mut Enc, w: &WorkloadSpec) {
+    match w {
+        WorkloadSpec::PlantedSymmetric {
+            q,
+            eigval,
+            gap,
+            seed,
+        } => {
+            e.u8(1);
+            e.u64(*q as u64);
+            e.u64(*q as u64);
+            e.u64(*seed);
+            e.f64(*eigval);
+            e.f64(*gap);
+        }
+        WorkloadSpec::RandomDense { q, r, seed } => {
+            e.u8(2);
+            e.u64(*q as u64);
+            e.u64(*r as u64);
+            e.u64(*seed);
+            e.f64(0.0);
+            e.f64(0.0);
+        }
+    }
+}
+
+/// Encode a message into a frame payload (tag + body).
+pub fn encode(msg: &WireMsg) -> Vec<u8> {
+    match msg {
+        WireMsg::Hello(h) => {
+            let mut e = Enc::new(TAG_HELLO);
+            e.u32(HELLO_MAGIC);
+            e.u16(h.version);
+            e.u32(h.worker as u32);
+            e.f64(h.speed);
+            e.u32(h.tile_rows as u32);
+            e.u8(match h.backend {
+                BackendKind::Host => 0,
+                BackendKind::Pjrt => 1,
+            });
+            e.u32(h.g as u32);
+            e.u32(h.heartbeat_ms);
+            enc_workload(&mut e, &h.workload);
+            e.buf
+        }
+        WireMsg::HelloAck(a) => {
+            let mut e = Enc::new(TAG_HELLO_ACK);
+            e.u16(a.version);
+            e.u32(a.worker as u32);
+            e.buf
+        }
+        WireMsg::Work(o) => {
+            let mut e = Enc::new(TAG_WORK);
+            e.u64(o.step as u64);
+            e.u64(o.row_cost_ns);
+            match o.straggle {
+                None => e.u8(0),
+                Some(StraggleMode::Drop) => e.u8(1),
+                Some(StraggleMode::Slow(f)) => {
+                    e.u8(2);
+                    e.f64(f);
+                }
+            }
+            e.f32s(&o.w);
+            e.u32(o.tasks.len() as u32);
+            for t in &o.tasks {
+                e.u32(t.g as u32);
+                e.u64(t.rows.lo as u64);
+                e.u64(t.rows.hi as u64);
+            }
+            e.buf
+        }
+        WireMsg::Report(r) => {
+            let mut e = Enc::new(TAG_REPORT);
+            e.u32(r.worker as u32);
+            e.u64(r.step as u64);
+            e.u64(r.elapsed.as_nanos().min(u128::from(u64::MAX)) as u64);
+            match r.measured_speed {
+                None => e.u8(0),
+                Some(v) => {
+                    e.u8(1);
+                    e.f64(v);
+                }
+            }
+            e.u32(r.segments.len() as u32);
+            for s in &r.segments {
+                e.u64(s.rows.lo as u64);
+                e.u64(s.rows.hi as u64);
+                e.f32s(&s.values);
+            }
+            e.buf
+        }
+        WireMsg::Failed {
+            worker,
+            step,
+            error,
+        } => {
+            let mut e = Enc::new(TAG_FAILED);
+            e.u32(*worker as u32);
+            e.u64(*step as u64);
+            e.str(error);
+            e.buf
+        }
+        WireMsg::Heartbeat { worker, seq } => {
+            let mut e = Enc::new(TAG_HEARTBEAT);
+            e.u32(*worker as u32);
+            e.u64(*seq);
+            e.buf
+        }
+        WireMsg::Shutdown => vec![TAG_SHUTDOWN],
+    }
+}
+
+// ---------------------------------------------------------------- decoder
+
+struct Dec<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Dec<'a> {
+    fn new(b: &'a [u8]) -> Dec<'a> {
+        Dec { b, i: 0 }
+    }
+    fn remaining(&self) -> usize {
+        self.b.len() - self.i
+    }
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.remaining() < n {
+            return Err(Error::wire(format!(
+                "truncated message: wanted {n} bytes at offset {}, have {}",
+                self.i,
+                self.remaining()
+            )));
+        }
+        let s = &self.b[self.i..self.i + n];
+        self.i += n;
+        Ok(s)
+    }
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+    fn u16(&mut self) -> Result<u16> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    fn usize64(&mut self) -> Result<usize> {
+        usize::try_from(self.u64()?).map_err(|_| Error::wire("u64 does not fit usize"))
+    }
+    fn f32s(&mut self) -> Result<Vec<f32>> {
+        let n = self.u32()? as usize;
+        let bytes = self.take(n.checked_mul(4).ok_or_else(|| Error::wire("f32 count overflow"))?)?;
+        let mut out = Vec::with_capacity(n);
+        for chunk in bytes.chunks_exact(4) {
+            out.push(f32::from_le_bytes(chunk.try_into().unwrap()));
+        }
+        Ok(out)
+    }
+    fn str(&mut self) -> Result<String> {
+        let n = self.u32()? as usize;
+        let bytes = self.take(n)?;
+        String::from_utf8(bytes.to_vec()).map_err(|_| Error::wire("invalid UTF-8 string"))
+    }
+    fn list_len(&mut self, what: &str) -> Result<usize> {
+        let n = self.u32()? as usize;
+        if n > MAX_LIST {
+            return Err(Error::wire(format!("{what} count {n} exceeds cap {MAX_LIST}")));
+        }
+        Ok(n)
+    }
+    fn finish(self) -> Result<()> {
+        if self.remaining() != 0 {
+            return Err(Error::wire(format!(
+                "{} trailing bytes after message",
+                self.remaining()
+            )));
+        }
+        Ok(())
+    }
+}
+
+fn dec_workload(d: &mut Dec<'_>) -> Result<WorkloadSpec> {
+    let kind = d.u8()?;
+    let q = d.usize64()?;
+    let r = d.usize64()?;
+    let seed = d.u64()?;
+    let eigval = d.f64()?;
+    let gap = d.f64()?;
+    match kind {
+        1 => Ok(WorkloadSpec::PlantedSymmetric {
+            q,
+            eigval,
+            gap,
+            seed,
+        }),
+        2 => Ok(WorkloadSpec::RandomDense { q, r, seed }),
+        other => Err(Error::wire(format!("unknown workload kind {other}"))),
+    }
+}
+
+fn dec_row_range(d: &mut Dec<'_>) -> Result<RowRange> {
+    let lo = d.usize64()?;
+    let hi = d.usize64()?;
+    if lo > hi {
+        return Err(Error::wire(format!("row range {lo}..{hi} is inverted")));
+    }
+    Ok(RowRange { lo, hi })
+}
+
+/// Decode a frame payload produced by [`encode`].
+pub fn decode(payload: &[u8]) -> Result<WireMsg> {
+    let mut d = Dec::new(payload);
+    let tag = d.u8()?;
+    let msg = match tag {
+        TAG_HELLO => {
+            let magic = d.u32()?;
+            if magic != HELLO_MAGIC {
+                return Err(Error::wire(format!(
+                    "bad handshake magic {magic:#010x} (not a USEC peer)"
+                )));
+            }
+            let version = d.u16()?;
+            let worker = d.u32()? as usize;
+            let speed = d.f64()?;
+            let tile_rows = d.u32()? as usize;
+            let backend = match d.u8()? {
+                0 => BackendKind::Host,
+                1 => BackendKind::Pjrt,
+                other => return Err(Error::wire(format!("unknown backend byte {other}"))),
+            };
+            let g = d.u32()? as usize;
+            let heartbeat_ms = d.u32()?;
+            let workload = dec_workload(&mut d)?;
+            WireMsg::Hello(Hello {
+                version,
+                worker,
+                speed,
+                tile_rows,
+                backend,
+                g,
+                heartbeat_ms,
+                workload,
+            })
+        }
+        TAG_HELLO_ACK => {
+            let version = d.u16()?;
+            let worker = d.u32()? as usize;
+            WireMsg::HelloAck(HelloAck { version, worker })
+        }
+        TAG_WORK => {
+            let step = d.usize64()?;
+            let row_cost_ns = d.u64()?;
+            let straggle = match d.u8()? {
+                0 => None,
+                1 => Some(StraggleMode::Drop),
+                2 => Some(StraggleMode::Slow(d.f64()?)),
+                other => return Err(Error::wire(format!("unknown straggle tag {other}"))),
+            };
+            let w = d.f32s()?;
+            let n_tasks = d.list_len("task")?;
+            let mut tasks = Vec::with_capacity(n_tasks);
+            for _ in 0..n_tasks {
+                let g = d.u32()? as usize;
+                let rows = dec_row_range(&mut d)?;
+                tasks.push(Task { g, rows });
+            }
+            WireMsg::Work(WorkOrder {
+                step,
+                w: Arc::new(w),
+                tasks,
+                row_cost_ns,
+                straggle,
+            })
+        }
+        TAG_REPORT => {
+            let worker = d.u32()? as usize;
+            let step = d.usize64()?;
+            let elapsed = Duration::from_nanos(d.u64()?);
+            let measured_speed = match d.u8()? {
+                0 => None,
+                1 => Some(d.f64()?),
+                other => return Err(Error::wire(format!("unknown speed tag {other}"))),
+            };
+            let n_segs = d.list_len("segment")?;
+            let mut segments = Vec::with_capacity(n_segs);
+            for _ in 0..n_segs {
+                let rows = dec_row_range(&mut d)?;
+                let values = d.f32s()?;
+                if values.len() != rows.len() {
+                    return Err(Error::wire(format!(
+                        "segment {}..{} carries {} values",
+                        rows.lo,
+                        rows.hi,
+                        values.len()
+                    )));
+                }
+                segments.push(Segment { rows, values });
+            }
+            WireMsg::Report(WorkerReport {
+                worker,
+                step,
+                segments,
+                measured_speed,
+                elapsed,
+            })
+        }
+        TAG_FAILED => {
+            let worker = d.u32()? as usize;
+            let step = d.usize64()?;
+            let error = d.str()?;
+            WireMsg::Failed {
+                worker,
+                step,
+                error,
+            }
+        }
+        TAG_HEARTBEAT => {
+            let worker = d.u32()? as usize;
+            let seq = d.u64()?;
+            WireMsg::Heartbeat { worker, seq }
+        }
+        TAG_SHUTDOWN => WireMsg::Shutdown,
+        other => return Err(Error::wire(format!("unknown message tag {other}"))),
+    };
+    d.finish()?;
+    Ok(msg)
+}
+
+// ----------------------------------------------------------- stream glue
+
+/// Encode + frame + write one message.
+pub fn write_msg<W: Write>(w: &mut W, msg: &WireMsg) -> Result<()> {
+    frame::write_frame(w, &encode(msg))
+}
+
+/// Read + decode one message.
+pub fn read_msg<R: Read>(r: &mut R) -> Result<WireMsg> {
+    decode(&frame::read_frame(r)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(msg: WireMsg) {
+        let bytes = encode(&msg);
+        let back = decode(&bytes).unwrap();
+        assert_eq!(back, msg);
+    }
+
+    #[test]
+    fn hello_roundtrip() {
+        roundtrip(WireMsg::Hello(Hello {
+            version: WIRE_VERSION,
+            worker: 3,
+            speed: 2.25,
+            tile_rows: 128,
+            backend: BackendKind::Host,
+            g: 6,
+            heartbeat_ms: 500,
+            workload: WorkloadSpec::PlantedSymmetric {
+                q: 1536,
+                eigval: 10.0,
+                gap: 0.35,
+                seed: 7,
+            },
+        }));
+        roundtrip(WireMsg::HelloAck(HelloAck {
+            version: WIRE_VERSION,
+            worker: 3,
+        }));
+    }
+
+    #[test]
+    fn work_order_roundtrip() {
+        roundtrip(WireMsg::Work(WorkOrder {
+            step: 42,
+            w: Arc::new(vec![0.5, -1.25, 3.0]),
+            tasks: vec![
+                Task {
+                    g: 0,
+                    rows: RowRange::new(0, 10),
+                },
+                Task {
+                    g: 5,
+                    rows: RowRange::new(3, 3),
+                },
+            ],
+            row_cost_ns: 20_000,
+            straggle: Some(StraggleMode::Slow(3.5)),
+        }));
+    }
+
+    #[test]
+    fn report_and_control_roundtrip() {
+        roundtrip(WireMsg::Report(WorkerReport {
+            worker: 2,
+            step: 9,
+            segments: vec![Segment {
+                rows: RowRange::new(100, 103),
+                values: vec![1.0, 2.0, 3.0],
+            }],
+            measured_speed: Some(0.75),
+            elapsed: Duration::from_micros(1234),
+        }));
+        roundtrip(WireMsg::Failed {
+            worker: 1,
+            step: 4,
+            error: "backend init: no artifacts".into(),
+        });
+        roundtrip(WireMsg::Heartbeat { worker: 0, seq: 77 });
+        roundtrip(WireMsg::Shutdown);
+    }
+
+    #[test]
+    fn rejects_malformed_payloads() {
+        // unknown tag
+        assert!(decode(&[99]).is_err());
+        // truncated hello
+        let hello = encode(&WireMsg::Heartbeat { worker: 0, seq: 1 });
+        assert!(decode(&hello[..hello.len() - 1]).is_err());
+        // trailing garbage
+        let mut shutdown = encode(&WireMsg::Shutdown);
+        shutdown.push(0);
+        assert!(decode(&shutdown).is_err());
+        // bad magic
+        let mut h = encode(&WireMsg::Hello(Hello {
+            version: WIRE_VERSION,
+            worker: 0,
+            speed: 1.0,
+            tile_rows: 8,
+            backend: BackendKind::Host,
+            g: 1,
+            heartbeat_ms: 0,
+            workload: WorkloadSpec::RandomDense { q: 4, r: 4, seed: 0 },
+        }));
+        h[1] ^= 0xFF;
+        assert!(decode(&h).is_err());
+    }
+
+    #[test]
+    fn rejects_inconsistent_segment() {
+        // hand-build a report whose segment claims 3 rows but ships 2 values
+        let mut e = Enc::new(TAG_REPORT);
+        e.u32(0); // worker
+        e.u64(1); // step
+        e.u64(10); // elapsed ns
+        e.u8(0); // no speed
+        e.u32(1); // one segment
+        e.u64(5); // lo
+        e.u64(8); // hi (3 rows)
+        e.f32s(&[1.0, 2.0]); // only 2 values
+        assert!(decode(&e.buf).is_err());
+    }
+
+    #[test]
+    fn rejects_inverted_row_range() {
+        let mut e = Enc::new(TAG_WORK);
+        e.u64(0); // step
+        e.u64(0); // row_cost
+        e.u8(0); // no straggle
+        e.f32s(&[]); // empty iterate
+        e.u32(1); // one task
+        e.u32(0); // g
+        e.u64(9); // lo
+        e.u64(2); // hi < lo
+        assert!(decode(&e.buf).is_err());
+    }
+}

@@ -1,0 +1,299 @@
+//! Worker daemon: the remote end of [`super::TcpTransport`].
+//!
+//! `usec worker --listen host:port` runs [`serve_worker`]: accept a master
+//! connection, handshake (version check + workload materialization), then
+//! execute [`WorkOrder`]s through the exact same
+//! [`crate::sched::worker::execute_order`] compute path the in-process
+//! cluster uses — straggler injection, speed throttling and all — replying
+//! with framed [`WireMsg::Report`]s and pushing heartbeats from a side
+//! thread so liveness is visible even mid-compute.
+
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use crate::cli::{ArgSpec, Args};
+use crate::error::{Error, Result};
+use crate::linalg::partition::{submatrix_ranges, TilePlan};
+use crate::runtime::BackendSpec;
+use crate::sched::worker::{execute_order, WorkerConfig, WorkerStorage};
+
+use super::codec::{self, HelloAck, WireMsg, WIRE_VERSION};
+use super::lock;
+
+/// How long the daemon waits for the master's `Hello` before dropping a
+/// connection that never speaks.
+const HANDSHAKE_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// Daemon behaviour knobs.
+#[derive(Debug, Clone, Default)]
+pub struct DaemonOpts {
+    /// Exit after one master session instead of looping back to `accept`.
+    pub once: bool,
+}
+
+/// Accept master sessions forever (or once, per `opts`). Each session is
+/// serial: one master drives one worker daemon at a time, matching the
+/// paper's single-master Algorithm 1.
+pub fn serve_worker(listener: TcpListener, opts: DaemonOpts) -> Result<()> {
+    loop {
+        let (stream, peer_addr) = listener.accept()?;
+        let _ = stream.set_nodelay(true);
+        crate::log_info!("worker daemon: master connected from {peer_addr}");
+        match serve_session(stream) {
+            Ok(()) => crate::log_info!("worker daemon: session from {peer_addr} closed"),
+            Err(e) => crate::log_warn!("worker daemon: session from {peer_addr} ended: {e}"),
+        }
+        if opts.once {
+            return Ok(());
+        }
+    }
+}
+
+/// One master session: handshake, then order→report until `Shutdown` or
+/// the socket dies.
+fn serve_session(stream: TcpStream) -> Result<()> {
+    stream.set_read_timeout(Some(HANDSHAKE_TIMEOUT))?;
+    let hello = match codec::read_msg(&mut &stream)? {
+        WireMsg::Hello(h) => h,
+        other => return Err(Error::wire(format!("expected Hello, got {other:?}"))),
+    };
+    if hello.version != WIRE_VERSION {
+        return Err(Error::wire(format!(
+            "master speaks wire version {} (this daemon needs {WIRE_VERSION})",
+            hello.version
+        )));
+    }
+    if hello.tile_rows == 0 || hello.g == 0 || hello.workload.rows() == 0 {
+        return Err(Error::wire(format!(
+            "degenerate handshake geometry: tile_rows={} G={} q={}",
+            hello.tile_rows,
+            hello.g,
+            hello.workload.rows()
+        )));
+    }
+
+    // Materialize the uncoded storage this worker is responsible for. The
+    // generator is deterministic in the seed, so master and worker agree
+    // on every stored row without shipping the matrix.
+    let matrix = hello.workload.materialize()?;
+    let sub_ranges = Arc::new(submatrix_ranges(hello.workload.rows(), hello.g)?);
+    let cfg = WorkerConfig {
+        id: hello.worker,
+        backend: BackendSpec::from_kind(hello.backend, crate::apps::harness::artifact_dir()),
+        speed: hello.speed,
+        tile_rows: hello.tile_rows,
+        storage: WorkerStorage { matrix, sub_ranges },
+    };
+    let backend = cfg.backend.instantiate()?;
+
+    let writer = Arc::new(Mutex::new(stream.try_clone()?));
+    codec::write_msg(
+        &mut *lock(&writer),
+        &WireMsg::HelloAck(HelloAck {
+            version: WIRE_VERSION,
+            worker: hello.worker,
+        }),
+    )?;
+    stream.set_read_timeout(None)?;
+
+    // Heartbeat pump: keeps the master's liveness view fresh even while
+    // the session thread is deep in a long tile computation.
+    let stop = Arc::new(AtomicBool::new(false));
+    let hb_handle = if hello.heartbeat_ms > 0 {
+        let w = Arc::clone(&writer);
+        let stop2 = Arc::clone(&stop);
+        let period = Duration::from_millis(u64::from(hello.heartbeat_ms));
+        let id = hello.worker;
+        Some(std::thread::spawn(move || {
+            let mut seq = 0u64;
+            while !stop2.load(Ordering::Relaxed) {
+                std::thread::sleep(period);
+                if stop2.load(Ordering::Relaxed) {
+                    break;
+                }
+                seq += 1;
+                if codec::write_msg(&mut *lock(&w), &WireMsg::Heartbeat { worker: id, seq })
+                    .is_err()
+                {
+                    break;
+                }
+            }
+        }))
+    } else {
+        None
+    };
+
+    let tile = TilePlan::new(cfg.tile_rows);
+    let mut reader = stream;
+    let result = loop {
+        match codec::read_msg(&mut reader) {
+            Ok(WireMsg::Work(order)) => {
+                let step = order.step;
+                if let Err(e) = validate_order(&cfg, &order) {
+                    // a malformed order must produce a Failed reply, not a
+                    // panic that kills the daemon
+                    let _ = codec::write_msg(
+                        &mut *lock(&writer),
+                        &WireMsg::Failed {
+                            worker: cfg.id,
+                            step,
+                            error: e.to_string(),
+                        },
+                    );
+                    continue;
+                }
+                match execute_order(&cfg, &backend, &tile, &order) {
+                    Ok(Some(report)) => {
+                        if let Err(e) =
+                            codec::write_msg(&mut *lock(&writer), &WireMsg::Report(report))
+                        {
+                            break Err(e);
+                        }
+                    }
+                    Ok(None) => {} // injected Drop straggler: stay silent
+                    Err(e) => {
+                        let _ = codec::write_msg(
+                            &mut *lock(&writer),
+                            &WireMsg::Failed {
+                                worker: cfg.id,
+                                step,
+                                error: e.to_string(),
+                            },
+                        );
+                    }
+                }
+            }
+            Ok(WireMsg::Shutdown) => break Ok(()),
+            Ok(other) => {
+                crate::log_debug!("worker daemon: ignoring unexpected message {other:?}");
+            }
+            Err(e) => break Err(e),
+        }
+    };
+    stop.store(true, Ordering::Relaxed);
+    if let Some(h) = hb_handle {
+        let _ = h.join();
+    }
+    result
+}
+
+/// Reject orders that reference sub-matrices or rows this worker does not
+/// store — [`execute_order`] indexes them directly (the in-process cluster
+/// is trusted; a socket peer is not).
+fn validate_order(
+    cfg: &WorkerConfig,
+    order: &crate::sched::protocol::WorkOrder,
+) -> Result<()> {
+    for t in &order.tasks {
+        let sub = cfg.storage.sub_ranges.get(t.g).ok_or_else(|| {
+            Error::wire(format!(
+                "task references sub-matrix {} (worker stores {})",
+                t.g,
+                cfg.storage.sub_ranges.len()
+            ))
+        })?;
+        if t.rows.hi > sub.len() {
+            return Err(Error::wire(format!(
+                "task rows {}..{} exceed sub-matrix {} ({} rows)",
+                t.rows.lo,
+                t.rows.hi,
+                t.g,
+                sub.len()
+            )));
+        }
+    }
+    if order.w.len() != cfg.storage.matrix.cols() {
+        return Err(Error::wire(format!(
+            "iterate length {} != matrix cols {}",
+            order.w.len(),
+            cfg.storage.matrix.cols()
+        )));
+    }
+    Ok(())
+}
+
+/// `usec worker --listen host:port [--once]`.
+pub fn worker_cli(argv: &[String]) -> Result<()> {
+    let specs = vec![
+        ArgSpec::opt("listen", "127.0.0.1:7070", "address to bind"),
+        ArgSpec::flag("once", "exit after a single master session"),
+    ];
+    let args = Args::parse(argv, &specs)?;
+    let addr = args.get("listen").unwrap_or("127.0.0.1:7070");
+    let listener = TcpListener::bind(addr)
+        .map_err(|e| Error::Cluster(format!("bind {addr}: {e}")))?;
+    println!("usec worker listening on {}", listener.local_addr()?);
+    serve_worker(
+        listener,
+        DaemonOpts {
+            once: args.has("once"),
+        },
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::types::BackendKind;
+    use crate::net::codec::Hello;
+    use crate::net::transport::WorkloadSpec;
+
+    fn test_hello(worker: usize) -> Hello {
+        Hello {
+            version: WIRE_VERSION,
+            worker,
+            speed: 1.0,
+            tile_rows: 8,
+            backend: BackendKind::Host,
+            g: 2,
+            heartbeat_ms: 0,
+            workload: WorkloadSpec::RandomDense {
+                q: 16,
+                r: 16,
+                seed: 5,
+            },
+        }
+    }
+
+    #[test]
+    fn daemon_rejects_version_mismatch() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let h = std::thread::spawn(move || serve_worker(listener, DaemonOpts { once: true }));
+
+        let stream = TcpStream::connect(addr).unwrap();
+        let mut bad = test_hello(0);
+        bad.version = 999;
+        codec::write_msg(&mut &stream, &WireMsg::Hello(bad)).unwrap();
+        // daemon must close without an ack: next read errors (EOF)
+        stream
+            .set_read_timeout(Some(Duration::from_secs(5)))
+            .unwrap();
+        assert!(codec::read_msg(&mut &stream).is_err());
+        h.join().unwrap().unwrap();
+    }
+
+    #[test]
+    fn daemon_handshakes_and_shuts_down() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let h = std::thread::spawn(move || serve_worker(listener, DaemonOpts { once: true }));
+
+        let stream = TcpStream::connect(addr).unwrap();
+        stream
+            .set_read_timeout(Some(Duration::from_secs(5)))
+            .unwrap();
+        codec::write_msg(&mut &stream, &WireMsg::Hello(test_hello(4))).unwrap();
+        match codec::read_msg(&mut &stream).unwrap() {
+            WireMsg::HelloAck(ack) => {
+                assert_eq!(ack.version, WIRE_VERSION);
+                assert_eq!(ack.worker, 4);
+            }
+            other => panic!("expected HelloAck, got {other:?}"),
+        }
+        codec::write_msg(&mut &stream, &WireMsg::Shutdown).unwrap();
+        h.join().unwrap().unwrap();
+    }
+}

@@ -1,0 +1,107 @@
+//! Length-prefixed framing for the TCP wire protocol.
+//!
+//! Every message travels as one frame:
+//!
+//! ```text
+//! +-------------+----------------------+
+//! | len: u32 LE | payload (len bytes)  |
+//! +-------------+----------------------+
+//! ```
+//!
+//! The payload is a tagged message body (see [`super::codec`]). Frames are
+//! bounded by [`MAX_FRAME`]; an oversized or zero length is rejected before
+//! any allocation, so a corrupt peer cannot make the reader balloon.
+
+use std::io::{Read, Write};
+
+use crate::error::{Error, Result};
+
+/// Upper bound on a single frame payload (256 MiB). A `WorkOrder` for a
+/// `q`-row iterate is about `4q` bytes, so this admits `q` up to ~64M rows
+/// while still rejecting garbage length prefixes immediately.
+pub const MAX_FRAME: usize = 1 << 28;
+
+/// Write one frame (length prefix + payload) and flush.
+pub fn write_frame<W: Write>(w: &mut W, payload: &[u8]) -> Result<()> {
+    if payload.is_empty() {
+        return Err(Error::wire("refusing to write an empty frame"));
+    }
+    if payload.len() > MAX_FRAME {
+        return Err(Error::wire(format!(
+            "frame of {} bytes exceeds MAX_FRAME ({MAX_FRAME})",
+            payload.len()
+        )));
+    }
+    let len = (payload.len() as u32).to_le_bytes();
+    w.write_all(&len)?;
+    w.write_all(payload)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Read one frame payload. Fails on EOF, a zero length, or a length beyond
+/// [`MAX_FRAME`].
+pub fn read_frame<R: Read>(r: &mut R) -> Result<Vec<u8>> {
+    let mut len_buf = [0u8; 4];
+    r.read_exact(&mut len_buf)?;
+    let len = u32::from_le_bytes(len_buf) as usize;
+    if len == 0 {
+        return Err(Error::wire("zero-length frame"));
+    }
+    if len > MAX_FRAME {
+        return Err(Error::wire(format!(
+            "declared frame length {len} exceeds MAX_FRAME ({MAX_FRAME})"
+        )));
+    }
+    let mut payload = vec![0u8; len];
+    r.read_exact(&mut payload)?;
+    Ok(payload)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn roundtrip_single_frame() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, b"hello usec").unwrap();
+        let mut c = Cursor::new(buf);
+        assert_eq!(read_frame(&mut c).unwrap(), b"hello usec");
+    }
+
+    #[test]
+    fn roundtrip_back_to_back_frames() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &[1, 2, 3]).unwrap();
+        write_frame(&mut buf, &[4]).unwrap();
+        let mut c = Cursor::new(buf);
+        assert_eq!(read_frame(&mut c).unwrap(), vec![1, 2, 3]);
+        assert_eq!(read_frame(&mut c).unwrap(), vec![4]);
+        assert!(read_frame(&mut c).is_err(), "EOF must error");
+    }
+
+    #[test]
+    fn rejects_zero_and_oversized_lengths() {
+        let mut c = Cursor::new(vec![0, 0, 0, 0]);
+        assert!(read_frame(&mut c).is_err());
+
+        // length prefix claiming 1 GiB
+        let huge = (1u32 << 30).to_le_bytes().to_vec();
+        let mut c = Cursor::new(huge);
+        assert!(read_frame(&mut c).is_err());
+
+        let mut out = Vec::new();
+        assert!(write_frame(&mut out, &[]).is_err());
+    }
+
+    #[test]
+    fn truncated_payload_errors() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &[9; 16]).unwrap();
+        buf.truncate(10); // header + partial payload
+        let mut c = Cursor::new(buf);
+        assert!(read_frame(&mut c).is_err());
+    }
+}

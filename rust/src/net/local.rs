@@ -1,0 +1,220 @@
+//! In-process transport: worker threads over mpsc channels.
+//!
+//! This is the seed repo's original data path, now behind the
+//! [`Transport`] trait. The hot-path property it must preserve: the
+//! iterate `w_t` travels as an `Arc` clone inside the [`WorkOrder`] — no
+//! serialization, no copy — so `LocalTransport` adds zero overhead over
+//! calling the [`Cluster`] directly.
+
+use std::time::Duration;
+
+use crate::error::{Error, Result};
+use crate::sched::cluster::Cluster;
+use crate::sched::protocol::{ToMaster, WorkOrder};
+use crate::sched::worker::WorkerConfig;
+
+use super::transport::{Transport, TransportEvent};
+
+fn event_of(m: ToMaster) -> TransportEvent {
+    match m {
+        ToMaster::Report(r) => TransportEvent::Report(r),
+        ToMaster::Failed {
+            worker,
+            step,
+            error,
+        } => TransportEvent::Failed {
+            worker,
+            step,
+            error,
+        },
+    }
+}
+
+/// Worker threads connected by mpsc channels — the zero-copy local mode.
+pub struct LocalTransport {
+    cluster: Option<Cluster>,
+}
+
+impl LocalTransport {
+    /// Spawn one worker thread per config.
+    pub fn spawn(configs: Vec<WorkerConfig>) -> Result<LocalTransport> {
+        Ok(LocalTransport {
+            cluster: Some(Cluster::spawn(configs)?),
+        })
+    }
+
+    fn cluster(&self) -> Result<&Cluster> {
+        self.cluster
+            .as_ref()
+            .ok_or_else(|| Error::Cluster("local transport already shut down".into()))
+    }
+}
+
+impl Transport for LocalTransport {
+    fn size(&self) -> usize {
+        self.cluster.as_ref().map_or(0, |c| c.size())
+    }
+
+    fn alive(&self) -> Vec<bool> {
+        // Worker threads only exit on Shutdown; a panicked worker surfaces
+        // as a closed channel at `send`, which the master tolerates.
+        vec![true; self.size()]
+    }
+
+    fn send(&self, worker: usize, order: WorkOrder) -> Result<()> {
+        self.cluster()?.send(worker, order)
+    }
+
+    fn recv_timeout(&self, timeout: Duration) -> Result<TransportEvent> {
+        Ok(event_of(self.cluster()?.recv_timeout(timeout)?))
+    }
+
+    fn drain(&self) -> Vec<TransportEvent> {
+        match &self.cluster {
+            Some(c) => c.drain().into_iter().map(event_of).collect(),
+            None => Vec::new(),
+        }
+    }
+
+    fn shutdown(&mut self) {
+        if let Some(c) = self.cluster.take() {
+            c.shutdown();
+        }
+    }
+}
+
+/// The bare [`Cluster`] is itself a transport, so existing call sites
+/// (`master.step(&cluster, ...)` in tests and benches) keep working
+/// unchanged.
+impl Transport for Cluster {
+    fn size(&self) -> usize {
+        Cluster::size(self)
+    }
+
+    fn alive(&self) -> Vec<bool> {
+        vec![true; Cluster::size(self)]
+    }
+
+    fn send(&self, worker: usize, order: WorkOrder) -> Result<()> {
+        Cluster::send(self, worker, order)
+    }
+
+    fn recv_timeout(&self, timeout: Duration) -> Result<TransportEvent> {
+        Ok(event_of(Cluster::recv_timeout(self, timeout)?))
+    }
+
+    fn drain(&self) -> Vec<TransportEvent> {
+        Cluster::drain(self).into_iter().map(event_of).collect()
+    }
+
+    fn shutdown(&mut self) {
+        self.halt();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::partition::submatrix_ranges;
+    use crate::linalg::gen;
+    use crate::optim::Task;
+    use crate::runtime::BackendSpec;
+    use crate::sched::worker::WorkerStorage;
+    use std::sync::Arc;
+
+    fn transport(n: usize) -> LocalTransport {
+        let q = 40;
+        let matrix = Arc::new(gen::random_dense(q, q, 3));
+        let ranges = Arc::new(submatrix_ranges(q, 4).unwrap());
+        let configs = (0..n)
+            .map(|id| WorkerConfig {
+                id,
+                backend: BackendSpec::Host,
+                speed: 1.0,
+                tile_rows: 8,
+                storage: WorkerStorage {
+                    matrix: Arc::clone(&matrix),
+                    sub_ranges: Arc::clone(&ranges),
+                },
+            })
+            .collect();
+        LocalTransport::spawn(configs).unwrap()
+    }
+
+    #[test]
+    fn local_transport_reports_through_trait() {
+        let t = transport(2);
+        assert_eq!(t.size(), 2);
+        assert!(t.alive().iter().all(|&a| a));
+        for id in 0..2 {
+            t.send(
+                id,
+                WorkOrder {
+                    step: 1,
+                    w: Arc::new(vec![0.5; 40]),
+                    tasks: vec![Task {
+                        g: id,
+                        rows: crate::linalg::partition::RowRange::new(0, 5),
+                    }],
+                    row_cost_ns: 0,
+                    straggle: None,
+                },
+            )
+            .unwrap();
+        }
+        let mut seen = 0;
+        for _ in 0..2 {
+            match t.recv_timeout(Duration::from_secs(5)).unwrap() {
+                TransportEvent::Report(r) => {
+                    assert_eq!(r.step, 1);
+                    seen += 1;
+                }
+                other => panic!("unexpected event {other:?}"),
+            }
+        }
+        assert_eq!(seen, 2);
+        let mut t = t;
+        t.shutdown();
+        assert!(t.send(0, WorkOrder {
+            step: 2,
+            w: Arc::new(vec![]),
+            tasks: vec![],
+            row_cost_ns: 0,
+            straggle: None,
+        })
+        .is_err());
+    }
+
+    #[test]
+    fn zero_copy_data_plane_preserved() {
+        // the iterate must cross the local transport as an Arc clone, not a
+        // serialized copy: strong_count rises while the order is in flight
+        let t = transport(1);
+        let w = Arc::new(vec![0.25f32; 40]);
+        t.send(
+            0,
+            WorkOrder {
+                step: 0,
+                w: Arc::clone(&w),
+                tasks: vec![],
+                row_cost_ns: 0,
+                straggle: None,
+            },
+        )
+        .unwrap();
+        match t.recv_timeout(Duration::from_secs(5)).unwrap() {
+            TransportEvent::Report(r) => assert!(r.segments.is_empty()),
+            other => panic!("unexpected event {other:?}"),
+        }
+        // after the worker finished, only our handle remains (the worker
+        // may still be dropping its clone when the report lands — poll)
+        for _ in 0..200 {
+            if Arc::strong_count(&w) == 1 {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert_eq!(Arc::strong_count(&w), 1, "iterate was not Arc-shared");
+        drop(t);
+    }
+}

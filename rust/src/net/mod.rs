@@ -1,0 +1,121 @@
+//! Pluggable master↔worker transport: in-process channels or real sockets.
+//!
+//! The paper's Algorithm 1 is a distributed protocol — a master ships
+//! per-step work orders to elastic workers and assembles their reports.
+//! This module abstracts *how* those messages travel:
+//!
+//! * [`LocalTransport`] — worker OS threads over mpsc channels (the
+//!   simulator mode). The iterate `w_t` is shared by `Arc`, zero-copy.
+//! * [`TcpTransport`] + [`daemon::serve_worker`] — worker processes over
+//!   TCP with explicit little-endian framing ([`frame`], [`codec`]), a
+//!   versioned handshake, and heartbeat-based liveness. A dropped
+//!   connection becomes a preemption: the worker leaves the availability
+//!   set at the next step, exactly as if the elasticity trace had removed
+//!   it.
+//!
+//! ## Wire format
+//!
+//! Frames are `len: u32 LE` + payload ([`frame`], bounded by
+//! [`frame::MAX_FRAME`]); payloads are tagged messages ([`codec`]):
+//!
+//! | tag | message | direction |
+//! |-----|-------------|-----------|
+//! | 1 | `Hello` (magic, version, id, speed, tile, backend, G, heartbeat, workload) | master → worker |
+//! | 2 | `HelloAck` (version, id) | worker → master |
+//! | 3 | `Work` (step, cost, straggle, iterate, tasks) | master → worker |
+//! | 4 | `Report` (id, step, elapsed, speed, segments) | worker → master |
+//! | 5 | `Failed` (id, step, error) | worker → master |
+//! | 6 | `Heartbeat` (id, seq) | worker → master |
+//! | 7 | `Shutdown` | master → worker |
+//!
+//! ## Distributed quickstart
+//!
+//! Terminal 1–3 (workers), terminal 4 (master):
+//!
+//! ```text
+//! usec worker --listen 127.0.0.1:7701
+//! usec worker --listen 127.0.0.1:7702
+//! usec worker --listen 127.0.0.1:7703
+//! usec master --workers 127.0.0.1:7701,127.0.0.1:7702,127.0.0.1:7703 \
+//!      --q 1536 --g 3 --j 3 --placement cyclic --stragglers 1
+//! ```
+//!
+//! Workers materialize their (uncoded) storage from the workload spec in
+//! the handshake — deterministic generators mean no gigabytes cross the
+//! wire. See `examples/distributed_quickstart.rs` for the same flow in
+//! one process.
+
+pub mod codec;
+pub mod daemon;
+pub mod frame;
+pub mod local;
+pub mod tcp;
+pub mod transport;
+
+pub use codec::{Hello, HelloAck, WireMsg, WIRE_VERSION};
+pub use local::LocalTransport;
+pub use tcp::{TcpOptions, TcpPeer, TcpTransport, DEFAULT_HEARTBEAT_MS};
+pub use transport::{Transport, TransportEvent, WorkloadSpec};
+
+use std::sync::{Mutex, MutexGuard};
+use std::time::Duration;
+
+use crate::error::Result;
+use crate::sched::protocol::WorkOrder;
+
+/// Poison-tolerant mutex lock (a panicked writer must not wedge liveness
+/// bookkeeping).
+pub(crate) fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+/// Enum dispatch over the built-in transports, so [`crate::apps::harness`]
+/// can hold either without boxing (mirrors [`crate::runtime::Backend`]).
+pub enum AnyTransport {
+    Local(LocalTransport),
+    Tcp(TcpTransport),
+}
+
+impl Transport for AnyTransport {
+    fn size(&self) -> usize {
+        match self {
+            AnyTransport::Local(t) => t.size(),
+            AnyTransport::Tcp(t) => t.size(),
+        }
+    }
+
+    fn alive(&self) -> Vec<bool> {
+        match self {
+            AnyTransport::Local(t) => t.alive(),
+            AnyTransport::Tcp(t) => t.alive(),
+        }
+    }
+
+    fn send(&self, worker: usize, order: WorkOrder) -> Result<()> {
+        match self {
+            AnyTransport::Local(t) => t.send(worker, order),
+            AnyTransport::Tcp(t) => t.send(worker, order),
+        }
+    }
+
+    fn recv_timeout(&self, timeout: Duration) -> Result<TransportEvent> {
+        match self {
+            AnyTransport::Local(t) => t.recv_timeout(timeout),
+            AnyTransport::Tcp(t) => t.recv_timeout(timeout),
+        }
+    }
+
+    fn drain(&self) -> Vec<TransportEvent> {
+        match self {
+            AnyTransport::Local(t) => t.drain(),
+            AnyTransport::Tcp(t) => t.drain(),
+        }
+    }
+
+    fn shutdown(&mut self) {
+        match self {
+            AnyTransport::Local(t) => t.shutdown(),
+            AnyTransport::Tcp(t) => t.shutdown(),
+        }
+    }
+}

@@ -1,0 +1,290 @@
+//! TCP transport (master side): framed binary protocol + liveness.
+//!
+//! [`TcpTransport::connect`] dials every worker daemon, performs the
+//! versioned [`Hello`]/[`HelloAck`] handshake, and spawns one reader thread
+//! per connection that funnels decoded [`TransportEvent`]s into a single
+//! channel the master drains. Liveness is two-layered:
+//!
+//! * **Socket-level** — a read error or EOF on a worker's connection marks
+//!   it dead and emits [`TransportEvent::Disconnected`]; the master's
+//!   availability set shrinks at the next step, exactly like a cloud
+//!   preemption in the elasticity trace.
+//! * **Heartbeat-level** — workers push [`WireMsg::Heartbeat`] every
+//!   `heartbeat_ms`; [`Transport::alive`] also reports a worker dead when
+//!   nothing (report or heartbeat) arrived within `liveness_window`, which
+//!   catches half-open connections that never error.
+
+use std::net::{Shutdown, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{self, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::error::{Error, Result};
+use crate::sched::protocol::WorkOrder;
+
+use super::codec::{self, Hello, WireMsg, WIRE_VERSION};
+use super::lock;
+use super::transport::{Transport, TransportEvent};
+
+/// Default worker → master heartbeat period.
+pub const DEFAULT_HEARTBEAT_MS: u32 = 500;
+
+/// One worker endpoint to dial.
+#[derive(Debug, Clone)]
+pub struct TcpPeer {
+    /// `host:port` of a running `usec worker` daemon.
+    pub addr: String,
+    /// Handshake payload (worker id and version are overwritten by
+    /// [`TcpTransport::connect`] with the peer's index and
+    /// [`WIRE_VERSION`]).
+    pub hello: Hello,
+}
+
+/// Master-side tuning knobs.
+#[derive(Debug, Clone)]
+pub struct TcpOptions {
+    /// Read timeout for the handshake exchange.
+    pub handshake_timeout: Duration,
+    /// A worker with no traffic (report/heartbeat) for this long counts as
+    /// dead in [`Transport::alive`]. Zero disables staleness detection
+    /// (socket errors still apply).
+    pub liveness_window: Duration,
+}
+
+impl Default for TcpOptions {
+    fn default() -> Self {
+        TcpOptions {
+            handshake_timeout: Duration::from_secs(10),
+            liveness_window: Duration::from_millis(u64::from(DEFAULT_HEARTBEAT_MS) * 8),
+        }
+    }
+}
+
+struct Peer {
+    writer: Mutex<TcpStream>,
+    alive: AtomicBool,
+    last_seen: Mutex<Instant>,
+    /// Staleness bound for this peer; `ZERO` when its heartbeats are
+    /// disabled (then only socket errors mark it dead).
+    liveness_window: Duration,
+}
+
+impl Peer {
+    fn touch(&self) {
+        *lock(&self.last_seen) = Instant::now();
+    }
+}
+
+/// Master ↔ workers over length-prefixed TCP frames.
+pub struct TcpTransport {
+    peers: Vec<Arc<Peer>>,
+    events: Receiver<TransportEvent>,
+    /// Keeps the channel open even after every reader thread exits, so
+    /// `recv_timeout` reports timeouts instead of disconnection errors.
+    _event_tx: Sender<TransportEvent>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl TcpTransport {
+    /// Dial and handshake every worker. Fails fast if any worker is
+    /// unreachable or speaks the wrong protocol version.
+    pub fn connect(peers_cfg: Vec<TcpPeer>, opts: TcpOptions) -> Result<TcpTransport> {
+        if peers_cfg.is_empty() {
+            return Err(Error::Config("no workers to connect to".into()));
+        }
+        let (tx, rx) = mpsc::channel();
+        let mut peers = Vec::with_capacity(peers_cfg.len());
+        let mut handles = Vec::with_capacity(peers_cfg.len());
+        for (id, pc) in peers_cfg.into_iter().enumerate() {
+            let stream = TcpStream::connect(&pc.addr).map_err(|e| {
+                Error::Cluster(format!("connect worker {id} at {}: {e}", pc.addr))
+            })?;
+            let _ = stream.set_nodelay(true);
+            stream.set_read_timeout(Some(opts.handshake_timeout))?;
+
+            let mut hello = pc.hello.clone();
+            hello.worker = id;
+            hello.version = WIRE_VERSION;
+            // a peer that sends no heartbeats must not be declared stale
+            let liveness_window = if hello.heartbeat_ms == 0 {
+                Duration::ZERO
+            } else {
+                opts.liveness_window
+            };
+            codec::write_msg(&mut &stream, &WireMsg::Hello(hello))?;
+            match codec::read_msg(&mut &stream).map_err(|e| {
+                Error::Cluster(format!("handshake with worker {id} at {}: {e}", pc.addr))
+            })? {
+                WireMsg::HelloAck(ack) => {
+                    if ack.version != WIRE_VERSION {
+                        return Err(Error::wire(format!(
+                            "worker {id} speaks wire version {} (need {WIRE_VERSION})",
+                            ack.version
+                        )));
+                    }
+                    if ack.worker != id {
+                        return Err(Error::wire(format!(
+                            "worker at {} acknowledged as id {} (expected {id})",
+                            pc.addr, ack.worker
+                        )));
+                    }
+                }
+                other => {
+                    return Err(Error::wire(format!(
+                        "worker {id} handshake: expected HelloAck, got {other:?}"
+                    )))
+                }
+            }
+            stream.set_read_timeout(None)?;
+
+            let reader = stream.try_clone()?;
+            let peer = Arc::new(Peer {
+                writer: Mutex::new(stream),
+                alive: AtomicBool::new(true),
+                last_seen: Mutex::new(Instant::now()),
+                liveness_window,
+            });
+            let peer2 = Arc::clone(&peer);
+            let tx2 = tx.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("usec-net-rx-{id}"))
+                .spawn(move || reader_loop(id, reader, peer2, tx2))
+                .map_err(|e| Error::Cluster(format!("spawn reader {id}: {e}")))?;
+            peers.push(peer);
+            handles.push(handle);
+        }
+        Ok(TcpTransport {
+            peers,
+            events: rx,
+            _event_tx: tx,
+            handles,
+        })
+    }
+
+    /// Sever one worker's connection (both directions) — chaos hook for
+    /// tests and the scripted-preemption integration suite. The reader
+    /// thread observes the broken socket and emits `Disconnected`; the
+    /// worker daemon sees EOF and ends its session.
+    pub fn kill(&self, worker: usize) {
+        if let Some(p) = self.peers.get(worker) {
+            p.alive.store(false, Ordering::Relaxed);
+            let s = lock(&p.writer);
+            let _ = s.shutdown(Shutdown::Both);
+        }
+    }
+
+    fn halt(&mut self) {
+        for p in &self.peers {
+            if p.alive.swap(false, Ordering::Relaxed) {
+                let mut s = lock(&p.writer);
+                let _ = codec::write_msg(&mut *s, &WireMsg::Shutdown);
+                let _ = s.shutdown(Shutdown::Both);
+            } else {
+                let s = lock(&p.writer);
+                let _ = s.shutdown(Shutdown::Both);
+            }
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn reader_loop(
+    id: usize,
+    mut stream: TcpStream,
+    peer: Arc<Peer>,
+    tx: Sender<TransportEvent>,
+) {
+    loop {
+        match codec::read_msg(&mut stream) {
+            Ok(WireMsg::Report(mut r)) => {
+                peer.touch();
+                // the connection, not the payload, is authoritative for
+                // identity — a buggy/malicious peer cannot impersonate
+                // another worker or smuggle an out-of-range id
+                r.worker = id;
+                let _ = tx.send(TransportEvent::Report(r));
+            }
+            Ok(WireMsg::Failed { step, error, .. }) => {
+                peer.touch();
+                let _ = tx.send(TransportEvent::Failed {
+                    worker: id,
+                    step,
+                    error,
+                });
+            }
+            Ok(WireMsg::Heartbeat { .. }) => peer.touch(),
+            Ok(other) => {
+                crate::log_debug!("worker {id}: ignoring unexpected message {other:?}");
+            }
+            Err(e) => {
+                // EOF, reset, or a framing error: either way the stream is
+                // unusable — this worker is preempted until reconnect.
+                if peer.alive.swap(false, Ordering::Relaxed) {
+                    crate::log_warn!("worker {id} connection lost: {e}");
+                }
+                let _ = tx.send(TransportEvent::Disconnected { worker: id });
+                return;
+            }
+        }
+    }
+}
+
+impl Transport for TcpTransport {
+    fn size(&self) -> usize {
+        self.peers.len()
+    }
+
+    fn alive(&self) -> Vec<bool> {
+        self.peers
+            .iter()
+            .map(|p| {
+                p.alive.load(Ordering::Relaxed)
+                    && (p.liveness_window.is_zero()
+                        || lock(&p.last_seen).elapsed() <= p.liveness_window)
+            })
+            .collect()
+    }
+
+    fn send(&self, worker: usize, order: WorkOrder) -> Result<()> {
+        let p = self
+            .peers
+            .get(worker)
+            .ok_or_else(|| Error::Cluster(format!("no worker {worker}")))?;
+        if !p.alive.load(Ordering::Relaxed) {
+            return Err(Error::Cluster(format!("worker {worker} is disconnected")));
+        }
+        let mut s = lock(&p.writer);
+        codec::write_msg(&mut *s, &WireMsg::Work(order)).map_err(|e| {
+            p.alive.store(false, Ordering::Relaxed);
+            Error::Cluster(format!("send to worker {worker}: {e}"))
+        })
+    }
+
+    fn recv_timeout(&self, timeout: Duration) -> Result<TransportEvent> {
+        self.events
+            .recv_timeout(timeout)
+            .map_err(|e| Error::Cluster(format!("recv: {e}")))
+    }
+
+    fn drain(&self) -> Vec<TransportEvent> {
+        let mut out = Vec::new();
+        while let Ok(ev) = self.events.try_recv() {
+            out.push(ev);
+        }
+        out
+    }
+
+    fn shutdown(&mut self) {
+        self.halt();
+    }
+}
+
+impl Drop for TcpTransport {
+    fn drop(&mut self) {
+        self.halt();
+    }
+}

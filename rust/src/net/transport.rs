@@ -1,0 +1,170 @@
+//! The master↔worker channel abstraction.
+//!
+//! [`Transport`] is everything the elastic master needs from its
+//! communication substrate: ship a [`WorkOrder`] to a worker, receive
+//! [`TransportEvent`]s (reports, failures, membership changes), and observe
+//! liveness. Two implementations exist:
+//!
+//! * [`crate::net::LocalTransport`] — in-process worker threads over mpsc
+//!   channels; the data plane ships `Arc`'d iterates, zero-copy.
+//! * [`crate::net::TcpTransport`] — length-prefixed binary frames over TCP
+//!   sockets to worker daemon processes; a dropped connection surfaces as a
+//!   [`TransportEvent::Disconnected`], i.e. a preemption in the
+//!   `ElasticityTrace` sense.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::error::{Error, Result};
+use crate::linalg::Matrix;
+use crate::sched::protocol::{WorkOrder, WorkerReport};
+
+/// Something that happened on the worker side of a transport.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TransportEvent {
+    /// A worker finished (part of) a step and reported its segments.
+    Report(WorkerReport),
+    /// A worker hit a recoverable execution failure (backend init, shape
+    /// mismatch, injected failure) but its channel is still up.
+    Failed {
+        worker: usize,
+        step: usize,
+        error: String,
+    },
+    /// A worker's channel died (socket closed, heartbeat lapsed, thread
+    /// gone). The master treats this as a preemption: the worker leaves the
+    /// availability set until the transport says otherwise.
+    Disconnected { worker: usize },
+}
+
+/// Master-side view of a worker communication substrate.
+///
+/// Implementations must be usable from a single master thread; `send` and
+/// `recv_timeout` take `&self` so the master can interleave dispatch and
+/// collection without re-borrowing.
+pub trait Transport {
+    /// Number of workers this transport was built with (dead or alive).
+    fn size(&self) -> usize;
+
+    /// Liveness snapshot, indexed by worker id. Workers that disconnected
+    /// (or whose heartbeats lapsed) are `false` and stay out of the
+    /// availability set until the transport reports them alive again.
+    fn alive(&self) -> Vec<bool>;
+
+    /// Ship one step's work order to a worker. Errors are per-worker and
+    /// non-fatal to the step: the master logs and relies on redundancy.
+    fn send(&self, worker: usize, order: WorkOrder) -> Result<()>;
+
+    /// Blocking receive with timeout.
+    fn recv_timeout(&self, timeout: Duration) -> Result<TransportEvent>;
+
+    /// Drain pending events without blocking (late reports between steps).
+    fn drain(&self) -> Vec<TransportEvent>;
+
+    /// Tear the transport down (stop workers / close sockets). Idempotent.
+    fn shutdown(&mut self);
+}
+
+/// Deterministic description of the data matrix a distributed run computes
+/// over.
+///
+/// USEC's storage model places the (uncoded) sub-matrices on the workers
+/// *before* the computation starts. Over TCP we reproduce that by shipping
+/// the generator spec in the handshake instead of streaming gigabytes of
+/// matrix: every generator in [`crate::linalg::gen`] is deterministic in
+/// its seed, so master and workers materialize bit-identical storage.
+#[derive(Debug, Clone, PartialEq)]
+pub enum WorkloadSpec {
+    /// [`crate::linalg::gen::planted_symmetric`] — the power-iteration
+    /// workload with a planted dominant eigenpair.
+    PlantedSymmetric {
+        q: usize,
+        eigval: f64,
+        gap: f64,
+        seed: u64,
+    },
+    /// [`crate::linalg::gen::random_dense`] — generic dense workloads.
+    RandomDense { q: usize, r: usize, seed: u64 },
+}
+
+impl WorkloadSpec {
+    /// Matrix rows.
+    pub fn rows(&self) -> usize {
+        match self {
+            WorkloadSpec::PlantedSymmetric { q, .. } => *q,
+            WorkloadSpec::RandomDense { q, .. } => *q,
+        }
+    }
+
+    /// Matrix columns.
+    pub fn cols(&self) -> usize {
+        match self {
+            WorkloadSpec::PlantedSymmetric { q, .. } => *q,
+            WorkloadSpec::RandomDense { r, .. } => *r,
+        }
+    }
+
+    /// Regenerate the data matrix this spec describes. Validates the
+    /// parameters first so a malformed handshake cannot trip the
+    /// generators' asserts and panic a worker daemon.
+    pub fn materialize(&self) -> Result<Arc<Matrix>> {
+        let m = match self {
+            WorkloadSpec::PlantedSymmetric {
+                q,
+                eigval,
+                gap,
+                seed,
+            } => {
+                if *q == 0 || !(0.0..1.0).contains(gap) || !eigval.is_finite() {
+                    return Err(Error::wire(format!(
+                        "invalid planted-symmetric spec: q={q} eigval={eigval} gap={gap}"
+                    )));
+                }
+                crate::linalg::gen::planted_symmetric(*q, *eigval, *gap, *seed).matrix
+            }
+            WorkloadSpec::RandomDense { q, r, seed } => {
+                if *q == 0 || *r == 0 {
+                    return Err(Error::wire(format!(
+                        "invalid random-dense spec: {q}x{r}"
+                    )));
+                }
+                crate::linalg::gen::random_dense(*q, *r, *seed)
+            }
+        };
+        Ok(Arc::new(m))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn workload_spec_is_deterministic() {
+        let spec = WorkloadSpec::PlantedSymmetric {
+            q: 24,
+            eigval: 10.0,
+            gap: 0.35,
+            seed: 9,
+        };
+        let a = spec.materialize().unwrap();
+        let b = spec.materialize().unwrap();
+        assert_eq!(a.rows(), 24);
+        assert_eq!(a.cols(), 24);
+        for r in 0..24 {
+            assert_eq!(a.row(r), b.row(r), "row {r} differs between builds");
+        }
+    }
+
+    #[test]
+    fn workload_spec_dims() {
+        let spec = WorkloadSpec::RandomDense {
+            q: 8,
+            r: 5,
+            seed: 1,
+        };
+        assert_eq!(spec.rows(), 8);
+        assert_eq!(spec.cols(), 5);
+        assert_eq!(spec.materialize().unwrap().cols(), 5);
+    }
+}

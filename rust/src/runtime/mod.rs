@@ -16,6 +16,17 @@
 pub mod host;
 pub mod manifest;
 pub mod pjrt;
+#[cfg(not(feature = "xla"))]
+pub mod xla_stub;
+
+// The `xla` feature swaps the stub for the real PJRT bindings, which are
+// not vendored in the offline crate set. Fail loudly at compile time
+// instead of with a wall of unresolved-path errors.
+#[cfg(feature = "xla")]
+compile_error!(
+    "the `xla` feature requires vendoring the `xla` crate as a dependency \
+     (see Cargo.toml); the default build uses runtime::xla_stub instead"
+);
 
 pub use manifest::Manifest;
 

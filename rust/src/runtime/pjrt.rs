@@ -13,6 +13,9 @@
 
 use std::path::Path;
 
+#[cfg(not(feature = "xla"))]
+use crate::runtime::xla_stub as xla;
+
 use crate::error::{Error, Result};
 
 use super::manifest::Manifest;

@@ -1,0 +1,117 @@
+//! Build-time stub for the `xla` PJRT bindings.
+//!
+//! The offline crate set does not vendor the `xla` crate, so the default
+//! build aliases `xla::` to this module (see [`super::pjrt`] and
+//! [`crate::error`]). Every entry point fails fast at
+//! [`PjRtClient::cpu`], which means [`super::pjrt::PjrtBackend::load`]
+//! returns a clear "not compiled in" error and nothing downstream ever
+//! executes. Enabling the `xla` cargo feature (with a vendored `xla`
+//! dependency) swaps the real bindings back in without touching the
+//! backend code.
+
+use std::fmt;
+
+/// Stand-in for `xla::Error`.
+#[derive(Debug)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+fn unavailable<T>() -> Result<T, Error> {
+    Err(Error(
+        "PJRT support not compiled in (build with `--features xla` and a \
+         vendored xla crate, or use the host backend)"
+            .into(),
+    ))
+}
+
+/// Stand-in for `xla::PjRtClient`.
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient, Error> {
+        unavailable()
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable, Error> {
+        unavailable()
+    }
+}
+
+/// Stand-in for `xla::HloModuleProto`.
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto, Error> {
+        unavailable()
+    }
+}
+
+/// Stand-in for `xla::XlaComputation`.
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// Stand-in for `xla::PjRtLoadedExecutable`.
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+        unavailable()
+    }
+}
+
+/// Stand-in for `xla::PjRtBuffer`.
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, Error> {
+        unavailable()
+    }
+}
+
+/// Stand-in for `xla::Literal`.
+pub struct Literal;
+
+impl Literal {
+    pub fn vec1(_values: &[f32]) -> Literal {
+        Literal
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal, Error> {
+        unavailable()
+    }
+
+    pub fn to_tuple1(&self) -> Result<Literal, Error> {
+        unavailable()
+    }
+
+    pub fn to_tuple2(&self) -> Result<(Literal, Literal), Error> {
+        unavailable()
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>, Error> {
+        unavailable()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_reports_unavailable() {
+        let err = PjRtClient::cpu().err().expect("stub must fail");
+        assert!(err.to_string().contains("not compiled in"));
+    }
+}

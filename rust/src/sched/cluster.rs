@@ -72,8 +72,10 @@ impl Cluster {
         out
     }
 
-    /// Ask all workers to exit and join them.
-    pub fn shutdown(mut self) {
+    /// Ask all workers to exit and join them (idempotent; shared by
+    /// [`Cluster::shutdown`], `Drop`, and the [`crate::net::Transport`]
+    /// impl).
+    pub fn halt(&mut self) {
         for s in &self.senders {
             let _ = s.send(ToWorker::Shutdown);
         }
@@ -81,16 +83,16 @@ impl Cluster {
             let _ = h.join();
         }
     }
+
+    /// Ask all workers to exit and join them.
+    pub fn shutdown(mut self) {
+        self.halt();
+    }
 }
 
 impl Drop for Cluster {
     fn drop(&mut self) {
-        for s in &self.senders {
-            let _ = s.send(ToWorker::Shutdown);
-        }
-        for h in self.handles.drain(..) {
-            let _ = h.join();
-        }
+        self.halt();
     }
 }
 

@@ -12,11 +12,12 @@ use std::time::{Duration, Instant};
 use crate::config::types::AssignPolicy;
 use crate::error::{Error, Result};
 use crate::linalg::partition::RowRange;
+use crate::net::{Transport, TransportEvent};
 use crate::optim::{self, Assignment, SolveParams};
 use crate::placement::Placement;
+use crate::util::json::{Json, ObjBuilder};
 
-use super::cluster::Cluster;
-use super::protocol::{ToMaster, WorkOrder};
+use super::protocol::WorkOrder;
 use super::speed::SpeedEstimator;
 use super::straggler::StraggleMode;
 
@@ -59,6 +60,25 @@ pub struct RunResult {
     pub timeline: crate::metrics::Timeline,
     pub final_iterate: Vec<f32>,
     pub eigval_estimate: f64,
+}
+
+impl RunResult {
+    /// Machine-readable dump (`--json-out`): eigenvalue estimate, iterate
+    /// geometry, and the full per-step timeline.
+    pub fn to_json(&self) -> Json {
+        let norm: f64 = self
+            .final_iterate
+            .iter()
+            .map(|&x| f64::from(x) * f64::from(x))
+            .sum::<f64>()
+            .sqrt();
+        ObjBuilder::new()
+            .num("eigval_estimate", self.eigval_estimate)
+            .num("iterate_len", self.final_iterate.len() as f64)
+            .num("iterate_norm", norm)
+            .val("timeline", self.timeline.to_json())
+            .build()
+    }
 }
 
 /// The elastic master.
@@ -135,12 +155,17 @@ impl Master {
 
     /// One elastic computation step (Algorithm 1 lines 3–7 + 16).
     ///
+    /// Generic over the [`Transport`]: the same loop drives in-process
+    /// worker threads ([`crate::net::LocalTransport`] / the bare
+    /// [`crate::sched::Cluster`]) and remote TCP worker daemons
+    /// ([`crate::net::TcpTransport`]).
+    ///
     /// `stragglers` are the chaos-injected victims for this step (the
     /// master ships the instruction; a real deployment would simply
     /// experience them).
-    pub fn step(
+    pub fn step<T: Transport + ?Sized>(
         &mut self,
-        cluster: &Cluster,
+        cluster: &T,
         step: usize,
         w: &Arc<Vec<f32>>,
         avail: &[usize],
@@ -209,12 +234,33 @@ impl Master {
                 )));
             }
             match cluster.recv_timeout(deadline - now) {
-                Ok(ToMaster::Report(r)) => {
+                Ok(TransportEvent::Report(r)) => {
                     if r.step != step {
                         continue; // stale report from a previous step
                     }
+                    if r.worker >= self.cfg.placement.machines() {
+                        // defense in depth vs a misbehaving transport: an
+                        // unknown id must not index the speed estimator
+                        crate::log_warn!(
+                            "step {step}: report from unknown worker {}, dropped",
+                            r.worker
+                        );
+                        continue;
+                    }
                     for seg in &r.segments {
                         debug_assert_eq!(seg.values.len(), seg.rows.len());
+                        if seg.rows.hi > self.q {
+                            // a remote peer must not be able to panic the
+                            // master with out-of-range rows
+                            crate::log_warn!(
+                                "worker {}: segment {}..{} exceeds q={}, dropped",
+                                r.worker,
+                                seg.rows.lo,
+                                seg.rows.hi,
+                                self.q
+                            );
+                            continue;
+                        }
                         for (i, row) in (seg.rows.lo..seg.rows.hi).enumerate() {
                             if !covered[row] {
                                 covered[row] = true;
@@ -228,8 +274,18 @@ impl Master {
                     }
                     reporters.push(r.worker);
                 }
-                Ok(ToMaster::Failed { worker, error, .. }) => {
+                Ok(TransportEvent::Failed { worker, error, .. }) => {
                     crate::log_warn!("worker {worker} failed in step {step}: {error}");
+                }
+                Ok(TransportEvent::Disconnected { worker }) => {
+                    // Mid-step preemption: redundancy (S ≥ 1 or replica
+                    // coverage) or the timeout decides the step; the
+                    // transport's liveness view removes the worker from
+                    // the availability set at the next step.
+                    crate::log_warn!(
+                        "worker {worker} disconnected during step {step} \
+                         (treated as preemption)"
+                    );
                 }
                 Err(_) => {
                     return Err(Error::Cluster(format!(
@@ -260,6 +316,7 @@ mod tests {
     use crate::linalg::{gen, Matrix};
     use crate::placement::PlacementKind;
     use crate::runtime::BackendSpec;
+    use crate::sched::cluster::Cluster;
     use crate::sched::worker::{WorkerConfig, WorkerStorage};
 
     fn build(q: usize, speeds: &[f64], policy: AssignPolicy, s: usize) -> (Master, Cluster, Arc<Matrix>) {
@@ -407,6 +464,19 @@ mod tests {
             "estimator did not learn the 8x speed gap: {est:?}"
         );
         cluster.shutdown();
+    }
+
+    #[test]
+    fn run_result_json_is_parseable() {
+        let rr = RunResult {
+            timeline: crate::metrics::Timeline::new(),
+            final_iterate: vec![0.6, 0.8],
+            eigval_estimate: 9.9,
+        };
+        let back = crate::util::json::Json::parse(&rr.to_json().to_string()).unwrap();
+        assert_eq!(back.get_usize("iterate_len"), Some(2));
+        assert!((back.get_num("iterate_norm").unwrap() - 1.0).abs() < 1e-6);
+        assert!((back.get_num("eigval_estimate").unwrap() - 9.9).abs() < 1e-12);
     }
 
     #[test]

@@ -12,7 +12,7 @@ use crate::optim::Task;
 use super::straggler::StraggleMode;
 
 /// One step's work for one worker.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct WorkOrder {
     pub step: usize,
     /// The iterate `w_t` (shared, read-only).
@@ -26,14 +26,14 @@ pub struct WorkOrder {
 }
 
 /// One computed segment: global rows `[rows.lo, rows.hi)` of `y`.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct Segment {
     pub rows: RowRange,
     pub values: Vec<f32>,
 }
 
 /// A worker's report for one step.
-#[derive(Debug)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct WorkerReport {
     pub worker: usize,
     pub step: usize,

@@ -82,7 +82,10 @@ pub fn run_worker(cfg: WorkerConfig, rx: Receiver<ToWorker>, tx: Sender<ToMaster
 }
 
 /// Execute one work order; `Ok(None)` means an injected Drop straggler.
-fn execute_order(
+///
+/// Public because the TCP worker daemon ([`crate::net::daemon`]) drives the
+/// same compute path over a socket instead of an mpsc channel.
+pub fn execute_order(
     cfg: &WorkerConfig,
     backend: &crate::runtime::Backend,
     tile: &TilePlan,

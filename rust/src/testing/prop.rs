@@ -134,6 +134,68 @@ pub mod gen {
         a.sort_unstable();
         a
     }
+
+    /// An arbitrary wire-safe [`crate::sched::protocol::WorkOrder`]:
+    /// random iterate, task list, throttle, and straggle instruction.
+    pub fn work_order(rng: &mut Rng) -> crate::sched::protocol::WorkOrder {
+        use crate::linalg::partition::RowRange;
+        use crate::optim::Task;
+        use crate::sched::straggler::StraggleMode;
+
+        let q = rng.range(1, 64);
+        let w: Vec<f32> = (0..q).map(|_| (rng.f64() * 2.0 - 1.0) as f32).collect();
+        let tasks: Vec<Task> = (0..rng.below(5))
+            .map(|_| {
+                let lo = rng.below(50);
+                let len = rng.below(20);
+                Task {
+                    g: rng.below(8),
+                    rows: RowRange::new(lo, lo + len),
+                }
+            })
+            .collect();
+        let straggle = match rng.below(3) {
+            0 => None,
+            1 => Some(StraggleMode::Drop),
+            _ => Some(StraggleMode::Slow(rng.range_f64(1.0, 10.0))),
+        };
+        crate::sched::protocol::WorkOrder {
+            step: rng.below(1000),
+            w: std::sync::Arc::new(w),
+            tasks,
+            row_cost_ns: rng.next_u64() % 1_000_000,
+            straggle,
+        }
+    }
+
+    /// An arbitrary wire-safe [`crate::sched::protocol::WorkerReport`]
+    /// whose segments are internally consistent (`values.len == rows.len`).
+    pub fn worker_report(rng: &mut Rng) -> crate::sched::protocol::WorkerReport {
+        use crate::linalg::partition::RowRange;
+        use crate::sched::protocol::Segment;
+
+        let segments: Vec<Segment> = (0..rng.below(4))
+            .map(|_| {
+                let lo = rng.below(100);
+                let len = rng.below(16);
+                Segment {
+                    rows: RowRange::new(lo, lo + len),
+                    values: (0..len).map(|_| rng.f64() as f32).collect(),
+                }
+            })
+            .collect();
+        crate::sched::protocol::WorkerReport {
+            worker: rng.below(16),
+            step: rng.below(1000),
+            segments,
+            measured_speed: if rng.chance(0.5) {
+                Some(rng.range_f64(0.01, 10.0))
+            } else {
+                None
+            },
+            elapsed: std::time::Duration::from_nanos(rng.next_u64() % 10_000_000_000),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -172,6 +234,65 @@ mod tests {
         run(Config::default().cases(20).name("speed-gen"), |rng| {
             let s = gen::speeds(rng, 6);
             assert!(s.iter().all(|&x| x >= 0.05));
+        });
+    }
+
+    #[test]
+    fn codec_work_order_roundtrips() {
+        use crate::net::codec::{decode, encode};
+        use crate::net::WireMsg;
+        run(Config::default().cases(200).name("codec-work-order"), |rng| {
+            let order = gen::work_order(rng);
+            let bytes = encode(&WireMsg::Work(order.clone()));
+            match decode(&bytes).expect("decode of valid work order") {
+                WireMsg::Work(back) => assert_eq!(back, order),
+                other => panic!("decoded wrong variant {other:?}"),
+            }
+        });
+    }
+
+    #[test]
+    fn codec_worker_report_roundtrips() {
+        use crate::net::codec::{decode, encode};
+        use crate::net::WireMsg;
+        run(Config::default().cases(200).name("codec-report"), |rng| {
+            let report = gen::worker_report(rng);
+            let bytes = encode(&WireMsg::Report(report.clone()));
+            match decode(&bytes).expect("decode of valid report") {
+                WireMsg::Report(back) => assert_eq!(back, report),
+                other => panic!("decoded wrong variant {other:?}"),
+            }
+        });
+    }
+
+    #[test]
+    fn codec_rejects_every_truncation() {
+        use crate::net::codec::{decode, encode};
+        use crate::net::WireMsg;
+        run(Config::default().cases(40).name("codec-truncation"), |rng| {
+            let bytes = encode(&WireMsg::Report(gen::worker_report(rng)));
+            for cut in 0..bytes.len() {
+                assert!(
+                    decode(&bytes[..cut]).is_err(),
+                    "strict prefix of {cut}/{} bytes decoded",
+                    bytes.len()
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn malformed_frames_rejected() {
+        use crate::net::frame::read_frame;
+        use std::io::Cursor;
+        run(Config::default().cases(50).name("frame-garbage-length"), |rng| {
+            // a length prefix beyond MAX_FRAME must be rejected before any
+            // allocation, whatever follows
+            let bogus = (crate::net::frame::MAX_FRAME as u32)
+                .saturating_add(1 + rng.below(1 << 20) as u32);
+            let mut buf = bogus.to_le_bytes().to_vec();
+            buf.extend_from_slice(&[0xAB; 8]);
+            assert!(read_frame(&mut Cursor::new(buf)).is_err());
         });
     }
 }

@@ -1,0 +1,201 @@
+//! Integration tests for the TCP transport: a real master and real worker
+//! daemons on loopback sockets, including a scripted socket-level
+//! preemption mid-run.
+//!
+//! The distributed run must match the in-process (`LocalTransport`) run
+//! within 1e-5 — with deterministic workload regeneration and the exact
+//! host kernels on both sides the trajectories are in fact bit-identical,
+//! preemption or not, because every row of `y_t = X w_t` has the same
+//! value whichever worker computes it.
+
+use std::net::TcpListener;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use usec::apps::power_iteration::{run_power_iteration, PLANT_EIGVAL, PLANT_GAP};
+use usec::config::types::{AssignPolicy, BackendKind, RunConfig};
+use usec::error::Result;
+use usec::linalg::ops;
+use usec::linalg::partition::submatrix_ranges;
+use usec::net::daemon::{serve_worker, DaemonOpts};
+use usec::net::{
+    Hello, TcpOptions, TcpPeer, TcpTransport, Transport, WorkloadSpec, WIRE_VERSION,
+};
+use usec::optim::SolveParams;
+use usec::placement::{Placement, PlacementKind};
+use usec::runtime::BackendSpec;
+use usec::sched::master::{Master, MasterConfig};
+
+const Q: usize = 120;
+const STEPS: usize = 24;
+const SEED: u64 = 11;
+const KILL_STEP: usize = 8;
+
+/// Spawn `n` worker daemons on ephemeral loopback ports.
+fn start_workers(n: usize) -> (Vec<String>, Vec<JoinHandle<Result<()>>>) {
+    let mut addrs = Vec::new();
+    let mut handles = Vec::new();
+    for _ in 0..n {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        addrs.push(listener.local_addr().unwrap().to_string());
+        handles.push(std::thread::spawn(move || {
+            serve_worker(listener, DaemonOpts { once: true })
+        }));
+    }
+    (addrs, handles)
+}
+
+/// 3 machines, full replication (cyclic J=3), S=1 — one worker can vanish
+/// mid-step and every row still has a live replica.
+fn base_cfg(workers: Vec<String>) -> RunConfig {
+    RunConfig {
+        q: Q,
+        r: Q,
+        g: 3,
+        j: 3,
+        n: 3,
+        placement: PlacementKind::Cyclic,
+        stragglers: 1,
+        steps: STEPS,
+        speeds: vec![1.0, 1.0, 1.0],
+        seed: SEED,
+        workers,
+        ..Default::default()
+    }
+}
+
+fn workload_spec() -> WorkloadSpec {
+    WorkloadSpec::PlantedSymmetric {
+        q: Q,
+        eigval: PLANT_EIGVAL,
+        gap: PLANT_GAP,
+        seed: SEED,
+    }
+}
+
+#[test]
+fn tcp_cluster_survives_mid_run_socket_preemption() {
+    let (addrs, handles) = start_workers(3);
+
+    // --- reference: the whole run in-process over LocalTransport ---
+    let local = run_power_iteration(&base_cfg(vec![])).unwrap();
+
+    // --- distributed run, driven manually so we can kill a socket ---
+    let peers: Vec<TcpPeer> = addrs
+        .iter()
+        .enumerate()
+        .map(|(id, addr)| TcpPeer {
+            addr: addr.clone(),
+            hello: Hello {
+                version: WIRE_VERSION,
+                worker: id,
+                speed: 1.0,
+                tile_rows: 32,
+                backend: BackendKind::Host,
+                g: 3,
+                heartbeat_ms: 100,
+                workload: workload_spec(),
+            },
+        })
+        .collect();
+    let transport = TcpTransport::connect(peers, TcpOptions::default()).unwrap();
+
+    let placement = Placement::build(PlacementKind::Cyclic, 3, 3, 3).unwrap();
+    let sub_ranges = submatrix_ranges(Q, 3).unwrap();
+    let mut master = Master::new(MasterConfig {
+        placement,
+        sub_ranges,
+        params: SolveParams::with_stragglers(1),
+        policy: AssignPolicy::Heterogeneous,
+        gamma: 0.5,
+        initial_speeds: vec![1.0; 3],
+        row_cost_ns: 0,
+        recovery_timeout: Duration::from_secs(20),
+    })
+    .unwrap();
+    let host = BackendSpec::Host.instantiate().unwrap();
+
+    let mut b = vec![1.0f32; Q];
+    ops::normalize(&mut b);
+    let mut eigval = 0.0f64;
+    let mut avail_sizes = Vec::new();
+    for step in 0..STEPS {
+        let alive = transport.alive();
+        let avail: Vec<usize> = (0..3).filter(|&n| alive[n]).collect();
+        avail_sizes.push(avail.len());
+        if step == KILL_STEP {
+            // Socket-level preemption *after* this step's availability was
+            // read: the master will dispatch to a dead worker and must
+            // recover through the S=1 redundancy.
+            transport.kill(2);
+        }
+        let w = Arc::new(b.clone());
+        let out = master
+            .step(&transport, step, &w, &avail, &[])
+            .unwrap_or_else(|e| panic!("step {step} failed: {e}"));
+        let (next, norm) = host.normalize(&out.y).unwrap();
+        eigval = norm;
+        b = next;
+    }
+
+    // the dropped worker is reflected in the availability set from the
+    // following step onward
+    assert!(
+        avail_sizes[..=KILL_STEP].iter().all(|&a| a == 3),
+        "pre-kill availability wrong: {avail_sizes:?}"
+    );
+    assert!(
+        avail_sizes[KILL_STEP + 1..].iter().all(|&a| a == 2),
+        "post-kill availability wrong: {avail_sizes:?}"
+    );
+
+    // distributed result matches the single-process run within 1e-5
+    assert_eq!(b.len(), local.eigvec.len());
+    for (i, (a, e)) in b.iter().zip(&local.eigvec).enumerate() {
+        assert!(
+            (a - e).abs() <= 1e-5,
+            "eigvec[{i}] diverged: tcp {a} vs local {e}"
+        );
+    }
+    assert!(
+        (eigval - local.eigval).abs() <= 1e-5,
+        "eigenvalue estimate diverged: tcp {eigval} vs local {}",
+        local.eigval
+    );
+
+    let mut transport = transport;
+    transport.shutdown();
+    for h in handles {
+        h.join().unwrap().unwrap();
+    }
+}
+
+#[test]
+fn tcp_harness_matches_local_through_runconfig() {
+    let (addrs, handles) = start_workers(3);
+
+    let tcp = run_power_iteration(&base_cfg(addrs)).unwrap();
+    let local = run_power_iteration(&base_cfg(vec![])).unwrap();
+
+    assert_eq!(tcp.timeline.len(), STEPS);
+    assert!(tcp
+        .timeline
+        .steps()
+        .iter()
+        .all(|s| s.available == 3 && s.reported >= 2));
+    for (i, (a, e)) in tcp.eigvec.iter().zip(&local.eigvec).enumerate() {
+        assert!(
+            (a - e).abs() <= 1e-5,
+            "eigvec[{i}] diverged: tcp {a} vs local {e}"
+        );
+    }
+    assert!((tcp.final_nmse - local.final_nmse).abs() <= 1e-7);
+    assert!(tcp.final_nmse < 0.05, "did not converge: {}", tcp.final_nmse);
+
+    // run_power_iteration dropped its harness (and thus the transport),
+    // which sends Shutdown — the once-mode daemons exit cleanly.
+    for h in handles {
+        h.join().unwrap().unwrap();
+    }
+}
