@@ -82,10 +82,7 @@ fn main() {
             backend: BackendSpec::Host,
             speed: 1.0 + id as f64,
             tile_rows: 128,
-            storage: WorkerStorage {
-                matrix: Arc::clone(&matrix),
-                sub_ranges: Arc::clone(&arc_ranges),
-            },
+            storage: WorkerStorage::full(Arc::clone(&matrix), Arc::clone(&arc_ranges)),
         })
         .collect();
     let cluster = Cluster::spawn(configs).unwrap();

@@ -1,0 +1,70 @@
+//! Full-matrix vs shard-view SpMV per-worker throughput.
+//!
+//! A distributed worker reads its tiles through a [`StoreHandle`]: either
+//! a zero-copy view of the full matrix or a placement-shaped [`RowShard`]
+//! holding only its J-out-of-G share. This bench drives the exact
+//! per-tile access + host matvec path over one worker's placed rows
+//! through both handles, so any overhead of the shard's block lookup (and
+//! any locality win from the compacted layout) is measured, alongside the
+//! resident-byte difference the refactor exists to create.
+//!
+//! Run: `cargo bench --bench storage_view`
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use usec::linalg::partition::{submatrix_ranges, TilePlan};
+use usec::linalg::gen;
+use usec::placement::{Placement, PlacementKind};
+use usec::runtime::BackendSpec;
+use usec::storage::{RowShard, StorageView, StoreHandle};
+use usec::util::benchkit::Bench;
+
+fn main() {
+    let q = 1536usize;
+    let (n, g, j) = (6usize, 6usize, 3usize);
+    let worker = 0usize;
+
+    let matrix = Arc::new(gen::random_dense(q, q, 11));
+    let placement = Placement::build(PlacementKind::Cyclic, n, g, j).unwrap();
+    let sub_ranges = submatrix_ranges(q, g).unwrap();
+    let placed = placement.stored_ranges(worker, &sub_ranges).unwrap();
+    let shard = Arc::new(RowShard::from_matrix(&matrix, &placed).unwrap());
+
+    let full = StoreHandle::Full(Arc::clone(&matrix));
+    let sharded = StoreHandle::Shard(shard);
+    println!(
+        "worker {worker} stores {}/{} sub-matrices: full view {} bytes, shard {} bytes\n",
+        j,
+        g,
+        full.resident_bytes(),
+        sharded.resident_bytes()
+    );
+
+    let backend = BackendSpec::Host.instantiate().unwrap();
+    let tile = TilePlan::new(128);
+    let w: Vec<f32> = (0..q).map(|i| (i % 7) as f32 * 0.01).collect();
+    let placed_rows: usize = placed.iter().map(|r| r.len()).sum();
+
+    let mut bench = Bench::with_budget(Duration::from_millis(600), 2_000);
+    for (name, view) in [("full-matrix view", &full), ("shard view", &sharded)] {
+        bench.run(&format!("SpMV worker share ({name})"), || {
+            let mut acc = 0.0f32;
+            for r in &placed {
+                for t in tile.plan(*r) {
+                    let x = view.row_slice(t).unwrap();
+                    let y = backend.matvec_tile(x, t.len(), q, &w).unwrap();
+                    acc += y[0];
+                }
+            }
+            acc
+        });
+    }
+    let table = bench.table();
+    println!("{table}");
+    println!(
+        "({placed_rows} placed rows per iteration; identical numerics, \
+         shard resident bytes = {:.0}% of full)",
+        sharded.resident_bytes() as f64 / full.resident_bytes() as f64 * 100.0
+    );
+}

@@ -8,12 +8,25 @@
 //! usec worker --listen 127.0.0.1:7702     # terminal 2
 //! usec worker --listen 127.0.0.1:7703     # terminal 3
 //! usec master --workers 127.0.0.1:7701,127.0.0.1:7702,127.0.0.1:7703 \
-//!     --q 1536 --g 3 --j 3 --placement cyclic --stragglers 1
+//!     --q 1536 --g 3 --j 2 --placement cyclic --json-out run.json
 //! ```
 //!
-//! Here we spawn the same daemons on threads and drive the same master
-//! code path (`RunConfig.workers` → `TcpTransport`), so
-//! `cargo run --example distributed_quickstart` works anywhere.
+//! Each worker materializes only its placed J-out-of-G share (here 2/3 of
+//! the matrix), regenerated from the workload spec in the handshake. Add
+//! `--stream-data` and the master instead streams each worker's rows as
+//! checksummed `Data` frames — the path for external data that no seed
+//! can regenerate (ridge/pagerank over real inputs):
+//!
+//! ```text
+//! usec master --workers ... --q 1536 --g 3 --j 2 --placement cyclic \
+//!     --stream-data --json-out run.json
+//! ```
+//!
+//! Either way `--json-out` reports the actual per-worker resident bytes
+//! under `timeline.storage`. Here we spawn the same daemons on threads
+//! and drive the same master code path (`RunConfig.workers` →
+//! `TcpTransport`), so `cargo run --example distributed_quickstart` works
+//! anywhere.
 
 use std::net::TcpListener;
 
@@ -26,43 +39,57 @@ fn main() {
     usec::util::log::init();
 
     // --- "terminals 1-3": three worker daemons on ephemeral ports ---
+    // (each serves two master sessions: the generator-backed run and the
+    // streamed run below)
     let mut addrs = Vec::new();
     let mut daemons = Vec::new();
     for _ in 0..3 {
         let listener = TcpListener::bind("127.0.0.1:0").expect("bind loopback");
         addrs.push(listener.local_addr().unwrap().to_string());
         daemons.push(std::thread::spawn(move || {
-            serve_worker(listener, DaemonOpts { once: true })
+            serve_worker(listener, DaemonOpts { max_sessions: 2 })
         }));
     }
     println!("workers listening on {addrs:?}");
 
     // --- "terminal 4": the master dials the workers over TCP ---
+    // cyclic J=2 of G=3: each worker stores 2/3 of the matrix, and that is
+    // all it materializes — storage cost is real, not simulated.
     let cfg = RunConfig {
         q: 480,
         r: 480,
         g: 3,
-        j: 3,
+        j: 2,
         n: 3,
         placement: PlacementKind::Cyclic,
-        stragglers: 1, // tolerate one preempted/slow worker per step
         steps: 30,
         speeds: vec![1.0, 2.0, 4.0],
         seed: 7,
-        workers: addrs,
+        workers: addrs.clone(),
         ..Default::default()
     };
     let res = run_power_iteration(&cfg).expect("distributed run");
-
     println!(
-        "distributed power iteration over {} TCP workers: final NMSE {:.3e}, \
-         eigenvalue {:.4} (truth {:.4})",
-        cfg.n, res.final_nmse, res.eigval, res.truth_eigval
+        "generator-backed shard run: final NMSE {:.3e}, eigenvalue {:.4} (truth {:.4})",
+        res.final_nmse, res.eigval, res.truth_eigval
     );
     println!(
-        "total wall {:?} across {} steps",
-        res.timeline.total_wall(),
-        res.timeline.len()
+        "per-worker resident storage: {:?} bytes (full matrix would be {})",
+        res.timeline.storage_bytes(),
+        cfg.q * cfg.r * 4
+    );
+
+    // --- same run with --stream-data: rows travel as Data frames ---
+    let streamed_cfg = RunConfig {
+        stream_data: true,
+        workers: addrs,
+        ..cfg
+    };
+    let streamed = run_power_iteration(&streamed_cfg).expect("streamed run");
+    println!(
+        "streamed-data run:          final NMSE {:.3e} (matches: {})",
+        streamed.final_nmse,
+        (streamed.final_nmse - res.final_nmse).abs() < 1e-9
     );
 
     // the master's harness sent Shutdown on drop; reap the daemons

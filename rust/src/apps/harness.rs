@@ -45,9 +45,11 @@ pub struct Harness {
 impl Harness {
     /// Wire up workers, master, trace and chaos from config + data matrix.
     ///
-    /// Local transport only; apps whose workload can be regenerated from a
-    /// seed should call [`Harness::build_with_workload`] so the run can
-    /// also span TCP worker daemons.
+    /// Without a workload spec the run spans TCP daemons only when
+    /// `cfg.stream_data` is set (the master then streams each worker's
+    /// placed rows); apps whose workload can be regenerated from a seed
+    /// should call [`Harness::build_with_workload`] so distributed runs
+    /// also work without streaming.
     pub fn build(cfg: &RunConfig, matrix: Arc<Matrix>) -> Result<Harness> {
         Harness::build_with_workload(cfg, matrix, None)
     }
@@ -80,6 +82,8 @@ impl Harness {
         };
 
         let transport = if cfg.workers.is_empty() {
+            // Local simulator mode: every worker shares one zero-copy
+            // full-matrix view — bit-identical with the distributed runs.
             let backend_spec = BackendSpec::from_kind(cfg.backend, artifact_dir());
             let ranges = Arc::new(sub_ranges.clone());
             let configs: Vec<WorkerConfig> = (0..cfg.n)
@@ -88,21 +92,29 @@ impl Harness {
                     backend: backend_spec.clone(),
                     speed: speeds[id],
                     tile_rows: cfg.tile_rows,
-                    storage: WorkerStorage {
-                        matrix: Arc::clone(&matrix),
-                        sub_ranges: Arc::clone(&ranges),
-                    },
+                    storage: WorkerStorage::full(
+                        Arc::clone(&matrix),
+                        Arc::clone(&ranges),
+                    ),
                 })
                 .collect();
             AnyTransport::Local(LocalTransport::spawn(configs)?)
         } else {
-            let spec = workload.ok_or_else(|| {
-                Error::Config(
-                    "this workload cannot run on TCP workers: no deterministic \
-                     workload spec to ship in the handshake"
-                        .into(),
-                )
-            })?;
+            // Distributed mode: every worker materializes only its placed
+            // J-out-of-G share, regenerated from the workload spec or
+            // streamed from the master's matrix (`--stream-data`).
+            let spec = if cfg.stream_data {
+                WorkloadSpec::Streamed { q: cfg.q, r: cfg.r }
+            } else {
+                workload.ok_or_else(|| {
+                    Error::Config(
+                        "this workload cannot run on TCP workers: no deterministic \
+                         workload spec to ship in the handshake (use --stream-data \
+                         to stream the rows instead)"
+                            .into(),
+                    )
+                })?
+            };
             if spec.rows() != cfg.q || spec.cols() != cfg.r {
                 return Err(Error::Shape(format!(
                     "workload spec is {}x{}, config says {}x{}",
@@ -112,25 +124,35 @@ impl Harness {
                     cfg.r
                 )));
             }
-            let peers: Vec<TcpPeer> = cfg
-                .workers
-                .iter()
-                .enumerate()
-                .map(|(id, addr)| TcpPeer {
-                    addr: addr.clone(),
-                    hello: Hello {
-                        version: WIRE_VERSION,
-                        worker: id,
-                        speed: speeds[id],
-                        tile_rows: cfg.tile_rows,
-                        backend: cfg.backend,
-                        g: cfg.g,
-                        heartbeat_ms: DEFAULT_HEARTBEAT_MS,
-                        workload: spec.clone(),
-                    },
+            let peers: Vec<TcpPeer> = (0..cfg.n)
+                .map(|id| {
+                    Ok(TcpPeer {
+                        addr: cfg.workers[id].clone(),
+                        hello: Hello {
+                            version: WIRE_VERSION,
+                            worker: id,
+                            speed: speeds[id],
+                            tile_rows: cfg.tile_rows,
+                            backend: cfg.backend,
+                            g: cfg.g,
+                            heartbeat_ms: DEFAULT_HEARTBEAT_MS,
+                            workload: spec.clone(),
+                            stored: placement.stored_by(id).collect(),
+                        },
+                        stream_ranges: placement.stored_ranges(id, &sub_ranges)?,
+                    })
                 })
-                .collect();
-            AnyTransport::Tcp(TcpTransport::connect(peers, TcpOptions::default())?)
+                .collect::<Result<_>>()?;
+            let data = if cfg.stream_data {
+                Some(Arc::clone(&matrix))
+            } else {
+                None
+            };
+            AnyTransport::Tcp(TcpTransport::connect_with_data(
+                peers,
+                TcpOptions::default(),
+                data,
+            )?)
         };
 
         let master = Master::new(MasterConfig {
@@ -184,6 +206,11 @@ impl Harness {
             StragglerInjector::none()
         };
 
+        // surface what each worker actually holds — the storage cost the
+        // placement prescribes, now measured instead of assumed
+        let mut timeline = Timeline::new();
+        timeline.set_storage_bytes(transport.resident_bytes());
+
         Ok(Harness {
             placement,
             sub_ranges,
@@ -192,7 +219,7 @@ impl Harness {
             combine,
             trace,
             injector,
-            timeline: Timeline::new(),
+            timeline,
             cfg: cfg.clone(),
         })
     }
@@ -213,7 +240,14 @@ impl Harness {
         let mut w = Arc::new(w0);
         let mut last_metric = f64::NAN;
         for step in 0..steps {
-            let alive = self.transport.alive();
+            let mut alive = self.transport.alive();
+            // a reconnecting worker daemon rejoins the availability set at
+            // the next step instead of staying preempted forever
+            if alive.iter().any(|a| !a) && self.transport.readmit() > 0 {
+                self.timeline
+                    .set_storage_bytes(self.transport.resident_bytes());
+                alive = self.transport.alive();
+            }
             let avail: Vec<usize> = self
                 .trace
                 .next_step()

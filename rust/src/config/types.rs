@@ -115,6 +115,11 @@ pub struct RunConfig {
     /// run dials `usec worker` daemons and `n` must equal the list length
     /// ([`RunConfig::from_args`] aligns `n` automatically).
     pub workers: Vec<String>,
+    /// Stream the matrix rows to TCP workers as checksummed `Data` frames
+    /// instead of regenerating them from the workload spec — required for
+    /// workloads without a deterministic generator (external data), and
+    /// available for any workload. Ignored in local mode.
+    pub stream_data: bool,
     /// Path for the machine-readable per-step timeline dump (JSON). Empty
     /// ⇒ no dump.
     pub json_out: String,
@@ -146,6 +151,7 @@ impl Default for RunConfig {
             tile_rows: 128,
             seed: 7,
             workers: Vec::new(),
+            stream_data: false,
             json_out: String::new(),
         }
     }
@@ -187,6 +193,11 @@ impl RunConfig {
                 "comma-separated worker daemon addresses (host:port); \
                  sets N and switches to the TCP transport",
             ),
+            ArgSpec::flag(
+                "stream-data",
+                "stream matrix rows to TCP workers instead of regenerating \
+                 from the workload seed",
+            ),
             ArgSpec::opt("json-out", "", "write the per-step timeline JSON here"),
         ]
     }
@@ -217,6 +228,7 @@ impl RunConfig {
             tile_rows: a.get_usize("tile-rows")?,
             seed: a.get_u64("seed")?,
             workers: parse_worker_list(a.get("workers").unwrap_or("")),
+            stream_data: a.has("stream-data"),
             json_out: a.get("json-out").unwrap_or("").to_string(),
         };
         let mut cfg = cfg;

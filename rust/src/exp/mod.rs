@@ -60,6 +60,18 @@ fn run_and_report(cfg: &RunConfig) -> Result<()> {
         res.truth_eigval,
         res.timeline.total_wall()
     );
+    let storage = res.timeline.storage_bytes();
+    if !storage.is_empty() {
+        let full = (cfg.q * cfg.r * 4) as u64;
+        let shares: Vec<String> = storage
+            .iter()
+            .map(|&b| format!("{b} ({:.0}%)", b as f64 / full as f64 * 100.0))
+            .collect();
+        println!(
+            "per-worker resident storage bytes (full matrix = {full}): [{}]",
+            shares.join(", ")
+        );
+    }
     if !cfg.json_out.is_empty() {
         let doc = crate::util::json::ObjBuilder::new()
             .str("app", "power-iteration")

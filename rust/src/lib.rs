@@ -27,12 +27,23 @@
 //!   computation assignment.
 //! * [`sched`] — Algorithm 1: the adaptive master/worker loop with EWMA
 //!   speed estimation, elasticity traces and straggler injection.
+//! * [`storage`] — placement-shaped storage: the [`storage::StorageView`]
+//!   trait kernels read through, implemented by both the full
+//!   [`linalg::Matrix`] (local simulator mode, zero-copy shared `Arc`)
+//!   and [`storage::RowShard`] (a worker's actual J-out-of-G share, with
+//!   global↔local row mapping). Per-worker resident bytes surface in
+//!   [`metrics::Timeline`] and `--json-out`, so the paper's storage cost
+//!   is measured, not assumed.
 //! * [`net`] — the pluggable master↔worker transport: in-process mpsc
 //!   channels ([`net::LocalTransport`], zero-copy `Arc` data plane) or
 //!   length-prefixed little-endian TCP frames ([`net::TcpTransport`] +
 //!   the `usec worker` daemon) with a versioned handshake and
 //!   heartbeat-based liveness, so one power-iteration run can span
-//!   separate worker processes. A dropped connection is a preemption.
+//!   separate worker processes. A dropped connection is a preemption and
+//!   a reconnecting daemon is re-admitted at the next step. Workers
+//!   materialize only their placed rows — regenerated from the workload
+//!   spec, or streamed via checksummed `Data` frames (`--stream-data`)
+//!   for workloads without a deterministic generator.
 //! * [`runtime`] — PJRT artifact loading/execution plus a pure-Rust host
 //!   backend so everything is testable without artifacts.
 //! * [`apps`] — power iteration, ridge regression and PageRank built on the
@@ -65,6 +76,7 @@ pub mod optim;
 pub mod placement;
 pub mod runtime;
 pub mod sched;
+pub mod storage;
 pub mod testing;
 pub mod util;
 

@@ -24,11 +24,16 @@ impl Matrix {
         }
     }
 
-    /// Build from a flat row-major buffer.
+    /// Build from a flat row-major buffer. Rejects `rows * cols` overflow
+    /// explicitly (huge dims from untrusted inputs must not wrap and
+    /// silently validate).
     pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Result<Self> {
-        if data.len() != rows * cols {
+        let expect = rows.checked_mul(cols).ok_or_else(|| {
+            Error::Shape(format!("{rows}x{cols} matrix dimensions overflow usize"))
+        })?;
+        if data.len() != expect {
             return Err(Error::Shape(format!(
-                "buffer of {} elements cannot be {rows}x{cols}",
+                "buffer of {} elements cannot be a {rows}x{cols} matrix ({expect} expected)",
                 data.len()
             )));
         }
@@ -88,6 +93,19 @@ impl Matrix {
         &self.data[lo * self.cols..hi * self.cols]
     }
 
+    /// Fallible [`Matrix::row_block`] for untrusted row ranges (the
+    /// [`crate::storage::StorageView`] path): out-of-range rows are a
+    /// [`Error::Shape`], not a panic.
+    pub fn try_row_block(&self, lo: usize, hi: usize) -> Result<&[f32]> {
+        if lo > hi || hi > self.rows {
+            return Err(Error::Shape(format!(
+                "row block {lo}..{hi} of a {}-row matrix",
+                self.rows
+            )));
+        }
+        Ok(&self.data[lo * self.cols..hi * self.cols])
+    }
+
     /// Copy rows `[lo, hi)` into a new matrix.
     pub fn slice_rows(&self, lo: usize, hi: usize) -> Matrix {
         Matrix {
@@ -144,6 +162,22 @@ mod tests {
     #[test]
     fn bad_shape_rejected() {
         assert!(Matrix::from_vec(2, 3, vec![0.0; 5]).is_err());
+    }
+
+    #[test]
+    fn overflowing_dims_rejected_not_wrapped() {
+        // usize::MAX * 2 wraps to an even value; a wrapping check could
+        // falsely accept a tiny buffer — this must be a Shape error.
+        let e = Matrix::from_vec(usize::MAX, 2, vec![0.0; 2]).unwrap_err();
+        assert!(e.to_string().contains("overflow"), "{e}");
+    }
+
+    #[test]
+    fn try_row_block_errors_instead_of_panicking() {
+        let m = Matrix::from_vec(3, 2, vec![0., 1., 2., 3., 4., 5.]).unwrap();
+        assert_eq!(m.try_row_block(1, 3).unwrap(), &[2., 3., 4., 5.]);
+        assert!(m.try_row_block(2, 4).is_err());
+        assert!(m.try_row_block(2, 1).is_err());
     }
 
     #[test]

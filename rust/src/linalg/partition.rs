@@ -50,6 +50,22 @@ impl RowRange {
             hi: self.hi + base,
         }
     }
+
+    /// Overflow-checked [`RowRange::offset`] for untrusted inputs (task
+    /// ranges arriving off the wire): a huge `lo`/`hi` plus base is an
+    /// [`Error::Shape`], not a wrap or a panic.
+    pub fn checked_offset(&self, base: usize) -> Result<RowRange> {
+        let overflow = || {
+            Error::Shape(format!(
+                "row range {}..{} + offset {base} overflows usize",
+                self.lo, self.hi
+            ))
+        };
+        Ok(RowRange {
+            lo: self.lo.checked_add(base).ok_or_else(overflow)?,
+            hi: self.hi.checked_add(base).ok_or_else(overflow)?,
+        })
+    }
 }
 
 /// Balanced partition of `q` rows into `g_count` contiguous sub-matrices.
@@ -247,5 +263,14 @@ mod tests {
         assert_eq!(a.offset(100), RowRange::new(100, 110));
         let disjoint = RowRange::new(20, 30);
         assert!(a.intersect(&disjoint).is_empty());
+    }
+
+    #[test]
+    fn checked_offset_rejects_overflow() {
+        let a = RowRange::new(0, 10);
+        assert_eq!(a.checked_offset(5).unwrap(), RowRange::new(5, 15));
+        assert!(RowRange::new(usize::MAX - 3, usize::MAX)
+            .checked_offset(10)
+            .is_err());
     }
 }

@@ -28,11 +28,25 @@ pub struct StepRecord {
 #[derive(Debug, Clone, Default)]
 pub struct Timeline {
     steps: Vec<StepRecord>,
+    /// Matrix payload bytes resident per worker (what the storage layer
+    /// actually materialized — the placement's J/G share for distributed
+    /// shard workers, the shared full view locally). Empty when unknown.
+    storage_bytes: Vec<u64>,
 }
 
 impl Timeline {
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// Record the per-worker resident storage snapshot.
+    pub fn set_storage_bytes(&mut self, bytes: Vec<u64>) {
+        self.storage_bytes = bytes;
+    }
+
+    /// Per-worker resident storage bytes (empty when unknown).
+    pub fn storage_bytes(&self) -> &[u64] {
+        &self.storage_bytes
     }
 
     pub fn push(&mut self, r: StepRecord) {
@@ -101,9 +115,22 @@ impl Timeline {
                     .build()
             })
             .collect();
+        let per_worker: Vec<Json> = self
+            .storage_bytes
+            .iter()
+            .map(|&b| Json::Num(b as f64))
+            .collect();
+        let storage = ObjBuilder::new()
+            .num(
+                "total_bytes",
+                self.storage_bytes.iter().map(|&b| b as f64).sum::<f64>(),
+            )
+            .val("per_worker_bytes", Json::Arr(per_worker))
+            .build();
         ObjBuilder::new()
             .num("steps", self.steps.len() as f64)
             .num("total_wall_s", self.total_wall().as_secs_f64())
+            .val("storage", storage)
             .val("timeline", Json::Arr(steps))
             .build()
     }
@@ -173,6 +200,20 @@ mod tests {
         let csv = t.to_csv();
         assert_eq!(csv.lines().count(), 2);
         assert!(csv.starts_with("step,"));
+    }
+
+    #[test]
+    fn storage_bytes_surface_in_json() {
+        let mut t = Timeline::new();
+        t.push(rec(0, 10, 0.5));
+        t.set_storage_bytes(vec![34_560, 34_560, 57_600]);
+        assert_eq!(t.storage_bytes(), &[34_560, 34_560, 57_600]);
+        let back = crate::util::json::Json::parse(&t.to_json().to_string()).unwrap();
+        let storage = back.get("storage").unwrap();
+        assert_eq!(storage.get_usize("total_bytes"), Some(126_720));
+        let per = storage.get("per_worker_bytes").unwrap().items().unwrap();
+        assert_eq!(per.len(), 3);
+        assert_eq!(per[2].as_num(), Some(57_600.0));
     }
 
     #[test]

@@ -12,15 +12,27 @@
 //! | `5` | `Failed` | worker → master | worker `u32`, step `u64`, error `str` |
 //! | `6` | `Heartbeat` | worker → master | worker `u32`, seq `u64` |
 //! | `7` | `Shutdown` | master → worker | — |
+//! | `8` | `Data` | master → worker | lo `u64`, hi `u64`, cols `u32`, done `u8`, checksum `u32`, values `vec<f32>` |
+//! | `9` | `StorageReady` | worker → master | worker `u32`, resident_bytes `u64` |
 //!
 //! `vec<f32>` is a `u32` element count followed by raw LE `f32`s; `str` is
 //! a `u32` byte count followed by UTF-8. The workload spec is kind `u8`
-//! (`1` planted-symmetric, `2` random-dense), q `u64`, r `u64`, seed
-//! `u64`, eigval `f64`, gap `f64`.
+//! (`1` planted-symmetric, `2` random-dense, `3` streamed), q `u64`, r
+//! `u64`, seed `u64`, eigval `f64`, gap `f64`; it is followed by the
+//! worker's stored sub-matrix list (`u32` count + `u32` ids, empty ⇒ the
+//! worker stores everything).
+//!
+//! `Data` frames carry a chunk of the worker's placed rows for streamed
+//! workloads; `checksum` is FNV-1a-32 over the raw LE value bytes and is
+//! verified at decode, so a corrupted chunk is rejected before it can
+//! poison a shard. `done = 1` marks the final chunk. `StorageReady`
+//! closes the handshake in both directions: the worker reports how many
+//! matrix payload bytes it actually holds after materializing its share.
 //!
 //! Decoding validates everything it can: counts are bounded by the bytes
 //! actually present, segment value counts must equal their row ranges, row
-//! ranges must be ordered, and trailing bytes are rejected.
+//! ranges must be ordered, data checksums must match, and trailing bytes
+//! are rejected.
 
 use std::io::{Read, Write};
 use std::sync::Arc;
@@ -37,8 +49,10 @@ use super::frame;
 use super::transport::WorkloadSpec;
 
 /// Wire-protocol version; bumped on any incompatible layout change. The
-/// handshake rejects mismatches on both sides.
-pub const WIRE_VERSION: u16 = 1;
+/// handshake rejects mismatches on both sides. Version 2 added the
+/// `Hello` stored-sub-matrix list, the `Streamed` workload kind, and the
+/// `Data`/`StorageReady` messages.
+pub const WIRE_VERSION: u16 = 2;
 
 /// Handshake magic ("USEC" in ASCII) — catches non-USEC peers immediately.
 pub const HELLO_MAGIC: u32 = 0x5553_4543;
@@ -50,6 +64,8 @@ const TAG_REPORT: u8 = 4;
 const TAG_FAILED: u8 = 5;
 const TAG_HEARTBEAT: u8 = 6;
 const TAG_SHUTDOWN: u8 = 7;
+const TAG_DATA: u8 = 8;
+const TAG_STORAGE_READY: u8 = 9;
 
 /// Sanity cap on list counts (tasks, segments). Real runs are orders of
 /// magnitude below; a malformed count is rejected before allocation.
@@ -70,6 +86,10 @@ pub struct Hello {
     /// Worker → master heartbeat period in milliseconds (0 disables).
     pub heartbeat_ms: u32,
     pub workload: WorkloadSpec,
+    /// Sub-matrix indices this worker stores (its `Z_n`): the worker
+    /// materializes exactly these rows of the workload. Empty means the
+    /// worker stores everything (full replication or legacy behaviour).
+    pub stored: Vec<usize>,
 }
 
 /// Worker → master handshake acknowledgement.
@@ -77,6 +97,34 @@ pub struct Hello {
 pub struct HelloAck {
     pub version: u16,
     pub worker: usize,
+}
+
+/// One chunk of a worker's placed rows, streamed master → worker after
+/// the handshake when the workload is [`WorkloadSpec::Streamed`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct DataFrame {
+    /// Global rows this chunk covers.
+    pub rows: RowRange,
+    /// Columns of the matrix (self-describing so the chunk validates on
+    /// its own: `values.len() == rows.len() * cols`).
+    pub cols: usize,
+    /// Final-chunk marker: the worker seals its shard on receipt.
+    pub done: bool,
+    /// Row-major payload for `rows`.
+    pub values: Vec<f32>,
+}
+
+/// FNV-1a-32 over the raw little-endian bytes of the values — the `Data`
+/// frame integrity checksum.
+pub fn data_checksum(values: &[f32]) -> u32 {
+    let mut h: u32 = 0x811C_9DC5;
+    for v in values {
+        for b in v.to_le_bytes() {
+            h ^= u32::from(b);
+            h = h.wrapping_mul(0x0100_0193);
+        }
+    }
+    h
 }
 
 /// Every message that can travel on the wire.
@@ -96,6 +144,14 @@ pub enum WireMsg {
         seq: u64,
     },
     Shutdown,
+    /// Streamed storage chunk (master → worker).
+    Data(DataFrame),
+    /// Storage materialized; closes the handshake (worker → master).
+    StorageReady {
+        worker: usize,
+        /// Matrix payload bytes actually resident on the worker.
+        resident_bytes: u64,
+    },
 }
 
 // ---------------------------------------------------------------- encoder
@@ -158,6 +214,14 @@ fn enc_workload(e: &mut Enc, w: &WorkloadSpec) {
             e.f64(0.0);
             e.f64(0.0);
         }
+        WorkloadSpec::Streamed { q, r } => {
+            e.u8(3);
+            e.u64(*q as u64);
+            e.u64(*r as u64);
+            e.u64(0);
+            e.f64(0.0);
+            e.f64(0.0);
+        }
     }
 }
 
@@ -178,6 +242,10 @@ pub fn encode(msg: &WireMsg) -> Vec<u8> {
             e.u32(h.g as u32);
             e.u32(h.heartbeat_ms);
             enc_workload(&mut e, &h.workload);
+            e.u32(h.stored.len() as u32);
+            for &g in &h.stored {
+                e.u32(g as u32);
+            }
             e.buf
         }
         WireMsg::HelloAck(a) => {
@@ -245,6 +313,25 @@ pub fn encode(msg: &WireMsg) -> Vec<u8> {
             e.buf
         }
         WireMsg::Shutdown => vec![TAG_SHUTDOWN],
+        WireMsg::Data(d) => {
+            let mut e = Enc::new(TAG_DATA);
+            e.u64(d.rows.lo as u64);
+            e.u64(d.rows.hi as u64);
+            e.u32(d.cols as u32);
+            e.u8(u8::from(d.done));
+            e.u32(data_checksum(&d.values));
+            e.f32s(&d.values);
+            e.buf
+        }
+        WireMsg::StorageReady {
+            worker,
+            resident_bytes,
+        } => {
+            let mut e = Enc::new(TAG_STORAGE_READY);
+            e.u32(*worker as u32);
+            e.u64(*resident_bytes);
+            e.buf
+        }
     }
 }
 
@@ -339,6 +426,7 @@ fn dec_workload(d: &mut Dec<'_>) -> Result<WorkloadSpec> {
             seed,
         }),
         2 => Ok(WorkloadSpec::RandomDense { q, r, seed }),
+        3 => Ok(WorkloadSpec::Streamed { q, r }),
         other => Err(Error::wire(format!("unknown workload kind {other}"))),
     }
 }
@@ -376,6 +464,11 @@ pub fn decode(payload: &[u8]) -> Result<WireMsg> {
             let g = d.u32()? as usize;
             let heartbeat_ms = d.u32()?;
             let workload = dec_workload(&mut d)?;
+            let n_stored = d.list_len("stored sub-matrix")?;
+            let mut stored = Vec::with_capacity(n_stored);
+            for _ in 0..n_stored {
+                stored.push(d.u32()? as usize);
+            }
             WireMsg::Hello(Hello {
                 version,
                 worker,
@@ -385,6 +478,7 @@ pub fn decode(payload: &[u8]) -> Result<WireMsg> {
                 g,
                 heartbeat_ms,
                 workload,
+                stored,
             })
         }
         TAG_HELLO_ACK => {
@@ -465,6 +559,49 @@ pub fn decode(payload: &[u8]) -> Result<WireMsg> {
             WireMsg::Heartbeat { worker, seq }
         }
         TAG_SHUTDOWN => WireMsg::Shutdown,
+        TAG_DATA => {
+            let rows = dec_row_range(&mut d)?;
+            let cols = d.u32()? as usize;
+            let done = match d.u8()? {
+                0 => false,
+                1 => true,
+                other => return Err(Error::wire(format!("unknown done byte {other}"))),
+            };
+            let checksum = d.u32()?;
+            let values = d.f32s()?;
+            let expect = rows.len().checked_mul(cols).ok_or_else(|| {
+                Error::wire("data chunk dimensions overflow usize")
+            })?;
+            if values.len() != expect {
+                return Err(Error::wire(format!(
+                    "data chunk {}..{} x {cols} carries {} values, expected {expect}",
+                    rows.lo,
+                    rows.hi,
+                    values.len()
+                )));
+            }
+            let got = data_checksum(&values);
+            if got != checksum {
+                return Err(Error::wire(format!(
+                    "data chunk {}..{} checksum mismatch: {got:#010x} vs declared {checksum:#010x}",
+                    rows.lo, rows.hi
+                )));
+            }
+            WireMsg::Data(DataFrame {
+                rows,
+                cols,
+                done,
+                values,
+            })
+        }
+        TAG_STORAGE_READY => {
+            let worker = d.u32()? as usize;
+            let resident_bytes = d.u64()?;
+            WireMsg::StorageReady {
+                worker,
+                resident_bytes,
+            }
+        }
         other => return Err(Error::wire(format!("unknown message tag {other}"))),
     };
     d.finish()?;
@@ -509,6 +646,18 @@ mod tests {
                 gap: 0.35,
                 seed: 7,
             },
+            stored: vec![0, 2, 5],
+        }));
+        roundtrip(WireMsg::Hello(Hello {
+            version: WIRE_VERSION,
+            worker: 0,
+            speed: 1.0,
+            tile_rows: 32,
+            backend: BackendKind::Host,
+            g: 4,
+            heartbeat_ms: 0,
+            workload: WorkloadSpec::Streamed { q: 64, r: 48 },
+            stored: vec![],
         }));
         roundtrip(WireMsg::HelloAck(HelloAck {
             version: WIRE_VERSION,
@@ -578,9 +727,56 @@ mod tests {
             g: 1,
             heartbeat_ms: 0,
             workload: WorkloadSpec::RandomDense { q: 4, r: 4, seed: 0 },
+            stored: vec![],
         }));
         h[1] ^= 0xFF;
         assert!(decode(&h).is_err());
+    }
+
+    #[test]
+    fn data_frame_roundtrip_and_checksum() {
+        let frame = DataFrame {
+            rows: RowRange::new(10, 13),
+            cols: 2,
+            done: true,
+            values: vec![1.0, -2.5, 3.25, 0.0, 7.5, -0.125],
+        };
+        roundtrip(WireMsg::Data(frame.clone()));
+        roundtrip(WireMsg::StorageReady {
+            worker: 4,
+            resident_bytes: 34_560,
+        });
+
+        // corrupting a payload byte must trip the checksum
+        let mut bytes = encode(&WireMsg::Data(frame.clone()));
+        let n = bytes.len();
+        bytes[n - 3] ^= 0x40; // inside the values region
+        let e = decode(&bytes).unwrap_err();
+        assert!(e.to_string().contains("checksum"), "{e}");
+
+        // a value count inconsistent with rows × cols is rejected
+        let bad = DataFrame {
+            values: frame.values[..4].to_vec(),
+            ..frame
+        };
+        let mut e2 = Enc::new(TAG_DATA);
+        e2.u64(bad.rows.lo as u64);
+        e2.u64(bad.rows.hi as u64);
+        e2.u32(bad.cols as u32);
+        e2.u8(1);
+        e2.u32(data_checksum(&bad.values));
+        e2.f32s(&bad.values);
+        assert!(decode(&e2.buf).is_err());
+    }
+
+    #[test]
+    fn empty_data_frame_is_valid() {
+        roundtrip(WireMsg::Data(DataFrame {
+            rows: RowRange::new(0, 0),
+            cols: 16,
+            done: true,
+            values: vec![],
+        }));
     }
 
     #[test]

@@ -1,12 +1,20 @@
 //! Worker daemon: the remote end of [`super::TcpTransport`].
 //!
 //! `usec worker --listen host:port` runs [`serve_worker`]: accept a master
-//! connection, handshake (version check + workload materialization), then
-//! execute [`WorkOrder`]s through the exact same
+//! connection, handshake (version check + placement-shaped storage
+//! materialization), then execute [`WorkOrder`]s through the exact same
 //! [`crate::sched::worker::execute_order`] compute path the in-process
 //! cluster uses — straggler injection, speed throttling and all — replying
 //! with framed [`WireMsg::Report`]s and pushing heartbeats from a side
 //! thread so liveness is visible even mid-compute.
+//!
+//! Storage is the uncoded USEC model made real: the `Hello` names the
+//! sub-matrices this worker stores (`Z_n`), and the daemon keeps **only
+//! those rows** resident — regenerated from the deterministic workload
+//! spec, or received as checksummed `Data` frames when the master streams
+//! external data ([`WorkloadSpec::Streamed`]). The daemon reports its
+//! actual resident byte count in `StorageReady`, which is what
+//! `--json-out` surfaces per worker.
 
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -18,25 +26,29 @@ use crate::error::{Error, Result};
 use crate::linalg::partition::{submatrix_ranges, TilePlan};
 use crate::runtime::BackendSpec;
 use crate::sched::worker::{execute_order, WorkerConfig, WorkerStorage};
+use crate::storage::{coalesce_sub_ranges, RowShard, StorageView, StoreHandle};
 
-use super::codec::{self, HelloAck, WireMsg, WIRE_VERSION};
+use super::codec::{self, Hello, HelloAck, WireMsg, WIRE_VERSION};
 use super::lock;
+use super::transport::WorkloadSpec;
 
-/// How long the daemon waits for the master's `Hello` before dropping a
-/// connection that never speaks.
+/// How long the daemon waits for the master's `Hello` (and for each
+/// streamed `Data` frame) before dropping a connection that goes quiet.
 const HANDSHAKE_TIMEOUT: Duration = Duration::from_secs(10);
 
 /// Daemon behaviour knobs.
 #[derive(Debug, Clone, Default)]
 pub struct DaemonOpts {
-    /// Exit after one master session instead of looping back to `accept`.
-    pub once: bool,
+    /// Exit after this many master sessions (0 = serve forever). A
+    /// re-admitted master counts as a fresh session.
+    pub max_sessions: usize,
 }
 
-/// Accept master sessions forever (or once, per `opts`). Each session is
-/// serial: one master drives one worker daemon at a time, matching the
-/// paper's single-master Algorithm 1.
+/// Accept master sessions forever (or `max_sessions`, per `opts`). Each
+/// session is serial: one master drives one worker daemon at a time,
+/// matching the paper's single-master Algorithm 1.
 pub fn serve_worker(listener: TcpListener, opts: DaemonOpts) -> Result<()> {
+    let mut served = 0usize;
     loop {
         let (stream, peer_addr) = listener.accept()?;
         let _ = stream.set_nodelay(true);
@@ -45,14 +57,63 @@ pub fn serve_worker(listener: TcpListener, opts: DaemonOpts) -> Result<()> {
             Ok(()) => crate::log_info!("worker daemon: session from {peer_addr} closed"),
             Err(e) => crate::log_warn!("worker daemon: session from {peer_addr} ended: {e}"),
         }
-        if opts.once {
+        served += 1;
+        if opts.max_sessions > 0 && served >= opts.max_sessions {
             return Ok(());
         }
     }
 }
 
-/// One master session: handshake, then order→report until `Shutdown` or
-/// the socket dies.
+/// Materialize the placement-shaped storage the `Hello` prescribes:
+/// regenerate from the workload spec (keeping only the placed rows when a
+/// proper subset is stored), or assemble streamed `Data` frames into a
+/// [`RowShard`].
+fn materialize_storage(stream: &TcpStream, hello: &Hello) -> Result<StoreHandle> {
+    let q = hello.workload.rows();
+    let r = hello.workload.cols();
+    if hello.workload.is_streamed() {
+        let mut shard = RowShard::new(q, r);
+        loop {
+            match codec::read_msg(&mut &*stream)? {
+                WireMsg::Data(d) => {
+                    if d.cols != r {
+                        return Err(Error::wire(format!(
+                            "data chunk has {} cols, workload says {r}",
+                            d.cols
+                        )));
+                    }
+                    shard.insert(d.rows, d.values)?;
+                    if d.done {
+                        break;
+                    }
+                }
+                other => {
+                    return Err(Error::wire(format!(
+                        "expected Data during storage streaming, got {other:?}"
+                    )))
+                }
+            }
+        }
+        return Ok(StoreHandle::Shard(Arc::new(shard)));
+    }
+
+    // Generator-backed: deterministic in the seed, so master and worker
+    // agree on every stored row without shipping the matrix. The full
+    // matrix exists only transiently; steady-state residency is the
+    // placed share.
+    let matrix = hello.workload.materialize()?;
+    let distinct: std::collections::BTreeSet<usize> = hello.stored.iter().copied().collect();
+    if distinct.is_empty() || distinct.len() == hello.g {
+        return Ok(StoreHandle::Full(matrix));
+    }
+    let sub_ranges = submatrix_ranges(q, hello.g)?;
+    let placed = coalesce_sub_ranges(&hello.stored, &sub_ranges)?;
+    let shard = RowShard::from_matrix(&matrix, &placed)?;
+    Ok(StoreHandle::Shard(Arc::new(shard)))
+}
+
+/// One master session: handshake, storage materialization, then
+/// order→report until `Shutdown` or the socket dies.
 fn serve_session(stream: TcpStream) -> Result<()> {
     stream.set_read_timeout(Some(HANDSHAKE_TIMEOUT))?;
     let hello = match codec::read_msg(&mut &stream)? {
@@ -73,30 +134,47 @@ fn serve_session(stream: TcpStream) -> Result<()> {
             hello.workload.rows()
         )));
     }
+    if let Some(&bad) = hello.stored.iter().find(|&&g| g >= hello.g) {
+        return Err(Error::wire(format!(
+            "stored sub-matrix {bad} out of range (G={})",
+            hello.g
+        )));
+    }
 
-    // Materialize the uncoded storage this worker is responsible for. The
-    // generator is deterministic in the seed, so master and worker agree
-    // on every stored row without shipping the matrix.
-    let matrix = hello.workload.materialize()?;
+    codec::write_msg(
+        &mut &stream,
+        &WireMsg::HelloAck(HelloAck {
+            version: WIRE_VERSION,
+            worker: hello.worker,
+        }),
+    )?;
+
+    let store = materialize_storage(&stream, &hello)?;
+    let resident_bytes = store.resident_bytes() as u64;
     let sub_ranges = Arc::new(submatrix_ranges(hello.workload.rows(), hello.g)?);
     let cfg = WorkerConfig {
         id: hello.worker,
         backend: BackendSpec::from_kind(hello.backend, crate::apps::harness::artifact_dir()),
         speed: hello.speed,
         tile_rows: hello.tile_rows,
-        storage: WorkerStorage { matrix, sub_ranges },
+        storage: WorkerStorage { store, sub_ranges },
     };
     let backend = cfg.backend.instantiate()?;
 
     let writer = Arc::new(Mutex::new(stream.try_clone()?));
     codec::write_msg(
         &mut *lock(&writer),
-        &WireMsg::HelloAck(HelloAck {
-            version: WIRE_VERSION,
+        &WireMsg::StorageReady {
             worker: hello.worker,
-        }),
+            resident_bytes,
+        },
     )?;
     stream.set_read_timeout(None)?;
+    crate::log_info!(
+        "worker daemon: storage ready ({} of {} rows resident, {resident_bytes} bytes)",
+        cfg.storage.store.resident_rows(),
+        cfg.storage.store.global_rows()
+    );
 
     // Heartbeat pump: keeps the master's liveness view fresh even while
     // the session thread is deep in a long tile computation.
@@ -179,36 +257,20 @@ fn serve_session(stream: TcpStream) -> Result<()> {
     result
 }
 
-/// Reject orders that reference sub-matrices or rows this worker does not
-/// store — [`execute_order`] indexes them directly (the in-process cluster
-/// is trusted; a socket peer is not).
+/// Reject orders a malformed/hostile master could send. Task geometry
+/// (sub-matrix bounds, offset overflow, placed-row residency) is already
+/// validated row-by-row inside [`execute_order`] via the storage view and
+/// surfaces as the same `Failed` reply; the only check it cannot make
+/// before touching the backend is the iterate length.
 fn validate_order(
     cfg: &WorkerConfig,
     order: &crate::sched::protocol::WorkOrder,
 ) -> Result<()> {
-    for t in &order.tasks {
-        let sub = cfg.storage.sub_ranges.get(t.g).ok_or_else(|| {
-            Error::wire(format!(
-                "task references sub-matrix {} (worker stores {})",
-                t.g,
-                cfg.storage.sub_ranges.len()
-            ))
-        })?;
-        if t.rows.hi > sub.len() {
-            return Err(Error::wire(format!(
-                "task rows {}..{} exceed sub-matrix {} ({} rows)",
-                t.rows.lo,
-                t.rows.hi,
-                t.g,
-                sub.len()
-            )));
-        }
-    }
-    if order.w.len() != cfg.storage.matrix.cols() {
+    if order.w.len() != cfg.storage.store.cols() {
         return Err(Error::wire(format!(
             "iterate length {} != matrix cols {}",
             order.w.len(),
-            cfg.storage.matrix.cols()
+            cfg.storage.store.cols()
         )));
     }
     Ok(())
@@ -228,7 +290,7 @@ pub fn worker_cli(argv: &[String]) -> Result<()> {
     serve_worker(
         listener,
         DaemonOpts {
-            once: args.has("once"),
+            max_sessions: usize::from(args.has("once")),
         },
     )
 }
@@ -237,7 +299,8 @@ pub fn worker_cli(argv: &[String]) -> Result<()> {
 mod tests {
     use super::*;
     use crate::config::types::BackendKind;
-    use crate::net::codec::Hello;
+    use crate::linalg::partition::RowRange;
+    use crate::net::codec::{DataFrame, Hello};
     use crate::net::transport::WorkloadSpec;
 
     fn test_hello(worker: usize) -> Hello {
@@ -254,15 +317,27 @@ mod tests {
                 r: 16,
                 seed: 5,
             },
+            stored: vec![],
+        }
+    }
+
+    fn spawn_daemon() -> (std::net::SocketAddr, std::thread::JoinHandle<Result<()>>) {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let h = std::thread::spawn(move || serve_worker(listener, DaemonOpts { max_sessions: 1 }));
+        (addr, h)
+    }
+
+    fn read_storage_ready(stream: &TcpStream) -> u64 {
+        match codec::read_msg(&mut &*stream).unwrap() {
+            WireMsg::StorageReady { resident_bytes, .. } => resident_bytes,
+            other => panic!("expected StorageReady, got {other:?}"),
         }
     }
 
     #[test]
     fn daemon_rejects_version_mismatch() {
-        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
-        let addr = listener.local_addr().unwrap();
-        let h = std::thread::spawn(move || serve_worker(listener, DaemonOpts { once: true }));
-
+        let (addr, h) = spawn_daemon();
         let stream = TcpStream::connect(addr).unwrap();
         let mut bad = test_hello(0);
         bad.version = 999;
@@ -277,10 +352,7 @@ mod tests {
 
     #[test]
     fn daemon_handshakes_and_shuts_down() {
-        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
-        let addr = listener.local_addr().unwrap();
-        let h = std::thread::spawn(move || serve_worker(listener, DaemonOpts { once: true }));
-
+        let (addr, h) = spawn_daemon();
         let stream = TcpStream::connect(addr).unwrap();
         stream
             .set_read_timeout(Some(Duration::from_secs(5)))
@@ -293,6 +365,60 @@ mod tests {
             }
             other => panic!("expected HelloAck, got {other:?}"),
         }
+        // full storage: empty stored list ⇒ the whole 16x16 matrix
+        assert_eq!(read_storage_ready(&stream), 16 * 16 * 4);
+        codec::write_msg(&mut &stream, &WireMsg::Shutdown).unwrap();
+        h.join().unwrap().unwrap();
+    }
+
+    #[test]
+    fn daemon_materializes_only_the_placed_share() {
+        let (addr, h) = spawn_daemon();
+        let stream = TcpStream::connect(addr).unwrap();
+        stream
+            .set_read_timeout(Some(Duration::from_secs(5)))
+            .unwrap();
+        let mut hello = test_hello(1);
+        hello.stored = vec![1]; // one of G=2 sub-matrices ⇒ half the rows
+        codec::write_msg(&mut &stream, &WireMsg::Hello(hello)).unwrap();
+        match codec::read_msg(&mut &stream).unwrap() {
+            WireMsg::HelloAck(_) => {}
+            other => panic!("expected HelloAck, got {other:?}"),
+        }
+        assert_eq!(read_storage_ready(&stream), 8 * 16 * 4);
+        codec::write_msg(&mut &stream, &WireMsg::Shutdown).unwrap();
+        h.join().unwrap().unwrap();
+    }
+
+    #[test]
+    fn daemon_assembles_streamed_storage() {
+        let (addr, h) = spawn_daemon();
+        let stream = TcpStream::connect(addr).unwrap();
+        stream
+            .set_read_timeout(Some(Duration::from_secs(5)))
+            .unwrap();
+        let mut hello = test_hello(2);
+        hello.workload = WorkloadSpec::Streamed { q: 16, r: 4 };
+        hello.stored = vec![0];
+        codec::write_msg(&mut &stream, &WireMsg::Hello(hello)).unwrap();
+        match codec::read_msg(&mut &stream).unwrap() {
+            WireMsg::HelloAck(_) => {}
+            other => panic!("expected HelloAck, got {other:?}"),
+        }
+        // stream global rows 0..8 in two chunks
+        for (lo, hi, done) in [(0usize, 5usize, false), (5, 8, true)] {
+            codec::write_msg(
+                &mut &stream,
+                &WireMsg::Data(DataFrame {
+                    rows: RowRange::new(lo, hi),
+                    cols: 4,
+                    done,
+                    values: vec![0.25; (hi - lo) * 4],
+                }),
+            )
+            .unwrap();
+        }
+        assert_eq!(read_storage_ready(&stream), 8 * 4 * 4);
         codec::write_msg(&mut &stream, &WireMsg::Shutdown).unwrap();
         h.join().unwrap().unwrap();
     }

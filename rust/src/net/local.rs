@@ -33,13 +33,23 @@ fn event_of(m: ToMaster) -> TransportEvent {
 /// Worker threads connected by mpsc channels — the zero-copy local mode.
 pub struct LocalTransport {
     cluster: Option<Cluster>,
+    /// Per-worker resident view bytes, captured at spawn. In full-matrix
+    /// mode every worker reads the same shared `Arc`, so these all equal
+    /// the full matrix size — the honest number for what each simulated
+    /// VM can address, not what the host allocates.
+    resident: Vec<u64>,
 }
 
 impl LocalTransport {
     /// Spawn one worker thread per config.
     pub fn spawn(configs: Vec<WorkerConfig>) -> Result<LocalTransport> {
+        let resident = configs
+            .iter()
+            .map(|c| c.storage.resident_bytes() as u64)
+            .collect();
         Ok(LocalTransport {
             cluster: Some(Cluster::spawn(configs)?),
+            resident,
         })
     }
 
@@ -74,6 +84,10 @@ impl Transport for LocalTransport {
             Some(c) => c.drain().into_iter().map(event_of).collect(),
             None => Vec::new(),
         }
+    }
+
+    fn resident_bytes(&self) -> Vec<u64> {
+        self.resident.clone()
     }
 
     fn shutdown(&mut self) {
@@ -132,10 +146,7 @@ mod tests {
                 backend: BackendSpec::Host,
                 speed: 1.0,
                 tile_rows: 8,
-                storage: WorkerStorage {
-                    matrix: Arc::clone(&matrix),
-                    sub_ranges: Arc::clone(&ranges),
-                },
+                storage: WorkerStorage::full(Arc::clone(&matrix), Arc::clone(&ranges)),
             })
             .collect();
         LocalTransport::spawn(configs).unwrap()

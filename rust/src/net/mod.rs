@@ -27,6 +27,8 @@
 //! | 5 | `Failed` (id, step, error) | worker → master |
 //! | 6 | `Heartbeat` (id, seq) | worker → master |
 //! | 7 | `Shutdown` | master → worker |
+//! | 8 | `Data` (rows, cols, done, checksum, values) | master → worker |
+//! | 9 | `StorageReady` (id, resident_bytes) | worker → master |
 //!
 //! ## Distributed quickstart
 //!
@@ -37,13 +39,25 @@
 //! usec worker --listen 127.0.0.1:7702
 //! usec worker --listen 127.0.0.1:7703
 //! usec master --workers 127.0.0.1:7701,127.0.0.1:7702,127.0.0.1:7703 \
-//!      --q 1536 --g 3 --j 3 --placement cyclic --stragglers 1
+//!      --q 1536 --g 5 --j 3 --placement cyclic --stragglers 1 \
+//!      [--stream-data] [--json-out run.json]
 //! ```
 //!
-//! Workers materialize their (uncoded) storage from the workload spec in
-//! the handshake — deterministic generators mean no gigabytes cross the
-//! wire. See `examples/distributed_quickstart.rs` for the same flow in
-//! one process.
+//! ## Placement-shaped storage
+//!
+//! The `Hello` names the sub-matrices each worker stores (its `Z_n`), and
+//! the worker materializes **only those rows** — regenerated from the
+//! deterministic workload spec (no matrix bytes on the wire), or, with
+//! `--stream-data`, received as chunked, checksummed `Data` frames for
+//! external data that no seed can regenerate. The worker's `StorageReady`
+//! reports its actual resident bytes, which `--json-out` surfaces per
+//! worker, so the simulated storage cost is measured end-to-end.
+//!
+//! A preempted worker is not gone forever: the master re-dials dead peers
+//! each step ([`Transport::readmit`]) and a daemon that is accepting again
+//! rejoins the availability set at the next step with freshly
+//! materialized storage. See `examples/distributed_quickstart.rs` for the
+//! whole flow in one process.
 
 pub mod codec;
 pub mod daemon;
@@ -52,7 +66,7 @@ pub mod local;
 pub mod tcp;
 pub mod transport;
 
-pub use codec::{Hello, HelloAck, WireMsg, WIRE_VERSION};
+pub use codec::{data_checksum, DataFrame, Hello, HelloAck, WireMsg, WIRE_VERSION};
 pub use local::LocalTransport;
 pub use tcp::{TcpOptions, TcpPeer, TcpTransport, DEFAULT_HEARTBEAT_MS};
 pub use transport::{Transport, TransportEvent, WorkloadSpec};
@@ -109,6 +123,20 @@ impl Transport for AnyTransport {
         match self {
             AnyTransport::Local(t) => t.drain(),
             AnyTransport::Tcp(t) => t.drain(),
+        }
+    }
+
+    fn readmit(&self) -> usize {
+        match self {
+            AnyTransport::Local(t) => t.readmit(),
+            AnyTransport::Tcp(t) => t.readmit(),
+        }
+    }
+
+    fn resident_bytes(&self) -> Vec<u64> {
+        match self {
+            AnyTransport::Local(t) => t.resident_bytes(),
+            AnyTransport::Tcp(t) => t.resident_bytes(),
         }
     }
 

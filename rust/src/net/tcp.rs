@@ -1,9 +1,12 @@
 //! TCP transport (master side): framed binary protocol + liveness.
 //!
 //! [`TcpTransport::connect`] dials every worker daemon, performs the
-//! versioned [`Hello`]/[`HelloAck`] handshake, and spawns one reader thread
-//! per connection that funnels decoded [`TransportEvent`]s into a single
-//! channel the master drains. Liveness is two-layered:
+//! versioned [`Hello`]/[`HelloAck`] handshake, streams the worker's placed
+//! rows when the workload is [`WorkloadSpec::Streamed`], waits for
+//! `StorageReady` (which carries the worker's actual resident byte count),
+//! and spawns one reader thread per connection that funnels decoded
+//! [`TransportEvent`]s into a single channel the master drains. Liveness
+//! is two-layered:
 //!
 //! * **Socket-level** — a read error or EOF on a worker's connection marks
 //!   it dead and emits [`TransportEvent::Disconnected`]; the master's
@@ -13,23 +16,48 @@
 //!   `heartbeat_ms`; [`Transport::alive`] also reports a worker dead when
 //!   nothing (report or heartbeat) arrived within `liveness_window`, which
 //!   catches half-open connections that never error.
+//!
+//! Preemption is no longer forever: [`TcpTransport::readmit`] re-dials
+//! dead peers with the same `Hello` (and re-streams their rows when the
+//! workload is streamed), so a worker daemon that came back rejoins the
+//! availability set at the next step.
 
-use std::net::{Shutdown, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::net::{Shutdown, SocketAddr, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{self, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use crate::error::{Error, Result};
+use crate::linalg::partition::RowRange;
+use crate::linalg::Matrix;
 use crate::sched::protocol::WorkOrder;
 
-use super::codec::{self, Hello, WireMsg, WIRE_VERSION};
+use super::codec::{self, DataFrame, Hello, WireMsg, WIRE_VERSION};
 use super::lock;
 use super::transport::{Transport, TransportEvent};
 
 /// Default worker → master heartbeat period.
 pub const DEFAULT_HEARTBEAT_MS: u32 = 500;
+
+/// Payload budget per streamed `Data` frame (4 MiB of `f32`s); chunking
+/// keeps frames far below [`super::frame::MAX_FRAME`] whatever the matrix
+/// width.
+const DATA_CHUNK_BYTES: usize = 1 << 22;
+
+/// Connect timeout when re-dialing a dead peer; kept short so a still-dead
+/// worker costs the master little per step.
+const READMIT_CONNECT_TIMEOUT: Duration = Duration::from_millis(500);
+
+/// Read timeout for the `HelloAck` during re-admission. Much shorter than
+/// `handshake_timeout`: readmit runs inline in the step loop, so a daemon
+/// whose backlog accepted the dial but which is still busy with an old
+/// session must not stall healthy workers for long — the re-dial simply
+/// retries next step. Once the ack arrives the daemon is actively
+/// handshaking, and the `StorageReady` wait reverts to the full
+/// `handshake_timeout` (storage materialization scales with `q × r`).
+const READMIT_ACK_TIMEOUT: Duration = Duration::from_secs(2);
 
 /// One worker endpoint to dial.
 #[derive(Debug, Clone)]
@@ -40,17 +68,29 @@ pub struct TcpPeer {
     /// [`TcpTransport::connect`] with the peer's index and
     /// [`WIRE_VERSION`]).
     pub hello: Hello,
+    /// Global rows streamed to this worker after the handshake when the
+    /// workload is [`WorkloadSpec::Streamed`] — its placed share. Ignored
+    /// for generator-backed workloads.
+    ///
+    /// [`WorkloadSpec::Streamed`]: super::transport::WorkloadSpec::Streamed
+    pub stream_ranges: Vec<RowRange>,
 }
 
 /// Master-side tuning knobs.
 #[derive(Debug, Clone)]
 pub struct TcpOptions {
-    /// Read timeout for the handshake exchange.
+    /// Read timeout for the handshake exchange (per message, including
+    /// `StorageReady` after storage materialization).
     pub handshake_timeout: Duration,
     /// A worker with no traffic (report/heartbeat) for this long counts as
     /// dead in [`Transport::alive`]. Zero disables staleness detection
     /// (socket errors still apply).
     pub liveness_window: Duration,
+    /// Socket write timeout for all master → worker traffic. A wedged (not
+    /// crashed) worker whose receive buffer filled up must surface as a
+    /// per-worker send error — i.e. a preemption — instead of blocking the
+    /// single master thread forever. Zero disables it.
+    pub write_timeout: Duration,
 }
 
 impl Default for TcpOptions {
@@ -58,22 +98,41 @@ impl Default for TcpOptions {
         TcpOptions {
             handshake_timeout: Duration::from_secs(10),
             liveness_window: Duration::from_millis(u64::from(DEFAULT_HEARTBEAT_MS) * 8),
+            write_timeout: Duration::from_secs(10),
         }
     }
 }
 
 struct Peer {
+    /// Endpoint + handshake recipe, kept for re-admission.
+    cfg: TcpPeer,
     writer: Mutex<TcpStream>,
     alive: AtomicBool,
     last_seen: Mutex<Instant>,
     /// Staleness bound for this peer; `ZERO` when its heartbeats are
     /// disabled (then only socket errors mark it dead).
     liveness_window: Duration,
+    /// Connection generation: bumped on every re-admission so a stale
+    /// reader thread from a previous connection cannot kill the new one.
+    epoch: AtomicU64,
+    /// Serializes death-marking (reader error path) against resurrection
+    /// (`readmit`): the epoch check and the `alive` write must be one
+    /// atomic step on both sides, or a descheduled stale reader could
+    /// mark a freshly re-admitted connection dead.
+    lifecycle: Mutex<()>,
+    /// Matrix payload bytes the daemon reported in `StorageReady`.
+    resident_bytes: AtomicU64,
 }
 
 impl Peer {
     fn touch(&self) {
         *lock(&self.last_seen) = Instant::now();
+    }
+
+    fn is_alive(&self) -> bool {
+        self.alive.load(Ordering::Relaxed)
+            && (self.liveness_window.is_zero()
+                || lock(&self.last_seen).elapsed() <= self.liveness_window)
     }
 }
 
@@ -83,83 +142,240 @@ pub struct TcpTransport {
     events: Receiver<TransportEvent>,
     /// Keeps the channel open even after every reader thread exits, so
     /// `recv_timeout` reports timeouts instead of disconnection errors.
-    _event_tx: Sender<TransportEvent>,
-    handles: Vec<JoinHandle<()>>,
+    event_tx: Sender<TransportEvent>,
+    handles: Mutex<Vec<JoinHandle<()>>>,
+    opts: TcpOptions,
+    /// Master-side data matrix for streamed workloads (re-used when a
+    /// re-admitted worker needs its rows streamed again).
+    data: Option<Arc<Matrix>>,
+}
+
+/// Stream a worker's placed rows as chunked, checksummed `Data` frames.
+fn stream_rows(stream: &TcpStream, m: &Matrix, ranges: &[RowRange]) -> Result<()> {
+    let cols = m.cols();
+    let chunk_rows = (DATA_CHUNK_BYTES / (4 * cols.max(1))).max(1);
+    let total: usize = ranges.iter().map(|r| r.len()).sum();
+    if total == 0 {
+        // a worker with nothing placed still needs the end-of-stream mark
+        return codec::write_msg(
+            &mut &*stream,
+            &WireMsg::Data(DataFrame {
+                rows: RowRange::new(0, 0),
+                cols,
+                done: true,
+                values: Vec::new(),
+            }),
+        );
+    }
+    let mut sent = 0usize;
+    for r in ranges {
+        let mut lo = r.lo;
+        while lo < r.hi {
+            let hi = (lo + chunk_rows).min(r.hi);
+            sent += hi - lo;
+            codec::write_msg(
+                &mut &*stream,
+                &WireMsg::Data(DataFrame {
+                    rows: RowRange::new(lo, hi),
+                    cols,
+                    done: sent == total,
+                    values: m.try_row_block(lo, hi)?.to_vec(),
+                }),
+            )?;
+            lo = hi;
+        }
+    }
+    Ok(())
+}
+
+/// Dial one worker and run the full v2 handshake: `Hello` → `HelloAck` →
+/// (stream rows when the workload is streamed) → `StorageReady`. Returns
+/// the connected stream and the daemon's reported resident bytes.
+/// `ack_timeout` overrides the read timeout for the `HelloAck` only (the
+/// re-admission path keeps it short); later reads use the full
+/// `opts.handshake_timeout`.
+fn dial_and_handshake(
+    id: usize,
+    cfg: &TcpPeer,
+    opts: &TcpOptions,
+    data: Option<&Matrix>,
+    connect_timeout: Option<Duration>,
+    ack_timeout: Option<Duration>,
+) -> Result<(TcpStream, u64)> {
+    let stream = match connect_timeout {
+        None => TcpStream::connect(&cfg.addr)
+            .map_err(|e| Error::Cluster(format!("connect worker {id} at {}: {e}", cfg.addr)))?,
+        Some(t) => {
+            // like TcpStream::connect, try every resolved address — a
+            // dual-stack hostname must stay re-admittable when only one
+            // family's address accepts
+            let addrs: Vec<SocketAddr> = cfg
+                .addr
+                .to_socket_addrs()
+                .map_err(|e| Error::Cluster(format!("resolve {}: {e}", cfg.addr)))?
+                .collect();
+            let mut last_err = Error::Cluster(format!("no address for {}", cfg.addr));
+            let mut connected = None;
+            for addr in addrs {
+                match TcpStream::connect_timeout(&addr, t) {
+                    Ok(s) => {
+                        connected = Some(s);
+                        break;
+                    }
+                    Err(e) => {
+                        last_err =
+                            Error::Cluster(format!("connect worker {id} at {addr}: {e}"));
+                    }
+                }
+            }
+            connected.ok_or(last_err)?
+        }
+    };
+    let _ = stream.set_nodelay(true);
+    stream.set_read_timeout(Some(ack_timeout.unwrap_or(opts.handshake_timeout)))?;
+    if !opts.write_timeout.is_zero() {
+        stream.set_write_timeout(Some(opts.write_timeout))?;
+    }
+
+    let mut hello = cfg.hello.clone();
+    hello.worker = id;
+    hello.version = WIRE_VERSION;
+    let streamed = hello.workload.is_streamed();
+    codec::write_msg(&mut &stream, &WireMsg::Hello(hello))?;
+    match codec::read_msg(&mut &stream)
+        .map_err(|e| Error::Cluster(format!("handshake with worker {id} at {}: {e}", cfg.addr)))?
+    {
+        WireMsg::HelloAck(ack) => {
+            if ack.version != WIRE_VERSION {
+                return Err(Error::wire(format!(
+                    "worker {id} speaks wire version {} (need {WIRE_VERSION})",
+                    ack.version
+                )));
+            }
+            if ack.worker != id {
+                return Err(Error::wire(format!(
+                    "worker at {} acknowledged as id {} (expected {id})",
+                    cfg.addr, ack.worker
+                )));
+            }
+        }
+        other => {
+            return Err(Error::wire(format!(
+                "worker {id} handshake: expected HelloAck, got {other:?}"
+            )))
+        }
+    }
+    // the daemon is committed to this session now; give storage
+    // materialization (which scales with q × r) the full window
+    stream.set_read_timeout(Some(opts.handshake_timeout))?;
+    if streamed {
+        let m = data.ok_or_else(|| {
+            Error::Config(
+                "streamed workload requires a master-side data matrix \
+                 (TcpTransport::connect_with_data)"
+                    .into(),
+            )
+        })?;
+        stream_rows(&stream, m, &cfg.stream_ranges)?;
+    }
+    let resident = match codec::read_msg(&mut &stream).map_err(|e| {
+        Error::Cluster(format!("storage handshake with worker {id}: {e}"))
+    })? {
+        WireMsg::StorageReady { resident_bytes, .. } => resident_bytes,
+        other => {
+            return Err(Error::wire(format!(
+                "worker {id}: expected StorageReady, got {other:?}"
+            )))
+        }
+    };
+    stream.set_read_timeout(None)?;
+    Ok((stream, resident))
 }
 
 impl TcpTransport {
     /// Dial and handshake every worker. Fails fast if any worker is
-    /// unreachable or speaks the wrong protocol version.
+    /// unreachable or speaks the wrong protocol version. Generator-backed
+    /// workloads only; use [`TcpTransport::connect_with_data`] when the
+    /// workload is streamed.
     pub fn connect(peers_cfg: Vec<TcpPeer>, opts: TcpOptions) -> Result<TcpTransport> {
+        TcpTransport::connect_with_data(peers_cfg, opts, None)
+    }
+
+    /// Like [`TcpTransport::connect`], with the master-side data matrix to
+    /// stream each peer's `stream_ranges` from when the workload is
+    /// [`WorkloadSpec::Streamed`].
+    ///
+    /// [`WorkloadSpec::Streamed`]: super::transport::WorkloadSpec::Streamed
+    pub fn connect_with_data(
+        peers_cfg: Vec<TcpPeer>,
+        opts: TcpOptions,
+        data: Option<Arc<Matrix>>,
+    ) -> Result<TcpTransport> {
         if peers_cfg.is_empty() {
             return Err(Error::Config("no workers to connect to".into()));
         }
         let (tx, rx) = mpsc::channel();
-        let mut peers = Vec::with_capacity(peers_cfg.len());
+        let mut peers: Vec<Arc<Peer>> = Vec::with_capacity(peers_cfg.len());
         let mut handles = Vec::with_capacity(peers_cfg.len());
-        for (id, pc) in peers_cfg.into_iter().enumerate() {
-            let stream = TcpStream::connect(&pc.addr).map_err(|e| {
-                Error::Cluster(format!("connect worker {id} at {}: {e}", pc.addr))
-            })?;
-            let _ = stream.set_nodelay(true);
-            stream.set_read_timeout(Some(opts.handshake_timeout))?;
-
-            let mut hello = pc.hello.clone();
-            hello.worker = id;
-            hello.version = WIRE_VERSION;
+        let setup = |id: usize, pc: TcpPeer| -> Result<(Arc<Peer>, JoinHandle<()>)> {
+            let (stream, resident) =
+                dial_and_handshake(id, &pc, &opts, data.as_deref(), None, None)?;
             // a peer that sends no heartbeats must not be declared stale
-            let liveness_window = if hello.heartbeat_ms == 0 {
+            let liveness_window = if pc.hello.heartbeat_ms == 0 {
                 Duration::ZERO
             } else {
                 opts.liveness_window
             };
-            codec::write_msg(&mut &stream, &WireMsg::Hello(hello))?;
-            match codec::read_msg(&mut &stream).map_err(|e| {
-                Error::Cluster(format!("handshake with worker {id} at {}: {e}", pc.addr))
-            })? {
-                WireMsg::HelloAck(ack) => {
-                    if ack.version != WIRE_VERSION {
-                        return Err(Error::wire(format!(
-                            "worker {id} speaks wire version {} (need {WIRE_VERSION})",
-                            ack.version
-                        )));
-                    }
-                    if ack.worker != id {
-                        return Err(Error::wire(format!(
-                            "worker at {} acknowledged as id {} (expected {id})",
-                            pc.addr, ack.worker
-                        )));
-                    }
-                }
-                other => {
-                    return Err(Error::wire(format!(
-                        "worker {id} handshake: expected HelloAck, got {other:?}"
-                    )))
-                }
-            }
-            stream.set_read_timeout(None)?;
-
             let reader = stream.try_clone()?;
             let peer = Arc::new(Peer {
+                cfg: pc,
                 writer: Mutex::new(stream),
                 alive: AtomicBool::new(true),
                 last_seen: Mutex::new(Instant::now()),
                 liveness_window,
+                epoch: AtomicU64::new(0),
+                lifecycle: Mutex::new(()),
+                resident_bytes: AtomicU64::new(resident),
             });
             let peer2 = Arc::clone(&peer);
             let tx2 = tx.clone();
             let handle = std::thread::Builder::new()
                 .name(format!("usec-net-rx-{id}"))
-                .spawn(move || reader_loop(id, reader, peer2, tx2))
+                .spawn(move || reader_loop(id, reader, peer2, tx2, 0))
                 .map_err(|e| Error::Cluster(format!("spawn reader {id}: {e}")))?;
-            peers.push(peer);
-            handles.push(handle);
+            Ok((peer, handle))
+        };
+        for (id, pc) in peers_cfg.into_iter().enumerate() {
+            match setup(id, pc) {
+                Ok((peer, handle)) => {
+                    peers.push(peer);
+                    handles.push(handle);
+                }
+                Err(e) => {
+                    // fail fast, but not dirty: release the daemons already
+                    // handshook (serial-accept workers would otherwise stay
+                    // stuck in a session no one will ever close) and reap
+                    // their reader threads
+                    for p in &peers {
+                        p.alive.store(false, Ordering::Relaxed);
+                        let mut s = lock(&p.writer);
+                        let _ = codec::write_msg(&mut *s, &WireMsg::Shutdown);
+                        let _ = s.shutdown(Shutdown::Both);
+                    }
+                    for h in handles {
+                        let _ = h.join();
+                    }
+                    return Err(e);
+                }
+            }
         }
         Ok(TcpTransport {
             peers,
             events: rx,
-            _event_tx: tx,
-            handles,
+            event_tx: tx,
+            handles: Mutex::new(handles),
+            opts,
+            data,
         })
     }
 
@@ -186,7 +402,7 @@ impl TcpTransport {
                 let _ = s.shutdown(Shutdown::Both);
             }
         }
-        for h in self.handles.drain(..) {
+        for h in lock(&self.handles).drain(..) {
             let _ = h.join();
         }
     }
@@ -197,6 +413,7 @@ fn reader_loop(
     mut stream: TcpStream,
     peer: Arc<Peer>,
     tx: Sender<TransportEvent>,
+    epoch: u64,
 ) {
     loop {
         match codec::read_msg(&mut stream) {
@@ -222,11 +439,18 @@ fn reader_loop(
             }
             Err(e) => {
                 // EOF, reset, or a framing error: either way the stream is
-                // unusable — this worker is preempted until reconnect.
-                if peer.alive.swap(false, Ordering::Relaxed) {
-                    crate::log_warn!("worker {id} connection lost: {e}");
+                // unusable — this worker is preempted until it is
+                // re-admitted. The lifecycle lock makes the epoch check and
+                // the death-marking one atomic step, so a stale reader (the
+                // peer was re-admitted on a newer connection while this one
+                // was descheduled) can never kill the new connection.
+                let _g = lock(&peer.lifecycle);
+                if peer.epoch.load(Ordering::Relaxed) == epoch {
+                    if peer.alive.swap(false, Ordering::Relaxed) {
+                        crate::log_warn!("worker {id} connection lost: {e}");
+                    }
+                    let _ = tx.send(TransportEvent::Disconnected { worker: id });
                 }
-                let _ = tx.send(TransportEvent::Disconnected { worker: id });
                 return;
             }
         }
@@ -239,14 +463,7 @@ impl Transport for TcpTransport {
     }
 
     fn alive(&self) -> Vec<bool> {
-        self.peers
-            .iter()
-            .map(|p| {
-                p.alive.load(Ordering::Relaxed)
-                    && (p.liveness_window.is_zero()
-                        || lock(&p.last_seen).elapsed() <= p.liveness_window)
-            })
-            .collect()
+        self.peers.iter().map(|p| p.is_alive()).collect()
     }
 
     fn send(&self, worker: usize, order: WorkOrder) -> Result<()> {
@@ -276,6 +493,88 @@ impl Transport for TcpTransport {
             out.push(ev);
         }
         out
+    }
+
+    /// Re-dial every dead peer with its original `Hello` (re-streaming its
+    /// placed rows for streamed workloads). A daemon that is back up —
+    /// rebooted process or looped `accept` — rejoins with fresh storage
+    /// and counts toward the availability set from the caller's next
+    /// `alive()` snapshot.
+    fn readmit(&self) -> usize {
+        let mut rejoined = 0usize;
+        for (id, p) in self.peers.iter().enumerate() {
+            // Only re-dial peers whose socket is actually gone (reader
+            // error, failed send, or kill). A peer that is merely
+            // heartbeat-stale — e.g. a large report monopolizing the
+            // daemon's writer past the liveness window — keeps its healthy
+            // connection and simply sits out the availability set until
+            // traffic resumes, exactly the pre-readmit behaviour.
+            if p.alive.load(Ordering::Relaxed) {
+                continue;
+            }
+            // sever any half-open remains so the old reader exits and the
+            // daemon's stale session (if any) ends
+            {
+                let s = lock(&p.writer);
+                let _ = s.shutdown(Shutdown::Both);
+            }
+            match dial_and_handshake(
+                id,
+                &p.cfg,
+                &self.opts,
+                self.data.as_deref(),
+                Some(READMIT_CONNECT_TIMEOUT),
+                // only the ack wait is short — see READMIT_ACK_TIMEOUT
+                Some(READMIT_ACK_TIMEOUT),
+            ) {
+                Ok((stream, resident)) => {
+                    let reader = match stream.try_clone() {
+                        Ok(r) => r,
+                        Err(e) => {
+                            crate::log_warn!("readmit worker {id}: clone failed: {e}");
+                            continue;
+                        }
+                    };
+                    // resurrect atomically w.r.t. the old reader's death
+                    // path (see `Peer::lifecycle`)
+                    let epoch = {
+                        let _g = lock(&p.lifecycle);
+                        let epoch = p.epoch.fetch_add(1, Ordering::Relaxed) + 1;
+                        *lock(&p.writer) = stream;
+                        p.resident_bytes.store(resident, Ordering::Relaxed);
+                        p.touch();
+                        p.alive.store(true, Ordering::Relaxed);
+                        epoch
+                    };
+                    let peer2 = Arc::clone(p);
+                    let tx2 = self.event_tx.clone();
+                    match std::thread::Builder::new()
+                        .name(format!("usec-net-rx-{id}-e{epoch}"))
+                        .spawn(move || reader_loop(id, reader, peer2, tx2, epoch))
+                    {
+                        Ok(h) => lock(&self.handles).push(h),
+                        Err(e) => {
+                            p.alive.store(false, Ordering::Relaxed);
+                            crate::log_warn!("readmit worker {id}: spawn reader: {e}");
+                            continue;
+                        }
+                    }
+                    crate::log_info!("worker {id} re-admitted ({resident} resident bytes)");
+                    rejoined += 1;
+                }
+                Err(e) => {
+                    crate::log_debug!("worker {id} still unreachable: {e}");
+                }
+            }
+        }
+        rejoined
+    }
+
+    fn resident_bytes(&self) -> Vec<u64> {
+        self.peers
+            .iter()
+            .map(|p| p.resident_bytes.load(Ordering::Relaxed))
+            .collect()
     }
 
     fn shutdown(&mut self) {

@@ -61,6 +61,23 @@ pub trait Transport {
     /// Drain pending events without blocking (late reports between steps).
     fn drain(&self) -> Vec<TransportEvent>;
 
+    /// Try to restore disconnected workers (re-dial + fresh handshake +
+    /// storage rematerialization). Returns how many rejoined; they show up
+    /// in [`Transport::alive`] immediately, i.e. the availability set
+    /// regains them at the next step. In-process transports have nothing
+    /// to re-admit.
+    fn readmit(&self) -> usize {
+        0
+    }
+
+    /// Actual matrix payload bytes resident per worker, when the
+    /// transport knows them (local mode: the shared full-matrix view each
+    /// worker reads; TCP mode: what each daemon reported after
+    /// materializing its placed share). Empty when unknown.
+    fn resident_bytes(&self) -> Vec<u64> {
+        Vec::new()
+    }
+
     /// Tear the transport down (stop workers / close sockets). Idempotent.
     fn shutdown(&mut self);
 }
@@ -85,6 +102,11 @@ pub enum WorkloadSpec {
     },
     /// [`crate::linalg::gen::random_dense`] — generic dense workloads.
     RandomDense { q: usize, r: usize, seed: u64 },
+    /// No generator: the master streams the worker's placed rows over the
+    /// wire after the handshake (checksummed `Data` frames, tag 8) — the
+    /// path for external data that cannot be regenerated from a seed
+    /// (`--stream-data`).
+    Streamed { q: usize, r: usize },
 }
 
 impl WorkloadSpec {
@@ -93,6 +115,7 @@ impl WorkloadSpec {
         match self {
             WorkloadSpec::PlantedSymmetric { q, .. } => *q,
             WorkloadSpec::RandomDense { q, .. } => *q,
+            WorkloadSpec::Streamed { q, .. } => *q,
         }
     }
 
@@ -101,7 +124,13 @@ impl WorkloadSpec {
         match self {
             WorkloadSpec::PlantedSymmetric { q, .. } => *q,
             WorkloadSpec::RandomDense { r, .. } => *r,
+            WorkloadSpec::Streamed { r, .. } => *r,
         }
+    }
+
+    /// Whether the data arrives over the wire instead of a generator.
+    pub fn is_streamed(&self) -> bool {
+        matches!(self, WorkloadSpec::Streamed { .. })
     }
 
     /// Regenerate the data matrix this spec describes. Validates the
@@ -129,6 +158,12 @@ impl WorkloadSpec {
                     )));
                 }
                 crate::linalg::gen::random_dense(*q, *r, *seed)
+            }
+            WorkloadSpec::Streamed { .. } => {
+                return Err(Error::wire(
+                    "streamed workload has no deterministic generator; the \
+                     rows arrive as Data frames",
+                ))
             }
         };
         Ok(Arc::new(m))

@@ -158,6 +158,18 @@ impl Placement {
         self.stores[n].len() as f64 / self.g as f64
     }
 
+    /// Global row ranges machine `n` stores under the given sub-matrix
+    /// partition, sorted and coalesced — the placement-shaped storage a
+    /// distributed worker materializes ([`crate::storage::RowShard`]).
+    pub fn stored_ranges(
+        &self,
+        n: usize,
+        sub_ranges: &[crate::linalg::partition::RowRange],
+    ) -> crate::error::Result<Vec<crate::linalg::partition::RowRange>> {
+        let ids: Vec<usize> = self.stored_by(n).collect();
+        crate::storage::coalesce_sub_ranges(&ids, sub_ranges)
+    }
+
     /// Available replicas of `g` given the availability set.
     pub fn available_replicas(&self, g: usize, avail: &[usize]) -> Vec<usize> {
         self.replicas[g]
@@ -213,6 +225,18 @@ mod tests {
         let p = toy();
         assert_eq!(p.storage_fraction(1), 2.0 / 3.0);
         assert_eq!(p.storage_fraction(3), 1.0 / 3.0);
+    }
+
+    #[test]
+    fn stored_ranges_are_placement_shaped() {
+        use crate::linalg::partition::{submatrix_ranges, RowRange};
+        let p = toy(); // machine 1 stores sub-matrices {0, 1}, machine 3 {2}
+        let subs = submatrix_ranges(30, 3).unwrap(); // 10-row parts
+        assert_eq!(
+            p.stored_ranges(1, &subs).unwrap(),
+            vec![RowRange::new(0, 20)], // adjacent sub-matrices coalesce
+        );
+        assert_eq!(p.stored_ranges(3, &subs).unwrap(), vec![RowRange::new(20, 30)]);
     }
 
     #[test]

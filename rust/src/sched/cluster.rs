@@ -117,10 +117,7 @@ mod tests {
                 backend: BackendSpec::Host,
                 speed: 1.0,
                 tile_rows: 8,
-                storage: WorkerStorage {
-                    matrix: Arc::clone(&matrix),
-                    sub_ranges: Arc::clone(&ranges),
-                },
+                storage: WorkerStorage::full(Arc::clone(&matrix), Arc::clone(&ranges)),
             })
             .collect();
         Cluster::spawn(configs).unwrap()

@@ -63,8 +63,11 @@ pub struct RunResult {
 }
 
 impl RunResult {
-    /// Machine-readable dump (`--json-out`): eigenvalue estimate, iterate
-    /// geometry, and the full per-step timeline.
+    /// Machine-readable dump for library embedders: eigenvalue estimate,
+    /// iterate geometry, and the full per-step timeline. (The `usec` CLI's
+    /// `--json-out` builds its own document in [`crate::exp`] with
+    /// app/backend/policy metadata around the same
+    /// [`crate::metrics::Timeline::to_json`] payload.)
     pub fn to_json(&self) -> Json {
         let norm: f64 = self
             .final_iterate
@@ -331,10 +334,7 @@ mod tests {
                 backend: BackendSpec::Host,
                 speed: speeds[id],
                 tile_rows: 16,
-                storage: WorkerStorage {
-                    matrix: Arc::clone(&matrix),
-                    sub_ranges: Arc::clone(&ranges),
-                },
+                storage: WorkerStorage::full(Arc::clone(&matrix), Arc::clone(&ranges)),
             })
             .collect();
         let cluster = Cluster::spawn(configs).unwrap();
@@ -432,10 +432,7 @@ mod tests {
                 backend: BackendSpec::Host,
                 speed: speeds[id],
                 tile_rows: 16,
-                storage: WorkerStorage {
-                    matrix: Arc::clone(&matrix),
-                    sub_ranges: Arc::clone(&ranges),
-                },
+                storage: WorkerStorage::full(Arc::clone(&matrix), Arc::clone(&ranges)),
             })
             .collect();
         let cluster = Cluster::spawn(configs).unwrap();

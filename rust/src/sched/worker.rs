@@ -13,23 +13,52 @@ use std::sync::mpsc::{Receiver, Sender};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
+use crate::error::{Error, Result};
 use crate::linalg::partition::{RowRange, TilePlan};
 use crate::linalg::Matrix;
 use crate::runtime::BackendSpec;
+use crate::storage::{RowShard, StorageView, StoreHandle};
 
 use super::protocol::{Segment, ToMaster, ToWorker, WorkOrder, WorkerReport};
 use super::straggler::StraggleMode;
 
-/// Read-only storage view a worker holds.
+/// Read-only storage a worker holds, addressed in global row coordinates
+/// through the [`StorageView`] trait.
 ///
-/// The full matrix is shared host RAM (an `Arc`); each worker only ever
-/// reads the rows of its placed sub-matrices, which is exactly the uncoded
-/// USEC storage model without duplicating gigabytes per simulated VM.
+/// Local simulator mode shares one full matrix by `Arc`
+/// ([`StoreHandle::Full`], zero-copy — the uncoded USEC storage model
+/// without duplicating gigabytes per simulated VM). Distributed workers
+/// hold a placement-shaped [`StoreHandle::Shard`] with only their placed
+/// rows resident, so per-worker memory *is* the storage the placement
+/// prescribes.
 #[derive(Clone)]
 pub struct WorkerStorage {
-    pub matrix: Arc<Matrix>,
+    pub store: StoreHandle,
     /// Global row range of each sub-matrix `X_g`.
     pub sub_ranges: Arc<Vec<RowRange>>,
+}
+
+impl WorkerStorage {
+    /// Zero-copy full-matrix storage (local mode).
+    pub fn full(matrix: Arc<Matrix>, sub_ranges: Arc<Vec<RowRange>>) -> Self {
+        WorkerStorage {
+            store: StoreHandle::Full(matrix),
+            sub_ranges,
+        }
+    }
+
+    /// Placement-shaped shard storage (distributed mode).
+    pub fn shard(shard: Arc<RowShard>, sub_ranges: Arc<Vec<RowRange>>) -> Self {
+        WorkerStorage {
+            store: StoreHandle::Shard(shard),
+            sub_ranges,
+        }
+    }
+
+    /// Matrix payload bytes actually resident on this worker.
+    pub fn resident_bytes(&self) -> usize {
+        self.store.resident_bytes()
+    }
 }
 
 /// Static per-worker configuration.
@@ -90,21 +119,38 @@ pub fn execute_order(
     backend: &crate::runtime::Backend,
     tile: &TilePlan,
     order: &WorkOrder,
-) -> crate::error::Result<Option<WorkerReport>> {
+) -> Result<Option<WorkerReport>> {
     let start = Instant::now();
-    let cols = cfg.storage.matrix.cols();
+    let cols = cfg.storage.store.cols();
     let mut segments = Vec::new();
     let mut assigned_rows = 0usize;
     let mut mu = 0.0f64; // load in sub-matrix units
 
     for task in &order.tasks {
-        let sub = cfg.storage.sub_ranges[task.g];
-        let global = task.rows.offset(sub.lo);
-        debug_assert!(global.hi <= sub.hi, "task overruns sub-matrix");
+        let sub = *cfg.storage.sub_ranges.get(task.g).ok_or_else(|| {
+            Error::Shape(format!(
+                "task references sub-matrix {} of {}",
+                task.g,
+                cfg.storage.sub_ranges.len()
+            ))
+        })?;
+        let global = task.rows.checked_offset(sub.lo)?;
+        if global.hi > sub.hi {
+            return Err(Error::Shape(format!(
+                "task rows {}..{} overrun sub-matrix {} ({} rows)",
+                task.rows.lo,
+                task.rows.hi,
+                task.g,
+                sub.len()
+            )));
+        }
         assigned_rows += global.len();
         mu += task.rows.len() as f64 / sub.len() as f64;
         for t in tile.plan(global) {
-            let x = cfg.storage.matrix.row_block(t.lo, t.hi);
+            // the view rejects rows outside this worker's placed share —
+            // a shard worker cannot silently compute from rows it should
+            // not store
+            let x = cfg.storage.store.row_slice(t)?;
             let y = backend.matvec_tile(x, t.len(), cols, &order.w)?;
             segments.push(Segment { rows: t, values: y });
         }
@@ -155,10 +201,7 @@ mod tests {
     fn storage(q: usize, g: usize) -> WorkerStorage {
         let m = gen::random_dense(q, q, 5);
         let ranges = crate::linalg::partition::submatrix_ranges(q, g).unwrap();
-        WorkerStorage {
-            matrix: Arc::new(m),
-            sub_ranges: Arc::new(ranges),
-        }
+        WorkerStorage::full(Arc::new(m), Arc::new(ranges))
     }
 
     fn order(tasks: Vec<Task>, q: usize, straggle: Option<StraggleMode>) -> WorkOrder {
@@ -191,7 +234,8 @@ mod tests {
     #[test]
     fn computes_assigned_rows_correctly() {
         let c = cfg(0, 1.0);
-        let matrix = Arc::clone(&c.storage.matrix);
+        // same seed as `storage` — the oracle matrix is bit-identical
+        let matrix = gen::random_dense(60, 60, 5);
         let (tx, rx) = spawn_worker(c);
         // sub-matrix 2 covers global rows 20..30; assign local rows 3..9
         tx.send(ToWorker::Work(order(
@@ -303,5 +347,58 @@ mod tests {
         let fast = run(2.0);
         let ratio = fast / slow;
         assert!((1.5..2.6).contains(&ratio), "speed ratio {ratio}");
+    }
+
+    #[test]
+    fn shard_worker_matches_full_worker_and_rejects_unplaced_rows() {
+        let q = 60;
+        let matrix = Arc::new(gen::random_dense(q, q, 5));
+        let ranges = Arc::new(crate::linalg::partition::submatrix_ranges(q, 6).unwrap());
+        // shard worker stores sub-matrices {1, 2} only (global rows 10..30)
+        let placed = vec![ranges[1], ranges[2]];
+        let shard = Arc::new(RowShard::from_matrix(&matrix, &placed).unwrap());
+        assert_eq!(shard.resident_bytes(), 20 * q * 4);
+        let c = WorkerConfig {
+            id: 7,
+            backend: BackendSpec::Host,
+            speed: 1.0,
+            tile_rows: 16,
+            storage: WorkerStorage::shard(shard, Arc::clone(&ranges)),
+        };
+        let (tx, rx) = spawn_worker(c);
+        tx.send(ToWorker::Work(order(
+            vec![Task {
+                g: 2,
+                rows: RowRange::new(2, 8),
+            }],
+            q,
+            None,
+        )))
+        .unwrap();
+        let ToMaster::Report(r) = rx.recv_timeout(Duration::from_secs(5)).unwrap() else {
+            panic!("expected report");
+        };
+        let w = vec![0.1f32; q];
+        for seg in &r.segments {
+            for (i, row) in (seg.rows.lo..seg.rows.hi).enumerate() {
+                let want: f32 = matrix.row(row).iter().zip(&w).map(|(a, b)| a * b).sum();
+                assert!((seg.values[i] - want).abs() < 1e-4);
+            }
+        }
+        // a task over rows the shard does not store must fail, not panic
+        tx.send(ToWorker::Work(order(
+            vec![Task {
+                g: 4,
+                rows: RowRange::new(0, 5),
+            }],
+            q,
+            None,
+        )))
+        .unwrap();
+        match rx.recv_timeout(Duration::from_secs(5)).unwrap() {
+            ToMaster::Failed { worker, .. } => assert_eq!(worker, 7),
+            other => panic!("expected Failed, got {other:?}"),
+        }
+        tx.send(ToWorker::Shutdown).unwrap();
     }
 }

@@ -1,0 +1,31 @@
+//! Placement-shaped storage: what a worker actually holds in RAM.
+//!
+//! The paper's defining property is *uncoded storage placement*: machine
+//! `n` stores only its `|Z_n|` of the `G` sub-matrices (a `J/G` fraction
+//! of `X` under the named families of §III–IV). The seed implementation
+//! simulated that with an `Arc` of the **full** matrix per worker, so the
+//! storage cost never showed up anywhere. This module makes the placement
+//! shape real:
+//!
+//! * [`StorageView`] — the read interface kernels use: global geometry,
+//!   residency queries, and borrowing a global row range as a contiguous
+//!   row-major slice. Both [`crate::linalg::Matrix`] (everything resident)
+//!   and [`RowShard`] implement it.
+//! * [`RowShard`] — owned, possibly non-contiguous row blocks with
+//!   global↔local index mapping. A TCP worker materializes exactly its
+//!   placed share into one of these, whether by regenerating it from the
+//!   handshake's workload spec or by receiving streamed `Data` frames
+//!   ([`crate::net::codec`], tag 8).
+//! * [`StoreHandle`] — the cheap-to-clone handle workers hold: a
+//!   zero-copy full-matrix view (local simulator mode, bit-identical with
+//!   the seed behaviour) or a placement-shaped shard (distributed mode).
+//!
+//! [`StorageView::resident_bytes`] is what [`crate::metrics::Timeline`]
+//! and `--json-out` report per worker, so simulated storage cost is now an
+//! observable, not a fiction.
+
+pub mod shard;
+pub mod view;
+
+pub use shard::{coalesce_sub_ranges, RowShard};
+pub use view::{StorageView, StoreHandle};

@@ -1,0 +1,314 @@
+//! [`RowShard`]: the rows a machine actually stores, and nothing else.
+
+use crate::error::{Error, Result};
+use crate::linalg::partition::RowRange;
+use crate::linalg::Matrix;
+
+use super::view::StorageView;
+
+/// One contiguous resident block of global rows.
+#[derive(Debug, Clone, PartialEq)]
+struct Block {
+    /// Global row range `[lo, hi)` this block covers.
+    range: RowRange,
+    /// Row-major `range.len() × cols` payload.
+    data: Vec<f32>,
+}
+
+/// Owned storage for a (possibly non-contiguous) set of global row blocks
+/// of a `global_rows × cols` matrix.
+///
+/// Blocks are kept sorted, non-overlapping, and coalesced (adjacent blocks
+/// merge on insert), so any row range that lies inside one placed region is
+/// borrowable as a single contiguous slice — exactly what the tiled SpMV
+/// kernels need.
+///
+/// Local indices are the rank of a resident row among all resident rows in
+/// global order: a shard holding global rows `10..20` and `40..50` maps
+/// global row 42 to local row 12 and back.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RowShard {
+    global_rows: usize,
+    cols: usize,
+    blocks: Vec<Block>,
+}
+
+impl RowShard {
+    /// Empty shard of a `global_rows × cols` matrix.
+    pub fn new(global_rows: usize, cols: usize) -> Self {
+        RowShard {
+            global_rows,
+            cols,
+            blocks: Vec::new(),
+        }
+    }
+
+    /// Copy the given global row ranges out of a fully materialized matrix
+    /// (the generator-backed path: build everything once, keep the share).
+    pub fn from_matrix(m: &Matrix, ranges: &[RowRange]) -> Result<RowShard> {
+        let mut shard = RowShard::new(m.rows(), m.cols());
+        for r in ranges {
+            shard.insert(*r, m.try_row_block(r.lo, r.hi)?.to_vec())?;
+        }
+        Ok(shard)
+    }
+
+    /// Insert one block of rows. Rejects shape mismatches, out-of-range
+    /// rows, and overlap with already-resident rows; coalesces with
+    /// adjacent blocks. Empty ranges are accepted and ignored.
+    pub fn insert(&mut self, range: RowRange, data: Vec<f32>) -> Result<()> {
+        if range.is_empty() {
+            return Ok(());
+        }
+        if range.hi > self.global_rows {
+            return Err(Error::Shape(format!(
+                "block {}..{} exceeds the {}-row matrix",
+                range.lo, range.hi, self.global_rows
+            )));
+        }
+        let expect = range.len().checked_mul(self.cols).ok_or_else(|| {
+            Error::Shape(format!(
+                "block {}..{} x {} cols overflows usize",
+                range.lo, range.hi, self.cols
+            ))
+        })?;
+        if data.len() != expect {
+            return Err(Error::Shape(format!(
+                "block {}..{} carries {} values, expected {expect}",
+                range.lo,
+                range.hi,
+                data.len()
+            )));
+        }
+        // insertion point: first block starting at or after range.lo
+        let pos = self.blocks.partition_point(|b| b.range.lo < range.lo);
+        if pos > 0 && self.blocks[pos - 1].range.hi > range.lo {
+            return Err(Error::Shape(format!(
+                "block {}..{} overlaps resident rows",
+                range.lo, range.hi
+            )));
+        }
+        if pos < self.blocks.len() && range.hi > self.blocks[pos].range.lo {
+            return Err(Error::Shape(format!(
+                "block {}..{} overlaps resident rows",
+                range.lo, range.hi
+            )));
+        }
+        // coalesce with the left neighbour, then the right one
+        if pos > 0 && self.blocks[pos - 1].range.hi == range.lo {
+            let left = &mut self.blocks[pos - 1];
+            left.data.extend_from_slice(&data);
+            left.range.hi = range.hi;
+            if pos < self.blocks.len() && self.blocks[pos].range.lo == range.hi {
+                let right = self.blocks.remove(pos);
+                let left = &mut self.blocks[pos - 1];
+                left.data.extend_from_slice(&right.data);
+                left.range.hi = right.range.hi;
+            }
+            return Ok(());
+        }
+        if pos < self.blocks.len() && self.blocks[pos].range.lo == range.hi {
+            let right = &mut self.blocks[pos];
+            let mut merged = data;
+            merged.extend_from_slice(&right.data);
+            right.data = merged;
+            right.range.lo = range.lo;
+            return Ok(());
+        }
+        self.blocks.insert(pos, Block { range, data });
+        Ok(())
+    }
+
+    /// Resident global row ranges, sorted and coalesced.
+    pub fn ranges(&self) -> Vec<RowRange> {
+        self.blocks.iter().map(|b| b.range).collect()
+    }
+
+    /// Number of resident (coalesced) blocks.
+    pub fn block_count(&self) -> usize {
+        self.blocks.len()
+    }
+
+    /// Local index (rank among resident rows) of a global row, or `None`
+    /// when the row is not resident.
+    pub fn global_to_local(&self, global: usize) -> Option<usize> {
+        let mut before = 0usize;
+        for b in &self.blocks {
+            if global < b.range.lo {
+                return None;
+            }
+            if global < b.range.hi {
+                return Some(before + (global - b.range.lo));
+            }
+            before += b.range.len();
+        }
+        None
+    }
+
+    /// Global row of a local index, or `None` when `local` is beyond the
+    /// resident row count.
+    pub fn local_to_global(&self, local: usize) -> Option<usize> {
+        let mut before = 0usize;
+        for b in &self.blocks {
+            if local < before + b.range.len() {
+                return Some(b.range.lo + (local - before));
+            }
+            before += b.range.len();
+        }
+        None
+    }
+}
+
+impl StorageView for RowShard {
+    fn global_rows(&self) -> usize {
+        self.global_rows
+    }
+
+    fn cols(&self) -> usize {
+        self.cols
+    }
+
+    fn resident_rows(&self) -> usize {
+        self.blocks.iter().map(|b| b.range.len()).sum()
+    }
+
+    fn holds(&self, rows: RowRange) -> bool {
+        if rows.is_empty() {
+            return true;
+        }
+        self.blocks
+            .iter()
+            .any(|b| b.range.lo <= rows.lo && rows.hi <= b.range.hi)
+    }
+
+    fn row_slice(&self, rows: RowRange) -> Result<&[f32]> {
+        if rows.is_empty() {
+            return Ok(&[]);
+        }
+        let b = self
+            .blocks
+            .iter()
+            .find(|b| b.range.lo <= rows.lo && rows.hi <= b.range.hi)
+            .ok_or_else(|| {
+                Error::Shape(format!(
+                    "rows {}..{} are not resident in this shard",
+                    rows.lo, rows.hi
+                ))
+            })?;
+        let lo = (rows.lo - b.range.lo) * self.cols;
+        let hi = (rows.hi - b.range.lo) * self.cols;
+        Ok(&b.data[lo..hi])
+    }
+}
+
+/// Coalesce the global row ranges of the given sub-matrices into sorted
+/// maximal contiguous runs (adjacent placed sub-matrices merge).
+///
+/// `ids` are sub-matrix indices into `sub_ranges`; duplicates are ignored,
+/// out-of-range indices rejected.
+pub fn coalesce_sub_ranges(ids: &[usize], sub_ranges: &[RowRange]) -> Result<Vec<RowRange>> {
+    let mut sorted: Vec<usize> = ids.to_vec();
+    sorted.sort_unstable();
+    sorted.dedup();
+    let mut out: Vec<RowRange> = Vec::new();
+    for g in sorted {
+        let r = *sub_ranges.get(g).ok_or_else(|| {
+            Error::Shape(format!(
+                "sub-matrix {g} out of range (G={})",
+                sub_ranges.len()
+            ))
+        })?;
+        if r.is_empty() {
+            continue;
+        }
+        match out.last_mut() {
+            Some(last) if last.hi == r.lo => last.hi = r.hi,
+            _ => out.push(r),
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::gen;
+    use crate::linalg::partition::submatrix_ranges;
+
+    fn shard_of(q: usize, cols: usize, ranges: &[(usize, usize)]) -> RowShard {
+        let m = gen::random_dense(q, cols, 17);
+        let rr: Vec<RowRange> = ranges.iter().map(|&(lo, hi)| RowRange::new(lo, hi)).collect();
+        RowShard::from_matrix(&m, &rr).unwrap()
+    }
+
+    #[test]
+    fn from_matrix_copies_exact_rows() {
+        let m = gen::random_dense(10, 4, 3);
+        let s = RowShard::from_matrix(&m, &[RowRange::new(2, 5), RowRange::new(7, 9)]).unwrap();
+        assert_eq!(s.resident_rows(), 5);
+        assert_eq!(s.resident_bytes(), 5 * 4 * 4);
+        assert_eq!(s.row_slice(RowRange::new(3, 4)).unwrap(), m.row(3));
+        assert_eq!(
+            s.row_slice(RowRange::new(7, 9)).unwrap(),
+            m.row_block(7, 9)
+        );
+        assert!(s.row_slice(RowRange::new(5, 8)).is_err(), "gap not resident");
+        assert!(s.holds(RowRange::new(2, 5)));
+        assert!(!s.holds(RowRange::new(4, 6)));
+    }
+
+    #[test]
+    fn adjacent_blocks_coalesce() {
+        let s = shard_of(12, 3, &[(0, 4), (8, 12), (4, 8)]);
+        assert_eq!(s.block_count(), 1);
+        assert_eq!(s.ranges(), vec![RowRange::new(0, 12)]);
+        // a range spanning the former block boundary is one slice
+        assert_eq!(s.row_slice(RowRange::new(2, 10)).unwrap().len(), 8 * 3);
+    }
+
+    #[test]
+    fn insert_rejects_overlap_and_bad_shapes() {
+        let mut s = RowShard::new(10, 2);
+        s.insert(RowRange::new(2, 5), vec![0.0; 6]).unwrap();
+        assert!(s.insert(RowRange::new(4, 6), vec![0.0; 4]).is_err());
+        assert!(s.insert(RowRange::new(0, 2), vec![0.0; 3]).is_err());
+        assert!(s.insert(RowRange::new(9, 11), vec![0.0; 4]).is_err());
+        // empty insert is a no-op
+        s.insert(RowRange::new(7, 7), vec![]).unwrap();
+        assert_eq!(s.block_count(), 1);
+    }
+
+    #[test]
+    fn global_local_mapping() {
+        let s = shard_of(50, 2, &[(10, 20), (40, 50)]);
+        assert_eq!(s.global_to_local(10), Some(0));
+        assert_eq!(s.global_to_local(19), Some(9));
+        assert_eq!(s.global_to_local(40), Some(10));
+        assert_eq!(s.global_to_local(42), Some(12));
+        assert_eq!(s.global_to_local(20), None);
+        assert_eq!(s.global_to_local(9), None);
+        assert_eq!(s.local_to_global(0), Some(10));
+        assert_eq!(s.local_to_global(12), Some(42));
+        assert_eq!(s.local_to_global(20), None);
+    }
+
+    #[test]
+    fn coalesce_sub_ranges_merges_adjacent() {
+        let subs = submatrix_ranges(100, 5).unwrap(); // 20-row parts
+        let r = coalesce_sub_ranges(&[3, 0, 1, 3], &subs).unwrap();
+        assert_eq!(r, vec![RowRange::new(0, 40), RowRange::new(60, 80)]);
+        assert!(coalesce_sub_ranges(&[5], &subs).is_err());
+        assert!(coalesce_sub_ranges(&[], &subs).unwrap().is_empty());
+    }
+
+    #[test]
+    fn empty_shard_is_consistent() {
+        let s = RowShard::new(8, 3);
+        assert_eq!(s.resident_rows(), 0);
+        assert_eq!(s.resident_bytes(), 0);
+        assert!(s.holds(RowRange::new(4, 4)));
+        assert!(!s.holds(RowRange::new(0, 1)));
+        assert_eq!(s.row_slice(RowRange::new(2, 2)).unwrap(), &[] as &[f32]);
+        assert!(s.row_slice(RowRange::new(0, 1)).is_err());
+    }
+}

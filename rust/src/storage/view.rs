@@ -1,0 +1,180 @@
+//! [`StorageView`]: the uniform read interface over full and sharded
+//! storage, and the [`StoreHandle`] workers hold.
+
+use std::sync::Arc;
+
+use crate::error::{Error, Result};
+use crate::linalg::partition::RowRange;
+use crate::linalg::Matrix;
+
+use super::shard::RowShard;
+
+/// Read-only view of (part of) a `global_rows × cols` row-major matrix.
+///
+/// Kernels address rows in *global* coordinates; the view decides whether
+/// they are resident and where they live. `Matrix` is the everything-
+/// resident case; [`RowShard`] holds only the placed share.
+pub trait StorageView {
+    /// Rows of the full matrix this view is a window of.
+    fn global_rows(&self) -> usize;
+
+    /// Columns (same for the full matrix and every view of it).
+    fn cols(&self) -> usize;
+
+    /// Rows actually resident in this view.
+    fn resident_rows(&self) -> usize;
+
+    /// Bytes of matrix payload actually resident (`f32` entries).
+    fn resident_bytes(&self) -> usize {
+        self.resident_rows() * self.cols() * std::mem::size_of::<f32>()
+    }
+
+    /// Whether every row of `rows` is resident (empty ranges trivially are).
+    fn holds(&self, rows: RowRange) -> bool;
+
+    /// Borrow global rows `[rows.lo, rows.hi)` as one contiguous row-major
+    /// slice. Errors when any row is missing or the range spans a gap.
+    fn row_slice(&self, rows: RowRange) -> Result<&[f32]>;
+}
+
+impl StorageView for Matrix {
+    fn global_rows(&self) -> usize {
+        self.rows()
+    }
+
+    fn cols(&self) -> usize {
+        Matrix::cols(self)
+    }
+
+    fn resident_rows(&self) -> usize {
+        self.rows()
+    }
+
+    fn holds(&self, rows: RowRange) -> bool {
+        rows.hi <= self.rows()
+    }
+
+    fn row_slice(&self, rows: RowRange) -> Result<&[f32]> {
+        self.try_row_block(rows.lo, rows.hi)
+    }
+}
+
+/// The storage a worker holds, cheap to clone across threads.
+///
+/// `Full` is the local simulator mode: every worker shares one `Arc` of
+/// the matrix (zero-copy, bit-identical with the pre-shard behaviour).
+/// `Shard` is the distributed mode: the worker owns exactly its placed
+/// rows and nothing else.
+#[derive(Debug, Clone)]
+pub enum StoreHandle {
+    Full(Arc<Matrix>),
+    Shard(Arc<RowShard>),
+}
+
+impl StoreHandle {
+    /// Whether this handle is a placement-shaped shard (vs a full view).
+    pub fn is_shard(&self) -> bool {
+        matches!(self, StoreHandle::Shard(_))
+    }
+}
+
+impl StorageView for StoreHandle {
+    fn global_rows(&self) -> usize {
+        match self {
+            StoreHandle::Full(m) => m.rows(),
+            StoreHandle::Shard(s) => s.global_rows(),
+        }
+    }
+
+    fn cols(&self) -> usize {
+        match self {
+            StoreHandle::Full(m) => Matrix::cols(m),
+            StoreHandle::Shard(s) => StorageView::cols(s.as_ref()),
+        }
+    }
+
+    fn resident_rows(&self) -> usize {
+        match self {
+            StoreHandle::Full(m) => m.rows(),
+            StoreHandle::Shard(s) => s.resident_rows(),
+        }
+    }
+
+    fn holds(&self, rows: RowRange) -> bool {
+        match self {
+            StoreHandle::Full(m) => StorageView::holds(m.as_ref(), rows),
+            StoreHandle::Shard(s) => s.holds(rows),
+        }
+    }
+
+    fn row_slice(&self, rows: RowRange) -> Result<&[f32]> {
+        match self {
+            StoreHandle::Full(m) => StorageView::row_slice(m.as_ref(), rows),
+            StoreHandle::Shard(s) => s.row_slice(rows),
+        }
+    }
+}
+
+/// Matvec over a resident row range through any view: the reference
+/// kernel used by tests and the `storage_view` bench to compare full vs
+/// shard access paths.
+pub fn matvec_range<V: StorageView + ?Sized>(
+    view: &V,
+    rows: RowRange,
+    w: &[f32],
+) -> Result<Vec<f32>> {
+    if w.len() != view.cols() {
+        return Err(Error::Shape(format!(
+            "matvec_range: vector length {} vs {} columns",
+            w.len(),
+            view.cols()
+        )));
+    }
+    let x = view.row_slice(rows)?;
+    let mut out = vec![0.0f32; rows.len()];
+    crate::linalg::ops::matvec_into(x, rows.len(), view.cols(), w, &mut out);
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::gen;
+
+    #[test]
+    fn matrix_view_is_fully_resident() {
+        let m = gen::random_dense(6, 4, 1);
+        assert_eq!(m.global_rows(), 6);
+        assert_eq!(StorageView::cols(&m), 4);
+        assert_eq!(m.resident_rows(), 6);
+        assert_eq!(m.resident_bytes(), 6 * 4 * 4);
+        assert!(StorageView::holds(&m, RowRange::new(0, 6)));
+        assert!(!StorageView::holds(&m, RowRange::new(4, 7)));
+        assert_eq!(
+            StorageView::row_slice(&m, RowRange::new(2, 4)).unwrap(),
+            m.row_block(2, 4)
+        );
+        assert!(StorageView::row_slice(&m, RowRange::new(5, 7)).is_err());
+    }
+
+    #[test]
+    fn handles_agree_on_resident_rows() {
+        let q = 20;
+        let m = Arc::new(gen::random_dense(q, q, 5));
+        let ranges = vec![RowRange::new(5, 10), RowRange::new(15, 20)];
+        let shard = Arc::new(RowShard::from_matrix(&m, &ranges).unwrap());
+        let full = StoreHandle::Full(Arc::clone(&m));
+        let sharded = StoreHandle::Shard(shard);
+        assert!(!full.is_shard());
+        assert!(sharded.is_shard());
+        assert_eq!(full.resident_rows(), q);
+        assert_eq!(sharded.resident_rows(), 10);
+        assert_eq!(sharded.resident_bytes() * 2, full.resident_bytes());
+        let w = vec![0.3f32; q];
+        let r = RowRange::new(6, 9);
+        let a = matvec_range(&full, r, &w).unwrap();
+        let b = matvec_range(&sharded, r, &w).unwrap();
+        assert_eq!(a, b, "shard and full views must compute identical rows");
+        assert!(matvec_range(&sharded, RowRange::new(0, 3), &w).is_err());
+    }
+}

@@ -168,6 +168,50 @@ pub mod gen {
         }
     }
 
+    /// A random [`crate::storage::RowShard`]: random non-overlapping
+    /// blocks of a random geometry (possibly empty, possibly adjacent so
+    /// coalescing is exercised).
+    pub fn row_shard(rng: &mut Rng) -> crate::storage::RowShard {
+        use crate::linalg::partition::RowRange;
+        use crate::storage::RowShard;
+
+        let q = rng.range(1, 80);
+        let cols = rng.range(1, 12);
+        let mut shard = RowShard::new(q, cols);
+        let mut lo = 0usize;
+        while lo < q {
+            let gap = rng.below(4);
+            let start = (lo + gap).min(q);
+            if start >= q {
+                break;
+            }
+            let len = rng.range(1, (q - start).min(10) + 1);
+            shard
+                .insert(RowRange::new(start, start + len), vec![0.5; len * cols])
+                .expect("generated blocks never overlap");
+            lo = start + len;
+        }
+        shard
+    }
+
+    /// An arbitrary wire-safe [`crate::net::codec::DataFrame`] whose
+    /// values are consistent with its row range and column count.
+    pub fn data_frame(rng: &mut Rng) -> crate::net::codec::DataFrame {
+        use crate::linalg::partition::RowRange;
+
+        let lo = rng.below(100);
+        let len = rng.below(8);
+        let cols = rng.range(1, 16);
+        crate::net::codec::DataFrame {
+            rows: RowRange::new(lo, lo + len),
+            cols,
+            done: rng.chance(0.5),
+            values: (0..len * cols)
+                .map(|_| (rng.f64() * 4.0 - 2.0) as f32)
+                .collect(),
+        }
+    }
+
     /// An arbitrary wire-safe [`crate::sched::protocol::WorkerReport`]
     /// whose segments are internally consistent (`values.len == rows.len`).
     pub fn worker_report(rng: &mut Rng) -> crate::sched::protocol::WorkerReport {
@@ -278,6 +322,91 @@ mod tests {
                     bytes.len()
                 );
             }
+        });
+    }
+
+    #[test]
+    fn shard_global_local_mapping_round_trips() {
+        use crate::storage::StorageView;
+        run(Config::default().cases(120).name("shard-mapping"), |rng| {
+            let shard = gen::row_shard(rng);
+            let resident = shard.resident_rows();
+            // local → global → local is the identity on [0, resident)
+            for local in 0..resident {
+                let global = shard
+                    .local_to_global(local)
+                    .expect("local index within resident count");
+                assert_eq!(
+                    shard.global_to_local(global),
+                    Some(local),
+                    "row {global} did not round-trip"
+                );
+            }
+            assert_eq!(shard.local_to_global(resident), None);
+            // global → local round-trips exactly on resident rows
+            let mut seen = 0usize;
+            for global in 0..shard.global_rows() {
+                let r = crate::linalg::partition::RowRange::new(global, global + 1);
+                match shard.global_to_local(global) {
+                    Some(local) => {
+                        assert!(shard.holds(r));
+                        assert_eq!(shard.local_to_global(local), Some(global));
+                        seen += 1;
+                    }
+                    None => assert!(!shard.holds(r)),
+                }
+            }
+            assert_eq!(seen, resident, "mapping and residency disagree");
+        });
+    }
+
+    #[test]
+    fn codec_data_frame_roundtrips() {
+        use crate::net::codec::{decode, encode};
+        use crate::net::WireMsg;
+        run(Config::default().cases(200).name("codec-data"), |rng| {
+            let frame = gen::data_frame(rng);
+            let bytes = encode(&WireMsg::Data(frame.clone()));
+            match decode(&bytes).expect("decode of valid data frame") {
+                WireMsg::Data(back) => assert_eq!(back, frame),
+                other => panic!("decoded wrong variant {other:?}"),
+            }
+        });
+    }
+
+    #[test]
+    fn codec_data_frame_rejects_every_truncation() {
+        use crate::net::codec::{decode, encode};
+        use crate::net::WireMsg;
+        run(Config::default().cases(40).name("codec-data-truncation"), |rng| {
+            let bytes = encode(&WireMsg::Data(gen::data_frame(rng)));
+            for cut in 0..bytes.len() {
+                assert!(
+                    decode(&bytes[..cut]).is_err(),
+                    "strict prefix of {cut}/{} bytes decoded",
+                    bytes.len()
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn codec_data_frame_rejects_payload_corruption() {
+        use crate::net::codec::{decode, encode};
+        use crate::net::WireMsg;
+        run(Config::default().cases(60).name("codec-data-corruption"), |rng| {
+            let mut frame = gen::data_frame(rng);
+            if frame.values.is_empty() {
+                frame.rows = crate::linalg::partition::RowRange::new(0, 1);
+                frame.values = vec![1.0; frame.cols];
+            }
+            let mut bytes = encode(&WireMsg::Data(frame.clone()));
+            // flip one byte inside the trailing values region: either the
+            // checksum or the value-count validation must catch it
+            let values_bytes = frame.values.len() * 4;
+            let idx = bytes.len() - 1 - rng.below(values_bytes);
+            bytes[idx] ^= 1 << rng.below(8);
+            assert!(decode(&bytes).is_err(), "corrupted payload decoded");
         });
     }
 

@@ -25,10 +25,7 @@ fn worker_cfg(
         backend,
         speed: 1.0,
         tile_rows: 16,
-        storage: WorkerStorage {
-            matrix: Arc::clone(matrix),
-            sub_ranges: Arc::clone(ranges),
-        },
+        storage: WorkerStorage::full(Arc::clone(matrix), Arc::clone(ranges)),
     }
 }
 

@@ -34,10 +34,7 @@ fn spawn(
             backend: BackendSpec::Host,
             speed: speeds[id],
             tile_rows: 32,
-            storage: WorkerStorage {
-                matrix: Arc::clone(&matrix),
-                sub_ranges: Arc::clone(&ranges),
-            },
+            storage: WorkerStorage::full(Arc::clone(&matrix), Arc::clone(&ranges)),
         })
         .collect();
     let cluster = Cluster::spawn(configs).unwrap();

@@ -40,7 +40,7 @@ fn start_workers(n: usize) -> (Vec<String>, Vec<JoinHandle<Result<()>>>) {
         let listener = TcpListener::bind("127.0.0.1:0").unwrap();
         addrs.push(listener.local_addr().unwrap().to_string());
         handles.push(std::thread::spawn(move || {
-            serve_worker(listener, DaemonOpts { once: true })
+            serve_worker(listener, DaemonOpts { max_sessions: 1 })
         }));
     }
     (addrs, handles)
@@ -96,7 +96,9 @@ fn tcp_cluster_survives_mid_run_socket_preemption() {
                 g: 3,
                 heartbeat_ms: 100,
                 workload: workload_spec(),
+                stored: vec![], // full replication: store everything
             },
+            stream_ranges: vec![],
         })
         .collect();
     let transport = TcpTransport::connect(peers, TcpOptions::default()).unwrap();

@@ -44,10 +44,7 @@ fn pjrt_worker_cluster_matches_host_oracle() {
             backend: BackendSpec::Pjrt { dir: dir.clone() },
             speed: 1.0 + id as f64 * 0.5,
             tile_rows: manifest.tile_rows,
-            storage: WorkerStorage {
-                matrix: Arc::clone(&matrix),
-                sub_ranges: Arc::clone(&ranges),
-            },
+            storage: WorkerStorage::full(Arc::clone(&matrix), Arc::clone(&ranges)),
         })
         .collect();
     let cluster = Cluster::spawn(configs).unwrap();

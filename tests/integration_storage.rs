@@ -1,0 +1,221 @@
+//! Integration tests for placement-shaped storage over TCP:
+//!
+//! * shard workers (each holding only its J-out-of-G share) reproduce the
+//!   local full-storage run within 1e-5 and report the placed resident
+//!   byte counts in the timeline (the `--json-out` numbers);
+//! * `--stream-data` ships the rows as checksummed `Data` frames and
+//!   matches the generator-backed run exactly;
+//! * a worker daemon that comes back after a socket-level preemption is
+//!   re-admitted and serves again at the next step.
+
+use std::net::TcpListener;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use usec::apps::power_iteration::{run_power_iteration, PLANT_EIGVAL, PLANT_GAP};
+use usec::config::types::{AssignPolicy, BackendKind, RunConfig};
+use usec::error::Result;
+use usec::linalg::gen::planted_symmetric;
+use usec::linalg::ops;
+use usec::linalg::partition::submatrix_ranges;
+use usec::net::daemon::{serve_worker, DaemonOpts};
+use usec::net::{
+    Hello, TcpOptions, TcpPeer, TcpTransport, Transport, WorkloadSpec, WIRE_VERSION,
+};
+use usec::optim::SolveParams;
+use usec::placement::{Placement, PlacementKind};
+use usec::sched::master::{Master, MasterConfig};
+
+const Q: usize = 120;
+const SEED: u64 = 19;
+
+fn start_workers(sessions: &[usize]) -> (Vec<String>, Vec<JoinHandle<Result<()>>>) {
+    let mut addrs = Vec::new();
+    let mut handles = Vec::new();
+    for &max_sessions in sessions {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        addrs.push(listener.local_addr().unwrap().to_string());
+        handles.push(std::thread::spawn(move || {
+            serve_worker(listener, DaemonOpts { max_sessions })
+        }));
+    }
+    (addrs, handles)
+}
+
+fn cfg(n: usize, g: usize, j: usize, workers: Vec<String>) -> RunConfig {
+    RunConfig {
+        q: Q,
+        r: Q,
+        g,
+        j,
+        n,
+        placement: PlacementKind::Cyclic,
+        stragglers: 0,
+        steps: 20,
+        speeds: vec![1.0; n],
+        seed: SEED,
+        workers,
+        ..Default::default()
+    }
+}
+
+fn assert_eigvec_close(a: &[f32], b: &[f32]) {
+    assert_eq!(a.len(), b.len());
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert!((x - y).abs() <= 1e-5, "eigvec[{i}] diverged: {x} vs {y}");
+    }
+}
+
+/// The ISSUE acceptance case: `--placement cyclic --g 5 --j 3` must leave
+/// each TCP worker with exactly 3/5 of the full matrix resident, while the
+/// distributed result still matches the local full-storage run.
+#[test]
+fn shard_workers_hold_three_fifths_and_match_local() {
+    let (addrs, handles) = start_workers(&[1; 5]);
+    let tcp = run_power_iteration(&cfg(5, 5, 3, addrs)).unwrap();
+    let local = run_power_iteration(&cfg(5, 5, 3, vec![])).unwrap();
+
+    assert_eigvec_close(&tcp.eigvec, &local.eigvec);
+    assert!((tcp.final_nmse - local.final_nmse).abs() <= 1e-7);
+
+    // cyclic N=5, G=5, J=3: each machine stores 3 sub-matrices of 24 rows
+    let full = (Q * Q * 4) as u64;
+    let share = full * 3 / 5;
+    let storage = tcp.timeline.storage_bytes();
+    assert_eq!(storage.len(), 5);
+    for (n, &b) in storage.iter().enumerate() {
+        assert_eq!(b, share, "worker {n} resident bytes {b}, want {share}");
+    }
+    // local mode: every worker reads the shared full view
+    assert!(local.timeline.storage_bytes().iter().all(|&b| b == full));
+
+    for h in handles {
+        h.join().unwrap().unwrap();
+    }
+}
+
+/// Satellite: a 3-worker TCP run with proper-subset shard storage (J=2 of
+/// G=3) matches the local full-storage run within 1e-5.
+#[test]
+fn three_worker_shard_run_matches_local() {
+    let (addrs, handles) = start_workers(&[1; 3]);
+    let tcp = run_power_iteration(&cfg(3, 3, 2, addrs)).unwrap();
+    let local = run_power_iteration(&cfg(3, 3, 2, vec![])).unwrap();
+
+    assert_eigvec_close(&tcp.eigvec, &local.eigvec);
+    let share = (Q * Q * 4) as u64 * 2 / 3;
+    assert!(tcp.timeline.storage_bytes().iter().all(|&b| b == share));
+
+    for h in handles {
+        h.join().unwrap().unwrap();
+    }
+}
+
+/// `--stream-data`: the master streams each worker's placed rows instead
+/// of shipping a generator spec — the path for external data. Results and
+/// resident bytes must be identical to the generator-backed shard run.
+#[test]
+fn streamed_rows_match_local_run() {
+    let (addrs, handles) = start_workers(&[1; 3]);
+    let mut streamed_cfg = cfg(3, 3, 2, addrs);
+    streamed_cfg.stream_data = true;
+    let tcp = run_power_iteration(&streamed_cfg).unwrap();
+    let local = run_power_iteration(&cfg(3, 3, 2, vec![])).unwrap();
+
+    assert_eigvec_close(&tcp.eigvec, &local.eigvec);
+    assert!((tcp.final_nmse - local.final_nmse).abs() <= 1e-7);
+    let share = (Q * Q * 4) as u64 * 2 / 3;
+    assert!(tcp.timeline.storage_bytes().iter().all(|&b| b == share));
+
+    for h in handles {
+        h.join().unwrap().unwrap();
+    }
+}
+
+/// ROADMAP item: a reconnecting `usec worker` with a matching `Hello`
+/// rejoins the availability set at the next step instead of being
+/// preempted forever.
+#[test]
+fn reconnecting_worker_rejoins_at_next_step() {
+    let q = 60;
+    // worker 2 survives two master sessions: the killed one + re-admission
+    let (addrs, handles) = start_workers(&[1, 1, 2]);
+
+    let plant = planted_symmetric(q, PLANT_EIGVAL, PLANT_GAP, SEED);
+    let peers: Vec<TcpPeer> = addrs
+        .iter()
+        .enumerate()
+        .map(|(id, addr)| TcpPeer {
+            addr: addr.clone(),
+            hello: Hello {
+                version: WIRE_VERSION,
+                worker: id,
+                speed: 1.0,
+                tile_rows: 16,
+                backend: BackendKind::Host,
+                g: 3,
+                heartbeat_ms: 100,
+                workload: WorkloadSpec::PlantedSymmetric {
+                    q,
+                    eigval: PLANT_EIGVAL,
+                    gap: PLANT_GAP,
+                    seed: SEED,
+                },
+                stored: vec![], // full replication
+            },
+            stream_ranges: vec![],
+        })
+        .collect();
+    let transport = TcpTransport::connect(peers, TcpOptions::default()).unwrap();
+    let full = (q * q * 4) as u64;
+    assert_eq!(transport.resident_bytes(), vec![full; 3]);
+
+    let placement = Placement::build(PlacementKind::Cyclic, 3, 3, 3).unwrap();
+    let sub_ranges = submatrix_ranges(q, 3).unwrap();
+    let mut master = Master::new(MasterConfig {
+        placement,
+        sub_ranges,
+        params: SolveParams::with_stragglers(0),
+        policy: AssignPolicy::Heterogeneous,
+        gamma: 0.5,
+        initial_speeds: vec![1.0; 3],
+        row_cost_ns: 0,
+        recovery_timeout: Duration::from_secs(20),
+    })
+    .unwrap();
+
+    let mut b = vec![1.0f32; q];
+    ops::normalize(&mut b);
+    let oracle = |w: &[f32]| plant.matrix.matvec(w).unwrap();
+
+    // step 0: all three workers
+    let w = Arc::new(b.clone());
+    let out = master.step(&transport, 0, &w, &[0, 1, 2], &[]).unwrap();
+    assert_eq!(out.y, oracle(&w));
+
+    // preempt worker 2 at the socket level
+    transport.kill(2);
+    assert_eq!(transport.alive(), vec![true, true, false]);
+
+    // step 1 still completes through the surviving replicas
+    let out = master.step(&transport, 1, &w, &[0, 1], &[]).unwrap();
+    assert_eq!(out.y, oracle(&w));
+
+    // the daemon looped back to accept: re-admission brings worker 2 back
+    assert_eq!(transport.readmit(), 1, "worker 2 should rejoin");
+    assert_eq!(transport.alive(), vec![true, true, true]);
+    assert_eq!(transport.resident_bytes(), vec![full; 3]);
+
+    // and it serves work again: with only worker 2 available, every row
+    // must come from the re-admitted connection
+    let out = master.step(&transport, 2, &w, &[2], &[]).unwrap();
+    assert_eq!(out.y, oracle(&w));
+    assert_eq!(out.reporters, vec![2], "re-admitted worker must serve alone");
+
+    let mut transport = transport;
+    transport.shutdown();
+    for h in handles {
+        h.join().unwrap().unwrap();
+    }
+}
