@@ -2,18 +2,26 @@
 //!
 //! * assignment solve (simplex/flow), filling, quantization — the master's
 //!   per-step control path;
-//! * tile mat-vec on the host backend and (when artifacts exist) the PJRT
-//!   backend — the worker's per-tile data path;
+//! * tile mat-vec / block mat-mat on the host backend and (when artifacts
+//!   exist) the PJRT backend — the worker's per-tile data path. The
+//!   `matmat B=k` rows measure the block data plane: one tile traversal
+//!   amortized over `k` vectors, against `k` sequential B=1 matvecs over
+//!   the same tile;
 //! * one full master/worker step end-to-end.
 //!
-//! Run: `cargo bench --bench hotpath`
+//! Run: `cargo bench --bench hotpath [-- --smoke] [-- --json PATH]`
+//!
+//! Results are also written as machine-readable JSON (default
+//! `BENCH_hotpath.json`: name, ns/iter, percentiles, rows·vectors/s) so
+//! the perf trajectory has data points across commits. `--smoke` shrinks
+//! the measurement budget to a CI-friendly sanity run.
 
 use std::sync::Arc;
 use std::time::Duration;
 
 use usec::config::types::AssignPolicy;
 use usec::linalg::partition::submatrix_ranges;
-use usec::linalg::gen;
+use usec::linalg::{gen, ops, Block};
 use usec::optim::{build_assignment, solve_load_matrix, SolveParams, SolverKind};
 use usec::placement::{Placement, PlacementKind};
 use usec::runtime::BackendSpec;
@@ -23,7 +31,21 @@ use usec::sched::worker::{WorkerConfig, WorkerStorage};
 use usec::util::benchkit::Bench;
 
 fn main() {
-    let mut bench = Bench::with_budget(Duration::from_millis(500), 20_000);
+    let args: Vec<String> = std::env::args().collect();
+    let smoke = args.iter().any(|a| a == "--smoke");
+    let json_path = args
+        .iter()
+        .position(|a| a == "--json")
+        .and_then(|i| args.get(i + 1))
+        .map(String::as_str)
+        .unwrap_or("BENCH_hotpath.json")
+        .to_string();
+    let (budget, max_iters, e2e_budget, e2e_iters) = if smoke {
+        (Duration::from_millis(40), 200, Duration::from_millis(200), 10)
+    } else {
+        (Duration::from_millis(500), 20_000, Duration::from_millis(1500), 200)
+    };
+    let mut bench = Bench::with_budget(budget, max_iters);
 
     // ---- control path ----
     let p = Placement::build(PlacementKind::Man, 6, 20, 3).unwrap();
@@ -41,26 +63,57 @@ fn main() {
             solve_load_matrix(&p, &avail, &speeds, &params).unwrap().time
         });
     }
-    let sub_rows: Vec<usize> = submatrix_ranges(6000, 20).unwrap().iter().map(|r| r.len()).collect();
+    let sub_rows: Vec<usize> =
+        submatrix_ranges(6000, 20).unwrap().iter().map(|r| r.len()).collect();
     let params = SolveParams::with_stragglers(1);
     bench.run("solve+fill+quantize MAN S=1 q=6000", || {
         build_assignment(&p, &avail, &speeds, &params, &sub_rows).unwrap()
     });
 
-    // ---- data path: tile matvec ----
+    // ---- data path: tile matvec (B=1 reference) ----
     let cols = 1536usize;
     let tile = 128usize;
     let x: Vec<f32> = (0..tile * cols).map(|i| (i % 13) as f32 * 0.1).collect();
     let w: Vec<f32> = (0..cols).map(|i| (i % 7) as f32 * 0.01).collect();
     let host = BackendSpec::Host.instantiate().unwrap();
-    bench.run("matvec tile 128x1536 (host)", || {
+    bench.run_units("matvec tile 128x1536 (host)", tile as f64, || {
         host.matvec_tile(&x, tile, cols, &w).unwrap()
     });
+
+    // ---- data path: block matmat at B ∈ {1, 4, 8, 16} ----
+    // units are rows·vectors so the amortization is visible as throughput
+    for b in [1usize, 4, 8, 16] {
+        let panel: Vec<f32> = (0..cols * b).map(|i| (i % 9) as f32 * 0.02 - 0.08).collect();
+        let mut out = vec![0.0f32; tile * b];
+        bench.run_units(
+            &format!("matmat tile 128x1536 B={b} (host)"),
+            (tile * b) as f64,
+            || {
+                ops::matmat_into(&x, tile, cols, &panel, b, &mut out);
+                out[0]
+            },
+        );
+    }
+    // the baseline the acceptance criterion compares against: 8
+    // sequential B=1 matvecs over the same tile (8 tile traversals)
+    {
+        let cols8: Vec<Vec<f32>> = (0..8)
+            .map(|k| (0..cols).map(|i| ((i + k) % 9) as f32 * 0.02 - 0.08).collect())
+            .collect();
+        let mut out = vec![0.0f32; tile];
+        bench.run_units("8x sequential matvec tile 128x1536 (host)", (tile * 8) as f64, || {
+            for c in &cols8 {
+                ops::matvec_into(&x, tile, cols, c, &mut out);
+            }
+            out[0]
+        });
+    }
+
     let artifact_dir = usec::apps::harness::artifact_dir();
     if artifact_dir.join("manifest.json").exists() {
         let pjrt = BackendSpec::Pjrt { dir: artifact_dir }.instantiate().unwrap();
         if pjrt.tile_rows() == Some(tile) {
-            bench.run("matvec tile 128x1536 (pjrt)", || {
+            bench.run_units("matvec tile 128x1536 (pjrt)", tile as f64, || {
                 pjrt.matvec_tile(&x, tile, cols, &w).unwrap()
             });
             let y: Vec<f32> = (0..cols).map(|i| (i % 5) as f32).collect();
@@ -82,6 +135,7 @@ fn main() {
             backend: BackendSpec::Host,
             speed: 1.0 + id as f64,
             tile_rows: 128,
+            threads: 1,
             storage: WorkerStorage::full(Arc::clone(&matrix), Arc::clone(&arc_ranges)),
         })
         .collect();
@@ -97,16 +151,37 @@ fn main() {
         recovery_timeout: Duration::from_secs(30),
     })
     .unwrap();
-    let w_vec = Arc::new(vec![0.01f32; q]);
-    let mut step = 0usize;
-    let mut e2e = Bench::with_budget(Duration::from_millis(1500), 200);
-    e2e.run("master step E2E q=960 (host, 6 workers)", || {
-        let out = master.step(&cluster, step, &w_vec, &avail, &[]).unwrap();
-        step += 1;
-        out.y.len()
-    });
+    let mut e2e = Bench::with_budget(e2e_budget, e2e_iters);
+    {
+        let w_vec = Arc::new(Block::single(vec![0.01f32; q]));
+        let mut step = 0usize;
+        e2e.run_units("master step E2E q=960 B=1 (host, 6 workers)", q as f64, || {
+            let out = master.step(&cluster, step, &w_vec, &avail, &[]).unwrap();
+            step += 1;
+            out.y.len()
+        });
+        // the same step shipping an 8-vector block end-to-end
+        let w_block = Arc::new(
+            Block::from_interleaved(
+                q,
+                8,
+                (0..q * 8).map(|i| (i % 17) as f32 * 0.003).collect(),
+            )
+            .unwrap(),
+        );
+        e2e.run_units("master step E2E q=960 B=8 (host, 6 workers)", (q * 8) as f64, || {
+            let out = master.step(&cluster, step, &w_block, &avail, &[]).unwrap();
+            step += 1;
+            out.y.len()
+        });
+    }
 
     println!("{}", bench.table());
     println!("{}", e2e.table());
+
+    match Bench::write_json(&[&bench, &e2e], &json_path) {
+        Ok(()) => println!("wrote {json_path}"),
+        Err(e) => eprintln!("could not write {json_path}: {e}"),
+    }
     cluster.shutdown();
 }

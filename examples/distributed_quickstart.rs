@@ -12,14 +12,27 @@
 //! ```
 //!
 //! Each worker materializes only its placed J-out-of-G share (here 2/3 of
-//! the matrix), regenerated from the workload spec in the handshake. Add
-//! `--stream-data` and the master instead streams each worker's rows as
-//! checksummed `Data` frames — the path for external data that no seed
-//! can regenerate (ridge/pagerank over real inputs):
+//! the matrix), generated **row by row** from the workload spec in the
+//! handshake — peak worker memory is the share itself, never the full
+//! matrix. Add `--stream-data` and the master instead streams each
+//! worker's rows as checksummed `Data` frames — the path for external
+//! data that no seed can regenerate (ridge/pagerank over real inputs):
 //!
 //! ```text
 //! usec master --workers ... --q 1536 --g 3 --j 2 --placement cyclic \
 //!     --stream-data --json-out run.json
+//! ```
+//!
+//! Add `--batch 4` and every step ships a block of 4 iterate vectors —
+//! the workers run the batched mat-mat kernel (one traversal of their
+//! stored rows serves all 4 vectors) and the run becomes block power
+//! iteration, estimating the top of the spectrum instead of one
+//! eigenpair. `--threads T` additionally fans each worker's tiles across
+//! `T` compute threads:
+//!
+//! ```text
+//! usec master --workers ... --q 1536 --g 3 --j 2 --placement cyclic \
+//!     --batch 4 --threads 2 --json-out run.json
 //! ```
 //!
 //! Either way `--json-out` reports the actual per-worker resident bytes
@@ -39,15 +52,21 @@ fn main() {
     usec::util::log::init();
 
     // --- "terminals 1-3": three worker daemons on ephemeral ports ---
-    // (each serves two master sessions: the generator-backed run and the
-    // streamed run below)
+    // (each serves three master sessions: the generator-backed run, the
+    // streamed run, and the batched block run below)
     let mut addrs = Vec::new();
     let mut daemons = Vec::new();
     for _ in 0..3 {
         let listener = TcpListener::bind("127.0.0.1:0").expect("bind loopback");
         addrs.push(listener.local_addr().unwrap().to_string());
         daemons.push(std::thread::spawn(move || {
-            serve_worker(listener, DaemonOpts { max_sessions: 2 })
+            serve_worker(
+                listener,
+                DaemonOpts {
+                    max_sessions: 3,
+                    ..Default::default()
+                },
+            )
         }));
     }
     println!("workers listening on {addrs:?}");
@@ -82,14 +101,29 @@ fn main() {
     // --- same run with --stream-data: rows travel as Data frames ---
     let streamed_cfg = RunConfig {
         stream_data: true,
-        workers: addrs,
-        ..cfg
+        workers: addrs.clone(),
+        ..cfg.clone()
     };
     let streamed = run_power_iteration(&streamed_cfg).expect("streamed run");
     println!(
         "streamed-data run:          final NMSE {:.3e} (matches: {})",
         streamed.final_nmse,
         (streamed.final_nmse - res.final_nmse).abs() < 1e-9
+    );
+
+    // --- block data plane: --batch 4 --threads 2 over the same daemons ---
+    // four iterate vectors per step (tags 10/11 on the wire); the workers
+    // traverse their stored rows once per step for all four vectors
+    let batched_cfg = RunConfig {
+        batch: 4,
+        worker_threads: 2,
+        workers: addrs,
+        ..cfg
+    };
+    let batched = run_power_iteration(&batched_cfg).expect("batched run");
+    println!(
+        "batched run (B=4):          final NMSE {:.3e}, spectrum estimate {:?}",
+        batched.final_nmse, batched.eigvals
     );
 
     // the master's harness sent Shutdown on drop; reap the daemons

@@ -14,7 +14,7 @@ use std::time::Duration;
 use crate::config::types::{BackendKind, RunConfig};
 use crate::error::{Error, Result};
 use crate::linalg::partition::{submatrix_ranges, RowRange};
-use crate::linalg::Matrix;
+use crate::linalg::{Block, Matrix};
 use crate::metrics::{StepRecord, Timeline};
 use crate::net::{
     AnyTransport, Hello, LocalTransport, TcpOptions, TcpPeer, TcpTransport, Transport,
@@ -92,6 +92,7 @@ impl Harness {
                     backend: backend_spec.clone(),
                     speed: speeds[id],
                     tile_rows: cfg.tile_rows,
+                    threads: cfg.worker_threads,
                     storage: WorkerStorage::full(
                         Arc::clone(&matrix),
                         Arc::clone(&ranges),
@@ -136,6 +137,7 @@ impl Harness {
                             backend: cfg.backend,
                             g: cfg.g,
                             heartbeat_ms: DEFAULT_HEARTBEAT_MS,
+                            threads: cfg.worker_threads,
                             workload: spec.clone(),
                             stored: placement.stored_by(id).collect(),
                         },
@@ -224,19 +226,40 @@ impl Harness {
         })
     }
 
-    /// Run `steps` elastic iterations. Per step the caller's `update`
-    /// receives the master combine backend, the current iterate `w_t`, and
-    /// the assembled product `y_t = X w_t`, and returns `(w_{t+1}, metric)`.
-    /// Infeasible steps (availability below `1+S` replicas for some
-    /// sub-matrix) are skipped and recorded with the previous metric.
+    /// Run `steps` elastic iterations on the classic single-vector plane.
+    /// Per step the caller's `update` receives the master combine backend,
+    /// the current iterate `w_t`, and the assembled product `y_t = X w_t`,
+    /// and returns `(w_{t+1}, metric)`. Infeasible steps (availability
+    /// below `1+S` replicas for some sub-matrix) are skipped and recorded
+    /// with the previous metric.
     ///
-    /// The availability set is the elasticity trace *intersected with
-    /// transport liveness*: a worker whose connection died is preempted
-    /// until it comes back, whatever the trace says.
+    /// This is [`Harness::run_block`] at `B = 1` — the wrapping is
+    /// zero-copy in both directions, so the trajectory is bit-identical
+    /// to the pre-block harness.
     pub fn run<F>(&mut self, w0: Vec<f32>, steps: usize, mut update: F) -> Result<Vec<f32>>
     where
         F: FnMut(&Backend, &[f32], Vec<f32>) -> Result<(Vec<f32>, f64)>,
     {
+        let out = self.run_block(Block::single(w0), steps, |combine, w, y| {
+            let (next, metric) = update(combine, w.data(), y.into_single())?;
+            Ok((Block::single(next), metric))
+        })?;
+        Ok(out.into_single())
+    }
+
+    /// Run `steps` elastic iterations of the block data plane: the iterate
+    /// is a [`Block`] of `B` vectors, each step assembles the product
+    /// block `Y_t = X W_t`, and `update` returns the next block plus a
+    /// scalar metric.
+    ///
+    /// The availability set is the elasticity trace *intersected with
+    /// transport liveness*: a worker whose connection died is preempted
+    /// until it comes back, whatever the trace says.
+    pub fn run_block<F>(&mut self, w0: Block, steps: usize, mut update: F) -> Result<Block>
+    where
+        F: FnMut(&Backend, &Block, Block) -> Result<(Block, f64)>,
+    {
+        let q = self.cfg.q;
         let mut w = Arc::new(w0);
         let mut last_metric = f64::NAN;
         for step in 0..steps {
@@ -276,7 +299,8 @@ impl Harness {
             let out = self
                 .master
                 .step(&self.transport, step, &w, &avail, &victims)?;
-            let (next, metric) = update(&self.combine, &w, out.y)?;
+            let y = Block::from_interleaved(q, out.nvec, out.y)?;
+            let (next, metric) = update(&self.combine, &w, y)?;
             last_metric = metric;
             self.timeline.push(StepRecord {
                 step,

@@ -4,14 +4,24 @@
 //! 1. The matrix is synthetic symmetric with a planted dominant eigenpair
 //! (DESIGN.md §3), so the Fig. 4 y-axis — NMSE between the estimate and the
 //! true dominant eigenvector — is computable exactly.
+//!
+//! With `--batch B > 1` this becomes **block power iteration** (subspace
+//! iteration): `B` iterate vectors travel per step as one
+//! [`crate::linalg::Block`], each worker runs the batched mat-mat kernel
+//! over its tiles, and the master re-orthonormalizes the product panel
+//! with modified Gram–Schmidt. Column 0 follows the classic power-
+//! iteration trajectory (it is only normalized, never deflated), while
+//! the deflated columns track the next eigenvectors — the `R` diagonal is
+//! the running spectrum estimate.
 
 use std::sync::Arc;
 
 use crate::config::types::RunConfig;
 use crate::error::{Error, Result};
 use crate::linalg::gen::{planted_symmetric, PlantedMatrix};
-use crate::linalg::ops;
+use crate::linalg::{ops, Block};
 use crate::metrics::Timeline;
+use crate::util::Rng;
 
 use super::harness::Harness;
 
@@ -19,10 +29,15 @@ use super::harness::Harness;
 #[derive(Debug)]
 pub struct PowerIterationResult {
     pub timeline: Timeline,
-    /// Final iterate (unit-norm estimate of the dominant eigenvector).
+    /// Final iterate (unit-norm estimate of the dominant eigenvector; the
+    /// first block column when `batch > 1`).
     pub eigvec: Vec<f32>,
-    /// Final eigenvalue estimate (`‖X b‖` at the last step).
+    /// Final eigenvalue estimate (`‖X b‖` at the last step; the leading
+    /// `R` diagonal entry when `batch > 1`).
     pub eigval: f64,
+    /// Running eigenvalue estimates per block column (`batch` entries;
+    /// `[eigval]` for the classic single-vector run).
+    pub eigvals: Vec<f64>,
     /// Final NMSE against the planted eigenvector.
     pub final_nmse: f64,
     /// Planted ground truth for external checks.
@@ -39,6 +54,15 @@ pub fn workload(cfg: &RunConfig) -> Result<PlantedMatrix> {
         return Err(Error::Config(format!(
             "power iteration needs a square matrix (q={}, r={})",
             cfg.q, cfg.r
+        )));
+    }
+    if cfg.batch > cfg.q {
+        // more block columns than dimensions cannot stay orthonormal —
+        // MGS would carry dead zero columns and the spectrum estimate
+        // would pad with meaningless zeros
+        return Err(Error::Config(format!(
+            "batch {} exceeds the matrix dimension q={}",
+            cfg.batch, cfg.q
         )));
     }
     Ok(planted_symmetric(cfg.q, PLANT_EIGVAL, PLANT_GAP, cfg.seed))
@@ -62,6 +86,10 @@ pub fn run_power_iteration(cfg: &RunConfig) -> Result<PowerIterationResult> {
     };
     let mut harness = Harness::build_with_workload(cfg, matrix, Some(spec))?;
 
+    if cfg.batch > 1 {
+        return run_block_power(cfg, &mut harness, &truth);
+    }
+
     // b₀: deterministic unit vector (all-ones) — same for every policy so
     // Fig. 4 comparisons share trajectories.
     let mut b0 = vec![1.0f32; cfg.q];
@@ -80,6 +108,53 @@ pub fn run_power_iteration(cfg: &RunConfig) -> Result<PowerIterationResult> {
         timeline: std::mem::take(&mut harness.timeline),
         eigvec: final_b,
         eigval,
+        eigvals: vec![eigval],
+        final_nmse,
+        truth_eigval: PLANT_EIGVAL,
+    })
+}
+
+/// The `--batch B` path: subspace iteration `W_{t+1} = orth(X W_t)` with
+/// the whole panel shipped per step and modified Gram–Schmidt as the
+/// master combine (deflation + normalization in one pass).
+fn run_block_power(
+    cfg: &RunConfig,
+    harness: &mut Harness,
+    truth: &[f32],
+) -> Result<PowerIterationResult> {
+    let b = cfg.batch;
+    let q = cfg.q;
+    // W₀: column 0 is the deterministic all-ones start (so column 0
+    // shares the classic trajectory); the rest are seeded random vectors,
+    // orthonormalized before the first step.
+    let mut cols: Vec<Vec<f32>> = Vec::with_capacity(b);
+    let mut ones = vec![1.0f32; q];
+    ops::normalize(&mut ones);
+    cols.push(ones);
+    let mut rng = Rng::new(cfg.seed ^ 0xB10C);
+    for _ in 1..b {
+        let mut c: Vec<f32> = (0..q).map(|_| rng.normal() as f32).collect();
+        ops::normalize(&mut c);
+        cols.push(c);
+    }
+    let mut w0 = Block::from_columns(&cols)?;
+    ops::mgs_orthonormalize(w0.data_mut(), q, b);
+
+    let mut eigvals = vec![0.0f64; b];
+    let final_w = harness.run_block(w0, cfg.steps, |_combine, _w, mut y| {
+        let norms = ops::mgs_orthonormalize(y.data_mut(), q, b);
+        eigvals.copy_from_slice(&norms);
+        let nmse = ops::nmse_signless(&y.column(0), truth);
+        Ok((y, nmse))
+    })?;
+
+    let eigvec = final_w.column(0);
+    let final_nmse = ops::nmse_signless(&eigvec, truth);
+    Ok(PowerIterationResult {
+        timeline: std::mem::take(&mut harness.timeline),
+        eigvec,
+        eigval: eigvals[0],
+        eigvals,
         final_nmse,
         truth_eigval: PLANT_EIGVAL,
     })
@@ -166,9 +241,58 @@ mod tests {
     }
 
     #[test]
+    fn block_power_iteration_converges_like_the_classic_run() {
+        let mut cfg = small_cfg();
+        cfg.batch = 4;
+        let block = run_power_iteration(&cfg).unwrap();
+        assert!(
+            block.final_nmse < 0.05,
+            "block run did not converge: nmse {}",
+            block.final_nmse
+        );
+        assert_eq!(block.eigvals.len(), 4);
+        assert!(
+            (block.eigval - block.truth_eigval).abs() < 0.5,
+            "leading eigenvalue {} vs {}",
+            block.eigval,
+            block.truth_eigval
+        );
+        // deflated columns estimate the *rest* of the spectrum, which the
+        // planted construction keeps below gap·λ — strictly dominated
+        for (k, &ev) in block.eigvals.iter().enumerate().skip(1) {
+            assert!(ev < block.eigval, "column {k} eigenvalue {ev} not dominated");
+        }
+        // column 0 follows the classic trajectory (same kernel family,
+        // different summation order ⇒ equal up to f32 rounding)
+        let classic = run_power_iteration(&small_cfg()).unwrap();
+        let drift = ops::nmse_signless(&block.eigvec, &classic.eigvec);
+        assert!(drift < 1e-6, "column 0 drifted from the classic run: {drift}");
+    }
+
+    #[test]
+    fn block_power_iteration_with_worker_threads_matches() {
+        let mut cfg = small_cfg();
+        cfg.batch = 3;
+        cfg.steps = 30;
+        let serial = run_power_iteration(&cfg).unwrap();
+        cfg.worker_threads = 4;
+        let threaded = run_power_iteration(&cfg).unwrap();
+        // intra-worker parallelism must be invisible in the numerics
+        assert_eq!(serial.eigvec, threaded.eigvec);
+        assert_eq!(serial.final_nmse, threaded.final_nmse);
+    }
+
+    #[test]
     fn rejects_non_square() {
         let mut cfg = small_cfg();
         cfg.r = 64;
+        assert!(run_power_iteration(&cfg).is_err());
+    }
+
+    #[test]
+    fn rejects_batch_wider_than_the_matrix() {
+        let mut cfg = small_cfg();
+        cfg.batch = cfg.q + 1;
         assert!(run_power_iteration(&cfg).is_err());
     }
 }

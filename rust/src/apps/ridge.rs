@@ -36,6 +36,15 @@ pub fn run_ridge(cfg: &RunConfig, lambda: f64, eta: f64) -> Result<RidgeResult> 
     if cfg.q != cfg.r {
         return Err(Error::Config("ridge needs a square matrix".into()));
     }
+    if cfg.batch > 1 {
+        // a silent single-vector fallback would mislead callers who set
+        // --batch expecting the block plane (power iteration / pagerank)
+        return Err(Error::Config(format!(
+            "ridge solves one right-hand side; --batch {} is not supported \
+             (a multi-RHS ridge block path is future work)",
+            cfg.batch
+        )));
+    }
     // PSD-ify the planted matrix: A = P + (|λmin| bound) I is implicit in
     // the Richardson step size; with the planted spectrum ‖A‖ ≈ eigval.
     let plant = planted_symmetric(cfg.q, super::power_iteration::PLANT_EIGVAL, 0.3, cfg.seed);
@@ -99,6 +108,18 @@ mod tests {
         // residual decreased monotonically-ish
         let series = res.timeline.metric_series();
         assert!(series.last().unwrap().1 < series[5].1);
+    }
+
+    #[test]
+    fn rejects_batched_config() {
+        let cfg = RunConfig {
+            q: 64,
+            r: 64,
+            batch: 4,
+            speeds: vec![1.0; 6],
+            ..Default::default()
+        };
+        assert!(run_ridge(&cfg, 3.0, 0.13).is_err());
     }
 
     #[test]

@@ -109,6 +109,15 @@ pub struct RunConfig {
     pub row_cost_ns: u64,
     /// PJRT tile rows (must match the AOT artifact).
     pub tile_rows: usize,
+    /// Iterate vectors per elastic step (block size `B`). 1 is the classic
+    /// single-vector plane; larger values run block workloads (subspace /
+    /// block power iteration, multi-seed PageRank) on the batched
+    /// mat-mat data plane.
+    pub batch: usize,
+    /// Compute threads per worker for the tile fan-out (intra-worker
+    /// parallelism; host backend only). 1 keeps the speed throttle's
+    /// ratios meaningful and is bit-identical to the serial worker.
+    pub worker_threads: usize,
     pub seed: u64,
     /// TCP worker daemon addresses (`host:port`). Empty ⇒ in-process
     /// worker threads over the zero-copy local transport; non-empty ⇒ the
@@ -149,6 +158,8 @@ impl Default for RunConfig {
             speeds: Vec::new(),
             row_cost_ns: 0,
             tile_rows: 128,
+            batch: 1,
+            worker_threads: 1,
             seed: 7,
             workers: Vec::new(),
             stream_data: false,
@@ -186,6 +197,8 @@ impl RunConfig {
             ArgSpec::opt("speeds", "", "comma-separated speed multipliers"),
             ArgSpec::opt("row-cost-ns", "0", "simulated ns per row at speed 1"),
             ArgSpec::opt("tile-rows", "128", "PJRT tile rows (match artifacts)"),
+            ArgSpec::opt("batch", "1", "iterate vectors per step (block size B)"),
+            ArgSpec::opt("threads", "1", "compute threads per worker (host backend)"),
             ArgSpec::opt("seed", "7", "PRNG seed"),
             ArgSpec::opt(
                 "workers",
@@ -226,6 +239,8 @@ impl RunConfig {
             speeds: a.get_f64_list("speeds")?,
             row_cost_ns: a.get_u64("row-cost-ns")?,
             tile_rows: a.get_usize("tile-rows")?,
+            batch: a.get_usize("batch")?,
+            worker_threads: a.get_usize("threads")?,
             seed: a.get_u64("seed")?,
             workers: parse_worker_list(a.get("workers").unwrap_or("")),
             stream_data: a.has("stream-data"),
@@ -277,6 +292,21 @@ impl RunConfig {
         }
         if self.tile_rows == 0 {
             return Err(Error::Config("tile-rows must be positive".into()));
+        }
+        if self.batch == 0 {
+            return Err(Error::Config("batch must be at least 1".into()));
+        }
+        if self.batch > crate::net::codec::MAX_NVEC {
+            // reject up front: past the wire cap every daemon would refuse
+            // the tag-10 frame and the run would die opaquely mid-dispatch
+            return Err(Error::Config(format!(
+                "batch {} exceeds the wire protocol's block-width cap {}",
+                self.batch,
+                crate::net::codec::MAX_NVEC
+            )));
+        }
+        if self.worker_threads == 0 {
+            return Err(Error::Config("threads must be at least 1".into()));
         }
         if !self.workers.is_empty() && self.workers.len() != self.n {
             return Err(Error::Config(format!(
@@ -382,6 +412,28 @@ mod tests {
         assert!(c.validate().is_err());
         let mut c = RunConfig::default();
         c.gamma = 1.5;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn batch_and_threads_parse_and_validate() {
+        let argv: Vec<String> = ["--batch", "8", "--threads", "4"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        let a = Args::parse(&argv, &RunConfig::arg_specs()).unwrap();
+        let cfg = RunConfig::from_args(&a).unwrap();
+        assert_eq!(cfg.batch, 8);
+        assert_eq!(cfg.worker_threads, 4);
+
+        let mut c = RunConfig::default();
+        c.batch = 0;
+        assert!(c.validate().is_err());
+        let mut c = RunConfig::default();
+        c.batch = crate::net::codec::MAX_NVEC + 1; // past the wire cap
+        assert!(c.validate().is_err());
+        let mut c = RunConfig::default();
+        c.worker_threads = 0;
         assert!(c.validate().is_err());
     }
 

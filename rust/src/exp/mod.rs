@@ -42,7 +42,8 @@ pub fn master_cli(argv: &[String]) -> Result<()> {
 fn run_and_report(cfg: &RunConfig) -> Result<()> {
     let res = crate::apps::run_power_iteration(cfg)?;
     println!(
-        "power iteration: {} steps, backend={}, policy={}, placement={}, transport={}",
+        "power iteration: {} steps, backend={}, policy={}, placement={}, transport={}, \
+         batch={}, threads={}",
         cfg.steps,
         cfg.backend.name(),
         cfg.policy.name(),
@@ -51,8 +52,14 @@ fn run_and_report(cfg: &RunConfig) -> Result<()> {
             "tcp"
         } else {
             "local"
-        }
+        },
+        cfg.batch,
+        cfg.worker_threads
     );
+    if cfg.batch > 1 {
+        let evs: Vec<String> = res.eigvals.iter().map(|v| format!("{v:.4}")).collect();
+        println!("block spectrum estimate (R diagonal): [{}]", evs.join(", "));
+    }
     println!(
         "final NMSE {:.3e}, eigenvalue estimate {:.4} (truth {:.4}), total wall {:?}",
         res.final_nmse,
@@ -83,6 +90,8 @@ fn run_and_report(cfg: &RunConfig) -> Result<()> {
                 if cfg.is_distributed() { "tcp" } else { "local" },
             )
             .num("n", cfg.n as f64)
+            .num("batch", cfg.batch as f64)
+            .num("threads", cfg.worker_threads as f64)
             .num("seed", cfg.seed as f64)
             .num("final_nmse", res.final_nmse)
             .num("eigval", res.eigval)
@@ -158,7 +167,8 @@ pub fn solve_cli(argv: &[String]) -> Result<()> {
     let args = Args::parse(argv, &specs)?;
     let kind = crate::placement::PlacementKind::parse(args.get("placement").unwrap())?;
     let n = args.get_usize("n")?;
-    let p = crate::placement::Placement::build(kind, n, args.get_usize("g")?, args.get_usize("j")?)?;
+    let p =
+        crate::placement::Placement::build(kind, n, args.get_usize("g")?, args.get_usize("j")?)?;
     let speeds = args.get_f64_list("speeds")?;
     let avail: Vec<usize> = match args.get("avail") {
         Some("") | None => (0..n).collect(),
@@ -227,6 +237,15 @@ mod tests {
     fn run_cli_small() {
         run_cli(&sv(&[
             "--q", "60", "--r", "60", "--steps", "5", "--speeds", "1,2,3,4,5,6",
+        ]))
+        .unwrap();
+    }
+
+    #[test]
+    fn run_cli_block_batch() {
+        run_cli(&sv(&[
+            "--q", "60", "--r", "60", "--steps", "8", "--batch", "4", "--threads", "2",
+            "--speeds", "1,2,3,4,5,6",
         ]))
         .unwrap();
     }

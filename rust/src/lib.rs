@@ -26,7 +26,13 @@
 //!   the optimal load matrix `M*` into a concrete `1+S`-redundant
 //!   computation assignment.
 //! * [`sched`] — Algorithm 1: the adaptive master/worker loop with EWMA
-//!   speed estimation, elasticity traces and straggler injection.
+//!   speed estimation, elasticity traces and straggler injection. The
+//!   data plane is **block-batched**: a step ships `B` iterate vectors as
+//!   one [`linalg::Block`] (`--batch B`), workers run the cache-blocked
+//!   mat-mat kernel ([`linalg::ops::matmat_into`]) over a zero-allocation
+//!   per-worker scratch arena, and `--threads T` fans each worker's tiles
+//!   across a scoped thread pool (bit-identical to serial). `B = 1` is
+//!   byte- and bit-identical to the classic single-vector plane.
 //! * [`storage`] — placement-shaped storage: the [`storage::StorageView`]
 //!   trait kernels read through, implemented by both the full
 //!   [`linalg::Matrix`] (local simulator mode, zero-copy shared `Arc`)
@@ -40,9 +46,12 @@
 //!   the `usec worker` daemon) with a versioned handshake and
 //!   heartbeat-based liveness, so one power-iteration run can span
 //!   separate worker processes. A dropped connection is a preemption and
-//!   a reconnecting daemon is re-admitted at the next step. Workers
-//!   materialize only their placed rows — regenerated from the workload
-//!   spec, or streamed via checksummed `Data` frames (`--stream-data`)
+//!   a reconnecting daemon is re-admitted at the next step, and a master
+//!   host that vanishes without FIN/RST is timed out daemon-side
+//!   (`DaemonOpts::idle_timeout`) so the worker is never wedged. Workers
+//!   materialize only their placed rows — generated row by row from the
+//!   workload spec's row-seeded generators (peak memory = the placed
+//!   share), or streamed via checksummed `Data` frames (`--stream-data`)
 //!   for workloads without a deterministic generator.
 //! * [`runtime`] — PJRT artifact loading/execution plus a pure-Rust host
 //!   backend so everything is testable without artifacts.

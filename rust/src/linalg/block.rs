@@ -1,0 +1,164 @@
+//! [`Block`]: a bundle of `B` equal-length vectors, interleaved row-major.
+//!
+//! The block data plane ships `B` iterate vectors per elastic step instead
+//! of one, so a worker amortizes one traversal of its stored rows over `B`
+//! mat-vec products (`linalg::ops::matmat_into`). The layout is
+//! *interleaved* (`data[i * nvec + k]` is component `i` of vector `k`),
+//! which is exactly the column-panel layout the mat-mat kernel consumes
+//! and, for `nvec == 1`, is byte-identical to the plain vector — the B=1
+//! wire encoding and the in-memory hot path are unchanged from the
+//! single-vector plane.
+
+use crate::error::{Error, Result};
+
+/// `nvec` vectors of length `len`, interleaved row-major:
+/// `data[i * nvec + k]` is component `i` of vector `k`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Block {
+    len: usize,
+    nvec: usize,
+    data: Vec<f32>,
+}
+
+impl Block {
+    /// Wrap one vector as a `B = 1` block (zero-copy; the data layout of a
+    /// single-vector block *is* the vector).
+    pub fn single(v: Vec<f32>) -> Block {
+        Block {
+            len: v.len(),
+            nvec: 1,
+            data: v,
+        }
+    }
+
+    /// Zero-filled block.
+    pub fn zeros(len: usize, nvec: usize) -> Block {
+        assert!(nvec > 0, "Block with zero vectors");
+        Block {
+            len,
+            nvec,
+            data: vec![0.0; len * nvec],
+        }
+    }
+
+    /// Build from an interleaved buffer; `data.len()` must be
+    /// `len * nvec`.
+    pub fn from_interleaved(len: usize, nvec: usize, data: Vec<f32>) -> Result<Block> {
+        if nvec == 0 {
+            return Err(Error::Shape("block must carry at least one vector".into()));
+        }
+        let expect = len.checked_mul(nvec).ok_or_else(|| {
+            Error::Shape(format!("block {len}x{nvec} dimensions overflow usize"))
+        })?;
+        if data.len() != expect {
+            return Err(Error::Shape(format!(
+                "buffer of {} elements cannot be a {len}x{nvec} block",
+                data.len()
+            )));
+        }
+        Ok(Block { len, nvec, data })
+    }
+
+    /// Interleave `columns` (all the same length) into a block.
+    pub fn from_columns(columns: &[Vec<f32>]) -> Result<Block> {
+        let nvec = columns.len();
+        if nvec == 0 {
+            return Err(Error::Shape("block must carry at least one vector".into()));
+        }
+        let len = columns[0].len();
+        if columns.iter().any(|c| c.len() != len) {
+            return Err(Error::Shape("block columns differ in length".into()));
+        }
+        let mut data = vec![0.0f32; len * nvec];
+        for (k, col) in columns.iter().enumerate() {
+            for (i, &v) in col.iter().enumerate() {
+                data[i * nvec + k] = v;
+            }
+        }
+        Ok(Block { len, nvec, data })
+    }
+
+    /// Vector length (rows of the panel).
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Number of vectors `B`.
+    pub fn nvec(&self) -> usize {
+        self.nvec
+    }
+
+    /// Interleaved storage (`len * nvec` values).
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    /// Extract vector `k` as an owned contiguous vector.
+    pub fn column(&self, k: usize) -> Vec<f32> {
+        assert!(k < self.nvec, "column {k} of {}", self.nvec);
+        (0..self.len).map(|i| self.data[i * self.nvec + k]).collect()
+    }
+
+    /// Unwrap a `B = 1` block into its vector (zero-copy).
+    ///
+    /// Panics when the block carries more than one vector — callers on the
+    /// single-vector path own that invariant.
+    pub fn into_single(self) -> Vec<f32> {
+        assert_eq!(self.nvec, 1, "into_single on a B={} block", self.nvec);
+        self.data
+    }
+
+    /// Borrow the single vector of a `B = 1` block.
+    pub fn as_single(&self) -> Option<&[f32]> {
+        (self.nvec == 1).then_some(self.data.as_slice())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_is_zero_copy_layout() {
+        let b = Block::single(vec![1.0, 2.0, 3.0]);
+        assert_eq!(b.len(), 3);
+        assert_eq!(b.nvec(), 1);
+        assert_eq!(b.data(), &[1.0, 2.0, 3.0]);
+        assert_eq!(b.as_single(), Some(&[1.0, 2.0, 3.0][..]));
+        assert_eq!(b.column(0), vec![1.0, 2.0, 3.0]);
+        assert_eq!(b.into_single(), vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn columns_round_trip_through_interleaving() {
+        let cols = vec![vec![1.0f32, 2.0, 3.0], vec![10.0, 20.0, 30.0]];
+        let b = Block::from_columns(&cols).unwrap();
+        assert_eq!(b.len(), 3);
+        assert_eq!(b.nvec(), 2);
+        assert_eq!(b.data(), &[1.0, 10.0, 2.0, 20.0, 3.0, 30.0]);
+        assert_eq!(b.column(0), cols[0]);
+        assert_eq!(b.column(1), cols[1]);
+        assert!(b.as_single().is_none());
+    }
+
+    #[test]
+    fn from_interleaved_validates_shape() {
+        assert!(Block::from_interleaved(2, 2, vec![0.0; 4]).is_ok());
+        assert!(Block::from_interleaved(2, 2, vec![0.0; 3]).is_err());
+        assert!(Block::from_interleaved(2, 0, vec![]).is_err());
+    }
+
+    #[test]
+    fn mismatched_columns_rejected() {
+        assert!(Block::from_columns(&[vec![1.0], vec![1.0, 2.0]]).is_err());
+        assert!(Block::from_columns(&[]).is_err());
+    }
+}

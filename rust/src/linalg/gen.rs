@@ -3,9 +3,44 @@
 //! The paper's Fig. 4 uses a dense 6000×6000 symmetric matrix on EC2. We
 //! plant a known dominant eigenpair so NMSE against the *true* eigenvector
 //! is measurable without an external eigensolver (DESIGN.md §3).
+//!
+//! Every generator here is **row-seeded**: each row's entries derive from
+//! `(seed, row)` (and, for symmetric matrices, from the unordered entry
+//! pair), not from a single sequential stream. A shard worker can therefore
+//! materialize exactly its placed `J/G` rows — bit-identical to the
+//! corresponding rows of the full matrix — without ever holding the `q×r`
+//! matrix transiently ([`crate::net::WorkloadSpec::materialize_shard`]).
 
 use crate::linalg::{ops, Matrix};
 use crate::util::Rng;
+
+/// SplitMix64 finalizer: a cheap, high-quality 64-bit mixer used to derive
+/// independent per-row / per-entry seeds from `(seed, index)`.
+#[inline]
+fn mix64(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Derived seed for one row of a row-seeded generator.
+#[inline]
+fn row_seed(seed: u64, row: usize) -> u64 {
+    mix64(seed ^ (row as u64).wrapping_mul(0xA076_1D64_78BD_642F))
+}
+
+/// Symmetric per-entry uniform noise in `[-0.5, 0.5)`: a hash of the
+/// *unordered* index pair, so `pair_uniform(s, i, j) == pair_uniform(s, j,
+/// i)` by construction and any row can be generated independently.
+#[inline]
+fn pair_uniform(seed: u64, i: usize, j: usize) -> f64 {
+    let (a, b) = if i <= j { (i as u64, j as u64) } else { (j as u64, i as u64) };
+    let z = mix64(
+        seed ^ a.wrapping_mul(0xD6E8_FEB8_6659_FD93) ^ b.wrapping_mul(0xCA5A_8268_9512_1157),
+    );
+    (z >> 11) as f64 * (1.0 / (1u64 << 53) as f64) - 0.5
+}
 
 /// A symmetric matrix together with its planted dominant eigenpair.
 #[derive(Debug, Clone)]
@@ -17,48 +52,96 @@ pub struct PlantedMatrix {
     pub eigval: f64,
 }
 
-/// Build `A = λ·u uᵀ + ε·(B + Bᵀ)/2` with `u` a random unit vector and `B`
-/// i.i.d. uniform noise. `ε` is sized so the noise spectral radius
-/// (≈ `ε·√(3n)` w.h.p.) stays below `gap·λ`, guaranteeing `u` dominates.
+/// Row-seeded generator for the planted symmetric workload: `A = λ·u uᵀ +
+/// ε·E` with `u` a random unit vector and `E` symmetric uniform noise.
 ///
-/// `n` is the dimension; `gap ∈ (0,1)` controls the relative spectral gap
-/// (smaller gap ⇒ slower power-iteration convergence).
-pub fn planted_symmetric(n: usize, eigval: f64, gap: f64, seed: u64) -> PlantedMatrix {
-    assert!(n > 0 && (0.0..1.0).contains(&gap));
-    let mut rng = Rng::new(seed);
+/// Construction is **per-row**: `fill_row(i)` derives every entry from the
+/// plant (`O(n)` state, the eigenvector) and a symmetric hash of the entry
+/// pair — no sequential stream — so a shard worker generates exactly its
+/// placed rows, bit-identical to the same rows of [`planted_symmetric`],
+/// with `O(n)` peak memory beyond its shard.
+#[derive(Debug, Clone)]
+pub struct PlantedRows {
+    n: usize,
+    eigval: f64,
+    /// Noise scale (see [`PlantedRows::new`]).
+    eps: f64,
+    seed: u64,
+    /// Unit-norm planted dominant eigenvector.
+    pub eigvec: Vec<f32>,
+}
 
-    // random unit dominant eigenvector
-    let mut u: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
-    ops::normalize(&mut u);
-
-    // noise scale: uniform[-0.5,0.5) entries have variance 1/12; symmetric
-    // random matrix spectral norm ≈ 2σ√n = √(n/3); keep it at gap·λ/2.
-    let eps = (gap * eigval * 0.5) / (n as f64 / 3.0).sqrt();
-
-    let mut m = Matrix::zeros(n, n);
-    let data = m.data_mut();
-    // fill upper triangle with symmetric noise + rank-1 plant
-    for i in 0..n {
-        for j in i..n {
-            let noise = (rng.f64() - 0.5) * eps;
-            let plant = eigval * u[i] as f64 * u[j] as f64;
-            let v = (plant + noise) as f32;
-            data[i * n + j] = v;
-            data[j * n + i] = v;
+impl PlantedRows {
+    /// `n` is the dimension; `gap ∈ (0,1)` controls the relative spectral
+    /// gap (smaller gap ⇒ slower power-iteration convergence). `ε` is sized
+    /// so the noise spectral radius (≈ `ε·√(3n)` w.h.p.) stays below
+    /// `gap·λ`, guaranteeing `u` dominates.
+    pub fn new(n: usize, eigval: f64, gap: f64, seed: u64) -> PlantedRows {
+        assert!(n > 0 && (0.0..1.0).contains(&gap));
+        let mut rng = Rng::new(seed);
+        // random unit dominant eigenvector (O(n) shared state)
+        let mut u: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+        ops::normalize(&mut u);
+        // noise scale: uniform[-0.5,0.5) entries have variance 1/12;
+        // symmetric random matrix spectral norm ≈ 2σ√n = √(n/3); keep it
+        // at gap·λ/2.
+        let eps = (gap * eigval * 0.5) / (n as f64 / 3.0).sqrt();
+        PlantedRows {
+            n,
+            eigval,
+            eps,
+            seed,
+            eigvec: u,
         }
+    }
+
+    /// Matrix dimension.
+    pub fn dim(&self) -> usize {
+        self.n
+    }
+
+    /// Write row `i` of the matrix into `out` (`n` values).
+    pub fn fill_row(&self, i: usize, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), self.n);
+        let ui = self.eigval * self.eigvec[i] as f64;
+        for (j, o) in out.iter_mut().enumerate() {
+            let noise = pair_uniform(self.seed, i, j) * self.eps;
+            *o = (ui * self.eigvec[j] as f64 + noise) as f32;
+        }
+    }
+}
+
+/// Build `A = λ·u uᵀ + ε·E` as a full matrix (see [`PlantedRows`], which
+/// this fills row by row — the two are bit-identical per row).
+pub fn planted_symmetric(n: usize, eigval: f64, gap: f64, seed: u64) -> PlantedMatrix {
+    let gen = PlantedRows::new(n, eigval, gap, seed);
+    let mut m = Matrix::zeros(n, n);
+    for i in 0..n {
+        gen.fill_row(i, &mut m.data_mut()[i * n..(i + 1) * n]);
     }
     PlantedMatrix {
         matrix: m,
-        eigvec: u,
+        eigvec: gen.eigvec,
         eigval,
     }
 }
 
-/// Uniform random dense matrix in `[-0.5, 0.5)` (generic workloads).
+/// Write row `row` of the [`random_dense`] matrix for `(seed, cols)` into
+/// `out` — the row-seeded primitive shard workers use to materialize only
+/// their placed rows.
+pub fn random_dense_row_into(cols: usize, seed: u64, row: usize, out: &mut [f32]) {
+    debug_assert_eq!(out.len(), cols);
+    let mut rng = Rng::new(row_seed(seed, row));
+    rng.fill_f32(out);
+}
+
+/// Uniform random dense matrix in `[-0.5, 0.5)` (generic workloads),
+/// filled row by row from [`random_dense_row_into`].
 pub fn random_dense(rows: usize, cols: usize, seed: u64) -> Matrix {
-    let mut rng = Rng::new(seed);
     let mut m = Matrix::zeros(rows, cols);
-    rng.fill_f32(m.data_mut());
+    for r in 0..rows {
+        random_dense_row_into(cols, seed, r, &mut m.data_mut()[r * cols..(r + 1) * cols]);
+    }
     m
 }
 
@@ -135,5 +218,41 @@ mod tests {
         let b = planted_symmetric(16, 5.0, 0.5, 42);
         assert_eq!(a.matrix, b.matrix);
         assert_eq!(a.eigvec, b.eigvec);
+    }
+
+    #[test]
+    fn planted_rows_match_full_matrix_bitwise() {
+        let n = 48;
+        let full = planted_symmetric(n, 9.0, 0.4, 17);
+        let rows = PlantedRows::new(n, 9.0, 0.4, 17);
+        assert_eq!(rows.dim(), n);
+        assert_eq!(rows.eigvec, full.eigvec);
+        let mut buf = vec![0.0f32; n];
+        // any row, generated in any order, is bit-identical to the full fill
+        for i in [31usize, 0, 47, 12] {
+            rows.fill_row(i, &mut buf);
+            assert_eq!(buf.as_slice(), full.matrix.row(i), "row {i}");
+        }
+    }
+
+    #[test]
+    fn random_dense_rows_match_full_matrix_bitwise() {
+        let (rows, cols) = (20, 11);
+        let full = random_dense(rows, cols, 91);
+        let mut buf = vec![0.0f32; cols];
+        for r in [19usize, 0, 7] {
+            random_dense_row_into(cols, 91, r, &mut buf);
+            assert_eq!(buf.as_slice(), full.row(r), "row {r}");
+        }
+    }
+
+    #[test]
+    fn pair_noise_is_symmetric() {
+        for (i, j) in [(0usize, 5usize), (3, 3), (17, 2)] {
+            let a = pair_uniform(99, i, j);
+            let b = pair_uniform(99, j, i);
+            assert_eq!(a, b);
+            assert!((-0.5..0.5).contains(&a));
+        }
     }
 }

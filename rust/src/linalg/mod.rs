@@ -6,11 +6,13 @@
 //! oracle for the PJRT path), and synthetic matrix generators with planted
 //! spectra for the power-iteration experiments.
 
+pub mod block;
 pub mod gen;
 pub mod matrix;
 pub mod ops;
 pub mod partition;
 pub mod solve;
 
+pub use block::Block;
 pub use matrix::Matrix;
 pub use partition::{RowRange, TilePlan};

@@ -31,6 +31,98 @@ pub fn matvec_into(a: &[f32], rows: usize, cols: usize, v: &[f32], out: &mut [f3
     }
 }
 
+/// `out[r*nvec + k] = Σ_c a[r*cols + c] * x[c*nvec + k]` — a row-major
+/// `rows × cols` tile times a `cols × nvec` column panel (interleaved, the
+/// [`crate::linalg::Block`] layout), `f64` accumulators throughout.
+///
+/// This is the block data plane's hot kernel: one traversal of the tile is
+/// amortized over `nvec` mat-vec products, turning the memory-bandwidth-
+/// bound mat-vec into a compute-dense mat-mat. Vectors are processed in
+/// groups of up to 8 so the inner loop keeps 8 independent `f64`
+/// accumulators live (the same ILP budget as [`matvec_into`]) while the
+/// panel group (`cols × 8` f32s) stays cache-resident across the tile's
+/// rows. `nvec == 1` delegates to [`matvec_into`], so the B=1 path is
+/// bit-identical to the single-vector plane.
+pub fn matmat_into(a: &[f32], rows: usize, cols: usize, x: &[f32], nvec: usize, out: &mut [f32]) {
+    debug_assert_eq!(a.len(), rows * cols);
+    debug_assert_eq!(x.len(), cols * nvec);
+    debug_assert_eq!(out.len(), rows * nvec);
+    if nvec == 1 {
+        return matvec_into(a, rows, cols, x, out);
+    }
+    for r in 0..rows {
+        let row = &a[r * cols..(r + 1) * cols];
+        let orow = &mut out[r * nvec..(r + 1) * nvec];
+        let mut k0 = 0usize;
+        while k0 < nvec {
+            let kw = (nvec - k0).min(8);
+            let mut acc = [0.0f64; 8];
+            if kw == 8 {
+                // full 8-wide group: fixed-trip inner loop the compiler can
+                // keep entirely in registers
+                for (c, &av) in row.iter().enumerate() {
+                    let av = av as f64;
+                    let xs = &x[c * nvec + k0..c * nvec + k0 + 8];
+                    for k in 0..8 {
+                        acc[k] += av * xs[k] as f64;
+                    }
+                }
+            } else {
+                for (c, &av) in row.iter().enumerate() {
+                    let av = av as f64;
+                    let xs = &x[c * nvec + k0..c * nvec + k0 + kw];
+                    for (k, &xv) in xs.iter().enumerate() {
+                        acc[k] += av * xv as f64;
+                    }
+                }
+            }
+            for (k, &a_k) in acc.iter().take(kw).enumerate() {
+                orow[k0 + k] = a_k as f32;
+            }
+            k0 += kw;
+        }
+    }
+}
+
+/// Modified Gram–Schmidt over the `nvec` interleaved columns of a
+/// `len × nvec` panel (the [`crate::linalg::Block`] layout), in place.
+///
+/// Returns each column's norm *after* projecting out the previous columns
+/// (the `R` diagonal of the thin QR): for block power iteration these are
+/// the running eigenvalue estimates. A column that projects to (near)
+/// zero is left as-is and reports norm 0, mirroring [`normalize`].
+pub fn mgs_orthonormalize(data: &mut [f32], len: usize, nvec: usize) -> Vec<f64> {
+    debug_assert_eq!(data.len(), len * nvec);
+    let mut norms = Vec::with_capacity(nvec);
+    for k in 0..nvec {
+        // project out the already-orthonormalized columns j < k
+        for j in 0..k {
+            let mut d = 0.0f64;
+            for i in 0..len {
+                d += data[i * nvec + j] as f64 * data[i * nvec + k] as f64;
+            }
+            for i in 0..len {
+                let v = data[i * nvec + k] as f64 - d * data[i * nvec + j] as f64;
+                data[i * nvec + k] = v as f32;
+            }
+        }
+        let mut sq = 0.0f64;
+        for i in 0..len {
+            let v = data[i * nvec + k] as f64;
+            sq += v * v;
+        }
+        let n = sq.sqrt();
+        if n > 0.0 {
+            let inv = 1.0 / n;
+            for i in 0..len {
+                data[i * nvec + k] = (data[i * nvec + k] as f64 * inv) as f32;
+            }
+        }
+        norms.push(n);
+    }
+    norms
+}
+
 /// Euclidean norm with `f64` accumulation.
 pub fn norm2(v: &[f32]) -> f64 {
     v.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()
@@ -104,6 +196,75 @@ mod tests {
             let expect: f32 = (0..cols).map(|c| a[r * cols + c] * v[c]).sum();
             assert!((out[r] - expect).abs() < 1e-4, "row {r}");
         }
+    }
+
+    #[test]
+    fn matmat_matches_independent_matvecs() {
+        let rows = 9;
+        let cols = 21; // non-multiple of 8 exercises the matvec tail
+        for nvec in [1usize, 2, 3, 7, 8, 9, 16, 19] {
+            let a: Vec<f32> = (0..rows * cols).map(|i| (i % 17) as f32 * 0.25 - 2.0).collect();
+            let x: Vec<f32> = (0..cols * nvec).map(|i| (i % 13) as f32 * 0.1 - 0.6).collect();
+            let mut out = vec![0.0f32; rows * nvec];
+            matmat_into(&a, rows, cols, &x, nvec, &mut out);
+            for k in 0..nvec {
+                let col: Vec<f32> = (0..cols).map(|c| x[c * nvec + k]).collect();
+                let mut want = vec![0.0f32; rows];
+                matvec_into(&a, rows, cols, &col, &mut want);
+                for r in 0..rows {
+                    let got = out[r * nvec + k];
+                    assert!(
+                        (got - want[r]).abs() <= 1e-6 * want[r].abs().max(1.0),
+                        "B={nvec} col {k} row {r}: {got} vs {}",
+                        want[r]
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn matmat_b1_is_bit_identical_to_matvec() {
+        let (rows, cols) = (5, 13);
+        let a: Vec<f32> = (0..rows * cols).map(|i| (i % 7) as f32 - 3.0).collect();
+        let v: Vec<f32> = (0..cols).map(|i| (i as f32) * 0.3 - 1.0).collect();
+        let mut via_matvec = vec![0.0f32; rows];
+        let mut via_matmat = vec![0.0f32; rows];
+        matvec_into(&a, rows, cols, &v, &mut via_matvec);
+        matmat_into(&a, rows, cols, &v, 1, &mut via_matmat);
+        assert_eq!(via_matvec, via_matmat);
+    }
+
+    #[test]
+    fn mgs_produces_orthonormal_columns() {
+        let len = 12;
+        let nvec = 3;
+        let mut data: Vec<f32> = (0..len * nvec)
+            .map(|i| ((i * 31 + 7) % 23) as f32 * 0.17 - 1.9)
+            .collect();
+        let norms = mgs_orthonormalize(&mut data, len, nvec);
+        assert!(norms.iter().all(|&n| n > 0.0));
+        for j in 0..nvec {
+            for k in 0..nvec {
+                let d: f64 = (0..len)
+                    .map(|i| data[i * nvec + j] as f64 * data[i * nvec + k] as f64)
+                    .sum();
+                let want = if j == k { 1.0 } else { 0.0 };
+                assert!((d - want).abs() < 1e-5, "<q{j}, q{k}> = {d}");
+            }
+        }
+    }
+
+    #[test]
+    fn mgs_leaves_zero_column_untouched() {
+        // 3 rows x 2 interleaved columns: col0 = [1, 0, 1], col1 = zeros
+        let mut data = vec![1.0f32, 0.0, 0.0, 0.0, 1.0, 0.0];
+        let norms = mgs_orthonormalize(&mut data, 3, 2);
+        assert!((norms[0] - 2.0f64.sqrt()).abs() < 1e-7);
+        assert_eq!(norms[1], 0.0);
+        assert_eq!(data[1], 0.0);
+        assert_eq!(data[3], 0.0);
+        assert_eq!(data[5], 0.0);
     }
 
     #[test]

@@ -5,7 +5,7 @@
 //!
 //! | tag | message | direction | body |
 //! |-----|---------|-----------|------|
-//! | `1` | `Hello` | master → worker | magic `u32`, version `u16`, worker `u32`, speed `f64`, tile_rows `u32`, backend `u8`, G `u32`, heartbeat_ms `u32`, workload |
+//! | `1` | `Hello` | master → worker | magic `u32`, version `u16`, worker `u32`, speed `f64`, tile_rows `u32`, backend `u8`, G `u32`, heartbeat_ms `u32`, threads `u32`, workload |
 //! | `2` | `HelloAck` | worker → master | version `u16`, worker `u32` |
 //! | `3` | `Work` | master → worker | step `u64`, row_cost_ns `u64`, straggle `u8`(+`f64`), w `vec<f32>`, tasks `u32` × {g `u32`, lo `u64`, hi `u64`} |
 //! | `4` | `Report` | worker → master | worker `u32`, step `u64`, elapsed_ns `u64`, speed `u8`(+`f64`), segments `u32` × {lo `u64`, hi `u64`, values `vec<f32>`} |
@@ -14,6 +14,8 @@
 //! | `7` | `Shutdown` | master → worker | — |
 //! | `8` | `Data` | master → worker | lo `u64`, hi `u64`, cols `u32`, done `u8`, checksum `u32`, values `vec<f32>` |
 //! | `9` | `StorageReady` | worker → master | worker `u32`, resident_bytes `u64` |
+//! | `10` | `Work` (block) | master → worker | like tag 3 with `B u32` before `w`; `w` is `len·B` interleaved values |
+//! | `11` | `Report` (block) | worker → master | like tag 4 with `B u32` before the segments; segment values are `rows·B` interleaved |
 //!
 //! `vec<f32>` is a `u32` element count followed by raw LE `f32`s; `str` is
 //! a `u32` byte count followed by UTF-8. The workload spec is kind `u8`
@@ -21,6 +23,11 @@
 //! `u64`, seed `u64`, eigval `f64`, gap `f64`; it is followed by the
 //! worker's stored sub-matrix list (`u32` count + `u32` ids, empty ⇒ the
 //! worker stores everything).
+//!
+//! The block data plane keeps `B = 1` on the legacy tags: a single-vector
+//! `Work`/`Report` encodes **byte-identically** to wire version 2 (the
+//! interleaved layout of a one-vector block *is* the vector); only `B > 1`
+//! messages use tags 10/11, which carry `B` explicitly.
 //!
 //! `Data` frames carry a chunk of the worker's placed rows for streamed
 //! workloads; `checksum` is FNV-1a-32 over the raw LE value bytes and is
@@ -41,6 +48,7 @@ use std::time::Duration;
 use crate::config::types::BackendKind;
 use crate::error::{Error, Result};
 use crate::linalg::partition::RowRange;
+use crate::linalg::Block;
 use crate::optim::Task;
 use crate::sched::protocol::{Segment, WorkOrder, WorkerReport};
 use crate::sched::straggler::StraggleMode;
@@ -51,8 +59,10 @@ use super::transport::WorkloadSpec;
 /// Wire-protocol version; bumped on any incompatible layout change. The
 /// handshake rejects mismatches on both sides. Version 2 added the
 /// `Hello` stored-sub-matrix list, the `Streamed` workload kind, and the
-/// `Data`/`StorageReady` messages.
-pub const WIRE_VERSION: u16 = 2;
+/// `Data`/`StorageReady` messages. Version 3 added the `Hello` compute-
+/// thread count and the block `Work`/`Report` tags (10/11); `B = 1`
+/// traffic still encodes byte-identically to version 2.
+pub const WIRE_VERSION: u16 = 3;
 
 /// Handshake magic ("USEC" in ASCII) — catches non-USEC peers immediately.
 pub const HELLO_MAGIC: u32 = 0x5553_4543;
@@ -66,10 +76,17 @@ const TAG_HEARTBEAT: u8 = 6;
 const TAG_SHUTDOWN: u8 = 7;
 const TAG_DATA: u8 = 8;
 const TAG_STORAGE_READY: u8 = 9;
+const TAG_WORK_BLOCK: u8 = 10;
+const TAG_REPORT_BLOCK: u8 = 11;
 
 /// Sanity cap on list counts (tasks, segments). Real runs are orders of
 /// magnitude below; a malformed count is rejected before allocation.
 const MAX_LIST: usize = 1 << 20;
+
+/// Sanity cap on the block width `B` carried by tags 10/11. Public so
+/// [`crate::config::RunConfig::validate`] can reject an oversized
+/// `--batch` up front instead of letting every daemon refuse the frame.
+pub const MAX_NVEC: usize = 1 << 12;
 
 /// Master → worker handshake: identity, compute profile, and the workload
 /// the worker must materialize its storage from.
@@ -85,6 +102,10 @@ pub struct Hello {
     pub g: usize,
     /// Worker → master heartbeat period in milliseconds (0 disables).
     pub heartbeat_ms: u32,
+    /// Compute threads the worker fans its tiles across
+    /// ([`crate::sched::worker::WorkerConfig::threads`]); 1 = classic
+    /// serial worker.
+    pub threads: usize,
     pub workload: WorkloadSpec,
     /// Sub-matrix indices this worker stores (its `Z_n`): the worker
     /// materializes exactly these rows of the workload. Empty means the
@@ -241,6 +262,7 @@ pub fn encode(msg: &WireMsg) -> Vec<u8> {
             });
             e.u32(h.g as u32);
             e.u32(h.heartbeat_ms);
+            e.u32(h.threads as u32);
             enc_workload(&mut e, &h.workload);
             e.u32(h.stored.len() as u32);
             for &g in &h.stored {
@@ -255,7 +277,10 @@ pub fn encode(msg: &WireMsg) -> Vec<u8> {
             e.buf
         }
         WireMsg::Work(o) => {
-            let mut e = Enc::new(TAG_WORK);
+            // B = 1 stays on the legacy tag and encodes byte-identically
+            // to wire v2 (a one-vector block's layout is the vector)
+            let nvec = o.w.nvec();
+            let mut e = Enc::new(if nvec == 1 { TAG_WORK } else { TAG_WORK_BLOCK });
             e.u64(o.step as u64);
             e.u64(o.row_cost_ns);
             match o.straggle {
@@ -266,7 +291,10 @@ pub fn encode(msg: &WireMsg) -> Vec<u8> {
                     e.f64(f);
                 }
             }
-            e.f32s(&o.w);
+            if nvec > 1 {
+                e.u32(nvec as u32);
+            }
+            e.f32s(o.w.data());
             e.u32(o.tasks.len() as u32);
             for t in &o.tasks {
                 e.u32(t.g as u32);
@@ -276,7 +304,7 @@ pub fn encode(msg: &WireMsg) -> Vec<u8> {
             e.buf
         }
         WireMsg::Report(r) => {
-            let mut e = Enc::new(TAG_REPORT);
+            let mut e = Enc::new(if r.nvec == 1 { TAG_REPORT } else { TAG_REPORT_BLOCK });
             e.u32(r.worker as u32);
             e.u64(r.step as u64);
             e.u64(r.elapsed.as_nanos().min(u128::from(u64::MAX)) as u64);
@@ -286,6 +314,9 @@ pub fn encode(msg: &WireMsg) -> Vec<u8> {
                     e.u8(1);
                     e.f64(v);
                 }
+            }
+            if r.nvec > 1 {
+                e.u32(r.nvec as u32);
             }
             e.u32(r.segments.len() as u32);
             for s in &r.segments {
@@ -400,6 +431,18 @@ impl<'a> Dec<'a> {
         }
         Ok(n)
     }
+    /// Block width from a tag-10/11 body: must be in `[1, MAX_NVEC]` (the
+    /// encoder never emits 1 on the block tags, but a peer that does is
+    /// still decoded consistently).
+    fn nvec(&mut self) -> Result<usize> {
+        let b = self.u32()? as usize;
+        if b == 0 || b > MAX_NVEC {
+            return Err(Error::wire(format!(
+                "block width {b} outside [1, {MAX_NVEC}]"
+            )));
+        }
+        Ok(b)
+    }
     fn finish(self) -> Result<()> {
         if self.remaining() != 0 {
             return Err(Error::wire(format!(
@@ -463,6 +506,7 @@ pub fn decode(payload: &[u8]) -> Result<WireMsg> {
             };
             let g = d.u32()? as usize;
             let heartbeat_ms = d.u32()?;
+            let threads = d.u32()? as usize;
             let workload = dec_workload(&mut d)?;
             let n_stored = d.list_len("stored sub-matrix")?;
             let mut stored = Vec::with_capacity(n_stored);
@@ -477,6 +521,7 @@ pub fn decode(payload: &[u8]) -> Result<WireMsg> {
                 backend,
                 g,
                 heartbeat_ms,
+                threads,
                 workload,
                 stored,
             })
@@ -486,7 +531,7 @@ pub fn decode(payload: &[u8]) -> Result<WireMsg> {
             let worker = d.u32()? as usize;
             WireMsg::HelloAck(HelloAck { version, worker })
         }
-        TAG_WORK => {
+        TAG_WORK | TAG_WORK_BLOCK => {
             let step = d.usize64()?;
             let row_cost_ns = d.u64()?;
             let straggle = match d.u8()? {
@@ -495,7 +540,16 @@ pub fn decode(payload: &[u8]) -> Result<WireMsg> {
                 2 => Some(StraggleMode::Slow(d.f64()?)),
                 other => return Err(Error::wire(format!("unknown straggle tag {other}"))),
             };
+            let nvec = if tag == TAG_WORK_BLOCK { d.nvec()? } else { 1 };
             let w = d.f32s()?;
+            if w.len() % nvec != 0 {
+                return Err(Error::wire(format!(
+                    "iterate of {} values is not a whole number of B={nvec} vectors",
+                    w.len()
+                )));
+            }
+            let w = Block::from_interleaved(w.len() / nvec, nvec, w)
+                .map_err(|e| Error::wire(format!("iterate block: {e}")))?;
             let n_tasks = d.list_len("task")?;
             let mut tasks = Vec::with_capacity(n_tasks);
             for _ in 0..n_tasks {
@@ -511,7 +565,7 @@ pub fn decode(payload: &[u8]) -> Result<WireMsg> {
                 straggle,
             })
         }
-        TAG_REPORT => {
+        TAG_REPORT | TAG_REPORT_BLOCK => {
             let worker = d.u32()? as usize;
             let step = d.usize64()?;
             let elapsed = Duration::from_nanos(d.u64()?);
@@ -520,14 +574,18 @@ pub fn decode(payload: &[u8]) -> Result<WireMsg> {
                 1 => Some(d.f64()?),
                 other => return Err(Error::wire(format!("unknown speed tag {other}"))),
             };
+            let nvec = if tag == TAG_REPORT_BLOCK { d.nvec()? } else { 1 };
             let n_segs = d.list_len("segment")?;
             let mut segments = Vec::with_capacity(n_segs);
             for _ in 0..n_segs {
                 let rows = dec_row_range(&mut d)?;
                 let values = d.f32s()?;
-                if values.len() != rows.len() {
+                let expect = rows.len().checked_mul(nvec).ok_or_else(|| {
+                    Error::wire("segment dimensions overflow usize")
+                })?;
+                if values.len() != expect {
                     return Err(Error::wire(format!(
-                        "segment {}..{} carries {} values",
+                        "segment {}..{} carries {} values for B={nvec} (expected {expect})",
                         rows.lo,
                         rows.hi,
                         values.len()
@@ -539,6 +597,7 @@ pub fn decode(payload: &[u8]) -> Result<WireMsg> {
                 worker,
                 step,
                 segments,
+                nvec,
                 measured_speed,
                 elapsed,
             })
@@ -640,6 +699,7 @@ mod tests {
             backend: BackendKind::Host,
             g: 6,
             heartbeat_ms: 500,
+            threads: 4,
             workload: WorkloadSpec::PlantedSymmetric {
                 q: 1536,
                 eigval: 10.0,
@@ -656,6 +716,7 @@ mod tests {
             backend: BackendKind::Host,
             g: 4,
             heartbeat_ms: 0,
+            threads: 1,
             workload: WorkloadSpec::Streamed { q: 64, r: 48 },
             stored: vec![],
         }));
@@ -669,7 +730,7 @@ mod tests {
     fn work_order_roundtrip() {
         roundtrip(WireMsg::Work(WorkOrder {
             step: 42,
-            w: Arc::new(vec![0.5, -1.25, 3.0]),
+            w: Arc::new(Block::single(vec![0.5, -1.25, 3.0])),
             tasks: vec![
                 Task {
                     g: 0,
@@ -694,6 +755,7 @@ mod tests {
                 rows: RowRange::new(100, 103),
                 values: vec![1.0, 2.0, 3.0],
             }],
+            nvec: 1,
             measured_speed: Some(0.75),
             elapsed: Duration::from_micros(1234),
         }));
@@ -704,6 +766,109 @@ mod tests {
         });
         roundtrip(WireMsg::Heartbeat { worker: 0, seq: 77 });
         roundtrip(WireMsg::Shutdown);
+    }
+
+    #[test]
+    fn block_work_and_report_roundtrip() {
+        let w = Block::from_interleaved(3, 2, vec![0.5, -1.0, 1.5, 2.0, -2.5, 3.0]).unwrap();
+        roundtrip(WireMsg::Work(WorkOrder {
+            step: 7,
+            w: Arc::new(w),
+            tasks: vec![Task {
+                g: 1,
+                rows: RowRange::new(4, 9),
+            }],
+            row_cost_ns: 100,
+            straggle: None,
+        }));
+        roundtrip(WireMsg::Report(WorkerReport {
+            worker: 3,
+            step: 7,
+            segments: vec![Segment {
+                rows: RowRange::new(10, 12),
+                values: vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0], // 2 rows × B=3
+            }],
+            nvec: 3,
+            measured_speed: None,
+            elapsed: Duration::from_micros(5),
+        }));
+    }
+
+    #[test]
+    fn single_vector_work_keeps_the_v2_layout() {
+        // B = 1 must stay on the legacy tags with the legacy body — the
+        // block plane cannot change the bytes of single-vector traffic
+        let order = WorkOrder {
+            step: 3,
+            w: Arc::new(Block::single(vec![1.0, 2.0])),
+            tasks: vec![Task {
+                g: 0,
+                rows: RowRange::new(0, 2),
+            }],
+            row_cost_ns: 9,
+            straggle: None,
+        };
+        let bytes = encode(&WireMsg::Work(order));
+        assert_eq!(bytes[0], TAG_WORK);
+        // hand-build the v2 body: step, cost, straggle, w, tasks
+        let mut want = Enc::new(TAG_WORK);
+        want.u64(3);
+        want.u64(9);
+        want.u8(0);
+        want.f32s(&[1.0, 2.0]);
+        want.u32(1);
+        want.u32(0);
+        want.u64(0);
+        want.u64(2);
+        assert_eq!(bytes, want.buf);
+
+        let report = WorkerReport {
+            worker: 1,
+            step: 3,
+            segments: vec![],
+            nvec: 1,
+            measured_speed: None,
+            elapsed: Duration::from_nanos(42),
+        };
+        assert_eq!(encode(&WireMsg::Report(report))[0], TAG_REPORT);
+    }
+
+    #[test]
+    fn block_report_rejects_wrong_value_count() {
+        // 2 rows at B=3 must carry 6 values; ship 4 and expect rejection
+        let mut e = Enc::new(TAG_REPORT_BLOCK);
+        e.u32(0); // worker
+        e.u64(1); // step
+        e.u64(10); // elapsed ns
+        e.u8(0); // no speed
+        e.u32(3); // B
+        e.u32(1); // one segment
+        e.u64(0); // lo
+        e.u64(2); // hi
+        e.f32s(&[1.0, 2.0, 3.0, 4.0]);
+        assert!(decode(&e.buf).is_err());
+    }
+
+    #[test]
+    fn block_work_rejects_bad_widths() {
+        // B = 0
+        let mut e = Enc::new(TAG_WORK_BLOCK);
+        e.u64(0);
+        e.u64(0);
+        e.u8(0);
+        e.u32(0); // B = 0
+        e.f32s(&[]);
+        e.u32(0);
+        assert!(decode(&e.buf).is_err());
+        // iterate not divisible by B
+        let mut e = Enc::new(TAG_WORK_BLOCK);
+        e.u64(0);
+        e.u64(0);
+        e.u8(0);
+        e.u32(2); // B = 2
+        e.f32s(&[1.0, 2.0, 3.0]); // 3 values
+        e.u32(0);
+        assert!(decode(&e.buf).is_err());
     }
 
     #[test]
@@ -726,6 +891,7 @@ mod tests {
             backend: BackendKind::Host,
             g: 1,
             heartbeat_ms: 0,
+            threads: 1,
             workload: WorkloadSpec::RandomDense { q: 4, r: 4, seed: 0 },
             stored: vec![],
         }));

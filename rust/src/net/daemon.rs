@@ -11,8 +11,10 @@
 //! Storage is the uncoded USEC model made real: the `Hello` names the
 //! sub-matrices this worker stores (`Z_n`), and the daemon keeps **only
 //! those rows** resident — regenerated from the deterministic workload
-//! spec, or received as checksummed `Data` frames when the master streams
-//! external data ([`WorkloadSpec::Streamed`]). The daemon reports its
+//! spec's row-seeded generators (peak memory = the placed share, via
+//! [`crate::net::WorkloadSpec::materialize_shard`]), or received as
+//! checksummed `Data` frames when the master streams external data
+//! ([`crate::net::WorkloadSpec::Streamed`]). The daemon reports its
 //! actual resident byte count in `StorageReady`, which is what
 //! `--json-out` surfaces per worker.
 
@@ -25,23 +27,44 @@ use crate::cli::{ArgSpec, Args};
 use crate::error::{Error, Result};
 use crate::linalg::partition::{submatrix_ranges, TilePlan};
 use crate::runtime::BackendSpec;
-use crate::sched::worker::{execute_order, WorkerConfig, WorkerStorage};
+use crate::sched::worker::{execute_order, ExecScratch, WorkerConfig, WorkerStorage};
 use crate::storage::{coalesce_sub_ranges, RowShard, StorageView, StoreHandle};
 
 use super::codec::{self, Hello, HelloAck, WireMsg, WIRE_VERSION};
 use super::lock;
-use super::transport::WorkloadSpec;
 
 /// How long the daemon waits for the master's `Hello` (and for each
 /// streamed `Data` frame) before dropping a connection that goes quiet.
 const HANDSHAKE_TIMEOUT: Duration = Duration::from_secs(10);
 
+/// Default post-handshake read timeout (see [`DaemonOpts::idle_timeout`]):
+/// generous — a healthy master sends work at least once per step, and the
+/// master-side coverage timeout is a minute — but finite, so a master
+/// host that dies without FIN/RST cannot wedge the daemon in a dead
+/// session forever.
+pub const DEFAULT_IDLE_TIMEOUT: Duration = Duration::from_secs(300);
+
 /// Daemon behaviour knobs.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone)]
 pub struct DaemonOpts {
     /// Exit after this many master sessions (0 = serve forever). A
     /// re-admitted master counts as a fresh session.
     pub max_sessions: usize,
+    /// Post-handshake read timeout: a session with no master traffic for
+    /// this long is dropped and the daemon loops back to `accept`, so a
+    /// vanished master (no FIN/RST — powered-off host, dropped VPN)
+    /// cannot brick the worker. `Duration::ZERO` disables the timeout
+    /// (the pre-liveness behaviour).
+    pub idle_timeout: Duration,
+}
+
+impl Default for DaemonOpts {
+    fn default() -> Self {
+        DaemonOpts {
+            max_sessions: 0,
+            idle_timeout: DEFAULT_IDLE_TIMEOUT,
+        }
+    }
 }
 
 /// Accept master sessions forever (or `max_sessions`, per `opts`). Each
@@ -53,7 +76,7 @@ pub fn serve_worker(listener: TcpListener, opts: DaemonOpts) -> Result<()> {
         let (stream, peer_addr) = listener.accept()?;
         let _ = stream.set_nodelay(true);
         crate::log_info!("worker daemon: master connected from {peer_addr}");
-        match serve_session(stream) {
+        match serve_session(stream, &opts) {
             Ok(()) => crate::log_info!("worker daemon: session from {peer_addr} closed"),
             Err(e) => crate::log_warn!("worker daemon: session from {peer_addr} ended: {e}"),
         }
@@ -98,23 +121,24 @@ fn materialize_storage(stream: &TcpStream, hello: &Hello) -> Result<StoreHandle>
     }
 
     // Generator-backed: deterministic in the seed, so master and worker
-    // agree on every stored row without shipping the matrix. The full
-    // matrix exists only transiently; steady-state residency is the
-    // placed share.
-    let matrix = hello.workload.materialize()?;
+    // agree on every stored row without shipping the matrix. The
+    // generators are row-seeded, so a proper-subset share is produced
+    // row by row — peak memory is the placed share plus O(q) generator
+    // state; the full q×r matrix is never built, not even transiently.
     let distinct: std::collections::BTreeSet<usize> = hello.stored.iter().copied().collect();
     if distinct.is_empty() || distinct.len() == hello.g {
-        return Ok(StoreHandle::Full(matrix));
+        return Ok(StoreHandle::Full(hello.workload.materialize()?));
     }
     let sub_ranges = submatrix_ranges(q, hello.g)?;
     let placed = coalesce_sub_ranges(&hello.stored, &sub_ranges)?;
-    let shard = RowShard::from_matrix(&matrix, &placed)?;
+    let shard = hello.workload.materialize_shard(&placed)?;
     Ok(StoreHandle::Shard(Arc::new(shard)))
 }
 
 /// One master session: handshake, storage materialization, then
-/// order→report until `Shutdown` or the socket dies.
-fn serve_session(stream: TcpStream) -> Result<()> {
+/// order→report until `Shutdown`, the socket dies, or the master goes
+/// silent past `opts.idle_timeout`.
+fn serve_session(stream: TcpStream, opts: &DaemonOpts) -> Result<()> {
     stream.set_read_timeout(Some(HANDSHAKE_TIMEOUT))?;
     let hello = match codec::read_msg(&mut &stream)? {
         WireMsg::Hello(h) => h,
@@ -157,6 +181,7 @@ fn serve_session(stream: TcpStream) -> Result<()> {
         backend: BackendSpec::from_kind(hello.backend, crate::apps::harness::artifact_dir()),
         speed: hello.speed,
         tile_rows: hello.tile_rows,
+        threads: hello.threads.max(1),
         storage: WorkerStorage { store, sub_ranges },
     };
     let backend = cfg.backend.instantiate()?;
@@ -169,7 +194,14 @@ fn serve_session(stream: TcpStream) -> Result<()> {
             resident_bytes,
         },
     )?;
-    stream.set_read_timeout(None)?;
+    // daemon-side liveness: a finite read timeout means a master host
+    // that dies without FIN/RST ends this session instead of wedging the
+    // daemon forever (the next master then gets accepted)
+    if opts.idle_timeout.is_zero() {
+        stream.set_read_timeout(None)?;
+    } else {
+        stream.set_read_timeout(Some(opts.idle_timeout))?;
+    }
     crate::log_info!(
         "worker daemon: storage ready ({} of {} rows resident, {resident_bytes} bytes)",
         cfg.storage.store.resident_rows(),
@@ -204,6 +236,9 @@ fn serve_session(stream: TcpStream) -> Result<()> {
     };
 
     let tile = TilePlan::new(cfg.tile_rows);
+    // per-session scratch arena: the compute hot loop stays
+    // zero-allocation across tiles and steps
+    let mut scratch = ExecScratch::new();
     let mut reader = stream;
     let result = loop {
         match codec::read_msg(&mut reader) {
@@ -222,7 +257,7 @@ fn serve_session(stream: TcpStream) -> Result<()> {
                     );
                     continue;
                 }
-                match execute_order(&cfg, &backend, &tile, &order) {
+                match execute_order(&cfg, &backend, &tile, &order, &mut scratch) {
                     Ok(Some(report)) => {
                         if let Err(e) =
                             codec::write_msg(&mut *lock(&writer), &WireMsg::Report(report))
@@ -276,11 +311,16 @@ fn validate_order(
     Ok(())
 }
 
-/// `usec worker --listen host:port [--once]`.
+/// `usec worker --listen host:port [--once] [--idle-timeout-secs N]`.
 pub fn worker_cli(argv: &[String]) -> Result<()> {
     let specs = vec![
         ArgSpec::opt("listen", "127.0.0.1:7070", "address to bind"),
         ArgSpec::flag("once", "exit after a single master session"),
+        ArgSpec::opt(
+            "idle-timeout-secs",
+            "300",
+            "drop a session with no master traffic for this long (0 = never)",
+        ),
     ];
     let args = Args::parse(argv, &specs)?;
     let addr = args.get("listen").unwrap_or("127.0.0.1:7070");
@@ -291,6 +331,7 @@ pub fn worker_cli(argv: &[String]) -> Result<()> {
         listener,
         DaemonOpts {
             max_sessions: usize::from(args.has("once")),
+            idle_timeout: Duration::from_secs(args.get_u64("idle-timeout-secs")?),
         },
     )
 }
@@ -312,6 +353,7 @@ mod tests {
             backend: BackendKind::Host,
             g: 2,
             heartbeat_ms: 0,
+            threads: 1,
             workload: WorkloadSpec::RandomDense {
                 q: 16,
                 r: 16,
@@ -324,7 +366,15 @@ mod tests {
     fn spawn_daemon() -> (std::net::SocketAddr, std::thread::JoinHandle<Result<()>>) {
         let listener = TcpListener::bind("127.0.0.1:0").unwrap();
         let addr = listener.local_addr().unwrap();
-        let h = std::thread::spawn(move || serve_worker(listener, DaemonOpts { max_sessions: 1 }));
+        let h = std::thread::spawn(move || {
+            serve_worker(
+                listener,
+                DaemonOpts {
+                    max_sessions: 1,
+                    ..Default::default()
+                },
+            )
+        });
         (addr, h)
     }
 
@@ -388,6 +438,50 @@ mod tests {
         assert_eq!(read_storage_ready(&stream), 8 * 16 * 4);
         codec::write_msg(&mut &stream, &WireMsg::Shutdown).unwrap();
         h.join().unwrap().unwrap();
+    }
+
+    #[test]
+    fn silent_master_session_times_out_and_daemon_serves_again() {
+        // ROADMAP daemon-side liveness: a master that handshakes and then
+        // vanishes without FIN/RST must not wedge the daemon. The first
+        // session goes silent; the idle timeout ends it, and a second
+        // master gets served.
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let h = std::thread::spawn(move || {
+            serve_worker(
+                listener,
+                DaemonOpts {
+                    max_sessions: 2,
+                    idle_timeout: Duration::from_millis(200),
+                },
+            )
+        });
+
+        // session 1: handshake, then silence (socket kept open, no traffic)
+        let dead = TcpStream::connect(addr).unwrap();
+        dead.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        codec::write_msg(&mut &dead, &WireMsg::Hello(test_hello(0))).unwrap();
+        match codec::read_msg(&mut &dead).unwrap() {
+            WireMsg::HelloAck(_) => {}
+            other => panic!("expected HelloAck, got {other:?}"),
+        }
+        read_storage_ready(&dead);
+        // do NOT send Work or Shutdown — the daemon must time the session
+        // out on its own and loop back to accept
+
+        // session 2: a fresh master is accepted and served normally
+        let live = TcpStream::connect(addr).unwrap();
+        live.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        codec::write_msg(&mut &live, &WireMsg::Hello(test_hello(1))).unwrap();
+        match codec::read_msg(&mut &live).unwrap() {
+            WireMsg::HelloAck(ack) => assert_eq!(ack.worker, 1),
+            other => panic!("expected HelloAck, got {other:?}"),
+        }
+        read_storage_ready(&live);
+        codec::write_msg(&mut &live, &WireMsg::Shutdown).unwrap();
+        h.join().unwrap().unwrap();
+        drop(dead);
     }
 
     #[test]

@@ -130,7 +130,7 @@ impl Transport for Cluster {
 mod tests {
     use super::*;
     use crate::linalg::partition::submatrix_ranges;
-    use crate::linalg::gen;
+    use crate::linalg::{gen, Block};
     use crate::optim::Task;
     use crate::runtime::BackendSpec;
     use crate::sched::worker::WorkerStorage;
@@ -146,6 +146,7 @@ mod tests {
                 backend: BackendSpec::Host,
                 speed: 1.0,
                 tile_rows: 8,
+                threads: 1,
                 storage: WorkerStorage::full(Arc::clone(&matrix), Arc::clone(&ranges)),
             })
             .collect();
@@ -162,7 +163,7 @@ mod tests {
                 id,
                 WorkOrder {
                     step: 1,
-                    w: Arc::new(vec![0.5; 40]),
+                    w: Arc::new(Block::single(vec![0.5; 40])),
                     tasks: vec![Task {
                         g: id,
                         rows: crate::linalg::partition::RowRange::new(0, 5),
@@ -188,7 +189,7 @@ mod tests {
         t.shutdown();
         assert!(t.send(0, WorkOrder {
             step: 2,
-            w: Arc::new(vec![]),
+            w: Arc::new(Block::single(vec![])),
             tasks: vec![],
             row_cost_ns: 0,
             straggle: None,
@@ -201,7 +202,7 @@ mod tests {
         // the iterate must cross the local transport as an Arc clone, not a
         // serialized copy: strong_count rises while the order is in flight
         let t = transport(1);
-        let w = Arc::new(vec![0.25f32; 40]);
+        let w = Arc::new(Block::single(vec![0.25f32; 40]));
         t.send(
             0,
             WorkOrder {

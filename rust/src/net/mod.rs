@@ -20,7 +20,7 @@
 //!
 //! | tag | message | direction |
 //! |-----|-------------|-----------|
-//! | 1 | `Hello` (magic, version, id, speed, tile, backend, G, heartbeat, workload) | master → worker |
+//! | 1 | `Hello` (magic, version, id, speed, tile, backend, G, heartbeat, threads, workload) | master → worker |
 //! | 2 | `HelloAck` (version, id) | worker → master |
 //! | 3 | `Work` (step, cost, straggle, iterate, tasks) | master → worker |
 //! | 4 | `Report` (id, step, elapsed, speed, segments) | worker → master |
@@ -29,6 +29,12 @@
 //! | 7 | `Shutdown` | master → worker |
 //! | 8 | `Data` (rows, cols, done, checksum, values) | master → worker |
 //! | 9 | `StorageReady` (id, resident_bytes) | worker → master |
+//! | 10 | `Work` block variant: tag 3 + `B`, iterate is `len·B` interleaved | master → worker |
+//! | 11 | `Report` block variant: tag 4 + `B`, segment values are `rows·B` | worker → master |
+//!
+//! `B = 1` traffic stays on tags 3/4 and encodes byte-identically to wire
+//! version 2; the handshake's `threads` field sizes the worker's
+//! intra-worker tile fan-out ([`crate::sched::worker::WorkerConfig::threads`]).
 //!
 //! ## Distributed quickstart
 //!

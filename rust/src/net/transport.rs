@@ -16,8 +16,10 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use crate::error::{Error, Result};
+use crate::linalg::partition::RowRange;
 use crate::linalg::Matrix;
 use crate::sched::protocol::{WorkOrder, WorkerReport};
+use crate::storage::RowShard;
 
 /// Something that happened on the worker side of a transport.
 #[derive(Debug, Clone, PartialEq)]
@@ -133,31 +135,22 @@ impl WorkloadSpec {
         matches!(self, WorkloadSpec::Streamed { .. })
     }
 
-    /// Regenerate the data matrix this spec describes. Validates the
-    /// parameters first so a malformed handshake cannot trip the
-    /// generators' asserts and panic a worker daemon.
-    pub fn materialize(&self) -> Result<Arc<Matrix>> {
-        let m = match self {
-            WorkloadSpec::PlantedSymmetric {
-                q,
-                eigval,
-                gap,
-                seed,
-            } => {
+    /// Parameter sanity shared by the materialization paths, so a
+    /// malformed handshake cannot trip the generators' asserts and panic
+    /// a worker daemon.
+    fn check(&self) -> Result<()> {
+        match self {
+            WorkloadSpec::PlantedSymmetric { q, eigval, gap, .. } => {
                 if *q == 0 || !(0.0..1.0).contains(gap) || !eigval.is_finite() {
                     return Err(Error::wire(format!(
                         "invalid planted-symmetric spec: q={q} eigval={eigval} gap={gap}"
                     )));
                 }
-                crate::linalg::gen::planted_symmetric(*q, *eigval, *gap, *seed).matrix
             }
-            WorkloadSpec::RandomDense { q, r, seed } => {
+            WorkloadSpec::RandomDense { q, r, .. } => {
                 if *q == 0 || *r == 0 {
-                    return Err(Error::wire(format!(
-                        "invalid random-dense spec: {q}x{r}"
-                    )));
+                    return Err(Error::wire(format!("invalid random-dense spec: {q}x{r}")));
                 }
-                crate::linalg::gen::random_dense(*q, *r, *seed)
             }
             WorkloadSpec::Streamed { .. } => {
                 return Err(Error::wire(
@@ -165,8 +158,73 @@ impl WorkloadSpec {
                      rows arrive as Data frames",
                 ))
             }
+        }
+        Ok(())
+    }
+
+    /// Regenerate the full data matrix this spec describes.
+    pub fn materialize(&self) -> Result<Arc<Matrix>> {
+        self.check()?;
+        let m = match self {
+            WorkloadSpec::PlantedSymmetric {
+                q,
+                eigval,
+                gap,
+                seed,
+            } => crate::linalg::gen::planted_symmetric(*q, *eigval, *gap, *seed).matrix,
+            WorkloadSpec::RandomDense { q, r, seed } => {
+                crate::linalg::gen::random_dense(*q, *r, *seed)
+            }
+            WorkloadSpec::Streamed { .. } => unreachable!("rejected by check()"),
         };
         Ok(Arc::new(m))
+    }
+
+    /// Regenerate **only** the rows in `ranges` as a [`RowShard`], using
+    /// the row-seeded generators ([`crate::linalg::gen`]): each produced
+    /// row is bit-identical to the same row of [`WorkloadSpec::materialize`],
+    /// but peak memory is the placed share plus `O(q)` generator state —
+    /// the full `q×r` matrix is never built, not even transiently. Ranges
+    /// must be sorted and non-overlapping (what
+    /// [`crate::storage::coalesce_sub_ranges`] produces).
+    pub fn materialize_shard(&self, ranges: &[RowRange]) -> Result<RowShard> {
+        self.check()?;
+        let q = self.rows();
+        let cols = self.cols();
+        let mut shard = RowShard::new(q, cols);
+        match self {
+            WorkloadSpec::PlantedSymmetric {
+                q: dim,
+                eigval,
+                gap,
+                seed,
+            } => {
+                let gen = crate::linalg::gen::PlantedRows::new(*dim, *eigval, *gap, *seed);
+                for r in ranges {
+                    let mut buf = vec![0.0f32; r.len() * cols];
+                    for (k, row) in (r.lo..r.hi).enumerate() {
+                        gen.fill_row(row, &mut buf[k * cols..(k + 1) * cols]);
+                    }
+                    shard.insert(*r, buf)?;
+                }
+            }
+            WorkloadSpec::RandomDense { seed, .. } => {
+                for r in ranges {
+                    let mut buf = vec![0.0f32; r.len() * cols];
+                    for (k, row) in (r.lo..r.hi).enumerate() {
+                        crate::linalg::gen::random_dense_row_into(
+                            cols,
+                            *seed,
+                            row,
+                            &mut buf[k * cols..(k + 1) * cols],
+                        );
+                    }
+                    shard.insert(*r, buf)?;
+                }
+            }
+            WorkloadSpec::Streamed { .. } => unreachable!("rejected by check()"),
+        }
+        Ok(shard)
     }
 }
 
@@ -189,6 +247,45 @@ mod tests {
         for r in 0..24 {
             assert_eq!(a.row(r), b.row(r), "row {r} differs between builds");
         }
+    }
+
+    #[test]
+    fn materialize_shard_matches_full_rows_bitwise() {
+        use crate::storage::StorageView;
+        let spec = WorkloadSpec::PlantedSymmetric {
+            q: 36,
+            eigval: 8.0,
+            gap: 0.4,
+            seed: 13,
+        };
+        let full = spec.materialize().unwrap();
+        let ranges = vec![RowRange::new(6, 12), RowRange::new(24, 30)];
+        let shard = spec.materialize_shard(&ranges).unwrap();
+        assert_eq!(shard.resident_rows(), 12);
+        assert_eq!(shard.resident_bytes(), 12 * 36 * 4);
+        for r in &ranges {
+            for row in r.lo..r.hi {
+                assert_eq!(
+                    shard.row_slice(RowRange::new(row, row + 1)).unwrap(),
+                    full.row(row),
+                    "row {row}"
+                );
+            }
+        }
+
+        let dense = WorkloadSpec::RandomDense { q: 20, r: 7, seed: 5 };
+        let full = dense.materialize().unwrap();
+        let shard = dense.materialize_shard(&[RowRange::new(3, 9)]).unwrap();
+        for row in 3..9 {
+            assert_eq!(
+                shard.row_slice(RowRange::new(row, row + 1)).unwrap(),
+                full.row(row)
+            );
+        }
+
+        assert!(WorkloadSpec::Streamed { q: 4, r: 4 }
+            .materialize_shard(&[RowRange::new(0, 1)])
+            .is_err());
     }
 
     #[test]

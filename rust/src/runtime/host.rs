@@ -13,18 +13,43 @@ impl HostBackend {
     }
 
     pub fn matvec_tile(&self, x: &[f32], rows: usize, cols: usize, w: &[f32]) -> Result<Vec<f32>> {
+        let mut out = vec![0.0f32; rows];
+        self.matmat_tile_into(x, rows, cols, w, 1, &mut out)?;
+        Ok(out)
+    }
+
+    /// `out = X_tile · W` for a `cols × nvec` interleaved column panel,
+    /// writing into the caller's scratch (`rows × nvec`, interleaved) —
+    /// the zero-allocation hot path of the block data plane.
+    pub fn matmat_tile_into(
+        &self,
+        x: &[f32],
+        rows: usize,
+        cols: usize,
+        panel: &[f32],
+        nvec: usize,
+        out: &mut [f32],
+    ) -> Result<()> {
         if x.len() != rows * cols {
             return Err(Error::Shape(format!(
                 "tile buffer {} != {rows}x{cols}",
                 x.len()
             )));
         }
-        if w.len() != cols {
-            return Err(Error::Shape(format!("w length {} != cols {cols}", w.len())));
+        if nvec == 0 || panel.len() != cols * nvec {
+            return Err(Error::Shape(format!(
+                "panel length {} != cols {cols} x B {nvec}",
+                panel.len()
+            )));
         }
-        let mut out = vec![0.0f32; rows];
-        ops::matvec_into(x, rows, cols, w, &mut out);
-        Ok(out)
+        if out.len() != rows * nvec {
+            return Err(Error::Shape(format!(
+                "output length {} != rows {rows} x B {nvec}",
+                out.len()
+            )));
+        }
+        ops::matmat_into(x, rows, cols, panel, nvec, out);
+        Ok(())
     }
 
     pub fn normalize(&self, y: &[f32]) -> Result<(Vec<f32>, f64)> {
@@ -57,6 +82,21 @@ mod tests {
         assert_eq!(y, vec![3.0, 7.0]);
         assert!(h.matvec_tile(&x, 3, 2, &[1.0, 1.0]).is_err());
         assert!(h.matvec_tile(&x, 2, 2, &[1.0]).is_err());
+    }
+
+    #[test]
+    fn matmat_into_shapes_and_values() {
+        let h = HostBackend::new();
+        let x = vec![1.0, 2.0, 3.0, 4.0]; // 2x2
+        // panel: 2 cols x 2 vectors, interleaved — col0 = [1,1], col1 = [0,2]
+        let panel = vec![1.0, 0.0, 1.0, 2.0];
+        let mut out = vec![0.0f32; 4];
+        h.matmat_tile_into(&x, 2, 2, &panel, 2, &mut out).unwrap();
+        assert_eq!(out, vec![3.0, 4.0, 7.0, 8.0]);
+        assert!(h.matmat_tile_into(&x, 2, 2, &panel, 3, &mut out).is_err());
+        assert!(h.matmat_tile_into(&x, 2, 2, &panel, 0, &mut out).is_err());
+        let mut short = vec![0.0f32; 3];
+        assert!(h.matmat_tile_into(&x, 2, 2, &panel, 2, &mut short).is_err());
     }
 
     #[test]

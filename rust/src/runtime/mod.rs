@@ -81,6 +81,27 @@ impl Backend {
         }
     }
 
+    /// `Y = X_tile · W` for a `cols × nvec` interleaved column panel
+    /// (the [`crate::linalg::Block`] layout), written into the caller's
+    /// `rows × nvec` scratch buffer — no allocation on the hot path. The
+    /// host backend runs the cache-blocked mat-mat kernel; the PJRT
+    /// backend executes its single-vector artifact per column (artifacts
+    /// are compiled for B = 1).
+    pub fn matmat_tile_into(
+        &self,
+        x: &[f32],
+        rows: usize,
+        cols: usize,
+        panel: &[f32],
+        nvec: usize,
+        out: &mut [f32],
+    ) -> Result<()> {
+        match self {
+            Backend::Host(h) => h.matmat_tile_into(x, rows, cols, panel, nvec, out),
+            Backend::Pjrt(p) => p.matmat_tile_into(x, rows, cols, panel, nvec, out),
+        }
+    }
+
     /// Master combine: unit-normalize, returning `(b_next, ‖y‖)`.
     pub fn normalize(&self, y: &[f32]) -> Result<(Vec<f32>, f64)> {
         match self {

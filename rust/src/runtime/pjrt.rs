@@ -111,6 +111,46 @@ impl PjrtBackend {
         Ok(out)
     }
 
+    /// Block mat-mat through the single-vector artifact: the compiled
+    /// executable is baked for one iterate, so each of the `nvec` panel
+    /// columns is gathered, executed, and scattered into the interleaved
+    /// output. Correctness (the host oracle property) is preserved; the
+    /// amortization win of the block plane belongs to the host kernel
+    /// until multi-vector artifacts are compiled.
+    pub fn matmat_tile_into(
+        &self,
+        x: &[f32],
+        rows: usize,
+        cols: usize,
+        panel: &[f32],
+        nvec: usize,
+        out: &mut [f32],
+    ) -> Result<()> {
+        if nvec == 0 || panel.len() != cols * nvec {
+            return Err(Error::Shape(format!(
+                "panel length {} != cols {cols} x B {nvec}",
+                panel.len()
+            )));
+        }
+        if out.len() != rows * nvec {
+            return Err(Error::Shape(format!(
+                "output length {} != rows {rows} x B {nvec}",
+                out.len()
+            )));
+        }
+        let mut col = vec![0.0f32; cols];
+        for k in 0..nvec {
+            for (c, slot) in col.iter_mut().enumerate() {
+                *slot = panel[c * nvec + k];
+            }
+            let y = self.matvec_tile(x, rows, cols, &col)?;
+            for (r, &v) in y.iter().enumerate() {
+                out[r * nvec + k] = v;
+            }
+        }
+        Ok(())
+    }
+
     pub fn normalize(&self, y: &[f32]) -> Result<(Vec<f32>, f64)> {
         if y.len() != self.q {
             return Err(Error::Runtime(format!(
@@ -200,7 +240,12 @@ mod tests {
         let b = PjrtBackend::load(&dir).unwrap();
         assert!(b.matvec_tile(&[0.0; 4], 2, 2, &[0.0; 2]).is_err()); // wrong cols
         assert!(b
-            .matvec_tile(&vec![0.0; (b.tile_rows() + 1) * b.cols()], b.tile_rows() + 1, b.cols(), &vec![0.0; b.cols()])
+            .matvec_tile(
+                &vec![0.0; (b.tile_rows() + 1) * b.cols()],
+                b.tile_rows() + 1,
+                b.cols(),
+                &vec![0.0; b.cols()],
+            )
             .is_err()); // too many rows
         assert!(b.normalize(&[0.0; 3]).is_err()); // wrong q
     }

@@ -100,7 +100,7 @@ impl Drop for Cluster {
 mod tests {
     use super::*;
     use crate::linalg::partition::{submatrix_ranges, RowRange};
-    use crate::linalg::{gen, Matrix};
+    use crate::linalg::{gen, Block, Matrix};
     use crate::optim::Task;
     use crate::runtime::BackendSpec;
     use crate::sched::worker::WorkerStorage;
@@ -117,6 +117,7 @@ mod tests {
                 backend: BackendSpec::Host,
                 speed: 1.0,
                 tile_rows: 8,
+                threads: 1,
                 storage: WorkerStorage::full(Arc::clone(&matrix), Arc::clone(&ranges)),
             })
             .collect();
@@ -138,7 +139,7 @@ mod tests {
                 id,
                 WorkOrder {
                     step: 7,
-                    w: Arc::new(vec![1.0; 40]),
+                    w: Arc::new(Block::single(vec![1.0; 40])),
                     tasks: vec![Task {
                         g: id,
                         rows: RowRange::new(0, 5),
@@ -170,7 +171,7 @@ mod tests {
             9,
             WorkOrder {
                 step: 0,
-                w: Arc::new(vec![]),
+                w: Arc::new(Block::single(vec![])),
                 tasks: vec![],
                 row_cost_ns: 0,
                 straggle: None,
@@ -188,7 +189,7 @@ mod tests {
                 id,
                 WorkOrder {
                     step: 1,
-                    w: Arc::new(vec![1.0; 40]),
+                    w: Arc::new(Block::single(vec![1.0; 40])),
                     tasks: vec![],
                     row_cost_ns: 0,
                     straggle: None,

@@ -12,6 +12,7 @@ use std::time::{Duration, Instant};
 use crate::config::types::AssignPolicy;
 use crate::error::{Error, Result};
 use crate::linalg::partition::RowRange;
+use crate::linalg::Block;
 use crate::net::{Transport, TransportEvent};
 use crate::optim::{self, Assignment, SolveParams};
 use crate::placement::Placement;
@@ -42,8 +43,13 @@ pub struct MasterConfig {
 /// What one step produced.
 #[derive(Debug)]
 pub struct StepOutcome {
-    /// Assembled product `y_t = X w_t`.
+    /// Assembled product block `Y_t = X W_t`, `q × nvec` interleaved
+    /// (`y[row*nvec + k]` is row `row` of product vector `k`). With
+    /// `nvec == 1` this is the plain product vector, unchanged from the
+    /// single-vector plane.
     pub y: Vec<f32>,
+    /// Block width `B` of this step's iterate.
+    pub nvec: usize,
     /// Workers whose reports were used.
     pub reporters: Vec<usize>,
     /// Wall-clock of the whole step (solve + compute + assemble).
@@ -166,15 +172,19 @@ impl Master {
     /// `stragglers` are the chaos-injected victims for this step (the
     /// master ships the instruction; a real deployment would simply
     /// experience them).
+    /// `w` is the iterate *block*: `B` vectors per step
+    /// ([`crate::linalg::Block`]); wrap a plain vector with
+    /// [`Block::single`] for the classic `B = 1` plane.
     pub fn step<T: Transport + ?Sized>(
         &mut self,
         cluster: &T,
         step: usize,
-        w: &Arc<Vec<f32>>,
+        w: &Arc<Block>,
         avail: &[usize],
         stragglers: &[(usize, StraggleMode)],
     ) -> Result<StepOutcome> {
         let t0 = Instant::now();
+        let nvec = w.nvec();
 
         // ---- solve ----
         let solve_start = Instant::now();
@@ -219,7 +229,7 @@ impl Master {
         }
 
         // ---- collect until coverage ----
-        let mut y = vec![0.0f32; self.q];
+        let mut y = vec![0.0f32; self.q * nvec];
         let mut covered = vec![false; self.q];
         let mut missing = self.q;
         let mut reporters = Vec::new();
@@ -250,8 +260,18 @@ impl Master {
                         );
                         continue;
                     }
+                    if r.nvec != nvec {
+                        // a report for a different block width cannot be
+                        // spliced into this step's panel
+                        crate::log_warn!(
+                            "step {step}: worker {} reported B={}, expected B={nvec}, dropped",
+                            r.worker,
+                            r.nvec
+                        );
+                        continue;
+                    }
                     for seg in &r.segments {
-                        debug_assert_eq!(seg.values.len(), seg.rows.len());
+                        debug_assert_eq!(seg.values.len(), seg.rows.len() * nvec);
                         if seg.rows.hi > self.q {
                             // a remote peer must not be able to panic the
                             // master with out-of-range rows
@@ -269,7 +289,8 @@ impl Master {
                                 covered[row] = true;
                                 missing -= 1;
                             }
-                            y[row] = seg.values[i];
+                            y[row * nvec..(row + 1) * nvec]
+                                .copy_from_slice(&seg.values[i * nvec..(i + 1) * nvec]);
                         }
                     }
                     if let Some(v) = r.measured_speed {
@@ -303,6 +324,7 @@ impl Master {
 
         Ok(StepOutcome {
             y,
+            nvec,
             reporters,
             wall: t0.elapsed(),
             solve,
@@ -322,7 +344,12 @@ mod tests {
     use crate::sched::cluster::Cluster;
     use crate::sched::worker::{WorkerConfig, WorkerStorage};
 
-    fn build(q: usize, speeds: &[f64], policy: AssignPolicy, s: usize) -> (Master, Cluster, Arc<Matrix>) {
+    fn build(
+        q: usize,
+        speeds: &[f64],
+        policy: AssignPolicy,
+        s: usize,
+    ) -> (Master, Cluster, Arc<Matrix>) {
         let n = speeds.len();
         let placement = Placement::build(PlacementKind::Cyclic, n, n, 3).unwrap();
         let sub_ranges = submatrix_ranges(q, n).unwrap();
@@ -334,6 +361,7 @@ mod tests {
                 backend: BackendSpec::Host,
                 speed: speeds[id],
                 tile_rows: 16,
+                threads: 1,
                 storage: WorkerStorage::full(Arc::clone(&matrix), Arc::clone(&ranges)),
             })
             .collect();
@@ -360,10 +388,10 @@ mod tests {
     fn step_assembles_exact_product() {
         let speeds = vec![1.0, 2.0, 4.0, 8.0, 16.0, 32.0];
         let (mut master, cluster, matrix) = build(60, &speeds, AssignPolicy::Heterogeneous, 0);
-        let w = Arc::new(vec![0.25f32; 60]);
+        let w = Arc::new(Block::single(vec![0.25f32; 60]));
         let avail: Vec<usize> = (0..6).collect();
         let out = master.step(&cluster, 0, &w, &avail, &[]).unwrap();
-        let want = oracle_y(&matrix, &w);
+        let want = oracle_y(&matrix, w.data());
         for (a, e) in out.y.iter().zip(&want) {
             assert!((a - e).abs() < 1e-4, "{a} vs {e}");
         }
@@ -373,14 +401,37 @@ mod tests {
     }
 
     #[test]
+    fn step_assembles_block_product() {
+        let speeds = vec![1.0, 2.0, 4.0, 8.0, 16.0, 32.0];
+        let (mut master, cluster, matrix) = build(60, &speeds, AssignPolicy::Heterogeneous, 0);
+        let nvec = 3;
+        let cols: Vec<Vec<f32>> = (0..nvec)
+            .map(|k| (0..60).map(|i| ((i * (k + 1)) % 9) as f32 * 0.1 - 0.4).collect())
+            .collect();
+        let w = Arc::new(Block::from_columns(&cols).unwrap());
+        let avail: Vec<usize> = (0..6).collect();
+        let out = master.step(&cluster, 0, &w, &avail, &[]).unwrap();
+        assert_eq!(out.nvec, nvec);
+        assert_eq!(out.y.len(), 60 * nvec);
+        for (k, col) in cols.iter().enumerate() {
+            let want = oracle_y(&matrix, col);
+            for (row, e) in want.iter().enumerate() {
+                let a = out.y[row * nvec + k];
+                assert!((a - e).abs() < 1e-4, "col {k} row {row}: {a} vs {e}");
+            }
+        }
+        cluster.shutdown();
+    }
+
+    #[test]
     fn step_with_preempted_machines() {
         let speeds = vec![1.0; 6];
         let (mut master, cluster, matrix) = build(60, &speeds, AssignPolicy::Heterogeneous, 0);
-        let w = Arc::new(vec![1.0f32; 60]);
+        let w = Arc::new(Block::single(vec![1.0f32; 60]));
         // cyclic J=3 placement tolerates 2 preemptions for S=0
         let avail = vec![0, 2, 3, 5];
         let out = master.step(&cluster, 1, &w, &avail, &[]).unwrap();
-        let want = oracle_y(&matrix, &w);
+        let want = oracle_y(&matrix, w.data());
         for (a, e) in out.y.iter().zip(&want) {
             assert!((a - e).abs() < 1e-3);
         }
@@ -392,13 +443,13 @@ mod tests {
     fn straggler_tolerant_step_recovers_with_drop() {
         let speeds = vec![1.0; 6];
         let (mut master, cluster, matrix) = build(60, &speeds, AssignPolicy::Heterogeneous, 1);
-        let w = Arc::new(vec![0.5f32; 60]);
+        let w = Arc::new(Block::single(vec![0.5f32; 60]));
         let avail: Vec<usize> = (0..6).collect();
         let out = master
             .step(&cluster, 2, &w, &avail, &[(3, StraggleMode::Drop)])
             .unwrap();
         assert!(!out.reporters.contains(&3));
-        let want = oracle_y(&matrix, &w);
+        let want = oracle_y(&matrix, w.data());
         for (a, e) in out.y.iter().zip(&want) {
             assert!((a - e).abs() < 1e-3);
         }
@@ -410,7 +461,7 @@ mod tests {
         let speeds = vec![1.0; 6];
         let (mut master, cluster, _) = build(60, &speeds, AssignPolicy::Heterogeneous, 0);
         master.cfg.recovery_timeout = Duration::from_millis(400);
-        let w = Arc::new(vec![0.5f32; 60]);
+        let w = Arc::new(Block::single(vec![0.5f32; 60]));
         let avail: Vec<usize> = (0..6).collect();
         let r = master.step(&cluster, 3, &w, &avail, &[(0, StraggleMode::Drop)]);
         assert!(r.is_err(), "S=0 cannot survive a dropped worker");
@@ -432,6 +483,7 @@ mod tests {
                 backend: BackendSpec::Host,
                 speed: speeds[id],
                 tile_rows: 16,
+                threads: 1,
                 storage: WorkerStorage::full(Arc::clone(&matrix), Arc::clone(&ranges)),
             })
             .collect();
@@ -448,7 +500,7 @@ mod tests {
             recovery_timeout: Duration::from_secs(20),
         })
         .unwrap();
-        let w = Arc::new(vec![0.1f32; q]);
+        let w = Arc::new(Block::single(vec![0.1f32; q]));
         let avail: Vec<usize> = (0..n).collect();
         for step in 0..6 {
             master.step(&cluster, step, &w, &avail, &[]).unwrap();

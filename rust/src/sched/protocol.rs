@@ -1,12 +1,15 @@
 //! Master ↔ worker message types (in-process transport over mpsc).
 //!
-//! The data plane stays cheap: the iterate `w_t` is shared via `Arc`, and
-//! workers return only their computed row segments (global row ids), so a
-//! step moves `O(q)` floats, not `O(q·J)`.
+//! The data plane stays cheap: the iterate block `W_t` (B vectors,
+//! [`Block`]) is shared via `Arc`, and workers return only their computed
+//! row segments (global row ids), so a step moves `O(q·B)` floats, not
+//! `O(q·J·B)`. With `B = 1` everything degenerates to the classic
+//! single-vector plane — same layout, same bytes.
 
 use std::sync::Arc;
 
 use crate::linalg::partition::RowRange;
+use crate::linalg::Block;
 use crate::optim::Task;
 
 use super::straggler::StraggleMode;
@@ -15,8 +18,9 @@ use super::straggler::StraggleMode;
 #[derive(Debug, Clone, PartialEq)]
 pub struct WorkOrder {
     pub step: usize,
-    /// The iterate `w_t` (shared, read-only).
-    pub w: Arc<Vec<f32>>,
+    /// The iterate block `W_t` (`B` vectors, shared, read-only). `B = 1`
+    /// is the classic power-iteration plane.
+    pub w: Arc<Block>,
     /// Assigned tasks (sub-matrix-local row ranges).
     pub tasks: Vec<Task>,
     /// Speed-throttle target: ns per row at speed 1.0 (0 ⇒ no throttle).
@@ -25,7 +29,9 @@ pub struct WorkOrder {
     pub straggle: Option<StraggleMode>,
 }
 
-/// One computed segment: global rows `[rows.lo, rows.hi)` of `y`.
+/// One computed segment: global rows `[rows.lo, rows.hi)` of `Y`,
+/// `values[i*B + k]` being row `rows.lo + i` of product vector `k`
+/// (`B` = the report's [`WorkerReport::nvec`]).
 #[derive(Debug, Clone, PartialEq)]
 pub struct Segment {
     pub rows: RowRange,
@@ -37,8 +43,12 @@ pub struct Segment {
 pub struct WorkerReport {
     pub worker: usize,
     pub step: usize,
-    /// Computed segments in *global* row coordinates.
+    /// Computed segments in *global* row coordinates, `rows × nvec`
+    /// interleaved values each.
     pub segments: Vec<Segment>,
+    /// Block width `B` of the order this report answers (1 on the classic
+    /// single-vector plane).
+    pub nvec: usize,
     /// Measured speed `ν[n] = μ[n]/(τ₂−τ₁)` in sub-matrix units/s
     /// (Algorithm 1 line 14); `None` when no work was assigned.
     pub measured_speed: Option<f64>,
@@ -75,8 +85,18 @@ mod tests {
     }
 
     #[test]
+    fn block_segment_carries_rows_times_nvec() {
+        let nvec = 3;
+        let s = Segment {
+            rows: RowRange::new(10, 14),
+            values: vec![0.5; 4 * nvec],
+        };
+        assert_eq!(s.values.len(), s.rows.len() * nvec);
+    }
+
+    #[test]
     fn work_order_shares_iterate() {
-        let w = Arc::new(vec![0.5f32; 8]);
+        let w = Arc::new(Block::single(vec![0.5f32; 8]));
         let o1 = WorkOrder {
             step: 0,
             w: Arc::clone(&w),

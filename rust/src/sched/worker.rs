@@ -3,11 +3,22 @@
 //! simulated speed, and reports measured speed back (Algorithm 1 lines
 //! 8–15).
 //!
+//! The per-step hot loop is **zero-allocation**: every tile's `B`-vector
+//! product lands in a per-worker [`ExecScratch`] arena that persists
+//! across tiles *and* steps ([`Backend::matmat_tile_into`]); the only
+//! allocations per order are the final per-task segment buffers that ship
+//! to the master. With [`WorkerConfig::threads`] > 1 the tile list fans
+//! out across a scoped thread pool (host backend only — PJRT clients are
+//! not `Send`); per-row `f64` accumulation is untouched by the split, so
+//! a multi-threaded run is bit-identical to the single-threaded one and
+//! the host backend stays the numerics oracle.
+//!
 //! The speed throttle is the EC2-heterogeneity substitute (DESIGN.md §3):
 //! after computing its tiles, a worker sleeps up to
 //! `assigned_rows · row_cost_ns / speed` so wall-clock per step reflects
 //! the configured speed ratios. With `row_cost_ns = 0` the throttle is off
-//! and true compute speed shows through.
+//! and true compute speed shows through. `threads` defaults to 1 so the
+//! throttle's ratios keep meaning what they say.
 
 use std::sync::mpsc::{Receiver, Sender};
 use std::sync::Arc;
@@ -15,8 +26,8 @@ use std::time::{Duration, Instant};
 
 use crate::error::{Error, Result};
 use crate::linalg::partition::{RowRange, TilePlan};
-use crate::linalg::Matrix;
-use crate::runtime::BackendSpec;
+use crate::linalg::{ops, Matrix};
+use crate::runtime::{Backend, BackendSpec};
 use crate::storage::{RowShard, StorageView, StoreHandle};
 
 use super::protocol::{Segment, ToMaster, ToWorker, WorkOrder, WorkerReport};
@@ -70,7 +81,47 @@ pub struct WorkerConfig {
     pub speed: f64,
     /// Execution-tile height (must match PJRT artifacts when used).
     pub tile_rows: usize,
+    /// Compute threads for the tile fan-out (intra-worker parallelism).
+    /// 1 (the default everywhere) is bit-identical to the classic serial
+    /// worker and keeps the speed throttle's ratios meaningful; > 1 only
+    /// takes effect on the host backend.
+    pub threads: usize,
     pub storage: WorkerStorage,
+}
+
+/// Per-worker scratch arena: one growing buffer reused across tiles and
+/// steps, so the compute loop performs no allocation (satisfying the
+/// zero-alloc hot-loop contract of the block data plane).
+#[derive(Debug, Default)]
+pub struct ExecScratch {
+    buf: Vec<f32>,
+}
+
+impl ExecScratch {
+    pub fn new() -> ExecScratch {
+        ExecScratch::default()
+    }
+
+    /// Grow (never shrink) to at least `len` f32s and hand out the prefix.
+    fn at_least(&mut self, len: usize) -> &mut [f32] {
+        if self.buf.len() < len {
+            self.buf.resize(len, 0.0);
+        }
+        &mut self.buf[..len]
+    }
+
+    /// Current arena capacity in f32s (steady-state after the first step).
+    pub fn capacity(&self) -> usize {
+        self.buf.len()
+    }
+}
+
+/// One tile's compute job: where its rows live globally and where its
+/// output lands in the scratch arena (offsets are in f32s; jobs tile the
+/// arena prefix contiguously and in order).
+struct TileJob {
+    global: RowRange,
+    off: usize,
 }
 
 /// Worker thread body. Runs until `Shutdown` or channel close.
@@ -87,12 +138,13 @@ pub fn run_worker(cfg: WorkerConfig, rx: Receiver<ToWorker>, tx: Sender<ToMaster
         }
     };
     let tile = TilePlan::new(cfg.tile_rows);
+    let mut scratch = ExecScratch::new();
     while let Ok(msg) = rx.recv() {
         match msg {
             ToWorker::Shutdown => break,
             ToWorker::Work(order) => {
                 let step = order.step;
-                match execute_order(&cfg, &backend, &tile, &order) {
+                match execute_order(&cfg, &backend, &tile, &order, &mut scratch) {
                     Ok(Some(report)) => {
                         let _ = tx.send(ToMaster::Report(report));
                     }
@@ -113,19 +165,34 @@ pub fn run_worker(cfg: WorkerConfig, rx: Receiver<ToWorker>, tx: Sender<ToMaster
 /// Execute one work order; `Ok(None)` means an injected Drop straggler.
 ///
 /// Public because the TCP worker daemon ([`crate::net::daemon`]) drives the
-/// same compute path over a socket instead of an mpsc channel.
+/// same compute path over a socket instead of an mpsc channel. `scratch`
+/// is the worker's persistent arena; passing a fresh one is correct but
+/// reintroduces the per-step allocation this path exists to avoid.
 pub fn execute_order(
     cfg: &WorkerConfig,
-    backend: &crate::runtime::Backend,
+    backend: &Backend,
     tile: &TilePlan,
     order: &WorkOrder,
+    scratch: &mut ExecScratch,
 ) -> Result<Option<WorkerReport>> {
     let start = Instant::now();
     let cols = cfg.storage.store.cols();
-    let mut segments = Vec::new();
+    let nvec = order.w.nvec();
+    if order.w.len() != cols {
+        return Err(Error::Shape(format!(
+            "iterate block length {} != matrix cols {cols}",
+            order.w.len()
+        )));
+    }
+
+    // ---- plan: validate task geometry, lay jobs out in the arena ----
+    let mut jobs: Vec<TileJob> = Vec::with_capacity(order.tasks.len());
+    // (global range, arena offset) per non-empty task — one shipped
+    // segment each; consecutive tiles of a task are contiguous in the
+    // arena, so segment assembly is one bulk copy per task
+    let mut task_spans: Vec<(RowRange, usize)> = Vec::with_capacity(order.tasks.len());
     let mut assigned_rows = 0usize;
     let mut mu = 0.0f64; // load in sub-matrix units
-
     for task in &order.tasks {
         let sub = *cfg.storage.sub_ranges.get(task.g).ok_or_else(|| {
             Error::Shape(format!(
@@ -144,16 +211,34 @@ pub fn execute_order(
                 sub.len()
             )));
         }
+        if global.is_empty() {
+            continue;
+        }
+        task_spans.push((global, assigned_rows * nvec));
+        for t in tile.plan(global) {
+            jobs.push(TileJob {
+                global: t,
+                off: assigned_rows * nvec + (t.lo - global.lo) * nvec,
+            });
+        }
         assigned_rows += global.len();
         mu += task.rows.len() as f64 / sub.len() as f64;
-        for t in tile.plan(global) {
+    }
+
+    // ---- compute: zero-alloc hot loop over the arena ----
+    let buf = scratch.at_least(assigned_rows * nvec);
+    let threads = effective_threads(cfg, backend, jobs.len());
+    if threads <= 1 {
+        for job in &jobs {
             // the view rejects rows outside this worker's placed share —
             // a shard worker cannot silently compute from rows it should
             // not store
-            let x = cfg.storage.store.row_slice(t)?;
-            let y = backend.matvec_tile(x, t.len(), cols, &order.w)?;
-            segments.push(Segment { rows: t, values: y });
+            let x = cfg.storage.store.row_slice(job.global)?;
+            let out = &mut buf[job.off..job.off + job.global.len() * nvec];
+            backend.matmat_tile_into(x, job.global.len(), cols, order.w.data(), nvec, out)?;
         }
+    } else {
+        compute_parallel(cfg, order, &jobs, cols, nvec, buf, threads)?;
     }
 
     // speed throttle: emulate a machine of speed `cfg.speed`
@@ -176,6 +261,15 @@ pub fn execute_order(
         return Ok(None);
     }
 
+    // ---- assemble: one segment (one bulk copy) per task ----
+    let segments: Vec<Segment> = task_spans
+        .iter()
+        .map(|&(global, off)| Segment {
+            rows: global,
+            values: buf[off..off + global.len() * nvec].to_vec(),
+        })
+        .collect();
+
     let total = start.elapsed();
     let measured_speed = if assigned_rows > 0 && total.as_secs_f64() > 0.0 {
         Some(mu / total.as_secs_f64())
@@ -186,15 +280,114 @@ pub fn execute_order(
         worker: cfg.id,
         step: order.step,
         segments,
+        nvec,
         measured_speed,
         elapsed: total,
     }))
 }
 
+/// How many compute threads this order actually uses. PJRT clients are
+/// `Rc`-based (not `Send`), so intra-worker parallelism is a host-backend
+/// feature; everything else runs the serial path.
+fn effective_threads(cfg: &WorkerConfig, backend: &Backend, jobs: usize) -> usize {
+    let t = cfg.threads.max(1);
+    if t == 1 || jobs < 2 {
+        return 1;
+    }
+    match backend {
+        Backend::Host(_) => t.min(jobs),
+        _ => {
+            crate::log_debug!(
+                "worker {}: threads={t} requested but the {} backend is \
+                 single-threaded; running serial",
+                cfg.id,
+                backend.name()
+            );
+            1
+        }
+    }
+}
+
+/// Fan the tile jobs out across `threads` scoped threads, each writing its
+/// disjoint arena slices through the same host kernel. Work is split into
+/// contiguous job groups balanced by row count; per-row f64 accumulation
+/// is per-tile-row regardless of the split, so the result is bit-identical
+/// to the serial path.
+fn compute_parallel(
+    cfg: &WorkerConfig,
+    order: &WorkOrder,
+    jobs: &[TileJob],
+    cols: usize,
+    nvec: usize,
+    buf: &mut [f32],
+    threads: usize,
+) -> Result<()> {
+    // slice the arena prefix into one disjoint &mut per job (jobs tile it
+    // contiguously and in order)
+    let mut slices: Vec<&mut [f32]> = Vec::with_capacity(jobs.len());
+    let mut rest = buf;
+    let mut consumed = 0usize;
+    for job in jobs {
+        debug_assert_eq!(job.off, consumed);
+        let take = job.global.len() * nvec;
+        let (head, tail) = std::mem::take(&mut rest).split_at_mut(take);
+        slices.push(head);
+        rest = tail;
+        consumed += take;
+    }
+
+    // contiguous groups with ~equal row counts
+    let total_rows: usize = jobs.iter().map(|j| j.global.len()).sum();
+    let per_thread = total_rows.div_ceil(threads).max(1);
+    let mut groups: Vec<Vec<(&TileJob, &mut [f32])>> = Vec::with_capacity(threads);
+    let mut current: Vec<(&TileJob, &mut [f32])> = Vec::new();
+    let mut current_rows = 0usize;
+    for (job, slice) in jobs.iter().zip(slices) {
+        current.push((job, slice));
+        current_rows += job.global.len();
+        if current_rows >= per_thread {
+            groups.push(std::mem::take(&mut current));
+            current_rows = 0;
+        }
+    }
+    if !current.is_empty() {
+        groups.push(current);
+    }
+
+    let store = &cfg.storage.store;
+    let w = order.w.data();
+    let results: Vec<Result<()>> = std::thread::scope(|s| {
+        let handles: Vec<_> = groups
+            .into_iter()
+            .map(|group| {
+                s.spawn(move || -> Result<()> {
+                    for (job, out) in group {
+                        let x = store.row_slice(job.global)?;
+                        ops::matmat_into(x, job.global.len(), cols, w, nvec, out);
+                    }
+                    Ok(())
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| {
+                h.join().unwrap_or_else(|_| {
+                    Err(Error::Cluster("worker compute thread panicked".into()))
+                })
+            })
+            .collect()
+    });
+    for r in results {
+        r?;
+    }
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::linalg::gen;
+    use crate::linalg::{gen, Block};
     use crate::optim::Task;
     use std::sync::mpsc;
 
@@ -207,7 +400,7 @@ mod tests {
     fn order(tasks: Vec<Task>, q: usize, straggle: Option<StraggleMode>) -> WorkOrder {
         WorkOrder {
             step: 1,
-            w: Arc::new(vec![0.1f32; q]),
+            w: Arc::new(Block::single(vec![0.1f32; q])),
             tasks,
             row_cost_ns: 0,
             straggle,
@@ -227,6 +420,7 @@ mod tests {
             backend: BackendSpec::Host,
             speed,
             tile_rows: 16,
+            threads: 1,
             storage: storage(60, 6),
         }
     }
@@ -252,6 +446,7 @@ mod tests {
         };
         assert_eq!(r.worker, 0);
         assert_eq!(r.step, 1);
+        assert_eq!(r.nvec, 1);
         let total: usize = r.segments.iter().map(|s| s.rows.len()).sum();
         assert_eq!(total, 6);
         // numerics: matches direct matvec on those rows
@@ -363,6 +558,7 @@ mod tests {
             backend: BackendSpec::Host,
             speed: 1.0,
             tile_rows: 16,
+            threads: 1,
             storage: WorkerStorage::shard(shard, Arc::clone(&ranges)),
         };
         let (tx, rx) = spawn_worker(c);
@@ -400,5 +596,124 @@ mod tests {
             other => panic!("expected Failed, got {other:?}"),
         }
         tx.send(ToWorker::Shutdown).unwrap();
+    }
+
+    /// Direct `execute_order` harness for block/thread matrix tests.
+    fn run_order_direct(c: &WorkerConfig, o: &WorkOrder) -> WorkerReport {
+        let backend = c.backend.instantiate().unwrap();
+        let tile = TilePlan::new(c.tile_rows);
+        let mut scratch = ExecScratch::new();
+        execute_order(c, &backend, &tile, o, &mut scratch)
+            .unwrap()
+            .expect("report")
+    }
+
+    #[test]
+    fn block_order_matches_per_column_matvecs() {
+        let q = 60;
+        let c = cfg(9, 1.0);
+        let matrix = gen::random_dense(q, q, 5);
+        let nvec = 5;
+        let cols: Vec<Vec<f32>> = (0..nvec)
+            .map(|k| (0..q).map(|i| ((i + k) % 7) as f32 * 0.1 - 0.3).collect())
+            .collect();
+        let block = Block::from_columns(&cols).unwrap();
+        let o = WorkOrder {
+            step: 3,
+            w: Arc::new(block),
+            tasks: vec![
+                Task {
+                    g: 1,
+                    rows: RowRange::new(0, 10),
+                },
+                Task {
+                    g: 4,
+                    rows: RowRange::new(2, 9),
+                },
+            ],
+            row_cost_ns: 0,
+            straggle: None,
+        };
+        let r = run_order_direct(&c, &o);
+        assert_eq!(r.nvec, nvec);
+        assert_eq!(r.segments.len(), 2);
+        for seg in &r.segments {
+            assert_eq!(seg.values.len(), seg.rows.len() * nvec);
+            for (i, row) in (seg.rows.lo..seg.rows.hi).enumerate() {
+                for (k, col) in cols.iter().enumerate() {
+                    let want: f32 = matrix.row(row).iter().zip(col).map(|(a, b)| a * b).sum();
+                    let got = seg.values[i * nvec + k];
+                    assert!(
+                        (got - want).abs() < 1e-4,
+                        "row {row} col {k}: {got} vs {want}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn multithreaded_order_is_bit_identical_to_serial() {
+        let mut serial = cfg(10, 1.0);
+        serial.tile_rows = 8; // many tiles → a real fan-out
+        let mut threaded = serial.clone();
+        threaded.threads = 4;
+        let tasks = vec![
+            Task {
+                g: 0,
+                rows: RowRange::new(0, 10),
+            },
+            Task {
+                g: 3,
+                rows: RowRange::new(1, 10),
+            },
+            Task {
+                g: 5,
+                rows: RowRange::new(0, 7),
+            },
+        ];
+        for nvec in [1usize, 4] {
+            let w = Block::from_interleaved(
+                60,
+                nvec,
+                (0..60 * nvec).map(|i| (i % 11) as f32 * 0.07 - 0.35).collect(),
+            )
+            .unwrap();
+            let o = WorkOrder {
+                step: 2,
+                w: Arc::new(w),
+                tasks: tasks.clone(),
+                row_cost_ns: 0,
+                straggle: None,
+            };
+            let a = run_order_direct(&serial, &o);
+            let b = run_order_direct(&threaded, &o);
+            assert_eq!(a.segments, b.segments, "B={nvec}");
+        }
+    }
+
+    #[test]
+    fn scratch_arena_is_reused_across_steps() {
+        let c = cfg(11, 1.0);
+        let backend = c.backend.instantiate().unwrap();
+        let tile = TilePlan::new(c.tile_rows);
+        let mut scratch = ExecScratch::new();
+        let o = order(
+            vec![Task {
+                g: 0,
+                rows: RowRange::new(0, 10),
+            }],
+            60,
+            None,
+        );
+        execute_order(&c, &backend, &tile, &o, &mut scratch)
+            .unwrap()
+            .unwrap();
+        let cap = scratch.capacity();
+        assert_eq!(cap, 10);
+        execute_order(&c, &backend, &tile, &o, &mut scratch)
+            .unwrap()
+            .unwrap();
+        assert_eq!(scratch.capacity(), cap, "steady state must not reallocate");
     }
 }

@@ -136,14 +136,18 @@ pub mod gen {
     }
 
     /// An arbitrary wire-safe [`crate::sched::protocol::WorkOrder`]:
-    /// random iterate, task list, throttle, and straggle instruction.
+    /// random iterate block (width 1..=4 — the B=1 case keeps the legacy
+    /// wire tag covered), task list, throttle, and straggle instruction.
     pub fn work_order(rng: &mut Rng) -> crate::sched::protocol::WorkOrder {
         use crate::linalg::partition::RowRange;
+        use crate::linalg::Block;
         use crate::optim::Task;
         use crate::sched::straggler::StraggleMode;
 
         let q = rng.range(1, 64);
-        let w: Vec<f32> = (0..q).map(|_| (rng.f64() * 2.0 - 1.0) as f32).collect();
+        let nvec = rng.range(1, 5);
+        let w: Vec<f32> = (0..q * nvec).map(|_| (rng.f64() * 2.0 - 1.0) as f32).collect();
+        let w = Block::from_interleaved(q, nvec, w).expect("generated block is consistent");
         let tasks: Vec<Task> = (0..rng.below(5))
             .map(|_| {
                 let lo = rng.below(50);
@@ -213,18 +217,20 @@ pub mod gen {
     }
 
     /// An arbitrary wire-safe [`crate::sched::protocol::WorkerReport`]
-    /// whose segments are internally consistent (`values.len == rows.len`).
+    /// whose segments are internally consistent
+    /// (`values.len == rows.len · nvec`, block width 1..=4).
     pub fn worker_report(rng: &mut Rng) -> crate::sched::protocol::WorkerReport {
         use crate::linalg::partition::RowRange;
         use crate::sched::protocol::Segment;
 
+        let nvec = rng.range(1, 5);
         let segments: Vec<Segment> = (0..rng.below(4))
             .map(|_| {
                 let lo = rng.below(100);
                 let len = rng.below(16);
                 Segment {
                     rows: RowRange::new(lo, lo + len),
-                    values: (0..len).map(|_| rng.f64() as f32).collect(),
+                    values: (0..len * nvec).map(|_| rng.f64() as f32).collect(),
                 }
             })
             .collect();
@@ -232,6 +238,7 @@ pub mod gen {
             worker: rng.below(16),
             step: rng.below(1000),
             segments,
+            nvec,
             measured_speed: if rng.chance(0.5) {
                 Some(rng.range_f64(0.01, 10.0))
             } else {
@@ -278,6 +285,107 @@ mod tests {
         run(Config::default().cases(20).name("speed-gen"), |rng| {
             let s = gen::speeds(rng, 6);
             assert!(s.iter().all(|&x| x >= 0.05));
+        });
+    }
+
+    #[test]
+    fn matmat_matches_independent_matvecs_for_any_shape() {
+        use crate::linalg::ops::{matmat_into, matvec_into};
+        run(Config::default().cases(150).name("matmat-vs-matvec"), |rng| {
+            let rows = rng.range(1, 24);
+            let cols = rng.range(1, 48);
+            // widths crossing the 8-wide group boundary exercise the tail
+            let nvec = rng.range(1, 20);
+            let a: Vec<f32> = (0..rows * cols)
+                .map(|_| (rng.f64() * 4.0 - 2.0) as f32)
+                .collect();
+            let x: Vec<f32> = (0..cols * nvec)
+                .map(|_| (rng.f64() * 2.0 - 1.0) as f32)
+                .collect();
+            let mut out = vec![0.0f32; rows * nvec];
+            matmat_into(&a, rows, cols, &x, nvec, &mut out);
+            for k in 0..nvec {
+                let col: Vec<f32> = (0..cols).map(|c| x[c * nvec + k]).collect();
+                let mut want = vec![0.0f32; rows];
+                matvec_into(&a, rows, cols, &col, &mut want);
+                for r in 0..rows {
+                    let got = out[r * nvec + k];
+                    assert!(
+                        (got - want[r]).abs() <= 1e-6 * want[r].abs().max(1.0),
+                        "rows={rows} cols={cols} B={nvec} col {k} row {r}: {got} vs {}",
+                        want[r]
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn multithreaded_execute_order_is_bit_identical() {
+        use crate::linalg::partition::{submatrix_ranges, RowRange, TilePlan};
+        use crate::linalg::{gen as lgen, Block};
+        use crate::optim::Task;
+        use crate::runtime::BackendSpec;
+        use crate::sched::worker::{execute_order, ExecScratch, WorkerConfig, WorkerStorage};
+
+        run(Config::default().cases(24).name("threaded-worker"), |rng| {
+            let q = rng.range(24, 80);
+            let g = rng.range(2, 5);
+            let matrix = std::sync::Arc::new(lgen::random_dense(q, q, rng.next_u64()));
+            let ranges =
+                std::sync::Arc::new(submatrix_ranges(q, g).expect("valid partition"));
+            // fixed odd tile height → ragged tails in most cases
+            let mk = |threads: usize| WorkerConfig {
+                id: 0,
+                backend: BackendSpec::Host,
+                speed: 1.0,
+                tile_rows: 7,
+                threads,
+                storage: WorkerStorage::full(
+                    std::sync::Arc::clone(&matrix),
+                    std::sync::Arc::clone(&ranges),
+                ),
+            };
+            let nvec = rng.range(1, 6);
+            let w = Block::from_interleaved(
+                q,
+                nvec,
+                (0..q * nvec).map(|_| (rng.f64() - 0.5) as f32).collect(),
+            )
+            .expect("generated block is consistent");
+            let tasks: Vec<Task> = (0..g)
+                .filter(|_| rng.chance(0.8))
+                .map(|gi| {
+                    let sub_len = ranges[gi].len();
+                    let lo = rng.below(sub_len);
+                    let hi = rng.range(lo, sub_len) + 1;
+                    Task {
+                        g: gi,
+                        rows: RowRange::new(lo, hi.min(sub_len)),
+                    }
+                })
+                .collect();
+            let order = crate::sched::protocol::WorkOrder {
+                step: 1,
+                w: std::sync::Arc::new(w),
+                tasks,
+                row_cost_ns: 0,
+                straggle: None,
+            };
+            let serial_cfg = mk(1);
+            let threaded_cfg = mk(1 + rng.range(1, 6));
+            let backend = BackendSpec::Host.instantiate().expect("host backend");
+            let tile = TilePlan::new(serial_cfg.tile_rows);
+            let mut s1 = ExecScratch::new();
+            let mut s2 = ExecScratch::new();
+            let a = execute_order(&serial_cfg, &backend, &tile, &order, &mut s1)
+                .expect("serial order")
+                .expect("report");
+            let b = execute_order(&threaded_cfg, &backend, &tile, &order, &mut s2)
+                .expect("threaded order")
+                .expect("report");
+            assert_eq!(a.segments, b.segments, "thread fan-out changed the numerics");
+            assert_eq!(a.nvec, b.nvec);
         });
     }
 

@@ -1,11 +1,15 @@
 //! Micro/E2E benchmark harness (offline replacement for `criterion`).
 //!
 //! Used by the `benches/*.rs` targets (`harness = false`). Provides warmup,
-//! adaptive iteration counts, and robust summary statistics. Not a
-//! statistics-grade criterion clone — but honest medians over enough
+//! adaptive iteration counts, robust summary statistics, and a
+//! machine-readable JSON dump ([`Bench::to_json`] / [`Bench::write_json`])
+//! so perf trajectories can be tracked across commits (`BENCH_*.json`).
+//! Not a statistics-grade criterion clone — but honest medians over enough
 //! iterations to compare policies and catch 2× regressions.
 
 use std::time::{Duration, Instant};
+
+use crate::util::json::{Json, ObjBuilder};
 
 /// One measured benchmark.
 #[derive(Debug, Clone)]
@@ -16,6 +20,10 @@ pub struct BenchResult {
     pub p50: Duration,
     pub p95: Duration,
     pub min: Duration,
+    /// Work items processed per iteration (e.g. rows·vectors for a
+    /// mat-mat tile) — throughput in the JSON dump is `units / mean`.
+    /// 0 = not a throughput benchmark.
+    pub units_per_iter: f64,
 }
 
 impl BenchResult {
@@ -29,6 +37,30 @@ impl BenchResult {
             dur(self.p95),
             dur(self.min),
         ]
+    }
+
+    /// Work items per second at the mean latency (0 when this is not a
+    /// throughput benchmark or nothing was measured).
+    pub fn units_per_sec(&self) -> f64 {
+        let s = self.mean.as_secs_f64();
+        if self.units_per_iter > 0.0 && s > 0.0 {
+            self.units_per_iter / s
+        } else {
+            0.0
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        ObjBuilder::new()
+            .str("name", self.name.clone())
+            .num("iters", self.iters as f64)
+            .num("ns_per_iter", self.mean.as_nanos() as f64)
+            .num("p50_ns", self.p50.as_nanos() as f64)
+            .num("p95_ns", self.p95.as_nanos() as f64)
+            .num("min_ns", self.min.as_nanos() as f64)
+            .num("units_per_iter", self.units_per_iter)
+            .num("units_per_s", self.units_per_sec())
+            .build()
     }
 }
 
@@ -68,7 +100,19 @@ impl Bench {
     }
 
     /// Measure a closure; the closure's return value is black-boxed.
-    pub fn run<T, F: FnMut() -> T>(&mut self, name: &str, mut f: F) -> &BenchResult {
+    pub fn run<T, F: FnMut() -> T>(&mut self, name: &str, f: F) -> &BenchResult {
+        self.run_units(name, 0.0, f)
+    }
+
+    /// Measure a throughput benchmark: `units_per_iter` work items (rows,
+    /// rows·vectors, …) are processed per closure call, and the JSON dump
+    /// reports `units_per_s` alongside the latency percentiles.
+    pub fn run_units<T, F: FnMut() -> T>(
+        &mut self,
+        name: &str,
+        units_per_iter: f64,
+        mut f: F,
+    ) -> &BenchResult {
         for _ in 0..self.warmup {
             std::hint::black_box(f());
         }
@@ -95,6 +139,7 @@ impl Bench {
             p50: samples[iters / 2],
             p95: samples[(iters * 95 / 100).min(iters - 1)],
             min: samples[0],
+            units_per_iter,
         };
         self.results.push(result);
         self.results.last().unwrap()
@@ -110,6 +155,23 @@ impl Bench {
 
     pub fn results(&self) -> &[BenchResult] {
         &self.results
+    }
+
+    /// Machine-readable dump of all results (`name`, `ns_per_iter`,
+    /// percentiles, `units_per_s`) — the `BENCH_*.json` format the perf
+    /// trajectory tracks.
+    pub fn to_json(&self) -> Json {
+        Json::Arr(self.results.iter().map(|r| r.to_json()).collect())
+    }
+
+    /// Write [`Bench::to_json`] (merged with `extra` benches, in order) to
+    /// `path`.
+    pub fn write_json(benches: &[&Bench], path: &str) -> std::io::Result<()> {
+        let all: Vec<Json> = benches
+            .iter()
+            .flat_map(|b| b.results.iter().map(|r| r.to_json()))
+            .collect();
+        std::fs::write(path, format!("{}\n", Json::Arr(all)))
     }
 }
 
@@ -132,5 +194,36 @@ mod tests {
         let mut b = Bench::with_budget(Duration::from_millis(1), 5);
         let r = b.run("sleepy", || std::thread::sleep(Duration::from_millis(5)));
         assert!(r.iters >= 1);
+    }
+
+    #[test]
+    fn json_dump_is_parseable_and_carries_throughput() {
+        let mut b = Bench::with_budget(Duration::from_millis(10), 50);
+        let r = b.run_units("tile", 1024.0, || std::hint::black_box(7 * 6));
+        assert!(r.units_per_sec() > 0.0);
+        b.run("latency-only", || 1 + 1);
+        let text = b.to_json().to_string();
+        let back = crate::util::json::Json::parse(&text).unwrap();
+        let items = back.items().expect("array");
+        assert_eq!(items.len(), 2);
+        assert_eq!(items[0].get_str("name"), Some("tile"));
+        assert!(items[0].get_num("ns_per_iter").unwrap() > 0.0);
+        assert!(items[0].get_num("units_per_s").unwrap() > 0.0);
+        assert_eq!(items[1].get_num("units_per_s"), Some(0.0));
+    }
+
+    #[test]
+    fn write_json_merges_benches() {
+        let mut a = Bench::with_budget(Duration::from_millis(5), 10);
+        a.run("first", || 0);
+        let mut b = Bench::with_budget(Duration::from_millis(5), 10);
+        b.run("second", || 0);
+        let path = std::env::temp_dir().join("usec_benchkit_write_json_test.json");
+        let p = path.to_str().unwrap();
+        Bench::write_json(&[&a, &b], p).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let back = crate::util::json::Json::parse(text.trim()).unwrap();
+        assert_eq!(back.items().unwrap().len(), 2);
+        let _ = std::fs::remove_file(&path);
     }
 }

@@ -12,6 +12,7 @@ use usec::placement::{Placement, PlacementKind};
 use usec::runtime::BackendSpec;
 use usec::sched::cluster::Cluster;
 use usec::sched::master::{Master, MasterConfig};
+use usec::linalg::Block;
 use usec::sched::worker::{WorkerConfig, WorkerStorage};
 
 fn worker_cfg(
@@ -25,11 +26,17 @@ fn worker_cfg(
         backend,
         speed: 1.0,
         tile_rows: 16,
+        threads: 1,
         storage: WorkerStorage::full(Arc::clone(matrix), Arc::clone(ranges)),
     }
 }
 
-fn master_cfg(placement: Placement, sub_ranges: Vec<usec::linalg::partition::RowRange>, s: usize, timeout_ms: u64) -> MasterConfig {
+fn master_cfg(
+    placement: Placement,
+    sub_ranges: Vec<usec::linalg::partition::RowRange>,
+    s: usize,
+    timeout_ms: u64,
+) -> MasterConfig {
     MasterConfig {
         placement,
         sub_ranges,
@@ -66,11 +73,11 @@ fn dead_backend_survived_with_redundancy() {
         .collect();
     let cluster = Cluster::spawn(configs).unwrap();
     let mut master = Master::new(master_cfg(placement, sub_ranges, 1, 10_000)).unwrap();
-    let w = Arc::new(vec![1.0f32; q]);
+    let w = Arc::new(Block::single(vec![1.0f32; q]));
     let avail: Vec<usize> = (0..6).collect();
     let out = master.step(&cluster, 0, &w, &avail, &[]).unwrap();
     assert!(!out.reporters.contains(&2), "dead worker cannot report");
-    let want = matrix.matvec(&w).unwrap();
+    let want = matrix.matvec(w.data()).unwrap();
     for (a, e) in out.y.iter().zip(&want) {
         assert!((a - e).abs() < 1e-3);
     }
@@ -100,7 +107,7 @@ fn dead_backend_times_out_without_redundancy() {
         .collect();
     let cluster = Cluster::spawn(configs).unwrap();
     let mut master = Master::new(master_cfg(placement, sub_ranges, 0, 500)).unwrap();
-    let w = Arc::new(vec![1.0f32; q]);
+    let w = Arc::new(Block::single(vec![1.0f32; q]));
     let avail: Vec<usize> = (0..6).collect();
     let err = master.step(&cluster, 0, &w, &avail, &[]).unwrap_err();
     let msg = err.to_string();
@@ -130,7 +137,7 @@ fn all_workers_dead_is_clean_error() {
         .collect();
     let cluster = Cluster::spawn(configs).unwrap();
     let mut master = Master::new(master_cfg(placement, sub_ranges, 0, 400)).unwrap();
-    let w = Arc::new(vec![1.0f32; q]);
+    let w = Arc::new(Block::single(vec![1.0f32; q]));
     let avail: Vec<usize> = (0..6).collect();
     assert!(master.step(&cluster, 0, &w, &avail, &[]).is_err());
     cluster.shutdown();
@@ -150,7 +157,7 @@ fn infeasible_availability_rejected_up_front() {
         .collect();
     let cluster = Cluster::spawn(configs).unwrap();
     let mut master = Master::new(master_cfg(placement, sub_ranges, 0, 5_000)).unwrap();
-    let w = Arc::new(vec![1.0f32; q]);
+    let w = Arc::new(Block::single(vec![1.0f32; q]));
     // machines 0-2 are the only replicas of X_1..X_3; preempt all of them
     let avail = vec![3, 4, 5];
     let err = master.step(&cluster, 0, &w, &avail, &[]).unwrap_err();

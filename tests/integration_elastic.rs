@@ -13,6 +13,7 @@ use usec::runtime::BackendSpec;
 use usec::sched::cluster::Cluster;
 use usec::sched::master::{Master, MasterConfig};
 use usec::sched::straggler::StraggleMode;
+use usec::linalg::Block;
 use usec::sched::worker::{WorkerConfig, WorkerStorage};
 
 fn spawn(
@@ -34,6 +35,7 @@ fn spawn(
             backend: BackendSpec::Host,
             speed: speeds[id],
             tile_rows: 32,
+            threads: 1,
             storage: WorkerStorage::full(Arc::clone(&matrix), Arc::clone(&ranges)),
         })
         .collect();
@@ -55,19 +57,20 @@ fn spawn(
 #[test]
 fn many_steps_remain_exact() {
     let speeds = vec![1.0, 3.0, 2.0, 5.0, 1.5, 4.0];
-    let (mut master, cluster, matrix) = spawn(192, 6, 6, 3, &speeds, AssignPolicy::Heterogeneous, 0);
+    let (mut master, cluster, matrix) =
+        spawn(192, 6, 6, 3, &speeds, AssignPolicy::Heterogeneous, 0);
     let avail: Vec<usize> = (0..6).collect();
-    let mut w = Arc::new(vec![0.5f32; 192]);
+    let mut w = Arc::new(Block::single(vec![0.5f32; 192]));
     for step in 0..20 {
         let out = master.step(&cluster, step, &w, &avail, &[]).unwrap();
-        let want = matrix.matvec(&w).unwrap();
+        let want = matrix.matvec(w.data()).unwrap();
         for (a, e) in out.y.iter().zip(&want) {
             assert!((a - e).abs() < 2e-3 * (1.0 + e.abs()), "step {step}");
         }
         // feed a fresh normalized iterate
         let mut next = out.y.clone();
         usec::linalg::ops::normalize(&mut next);
-        w = Arc::new(next);
+        w = Arc::new(Block::single(next));
     }
     cluster.shutdown();
 }
@@ -76,9 +79,10 @@ fn many_steps_remain_exact() {
 fn churn_between_steps_is_safe() {
     // availability changes every step; results stay exact
     let speeds = vec![1.0; 6];
-    let (mut master, cluster, matrix) = spawn(120, 6, 6, 3, &speeds, AssignPolicy::Heterogeneous, 0);
-    let w = Arc::new(vec![1.0f32; 120]);
-    let want = matrix.matvec(&w).unwrap();
+    let (mut master, cluster, matrix) =
+        spawn(120, 6, 6, 3, &speeds, AssignPolicy::Heterogeneous, 0);
+    let w = Arc::new(Block::single(vec![1.0f32; 120]));
+    let want = matrix.matvec(w.data()).unwrap();
     let avail_sets: Vec<Vec<usize>> = vec![
         (0..6).collect(),
         vec![0, 1, 2, 3],
@@ -98,10 +102,11 @@ fn churn_between_steps_is_safe() {
 #[test]
 fn two_stragglers_with_s2_tolerance() {
     let speeds = vec![2.0, 1.0, 3.0, 1.0, 2.0, 1.0];
-    let (mut master, cluster, matrix) = spawn(120, 6, 6, 3, &speeds, AssignPolicy::Heterogeneous, 2);
+    let (mut master, cluster, matrix) =
+        spawn(120, 6, 6, 3, &speeds, AssignPolicy::Heterogeneous, 2);
     let avail: Vec<usize> = (0..6).collect();
-    let w = Arc::new(vec![0.25f32; 120]);
-    let want = matrix.matvec(&w).unwrap();
+    let w = Arc::new(Block::single(vec![0.25f32; 120]));
+    let want = matrix.matvec(w.data()).unwrap();
     let out = master
         .step(
             &cluster,
@@ -123,8 +128,8 @@ fn slow_stragglers_delay_but_do_not_break() {
     let speeds = vec![1.0; 6];
     let (mut master, cluster, matrix) = spawn(60, 6, 6, 3, &speeds, AssignPolicy::Heterogeneous, 1);
     let avail: Vec<usize> = (0..6).collect();
-    let w = Arc::new(vec![1.0f32; 60]);
-    let want = matrix.matvec(&w).unwrap();
+    let w = Arc::new(Block::single(vec![1.0f32; 60]));
+    let want = matrix.matvec(w.data()).unwrap();
     // Slow straggler: with S=1 the master can finish without it
     let out = master
         .step(&cluster, 0, &w, &avail, &[(2, StraggleMode::Slow(50.0))])
@@ -142,14 +147,14 @@ fn stale_reports_from_previous_step_ignored() {
     let speeds = vec![1.0; 6];
     let (mut master, cluster, matrix) = spawn(60, 6, 6, 3, &speeds, AssignPolicy::Heterogeneous, 1);
     let avail: Vec<usize> = (0..6).collect();
-    let w1 = Arc::new(vec![1.0f32; 60]);
-    let w2 = Arc::new(vec![-2.0f32; 60]);
+    let w1 = Arc::new(Block::single(vec![1.0f32; 60]));
+    let w2 = Arc::new(Block::single(vec![-2.0f32; 60]));
     master
         .step(&cluster, 0, &w1, &avail, &[(0, StraggleMode::Slow(30.0))])
         .unwrap();
     // step 1 runs while worker 0 may still be sleeping on step 0's order
     let out = master.step(&cluster, 1, &w2, &avail, &[]).unwrap();
-    let want = matrix.matvec(&w2).unwrap();
+    let want = matrix.matvec(w2.data()).unwrap();
     for (a, e) in out.y.iter().zip(&want) {
         assert!((a - e).abs() < 1e-3, "stale data leaked into step 1");
     }

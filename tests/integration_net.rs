@@ -16,7 +16,7 @@ use std::time::Duration;
 use usec::apps::power_iteration::{run_power_iteration, PLANT_EIGVAL, PLANT_GAP};
 use usec::config::types::{AssignPolicy, BackendKind, RunConfig};
 use usec::error::Result;
-use usec::linalg::ops;
+use usec::linalg::{ops, Block};
 use usec::linalg::partition::submatrix_ranges;
 use usec::net::daemon::{serve_worker, DaemonOpts};
 use usec::net::{
@@ -40,7 +40,7 @@ fn start_workers(n: usize) -> (Vec<String>, Vec<JoinHandle<Result<()>>>) {
         let listener = TcpListener::bind("127.0.0.1:0").unwrap();
         addrs.push(listener.local_addr().unwrap().to_string());
         handles.push(std::thread::spawn(move || {
-            serve_worker(listener, DaemonOpts { max_sessions: 1 })
+            serve_worker(listener, DaemonOpts { max_sessions: 1, ..Default::default() })
         }));
     }
     (addrs, handles)
@@ -95,6 +95,7 @@ fn tcp_cluster_survives_mid_run_socket_preemption() {
                 backend: BackendKind::Host,
                 g: 3,
                 heartbeat_ms: 100,
+                threads: 1,
                 workload: workload_spec(),
                 stored: vec![], // full replication: store everything
             },
@@ -132,7 +133,7 @@ fn tcp_cluster_survives_mid_run_socket_preemption() {
             // recover through the S=1 redundancy.
             transport.kill(2);
         }
-        let w = Arc::new(b.clone());
+        let w = Arc::new(Block::single(b.clone()));
         let out = master
             .step(&transport, step, &w, &avail, &[])
             .unwrap_or_else(|e| panic!("step {step} failed: {e}"));

@@ -11,7 +11,7 @@ use std::time::Duration;
 
 use usec::config::types::{AssignPolicy, BackendKind, RunConfig};
 use usec::linalg::partition::submatrix_ranges;
-use usec::linalg::gen;
+use usec::linalg::{gen, Block};
 use usec::optim::SolveParams;
 use usec::placement::{Placement, PlacementKind};
 use usec::runtime::{BackendSpec, Manifest};
@@ -44,6 +44,7 @@ fn pjrt_worker_cluster_matches_host_oracle() {
             backend: BackendSpec::Pjrt { dir: dir.clone() },
             speed: 1.0 + id as f64 * 0.5,
             tile_rows: manifest.tile_rows,
+            threads: 1,
             storage: WorkerStorage::full(Arc::clone(&matrix), Arc::clone(&ranges)),
         })
         .collect();
@@ -60,12 +61,12 @@ fn pjrt_worker_cluster_matches_host_oracle() {
     })
     .unwrap();
 
-    let w = Arc::new(vec![0.01f32; q]);
+    let w = Arc::new(Block::single(vec![0.01f32; q]));
     let avail: Vec<usize> = (0..n).collect();
     let out = master.step(&cluster, 0, &w, &avail, &[]).unwrap();
 
     // oracle: host matvec
-    let want = matrix.matvec(&w).unwrap();
+    let want = matrix.matvec(w.data()).unwrap();
     let mut max_err = 0.0f32;
     for (a, e) in out.y.iter().zip(&want) {
         max_err = max_err.max((a - e).abs());
