@@ -149,6 +149,7 @@ fn main() {
         initial_speeds: (0..6).map(|i| 1.0 + i as f64).collect(),
         row_cost_ns: 0,
         recovery_timeout: Duration::from_secs(30),
+        recovery: usec::sched::RecoveryPolicy::default(),
     })
     .unwrap();
     let mut e2e = Bench::with_budget(e2e_budget, e2e_iters);

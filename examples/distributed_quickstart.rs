@@ -35,6 +35,19 @@
 //!     --batch 4 --threads 2 --json-out run.json
 //! ```
 //!
+//! Add `--recovery` and a worker that dies *mid-step* (socket kill,
+//! preemption, silent drop past `--overdue-factor` of the recovery
+//! timeout) no longer stalls the step: the master re-plans its uncovered
+//! rows onto the surviving replicas — uncoded storage means any replica
+//! can compute them, no decoding — ships supplementary orders for the
+//! same step, and records the event under `timeline[i].recoveries` in
+//! the `--json-out` dump:
+//!
+//! ```text
+//! usec master --workers ... --q 1536 --g 3 --j 2 --placement cyclic \
+//!     --stragglers 0 --recovery --overdue-factor 0.5 --json-out run.json
+//! ```
+//!
 //! Either way `--json-out` reports the actual per-worker resident bytes
 //! under `timeline.storage`. Here we spawn the same daemons on threads
 //! and drive the same master code path (`RunConfig.workers` →
@@ -47,6 +60,7 @@ use usec::apps::run_power_iteration;
 use usec::config::types::RunConfig;
 use usec::net::daemon::{serve_worker, DaemonOpts};
 use usec::placement::PlacementKind;
+use usec::sched::RecoveryPolicy;
 
 fn main() {
     usec::util::log::init();
@@ -113,10 +127,14 @@ fn main() {
 
     // --- block data plane: --batch 4 --threads 2 over the same daemons ---
     // four iterate vectors per step (tags 10/11 on the wire); the workers
-    // traverse their stored rows once per step for all four vectors
+    // traverse their stored rows once per step for all four vectors.
+    // --recovery arms mid-step re-dispatch: had a worker died inside a
+    // step, its uncovered rows would have been re-planned onto the
+    // surviving replicas instead of stalling the step.
     let batched_cfg = RunConfig {
         batch: 4,
         worker_threads: 2,
+        recovery: RecoveryPolicy::enabled(),
         workers: addrs,
         ..cfg
     };
@@ -124,6 +142,10 @@ fn main() {
     println!(
         "batched run (B=4):          final NMSE {:.3e}, spectrum estimate {:?}",
         batched.final_nmse, batched.eigvals
+    );
+    println!(
+        "mid-step recoveries needed: {} (healthy run)",
+        batched.timeline.total_recoveries()
     );
 
     // the master's harness sent Shutdown on drop; reap the daemons

@@ -166,6 +166,7 @@ impl Harness {
             initial_speeds: vec![], // master learns speeds (Algorithm 1)
             row_cost_ns: cfg.row_cost_ns,
             recovery_timeout: Duration::from_secs(60),
+            recovery: cfg.recovery,
         })?;
 
         let combine = BackendSpec::from_kind(
@@ -292,6 +293,7 @@ impl Harness {
                     solve: Duration::ZERO,
                     predicted_c: f64::NAN,
                     metric: last_metric,
+                    recoveries: Vec::new(),
                 });
                 continue;
             }
@@ -311,6 +313,7 @@ impl Harness {
                 solve: out.solve,
                 predicted_c: out.predicted_c,
                 metric,
+                recoveries: out.recoveries,
             });
             w = Arc::new(next);
         }

@@ -9,6 +9,7 @@ use crate::cli::{ArgSpec, Args};
 use crate::error::{Error, Result};
 use crate::optim::{SolveParams, SolverKind};
 use crate::placement::PlacementKind;
+use crate::sched::recovery::RecoveryPolicy;
 
 /// Which compute backend workers use.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -129,6 +130,11 @@ pub struct RunConfig {
     /// workloads without a deterministic generator (external data), and
     /// available for any workload. Ignored in local mode.
     pub stream_data: bool,
+    /// Mid-step recovery (`--recovery` / `--overdue-factor`): re-dispatch
+    /// a victim's uncovered rows to surviving replicas instead of relying
+    /// on `S ≥ 1` redundancy or the coverage timeout. Disabled by default
+    /// (bit-identical to the classic behaviour).
+    pub recovery: RecoveryPolicy,
     /// Path for the machine-readable per-step timeline dump (JSON). Empty
     /// ⇒ no dump.
     pub json_out: String,
@@ -163,6 +169,7 @@ impl Default for RunConfig {
             seed: 7,
             workers: Vec::new(),
             stream_data: false,
+            recovery: RecoveryPolicy::default(),
             json_out: String::new(),
         }
     }
@@ -211,6 +218,17 @@ impl RunConfig {
                 "stream matrix rows to TCP workers instead of regenerating \
                  from the workload seed",
             ),
+            ArgSpec::flag(
+                "recovery",
+                "re-dispatch a mid-step victim's uncovered rows to \
+                 surviving replicas (finish the step instead of timing out)",
+            ),
+            ArgSpec::opt(
+                "overdue-factor",
+                "0.5",
+                "declare a silent worker overdue after this fraction of \
+                 the recovery timeout (with --recovery)",
+            ),
             ArgSpec::opt("json-out", "", "write the per-step timeline JSON here"),
         ]
     }
@@ -244,6 +262,10 @@ impl RunConfig {
             seed: a.get_u64("seed")?,
             workers: parse_worker_list(a.get("workers").unwrap_or("")),
             stream_data: a.has("stream-data"),
+            recovery: RecoveryPolicy {
+                enabled: a.has("recovery"),
+                overdue_factor: a.get_f64("overdue-factor")?,
+            },
             json_out: a.get("json-out").unwrap_or("").to_string(),
         };
         let mut cfg = cfg;
@@ -308,6 +330,7 @@ impl RunConfig {
         if self.worker_threads == 0 {
             return Err(Error::Config("threads must be at least 1".into()));
         }
+        self.recovery.validate()?;
         if !self.workers.is_empty() && self.workers.len() != self.n {
             return Err(Error::Config(format!(
                 "{} worker addresses given for N={} machines",
@@ -368,8 +391,10 @@ mod tests {
         assert_eq!(cfg.workers, vec!["h1:1", "h2:2", "h3:3"]);
 
         // programmatic mismatch rejected
-        let mut bad = RunConfig::default();
-        bad.workers = vec!["h:1".into()]; // N stays 6
+        let bad = RunConfig {
+            workers: vec!["h:1".into()], // N stays 6
+            ..Default::default()
+        };
         assert!(bad.validate().is_err());
     }
 
@@ -404,14 +429,20 @@ mod tests {
 
     #[test]
     fn validation_rejects_bad_geometry() {
-        let mut c = RunConfig::default();
-        c.j = 10; // > N
+        let c = RunConfig {
+            j: 10, // > N
+            ..Default::default()
+        };
         assert!(c.validate().is_err());
-        let mut c = RunConfig::default();
-        c.speeds = vec![1.0, 2.0]; // wrong length
+        let c = RunConfig {
+            speeds: vec![1.0, 2.0], // wrong length
+            ..Default::default()
+        };
         assert!(c.validate().is_err());
-        let mut c = RunConfig::default();
-        c.gamma = 1.5;
+        let c = RunConfig {
+            gamma: 1.5,
+            ..Default::default()
+        };
         assert!(c.validate().is_err());
     }
 
@@ -426,15 +457,47 @@ mod tests {
         assert_eq!(cfg.batch, 8);
         assert_eq!(cfg.worker_threads, 4);
 
-        let mut c = RunConfig::default();
-        c.batch = 0;
+        let c = RunConfig {
+            batch: 0,
+            ..Default::default()
+        };
         assert!(c.validate().is_err());
-        let mut c = RunConfig::default();
-        c.batch = crate::net::codec::MAX_NVEC + 1; // past the wire cap
+        let c = RunConfig {
+            batch: crate::net::codec::MAX_NVEC + 1, // past the wire cap
+            ..Default::default()
+        };
         assert!(c.validate().is_err());
-        let mut c = RunConfig::default();
-        c.worker_threads = 0;
+        let c = RunConfig {
+            worker_threads: 0,
+            ..Default::default()
+        };
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn recovery_flags_parse_and_validate() {
+        let argv: Vec<String> = ["--recovery", "--overdue-factor", "0.25"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        let a = Args::parse(&argv, &RunConfig::arg_specs()).unwrap();
+        let cfg = RunConfig::from_args(&a).unwrap();
+        assert!(cfg.recovery.enabled);
+        assert!((cfg.recovery.overdue_factor - 0.25).abs() < 1e-12);
+
+        // default: off, bit-identical to the classic behaviour
+        let none = Args::parse(&[], &RunConfig::arg_specs()).unwrap();
+        assert!(!RunConfig::from_args(&none).unwrap().recovery.enabled);
+
+        // an enabled policy rejects a degenerate overdue factor
+        let bad = RunConfig {
+            recovery: RecoveryPolicy {
+                enabled: true,
+                overdue_factor: 0.0,
+            },
+            ..Default::default()
+        };
+        assert!(bad.validate().is_err());
     }
 
     #[test]

@@ -79,6 +79,19 @@ fn run_and_report(cfg: &RunConfig) -> Result<()> {
             shares.join(", ")
         );
     }
+    let recovered = res.timeline.total_recoveries();
+    if recovered > 0 {
+        let rows: usize = res
+            .timeline
+            .steps()
+            .iter()
+            .flat_map(|s| s.recoveries.iter().map(|r| r.rows))
+            .sum();
+        println!(
+            "mid-step recoveries: {recovered} victim(s), {rows} uncovered rows \
+             re-dispatched to surviving replicas"
+        );
+    }
     if !cfg.json_out.is_empty() {
         let doc = crate::util::json::ObjBuilder::new()
             .str("app", "power-iteration")
@@ -92,6 +105,10 @@ fn run_and_report(cfg: &RunConfig) -> Result<()> {
             .num("n", cfg.n as f64)
             .num("batch", cfg.batch as f64)
             .num("threads", cfg.worker_threads as f64)
+            .val(
+                "recovery",
+                crate::util::json::Json::Bool(cfg.recovery.enabled),
+            )
             .num("seed", cfg.seed as f64)
             .num("final_nmse", res.final_nmse)
             .num("eigval", res.eigval)

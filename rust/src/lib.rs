@@ -32,7 +32,13 @@
 //!   mat-mat kernel ([`linalg::ops::matmat_into`]) over a zero-allocation
 //!   per-worker scratch arena, and `--threads T` fans each worker's tiles
 //!   across a scoped thread pool (bit-identical to serial). `B = 1` is
-//!   byte- and bit-identical to the classic single-vector plane.
+//!   byte- and bit-identical to the classic single-vector plane. With
+//!   `--recovery` ([`sched::RecoveryPolicy`]) the master also survives
+//!   *mid-step* worker loss at `S = 0`: a victim's still-uncovered rows
+//!   are re-planned onto surviving uncoded replicas
+//!   ([`optim::recovery`]) and shipped as supplementary orders for the
+//!   same step, with per-step events in [`metrics::Timeline`] /
+//!   `--json-out`.
 //! * [`storage`] — placement-shaped storage: the [`storage::StorageView`]
 //!   trait kernels read through, implemented by both the full
 //!   [`linalg::Matrix`] (local simulator mode, zero-copy shared `Arc`)

@@ -2,6 +2,7 @@
 
 use std::time::Duration;
 
+use crate::sched::recovery::RecoveryEvent;
 use crate::util::json::{Json, ObjBuilder};
 
 /// What happened in one elastic computation step.
@@ -22,6 +23,9 @@ pub struct StepRecord {
     pub predicted_c: f64,
     /// Application metric (power iteration: NMSE vs true eigenvector).
     pub metric: f64,
+    /// Mid-step recoveries: victims whose uncovered rows were
+    /// re-dispatched to surviving replicas (empty unless `--recovery`).
+    pub recoveries: Vec<RecoveryEvent>,
 }
 
 /// An append-only run log.
@@ -102,6 +106,23 @@ impl Timeline {
             .iter()
             .map(|s| {
                 t += s.wall.as_secs_f64();
+                let recoveries: Vec<Json> = s
+                    .recoveries
+                    .iter()
+                    .map(|r| {
+                        ObjBuilder::new()
+                            .num("victim", r.victim as f64)
+                            .str("reason", r.reason.name())
+                            .num("rows", r.rows as f64)
+                            .val(
+                                "rescuers",
+                                Json::Arr(
+                                    r.rescuers.iter().map(|&n| Json::Num(n as f64)).collect(),
+                                ),
+                            )
+                            .build()
+                    })
+                    .collect();
                 ObjBuilder::new()
                     .num("step", s.step as f64)
                     .num("available", s.available as f64)
@@ -112,6 +133,7 @@ impl Timeline {
                     .num("solve_s", s.solve.as_secs_f64())
                     .val("predicted_c", num_or_null(s.predicted_c))
                     .val("metric", num_or_null(s.metric))
+                    .val("recoveries", Json::Arr(recoveries))
                     .build()
             })
             .collect();
@@ -130,9 +152,15 @@ impl Timeline {
         ObjBuilder::new()
             .num("steps", self.steps.len() as f64)
             .num("total_wall_s", self.total_wall().as_secs_f64())
+            .num("recoveries_total", self.total_recoveries() as f64)
             .val("storage", storage)
             .val("timeline", Json::Arr(steps))
             .build()
+    }
+
+    /// Mid-step recoveries across the whole run.
+    pub fn total_recoveries(&self) -> usize {
+        self.steps.iter().map(|s| s.recoveries.len()).sum()
     }
 
     /// CSV dump (step, elapsed, metric, available, reported, solve_ms).
@@ -169,6 +197,7 @@ mod tests {
             solve: Duration::from_micros(100),
             predicted_c: 0.15,
             metric,
+            recoveries: Vec::new(),
         }
     }
 
@@ -214,6 +243,34 @@ mod tests {
         let per = storage.get("per_worker_bytes").unwrap().items().unwrap();
         assert_eq!(per.len(), 3);
         assert_eq!(per[2].as_num(), Some(57_600.0));
+    }
+
+    #[test]
+    fn recovery_events_surface_in_json() {
+        use crate::sched::recovery::{RecoveryEvent, RecoveryReason};
+        let mut t = Timeline::new();
+        let mut r = rec(0, 10, 0.5);
+        r.recoveries.push(RecoveryEvent {
+            step: 0,
+            victim: 2,
+            reason: RecoveryReason::Disconnected,
+            rows: 17,
+            rescuers: vec![0, 4],
+        });
+        t.push(r);
+        t.push(rec(1, 10, 0.1));
+        assert_eq!(t.total_recoveries(), 1);
+        let back = crate::util::json::Json::parse(&t.to_json().to_string()).unwrap();
+        assert_eq!(back.get_usize("recoveries_total"), Some(1));
+        let steps = back.get("timeline").unwrap().items().unwrap();
+        let evs = steps[0].get("recoveries").unwrap().items().unwrap();
+        assert_eq!(evs.len(), 1);
+        assert_eq!(evs[0].get_usize("victim"), Some(2));
+        assert_eq!(evs[0].get_str("reason"), Some("disconnected"));
+        assert_eq!(evs[0].get_usize("rows"), Some(17));
+        let rescuers = evs[0].get("rescuers").unwrap().items().unwrap();
+        assert_eq!(rescuers.len(), 2);
+        assert!(steps[1].get("recoveries").unwrap().items().unwrap().is_empty());
     }
 
     #[test]

@@ -8,6 +8,11 @@
 //! with framed [`WireMsg::Report`]s and pushing heartbeats from a side
 //! thread so liveness is visible even mid-compute.
 //!
+//! Orders are executed serially and **step-agnostically**: the daemon
+//! never assumes one `Work` per step, so the supplementary orders the
+//! master ships during mid-step recovery ([`crate::sched::recovery`])
+//! simply queue on the socket and each produces its own `Report`.
+//!
 //! Storage is the uncoded USEC model made real: the `Hello` names the
 //! sub-matrices this worker stores (`Z_n`), and the daemon keeps **only
 //! those rows** resident — regenerated from the deterministic workload
@@ -482,6 +487,54 @@ mod tests {
         codec::write_msg(&mut &live, &WireMsg::Shutdown).unwrap();
         h.join().unwrap().unwrap();
         drop(dead);
+    }
+
+    #[test]
+    fn daemon_executes_supplementary_order_for_in_flight_step() {
+        use crate::linalg::Block;
+        use crate::optim::Task;
+        use crate::sched::protocol::WorkOrder;
+
+        let (addr, h) = spawn_daemon();
+        let stream = TcpStream::connect(addr).unwrap();
+        stream
+            .set_read_timeout(Some(Duration::from_secs(5)))
+            .unwrap();
+        codec::write_msg(&mut &stream, &WireMsg::Hello(test_hello(3))).unwrap();
+        match codec::read_msg(&mut &stream).unwrap() {
+            WireMsg::HelloAck(_) => {}
+            other => panic!("expected HelloAck, got {other:?}"),
+        }
+        read_storage_ready(&stream);
+        // original order and a recovery re-dispatch for the same step
+        for g in [0usize, 1] {
+            codec::write_msg(
+                &mut &stream,
+                &WireMsg::Work(WorkOrder {
+                    step: 5,
+                    w: Arc::new(Block::single(vec![0.5f32; 16])),
+                    tasks: vec![Task {
+                        g,
+                        rows: RowRange::new(0, 4),
+                    }],
+                    row_cost_ns: 0,
+                    straggle: None,
+                }),
+            )
+            .unwrap();
+        }
+        for _ in 0..2 {
+            match codec::read_msg(&mut &stream).unwrap() {
+                WireMsg::Report(r) => {
+                    assert_eq!(r.step, 5);
+                    assert_eq!(r.segments.len(), 1);
+                    assert_eq!(r.segments[0].rows.len(), 4);
+                }
+                other => panic!("expected Report, got {other:?}"),
+            }
+        }
+        codec::write_msg(&mut &stream, &WireMsg::Shutdown).unwrap();
+        h.join().unwrap().unwrap();
     }
 
     #[test]

@@ -64,6 +64,18 @@
 //! rejoins the availability set at the next step with freshly
 //! materialized storage. See `examples/distributed_quickstart.rs` for the
 //! whole flow in one process.
+//!
+//! ## Mid-step recovery
+//!
+//! A connection that dies *inside* a step does not have to kill the step:
+//! with `--recovery` ([`crate::sched::recovery`]) the master re-plans the
+//! victim's still-uncovered rows onto surviving replicas and ships
+//! supplementary `Work` frames for the same step. The daemon needs no
+//! protocol change — orders are executed serially and step-agnostically,
+//! so a second order for an in-flight step just queues on the socket and
+//! produces its own `Report`; the master dedups by row (coverage bitmap)
+//! and by worker id (EWMA). This holds identically over
+//! [`LocalTransport`] and [`TcpTransport`] at any batch width `B`.
 
 pub mod codec;
 pub mod daemon;

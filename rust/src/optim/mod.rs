@@ -12,6 +12,10 @@
 //! 3. [`assignment`] — quantize the fractional row sets to whole rows /
 //!    tiles and materialize per-machine task lists.
 //!
+//! [`recovery`] reuses the filling machinery mid-step: when a dispatched
+//! worker dies, its still-uncovered rows are re-planned as restricted
+//! `S = 0` filling instances over the surviving replicas.
+//!
 //! [`homogeneous`] implements the paper's homogeneous-speed cyclic design
 //! and the uniform-split baseline used by Fig. 4.
 
@@ -20,6 +24,7 @@ pub mod filling;
 pub mod homogeneous;
 pub mod maxflow;
 pub mod parametric;
+pub mod recovery;
 pub mod simplex;
 pub mod transition;
 pub mod types;

@@ -1,0 +1,242 @@
+//! Restricted filling assignment for mid-step recovery.
+//!
+//! When a worker dies (or goes overdue) mid-step, the master already knows
+//! which global rows it still owed ([`crate::sched::recovery`]); what is
+//! left is an assignment problem *restricted* to those rows and to the
+//! surviving workers whose uncoded placement stores replicas of the
+//! affected sub-matrices. Because the storage is uncoded, recovery needs
+//! no decoding — any replica can compute any of its sub-matrix's rows —
+//! so each uncovered span reduces to a tiny `S = 0` instance of the
+//! paper's filling algorithm (Algorithm 2, [`super::filling`]): split the
+//! span across the candidate replicas proportionally to their estimated
+//! speeds and quantize to whole rows.
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+use crate::linalg::partition::{quantize_fractions, RowRange};
+use crate::placement::Placement;
+
+use super::assignment::Task;
+use super::filling::fill;
+
+/// Plan supplementary per-worker task lists covering `uncovered`.
+///
+/// * `uncovered` — `(g, global rows)` spans still missing; each span must
+///   lie inside `sub_ranges[g]`.
+/// * `survivors` — workers eligible for supplementary orders (available,
+///   not victims, channel believed healthy).
+/// * `speeds` — full-length (`N`) estimated speed vector; the split over
+///   each span's candidate replicas is proportional to it.
+///
+/// Returns `(worker, tasks)` pairs sorted by worker id, tasks in
+/// sub-matrix-local coordinates (ready to ship in a
+/// [`crate::sched::protocol::WorkOrder`]). Fails with
+/// [`Error::Infeasible`] when some span's sub-matrix has **no** surviving
+/// replica — the step cannot complete and the caller should fail fast
+/// instead of waiting out the coverage timeout.
+pub fn plan_recovery(
+    placement: &Placement,
+    sub_ranges: &[RowRange],
+    uncovered: &[(usize, RowRange)],
+    survivors: &[usize],
+    speeds: &[f64],
+) -> Result<Vec<(usize, Vec<Task>)>> {
+    let mut per_worker: BTreeMap<usize, Vec<Task>> = BTreeMap::new();
+    for &(g, span) in uncovered {
+        if span.is_empty() {
+            continue;
+        }
+        let sub = *sub_ranges.get(g).ok_or_else(|| {
+            Error::Shape(format!(
+                "uncovered span references sub-matrix {g} of {}",
+                sub_ranges.len()
+            ))
+        })?;
+        if span.lo < sub.lo || span.hi > sub.hi {
+            return Err(Error::Shape(format!(
+                "uncovered span {}..{} outside sub-matrix {g} ({}..{})",
+                span.lo, span.hi, sub.lo, sub.hi
+            )));
+        }
+        let candidates: Vec<usize> = placement
+            .machines_storing(g)
+            .iter()
+            .copied()
+            .filter(|m| survivors.contains(m))
+            .collect();
+        if candidates.is_empty() {
+            return Err(Error::infeasible(format!(
+                "recovery infeasible: no surviving replica of sub-matrix {g} \
+                 (stored on {:?}) for rows {}..{}",
+                placement.machines_storing(g),
+                span.lo,
+                span.hi
+            )));
+        }
+        // proportional-to-speed loads summing to 1: a (1+S)=1 filling
+        // instance, whose precondition max μ ≤ Σμ/1 holds trivially
+        let total: f64 = candidates
+            .iter()
+            .map(|&m| speeds.get(m).copied().unwrap_or(0.0).max(0.0))
+            .sum();
+        let loads: Vec<(usize, f64)> = if total > 0.0 {
+            candidates
+                .iter()
+                .map(|&m| (m, speeds[m].max(0.0) / total))
+                .collect()
+        } else {
+            // degenerate estimates: fall back to an even split
+            let even = 1.0 / candidates.len() as f64;
+            candidates.iter().map(|&m| (m, even)).collect()
+        };
+        let filling = fill(&loads, 1)?;
+        let row_sets = quantize_fractions(&filling.alphas, span.len())?;
+        for (pset, rows) in filling.psets.iter().zip(&row_sets) {
+            if rows.is_empty() {
+                continue;
+            }
+            let global = rows.offset(span.lo);
+            per_worker.entry(pset[0]).or_default().push(Task {
+                g,
+                rows: RowRange::new(global.lo - sub.lo, global.hi - sub.lo),
+            });
+        }
+    }
+    Ok(per_worker.into_iter().collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::partition::submatrix_ranges;
+    use crate::placement::PlacementKind;
+
+    fn setup() -> (Placement, Vec<RowRange>) {
+        // cyclic J=3: sub-matrix g lives on machines {g, g+1, g+2} mod 6
+        let p = Placement::build(PlacementKind::Cyclic, 6, 6, 3).unwrap();
+        let subs = submatrix_ranges(60, 6).unwrap();
+        (p, subs)
+    }
+
+    #[test]
+    fn covers_span_with_replicas_proportionally() {
+        let (p, subs) = setup();
+        let speeds = vec![1.0; 6];
+        // sub-matrix 0 (global rows 0..10) uncovered; machine 0 is dead
+        let plan = plan_recovery(
+            &p,
+            &subs,
+            &[(0, RowRange::new(0, 10))],
+            &[1, 2, 3, 4, 5],
+            &speeds,
+        )
+        .unwrap();
+        // only replicas of X_0 among the survivors: machines 1 and 2
+        let workers: Vec<usize> = plan.iter().map(|&(w, _)| w).collect();
+        assert_eq!(workers, vec![1, 2]);
+        let total: usize = plan
+            .iter()
+            .flat_map(|(_, ts)| ts.iter().map(|t| t.rows.len()))
+            .sum();
+        assert_eq!(total, 10, "re-dispatched rows must tile the span");
+        // equal speeds ⇒ even split within a row
+        for (_, ts) in &plan {
+            let rows: usize = ts.iter().map(|t| t.rows.len()).sum();
+            assert!((4..=6).contains(&rows), "skewed split: {rows}");
+        }
+    }
+
+    #[test]
+    fn split_follows_speed_estimates() {
+        let (p, subs) = setup();
+        let mut speeds = vec![1.0; 6];
+        speeds[2] = 4.0;
+        let plan = plan_recovery(
+            &p,
+            &subs,
+            &[(0, RowRange::new(0, 10))],
+            &[1, 2, 3, 4, 5],
+            &speeds,
+        )
+        .unwrap();
+        let rows_of = |w: usize| -> usize {
+            plan.iter()
+                .filter(|&&(n, _)| n == w)
+                .flat_map(|(_, ts)| ts.iter().map(|t| t.rows.len()))
+                .sum()
+        };
+        assert_eq!(rows_of(1) + rows_of(2), 10);
+        assert!(rows_of(2) > rows_of(1), "fast replica should take more rows");
+    }
+
+    #[test]
+    fn partial_span_maps_to_local_coordinates() {
+        let (p, subs) = setup();
+        // sub-matrix 3 covers global rows 30..40; recover 34..37 only
+        let plan = plan_recovery(
+            &p,
+            &subs,
+            &[(3, RowRange::new(34, 37))],
+            &[4],
+            &[1.0; 6],
+        )
+        .unwrap();
+        assert_eq!(plan.len(), 1);
+        let (worker, tasks) = &plan[0];
+        assert_eq!(*worker, 4);
+        assert_eq!(tasks.len(), 1);
+        assert_eq!(tasks[0].g, 3);
+        // local rows 4..7 of sub-matrix 3 == global 34..37
+        assert_eq!(tasks[0].rows, RowRange::new(4, 7));
+    }
+
+    #[test]
+    fn no_surviving_replica_is_infeasible() {
+        let (p, subs) = setup();
+        // X_0 lives on {0,1,2}; only {3,4,5} survive
+        let err = plan_recovery(
+            &p,
+            &subs,
+            &[(0, RowRange::new(0, 10))],
+            &[3, 4, 5],
+            &[1.0; 6],
+        )
+        .unwrap_err();
+        assert!(matches!(err, Error::Infeasible(_)), "{err}");
+        assert!(err.to_string().contains("no surviving replica"), "{err}");
+    }
+
+    #[test]
+    fn multiple_spans_merge_per_worker() {
+        let (p, subs) = setup();
+        // spans of X_1 and X_2; machine 3 stores replicas of both
+        let plan = plan_recovery(
+            &p,
+            &subs,
+            &[(1, RowRange::new(12, 16)), (2, RowRange::new(20, 24))],
+            &[3],
+            &[1.0; 6],
+        )
+        .unwrap();
+        assert_eq!(plan.len(), 1);
+        let (worker, tasks) = &plan[0];
+        assert_eq!(*worker, 3);
+        assert_eq!(tasks.len(), 2);
+        assert!(tasks.iter().any(|t| t.g == 1));
+        assert!(tasks.iter().any(|t| t.g == 2));
+    }
+
+    #[test]
+    fn rejects_span_outside_sub_matrix() {
+        let (p, subs) = setup();
+        let r = plan_recovery(
+            &p,
+            &subs,
+            &[(0, RowRange::new(5, 15))], // crosses into X_1
+            &[1, 2],
+            &[1.0; 6],
+        );
+        assert!(r.is_err());
+    }
+}

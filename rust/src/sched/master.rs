@@ -5,6 +5,15 @@
 //! until the received segments *cover every row of `y`* (with straggler
 //! tolerance `S`, coverage is guaranteed after any `N_t − S` reports),
 //! assemble `y_t`, and fold measured speeds into the EWMA estimator.
+//!
+//! With [`RecoveryPolicy::enabled`] the collect loop also *recovers*
+//! mid-step: a worker that disconnects, reports a failure, or goes silent
+//! past the overdue fraction of the recovery timeout has its
+//! still-uncovered rows re-planned onto surviving replicas
+//! ([`crate::optim::recovery`]) and shipped as supplementary
+//! [`WorkOrder`]s for the same step. Reports dedup by row through the
+//! coverage bitmap and by worker id for the EWMA, so late originals and
+//! recovery replacements coexist safely.
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -19,6 +28,7 @@ use crate::placement::Placement;
 use crate::util::json::{Json, ObjBuilder};
 
 use super::protocol::WorkOrder;
+use super::recovery::{RecoveryEvent, RecoveryPolicy, RecoveryReason, RecoveryTracker};
 use super::speed::SpeedEstimator;
 use super::straggler::StraggleMode;
 
@@ -38,6 +48,10 @@ pub struct MasterConfig {
     pub row_cost_ns: u64,
     /// How long to wait for coverage before declaring the step lost.
     pub recovery_timeout: Duration,
+    /// Mid-step recovery: re-dispatch a victim's uncovered rows to
+    /// surviving replicas (disabled by default — bit-identical to the
+    /// classic redundancy-or-timeout behaviour).
+    pub recovery: RecoveryPolicy,
 }
 
 /// What one step produced.
@@ -58,6 +72,9 @@ pub struct StepOutcome {
     pub solve: Duration,
     /// Predicted computation time `c(M*)` under the *estimated* speeds.
     pub predicted_c: f64,
+    /// Mid-step recoveries performed (empty unless
+    /// [`MasterConfig::recovery`] is enabled and a worker was rescued).
+    pub recoveries: Vec<RecoveryEvent>,
 }
 
 /// Result summary of a full run (filled by the apps layer).
@@ -101,6 +118,7 @@ pub struct Master {
 impl Master {
     pub fn new(cfg: MasterConfig) -> Result<Master> {
         let n = cfg.placement.machines();
+        cfg.recovery.validate()?;
         if cfg.sub_ranges.len() != cfg.placement.submatrices() {
             return Err(Error::Shape(format!(
                 "{} sub-ranges for G={}",
@@ -195,7 +213,13 @@ impl Master {
             .computation_time(self.estimator.estimate(), avail);
 
         // ---- dispatch ----
+        let machines = self.cfg.placement.machines();
+        let recovery_on = self.cfg.recovery.enabled;
+        // `None` when recovery is off: the classic dispatch path stays
+        // free of per-task bookkeeping and per-step tracker allocations
+        let mut tracker = recovery_on.then(|| RecoveryTracker::new(machines));
         let mut expected = 0usize;
+        let mut dispatch_failures: Vec<usize> = Vec::new();
         for &n in avail {
             let tasks = assignment.tasks_for(n);
             if tasks.is_empty() {
@@ -205,9 +229,14 @@ impl Master {
                 .iter()
                 .find(|&&(m, _)| m == n)
                 .map(|&(_, mode)| mode);
-            // A dead worker (channel closed — backend init failure or
-            // panic) is tolerated like a straggler: redundancy or the
-            // coverage timeout decides the step's fate, not the dispatch.
+            // Responsibility is recorded whether or not the send succeeds:
+            // with recovery on, a dead worker's rows are re-planned below;
+            // with recovery off, a dead worker (channel closed — backend
+            // init failure or panic) is tolerated like a straggler and
+            // redundancy or the coverage timeout decides the step's fate.
+            if let Some(t) = tracker.as_mut() {
+                t.assign(n, &tasks, &self.cfg.sub_ranges);
+            }
             match cluster.send(
                 n,
                 WorkOrder {
@@ -218,9 +247,18 @@ impl Master {
                     straggle,
                 },
             ) {
-                Ok(()) => expected += 1,
+                Ok(()) => {
+                    expected += 1;
+                    if let Some(t) = tracker.as_mut() {
+                        t.note_order_sent(n, Instant::now());
+                    }
+                }
                 Err(e) => {
                     crate::log_warn!("step {step}: dispatch to worker {n} failed: {e}");
+                    if let Some(t) = tracker.as_mut() {
+                        t.mark_unreachable(n);
+                    }
+                    dispatch_failures.push(n);
                 }
             }
         }
@@ -233,25 +271,70 @@ impl Master {
         let mut covered = vec![false; self.q];
         let mut missing = self.q;
         let mut reporters = Vec::new();
+        let mut reported = vec![false; machines];
         let mut measurements: Vec<(usize, f64)> = Vec::new();
+        let mut recoveries: Vec<RecoveryEvent> = Vec::new();
         let deadline = Instant::now() + self.cfg.recovery_timeout;
+        let overdue_delay = recovery_on
+            .then(|| self.cfg.recovery.overdue_delay(self.cfg.recovery_timeout));
+
+        // a dispatch-time send failure is already a dead channel: recover
+        // its rows immediately instead of waiting for the deadline
+        if let Some(t) = tracker.as_mut() {
+            for n in dispatch_failures {
+                self.recover_worker(
+                    cluster,
+                    step,
+                    w,
+                    n,
+                    RecoveryReason::Disconnected,
+                    &covered,
+                    avail,
+                    t,
+                    &mut expected,
+                    &mut recoveries,
+                )?;
+            }
+        }
 
         while missing > 0 {
             let now = Instant::now();
             if now >= deadline {
-                return Err(Error::Cluster(format!(
-                    "step {step}: coverage timeout with {missing} rows missing \
-                     ({}/{} reports)",
-                    reporters.len(),
-                    expected
-                )));
+                return Err(self.coverage_error(step, &covered, reporters.len(), expected));
             }
-            match cluster.recv_timeout(deadline - now) {
+            if let (Some(delay), Some(t)) = (overdue_delay, tracker.as_mut()) {
+                // silent droppers: an unanswered order past the overdue
+                // fraction of the timeout is recovered like a failure
+                while let Some(victim) = t.overdue_victim(now, delay) {
+                    self.recover_worker(
+                        cluster,
+                        step,
+                        w,
+                        victim,
+                        RecoveryReason::Overdue,
+                        &covered,
+                        avail,
+                        t,
+                        &mut expected,
+                        &mut recoveries,
+                    )?;
+                }
+            }
+            let mut wait = deadline - now;
+            if let (Some(delay), Some(t)) = (overdue_delay, tracker.as_ref()) {
+                if let Some(at) = t.next_overdue_at(delay) {
+                    let until = at
+                        .saturating_duration_since(now)
+                        .max(Duration::from_millis(1));
+                    wait = wait.min(until);
+                }
+            }
+            match cluster.recv_timeout(wait) {
                 Ok(TransportEvent::Report(r)) => {
                     if r.step != step {
                         continue; // stale report from a previous step
                     }
-                    if r.worker >= self.cfg.placement.machines() {
+                    if r.worker >= machines {
                         // defense in depth vs a misbehaving transport: an
                         // unknown id must not index the speed estimator
                         crate::log_warn!(
@@ -270,6 +353,7 @@ impl Master {
                         );
                         continue;
                     }
+                    let mut spliced = 0usize;
                     for seg in &r.segments {
                         debug_assert_eq!(seg.values.len(), seg.rows.len() * nvec);
                         if seg.rows.hi > self.q {
@@ -284,6 +368,7 @@ impl Master {
                             );
                             continue;
                         }
+                        spliced += 1;
                         for (i, row) in (seg.rows.lo..seg.rows.hi).enumerate() {
                             if !covered[row] {
                                 covered[row] = true;
@@ -293,28 +378,94 @@ impl Master {
                                 .copy_from_slice(&seg.values[i * nvec..(i + 1) * nvec]);
                         }
                     }
-                    if let Some(v) = r.measured_speed {
-                        measurements.push((r.worker, v));
+                    // Only a report that actually delivered rows answers an
+                    // outstanding order: a same-step report whose payload
+                    // was entirely rejected must not clear the overdue
+                    // clock (the worker's rows are still missing and may
+                    // need re-dispatch).
+                    if spliced > 0 {
+                        if let Some(t) = tracker.as_mut() {
+                            t.note_report(r.worker);
+                        }
                     }
-                    reporters.push(r.worker);
+                    // One slot per worker per step: a late original racing
+                    // its recovery replacement (or a rescuer's second,
+                    // supplementary report) must not land twice in
+                    // `reporters` nor fold its speed into the EWMA twice —
+                    // and a report whose every segment was rejected carries
+                    // no usable speed measurement at all.
+                    if !reported[r.worker] {
+                        reported[r.worker] = true;
+                        reporters.push(r.worker);
+                        if spliced > 0 {
+                            if let Some(v) = r.measured_speed {
+                                measurements.push((r.worker, v));
+                            }
+                        }
+                    }
                 }
-                Ok(TransportEvent::Failed { worker, error, .. }) => {
+                Ok(TransportEvent::Failed { worker, step: ev_step, error }) => {
                     crate::log_warn!("worker {worker} failed in step {step}: {error}");
+                    if ev_step == step && worker < machines {
+                        if let Some(t) = tracker.as_mut() {
+                            self.recover_worker(
+                                cluster,
+                                step,
+                                w,
+                                worker,
+                                RecoveryReason::Failed,
+                                &covered,
+                                avail,
+                                t,
+                                &mut expected,
+                                &mut recoveries,
+                            )?;
+                        }
+                    }
                 }
                 Ok(TransportEvent::Disconnected { worker }) => {
-                    // Mid-step preemption: redundancy (S ≥ 1 or replica
-                    // coverage) or the timeout decides the step; the
-                    // transport's liveness view removes the worker from
-                    // the availability set at the next step.
+                    // Mid-step preemption. With recovery off, redundancy
+                    // (S ≥ 1 or replica coverage) or the timeout decides
+                    // the step; either way the transport's liveness view
+                    // removes the worker from the availability set at the
+                    // next step.
                     crate::log_warn!(
                         "worker {worker} disconnected during step {step} \
                          (treated as preemption)"
                     );
+                    if worker < machines {
+                        if let Some(t) = tracker.as_mut() {
+                            t.mark_unreachable(worker);
+                            self.recover_worker(
+                                cluster,
+                                step,
+                                w,
+                                worker,
+                                RecoveryReason::Disconnected,
+                                &covered,
+                                avail,
+                                t,
+                                &mut expected,
+                                &mut recoveries,
+                            )?;
+                        }
+                    }
                 }
                 Err(_) => {
-                    return Err(Error::Cluster(format!(
-                        "step {step}: coverage timeout with {missing} rows missing"
-                    )));
+                    if !recovery_on {
+                        return Err(self.coverage_error(
+                            step,
+                            &covered,
+                            reporters.len(),
+                            expected,
+                        ));
+                    }
+                    // Woke for the overdue scan or the deadline check (both
+                    // handled at the top of the loop), or the channel is
+                    // gone entirely; a brief sleep keeps a closed channel
+                    // from spinning hot until recovery declares the step
+                    // infeasible or the deadline fires.
+                    std::thread::sleep(Duration::from_millis(2).min(wait));
                 }
             }
         }
@@ -329,7 +480,169 @@ impl Master {
             wall: t0.elapsed(),
             solve,
             predicted_c,
+            recoveries,
         })
+    }
+
+    /// Re-plan `victim`'s still-uncovered rows onto surviving replicas and
+    /// ship supplementary orders for the in-flight step. A rescuer whose
+    /// send fails is marked unreachable, its share re-planned over the
+    /// remaining survivors (the set shrinks strictly, so this terminates),
+    /// and its own rows recovered in turn — its channel is known dead;
+    /// when some sub-matrix has no surviving replica at all the step fails
+    /// fast with an [`Error::Infeasible`] instead of waiting out the
+    /// coverage timeout.
+    #[allow(clippy::too_many_arguments)]
+    fn recover_worker<T: Transport + ?Sized>(
+        &self,
+        cluster: &T,
+        step: usize,
+        w: &Arc<Block>,
+        victim: usize,
+        reason: RecoveryReason,
+        covered: &[bool],
+        avail: &[usize],
+        tracker: &mut RecoveryTracker,
+        expected: &mut usize,
+        recoveries: &mut Vec<RecoveryEvent>,
+    ) -> Result<()> {
+        if tracker.is_victim(victim) {
+            return Ok(());
+        }
+        tracker.mark_victim(victim);
+        let mut remaining = tracker.uncovered_rows(victim, covered);
+        if remaining.is_empty() {
+            // replicas already covered everything this worker owed
+            crate::log_debug!(
+                "step {step}: worker {victim} {} but its rows are covered",
+                reason.name()
+            );
+            return Ok(());
+        }
+        let total_rows: usize = remaining.iter().map(|&(_, r)| r.len()).sum();
+        let mut rescuers: Vec<usize> = Vec::new();
+        let mut dead_rescuers: Vec<usize> = Vec::new();
+        while !remaining.is_empty() {
+            let survivors = tracker.survivors(avail);
+            let plan = match optim::recovery::plan_recovery(
+                &self.cfg.placement,
+                &self.cfg.sub_ranges,
+                &remaining,
+                &survivors,
+                self.estimator.estimate(),
+            ) {
+                Ok(plan) => plan,
+                Err(e) if matches!(e, Error::Infeasible(_))
+                    && reason == RecoveryReason::Overdue =>
+                {
+                    // An overdue victim is only *suspected* dead — its late
+                    // report still splices if it arrives. With no surviving
+                    // replica to re-plan onto, keep waiting for it (or the
+                    // deadline) instead of failing a step that may yet
+                    // complete. Definitely-dead victims (disconnect /
+                    // failure) do fail fast here.
+                    crate::log_warn!(
+                        "step {step}: cannot re-plan overdue worker {victim}'s rows \
+                         ({e}); waiting for its late report or the deadline"
+                    );
+                    return Ok(());
+                }
+                Err(e) => return Err(e),
+            };
+            let mut failed: Vec<(usize, RowRange)> = Vec::new();
+            for (rescuer, tasks) in plan {
+                match cluster.send(
+                    rescuer,
+                    WorkOrder {
+                        step,
+                        w: Arc::clone(w),
+                        tasks: tasks.clone(),
+                        row_cost_ns: self.cfg.row_cost_ns,
+                        straggle: None,
+                    },
+                ) {
+                    Ok(()) => {
+                        tracker.assign(rescuer, &tasks, &self.cfg.sub_ranges);
+                        tracker.note_order_sent(rescuer, Instant::now());
+                        *expected += 1;
+                        if !rescuers.contains(&rescuer) {
+                            rescuers.push(rescuer);
+                        }
+                    }
+                    Err(e) => {
+                        crate::log_warn!(
+                            "step {step}: recovery dispatch to worker {rescuer} failed: {e}"
+                        );
+                        tracker.mark_unreachable(rescuer);
+                        dead_rescuers.push(rescuer);
+                        failed.extend(
+                            tasks
+                                .iter()
+                                .map(|t| (t.g, t.rows.offset(self.cfg.sub_ranges[t.g].lo))),
+                        );
+                    }
+                }
+            }
+            remaining = failed;
+        }
+        rescuers.sort_unstable();
+        crate::log_warn!(
+            "step {step}: re-dispatched {total_rows} uncovered rows of worker {victim} \
+             ({}) to {rescuers:?}",
+            reason.name()
+        );
+        recoveries.push(RecoveryEvent {
+            step,
+            victim,
+            reason,
+            rows: total_rows,
+            rescuers,
+        });
+        // A rescuer whose send failed has a *known-dead* channel, so its
+        // own original rows cannot arrive either — recover it now instead
+        // of leaving it to the overdue clock (which at a large factor can
+        // coincide with the deadline). Victims only ever grow, so the
+        // recursion is bounded by the machine count.
+        for dead in dead_rescuers {
+            self.recover_worker(
+                cluster,
+                step,
+                w,
+                dead,
+                RecoveryReason::Disconnected,
+                covered,
+                avail,
+                tracker,
+                expected,
+                recoveries,
+            )?;
+        }
+        Ok(())
+    }
+
+    /// The coverage-timeout error, shared by the deadline and
+    /// `recv_timeout` paths: report progress (`reports/expected`) and the
+    /// sub-matrices whose rows are still missing.
+    fn coverage_error(
+        &self,
+        step: usize,
+        covered: &[bool],
+        reports: usize,
+        expected: usize,
+    ) -> Error {
+        let missing = covered.iter().filter(|&&c| !c).count();
+        let missing_subs: Vec<usize> = self
+            .cfg
+            .sub_ranges
+            .iter()
+            .enumerate()
+            .filter(|(_, r)| (r.lo..r.hi).any(|row| !covered[row]))
+            .map(|(g, _)| g)
+            .collect();
+        Error::Cluster(format!(
+            "step {step}: coverage timeout with {missing} rows missing \
+             ({reports}/{expected} reports; incomplete sub-matrices {missing_subs:?})"
+        ))
     }
 }
 
@@ -375,6 +688,7 @@ mod tests {
             initial_speeds: speeds.to_vec(),
             row_cost_ns: 0,
             recovery_timeout: Duration::from_secs(10),
+            recovery: RecoveryPolicy::default(),
         })
         .unwrap();
         (master, cluster, matrix)
@@ -457,14 +771,47 @@ mod tests {
     }
 
     #[test]
-    fn unprotected_step_times_out_under_drop() {
+    fn unprotected_step_times_out_under_drop_without_recovery() {
         let speeds = vec![1.0; 6];
         let (mut master, cluster, _) = build(60, &speeds, AssignPolicy::Heterogeneous, 0);
         master.cfg.recovery_timeout = Duration::from_millis(400);
         let w = Arc::new(Block::single(vec![0.5f32; 60]));
         let avail: Vec<usize> = (0..6).collect();
         let r = master.step(&cluster, 3, &w, &avail, &[(0, StraggleMode::Drop)]);
-        assert!(r.is_err(), "S=0 cannot survive a dropped worker");
+        let err = r.expect_err("S=0 without recovery cannot survive a dropped worker");
+        let msg = err.to_string();
+        assert!(msg.contains("coverage timeout"), "{msg}");
+        assert!(msg.contains("incomplete sub-matrices"), "{msg}");
+        cluster.shutdown();
+    }
+
+    #[test]
+    fn unprotected_step_recovers_from_drop_via_overdue_redispatch() {
+        // same scenario as above, recovery on: the silent dropper is
+        // declared overdue and its rows re-dispatched to replicas
+        let speeds = vec![1.0; 6];
+        let (mut master, cluster, matrix) = build(60, &speeds, AssignPolicy::Heterogeneous, 0);
+        master.cfg.recovery_timeout = Duration::from_secs(8);
+        master.cfg.recovery = RecoveryPolicy {
+            enabled: true,
+            overdue_factor: 0.05, // 400ms
+        };
+        let w = Arc::new(Block::single(vec![0.5f32; 60]));
+        let avail: Vec<usize> = (0..6).collect();
+        let out = master
+            .step(&cluster, 3, &w, &avail, &[(0, StraggleMode::Drop)])
+            .unwrap();
+        assert!(!out.reporters.contains(&0), "the dropper never reports");
+        assert_eq!(out.recoveries.len(), 1, "{:?}", out.recoveries);
+        let ev = &out.recoveries[0];
+        assert_eq!(ev.victim, 0);
+        assert_eq!(ev.reason, RecoveryReason::Overdue);
+        assert!(ev.rows > 0);
+        assert!(!ev.rescuers.is_empty() && !ev.rescuers.contains(&0));
+        let want = oracle_y(&matrix, w.data());
+        for (a, e) in out.y.iter().zip(&want) {
+            assert!((a - e).abs() < 1e-3);
+        }
         cluster.shutdown();
     }
 
@@ -498,6 +845,7 @@ mod tests {
             initial_speeds: vec![],
             row_cost_ns: 300_000, // 0.3ms/row → measurable ratios
             recovery_timeout: Duration::from_secs(20),
+            recovery: RecoveryPolicy::default(),
         })
         .unwrap();
         let w = Arc::new(Block::single(vec![0.1f32; q]));
@@ -513,6 +861,174 @@ mod tests {
             "estimator did not learn the 8x speed gap: {est:?}"
         );
         cluster.shutdown();
+    }
+
+    /// Deterministic transport double: events are scripted, sends are
+    /// recorded — lets the collect loop be driven event by event.
+    struct Scripted {
+        n: usize,
+        events: std::sync::Mutex<std::collections::VecDeque<TransportEvent>>,
+        sent: std::sync::Mutex<Vec<(usize, WorkOrder)>>,
+    }
+
+    impl Scripted {
+        fn new(n: usize, events: Vec<TransportEvent>) -> Scripted {
+            Scripted {
+                n,
+                events: std::sync::Mutex::new(events.into()),
+                sent: std::sync::Mutex::new(Vec::new()),
+            }
+        }
+    }
+
+    impl Transport for Scripted {
+        fn size(&self) -> usize {
+            self.n
+        }
+        fn alive(&self) -> Vec<bool> {
+            vec![true; self.n]
+        }
+        fn send(&self, worker: usize, order: WorkOrder) -> crate::error::Result<()> {
+            self.sent.lock().unwrap().push((worker, order));
+            Ok(())
+        }
+        fn recv_timeout(&self, _timeout: Duration) -> crate::error::Result<TransportEvent> {
+            self.events
+                .lock()
+                .unwrap()
+                .pop_front()
+                .ok_or_else(|| Error::Cluster("recv: scripted queue empty".into()))
+        }
+        fn drain(&self) -> Vec<TransportEvent> {
+            Vec::new()
+        }
+        fn shutdown(&mut self) {}
+    }
+
+    fn scripted_master(n: usize, recovery: RecoveryPolicy) -> Master {
+        let placement = Placement::build(PlacementKind::Cyclic, n, n, n).unwrap();
+        let sub_ranges = submatrix_ranges(30, n).unwrap();
+        Master::new(MasterConfig {
+            placement,
+            sub_ranges,
+            params: SolveParams::with_stragglers(0),
+            policy: AssignPolicy::Heterogeneous,
+            gamma: 0.5,
+            initial_speeds: vec![1.0; n],
+            row_cost_ns: 0,
+            recovery_timeout: Duration::from_secs(5),
+            recovery,
+        })
+        .unwrap()
+    }
+
+    fn report(worker: usize, step: usize, lo: usize, hi: usize, speed: f64) -> TransportEvent {
+        TransportEvent::Report(crate::sched::protocol::WorkerReport {
+            worker,
+            step,
+            segments: vec![crate::sched::protocol::Segment {
+                rows: RowRange::new(lo, hi),
+                values: vec![1.0; hi - lo],
+            }],
+            nvec: 1,
+            measured_speed: Some(speed),
+            elapsed: Duration::ZERO,
+        })
+    }
+
+    #[test]
+    fn duplicate_report_counts_once_in_reporters_and_ewma() {
+        // a late original racing its recovery replacement (or a readmitted
+        // peer replaying) must not double-fold the EWMA
+        let t = Scripted::new(
+            3,
+            vec![
+                report(0, 4, 0, 15, 5.0),
+                report(0, 4, 0, 15, 5.0), // duplicate
+                report(1, 4, 15, 30, 3.0),
+            ],
+        );
+        let mut master = scripted_master(3, RecoveryPolicy::default());
+        let w = Arc::new(Block::single(vec![0.5f32; 30]));
+        let out = master.step(&t, 4, &w, &[0, 1, 2], &[]).unwrap();
+        assert_eq!(out.reporters, vec![0, 1], "duplicate must not re-enter");
+        // one EWMA fold: 0.5·5 + 0.5·1 = 3.0 (two folds would give 4.0)
+        assert!((master.speed_estimate()[0] - 3.0).abs() < 1e-12);
+        assert!((master.speed_estimate()[1] - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fully_rejected_report_does_not_poison_speed_estimate() {
+        // every segment out of range ⇒ nothing spliced ⇒ the measurement
+        // is meaningless and must not reach the estimator
+        let t = Scripted::new(
+            3,
+            vec![
+                report(2, 0, 100, 110, 99.0), // rows exceed q=30, all dropped
+                report(0, 0, 0, 30, 2.0),
+            ],
+        );
+        let mut master = scripted_master(3, RecoveryPolicy::default());
+        let w = Arc::new(Block::single(vec![0.5f32; 30]));
+        let out = master.step(&t, 0, &w, &[0, 1, 2], &[]).unwrap();
+        assert!(out.reporters.contains(&2));
+        assert_eq!(master.speed_estimate()[2], 1.0, "poisoned by rejected report");
+        assert!((master.speed_estimate()[0] - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rejected_report_does_not_clear_overdue_clock() {
+        // a same-step report whose payload was entirely rejected must not
+        // count as answering the order: the worker's rows are still
+        // missing, so the overdue path must still fire and re-dispatch
+        let t = Scripted::new(3, vec![report(0, 2, 100, 110, 1.0)]); // garbage rows
+        let mut master = scripted_master(
+            3,
+            RecoveryPolicy {
+                enabled: true,
+                overdue_factor: 0.2, // 80ms of the 400ms timeout below
+            },
+        );
+        master.cfg.recovery_timeout = Duration::from_millis(400);
+        let w = Arc::new(Block::single(vec![0.5f32; 30]));
+        let err = master.step(&t, 2, &w, &[0, 1, 2], &[]).unwrap_err();
+        // nothing ever covers the rows (the scripted queue is empty), so
+        // the deadline fires — but only after overdue recovery shipped
+        // supplementary orders, which it could not have done had the
+        // garbage report cleared worker 0's outstanding order
+        assert!(err.to_string().contains("coverage timeout"), "{err}");
+        let sent = t.sent.lock().unwrap();
+        assert!(
+            sent.len() > 3,
+            "no supplementary orders were shipped ({} sends)",
+            sent.len()
+        );
+    }
+
+    #[test]
+    fn disconnect_triggers_supplementary_orders_to_replicas() {
+        let t = Scripted::new(
+            3,
+            vec![
+                TransportEvent::Disconnected { worker: 0 },
+                report(1, 7, 0, 30, 1.0),
+            ],
+        );
+        let mut master = scripted_master(3, RecoveryPolicy::enabled());
+        let w = Arc::new(Block::single(vec![0.5f32; 30]));
+        let out = master.step(&t, 7, &w, &[0, 1, 2], &[]).unwrap();
+        assert_eq!(out.recoveries.len(), 1);
+        let ev = &out.recoveries[0];
+        assert_eq!((ev.victim, ev.reason), (0, RecoveryReason::Disconnected));
+        assert_eq!(ev.rescuers, vec![1, 2]);
+        assert!(ev.rows > 0);
+        // three original orders plus one supplementary per rescuer, all for
+        // the same in-flight step
+        let sent = t.sent.lock().unwrap();
+        assert_eq!(sent.len(), 5);
+        assert!(sent.iter().all(|(_, o)| o.step == 7));
+        let extra: Vec<usize> = sent[3..].iter().map(|&(n, _)| n).collect();
+        assert_eq!(extra, vec![1, 2]);
     }
 
     #[test]

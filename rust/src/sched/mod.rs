@@ -17,11 +17,18 @@
 //! the paper's heterogeneous EC2 VMs (DESIGN.md §3), and a
 //! [`straggler::StragglerInjector`] can mark workers as dropped/slow per
 //! step (Fig. 4 bottom).
+//!
+//! With [`recovery::RecoveryPolicy`] enabled, step 4 additionally
+//! *re-plans mid-step*: a worker that disconnects, fails, or goes overdue
+//! has its uncovered rows re-dispatched to surviving replicas
+//! ([`recovery`]), so an `S = 0` step survives preemption instead of
+//! timing out.
 
 pub mod cluster;
 pub mod elastic;
 pub mod master;
 pub mod protocol;
+pub mod recovery;
 pub mod sim;
 pub mod speed;
 pub mod straggler;
@@ -30,5 +37,6 @@ pub mod worker;
 pub use cluster::Cluster;
 pub use elastic::ElasticityTrace;
 pub use master::{Master, RunResult};
+pub use recovery::{RecoveryEvent, RecoveryPolicy, RecoveryReason};
 pub use speed::SpeedEstimator;
 pub use straggler::StragglerInjector;

@@ -1,0 +1,350 @@
+//! Mid-step recovery: re-dispatch a victim's uncovered rows to survivors.
+//!
+//! Uncoded storage makes mid-step failure recoverable *without decoding*:
+//! every sub-matrix already sits, plain, on `J` machines, so when a worker
+//! dies (or goes silent) after the step's orders shipped, the master can
+//! re-plan exactly the rows that worker still owed onto surviving replicas
+//! and finish the same step — no `S ≥ 1` redundancy and no coverage
+//! timeout needed. This module holds the policy knob
+//! ([`RecoveryPolicy`]), the per-step bookkeeping
+//! ([`RecoveryTracker`]: who owes which global rows, which orders are
+//! still unanswered), and the event record surfaced through
+//! [`crate::metrics::Timeline`] / `--json-out` ([`RecoveryEvent`]). The
+//! restricted assignment itself is solved in
+//! [`crate::optim::recovery::plan_recovery`].
+//!
+//! Three triggers share one path ([`RecoveryReason`]):
+//!
+//! * **Disconnected** — the transport reports the worker's channel dead
+//!   (socket kill, daemon crash, closed mpsc), including a dispatch-time
+//!   send failure.
+//! * **Failed** — the worker replied with an execution failure for this
+//!   step (backend error, shard residency violation).
+//! * **Overdue** — the worker is silent past `overdue_factor` of the
+//!   master's recovery timeout; this rescues *silent* droppers that
+//!   otherwise could only time the whole step out.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::time::{Duration, Instant};
+
+use crate::error::{Error, Result};
+use crate::linalg::partition::RowRange;
+use crate::optim::Task;
+
+/// Master-side recovery configuration (static across steps).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RecoveryPolicy {
+    /// Re-dispatch a victim's uncovered rows to surviving replicas instead
+    /// of letting redundancy or the coverage timeout decide. `false` (the
+    /// default) preserves the classic behaviour bit for bit.
+    pub enabled: bool,
+    /// Fraction of the recovery timeout after which a dispatched-to worker
+    /// with an unanswered order is declared overdue and recovered, which
+    /// also rescues silent droppers. Must be in `(0, 1]` when enabled.
+    pub overdue_factor: f64,
+}
+
+impl Default for RecoveryPolicy {
+    fn default() -> Self {
+        RecoveryPolicy {
+            enabled: false,
+            overdue_factor: 0.5,
+        }
+    }
+}
+
+impl RecoveryPolicy {
+    /// Recovery on, with the default overdue factor.
+    pub fn enabled() -> Self {
+        RecoveryPolicy {
+            enabled: true,
+            ..Default::default()
+        }
+    }
+
+    /// Structural sanity (checked by [`crate::sched::Master::new`] and
+    /// [`crate::config::RunConfig::validate`]).
+    pub fn validate(&self) -> Result<()> {
+        if self.enabled && !(self.overdue_factor > 0.0 && self.overdue_factor <= 1.0) {
+            return Err(Error::Config(format!(
+                "recovery overdue factor {} not in (0, 1]",
+                self.overdue_factor
+            )));
+        }
+        Ok(())
+    }
+
+    /// How long an unanswered order may sit before its worker is overdue.
+    pub fn overdue_delay(&self, recovery_timeout: Duration) -> Duration {
+        recovery_timeout.mul_f64(self.overdue_factor)
+    }
+}
+
+/// Why a worker's rows were re-dispatched.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RecoveryReason {
+    /// Channel death (socket loss / dispatch failure) mid-step.
+    Disconnected,
+    /// The worker reported an execution failure for this step.
+    Failed,
+    /// Silent past the overdue fraction of the recovery timeout.
+    Overdue,
+}
+
+impl RecoveryReason {
+    pub fn name(&self) -> &'static str {
+        match self {
+            RecoveryReason::Disconnected => "disconnected",
+            RecoveryReason::Failed => "failed",
+            RecoveryReason::Overdue => "overdue",
+        }
+    }
+}
+
+/// One mid-step recovery, as surfaced per step in
+/// [`crate::metrics::Timeline`] and `--json-out`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RecoveryEvent {
+    pub step: usize,
+    /// The worker whose rows were re-dispatched.
+    pub victim: usize,
+    pub reason: RecoveryReason,
+    /// Uncovered rows re-dispatched (global row count).
+    pub rows: usize,
+    /// Workers that received supplementary orders, sorted.
+    pub rescuers: Vec<usize>,
+}
+
+/// Per-step bookkeeping: which global rows each dispatched order implied,
+/// and which orders are still unanswered (for overdue detection).
+#[derive(Debug)]
+pub struct RecoveryTracker {
+    /// Per worker: `(g, global rows)` responsibility accumulated over the
+    /// original order plus any supplementary recovery orders.
+    responsibility: Vec<Vec<(usize, RowRange)>>,
+    /// Per worker: dispatch instants of orders not yet answered by any
+    /// report (FIFO; a report answers the oldest outstanding order).
+    outstanding: Vec<VecDeque<Instant>>,
+    /// Workers already recovered this step (never recovered twice, and
+    /// excluded from the survivor set).
+    victim: Vec<bool>,
+    /// Workers whose channel proved dead (dispatch or recovery send
+    /// failure, disconnect) — excluded from the survivor set.
+    unreachable: Vec<bool>,
+}
+
+impl RecoveryTracker {
+    pub fn new(machines: usize) -> RecoveryTracker {
+        RecoveryTracker {
+            responsibility: vec![Vec::new(); machines],
+            outstanding: vec![VecDeque::new(); machines],
+            victim: vec![false; machines],
+            unreachable: vec![false; machines],
+        }
+    }
+
+    /// Record the global-row responsibility an order's tasks imply
+    /// (whether or not the send later succeeds — a failed dispatch still
+    /// leaves rows to recover).
+    pub fn assign(&mut self, worker: usize, tasks: &[Task], sub_ranges: &[RowRange]) {
+        for t in tasks {
+            if !t.rows.is_empty() {
+                self.responsibility[worker].push((t.g, t.rows.offset(sub_ranges[t.g].lo)));
+            }
+        }
+    }
+
+    /// Record one successfully shipped order (overdue clock starts).
+    pub fn note_order_sent(&mut self, worker: usize, at: Instant) {
+        self.outstanding[worker].push_back(at);
+    }
+
+    /// A report from `worker` answers its oldest outstanding order.
+    pub fn note_report(&mut self, worker: usize) {
+        self.outstanding[worker].pop_front();
+    }
+
+    pub fn mark_victim(&mut self, worker: usize) {
+        self.victim[worker] = true;
+    }
+
+    pub fn is_victim(&self, worker: usize) -> bool {
+        self.victim[worker]
+    }
+
+    pub fn mark_unreachable(&mut self, worker: usize) {
+        self.unreachable[worker] = true;
+    }
+
+    /// Available workers that can still take supplementary orders.
+    pub fn survivors(&self, avail: &[usize]) -> Vec<usize> {
+        avail
+            .iter()
+            .copied()
+            .filter(|&n| !self.victim[n] && !self.unreachable[n])
+            .collect()
+    }
+
+    /// The still-uncovered subset of `worker`'s responsibility, as maximal
+    /// `(g, global rows)` runs. Overlapping responsibility spans (a rescuer
+    /// that later became a victim, `S > 0` row sets) are merged first so no
+    /// row is counted or re-dispatched twice.
+    pub fn uncovered_rows(&self, worker: usize, covered: &[bool]) -> Vec<(usize, RowRange)> {
+        let mut by_sub: BTreeMap<usize, Vec<RowRange>> = BTreeMap::new();
+        for &(g, r) in &self.responsibility[worker] {
+            by_sub.entry(g).or_default().push(r);
+        }
+        let mut out = Vec::new();
+        for (g, mut spans) in by_sub {
+            spans.sort_by_key(|r| r.lo);
+            let mut merged: Vec<RowRange> = Vec::new();
+            for r in spans {
+                match merged.last_mut() {
+                    Some(last) if r.lo <= last.hi => last.hi = last.hi.max(r.hi),
+                    _ => merged.push(r),
+                }
+            }
+            for span in merged {
+                let mut run_lo = None;
+                for row in span.lo..span.hi {
+                    match (covered[row], run_lo) {
+                        (false, None) => run_lo = Some(row),
+                        (true, Some(lo)) => {
+                            out.push((g, RowRange::new(lo, row)));
+                            run_lo = None;
+                        }
+                        _ => {}
+                    }
+                }
+                if let Some(lo) = run_lo {
+                    out.push((g, RowRange::new(lo, span.hi)));
+                }
+            }
+        }
+        out
+    }
+
+    /// First non-victim worker whose oldest unanswered order is older than
+    /// `delay`.
+    pub fn overdue_victim(&self, now: Instant, delay: Duration) -> Option<usize> {
+        self.outstanding.iter().enumerate().find_map(|(n, q)| {
+            match (self.victim[n], q.front()) {
+                (false, Some(&sent)) if now.saturating_duration_since(sent) >= delay => Some(n),
+                _ => None,
+            }
+        })
+    }
+
+    /// Earliest instant at which some non-victim worker becomes overdue
+    /// (bounds the master's receive wait so silence is noticed on time).
+    pub fn next_overdue_at(&self, delay: Duration) -> Option<Instant> {
+        self.outstanding
+            .iter()
+            .enumerate()
+            .filter(|&(n, _)| !self.victim[n])
+            .filter_map(|(_, q)| q.front())
+            .min()
+            .map(|&sent| sent + delay)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn task(g: usize, lo: usize, hi: usize) -> Task {
+        Task {
+            g,
+            rows: RowRange::new(lo, hi),
+        }
+    }
+
+    fn sub_ranges() -> Vec<RowRange> {
+        vec![RowRange::new(0, 10), RowRange::new(10, 20)]
+    }
+
+    #[test]
+    fn policy_validation() {
+        RecoveryPolicy::default().validate().unwrap();
+        RecoveryPolicy::enabled().validate().unwrap();
+        for bad in [0.0, -0.5, 1.5] {
+            let p = RecoveryPolicy {
+                enabled: true,
+                overdue_factor: bad,
+            };
+            assert!(p.validate().is_err(), "factor {bad} accepted");
+        }
+        // a disabled policy never consults the factor
+        let off = RecoveryPolicy {
+            enabled: false,
+            overdue_factor: 9.0,
+        };
+        off.validate().unwrap();
+        let d = RecoveryPolicy::enabled().overdue_delay(Duration::from_secs(10));
+        assert_eq!(d, Duration::from_secs(5));
+    }
+
+    #[test]
+    fn uncovered_rows_tracks_coverage_runs() {
+        let mut t = RecoveryTracker::new(2);
+        t.assign(0, &[task(0, 2, 8), task(1, 0, 4)], &sub_ranges());
+        let mut covered = vec![false; 20];
+        // cover global rows 4..6 (inside the first span) and 10..12
+        for row in 4..6 {
+            covered[row] = true;
+        }
+        for row in 10..12 {
+            covered[row] = true;
+        }
+        let got = t.uncovered_rows(0, &covered);
+        assert_eq!(
+            got,
+            vec![
+                (0, RowRange::new(2, 4)),
+                (0, RowRange::new(6, 8)),
+                (1, RowRange::new(12, 14)),
+            ]
+        );
+        // fully covered ⇒ nothing to recover
+        let all = vec![true; 20];
+        assert!(t.uncovered_rows(0, &all).is_empty());
+        // the other worker owes nothing
+        assert!(t.uncovered_rows(1, &covered).is_empty());
+    }
+
+    #[test]
+    fn overlapping_responsibility_merges() {
+        let mut t = RecoveryTracker::new(1);
+        t.assign(0, &[task(0, 0, 6)], &sub_ranges());
+        t.assign(0, &[task(0, 4, 10)], &sub_ranges()); // supplementary, overlaps
+        let covered = vec![false; 20];
+        assert_eq!(t.uncovered_rows(0, &covered), vec![(0, RowRange::new(0, 10))]);
+    }
+
+    #[test]
+    fn overdue_follows_outstanding_orders() {
+        let delay = Duration::from_millis(50);
+        let mut t = RecoveryTracker::new(2);
+        let t0 = Instant::now();
+        t.note_order_sent(0, t0);
+        t.note_order_sent(1, t0);
+        assert_eq!(t.overdue_victim(t0, delay), None);
+        assert_eq!(t.next_overdue_at(delay), Some(t0 + delay));
+        // worker 0 answers; only worker 1 can go overdue
+        t.note_report(0);
+        let late = t0 + Duration::from_millis(60);
+        assert_eq!(t.overdue_victim(late, delay), Some(1));
+        // a marked victim is never reported overdue again
+        t.mark_victim(1);
+        assert_eq!(t.overdue_victim(late, delay), None);
+        assert_eq!(t.next_overdue_at(delay), None);
+    }
+
+    #[test]
+    fn survivors_exclude_victims_and_unreachable() {
+        let mut t = RecoveryTracker::new(4);
+        t.mark_victim(1);
+        t.mark_unreachable(3);
+        assert_eq!(t.survivors(&[0, 1, 2, 3]), vec![0, 2]);
+    }
+}

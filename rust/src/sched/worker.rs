@@ -13,6 +13,12 @@
 //! a multi-threaded run is bit-identical to the single-threaded one and
 //! the host backend stays the numerics oracle.
 //!
+//! Workers are deliberately **step-agnostic**: each [`WorkOrder`] is
+//! executed and reported independently, so a supplementary recovery order
+//! for an in-flight step ([`crate::sched::recovery`]) is just another
+//! order in the queue — the master dedups by row (coverage bitmap) and by
+//! worker id (EWMA) on its side.
+//!
 //! The speed throttle is the EC2-heterogeneity substitute (DESIGN.md §3):
 //! after computing its tiles, a worker sleeps up to
 //! `assigned_rows · row_cost_ns / speed` so wall-clock per step reflects
@@ -470,6 +476,32 @@ mod tests {
         };
         assert!(r.segments.is_empty());
         assert!(r.measured_speed.is_none());
+        tx.send(ToWorker::Shutdown).unwrap();
+    }
+
+    #[test]
+    fn accepts_supplementary_order_for_in_flight_step() {
+        // mid-step recovery ships a second order with the same step id;
+        // the worker must execute both and report both
+        let (tx, rx) = spawn_worker(cfg(8, 1.0));
+        for g in [0usize, 3] {
+            tx.send(ToWorker::Work(order(
+                vec![Task {
+                    g,
+                    rows: RowRange::new(0, 5),
+                }],
+                60,
+                None,
+            )))
+            .unwrap();
+        }
+        for _ in 0..2 {
+            let ToMaster::Report(r) = rx.recv_timeout(Duration::from_secs(5)).unwrap() else {
+                panic!("expected report");
+            };
+            assert_eq!(r.step, 1);
+            assert_eq!(r.segments.len(), 1);
+        }
         tx.send(ToWorker::Shutdown).unwrap();
     }
 

@@ -2,18 +2,19 @@
 //! stale traffic — the unhappy paths of the coordinator.
 
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use usec::config::types::AssignPolicy;
 use usec::linalg::partition::submatrix_ranges;
 use usec::linalg::gen;
+use usec::linalg::Block;
 use usec::optim::SolveParams;
 use usec::placement::{Placement, PlacementKind};
 use usec::runtime::BackendSpec;
 use usec::sched::cluster::Cluster;
 use usec::sched::master::{Master, MasterConfig};
-use usec::linalg::Block;
 use usec::sched::worker::{WorkerConfig, WorkerStorage};
+use usec::sched::RecoveryPolicy;
 
 fn worker_cfg(
     id: usize,
@@ -46,6 +47,7 @@ fn master_cfg(
         initial_speeds: vec![1.0; 6],
         row_cost_ns: 0,
         recovery_timeout: Duration::from_millis(timeout_ms),
+        recovery: RecoveryPolicy::default(),
     }
 }
 
@@ -112,6 +114,89 @@ fn dead_backend_times_out_without_redundancy() {
     let err = master.step(&cluster, 0, &w, &avail, &[]).unwrap_err();
     let msg = err.to_string();
     assert!(msg.contains("timeout"), "unexpected error: {msg}");
+    cluster.shutdown();
+}
+
+/// The same dead backend without redundancy, but with mid-step recovery
+/// enabled: the dead worker's rows are re-dispatched to surviving replicas
+/// and the `S = 0` step completes exactly — no timeout, no decode.
+#[test]
+fn dead_backend_recovered_without_redundancy() {
+    let q = 60;
+    let placement = Placement::build(PlacementKind::Cyclic, 6, 6, 3).unwrap();
+    let sub_ranges = submatrix_ranges(q, 6).unwrap();
+    let matrix = Arc::new(gen::random_dense(q, q, 2));
+    let ranges = Arc::new(sub_ranges.clone());
+    let configs: Vec<WorkerConfig> = (0..6)
+        .map(|id| {
+            let backend = if id == 0 {
+                BackendSpec::Pjrt {
+                    dir: "/nonexistent/artifacts".into(),
+                }
+            } else {
+                BackendSpec::Host
+            };
+            worker_cfg(id, backend, &matrix, &ranges)
+        })
+        .collect();
+    let cluster = Cluster::spawn(configs).unwrap();
+    let mut cfg = master_cfg(placement, sub_ranges, 0, 10_000);
+    cfg.recovery = RecoveryPolicy::enabled();
+    let mut master = Master::new(cfg).unwrap();
+    let w = Arc::new(Block::single(vec![1.0f32; q]));
+    let avail: Vec<usize> = (0..6).collect();
+    let out = master.step(&cluster, 0, &w, &avail, &[]).unwrap();
+    assert!(!out.reporters.contains(&0), "dead worker cannot report");
+    assert!(!out.recoveries.is_empty());
+    let ev = &out.recoveries[0];
+    assert_eq!(ev.victim, 0);
+    assert!(ev.rows > 0);
+    assert!(!ev.rescuers.contains(&0));
+    let want = matrix.matvec(w.data()).unwrap();
+    for (a, e) in out.y.iter().zip(&want) {
+        assert!((a - e).abs() < 1e-3);
+    }
+    cluster.shutdown();
+}
+
+/// When *all* replicas of some sub-matrix are dead, recovery must fail
+/// fast with a clear infeasibility error instead of waiting out the full
+/// coverage timeout.
+#[test]
+fn all_replicas_dead_recovery_fails_fast() {
+    let q = 60;
+    // cyclic J=3: X_0 lives exactly on machines {0, 1, 2} — kill them all
+    let placement = Placement::build(PlacementKind::Cyclic, 6, 6, 3).unwrap();
+    let sub_ranges = submatrix_ranges(q, 6).unwrap();
+    let matrix = Arc::new(gen::random_dense(q, q, 5));
+    let ranges = Arc::new(sub_ranges.clone());
+    let configs: Vec<WorkerConfig> = (0..6)
+        .map(|id| {
+            let backend = if id <= 2 {
+                BackendSpec::Pjrt {
+                    dir: "/nonexistent/artifacts".into(),
+                }
+            } else {
+                BackendSpec::Host
+            };
+            worker_cfg(id, backend, &matrix, &ranges)
+        })
+        .collect();
+    let cluster = Cluster::spawn(configs).unwrap();
+    let mut cfg = master_cfg(placement, sub_ranges, 0, 30_000);
+    cfg.recovery = RecoveryPolicy::enabled();
+    let mut master = Master::new(cfg).unwrap();
+    let w = Arc::new(Block::single(vec![1.0f32; q]));
+    let avail: Vec<usize> = (0..6).collect();
+    let t0 = Instant::now();
+    let err = master.step(&cluster, 0, &w, &avail, &[]).unwrap_err();
+    assert!(
+        t0.elapsed() < Duration::from_secs(20),
+        "did not fail fast: {:?}",
+        t0.elapsed()
+    );
+    assert!(matches!(err, usec::Error::Infeasible(_)), "{err}");
+    assert!(err.to_string().contains("no surviving replica"), "{err}");
     cluster.shutdown();
 }
 

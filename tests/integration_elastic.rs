@@ -49,6 +49,7 @@ fn spawn(
         initial_speeds: speeds.to_vec(),
         row_cost_ns: 0,
         recovery_timeout: Duration::from_secs(15),
+        recovery: usec::sched::RecoveryPolicy::default(),
     })
     .unwrap();
     (master, cluster, matrix)

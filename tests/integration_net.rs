@@ -8,6 +8,7 @@
 //! preemption or not, because every row of `y_t = X w_t` has the same
 //! value whichever worker computes it.
 
+use std::cell::Cell;
 use std::net::TcpListener;
 use std::sync::Arc;
 use std::thread::JoinHandle;
@@ -18,14 +19,18 @@ use usec::config::types::{AssignPolicy, BackendKind, RunConfig};
 use usec::error::Result;
 use usec::linalg::{ops, Block};
 use usec::linalg::partition::submatrix_ranges;
+use usec::metrics::{StepRecord, Timeline};
 use usec::net::daemon::{serve_worker, DaemonOpts};
 use usec::net::{
-    Hello, TcpOptions, TcpPeer, TcpTransport, Transport, WorkloadSpec, WIRE_VERSION,
+    Hello, TcpOptions, TcpPeer, TcpTransport, Transport, TransportEvent, WorkloadSpec,
+    WIRE_VERSION,
 };
 use usec::optim::SolveParams;
 use usec::placement::{Placement, PlacementKind};
 use usec::runtime::BackendSpec;
 use usec::sched::master::{Master, MasterConfig};
+use usec::sched::protocol::WorkOrder;
+use usec::sched::{RecoveryPolicy, RecoveryReason};
 
 const Q: usize = 120;
 const STEPS: usize = 24;
@@ -115,6 +120,7 @@ fn tcp_cluster_survives_mid_run_socket_preemption() {
         initial_speeds: vec![1.0; 3],
         row_cost_ns: 0,
         recovery_timeout: Duration::from_secs(20),
+        recovery: RecoveryPolicy::default(),
     })
     .unwrap();
     let host = BackendSpec::Host.instantiate().unwrap();
@@ -172,6 +178,171 @@ fn tcp_cluster_survives_mid_run_socket_preemption() {
     for h in handles {
         h.join().unwrap().unwrap();
     }
+}
+
+/// Transport wrapper that severs one worker's socket at the first receive
+/// of the step — i.e. right after every order shipped, genuinely
+/// mid-step. The reader thread surfaces `Disconnected` and the master's
+/// recovery path must finish the step from surviving replicas.
+struct KillOnFirstRecv<'a> {
+    inner: &'a TcpTransport,
+    victim: usize,
+    killed: Cell<bool>,
+}
+
+impl Transport for KillOnFirstRecv<'_> {
+    fn size(&self) -> usize {
+        self.inner.size()
+    }
+    fn alive(&self) -> Vec<bool> {
+        self.inner.alive()
+    }
+    fn send(&self, worker: usize, order: WorkOrder) -> Result<()> {
+        self.inner.send(worker, order)
+    }
+    fn recv_timeout(&self, timeout: Duration) -> Result<TransportEvent> {
+        if !self.killed.replace(true) {
+            self.inner.kill(self.victim);
+        }
+        self.inner.recv_timeout(timeout)
+    }
+    fn drain(&self) -> Vec<TransportEvent> {
+        self.inner.drain()
+    }
+    fn shutdown(&mut self) {}
+}
+
+/// The flagship recovery scenario: a cyclic `g=6 j=3 S=0` shard cluster
+/// over TCP loses one worker to a socket kill *after* the step's orders
+/// shipped. Without recovery only the coverage timeout could end such a
+/// step; with `--recovery` the master re-plans the victim's rows onto the
+/// surviving replicas and the step completes exactly.
+fn run_mid_step_kill_scenario(nvec: usize) {
+    const Q6: usize = 120;
+    const VICTIM: usize = 1;
+    let (addrs, handles) = start_workers(6);
+    let placement = Placement::build(PlacementKind::Cyclic, 6, 6, 3).unwrap();
+    let spec = WorkloadSpec::RandomDense {
+        q: Q6,
+        r: Q6,
+        seed: 17,
+    };
+    let peers: Vec<TcpPeer> = addrs
+        .iter()
+        .enumerate()
+        .map(|(id, addr)| TcpPeer {
+            addr: addr.clone(),
+            hello: Hello {
+                version: WIRE_VERSION,
+                worker: id,
+                speed: 1.0,
+                tile_rows: 16,
+                backend: BackendKind::Host,
+                g: 6,
+                heartbeat_ms: 100,
+                threads: 1,
+                workload: spec.clone(),
+                // placement-shaped shards: each daemon stores only its
+                // J/G share, so rescuers must be genuine replicas
+                stored: placement.stored_by(id).collect(),
+            },
+            stream_ranges: vec![],
+        })
+        .collect();
+    let transport = TcpTransport::connect(peers, TcpOptions::default()).unwrap();
+    let sub_ranges = submatrix_ranges(Q6, 6).unwrap();
+    let mut master = Master::new(MasterConfig {
+        placement: placement.clone(),
+        sub_ranges,
+        params: SolveParams::with_stragglers(0),
+        policy: AssignPolicy::Heterogeneous,
+        gamma: 0.5,
+        initial_speeds: vec![1.0; 6],
+        // ~200 ms of throttled compute per worker: no report can race
+        // ahead of the scripted kill
+        row_cost_ns: 10_000_000,
+        recovery_timeout: Duration::from_secs(30),
+        recovery: RecoveryPolicy {
+            enabled: true,
+            overdue_factor: 0.9,
+        },
+    })
+    .unwrap();
+
+    let cols: Vec<Vec<f32>> = (0..nvec)
+        .map(|k| {
+            (0..Q6)
+                .map(|i| ((i * (k + 2)) % 11) as f32 * 0.1 - 0.5)
+                .collect()
+        })
+        .collect();
+    let w = Arc::new(Block::from_columns(&cols).unwrap());
+    let chaos = KillOnFirstRecv {
+        inner: &transport,
+        victim: VICTIM,
+        killed: Cell::new(false),
+    };
+    let avail: Vec<usize> = (0..6).collect();
+    let out = master.step(&chaos, 0, &w, &avail, &[]).unwrap();
+
+    assert_eq!(out.nvec, nvec);
+    assert!(!out.reporters.contains(&VICTIM), "the victim cannot report");
+    assert_eq!(out.recoveries.len(), 1, "{:?}", out.recoveries);
+    let ev = &out.recoveries[0];
+    assert_eq!(ev.victim, VICTIM);
+    assert_eq!(ev.reason, RecoveryReason::Disconnected);
+    assert!(ev.rows > 0);
+    assert!(!ev.rescuers.is_empty() && !ev.rescuers.contains(&VICTIM));
+
+    // the assembled product is exact vs the regenerated oracle
+    let oracle = spec.materialize().unwrap();
+    for (k, col) in cols.iter().enumerate() {
+        let want = oracle.matvec(col).unwrap();
+        for (row, e) in want.iter().enumerate() {
+            let a = out.y[row * nvec + k];
+            assert!(
+                (a - e).abs() <= 1e-5,
+                "B={nvec} col {k} row {row}: {a} vs {e}"
+            );
+        }
+    }
+
+    // and the event is machine-readable through Timeline::to_json
+    // (what `--json-out` writes)
+    let mut tl = Timeline::new();
+    tl.push(StepRecord {
+        step: 0,
+        available: 6,
+        reported: out.reporters.len(),
+        stragglers: 0,
+        wall: out.wall,
+        solve: out.solve,
+        predicted_c: out.predicted_c,
+        metric: 0.0,
+        recoveries: out.recoveries.clone(),
+    });
+    let back = usec::util::json::Json::parse(&tl.to_json().to_string()).unwrap();
+    assert_eq!(back.get_usize("recoveries_total"), Some(1));
+    let steps = back.get("timeline").unwrap().items().unwrap();
+    let evs = steps[0].get("recoveries").unwrap().items().unwrap();
+    assert_eq!(evs[0].get_usize("victim"), Some(VICTIM));
+    assert_eq!(evs[0].get_str("reason"), Some("disconnected"));
+
+    let mut transport = transport;
+    transport.shutdown();
+    for h in handles {
+        h.join().unwrap().unwrap();
+    }
+}
+
+#[test]
+fn tcp_recovery_survives_mid_step_socket_kill_at_s0() {
+    run_mid_step_kill_scenario(1);
+}
+
+#[test]
+fn tcp_recovery_survives_mid_step_socket_kill_at_s0_batched() {
+    run_mid_step_kill_scenario(3);
 }
 
 #[test]

@@ -58,6 +58,7 @@ fn pjrt_worker_cluster_matches_host_oracle() {
         initial_speeds: (0..n).map(|i| 1.0 + i as f64 * 0.5).collect(),
         row_cost_ns: 0,
         recovery_timeout: Duration::from_secs(120),
+        recovery: usec::sched::RecoveryPolicy::default(),
     })
     .unwrap();
 

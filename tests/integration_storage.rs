@@ -253,6 +253,7 @@ fn reconnecting_worker_rejoins_at_next_step() {
         initial_speeds: vec![1.0; 3],
         row_cost_ns: 0,
         recovery_timeout: Duration::from_secs(20),
+        recovery: usec::sched::RecoveryPolicy::default(),
     })
     .unwrap();
 
