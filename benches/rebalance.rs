@@ -1,0 +1,122 @@
+//! Rebalance benchmark: static vs adapted placement under speed drift.
+//!
+//! The drift scenario mirrors the paper's premise inverted: the cluster's
+//! *true* speeds are strongly skewed while the master's prior is uniform,
+//! so the frozen placement keeps sub-matrices stranded on slow machines.
+//! The `static` run lives with it; the `adapted` run (`--rebalance`)
+//! re-optimizes the placement from the live EWMA estimates and migrates
+//! shard rows between steps. Both are full elastic power-iteration runs
+//! on the local transport with the speed throttle on, so wall-clock
+//! reflects the schedule the placement allows.
+//!
+//! Run: `cargo bench --bench rebalance [-- --smoke] [-- --json PATH]`
+//!
+//! Results are written as machine-readable JSON (default
+//! `BENCH_rebalance.json`) like the other benchkit targets, so the
+//! adapted-vs-static gap is tracked across commits.
+
+use std::time::Duration;
+
+use usec::config::types::RunConfig;
+use usec::placement::PlacementKind;
+use usec::rebalance::RebalanceConfig;
+use usec::util::benchkit::Bench;
+
+/// A drift-trace run config: true speeds skewed 16:1, uniform prior.
+fn drift_cfg(steps: usize, adapted: bool) -> RunConfig {
+    RunConfig {
+        q: 96,
+        r: 96,
+        g: 6,
+        j: 3,
+        n: 6,
+        placement: PlacementKind::Cyclic,
+        steps,
+        speeds: vec![16.0, 1.0, 1.0, 1.0, 1.0, 8.0],
+        row_cost_ns: 200_000,
+        seed: 23,
+        rebalance: if adapted {
+            RebalanceConfig::enabled()
+        } else {
+            RebalanceConfig::default()
+        },
+        ..Default::default()
+    }
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let smoke = args.iter().any(|a| a == "--smoke");
+    let json_path = args
+        .iter()
+        .position(|a| a == "--json")
+        .and_then(|i| args.get(i + 1))
+        .map(String::as_str)
+        .unwrap_or("BENCH_rebalance.json")
+        .to_string();
+    let (steps, budget, iters) = if smoke {
+        (8, Duration::from_millis(100), 1)
+    } else {
+        (20, Duration::from_secs(2), 8)
+    };
+    let mut bench = Bench::with_budget(budget, iters);
+
+    let mut static_wall = Duration::ZERO;
+    bench.run_units(
+        &format!("power iteration E2E static placement ({steps} steps, drift)"),
+        steps as f64,
+        || {
+            let res = usec::apps::run_power_iteration(&drift_cfg(steps, false))
+                .expect("static run");
+            static_wall = res.timeline.total_wall();
+            res.final_nmse
+        },
+    );
+
+    let mut adapted_wall = Duration::ZERO;
+    let mut migrations = 0usize;
+    let mut migrated_bytes = 0u64;
+    bench.run_units(
+        &format!("power iteration E2E adapted placement ({steps} steps, drift)"),
+        steps as f64,
+        || {
+            let res = usec::apps::run_power_iteration(&drift_cfg(steps, true))
+                .expect("adapted run");
+            adapted_wall = res.timeline.total_wall();
+            migrations = res.timeline.total_migrations();
+            migrated_bytes = res.timeline.total_migrated_bytes();
+            res.final_nmse
+        },
+    );
+
+    // the drift monitor alone (no execution): what a quiet per-step check
+    // costs the master
+    {
+        use usec::linalg::partition::submatrix_ranges;
+        use usec::optim::SolveParams;
+        use usec::placement::Placement;
+        use usec::rebalance::DriftMonitor;
+        let placement = Placement::build(PlacementKind::Cyclic, 6, 6, 3).unwrap();
+        let sub_ranges = submatrix_ranges(96, 6).unwrap();
+        let avail: Vec<usize> = (0..6).collect();
+        let speeds = vec![1.0; 6];
+        let mut monitor = DriftMonitor::new(0.15, 120, 7);
+        bench.run("drift check (quiet cluster, 120 search iters)", || {
+            monitor
+                .check(&placement, &avail, &speeds, &SolveParams::default(), &sub_ranges)
+                .unwrap()
+                .is_none()
+        });
+    }
+
+    println!("{}", bench.table());
+    println!(
+        "last run: static wall {static_wall:?} vs adapted wall {adapted_wall:?} \
+         ({migrations} migrations, {migrated_bytes} bytes moved)"
+    );
+
+    match Bench::write_json(&[&bench], &json_path) {
+        Ok(()) => println!("wrote {json_path}"),
+        Err(e) => eprintln!("could not write {json_path}: {e}"),
+    }
+}

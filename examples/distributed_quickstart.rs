@@ -48,6 +48,21 @@
 //!     --stragglers 0 --recovery --overdue-factor 0.5 --json-out run.json
 //! ```
 //!
+//! Add `--rebalance` and the placement stops being frozen at job start:
+//! between steps the master compares the current placement's expected
+//! time under its *live* EWMA speed estimates against the best placement
+//! a local search finds, and past `--rebalance-threshold` regret it
+//! migrates shard rows to the new layout — make-before-break over the
+//! wire (`PlacementUpdate`/`MigrateAck` + checksummed `Data` chunks),
+//! metered by `--migration-budget` bytes per step, with every move under
+//! `timeline[i].migrations` in the `--json-out` dump:
+//!
+//! ```text
+//! usec master --workers ... --q 1536 --g 3 --j 2 --placement cyclic \
+//!     --rebalance --rebalance-threshold 0.15 \
+//!     --migration-budget 8388608 --row-cost-ns 200000 --json-out run.json
+//! ```
+//!
 //! Either way `--json-out` reports the actual per-worker resident bytes
 //! under `timeline.storage`. Here we spawn the same daemons on threads
 //! and drive the same master code path (`RunConfig.workers` →
@@ -60,14 +75,15 @@ use usec::apps::run_power_iteration;
 use usec::config::types::RunConfig;
 use usec::net::daemon::{serve_worker, DaemonOpts};
 use usec::placement::PlacementKind;
+use usec::rebalance::RebalanceConfig;
 use usec::sched::RecoveryPolicy;
 
 fn main() {
     usec::util::log::init();
 
     // --- "terminals 1-3": three worker daemons on ephemeral ports ---
-    // (each serves three master sessions: the generator-backed run, the
-    // streamed run, and the batched block run below)
+    // (each serves four master sessions: the generator-backed run, the
+    // streamed run, the batched block run, and the rebalanced run below)
     let mut addrs = Vec::new();
     let mut daemons = Vec::new();
     for _ in 0..3 {
@@ -77,7 +93,7 @@ fn main() {
             serve_worker(
                 listener,
                 DaemonOpts {
-                    max_sessions: 3,
+                    max_sessions: 4,
                     ..Default::default()
                 },
             )
@@ -135,8 +151,8 @@ fn main() {
         batch: 4,
         worker_threads: 2,
         recovery: RecoveryPolicy::enabled(),
-        workers: addrs,
-        ..cfg
+        workers: addrs.clone(),
+        ..cfg.clone()
     };
     let batched = run_power_iteration(&batched_cfg).expect("batched run");
     println!(
@@ -146,6 +162,31 @@ fn main() {
     println!(
         "mid-step recoveries needed: {} (healthy run)",
         batched.timeline.total_recoveries()
+    );
+
+    // --- live placement adaptation: --rebalance over the same daemons ---
+    // the true speeds are strongly skewed (machine 2 is 6x the others) but
+    // the master starts from a uniform prior; once the EWMA learns the
+    // skew, the drift monitor fires and shard rows migrate between steps
+    // (PlacementUpdate/MigrateAck + checksummed Data chunks on the wire).
+    let rebalanced_cfg = RunConfig {
+        speeds: vec![1.0, 1.0, 6.0],
+        row_cost_ns: 200_000, // throttle makes the skew measurable
+        rebalance: RebalanceConfig::enabled(),
+        workers: addrs,
+        ..cfg
+    };
+    let rebalanced = run_power_iteration(&rebalanced_cfg).expect("rebalanced run");
+    println!(
+        "rebalanced run:             final NMSE {:.3e}, {} replica move(s), \
+         {} bytes migrated",
+        rebalanced.final_nmse,
+        rebalanced.timeline.total_migrations(),
+        rebalanced.timeline.total_migrated_bytes()
+    );
+    println!(
+        "post-migration per-worker storage: {:?} bytes",
+        rebalanced.timeline.storage_bytes()
     );
 
     // the master's harness sent Shutdown on drop; reap the daemons

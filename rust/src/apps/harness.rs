@@ -21,6 +21,7 @@ use crate::net::{
     WorkloadSpec, DEFAULT_HEARTBEAT_MS, WIRE_VERSION,
 };
 use crate::placement::Placement;
+use crate::rebalance::Rebalancer;
 use crate::runtime::{Backend, BackendSpec};
 use crate::sched::master::{Master, MasterConfig};
 use crate::sched::straggler::StraggleMode;
@@ -39,6 +40,10 @@ pub struct Harness {
     pub trace: ElasticityTrace,
     pub injector: StragglerInjector,
     pub timeline: Timeline,
+    /// Live placement adaptation (`--rebalance`): consulted between
+    /// steps; `None` keeps the placement frozen, bit-identical to the
+    /// classic behaviour.
+    rebalancer: Option<Rebalancer>,
     cfg: RunConfig,
 }
 
@@ -145,7 +150,10 @@ impl Harness {
                     })
                 })
                 .collect::<Result<_>>()?;
-            let data = if cfg.stream_data {
+            // live migration streams replica rows from the master-side
+            // matrix (which the master holds anyway), so --rebalance needs
+            // it attached even for generator-backed workloads
+            let data = if cfg.stream_data || cfg.rebalance.enabled {
                 Some(Arc::clone(&matrix))
             } else {
                 None
@@ -214,6 +222,18 @@ impl Harness {
         let mut timeline = Timeline::new();
         timeline.set_storage_bytes(transport.resident_bytes());
 
+        let rebalancer = if cfg.rebalance.enabled {
+            Some(Rebalancer::new(
+                cfg.rebalance.clone(),
+                sub_ranges.clone(),
+                cfg.r,
+                cfg.solve_params(),
+                cfg.seed ^ 0x5EBA,
+            )?)
+        } else {
+            None
+        };
+
         Ok(Harness {
             placement,
             sub_ranges,
@@ -223,6 +243,7 @@ impl Harness {
             trace,
             injector,
             timeline,
+            rebalancer,
             cfg: cfg.clone(),
         })
     }
@@ -278,6 +299,11 @@ impl Harness {
                 .into_iter()
                 .filter(|&n| alive.get(n).copied().unwrap_or(false))
                 .collect();
+            // live placement adaptation: between steps (before dispatch)
+            // the rebalancer may migrate replica rows and swap the
+            // effective placement — assignments, feasibility, and recovery
+            // below all see the post-migration layout
+            let migrations = self.rebalance_tick(step, &avail);
             if self
                 .placement
                 .check_feasible(&avail, self.cfg.stragglers)
@@ -294,6 +320,7 @@ impl Harness {
                     predicted_c: f64::NAN,
                     metric: last_metric,
                     recoveries: Vec::new(),
+                    migrations,
                 });
                 continue;
             }
@@ -314,6 +341,7 @@ impl Harness {
                 predicted_c: out.predicted_c,
                 metric,
                 recoveries: out.recoveries,
+                migrations,
             });
             w = Arc::new(next);
         }
@@ -322,6 +350,42 @@ impl Harness {
 
     pub fn config(&self) -> &RunConfig {
         &self.cfg
+    }
+
+    /// One inter-step rebalance window: consult the drift monitor, execute
+    /// up to one byte-budget of replica moves, install the new effective
+    /// placement in the master, and re-report per-worker resident storage
+    /// (so `timeline.storage.per_worker_bytes` reflects every storage
+    /// change, not just the handshake snapshot). Failures are logged and
+    /// the step proceeds on the unchanged placement — rebalancing is an
+    /// optimization, never a reason to kill a run.
+    fn rebalance_tick(
+        &mut self,
+        step: usize,
+        avail: &[usize],
+    ) -> Vec<crate::rebalance::MigrationRecord> {
+        let Some(rb) = self.rebalancer.as_mut() else {
+            return Vec::new();
+        };
+        let speeds = self.master.speed_estimate().to_vec();
+        match rb.tick(step, &self.transport, self.master.placement(), avail, &speeds) {
+            Ok((placement, records)) => {
+                if !records.is_empty() {
+                    if let Err(e) = self.master.set_placement(placement.clone()) {
+                        crate::log_warn!("step {step}: placement swap rejected: {e}");
+                        return Vec::new();
+                    }
+                    self.placement = placement;
+                    self.timeline
+                        .set_storage_bytes(self.transport.resident_bytes());
+                }
+                records
+            }
+            Err(e) => {
+                crate::log_warn!("step {step}: rebalance tick failed: {e}");
+                Vec::new()
+            }
+        }
     }
 }
 

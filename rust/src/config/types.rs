@@ -9,6 +9,7 @@ use crate::cli::{ArgSpec, Args};
 use crate::error::{Error, Result};
 use crate::optim::{SolveParams, SolverKind};
 use crate::placement::PlacementKind;
+use crate::rebalance::RebalanceConfig;
 use crate::sched::recovery::RecoveryPolicy;
 
 /// Which compute backend workers use.
@@ -135,6 +136,11 @@ pub struct RunConfig {
     /// on `S ≥ 1` redundancy or the coverage timeout. Disabled by default
     /// (bit-identical to the classic behaviour).
     pub recovery: RecoveryPolicy,
+    /// Live placement adaptation (`--rebalance` / `--rebalance-threshold`
+    /// / `--migration-budget`): re-optimize the placement online from the
+    /// live EWMA speed estimates and migrate shard rows between steps.
+    /// Disabled by default (bit-identical to the frozen placement).
+    pub rebalance: RebalanceConfig,
     /// Path for the machine-readable per-step timeline dump (JSON). Empty
     /// ⇒ no dump.
     pub json_out: String,
@@ -170,6 +176,7 @@ impl Default for RunConfig {
             workers: Vec::new(),
             stream_data: false,
             recovery: RecoveryPolicy::default(),
+            rebalance: RebalanceConfig::default(),
             json_out: String::new(),
         }
     }
@@ -229,6 +236,23 @@ impl RunConfig {
                 "declare a silent worker overdue after this fraction of \
                  the recovery timeout (with --recovery)",
             ),
+            ArgSpec::flag(
+                "rebalance",
+                "re-optimize the placement online from live speed \
+                 estimates and migrate shard rows between steps",
+            ),
+            ArgSpec::opt(
+                "rebalance-threshold",
+                "0.15",
+                "relative expected-time regret that triggers a migration \
+                 plan (with --rebalance)",
+            ),
+            ArgSpec::opt(
+                "migration-budget",
+                "8388608",
+                "max bytes of shard rows migrated between consecutive \
+                 steps (0 = unlimited; with --rebalance)",
+            ),
             ArgSpec::opt("json-out", "", "write the per-step timeline JSON here"),
         ]
     }
@@ -265,6 +289,12 @@ impl RunConfig {
             recovery: RecoveryPolicy {
                 enabled: a.has("recovery"),
                 overdue_factor: a.get_f64("overdue-factor")?,
+            },
+            rebalance: RebalanceConfig {
+                enabled: a.has("rebalance"),
+                threshold: a.get_f64("rebalance-threshold")?,
+                budget_bytes: a.get_u64("migration-budget")?,
+                ..Default::default()
             },
             json_out: a.get("json-out").unwrap_or("").to_string(),
         };
@@ -331,6 +361,7 @@ impl RunConfig {
             return Err(Error::Config("threads must be at least 1".into()));
         }
         self.recovery.validate()?;
+        self.rebalance.validate()?;
         if !self.workers.is_empty() && self.workers.len() != self.n {
             return Err(Error::Config(format!(
                 "{} worker addresses given for N={} machines",
@@ -494,6 +525,40 @@ mod tests {
             recovery: RecoveryPolicy {
                 enabled: true,
                 overdue_factor: 0.0,
+            },
+            ..Default::default()
+        };
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn rebalance_flags_parse_and_validate() {
+        let argv: Vec<String> = [
+            "--rebalance",
+            "--rebalance-threshold",
+            "0.3",
+            "--migration-budget",
+            "65536",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        let a = Args::parse(&argv, &RunConfig::arg_specs()).unwrap();
+        let cfg = RunConfig::from_args(&a).unwrap();
+        assert!(cfg.rebalance.enabled);
+        assert!((cfg.rebalance.threshold - 0.3).abs() < 1e-12);
+        assert_eq!(cfg.rebalance.budget_bytes, 65536);
+
+        // default: off, bit-identical to the frozen-placement behaviour
+        let none = Args::parse(&[], &RunConfig::arg_specs()).unwrap();
+        assert!(!RunConfig::from_args(&none).unwrap().rebalance.enabled);
+
+        // an enabled config rejects a degenerate threshold
+        let bad = RunConfig {
+            rebalance: RebalanceConfig {
+                enabled: true,
+                threshold: 0.0,
+                ..Default::default()
             },
             ..Default::default()
         };

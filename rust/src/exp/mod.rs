@@ -79,6 +79,14 @@ fn run_and_report(cfg: &RunConfig) -> Result<()> {
             shares.join(", ")
         );
     }
+    let migrated = res.timeline.total_migrations();
+    if migrated > 0 {
+        println!(
+            "live rebalancing: {migrated} replica move(s), {} bytes of shard \
+             rows migrated between steps",
+            res.timeline.total_migrated_bytes()
+        );
+    }
     let recovered = res.timeline.total_recoveries();
     if recovered > 0 {
         let rows: usize = res
@@ -108,6 +116,10 @@ fn run_and_report(cfg: &RunConfig) -> Result<()> {
             .val(
                 "recovery",
                 crate::util::json::Json::Bool(cfg.recovery.enabled),
+            )
+            .val(
+                "rebalance",
+                crate::util::json::Json::Bool(cfg.rebalance.enabled),
             )
             .num("seed", cfg.seed as f64)
             .num("final_nmse", res.final_nmse)

@@ -39,6 +39,15 @@
 //!   ([`optim::recovery`]) and shipped as supplementary orders for the
 //!   same step, with per-step events in [`metrics::Timeline`] /
 //!   `--json-out`.
+//! * [`rebalance`] — live placement adaptation: a drift monitor compares
+//!   the current placement's expected time under the *live* EWMA
+//!   estimates against a searched placement
+//!   ([`placement::optimizer::local_search_from_samples`]) and, past a
+//!   regret threshold (`--rebalance`), migrates shard rows between steps
+//!   over the wire (protocol v4 `PlacementUpdate`/`MigrateAck` + the
+//!   checksummed `Data` chunks) — make-before-break and byte-budgeted
+//!   (`--migration-budget`), with every move recorded in
+//!   [`metrics::Timeline`] / `--json-out`.
 //! * [`storage`] — placement-shaped storage: the [`storage::StorageView`]
 //!   trait kernels read through, implemented by both the full
 //!   [`linalg::Matrix`] (local simulator mode, zero-copy shared `Arc`)
@@ -89,6 +98,7 @@ pub mod metrics;
 pub mod net;
 pub mod optim;
 pub mod placement;
+pub mod rebalance;
 pub mod runtime;
 pub mod sched;
 pub mod storage;

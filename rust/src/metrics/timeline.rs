@@ -2,6 +2,7 @@
 
 use std::time::Duration;
 
+use crate::rebalance::MigrationRecord;
 use crate::sched::recovery::RecoveryEvent;
 use crate::util::json::{Json, ObjBuilder};
 
@@ -26,6 +27,10 @@ pub struct StepRecord {
     /// Mid-step recoveries: victims whose uncovered rows were
     /// re-dispatched to surviving replicas (empty unless `--recovery`).
     pub recoveries: Vec<RecoveryEvent>,
+    /// Replica moves executed in this step's inter-step window (empty
+    /// unless `--rebalance` fired): bytes moved plus the before/after
+    /// expected time of the plan they belong to.
+    pub migrations: Vec<MigrationRecord>,
 }
 
 /// An append-only run log.
@@ -123,6 +128,21 @@ impl Timeline {
                             .build()
                     })
                     .collect();
+                let migrations: Vec<Json> = s
+                    .migrations
+                    .iter()
+                    .map(|m| {
+                        ObjBuilder::new()
+                            .num("g", m.g as f64)
+                            .num("from", m.from as f64)
+                            .num("to", m.to as f64)
+                            .num("rows", m.rows as f64)
+                            .num("bytes", m.bytes as f64)
+                            .val("expected_before", num_or_null(m.expected_before))
+                            .val("expected_after", num_or_null(m.expected_after))
+                            .build()
+                    })
+                    .collect();
                 ObjBuilder::new()
                     .num("step", s.step as f64)
                     .num("available", s.available as f64)
@@ -134,6 +154,7 @@ impl Timeline {
                     .val("predicted_c", num_or_null(s.predicted_c))
                     .val("metric", num_or_null(s.metric))
                     .val("recoveries", Json::Arr(recoveries))
+                    .val("migrations", Json::Arr(migrations))
                     .build()
             })
             .collect();
@@ -153,6 +174,8 @@ impl Timeline {
             .num("steps", self.steps.len() as f64)
             .num("total_wall_s", self.total_wall().as_secs_f64())
             .num("recoveries_total", self.total_recoveries() as f64)
+            .num("migrations_total", self.total_migrations() as f64)
+            .num("migrated_bytes_total", self.total_migrated_bytes() as f64)
             .val("storage", storage)
             .val("timeline", Json::Arr(steps))
             .build()
@@ -161,6 +184,19 @@ impl Timeline {
     /// Mid-step recoveries across the whole run.
     pub fn total_recoveries(&self) -> usize {
         self.steps.iter().map(|s| s.recoveries.len()).sum()
+    }
+
+    /// Replica moves across the whole run (`--rebalance`).
+    pub fn total_migrations(&self) -> usize {
+        self.steps.iter().map(|s| s.migrations.len()).sum()
+    }
+
+    /// Payload bytes migrated across the whole run.
+    pub fn total_migrated_bytes(&self) -> u64 {
+        self.steps
+            .iter()
+            .flat_map(|s| s.migrations.iter().map(|m| m.bytes))
+            .sum()
     }
 
     /// CSV dump (step, elapsed, metric, available, reported, solve_ms).
@@ -198,6 +234,7 @@ mod tests {
             predicted_c: 0.15,
             metric,
             recoveries: Vec::new(),
+            migrations: Vec::new(),
         }
     }
 
@@ -271,6 +308,38 @@ mod tests {
         let rescuers = evs[0].get("rescuers").unwrap().items().unwrap();
         assert_eq!(rescuers.len(), 2);
         assert!(steps[1].get("recoveries").unwrap().items().unwrap().is_empty());
+    }
+
+    #[test]
+    fn migration_records_surface_in_json() {
+        let mut t = Timeline::new();
+        let mut r = rec(0, 10, 0.5);
+        r.migrations.push(MigrationRecord {
+            g: 2,
+            from: 4,
+            to: 0,
+            rows: 20,
+            bytes: 9600,
+            expected_before: 0.5,
+            expected_after: 0.31,
+        });
+        t.push(r);
+        t.push(rec(1, 10, 0.1));
+        assert_eq!(t.total_migrations(), 1);
+        assert_eq!(t.total_migrated_bytes(), 9600);
+        let back = crate::util::json::Json::parse(&t.to_json().to_string()).unwrap();
+        assert_eq!(back.get_usize("migrations_total"), Some(1));
+        assert_eq!(back.get_usize("migrated_bytes_total"), Some(9600));
+        let steps = back.get("timeline").unwrap().items().unwrap();
+        let moves = steps[0].get("migrations").unwrap().items().unwrap();
+        assert_eq!(moves.len(), 1);
+        assert_eq!(moves[0].get_usize("g"), Some(2));
+        assert_eq!(moves[0].get_usize("from"), Some(4));
+        assert_eq!(moves[0].get_usize("to"), Some(0));
+        assert_eq!(moves[0].get_usize("bytes"), Some(9600));
+        assert!((moves[0].get_num("expected_before").unwrap() - 0.5).abs() < 1e-12);
+        assert!((moves[0].get_num("expected_after").unwrap() - 0.31).abs() < 1e-12);
+        assert!(steps[1].get("migrations").unwrap().items().unwrap().is_empty());
     }
 
     #[test]

@@ -16,6 +16,8 @@
 //! | `9` | `StorageReady` | worker → master | worker `u32`, resident_bytes `u64` |
 //! | `10` | `Work` (block) | master → worker | like tag 3 with `B u32` before `w`; `w` is `len·B` interleaved values |
 //! | `11` | `Report` (block) | worker → master | like tag 4 with `B u32` before the segments; segment values are `rows·B` interleaved |
+//! | `12` | `PlacementUpdate` | master → worker | seq `u64`, expect_rows `u64`, evict `u32` × {lo `u64`, hi `u64`} |
+//! | `13` | `MigrateAck` | worker → master | worker `u32`, seq `u64`, ok `u8`, resident_bytes `u64` |
 //!
 //! `vec<f32>` is a `u32` element count followed by raw LE `f32`s; `str` is
 //! a `u32` byte count followed by UTF-8. The workload spec is kind `u8`
@@ -61,8 +63,12 @@ use super::transport::WorkloadSpec;
 /// `Hello` stored-sub-matrix list, the `Streamed` workload kind, and the
 /// `Data`/`StorageReady` messages. Version 3 added the `Hello` compute-
 /// thread count and the block `Work`/`Report` tags (10/11); `B = 1`
-/// traffic still encodes byte-identically to version 2.
-pub const WIRE_VERSION: u16 = 3;
+/// traffic still encodes byte-identically to version 2. Version 4 added
+/// the live-migration tags `PlacementUpdate` (12) / `MigrateAck` (13);
+/// every v3 tag layout is unchanged, so v4 traffic that sends no
+/// migration tags encodes byte-identically to v3 (only the advertised
+/// handshake version differs).
+pub const WIRE_VERSION: u16 = 4;
 
 /// Handshake magic ("USEC" in ASCII) — catches non-USEC peers immediately.
 pub const HELLO_MAGIC: u32 = 0x5553_4543;
@@ -78,6 +84,8 @@ const TAG_DATA: u8 = 8;
 const TAG_STORAGE_READY: u8 = 9;
 const TAG_WORK_BLOCK: u8 = 10;
 const TAG_REPORT_BLOCK: u8 = 11;
+const TAG_PLACEMENT_UPDATE: u8 = 12;
+const TAG_MIGRATE_ACK: u8 = 13;
 
 /// Sanity cap on list counts (tasks, segments). Real runs are orders of
 /// magnitude below; a malformed count is rejected before allocation.
@@ -148,6 +156,24 @@ pub fn data_checksum(values: &[f32]) -> u32 {
     h
 }
 
+/// Live storage migration order (master → worker), protocol v4
+/// ([`crate::rebalance`]). When `expect_rows > 0`, FNV-checksummed
+/// [`DataFrame`]s follow carrying exactly that many incoming rows
+/// (`done = 1` on the last chunk); the worker absorbs them *first* and
+/// only then evicts `evict` (global row ranges it must stop storing), so
+/// a failed update never loses rows. Either way the worker answers with
+/// [`WireMsg::MigrateAck`] carrying the outcome and its new resident
+/// byte count.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PlacementUpdate {
+    /// Correlates the ack with the order (unique per migration).
+    pub seq: u64,
+    /// Rows about to arrive as `Data` frames (0 = pure eviction).
+    pub expect_rows: u64,
+    /// Global row ranges to evict once the incoming rows are resident.
+    pub evict: Vec<RowRange>,
+}
+
 /// Every message that can travel on the wire.
 #[derive(Debug, Clone, PartialEq)]
 pub enum WireMsg {
@@ -171,6 +197,22 @@ pub enum WireMsg {
     StorageReady {
         worker: usize,
         /// Matrix payload bytes actually resident on the worker.
+        resident_bytes: u64,
+    },
+    /// Live migration order (master → worker), wire v4.
+    PlacementUpdate(PlacementUpdate),
+    /// Migration outcome (worker → master), wire v4. Sent for rejected
+    /// updates too (`ok = false`), so the master learns of a failure
+    /// immediately instead of burning its ack timeout.
+    MigrateAck {
+        worker: usize,
+        /// Echoes [`PlacementUpdate::seq`].
+        seq: u64,
+        /// Whether the update was applied (`false` = rejected; the
+        /// worker's storage keeps whatever state the failure left).
+        ok: bool,
+        /// Matrix payload bytes resident after the update (truthful on
+        /// both outcomes).
         resident_bytes: u64,
     },
 }
@@ -360,6 +402,30 @@ pub fn encode(msg: &WireMsg) -> Vec<u8> {
         } => {
             let mut e = Enc::new(TAG_STORAGE_READY);
             e.u32(*worker as u32);
+            e.u64(*resident_bytes);
+            e.buf
+        }
+        WireMsg::PlacementUpdate(u) => {
+            let mut e = Enc::new(TAG_PLACEMENT_UPDATE);
+            e.u64(u.seq);
+            e.u64(u.expect_rows);
+            e.u32(u.evict.len() as u32);
+            for r in &u.evict {
+                e.u64(r.lo as u64);
+                e.u64(r.hi as u64);
+            }
+            e.buf
+        }
+        WireMsg::MigrateAck {
+            worker,
+            seq,
+            ok,
+            resident_bytes,
+        } => {
+            let mut e = Enc::new(TAG_MIGRATE_ACK);
+            e.u32(*worker as u32);
+            e.u64(*seq);
+            e.u8(u8::from(*ok));
             e.u64(*resident_bytes);
             e.buf
         }
@@ -661,6 +727,36 @@ pub fn decode(payload: &[u8]) -> Result<WireMsg> {
                 resident_bytes,
             }
         }
+        TAG_PLACEMENT_UPDATE => {
+            let seq = d.u64()?;
+            let expect_rows = d.u64()?;
+            let n = d.list_len("evict range")?;
+            let mut evict = Vec::with_capacity(n);
+            for _ in 0..n {
+                evict.push(dec_row_range(&mut d)?);
+            }
+            WireMsg::PlacementUpdate(PlacementUpdate {
+                seq,
+                expect_rows,
+                evict,
+            })
+        }
+        TAG_MIGRATE_ACK => {
+            let worker = d.u32()? as usize;
+            let seq = d.u64()?;
+            let ok = match d.u8()? {
+                0 => false,
+                1 => true,
+                other => return Err(Error::wire(format!("unknown ack status {other}"))),
+            };
+            let resident_bytes = d.u64()?;
+            WireMsg::MigrateAck {
+                worker,
+                seq,
+                ok,
+                resident_bytes,
+            }
+        }
         other => return Err(Error::wire(format!("unknown message tag {other}"))),
     };
     d.finish()?;
@@ -933,6 +1029,108 @@ mod tests {
         e2.u32(data_checksum(&bad.values));
         e2.f32s(&bad.values);
         assert!(decode(&e2.buf).is_err());
+    }
+
+    #[test]
+    fn migration_tags_roundtrip_and_reject_truncation() {
+        let update = WireMsg::PlacementUpdate(PlacementUpdate {
+            seq: 42,
+            expect_rows: 40,
+            evict: vec![RowRange::new(10, 20), RowRange::new(30, 35)],
+        });
+        roundtrip(update.clone());
+        roundtrip(WireMsg::PlacementUpdate(PlacementUpdate {
+            seq: 0,
+            expect_rows: 0,
+            evict: vec![],
+        }));
+        roundtrip(WireMsg::MigrateAck {
+            worker: 3,
+            seq: 42,
+            ok: true,
+            resident_bytes: 57_600,
+        });
+        roundtrip(WireMsg::MigrateAck {
+            worker: 0,
+            seq: 1,
+            ok: false,
+            resident_bytes: 0,
+        });
+        for msg in [
+            update,
+            WireMsg::MigrateAck {
+                worker: 1,
+                seq: 7,
+                ok: true,
+                resident_bytes: 8,
+            },
+        ] {
+            let bytes = encode(&msg);
+            for cut in 0..bytes.len() {
+                assert!(decode(&bytes[..cut]).is_err(), "prefix {cut} decoded");
+            }
+        }
+        // inverted eviction range rejected
+        let mut e = Enc::new(TAG_PLACEMENT_UPDATE);
+        e.u64(1); // seq
+        e.u64(0); // expect_rows
+        e.u32(1); // one range
+        e.u64(9); // lo
+        e.u64(2); // hi < lo
+        assert!(decode(&e.buf).is_err());
+        // unknown ack status byte rejected
+        let mut e = Enc::new(TAG_MIGRATE_ACK);
+        e.u32(0); // worker
+        e.u64(1); // seq
+        e.u8(7); // not 0/1
+        e.u64(0); // resident
+        assert!(decode(&e.buf).is_err());
+    }
+
+    #[test]
+    fn v4_keeps_every_v3_tag_layout() {
+        // v4 only *adds* tags 12/13; a capture of v3 traffic must decode
+        // (and re-encode) byte-identically, so a rebalance-off run is
+        // indistinguishable on the wire apart from the advertised version
+        assert_eq!(WIRE_VERSION, 4);
+        let mut want = Enc::new(TAG_REPORT);
+        want.u32(2); // worker
+        want.u64(9); // step
+        want.u64(1_234_000); // elapsed ns
+        want.u8(1); // speed present
+        want.f64(0.75);
+        want.u32(1); // one segment
+        want.u64(100);
+        want.u64(103);
+        want.f32s(&[1.0, 2.0, 3.0]);
+        let report = WireMsg::Report(WorkerReport {
+            worker: 2,
+            step: 9,
+            segments: vec![Segment {
+                rows: RowRange::new(100, 103),
+                values: vec![1.0, 2.0, 3.0],
+            }],
+            nvec: 1,
+            measured_speed: Some(0.75),
+            elapsed: Duration::from_micros(1234),
+        });
+        assert_eq!(encode(&report), want.buf, "tag-4 layout changed in v4");
+
+        let mut want = Enc::new(TAG_DATA);
+        let values = vec![0.5f32, -1.5];
+        want.u64(4);
+        want.u64(5);
+        want.u32(2);
+        want.u8(1);
+        want.u32(data_checksum(&values));
+        want.f32s(&values);
+        let data = WireMsg::Data(DataFrame {
+            rows: RowRange::new(4, 5),
+            cols: 2,
+            done: true,
+            values,
+        });
+        assert_eq!(encode(&data), want.buf, "tag-8 layout changed in v4");
     }
 
     #[test]

@@ -22,6 +22,12 @@
 //! ([`crate::net::WorkloadSpec::Streamed`]). The daemon reports its
 //! actual resident byte count in `StorageReady`, which is what
 //! `--json-out` surfaces per worker.
+//!
+//! Storage is **live** (wire v4): a `PlacementUpdate` between orders
+//! evicts named row ranges and/or absorbs master-streamed rows into the
+//! resident shard ([`crate::rebalance`] drives this when drift makes the
+//! placement stale), acknowledged with a `MigrateAck` carrying the new
+//! resident byte count.
 
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -30,7 +36,7 @@ use std::time::Duration;
 
 use crate::cli::{ArgSpec, Args};
 use crate::error::{Error, Result};
-use crate::linalg::partition::{submatrix_ranges, TilePlan};
+use crate::linalg::partition::{submatrix_ranges, RowRange, TilePlan};
 use crate::runtime::BackendSpec;
 use crate::sched::worker::{execute_order, ExecScratch, WorkerConfig, WorkerStorage};
 use crate::storage::{coalesce_sub_ranges, RowShard, StorageView, StoreHandle};
@@ -92,6 +98,41 @@ pub fn serve_worker(listener: TcpListener, opts: DaemonOpts) -> Result<()> {
     }
 }
 
+/// Absorb one master-streamed sequence of checksummed `Data` frames
+/// (terminated by the `done = 1` chunk), feeding each chunk to `insert`.
+/// Shared by handshake storage streaming and live migration — the two
+/// paths must never diverge on the protocol. Returns the rows received.
+fn absorb_data_frames<R: std::io::Read>(
+    reader: &mut R,
+    cols: usize,
+    mut insert: impl FnMut(RowRange, Vec<f32>) -> Result<()>,
+) -> Result<u64> {
+    let mut received = 0u64;
+    loop {
+        match codec::read_msg(reader)? {
+            WireMsg::Data(d) => {
+                if d.cols != cols {
+                    return Err(Error::wire(format!(
+                        "data chunk has {} cols, expected {cols}",
+                        d.cols
+                    )));
+                }
+                received += d.rows.len() as u64;
+                insert(d.rows, d.values)?;
+                if d.done {
+                    break;
+                }
+            }
+            other => {
+                return Err(Error::wire(format!(
+                    "expected Data during row streaming, got {other:?}"
+                )))
+            }
+        }
+    }
+    Ok(received)
+}
+
 /// Materialize the placement-shaped storage the `Hello` prescribes:
 /// regenerate from the workload spec (keeping only the placed rows when a
 /// proper subset is stored), or assemble streamed `Data` frames into a
@@ -101,27 +142,7 @@ fn materialize_storage(stream: &TcpStream, hello: &Hello) -> Result<StoreHandle>
     let r = hello.workload.cols();
     if hello.workload.is_streamed() {
         let mut shard = RowShard::new(q, r);
-        loop {
-            match codec::read_msg(&mut &*stream)? {
-                WireMsg::Data(d) => {
-                    if d.cols != r {
-                        return Err(Error::wire(format!(
-                            "data chunk has {} cols, workload says {r}",
-                            d.cols
-                        )));
-                    }
-                    shard.insert(d.rows, d.values)?;
-                    if d.done {
-                        break;
-                    }
-                }
-                other => {
-                    return Err(Error::wire(format!(
-                        "expected Data during storage streaming, got {other:?}"
-                    )))
-                }
-            }
-        }
+        absorb_data_frames(&mut &*stream, r, |rows, values| shard.insert(rows, values))?;
         return Ok(StoreHandle::Shard(Arc::new(shard)));
     }
 
@@ -181,7 +202,7 @@ fn serve_session(stream: TcpStream, opts: &DaemonOpts) -> Result<()> {
     let store = materialize_storage(&stream, &hello)?;
     let resident_bytes = store.resident_bytes() as u64;
     let sub_ranges = Arc::new(submatrix_ranges(hello.workload.rows(), hello.g)?);
-    let cfg = WorkerConfig {
+    let mut cfg = WorkerConfig {
         id: hello.worker,
         backend: BackendSpec::from_kind(hello.backend, crate::apps::harness::artifact_dir()),
         speed: hello.speed,
@@ -283,6 +304,41 @@ fn serve_session(stream: TcpStream, opts: &DaemonOpts) -> Result<()> {
                     }
                 }
             }
+            Ok(WireMsg::PlacementUpdate(update)) => {
+                // live migration (wire v4): absorb streamed rows, then
+                // evict, then acknowledge the outcome — `ok = false` tells
+                // the master immediately (no ack-timeout burn) and
+                // guarantees no rows were lost
+                let ok = match apply_placement_update(&mut cfg, &mut reader, &update) {
+                    Ok(()) => {
+                        crate::log_info!(
+                            "worker daemon: placement update seq {} applied \
+                             ({} rows resident)",
+                            update.seq,
+                            cfg.storage.store.resident_rows()
+                        );
+                        true
+                    }
+                    Err(e) => {
+                        crate::log_warn!(
+                            "worker daemon: placement update seq {} rejected: {e}",
+                            update.seq
+                        );
+                        false
+                    }
+                };
+                if let Err(e) = codec::write_msg(
+                    &mut *lock(&writer),
+                    &WireMsg::MigrateAck {
+                        worker: cfg.id,
+                        seq: update.seq,
+                        ok,
+                        resident_bytes: cfg.storage.store.resident_bytes() as u64,
+                    },
+                ) {
+                    break Err(e);
+                }
+            }
             Ok(WireMsg::Shutdown) => break Ok(()),
             Ok(other) => {
                 crate::log_debug!("worker daemon: ignoring unexpected message {other:?}");
@@ -295,6 +351,35 @@ fn serve_session(stream: TcpStream, opts: &DaemonOpts) -> Result<()> {
         let _ = h.join();
     }
     result
+}
+
+/// Apply one live-migration order ([`crate::net::codec::PlacementUpdate`]):
+/// absorb `expect_rows` incoming rows from checksummed `Data` frames (the
+/// same [`absorb_data_frames`] loop the streamed handshake uses), then
+/// evict the named global row ranges. Absorb-first matters: a mid-stream
+/// failure must leave the evicted rows untouched, so a nacked update
+/// really means "nothing was lost" — the transient cost is holding both
+/// copies until the stream completes. Chunk re-sends are idempotent
+/// ([`StoreHandle::insert_rows`]), so a retried move converges.
+fn apply_placement_update(
+    cfg: &mut WorkerConfig,
+    reader: &mut TcpStream,
+    update: &codec::PlacementUpdate,
+) -> Result<()> {
+    let cols = cfg.storage.store.cols();
+    if update.expect_rows > 0 {
+        let store = &mut cfg.storage.store;
+        let received =
+            absorb_data_frames(reader, cols, |rows, values| store.insert_rows(rows, values))?;
+        if received != update.expect_rows {
+            return Err(Error::wire(format!(
+                "migration stream delivered {received} of {} announced rows",
+                update.expect_rows
+            )));
+        }
+    }
+    cfg.storage.store.evict_rows(&update.evict)?;
+    Ok(())
 }
 
 /// Reject orders a malformed/hostile master could send. Task geometry
@@ -532,6 +617,175 @@ mod tests {
                 }
                 other => panic!("expected Report, got {other:?}"),
             }
+        }
+        codec::write_msg(&mut &stream, &WireMsg::Shutdown).unwrap();
+        h.join().unwrap().unwrap();
+    }
+
+    #[test]
+    fn daemon_applies_live_placement_updates() {
+        use crate::net::PlacementUpdate;
+
+        let (addr, h) = spawn_daemon();
+        let stream = TcpStream::connect(addr).unwrap();
+        stream
+            .set_read_timeout(Some(Duration::from_secs(5)))
+            .unwrap();
+        // shard worker: stores sub-matrix 0 of G=2 (global rows 0..8)
+        let mut hello = test_hello(5);
+        hello.stored = vec![0];
+        codec::write_msg(&mut &stream, &WireMsg::Hello(hello)).unwrap();
+        match codec::read_msg(&mut &stream).unwrap() {
+            WireMsg::HelloAck(_) => {}
+            other => panic!("expected HelloAck, got {other:?}"),
+        }
+        assert_eq!(read_storage_ready(&stream), 8 * 16 * 4);
+
+        // gain sub-matrix 1 (rows 8..16): announce, stream, expect the ack
+        codec::write_msg(
+            &mut &stream,
+            &WireMsg::PlacementUpdate(PlacementUpdate {
+                seq: 1,
+                expect_rows: 8,
+                evict: vec![],
+            }),
+        )
+        .unwrap();
+        let spec = WorkloadSpec::RandomDense {
+            q: 16,
+            r: 16,
+            seed: 5,
+        };
+        let oracle = spec.materialize().unwrap();
+        for (lo, hi, done) in [(8usize, 12usize, false), (12, 16, true)] {
+            codec::write_msg(
+                &mut &stream,
+                &WireMsg::Data(DataFrame {
+                    rows: RowRange::new(lo, hi),
+                    cols: 16,
+                    done,
+                    values: oracle.row_block(lo, hi).to_vec(),
+                }),
+            )
+            .unwrap();
+        }
+        match codec::read_msg(&mut &stream).unwrap() {
+            WireMsg::MigrateAck {
+                worker,
+                seq,
+                ok,
+                resident_bytes,
+            } => {
+                assert_eq!((worker, seq, ok), (5, 1, true));
+                assert_eq!(resident_bytes, 16 * 16 * 4);
+            }
+            other => panic!("expected MigrateAck, got {other:?}"),
+        }
+        // shed sub-matrix 0 (rows 0..8): pure eviction, acked with the
+        // shrunken residency — and an order over the evicted rows now fails
+        codec::write_msg(
+            &mut &stream,
+            &WireMsg::PlacementUpdate(PlacementUpdate {
+                seq: 2,
+                expect_rows: 0,
+                evict: vec![RowRange::new(0, 8)],
+            }),
+        )
+        .unwrap();
+        match codec::read_msg(&mut &stream).unwrap() {
+            WireMsg::MigrateAck {
+                seq,
+                ok,
+                resident_bytes,
+                ..
+            } => {
+                assert_eq!((seq, ok), (2, true));
+                assert_eq!(resident_bytes, 8 * 16 * 4);
+            }
+            other => panic!("expected MigrateAck, got {other:?}"),
+        }
+        {
+            use crate::linalg::Block;
+            use crate::optim::Task;
+            use crate::sched::protocol::WorkOrder;
+            // rows of the evicted sub-matrix are gone; rows of the gained
+            // one compute fine
+            for (g, ok) in [(0usize, false), (1usize, true)] {
+                codec::write_msg(
+                    &mut &stream,
+                    &WireMsg::Work(WorkOrder {
+                        step: 9,
+                        w: Arc::new(Block::single(vec![0.25f32; 16])),
+                        tasks: vec![Task {
+                            g,
+                            rows: RowRange::new(0, 4),
+                        }],
+                        row_cost_ns: 0,
+                        straggle: None,
+                    }),
+                )
+                .unwrap();
+                match codec::read_msg(&mut &stream).unwrap() {
+                    WireMsg::Report(r) if ok => assert_eq!(r.segments.len(), 1),
+                    WireMsg::Failed { .. } if !ok => {}
+                    other => panic!("sub-matrix {g}: unexpected reply {other:?}"),
+                }
+            }
+        }
+        codec::write_msg(&mut &stream, &WireMsg::Shutdown).unwrap();
+        h.join().unwrap().unwrap();
+    }
+
+    #[test]
+    fn daemon_rejects_bad_migration_with_immediate_nack() {
+        use crate::net::PlacementUpdate;
+
+        let (addr, h) = spawn_daemon();
+        let stream = TcpStream::connect(addr).unwrap();
+        stream
+            .set_read_timeout(Some(Duration::from_secs(5)))
+            .unwrap();
+        let mut hello = test_hello(6);
+        hello.stored = vec![0];
+        codec::write_msg(&mut &stream, &WireMsg::Hello(hello)).unwrap();
+        match codec::read_msg(&mut &stream).unwrap() {
+            WireMsg::HelloAck(_) => {}
+            other => panic!("expected HelloAck, got {other:?}"),
+        }
+        assert_eq!(read_storage_ready(&stream), 8 * 16 * 4);
+
+        // a migration chunk with the wrong column count must be rejected
+        // with an ok=false ack (not silence, not a dead session)
+        codec::write_msg(
+            &mut &stream,
+            &WireMsg::PlacementUpdate(PlacementUpdate {
+                seq: 9,
+                expect_rows: 4,
+                evict: vec![],
+            }),
+        )
+        .unwrap();
+        codec::write_msg(
+            &mut &stream,
+            &WireMsg::Data(DataFrame {
+                rows: RowRange::new(8, 12),
+                cols: 7, // workload says 16
+                done: true,
+                values: vec![0.0; 4 * 7],
+            }),
+        )
+        .unwrap();
+        match codec::read_msg(&mut &stream).unwrap() {
+            WireMsg::MigrateAck {
+                seq,
+                ok,
+                resident_bytes,
+                ..
+            } => {
+                assert_eq!((seq, ok), (9, false));
+                assert_eq!(resident_bytes, 8 * 16 * 4, "storage must be untouched");
+            }
+            other => panic!("expected MigrateAck, got {other:?}"),
         }
         codec::write_msg(&mut &stream, &WireMsg::Shutdown).unwrap();
         h.join().unwrap().unwrap();

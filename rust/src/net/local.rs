@@ -38,6 +38,11 @@ pub struct LocalTransport {
     /// the full matrix size — the honest number for what each simulated
     /// VM can address, not what the host allocates.
     resident: Vec<u64>,
+    /// Per-worker storage handles, kept for live migration: a replica move
+    /// re-ships the worker's (shared, full) view as a zero-copy `Arc`
+    /// swap, so every row of the new placement is resident by
+    /// construction and no bytes are copied.
+    storages: Vec<crate::sched::worker::WorkerStorage>,
 }
 
 impl LocalTransport {
@@ -47,9 +52,11 @@ impl LocalTransport {
             .iter()
             .map(|c| c.storage.resident_bytes() as u64)
             .collect();
+        let storages = configs.iter().map(|c| c.storage.clone()).collect();
         Ok(LocalTransport {
             cluster: Some(Cluster::spawn(configs)?),
             resident,
+            storages,
         })
     }
 
@@ -84,6 +91,25 @@ impl Transport for LocalTransport {
             Some(c) => c.drain().into_iter().map(event_of).collect(),
             None => Vec::new(),
         }
+    }
+
+    /// Live migration, local mode: workers read the shared full-matrix
+    /// view, so the rows of any new placement are already resident — the
+    /// move degenerates to re-shipping the gaining worker's storage handle
+    /// as a zero-copy `Arc` swap ([`Cluster::swap_storage`]). This keeps
+    /// the rebalance path observable (and failure-checked) without moving
+    /// a byte.
+    fn migrate(
+        &self,
+        order: &crate::net::transport::MigrationOrder,
+        _sub_ranges: &[crate::linalg::partition::RowRange],
+    ) -> Result<()> {
+        let storage = self
+            .storages
+            .get(order.to)
+            .cloned()
+            .ok_or_else(|| Error::Cluster(format!("no worker {}", order.to)))?;
+        self.cluster()?.swap_storage(order.to, storage)
     }
 
     fn resident_bytes(&self) -> Vec<u64> {
@@ -195,6 +221,45 @@ mod tests {
             straggle: None,
         })
         .is_err());
+    }
+
+    #[test]
+    fn local_migrate_is_a_zero_copy_swap() {
+        use crate::net::transport::MigrationOrder;
+        let t = transport(2);
+        let order = MigrationOrder {
+            seq: 1,
+            g: 0,
+            from: 0,
+            to: 1,
+            rows: crate::linalg::partition::RowRange::new(0, 10),
+        };
+        let subs = submatrix_ranges(40, 4).unwrap();
+        t.migrate(&order, &subs).unwrap();
+        // the gaining worker still serves every row after the swap
+        t.send(
+            1,
+            WorkOrder {
+                step: 3,
+                w: Arc::new(Block::single(vec![0.5; 40])),
+                tasks: vec![Task {
+                    g: 0,
+                    rows: crate::linalg::partition::RowRange::new(0, 5),
+                }],
+                row_cost_ns: 0,
+                straggle: None,
+            },
+        )
+        .unwrap();
+        match t.recv_timeout(Duration::from_secs(5)).unwrap() {
+            TransportEvent::Report(r) => assert_eq!(r.step, 3),
+            other => panic!("unexpected event {other:?}"),
+        }
+        // unknown gaining worker is rejected
+        let bad = MigrationOrder { to: 9, ..order };
+        assert!(t.migrate(&bad, &subs).is_err());
+        let mut t = t;
+        t.shutdown();
     }
 
     #[test]

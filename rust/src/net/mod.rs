@@ -31,6 +31,8 @@
 //! | 9 | `StorageReady` (id, resident_bytes) | worker → master |
 //! | 10 | `Work` block variant: tag 3 + `B`, iterate is `len·B` interleaved | master → worker |
 //! | 11 | `Report` block variant: tag 4 + `B`, segment values are `rows·B` | worker → master |
+//! | 12 | `PlacementUpdate` (seq, expect_rows, evict ranges) | master → worker |
+//! | 13 | `MigrateAck` (id, seq, ok, resident_bytes) | worker → master |
 //!
 //! `B = 1` traffic stays on tags 3/4 and encodes byte-identically to wire
 //! version 2; the handshake's `threads` field sizes the worker's
@@ -76,6 +78,18 @@
 //! produces its own `Report`; the master dedups by row (coverage bitmap)
 //! and by worker id (EWMA). This holds identically over
 //! [`LocalTransport`] and [`TcpTransport`] at any batch width `B`.
+//!
+//! ## Live shard migration (wire v4)
+//!
+//! With `--rebalance` ([`crate::rebalance`]) the master can re-shape
+//! storage *between* steps: [`Transport::migrate`] ships one sub-matrix's
+//! rows to the gaining worker (`PlacementUpdate` + the same checksummed
+//! `Data` chunk machinery the streamed handshake uses), waits for its
+//! `MigrateAck`, and only then evicts the rows from the losing worker —
+//! make-before-break, so no sub-matrix ever drops below its replica
+//! count mid-transition. [`LocalTransport`] performs the same swap as a
+//! zero-copy `Arc` handoff. When no migration tags are sent, v4 traffic
+//! encodes byte-identically to v3.
 
 pub mod codec;
 pub mod daemon;
@@ -84,10 +98,12 @@ pub mod local;
 pub mod tcp;
 pub mod transport;
 
-pub use codec::{data_checksum, DataFrame, Hello, HelloAck, WireMsg, WIRE_VERSION};
+pub use codec::{
+    data_checksum, DataFrame, Hello, HelloAck, PlacementUpdate, WireMsg, WIRE_VERSION,
+};
 pub use local::LocalTransport;
 pub use tcp::{TcpOptions, TcpPeer, TcpTransport, DEFAULT_HEARTBEAT_MS};
-pub use transport::{Transport, TransportEvent, WorkloadSpec};
+pub use transport::{MigrationOrder, Transport, TransportEvent, WorkloadSpec};
 
 use std::sync::{Mutex, MutexGuard};
 use std::time::Duration;
@@ -148,6 +164,17 @@ impl Transport for AnyTransport {
         match self {
             AnyTransport::Local(t) => t.readmit(),
             AnyTransport::Tcp(t) => t.readmit(),
+        }
+    }
+
+    fn migrate(
+        &self,
+        order: &transport::MigrationOrder,
+        sub_ranges: &[crate::linalg::partition::RowRange],
+    ) -> Result<()> {
+        match self {
+            AnyTransport::Local(t) => t.migrate(order, sub_ranges),
+            AnyTransport::Tcp(t) => t.migrate(order, sub_ranges),
         }
     }
 

@@ -34,9 +34,9 @@ use crate::linalg::partition::RowRange;
 use crate::linalg::Matrix;
 use crate::sched::protocol::WorkOrder;
 
-use super::codec::{self, DataFrame, Hello, WireMsg, WIRE_VERSION};
+use super::codec::{self, DataFrame, Hello, PlacementUpdate, WireMsg, WIRE_VERSION};
 use super::lock;
-use super::transport::{Transport, TransportEvent};
+use super::transport::{MigrationOrder, Transport, TransportEvent};
 
 /// Default worker → master heartbeat period.
 pub const DEFAULT_HEARTBEAT_MS: u32 = 500;
@@ -58,6 +58,9 @@ const READMIT_CONNECT_TIMEOUT: Duration = Duration::from_millis(500);
 /// handshaking, and the `StorageReady` wait reverts to the full
 /// `handshake_timeout` (storage materialization scales with `q × r`).
 const READMIT_ACK_TIMEOUT: Duration = Duration::from_secs(2);
+
+/// How long [`TcpTransport::migrate`] waits for one `MigrateAck`.
+const MIGRATE_ACK_TIMEOUT: Duration = Duration::from_secs(10);
 
 /// One worker endpoint to dial.
 #[derive(Debug, Clone)]
@@ -104,8 +107,11 @@ impl Default for TcpOptions {
 }
 
 struct Peer {
-    /// Endpoint + handshake recipe, kept for re-admission.
-    cfg: TcpPeer,
+    /// Endpoint + handshake recipe, kept for re-admission. Behind a lock
+    /// because live migration rewrites the recipe (stored sub-matrices,
+    /// stream ranges) so a later re-admission rematerializes the
+    /// *post-migration* share.
+    cfg: Mutex<TcpPeer>,
     writer: Mutex<TcpStream>,
     alive: AtomicBool,
     last_seen: Mutex<Instant>,
@@ -120,6 +126,12 @@ struct Peer {
     /// atomic step on both sides, or a descheduled stale reader could
     /// mark a freshly re-admitted connection dead.
     lifecycle: Mutex<()>,
+    /// Whether migration ever rewrote this peer's recipe. Needed to
+    /// disambiguate an *empty* stored list: untouched it means the legacy
+    /// "stores everything" handshake; once touched it is an explicit list
+    /// that may pass through empty mid-plan (only mutated under the `cfg`
+    /// lock).
+    recipe_touched: AtomicBool,
     /// Matrix payload bytes the daemon reported in `StorageReady`.
     resident_bytes: AtomicU64,
 }
@@ -136,6 +148,10 @@ impl Peer {
     }
 }
 
+/// A migration acknowledgement routed off the reader threads:
+/// `(worker, seq, ok, resident_bytes)`.
+type MigrateAckEvent = (usize, u64, bool, u64);
+
 /// Master ↔ workers over length-prefixed TCP frames.
 pub struct TcpTransport {
     peers: Vec<Arc<Peer>>,
@@ -143,10 +159,14 @@ pub struct TcpTransport {
     /// Keeps the channel open even after every reader thread exits, so
     /// `recv_timeout` reports timeouts instead of disconnection errors.
     event_tx: Sender<TransportEvent>,
+    /// `MigrateAck`s travel on their own channel so waiting for one never
+    /// consumes (or reorders) the master's step events.
+    acks: Receiver<MigrateAckEvent>,
+    ack_tx: Sender<MigrateAckEvent>,
     handles: Mutex<Vec<JoinHandle<()>>>,
     opts: TcpOptions,
-    /// Master-side data matrix for streamed workloads (re-used when a
-    /// re-admitted worker needs its rows streamed again).
+    /// Master-side data matrix for streamed workloads and live migration
+    /// (re-used when a re-admitted worker needs its rows streamed again).
     data: Option<Arc<Matrix>>,
 }
 
@@ -315,6 +335,7 @@ impl TcpTransport {
             return Err(Error::Config("no workers to connect to".into()));
         }
         let (tx, rx) = mpsc::channel();
+        let (ack_tx, ack_rx) = mpsc::channel();
         let mut peers: Vec<Arc<Peer>> = Vec::with_capacity(peers_cfg.len());
         let mut handles = Vec::with_capacity(peers_cfg.len());
         let setup = |id: usize, pc: TcpPeer| -> Result<(Arc<Peer>, JoinHandle<()>)> {
@@ -328,20 +349,22 @@ impl TcpTransport {
             };
             let reader = stream.try_clone()?;
             let peer = Arc::new(Peer {
-                cfg: pc,
+                cfg: Mutex::new(pc),
                 writer: Mutex::new(stream),
                 alive: AtomicBool::new(true),
                 last_seen: Mutex::new(Instant::now()),
                 liveness_window,
                 epoch: AtomicU64::new(0),
                 lifecycle: Mutex::new(()),
+                recipe_touched: AtomicBool::new(false),
                 resident_bytes: AtomicU64::new(resident),
             });
             let peer2 = Arc::clone(&peer);
             let tx2 = tx.clone();
+            let ack2 = ack_tx.clone();
             let handle = std::thread::Builder::new()
                 .name(format!("usec-net-rx-{id}"))
-                .spawn(move || reader_loop(id, reader, peer2, tx2, 0))
+                .spawn(move || reader_loop(id, reader, peer2, tx2, ack2, 0))
                 .map_err(|e| Error::Cluster(format!("spawn reader {id}: {e}")))?;
             Ok((peer, handle))
         };
@@ -373,6 +396,8 @@ impl TcpTransport {
             peers,
             events: rx,
             event_tx: tx,
+            acks: ack_rx,
+            ack_tx,
             handles: Mutex::new(handles),
             opts,
             data,
@@ -388,6 +413,40 @@ impl TcpTransport {
             p.alive.store(false, Ordering::Relaxed);
             let s = lock(&p.writer);
             let _ = s.shutdown(Shutdown::Both);
+        }
+    }
+
+    /// Wait for the `MigrateAck` matching `(worker, seq)`; stale acks from
+    /// abandoned attempts are discarded. A worker-side rejection
+    /// (`ok = false`) fails immediately — no timeout burn. Returns the
+    /// acked resident bytes.
+    fn wait_migrate_ack(&self, worker: usize, seq: u64) -> Result<u64> {
+        let deadline = Instant::now() + MIGRATE_ACK_TIMEOUT;
+        loop {
+            let now = Instant::now();
+            if now >= deadline {
+                return Err(Error::Cluster(format!(
+                    "worker {worker}: migration ack timeout (seq {seq})"
+                )));
+            }
+            match self.acks.recv_timeout(deadline - now) {
+                Ok((w, s, true, resident)) if w == worker && s == seq => {
+                    return Ok(resident);
+                }
+                Ok((w, s, false, _)) if w == worker && s == seq => {
+                    return Err(Error::Cluster(format!(
+                        "worker {worker} rejected the placement update (seq {seq})"
+                    )));
+                }
+                Ok((w, s, _, _)) => {
+                    crate::log_debug!("stale migrate ack from worker {w} (seq {s}), dropped");
+                }
+                Err(_) => {
+                    return Err(Error::Cluster(format!(
+                        "worker {worker}: migration ack timeout (seq {seq})"
+                    )));
+                }
+            }
         }
     }
 
@@ -408,11 +467,61 @@ impl TcpTransport {
     }
 }
 
+/// Rewrite a peer's re-admission recipe after a completed replica move so
+/// a later reconnection rematerializes the *post-migration* share: the
+/// `Hello` stored list gains/loses sub-matrix `g` and the streamed row
+/// ranges are re-derived from it.
+fn update_recipe(peer: &Peer, g: usize, gained: bool, sub_ranges: &[RowRange]) {
+    let mut cfg = lock(&peer.cfg);
+    // An *untouched* empty stored list is the legacy "stores everything"
+    // handshake; once migration has rewritten the recipe, an empty list is
+    // an explicit (transiently empty) one and must keep evolving — a gain
+    // after a stores-nothing window must be recorded, or a later readmit
+    // would rematerialize the wrong share.
+    let legacy_full = cfg.hello.stored.is_empty()
+        && !peer.recipe_touched.load(Ordering::Relaxed);
+    if gained && legacy_full {
+        return; // already stores everything: nothing to gain
+    }
+    let mut stored: Vec<usize> = if legacy_full {
+        (0..cfg.hello.g).collect() // make full replication explicit to shrink it
+    } else {
+        cfg.hello.stored.clone()
+    };
+    if gained {
+        if !stored.contains(&g) {
+            stored.push(g);
+        }
+    } else {
+        stored.retain(|&x| x != g);
+        if stored.is_empty() {
+            // "stores nothing" has no wire representation (an empty list
+            // means full replication in the Hello). The placement search
+            // never *ends* a plan here, but a worker can pass through this
+            // state mid-plan (loses one sub before gaining another); a
+            // readmit inside that window would rematerialize everything.
+            crate::log_warn!(
+                "migration recipe: worker recipe transiently stores nothing \
+                 (a readmit before the plan completes rematerializes the \
+                  full matrix)"
+            );
+        }
+    }
+    stored.sort_unstable();
+    match crate::storage::coalesce_sub_ranges(&stored, sub_ranges) {
+        Ok(ranges) => cfg.stream_ranges = ranges,
+        Err(e) => crate::log_warn!("migration recipe update: {e}"),
+    }
+    cfg.hello.stored = stored;
+    peer.recipe_touched.store(true, Ordering::Relaxed);
+}
+
 fn reader_loop(
     id: usize,
     mut stream: TcpStream,
     peer: Arc<Peer>,
     tx: Sender<TransportEvent>,
+    acks: Sender<MigrateAckEvent>,
     epoch: u64,
 ) {
     loop {
@@ -434,6 +543,12 @@ fn reader_loop(
                 });
             }
             Ok(WireMsg::Heartbeat { .. }) => peer.touch(),
+            Ok(WireMsg::MigrateAck { seq, ok, resident_bytes, .. }) => {
+                peer.touch();
+                // resident bytes are truthful on both outcomes
+                peer.resident_bytes.store(resident_bytes, Ordering::Relaxed);
+                let _ = acks.send((id, seq, ok, resident_bytes));
+            }
             Ok(other) => {
                 crate::log_debug!("worker {id}: ignoring unexpected message {other:?}");
             }
@@ -518,9 +633,10 @@ impl Transport for TcpTransport {
                 let s = lock(&p.writer);
                 let _ = s.shutdown(Shutdown::Both);
             }
+            let recipe = lock(&p.cfg).clone();
             match dial_and_handshake(
                 id,
-                &p.cfg,
+                &recipe,
                 &self.opts,
                 self.data.as_deref(),
                 Some(READMIT_CONNECT_TIMEOUT),
@@ -548,9 +664,10 @@ impl Transport for TcpTransport {
                     };
                     let peer2 = Arc::clone(p);
                     let tx2 = self.event_tx.clone();
+                    let ack2 = self.ack_tx.clone();
                     match std::thread::Builder::new()
                         .name(format!("usec-net-rx-{id}-e{epoch}"))
-                        .spawn(move || reader_loop(id, reader, peer2, tx2, epoch))
+                        .spawn(move || reader_loop(id, reader, peer2, tx2, ack2, epoch))
                     {
                         Ok(h) => lock(&self.handles).push(h),
                         Err(e) => {
@@ -568,6 +685,97 @@ impl Transport for TcpTransport {
             }
         }
         rejoined
+    }
+
+    /// Execute one replica move over the wire (protocol v4): announce the
+    /// incoming rows to the gaining worker with `PlacementUpdate`, stream
+    /// them through the same chunked FNV-checksummed `Data` machinery the
+    /// streamed handshake uses, wait for its `MigrateAck`, and only then
+    /// evict the rows from the losing worker — make-before-break, so the
+    /// replica never has fewer live copies than before the move. A failed
+    /// eviction (worker died mid-move) leaves a harmless extra copy; a
+    /// failed or unacknowledged transfer fails the move with nothing
+    /// evicted, so the caller can retry or abandon it.
+    fn migrate(&self, order: &MigrationOrder, sub_ranges: &[RowRange]) -> Result<()> {
+        if order.rows.is_empty() {
+            return Ok(());
+        }
+        let data = self.data.as_ref().ok_or_else(|| {
+            Error::Config(
+                "live migration needs the master-side data matrix \
+                 (TcpTransport::connect_with_data)"
+                    .into(),
+            )
+        })?;
+        let to = self
+            .peers
+            .get(order.to)
+            .ok_or_else(|| Error::Cluster(format!("no worker {}", order.to)))?;
+        if !to.alive.load(Ordering::Relaxed) {
+            return Err(Error::Cluster(format!(
+                "worker {} is disconnected",
+                order.to
+            )));
+        }
+        // an abandoned earlier attempt may have left stale acks queued
+        while self.acks.try_recv().is_ok() {}
+
+        // -- make: announce + stream the rows to the gaining worker --
+        {
+            let mut s = lock(&to.writer);
+            codec::write_msg(
+                &mut *s,
+                &WireMsg::PlacementUpdate(PlacementUpdate {
+                    seq: order.seq,
+                    expect_rows: order.rows.len() as u64,
+                    evict: vec![],
+                }),
+            )
+            .and_then(|()| stream_rows(&s, data, &[order.rows]))
+            .map_err(|e| {
+                to.alive.store(false, Ordering::Relaxed);
+                Error::Cluster(format!("migrate to worker {}: {e}", order.to))
+            })?;
+        }
+        self.wait_migrate_ack(order.to, order.seq)?;
+        update_recipe(to, order.g, true, sub_ranges);
+
+        // -- break: the new copy is resident and acknowledged; evicting
+        // the old one can no longer violate the replica requirement --
+        if let Some(from) = self.peers.get(order.from) {
+            update_recipe(from, order.g, false, sub_ranges);
+            if from.alive.load(Ordering::Relaxed) {
+                let sent = {
+                    let mut s = lock(&from.writer);
+                    codec::write_msg(
+                        &mut *s,
+                        &WireMsg::PlacementUpdate(PlacementUpdate {
+                            seq: order.seq,
+                            expect_rows: 0,
+                            evict: vec![order.rows],
+                        }),
+                    )
+                };
+                let acked =
+                    sent.and_then(|()| self.wait_migrate_ack(order.from, order.seq));
+                if let Err(e) = acked {
+                    crate::log_warn!(
+                        "migrate: eviction of sub-matrix {} on worker {} failed ({e}); \
+                         an extra replica stays resident until re-admission",
+                        order.g,
+                        order.from
+                    );
+                }
+            } else {
+                crate::log_debug!(
+                    "migrate: worker {} is down; its copy of sub-matrix {} is \
+                     shed at re-admission via the updated recipe",
+                    order.from,
+                    order.g
+                );
+            }
+        }
+        Ok(())
     }
 
     fn resident_bytes(&self) -> Vec<u64> {

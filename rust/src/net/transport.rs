@@ -39,6 +39,26 @@ pub enum TransportEvent {
     Disconnected { worker: usize },
 }
 
+/// One replica move the rebalancer ([`crate::rebalance`]) asks a
+/// transport to execute between steps: make sub-matrix `g`'s rows
+/// resident on `to`, then — make-before-break — evict them from `from`.
+/// The caller swaps the replica in its effective placement only after the
+/// call returns `Ok`, so no sub-matrix ever drops below its replica count
+/// mid-transition.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MigrationOrder {
+    /// Unique per move; correlates `PlacementUpdate` with `MigrateAck`.
+    pub seq: u64,
+    /// Sub-matrix being re-replicated.
+    pub g: usize,
+    /// Worker losing the replica.
+    pub from: usize,
+    /// Worker gaining the replica.
+    pub to: usize,
+    /// Global rows of sub-matrix `g`.
+    pub rows: RowRange,
+}
+
 /// Master-side view of a worker communication substrate.
 ///
 /// Implementations must be usable from a single master thread; `send` and
@@ -70,6 +90,23 @@ pub trait Transport {
     /// to re-admit.
     fn readmit(&self) -> usize {
         0
+    }
+
+    /// Execute one replica move between steps ([`crate::rebalance`]):
+    /// ship the rows to `order.to`, wait for its acknowledgement, and only
+    /// then evict them from `order.from` — so the replica count of
+    /// `order.g` never dips mid-transition. `sub_ranges` is the global
+    /// sub-matrix partition (used to refresh re-admission recipes).
+    /// Returns `Ok` once the new copy is resident and acknowledged; the
+    /// caller then swaps the replica in its effective placement. The
+    /// default implementation rejects migration.
+    fn migrate(&self, order: &MigrationOrder, sub_ranges: &[RowRange]) -> Result<()> {
+        let _ = sub_ranges;
+        Err(Error::Config(format!(
+            "this transport cannot migrate sub-matrix {} ({} -> {}): live \
+             migration unsupported",
+            order.g, order.from, order.to
+        )))
     }
 
     /// Actual matrix payload bytes resident per worker, when the

@@ -40,10 +40,26 @@ impl Default for SearchParams {
 /// Expected optimal time of a placement over sampled speed vectors.
 pub fn expected_time(p: &Placement, speeds_samples: &[Vec<f64>]) -> Result<f64> {
     let avail: Vec<usize> = (0..p.machines()).collect();
-    let params = SolveParams::default();
+    expected_time_with(p, &avail, speeds_samples, &SolveParams::default())
+}
+
+/// [`expected_time`] over an explicit availability set and solve
+/// parameters — the live-cluster variant the drift monitor
+/// ([`crate::rebalance`]) evaluates against the EWMA speed estimates.
+pub fn expected_time_with(
+    p: &Placement,
+    avail: &[usize],
+    speeds_samples: &[Vec<f64>],
+    params: &SolveParams,
+) -> Result<f64> {
+    if speeds_samples.is_empty() {
+        return Err(crate::error::Error::Config(
+            "expected_time needs at least one speed sample".into(),
+        ));
+    }
     let mut total = 0.0;
     for s in speeds_samples {
-        total += solve_load_matrix(p, &avail, s, &params)?.time;
+        total += solve_load_matrix(p, avail, s, params)?.time;
     }
     Ok(total / speeds_samples.len() as f64)
 }
@@ -67,23 +83,71 @@ pub fn local_search(
     start: &Placement,
     sp: &SearchParams,
 ) -> Result<(Placement, f64)> {
+    let samples = sample_speeds(start.machines(), start.submatrices(), sp);
+    let avail: Vec<usize> = (0..start.machines()).collect();
+    local_search_from_samples(
+        start,
+        &avail,
+        &samples,
+        &SolveParams::default(),
+        sp.iters,
+        sp.seed,
+        None,
+    )
+}
+
+/// [`local_search`] driven by explicit speed samples over an explicit
+/// availability set: the drift monitor ([`crate::rebalance`]) passes the
+/// single live EWMA estimate vector and the step's live workers, so the
+/// search re-optimizes for *measured* conditions. Replicas only ever move
+/// **to** available machines (they may move off dead ones); proposals
+/// that are infeasible under `avail`/`params.stragglers` are skipped, as
+/// are moves that would leave any machine storing *nothing* — an extra
+/// replica never worsens the optimal time (the solver can assign it zero
+/// rows), and "stores nothing" has no representation in the wire
+/// handshake (an empty stored list means full replication).
+/// `baseline` is the start placement's expected time when the caller has
+/// already computed it (the drift monitor has); `None` computes it here.
+#[allow(clippy::too_many_arguments)]
+pub fn local_search_from_samples(
+    start: &Placement,
+    avail: &[usize],
+    samples: &[Vec<f64>],
+    params: &SolveParams,
+    iters: usize,
+    seed: u64,
+    baseline: Option<f64>,
+) -> Result<(Placement, f64)> {
     let n = start.machines();
     let g_count = start.submatrices();
-    let samples = sample_speeds(n, g_count, sp);
-    let mut rng = Rng::new(sp.seed ^ 0xBEEF);
+    let mut rng = Rng::new(seed ^ 0xBEEF);
 
     let mut best_replicas: Vec<Vec<usize>> = (0..g_count)
         .map(|g| start.machines_storing(g).to_vec())
         .collect();
-    let mut best = expected_time(start, &samples)?;
+    let mut stored_count = vec![0usize; n];
+    for reps in &best_replicas {
+        for &m in reps {
+            stored_count[m] += 1;
+        }
+    }
+    let mut best = match baseline {
+        Some(t) => t,
+        None => expected_time_with(start, avail, samples, params)?,
+    };
 
-    for _ in 0..sp.iters {
-        // propose: move one replica of one sub-matrix to a machine not
-        // currently storing it
+    for _ in 0..iters {
+        // propose: move one replica of one sub-matrix to an available
+        // machine not currently storing it
         let g = rng.below(g_count);
         let reps = &best_replicas[g];
         let slot = rng.below(reps.len());
-        let candidates: Vec<usize> = (0..n).filter(|m| !reps.contains(m)).collect();
+        let from = reps[slot];
+        if stored_count[from] == 1 {
+            continue; // never strand a machine with nothing stored
+        }
+        let candidates: Vec<usize> =
+            avail.iter().copied().filter(|m| !reps.contains(m)).collect();
         if candidates.is_empty() {
             continue;
         }
@@ -93,10 +157,15 @@ pub fn local_search(
         proposal[g].sort_unstable();
 
         let p = Placement::from_replicas(PlacementKind::Custom, n, proposal.clone())?;
-        let t = expected_time(&p, &samples)?;
+        let t = match expected_time_with(&p, avail, samples, params) {
+            Ok(t) => t,
+            Err(_) => continue, // infeasible under this availability: skip
+        };
         if t < best - 1e-12 {
             best = t;
             best_replicas = proposal;
+            stored_count[from] -= 1;
+            stored_count[to] += 1;
         }
     }
     let p = Placement::from_replicas(PlacementKind::Custom, n, best_replicas)?;
@@ -143,6 +212,82 @@ mod tests {
             t < t0 * 0.95,
             "expected a material improvement: {t0} → {t}"
         );
+    }
+
+    #[test]
+    fn search_beats_cyclic_under_strong_heterogeneity() {
+        // The drift-monitor scenario: the live EWMA estimate is a single,
+        // strongly skewed speed vector, and cyclic (optimized for nothing)
+        // strands sub-matrices 2 and 3 on the slow half of the cluster.
+        // Local search from the cyclic start must find a materially better
+        // placement — this margin seeds the rebalance threshold default.
+        let cyclic = Placement::build(PlacementKind::Cyclic, 6, 6, 3).unwrap();
+        let samples = vec![vec![24.0, 16.0, 1.0, 1.0, 1.0, 1.0]];
+        let avail: Vec<usize> = (0..6).collect();
+        let params = SolveParams::default();
+        let t_cyc = expected_time_with(&cyclic, &avail, &samples, &params).unwrap();
+        let (best, t) =
+            local_search_from_samples(&cyclic, &avail, &samples, &params, 250, 7, Some(t_cyc))
+                .unwrap();
+        assert!(
+            t < t_cyc * 0.85,
+            "search failed to adapt to the skew: {t_cyc} -> {t}"
+        );
+        // still a valid J=3 placement, and feasible over the full cluster
+        for g in 0..best.submatrices() {
+            assert_eq!(best.machines_storing(g).len(), 3);
+        }
+        best.check_feasible(&avail, 0).unwrap();
+    }
+
+    #[test]
+    fn search_from_samples_only_targets_available_machines() {
+        // with machine 5 dead, no proposal may move a replica onto it
+        let start = Placement::build(PlacementKind::Cyclic, 6, 6, 3).unwrap();
+        let samples = vec![vec![8.0, 4.0, 2.0, 1.0, 1.0, 1.0]];
+        let avail = vec![0, 1, 2, 3, 4];
+        let before: usize = (0..6)
+            .filter(|&g| start.machines_storing(g).contains(&5))
+            .count();
+        let (best, _) = local_search_from_samples(
+            &start,
+            &avail,
+            &samples,
+            &SolveParams::default(),
+            120,
+            3,
+            None,
+        )
+        .unwrap();
+        let after: usize = (0..6)
+            .filter(|&g| best.machines_storing(g).contains(&5))
+            .count();
+        assert!(after <= before, "search added replicas to a dead machine");
+    }
+
+    #[test]
+    fn search_never_strands_a_machine_with_nothing_stored() {
+        // "stores nothing" has no wire representation (an empty stored
+        // list means full replication in the handshake), so the search
+        // must keep at least one sub-matrix on every machine — even when
+        // the skew makes a machine useless for computation
+        let start = Placement::build(PlacementKind::Cyclic, 3, 3, 2).unwrap();
+        let samples = vec![vec![100.0, 100.0, 0.01]];
+        let avail: Vec<usize> = (0..3).collect();
+        let (best, _) = local_search_from_samples(
+            &start,
+            &avail,
+            &samples,
+            &SolveParams::default(),
+            300,
+            11,
+            None,
+        )
+        .unwrap();
+        for m in 0..3 {
+            let stored = best.stored_by(m).count();
+            assert!(stored >= 1, "machine {m} stores nothing: {stored}");
+        }
     }
 
     #[test]

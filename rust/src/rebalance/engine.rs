@@ -1,0 +1,403 @@
+//! The rebalancer: drives monitor → plan → transport between steps.
+//!
+//! [`Rebalancer::tick`] is the harness's inter-step hook. With no plan in
+//! flight it consults the [`DriftMonitor`]; when a proposal fires it
+//! diffs the placements into a [`MigrationPlan`] and starts executing it,
+//! one budgeted batch of [`ReplicaMove`]s per window, through
+//! [`Transport::migrate`]. Each acknowledged move swaps exactly one
+//! replica in the returned *effective* placement
+//! ([`super::plan::apply_move`]), which the caller installs in the master
+//! — so assignments, recovery planning, and feasibility checks always see
+//! the storage that is actually resident, and no sub-matrix ever drops
+//! below its replica requirement mid-transition. A move that fails
+//! (unreachable peer, lost ack) is retried at the head of the plan; after
+//! [`MAX_STALLS`] consecutive stalled windows the plan is abandoned and
+//! the monitor re-evaluates under whatever the cluster has become.
+
+use crate::error::Result;
+use crate::linalg::partition::RowRange;
+use crate::net::{MigrationOrder, Transport};
+use crate::optim::SolveParams;
+use crate::placement::Placement;
+
+use super::monitor::DriftMonitor;
+use super::plan::{apply_move, MigrationPlan};
+use super::RebalanceConfig;
+
+/// Abandon an in-flight plan after this many consecutive windows whose
+/// head move failed (the cluster has drifted away from the proposal).
+const MAX_STALLS: u32 = 3;
+
+/// One executed replica move, as surfaced per step in
+/// [`crate::metrics::Timeline`] and `--json-out`
+/// (`timeline[i].migrations` — the enclosing step record carries the
+/// step number).
+#[derive(Debug, Clone, PartialEq)]
+pub struct MigrationRecord {
+    /// Sub-matrix moved.
+    pub g: usize,
+    /// Worker that lost the replica.
+    pub from: usize,
+    /// Worker that gained the replica.
+    pub to: usize,
+    /// Rows moved.
+    pub rows: usize,
+    /// Payload bytes moved.
+    pub bytes: u64,
+    /// Expected optimal time of the placement the plan started from,
+    /// under the estimates that fired it.
+    pub expected_before: f64,
+    /// Expected optimal time of the plan's target placement (the
+    /// rescheduled expected time).
+    pub expected_after: f64,
+}
+
+/// Online placement adaptation driver (one per run).
+pub struct Rebalancer {
+    cfg: RebalanceConfig,
+    monitor: DriftMonitor,
+    params: SolveParams,
+    sub_ranges: Vec<RowRange>,
+    cols: usize,
+    pending: MigrationPlan,
+    /// `(expected_before, expected_after)` of the in-flight plan.
+    plan_times: (f64, f64),
+    stalls: u32,
+    seq: u64,
+}
+
+impl Rebalancer {
+    pub fn new(
+        cfg: RebalanceConfig,
+        sub_ranges: Vec<RowRange>,
+        cols: usize,
+        params: SolveParams,
+        seed: u64,
+    ) -> Result<Rebalancer> {
+        cfg.validate()?;
+        let monitor = DriftMonitor::new(cfg.threshold, cfg.search_iters, seed);
+        Ok(Rebalancer {
+            cfg,
+            monitor,
+            params,
+            sub_ranges,
+            cols,
+            pending: MigrationPlan::default(),
+            plan_times: (f64::NAN, f64::NAN),
+            stalls: 0,
+            seq: 0,
+        })
+    }
+
+    /// Whether a migration plan is still executing.
+    pub fn in_transition(&self) -> bool {
+        !self.pending.is_empty()
+    }
+
+    /// The inter-step hook: check for drift (only when no plan is in
+    /// flight — a transition finishes before the monitor re-fires), then
+    /// execute up to one byte-budget of pending moves. Returns the
+    /// effective placement after the acknowledged moves plus one record
+    /// per executed move; the caller installs the placement in the master
+    /// and logs the records in the timeline.
+    pub fn tick<T: Transport + ?Sized>(
+        &mut self,
+        step: usize,
+        transport: &T,
+        placement: &Placement,
+        avail: &[usize],
+        speeds: &[f64],
+    ) -> Result<(Placement, Vec<MigrationRecord>)> {
+        let mut current = placement.clone();
+        if self.pending.is_empty() {
+            if let Some(p) =
+                self.monitor
+                    .check(&current, avail, speeds, &self.params, &self.sub_ranges)?
+            {
+                crate::log_info!(
+                    "step {step}: placement drift {:.1}% (expected time {:.4} -> {:.4}, \
+                     ~{} assignment rows churn); planning migration",
+                    p.regret * 100.0,
+                    p.current_time,
+                    p.proposed_time,
+                    p.transition_rows
+                );
+                self.pending =
+                    MigrationPlan::diff(&current, &p.placement, &self.sub_ranges, self.cols)?;
+                self.plan_times = (p.current_time, p.proposed_time);
+                self.stalls = 0;
+            }
+        }
+        let mut records = Vec::new();
+        let mut batch: std::collections::VecDeque<_> =
+            self.pending.take_batch(self.cfg.budget_bytes).into();
+        while let Some(mv) = batch.pop_front() {
+            self.seq += 1;
+            let order = MigrationOrder {
+                seq: self.seq,
+                g: mv.g,
+                from: mv.from,
+                to: mv.to,
+                rows: mv.rows,
+            };
+            // A queued move may outlive the availability it was planned
+            // under (budget-metered plans span windows): swapping a
+            // replica onto a worker the trace has preempted would shrink
+            // the sub-matrix's *available* coverage, so defer it like a
+            // transport failure until the worker returns or the stall
+            // counter abandons the plan.
+            let result = if avail.contains(&mv.to) {
+                transport.migrate(&order, &self.sub_ranges)
+            } else {
+                Err(crate::error::Error::Cluster(format!(
+                    "gaining worker {} is not in the availability set",
+                    mv.to
+                )))
+            };
+            match result {
+                Ok(()) => {
+                    // the copy is resident and acknowledged: swapping the
+                    // replica now can only *gain* coverage mid-transition
+                    current = apply_move(&current, &mv)?;
+                    records.push(MigrationRecord {
+                        g: mv.g,
+                        from: mv.from,
+                        to: mv.to,
+                        rows: mv.rows.len(),
+                        bytes: mv.bytes,
+                        expected_before: self.plan_times.0,
+                        expected_after: self.plan_times.1,
+                    });
+                }
+                Err(e) => {
+                    crate::log_warn!(
+                        "step {step}: migration of sub-matrix {} ({} -> {}) failed: {e}",
+                        mv.g,
+                        mv.from,
+                        mv.to
+                    );
+                    self.stalls += 1;
+                    if self.stalls >= MAX_STALLS {
+                        crate::log_warn!(
+                            "step {step}: abandoning the migration plan after \
+                             {MAX_STALLS} stalled windows ({} moves dropped)",
+                            self.pending.len() + batch.len() + 1
+                        );
+                        self.pending = MigrationPlan::default();
+                    } else {
+                        // failed move first, then the unexecuted tail of
+                        // the batch, ahead of whatever was already queued
+                        for m in batch.drain(..).rev() {
+                            self.pending.requeue_front(m);
+                        }
+                        self.pending.requeue_front(mv);
+                    }
+                    break; // don't hammer a struggling cluster this window
+                }
+            }
+        }
+        if !records.is_empty() {
+            self.stalls = 0;
+        }
+        Ok((current, records))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::error::Error;
+    use crate::linalg::partition::submatrix_ranges;
+    use crate::net::TransportEvent;
+    use crate::placement::PlacementKind;
+    use crate::sched::protocol::WorkOrder;
+    use std::sync::Mutex;
+    use std::time::Duration;
+
+    /// Transport double: records migrations, optionally failing some.
+    struct FakeTransport {
+        n: usize,
+        migrated: Mutex<Vec<MigrationOrder>>,
+        fail_first: Mutex<u32>,
+    }
+
+    impl FakeTransport {
+        fn new(n: usize, fail_first: u32) -> FakeTransport {
+            FakeTransport {
+                n,
+                migrated: Mutex::new(Vec::new()),
+                fail_first: Mutex::new(fail_first),
+            }
+        }
+    }
+
+    impl Transport for FakeTransport {
+        fn size(&self) -> usize {
+            self.n
+        }
+        fn alive(&self) -> Vec<bool> {
+            vec![true; self.n]
+        }
+        fn send(&self, _worker: usize, _order: WorkOrder) -> Result<()> {
+            Ok(())
+        }
+        fn recv_timeout(&self, _timeout: Duration) -> Result<TransportEvent> {
+            Err(Error::Cluster("nothing scripted".into()))
+        }
+        fn drain(&self) -> Vec<TransportEvent> {
+            Vec::new()
+        }
+        fn migrate(&self, order: &MigrationOrder, _sub_ranges: &[RowRange]) -> Result<()> {
+            let mut fails = self.fail_first.lock().unwrap();
+            if *fails > 0 {
+                *fails -= 1;
+                return Err(Error::Cluster("scripted migration failure".into()));
+            }
+            self.migrated.lock().unwrap().push(order.clone());
+            Ok(())
+        }
+        fn shutdown(&mut self) {}
+    }
+
+    fn rebalancer(threshold: f64, budget: u64) -> (Rebalancer, Placement, Vec<RowRange>) {
+        let placement = Placement::build(PlacementKind::Cyclic, 6, 6, 3).unwrap();
+        let sub_ranges = submatrix_ranges(120, 6).unwrap();
+        let rb = Rebalancer::new(
+            RebalanceConfig {
+                enabled: true,
+                threshold,
+                budget_bytes: budget,
+                search_iters: 250,
+            },
+            sub_ranges.clone(),
+            120,
+            SolveParams::default(),
+            7,
+        )
+        .unwrap();
+        (rb, placement, sub_ranges)
+    }
+
+    #[test]
+    fn quiet_cluster_never_migrates() {
+        let (mut rb, placement, _) = rebalancer(0.15, 0);
+        let t = FakeTransport::new(6, 0);
+        let avail: Vec<usize> = (0..6).collect();
+        for step in 0..3 {
+            let (p, recs) = rb
+                .tick(step, &t, &placement, &avail, &[1.0; 6])
+                .unwrap();
+            assert!(recs.is_empty());
+            assert_eq!(p, placement);
+        }
+        assert!(t.migrated.lock().unwrap().is_empty());
+    }
+
+    #[test]
+    fn drift_plans_and_executes_within_budget() {
+        // budget of one move per window: the transition spreads over
+        // several ticks, and every intermediate placement stays feasible
+        let per_move = 20 * 120 * 4;
+        let (mut rb, placement, _) = rebalancer(0.15, per_move);
+        let t = FakeTransport::new(6, 0);
+        let avail: Vec<usize> = (0..6).collect();
+        let speeds = vec![24.0, 16.0, 1.0, 1.0, 1.0, 1.0];
+        let mut current = placement;
+        let mut all = Vec::new();
+        let mut converged = false;
+        for step in 0..200 {
+            let (p, recs) = rb.tick(step, &t, &current, &avail, &speeds).unwrap();
+            assert!(recs.len() <= 1, "budget allows one move per window");
+            for r in &recs {
+                assert_eq!(r.rows, 20);
+                assert_eq!(r.bytes, per_move as u64);
+                assert!(r.expected_after < r.expected_before);
+            }
+            current = p;
+            current.check_feasible(&avail, 0).unwrap();
+            let quiet = recs.is_empty();
+            all.extend(recs);
+            if !all.is_empty() && quiet && !rb.in_transition() {
+                converged = true; // monitor re-checked and found no drift
+                break;
+            }
+        }
+        assert!(!all.is_empty(), "strong drift must migrate");
+        assert!(converged, "transition never settled");
+        assert_eq!(
+            all.len(),
+            t.migrated.lock().unwrap().len(),
+            "records mirror transport calls"
+        );
+        // sequence numbers are unique and increasing
+        let seqs: Vec<u64> = t.migrated.lock().unwrap().iter().map(|o| o.seq).collect();
+        assert!(seqs.windows(2).all(|w| w[0] < w[1]));
+    }
+
+    #[test]
+    fn queued_moves_never_target_an_unavailable_worker() {
+        // a budget-metered plan spans windows; a move queued while its
+        // target was available must defer (not apply) if the trace has
+        // preempted the target by the time its window comes
+        let per_move = 20 * 120 * 4;
+        let (mut rb, placement, _) = rebalancer(0.15, per_move);
+        let t = FakeTransport::new(6, 0);
+        let all: Vec<usize> = (0..6).collect();
+        let speeds = vec![24.0, 16.0, 1.0, 1.0, 1.0, 1.0];
+        // window 0: the monitor fires and the first move executes
+        let (p1, recs1) = rb.tick(0, &t, &placement, &all, &speeds).unwrap();
+        assert!(!recs1.is_empty(), "strong drift must fire");
+        let mut current = p1;
+        if rb.in_transition() {
+            // the fast machines (the gains' targets) leave the
+            // availability set: remaining moves must defer or, at most,
+            // execute onto a still-available worker
+            let restricted = vec![2usize, 3, 4, 5];
+            let before = t.migrated.lock().unwrap().len();
+            let (p2, recs2) = rb.tick(1, &t, &current, &restricted, &speeds).unwrap();
+            for r in &recs2 {
+                assert!(
+                    restricted.contains(&r.to),
+                    "move applied onto unavailable worker {}",
+                    r.to
+                );
+            }
+            assert_eq!(
+                t.migrated.lock().unwrap().len(),
+                before + recs2.len(),
+                "a deferred move must not reach the transport"
+            );
+            current = p2;
+        }
+        // availability restored: the plan (or a re-fired one) completes
+        for step in 2..60 {
+            let (p, recs) = rb.tick(step, &t, &current, &all, &speeds).unwrap();
+            current = p;
+            if recs.is_empty() && !rb.in_transition() {
+                break;
+            }
+        }
+        current.check_feasible(&all, 0).unwrap();
+    }
+
+    #[test]
+    fn failed_moves_retry_then_abandon() {
+        let (mut rb, placement, _) = rebalancer(0.15, 0);
+        // every migrate call fails: the plan stalls and is abandoned after
+        // MAX_STALLS windows instead of wedging the run
+        let t = FakeTransport::new(6, u32::MAX);
+        let avail: Vec<usize> = (0..6).collect();
+        let speeds = vec![24.0, 16.0, 1.0, 1.0, 1.0, 1.0];
+        let mut fired = false;
+        for step in 0..10 {
+            let (p, recs) = rb.tick(step, &t, &placement, &avail, &speeds).unwrap();
+            assert!(recs.is_empty(), "a failed move must not be recorded");
+            assert_eq!(p, placement, "a failed move must not swap replicas");
+            fired |= rb.in_transition();
+            if fired && !rb.in_transition() {
+                return; // abandoned — the monitor may re-fire later
+            }
+        }
+        panic!("plan was never abandoned");
+    }
+}

@@ -1,0 +1,187 @@
+//! Drift monitor: when is the current placement stale enough to move?
+//!
+//! Between steps the master holds two things the placement was never
+//! optimized for: the live EWMA speed estimates and the live availability
+//! set. The monitor evaluates the *expected-time regret* of keeping the
+//! current placement — the relative gap between its optimal computation
+//! time under the live estimates and the best placement a replica-move
+//! local search can find ([`crate::placement::optimizer`]) — and proposes
+//! the searched placement when the regret clears the threshold. The
+//! assignment churn the switch would cause is measured up front with the
+//! transition-waste metric ([`crate::optim::transition`]) so the caller
+//! can weigh (and report) it.
+
+use crate::error::Result;
+use crate::linalg::partition::RowRange;
+use crate::optim::{self, transition, SolveParams};
+use crate::placement::optimizer::{expected_time_with, local_search_from_samples};
+use crate::placement::Placement;
+
+/// A placement change worth making, per the drift monitor.
+#[derive(Debug, Clone)]
+pub struct Proposal {
+    /// The searched placement to transition to.
+    pub placement: Placement,
+    /// Expected optimal time of the *current* placement under the live
+    /// estimates.
+    pub current_time: f64,
+    /// Expected optimal time of the proposed placement.
+    pub proposed_time: f64,
+    /// Relative regret `(current − proposed)/current` ∈ (0, 1).
+    pub regret: f64,
+    /// Assignment rows that would churn when adopting the proposal
+    /// (transition waste under the live estimates; 0 when it could not be
+    /// evaluated).
+    pub transition_rows: usize,
+}
+
+/// Fires a [`Proposal`] when the live regret exceeds the threshold.
+#[derive(Debug, Clone)]
+pub struct DriftMonitor {
+    threshold: f64,
+    iters: usize,
+    seed: u64,
+}
+
+impl DriftMonitor {
+    pub fn new(threshold: f64, iters: usize, seed: u64) -> DriftMonitor {
+        DriftMonitor {
+            threshold,
+            iters,
+            seed,
+        }
+    }
+
+    /// Evaluate the current placement against the live estimates. Returns
+    /// `Ok(None)` when the placement is within the threshold of the best
+    /// found, when no feasible evaluation exists under `avail` (a skipped
+    /// step is not the monitor's to fix), or when search finds nothing
+    /// better. Successive checks rotate the search seed so repeated calls
+    /// explore different move sequences.
+    pub fn check(
+        &mut self,
+        current: &Placement,
+        avail: &[usize],
+        speeds: &[f64],
+        params: &SolveParams,
+        sub_ranges: &[RowRange],
+    ) -> Result<Option<Proposal>> {
+        let samples = vec![speeds.to_vec()];
+        let seed = self.seed;
+        self.seed = self.seed.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let current_time = match expected_time_with(current, avail, &samples, params) {
+            Ok(t) => t,
+            Err(_) => return Ok(None), // infeasible availability: sit out
+        };
+        let (best, proposed_time) = local_search_from_samples(
+            current,
+            avail,
+            &samples,
+            params,
+            self.iters,
+            seed,
+            Some(current_time), // the baseline is already solved above
+        )?;
+        if !(current_time.is_finite() && proposed_time.is_finite()) || current_time <= 0.0 {
+            return Ok(None);
+        }
+        let regret = (current_time - proposed_time) / current_time;
+        if regret <= self.threshold {
+            return Ok(None);
+        }
+        let transition_rows = transition_churn(current, &best, avail, speeds, params, sub_ranges);
+        Ok(Some(Proposal {
+            placement: best,
+            current_time,
+            proposed_time,
+            regret,
+            transition_rows,
+        }))
+    }
+}
+
+/// Transition waste (in assignment rows) of switching placements under
+/// the live estimates — best effort: 0 when either assignment cannot be
+/// built (the switch is then justified by regret alone).
+fn transition_churn(
+    old: &Placement,
+    new: &Placement,
+    avail: &[usize],
+    speeds: &[f64],
+    params: &SolveParams,
+    sub_ranges: &[RowRange],
+) -> usize {
+    let sub_rows: Vec<usize> = sub_ranges.iter().map(|r| r.len()).collect();
+    let old_a = optim::build_assignment(old, avail, speeds, params, &sub_rows);
+    let new_a = optim::build_assignment(new, avail, speeds, params, &sub_rows);
+    match (old_a, new_a) {
+        (Ok(a), Ok(b)) => transition::transition_waste(&a, &b),
+        _ => 0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::partition::submatrix_ranges;
+    use crate::placement::PlacementKind;
+
+    fn cyclic() -> (Placement, Vec<RowRange>) {
+        (
+            Placement::build(PlacementKind::Cyclic, 6, 6, 3).unwrap(),
+            submatrix_ranges(120, 6).unwrap(),
+        )
+    }
+
+    #[test]
+    fn uniform_speeds_do_not_fire() {
+        let (p, subs) = cyclic();
+        let mut m = DriftMonitor::new(0.15, 150, 7);
+        let avail: Vec<usize> = (0..6).collect();
+        let got = m
+            .check(&p, &avail, &[1.0; 6], &SolveParams::default(), &subs)
+            .unwrap();
+        assert!(got.is_none(), "uniform speeds proposed {got:?}");
+    }
+
+    #[test]
+    fn strong_skew_fires_with_consistent_numbers() {
+        let (p, subs) = cyclic();
+        let mut m = DriftMonitor::new(0.15, 250, 7);
+        let avail: Vec<usize> = (0..6).collect();
+        let speeds = vec![24.0, 16.0, 1.0, 1.0, 1.0, 1.0];
+        let prop = m
+            .check(&p, &avail, &speeds, &SolveParams::default(), &subs)
+            .unwrap()
+            .expect("strong drift must fire");
+        assert!(prop.proposed_time < prop.current_time);
+        assert!(prop.regret > 0.15 && prop.regret < 1.0, "{}", prop.regret);
+        assert!(
+            (prop.regret - (prop.current_time - prop.proposed_time) / prop.current_time).abs()
+                < 1e-12
+        );
+        // proposal keeps the replication factor and stays feasible
+        for g in 0..prop.placement.submatrices() {
+            assert_eq!(prop.placement.machines_storing(g).len(), 3);
+        }
+        prop.placement.check_feasible(&avail, 0).unwrap();
+        assert!(prop.transition_rows > 0, "a real switch churns rows");
+    }
+
+    #[test]
+    fn infeasible_availability_sits_out() {
+        let (p, subs) = cyclic();
+        let mut m = DriftMonitor::new(0.1, 50, 1);
+        // availability so thin the placement is infeasible at S=1
+        let got = m
+            .check(
+                &p,
+                &[0, 3],
+                &[1.0; 6],
+                &SolveParams::with_stragglers(1),
+                &subs,
+            )
+            .unwrap();
+        assert!(got.is_none());
+    }
+}

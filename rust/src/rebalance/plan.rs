@@ -1,0 +1,271 @@
+//! Migration planner: diff two placements into budgeted replica moves.
+//!
+//! Because both placements replicate every sub-matrix exactly `J` times,
+//! the diff decomposes per sub-matrix into equal-sized *added* and
+//! *removed* replica sets, which pair off into [`ReplicaMove`]s: copy the
+//! sub-matrix's rows to the gaining machine, then retire the losing
+//! machine's copy. A move is executed make-before-break
+//! ([`crate::net::Transport::migrate`]) and the effective placement swaps
+//! the replica only after the copy is acknowledged
+//! ([`apply_move`]), so **every intermediate placement is a valid
+//! `J`-replica placement** — no sub-matrix ever has fewer live copies
+//! than the replica requirement demands mid-transition.
+//!
+//! [`MigrationPlan::take_batch`] meters the plan against the per-step
+//! byte budget (`--migration-budget`): a plan larger than the budget
+//! spreads over several inter-step windows, one batch per window, always
+//! making at least one move of progress.
+
+use std::collections::{BTreeSet, VecDeque};
+
+use crate::error::{Error, Result};
+use crate::linalg::partition::RowRange;
+use crate::placement::{Placement, PlacementKind};
+
+/// One replica move: sub-matrix `g` stops living on `from` and starts
+/// living on `to`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ReplicaMove {
+    pub g: usize,
+    pub from: usize,
+    pub to: usize,
+    /// Global rows of sub-matrix `g`.
+    pub rows: RowRange,
+    /// Payload bytes the move ships (`rows · cols · 4`).
+    pub bytes: u64,
+}
+
+/// An ordered queue of replica moves driving one placement to another.
+#[derive(Debug, Clone, Default)]
+pub struct MigrationPlan {
+    moves: VecDeque<ReplicaMove>,
+}
+
+impl MigrationPlan {
+    /// Diff `old` → `new` into replica moves. Both placements must share
+    /// the machine count, sub-matrix count, and replication factor;
+    /// `sub_ranges` is the global row partition and `cols` the matrix
+    /// width (for the byte accounting).
+    pub fn diff(
+        old: &Placement,
+        new: &Placement,
+        sub_ranges: &[RowRange],
+        cols: usize,
+    ) -> Result<MigrationPlan> {
+        if old.machines() != new.machines()
+            || old.submatrices() != new.submatrices()
+            || old.replication() != new.replication()
+        {
+            return Err(Error::Shape(format!(
+                "placement geometry changed: N {}→{}, G {}→{}, J {}→{}",
+                old.machines(),
+                new.machines(),
+                old.submatrices(),
+                new.submatrices(),
+                old.replication(),
+                new.replication()
+            )));
+        }
+        if sub_ranges.len() != old.submatrices() {
+            return Err(Error::Shape(format!(
+                "{} sub-ranges for G={}",
+                sub_ranges.len(),
+                old.submatrices()
+            )));
+        }
+        let mut moves = VecDeque::new();
+        for g in 0..old.submatrices() {
+            let was: BTreeSet<usize> = old.machines_storing(g).iter().copied().collect();
+            let now: BTreeSet<usize> = new.machines_storing(g).iter().copied().collect();
+            let added: Vec<usize> = now.difference(&was).copied().collect();
+            let removed: Vec<usize> = was.difference(&now).copied().collect();
+            debug_assert_eq!(added.len(), removed.len(), "equal J on both sides");
+            let rows = sub_ranges[g];
+            let bytes = (rows.len() as u64) * (cols as u64) * 4;
+            for (&to, &from) in added.iter().zip(&removed) {
+                moves.push_back(ReplicaMove {
+                    g,
+                    from,
+                    to,
+                    rows,
+                    bytes,
+                });
+            }
+        }
+        Ok(MigrationPlan { moves })
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.moves.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.moves.len()
+    }
+
+    /// Total payload bytes still queued.
+    pub fn total_bytes(&self) -> u64 {
+        self.moves.iter().map(|m| m.bytes).sum()
+    }
+
+    /// Pop the next batch: moves while the cumulative payload stays within
+    /// `budget_bytes` — except the first move of a non-empty plan, which
+    /// always ships so a small budget meters progress instead of
+    /// deadlocking it. `0` = unlimited.
+    pub fn take_batch(&mut self, budget_bytes: u64) -> Vec<ReplicaMove> {
+        let mut batch = Vec::new();
+        let mut spent = 0u64;
+        while let Some(next) = self.moves.front() {
+            let would = spent.saturating_add(next.bytes);
+            if !batch.is_empty() && budget_bytes > 0 && would > budget_bytes {
+                break;
+            }
+            spent = would;
+            batch.push(self.moves.pop_front().expect("front just observed"));
+        }
+        batch
+    }
+
+    /// Push a failed move back to the head of the queue (retried first in
+    /// the next window).
+    pub fn requeue_front(&mut self, mv: ReplicaMove) {
+        self.moves.push_front(mv);
+    }
+}
+
+/// The effective placement after one acknowledged move: replica `from` of
+/// sub-matrix `g` is swapped for `to`. Validated, so an impossible swap
+/// (duplicate replica) surfaces as an error instead of a corrupt state.
+pub fn apply_move(p: &Placement, mv: &ReplicaMove) -> Result<Placement> {
+    let mut replicas: Vec<Vec<usize>> = (0..p.submatrices())
+        .map(|g| p.machines_storing(g).to_vec())
+        .collect();
+    let reps = replicas.get_mut(mv.g).ok_or_else(|| {
+        Error::Shape(format!(
+            "move references sub-matrix {} of {}",
+            mv.g,
+            p.submatrices()
+        ))
+    })?;
+    let slot = reps.iter().position(|&m| m == mv.from).ok_or_else(|| {
+        Error::Shape(format!(
+            "machine {} stores no replica of sub-matrix {}",
+            mv.from, mv.g
+        ))
+    })?;
+    reps[slot] = mv.to;
+    reps.sort_unstable();
+    Placement::from_replicas(PlacementKind::Custom, p.machines(), replicas)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::partition::submatrix_ranges;
+
+    fn placements() -> (Placement, Placement, Vec<RowRange>) {
+        let old = Placement::build(PlacementKind::Cyclic, 6, 6, 3).unwrap();
+        // move one replica of g=2 (machines {2,3,4}) to machine 0 and one
+        // replica of g=3 (machines {3,4,5}) to machine 1
+        let mut replicas: Vec<Vec<usize>> = (0..6)
+            .map(|g| old.machines_storing(g).to_vec())
+            .collect();
+        replicas[2] = vec![0, 2, 3];
+        replicas[3] = vec![1, 3, 5];
+        let new = Placement::from_replicas(PlacementKind::Custom, 6, replicas).unwrap();
+        (old, new, submatrix_ranges(120, 6).unwrap())
+    }
+
+    #[test]
+    fn diff_pairs_added_with_removed() {
+        let (old, new, subs) = placements();
+        let plan = MigrationPlan::diff(&old, &new, &subs, 120).unwrap();
+        assert_eq!(plan.len(), 2);
+        assert_eq!(plan.total_bytes(), 2 * 20 * 120 * 4);
+        let mut plan = plan;
+        let all = plan.take_batch(0);
+        assert_eq!(all.len(), 2);
+        assert_eq!(
+            (all[0].g, all[0].to, all[0].from, all[0].rows),
+            (2, 0, 4, subs[2])
+        );
+        assert_eq!((all[1].g, all[1].to, all[1].from), (3, 1, 4));
+        // identical placements diff to an empty plan
+        assert!(MigrationPlan::diff(&old, &old, &subs, 120)
+            .unwrap()
+            .is_empty());
+    }
+
+    #[test]
+    fn batches_respect_the_byte_budget() {
+        let (old, new, subs) = placements();
+        let mut plan = MigrationPlan::diff(&old, &new, &subs, 120).unwrap();
+        let per_move = 20 * 120 * 4;
+        // budget below one move still ships exactly one (progress), the
+        // rest waits for the next window
+        let b1 = plan.take_batch(per_move - 1);
+        assert_eq!(b1.len(), 1);
+        let b2 = plan.take_batch(per_move - 1);
+        assert_eq!(b2.len(), 1);
+        assert!(plan.take_batch(per_move).is_empty());
+        // a budget covering both ships both at once
+        let mut plan = MigrationPlan::diff(&old, &new, &subs, 120).unwrap();
+        assert_eq!(plan.take_batch(2 * per_move).len(), 2);
+        // requeue puts a failed move back at the head
+        let mut plan = MigrationPlan::diff(&old, &new, &subs, 120).unwrap();
+        let first = plan.take_batch(per_move)[0].clone();
+        plan.requeue_front(first.clone());
+        assert_eq!(plan.take_batch(per_move)[0], first);
+    }
+
+    #[test]
+    fn every_intermediate_placement_keeps_the_replica_requirement() {
+        // the make-before-break invariant: applying the plan one
+        // acknowledged move at a time never leaves any sub-matrix with
+        // fewer than J live replicas (here J = 1 + S for S = 2)
+        let (old, new, subs) = placements();
+        let mut plan = MigrationPlan::diff(&old, &new, &subs, 120).unwrap();
+        let avail: Vec<usize> = (0..6).collect();
+        let mut current = old.clone();
+        while let Some(mv) = plan.take_batch(1).pop() {
+            current = apply_move(&current, &mv).unwrap();
+            assert_eq!(current.replication(), 3);
+            current.check_feasible(&avail, 2).unwrap();
+        }
+        // the plan lands exactly on the target replica sets
+        for g in 0..new.submatrices() {
+            assert_eq!(current.machines_storing(g), new.machines_storing(g));
+        }
+    }
+
+    #[test]
+    fn apply_move_rejects_impossible_swaps() {
+        let (old, _, subs) = placements();
+        // machine 0 stores no replica of g=2 in the old placement
+        let bad = ReplicaMove {
+            g: 2,
+            from: 0,
+            to: 5,
+            rows: subs[2],
+            bytes: 0,
+        };
+        assert!(apply_move(&old, &bad).is_err());
+        // moving onto a machine that already stores g duplicates a replica
+        let dup = ReplicaMove {
+            g: 2,
+            from: 2,
+            to: 3,
+            rows: subs[2],
+            bytes: 0,
+        };
+        assert!(apply_move(&old, &dup).is_err());
+    }
+
+    #[test]
+    fn diff_rejects_geometry_changes() {
+        let (old, _, subs) = placements();
+        let other = Placement::build(PlacementKind::Cyclic, 6, 6, 2).unwrap();
+        assert!(MigrationPlan::diff(&old, &other, &subs, 120).is_err());
+        assert!(MigrationPlan::diff(&old, &old, &subs[..3], 120).is_err());
+    }
+}

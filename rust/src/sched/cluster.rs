@@ -56,6 +56,21 @@ impl Cluster {
             .map_err(|_| Error::Cluster(format!("worker {worker} channel closed")))
     }
 
+    /// Swap one worker's storage handle in place (live migration, local
+    /// mode): the new view travels as a zero-copy `Arc` and takes effect
+    /// before the worker's next order.
+    pub fn swap_storage(
+        &self,
+        worker: usize,
+        storage: crate::sched::worker::WorkerStorage,
+    ) -> Result<()> {
+        self.senders
+            .get(worker)
+            .ok_or_else(|| Error::Cluster(format!("no worker {worker}")))?
+            .send(ToWorker::SwapStorage(storage))
+            .map_err(|_| Error::Cluster(format!("worker {worker} channel closed")))
+    }
+
     /// Blocking receive with timeout.
     pub fn recv_timeout(&self, timeout: std::time::Duration) -> Result<ToMaster> {
         self.receiver

@@ -152,6 +152,31 @@ impl Master {
         self.estimator.estimate()
     }
 
+    /// The placement assignments are currently planned against.
+    pub fn placement(&self) -> &Placement {
+        &self.cfg.placement
+    }
+
+    /// Swap the placement between steps (live rebalancing,
+    /// [`crate::rebalance`]). The caller guarantees the new placement's
+    /// storage is actually resident (make-before-break migration); this
+    /// only checks the geometry still matches the run.
+    pub fn set_placement(&mut self, p: Placement) -> Result<()> {
+        if p.machines() != self.cfg.placement.machines()
+            || p.submatrices() != self.cfg.placement.submatrices()
+        {
+            return Err(Error::Shape(format!(
+                "placement geometry changed: N {}→{}, G {}→{}",
+                self.cfg.placement.machines(),
+                p.machines(),
+                self.cfg.placement.submatrices(),
+                p.submatrices()
+            )));
+        }
+        self.cfg.placement = p;
+        Ok(())
+    }
+
     /// Build this step's assignment under the configured policy.
     pub fn plan(&self, avail: &[usize]) -> Result<Assignment> {
         let speeds = self.estimator.estimate();

@@ -60,6 +60,11 @@ pub struct WorkerReport {
 #[derive(Debug)]
 pub enum ToWorker {
     Work(WorkOrder),
+    /// Replace the worker's storage handle in place — the local-transport
+    /// half of live shard migration ([`crate::rebalance`]): the new
+    /// [`WorkerStorage`](crate::sched::worker::WorkerStorage) arrives as a
+    /// zero-copy `Arc` and is swapped in between orders.
+    SwapStorage(crate::sched::worker::WorkerStorage),
     Shutdown,
 }
 

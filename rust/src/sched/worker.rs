@@ -48,7 +48,7 @@ use super::straggler::StraggleMode;
 /// hold a placement-shaped [`StoreHandle::Shard`] with only their placed
 /// rows resident, so per-worker memory *is* the storage the placement
 /// prescribes.
-#[derive(Clone)]
+#[derive(Clone, Debug)]
 pub struct WorkerStorage {
     pub store: StoreHandle,
     /// Global row range of each sub-matrix `X_g`.
@@ -131,7 +131,7 @@ struct TileJob {
 }
 
 /// Worker thread body. Runs until `Shutdown` or channel close.
-pub fn run_worker(cfg: WorkerConfig, rx: Receiver<ToWorker>, tx: Sender<ToMaster>) {
+pub fn run_worker(mut cfg: WorkerConfig, rx: Receiver<ToWorker>, tx: Sender<ToMaster>) {
     let backend = match cfg.backend.instantiate() {
         Ok(b) => b,
         Err(e) => {
@@ -148,6 +148,12 @@ pub fn run_worker(cfg: WorkerConfig, rx: Receiver<ToWorker>, tx: Sender<ToMaster
     while let Ok(msg) = rx.recv() {
         match msg {
             ToWorker::Shutdown => break,
+            ToWorker::SwapStorage(storage) => {
+                // live migration, local mode: the replacement view arrives
+                // as an `Arc` — swapping it in is zero-copy and atomic
+                // between orders
+                cfg.storage = storage;
+            }
             ToWorker::Work(order) => {
                 let step = order.step;
                 match execute_order(&cfg, &backend, &tile, &order, &mut scratch) {
@@ -626,6 +632,54 @@ mod tests {
         match rx.recv_timeout(Duration::from_secs(5)).unwrap() {
             ToMaster::Failed { worker, .. } => assert_eq!(worker, 7),
             other => panic!("expected Failed, got {other:?}"),
+        }
+        tx.send(ToWorker::Shutdown).unwrap();
+    }
+
+    #[test]
+    fn swap_storage_takes_effect_before_the_next_order() {
+        let q = 60;
+        let matrix = Arc::new(gen::random_dense(q, q, 5));
+        let ranges = Arc::new(crate::linalg::partition::submatrix_ranges(q, 6).unwrap());
+        let (tx, rx) = spawn_worker(cfg(12, 1.0)); // full storage
+        // live migration, local mode: swap to a shard holding only
+        // sub-matrix 0 (global rows 0..10)
+        let shard = Arc::new(RowShard::from_matrix(&matrix, &[ranges[0]]).unwrap());
+        tx.send(ToWorker::SwapStorage(WorkerStorage::shard(
+            shard,
+            Arc::clone(&ranges),
+        )))
+        .unwrap();
+        // rows outside the swapped-in share must now fail...
+        tx.send(ToWorker::Work(order(
+            vec![Task {
+                g: 3,
+                rows: RowRange::new(0, 5),
+            }],
+            q,
+            None,
+        )))
+        .unwrap();
+        match rx.recv_timeout(Duration::from_secs(5)).unwrap() {
+            ToMaster::Failed { worker, .. } => assert_eq!(worker, 12),
+            other => panic!("expected Failed after the swap, got {other:?}"),
+        }
+        // ...while the placed rows still compute correctly
+        tx.send(ToWorker::Work(order(
+            vec![Task {
+                g: 0,
+                rows: RowRange::new(0, 5),
+            }],
+            q,
+            None,
+        )))
+        .unwrap();
+        match rx.recv_timeout(Duration::from_secs(5)).unwrap() {
+            ToMaster::Report(r) => {
+                assert_eq!(r.segments.len(), 1);
+                assert_eq!(r.segments[0].rows, RowRange::new(0, 5));
+            }
+            other => panic!("expected Report, got {other:?}"),
         }
         tx.send(ToWorker::Shutdown).unwrap();
     }

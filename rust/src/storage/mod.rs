@@ -15,7 +15,10 @@
 //!   global↔local index mapping. A TCP worker materializes exactly its
 //!   placed share into one of these, whether by regenerating it from the
 //!   handshake's workload spec or by receiving streamed `Data` frames
-//!   ([`crate::net::codec`], tag 8).
+//!   ([`crate::net::codec`], tag 8). Eviction matches the coalescing
+//!   insert ([`RowShard::remove_rows`]: edge trims, middle splits), so
+//!   live rebalancing ([`crate::rebalance`]) can move placed rows between
+//!   workers mid-run with exact resident-byte accounting.
 //! * [`StoreHandle`] — the cheap-to-clone handle workers hold: a
 //!   zero-copy full-matrix view (local simulator mode, bit-identical with
 //!   the seed behaviour) or a placement-shaped shard (distributed mode).

@@ -119,6 +119,54 @@ impl RowShard {
         Ok(())
     }
 
+    /// Remove the intersection of `range` with the resident rows — the
+    /// eviction half of live shard migration ([`crate::rebalance`]).
+    ///
+    /// Coalescing-aware: evicting from the middle of a resident block
+    /// splits it in two; evicting a block edge trims it. Rows of `range`
+    /// that are not resident are ignored (an eviction order may race a
+    /// partially applied plan), so the call is idempotent. Returns the
+    /// number of rows actually removed; resident-byte accounting
+    /// ([`StorageView::resident_bytes`]) shrinks by `removed · cols · 4`.
+    pub fn remove_rows(&mut self, range: RowRange) -> Result<usize> {
+        if range.hi > self.global_rows {
+            return Err(Error::Shape(format!(
+                "eviction {}..{} exceeds the {}-row matrix",
+                range.lo, range.hi, self.global_rows
+            )));
+        }
+        if range.is_empty() {
+            return Ok(0);
+        }
+        let cols = self.cols;
+        let mut removed = 0usize;
+        let mut blocks = Vec::with_capacity(self.blocks.len() + 1);
+        for b in self.blocks.drain(..) {
+            let inter = b.range.intersect(&range);
+            if inter.is_empty() {
+                blocks.push(b);
+                continue;
+            }
+            removed += inter.len();
+            if inter.lo > b.range.lo {
+                // surviving head of the block
+                blocks.push(Block {
+                    range: RowRange::new(b.range.lo, inter.lo),
+                    data: b.data[..(inter.lo - b.range.lo) * cols].to_vec(),
+                });
+            }
+            if inter.hi < b.range.hi {
+                // surviving tail of the block (middle eviction splits)
+                blocks.push(Block {
+                    range: RowRange::new(inter.hi, b.range.hi),
+                    data: b.data[(inter.hi - b.range.lo) * cols..].to_vec(),
+                });
+            }
+        }
+        self.blocks = blocks;
+        Ok(removed)
+    }
+
     /// Resident global row ranges, sorted and coalesced.
     pub fn ranges(&self) -> Vec<RowRange> {
         self.blocks.iter().map(|b| b.range).collect()
@@ -290,6 +338,91 @@ mod tests {
         assert_eq!(s.local_to_global(0), Some(10));
         assert_eq!(s.local_to_global(12), Some(42));
         assert_eq!(s.local_to_global(20), None);
+    }
+
+    #[test]
+    fn remove_rows_trims_splits_and_accounts_bytes() {
+        let m = gen::random_dense(20, 3, 9);
+        let mut s = RowShard::from_matrix(&m, &[RowRange::new(0, 20)]).unwrap();
+        assert_eq!(s.block_count(), 1);
+        // middle eviction splits the block in two
+        assert_eq!(s.remove_rows(RowRange::new(8, 12)).unwrap(), 4);
+        assert_eq!(s.ranges(), vec![RowRange::new(0, 8), RowRange::new(12, 20)]);
+        assert_eq!(s.resident_rows(), 16);
+        assert_eq!(s.resident_bytes(), 16 * 3 * 4);
+        // edge eviction trims
+        assert_eq!(s.remove_rows(RowRange::new(0, 3)).unwrap(), 3);
+        assert_eq!(s.ranges(), vec![RowRange::new(3, 8), RowRange::new(12, 20)]);
+        // eviction spanning a gap removes only resident rows (idempotent)
+        assert_eq!(s.remove_rows(RowRange::new(5, 14)).unwrap(), 5);
+        assert_eq!(s.remove_rows(RowRange::new(5, 14)).unwrap(), 0);
+        assert_eq!(s.ranges(), vec![RowRange::new(3, 5), RowRange::new(14, 20)]);
+        // surviving rows are bitwise intact
+        assert_eq!(s.row_slice(RowRange::new(3, 5)).unwrap(), m.row_block(3, 5));
+        assert_eq!(s.row_slice(RowRange::new(14, 20)).unwrap(), m.row_block(14, 20));
+        // empty and out-of-range evictions
+        assert_eq!(s.remove_rows(RowRange::new(4, 4)).unwrap(), 0);
+        assert!(s.remove_rows(RowRange::new(15, 25)).is_err());
+    }
+
+    #[test]
+    fn evicted_rows_can_be_reinserted() {
+        // the migration round trip: evict a block, stream it back, and the
+        // shard is bitwise where it started (coalescing included)
+        let m = gen::random_dense(12, 4, 21);
+        let mut s = RowShard::from_matrix(&m, &[RowRange::new(0, 12)]).unwrap();
+        let gone = RowRange::new(4, 9);
+        s.remove_rows(gone).unwrap();
+        assert!(!s.holds(gone));
+        s.insert(gone, m.row_block(4, 9).to_vec()).unwrap();
+        assert_eq!(s.block_count(), 1, "reinsert must re-coalesce");
+        assert_eq!(s.row_slice(RowRange::new(0, 12)).unwrap(), m.row_block(0, 12));
+    }
+
+    #[test]
+    fn insert_evict_round_trips_hold_for_random_shards() {
+        use crate::testing::prop::{gen as pgen, run, Config};
+        run(
+            Config::default().cases(120).name("shard-insert-evict"),
+            |rng| {
+                let shard = pgen::row_shard(rng);
+                let before = shard.ranges();
+                let resident = shard.resident_rows();
+                let q = shard.global_rows();
+
+                // evicting a random window and re-inserting exactly the
+                // evicted runs restores ranges and byte accounting
+                let lo = rng.below(q);
+                let hi = rng.range(lo, q) + 1;
+                let window = RowRange::new(lo, hi.min(q));
+                let mut s = shard.clone();
+                let evicted: Vec<RowRange> = before
+                    .iter()
+                    .map(|r| r.intersect(&window))
+                    .filter(|r| !r.is_empty())
+                    .collect();
+                let want_removed: usize = evicted.iter().map(|r| r.len()).sum();
+                let removed = s.remove_rows(window).expect("in-range eviction");
+                assert_eq!(removed, want_removed, "eviction count mismatch");
+                assert_eq!(s.resident_rows(), resident - removed);
+                for r in &evicted {
+                    assert!(!s.holds(*r) || r.is_empty());
+                    s.insert(*r, vec![0.5; r.len() * StorageView::cols(&s)])
+                        .expect("re-insert of evicted rows");
+                }
+                assert_eq!(s.ranges(), before, "round trip changed the ranges");
+                assert_eq!(s.resident_rows(), resident);
+
+                // evicting everything leaves an empty, consistent shard
+                let mut empty = shard.clone();
+                let all = empty.remove_rows(RowRange::new(0, q)).expect("evict all");
+                assert_eq!(all, resident);
+                assert_eq!(empty.resident_rows(), 0);
+                assert_eq!(empty.resident_bytes(), 0);
+                assert_eq!(empty.block_count(), 0);
+                assert_eq!(empty.global_to_local(lo.min(q - 1)), None);
+            },
+        );
     }
 
     #[test]

@@ -76,6 +76,81 @@ impl StoreHandle {
     pub fn is_shard(&self) -> bool {
         matches!(self, StoreHandle::Shard(_))
     }
+
+    /// Evict global row ranges — the worker-side half of live shard
+    /// migration ([`crate::rebalance`]). Shards evict in place
+    /// (copy-on-write through `Arc::make_mut`; between orders the worker
+    /// holds the only strong reference, so no copy happens). A `Full`
+    /// handle is narrowed to a [`RowShard`] built directly from the
+    /// *surviving* rows — only what is kept is copied, so a worker asked
+    /// to shed storage never transiently doubles its footprint. Returns
+    /// the number of rows removed.
+    pub fn evict_rows(&mut self, ranges: &[RowRange]) -> Result<usize> {
+        if ranges.iter().all(|r| r.is_empty()) {
+            return Ok(0);
+        }
+        match self {
+            StoreHandle::Full(m) => {
+                let rows = m.rows();
+                if let Some(bad) = ranges.iter().find(|r| r.hi > rows) {
+                    return Err(Error::Shape(format!(
+                        "eviction {}..{} exceeds the {rows}-row matrix",
+                        bad.lo, bad.hi
+                    )));
+                }
+                let keep = complement_ranges(ranges, rows);
+                let shard = RowShard::from_matrix(m, &keep)?;
+                let removed = rows - shard.resident_rows();
+                *self = StoreHandle::Shard(Arc::new(shard));
+                Ok(removed)
+            }
+            StoreHandle::Shard(shard) => {
+                let shard = Arc::make_mut(shard);
+                let mut removed = 0usize;
+                for r in ranges {
+                    removed += shard.remove_rows(*r)?;
+                }
+                Ok(removed)
+            }
+        }
+    }
+
+    /// Insert one block of global rows (the receiving half of a shard
+    /// migration). Rows already fully resident are skipped, so a re-sent
+    /// chunk is idempotent; `Full` handles hold every row already and
+    /// only validate the payload shape.
+    pub fn insert_rows(&mut self, range: RowRange, data: Vec<f32>) -> Result<()> {
+        let expect = range.len().checked_mul(self.cols()).ok_or_else(|| {
+            Error::Shape(format!(
+                "block {}..{} x {} cols overflows usize",
+                range.lo,
+                range.hi,
+                self.cols()
+            ))
+        })?;
+        if data.len() != expect {
+            return Err(Error::Shape(format!(
+                "block {}..{} carries {} values, expected {expect}",
+                range.lo,
+                range.hi,
+                data.len()
+            )));
+        }
+        if self.holds(range) {
+            return Ok(()); // already resident (Full view, or a re-send)
+        }
+        match self {
+            // a full view holds every in-range row, so reaching here means
+            // the range overruns the matrix
+            StoreHandle::Full(m) => Err(Error::Shape(format!(
+                "block {}..{} exceeds the {}-row matrix",
+                range.lo,
+                range.hi,
+                m.rows()
+            ))),
+            StoreHandle::Shard(shard) => Arc::make_mut(shard).insert(range, data),
+        }
+    }
 }
 
 impl StorageView for StoreHandle {
@@ -113,6 +188,26 @@ impl StorageView for StoreHandle {
             StoreHandle::Shard(s) => s.row_slice(rows),
         }
     }
+}
+
+/// The sorted maximal runs of `[0, rows)` *not* covered by `ranges`
+/// (which may overlap or arrive unsorted) — the rows a narrowing
+/// eviction keeps.
+fn complement_ranges(ranges: &[RowRange], rows: usize) -> Vec<RowRange> {
+    let mut sorted: Vec<RowRange> = ranges.iter().copied().filter(|r| !r.is_empty()).collect();
+    sorted.sort_by_key(|r| r.lo);
+    let mut keep = Vec::new();
+    let mut lo = 0usize;
+    for r in sorted {
+        if r.lo > lo {
+            keep.push(RowRange::new(lo, r.lo));
+        }
+        lo = lo.max(r.hi);
+    }
+    if lo < rows {
+        keep.push(RowRange::new(lo, rows));
+    }
+    keep
 }
 
 /// Matvec over a resident row range through any view: the reference
@@ -176,5 +271,71 @@ mod tests {
         let b = matvec_range(&sharded, r, &w).unwrap();
         assert_eq!(a, b, "shard and full views must compute identical rows");
         assert!(matvec_range(&sharded, RowRange::new(0, 3), &w).is_err());
+    }
+
+    #[test]
+    fn shard_handle_migrates_rows_in_and_out() {
+        let q = 16;
+        let m = gen::random_dense(q, 2, 3);
+        let shard = RowShard::from_matrix(&m, &[RowRange::new(0, 8)]).unwrap();
+        let mut h = StoreHandle::Shard(Arc::new(shard));
+        // receive rows 8..12, evict rows 0..4: the migrated share
+        h.insert_rows(RowRange::new(8, 12), m.row_block(8, 12).to_vec())
+            .unwrap();
+        assert_eq!(h.evict_rows(&[RowRange::new(0, 4)]).unwrap(), 4);
+        assert_eq!(h.resident_rows(), 8);
+        assert!(h.holds(RowRange::new(4, 12)));
+        assert!(!h.holds(RowRange::new(0, 1)));
+        // idempotent re-send of resident rows, rejected bad shapes
+        h.insert_rows(RowRange::new(8, 12), m.row_block(8, 12).to_vec())
+            .unwrap();
+        assert!(h.insert_rows(RowRange::new(12, 14), vec![0.0; 3]).is_err());
+        assert!(h.insert_rows(RowRange::new(14, 18), vec![0.0; 8]).is_err());
+        assert_eq!(h.resident_rows(), 8);
+    }
+
+    #[test]
+    fn full_handle_narrows_to_a_shard_on_eviction() {
+        let q = 10;
+        let m = Arc::new(gen::random_dense(q, 3, 7));
+        let mut h = StoreHandle::Full(Arc::clone(&m));
+        // inserts into a full view are idempotent no-ops; overruns error
+        h.insert_rows(RowRange::new(2, 4), m.row_block(2, 4).to_vec())
+            .unwrap();
+        assert!(h.insert_rows(RowRange::new(8, 12), vec![0.0; 12]).is_err());
+        assert!(!h.is_shard());
+        // the first eviction narrows the handle to the surviving rows
+        assert_eq!(h.evict_rows(&[RowRange::new(3, 6)]).unwrap(), 3);
+        assert!(h.is_shard());
+        assert_eq!(h.resident_rows(), 7);
+        assert_eq!(
+            h.row_slice(RowRange::new(0, 3)).unwrap(),
+            m.row_block(0, 3)
+        );
+        assert_eq!(
+            h.row_slice(RowRange::new(6, 10)).unwrap(),
+            m.row_block(6, 10)
+        );
+        assert!(h.row_slice(RowRange::new(3, 6)).is_err());
+        // overlapping/unsorted eviction ranges are counted once
+        let mut multi = StoreHandle::Full(Arc::clone(&m));
+        assert_eq!(
+            multi
+                .evict_rows(&[RowRange::new(4, 7), RowRange::new(2, 5)])
+                .unwrap(),
+            5
+        );
+        assert_eq!(multi.resident_rows(), 5);
+        assert!(multi.holds(RowRange::new(0, 2)));
+        assert!(multi.holds(RowRange::new(7, 10)));
+        assert!(!multi.holds(RowRange::new(3, 4)));
+        // out-of-range eviction is rejected without narrowing
+        let mut oob = StoreHandle::Full(Arc::clone(&m));
+        assert!(oob.evict_rows(&[RowRange::new(8, 12)]).is_err());
+        assert!(!oob.is_shard());
+        // an all-empty eviction never narrows
+        let mut untouched = StoreHandle::Full(m);
+        assert_eq!(untouched.evict_rows(&[RowRange::new(4, 4)]).unwrap(), 0);
+        assert!(!untouched.is_shard());
     }
 }

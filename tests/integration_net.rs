@@ -320,6 +320,7 @@ fn run_mid_step_kill_scenario(nvec: usize) {
         predicted_c: out.predicted_c,
         metric: 0.0,
         recoveries: out.recoveries.clone(),
+        migrations: Vec::new(),
     });
     let back = usec::util::json::Json::parse(&tl.to_json().to_string()).unwrap();
     assert_eq!(back.get_usize("recoveries_total"), Some(1));
