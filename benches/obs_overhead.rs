@@ -1,0 +1,132 @@
+//! Tracing overhead benchmark: the same elastic power-iteration run with
+//! the observability stack off vs on.
+//!
+//! `--trace-out` must be near-free when absent (no recorder, no registry,
+//! no wire trailers — the step loop is byte-identical to an untraced
+//! build) and cheap when present (per-order events go through a channel
+//! to a dedicated writer thread, counters are relaxed atomics). This
+//! bench measures both modes end-to-end on the local transport and
+//! reports the relative step-loop overhead; CI tracks the JSON so a
+//! regression that makes tracing expensive (or worse, makes *untraced*
+//! runs pay for it) shows up as a diff in `BENCH_obs.json`.
+//!
+//! Run: `cargo bench --bench obs_overhead [-- --smoke] [-- --json PATH]`
+
+use std::time::Duration;
+
+use usec::config::types::RunConfig;
+use usec::placement::PlacementKind;
+use usec::util::benchkit::Bench;
+
+/// The measured workload: a local 6-worker elastic run, throttled so the
+/// per-step schedule (not raw kernel speed) dominates — the regime where
+/// per-order tracing costs would surface.
+fn run_cfg(steps: usize, trace_out: &str) -> RunConfig {
+    RunConfig {
+        q: 96,
+        r: 96,
+        g: 6,
+        j: 3,
+        n: 6,
+        placement: PlacementKind::Cyclic,
+        steps,
+        speeds: vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0],
+        seed: 31,
+        trace_out: trace_out.to_string(),
+        ..Default::default()
+    }
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let smoke = args.iter().any(|a| a == "--smoke");
+    let json_path = args
+        .iter()
+        .position(|a| a == "--json")
+        .and_then(|i| args.get(i + 1))
+        .map(String::as_str)
+        .unwrap_or("BENCH_obs.json")
+        .to_string();
+    let (steps, budget, iters) = if smoke {
+        (8, Duration::from_millis(100), 1)
+    } else {
+        (30, Duration::from_secs(2), 8)
+    };
+    let mut bench = Bench::with_budget(budget, iters);
+
+    let mut off_wall = Duration::ZERO;
+    bench.run_units(
+        &format!("power iteration E2E tracing off ({steps} steps)"),
+        steps as f64,
+        || {
+            let res =
+                usec::apps::run_power_iteration(&run_cfg(steps, "")).expect("untraced run");
+            off_wall = res.timeline.total_wall();
+            res.final_nmse
+        },
+    );
+
+    let journal = std::env::temp_dir().join(format!(
+        "usec_bench_obs_{}.jsonl",
+        std::process::id()
+    ));
+    let journal_path = journal.to_str().expect("utf-8 temp path");
+    let mut on_wall = Duration::ZERO;
+    let mut events = 0usize;
+    bench.run_units(
+        &format!("power iteration E2E tracing on ({steps} steps)"),
+        steps as f64,
+        || {
+            let res =
+                usec::apps::run_power_iteration(&run_cfg(steps, journal_path))
+                    .expect("traced run");
+            on_wall = res.timeline.total_wall();
+            events = usec::obs::load_journal(journal_path)
+                .expect("journal readable")
+                .len();
+            res.final_nmse
+        },
+    );
+    let _ = std::fs::remove_file(&journal);
+
+    // journal hot path in isolation: cost of one emitted span event
+    {
+        let dir = std::env::temp_dir().join(format!(
+            "usec_bench_obs_emit_{}.jsonl",
+            std::process::id()
+        ));
+        let journal =
+            usec::obs::Journal::create(dir.to_str().unwrap()).expect("journal");
+        let rec = journal.recorder();
+        let mut i = 0u64;
+        bench.run("journal emit (one order span event)", || {
+            i += 1;
+            rec.emit(
+                usec::obs::Event::new(usec::obs::EventKind::Order, 0, rec.now_ns())
+                    .worker((i % 6) as usize)
+                    .order(i)
+                    .rows(16)
+                    .dur(1_000),
+            );
+            i
+        });
+        journal.finish().expect("journal flush");
+        let _ = std::fs::remove_file(&dir);
+    }
+
+    println!("{}", bench.table());
+    let overhead = if off_wall.as_secs_f64() > 0.0 {
+        (on_wall.as_secs_f64() - off_wall.as_secs_f64()) / off_wall.as_secs_f64() * 100.0
+    } else {
+        f64::NAN
+    };
+    println!(
+        "last run: untraced wall {off_wall:?} vs traced wall {on_wall:?} \
+         ({overhead:+.2}% step-loop overhead, {events} journal events)"
+    );
+
+    match Bench::write_json(&[&bench], &json_path) {
+        Ok(()) => println!("wrote {json_path}"),
+        Err(e) => eprintln!("could not write {json_path}: {e}"),
+    }
+}

@@ -63,6 +63,19 @@
 //!     --migration-budget 8388608 --row-cost-ns 200000 --json-out run.json
 //! ```
 //!
+//! Add `--trace-out trace.jsonl` and the run journals every span — the
+//! master's per-step and per-order timings plus the worker-side
+//! decode/compute/idle breakdowns piggybacked on each `Report` (wire v5)
+//! — which `usec trace` then converts for `chrome://tracing`, or
+//! summarizes as a time-sink table with `--summary`:
+//!
+//! ```text
+//! usec master --workers ... --q 1536 --g 3 --j 2 --placement cyclic \
+//!     --trace-out trace.jsonl --json-out run.json
+//! usec trace trace.jsonl --out trace.json   # load in chrome://tracing
+//! usec trace trace.jsonl --summary          # top time sinks, as text
+//! ```
+//!
 //! Either way `--json-out` reports the actual per-worker resident bytes
 //! under `timeline.storage`. Here we spawn the same daemons on threads
 //! and drive the same master code path (`RunConfig.workers` →
@@ -82,8 +95,9 @@ fn main() {
     usec::util::log::init();
 
     // --- "terminals 1-3": three worker daemons on ephemeral ports ---
-    // (each serves four master sessions: the generator-backed run, the
-    // streamed run, the batched block run, and the rebalanced run below)
+    // (each serves five master sessions: the generator-backed run, the
+    // streamed run, the batched block run, the rebalanced run, and the
+    // traced run below)
     let mut addrs = Vec::new();
     let mut daemons = Vec::new();
     for _ in 0..3 {
@@ -93,7 +107,7 @@ fn main() {
             serve_worker(
                 listener,
                 DaemonOpts {
-                    max_sessions: 4,
+                    max_sessions: 5,
                     ..Default::default()
                 },
             )
@@ -173,8 +187,8 @@ fn main() {
         speeds: vec![1.0, 1.0, 6.0],
         row_cost_ns: 200_000, // throttle makes the skew measurable
         rebalance: RebalanceConfig::enabled(),
-        workers: addrs,
-        ..cfg
+        workers: addrs.clone(),
+        ..cfg.clone()
     };
     let rebalanced = run_power_iteration(&rebalanced_cfg).expect("rebalanced run");
     println!(
@@ -188,6 +202,30 @@ fn main() {
         "post-migration per-worker storage: {:?} bytes",
         rebalanced.timeline.storage_bytes()
     );
+
+    // --- end-to-end tracing: --trace-out over the same daemons ---
+    // every order ships with the trace bit set (wire v5), every report
+    // comes back with the worker-side timing breakdown, and the journal
+    // lands as JSONL — `usec trace` turns it into a Chrome trace, or a
+    // time-sink table with --summary (printed inline here).
+    let journal_path = std::env::temp_dir().join("usec_quickstart_trace.jsonl");
+    let traced_cfg = RunConfig {
+        trace_out: journal_path.to_str().expect("utf-8 temp path").to_string(),
+        workers: addrs,
+        ..cfg
+    };
+    let traced = run_power_iteration(&traced_cfg).expect("traced run");
+    let events = usec::obs::load_journal(traced_cfg.trace_out.as_str()).expect("load journal");
+    println!(
+        "traced run:                 final NMSE {:.3e}, {} journal events \
+         (convert with `usec trace {}`)",
+        traced.final_nmse,
+        events.len(),
+        traced_cfg.trace_out
+    );
+    println!("top time sinks (`usec trace --summary`):");
+    print!("{}", usec::obs::summarize(&events));
+    let _ = std::fs::remove_file(&journal_path);
 
     // the master's harness sent Shutdown on drop; reap the daemons
     for d in daemons {

@@ -9,7 +9,7 @@
 //! dropped connection acts exactly like an elasticity-trace preemption.
 
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use crate::config::types::{BackendKind, RunConfig};
 use crate::error::{Error, Result};
@@ -20,6 +20,7 @@ use crate::net::{
     AnyTransport, Hello, LocalTransport, TcpOptions, TcpPeer, TcpTransport, Transport,
     WorkloadSpec, DEFAULT_HEARTBEAT_MS, WIRE_VERSION,
 };
+use crate::obs::{CounterSnapshot, Event, EventKind, Journal, OrderStat, Recorder, Registry};
 use crate::placement::Placement;
 use crate::rebalance::Rebalancer;
 use crate::runtime::{Backend, BackendSpec};
@@ -44,6 +45,17 @@ pub struct Harness {
     /// steps; `None` keeps the placement frozen, bit-identical to the
     /// classic behaviour.
     rebalancer: Option<Rebalancer>,
+    /// Tracing journal (`--trace-out`): owns the writer thread; dropped
+    /// (or [`Harness::finish_trace`]d) ⇒ flushed and closed.
+    journal: Option<Journal>,
+    /// Harness-side handle on the same journal for step/migration spans.
+    recorder: Option<Recorder>,
+    /// Per-worker counters, shared with the master; snapshotted into every
+    /// [`StepRecord`] while tracing is on.
+    registry: Option<Arc<Registry>>,
+    /// Previous step's transport liveness, to count dead→alive
+    /// re-admissions as reconnects.
+    prev_alive: Vec<bool>,
     cfg: RunConfig,
 }
 
@@ -165,7 +177,7 @@ impl Harness {
             )?)
         };
 
-        let master = Master::new(MasterConfig {
+        let mut master = Master::new(MasterConfig {
             placement: placement.clone(),
             sub_ranges: sub_ranges.clone(),
             params: cfg.solve_params(),
@@ -176,6 +188,21 @@ impl Harness {
             recovery_timeout: Duration::from_secs(60),
             recovery: cfg.recovery,
         })?;
+
+        // `--trace-out` attaches the whole observability stack: the JSONL
+        // journal, the master's per-order spans, and the counter registry.
+        // When the flag is absent none of this exists and the run (wire
+        // bytes included) is identical to an untraced build.
+        let (journal, recorder, registry) = if cfg.trace_out.is_empty() {
+            (None, None, None)
+        } else {
+            let journal = Journal::create(&cfg.trace_out)?;
+            let registry = Arc::new(Registry::new(cfg.n));
+            master.set_recorder(Some(journal.recorder()));
+            master.set_registry(Arc::clone(&registry));
+            let recorder = journal.recorder();
+            (Some(journal), Some(recorder), Some(registry))
+        };
 
         let combine = BackendSpec::from_kind(
             // PJRT combine only works when artifacts match q; fall back.
@@ -234,6 +261,7 @@ impl Harness {
             None
         };
 
+        let prev_alive = transport.alive();
         Ok(Harness {
             placement,
             sub_ranges,
@@ -244,6 +272,10 @@ impl Harness {
             injector,
             timeline,
             rebalancer,
+            journal,
+            recorder,
+            registry,
+            prev_alive,
             cfg: cfg.clone(),
         })
     }
@@ -293,6 +325,14 @@ impl Harness {
                     .set_storage_bytes(self.transport.resident_bytes());
                 alive = self.transport.alive();
             }
+            if let Some(reg) = &self.registry {
+                for (w, (&was, &is)) in self.prev_alive.iter().zip(&alive).enumerate() {
+                    if !was && is {
+                        reg.add_reconnect(w);
+                    }
+                }
+            }
+            self.prev_alive.clone_from(&alive);
             let avail: Vec<usize> = self
                 .trace
                 .next_step()
@@ -310,6 +350,8 @@ impl Harness {
                 .is_err()
             {
                 crate::log_debug!("step {step}: infeasible availability {avail:?}, skipping");
+                let (counters, [rtt_p50_ms, rtt_p99_ms, compute_p50_ms, compute_p99_ms]) =
+                    self.trace_tail(&[]);
                 self.timeline.push(StepRecord {
                     step,
                     available: avail.len(),
@@ -321,9 +363,17 @@ impl Harness {
                     metric: last_metric,
                     recoveries: Vec::new(),
                     migrations,
+                    counters,
+                    rtt_p50_ms,
+                    rtt_p99_ms,
+                    compute_p50_ms,
+                    compute_p99_ms,
                 });
                 continue;
             }
+            // the Step span covers dispatch→assemble *and* the master-side
+            // combine, so order spans nest inside it in the Chrome view
+            let step_span = self.recorder.as_ref().map(|r| (r.now_ns(), Instant::now()));
             let victims = self.injector.choose(&avail);
             let out = self
                 .master
@@ -331,6 +381,15 @@ impl Harness {
             let y = Block::from_interleaved(q, out.nvec, out.y)?;
             let (next, metric) = update(&self.combine, &w, y)?;
             last_metric = metric;
+            if let (Some(rec), Some((t_ns, start))) = (&self.recorder, step_span) {
+                rec.emit(
+                    Event::new(EventKind::Step, step, t_ns)
+                        .rows(q)
+                        .dur(start.elapsed().as_nanos() as u64),
+                );
+            }
+            let (counters, [rtt_p50_ms, rtt_p99_ms, compute_p50_ms, compute_p99_ms]) =
+                self.trace_tail(&out.order_stats);
             self.timeline.push(StepRecord {
                 step,
                 available: avail.len(),
@@ -342,6 +401,11 @@ impl Harness {
                 metric,
                 recoveries: out.recoveries,
                 migrations,
+                counters,
+                rtt_p50_ms,
+                rtt_p99_ms,
+                compute_p50_ms,
+                compute_p99_ms,
             });
             w = Arc::new(next);
         }
@@ -350,6 +414,44 @@ impl Harness {
 
     pub fn config(&self) -> &RunConfig {
         &self.cfg
+    }
+
+    /// Close the tracing journal: flushes buffered events and joins the
+    /// writer thread, surfacing any write error. No-op when tracing was
+    /// never attached (or already finished); dropping the harness performs
+    /// the same flush silently.
+    pub fn finish_trace(&mut self) -> Result<()> {
+        match self.journal.take() {
+            Some(j) => j.finish(),
+            None => Ok(()),
+        }
+    }
+
+    /// Tracing tail for a [`StepRecord`]: the per-worker counter snapshot
+    /// (registry merged with transport wire IO) plus order-latency
+    /// quantiles in milliseconds — `[rtt p50, rtt p99, compute p50,
+    /// compute p99]`, NaN where no traced order landed this step.
+    fn trace_tail(&self, stats: &[OrderStat]) -> (Vec<CounterSnapshot>, [f64; 4]) {
+        let counters = match &self.registry {
+            Some(reg) => reg.snapshot(&self.transport.io_counters()),
+            None => Vec::new(),
+        };
+        let rtt: Vec<f64> = stats.iter().map(|s| s.rtt_ns as f64 / 1e6).collect();
+        let compute: Vec<f64> = stats
+            .iter()
+            .filter_map(|s| s.breakdown.map(|b| b.compute_ns as f64 / 1e6))
+            .collect();
+        let q = |xs: &[f64], p: f64| {
+            if xs.is_empty() {
+                f64::NAN
+            } else {
+                crate::metrics::stats::quantile(xs, p)
+            }
+        };
+        (
+            counters,
+            [q(&rtt, 0.5), q(&rtt, 0.99), q(&compute, 0.5), q(&compute, 0.99)],
+        )
     }
 
     /// One inter-step rebalance window: consult the drift monitor, execute
@@ -378,6 +480,19 @@ impl Harness {
                     self.placement = placement;
                     self.timeline
                         .set_storage_bytes(self.transport.resident_bytes());
+                    for m in &records {
+                        if let Some(reg) = &self.registry {
+                            reg.add_migration(m.to);
+                        }
+                        if let Some(rec) = &self.recorder {
+                            rec.emit(
+                                Event::new(EventKind::Migration, step, rec.now_ns())
+                                    .worker(m.to)
+                                    .rows(m.rows)
+                                    .note(format!("g{} {}->{}", m.g, m.from, m.to)),
+                            );
+                        }
+                    }
                 }
                 records
             }

@@ -104,6 +104,7 @@ pub fn run_power_iteration(cfg: &RunConfig) -> Result<PowerIterationResult> {
     })?;
 
     let final_nmse = ops::nmse_signless(&final_b, &truth);
+    harness.finish_trace()?;
     Ok(PowerIterationResult {
         timeline: std::mem::take(&mut harness.timeline),
         eigvec: final_b,
@@ -150,6 +151,7 @@ fn run_block_power(
 
     let eigvec = final_w.column(0);
     let final_nmse = ops::nmse_signless(&eigvec, truth);
+    harness.finish_trace()?;
     Ok(PowerIterationResult {
         timeline: std::mem::take(&mut harness.timeline),
         eigvec,

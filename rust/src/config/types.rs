@@ -144,6 +144,10 @@ pub struct RunConfig {
     /// Path for the machine-readable per-step timeline dump (JSON). Empty
     /// ⇒ no dump.
     pub json_out: String,
+    /// Path for the JSONL tracing journal ([`crate::obs`]): spans and
+    /// point events with worker-side timing breakdowns, convertible with
+    /// `usec trace`. Empty ⇒ tracing off (zero overhead).
+    pub trace_out: String,
 }
 
 impl Default for RunConfig {
@@ -178,6 +182,7 @@ impl Default for RunConfig {
             recovery: RecoveryPolicy::default(),
             rebalance: RebalanceConfig::default(),
             json_out: String::new(),
+            trace_out: String::new(),
         }
     }
 }
@@ -254,6 +259,11 @@ impl RunConfig {
                  steps (0 = unlimited; with --rebalance)",
             ),
             ArgSpec::opt("json-out", "", "write the per-step timeline JSON here"),
+            ArgSpec::opt(
+                "trace-out",
+                "",
+                "write the JSONL tracing journal here (convert with `usec trace`)",
+            ),
         ]
     }
 
@@ -297,6 +307,7 @@ impl RunConfig {
                 ..Default::default()
             },
             json_out: a.get("json-out").unwrap_or("").to_string(),
+            trace_out: a.get("trace-out").unwrap_or("").to_string(),
         };
         let mut cfg = cfg;
         if !cfg.workers.is_empty() {

@@ -39,6 +39,21 @@ pub fn master_cli(argv: &[String]) -> Result<()> {
 
 /// Shared `run`/`master` body: execute, print the human summary, and dump
 /// the machine-readable timeline when `--json-out` is set.
+///
+/// ## `--json-out` schema
+///
+/// The document is one object: run identity (`app`, `backend`, `policy`,
+/// `placement`, `transport`, `n`, `batch`, `threads`, `recovery`,
+/// `rebalance`, `seed`), result scalars (`final_nmse`, `eigval`,
+/// `truth_eigval`), an optional `trace_out` (path of the JSONL journal,
+/// present only when `--trace-out` was set), and `timeline` — the
+/// [`crate::metrics::Timeline::to_json`] dump. Each timeline step carries
+/// the per-step series plus, when tracing is on, a `counters` array (one
+/// [`crate::obs::CounterSnapshot`] object per worker: orders, rows, wire
+/// bytes/frames, reconnects, recoveries, migrations) and order latency
+/// quantiles `rtt_p50_ms`/`rtt_p99_ms`/`compute_p50_ms`/`compute_p99_ms`
+/// (null when untraced). The journal itself is converted offline with
+/// `usec trace <journal> [--out trace.json] [--summary]`.
 fn run_and_report(cfg: &RunConfig) -> Result<()> {
     let res = crate::apps::run_power_iteration(cfg)?;
     println!(
@@ -100,8 +115,14 @@ fn run_and_report(cfg: &RunConfig) -> Result<()> {
              re-dispatched to surviving replicas"
         );
     }
+    if !cfg.trace_out.is_empty() {
+        println!(
+            "wrote tracing journal to {} (convert with `usec trace {}`)",
+            cfg.trace_out, cfg.trace_out
+        );
+    }
     if !cfg.json_out.is_empty() {
-        let doc = crate::util::json::ObjBuilder::new()
+        let mut doc = crate::util::json::ObjBuilder::new()
             .str("app", "power-iteration")
             .str("backend", cfg.backend.name())
             .str("policy", cfg.policy.name())
@@ -125,9 +146,11 @@ fn run_and_report(cfg: &RunConfig) -> Result<()> {
             .num("final_nmse", res.final_nmse)
             .num("eigval", res.eigval)
             .num("truth_eigval", res.truth_eigval)
-            .val("timeline", res.timeline.to_json())
-            .build();
-        std::fs::write(&cfg.json_out, format!("{doc}\n"))?;
+            .val("timeline", res.timeline.to_json());
+        if !cfg.trace_out.is_empty() {
+            doc = doc.str("trace_out", &cfg.trace_out);
+        }
+        std::fs::write(&cfg.json_out, format!("{}\n", doc.build()))?;
         println!("wrote timeline JSON to {}", cfg.json_out);
     }
     println!("\nper-step series (CSV):\n{}", res.timeline.to_csv());
@@ -295,6 +318,34 @@ mod tests {
         let tl = j.get("timeline").unwrap();
         assert_eq!(tl.get_usize("steps"), Some(3));
         let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn run_cli_writes_trace_journal() {
+        let dir = std::env::temp_dir();
+        let jpath = dir.join("usec_run_cli_trace_test.jsonl");
+        let opath = dir.join("usec_run_cli_trace_test.json");
+        let jp = jpath.to_str().unwrap();
+        let op = opath.to_str().unwrap();
+        run_cli(&sv(&[
+            "--q", "60", "--r", "60", "--steps", "3", "--speeds", "1,2,3,4,5,6",
+            "--trace-out", jp, "--json-out", op,
+        ]))
+        .unwrap();
+        let events = crate::obs::load_journal(jp).unwrap();
+        let steps = events
+            .iter()
+            .filter(|e| e.kind == crate::obs::EventKind::Step)
+            .count();
+        assert_eq!(steps, 3, "one step span per iteration");
+        assert!(events
+            .iter()
+            .any(|e| e.kind == crate::obs::EventKind::Order && e.breakdown.is_some()));
+        let text = std::fs::read_to_string(&opath).unwrap();
+        let j = crate::util::json::Json::parse(text.trim()).unwrap();
+        assert_eq!(j.get_str("trace_out"), Some(jp));
+        let _ = std::fs::remove_file(&jpath);
+        let _ = std::fs::remove_file(&opath);
     }
 
     #[test]

@@ -70,6 +70,22 @@
 //!   for workloads without a deterministic generator.
 //! * [`runtime`] — PJRT artifact loading/execution plus a pure-Rust host
 //!   backend so everything is testable without artifacts.
+//! * [`obs`] — end-to-end observability: `--trace-out PATH` writes a
+//!   JSONL **event journal** (spans and instants — `step`, `solve`,
+//!   `dispatch`, `order`, `recovery`, `migration`, `heartbeat_lapse` —
+//!   with monotonic timestamps and step/worker/order causal ids) through
+//!   a channel-fed writer thread that costs nothing when disabled.
+//!   Traced orders ask workers for a **timing breakdown**
+//!   ([`obs::OrderBreakdown`]: decode / compute / throttle / assemble /
+//!   encode / idle), shipped back as an optional trailing section of
+//!   `Report` (wire v5 — byte-identical to v4 when absent), so the
+//!   journal holds both the master's observed RTT and the worker's
+//!   account of it. Per-worker counters (orders, rows, bytes/frames
+//!   tx/rx, reconnects, recoveries, migrations) and per-step order-RTT /
+//!   compute p50/p99 land in [`metrics::Timeline`] / `--json-out`, and
+//!   `usec trace` converts a journal to Chrome Trace Event Format (one
+//!   track per worker) for `chrome://tracing` / Perfetto, with
+//!   `--summary` printing the top time sinks.
 //! * [`apps`] — power iteration, ridge regression and PageRank built on the
 //!   elastic substrate.
 //!
@@ -96,6 +112,7 @@ pub mod exp;
 pub mod linalg;
 pub mod metrics;
 pub mod net;
+pub mod obs;
 pub mod optim;
 pub mod placement;
 pub mod rebalance;

@@ -8,6 +8,7 @@ pub struct Histogram {
     counts: Vec<u64>,
     below: u64,
     above: u64,
+    nan: u64,
 }
 
 impl Histogram {
@@ -19,11 +20,16 @@ impl Histogram {
             counts: vec![0; buckets],
             below: 0,
             above: 0,
+            nan: 0,
         }
     }
 
     pub fn push(&mut self, x: f64) {
-        if x < self.lo {
+        // NaN compares false against both bounds, so without this check it
+        // would cast to bucket 0 and silently skew the distribution.
+        if x.is_nan() {
+            self.nan += 1;
+        } else if x < self.lo {
             self.below += 1;
         } else if x >= self.hi {
             self.above += 1;
@@ -42,8 +48,13 @@ impl Histogram {
         (self.below, self.above)
     }
 
+    /// Samples rejected as NaN (distinct from the range outliers).
+    pub fn nan_count(&self) -> u64 {
+        self.nan
+    }
+
     pub fn total(&self) -> u64 {
-        self.counts.iter().sum::<u64>() + self.below + self.above
+        self.counts.iter().sum::<u64>() + self.below + self.above + self.nan
     }
 
     /// Bucket midpoints (x-axis for plotting/reporting).
@@ -69,6 +80,9 @@ impl Histogram {
                 self.below, self.above
             ));
         }
+        if self.nan > 0 {
+            out.push_str(&format!("({} NaN samples rejected)\n", self.nan));
+        }
         out
     }
 }
@@ -86,6 +100,19 @@ mod tests {
         assert_eq!(h.counts(), &[2, 1, 1, 1]);
         assert_eq!(h.outliers(), (1, 2));
         assert_eq!(h.total(), 8);
+    }
+
+    #[test]
+    fn nan_is_counted_apart_not_binned() {
+        let mut h = Histogram::new(0.0, 1.0, 4);
+        h.push(f64::NAN);
+        h.push(0.1);
+        h.push(f64::NAN);
+        assert_eq!(h.counts(), &[1, 0, 0, 0], "NaN must not land in bucket 0");
+        assert_eq!(h.outliers(), (0, 0), "NaN is not a range outlier");
+        assert_eq!(h.nan_count(), 2);
+        assert_eq!(h.total(), 3);
+        assert!(h.render(10).contains("2 NaN"));
     }
 
     #[test]

@@ -2,6 +2,7 @@
 
 use std::time::Duration;
 
+use crate::obs::CounterSnapshot;
 use crate::rebalance::MigrationRecord;
 use crate::sched::recovery::RecoveryEvent;
 use crate::util::json::{Json, ObjBuilder};
@@ -31,6 +32,18 @@ pub struct StepRecord {
     /// unless `--rebalance` fired): bytes moved plus the before/after
     /// expected time of the plan they belong to.
     pub migrations: Vec<MigrationRecord>,
+    /// Per-worker cumulative counters snapshotted at the end of this step
+    /// ([`crate::obs::Registry::snapshot`]). Empty when no counter
+    /// registry is attached (tracing off).
+    pub counters: Vec<CounterSnapshot>,
+    /// Order round-trip quantiles over this step's traced orders, in
+    /// milliseconds (NaN when untraced or no orders closed).
+    pub rtt_p50_ms: f64,
+    pub rtt_p99_ms: f64,
+    /// Worker-reported compute-time quantiles over this step's traced
+    /// orders, in milliseconds (NaN when no breakdowns arrived).
+    pub compute_p50_ms: f64,
+    pub compute_p99_ms: f64,
 }
 
 /// An append-only run log.
@@ -143,7 +156,9 @@ impl Timeline {
                             .build()
                     })
                     .collect();
-                ObjBuilder::new()
+                let counters: Vec<Json> =
+                    s.counters.iter().map(|c| c.to_json()).collect();
+                let mut b = ObjBuilder::new()
                     .num("step", s.step as f64)
                     .num("available", s.available as f64)
                     .num("reported", s.reported as f64)
@@ -152,8 +167,18 @@ impl Timeline {
                     .num("elapsed_s", t)
                     .num("solve_s", s.solve.as_secs_f64())
                     .val("predicted_c", num_or_null(s.predicted_c))
-                    .val("metric", num_or_null(s.metric))
-                    .val("recoveries", Json::Arr(recoveries))
+                    .val("metric", num_or_null(s.metric));
+                // tracing tail only on traced steps, so untraced dumps stay
+                // byte-identical to the pre-tracing schema
+                if !s.counters.is_empty() {
+                    b = b
+                        .val("rtt_p50_ms", num_or_null(s.rtt_p50_ms))
+                        .val("rtt_p99_ms", num_or_null(s.rtt_p99_ms))
+                        .val("compute_p50_ms", num_or_null(s.compute_p50_ms))
+                        .val("compute_p99_ms", num_or_null(s.compute_p99_ms))
+                        .val("counters", Json::Arr(counters));
+                }
+                b.val("recoveries", Json::Arr(recoveries))
                     .val("migrations", Json::Arr(migrations))
                     .build()
             })
@@ -199,20 +224,39 @@ impl Timeline {
             .sum()
     }
 
-    /// CSV dump (step, elapsed, metric, available, reported, solve_ms).
+    /// CSV dump — the flat twin of [`Timeline::to_json`]: one row per
+    /// step with the same recovery/migration totals and order-RTT
+    /// quantiles. NaN quantiles (untraced runs) render as empty fields so
+    /// the CSV stays numeric-parseable.
     pub fn to_csv(&self) -> String {
-        let mut out = String::from("step,elapsed_s,metric,available,reported,solve_ms\n");
+        let mut out = String::from(
+            "step,elapsed_s,metric,available,reported,solve_ms,\
+             recoveries,migrations,migrated_bytes,rtt_p50_ms,rtt_p99_ms\n",
+        );
+        let ms_or_empty = |v: f64| {
+            if v.is_finite() {
+                format!("{v:.3}")
+            } else {
+                String::new()
+            }
+        };
         let mut t = 0.0;
         for s in &self.steps {
             t += s.wall.as_secs_f64();
+            let migrated: u64 = s.migrations.iter().map(|m| m.bytes).sum();
             out.push_str(&format!(
-                "{},{:.6},{:.6e},{},{},{:.3}\n",
+                "{},{:.6},{:.6e},{},{},{:.3},{},{},{},{},{}\n",
                 s.step,
                 t,
                 s.metric,
                 s.available,
                 s.reported,
-                s.solve.as_secs_f64() * 1e3
+                s.solve.as_secs_f64() * 1e3,
+                s.recoveries.len(),
+                s.migrations.len(),
+                migrated,
+                ms_or_empty(s.rtt_p50_ms),
+                ms_or_empty(s.rtt_p99_ms),
             ));
         }
         out
@@ -235,6 +279,11 @@ mod tests {
             metric,
             recoveries: Vec::new(),
             migrations: Vec::new(),
+            counters: Vec::new(),
+            rtt_p50_ms: f64::NAN,
+            rtt_p99_ms: f64::NAN,
+            compute_p50_ms: f64::NAN,
+            compute_p99_ms: f64::NAN,
         }
     }
 
@@ -266,6 +315,78 @@ mod tests {
         let csv = t.to_csv();
         assert_eq!(csv.lines().count(), 2);
         assert!(csv.starts_with("step,"));
+    }
+
+    #[test]
+    fn csv_golden_row_matches_json_fields() {
+        use crate::sched::recovery::{RecoveryEvent, RecoveryReason};
+        let mut t = Timeline::new();
+        let mut r = rec(3, 250, 0.0625);
+        r.recoveries.push(RecoveryEvent {
+            step: 3,
+            victim: 1,
+            reason: RecoveryReason::Overdue,
+            rows: 10,
+            rescuers: vec![0],
+        });
+        r.migrations.push(MigrationRecord {
+            g: 0,
+            from: 1,
+            to: 2,
+            rows: 20,
+            bytes: 9600,
+            expected_before: 0.5,
+            expected_after: 0.4,
+        });
+        r.rtt_p50_ms = 12.5;
+        r.rtt_p99_ms = 40.0;
+        t.push(r);
+        let csv = t.to_csv();
+        let mut lines = csv.lines();
+        assert_eq!(
+            lines.next().unwrap(),
+            "step,elapsed_s,metric,available,reported,solve_ms,\
+             recoveries,migrations,migrated_bytes,rtt_p50_ms,rtt_p99_ms"
+        );
+        assert_eq!(
+            lines.next().unwrap(),
+            "3,0.250000,6.250000e-2,6,6,0.100,1,1,9600,12.500,40.000"
+        );
+        // untraced steps leave the quantile fields empty, not NaN
+        let mut t2 = Timeline::new();
+        t2.push(rec(0, 10, 0.5));
+        assert!(t2.to_csv().lines().nth(1).unwrap().ends_with(",0,0,0,,"));
+    }
+
+    #[test]
+    fn counters_and_quantiles_surface_in_json() {
+        let mut t = Timeline::new();
+        let mut r = rec(0, 10, 0.5);
+        r.counters = vec![CounterSnapshot {
+            worker: 0,
+            orders: 4,
+            rows: 120,
+            bytes_tx: 1000,
+            ..Default::default()
+        }];
+        r.rtt_p50_ms = 2.0;
+        r.rtt_p99_ms = 5.0;
+        r.compute_p50_ms = 1.5;
+        r.compute_p99_ms = 4.0;
+        t.push(r);
+        t.push(rec(1, 10, 0.1)); // untraced step: tracing keys absent entirely
+        let back = crate::util::json::Json::parse(&t.to_json().to_string()).unwrap();
+        let steps = back.get("timeline").unwrap().items().unwrap();
+        let c = steps[0].get("counters").unwrap().items().unwrap();
+        assert_eq!(c.len(), 1);
+        assert_eq!(c[0].get_usize("orders"), Some(4));
+        assert_eq!(c[0].get_usize("bytes_tx"), Some(1000));
+        assert_eq!(steps[0].get_num("rtt_p50_ms"), Some(2.0));
+        assert_eq!(steps[0].get_num("compute_p99_ms"), Some(4.0));
+        // untraced steps carry no tracing keys, keeping the schema (and
+        // byte output) identical to pre-tracing runs
+        assert!(steps[1].get("rtt_p50_ms").is_none());
+        assert!(steps[1].get("counters").is_none());
     }
 
     #[test]

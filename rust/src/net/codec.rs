@@ -7,8 +7,8 @@
 //! |-----|---------|-----------|------|
 //! | `1` | `Hello` | master → worker | magic `u32`, version `u16`, worker `u32`, speed `f64`, tile_rows `u32`, backend `u8`, G `u32`, heartbeat_ms `u32`, threads `u32`, workload |
 //! | `2` | `HelloAck` | worker → master | version `u16`, worker `u32` |
-//! | `3` | `Work` | master → worker | step `u64`, row_cost_ns `u64`, straggle `u8`(+`f64`), w `vec<f32>`, tasks `u32` × {g `u32`, lo `u64`, hi `u64`} |
-//! | `4` | `Report` | worker → master | worker `u32`, step `u64`, elapsed_ns `u64`, speed `u8`(+`f64`), segments `u32` × {lo `u64`, hi `u64`, values `vec<f32>`} |
+//! | `3` | `Work` | master → worker | step `u64`, row_cost_ns `u64`, straggle `u8`(+`f64`), w `vec<f32>`, tasks `u32` × {g `u32`, lo `u64`, hi `u64`}, \[trace `u8` = 1, v5, only when tracing\] |
+//! | `4` | `Report` | worker → master | worker `u32`, step `u64`, elapsed_ns `u64`, speed `u8`(+`f64`), segments `u32` × {lo `u64`, hi `u64`, values `vec<f32>`}, \[breakdown 6 × `u64`, v5, only when traced\] |
 //! | `5` | `Failed` | worker → master | worker `u32`, step `u64`, error `str` |
 //! | `6` | `Heartbeat` | worker → master | worker `u32`, seq `u64` |
 //! | `7` | `Shutdown` | master → worker | — |
@@ -67,8 +67,14 @@ use super::transport::WorkloadSpec;
 /// the live-migration tags `PlacementUpdate` (12) / `MigrateAck` (13);
 /// every v3 tag layout is unchanged, so v4 traffic that sends no
 /// migration tags encodes byte-identically to v3 (only the advertised
-/// handshake version differs).
-pub const WIRE_VERSION: u16 = 4;
+/// handshake version differs). Version 5 added the optional *trailing*
+/// tracing sections on the work/report tags: a `Work` (3/10) may end with
+/// one extra byte `1` asking the worker for a timing breakdown, and a
+/// `Report` (4/11) may end with the 48-byte breakdown (6 × `u64` ns:
+/// decode, compute, throttle, assemble, encode, idle). Both sections are
+/// emitted only when tracing is on, so an untraced v5 run's frames are
+/// byte-identical to v4.
+pub const WIRE_VERSION: u16 = 5;
 
 /// Handshake magic ("USEC" in ASCII) — catches non-USEC peers immediately.
 pub const HELLO_MAGIC: u32 = 0x5553_4543;
@@ -343,6 +349,11 @@ pub fn encode(msg: &WireMsg) -> Vec<u8> {
                 e.u64(t.rows.lo as u64);
                 e.u64(t.rows.hi as u64);
             }
+            // v5 trailing section, emitted only when tracing: untraced
+            // orders stay byte-identical to v4
+            if o.trace {
+                e.u8(1);
+            }
             e.buf
         }
         WireMsg::Report(r) => {
@@ -365,6 +376,16 @@ pub fn encode(msg: &WireMsg) -> Vec<u8> {
                 e.u64(s.rows.lo as u64);
                 e.u64(s.rows.hi as u64);
                 e.f32s(&s.values);
+            }
+            // v5 trailing section: the worker's timing breakdown, present
+            // only on traced orders
+            if let Some(bd) = &r.breakdown {
+                e.u64(bd.decode_ns);
+                e.u64(bd.compute_ns);
+                e.u64(bd.throttle_ns);
+                e.u64(bd.assemble_ns);
+                e.u64(bd.encode_ns);
+                e.u64(bd.idle_ns);
             }
             e.buf
         }
@@ -623,12 +644,15 @@ pub fn decode(payload: &[u8]) -> Result<WireMsg> {
                 let rows = dec_row_range(&mut d)?;
                 tasks.push(Task { g, rows });
             }
+            // optional v5 trailing trace flag; absent on v4 frames
+            let trace = d.remaining() > 0 && d.u8()? != 0;
             WireMsg::Work(WorkOrder {
                 step,
                 w: Arc::new(w),
                 tasks,
                 row_cost_ns,
                 straggle,
+                trace,
             })
         }
         TAG_REPORT | TAG_REPORT_BLOCK => {
@@ -659,6 +683,20 @@ pub fn decode(payload: &[u8]) -> Result<WireMsg> {
                 }
                 segments.push(Segment { rows, values });
             }
+            // optional v5 trailing breakdown; absent on v4 frames. A
+            // partial trailer fails the first short u64 read.
+            let breakdown = if d.remaining() > 0 {
+                Some(crate::obs::OrderBreakdown {
+                    decode_ns: d.u64()?,
+                    compute_ns: d.u64()?,
+                    throttle_ns: d.u64()?,
+                    assemble_ns: d.u64()?,
+                    encode_ns: d.u64()?,
+                    idle_ns: d.u64()?,
+                })
+            } else {
+                None
+            };
             WireMsg::Report(WorkerReport {
                 worker,
                 step,
@@ -666,6 +704,7 @@ pub fn decode(payload: &[u8]) -> Result<WireMsg> {
                 nvec,
                 measured_speed,
                 elapsed,
+                breakdown,
             })
         }
         TAG_FAILED => {
@@ -765,14 +804,25 @@ pub fn decode(payload: &[u8]) -> Result<WireMsg> {
 
 // ----------------------------------------------------------- stream glue
 
-/// Encode + frame + write one message.
-pub fn write_msg<W: Write>(w: &mut W, msg: &WireMsg) -> Result<()> {
-    frame::write_frame(w, &encode(msg))
+/// Encode + frame + write one message. Returns the bytes put on the
+/// wire (payload + 4-byte length prefix) so callers can count traffic.
+pub fn write_msg<W: Write>(w: &mut W, msg: &WireMsg) -> Result<usize> {
+    let payload = encode(msg);
+    frame::write_frame(w, &payload)?;
+    Ok(payload.len() + 4)
 }
 
 /// Read + decode one message.
 pub fn read_msg<R: Read>(r: &mut R) -> Result<WireMsg> {
-    decode(&frame::read_frame(r)?)
+    Ok(read_msg_counted(r)?.0)
+}
+
+/// Like [`read_msg`], also returning the wire size of the frame
+/// (payload + 4-byte length prefix) for I/O accounting.
+pub fn read_msg_counted<R: Read>(r: &mut R) -> Result<(WireMsg, u64)> {
+    let payload = frame::read_frame(r)?;
+    let msg = decode(&payload)?;
+    Ok((msg, payload.len() as u64 + 4))
 }
 
 #[cfg(test)]
@@ -839,6 +889,7 @@ mod tests {
             ],
             row_cost_ns: 20_000,
             straggle: Some(StraggleMode::Slow(3.5)),
+            trace: false,
         }));
     }
 
@@ -854,6 +905,7 @@ mod tests {
             nvec: 1,
             measured_speed: Some(0.75),
             elapsed: Duration::from_micros(1234),
+            breakdown: None,
         }));
         roundtrip(WireMsg::Failed {
             worker: 1,
@@ -876,6 +928,7 @@ mod tests {
             }],
             row_cost_ns: 100,
             straggle: None,
+            trace: false,
         }));
         roundtrip(WireMsg::Report(WorkerReport {
             worker: 3,
@@ -887,6 +940,7 @@ mod tests {
             nvec: 3,
             measured_speed: None,
             elapsed: Duration::from_micros(5),
+            breakdown: None,
         }));
     }
 
@@ -903,6 +957,7 @@ mod tests {
             }],
             row_cost_ns: 9,
             straggle: None,
+            trace: false,
         };
         let bytes = encode(&WireMsg::Work(order));
         assert_eq!(bytes[0], TAG_WORK);
@@ -925,6 +980,7 @@ mod tests {
             nvec: 1,
             measured_speed: None,
             elapsed: Duration::from_nanos(42),
+            breakdown: None,
         };
         assert_eq!(encode(&WireMsg::Report(report))[0], TAG_REPORT);
     }
@@ -1088,11 +1144,12 @@ mod tests {
     }
 
     #[test]
-    fn v4_keeps_every_v3_tag_layout() {
-        // v4 only *adds* tags 12/13; a capture of v3 traffic must decode
-        // (and re-encode) byte-identically, so a rebalance-off run is
-        // indistinguishable on the wire apart from the advertised version
-        assert_eq!(WIRE_VERSION, 4);
+    fn v5_keeps_every_v4_tag_layout() {
+        // v5 only *appends* optional trailing sections; a capture of v4
+        // traffic must decode (and re-encode) byte-identically, so a
+        // tracing-off run is indistinguishable on the wire apart from
+        // the advertised handshake version
+        assert_eq!(WIRE_VERSION, 5);
         let mut want = Enc::new(TAG_REPORT);
         want.u32(2); // worker
         want.u64(9); // step
@@ -1113,8 +1170,9 @@ mod tests {
             nvec: 1,
             measured_speed: Some(0.75),
             elapsed: Duration::from_micros(1234),
+            breakdown: None,
         });
-        assert_eq!(encode(&report), want.buf, "tag-4 layout changed in v4");
+        assert_eq!(encode(&report), want.buf, "tag-4 layout changed in v5");
 
         let mut want = Enc::new(TAG_DATA);
         let values = vec![0.5f32, -1.5];
@@ -1130,7 +1188,92 @@ mod tests {
             done: true,
             values,
         });
-        assert_eq!(encode(&data), want.buf, "tag-8 layout changed in v4");
+        assert_eq!(encode(&data), want.buf, "tag-8 layout changed in v5");
+    }
+
+    #[test]
+    fn traced_work_appends_one_byte_and_roundtrips() {
+        let untraced = WorkOrder {
+            step: 3,
+            w: Arc::new(Block::single(vec![1.0, 2.0])),
+            tasks: vec![Task {
+                g: 0,
+                rows: RowRange::new(0, 2),
+            }],
+            row_cost_ns: 9,
+            straggle: None,
+            trace: false,
+        };
+        let traced = WorkOrder {
+            trace: true,
+            ..untraced.clone()
+        };
+        let base = encode(&WireMsg::Work(untraced));
+        let mut want = base.clone();
+        want.push(1);
+        assert_eq!(encode(&WireMsg::Work(traced.clone())), want);
+        roundtrip(WireMsg::Work(traced.clone()));
+        // block tag carries the same trailer
+        let block = WorkOrder {
+            w: Arc::new(
+                Block::from_interleaved(2, 2, vec![1.0, 2.0, 3.0, 4.0]).unwrap(),
+            ),
+            ..traced
+        };
+        let bytes = encode(&WireMsg::Work(block.clone()));
+        assert_eq!(bytes[0], TAG_WORK_BLOCK);
+        assert_eq!(*bytes.last().unwrap(), 1);
+        roundtrip(WireMsg::Work(block));
+    }
+
+    #[test]
+    fn report_breakdown_is_an_optional_48_byte_trailer() {
+        let plain = WorkerReport {
+            worker: 2,
+            step: 9,
+            segments: vec![Segment {
+                rows: RowRange::new(100, 103),
+                values: vec![1.0, 2.0, 3.0],
+            }],
+            nvec: 1,
+            measured_speed: Some(0.75),
+            elapsed: Duration::from_micros(1234),
+            breakdown: None,
+        };
+        let traced = WorkerReport {
+            breakdown: Some(crate::obs::OrderBreakdown {
+                decode_ns: 1,
+                compute_ns: 2,
+                throttle_ns: 3,
+                assemble_ns: 4,
+                encode_ns: 5,
+                idle_ns: 6,
+            }),
+            ..plain.clone()
+        };
+        let base = encode(&WireMsg::Report(plain));
+        let full = encode(&WireMsg::Report(traced.clone()));
+        assert_eq!(full.len(), base.len() + 48);
+        assert_eq!(&full[..base.len()], &base[..]);
+        roundtrip(WireMsg::Report(traced.clone()));
+        // a v4 peer's frame (no trailer) decodes with breakdown: None —
+        // that is exactly `base`, checked by the roundtrips above — and
+        // any *partial* trailer is rejected, not misread
+        for cut in base.len() + 1..full.len() {
+            assert!(decode(&full[..cut]).is_err(), "partial trailer {cut} decoded");
+        }
+        // block report carries the same trailer
+        let block = WorkerReport {
+            nvec: 2,
+            segments: vec![Segment {
+                rows: RowRange::new(0, 2),
+                values: vec![1.0, 2.0, 3.0, 4.0],
+            }],
+            ..traced
+        };
+        let bytes = encode(&WireMsg::Report(block.clone()));
+        assert_eq!(bytes[0], TAG_REPORT_BLOCK);
+        roundtrip(WireMsg::Report(block));
     }
 
     #[test]

@@ -32,7 +32,7 @@
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use crate::cli::{ArgSpec, Args};
 use crate::error::{Error, Result};
@@ -42,7 +42,7 @@ use crate::sched::worker::{execute_order, ExecScratch, WorkerConfig, WorkerStora
 use crate::storage::{coalesce_sub_ranges, RowShard, StorageView, StoreHandle};
 
 use super::codec::{self, Hello, HelloAck, WireMsg, WIRE_VERSION};
-use super::lock;
+use super::{frame, lock};
 
 /// How long the daemon waits for the master's `Hello` (and for each
 /// streamed `Data` frame) before dropping a connection that goes quiet.
@@ -266,8 +266,21 @@ fn serve_session(stream: TcpStream, opts: &DaemonOpts) -> Result<()> {
     // zero-allocation across tiles and steps
     let mut scratch = ExecScratch::new();
     let mut reader = stream;
+    // daemon-side thirds of the traced breakdown: the encode+write of the
+    // *previous* report (a report cannot time its own serialization), and
+    // the socket-starved gap since the last message finished processing
+    let mut last_encode_ns = 0u64;
+    let mut idle_since = Instant::now();
     let result = loop {
-        match codec::read_msg(&mut reader) {
+        // read the frame and decode separately (instead of read_msg) so a
+        // traced order can report how long the daemon sat idle on the
+        // socket and how long the payload took to decode
+        let framed = frame::read_frame(&mut reader);
+        let idle_ns = idle_since.elapsed().as_nanos() as u64;
+        let decode_start = Instant::now();
+        let decoded = framed.and_then(|payload| codec::decode(&payload));
+        let decode_ns = decode_start.elapsed().as_nanos() as u64;
+        match decoded {
             Ok(WireMsg::Work(order)) => {
                 let step = order.step;
                 if let Err(e) = validate_order(&cfg, &order) {
@@ -281,13 +294,21 @@ fn serve_session(stream: TcpStream, opts: &DaemonOpts) -> Result<()> {
                             error: e.to_string(),
                         },
                     );
+                    idle_since = Instant::now();
                     continue;
                 }
                 match execute_order(&cfg, &backend, &tile, &order, &mut scratch) {
-                    Ok(Some(report)) => {
-                        if let Err(e) =
-                            codec::write_msg(&mut *lock(&writer), &WireMsg::Report(report))
-                        {
+                    Ok(Some(mut report)) => {
+                        if let Some(bd) = report.breakdown.as_mut() {
+                            bd.decode_ns = decode_ns;
+                            bd.idle_ns = idle_ns;
+                            bd.encode_ns = last_encode_ns;
+                        }
+                        let encode_start = Instant::now();
+                        let sent =
+                            codec::write_msg(&mut *lock(&writer), &WireMsg::Report(report));
+                        last_encode_ns = encode_start.elapsed().as_nanos() as u64;
+                        if let Err(e) = sent {
                             break Err(e);
                         }
                     }
@@ -345,6 +366,7 @@ fn serve_session(stream: TcpStream, opts: &DaemonOpts) -> Result<()> {
             }
             Err(e) => break Err(e),
         }
+        idle_since = Instant::now();
     };
     stop.store(true, Ordering::Relaxed);
     if let Some(h) = hb_handle {
@@ -604,6 +626,7 @@ mod tests {
                     }],
                     row_cost_ns: 0,
                     straggle: None,
+                    trace: false,
                 }),
             )
             .unwrap();
@@ -614,6 +637,64 @@ mod tests {
                     assert_eq!(r.step, 5);
                     assert_eq!(r.segments.len(), 1);
                     assert_eq!(r.segments[0].rows.len(), 4);
+                }
+                other => panic!("expected Report, got {other:?}"),
+            }
+        }
+        codec::write_msg(&mut &stream, &WireMsg::Shutdown).unwrap();
+        h.join().unwrap().unwrap();
+    }
+
+    #[test]
+    fn traced_orders_carry_daemon_side_timings() {
+        use crate::linalg::Block;
+        use crate::optim::Task;
+        use crate::sched::protocol::WorkOrder;
+
+        let (addr, h) = spawn_daemon();
+        let stream = TcpStream::connect(addr).unwrap();
+        stream
+            .set_read_timeout(Some(Duration::from_secs(5)))
+            .unwrap();
+        codec::write_msg(&mut &stream, &WireMsg::Hello(test_hello(7))).unwrap();
+        match codec::read_msg(&mut &stream).unwrap() {
+            WireMsg::HelloAck(_) => {}
+            other => panic!("expected HelloAck, got {other:?}"),
+        }
+        read_storage_ready(&stream);
+        for i in 0..2usize {
+            if i == 1 {
+                // a deliberate gap the second order's idle_ns must cover
+                std::thread::sleep(Duration::from_millis(50));
+            }
+            codec::write_msg(
+                &mut &stream,
+                &WireMsg::Work(WorkOrder {
+                    step: 6,
+                    w: Arc::new(Block::single(vec![0.5f32; 16])),
+                    tasks: vec![Task {
+                        g: 0,
+                        rows: RowRange::new(0, 4),
+                    }],
+                    row_cost_ns: 0,
+                    straggle: None,
+                    trace: true,
+                }),
+            )
+            .unwrap();
+            match codec::read_msg(&mut &stream).unwrap() {
+                WireMsg::Report(r) => {
+                    let bd = r.breakdown.expect("traced order must carry a breakdown");
+                    if i == 0 {
+                        // nothing was encoded before the first report
+                        assert_eq!(bd.encode_ns, 0);
+                    } else {
+                        assert!(
+                            bd.idle_ns >= 40_000_000,
+                            "50ms gap not visible as idle: {}ns",
+                            bd.idle_ns
+                        );
+                    }
                 }
                 other => panic!("expected Report, got {other:?}"),
             }
@@ -722,6 +803,7 @@ mod tests {
                         }],
                         row_cost_ns: 0,
                         straggle: None,
+                        trace: false,
                     }),
                 )
                 .unwrap();

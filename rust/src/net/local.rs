@@ -196,6 +196,7 @@ mod tests {
                     }],
                     row_cost_ns: 0,
                     straggle: None,
+                    trace: false,
                 },
             )
             .unwrap();
@@ -219,6 +220,7 @@ mod tests {
             tasks: vec![],
             row_cost_ns: 0,
             straggle: None,
+            trace: false,
         })
         .is_err());
     }
@@ -248,6 +250,7 @@ mod tests {
                 }],
                 row_cost_ns: 0,
                 straggle: None,
+                trace: false,
             },
         )
         .unwrap();
@@ -276,6 +279,7 @@ mod tests {
                 tasks: vec![],
                 row_cost_ns: 0,
                 straggle: None,
+                trace: false,
             },
         )
         .unwrap();

@@ -22,8 +22,8 @@
 //! |-----|-------------|-----------|
 //! | 1 | `Hello` (magic, version, id, speed, tile, backend, G, heartbeat, threads, workload) | master → worker |
 //! | 2 | `HelloAck` (version, id) | worker → master |
-//! | 3 | `Work` (step, cost, straggle, iterate, tasks) | master → worker |
-//! | 4 | `Report` (id, step, elapsed, speed, segments) | worker → master |
+//! | 3 | `Work` (step, cost, straggle, iterate, tasks \[+ trace byte, v5\]) | master → worker |
+//! | 4 | `Report` (id, step, elapsed, speed, segments \[+ breakdown, v5\]) | worker → master |
 //! | 5 | `Failed` (id, step, error) | worker → master |
 //! | 6 | `Heartbeat` (id, seq) | worker → master |
 //! | 7 | `Shutdown` | master → worker |
@@ -90,6 +90,14 @@
 //! count mid-transition. [`LocalTransport`] performs the same swap as a
 //! zero-copy `Arc` handoff. When no migration tags are sent, v4 traffic
 //! encodes byte-identically to v3.
+//!
+//! ## Tracing (wire v5)
+//!
+//! With a tracing journal attached ([`crate::obs`]) the master sets the
+//! optional trailing trace byte on `Work`, and the daemon answers with a
+//! `Report` carrying an optional trailing [`crate::obs::OrderBreakdown`]
+//! (decode/compute/throttle/assemble/encode/idle, 6 × u64). Untraced
+//! traffic omits both trailers and encodes byte-identically to v4.
 
 pub mod codec;
 pub mod daemon;
@@ -122,6 +130,18 @@ pub(crate) fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
 pub enum AnyTransport {
     Local(LocalTransport),
     Tcp(TcpTransport),
+}
+
+impl AnyTransport {
+    /// Per-worker wire IO tallies for the counters registry
+    /// ([`crate::obs::Registry::snapshot`]). The in-process transport
+    /// moves `Arc`s, not bytes, so it reports zeros.
+    pub fn io_counters(&self) -> Vec<crate::obs::IoCounters> {
+        match self {
+            AnyTransport::Local(t) => vec![Default::default(); t.size()],
+            AnyTransport::Tcp(t) => t.io_counters(),
+        }
+    }
 }
 
 impl Transport for AnyTransport {

@@ -134,6 +134,20 @@ struct Peer {
     recipe_touched: AtomicBool,
     /// Matrix payload bytes the daemon reported in `StorageReady`.
     resident_bytes: AtomicU64,
+    /// Order/report-plane IO tallies ([`crate::obs::IoCounters`]): frames
+    /// and framed bytes through [`Transport::send`] and the reader thread.
+    /// Monotone across re-admissions (the `Peer` outlives its sockets).
+    io: IoStats,
+}
+
+/// Per-peer IO counters; `Relaxed` everywhere — they are monotone tallies
+/// read at step boundaries, never synchronization.
+#[derive(Default)]
+struct IoStats {
+    bytes_tx: AtomicU64,
+    bytes_rx: AtomicU64,
+    frames_tx: AtomicU64,
+    frames_rx: AtomicU64,
 }
 
 impl Peer {
@@ -177,7 +191,7 @@ fn stream_rows(stream: &TcpStream, m: &Matrix, ranges: &[RowRange]) -> Result<()
     let total: usize = ranges.iter().map(|r| r.len()).sum();
     if total == 0 {
         // a worker with nothing placed still needs the end-of-stream mark
-        return codec::write_msg(
+        codec::write_msg(
             &mut &*stream,
             &WireMsg::Data(DataFrame {
                 rows: RowRange::new(0, 0),
@@ -185,7 +199,8 @@ fn stream_rows(stream: &TcpStream, m: &Matrix, ranges: &[RowRange]) -> Result<()
                 done: true,
                 values: Vec::new(),
             }),
-        );
+        )?;
+        return Ok(());
     }
     let mut sent = 0usize;
     for r in ranges {
@@ -358,6 +373,7 @@ impl TcpTransport {
                 lifecycle: Mutex::new(()),
                 recipe_touched: AtomicBool::new(false),
                 resident_bytes: AtomicU64::new(resident),
+                io: IoStats::default(),
             });
             let peer2 = Arc::clone(&peer);
             let tx2 = tx.clone();
@@ -450,6 +466,23 @@ impl TcpTransport {
         }
     }
 
+    /// Per-worker IO tallies for the order/report plane: frames and framed
+    /// bytes shipped through [`Transport::send`] and received by the
+    /// reader threads (handshake/migration row streaming is accounted as
+    /// `migrated_bytes` in the timeline instead). Monotone across
+    /// re-admissions.
+    pub fn io_counters(&self) -> Vec<crate::obs::IoCounters> {
+        self.peers
+            .iter()
+            .map(|p| crate::obs::IoCounters {
+                bytes_tx: p.io.bytes_tx.load(Ordering::Relaxed),
+                bytes_rx: p.io.bytes_rx.load(Ordering::Relaxed),
+                frames_tx: p.io.frames_tx.load(Ordering::Relaxed),
+                frames_rx: p.io.frames_rx.load(Ordering::Relaxed),
+            })
+            .collect()
+    }
+
     fn halt(&mut self) {
         for p in &self.peers {
             if p.alive.swap(false, Ordering::Relaxed) {
@@ -525,32 +558,41 @@ fn reader_loop(
     epoch: u64,
 ) {
     loop {
-        match codec::read_msg(&mut stream) {
-            Ok(WireMsg::Report(mut r)) => {
-                peer.touch();
-                // the connection, not the payload, is authoritative for
-                // identity — a buggy/malicious peer cannot impersonate
-                // another worker or smuggle an out-of-range id
-                r.worker = id;
-                let _ = tx.send(TransportEvent::Report(r));
-            }
-            Ok(WireMsg::Failed { step, error, .. }) => {
-                peer.touch();
-                let _ = tx.send(TransportEvent::Failed {
-                    worker: id,
-                    step,
-                    error,
-                });
-            }
-            Ok(WireMsg::Heartbeat { .. }) => peer.touch(),
-            Ok(WireMsg::MigrateAck { seq, ok, resident_bytes, .. }) => {
-                peer.touch();
-                // resident bytes are truthful on both outcomes
-                peer.resident_bytes.store(resident_bytes, Ordering::Relaxed);
-                let _ = acks.send((id, seq, ok, resident_bytes));
-            }
-            Ok(other) => {
-                crate::log_debug!("worker {id}: ignoring unexpected message {other:?}");
+        match codec::read_msg_counted(&mut stream) {
+            Ok((msg, bytes)) => {
+                peer.io.bytes_rx.fetch_add(bytes, Ordering::Relaxed);
+                peer.io.frames_rx.fetch_add(1, Ordering::Relaxed);
+                match msg {
+                    WireMsg::Report(mut r) => {
+                        peer.touch();
+                        // the connection, not the payload, is authoritative
+                        // for identity — a buggy/malicious peer cannot
+                        // impersonate another worker or smuggle an
+                        // out-of-range id
+                        r.worker = id;
+                        let _ = tx.send(TransportEvent::Report(r));
+                    }
+                    WireMsg::Failed { step, error, .. } => {
+                        peer.touch();
+                        let _ = tx.send(TransportEvent::Failed {
+                            worker: id,
+                            step,
+                            error,
+                        });
+                    }
+                    WireMsg::Heartbeat { .. } => peer.touch(),
+                    WireMsg::MigrateAck { seq, ok, resident_bytes, .. } => {
+                        peer.touch();
+                        // resident bytes are truthful on both outcomes
+                        peer.resident_bytes.store(resident_bytes, Ordering::Relaxed);
+                        let _ = acks.send((id, seq, ok, resident_bytes));
+                    }
+                    other => {
+                        crate::log_debug!(
+                            "worker {id}: ignoring unexpected message {other:?}"
+                        );
+                    }
+                }
             }
             Err(e) => {
                 // EOF, reset, or a framing error: either way the stream is
@@ -590,10 +632,17 @@ impl Transport for TcpTransport {
             return Err(Error::Cluster(format!("worker {worker} is disconnected")));
         }
         let mut s = lock(&p.writer);
-        codec::write_msg(&mut *s, &WireMsg::Work(order)).map_err(|e| {
-            p.alive.store(false, Ordering::Relaxed);
-            Error::Cluster(format!("send to worker {worker}: {e}"))
-        })
+        match codec::write_msg(&mut *s, &WireMsg::Work(order)) {
+            Ok(bytes) => {
+                p.io.bytes_tx.fetch_add(bytes as u64, Ordering::Relaxed);
+                p.io.frames_tx.fetch_add(1, Ordering::Relaxed);
+                Ok(())
+            }
+            Err(e) => {
+                p.alive.store(false, Ordering::Relaxed);
+                Err(Error::Cluster(format!("send to worker {worker}: {e}")))
+            }
+        }
     }
 
     fn recv_timeout(&self, timeout: Duration) -> Result<TransportEvent> {
@@ -731,7 +780,7 @@ impl Transport for TcpTransport {
                     evict: vec![],
                 }),
             )
-            .and_then(|()| stream_rows(&s, data, &[order.rows]))
+            .and_then(|_| stream_rows(&s, data, &[order.rows]))
             .map_err(|e| {
                 to.alive.store(false, Ordering::Relaxed);
                 Error::Cluster(format!("migrate to worker {}: {e}", order.to))
@@ -757,7 +806,7 @@ impl Transport for TcpTransport {
                     )
                 };
                 let acked =
-                    sent.and_then(|()| self.wait_migrate_ack(order.from, order.seq));
+                    sent.and_then(|_| self.wait_migrate_ack(order.from, order.seq));
                 if let Err(e) = acked {
                     crate::log_warn!(
                         "migrate: eviction of sub-matrix {} on worker {} failed ({e}); \

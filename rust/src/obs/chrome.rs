@@ -1,0 +1,256 @@
+//! Chrome Trace Event Format export and the `usec trace` subcommand.
+//!
+//! The exporter maps the journal onto one process (pid 0) with a master
+//! track (tid 0) plus one track per worker (tid `worker + 1`). Span
+//! events (`step`, `solve`, `order`, `recovery`) become complete `"X"`
+//! events; point events (`dispatch`, `migration`, `heartbeat_lapse`)
+//! become thread-scoped `"i"` instants. The output loads directly in
+//! `chrome://tracing` or <https://ui.perfetto.dev>.
+
+use std::collections::BTreeMap;
+
+use crate::cli::args::{self, ArgSpec, Args};
+use crate::error::{Error, Result};
+use crate::obs::journal::{load_journal, Event};
+use crate::util::fmt;
+use crate::util::json::{Json, ObjBuilder};
+
+/// Track id for an event: master = 0, worker `w` = `w + 1`.
+fn tid(ev: &Event) -> usize {
+    ev.worker.map(|w| w + 1).unwrap_or(0)
+}
+
+fn args_obj(ev: &Event) -> Json {
+    let mut b = ObjBuilder::new()
+        .num("step", ev.step as f64)
+        .num("rows", ev.rows as f64);
+    if let Some(o) = ev.order {
+        b = b.num("order", o as f64);
+    }
+    if !ev.note.is_empty() {
+        b = b.str("note", ev.note.as_str());
+    }
+    if let Some(bd) = &ev.breakdown {
+        b = b.val("breakdown", bd.to_json());
+    }
+    b.build()
+}
+
+/// Convert journal events to a Chrome Trace Event Format array.
+pub fn chrome_trace(events: &[Event]) -> Json {
+    let mut out = Vec::new();
+    // Thread-name metadata first: master track plus one per worker seen.
+    let mut tids: Vec<usize> = events.iter().map(tid).collect();
+    tids.push(0);
+    tids.sort_unstable();
+    tids.dedup();
+    for t in tids {
+        let name = if t == 0 {
+            "master".to_string()
+        } else {
+            format!("worker {}", t - 1)
+        };
+        out.push(
+            ObjBuilder::new()
+                .str("ph", "M")
+                .str("name", "thread_name")
+                .num("pid", 0.0)
+                .num("tid", t as f64)
+                .val("args", ObjBuilder::new().str("name", name).build())
+                .build(),
+        );
+    }
+    for ev in events {
+        // Chrome traces use microsecond timestamps (fractions allowed).
+        let ts = ev.t_ns as f64 / 1000.0;
+        let mut b = ObjBuilder::new()
+            .str("name", ev.kind.name())
+            .str("cat", "usec")
+            .num("pid", 0.0)
+            .num("tid", tid(ev) as f64)
+            .num("ts", ts)
+            .val("args", args_obj(ev));
+        b = match ev.dur_ns {
+            Some(d) => b.str("ph", "X").num("dur", d as f64 / 1000.0),
+            None => b.str("ph", "i").str("s", "t"),
+        };
+        out.push(b.build());
+    }
+    Json::Arr(out)
+}
+
+/// Aggregate the journal's time sinks into a plain-text table, largest
+/// total first: one row per span kind per track, plus the worker-side
+/// breakdown phases summed across all `order` events that carried one.
+pub fn summarize(events: &[Event]) -> String {
+    // sink label → (count, total_ns)
+    let mut sinks: BTreeMap<String, (u64, u64)> = BTreeMap::new();
+    let mut bump = |label: String, dur_ns: u64| {
+        let e = sinks.entry(label).or_insert((0, 0));
+        e.0 += 1;
+        e.1 += dur_ns;
+    };
+    for ev in events {
+        if let Some(d) = ev.dur_ns {
+            let label = match ev.worker {
+                Some(w) => format!("{} (worker {w})", ev.kind.name()),
+                None => ev.kind.name().to_string(),
+            };
+            bump(label, d);
+        }
+        if let Some(bd) = &ev.breakdown {
+            for (phase, ns) in [
+                ("decode", bd.decode_ns),
+                ("compute", bd.compute_ns),
+                ("throttle", bd.throttle_ns),
+                ("assemble", bd.assemble_ns),
+                ("encode", bd.encode_ns),
+                ("idle", bd.idle_ns),
+            ] {
+                if ns > 0 {
+                    bump(format!("worker-side {phase}"), ns);
+                }
+            }
+        }
+    }
+    let mut rows: Vec<(String, u64, u64)> =
+        sinks.into_iter().map(|(k, (n, t))| (k, n, t)).collect();
+    rows.sort_by(|a, b| b.2.cmp(&a.2).then(a.0.cmp(&b.0)));
+    let table: Vec<Vec<String>> = rows
+        .iter()
+        .map(|(label, n, total)| {
+            vec![
+                label.clone(),
+                n.to_string(),
+                format!("{:.3}", *total as f64 / 1e6),
+                format!("{:.3}", *total as f64 / 1e6 / *n as f64),
+            ]
+        })
+        .collect();
+    fmt::render_table(&["sink", "events", "total_ms", "mean_ms"], &table)
+}
+
+fn trace_specs() -> Vec<ArgSpec> {
+    vec![
+        ArgSpec::opt("out", "trace.json", "where to write the Chrome trace JSON"),
+        ArgSpec::flag("summary", "print the top time sinks instead of exporting"),
+    ]
+}
+
+/// `usec trace <journal.jsonl> [--out trace.json] [--summary]`.
+pub fn trace_cli(argv: &[String]) -> Result<()> {
+    let a = Args::parse(argv, &trace_specs())?;
+    let Some(input) = a.positional().first() else {
+        println!(
+            "{}",
+            args::help_text(
+                "usec trace <journal.jsonl>",
+                "convert a --trace-out journal to Chrome trace JSON",
+                &trace_specs(),
+            )
+        );
+        return Err(Error::Config(
+            "usec trace expects the journal path as a positional argument".into(),
+        ));
+    };
+    let events = load_journal(input)?;
+    if a.has("summary") {
+        print!("{}", summarize(&events));
+        return Ok(());
+    }
+    let out = a.get("out").unwrap_or("trace.json");
+    std::fs::write(out, chrome_trace(&events).to_string())
+        .map_err(|e| Error::Config(format!("cannot write '{out}': {e}")))?;
+    println!(
+        "wrote {} trace events from {} journal lines to {out}",
+        events.len() + 1, // + at least the master thread_name record
+        events.len()
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::journal::EventKind;
+    use crate::obs::OrderBreakdown;
+
+    fn sample() -> Vec<Event> {
+        vec![
+            Event::new(EventKind::Step, 0, 0).rows(240).dur(9_000_000),
+            Event::new(EventKind::Dispatch, 0, 100)
+                .worker(1)
+                .order(0)
+                .rows(120),
+            Event::new(EventKind::Order, 0, 100)
+                .worker(1)
+                .order(0)
+                .rows(120)
+                .dur(4_000_000)
+                .breakdown(Some(OrderBreakdown {
+                    compute_ns: 3_000_000,
+                    idle_ns: 500_000,
+                    ..Default::default()
+                })),
+            Event::new(EventKind::HeartbeatLapse, 0, 5_000_000).worker(2),
+        ]
+    }
+
+    #[test]
+    fn export_tracks_and_phases() {
+        let trace = chrome_trace(&sample());
+        let items = trace.items().unwrap();
+        // metadata: master + worker 1 + worker 2 tracks
+        let meta: Vec<&Json> = items
+            .iter()
+            .filter(|e| e.get_str("ph") == Some("M"))
+            .collect();
+        assert_eq!(meta.len(), 3);
+        assert!(meta.iter().any(|m| {
+            m.get_num("tid") == Some(2.0)
+                && m.get("args").and_then(|a| a.get_str("name")) == Some("worker 1")
+        }));
+        // the step span sits on the master track; the order span on worker 1's
+        let step = items
+            .iter()
+            .find(|e| e.get_str("name") == Some("step"))
+            .unwrap();
+        assert_eq!(step.get_str("ph"), Some("X"));
+        assert_eq!(step.get_num("tid"), Some(0.0));
+        assert_eq!(step.get_num("dur"), Some(9000.0));
+        let order = items
+            .iter()
+            .find(|e| e.get_str("name") == Some("order"))
+            .unwrap();
+        assert_eq!(order.get_num("tid"), Some(2.0));
+        assert_eq!(order.get_num("ts"), Some(0.1));
+        assert!(order.get("args").unwrap().get("breakdown").is_some());
+        // point events export as thread-scoped instants
+        let lapse = items
+            .iter()
+            .find(|e| e.get_str("name") == Some("heartbeat_lapse"))
+            .unwrap();
+        assert_eq!(lapse.get_str("ph"), Some("i"));
+        assert_eq!(lapse.get_str("s"), Some("t"));
+        // the whole export parses back as one JSON document
+        assert!(Json::parse(&trace.to_string()).is_ok());
+    }
+
+    #[test]
+    fn summary_ranks_largest_sink_first() {
+        let s = summarize(&sample());
+        let lines: Vec<&str> = s.lines().collect();
+        assert!(lines[0].starts_with("sink"));
+        // step (9ms) outranks the order span (4ms) and compute (3ms)
+        assert!(lines[2].starts_with("step"), "got {s}");
+        assert!(s.contains("order (worker 1)"));
+        assert!(s.contains("worker-side compute"));
+        assert!(s.contains("worker-side idle"));
+        assert!(!s.contains("worker-side decode")); // zero phases omitted
+    }
+
+    #[test]
+    fn cli_requires_journal_path() {
+        assert!(trace_cli(&[]).is_err());
+    }
+}

@@ -1,0 +1,425 @@
+//! Structured event journal: spans and point events with monotonic
+//! timestamps, written as JSONL by a dedicated writer thread.
+//!
+//! A [`Journal`] owns the output file and writer thread; [`Recorder`]s are
+//! cheap clones handed to the master, harness, and transport layers. An
+//! emit is a single channel send (no lock shared with the writer), so the
+//! step loop never blocks on disk. Timestamps are nanoseconds since the
+//! journal's creation (`Instant`-based, monotonic), which keeps them
+//! comparable across threads of the master process.
+//!
+//! Every line is one event object with **stable field names**:
+//!
+//! | field       | type | present                                 |
+//! |-------------|------|-----------------------------------------|
+//! | `kind`      | str  | always (see [`EventKind`] names)        |
+//! | `step`      | num  | always                                  |
+//! | `t_ns`      | num  | always — span start / instant time      |
+//! | `rows`      | num  | always (0 when not meaningful)          |
+//! | `worker`    | num  | when the event is tied to a worker      |
+//! | `order`     | num  | when tied to a dispatched order id      |
+//! | `dur_ns`    | num  | spans only                              |
+//! | `note`      | str  | when non-empty (reason, detail)         |
+//! | `breakdown` | obj  | `order` events whose report carried one |
+
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::sync::mpsc::{channel, Sender};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use crate::error::{Error, Result};
+use crate::obs::OrderBreakdown;
+use crate::util::json::{Json, ObjBuilder};
+
+/// The journal's event vocabulary. `Step`, `Solve`, `Order`, `Recovery`
+/// are spans (carry `dur_ns`); `Dispatch`, `Migration`, `HeartbeatLapse`
+/// are point events.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EventKind {
+    /// One elastic step, dispatch through combine (master side).
+    Step,
+    /// The assignment solve (filling + placement consult).
+    Solve,
+    /// A work order left the master (point event; the matching `Order`
+    /// span closes when its report splices).
+    Dispatch,
+    /// One order's full dispatch→report round trip on a worker.
+    Order,
+    /// A mid-step recovery re-dispatch window.
+    Recovery,
+    /// A shard migration shipped by the rebalancer.
+    Migration,
+    /// A worker's heartbeat went silent past the overdue threshold.
+    HeartbeatLapse,
+}
+
+impl EventKind {
+    pub const ALL: [EventKind; 7] = [
+        EventKind::Step,
+        EventKind::Solve,
+        EventKind::Dispatch,
+        EventKind::Order,
+        EventKind::Recovery,
+        EventKind::Migration,
+        EventKind::HeartbeatLapse,
+    ];
+
+    /// Stable wire name, used in the JSONL `kind` field.
+    pub fn name(self) -> &'static str {
+        match self {
+            EventKind::Step => "step",
+            EventKind::Solve => "solve",
+            EventKind::Dispatch => "dispatch",
+            EventKind::Order => "order",
+            EventKind::Recovery => "recovery",
+            EventKind::Migration => "migration",
+            EventKind::HeartbeatLapse => "heartbeat_lapse",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<EventKind> {
+        EventKind::ALL.iter().copied().find(|k| k.name() == s)
+    }
+}
+
+/// One journal line. Construct with [`Event::new`] and the chainable
+/// setters; `t_ns` comes from [`Recorder::now_ns`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct Event {
+    pub kind: EventKind,
+    pub step: usize,
+    /// Span start (or instant time) in ns since journal creation.
+    pub t_ns: u64,
+    pub rows: usize,
+    pub worker: Option<usize>,
+    pub order: Option<u64>,
+    pub dur_ns: Option<u64>,
+    pub note: String,
+    pub breakdown: Option<OrderBreakdown>,
+}
+
+impl Event {
+    pub fn new(kind: EventKind, step: usize, t_ns: u64) -> Event {
+        Event {
+            kind,
+            step,
+            t_ns,
+            rows: 0,
+            worker: None,
+            order: None,
+            dur_ns: None,
+            note: String::new(),
+            breakdown: None,
+        }
+    }
+
+    pub fn worker(mut self, w: usize) -> Event {
+        self.worker = Some(w);
+        self
+    }
+
+    pub fn order(mut self, id: u64) -> Event {
+        self.order = Some(id);
+        self
+    }
+
+    pub fn rows(mut self, rows: usize) -> Event {
+        self.rows = rows;
+        self
+    }
+
+    pub fn dur(mut self, dur_ns: u64) -> Event {
+        self.dur_ns = Some(dur_ns);
+        self
+    }
+
+    pub fn note(mut self, note: impl Into<String>) -> Event {
+        self.note = note.into();
+        self
+    }
+
+    pub fn breakdown(mut self, b: Option<OrderBreakdown>) -> Event {
+        self.breakdown = b;
+        self
+    }
+
+    /// Serialize as one compact JSON object (one journal line).
+    pub fn to_json(&self) -> Json {
+        let mut b = ObjBuilder::new()
+            .str("kind", self.kind.name())
+            .num("step", self.step as f64)
+            .num("t_ns", self.t_ns as f64)
+            .num("rows", self.rows as f64);
+        if let Some(w) = self.worker {
+            b = b.num("worker", w as f64);
+        }
+        if let Some(o) = self.order {
+            b = b.num("order", o as f64);
+        }
+        if let Some(d) = self.dur_ns {
+            b = b.num("dur_ns", d as f64);
+        }
+        if !self.note.is_empty() {
+            b = b.str("note", self.note.as_str());
+        }
+        if let Some(bd) = &self.breakdown {
+            b = b.val("breakdown", bd.to_json());
+        }
+        b.build()
+    }
+
+    /// Parse one journal line back into an [`Event`].
+    pub fn from_json(j: &Json) -> Result<Event> {
+        let kind = j
+            .get_str("kind")
+            .and_then(EventKind::parse)
+            .ok_or_else(|| Error::Config("journal event missing/unknown kind".into()))?;
+        let step = j
+            .get_usize("step")
+            .ok_or_else(|| Error::Config("journal event missing step".into()))?;
+        let t_ns = j
+            .get_num("t_ns")
+            .ok_or_else(|| Error::Config("journal event missing t_ns".into()))?
+            as u64;
+        Ok(Event {
+            kind,
+            step,
+            t_ns,
+            rows: j.get_usize("rows").unwrap_or(0),
+            worker: j.get_usize("worker"),
+            order: j.get_num("order").map(|n| n as u64),
+            dur_ns: j.get_num("dur_ns").map(|n| n as u64),
+            note: j.get_str("note").unwrap_or("").to_string(),
+            breakdown: j.get("breakdown").and_then(OrderBreakdown::from_json),
+        })
+    }
+}
+
+/// Cheap cloneable handle for emitting events. Holds the channel sender
+/// and the journal's epoch; dropping all recorders does *not* close the
+/// journal — [`Journal::finish`] (or its `Drop`) does.
+#[derive(Clone)]
+pub struct Recorder {
+    tx: Sender<Option<Event>>,
+    epoch: Instant,
+}
+
+impl Recorder {
+    /// Nanoseconds since the journal was created (monotonic).
+    pub fn now_ns(&self) -> u64 {
+        self.epoch.elapsed().as_nanos() as u64
+    }
+
+    /// Enqueue an event for the writer thread. A send after the journal
+    /// closed is silently dropped — late events must not panic shutdown.
+    pub fn emit(&self, ev: Event) {
+        let _ = self.tx.send(Some(ev));
+    }
+}
+
+impl std::fmt::Debug for Recorder {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Recorder").finish_non_exhaustive()
+    }
+}
+
+/// Owns the JSONL output: writer thread plus shutdown sentinel. Create
+/// once per run from `--trace-out`, hand [`Recorder`]s out, and call
+/// [`Journal::finish`] (or let it drop) to flush and close.
+pub struct Journal {
+    tx: Sender<Option<Event>>,
+    epoch: Instant,
+    writer: Option<JoinHandle<std::io::Result<()>>>,
+}
+
+impl Journal {
+    /// Open `path` for writing and start the writer thread.
+    pub fn create(path: &str) -> Result<Journal> {
+        let file = File::create(path).map_err(|e| {
+            Error::Config(format!("cannot create trace journal '{path}': {e}"))
+        })?;
+        let (tx, rx) = channel::<Option<Event>>();
+        let writer = std::thread::Builder::new()
+            .name("usec-obs-journal".into())
+            .spawn(move || -> std::io::Result<()> {
+                let mut out = BufWriter::new(file);
+                // `None` is the shutdown sentinel from finish()/Drop; a
+                // closed channel (all senders gone) also ends the loop.
+                while let Ok(Some(ev)) = rx.recv() {
+                    writeln!(out, "{}", ev.to_json())?;
+                }
+                out.flush()
+            })
+            .map_err(Error::from)?;
+        Ok(Journal {
+            tx,
+            epoch: Instant::now(),
+            writer: Some(writer),
+        })
+    }
+
+    /// A new emitting handle sharing this journal's clock.
+    pub fn recorder(&self) -> Recorder {
+        Recorder {
+            tx: self.tx.clone(),
+            epoch: self.epoch,
+        }
+    }
+
+    /// Flush and close, returning any write error. Events emitted by
+    /// still-live recorders after this point are dropped.
+    pub fn finish(mut self) -> Result<()> {
+        self.close()
+    }
+
+    fn close(&mut self) -> Result<()> {
+        let Some(handle) = self.writer.take() else {
+            return Ok(());
+        };
+        // The sentinel (not channel closure) ends the writer loop:
+        // outstanding Recorder clones keep the channel open indefinitely.
+        let _ = self.tx.send(None);
+        match handle.join() {
+            Ok(io) => io.map_err(Error::from),
+            Err(_) => Err(Error::Config("trace journal writer panicked".into())),
+        }
+    }
+}
+
+impl Drop for Journal {
+    fn drop(&mut self) {
+        let _ = self.close();
+    }
+}
+
+impl std::fmt::Debug for Journal {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Journal").finish_non_exhaustive()
+    }
+}
+
+/// Read a JSONL journal back into events (line-by-line parse; blank
+/// lines are skipped).
+pub fn load_journal(path: &str) -> Result<Vec<Event>> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| Error::Config(format!("cannot read trace journal '{path}': {e}")))?;
+    let mut events = Vec::new();
+    for (i, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let j = Json::parse(line)
+            .map_err(|e| Error::Config(format!("{path}:{}: {e}", i + 1)))?;
+        events.push(Event::from_json(&j)?);
+    }
+    Ok(events)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(ev: &Event) -> Event {
+        let j = Json::parse(&ev.to_json().to_string()).unwrap();
+        Event::from_json(&j).unwrap()
+    }
+
+    #[test]
+    fn kind_names_are_stable() {
+        let names: Vec<&str> = EventKind::ALL.iter().map(|k| k.name()).collect();
+        assert_eq!(
+            names,
+            [
+                "step",
+                "solve",
+                "dispatch",
+                "order",
+                "recovery",
+                "migration",
+                "heartbeat_lapse"
+            ]
+        );
+        for k in EventKind::ALL {
+            assert_eq!(EventKind::parse(k.name()), Some(k));
+        }
+        assert_eq!(EventKind::parse("bogus"), None);
+    }
+
+    #[test]
+    fn every_kind_roundtrips_bare() {
+        for k in EventKind::ALL {
+            let ev = Event::new(k, 3, 1234);
+            assert_eq!(roundtrip(&ev), ev);
+        }
+    }
+
+    #[test]
+    fn full_event_roundtrips_with_stable_fields() {
+        let ev = Event::new(EventKind::Order, 7, 1_000_000)
+            .worker(2)
+            .order(41)
+            .rows(120)
+            .dur(5_000_000)
+            .note("spliced")
+            .breakdown(Some(OrderBreakdown {
+                compute_ns: 9,
+                ..Default::default()
+            }));
+        let line = ev.to_json().to_string();
+        for field in [
+            "\"kind\":\"order\"",
+            "\"step\":7",
+            "\"t_ns\":1000000",
+            "\"rows\":120",
+            "\"worker\":2",
+            "\"order\":41",
+            "\"dur_ns\":5000000",
+            "\"note\":\"spliced\"",
+            "\"breakdown\":",
+            "\"compute_ns\":9",
+        ] {
+            assert!(line.contains(field), "missing {field} in {line}");
+        }
+        assert_eq!(roundtrip(&ev), ev);
+    }
+
+    #[test]
+    fn optional_fields_are_omitted_when_unset() {
+        let line = Event::new(EventKind::Dispatch, 0, 5).to_json().to_string();
+        for absent in ["worker", "order", "dur_ns", "note", "breakdown"] {
+            assert!(!line.contains(absent), "unexpected {absent} in {line}");
+        }
+    }
+
+    #[test]
+    fn journal_writes_and_loads_jsonl() {
+        let path = std::env::temp_dir().join(format!(
+            "usec_journal_{}_{:?}.jsonl",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let path = path.to_str().unwrap().to_string();
+        let journal = Journal::create(&path).unwrap();
+        let rec = journal.recorder();
+        let t0 = rec.now_ns();
+        rec.emit(Event::new(EventKind::Step, 0, t0).rows(240).dur(77));
+        rec.emit(
+            Event::new(EventKind::Dispatch, 0, rec.now_ns())
+                .worker(1)
+                .order(0)
+                .rows(120),
+        );
+        // finish() must join the writer even though `rec` still holds a
+        // sender clone (shutdown is sentinel-based, not channel-close).
+        journal.finish().unwrap();
+        let events = load_journal(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(events.len(), 2);
+        assert_eq!(events[0].kind, EventKind::Step);
+        assert_eq!(events[0].dur_ns, Some(77));
+        assert_eq!(events[1].worker, Some(1));
+        // emits after close are dropped, not a panic
+        rec.emit(Event::new(EventKind::Solve, 1, 0));
+    }
+}

@@ -1,0 +1,137 @@
+//! Observability: structured event journal, per-worker counters, and a
+//! Chrome-trace exporter for the elastic step pipeline.
+//!
+//! The paper's whole framework rests on *measurement* — profiled machine
+//! speeds drive the placement, EWMA estimates drive the assignment, and
+//! the drift monitor and overdue clocks consume timing signals. This
+//! module makes those signals inspectable end-to-end:
+//!
+//! * [`journal`] — a low-overhead structured event journal: spans and
+//!   point events (`step`, `solve`, `dispatch`, `order`, `recovery`,
+//!   `migration`, `heartbeat_lapse`) with monotonic timestamps and
+//!   step/worker/order causal ids, written as JSONL via `--trace-out`.
+//!   The [`Recorder`] is a cloned channel sender — emitting an event is
+//!   one lock-free enqueue; a dedicated writer thread does the I/O, and
+//!   with tracing disabled no recorder exists and the hot loops skip all
+//!   bookkeeping.
+//! * **Worker-side timing breakdowns** — [`OrderBreakdown`] is measured
+//!   inside [`crate::sched::worker::execute_order`] (compute / throttle /
+//!   assemble) and the TCP daemon (decode / encode / idle-wait), shipped
+//!   back piggybacked on `Report` (wire v5, optional trailing section —
+//!   absent, the v4 byte layout is unchanged). The master's journal thus
+//!   contains both sides of every order: its own observed RTT *and* the
+//!   worker's account of where that time went.
+//! * [`registry`] — per-worker counters (orders, rows, bytes/frames
+//!   tx/rx, reconnects, recoveries, migrations) snapshotted into
+//!   [`crate::metrics::Timeline::to_json`] each step.
+//! * [`chrome`] — `usec trace`: convert a journal to Chrome Trace Event
+//!   Format (one track per worker plus a master track) for
+//!   `chrome://tracing` / Perfetto, or `--summary` for the top time sinks.
+
+pub mod chrome;
+pub mod journal;
+pub mod registry;
+
+pub use chrome::{chrome_trace, summarize, trace_cli};
+pub use journal::{load_journal, Event, EventKind, Journal, Recorder};
+pub use registry::{CounterSnapshot, IoCounters, Registry};
+
+use crate::util::json::{Json, ObjBuilder};
+
+/// Worker-side timing breakdown of one executed order, in nanoseconds.
+///
+/// Filled by [`crate::sched::worker::execute_order`] (compute, throttle,
+/// assemble) and completed by the TCP daemon (decode, encode, idle); the
+/// in-process local transport leaves the daemon-side fields at 0. Ships
+/// back to the master as an optional trailing section of `Report`
+/// (wire v5) only when the order requested tracing, so untraced wire
+/// traffic stays byte-identical to v4.
+///
+/// `encode_ns` is the encode+write cost of the worker's *previous* report
+/// on this connection (0 for the first): a report cannot time its own
+/// serialization before being serialized.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct OrderBreakdown {
+    /// Decoding the `Work` frame into a [`crate::sched::protocol::WorkOrder`].
+    pub decode_ns: u64,
+    /// The tile compute loop (backend kernels over the scratch arena).
+    pub compute_ns: u64,
+    /// Sleep inserted by the speed throttle (simulated heterogeneity).
+    pub throttle_ns: u64,
+    /// Segment assembly (arena → per-task shipped buffers).
+    pub assemble_ns: u64,
+    /// Encode+write of the previous report on this connection.
+    pub encode_ns: u64,
+    /// Wait for this order to arrive since the last message was handled.
+    pub idle_ns: u64,
+}
+
+impl OrderBreakdown {
+    /// Sum of every accounted phase.
+    pub fn total_ns(&self) -> u64 {
+        self.decode_ns
+            + self.compute_ns
+            + self.throttle_ns
+            + self.assemble_ns
+            + self.encode_ns
+            + self.idle_ns
+    }
+
+    pub fn to_json(&self) -> Json {
+        ObjBuilder::new()
+            .num("decode_ns", self.decode_ns as f64)
+            .num("compute_ns", self.compute_ns as f64)
+            .num("throttle_ns", self.throttle_ns as f64)
+            .num("assemble_ns", self.assemble_ns as f64)
+            .num("encode_ns", self.encode_ns as f64)
+            .num("idle_ns", self.idle_ns as f64)
+            .build()
+    }
+
+    pub fn from_json(j: &Json) -> Option<OrderBreakdown> {
+        Some(OrderBreakdown {
+            decode_ns: j.get_num("decode_ns")? as u64,
+            compute_ns: j.get_num("compute_ns")? as u64,
+            throttle_ns: j.get_num("throttle_ns")? as u64,
+            assemble_ns: j.get_num("assemble_ns")? as u64,
+            encode_ns: j.get_num("encode_ns")? as u64,
+            idle_ns: j.get_num("idle_ns")? as u64,
+        })
+    }
+}
+
+/// What the master observed about one dispatched order, paired with the
+/// worker's own breakdown when the report carried one (wire v5).
+#[derive(Debug, Clone)]
+pub struct OrderStat {
+    pub worker: usize,
+    /// Run-unique order id (shared with the `dispatch`/`order` journal
+    /// events, so the two sides of an order can be joined).
+    pub order: u64,
+    /// Rows the order assigned.
+    pub rows: usize,
+    /// Master-observed send→report round trip.
+    pub rtt_ns: u64,
+    pub breakdown: Option<OrderBreakdown>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn breakdown_json_roundtrip_and_total() {
+        let b = OrderBreakdown {
+            decode_ns: 1,
+            compute_ns: 2,
+            throttle_ns: 3,
+            assemble_ns: 4,
+            encode_ns: 5,
+            idle_ns: 6,
+        };
+        assert_eq!(b.total_ns(), 21);
+        let j = crate::util::json::Json::parse(&b.to_json().to_string()).unwrap();
+        assert_eq!(OrderBreakdown::from_json(&j), Some(b));
+        assert_eq!(OrderBreakdown::from_json(&Json::Null), None);
+    }
+}

@@ -1,0 +1,202 @@
+//! Per-worker counter registry, snapshotted into the timeline each step.
+//!
+//! Scheduler-side counters (orders, rows, recoveries, migrations,
+//! reconnects) live here as atomics so the master and harness can bump
+//! them through shared references; transport I/O volume (bytes/frames
+//! tx/rx) is counted inside the TCP peer structs and merged in at
+//! snapshot time via [`Registry::snapshot`].
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::util::json::{Json, ObjBuilder};
+
+/// Wire-volume counters for one worker connection, as accumulated by the
+/// transport (`AnyTransport::io_counters`). The local in-process
+/// transport reports zeros.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct IoCounters {
+    pub bytes_tx: u64,
+    pub bytes_rx: u64,
+    pub frames_tx: u64,
+    pub frames_rx: u64,
+}
+
+/// Point-in-time view of one worker's counters (cumulative since run
+/// start), embedded in `Timeline::to_json` under `counters`.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CounterSnapshot {
+    pub worker: usize,
+    pub orders: u64,
+    pub rows: u64,
+    pub bytes_tx: u64,
+    pub bytes_rx: u64,
+    pub frames_tx: u64,
+    pub frames_rx: u64,
+    pub reconnects: u64,
+    pub recoveries: u64,
+    pub migrations: u64,
+}
+
+impl CounterSnapshot {
+    pub fn to_json(&self) -> Json {
+        ObjBuilder::new()
+            .num("worker", self.worker as f64)
+            .num("orders", self.orders as f64)
+            .num("rows", self.rows as f64)
+            .num("bytes_tx", self.bytes_tx as f64)
+            .num("bytes_rx", self.bytes_rx as f64)
+            .num("frames_tx", self.frames_tx as f64)
+            .num("frames_rx", self.frames_rx as f64)
+            .num("reconnects", self.reconnects as f64)
+            .num("recoveries", self.recoveries as f64)
+            .num("migrations", self.migrations as f64)
+            .build()
+    }
+}
+
+struct WorkerCounters {
+    orders: AtomicU64,
+    rows: AtomicU64,
+    reconnects: AtomicU64,
+    recoveries: AtomicU64,
+    migrations: AtomicU64,
+}
+
+impl WorkerCounters {
+    fn new() -> WorkerCounters {
+        WorkerCounters {
+            orders: AtomicU64::new(0),
+            rows: AtomicU64::new(0),
+            reconnects: AtomicU64::new(0),
+            recoveries: AtomicU64::new(0),
+            migrations: AtomicU64::new(0),
+        }
+    }
+}
+
+/// Cumulative per-worker counters for one run. All bumps are relaxed
+/// atomics — counters are monotone and read only at step boundaries, so
+/// no ordering beyond eventual visibility is required.
+pub struct Registry {
+    workers: Vec<WorkerCounters>,
+}
+
+impl Registry {
+    pub fn new(n: usize) -> Registry {
+        Registry {
+            workers: (0..n).map(|_| WorkerCounters::new()).collect(),
+        }
+    }
+
+    pub fn size(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// A work order (initial or recovery re-dispatch) was sent.
+    pub fn add_order(&self, worker: usize, rows: usize) {
+        if let Some(c) = self.workers.get(worker) {
+            c.orders.fetch_add(1, Ordering::Relaxed);
+            c.rows.fetch_add(rows as u64, Ordering::Relaxed);
+        }
+    }
+
+    /// The worker's connection flipped dead→alive.
+    pub fn add_reconnect(&self, worker: usize) {
+        if let Some(c) = self.workers.get(worker) {
+            c.reconnects.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// The worker was the *victim* of a mid-step recovery.
+    pub fn add_recovery(&self, worker: usize) {
+        if let Some(c) = self.workers.get(worker) {
+            c.recoveries.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// A shard migration landed on this worker (destination side).
+    pub fn add_migration(&self, worker: usize) {
+        if let Some(c) = self.workers.get(worker) {
+            c.migrations.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Merge scheduler counters with the transport's I/O counters. `io`
+    /// may be shorter than the worker list (e.g. local transport);
+    /// missing entries read as zero.
+    pub fn snapshot(&self, io: &[IoCounters]) -> Vec<CounterSnapshot> {
+        self.workers
+            .iter()
+            .enumerate()
+            .map(|(w, c)| {
+                let i = io.get(w).copied().unwrap_or_default();
+                CounterSnapshot {
+                    worker: w,
+                    orders: c.orders.load(Ordering::Relaxed),
+                    rows: c.rows.load(Ordering::Relaxed),
+                    bytes_tx: i.bytes_tx,
+                    bytes_rx: i.bytes_rx,
+                    frames_tx: i.frames_tx,
+                    frames_rx: i.frames_rx,
+                    reconnects: c.reconnects.load(Ordering::Relaxed),
+                    recoveries: c.recoveries.load(Ordering::Relaxed),
+                    migrations: c.migrations.load(Ordering::Relaxed),
+                }
+            })
+            .collect()
+    }
+}
+
+impl std::fmt::Debug for Registry {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Registry")
+            .field("workers", &self.workers.len())
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate_and_merge_io() {
+        let reg = Registry::new(2);
+        reg.add_order(0, 120);
+        reg.add_order(0, 60);
+        reg.add_recovery(1);
+        reg.add_reconnect(1);
+        reg.add_migration(0);
+        reg.add_order(99, 10); // out of range: ignored, no panic
+        let io = vec![IoCounters {
+            bytes_tx: 100,
+            bytes_rx: 200,
+            frames_tx: 3,
+            frames_rx: 4,
+        }];
+        let snap = reg.snapshot(&io);
+        assert_eq!(snap.len(), 2);
+        assert_eq!(snap[0].orders, 2);
+        assert_eq!(snap[0].rows, 180);
+        assert_eq!(snap[0].bytes_tx, 100);
+        assert_eq!(snap[0].frames_rx, 4);
+        assert_eq!(snap[0].migrations, 1);
+        // worker 1 has no io entry → zeros
+        assert_eq!(snap[1].bytes_tx, 0);
+        assert_eq!(snap[1].recoveries, 1);
+        assert_eq!(snap[1].reconnects, 1);
+    }
+
+    #[test]
+    fn snapshot_json_has_stable_keys() {
+        let reg = Registry::new(1);
+        reg.add_order(0, 7);
+        let j = reg.snapshot(&[])[0].to_json().to_string();
+        for key in [
+            "worker", "orders", "rows", "bytes_tx", "bytes_rx", "frames_tx", "frames_rx",
+            "reconnects", "recoveries", "migrations",
+        ] {
+            assert!(j.contains(&format!("\"{key}\":")), "missing {key} in {j}");
+        }
+    }
+}

@@ -18,10 +18,11 @@ use crate::error::Result;
 use crate::linalg::partition::RowRange;
 use crate::net::{MigrationOrder, Transport};
 use crate::optim::SolveParams;
+use crate::placement::optimizer::expected_time_with;
 use crate::placement::Placement;
 
 use super::monitor::DriftMonitor;
-use super::plan::{apply_move, MigrationPlan};
+use super::plan::{apply_move, MigrationPlan, ReplicaMove};
 use super::RebalanceConfig;
 
 /// Abandon an in-flight plan after this many consecutive windows whose
@@ -124,6 +125,15 @@ impl Rebalancer {
                 );
                 self.pending =
                     MigrationPlan::diff(&current, &p.placement, &self.sub_ranges, self.cols)?;
+                // A budget-metered plan spreads over many windows, so ship
+                // the moves that buy the most expected-time reduction per
+                // shipped byte first — a tight `--migration-budget` then
+                // spends its early windows where the regret is.
+                let samples = vec![speeds.to_vec()];
+                let params = &self.params;
+                self.pending.reorder_by(|mv| {
+                    move_benefit_per_byte(&current, mv, p.current_time, avail, &samples, params)
+                });
                 self.plan_times = (p.current_time, p.proposed_time);
                 self.stalls = 0;
             }
@@ -200,6 +210,29 @@ impl Rebalancer {
             self.stalls = 0;
         }
         Ok((current, records))
+    }
+}
+
+/// Benefit-per-byte of one replica move in isolation: the expected-time
+/// reduction of applying just this move to `current` (against the plan's
+/// solved baseline `current_time`), divided by the bytes it ships.
+/// Un-evaluable moves score `NEG_INFINITY`, sinking to the back of the
+/// plan.
+pub(crate) fn move_benefit_per_byte(
+    current: &Placement,
+    mv: &ReplicaMove,
+    current_time: f64,
+    avail: &[usize],
+    samples: &[Vec<f64>],
+    params: &SolveParams,
+) -> f64 {
+    let next = match apply_move(current, mv) {
+        Ok(p) => p,
+        Err(_) => return f64::NEG_INFINITY,
+    };
+    match expected_time_with(&next, avail, samples, params) {
+        Ok(t) => (current_time - t) / mv.bytes.max(1) as f64,
+        Err(_) => f64::NEG_INFINITY,
     }
 }
 
@@ -378,6 +411,43 @@ mod tests {
             }
         }
         current.check_feasible(&all, 0).unwrap();
+    }
+
+    #[test]
+    fn tight_budget_front_loads_the_highest_benefit_move() {
+        use super::super::plan::MigrationPlan;
+        // two queued moves of equal size: g=0 hops between two slow
+        // machines (≈ no benefit), g=1 lands on the one fast machine (big
+        // benefit). The raw diff order ships g=0 first; benefit-per-byte
+        // ordering must flip that, so a one-move budget picks g=1.
+        let old = Placement::build(PlacementKind::Cyclic, 6, 6, 3).unwrap();
+        let mut replicas: Vec<Vec<usize>> =
+            (0..6).map(|g| old.machines_storing(g).to_vec()).collect();
+        replicas[0] = vec![1, 2, 3]; // g=0: 0 → 3 (slow → slow)
+        replicas[1] = vec![2, 3, 4]; // g=1: 1 → 4 (slow → fast)
+        let new = Placement::from_replicas(PlacementKind::Custom, 6, replicas).unwrap();
+        let subs = submatrix_ranges(120, 6).unwrap();
+        let avail: Vec<usize> = (0..6).collect();
+        let speeds = vec![1.0, 1.0, 1.0, 1.0, 16.0, 1.0];
+        let samples = vec![speeds.clone()];
+        let params = SolveParams::default();
+
+        let mut plan = MigrationPlan::diff(&old, &new, &subs, 120).unwrap();
+        assert_eq!(plan.take_batch(1)[0].g, 0, "diff order ships g=0 first");
+
+        let mut plan = MigrationPlan::diff(&old, &new, &subs, 120).unwrap();
+        let base = crate::placement::optimizer::expected_time_with(
+            &old, &avail, &samples, &params,
+        )
+        .unwrap();
+        plan.reorder_by(|mv| move_benefit_per_byte(&old, mv, base, &avail, &samples, &params));
+        let first = plan.take_batch(1);
+        assert_eq!(first.len(), 1, "tight budget ships exactly one move");
+        assert_eq!(
+            (first[0].g, first[0].to),
+            (1, 4),
+            "the slow→fast move front-loads under a tight budget"
+        );
     }
 
     #[test]

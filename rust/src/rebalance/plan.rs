@@ -131,6 +131,17 @@ impl MigrationPlan {
     pub fn requeue_front(&mut self, mv: ReplicaMove) {
         self.moves.push_front(mv);
     }
+
+    /// Reorder the queue by descending `score` (stable, so equally scored
+    /// moves keep their diff order). Used to front-load the moves with the
+    /// highest benefit-per-byte, so a tight `--migration-budget` spends
+    /// its first windows where they buy the most expected-time reduction.
+    pub fn reorder_by<F: FnMut(&ReplicaMove) -> f64>(&mut self, mut score: F) {
+        let mut scored: Vec<(f64, ReplicaMove)> =
+            self.moves.drain(..).map(|m| (score(&m), m)).collect();
+        scored.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap_or(std::cmp::Ordering::Equal));
+        self.moves = scored.into_iter().map(|(_, m)| m).collect();
+    }
 }
 
 /// The effective placement after one acknowledged move: replica `from` of
@@ -216,6 +227,21 @@ mod tests {
         let first = plan.take_batch(per_move)[0].clone();
         plan.requeue_front(first.clone());
         assert_eq!(plan.take_batch(per_move)[0], first);
+    }
+
+    #[test]
+    fn reorder_by_is_a_stable_descending_sort() {
+        let (old, new, subs) = placements();
+        let mut plan = MigrationPlan::diff(&old, &new, &subs, 120).unwrap();
+        // score g=3 above g=2 → it jumps to the front of the queue
+        plan.reorder_by(|m| m.g as f64);
+        let all = plan.take_batch(0);
+        assert_eq!((all[0].g, all[1].g), (3, 2));
+        // equal scores keep the diff order (stability)
+        let mut plan = MigrationPlan::diff(&old, &new, &subs, 120).unwrap();
+        plan.reorder_by(|_| 1.0);
+        let all = plan.take_batch(0);
+        assert_eq!((all[0].g, all[1].g), (2, 3));
     }
 
     #[test]

@@ -161,6 +161,7 @@ mod tests {
                     }],
                     row_cost_ns: 0,
                     straggle: None,
+                    trace: false,
                 },
             )
             .unwrap();
@@ -190,6 +191,7 @@ mod tests {
                 tasks: vec![],
                 row_cost_ns: 0,
                 straggle: None,
+                trace: false,
             },
         );
         assert!(bad.is_err());
@@ -208,6 +210,7 @@ mod tests {
                     tasks: vec![],
                     row_cost_ns: 0,
                     straggle: None,
+                    trace: false,
                 },
             )
             .unwrap();

@@ -15,6 +15,7 @@
 //! coverage bitmap and by worker id for the EWMA, so late originals and
 //! recovery replacements coexist safely.
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -23,6 +24,7 @@ use crate::error::{Error, Result};
 use crate::linalg::partition::RowRange;
 use crate::linalg::Block;
 use crate::net::{Transport, TransportEvent};
+use crate::obs::{Event, EventKind, OrderStat, Recorder, Registry};
 use crate::optim::{self, Assignment, SolveParams};
 use crate::placement::Placement;
 use crate::util::json::{Json, ObjBuilder};
@@ -75,6 +77,11 @@ pub struct StepOutcome {
     /// Mid-step recoveries performed (empty unless
     /// [`MasterConfig::recovery`] is enabled and a worker was rescued).
     pub recoveries: Vec<RecoveryEvent>,
+    /// Per-order round trips observed this step, with the worker-side
+    /// breakdown when the report carried one. Populated only when a
+    /// tracing [`Recorder`] is attached ([`Master::set_recorder`]) —
+    /// empty otherwise, so the untraced step loop does no bookkeeping.
+    pub order_stats: Vec<OrderStat>,
 }
 
 /// Result summary of a full run (filled by the apps layer).
@@ -107,12 +114,31 @@ impl RunResult {
     }
 }
 
+/// One dispatched-but-unanswered order, tracked only while tracing: the
+/// master-side half of the `dispatch` → `order` journal pair.
+struct PendingOrder {
+    worker: usize,
+    order: u64,
+    rows: usize,
+    sent: Instant,
+    /// Journal timestamp of the dispatch (the order span's start).
+    t_ns: u64,
+}
+
 /// The elastic master.
 pub struct Master {
     cfg: MasterConfig,
     estimator: SpeedEstimator,
     q: usize,
     sub_rows: Vec<usize>,
+    /// Tracing sink ([`crate::obs`]); `None` (the default) keeps every
+    /// hot-loop instrumentation branch dead.
+    recorder: Option<Recorder>,
+    /// Per-worker counter registry shared with the harness.
+    registry: Option<Arc<Registry>>,
+    /// Run-unique order-id allocator (atomic: recovery re-dispatches
+    /// allocate through `&self`).
+    next_order: AtomicU64,
 }
 
 impl Master {
@@ -144,7 +170,23 @@ impl Master {
             estimator,
             q,
             sub_rows,
+            recorder: None,
+            registry: None,
+            next_order: AtomicU64::new(0),
         })
+    }
+
+    /// Attach (or detach) a tracing recorder. While attached, every order
+    /// is dispatched with [`WorkOrder::trace`] set, `solve`/`dispatch`/
+    /// `order`/`recovery`/`heartbeat_lapse` events land in the journal,
+    /// and [`StepOutcome::order_stats`] is populated.
+    pub fn set_recorder(&mut self, recorder: Option<Recorder>) {
+        self.recorder = recorder;
+    }
+
+    /// Attach the per-worker counter registry ([`crate::obs::Registry`]).
+    pub fn set_registry(&mut self, registry: Arc<Registry>) {
+        self.registry = Some(registry);
     }
 
     /// Current speed estimates `ŝ`.
@@ -230,9 +272,17 @@ impl Master {
         let nvec = w.nvec();
 
         // ---- solve ----
+        let solve_t_ns = self.recorder.as_ref().map(|r| r.now_ns());
         let solve_start = Instant::now();
         let assignment = self.plan(avail)?;
         let solve = solve_start.elapsed();
+        if let (Some(rec), Some(t_ns)) = (&self.recorder, solve_t_ns) {
+            rec.emit(
+                Event::new(EventKind::Solve, step, t_ns)
+                    .rows(self.q)
+                    .dur(solve.as_nanos() as u64),
+            );
+        }
         let predicted_c = assignment
             .realized_load_matrix(&self.sub_rows)
             .computation_time(self.estimator.estimate(), avail);
@@ -245,11 +295,16 @@ impl Master {
         let mut tracker = recovery_on.then(|| RecoveryTracker::new(machines));
         let mut expected = 0usize;
         let mut dispatch_failures: Vec<usize> = Vec::new();
+        // dispatch→report pairing for the journal; untouched (and empty)
+        // when no recorder is attached
+        let mut pending: Vec<PendingOrder> = Vec::new();
+        let trace = self.recorder.is_some();
         for &n in avail {
             let tasks = assignment.tasks_for(n);
             if tasks.is_empty() {
                 continue;
             }
+            let order_rows: usize = tasks.iter().map(|t| t.rows.len()).sum();
             let straggle = stragglers
                 .iter()
                 .find(|&&(m, _)| m == n)
@@ -270,12 +325,33 @@ impl Master {
                     tasks,
                     row_cost_ns: self.cfg.row_cost_ns,
                     straggle,
+                    trace,
                 },
             ) {
                 Ok(()) => {
                     expected += 1;
                     if let Some(t) = tracker.as_mut() {
                         t.note_order_sent(n, Instant::now());
+                    }
+                    if let Some(reg) = &self.registry {
+                        reg.add_order(n, order_rows);
+                    }
+                    if let Some(rec) = &self.recorder {
+                        let id = self.next_order.fetch_add(1, Ordering::Relaxed);
+                        let t_ns = rec.now_ns();
+                        rec.emit(
+                            Event::new(EventKind::Dispatch, step, t_ns)
+                                .worker(n)
+                                .order(id)
+                                .rows(order_rows),
+                        );
+                        pending.push(PendingOrder {
+                            worker: n,
+                            order: id,
+                            rows: order_rows,
+                            sent: Instant::now(),
+                            t_ns,
+                        });
                     }
                 }
                 Err(e) => {
@@ -299,6 +375,7 @@ impl Master {
         let mut reported = vec![false; machines];
         let mut measurements: Vec<(usize, f64)> = Vec::new();
         let mut recoveries: Vec<RecoveryEvent> = Vec::new();
+        let mut order_stats: Vec<OrderStat> = Vec::new();
         let deadline = Instant::now() + self.cfg.recovery_timeout;
         let overdue_delay = recovery_on
             .then(|| self.cfg.recovery.overdue_delay(self.cfg.recovery_timeout));
@@ -318,6 +395,7 @@ impl Master {
                     t,
                     &mut expected,
                     &mut recoveries,
+                    &mut pending,
                 )?;
             }
         }
@@ -331,6 +409,13 @@ impl Master {
                 // silent droppers: an unanswered order past the overdue
                 // fraction of the timeout is recovered like a failure
                 while let Some(victim) = t.overdue_victim(now, delay) {
+                    if let Some(rec) = &self.recorder {
+                        rec.emit(
+                            Event::new(EventKind::HeartbeatLapse, step, rec.now_ns())
+                                .worker(victim)
+                                .note("order overdue"),
+                        );
+                    }
                     self.recover_worker(
                         cluster,
                         step,
@@ -342,6 +427,7 @@ impl Master {
                         t,
                         &mut expected,
                         &mut recoveries,
+                        &mut pending,
                     )?;
                 }
             }
@@ -412,6 +498,32 @@ impl Master {
                         if let Some(t) = tracker.as_mut() {
                             t.note_report(r.worker);
                         }
+                        // close the oldest open order span for this worker
+                        // (FIFO — supplementary orders are answered after
+                        // originals on a worker's serial execution loop)
+                        if let Some(rec) = &self.recorder {
+                            if let Some(pos) =
+                                pending.iter().position(|p| p.worker == r.worker)
+                            {
+                                let p = pending.remove(pos);
+                                let rtt_ns = p.sent.elapsed().as_nanos() as u64;
+                                rec.emit(
+                                    Event::new(EventKind::Order, step, p.t_ns)
+                                        .worker(p.worker)
+                                        .order(p.order)
+                                        .rows(p.rows)
+                                        .dur(rtt_ns)
+                                        .breakdown(r.breakdown),
+                                );
+                                order_stats.push(OrderStat {
+                                    worker: p.worker,
+                                    order: p.order,
+                                    rows: p.rows,
+                                    rtt_ns,
+                                    breakdown: r.breakdown,
+                                });
+                            }
+                        }
                     }
                     // One slot per worker per step: a late original racing
                     // its recovery replacement (or a rescuer's second,
@@ -444,6 +556,7 @@ impl Master {
                                 t,
                                 &mut expected,
                                 &mut recoveries,
+                                &mut pending,
                             )?;
                         }
                     }
@@ -472,6 +585,7 @@ impl Master {
                                 t,
                                 &mut expected,
                                 &mut recoveries,
+                                &mut pending,
                             )?;
                         }
                     }
@@ -506,6 +620,7 @@ impl Master {
             solve,
             predicted_c,
             recoveries,
+            order_stats,
         })
     }
 
@@ -530,6 +645,7 @@ impl Master {
         tracker: &mut RecoveryTracker,
         expected: &mut usize,
         recoveries: &mut Vec<RecoveryEvent>,
+        pending: &mut Vec<PendingOrder>,
     ) -> Result<()> {
         if tracker.is_victim(victim) {
             return Ok(());
@@ -545,6 +661,12 @@ impl Master {
             return Ok(());
         }
         let total_rows: usize = remaining.iter().map(|&(_, r)| r.len()).sum();
+        // journal timestamp + wall clock of the whole re-plan/re-dispatch,
+        // so the recovery span brackets its rescuer dispatches
+        let rec_span = self
+            .recorder
+            .as_ref()
+            .map(|r| (r.now_ns(), Instant::now()));
         let mut rescuers: Vec<usize> = Vec::new();
         let mut dead_rescuers: Vec<usize> = Vec::new();
         while !remaining.is_empty() {
@@ -576,6 +698,7 @@ impl Master {
             };
             let mut failed: Vec<(usize, RowRange)> = Vec::new();
             for (rescuer, tasks) in plan {
+                let order_rows: usize = tasks.iter().map(|t| t.rows.len()).sum();
                 match cluster.send(
                     rescuer,
                     WorkOrder {
@@ -584,6 +707,7 @@ impl Master {
                         tasks: tasks.clone(),
                         row_cost_ns: self.cfg.row_cost_ns,
                         straggle: None,
+                        trace: self.recorder.is_some(),
                     },
                 ) {
                     Ok(()) => {
@@ -592,6 +716,27 @@ impl Master {
                         *expected += 1;
                         if !rescuers.contains(&rescuer) {
                             rescuers.push(rescuer);
+                        }
+                        if let Some(reg) = &self.registry {
+                            reg.add_order(rescuer, order_rows);
+                        }
+                        if let Some(rec) = &self.recorder {
+                            let id = self.next_order.fetch_add(1, Ordering::Relaxed);
+                            let t_ns = rec.now_ns();
+                            rec.emit(
+                                Event::new(EventKind::Dispatch, step, t_ns)
+                                    .worker(rescuer)
+                                    .order(id)
+                                    .rows(order_rows)
+                                    .note("recovery"),
+                            );
+                            pending.push(PendingOrder {
+                                worker: rescuer,
+                                order: id,
+                                rows: order_rows,
+                                sent: Instant::now(),
+                                t_ns,
+                            });
                         }
                     }
                     Err(e) => {
@@ -623,6 +768,18 @@ impl Master {
             rows: total_rows,
             rescuers,
         });
+        if let Some(reg) = &self.registry {
+            reg.add_recovery(victim);
+        }
+        if let (Some(rec), Some((t_ns, start))) = (&self.recorder, rec_span) {
+            rec.emit(
+                Event::new(EventKind::Recovery, step, t_ns)
+                    .worker(victim)
+                    .rows(total_rows)
+                    .note(reason.name())
+                    .dur(start.elapsed().as_nanos() as u64),
+            );
+        }
         // A rescuer whose send failed has a *known-dead* channel, so its
         // own original rows cannot arrive either — recover it now instead
         // of leaving it to the overdue clock (which at a large factor can
@@ -640,6 +797,7 @@ impl Master {
                 tracker,
                 expected,
                 recoveries,
+                pending,
             )?;
         }
         Ok(())
@@ -958,6 +1116,7 @@ mod tests {
             nvec: 1,
             measured_speed: Some(speed),
             elapsed: Duration::ZERO,
+            breakdown: None,
         })
     }
 
@@ -1054,6 +1213,111 @@ mod tests {
         assert!(sent.iter().all(|(_, o)| o.step == 7));
         let extra: Vec<usize> = sent[3..].iter().map(|&(n, _)| n).collect();
         assert_eq!(extra, vec![1, 2]);
+    }
+
+    #[test]
+    fn journal_span_tree_matches_scripted_step() {
+        use crate::obs::{load_journal, Journal};
+        let path = std::env::temp_dir().join(format!(
+            "usec_master_journal_{}_{:?}.jsonl",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let path = path.to_str().unwrap().to_string();
+        let journal = Journal::create(&path).unwrap();
+        let rec = journal.recorder();
+        // worker 0 disconnects mid-step; worker 1's report covers all rows
+        let t = Scripted::new(
+            3,
+            vec![
+                TransportEvent::Disconnected { worker: 0 },
+                report(1, 7, 0, 30, 1.0),
+            ],
+        );
+        let mut master = scripted_master(3, RecoveryPolicy::enabled());
+        master.set_recorder(Some(journal.recorder()));
+        let w = Arc::new(Block::single(vec![0.5f32; 30]));
+        let t0 = rec.now_ns();
+        let out = master.step(&t, 7, &w, &[0, 1, 2], &[]).unwrap();
+        rec.emit(
+            Event::new(EventKind::Step, 7, t0)
+                .rows(30)
+                .dur(rec.now_ns() - t0),
+        );
+        journal.finish().unwrap();
+        let events = load_journal(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+
+        // a recorder turns tracing on for every shipped order
+        assert!(t.sent.lock().unwrap().iter().all(|(_, o)| o.trace));
+
+        // 3 original dispatches + 2 recovery re-dispatches, unique ids
+        let dispatches: Vec<&Event> = events
+            .iter()
+            .filter(|e| e.kind == EventKind::Dispatch)
+            .collect();
+        assert_eq!(dispatches.len(), 5, "{dispatches:?}");
+        let mut ids: Vec<u64> = dispatches.iter().map(|d| d.order.unwrap()).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), 5, "order ids must be unique");
+        assert_eq!(
+            dispatches.iter().filter(|d| d.note == "recovery").count(),
+            2
+        );
+
+        let step_ev = events.iter().find(|e| e.kind == EventKind::Step).unwrap();
+        let step_end = step_ev.t_ns + step_ev.dur_ns.unwrap();
+
+        // exactly one order span (only worker 1's report spliced); it
+        // shares id and start timestamp with its dispatch and nests
+        // inside the step span
+        let orders: Vec<&Event> =
+            events.iter().filter(|e| e.kind == EventKind::Order).collect();
+        assert_eq!(orders.len(), 1, "{orders:?}");
+        let o = orders[0];
+        assert_eq!(o.worker, Some(1));
+        let d = dispatches
+            .iter()
+            .find(|d| d.order == o.order)
+            .expect("order span without a dispatch");
+        assert_eq!(d.t_ns, o.t_ns, "order span must start at its dispatch");
+        assert!(step_ev.t_ns <= o.t_ns && o.t_ns + o.dur_ns.unwrap() <= step_end);
+
+        // one recovery span for the disconnected worker, nested in the step
+        let recov: Vec<&Event> = events
+            .iter()
+            .filter(|e| e.kind == EventKind::Recovery)
+            .collect();
+        assert_eq!(recov.len(), 1);
+        assert_eq!(recov[0].worker, Some(0));
+        assert_eq!(recov[0].note, "disconnected");
+        assert!(recov[0].rows > 0);
+        assert!(
+            step_ev.t_ns <= recov[0].t_ns
+                && recov[0].t_ns + recov[0].dur_ns.unwrap() <= step_end
+        );
+
+        // the solve span exists, and order_stats mirrors the order span
+        assert!(events
+            .iter()
+            .any(|e| e.kind == EventKind::Solve && e.dur_ns.is_some()));
+        assert_eq!(out.order_stats.len(), 1);
+        assert_eq!(out.order_stats[0].worker, 1);
+        assert_eq!(out.order_stats[0].rows, 30);
+    }
+
+    #[test]
+    fn untraced_step_has_no_order_stats() {
+        let t = Scripted::new(
+            3,
+            vec![report(0, 1, 0, 15, 1.0), report(1, 1, 15, 30, 1.0)],
+        );
+        let mut master = scripted_master(3, RecoveryPolicy::default());
+        let w = Arc::new(Block::single(vec![0.5f32; 30]));
+        let out = master.step(&t, 1, &w, &[0, 1, 2], &[]).unwrap();
+        assert!(out.order_stats.is_empty());
+        assert!(t.sent.lock().unwrap().iter().all(|(_, o)| !o.trace));
     }
 
     #[test]

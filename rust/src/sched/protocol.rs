@@ -27,6 +27,11 @@ pub struct WorkOrder {
     pub row_cost_ns: u64,
     /// Straggler instruction injected by the master's chaos layer.
     pub straggle: Option<StraggleMode>,
+    /// Tracing request: when set the worker measures a per-phase timing
+    /// breakdown and ships it back on the report ([`crate::obs`]). On the
+    /// wire this is an optional trailing byte (v5) so untraced orders
+    /// keep the v4 layout bit-for-bit.
+    pub trace: bool,
 }
 
 /// One computed segment: global rows `[rows.lo, rows.hi)` of `Y`,
@@ -54,6 +59,10 @@ pub struct WorkerReport {
     pub measured_speed: Option<f64>,
     /// Worker-side elapsed time.
     pub elapsed: std::time::Duration,
+    /// Per-phase timing breakdown, present only when the order asked for
+    /// tracing ([`WorkOrder::trace`]). Optional trailing section on the
+    /// wire (v5); reports without it are byte-identical to v4.
+    pub breakdown: Option<crate::obs::OrderBreakdown>,
 }
 
 /// Master → worker control/data messages.
@@ -108,6 +117,7 @@ mod tests {
             tasks: vec![],
             row_cost_ns: 0,
             straggle: None,
+            trace: false,
         };
         let o2 = WorkOrder {
             step: 0,
@@ -115,6 +125,7 @@ mod tests {
             tasks: vec![],
             row_cost_ns: 0,
             straggle: None,
+            trace: false,
         };
         assert_eq!(Arc::strong_count(&w), 3);
         drop((o1, o2));

@@ -238,6 +238,7 @@ pub fn execute_order(
     }
 
     // ---- compute: zero-alloc hot loop over the arena ----
+    let compute_start = Instant::now();
     let buf = scratch.at_least(assigned_rows * nvec);
     let threads = effective_threads(cfg, backend, jobs.len());
     if threads <= 1 {
@@ -252,6 +253,7 @@ pub fn execute_order(
     } else {
         compute_parallel(cfg, order, &jobs, cols, nvec, buf, threads)?;
     }
+    let compute_ns = compute_start.elapsed().as_nanos() as u64;
 
     // speed throttle: emulate a machine of speed `cfg.speed`
     let mut target_ns = if cfg.speed > 0.0 {
@@ -265,15 +267,18 @@ pub fn execute_order(
     }
     let elapsed = start.elapsed();
     let target = Duration::from_nanos(target_ns);
+    let throttle_start = Instant::now();
     if elapsed < target {
         std::thread::sleep(target - elapsed);
     }
+    let throttle_ns = throttle_start.elapsed().as_nanos() as u64;
 
     if matches!(straggle, Some(StraggleMode::Drop)) {
         return Ok(None);
     }
 
     // ---- assemble: one segment (one bulk copy) per task ----
+    let assemble_start = Instant::now();
     let segments: Vec<Segment> = task_spans
         .iter()
         .map(|&(global, off)| Segment {
@@ -281,6 +286,7 @@ pub fn execute_order(
             values: buf[off..off + global.len() * nvec].to_vec(),
         })
         .collect();
+    let assemble_ns = assemble_start.elapsed().as_nanos() as u64;
 
     let total = start.elapsed();
     let measured_speed = if assigned_rows > 0 && total.as_secs_f64() > 0.0 {
@@ -295,6 +301,14 @@ pub fn execute_order(
         nvec,
         measured_speed,
         elapsed: total,
+        // compute-path phases only; the TCP daemon fills decode/encode/
+        // idle before the report leaves the process
+        breakdown: order.trace.then(|| crate::obs::OrderBreakdown {
+            compute_ns,
+            throttle_ns,
+            assemble_ns,
+            ..Default::default()
+        }),
     }))
 }
 
@@ -416,6 +430,7 @@ mod tests {
             tasks,
             row_cost_ns: 0,
             straggle,
+            trace: false,
         }
     }
 
@@ -719,6 +734,7 @@ mod tests {
             ],
             row_cost_ns: 0,
             straggle: None,
+            trace: false,
         };
         let r = run_order_direct(&c, &o);
         assert_eq!(r.nvec, nvec);
@@ -771,11 +787,43 @@ mod tests {
                 tasks: tasks.clone(),
                 row_cost_ns: 0,
                 straggle: None,
+                trace: false,
             };
             let a = run_order_direct(&serial, &o);
             let b = run_order_direct(&threaded, &o);
             assert_eq!(a.segments, b.segments, "B={nvec}");
         }
+    }
+
+    #[test]
+    fn traced_order_carries_a_breakdown_and_untraced_does_not() {
+        let c = cfg(13, 1.0);
+        let mut o = order(
+            vec![Task {
+                g: 0,
+                rows: RowRange::new(0, 10),
+            }],
+            60,
+            None,
+        );
+        o.row_cost_ns = 1_000_000; // 10ms target → a visible throttle phase
+        assert!(run_order_direct(&c, &o).breakdown.is_none());
+        o.trace = true;
+        let r = run_order_direct(&c, &o);
+        let bd = r.breakdown.expect("traced order must carry a breakdown");
+        assert!(bd.compute_ns > 0);
+        assert!(bd.throttle_ns >= 5_000_000, "throttle {:?}", bd);
+        // daemon-side phases are not the worker's to fill
+        assert_eq!(bd.decode_ns, 0);
+        assert_eq!(bd.encode_ns, 0);
+        assert_eq!(bd.idle_ns, 0);
+        // the phases are a decomposition of the reported elapsed time
+        assert!(
+            bd.total_ns() <= r.elapsed.as_nanos() as u64,
+            "phases {:?} exceed elapsed {:?}",
+            bd,
+            r.elapsed
+        );
     }
 
     #[test]

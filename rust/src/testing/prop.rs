@@ -169,6 +169,7 @@ pub mod gen {
             tasks,
             row_cost_ns: rng.next_u64() % 1_000_000,
             straggle,
+            trace: rng.chance(0.5),
         }
     }
 
@@ -245,6 +246,18 @@ pub mod gen {
                 None
             },
             elapsed: std::time::Duration::from_nanos(rng.next_u64() % 10_000_000_000),
+            breakdown: if rng.chance(0.5) {
+                Some(crate::obs::OrderBreakdown {
+                    decode_ns: rng.next_u64() % 1_000_000,
+                    compute_ns: rng.next_u64() % 1_000_000,
+                    throttle_ns: rng.next_u64() % 1_000_000,
+                    assemble_ns: rng.next_u64() % 1_000_000,
+                    encode_ns: rng.next_u64() % 1_000_000,
+                    idle_ns: rng.next_u64() % 1_000_000,
+                })
+            } else {
+                None
+            },
         }
     }
 }
@@ -422,7 +435,13 @@ mod tests {
         use crate::net::codec::{decode, encode};
         use crate::net::WireMsg;
         run(Config::default().cases(40).name("codec-truncation"), |rng| {
-            let bytes = encode(&WireMsg::Report(gen::worker_report(rng)));
+            // The v5 tracing section is deliberately a *suffix*: a traced
+            // report cut at exactly -48 bytes IS a valid untraced frame.
+            // Strict-prefix rejection therefore holds for the core layout
+            // only, so strip the optional breakdown before encoding.
+            let mut report = gen::worker_report(rng);
+            report.breakdown = None;
+            let bytes = encode(&WireMsg::Report(report));
             for cut in 0..bytes.len() {
                 assert!(
                     decode(&bytes[..cut]).is_err(),

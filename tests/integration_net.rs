@@ -321,6 +321,11 @@ fn run_mid_step_kill_scenario(nvec: usize) {
         metric: 0.0,
         recoveries: out.recoveries.clone(),
         migrations: Vec::new(),
+        counters: Vec::new(),
+        rtt_p50_ms: f64::NAN,
+        rtt_p99_ms: f64::NAN,
+        compute_p50_ms: f64::NAN,
+        compute_p99_ms: f64::NAN,
     });
     let back = usec::util::json::Json::parse(&tl.to_json().to_string()).unwrap();
     assert_eq!(back.get_usize("recoveries_total"), Some(1));
@@ -344,6 +349,104 @@ fn tcp_recovery_survives_mid_step_socket_kill_at_s0() {
 #[test]
 fn tcp_recovery_survives_mid_step_socket_kill_at_s0_batched() {
     run_mid_step_kill_scenario(3);
+}
+
+/// End-to-end tracing over a real 3-worker TCP cluster: the journal's
+/// span tree must be consistent (every order span matches its dispatch on
+/// the same worker track, worker-reported compute bounded by the
+/// master-observed RTT), the counters must surface per step, and the
+/// Chrome export must carry the spans. The journal is left on disk at
+/// `artifacts/integration_trace.jsonl` so CI can upload it.
+#[test]
+fn traced_tcp_run_produces_a_consistent_journal() {
+    use usec::obs::{chrome_trace, load_journal, EventKind};
+
+    let (addrs, handles) = start_workers(3);
+    std::fs::create_dir_all("artifacts").unwrap();
+    let path = "artifacts/integration_trace.jsonl";
+    let mut cfg = base_cfg(addrs);
+    cfg.trace_out = path.to_string();
+    let res = run_power_iteration(&cfg).unwrap();
+    assert_eq!(res.timeline.len(), STEPS);
+
+    let events = load_journal(path).unwrap();
+    let dispatches: Vec<_> = events
+        .iter()
+        .filter(|e| e.kind == EventKind::Dispatch)
+        .collect();
+    let orders: Vec<_> = events
+        .iter()
+        .filter(|e| e.kind == EventKind::Order)
+        .collect();
+    assert!(dispatches.len() >= 3 * STEPS, "3 workers × {STEPS} steps");
+    // with S=1 over-provisioning a fully-covered step can drop its last
+    // report, so spans ⊆ dispatches; every span must close a real dispatch
+    assert!(orders.len() >= STEPS, "at least one closed span per step");
+    for o in &orders {
+        let d = dispatches
+            .iter()
+            .find(|d| d.order == o.order)
+            .expect("order span without a matching dispatch");
+        assert_eq!(o.worker, d.worker, "span on the wrong worker track");
+        assert_eq!(o.rows, d.rows, "span rows diverge from the dispatch");
+        // worker-side compute can never exceed the master-observed RTT
+        let bd = o.breakdown.expect("traced order span missing breakdown");
+        let rtt = o.dur_ns.expect("order span missing duration");
+        assert!(
+            bd.compute_ns <= rtt,
+            "compute {} ns exceeds RTT {} ns",
+            bd.compute_ns,
+            rtt
+        );
+        // the span nests inside its step's span
+        let step = events
+            .iter()
+            .find(|e| e.kind == EventKind::Step && e.step == o.step)
+            .expect("order without an enclosing step span");
+        let (s0, s1) = (step.t_ns, step.t_ns + step.dur_ns.unwrap());
+        assert!(s0 <= o.t_ns && o.t_ns + rtt <= s1, "span escapes its step");
+    }
+    assert_eq!(
+        events.iter().filter(|e| e.kind == EventKind::Step).count(),
+        STEPS
+    );
+    // the daemon-side phases landed: at least one breakdown carries a
+    // non-zero decode or idle measurement
+    assert!(orders
+        .iter()
+        .any(|o| o.breakdown.is_some_and(|b| b.decode_ns > 0 || b.idle_ns > 0)));
+
+    // per-step counter snapshots surfaced into the timeline, monotone in
+    // dispatched orders and carrying real wire traffic
+    let steps = res.timeline.steps();
+    assert!(steps.iter().all(|s| s.counters.len() == 3));
+    let last = steps.last().unwrap();
+    let total_orders: u64 = last.counters.iter().map(|c| c.orders).sum();
+    assert_eq!(total_orders as usize, dispatches.len());
+    assert!(last.counters.iter().all(|c| c.bytes_tx > 0 && c.bytes_rx > 0));
+    for w in steps.windows(2) {
+        for (a, b) in w[0].counters.iter().zip(&w[1].counters) {
+            assert!(a.orders <= b.orders && a.bytes_rx <= b.bytes_rx);
+        }
+    }
+    assert!(steps.iter().any(|s| s.rtt_p50_ms.is_finite()));
+
+    // the Chrome export carries every span on its worker track
+    let trace = chrome_trace(&events);
+    let items = trace.items().unwrap();
+    let spans = items
+        .iter()
+        .filter(|e| e.get_str("ph") == Some("X") && e.get_str("name") == Some("order"))
+        .count();
+    assert_eq!(spans, orders.len());
+    assert!(items.iter().any(|e| {
+        e.get_str("ph") == Some("M")
+            && e.get("args").and_then(|a| a.get_str("name")) == Some("worker 2")
+    }));
+
+    for h in handles {
+        h.join().unwrap().unwrap();
+    }
 }
 
 #[test]
