@@ -1,0 +1,179 @@
+//! Pipeline benchmark: synchronous vs pipelined master over a real
+//! 3-worker TCP cluster.
+//!
+//! The pipelined loop (`--pipeline`) overlaps the previous step's
+//! combine metric with the next step's dispatch + worker compute, so
+//! its payoff grows with the weight of the combine. Each variant runs
+//! the same block power iteration with a throttled ~2 ms compute phase
+//! per step and a combine whose cost scales with the block width B:
+//! at B=1 the combine is nearly free and the two loops tie; at B=16
+//! the combine rivals the compute and the pipeline should deliver the
+//! ≥1.3× steps/s the roadmap targets.
+//!
+//! Run: `cargo bench --bench pipeline [-- --smoke] [-- --json PATH]`
+//!
+//! Results are written as machine-readable JSON (default
+//! `BENCH_pipeline.json`): the `sync`/`pipelined` pairs at each B share
+//! a unit count (steps), so `units_per_s` ratios are the speedup.
+
+use std::net::TcpListener;
+use std::time::{Duration, Instant};
+
+use usec::apps::harness::Harness;
+use usec::apps::power_iteration::{PLANT_EIGVAL, PLANT_GAP};
+use usec::config::types::RunConfig;
+use usec::linalg::{ops, Block};
+use usec::net::daemon::{serve_worker, DaemonOpts};
+use usec::net::WorkloadSpec;
+use usec::placement::PlacementKind;
+use usec::util::benchkit::Bench;
+
+const Q: usize = 120;
+const SEED: u64 = 29;
+/// ~2 ms of throttled compute per worker per step (40 rows × 50 µs):
+/// the window the pipelined combine hides inside.
+const ROW_COST_NS: u64 = 50_000;
+/// Extra orthonormalization passes in the combine, making it heavy
+/// enough at wide B to rival the compute phase.
+const COMBINE_REPS: usize = 60;
+
+/// Spawn `n` worker daemons on ephemeral loopback ports. The threads
+/// are detached (unlimited sessions): every benchmark iteration dials a
+/// fresh session and the daemons die with the process.
+fn start_workers(n: usize) -> Vec<String> {
+    let mut addrs = Vec::new();
+    for _ in 0..n {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        addrs.push(listener.local_addr().unwrap().to_string());
+        std::thread::spawn(move || serve_worker(listener, DaemonOpts::default()));
+    }
+    addrs
+}
+
+fn spec() -> WorkloadSpec {
+    WorkloadSpec::PlantedSymmetric {
+        q: Q,
+        eigval: PLANT_EIGVAL,
+        gap: PLANT_GAP,
+        seed: SEED,
+    }
+}
+
+fn cfg(steps: usize, batch: usize, pipeline: bool, workers: Vec<String>) -> RunConfig {
+    RunConfig {
+        q: Q,
+        r: Q,
+        g: 3,
+        j: 3,
+        n: 3,
+        placement: PlacementKind::Cyclic,
+        stragglers: 1,
+        steps,
+        batch,
+        speeds: vec![1.0, 1.0, 1.0],
+        row_cost_ns: ROW_COST_NS,
+        seed: SEED,
+        pipeline,
+        workers,
+        ..Default::default()
+    }
+}
+
+/// One full run: build the harness (TCP handshake included), drive
+/// `steps` block power-iteration steps with a combine-heavy finish, and
+/// return the wall-clock of the step loop alone.
+fn run_once(cfg: &RunConfig) -> Duration {
+    let spec = spec();
+    let matrix = spec.materialize().unwrap();
+    let mut h = Harness::build_with_workload(cfg, matrix, Some(spec)).unwrap();
+    let b = cfg.batch;
+    let cols: Vec<Vec<f32>> = (0..b)
+        .map(|k| {
+            (0..Q)
+                .map(|i| ((i * (k + 2)) % 7) as f32 * 0.3 - 0.9)
+                .collect()
+        })
+        .collect();
+    let w0 = Block::from_columns(&cols).unwrap();
+    let t0 = Instant::now();
+    let out = h
+        .run_block_split(
+            w0,
+            cfg.steps,
+            |_combine, _w, mut y| {
+                ops::mgs_orthonormalize(y.data_mut(), Q, b);
+                Ok(y)
+            },
+            |_combine, next| {
+                // combine-heavy metric: repeated orthonormalization
+                // passes over a scratch copy, cost ∝ Q·B²
+                let mut scratch = next.data().to_vec();
+                let mut acc = 0.0f64;
+                for _ in 0..COMBINE_REPS {
+                    let norms = ops::mgs_orthonormalize(&mut scratch, Q, b);
+                    acc += norms.iter().sum::<f64>();
+                }
+                Ok(acc)
+            },
+        )
+        .unwrap();
+    let wall = t0.elapsed();
+    assert!(out.data().iter().all(|v| v.is_finite()));
+    wall
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let smoke = args.iter().any(|a| a == "--smoke");
+    let json_path = args
+        .iter()
+        .position(|a| a == "--json")
+        .and_then(|i| args.get(i + 1))
+        .map(String::as_str)
+        .unwrap_or("BENCH_pipeline.json")
+        .to_string();
+    let (steps, budget, iters) = if smoke {
+        (6, Duration::from_millis(100), 1)
+    } else {
+        (24, Duration::from_secs(2), 6)
+    };
+    let mut bench = Bench::with_budget(budget, iters);
+
+    let mut speedups = Vec::new();
+    for batch in [1usize, 4, 16] {
+        let mut walls = [Duration::ZERO; 2];
+        for (slot, pipeline) in [(0, false), (1, true)] {
+            let addrs = start_workers(3);
+            let run_cfg = cfg(steps, batch, pipeline, addrs);
+            let mut best = Duration::MAX;
+            let label = if pipeline { "pipelined" } else { "sync" };
+            bench.run_units(
+                &format!("tcp power iteration {label} B={batch} ({steps} steps)"),
+                steps as f64,
+                || {
+                    let wall = run_once(&run_cfg);
+                    if wall < best {
+                        best = wall;
+                    }
+                    wall.as_secs_f64()
+                },
+            );
+            walls[slot] = best;
+        }
+        let speedup = walls[0].as_secs_f64() / walls[1].as_secs_f64();
+        speedups.push((batch, walls[0], walls[1], speedup));
+    }
+
+    println!("{}", bench.table());
+    for (batch, sync, piped, speedup) in &speedups {
+        println!(
+            "B={batch}: sync {sync:?} vs pipelined {piped:?} -> {speedup:.2}x steps/s \
+             (step-loop wall, best of {iters})"
+        );
+    }
+
+    match Bench::write_json(&[&bench], &json_path) {
+        Ok(()) => println!("wrote {json_path}"),
+        Err(e) => eprintln!("could not write {json_path}: {e}"),
+    }
+}

@@ -317,28 +317,7 @@ impl Harness {
         let mut w = Arc::new(w0);
         let mut last_metric = f64::NAN;
         for step in 0..steps {
-            let mut alive = self.transport.alive();
-            // a reconnecting worker daemon rejoins the availability set at
-            // the next step instead of staying preempted forever
-            if alive.iter().any(|a| !a) && self.transport.readmit() > 0 {
-                self.timeline
-                    .set_storage_bytes(self.transport.resident_bytes());
-                alive = self.transport.alive();
-            }
-            if let Some(reg) = &self.registry {
-                for (w, (&was, &is)) in self.prev_alive.iter().zip(&alive).enumerate() {
-                    if !was && is {
-                        reg.add_reconnect(w);
-                    }
-                }
-            }
-            self.prev_alive.clone_from(&alive);
-            let avail: Vec<usize> = self
-                .trace
-                .next_step()
-                .into_iter()
-                .filter(|&n| alive.get(n).copied().unwrap_or(false))
-                .collect();
+            let avail = self.availability();
             // live placement adaptation: between steps (before dispatch)
             // the rebalancer may migrate replica rows and swap the
             // effective placement — assignments, feasibility, and recovery
@@ -368,6 +347,7 @@ impl Harness {
                     rtt_p99_ms,
                     compute_p50_ms,
                     compute_p99_ms,
+                    overlap_ns: 0,
                 });
                 continue;
             }
@@ -406,10 +386,236 @@ impl Harness {
                 rtt_p99_ms,
                 compute_p50_ms,
                 compute_p99_ms,
+                overlap_ns: 0,
             });
             w = Arc::new(next);
         }
         Ok(Arc::try_unwrap(w).unwrap_or_else(|a| (*a).clone()))
+    }
+
+    /// One step's availability set: the elasticity trace intersected with
+    /// transport liveness, after re-admitting any reconnected daemons and
+    /// counting dead→alive transitions as reconnects.
+    fn availability(&mut self) -> Vec<usize> {
+        let mut alive = self.transport.alive();
+        // a reconnecting worker daemon rejoins the availability set at
+        // the next step instead of staying preempted forever
+        if alive.iter().any(|a| !a) && self.transport.readmit() > 0 {
+            self.timeline
+                .set_storage_bytes(self.transport.resident_bytes());
+            alive = self.transport.alive();
+        }
+        if let Some(reg) = &self.registry {
+            for (w, (&was, &is)) in self.prev_alive.iter().zip(&alive).enumerate() {
+                if !was && is {
+                    reg.add_reconnect(w);
+                }
+            }
+        }
+        self.prev_alive.clone_from(&alive);
+        self.trace
+            .next_step()
+            .into_iter()
+            .filter(|&n| alive.get(n).copied().unwrap_or(false))
+            .collect()
+    }
+
+    /// Split-closure variant of [`Harness::run`] (`B = 1`): `prepare`
+    /// derives the next iterate from the assembled product (the serial
+    /// critical path), `finish` computes the step's metric from that
+    /// iterate (deferrable master-side work). With `--pipeline` off this
+    /// fuses the closures and calls [`Harness::run_block`] — bit-identical
+    /// to the classic loop; with it on, each step's `finish` runs while
+    /// the *next* step's orders are in flight on the workers.
+    pub fn run_split<P, F>(
+        &mut self,
+        w0: Vec<f32>,
+        steps: usize,
+        mut prepare: P,
+        mut finish: F,
+    ) -> Result<Vec<f32>>
+    where
+        P: FnMut(&Backend, &[f32], Vec<f32>) -> Result<Vec<f32>>,
+        F: FnMut(&Backend, &[f32]) -> Result<f64>,
+    {
+        let out = self.run_block_split(
+            Block::single(w0),
+            steps,
+            |combine, w, y| Ok(Block::single(prepare(combine, w.data(), y.into_single())?)),
+            |combine, next| finish(combine, next.data()),
+        )?;
+        Ok(out.into_single())
+    }
+
+    /// Split-closure variant of [`Harness::run_block`] — see
+    /// [`Harness::run_split`]. Dispatches to the pipelined event loop
+    /// when `cfg.pipeline` is set, else fuses back into the synchronous
+    /// loop (same wire traffic, same trajectory, byte for byte).
+    pub fn run_block_split<P, F>(
+        &mut self,
+        w0: Block,
+        steps: usize,
+        mut prepare: P,
+        mut finish: F,
+    ) -> Result<Block>
+    where
+        P: FnMut(&Backend, &Block, Block) -> Result<Block>,
+        F: FnMut(&Backend, &Block) -> Result<f64>,
+    {
+        if self.cfg.pipeline {
+            self.run_block_pipelined(w0, steps, prepare, finish)
+        } else {
+            self.run_block(w0, steps, |combine, w, y| {
+                let next = prepare(combine, w, y)?;
+                let metric = finish(combine, &next)?;
+                Ok((next, metric))
+            })
+        }
+    }
+
+    /// The pipelined step loop (`--pipeline`): per step, completed
+    /// migrations are harvested and the next budgeted window dispatched
+    /// onto the transfer lane, step `i`'s orders are dispatched
+    /// ([`Master::begin_step`]), the *previous* step's deferred `finish`
+    /// runs while those orders are in flight (its duration is surfaced as
+    /// `timeline[i-1].overlap_ns` and a `combine` journal span), and only
+    /// then does the master block collecting step `i`'s reports
+    /// ([`Master::collect_step`]). `prepare` stays on the critical path —
+    /// the next iterate is needed before the next dispatch — so the
+    /// trajectory is bit-identical to the synchronous loop; only the
+    /// metric computation overlaps worker compute.
+    fn run_block_pipelined<P, F>(
+        &mut self,
+        w0: Block,
+        steps: usize,
+        mut prepare: P,
+        mut finish: F,
+    ) -> Result<Block>
+    where
+        P: FnMut(&Backend, &Block, Block) -> Result<Block>,
+        F: FnMut(&Backend, &Block) -> Result<f64>,
+    {
+        let q = self.cfg.q;
+        let mut w = Arc::new(w0);
+        let mut last_metric = f64::NAN;
+        let mut pending: Option<PendingFinish> = None;
+        for step in 0..steps {
+            let avail = self.availability();
+            let migrations = self.rebalance_tick_async(step, &avail);
+            if self
+                .placement
+                .check_feasible(&avail, self.cfg.stragglers)
+                .is_err()
+            {
+                crate::log_debug!("step {step}: infeasible availability {avail:?}, skipping");
+                // flush the deferred finish first so the skip record sees
+                // the freshest metric and the timeline stays in step order
+                self.finish_pending(&mut pending, &mut finish, &mut last_metric)?;
+                let (counters, [rtt_p50_ms, rtt_p99_ms, compute_p50_ms, compute_p99_ms]) =
+                    self.trace_tail(&[]);
+                self.timeline.push(StepRecord {
+                    step,
+                    available: avail.len(),
+                    reported: 0,
+                    stragglers: 0,
+                    wall: Duration::ZERO,
+                    solve: Duration::ZERO,
+                    predicted_c: f64::NAN,
+                    metric: last_metric,
+                    recoveries: Vec::new(),
+                    migrations,
+                    counters,
+                    rtt_p50_ms,
+                    rtt_p99_ms,
+                    compute_p50_ms,
+                    compute_p99_ms,
+                    overlap_ns: 0,
+                });
+                continue;
+            }
+            let step_span = self.recorder.as_ref().map(|r| (r.now_ns(), Instant::now()));
+            let victims = self.injector.choose(&avail);
+            // dispatch first; the previous step's finish overlaps the
+            // in-flight compute, then the collect loop blocks
+            let fl = self
+                .master
+                .begin_step(&self.transport, step, &w, &avail, &victims)?;
+            self.finish_pending(&mut pending, &mut finish, &mut last_metric)?;
+            let out = self.master.collect_step(&self.transport, fl)?;
+            let y = Block::from_interleaved(q, out.nvec, out.y)?;
+            let next = Arc::new(prepare(&self.combine, &w, y)?);
+            if let (Some(rec), Some((t_ns, start))) = (&self.recorder, step_span) {
+                rec.emit(
+                    Event::new(EventKind::Step, step, t_ns)
+                        .rows(q)
+                        .dur(start.elapsed().as_nanos() as u64),
+                );
+            }
+            let (counters, [rtt_p50_ms, rtt_p99_ms, compute_p50_ms, compute_p99_ms]) =
+                self.trace_tail(&out.order_stats);
+            pending = Some(PendingFinish {
+                record: StepRecord {
+                    step,
+                    available: avail.len(),
+                    reported: out.reporters.len(),
+                    stragglers: victims.len(),
+                    wall: out.wall,
+                    solve: out.solve,
+                    predicted_c: out.predicted_c,
+                    metric: f64::NAN,
+                    recoveries: out.recoveries,
+                    migrations,
+                    counters,
+                    rtt_p50_ms,
+                    rtt_p99_ms,
+                    compute_p50_ms,
+                    compute_p99_ms,
+                    overlap_ns: 0,
+                },
+                next: Arc::clone(&next),
+            });
+            w = next;
+        }
+        // the last step has no next dispatch to hide behind
+        self.finish_pending(&mut pending, &mut finish, &mut last_metric)?;
+        Ok(Arc::try_unwrap(w).unwrap_or_else(|a| (*a).clone()))
+    }
+
+    /// Run the deferred `finish` of the previous pipelined step (if any),
+    /// fill in its metric and `overlap_ns`, and push its record. Emits
+    /// the `combine` journal span whose overlap with the next step's
+    /// order spans is the pipeline's visible win.
+    fn finish_pending<F>(
+        &mut self,
+        pending: &mut Option<PendingFinish>,
+        finish: &mut F,
+        last_metric: &mut f64,
+    ) -> Result<()>
+    where
+        F: FnMut(&Backend, &Block) -> Result<f64>,
+    {
+        let Some(p) = pending.take() else {
+            return Ok(());
+        };
+        let t_ns = self.recorder.as_ref().map(|r| r.now_ns());
+        let t0 = Instant::now();
+        let metric = finish(&self.combine, &p.next)?;
+        let overlap_ns = t0.elapsed().as_nanos() as u64;
+        if let (Some(rec), Some(t_ns)) = (&self.recorder, t_ns) {
+            rec.emit(
+                Event::new(EventKind::Combine, p.record.step, t_ns)
+                    .rows(self.cfg.q)
+                    .dur(overlap_ns),
+            );
+        }
+        *last_metric = metric;
+        let mut record = p.record;
+        record.metric = metric;
+        // floor at 1: the JSON key is gated on overlap_ns > 0, and a
+        // pipelined step did overlap even if the finish was sub-tick
+        record.overlap_ns = overlap_ns.max(1);
+        self.timeline.push(record);
+        Ok(())
     }
 
     pub fn config(&self) -> &RunConfig {
@@ -472,29 +678,11 @@ impl Harness {
         let speeds = self.master.speed_estimate().to_vec();
         match rb.tick(step, &self.transport, self.master.placement(), avail, &speeds) {
             Ok((placement, records)) => {
-                if !records.is_empty() {
-                    if let Err(e) = self.master.set_placement(placement.clone()) {
-                        crate::log_warn!("step {step}: placement swap rejected: {e}");
-                        return Vec::new();
-                    }
-                    self.placement = placement;
-                    self.timeline
-                        .set_storage_bytes(self.transport.resident_bytes());
-                    for m in &records {
-                        if let Some(reg) = &self.registry {
-                            reg.add_migration(m.to);
-                        }
-                        if let Some(rec) = &self.recorder {
-                            rec.emit(
-                                Event::new(EventKind::Migration, step, rec.now_ns())
-                                    .worker(m.to)
-                                    .rows(m.rows)
-                                    .note(format!("g{} {}->{}", m.g, m.from, m.to)),
-                            );
-                        }
-                    }
+                if records.is_empty() || self.install_placement(step, placement, &records) {
+                    records
+                } else {
+                    Vec::new()
                 }
-                records
             }
             Err(e) => {
                 crate::log_warn!("step {step}: rebalance tick failed: {e}");
@@ -502,6 +690,94 @@ impl Harness {
             }
         }
     }
+
+    /// The pipelined twin of [`Harness::rebalance_tick`]: first harvest
+    /// completed transfer-lane gains ([`Rebalancer::harvest`]) — this is
+    /// the safe point, between steps, where no orders are in flight
+    /// against the old placement — then dispatch the next budgeted window
+    /// through the lane ([`Rebalancer::tick_async`]), so its bytes stream
+    /// while the upcoming step computes.
+    fn rebalance_tick_async(
+        &mut self,
+        step: usize,
+        avail: &[usize],
+    ) -> Vec<crate::rebalance::MigrationRecord> {
+        if self.rebalancer.is_none() {
+            return Vec::new();
+        }
+        let speeds = self.master.speed_estimate().to_vec();
+        let mut records = Vec::new();
+        let harvested = {
+            let rb = self.rebalancer.as_mut().expect("checked above");
+            rb.harvest(step, &self.transport, self.master.placement())
+        };
+        match harvested {
+            Ok((placement, recs)) => {
+                if !recs.is_empty() && self.install_placement(step, placement, &recs) {
+                    records.extend(recs);
+                }
+            }
+            Err(e) => crate::log_warn!("step {step}: migration harvest failed: {e}"),
+        }
+        let ticked = {
+            let rb = self.rebalancer.as_mut().expect("checked above");
+            rb.tick_async(step, &self.transport, self.master.placement(), avail, &speeds)
+        };
+        match ticked {
+            Ok((placement, recs)) => {
+                // lane-accepted moves produce no records yet; only inline
+                // completions swap the placement here
+                if !recs.is_empty() && self.install_placement(step, placement, &recs) {
+                    records.extend(recs);
+                }
+            }
+            Err(e) => crate::log_warn!("step {step}: rebalance tick failed: {e}"),
+        }
+        records
+    }
+
+    /// Install a post-migration effective placement in the master,
+    /// refresh the storage snapshot, and log the move records. Returns
+    /// false (the caller then drops the records) if the master rejects
+    /// the swap.
+    fn install_placement(
+        &mut self,
+        step: usize,
+        placement: Placement,
+        records: &[crate::rebalance::MigrationRecord],
+    ) -> bool {
+        if let Err(e) = self.master.set_placement(placement.clone()) {
+            crate::log_warn!("step {step}: placement swap rejected: {e}");
+            return false;
+        }
+        self.placement = placement;
+        self.timeline
+            .set_storage_bytes(self.transport.resident_bytes());
+        for m in records {
+            if let Some(reg) = &self.registry {
+                reg.add_migration(m.to);
+            }
+            if let Some(rec) = &self.recorder {
+                rec.emit(
+                    Event::new(EventKind::Migration, step, rec.now_ns())
+                        .worker(m.to)
+                        .rows(m.rows)
+                        .note(format!("g{} {}->{}", m.g, m.from, m.to)),
+                );
+            }
+        }
+        true
+    }
+}
+
+/// The deferred master-side tail of one pipelined step: its metric
+/// computation and timeline record, held until the next step's orders
+/// are in flight (or the loop ends).
+struct PendingFinish {
+    /// The step's record with `metric` and `overlap_ns` still unfilled.
+    record: StepRecord,
+    /// The iterate the metric is computed from.
+    next: Arc<Block>,
 }
 
 /// Artifact directory: `$USEC_ARTIFACTS` or `<crate>/artifacts`.

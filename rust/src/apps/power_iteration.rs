@@ -95,13 +95,20 @@ pub fn run_power_iteration(cfg: &RunConfig) -> Result<PowerIterationResult> {
     let mut b0 = vec![1.0f32; cfg.q];
     ops::normalize(&mut b0);
 
+    // split closures: normalization stays on the critical path (the next
+    // step needs the iterate), the NMSE metric is deferrable — with
+    // `--pipeline` it runs while the next step's orders are in flight
     let mut eigval = 0.0f64;
-    let final_b = harness.run(b0, cfg.steps, |combine, _w, y| {
-        let (b_next, norm) = combine.normalize(&y)?;
-        eigval = norm;
-        let nmse = ops::nmse_signless(&b_next, &truth);
-        Ok((b_next, nmse))
-    })?;
+    let final_b = harness.run_split(
+        b0,
+        cfg.steps,
+        |combine, _w, y| {
+            let (b_next, norm) = combine.normalize(&y)?;
+            eigval = norm;
+            Ok(b_next)
+        },
+        |_combine, b_next| Ok(ops::nmse_signless(b_next, &truth)),
+    )?;
 
     let final_nmse = ops::nmse_signless(&final_b, &truth);
     harness.finish_trace()?;
@@ -141,13 +148,19 @@ fn run_block_power(
     let mut w0 = Block::from_columns(&cols)?;
     ops::mgs_orthonormalize(w0.data_mut(), q, b);
 
+    // MGS re-orthonormalization is the critical path; the NMSE metric
+    // overlaps the next step's worker compute under `--pipeline`
     let mut eigvals = vec![0.0f64; b];
-    let final_w = harness.run_block(w0, cfg.steps, |_combine, _w, mut y| {
-        let norms = ops::mgs_orthonormalize(y.data_mut(), q, b);
-        eigvals.copy_from_slice(&norms);
-        let nmse = ops::nmse_signless(&y.column(0), truth);
-        Ok((y, nmse))
-    })?;
+    let final_w = harness.run_block_split(
+        w0,
+        cfg.steps,
+        |_combine, _w, mut y| {
+            let norms = ops::mgs_orthonormalize(y.data_mut(), q, b);
+            eigvals.copy_from_slice(&norms);
+            Ok(y)
+        },
+        |_combine, next| Ok(ops::nmse_signless(&next.column(0), truth)),
+    )?;
 
     let eigvec = final_w.column(0);
     let final_nmse = ops::nmse_signless(&eigvec, truth);
@@ -282,6 +295,36 @@ mod tests {
         // intra-worker parallelism must be invisible in the numerics
         assert_eq!(serial.eigvec, threaded.eigvec);
         assert_eq!(serial.final_nmse, threaded.final_nmse);
+    }
+
+    #[test]
+    fn pipelined_run_matches_the_synchronous_loop() {
+        let mut cfg = small_cfg();
+        cfg.steps = 30;
+        let sync = run_power_iteration(&cfg).unwrap();
+        cfg.pipeline = true;
+        let piped = run_power_iteration(&cfg).unwrap();
+        assert_eq!(
+            sync.eigvec, piped.eigvec,
+            "pipelining must not change the trajectory"
+        );
+        assert_eq!(sync.final_nmse, piped.final_nmse);
+        assert_eq!(sync.eigval, piped.eigval);
+        // pipelined records surface the overlapped combine; sync never do
+        assert!(piped.timeline.steps().iter().all(|s| s.overlap_ns > 0));
+        assert!(sync.timeline.steps().iter().all(|s| s.overlap_ns == 0));
+        // per-step metrics line up too (same math, different schedule)
+        for (a, b) in sync.timeline.steps().iter().zip(piped.timeline.steps()) {
+            assert_eq!(a.step, b.step);
+            assert_eq!(a.metric, b.metric);
+        }
+        // block path: identical guarantee at B = 4
+        cfg.batch = 4;
+        let piped_block = run_power_iteration(&cfg).unwrap();
+        cfg.pipeline = false;
+        let sync_block = run_power_iteration(&cfg).unwrap();
+        assert_eq!(sync_block.eigvec, piped_block.eigvec);
+        assert_eq!(sync_block.eigvals, piped_block.eigvals);
     }
 
     #[test]

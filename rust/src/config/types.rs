@@ -141,6 +141,12 @@ pub struct RunConfig {
     /// live EWMA speed estimates and migrate shard rows between steps.
     /// Disabled by default (bit-identical to the frozen placement).
     pub rebalance: RebalanceConfig,
+    /// Pipelined step loop (`--pipeline`): overlap the master-side
+    /// combine/bookkeeping of step `i` with the workers' compute of step
+    /// `i+1`, and stream migration bytes concurrently with compute on the
+    /// transport's transfer lane. Off by default (the synchronous loop,
+    /// byte-identical on the wire to the classic behaviour).
+    pub pipeline: bool,
     /// Path for the machine-readable per-step timeline dump (JSON). Empty
     /// ⇒ no dump.
     pub json_out: String,
@@ -181,6 +187,7 @@ impl Default for RunConfig {
             stream_data: false,
             recovery: RecoveryPolicy::default(),
             rebalance: RebalanceConfig::default(),
+            pipeline: false,
             json_out: String::new(),
             trace_out: String::new(),
         }
@@ -258,6 +265,11 @@ impl RunConfig {
                 "max bytes of shard rows migrated between consecutive \
                  steps (0 = unlimited; with --rebalance)",
             ),
+            ArgSpec::flag(
+                "pipeline",
+                "overlap master-side combine with the next step's worker \
+                 compute (and migrations with compute)",
+            ),
             ArgSpec::opt("json-out", "", "write the per-step timeline JSON here"),
             ArgSpec::opt(
                 "trace-out",
@@ -306,6 +318,7 @@ impl RunConfig {
                 budget_bytes: a.get_u64("migration-budget")?,
                 ..Default::default()
             },
+            pipeline: a.has("pipeline"),
             json_out: a.get("json-out").unwrap_or("").to_string(),
             trace_out: a.get("trace-out").unwrap_or("").to_string(),
         };
@@ -574,6 +587,17 @@ mod tests {
             ..Default::default()
         };
         assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn pipeline_flag_parses_and_defaults_off() {
+        let argv: Vec<String> = ["--pipeline"].iter().map(|s| s.to_string()).collect();
+        let a = Args::parse(&argv, &RunConfig::arg_specs()).unwrap();
+        assert!(RunConfig::from_args(&a).unwrap().pipeline);
+
+        // default: off, the synchronous loop
+        let none = Args::parse(&[], &RunConfig::arg_specs()).unwrap();
+        assert!(!RunConfig::from_args(&none).unwrap().pipeline);
     }
 
     #[test]

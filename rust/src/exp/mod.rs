@@ -52,7 +52,11 @@ pub fn master_cli(argv: &[String]) -> Result<()> {
 /// [`crate::obs::CounterSnapshot`] object per worker: orders, rows, wire
 /// bytes/frames, reconnects, recoveries, migrations) and order latency
 /// quantiles `rtt_p50_ms`/`rtt_p99_ms`/`compute_p50_ms`/`compute_p99_ms`
-/// (null when untraced). The journal itself is converted offline with
+/// (null when untraced). Pipelined runs (`--pipeline`) additionally
+/// carry `overlap_ns` per step — the previous step's combine time
+/// hidden inside this step's dispatch+compute window; the key is
+/// omitted on synchronous steps, keeping classic dumps byte-identical.
+/// The journal itself is converted offline with
 /// `usec trace <journal> [--out trace.json] [--summary]`.
 fn run_and_report(cfg: &RunConfig) -> Result<()> {
     let res = crate::apps::run_power_iteration(cfg)?;

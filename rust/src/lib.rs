@@ -89,6 +89,24 @@
 //! * [`apps`] — power iteration, ridge regression and PageRank built on the
 //!   elastic substrate.
 //!
+//! ## Pipelining
+//!
+//! `--pipeline` turns the master's synchronous step loop into an
+//! event-driven pipeline ([`apps::harness::Harness::run_block_split`]):
+//! the combine *metric* of step `i` (MGS norms, NMSE — everything that
+//! does not feed the next iterate) runs while the workers already
+//! compute step `i+1`, migration bytes from `--rebalance` plans stream
+//! on a dedicated transfer lane concurrently with compute (still
+//! byte-budgeted, still make-before-break, swapped in at the next
+//! inter-step harvest point), and one
+//! [`sched::TimerWheel`] drives the heartbeat, overdue-recovery and
+//! migration-ack deadlines off a single bounded `recv_timeout`. The
+//! iterate trajectory is bit-identical to the synchronous loop — only
+//! metric work moves across the step boundary — and each step's bought
+//! overlap is reported as `timeline[i].overlap_ns` in `--json-out`.
+//! With the flag off the loop, the wire traffic and the output are
+//! byte-identical to the classic synchronous master.
+//!
 //! ## Quickstart
 //!
 //! ```no_run

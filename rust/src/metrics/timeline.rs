@@ -44,6 +44,11 @@ pub struct StepRecord {
     /// orders, in milliseconds (NaN when no breakdowns arrived).
     pub compute_p50_ms: f64,
     pub compute_p99_ms: f64,
+    /// Master-side combine/finish time for the *previous* step that ran
+    /// concurrently with this step's worker compute (`--pipeline`). Zero
+    /// in the synchronous loop, where the key is omitted from the JSON
+    /// so sync dumps stay byte-identical to the pre-pipeline schema.
+    pub overlap_ns: u64,
 }
 
 /// An append-only run log.
@@ -168,6 +173,10 @@ impl Timeline {
                     .num("solve_s", s.solve.as_secs_f64())
                     .val("predicted_c", num_or_null(s.predicted_c))
                     .val("metric", num_or_null(s.metric));
+                // pipelined runs only: overlapped master-side work
+                if s.overlap_ns > 0 {
+                    b = b.num("overlap_ns", s.overlap_ns as f64);
+                }
                 // tracing tail only on traced steps, so untraced dumps stay
                 // byte-identical to the pre-tracing schema
                 if !s.counters.is_empty() {
@@ -284,6 +293,7 @@ mod tests {
             rtt_p99_ms: f64::NAN,
             compute_p50_ms: f64::NAN,
             compute_p99_ms: f64::NAN,
+            overlap_ns: 0,
         }
     }
 
@@ -387,6 +397,22 @@ mod tests {
         // byte output) identical to pre-tracing runs
         assert!(steps[1].get("rtt_p50_ms").is_none());
         assert!(steps[1].get("counters").is_none());
+    }
+
+    #[test]
+    fn overlap_ns_surfaces_only_on_pipelined_steps() {
+        let mut t = Timeline::new();
+        let mut pipelined = rec(0, 10, 0.5);
+        pipelined.overlap_ns = 2_500_000;
+        t.push(pipelined);
+        t.push(rec(1, 10, 0.1)); // synchronous step: key absent entirely
+        let back = crate::util::json::Json::parse(&t.to_json().to_string()).unwrap();
+        let steps = back.get("timeline").unwrap().items().unwrap();
+        assert_eq!(steps[0].get_num("overlap_ns"), Some(2_500_000.0));
+        assert!(
+            steps[1].get("overlap_ns").is_none(),
+            "sync dumps must stay byte-identical to the pre-pipeline schema"
+        );
     }
 
     #[test]

@@ -16,7 +16,7 @@
 //! | `9` | `StorageReady` | worker → master | worker `u32`, resident_bytes `u64` |
 //! | `10` | `Work` (block) | master → worker | like tag 3 with `B u32` before `w`; `w` is `len·B` interleaved values |
 //! | `11` | `Report` (block) | worker → master | like tag 4 with `B u32` before the segments; segment values are `rows·B` interleaved |
-//! | `12` | `PlacementUpdate` | master → worker | seq `u64`, expect_rows `u64`, evict `u32` × {lo `u64`, hi `u64`} |
+//! | `12` | `PlacementUpdate` | master → worker | seq `u64`, expect_rows `u64`, evict `u32` × {lo `u64`, hi `u64`} \[, regenerate `u8`=1, gain `u32` × {lo `u64`, hi `u64`}, checksum `u32`\] |
 //! | `13` | `MigrateAck` | worker → master | worker `u32`, seq `u64`, ok `u8`, resident_bytes `u64` |
 //!
 //! `vec<f32>` is a `u32` element count followed by raw LE `f32`s; `str` is
@@ -178,6 +178,20 @@ pub struct PlacementUpdate {
     pub expect_rows: u64,
     /// Global row ranges to evict once the incoming rows are resident.
     pub evict: Vec<RowRange>,
+    /// Regenerate the incoming rows locally instead of streaming them
+    /// (optional v5 trailer; absent on the wire ⇒ `false`). Generator-
+    /// backed workloads carry their rows as a seed, so a migration does
+    /// not need to ship bytes at all: the gaining worker rematerializes
+    /// `gain` via [`crate::net::WorkloadSpec::materialize_shard`] and
+    /// verifies the result against `checksum`. Mutually exclusive with
+    /// `expect_rows > 0`.
+    pub regenerate: bool,
+    /// Global row ranges to rematerialize locally (`regenerate` only).
+    pub gain: Vec<RowRange>,
+    /// [`data_checksum`] digest over the regenerated rows' values in
+    /// `gain` order — the master computes it from its own copy, the
+    /// worker nacks on mismatch (`regenerate` only).
+    pub checksum: u32,
 }
 
 /// Every message that can travel on the wire.
@@ -434,6 +448,17 @@ pub fn encode(msg: &WireMsg) -> Vec<u8> {
             for r in &u.evict {
                 e.u64(r.lo as u64);
                 e.u64(r.hi as u64);
+            }
+            // optional v5 regenerate trailer — omitted entirely when off,
+            // so a stream-mode update stays byte-identical to wire v4
+            if u.regenerate {
+                e.u8(1);
+                e.u32(u.gain.len() as u32);
+                for r in &u.gain {
+                    e.u64(r.lo as u64);
+                    e.u64(r.hi as u64);
+                }
+                e.u32(u.checksum);
             }
             e.buf
         }
@@ -774,10 +799,31 @@ pub fn decode(payload: &[u8]) -> Result<WireMsg> {
             for _ in 0..n {
                 evict.push(dec_row_range(&mut d)?);
             }
+            // optional v5 regenerate trailer; absent on v4 frames. A
+            // partial trailer fails the first short read.
+            let (regenerate, gain, checksum) = if d.remaining() > 0 {
+                let flag = d.u8()?;
+                if flag != 1 {
+                    return Err(Error::wire(format!(
+                        "unknown placement-update trailer flag {flag}"
+                    )));
+                }
+                let n = d.list_len("gain range")?;
+                let mut gain = Vec::with_capacity(n);
+                for _ in 0..n {
+                    gain.push(dec_row_range(&mut d)?);
+                }
+                (true, gain, d.u32()?)
+            } else {
+                (false, Vec::new(), 0)
+            };
             WireMsg::PlacementUpdate(PlacementUpdate {
                 seq,
                 expect_rows,
                 evict,
+                regenerate,
+                gain,
+                checksum,
             })
         }
         TAG_MIGRATE_ACK => {
@@ -1093,12 +1139,18 @@ mod tests {
             seq: 42,
             expect_rows: 40,
             evict: vec![RowRange::new(10, 20), RowRange::new(30, 35)],
+            regenerate: false,
+            gain: vec![],
+            checksum: 0,
         });
         roundtrip(update.clone());
         roundtrip(WireMsg::PlacementUpdate(PlacementUpdate {
             seq: 0,
             expect_rows: 0,
             evict: vec![],
+            regenerate: false,
+            gain: vec![],
+            checksum: 0,
         }));
         roundtrip(WireMsg::MigrateAck {
             worker: 3,
@@ -1140,6 +1192,55 @@ mod tests {
         e.u64(1); // seq
         e.u8(7); // not 0/1
         e.u64(0); // resident
+        assert!(decode(&e.buf).is_err());
+    }
+
+    #[test]
+    fn placement_update_regenerate_trailer_roundtrips() {
+        let update = WireMsg::PlacementUpdate(PlacementUpdate {
+            seq: 9,
+            expect_rows: 0,
+            evict: vec![RowRange::new(0, 10)],
+            regenerate: true,
+            gain: vec![RowRange::new(20, 30), RowRange::new(40, 45)],
+            checksum: 0xDEAD_BEEF,
+        });
+        roundtrip(update.clone());
+
+        // the trailer is strictly append-only: without it the frame is
+        // byte-identical to a v4 capture of the same stream-mode update
+        let plain = WireMsg::PlacementUpdate(PlacementUpdate {
+            seq: 9,
+            expect_rows: 0,
+            evict: vec![RowRange::new(0, 10)],
+            regenerate: false,
+            gain: vec![],
+            checksum: 0,
+        });
+        let with = encode(&update);
+        let without = encode(&plain);
+        assert_eq!(with[..without.len()], without[..]);
+        assert!(with.len() > without.len());
+
+        // every truncation of the trailer is rejected, never misread
+        for cut in without.len() + 1..with.len() {
+            assert!(decode(&with[..cut]).is_err(), "prefix {cut} decoded");
+        }
+        // an unknown trailer flag is rejected (future-proofing, not skipped)
+        let mut bad = without.clone();
+        bad.push(2);
+        assert!(decode(&bad).is_err());
+
+        // an inverted gain range is rejected like an inverted evict range
+        let mut e = Enc::new(TAG_PLACEMENT_UPDATE);
+        e.u64(1); // seq
+        e.u64(0); // expect_rows
+        e.u32(0); // no evictions
+        e.u8(1); // regenerate
+        e.u32(1); // one gain range
+        e.u64(9); // lo
+        e.u64(2); // hi < lo
+        e.u32(0); // checksum
         assert!(decode(&e.buf).is_err());
     }
 

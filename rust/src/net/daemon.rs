@@ -27,7 +27,10 @@
 //! evicts named row ranges and/or absorbs master-streamed rows into the
 //! resident shard ([`crate::rebalance`] drives this when drift makes the
 //! placement stale), acknowledged with a `MigrateAck` carrying the new
-//! resident byte count.
+//! resident byte count. Generator-backed workloads migrate without row
+//! bytes on the wire at all (wire v5 `regenerate` trailer): the daemon
+//! rematerializes the gained ranges from the workload seed and verifies
+//! them against the master's FNV digest before touching its shard.
 
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -243,12 +246,29 @@ fn serve_session(stream: TcpStream, opts: &DaemonOpts) -> Result<()> {
         let period = Duration::from_millis(u64::from(hello.heartbeat_ms));
         let id = hello.worker;
         Some(std::thread::spawn(move || {
+            use crate::sched::{DeadlineKind, TimerWheel};
             let mut seq = 0u64;
+            // the beat rides the shared timer wheel: re-arming from the
+            // *previous deadline* (not from "after the send") keeps the
+            // cadence drift-free even when a write stalls on the socket
+            let mut wheel = TimerWheel::new();
+            wheel.set(DeadlineKind::Heartbeat, Instant::now() + period);
             while !stop2.load(Ordering::Relaxed) {
-                std::thread::sleep(period);
+                if let Some(wait) = wheel.wait_from(Instant::now()) {
+                    std::thread::sleep(wait);
+                }
                 if stop2.load(Ordering::Relaxed) {
                     break;
                 }
+                let now = Instant::now();
+                if !wheel.due(DeadlineKind::Heartbeat, now) {
+                    continue;
+                }
+                let at = wheel.get(DeadlineKind::Heartbeat).expect("armed above");
+                // skip ahead (instead of bursting) if a stalled write left
+                // the clock more than one whole period behind
+                let next = if now > at + period { now } else { at } + period;
+                wheel.set(DeadlineKind::Heartbeat, next);
                 seq += 1;
                 if codec::write_msg(&mut *lock(&w), &WireMsg::Heartbeat { worker: id, seq })
                     .is_err()
@@ -330,7 +350,12 @@ fn serve_session(stream: TcpStream, opts: &DaemonOpts) -> Result<()> {
                 // evict, then acknowledge the outcome — `ok = false` tells
                 // the master immediately (no ack-timeout burn) and
                 // guarantees no rows were lost
-                let ok = match apply_placement_update(&mut cfg, &mut reader, &update) {
+                let ok = match apply_placement_update(
+                    &mut cfg,
+                    &mut reader,
+                    &update,
+                    &hello.workload,
+                ) {
                     Ok(()) => {
                         crate::log_info!(
                             "worker daemon: placement update seq {} applied \
@@ -377,19 +402,50 @@ fn serve_session(stream: TcpStream, opts: &DaemonOpts) -> Result<()> {
 
 /// Apply one live-migration order ([`crate::net::codec::PlacementUpdate`]):
 /// absorb `expect_rows` incoming rows from checksummed `Data` frames (the
-/// same [`absorb_data_frames`] loop the streamed handshake uses), then
-/// evict the named global row ranges. Absorb-first matters: a mid-stream
-/// failure must leave the evicted rows untouched, so a nacked update
-/// really means "nothing was lost" — the transient cost is holding both
-/// copies until the stream completes. Chunk re-sends are idempotent
-/// ([`StoreHandle::insert_rows`]), so a retried move converges.
+/// same [`absorb_data_frames`] loop the streamed handshake uses) — or,
+/// for a `regenerate` order, rematerialize the gained ranges from the
+/// workload seed and verify them against the master's digest — then
+/// evict the named global row ranges. Gain-first matters: a mid-stream
+/// failure or a digest mismatch must leave the evicted rows untouched, so
+/// a nacked update really means "nothing was lost" — the transient cost
+/// is holding both copies until the gain completes. Chunk re-sends and
+/// re-regenerations are idempotent ([`StoreHandle::insert_rows`]), so a
+/// retried move converges.
 fn apply_placement_update(
     cfg: &mut WorkerConfig,
     reader: &mut TcpStream,
     update: &codec::PlacementUpdate,
+    workload: &crate::net::WorkloadSpec,
 ) -> Result<()> {
     let cols = cfg.storage.store.cols();
-    if update.expect_rows > 0 {
+    if update.regenerate {
+        if update.expect_rows > 0 {
+            return Err(Error::wire(format!(
+                "placement update seq {} both streams and regenerates rows",
+                update.seq
+            )));
+        }
+        // rematerialize from the seed — zero row bytes crossed the wire —
+        // and prove bit-identity to the master's copy before inserting
+        let shard = workload.materialize_shard(&update.gain)?;
+        let mut values = Vec::new();
+        for r in &update.gain {
+            values.extend_from_slice(shard.row_slice(*r)?);
+        }
+        if codec::data_checksum(&values) != update.checksum {
+            return Err(Error::wire(format!(
+                "regenerated rows fail the master's checksum (seq {})",
+                update.seq
+            )));
+        }
+        let store = &mut cfg.storage.store;
+        let mut off = 0usize;
+        for r in &update.gain {
+            let n = r.len() * cols;
+            store.insert_rows(*r, values[off..off + n].to_vec())?;
+            off += n;
+        }
+    } else if update.expect_rows > 0 {
         let store = &mut cfg.storage.store;
         let received =
             absorb_data_frames(reader, cols, |rows, values| store.insert_rows(rows, values))?;
@@ -729,6 +785,9 @@ mod tests {
                 seq: 1,
                 expect_rows: 8,
                 evict: vec![],
+                regenerate: false,
+                gain: vec![],
+                checksum: 0,
             }),
         )
         .unwrap();
@@ -770,6 +829,9 @@ mod tests {
                 seq: 2,
                 expect_rows: 0,
                 evict: vec![RowRange::new(0, 8)],
+                regenerate: false,
+                gain: vec![],
+                checksum: 0,
             }),
         )
         .unwrap();
@@ -844,6 +906,9 @@ mod tests {
                 seq: 9,
                 expect_rows: 4,
                 evict: vec![],
+                regenerate: false,
+                gain: vec![],
+                checksum: 0,
             }),
         )
         .unwrap();
@@ -866,6 +931,116 @@ mod tests {
             } => {
                 assert_eq!((seq, ok), (9, false));
                 assert_eq!(resident_bytes, 8 * 16 * 4, "storage must be untouched");
+            }
+            other => panic!("expected MigrateAck, got {other:?}"),
+        }
+        codec::write_msg(&mut &stream, &WireMsg::Shutdown).unwrap();
+        h.join().unwrap().unwrap();
+    }
+
+    #[test]
+    fn daemon_regenerates_migrated_rows_from_the_seed() {
+        use crate::net::PlacementUpdate;
+
+        let (addr, h) = spawn_daemon();
+        let stream = TcpStream::connect(addr).unwrap();
+        stream
+            .set_read_timeout(Some(Duration::from_secs(5)))
+            .unwrap();
+        // shard worker: stores sub-matrix 0 of G=2 (global rows 0..8)
+        let mut hello = test_hello(4);
+        hello.stored = vec![0];
+        codec::write_msg(&mut &stream, &WireMsg::Hello(hello)).unwrap();
+        match codec::read_msg(&mut &stream).unwrap() {
+            WireMsg::HelloAck(_) => {}
+            other => panic!("expected HelloAck, got {other:?}"),
+        }
+        assert_eq!(read_storage_ready(&stream), 8 * 16 * 4);
+
+        // gain sub-matrix 1 (rows 8..16) with ZERO Data frames: the daemon
+        // regenerates the rows from the workload seed and checks them
+        // against the digest of the master's copy
+        let spec = WorkloadSpec::RandomDense {
+            q: 16,
+            r: 16,
+            seed: 5,
+        };
+        let oracle = spec.materialize().unwrap();
+        codec::write_msg(
+            &mut &stream,
+            &WireMsg::PlacementUpdate(PlacementUpdate {
+                seq: 3,
+                expect_rows: 0,
+                evict: vec![],
+                regenerate: true,
+                gain: vec![RowRange::new(8, 16)],
+                checksum: codec::data_checksum(oracle.row_block(8, 16)),
+            }),
+        )
+        .unwrap();
+        match codec::read_msg(&mut &stream).unwrap() {
+            WireMsg::MigrateAck {
+                worker,
+                seq,
+                ok,
+                resident_bytes,
+            } => {
+                assert_eq!((worker, seq, ok), (4, 3, true));
+                assert_eq!(resident_bytes, 16 * 16 * 4);
+            }
+            other => panic!("expected MigrateAck, got {other:?}"),
+        }
+        // the regenerated rows really compute: an order over sub-matrix 1
+        {
+            use crate::linalg::Block;
+            use crate::optim::Task;
+            use crate::sched::protocol::WorkOrder;
+            codec::write_msg(
+                &mut &stream,
+                &WireMsg::Work(WorkOrder {
+                    step: 2,
+                    w: Arc::new(Block::single(vec![0.25f32; 16])),
+                    tasks: vec![Task {
+                        g: 1,
+                        rows: RowRange::new(0, 4),
+                    }],
+                    row_cost_ns: 0,
+                    straggle: None,
+                    trace: false,
+                }),
+            )
+            .unwrap();
+            match codec::read_msg(&mut &stream).unwrap() {
+                WireMsg::Report(r) => assert_eq!(r.segments.len(), 1),
+                other => panic!("expected Report, got {other:?}"),
+            }
+        }
+        // a wrong digest must nack and leave the shard untouched
+        codec::write_msg(
+            &mut &stream,
+            &WireMsg::PlacementUpdate(PlacementUpdate {
+                seq: 4,
+                expect_rows: 0,
+                evict: vec![RowRange::new(0, 8)],
+                regenerate: true,
+                gain: vec![RowRange::new(8, 16)],
+                checksum: 0xBAD_F00D,
+            }),
+        )
+        .unwrap();
+        match codec::read_msg(&mut &stream).unwrap() {
+            WireMsg::MigrateAck {
+                seq,
+                ok,
+                resident_bytes,
+                ..
+            } => {
+                assert_eq!((seq, ok), (4, false));
+                assert_eq!(
+                    resident_bytes,
+                    16 * 16 * 4,
+                    "nacked regenerate must not evict"
+                );
             }
             other => panic!("expected MigrateAck, got {other:?}"),
         }

@@ -31,7 +31,7 @@
 //! | 9 | `StorageReady` (id, resident_bytes) | worker → master |
 //! | 10 | `Work` block variant: tag 3 + `B`, iterate is `len·B` interleaved | master → worker |
 //! | 11 | `Report` block variant: tag 4 + `B`, segment values are `rows·B` | worker → master |
-//! | 12 | `PlacementUpdate` (seq, expect_rows, evict ranges) | master → worker |
+//! | 12 | `PlacementUpdate` (seq, expect_rows, evict ranges \[+ regenerate gain ranges & checksum, v5\]) | master → worker |
 //! | 13 | `MigrateAck` (id, seq, ok, resident_bytes) | worker → master |
 //!
 //! `B = 1` traffic stays on tags 3/4 and encodes byte-identically to wire
@@ -90,6 +90,19 @@
 //! count mid-transition. [`LocalTransport`] performs the same swap as a
 //! zero-copy `Arc` handoff. When no migration tags are sent, v4 traffic
 //! encodes byte-identically to v3.
+//!
+//! Two refinements ride on top. Generator-backed workloads migrate with
+//! **zero row bytes on the wire**: the `PlacementUpdate` carries a
+//! `regenerate` trailer (gain ranges + FNV digest) and the gaining daemon
+//! rematerializes the rows from the workload seed, verifying them against
+//! the master's digest before touching its shard. And under `--pipeline`
+//! the harness uses [`Transport::migrate_async`] /
+//! [`Transport::poll_migrations`] instead of the blocking
+//! [`Transport::migrate`]: the TCP transport runs the gain on a dedicated
+//! transfer-lane thread so migration bytes stream concurrently with
+//! worker compute, and the eviction half is deferred to the harvest point
+//! (between steps, when no orders are in flight against the old
+//! placement) — still make-before-break.
 //!
 //! ## Tracing (wire v5)
 //!
@@ -195,6 +208,24 @@ impl Transport for AnyTransport {
         match self {
             AnyTransport::Local(t) => t.migrate(order, sub_ranges),
             AnyTransport::Tcp(t) => t.migrate(order, sub_ranges),
+        }
+    }
+
+    fn migrate_async(
+        &self,
+        order: &transport::MigrationOrder,
+        sub_ranges: &[crate::linalg::partition::RowRange],
+    ) -> Result<bool> {
+        match self {
+            AnyTransport::Local(t) => t.migrate_async(order, sub_ranges),
+            AnyTransport::Tcp(t) => t.migrate_async(order, sub_ranges),
+        }
+    }
+
+    fn poll_migrations(&self) -> Vec<(u64, Result<()>)> {
+        match self {
+            AnyTransport::Local(t) => t.poll_migrations(),
+            AnyTransport::Tcp(t) => t.poll_migrations(),
         }
     }
 

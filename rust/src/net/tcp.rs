@@ -21,6 +21,16 @@
 //! dead peers with the same `Hello` (and re-streams their rows when the
 //! workload is streamed), so a worker daemon that came back rejoins the
 //! availability set at the next step.
+//!
+//! Live migration runs either synchronously in the inter-step window
+//! ([`Transport::migrate`]) or on a dedicated **transfer lane**
+//! ([`Transport::migrate_async`] / [`Transport::poll_migrations`]): a
+//! single thread that streams replica moves while the workers compute,
+//! deferring each eviction until the caller harvests the completed gain —
+//! the pipelined harness's mode. Generator-backed workloads ship no row
+//! bytes at all on migration: the gaining daemon rematerializes the rows
+//! from the workload seed and verifies them against the master's FNV
+//! digest (`PlacementUpdate::regenerate`).
 
 use std::net::{Shutdown, SocketAddr, TcpStream, ToSocketAddrs};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -33,10 +43,11 @@ use crate::error::{Error, Result};
 use crate::linalg::partition::RowRange;
 use crate::linalg::Matrix;
 use crate::sched::protocol::WorkOrder;
+use crate::sched::timer::{DeadlineKind, TimerWheel};
 
 use super::codec::{self, DataFrame, Hello, PlacementUpdate, WireMsg, WIRE_VERSION};
 use super::lock;
-use super::transport::{MigrationOrder, Transport, TransportEvent};
+use super::transport::{MigrationOrder, Transport, TransportEvent, WorkloadSpec};
 
 /// Default worker → master heartbeat period.
 pub const DEFAULT_HEARTBEAT_MS: u32 = 500;
@@ -166,6 +177,35 @@ impl Peer {
 /// `(worker, seq, ok, resident_bytes)`.
 type MigrateAckEvent = (usize, u64, bool, u64);
 
+/// The ack receiver, shared between the synchronous [`Transport::migrate`]
+/// path and the transfer-lane thread — only one of the two ever consumes
+/// it in a given run mode, but both need to own a handle.
+type SharedAcks = Arc<Mutex<Receiver<MigrateAckEvent>>>;
+
+/// One unit of work on the transfer lane. Jobs execute strictly in FIFO
+/// order on a single thread, so an eviction enqueued before a later
+/// re-gain of the same sub-matrix can never land after it.
+enum LaneJob {
+    /// Make-phase: announce/stream (or regenerate) the rows on the gaining
+    /// worker and wait for its ack. Completion lands in the `done` list.
+    Gain(MigrationOrder, Vec<RowRange>),
+    /// Break-phase: evict the losing worker's copy (failures only logged —
+    /// an unreaped extra replica is harmless and shed at re-admission).
+    Evict(MigrationOrder, Vec<RowRange>),
+}
+
+/// Completed gains awaiting harvest by [`Transport::poll_migrations`].
+type LaneDone = Arc<Mutex<Vec<(MigrationOrder, Vec<RowRange>, Result<()>)>>>;
+
+/// Dedicated migration thread ([`Transport::migrate_async`]): streams
+/// replica moves concurrently with compute instead of stalling the
+/// master's step loop in the inter-step window.
+struct TransferLane {
+    jobs: Sender<LaneJob>,
+    done: LaneDone,
+    handle: JoinHandle<()>,
+}
+
 /// Master ↔ workers over length-prefixed TCP frames.
 pub struct TcpTransport {
     peers: Vec<Arc<Peer>>,
@@ -175,13 +215,16 @@ pub struct TcpTransport {
     event_tx: Sender<TransportEvent>,
     /// `MigrateAck`s travel on their own channel so waiting for one never
     /// consumes (or reorders) the master's step events.
-    acks: Receiver<MigrateAckEvent>,
+    acks: SharedAcks,
     ack_tx: Sender<MigrateAckEvent>,
     handles: Mutex<Vec<JoinHandle<()>>>,
     opts: TcpOptions,
     /// Master-side data matrix for streamed workloads and live migration
     /// (re-used when a re-admitted worker needs its rows streamed again).
     data: Option<Arc<Matrix>>,
+    /// Transfer lane, spawned on the first [`Transport::migrate_async`]
+    /// call (a synchronous-only run never pays for the thread).
+    lane: Mutex<Option<TransferLane>>,
 }
 
 /// Stream a worker's placed rows as chunked, checksummed `Data` frames.
@@ -412,11 +455,12 @@ impl TcpTransport {
             peers,
             events: rx,
             event_tx: tx,
-            acks: ack_rx,
+            acks: Arc::new(Mutex::new(ack_rx)),
             ack_tx,
             handles: Mutex::new(handles),
             opts,
             data,
+            lane: Mutex::new(None),
         })
     }
 
@@ -429,40 +473,6 @@ impl TcpTransport {
             p.alive.store(false, Ordering::Relaxed);
             let s = lock(&p.writer);
             let _ = s.shutdown(Shutdown::Both);
-        }
-    }
-
-    /// Wait for the `MigrateAck` matching `(worker, seq)`; stale acks from
-    /// abandoned attempts are discarded. A worker-side rejection
-    /// (`ok = false`) fails immediately — no timeout burn. Returns the
-    /// acked resident bytes.
-    fn wait_migrate_ack(&self, worker: usize, seq: u64) -> Result<u64> {
-        let deadline = Instant::now() + MIGRATE_ACK_TIMEOUT;
-        loop {
-            let now = Instant::now();
-            if now >= deadline {
-                return Err(Error::Cluster(format!(
-                    "worker {worker}: migration ack timeout (seq {seq})"
-                )));
-            }
-            match self.acks.recv_timeout(deadline - now) {
-                Ok((w, s, true, resident)) if w == worker && s == seq => {
-                    return Ok(resident);
-                }
-                Ok((w, s, false, _)) if w == worker && s == seq => {
-                    return Err(Error::Cluster(format!(
-                        "worker {worker} rejected the placement update (seq {seq})"
-                    )));
-                }
-                Ok((w, s, _, _)) => {
-                    crate::log_debug!("stale migrate ack from worker {w} (seq {s}), dropped");
-                }
-                Err(_) => {
-                    return Err(Error::Cluster(format!(
-                        "worker {worker}: migration ack timeout (seq {seq})"
-                    )));
-                }
-            }
         }
     }
 
@@ -484,6 +494,13 @@ impl TcpTransport {
     }
 
     fn halt(&mut self) {
+        // stop the transfer lane first: its jobs write to the same peer
+        // sockets the shutdown below severs
+        if let Some(lane) = lock(&self.lane).take() {
+            let TransferLane { jobs, done: _, handle } = lane;
+            drop(jobs); // lane thread exits at the next recv
+            let _ = handle.join();
+        }
         for p in &self.peers {
             if p.alive.swap(false, Ordering::Relaxed) {
                 let mut s = lock(&p.writer);
@@ -547,6 +564,209 @@ fn update_recipe(peer: &Peer, g: usize, gained: bool, sub_ranges: &[RowRange]) {
     }
     cfg.hello.stored = stored;
     peer.recipe_touched.store(true, Ordering::Relaxed);
+}
+
+/// Wait for the `MigrateAck` matching `(worker, seq)`; stale acks from
+/// abandoned attempts are discarded. A worker-side rejection (`ok =
+/// false`) fails immediately — no timeout burn. The wait is bounded by
+/// the [`TimerWheel`]'s `MigrateAck` slot. Returns the acked resident
+/// bytes.
+fn wait_migrate_ack(
+    acks: &Mutex<Receiver<MigrateAckEvent>>,
+    worker: usize,
+    seq: u64,
+) -> Result<u64> {
+    let mut wheel = TimerWheel::new();
+    wheel.set(DeadlineKind::MigrateAck, Instant::now() + MIGRATE_ACK_TIMEOUT);
+    let rx = lock(acks);
+    loop {
+        let now = Instant::now();
+        if wheel.due(DeadlineKind::MigrateAck, now) {
+            return Err(Error::Cluster(format!(
+                "worker {worker}: migration ack timeout (seq {seq})"
+            )));
+        }
+        let wait = wheel.wait_from(now).unwrap_or(Duration::from_millis(1));
+        match rx.recv_timeout(wait) {
+            Ok((w, s, true, resident)) if w == worker && s == seq => {
+                return Ok(resident);
+            }
+            Ok((w, s, false, _)) if w == worker && s == seq => {
+                return Err(Error::Cluster(format!(
+                    "worker {worker} rejected the placement update (seq {seq})"
+                )));
+            }
+            Ok((w, s, _, _)) => {
+                crate::log_debug!("stale migrate ack from worker {w} (seq {s}), dropped");
+            }
+            Err(mpsc::RecvTimeoutError::Timeout) => {}
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                return Err(Error::Cluster(format!(
+                    "worker {worker}: migration ack channel closed (seq {seq})"
+                )));
+            }
+        }
+    }
+}
+
+/// FNV digest of the rows a regenerate-mode update asks the gaining
+/// worker to rematerialize: computed from the master's attached matrix
+/// when one is present, else regenerated from the workload spec — bit-
+/// identical by the generators' row-seeded construction.
+fn regen_checksum(
+    data: Option<&Matrix>,
+    workload: &WorkloadSpec,
+    rows: RowRange,
+) -> Result<u32> {
+    if let Some(m) = data {
+        return Ok(codec::data_checksum(m.try_row_block(rows.lo, rows.hi)?));
+    }
+    let shard = workload.materialize_shard(&[rows])?;
+    Ok(codec::data_checksum(shard.row_slice(rows)?))
+}
+
+/// Make-phase of one replica move: put the rows on the gaining worker —
+/// streamed as chunked FNV-checksummed `Data` frames, or, for generator-
+/// backed workloads, as a `regenerate` order that ships no row bytes at
+/// all (just the ranges and a digest; the daemon rematerializes from the
+/// seed) — wait for its `MigrateAck`, and fold the gain into the peer's
+/// re-admission recipe.
+fn execute_gain(
+    peers: &[Arc<Peer>],
+    data: Option<&Matrix>,
+    acks: &Mutex<Receiver<MigrateAckEvent>>,
+    order: &MigrationOrder,
+    sub_ranges: &[RowRange],
+) -> Result<()> {
+    let to = peers
+        .get(order.to)
+        .ok_or_else(|| Error::Cluster(format!("no worker {}", order.to)))?;
+    if !to.alive.load(Ordering::Relaxed) {
+        return Err(Error::Cluster(format!(
+            "worker {} is disconnected",
+            order.to
+        )));
+    }
+    let workload = lock(&to.cfg).hello.workload.clone();
+    let regenerate = !workload.is_streamed();
+    let stream_src = if regenerate {
+        None
+    } else {
+        Some(data.ok_or_else(|| {
+            Error::Config(
+                "live migration of a streamed workload needs the master-side \
+                 data matrix (TcpTransport::connect_with_data)"
+                    .into(),
+            )
+        })?)
+    };
+    let update = if regenerate {
+        PlacementUpdate {
+            seq: order.seq,
+            expect_rows: 0,
+            evict: vec![],
+            regenerate: true,
+            gain: vec![order.rows],
+            checksum: regen_checksum(data, &workload, order.rows)?,
+        }
+    } else {
+        PlacementUpdate {
+            seq: order.seq,
+            expect_rows: order.rows.len() as u64,
+            evict: vec![],
+            regenerate: false,
+            gain: vec![],
+            checksum: 0,
+        }
+    };
+    // an abandoned earlier attempt may have left stale acks queued
+    while lock(acks).try_recv().is_ok() {}
+
+    {
+        let mut s = lock(&to.writer);
+        let sent: Result<()> = codec::write_msg(&mut *s, &WireMsg::PlacementUpdate(update))
+            .map(|_| ())
+            .and_then(|()| match stream_src {
+                Some(m) => stream_rows(&s, m, &[order.rows]),
+                None => Ok(()),
+            });
+        sent.map_err(|e| {
+            to.alive.store(false, Ordering::Relaxed);
+            Error::Cluster(format!("migrate to worker {}: {e}", order.to))
+        })?;
+    }
+    wait_migrate_ack(acks, order.to, order.seq)?;
+    update_recipe(to, order.g, true, sub_ranges);
+    Ok(())
+}
+
+/// Break-phase: the new copy is resident and acknowledged, so evicting
+/// the loser's copy can no longer violate the replica requirement. A
+/// failed eviction leaves a harmless extra copy (logged; shed at
+/// re-admission via the updated recipe).
+fn execute_evict(
+    peers: &[Arc<Peer>],
+    acks: &Mutex<Receiver<MigrateAckEvent>>,
+    order: &MigrationOrder,
+    sub_ranges: &[RowRange],
+) {
+    let Some(from) = peers.get(order.from) else {
+        return;
+    };
+    update_recipe(from, order.g, false, sub_ranges);
+    if from.alive.load(Ordering::Relaxed) {
+        let sent = {
+            let mut s = lock(&from.writer);
+            codec::write_msg(
+                &mut *s,
+                &WireMsg::PlacementUpdate(PlacementUpdate {
+                    seq: order.seq,
+                    expect_rows: 0,
+                    evict: vec![order.rows],
+                    regenerate: false,
+                    gain: vec![],
+                    checksum: 0,
+                }),
+            )
+        };
+        let acked = sent.and_then(|_| wait_migrate_ack(acks, order.from, order.seq));
+        if let Err(e) = acked {
+            crate::log_warn!(
+                "migrate: eviction of sub-matrix {} on worker {} failed ({e}); \
+                 an extra replica stays resident until re-admission",
+                order.g,
+                order.from
+            );
+        }
+    } else {
+        crate::log_debug!(
+            "migrate: worker {} is down; its copy of sub-matrix {} is \
+             shed at re-admission via the updated recipe",
+            order.from,
+            order.g
+        );
+    }
+}
+
+/// Transfer-lane thread: executes queued migration jobs strictly in FIFO
+/// order, so the bytes of a replica move stream while workers compute.
+/// Exits when the job sender is dropped (transport shutdown).
+fn lane_loop(
+    jobs: Receiver<LaneJob>,
+    peers: Vec<Arc<Peer>>,
+    data: Option<Arc<Matrix>>,
+    acks: SharedAcks,
+    done: LaneDone,
+) {
+    while let Ok(job) = jobs.recv() {
+        match job {
+            LaneJob::Gain(order, subs) => {
+                let res = execute_gain(&peers, data.as_deref(), &acks, &order, &subs);
+                lock(&done).push((order, subs, res));
+            }
+            LaneJob::Evict(order, subs) => execute_evict(&peers, &acks, &order, &subs),
+        }
+    }
 }
 
 fn reader_loop(
@@ -736,95 +956,86 @@ impl Transport for TcpTransport {
         rejoined
     }
 
-    /// Execute one replica move over the wire (protocol v4): announce the
-    /// incoming rows to the gaining worker with `PlacementUpdate`, stream
-    /// them through the same chunked FNV-checksummed `Data` machinery the
-    /// streamed handshake uses, wait for its `MigrateAck`, and only then
-    /// evict the rows from the losing worker — make-before-break, so the
-    /// replica never has fewer live copies than before the move. A failed
-    /// eviction (worker died mid-move) leaves a harmless extra copy; a
-    /// failed or unacknowledged transfer fails the move with nothing
-    /// evicted, so the caller can retry or abandon it.
+    /// Execute one replica move over the wire, blocking: announce the
+    /// incoming rows to the gaining worker with `PlacementUpdate` —
+    /// streamed through the same chunked FNV-checksummed `Data` machinery
+    /// the streamed handshake uses, or rematerialized on the worker from
+    /// the workload seed (`regenerate`, zero row bytes on the wire) —
+    /// wait for its `MigrateAck`, and only then evict the rows from the
+    /// losing worker — make-before-break, so the replica never has fewer
+    /// live copies than before the move. A failed eviction (worker died
+    /// mid-move) leaves a harmless extra copy; a failed or unacknowledged
+    /// transfer fails the move with nothing evicted, so the caller can
+    /// retry or abandon it.
     fn migrate(&self, order: &MigrationOrder, sub_ranges: &[RowRange]) -> Result<()> {
         if order.rows.is_empty() {
             return Ok(());
         }
-        let data = self.data.as_ref().ok_or_else(|| {
-            Error::Config(
-                "live migration needs the master-side data matrix \
-                 (TcpTransport::connect_with_data)"
-                    .into(),
-            )
-        })?;
-        let to = self
-            .peers
-            .get(order.to)
-            .ok_or_else(|| Error::Cluster(format!("no worker {}", order.to)))?;
-        if !to.alive.load(Ordering::Relaxed) {
-            return Err(Error::Cluster(format!(
-                "worker {} is disconnected",
-                order.to
-            )));
-        }
-        // an abandoned earlier attempt may have left stale acks queued
-        while self.acks.try_recv().is_ok() {}
-
-        // -- make: announce + stream the rows to the gaining worker --
-        {
-            let mut s = lock(&to.writer);
-            codec::write_msg(
-                &mut *s,
-                &WireMsg::PlacementUpdate(PlacementUpdate {
-                    seq: order.seq,
-                    expect_rows: order.rows.len() as u64,
-                    evict: vec![],
-                }),
-            )
-            .and_then(|_| stream_rows(&s, data, &[order.rows]))
-            .map_err(|e| {
-                to.alive.store(false, Ordering::Relaxed);
-                Error::Cluster(format!("migrate to worker {}: {e}", order.to))
-            })?;
-        }
-        self.wait_migrate_ack(order.to, order.seq)?;
-        update_recipe(to, order.g, true, sub_ranges);
-
+        // -- make: put the rows on the gaining worker (stream or
+        // regenerate) and wait for its ack --
+        execute_gain(&self.peers, self.data.as_deref(), &self.acks, order, sub_ranges)?;
         // -- break: the new copy is resident and acknowledged; evicting
         // the old one can no longer violate the replica requirement --
-        if let Some(from) = self.peers.get(order.from) {
-            update_recipe(from, order.g, false, sub_ranges);
-            if from.alive.load(Ordering::Relaxed) {
-                let sent = {
-                    let mut s = lock(&from.writer);
-                    codec::write_msg(
-                        &mut *s,
-                        &WireMsg::PlacementUpdate(PlacementUpdate {
-                            seq: order.seq,
-                            expect_rows: 0,
-                            evict: vec![order.rows],
-                        }),
-                    )
-                };
-                let acked =
-                    sent.and_then(|_| self.wait_migrate_ack(order.from, order.seq));
-                if let Err(e) = acked {
-                    crate::log_warn!(
-                        "migrate: eviction of sub-matrix {} on worker {} failed ({e}); \
-                         an extra replica stays resident until re-admission",
-                        order.g,
-                        order.from
-                    );
-                }
-            } else {
-                crate::log_debug!(
-                    "migrate: worker {} is down; its copy of sub-matrix {} is \
-                     shed at re-admission via the updated recipe",
-                    order.from,
-                    order.g
-                );
-            }
-        }
+        execute_evict(&self.peers, &self.acks, order, sub_ranges);
         Ok(())
+    }
+
+    /// Queue one replica move on the transfer lane: the make-phase runs on
+    /// a dedicated thread, so the migration bytes stream while workers
+    /// compute. The break-phase (eviction) is deferred until the caller
+    /// harvests the completed gain via [`Transport::poll_migrations`] —
+    /// the harvest point is where the caller swaps its effective
+    /// placement, so the eviction order hits the losing worker's socket
+    /// strictly after every work order planned against the old placement
+    /// (the daemon applies messages in order).
+    fn migrate_async(&self, order: &MigrationOrder, sub_ranges: &[RowRange]) -> Result<bool> {
+        if order.rows.is_empty() {
+            return Ok(true);
+        }
+        let mut guard = lock(&self.lane);
+        if guard.is_none() {
+            let (jobs_tx, jobs_rx) = mpsc::channel::<LaneJob>();
+            let done: LaneDone = Arc::default();
+            let peers = self.peers.clone();
+            let data = self.data.clone();
+            let acks = Arc::clone(&self.acks);
+            let done2 = Arc::clone(&done);
+            let handle = std::thread::Builder::new()
+                .name("usec-net-lane".into())
+                .spawn(move || lane_loop(jobs_rx, peers, data, acks, done2))
+                .map_err(|e| Error::Cluster(format!("spawn transfer lane: {e}")))?;
+            *guard = Some(TransferLane {
+                jobs: jobs_tx,
+                done,
+                handle,
+            });
+        }
+        let lane = guard.as_ref().expect("lane installed above");
+        lane.jobs
+            .send(LaneJob::Gain(order.clone(), sub_ranges.to_vec()))
+            .map_err(|_| Error::Cluster("transfer lane is gone".into()))?;
+        Ok(false)
+    }
+
+    /// Harvest completed transfer-lane gains. Each successful gain's
+    /// eviction is enqueued here — after the harvest, never before — so
+    /// make-before-break holds and the break-phase orders serialize
+    /// behind the caller's placement swap (see
+    /// [`TcpTransport::migrate_async`]).
+    fn poll_migrations(&self) -> Vec<(u64, Result<()>)> {
+        let guard = lock(&self.lane);
+        let Some(lane) = guard.as_ref() else {
+            return Vec::new();
+        };
+        let finished: Vec<_> = lock(&lane.done).drain(..).collect();
+        let mut out = Vec::with_capacity(finished.len());
+        for (order, subs, res) in finished {
+            if res.is_ok() {
+                let _ = lane.jobs.send(LaneJob::Evict(order.clone(), subs));
+            }
+            out.push((order.seq, res));
+        }
+        out
     }
 
     fn resident_bytes(&self) -> Vec<u64> {

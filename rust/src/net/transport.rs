@@ -109,6 +109,29 @@ pub trait Transport {
         )))
     }
 
+    /// Start one replica move on the transport's transfer lane, if it has
+    /// one, so the migration bytes stream **concurrently with compute**
+    /// (the pipelined harness). Returns `Ok(true)` when the move completed
+    /// inline (no lane — the default falls back to the blocking
+    /// [`Transport::migrate`]), `Ok(false)` when it was queued; a queued
+    /// move's completion surfaces later via
+    /// [`Transport::poll_migrations`] keyed by `order.seq`. Make-before-
+    /// break is preserved either way: the eviction of the losing replica
+    /// is not issued until the gain is acknowledged, and the *caller*
+    /// keeps the old replica in its effective placement until the move
+    /// completes.
+    fn migrate_async(&self, order: &MigrationOrder, sub_ranges: &[RowRange]) -> Result<bool> {
+        self.migrate(order, sub_ranges).map(|()| true)
+    }
+
+    /// Harvest completed transfer-lane moves: `(seq, result)` per
+    /// migration started by [`Transport::migrate_async`] that has since
+    /// finished (acked + evicted) or failed. Transports without a lane
+    /// have nothing to report.
+    fn poll_migrations(&self) -> Vec<(u64, Result<()>)> {
+        Vec::new()
+    }
+
     /// Actual matrix payload bytes resident per worker, when the
     /// transport knows them (local mode: the shared full-matrix view each
     /// worker reads; TCP mode: what each daemon reported after

@@ -32,9 +32,9 @@ use crate::error::{Error, Result};
 use crate::obs::OrderBreakdown;
 use crate::util::json::{Json, ObjBuilder};
 
-/// The journal's event vocabulary. `Step`, `Solve`, `Order`, `Recovery`
-/// are spans (carry `dur_ns`); `Dispatch`, `Migration`, `HeartbeatLapse`
-/// are point events.
+/// The journal's event vocabulary. `Step`, `Solve`, `Order`, `Recovery`,
+/// `Combine` are spans (carry `dur_ns`); `Dispatch`, `Migration`,
+/// `HeartbeatLapse` are point events.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum EventKind {
     /// One elastic step, dispatch through combine (master side).
@@ -52,10 +52,14 @@ pub enum EventKind {
     Migration,
     /// A worker's heartbeat went silent past the overdue threshold.
     HeartbeatLapse,
+    /// Master-side combine/finish work for a step — under `--pipeline`
+    /// this span overlaps the *next* step's worker compute, which is what
+    /// the Chrome export makes visible.
+    Combine,
 }
 
 impl EventKind {
-    pub const ALL: [EventKind; 7] = [
+    pub const ALL: [EventKind; 8] = [
         EventKind::Step,
         EventKind::Solve,
         EventKind::Dispatch,
@@ -63,6 +67,7 @@ impl EventKind {
         EventKind::Recovery,
         EventKind::Migration,
         EventKind::HeartbeatLapse,
+        EventKind::Combine,
     ];
 
     /// Stable wire name, used in the JSONL `kind` field.
@@ -75,6 +80,7 @@ impl EventKind {
             EventKind::Recovery => "recovery",
             EventKind::Migration => "migration",
             EventKind::HeartbeatLapse => "heartbeat_lapse",
+            EventKind::Combine => "combine",
         }
     }
 
@@ -337,7 +343,8 @@ mod tests {
                 "order",
                 "recovery",
                 "migration",
-                "heartbeat_lapse"
+                "heartbeat_lapse",
+                "combine"
             ]
         );
         for k in EventKind::ALL {

@@ -8,7 +8,7 @@
 //!
 //! * [`journal`] — a low-overhead structured event journal: spans and
 //!   point events (`step`, `solve`, `dispatch`, `order`, `recovery`,
-//!   `migration`, `heartbeat_lapse`) with monotonic timestamps and
+//!   `migration`, `heartbeat_lapse`, `combine`) with monotonic timestamps and
 //!   step/worker/order causal ids, written as JSONL via `--trace-out`.
 //!   The [`Recorder`] is a cloned channel sender — emitting an event is
 //!   one lock-free enqueue; a dedicated writer thread does the I/O, and

@@ -13,6 +13,13 @@
 //! (unreachable peer, lost ack) is retried at the head of the plan; after
 //! [`MAX_STALLS`] consecutive stalled windows the plan is abandoned and
 //! the monitor re-evaluates under whatever the cluster has become.
+//!
+//! The pipelined harness uses the split [`Rebalancer::tick_async`] /
+//! [`Rebalancer::harvest`] pair instead: dispatch puts the budgeted
+//! window on the transport's transfer lane (bytes stream concurrently
+//! with worker compute) and the replica swap waits for harvest at the
+//! next inter-step safe point — same budget metering, same
+//! make-before-break invariant.
 
 use crate::error::Result;
 use crate::linalg::partition::RowRange;
@@ -65,6 +72,9 @@ pub struct Rebalancer {
     plan_times: (f64, f64),
     stalls: u32,
     seq: u64,
+    /// Moves handed to [`Transport::migrate_async`] whose completion the
+    /// transfer lane has not reported yet (keyed by migration seq).
+    in_flight: Vec<(u64, ReplicaMove)>,
 }
 
 impl Rebalancer {
@@ -87,12 +97,14 @@ impl Rebalancer {
             plan_times: (f64::NAN, f64::NAN),
             stalls: 0,
             seq: 0,
+            in_flight: Vec::new(),
         })
     }
 
-    /// Whether a migration plan is still executing.
+    /// Whether a migration plan is still executing (queued or on the
+    /// transfer lane).
     pub fn in_transition(&self) -> bool {
-        !self.pending.is_empty()
+        !self.pending.is_empty() || !self.in_flight.is_empty()
     }
 
     /// The inter-step hook: check for drift (only when no plan is in
@@ -210,6 +222,179 @@ impl Rebalancer {
             self.stalls = 0;
         }
         Ok((current, records))
+    }
+
+    /// Non-blocking variant of [`Rebalancer::tick`] for the pipelined
+    /// harness: dispatches up to one byte-budget of moves through
+    /// [`Transport::migrate_async`] and returns without waiting. A move
+    /// the transport completed inline swaps its replica immediately (the
+    /// in-process transports behave exactly like the synchronous tick);
+    /// a move accepted onto a transfer lane stays pending until
+    /// [`Rebalancer::harvest`] matches its completion. While any move is
+    /// on the lane no new batch is dispatched and the drift monitor does
+    /// not re-fire — one budgeted window at a time, same metering as the
+    /// synchronous path.
+    pub fn tick_async<T: Transport + ?Sized>(
+        &mut self,
+        step: usize,
+        transport: &T,
+        placement: &Placement,
+        avail: &[usize],
+        speeds: &[f64],
+    ) -> Result<(Placement, Vec<MigrationRecord>)> {
+        let mut current = placement.clone();
+        if !self.in_flight.is_empty() {
+            return Ok((current, Vec::new()));
+        }
+        if self.pending.is_empty() {
+            if let Some(p) =
+                self.monitor
+                    .check(&current, avail, speeds, &self.params, &self.sub_ranges)?
+            {
+                crate::log_info!(
+                    "step {step}: placement drift {:.1}% (expected time {:.4} -> {:.4}, \
+                     ~{} assignment rows churn); planning migration",
+                    p.regret * 100.0,
+                    p.current_time,
+                    p.proposed_time,
+                    p.transition_rows
+                );
+                self.pending =
+                    MigrationPlan::diff(&current, &p.placement, &self.sub_ranges, self.cols)?;
+                let samples = vec![speeds.to_vec()];
+                let params = &self.params;
+                self.pending.reorder_by(|mv| {
+                    move_benefit_per_byte(&current, mv, p.current_time, avail, &samples, params)
+                });
+                self.plan_times = (p.current_time, p.proposed_time);
+                self.stalls = 0;
+            }
+        }
+        let mut records = Vec::new();
+        let mut batch: std::collections::VecDeque<_> =
+            self.pending.take_batch(self.cfg.budget_bytes).into();
+        while let Some(mv) = batch.pop_front() {
+            self.seq += 1;
+            let order = MigrationOrder {
+                seq: self.seq,
+                g: mv.g,
+                from: mv.from,
+                to: mv.to,
+                rows: mv.rows,
+            };
+            let result = if avail.contains(&mv.to) {
+                transport.migrate_async(&order, &self.sub_ranges)
+            } else {
+                Err(crate::error::Error::Cluster(format!(
+                    "gaining worker {} is not in the availability set",
+                    mv.to
+                )))
+            };
+            match result {
+                Ok(true) => {
+                    current = apply_move(&current, &mv)?;
+                    records.push(self.record(&mv));
+                }
+                Ok(false) => {
+                    self.in_flight.push((order.seq, mv));
+                }
+                Err(e) => {
+                    self.stall(step, mv, &mut batch, &e);
+                    break; // don't hammer a struggling cluster this window
+                }
+            }
+        }
+        if !records.is_empty() {
+            self.stalls = 0;
+        }
+        Ok((current, records))
+    }
+
+    /// Match transfer-lane completions ([`Transport::poll_migrations`]) to
+    /// their in-flight moves. The pipelined harness calls this at its
+    /// safe point — after collecting a step and before dispatching the
+    /// next, when no orders are outstanding against the old placement —
+    /// so the replica swap (and the eviction the transport enqueues
+    /// behind a completed gain) never races an order that still expects
+    /// the old layout. Failed moves requeue at the head of the plan with
+    /// the same stall accounting as the synchronous tick.
+    pub fn harvest<T: Transport + ?Sized>(
+        &mut self,
+        step: usize,
+        transport: &T,
+        placement: &Placement,
+    ) -> Result<(Placement, Vec<MigrationRecord>)> {
+        if self.in_flight.is_empty() {
+            return Ok((placement.clone(), Vec::new()));
+        }
+        let mut current = placement.clone();
+        let mut records = Vec::new();
+        for (seq, res) in transport.poll_migrations() {
+            let Some(pos) = self.in_flight.iter().position(|(s, _)| *s == seq) else {
+                crate::log_warn!("step {step}: unmatched migration completion (seq {seq})");
+                continue;
+            };
+            let (_, mv) = self.in_flight.remove(pos);
+            match res {
+                Ok(()) => {
+                    current = apply_move(&current, &mv)?;
+                    records.push(self.record(&mv));
+                }
+                Err(e) => {
+                    let mut empty = std::collections::VecDeque::new();
+                    self.stall(step, mv, &mut empty, &e);
+                }
+            }
+        }
+        if !records.is_empty() {
+            self.stalls = 0;
+        }
+        Ok((current, records))
+    }
+
+    fn record(&self, mv: &ReplicaMove) -> MigrationRecord {
+        MigrationRecord {
+            g: mv.g,
+            from: mv.from,
+            to: mv.to,
+            rows: mv.rows.len(),
+            bytes: mv.bytes,
+            expected_before: self.plan_times.0,
+            expected_after: self.plan_times.1,
+        }
+    }
+
+    /// Shared failure path: count the stall, abandon the plan after
+    /// [`MAX_STALLS`], otherwise requeue the failed move (and the
+    /// unexecuted tail of its batch) at the head of the plan.
+    fn stall(
+        &mut self,
+        step: usize,
+        mv: ReplicaMove,
+        batch: &mut std::collections::VecDeque<ReplicaMove>,
+        e: &crate::error::Error,
+    ) {
+        crate::log_warn!(
+            "step {step}: migration of sub-matrix {} ({} -> {}) failed: {e}",
+            mv.g,
+            mv.from,
+            mv.to
+        );
+        self.stalls += 1;
+        if self.stalls >= MAX_STALLS {
+            crate::log_warn!(
+                "step {step}: abandoning the migration plan after \
+                 {MAX_STALLS} stalled windows ({} moves dropped)",
+                self.pending.len() + batch.len() + 1
+            );
+            self.pending = MigrationPlan::default();
+            batch.clear();
+        } else {
+            for m in batch.drain(..).rev() {
+                self.pending.requeue_front(m);
+            }
+            self.pending.requeue_front(mv);
+        }
     }
 }
 
@@ -448,6 +633,159 @@ mod tests {
             (1, 4),
             "the slow→fast move front-loads under a tight budget"
         );
+    }
+
+    /// Transport double with a fake transfer lane: `migrate_async`
+    /// accepts every move (`Ok(false)`), `poll_migrations` completes
+    /// them, optionally failing the first few.
+    struct FakeLaneTransport {
+        n: usize,
+        lane: Mutex<Vec<MigrationOrder>>,
+        completed: Mutex<Vec<MigrationOrder>>,
+        fail_first: Mutex<u32>,
+    }
+
+    impl FakeLaneTransport {
+        fn new(n: usize, fail_first: u32) -> FakeLaneTransport {
+            FakeLaneTransport {
+                n,
+                lane: Mutex::new(Vec::new()),
+                completed: Mutex::new(Vec::new()),
+                fail_first: Mutex::new(fail_first),
+            }
+        }
+    }
+
+    impl Transport for FakeLaneTransport {
+        fn size(&self) -> usize {
+            self.n
+        }
+        fn alive(&self) -> Vec<bool> {
+            vec![true; self.n]
+        }
+        fn send(&self, _worker: usize, _order: WorkOrder) -> Result<()> {
+            Ok(())
+        }
+        fn recv_timeout(&self, _timeout: Duration) -> Result<TransportEvent> {
+            Err(Error::Cluster("nothing scripted".into()))
+        }
+        fn drain(&self) -> Vec<TransportEvent> {
+            Vec::new()
+        }
+        fn migrate(&self, _order: &MigrationOrder, _sub_ranges: &[RowRange]) -> Result<()> {
+            panic!("async path must not fall back to the blocking migrate");
+        }
+        fn migrate_async(
+            &self,
+            order: &MigrationOrder,
+            _sub_ranges: &[RowRange],
+        ) -> Result<bool> {
+            self.lane.lock().unwrap().push(order.clone());
+            Ok(false)
+        }
+        fn poll_migrations(&self) -> Vec<(u64, Result<()>)> {
+            let mut fails = self.fail_first.lock().unwrap();
+            self.lane
+                .lock()
+                .unwrap()
+                .drain(..)
+                .map(|o| {
+                    let seq = o.seq;
+                    if *fails > 0 {
+                        *fails -= 1;
+                        (seq, Err(Error::Cluster("scripted lane failure".into())))
+                    } else {
+                        self.completed.lock().unwrap().push(o);
+                        (seq, Ok(()))
+                    }
+                })
+                .collect()
+        }
+        fn shutdown(&mut self) {}
+    }
+
+    #[test]
+    fn async_tick_defers_the_swap_to_harvest() {
+        let per_move = 20 * 120 * 4;
+        let (mut rb, placement, _) = rebalancer(0.15, per_move);
+        let t = FakeLaneTransport::new(6, 0);
+        let avail: Vec<usize> = (0..6).collect();
+        let speeds = vec![24.0, 16.0, 1.0, 1.0, 1.0, 1.0];
+        // dispatch window: the move goes to the lane, the placement is
+        // NOT swapped yet (the copy is not resident)
+        let (p1, recs1) = rb
+            .tick_async(0, &t, &placement, &avail, &speeds)
+            .unwrap();
+        assert!(recs1.is_empty(), "no record before the lane completes");
+        assert_eq!(p1, placement, "no swap before the lane completes");
+        assert!(rb.in_transition());
+        assert_eq!(t.lane.lock().unwrap().len(), 1, "one budgeted move");
+        // another tick while the lane is busy must not dispatch more
+        let (p2, recs2) = rb.tick_async(1, &t, &p1, &avail, &speeds).unwrap();
+        assert!(recs2.is_empty() && p2 == p1);
+        assert_eq!(t.lane.lock().unwrap().len(), 1);
+        // harvest: the completed gain swaps exactly one replica
+        let (p3, recs3) = rb.harvest(1, &t, &p2).unwrap();
+        assert_eq!(recs3.len(), 1);
+        assert_eq!(recs3[0].rows, 20);
+        assert_ne!(p3, p2, "harvest installs the swap");
+        p3.check_feasible(&avail, 0).unwrap();
+        // the run keeps draining through dispatch/harvest pairs
+        let mut current = p3;
+        for step in 2..200 {
+            let (p, _) = rb
+                .tick_async(step, &t, &current, &avail, &speeds)
+                .unwrap();
+            let (p, _) = rb.harvest(step, &t, &p).unwrap();
+            current = p;
+            current.check_feasible(&avail, 0).unwrap();
+            if !rb.in_transition() {
+                break;
+            }
+        }
+        assert!(!rb.in_transition(), "transition never drained");
+        assert!(!t.completed.lock().unwrap().is_empty());
+    }
+
+    #[test]
+    fn failed_lane_moves_requeue_with_stall_accounting() {
+        let per_move = 20 * 120 * 4;
+        let (mut rb, placement, _) = rebalancer(0.15, per_move);
+        // first completion fails: the move must requeue and succeed on a
+        // later window, with no replica swapped for the failure
+        let t = FakeLaneTransport::new(6, 1);
+        let avail: Vec<usize> = (0..6).collect();
+        let speeds = vec![24.0, 16.0, 1.0, 1.0, 1.0, 1.0];
+        let (p1, _) = rb
+            .tick_async(0, &t, &placement, &avail, &speeds)
+            .unwrap();
+        let (p2, recs) = rb.harvest(0, &t, &p1).unwrap();
+        assert!(recs.is_empty(), "a failed lane move must not be recorded");
+        assert_eq!(p2, p1, "a failed lane move must not swap replicas");
+        assert!(rb.in_transition(), "the failed move requeues");
+        let (p3, _) = rb.tick_async(1, &t, &p2, &avail, &speeds).unwrap();
+        let (p4, recs) = rb.harvest(1, &t, &p3).unwrap();
+        assert_eq!(recs.len(), 1, "the retried move completes");
+        p4.check_feasible(&avail, 0).unwrap();
+    }
+
+    #[test]
+    fn async_tick_on_a_sync_transport_completes_inline() {
+        // the default migrate_async falls back to the blocking migrate
+        // and reports inline completion — tick_async then behaves exactly
+        // like tick, so transports without a lane need no changes
+        let per_move = 20 * 120 * 4;
+        let (mut rb, placement, _) = rebalancer(0.15, per_move);
+        let t = FakeTransport::new(6, 0);
+        let avail: Vec<usize> = (0..6).collect();
+        let speeds = vec![24.0, 16.0, 1.0, 1.0, 1.0, 1.0];
+        let (p1, recs1) = rb
+            .tick_async(0, &t, &placement, &avail, &speeds)
+            .unwrap();
+        assert_eq!(recs1.len(), 1, "inline completion records immediately");
+        assert_ne!(p1, placement, "inline completion swaps immediately");
+        let (p2, recs2) = rb.harvest(0, &t, &p1).unwrap();
+        assert!(recs2.is_empty() && p2 == p1, "nothing left to harvest");
     }
 
     #[test]

@@ -14,6 +14,23 @@
 //! [`WorkOrder`]s for the same step. Reports dedup by row through the
 //! coverage bitmap and by worker id for the EWMA, so late originals and
 //! recovery replacements coexist safely.
+//!
+//! ## Pipelining
+//!
+//! [`Master::step`] is really two halves: [`Master::begin_step`] (solve +
+//! dispatch, returning an [`InFlightStep`]) and [`Master::collect_step`]
+//! (the coverage wait). The synchronous `step` chains them back to back —
+//! bit-identical to the pre-split loop — while the pipelined harness
+//! ([`crate::apps::harness`], `--pipeline`) calls `begin_step` for step
+//! `i+1` *before* finishing step `i`'s bookkeeping, so workers compute
+//! while the master is busy. Worker order queues are step-agnostic, and
+//! the collect loop already drops stale-step reports, so at most one
+//! step's coverage is ever being collected at a time.
+//!
+//! All of the collect loop's waits are bounded by one
+//! [`TimerWheel`]: the coverage deadline and the next-overdue instant are
+//! armed slots, re-derived only when the state behind them changes (an
+//! event burst no longer recomputes the overdue clock per event).
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
@@ -33,6 +50,7 @@ use super::protocol::WorkOrder;
 use super::recovery::{RecoveryEvent, RecoveryPolicy, RecoveryReason, RecoveryTracker};
 use super::speed::SpeedEstimator;
 use super::straggler::StraggleMode;
+use super::timer::{DeadlineKind, TimerWheel};
 
 /// Master configuration (static across steps).
 #[derive(Clone)]
@@ -123,6 +141,57 @@ struct PendingOrder {
     sent: Instant,
     /// Journal timestamp of the dispatch (the order span's start).
     t_ns: u64,
+}
+
+/// A dispatched step whose coverage has not been collected yet — the
+/// state handed from [`Master::begin_step`] to [`Master::collect_step`].
+/// While one of these is outstanding, workers are computing; the caller
+/// is free to do master-side bookkeeping for the *previous* step before
+/// collecting (the `--pipeline` overlap).
+pub struct InFlightStep {
+    step: usize,
+    nvec: usize,
+    w: Arc<Block>,
+    avail: Vec<usize>,
+    t0: Instant,
+    solve: Duration,
+    predicted_c: f64,
+    tracker: Option<RecoveryTracker>,
+    expected: usize,
+    pending: Vec<PendingOrder>,
+    y: Vec<f32>,
+    covered: Vec<bool>,
+    missing: usize,
+    reporters: Vec<usize>,
+    reported: Vec<bool>,
+    measurements: Vec<(usize, f64)>,
+    recoveries: Vec<RecoveryEvent>,
+    order_stats: Vec<OrderStat>,
+    /// Coverage + overdue deadlines; every collect wait is sized off this.
+    wheel: TimerWheel,
+    /// True when the tracker changed since the overdue slot was armed.
+    overdue_dirty: bool,
+    overdue_delay: Option<Duration>,
+}
+
+impl InFlightStep {
+    /// The step index this in-flight state belongs to.
+    pub fn step(&self) -> usize {
+        self.step
+    }
+
+    /// Re-derive the overdue slot from the tracker. Called only when the
+    /// tracker actually changed (`overdue_dirty`) — a burst of received
+    /// events no longer recomputes the next overdue instant per event.
+    fn rearm_overdue(&mut self) {
+        if let Some(delay) = self.overdue_delay {
+            match self.tracker.as_ref().and_then(|t| t.next_overdue_at(delay)) {
+                Some(at) => self.wheel.set(DeadlineKind::Overdue, at),
+                None => self.wheel.clear(DeadlineKind::Overdue),
+            }
+        }
+        self.overdue_dirty = false;
+    }
 }
 
 /// The elastic master.
@@ -268,6 +337,25 @@ impl Master {
         avail: &[usize],
         stragglers: &[(usize, StraggleMode)],
     ) -> Result<StepOutcome> {
+        let fl = self.begin_step(cluster, step, w, avail, stragglers)?;
+        self.collect_step(cluster, fl)
+    }
+
+    /// First half of [`Master::step`]: solve the assignment for the
+    /// current speed estimates and dispatch this step's work orders.
+    /// Returns the [`InFlightStep`] whose coverage
+    /// [`Master::collect_step`] will wait for — between the two calls
+    /// workers are computing and the master is free (the `--pipeline`
+    /// overlap window). Dispatch-time send failures are recovered
+    /// immediately when recovery is on (the channel is known dead).
+    pub fn begin_step<T: Transport + ?Sized>(
+        &mut self,
+        cluster: &T,
+        step: usize,
+        w: &Arc<Block>,
+        avail: &[usize],
+        stragglers: &[(usize, StraggleMode)],
+    ) -> Result<InFlightStep> {
         let t0 = Instant::now();
         let nvec = w.nvec();
 
@@ -367,16 +455,14 @@ impl Master {
             return Err(Error::infeasible("no worker received any task"));
         }
 
-        // ---- collect until coverage ----
-        let mut y = vec![0.0f32; self.q * nvec];
+        // ---- collect-state init ----
         let mut covered = vec![false; self.q];
-        let mut missing = self.q;
-        let mut reporters = Vec::new();
-        let mut reported = vec![false; machines];
-        let mut measurements: Vec<(usize, f64)> = Vec::new();
         let mut recoveries: Vec<RecoveryEvent> = Vec::new();
-        let mut order_stats: Vec<OrderStat> = Vec::new();
-        let deadline = Instant::now() + self.cfg.recovery_timeout;
+        let mut wheel = TimerWheel::new();
+        wheel.set(
+            DeadlineKind::Coverage,
+            Instant::now() + self.cfg.recovery_timeout,
+        );
         let overdue_delay = recovery_on
             .then(|| self.cfg.recovery.overdue_delay(self.cfg.recovery_timeout));
 
@@ -400,46 +486,100 @@ impl Master {
             }
         }
 
-        while missing > 0 {
+        Ok(InFlightStep {
+            step,
+            nvec,
+            w: Arc::clone(w),
+            avail: avail.to_vec(),
+            t0,
+            solve,
+            predicted_c,
+            tracker,
+            expected,
+            pending,
+            y: vec![0.0f32; self.q * nvec],
+            covered,
+            missing: self.q,
+            reporters: Vec::new(),
+            reported: vec![false; machines],
+            measurements: Vec::new(),
+            recoveries,
+            order_stats: Vec::new(),
+            wheel,
+            overdue_dirty: true,
+            overdue_delay,
+        })
+    }
+
+    /// Second half of [`Master::step`]: block until the received segments
+    /// cover every row, recovering mid-step victims along the way, then
+    /// fold measured speeds into the EWMA. Every blocking wait is sized
+    /// off the in-flight step's [`TimerWheel`]: the coverage deadline and
+    /// a *cached* next-overdue instant that is only re-derived when an
+    /// event actually mutated the tracker (`overdue_dirty`) — a burst of
+    /// rejected reports cannot starve the overdue clock by forcing a
+    /// rescan per event.
+    pub fn collect_step<T: Transport + ?Sized>(
+        &mut self,
+        cluster: &T,
+        mut fl: InFlightStep,
+    ) -> Result<StepOutcome> {
+        let step = fl.step;
+        let nvec = fl.nvec;
+        let machines = self.cfg.placement.machines();
+        let recovery_on = self.cfg.recovery.enabled;
+        while fl.missing > 0 {
             let now = Instant::now();
-            if now >= deadline {
-                return Err(self.coverage_error(step, &covered, reporters.len(), expected));
+            if fl.wheel.due(DeadlineKind::Coverage, now) {
+                return Err(self.coverage_error(
+                    step,
+                    &fl.covered,
+                    fl.reporters.len(),
+                    fl.expected,
+                ));
             }
-            if let (Some(delay), Some(t)) = (overdue_delay, tracker.as_mut()) {
+            if fl.overdue_dirty {
+                fl.rearm_overdue();
+            }
+            if fl.wheel.due(DeadlineKind::Overdue, now) {
                 // silent droppers: an unanswered order past the overdue
                 // fraction of the timeout is recovered like a failure
-                while let Some(victim) = t.overdue_victim(now, delay) {
-                    if let Some(rec) = &self.recorder {
-                        rec.emit(
-                            Event::new(EventKind::HeartbeatLapse, step, rec.now_ns())
-                                .worker(victim)
-                                .note("order overdue"),
-                        );
+                if let Some(delay) = fl.overdue_delay {
+                    while let Some(victim) = fl
+                        .tracker
+                        .as_mut()
+                        .and_then(|t| t.overdue_victim(now, delay))
+                    {
+                        if let Some(rec) = &self.recorder {
+                            rec.emit(
+                                Event::new(EventKind::HeartbeatLapse, step, rec.now_ns())
+                                    .worker(victim)
+                                    .note("order overdue"),
+                            );
+                        }
+                        self.recover_worker(
+                            cluster,
+                            step,
+                            &fl.w,
+                            victim,
+                            RecoveryReason::Overdue,
+                            &fl.covered,
+                            &fl.avail,
+                            fl.tracker.as_mut().expect("overdue implies tracker"),
+                            &mut fl.expected,
+                            &mut fl.recoveries,
+                            &mut fl.pending,
+                        )?;
                     }
-                    self.recover_worker(
-                        cluster,
-                        step,
-                        w,
-                        victim,
-                        RecoveryReason::Overdue,
-                        &covered,
-                        avail,
-                        t,
-                        &mut expected,
-                        &mut recoveries,
-                        &mut pending,
-                    )?;
                 }
+                // the drain consumed the armed instant: re-derive it now so
+                // a stale (already-passed) slot cannot pin the wait at 1 ms
+                fl.rearm_overdue();
             }
-            let mut wait = deadline - now;
-            if let (Some(delay), Some(t)) = (overdue_delay, tracker.as_ref()) {
-                if let Some(at) = t.next_overdue_at(delay) {
-                    let until = at
-                        .saturating_duration_since(now)
-                        .max(Duration::from_millis(1));
-                    wait = wait.min(until);
-                }
-            }
+            let wait = fl
+                .wheel
+                .wait_from(now)
+                .unwrap_or(Duration::from_millis(1));
             match cluster.recv_timeout(wait) {
                 Ok(TransportEvent::Report(r)) => {
                     if r.step != step {
@@ -481,11 +621,11 @@ impl Master {
                         }
                         spliced += 1;
                         for (i, row) in (seg.rows.lo..seg.rows.hi).enumerate() {
-                            if !covered[row] {
-                                covered[row] = true;
-                                missing -= 1;
+                            if !fl.covered[row] {
+                                fl.covered[row] = true;
+                                fl.missing -= 1;
                             }
-                            y[row * nvec..(row + 1) * nvec]
+                            fl.y[row * nvec..(row + 1) * nvec]
                                 .copy_from_slice(&seg.values[i * nvec..(i + 1) * nvec]);
                         }
                     }
@@ -495,17 +635,20 @@ impl Master {
                     // clock (the worker's rows are still missing and may
                     // need re-dispatch).
                     if spliced > 0 {
-                        if let Some(t) = tracker.as_mut() {
+                        if let Some(t) = fl.tracker.as_mut() {
                             t.note_report(r.worker);
+                            // the answered order may have been the earliest
+                            // unanswered one — re-derive before sleeping
+                            fl.overdue_dirty = true;
                         }
                         // close the oldest open order span for this worker
                         // (FIFO — supplementary orders are answered after
                         // originals on a worker's serial execution loop)
                         if let Some(rec) = &self.recorder {
                             if let Some(pos) =
-                                pending.iter().position(|p| p.worker == r.worker)
+                                fl.pending.iter().position(|p| p.worker == r.worker)
                             {
-                                let p = pending.remove(pos);
+                                let p = fl.pending.remove(pos);
                                 let rtt_ns = p.sent.elapsed().as_nanos() as u64;
                                 rec.emit(
                                     Event::new(EventKind::Order, step, p.t_ns)
@@ -515,7 +658,7 @@ impl Master {
                                         .dur(rtt_ns)
                                         .breakdown(r.breakdown),
                                 );
-                                order_stats.push(OrderStat {
+                                fl.order_stats.push(OrderStat {
                                     worker: p.worker,
                                     order: p.order,
                                     rows: p.rows,
@@ -531,34 +674,33 @@ impl Master {
                     // `reporters` nor fold its speed into the EWMA twice —
                     // and a report whose every segment was rejected carries
                     // no usable speed measurement at all.
-                    if !reported[r.worker] {
-                        reported[r.worker] = true;
-                        reporters.push(r.worker);
+                    if !fl.reported[r.worker] {
+                        fl.reported[r.worker] = true;
+                        fl.reporters.push(r.worker);
                         if spliced > 0 {
                             if let Some(v) = r.measured_speed {
-                                measurements.push((r.worker, v));
+                                fl.measurements.push((r.worker, v));
                             }
                         }
                     }
                 }
                 Ok(TransportEvent::Failed { worker, step: ev_step, error }) => {
                     crate::log_warn!("worker {worker} failed in step {step}: {error}");
-                    if ev_step == step && worker < machines {
-                        if let Some(t) = tracker.as_mut() {
-                            self.recover_worker(
-                                cluster,
-                                step,
-                                w,
-                                worker,
-                                RecoveryReason::Failed,
-                                &covered,
-                                avail,
-                                t,
-                                &mut expected,
-                                &mut recoveries,
-                                &mut pending,
-                            )?;
-                        }
+                    if ev_step == step && worker < machines && fl.tracker.is_some() {
+                        self.recover_worker(
+                            cluster,
+                            step,
+                            &fl.w,
+                            worker,
+                            RecoveryReason::Failed,
+                            &fl.covered,
+                            &fl.avail,
+                            fl.tracker.as_mut().expect("checked above"),
+                            &mut fl.expected,
+                            &mut fl.recoveries,
+                            &mut fl.pending,
+                        )?;
+                        fl.overdue_dirty = true;
                     }
                 }
                 Ok(TransportEvent::Disconnected { worker }) => {
@@ -571,32 +713,31 @@ impl Master {
                         "worker {worker} disconnected during step {step} \
                          (treated as preemption)"
                     );
-                    if worker < machines {
-                        if let Some(t) = tracker.as_mut() {
-                            t.mark_unreachable(worker);
-                            self.recover_worker(
-                                cluster,
-                                step,
-                                w,
-                                worker,
-                                RecoveryReason::Disconnected,
-                                &covered,
-                                avail,
-                                t,
-                                &mut expected,
-                                &mut recoveries,
-                                &mut pending,
-                            )?;
-                        }
+                    if worker < machines && fl.tracker.is_some() {
+                        fl.tracker.as_mut().expect("checked above").mark_unreachable(worker);
+                        self.recover_worker(
+                            cluster,
+                            step,
+                            &fl.w,
+                            worker,
+                            RecoveryReason::Disconnected,
+                            &fl.covered,
+                            &fl.avail,
+                            fl.tracker.as_mut().expect("checked above"),
+                            &mut fl.expected,
+                            &mut fl.recoveries,
+                            &mut fl.pending,
+                        )?;
+                        fl.overdue_dirty = true;
                     }
                 }
                 Err(_) => {
                     if !recovery_on {
                         return Err(self.coverage_error(
                             step,
-                            &covered,
-                            reporters.len(),
-                            expected,
+                            &fl.covered,
+                            fl.reporters.len(),
+                            fl.expected,
                         ));
                     }
                     // Woke for the overdue scan or the deadline check (both
@@ -610,17 +751,17 @@ impl Master {
         }
 
         // ---- speed update (Algorithm 1 line 4, next step's estimate) ----
-        self.estimator.update_all(&measurements);
+        self.estimator.update_all(&fl.measurements);
 
         Ok(StepOutcome {
-            y,
+            y: fl.y,
             nvec,
-            reporters,
-            wall: t0.elapsed(),
-            solve,
-            predicted_c,
-            recoveries,
-            order_stats,
+            reporters: fl.reporters,
+            wall: fl.t0.elapsed(),
+            solve: fl.solve,
+            predicted_c: fl.predicted_c,
+            recoveries: fl.recoveries,
+            order_stats: fl.order_stats,
         })
     }
 
@@ -1187,6 +1328,59 @@ mod tests {
             "no supplementary orders were shipped ({} sends)",
             sent.len()
         );
+    }
+
+    #[test]
+    fn report_burst_does_not_starve_overdue_clock() {
+        // Regression for the timer wheel: the overdue instant is cached in
+        // a wheel slot and only re-derived when an event mutates the
+        // tracker. A burst of rejected (tracker-neutral) reports must not
+        // starve that clock — overdue recovery still has to fire and ship
+        // supplementary orders even though hundreds of events were
+        // processed without a single re-arm.
+        let mut burst = Vec::with_capacity(200);
+        for _ in 0..200 {
+            burst.push(report(0, 3, 100, 110, 1.0)); // garbage rows, all rejected
+        }
+        let t = Scripted::new(3, burst);
+        let mut master = scripted_master(
+            3,
+            RecoveryPolicy {
+                enabled: true,
+                overdue_factor: 0.2, // 80ms of the 400ms timeout below
+            },
+        );
+        master.cfg.recovery_timeout = Duration::from_millis(400);
+        let w = Arc::new(Block::single(vec![0.5f32; 30]));
+        let err = master.step(&t, 3, &w, &[0, 1, 2], &[]).unwrap_err();
+        assert!(err.to_string().contains("coverage timeout"), "{err}");
+        let sent = t.sent.lock().unwrap();
+        assert!(
+            sent.len() > 3,
+            "overdue clock starved by the report burst ({} sends)",
+            sent.len()
+        );
+    }
+
+    #[test]
+    fn begin_collect_split_matches_step() {
+        // `step()` is exactly begin + collect; drive the halves explicitly
+        // (the pipelined harness path) and check the outcome matches what
+        // the synchronous entry point produces on the same script
+        let events = || vec![report(0, 4, 0, 15, 5.0), report(1, 4, 15, 30, 3.0)];
+        let t = Scripted::new(3, events());
+        let mut master = scripted_master(3, RecoveryPolicy::default());
+        let w = Arc::new(Block::single(vec![0.5f32; 30]));
+        let fl = master.begin_step(&t, 4, &w, &[0, 1, 2], &[]).unwrap();
+        assert_eq!(fl.step(), 4);
+        let out = master.collect_step(&t, fl).unwrap();
+
+        let t2 = Scripted::new(3, events());
+        let mut master2 = scripted_master(3, RecoveryPolicy::default());
+        let out2 = master2.step(&t2, 4, &w, &[0, 1, 2], &[]).unwrap();
+        assert_eq!(out.y, out2.y);
+        assert_eq!(out.reporters, out2.reporters);
+        assert_eq!(master.speed_estimate(), master2.speed_estimate());
     }
 
     #[test]

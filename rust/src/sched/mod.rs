@@ -32,6 +32,7 @@ pub mod recovery;
 pub mod sim;
 pub mod speed;
 pub mod straggler;
+pub mod timer;
 pub mod worker;
 
 pub use cluster::Cluster;
@@ -39,4 +40,5 @@ pub use elastic::ElasticityTrace;
 pub use master::{Master, RunResult};
 pub use recovery::{RecoveryEvent, RecoveryPolicy, RecoveryReason};
 pub use speed::SpeedEstimator;
+pub use timer::{DeadlineKind, TimerWheel};
 pub use straggler::StragglerInjector;

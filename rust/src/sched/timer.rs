@@ -1,0 +1,151 @@
+//! Single timer wheel for the master's bounded waits.
+//!
+//! Before the pipelined master, every wait site computed its own bound:
+//! the collect loop re-derived the coverage remainder *and* the next
+//! overdue instant on every received event, and the TCP migration path
+//! carried its own ack deadline. The wheel replaces those scattered
+//! per-wait bounds with one registry of named deadlines: arm or clear a
+//! deadline when the state behind it actually changes, then size every
+//! blocking `recv_timeout` off [`TimerWheel::wait_from`] — the earliest
+//! armed instant decides the sleep. A burst of events cannot starve a
+//! deadline, because handling an event no longer re-derives it unless
+//! that event mutated the state the deadline watches (see the
+//! regression test in [`crate::sched::master`]).
+
+use std::time::{Duration, Instant};
+
+/// The named deadlines a master wait can be bounded by.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DeadlineKind {
+    /// The step's coverage timeout (`recovery_timeout` from dispatch).
+    Coverage,
+    /// The earliest unanswered order going overdue — recovery's
+    /// silent-dropper clock ([`crate::sched::recovery`]).
+    Overdue,
+    /// A migration ack the transfer lane is waiting on.
+    MigrateAck,
+    /// The next heartbeat-liveness check.
+    Heartbeat,
+}
+
+impl DeadlineKind {
+    pub const ALL: [DeadlineKind; 4] = [
+        DeadlineKind::Coverage,
+        DeadlineKind::Overdue,
+        DeadlineKind::MigrateAck,
+        DeadlineKind::Heartbeat,
+    ];
+
+    fn slot(self) -> usize {
+        match self {
+            DeadlineKind::Coverage => 0,
+            DeadlineKind::Overdue => 1,
+            DeadlineKind::MigrateAck => 2,
+            DeadlineKind::Heartbeat => 3,
+        }
+    }
+}
+
+/// Fixed-slot deadline registry. Four named slots — no allocation and no
+/// ordering structure needed at this cardinality; `next_due` is a scan.
+#[derive(Debug, Default)]
+pub struct TimerWheel {
+    slots: [Option<Instant>; 4],
+}
+
+impl TimerWheel {
+    pub fn new() -> TimerWheel {
+        TimerWheel { slots: [None; 4] }
+    }
+
+    /// Arm (or re-arm) a deadline.
+    pub fn set(&mut self, kind: DeadlineKind, at: Instant) {
+        self.slots[kind.slot()] = Some(at);
+    }
+
+    /// Disarm a deadline.
+    pub fn clear(&mut self, kind: DeadlineKind) {
+        self.slots[kind.slot()] = None;
+    }
+
+    pub fn get(&self, kind: DeadlineKind) -> Option<Instant> {
+        self.slots[kind.slot()]
+    }
+
+    /// The earliest armed deadline, if any.
+    pub fn next_due(&self) -> Option<(DeadlineKind, Instant)> {
+        DeadlineKind::ALL
+            .iter()
+            .filter_map(|&k| self.get(k).map(|at| (k, at)))
+            .min_by_key(|&(_, at)| at)
+    }
+
+    /// True when `kind` is armed and `now` has reached it.
+    pub fn due(&self, kind: DeadlineKind, now: Instant) -> bool {
+        self.get(kind).is_some_and(|at| now >= at)
+    }
+
+    /// Bound for the next blocking receive: the time from `now` until
+    /// the earliest armed deadline, floored at 1 ms so a just-passed
+    /// deadline still yields a real (non-busy) wait — callers handle
+    /// due deadlines *before* sleeping. `None` when nothing is armed.
+    pub fn wait_from(&self, now: Instant) -> Option<Duration> {
+        self.next_due().map(|(_, at)| {
+            at.saturating_duration_since(now)
+                .max(Duration::from_millis(1))
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn earliest_armed_deadline_wins() {
+        let now = Instant::now();
+        let mut wheel = TimerWheel::new();
+        assert_eq!(wheel.next_due(), None);
+        assert_eq!(wheel.wait_from(now), None);
+
+        wheel.set(DeadlineKind::Coverage, now + Duration::from_secs(10));
+        wheel.set(DeadlineKind::Overdue, now + Duration::from_secs(2));
+        let (kind, at) = wheel.next_due().unwrap();
+        assert_eq!(kind, DeadlineKind::Overdue);
+        assert_eq!(at, now + Duration::from_secs(2));
+
+        // the overdue clock disarms ⇒ coverage becomes the bound
+        wheel.clear(DeadlineKind::Overdue);
+        assert_eq!(wheel.next_due().unwrap().0, DeadlineKind::Coverage);
+    }
+
+    #[test]
+    fn due_and_wait_floor() {
+        let now = Instant::now();
+        let mut wheel = TimerWheel::new();
+        wheel.set(DeadlineKind::MigrateAck, now);
+        assert!(wheel.due(DeadlineKind::MigrateAck, now));
+        assert!(!wheel.due(DeadlineKind::Heartbeat, now));
+        // a passed deadline still yields a non-busy 1 ms wait
+        assert_eq!(
+            wheel.wait_from(now + Duration::from_secs(1)),
+            Some(Duration::from_millis(1))
+        );
+        // a future deadline yields its actual remainder
+        wheel.set(DeadlineKind::MigrateAck, now + Duration::from_secs(5));
+        let w = wheel.wait_from(now).unwrap();
+        assert!(w > Duration::from_secs(4) && w <= Duration::from_secs(5));
+    }
+
+    #[test]
+    fn rearming_replaces_the_slot() {
+        let now = Instant::now();
+        let mut wheel = TimerWheel::new();
+        wheel.set(DeadlineKind::Overdue, now + Duration::from_secs(9));
+        wheel.set(DeadlineKind::Overdue, now + Duration::from_secs(1));
+        assert_eq!(
+            wheel.get(DeadlineKind::Overdue),
+            Some(now + Duration::from_secs(1))
+        );
+    }
+}

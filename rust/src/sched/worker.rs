@@ -17,7 +17,10 @@
 //! executed and reported independently, so a supplementary recovery order
 //! for an in-flight step ([`crate::sched::recovery`]) is just another
 //! order in the queue — the master dedups by row (coverage bitmap) and by
-//! worker id (EWMA) on its side.
+//! worker id (EWMA) on its side. The pipelined master (`--pipeline`)
+//! leans on the same property: orders for step `i+1` may arrive while the
+//! master is still finishing step `i`'s combine, and the worker neither
+//! knows nor cares — it computes whatever order is next in its queue.
 //!
 //! The speed throttle is the EC2-heterogeneity substitute (DESIGN.md §3):
 //! after computing its tiles, a worker sleeps up to

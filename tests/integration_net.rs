@@ -326,6 +326,7 @@ fn run_mid_step_kill_scenario(nvec: usize) {
         rtt_p99_ms: f64::NAN,
         compute_p50_ms: f64::NAN,
         compute_p99_ms: f64::NAN,
+        overlap_ns: 0,
     });
     let back = usec::util::json::Json::parse(&tl.to_json().to_string()).unwrap();
     assert_eq!(back.get_usize("recoveries_total"), Some(1));

@@ -1,0 +1,356 @@
+//! Integration tests for the pipelined master (`--pipeline`): the
+//! event-driven step loop that overlaps the previous step's combine
+//! metric with the next step's dispatch+compute, streams migration
+//! bytes on the transfer lane concurrently with compute, and recovers
+//! from a worker lost while orders are in flight.
+//!
+//! Uncoded rows have one value whoever (and whenever) computes them, so
+//! every pipelined run must match the synchronous oracle within 1e-5 —
+//! the pipeline may only move *metric* work across step boundaries,
+//! never the trajectory itself.
+
+use std::net::TcpListener;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use usec::apps::power_iteration::run_power_iteration;
+use usec::config::types::{AssignPolicy, BackendKind, RunConfig};
+use usec::error::Result;
+use usec::linalg::partition::submatrix_ranges;
+use usec::linalg::Block;
+use usec::net::daemon::{serve_worker, DaemonOpts};
+use usec::net::{Hello, TcpOptions, TcpPeer, TcpTransport, Transport, WorkloadSpec, WIRE_VERSION};
+use usec::optim::SolveParams;
+use usec::placement::{Placement, PlacementKind};
+use usec::rebalance::RebalanceConfig;
+use usec::sched::master::{Master, MasterConfig};
+use usec::sched::{RecoveryPolicy, RecoveryReason};
+
+const Q: usize = 120;
+const STEPS: usize = 24;
+const SEED: u64 = 11;
+
+/// Spawn `n` worker daemons on ephemeral loopback ports.
+fn start_workers(n: usize) -> (Vec<String>, Vec<JoinHandle<Result<()>>>) {
+    let mut addrs = Vec::new();
+    let mut handles = Vec::new();
+    for _ in 0..n {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        addrs.push(listener.local_addr().unwrap().to_string());
+        handles.push(std::thread::spawn(move || {
+            serve_worker(
+                listener,
+                DaemonOpts {
+                    max_sessions: 1,
+                    ..Default::default()
+                },
+            )
+        }));
+    }
+    (addrs, handles)
+}
+
+/// 3 machines, full replication (cyclic J=3), S=1 — same cluster shape
+/// as the synchronous TCP integration tests.
+fn base_cfg(workers: Vec<String>) -> RunConfig {
+    RunConfig {
+        q: Q,
+        r: Q,
+        g: 3,
+        j: 3,
+        n: 3,
+        placement: PlacementKind::Cyclic,
+        stragglers: 1,
+        steps: STEPS,
+        speeds: vec![1.0, 1.0, 1.0],
+        seed: SEED,
+        workers,
+        ..Default::default()
+    }
+}
+
+/// Tentpole correctness: at B=1 (vector power iteration) and B=16
+/// (block power iteration, combine-heavy MGS) the pipelined loop —
+/// in-process *and* over a real 3-worker TCP cluster — reproduces the
+/// synchronous oracle, and every pipelined step records the overlap it
+/// bought while the synchronous run records none.
+#[test]
+fn pipelined_local_and_tcp_match_the_synchronous_oracle() {
+    for batch in [1usize, 16] {
+        let sync_cfg = RunConfig {
+            batch,
+            ..base_cfg(vec![])
+        };
+        let oracle = run_power_iteration(&sync_cfg).unwrap();
+        assert!(
+            oracle.timeline.steps().iter().all(|s| s.overlap_ns == 0),
+            "B={batch}: a synchronous step claimed pipeline overlap"
+        );
+
+        // --- pipelined, in-process ---
+        let piped = run_power_iteration(&RunConfig {
+            pipeline: true,
+            ..sync_cfg.clone()
+        })
+        .unwrap();
+        assert_eq!(piped.timeline.len(), STEPS);
+        assert!(
+            piped.timeline.steps().iter().all(|s| s.overlap_ns > 0),
+            "B={batch}: a pipelined step lost its overlap measurement"
+        );
+
+        // --- pipelined, over TCP ---
+        let (addrs, handles) = start_workers(3);
+        let tcp = run_power_iteration(&RunConfig {
+            pipeline: true,
+            ..RunConfig {
+                batch,
+                ..base_cfg(addrs)
+            }
+        })
+        .unwrap();
+        for h in handles {
+            h.join().unwrap().unwrap();
+        }
+        assert!(tcp.timeline.steps().iter().all(|s| s.overlap_ns > 0));
+
+        for run in [&piped, &tcp] {
+            assert_eq!(run.eigvec.len(), oracle.eigvec.len());
+            for (i, (a, e)) in run.eigvec.iter().zip(&oracle.eigvec).enumerate() {
+                assert!(
+                    (a - e).abs() <= 1e-5,
+                    "B={batch} eigvec[{i}] diverged: pipelined {a} vs oracle {e}"
+                );
+            }
+            assert!(
+                (run.final_nmse - oracle.final_nmse).abs() <= 1e-5,
+                "B={batch}: nmse diverged"
+            );
+            for (a, e) in run.eigvals.iter().zip(&oracle.eigvals) {
+                assert!((a - e).abs() <= 1e-5, "B={batch}: eigenvalue diverged");
+            }
+        }
+        // the deferred finish still produced a per-step metric for every
+        // step, in the same order as the synchronous run
+        for (p, o) in piped
+            .timeline
+            .steps()
+            .iter()
+            .zip(oracle.timeline.steps())
+        {
+            assert_eq!(p.step, o.step);
+            assert!(p.metric.is_finite(), "step {} metric never finished", p.step);
+        }
+        assert!(oracle.final_nmse < 0.05, "oracle did not converge");
+    }
+}
+
+/// Recovery inside the overlap window: the pipelined loop's defining
+/// hazard is a worker dying *after* `begin_step` shipped its orders but
+/// *before* `collect_step` runs — exactly when the master is busy
+/// finishing the previous step's combine. Drive the begin/collect
+/// primitive over a cyclic `g=6 j=3 S=0` TCP shard cluster, kill a
+/// worker inside the window, and require the recovery plan to finish
+/// the step exactly — then keep pipelining on the survivors.
+#[test]
+fn recovery_covers_a_kill_inside_the_overlap_window() {
+    const Q6: usize = 120;
+    const NVEC: usize = 3;
+    const VICTIM: usize = 1;
+    const KILL_STEP: usize = 1;
+    let (addrs, handles) = start_workers(6);
+    let placement = Placement::build(PlacementKind::Cyclic, 6, 6, 3).unwrap();
+    let spec = WorkloadSpec::RandomDense {
+        q: Q6,
+        r: Q6,
+        seed: 17,
+    };
+    let peers: Vec<TcpPeer> = addrs
+        .iter()
+        .enumerate()
+        .map(|(id, addr)| TcpPeer {
+            addr: addr.clone(),
+            hello: Hello {
+                version: WIRE_VERSION,
+                worker: id,
+                speed: 1.0,
+                tile_rows: 16,
+                backend: BackendKind::Host,
+                g: 6,
+                heartbeat_ms: 100,
+                threads: 1,
+                workload: spec.clone(),
+                stored: placement.stored_by(id).collect(),
+            },
+            stream_ranges: vec![],
+        })
+        .collect();
+    let transport = TcpTransport::connect(peers, TcpOptions::default()).unwrap();
+    let sub_ranges = submatrix_ranges(Q6, 6).unwrap();
+    let mut master = Master::new(MasterConfig {
+        placement: placement.clone(),
+        sub_ranges,
+        params: SolveParams::with_stragglers(0),
+        policy: AssignPolicy::Heterogeneous,
+        gamma: 0.5,
+        initial_speeds: vec![1.0; 6],
+        // ~200 ms of throttled compute per worker: no report can race
+        // ahead of the in-window kill
+        row_cost_ns: 10_000_000,
+        recovery_timeout: Duration::from_secs(30),
+        recovery: RecoveryPolicy {
+            enabled: true,
+            overdue_factor: 0.9,
+        },
+    })
+    .unwrap();
+
+    let oracle = spec.materialize().unwrap();
+    let cols: Vec<Vec<f32>> = (0..NVEC)
+        .map(|k| {
+            (0..Q6)
+                .map(|i| ((i * (k + 2)) % 11) as f32 * 0.1 - 0.5)
+                .collect()
+        })
+        .collect();
+    let mut w = Arc::new(Block::from_columns(&cols).unwrap());
+
+    for step in 0..3 {
+        let alive = transport.alive();
+        let avail: Vec<usize> = (0..6).filter(|&n| alive[n]).collect();
+        let fl = master
+            .begin_step(&transport, step, &w, &avail, &[])
+            .unwrap_or_else(|e| panic!("begin_step {step} failed: {e}"));
+        // === the overlap window: orders are in flight, the pipelined
+        // loop is off finishing step-1's combine. Strike now. ===
+        if step == KILL_STEP {
+            transport.kill(VICTIM);
+        }
+        let out = master
+            .collect_step(&transport, fl)
+            .unwrap_or_else(|e| panic!("collect_step {step} failed: {e}"));
+
+        assert_eq!(out.nvec, NVEC);
+        if step == KILL_STEP {
+            assert!(!out.reporters.contains(&VICTIM), "the victim cannot report");
+            assert_eq!(out.recoveries.len(), 1, "{:?}", out.recoveries);
+            let ev = &out.recoveries[0];
+            assert_eq!(ev.victim, VICTIM);
+            assert_eq!(ev.reason, RecoveryReason::Disconnected);
+            assert!(ev.rows > 0);
+            assert!(!ev.rescuers.is_empty() && !ev.rescuers.contains(&VICTIM));
+        } else {
+            assert!(out.recoveries.is_empty(), "step {step}: spurious recovery");
+            if step > KILL_STEP {
+                assert_eq!(avail.len(), 5, "the kill must stick");
+            }
+        }
+
+        // every step — before, during and after the kill — is exact
+        // against the regenerated oracle
+        for k in 0..NVEC {
+            let want = oracle.matvec(&w.column(k)).unwrap();
+            for (row, e) in want.iter().enumerate() {
+                let a = out.y[row * NVEC + k];
+                assert!(
+                    (a - e).abs() <= 1e-5,
+                    "step {step} col {k} row {row}: {a} vs {e}"
+                );
+            }
+        }
+        w = Arc::new(Block::from_interleaved(Q6, NVEC, out.y).unwrap());
+    }
+
+    let mut transport = transport;
+    transport.shutdown();
+    for h in handles {
+        h.join().unwrap().unwrap();
+    }
+}
+
+/// Migration racing compute: with `--pipeline --rebalance` on a TCP
+/// shard cluster whose speed prior is wrong by 8×, migration bytes
+/// stream on the transfer lane while steps keep dispatching — and the
+/// run still fires migrations, keeps every step feasible, and matches
+/// the in-process oracle.
+#[test]
+fn pipelined_rebalance_races_compute_and_matches_the_oracle() {
+    const TRUE_SPEEDS: [f64; 3] = [8.0, 1.0, 1.0];
+    // 2 ms/row at speed 1 makes the skew visible to the EWMA and leaves
+    // the transfer lane a real compute window to race against.
+    const ROW_COST_NS: u64 = 2_000_000;
+    // Cyclic J=2 of G=3: sub-matrix 1 starts with both replicas on slow
+    // machines — the placement the drift monitor must fix mid-run.
+    let shard_cfg = |workers: Vec<String>| RunConfig {
+        j: 2,
+        speeds: TRUE_SPEEDS.to_vec(),
+        row_cost_ns: ROW_COST_NS,
+        stragglers: 0,
+        seed: 19,
+        ..base_cfg(workers)
+    };
+
+    let (addrs, handles) = start_workers(3);
+    let adapted = run_power_iteration(&RunConfig {
+        pipeline: true,
+        rebalance: RebalanceConfig {
+            enabled: true,
+            threshold: 0.1,
+            budget_bytes: 1 << 20,
+            ..Default::default()
+        },
+        ..shard_cfg(addrs)
+    })
+    .unwrap();
+    for h in handles {
+        h.join().unwrap().unwrap();
+    }
+
+    let oracle = run_power_iteration(&RunConfig {
+        row_cost_ns: 0,
+        ..shard_cfg(vec![])
+    })
+    .unwrap();
+
+    // the wrong prior fired at least one migration, shipped real bytes,
+    // and every move improved the rescheduled expected time
+    assert!(
+        adapted.timeline.total_migrations() >= 1,
+        "no migration fired under an 8x-wrong prior"
+    );
+    assert!(adapted.timeline.total_migrated_bytes() > 0);
+    for step in adapted.timeline.steps() {
+        for m in &step.migrations {
+            assert!(
+                m.expected_after < m.expected_before,
+                "move did not improve the schedule: {} -> {}",
+                m.expected_before,
+                m.expected_after
+            );
+        }
+    }
+
+    // migration raced compute without ever costing coverage: every step
+    // completed at full availability with its overlap intact
+    assert_eq!(adapted.timeline.len(), STEPS);
+    for s in adapted.timeline.steps() {
+        assert_eq!(s.available, 3, "step {} lost availability", s.step);
+        assert!(s.reported > 0, "step {} was skipped as infeasible", s.step);
+        assert!(s.overlap_ns > 0, "step {} lost its overlap", s.step);
+    }
+
+    // correctness: whoever holds a row computes the same row
+    for (i, (a, e)) in adapted.eigvec.iter().zip(&oracle.eigvec).enumerate() {
+        assert!(
+            (a - e).abs() <= 1e-5,
+            "eigvec[{i}] diverged: adapted {a} vs oracle {e}"
+        );
+    }
+    assert!((adapted.final_nmse - oracle.final_nmse).abs() <= 1e-7);
+    assert!(
+        adapted.final_nmse < 0.05,
+        "adapted run did not converge: {}",
+        adapted.final_nmse
+    );
+}
