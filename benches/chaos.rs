@@ -1,0 +1,133 @@
+//! Chaos benchmark: what the fault-injection layer costs when idle, and
+//! how fast the master recovers when it is not.
+//!
+//! Two questions, answered over the in-process transport:
+//!
+//! * **Idle overhead** — the `ChaosTransport` wrapper with an armed but
+//!   never-firing schedule (a partition window far past the last step)
+//!   sits on every frame of the hot path. Its steps/s must be within
+//!   noise of the unwrapped run.
+//! * **Time-to-recover** — a `crash=W@S+K` schedule kills a worker for
+//!   `K` steps with `--recovery` armed; the per-crashed-step wall-clock
+//!   beyond the fault-free baseline is the end-to-end recovery latency
+//!   (overdue detection + re-plan + supplementary orders).
+//!
+//! Run: `cargo bench --bench chaos [-- --smoke] [-- --json PATH]`
+//!
+//! Results land as machine-readable JSON (default `BENCH_chaos.json`).
+
+use std::time::{Duration, Instant};
+
+use usec::apps::run_power_iteration;
+use usec::config::types::RunConfig;
+use usec::sched::RecoveryPolicy;
+use usec::util::benchkit::Bench;
+
+const Q: usize = 96;
+const SEED: u64 = 31;
+
+fn cfg(steps: usize) -> RunConfig {
+    RunConfig {
+        q: Q,
+        r: Q,
+        g: 6,
+        j: 3,
+        n: 6,
+        steps,
+        speeds: vec![1.0; 6],
+        seed: SEED,
+        recovery: RecoveryPolicy {
+            enabled: true,
+            overdue_factor: 0.05, // 100ms of the 2s chaos coverage timeout
+        },
+        ..Default::default()
+    }
+}
+
+/// Wall-clock of one full run (build + step loop), plus its fault count.
+fn run_once(cfg: &RunConfig) -> (Duration, u64) {
+    let t0 = Instant::now();
+    let res = run_power_iteration(cfg).expect("bench run");
+    let wall = t0.elapsed();
+    let faults = res.timeline.steps().iter().map(|s| s.faults).sum();
+    (wall, faults)
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let smoke = args.iter().any(|a| a == "--smoke");
+    let json_path = args
+        .iter()
+        .position(|a| a == "--json")
+        .and_then(|i| args.get(i + 1))
+        .map(String::as_str)
+        .unwrap_or("BENCH_chaos.json")
+        .to_string();
+    let (steps, budget, iters) = if smoke {
+        (6, Duration::from_millis(100), 1)
+    } else {
+        (40, Duration::from_secs(2), 6)
+    };
+    let mut bench = Bench::with_budget(budget, iters);
+
+    // --- idle overhead: armed-but-silent wrapper vs no wrapper ---
+    let clean = cfg(steps);
+    let mut armed = clean.clone();
+    // the partition window opens far past the last step: the wrapper
+    // inspects every frame but never injects — zero faults, pure tax
+    armed.chaos = format!("partition=0@{}..{}", steps + 1000, steps + 1001);
+    let mut clean_best = Duration::MAX;
+    bench.run_units(&format!("power iteration, no chaos ({steps} steps)"), steps as f64, || {
+        let (wall, faults) = run_once(&clean);
+        assert_eq!(faults, 0);
+        clean_best = clean_best.min(wall);
+        wall.as_secs_f64()
+    });
+    let mut armed_best = Duration::MAX;
+    bench.run_units(
+        &format!("power iteration, idle chaos wrapper ({steps} steps)"),
+        steps as f64,
+        || {
+            let (wall, faults) = run_once(&armed);
+            assert_eq!(faults, 0, "the armed window must never fire");
+            armed_best = armed_best.min(wall);
+            wall.as_secs_f64()
+        },
+    );
+
+    // --- time-to-recover: crash a worker for 2 steps, recovery on ---
+    let crash_steps = 2u32;
+    let mut crashed = clean.clone();
+    crashed.chaos = format!("crash=1@2+{crash_steps}");
+    let mut crash_best = Duration::MAX;
+    bench.run_units(
+        &format!("power iteration, crash-restart ({steps} steps)"),
+        steps as f64,
+        || {
+            let (wall, faults) = run_once(&crashed);
+            assert!(faults > 0, "the crash window never fired");
+            crash_best = crash_best.min(wall);
+            wall.as_secs_f64()
+        },
+    );
+
+    println!("{}", bench.table());
+    let overhead =
+        armed_best.as_secs_f64() / clean_best.as_secs_f64() - 1.0;
+    println!(
+        "idle wrapper overhead: {:+.1}% ({clean_best:?} -> {armed_best:?}, best of {iters})",
+        overhead * 100.0
+    );
+    let recover =
+        crash_best.saturating_sub(clean_best).as_secs_f64() / crash_steps as f64;
+    println!(
+        "time-to-recover: {:.1} ms per crashed step \
+         ({crash_best:?} total vs {clean_best:?} fault-free)",
+        recover * 1e3
+    );
+
+    match Bench::write_json(&[&bench], &json_path) {
+        Ok(()) => println!("wrote {json_path}"),
+        Err(e) => eprintln!("could not write {json_path}: {e}"),
+    }
+}

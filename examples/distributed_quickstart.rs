@@ -89,6 +89,38 @@
 //! usec trace trace.jsonl --summary          # top time sinks, as text
 //! ```
 //!
+//! Add `--chaos <spec>` and the transport starts injecting faults from a
+//! deterministic seed (`--chaos-seed`, default derived from `--seed`):
+//! frame drops, delivery delays, duplication, corruption, asymmetric
+//! partitions, slow-worker throttles, crash-restart windows. The same
+//! spec + seed replays the same fault schedule byte-for-byte — a failing
+//! soak run is a replayable bug report. Every injected fault lands in
+//! the journal and in `timeline[i].faults`; pair it with `--recovery` so
+//! dropped orders are re-planned instead of timing the step out:
+//!
+//! ```text
+//! usec master --workers ... --q 1536 --g 3 --j 2 --placement cyclic \
+//!     --chaos "drop=0.05,delay=10:0.2,crash=1@5+3" --chaos-seed 42 \
+//!     --recovery --json-out run.json
+//! ```
+//!
+//! Add `--checkpoint-out run.ckpt` and the master snapshots its resumable
+//! state (iterate bits, EWMA speeds, live placement) at every step
+//! boundary — written off the critical path by a writer thread, atomic
+//! temp-file + rename, FNV-checksummed and digest-bound to this exact
+//! workload. If the master host dies, restart it with `--resume`: it
+//! fast-forwards to the checkpointed step and lands on the same answer
+//! the uninterrupted run would have produced. A truncated, corrupted, or
+//! wrong-job checkpoint is rejected with a typed error:
+//!
+//! ```text
+//! usec master --workers ... --q 1536 --g 3 --j 2 --placement cyclic \
+//!     --checkpoint-out run.ckpt --json-out run.json
+//! # ...master killed at step k; same job, new master:
+//! usec master --workers ... --q 1536 --g 3 --j 2 --placement cyclic \
+//!     --resume run.ckpt --json-out rest.json
+//! ```
+//!
 //! Either way `--json-out` reports the actual per-worker resident bytes
 //! under `timeline.storage`. Here we spawn the same daemons on threads
 //! and drive the same master code path (`RunConfig.workers` →
@@ -108,9 +140,10 @@ fn main() {
     usec::util::log::init();
 
     // --- "terminals 1-3": three worker daemons on ephemeral ports ---
-    // (each serves six master sessions: the generator-backed run, the
+    // (each serves nine master sessions: the generator-backed run, the
     // streamed run, the batched block run, the pipelined run, the
-    // rebalanced run, and the traced run below)
+    // rebalanced run, the chaos run, the checkpointed run + its resume,
+    // and the traced run below)
     let mut addrs = Vec::new();
     let mut daemons = Vec::new();
     for _ in 0..3 {
@@ -120,7 +153,7 @@ fn main() {
             serve_worker(
                 listener,
                 DaemonOpts {
-                    max_sessions: 6,
+                    max_sessions: 9,
                     ..Default::default()
                 },
             )
@@ -238,6 +271,54 @@ fn main() {
         "post-migration per-worker storage: {:?} bytes",
         rebalanced.timeline.storage_bytes()
     );
+
+    // --- chaos-tested run: --chaos over the same daemons ---
+    // the transport injects seeded faults (delays + duplicate frames here
+    // — lossless classes, so the run always completes); the dedup/reorder
+    // tolerance of the collect loop absorbs them and the trajectory is
+    // unchanged. Same spec + seed ⇒ same fault schedule, byte-for-byte.
+    let chaos_cfg = RunConfig {
+        chaos: "delay=2:0.2,dup=0.05".to_string(),
+        chaos_seed: 42,
+        recovery: RecoveryPolicy::enabled(),
+        workers: addrs.clone(),
+        ..cfg.clone()
+    };
+    let chaotic = run_power_iteration(&chaos_cfg).expect("chaos run");
+    let faults: u64 = chaotic.timeline.steps().iter().map(|s| s.faults).sum();
+    println!(
+        "chaos run:                  final NMSE {:.3e} (matches: {}), \
+         {faults} fault(s) injected",
+        chaotic.final_nmse,
+        (chaotic.final_nmse - res.final_nmse).abs() < 1e-9
+    );
+
+    // --- checkpoint + resume: kill the master at step 15, restart ---
+    // first life checkpoints every boundary and "dies" (returns) at step
+    // 15; the second life resumes from the snapshot, runs the remaining
+    // 15 steps, and lands on the uninterrupted run's answer.
+    let ckpt_path = std::env::temp_dir().join("usec_quickstart.ckpt");
+    let first_life = RunConfig {
+        steps: 15,
+        checkpoint_out: ckpt_path.to_str().expect("utf-8 temp path").to_string(),
+        workers: addrs.clone(),
+        ..cfg.clone()
+    };
+    run_power_iteration(&first_life).expect("first life");
+    let second_life = RunConfig {
+        resume: first_life.checkpoint_out.clone(),
+        workers: addrs.clone(),
+        ..cfg.clone()
+    };
+    let resumed = run_power_iteration(&second_life).expect("resumed run");
+    println!(
+        "resumed run:                final NMSE {:.3e} (matches: {}), \
+         {} step(s) replayed after the crash",
+        resumed.final_nmse,
+        (resumed.final_nmse - res.final_nmse).abs() < 1e-9,
+        resumed.timeline.len()
+    );
+    let _ = std::fs::remove_file(&ckpt_path);
 
     // --- end-to-end tracing: --trace-out over the same daemons ---
     // every order ships with the trace bit set (wire v5), every report

@@ -8,6 +8,7 @@
 //! distributed. Worker liveness feeds the availability set each step, so a
 //! dropped connection acts exactly like an elasticity-trace preemption.
 
+use std::path::Path;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -17,17 +18,19 @@ use crate::linalg::partition::{submatrix_ranges, RowRange};
 use crate::linalg::{Block, Matrix};
 use crate::metrics::{StepRecord, Timeline};
 use crate::net::{
-    AnyTransport, Hello, LocalTransport, TcpOptions, TcpPeer, TcpTransport, Transport,
-    WorkloadSpec, DEFAULT_HEARTBEAT_MS, WIRE_VERSION,
+    AnyTransport, ChaosSpec, ChaosTransport, Hello, LocalTransport, TcpOptions, TcpPeer,
+    TcpTransport, Transport, WorkloadSpec, DEFAULT_HEARTBEAT_MS, WIRE_VERSION,
 };
 use crate::obs::{CounterSnapshot, Event, EventKind, Journal, OrderStat, Recorder, Registry};
-use crate::placement::Placement;
+use crate::placement::{Placement, PlacementKind};
 use crate::rebalance::Rebalancer;
 use crate::runtime::{Backend, BackendSpec};
+use crate::sched::checkpoint::{Checkpoint, CheckpointWriter};
 use crate::sched::master::{Master, MasterConfig};
 use crate::sched::straggler::StraggleMode;
 use crate::sched::worker::{WorkerConfig, WorkerStorage};
 use crate::sched::{ElasticityTrace, StragglerInjector};
+use crate::util::retry::{RetryPolicy, RetryState};
 
 /// Everything needed to run elastic steps over one matrix.
 pub struct Harness {
@@ -56,6 +59,24 @@ pub struct Harness {
     /// Previous step's transport liveness, to count dead→alive
     /// re-admissions as reconnects.
     prev_alive: Vec<bool>,
+    /// Shared capped-exponential backoff policy for dead-host dials
+    /// ([`crate::util::retry`]).
+    dial_policy: RetryPolicy,
+    /// Per-worker backoff state gating re-admission dials, so a host that
+    /// stays dead costs O(log) dials per window instead of one per step.
+    dial_states: Vec<RetryState>,
+    /// Dial retries attempted since the last step record.
+    retries_step: u64,
+    /// Cumulative chaos fault count at the last step record (the timeline
+    /// surfaces per-step deltas).
+    faults_seen: u64,
+    /// Background checkpoint writer (`--checkpoint-out`).
+    checkpointer: Option<CheckpointWriter>,
+    /// First step the run loop executes (> 0 after `--resume`).
+    start_step: usize,
+    /// Iterate + last metric recovered from `--resume`, handed to the app
+    /// via [`Harness::take_resume`].
+    resume: Option<(Block, f64)>,
     cfg: RunConfig,
 }
 
@@ -89,7 +110,51 @@ impl Harness {
                 cfg.r
             )));
         }
-        let placement = Placement::build(cfg.placement, cfg.n, cfg.g, cfg.j)?;
+        // `--resume`: load + validate the checkpoint before anything is
+        // wired up — the recorded placement (possibly rebalanced away from
+        // the seed one) shapes the TCP handshakes, and the recorded EWMA
+        // speeds seed the master's estimator.
+        let digest_spec = workload
+            .clone()
+            .unwrap_or(WorkloadSpec::Streamed { q: cfg.q, r: cfg.r });
+        let resume_ckpt = if cfg.resume.is_empty() {
+            None
+        } else {
+            let c = Checkpoint::load(Path::new(&cfg.resume), &digest_spec)?;
+            if c.nvec != cfg.batch {
+                return Err(Error::checkpoint(format!(
+                    "checkpoint batch width {} vs configured --batch {}",
+                    c.nvec, cfg.batch
+                )));
+            }
+            if c.w.len() != cfg.r * cfg.batch {
+                return Err(Error::checkpoint(format!(
+                    "iterate has {} values, expected r·B = {}",
+                    c.w.len(),
+                    cfg.r * cfg.batch
+                )));
+            }
+            if !c.speeds.is_empty() && c.speeds.len() != cfg.n {
+                return Err(Error::checkpoint(format!(
+                    "{} speed estimates for N={} machines",
+                    c.speeds.len(),
+                    cfg.n
+                )));
+            }
+            if c.stored.len() != cfg.n {
+                return Err(Error::checkpoint(format!(
+                    "{} stored sets for N={} machines",
+                    c.stored.len(),
+                    cfg.n
+                )));
+            }
+            Some(c)
+        };
+
+        let placement = match &resume_ckpt {
+            Some(c) => placement_from_stored(cfg, &c.stored)?,
+            None => Placement::build(cfg.placement, cfg.n, cfg.g, cfg.j)?,
+        };
         let sub_ranges = submatrix_ranges(cfg.q, cfg.g)?;
 
         let speeds = if cfg.speeds.is_empty() {
@@ -183,9 +248,21 @@ impl Harness {
             params: cfg.solve_params(),
             policy: cfg.policy,
             gamma: cfg.gamma,
-            initial_speeds: vec![], // master learns speeds (Algorithm 1)
+            // a resumed master starts from the checkpointed EWMA estimates
+            // (what the dead master had learned); fresh runs learn from
+            // the uniform prior (Algorithm 1)
+            initial_speeds: resume_ckpt
+                .as_ref()
+                .map(|c| c.speeds.clone())
+                .unwrap_or_default(),
             row_cost_ns: cfg.row_cost_ns,
-            recovery_timeout: Duration::from_secs(60),
+            // under chaos a dropped order with recovery off must become a
+            // typed coverage error quickly, not a minute-long hang
+            recovery_timeout: if cfg.chaos.is_empty() {
+                Duration::from_secs(60)
+            } else {
+                Duration::from_secs(2)
+            },
             recovery: cfg.recovery,
         })?;
 
@@ -204,6 +281,27 @@ impl Harness {
             (Some(journal), Some(recorder), Some(registry))
         };
 
+        // `--chaos`: wrap the transport in the seeded fault injector. The
+        // wrapper composes over either transport and journals every fault;
+        // with the flag absent nothing is wrapped and the wire traffic is
+        // byte-identical to the unwrapped run.
+        let chaos_spec = ChaosSpec::parse(&cfg.chaos)?;
+        let transport = if chaos_spec.is_empty() {
+            transport
+        } else {
+            let chaos_seed = if cfg.chaos_seed != 0 {
+                cfg.chaos_seed
+            } else {
+                cfg.seed ^ 0xC4A0
+            };
+            AnyTransport::Chaos(Box::new(ChaosTransport::new(
+                transport,
+                chaos_spec,
+                chaos_seed,
+                recorder.clone(),
+            )))
+        };
+
         let combine = BackendSpec::from_kind(
             // PJRT combine only works when artifacts match q; fall back.
             if cfg.backend == BackendKind::Pjrt {
@@ -215,7 +313,7 @@ impl Harness {
         )
         .instantiate()?;
 
-        let trace = if cfg.preempt_prob > 0.0 || cfg.arrive_prob > 0.0 {
+        let mut trace = if cfg.preempt_prob > 0.0 || cfg.arrive_prob > 0.0 {
             ElasticityTrace::bernoulli(
                 cfg.n,
                 cfg.preempt_prob,
@@ -261,6 +359,38 @@ impl Harness {
             None
         };
 
+        // resume: replay the elasticity trace up to the resumed step so
+        // the availability stream continues where the dead master left
+        // off. (Injected-straggler draws depend on each step's live
+        // availability and cannot be replayed blind — resumed runs match
+        // the oracle exactly for configs without injected stragglers.)
+        let start_step = resume_ckpt.as_ref().map(|c| c.next_step).unwrap_or(0);
+        for _ in 0..start_step {
+            trace.next_step();
+        }
+
+        let checkpointer = if cfg.checkpoint_out.is_empty() {
+            None
+        } else {
+            Some(CheckpointWriter::new(
+                Path::new(&cfg.checkpoint_out),
+                &digest_spec,
+            ))
+        };
+        let resume = match resume_ckpt {
+            Some(c) => {
+                if let Some(rec) = &recorder {
+                    rec.emit(
+                        Event::new(EventKind::Checkpoint, c.next_step, rec.now_ns())
+                            .rows(cfg.r)
+                            .note("resume"),
+                    );
+                }
+                Some((Block::from_interleaved(cfg.r, c.nvec, c.w)?, c.last_metric))
+            }
+            None => None,
+        };
+
         let prev_alive = transport.alive();
         Ok(Harness {
             placement,
@@ -276,8 +406,30 @@ impl Harness {
             recorder,
             registry,
             prev_alive,
+            dial_policy: RetryPolicy::dial(),
+            dial_states: (0..cfg.n)
+                .map(|w| RetryState::new(cfg.seed ^ 0xD1A1 ^ (w as u64).wrapping_mul(0x9E37)))
+                .collect(),
+            retries_step: 0,
+            faults_seen: 0,
+            checkpointer,
+            start_step,
+            resume,
             cfg: cfg.clone(),
         })
+    }
+
+    /// The iterate and last metric a `--resume` checkpoint recorded
+    /// (`None` for a fresh run, and after the first call). The app starts
+    /// from this block instead of its own `w0`; the step loop itself
+    /// fast-forwards to the resumed step index.
+    pub fn take_resume(&mut self) -> Option<(Block, f64)> {
+        self.resume.take()
+    }
+
+    /// First step the run loop will execute (> 0 after `--resume`).
+    pub fn start_step(&self) -> usize {
+        self.start_step
     }
 
     /// Run `steps` elastic iterations on the classic single-vector plane.
@@ -316,8 +468,8 @@ impl Harness {
         let q = self.cfg.q;
         let mut w = Arc::new(w0);
         let mut last_metric = f64::NAN;
-        for step in 0..steps {
-            let avail = self.availability();
+        for step in self.start_step..steps {
+            let avail = self.availability(step);
             // live placement adaptation: between steps (before dispatch)
             // the rebalancer may migrate replica rows and swap the
             // effective placement — assignments, feasibility, and recovery
@@ -331,6 +483,7 @@ impl Harness {
                 crate::log_debug!("step {step}: infeasible availability {avail:?}, skipping");
                 let (counters, [rtt_p50_ms, rtt_p99_ms, compute_p50_ms, compute_p99_ms]) =
                     self.trace_tail(&[]);
+                let (faults, retries) = self.robustness_tail();
                 self.timeline.push(StepRecord {
                     step,
                     available: avail.len(),
@@ -348,6 +501,9 @@ impl Harness {
                     compute_p50_ms,
                     compute_p99_ms,
                     overlap_ns: 0,
+                    faults,
+                    retries,
+                    checkpoint: false,
                 });
                 continue;
             }
@@ -361,6 +517,7 @@ impl Harness {
             let y = Block::from_interleaved(q, out.nvec, out.y)?;
             let (next, metric) = update(&self.combine, &w, y)?;
             last_metric = metric;
+            let wrote = self.maybe_checkpoint(step, &next, metric);
             if let (Some(rec), Some((t_ns, start))) = (&self.recorder, step_span) {
                 rec.emit(
                     Event::new(EventKind::Step, step, t_ns)
@@ -370,6 +527,7 @@ impl Harness {
             }
             let (counters, [rtt_p50_ms, rtt_p99_ms, compute_p50_ms, compute_p99_ms]) =
                 self.trace_tail(&out.order_stats);
+            let (faults, retries) = self.robustness_tail();
             self.timeline.push(StepRecord {
                 step,
                 available: avail.len(),
@@ -387,6 +545,9 @@ impl Harness {
                 compute_p50_ms,
                 compute_p99_ms,
                 overlap_ns: 0,
+                faults,
+                retries,
+                checkpoint: wrote,
             });
             w = Arc::new(next);
         }
@@ -396,14 +557,55 @@ impl Harness {
     /// One step's availability set: the elasticity trace intersected with
     /// transport liveness, after re-admitting any reconnected daemons and
     /// counting dead→alive transitions as reconnects.
-    fn availability(&mut self) -> Vec<usize> {
+    ///
+    /// Dials to still-dead hosts are gated by the shared capped-
+    /// exponential backoff ([`crate::util::retry`]): a host that stays
+    /// down is dialed O(log) times per backoff window instead of once per
+    /// step, every attempt counts into the registry's `dial_attempts`,
+    /// and a revival resets that worker's backoff.
+    fn availability(&mut self, step: usize) -> Vec<usize> {
         let mut alive = self.transport.alive();
-        // a reconnecting worker daemon rejoins the availability set at
-        // the next step instead of staying preempted forever
-        if alive.iter().any(|a| !a) && self.transport.readmit() > 0 {
-            self.timeline
-                .set_storage_bytes(self.transport.resident_bytes());
-            alive = self.transport.alive();
+        if alive.iter().any(|a| !a) {
+            let now = Instant::now();
+            let eligible: Vec<bool> = alive
+                .iter()
+                .enumerate()
+                .map(|(w, &up)| !up && self.dial_states[w].ready(now))
+                .collect();
+            if eligible.iter().any(|&e| e) {
+                // a reconnecting worker daemon rejoins the availability
+                // set at the next step instead of staying preempted forever
+                if self.transport.readmit_filtered(&eligible) > 0 {
+                    self.timeline
+                        .set_storage_bytes(self.transport.resident_bytes());
+                    alive = self.transport.alive();
+                }
+                for w in 0..eligible.len() {
+                    if !eligible[w] {
+                        continue;
+                    }
+                    self.retries_step += 1;
+                    if let Some(reg) = &self.registry {
+                        reg.add_dial_attempt(w);
+                    }
+                    if let Some(rec) = &self.recorder {
+                        rec.emit(
+                            Event::new(EventKind::Retry, step, rec.now_ns())
+                                .worker(w)
+                                .rows(self.dial_states[w].attempts() as usize + 1)
+                                .note("dial"),
+                        );
+                    }
+                    if alive[w] {
+                        self.dial_states[w].record_success();
+                        if let Some(reg) = &self.registry {
+                            reg.add_dial_success(w);
+                        }
+                    } else {
+                        let _ = self.dial_states[w].record_failure(&self.dial_policy, now);
+                    }
+                }
+            }
         }
         if let Some(reg) = &self.registry {
             for (w, (&was, &is)) in self.prev_alive.iter().zip(&alive).enumerate() {
@@ -499,8 +701,8 @@ impl Harness {
         let mut w = Arc::new(w0);
         let mut last_metric = f64::NAN;
         let mut pending: Option<PendingFinish> = None;
-        for step in 0..steps {
-            let avail = self.availability();
+        for step in self.start_step..steps {
+            let avail = self.availability(step);
             let migrations = self.rebalance_tick_async(step, &avail);
             if self
                 .placement
@@ -513,6 +715,7 @@ impl Harness {
                 self.finish_pending(&mut pending, &mut finish, &mut last_metric)?;
                 let (counters, [rtt_p50_ms, rtt_p99_ms, compute_p50_ms, compute_p99_ms]) =
                     self.trace_tail(&[]);
+                let (faults, retries) = self.robustness_tail();
                 self.timeline.push(StepRecord {
                     step,
                     available: avail.len(),
@@ -530,6 +733,9 @@ impl Harness {
                     compute_p50_ms,
                     compute_p99_ms,
                     overlap_ns: 0,
+                    faults,
+                    retries,
+                    checkpoint: false,
                 });
                 continue;
             }
@@ -544,6 +750,10 @@ impl Harness {
             let out = self.master.collect_step(&self.transport, fl)?;
             let y = Block::from_interleaved(q, out.nvec, out.y)?;
             let next = Arc::new(prepare(&self.combine, &w, y)?);
+            // the deferred finish hasn't produced this step's metric yet,
+            // so the snapshot records the last observed one (bit-exactly;
+            // resume correctness only needs the iterate and speeds)
+            let wrote = self.maybe_checkpoint(step, &next, last_metric);
             if let (Some(rec), Some((t_ns, start))) = (&self.recorder, step_span) {
                 rec.emit(
                     Event::new(EventKind::Step, step, t_ns)
@@ -553,6 +763,7 @@ impl Harness {
             }
             let (counters, [rtt_p50_ms, rtt_p99_ms, compute_p50_ms, compute_p99_ms]) =
                 self.trace_tail(&out.order_stats);
+            let (faults, retries) = self.robustness_tail();
             pending = Some(PendingFinish {
                 record: StepRecord {
                     step,
@@ -571,6 +782,9 @@ impl Harness {
                     compute_p50_ms,
                     compute_p99_ms,
                     overlap_ns: 0,
+                    faults,
+                    retries,
+                    checkpoint: wrote,
                 },
                 next: Arc::clone(&next),
             });
@@ -620,6 +834,53 @@ impl Harness {
 
     pub fn config(&self) -> &RunConfig {
         &self.cfg
+    }
+
+    /// Per-step robustness tallies for the timeline record: the chaos
+    /// fault delta since the last record and the backed-off dial retries
+    /// since then. Both are 0 (and their JSON keys absent) when `--chaos`
+    /// is off and no dial was needed.
+    fn robustness_tail(&mut self) -> (u64, u64) {
+        let total = self.transport.chaos_faults();
+        let faults = total - self.faults_seen;
+        self.faults_seen = total;
+        (faults, std::mem::take(&mut self.retries_step))
+    }
+
+    /// Queue a resumable snapshot at this step boundary if checkpointing
+    /// is on and the cadence says so. `next` is the iterate the *next*
+    /// step would consume; a boundary with a shard migration still on the
+    /// transfer lane is skipped (its pending ledger would make the
+    /// snapshot unusable — the next clean boundary writes instead).
+    fn maybe_checkpoint(&self, step: usize, next: &Block, metric: f64) -> bool {
+        let Some(ck) = &self.checkpointer else {
+            return false;
+        };
+        if (step + 1) % self.cfg.checkpoint_every != 0 {
+            return false;
+        }
+        if self
+            .rebalancer
+            .as_ref()
+            .is_some_and(|rb| rb.in_transition())
+        {
+            return false;
+        }
+        ck.submit(Checkpoint {
+            next_step: step + 1,
+            nvec: next.nvec(),
+            w: next.data().to_vec(),
+            speeds: self.master.speed_estimate().to_vec(),
+            last_metric: metric,
+            stored: (0..self.cfg.n)
+                .map(|w| self.placement.stored_by(w).collect())
+                .collect(),
+            pending: Vec::new(),
+        });
+        if let Some(rec) = &self.recorder {
+            rec.emit(Event::new(EventKind::Checkpoint, step, rec.now_ns()).rows(self.cfg.r));
+        }
+        true
     }
 
     /// Close the tracing journal: flushes buffered events and joins the
@@ -778,6 +1039,26 @@ struct PendingFinish {
     record: StepRecord,
     /// The iterate the metric is computed from.
     next: Arc<Block>,
+}
+
+/// Rebuild the effective placement a checkpoint recorded (possibly
+/// rebalanced away from the seed placement) from its per-worker stored
+/// sets: invert `Z_n` back into per-sub-matrix replica lists.
+fn placement_from_stored(cfg: &RunConfig, stored: &[Vec<usize>]) -> Result<Placement> {
+    let mut replicas = vec![Vec::new(); cfg.g];
+    for (worker, set) in stored.iter().enumerate() {
+        for &g in set {
+            if g >= cfg.g {
+                return Err(Error::checkpoint(format!(
+                    "stored set names sub-matrix {g} >= G={}",
+                    cfg.g
+                )));
+            }
+            replicas[g].push(worker);
+        }
+    }
+    Placement::from_replicas(PlacementKind::Custom, cfg.n, replicas)
+        .map_err(|e| Error::checkpoint(format!("checkpointed placement is invalid: {e}")))
 }
 
 /// Artifact directory: `$USEC_ARTIFACTS` or `<crate>/artifacts`.

@@ -94,6 +94,11 @@ pub fn run_power_iteration(cfg: &RunConfig) -> Result<PowerIterationResult> {
     // Fig. 4 comparisons share trajectories.
     let mut b0 = vec![1.0f32; cfg.q];
     ops::normalize(&mut b0);
+    // `--resume`: continue from the checkpointed iterate instead; the
+    // harness loop fast-forwards to the checkpointed step
+    if let Some((blk, _last_metric)) = harness.take_resume() {
+        b0 = blk.into_single();
+    }
 
     // split closures: normalization stays on the critical path (the next
     // step needs the iterate), the NMSE metric is deferrable — with
@@ -147,6 +152,11 @@ fn run_block_power(
     }
     let mut w0 = Block::from_columns(&cols)?;
     ops::mgs_orthonormalize(w0.data_mut(), q, b);
+    // `--resume`: the checkpointed panel is already orthonormal — the run
+    // that wrote it had just MGS'd it
+    if let Some((blk, _last_metric)) = harness.take_resume() {
+        w0 = blk;
+    }
 
     // MGS re-orthonormalization is the critical path; the NMSE metric
     // overlaps the next step's worker compute under `--pipeline`

@@ -154,6 +154,24 @@ pub struct RunConfig {
     /// point events with worker-side timing breakdowns, convertible with
     /// `usec trace`. Empty ⇒ tracing off (zero overhead).
     pub trace_out: String,
+    /// Seeded fault-injection schedule (`--chaos`), parsed by
+    /// [`crate::net::ChaosSpec::parse`] — e.g.
+    /// `"drop=0.05,delay=20:0.1,crash=2@3+2"`. Empty ⇒ no chaos wrapper,
+    /// byte-identical wire traffic to the unwrapped transport.
+    pub chaos: String,
+    /// Seed for the chaos schedule's deterministic rolls. 0 ⇒ derive from
+    /// the run seed (`seed ^ 0xC4A0`), so reruns reproduce faults
+    /// byte-for-byte.
+    pub chaos_seed: u64,
+    /// Path the master checkpoints resumable run state to at step
+    /// boundaries (`--checkpoint-out`). Empty ⇒ checkpointing off.
+    pub checkpoint_out: String,
+    /// Checkpoint cadence in steps (`--checkpoint-every`, with
+    /// `--checkpoint-out`); 1 ⇒ every boundary.
+    pub checkpoint_every: usize,
+    /// Path of a checkpoint to resume from (`--resume`). Empty ⇒ fresh
+    /// run. Validated against this run's workload digest at load.
+    pub resume: String,
 }
 
 impl Default for RunConfig {
@@ -190,6 +208,11 @@ impl Default for RunConfig {
             pipeline: false,
             json_out: String::new(),
             trace_out: String::new(),
+            chaos: String::new(),
+            chaos_seed: 0,
+            checkpoint_out: String::new(),
+            checkpoint_every: 1,
+            resume: String::new(),
         }
     }
 }
@@ -276,6 +299,32 @@ impl RunConfig {
                 "",
                 "write the JSONL tracing journal here (convert with `usec trace`)",
             ),
+            ArgSpec::opt(
+                "chaos",
+                "",
+                "seeded fault schedule, e.g. drop=0.05,delay=20:0.1,\
+                 partition=1@2..5,throttle=0:4,crash=2@3+2",
+            ),
+            ArgSpec::opt(
+                "chaos-seed",
+                "0",
+                "chaos roll seed (0 = derive from --seed)",
+            ),
+            ArgSpec::opt(
+                "checkpoint-out",
+                "",
+                "checkpoint resumable master state here at step boundaries",
+            ),
+            ArgSpec::opt(
+                "checkpoint-every",
+                "1",
+                "steps between checkpoints (with --checkpoint-out)",
+            ),
+            ArgSpec::opt(
+                "resume",
+                "",
+                "resume a crashed run from this checkpoint file",
+            ),
         ]
     }
 
@@ -321,6 +370,11 @@ impl RunConfig {
             pipeline: a.has("pipeline"),
             json_out: a.get("json-out").unwrap_or("").to_string(),
             trace_out: a.get("trace-out").unwrap_or("").to_string(),
+            chaos: a.get("chaos").unwrap_or("").to_string(),
+            chaos_seed: a.get_u64("chaos-seed")?,
+            checkpoint_out: a.get("checkpoint-out").unwrap_or("").to_string(),
+            checkpoint_every: a.get_usize("checkpoint-every")?,
+            resume: a.get("resume").unwrap_or("").to_string(),
         };
         let mut cfg = cfg;
         if !cfg.workers.is_empty() {
@@ -386,6 +440,11 @@ impl RunConfig {
         }
         self.recovery.validate()?;
         self.rebalance.validate()?;
+        // reject a malformed chaos schedule up front, not mid-run
+        crate::net::ChaosSpec::parse(&self.chaos)?;
+        if self.checkpoint_every == 0 {
+            return Err(Error::Config("checkpoint-every must be at least 1".into()));
+        }
         if !self.workers.is_empty() && self.workers.len() != self.n {
             return Err(Error::Config(format!(
                 "{} worker addresses given for N={} machines",
@@ -598,6 +657,53 @@ mod tests {
         // default: off, the synchronous loop
         let none = Args::parse(&[], &RunConfig::arg_specs()).unwrap();
         assert!(!RunConfig::from_args(&none).unwrap().pipeline);
+    }
+
+    #[test]
+    fn robustness_flags_parse_and_default_off() {
+        let argv: Vec<String> = [
+            "--chaos",
+            "drop=0.05,crash=2@3+2",
+            "--chaos-seed",
+            "99",
+            "--checkpoint-out",
+            "run.ckpt",
+            "--checkpoint-every",
+            "4",
+            "--resume",
+            "old.ckpt",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        let a = Args::parse(&argv, &RunConfig::arg_specs()).unwrap();
+        let cfg = RunConfig::from_args(&a).unwrap();
+        assert_eq!(cfg.chaos, "drop=0.05,crash=2@3+2");
+        assert_eq!(cfg.chaos_seed, 99);
+        assert_eq!(cfg.checkpoint_out, "run.ckpt");
+        assert_eq!(cfg.checkpoint_every, 4);
+        assert_eq!(cfg.resume, "old.ckpt");
+
+        // defaults: everything off (flags-absent ⇒ classic behaviour)
+        let none = Args::parse(&[], &RunConfig::arg_specs()).unwrap();
+        let cfg = RunConfig::from_args(&none).unwrap();
+        assert!(cfg.chaos.is_empty());
+        assert_eq!(cfg.chaos_seed, 0);
+        assert!(cfg.checkpoint_out.is_empty());
+        assert_eq!(cfg.checkpoint_every, 1);
+        assert!(cfg.resume.is_empty());
+
+        // malformed schedules and degenerate cadence rejected at validate
+        let bad = RunConfig {
+            chaos: "drop=oops".into(),
+            ..Default::default()
+        };
+        assert!(bad.validate().is_err());
+        let bad = RunConfig {
+            checkpoint_every: 0,
+            ..Default::default()
+        };
+        assert!(bad.validate().is_err());
     }
 
     #[test]

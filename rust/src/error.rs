@@ -44,6 +44,10 @@ pub enum Error {
     /// Shape mismatch in linear-algebra operations.
     Shape(String),
 
+    /// Checkpoint file rejected (bad version, checksum mismatch,
+    /// wrong-job digest, truncation).
+    Checkpoint(String),
+
     /// Wrapped I/O error.
     Io(std::io::Error),
 
@@ -62,6 +66,7 @@ impl fmt::Display for Error {
             Error::Cluster(m) => write!(f, "cluster error: {m}"),
             Error::Wire(m) => write!(f, "wire error: {m}"),
             Error::Shape(m) => write!(f, "shape error: {m}"),
+            Error::Checkpoint(m) => write!(f, "checkpoint error: {m}"),
             Error::Io(e) => write!(f, "io error: {e}"),
             Error::Xla(m) => write!(f, "xla error: {m}"),
         }
@@ -95,6 +100,10 @@ impl Error {
     /// Helper: build an [`Error::Wire`].
     pub fn wire(msg: impl Into<String>) -> Self {
         Error::Wire(msg.into())
+    }
+    /// Helper: build an [`Error::Checkpoint`].
+    pub fn checkpoint(msg: impl Into<String>) -> Self {
+        Error::Checkpoint(msg.into())
     }
 }
 

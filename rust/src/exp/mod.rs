@@ -56,7 +56,16 @@ pub fn master_cli(argv: &[String]) -> Result<()> {
 /// carry `overlap_ns` per step — the previous step's combine time
 /// hidden inside this step's dispatch+compute window; the key is
 /// omitted on synchronous steps, keeping classic dumps byte-identical.
-/// The journal itself is converted offline with
+/// Robustness runs add three more per-step keys, each omitted when
+/// zero/false so classic dumps stay byte-identical: `faults` (chaos
+/// faults injected during the step, `--chaos`), `retries` (backed-off
+/// re-admission dials attempted before the step), and `checkpoint`
+/// (`true` on steps whose boundary wrote a `--checkpoint-out`
+/// snapshot). With tracing on, each worker's counters also gain
+/// `dial_attempts`/`dial_successes` once any backed-off dial happened.
+/// The run-identity object gains `chaos` (the schedule string) only
+/// when `--chaos` is set, and `resumed_from_step` only under
+/// `--resume`. The journal itself is converted offline with
 /// `usec trace <journal> [--out trace.json] [--summary]`.
 fn run_and_report(cfg: &RunConfig) -> Result<()> {
     let res = crate::apps::run_power_iteration(cfg)?;
@@ -119,6 +128,33 @@ fn run_and_report(cfg: &RunConfig) -> Result<()> {
              re-dispatched to surviving replicas"
         );
     }
+    let faults: u64 = res.timeline.steps().iter().map(|s| s.faults).sum();
+    if faults > 0 {
+        let retries: u64 = res.timeline.steps().iter().map(|s| s.retries).sum();
+        println!(
+            "chaos: {faults} fault(s) injected ({}), {retries} backed-off \
+             re-admission dial(s)",
+            cfg.chaos
+        );
+    }
+    if !cfg.checkpoint_out.is_empty() {
+        let boundaries = res.timeline.steps().iter().filter(|s| s.checkpoint).count();
+        println!(
+            "checkpointed {boundaries} step boundarie(s) to {} (resume with \
+             `usec master --resume {}`)",
+            cfg.checkpoint_out, cfg.checkpoint_out
+        );
+    }
+    if !cfg.resume.is_empty() {
+        if let Some(first) = res.timeline.steps().first() {
+            println!(
+                "resumed from {} at step {} ({} step(s) executed)",
+                cfg.resume,
+                first.step,
+                res.timeline.len()
+            );
+        }
+    }
     if !cfg.trace_out.is_empty() {
         println!(
             "wrote tracing journal to {} (convert with `usec trace {}`)",
@@ -153,6 +189,14 @@ fn run_and_report(cfg: &RunConfig) -> Result<()> {
             .val("timeline", res.timeline.to_json());
         if !cfg.trace_out.is_empty() {
             doc = doc.str("trace_out", &cfg.trace_out);
+        }
+        if !cfg.chaos.is_empty() {
+            doc = doc.str("chaos", &cfg.chaos);
+        }
+        if let Some(first) = res.timeline.steps().first() {
+            if !cfg.resume.is_empty() {
+                doc = doc.num("resumed_from_step", first.step as f64);
+            }
         }
         std::fs::write(&cfg.json_out, format!("{}\n", doc.build()))?;
         println!("wrote timeline JSON to {}", cfg.json_out);

@@ -107,6 +107,45 @@
 //! With the flag off the loop, the wire traffic and the output are
 //! byte-identical to the classic synchronous master.
 //!
+//! ## Robustness
+//!
+//! Three layers make elasticity *chaos-tested* rather than assumed:
+//!
+//! * **Seeded fault injection** ([`net::ChaosTransport`], `--chaos`) — a
+//!   transport wrapper that composes over both the local and the TCP
+//!   backend and injects faults from a deterministic seed
+//!   (`--chaos-seed`, default `seed ^ 0xC4A0`): frame drops, delivery
+//!   delays, duplication, payload corruption (caught by the codec's
+//!   checksums), asymmetric partitions (`partition=W@A..B[:tx|:rx]`),
+//!   slow-worker throttles (`throttle=W:F`) and crash-then-restart
+//!   windows (`crash=W@S+K`). The same spec + seed replays the same
+//!   fault schedule byte-for-byte; every injected fault is journaled as
+//!   an [`obs`] event and counted into `timeline[i].faults`. Under
+//!   chaos the coverage timeout is shortened so a lost step surfaces as
+//!   a typed error in seconds, never a silent hang.
+//! * **Retry with capped backoff** ([`util::retry`]) — one shared
+//!   policy (capped exponential backoff, deterministic jitter) behind
+//!   both TCP dial retries and the master's re-admission probes of dead
+//!   workers, so a host that stays down costs `O(log)` dial attempts
+//!   instead of one per step. Attempts and successes surface in the
+//!   per-worker counters and `timeline[i].retries`.
+//! * **Checkpoint/resume** ([`sched::checkpoint`], `--checkpoint-out` /
+//!   `--resume`) — at every `--checkpoint-every`-th step boundary the
+//!   master snapshots the iterate (exact `f32`/`f64` bit patterns), the
+//!   EWMA speeds, and the possibly-rebalanced placement into a
+//!   versioned, FNV-checksummed, workload-digested file through a
+//!   journal-style writer thread (atomic temp-file + rename). A killed
+//!   master restarts with `--resume <ckpt>` and — because `y_t = X w_t`
+//!   is assignment-invariant — lands on the uninterrupted run's answer;
+//!   damaged, truncated or wrong-job checkpoints are rejected with a
+//!   typed [`Error::Checkpoint`]. (Caveat: the injected-straggler RNG is
+//!   not replayed across a resume, so exact oracle-matching holds for
+//!   real-fault runs, not `--injected-stragglers` simulations.)
+//!
+//! All three flags default off and are byte-identical to the
+//! pre-robustness master when off — same wire traffic, same
+//! `--json-out`.
+//!
 //! ## Quickstart
 //!
 //! ```no_run

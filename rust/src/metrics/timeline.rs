@@ -49,6 +49,15 @@ pub struct StepRecord {
     /// in the synchronous loop, where the key is omitted from the JSON
     /// so sync dumps stay byte-identical to the pre-pipeline schema.
     pub overlap_ns: u64,
+    /// Chaos faults injected during this step (`--chaos`). Zero in
+    /// fault-free runs, where the key is omitted from the JSON.
+    pub faults: u64,
+    /// Backed-off retry attempts (dial/readmit) made during this step.
+    /// Zero on healthy steps, where the key is omitted from the JSON.
+    pub retries: u64,
+    /// True when a checkpoint was written at the end of this step
+    /// (`--checkpoint-out`); the key is omitted when false.
+    pub checkpoint: bool,
 }
 
 /// An append-only run log.
@@ -177,6 +186,17 @@ impl Timeline {
                 if s.overlap_ns > 0 {
                     b = b.num("overlap_ns", s.overlap_ns as f64);
                 }
+                // robustness keys only when something actually happened,
+                // so fault-free dumps keep the pre-chaos schema bytes
+                if s.faults > 0 {
+                    b = b.num("faults", s.faults as f64);
+                }
+                if s.retries > 0 {
+                    b = b.num("retries", s.retries as f64);
+                }
+                if s.checkpoint {
+                    b = b.val("checkpoint", Json::Bool(true));
+                }
                 // tracing tail only on traced steps, so untraced dumps stay
                 // byte-identical to the pre-tracing schema
                 if !s.counters.is_empty() {
@@ -294,6 +314,9 @@ mod tests {
             compute_p50_ms: f64::NAN,
             compute_p99_ms: f64::NAN,
             overlap_ns: 0,
+            faults: 0,
+            retries: 0,
+            checkpoint: false,
         }
     }
 
@@ -413,6 +436,31 @@ mod tests {
             steps[1].get("overlap_ns").is_none(),
             "sync dumps must stay byte-identical to the pre-pipeline schema"
         );
+    }
+
+    #[test]
+    fn robustness_keys_surface_only_when_set() {
+        let mut t = Timeline::new();
+        let mut chaotic = rec(0, 10, 0.5);
+        chaotic.faults = 3;
+        chaotic.retries = 2;
+        chaotic.checkpoint = true;
+        t.push(chaotic);
+        t.push(rec(1, 10, 0.1)); // fault-free step: keys absent entirely
+        let back = crate::util::json::Json::parse(&t.to_json().to_string()).unwrap();
+        let steps = back.get("timeline").unwrap().items().unwrap();
+        assert_eq!(steps[0].get_num("faults"), Some(3.0));
+        assert_eq!(steps[0].get_num("retries"), Some(2.0));
+        assert_eq!(
+            steps[0].get("checkpoint"),
+            Some(&crate::util::json::Json::Bool(true))
+        );
+        for key in ["faults", "retries", "checkpoint"] {
+            assert!(
+                steps[1].get(key).is_none(),
+                "fault-free dumps must stay byte-identical to the pre-chaos schema"
+            );
+        }
     }
 
     #[test]

@@ -1,0 +1,704 @@
+//! Seeded fault injection: a [`ChaosTransport`] wraps any inner transport
+//! and perturbs its traffic from a deterministic schedule (`--chaos`).
+//!
+//! ## Fault model
+//!
+//! The wrapper sits between the master and the real transport, so every
+//! fault is something a lossy network or a preempted host could do —
+//! never a correctness corruption the system is not designed to survive:
+//!
+//! * `drop=P` — an outbound work order is lost with probability `P`; the
+//!   worker never computes, and the overdue clock / coverage deadline
+//!   decides the step ([`crate::sched::recovery`]).
+//! * `delay=MS:P` — an inbound event is held for `MS` ms with
+//!   probability `P` (reordering + straggling reports).
+//! * `dup=P` — an inbound report is delivered twice with probability `P`
+//!   (the master's splice is idempotent; this proves it stays so).
+//! * `corrupt=P` — an inbound report is corrupted in flight with
+//!   probability `P`. The wire checksum would catch it, so the model is
+//!   detect-and-drop: the payload never reaches the splice.
+//! * `partition=W@A..B[:tx|:rx]` — worker `W` is unreachable during
+//!   steps `[A, B)`: both directions by default, `tx` (orders lost) or
+//!   `rx` (reports lost) for an asymmetric partition.
+//! * `throttle=W:F` — worker `W` runs `F`× slower: its orders carry a
+//!   [`StraggleMode::Slow`] instruction (the worker-side throttle the
+//!   straggler injector already uses).
+//! * `crash=W@S+K` — worker `W` crashes at step `S` (a synthesized
+//!   [`TransportEvent::Disconnected`], dead to liveness) and becomes
+//!   restartable once the run reaches step `S+K`, when a backed-off
+//!   readmit revives it.
+//!
+//! Every decision is a pure function of `(chaos seed, fault class, step,
+//! worker, occurrence counter)` — no wall-clock entropy — so the same
+//! seed and schedule reproduce the same fault sequence. Each injected
+//! fault bumps a counter (surfaced as `timeline[i].faults`) and, when a
+//! tracing journal is attached, lands as an
+//! [`EventKind::Fault`](crate::obs::EventKind) line whose note names the
+//! fault class.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use crate::error::{Error, Result};
+use crate::linalg::partition::RowRange;
+use crate::net::transport::{MigrationOrder, Transport, TransportEvent};
+use crate::net::{lock, AnyTransport};
+use crate::obs::{Event, EventKind, IoCounters, Recorder};
+use crate::sched::protocol::WorkOrder;
+use crate::sched::straggler::StraggleMode;
+
+/// Which direction(s) of a partition are severed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PartitionDir {
+    /// Both directions (the default).
+    Both,
+    /// Master → worker only: orders are lost, reports still arrive.
+    Tx,
+    /// Worker → master only: reports are lost, orders still arrive.
+    Rx,
+}
+
+/// One `partition=W@A..B` clause.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PartitionSpec {
+    pub worker: usize,
+    /// First step the partition is active.
+    pub from_step: usize,
+    /// First step it is healed again (exclusive bound).
+    pub to_step: usize,
+    pub dir: PartitionDir,
+}
+
+/// One `crash=W@S+K` clause.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CrashSpec {
+    pub worker: usize,
+    /// Step at which the worker dies.
+    pub at_step: usize,
+    /// Steps it stays down before a readmit can revive it.
+    pub down_steps: usize,
+}
+
+/// A parsed `--chaos` schedule: comma-separated clauses, e.g.
+/// `"drop=0.1,delay=20:0.3,crash=2@4+3"`.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ChaosSpec {
+    pub drop: f64,
+    pub delay_ms: u64,
+    pub delay_p: f64,
+    pub dup: f64,
+    pub corrupt: f64,
+    pub partitions: Vec<PartitionSpec>,
+    pub throttles: Vec<(usize, f64)>,
+    pub crashes: Vec<CrashSpec>,
+}
+
+impl ChaosSpec {
+    /// Parse the `--chaos` DSL. Empty input is the empty (no-op) spec.
+    pub fn parse(s: &str) -> Result<ChaosSpec> {
+        let mut spec = ChaosSpec::default();
+        for clause in s.split(',').map(str::trim).filter(|c| !c.is_empty()) {
+            let (key, val) = clause
+                .split_once('=')
+                .ok_or_else(|| bad_clause(clause, "expected key=value"))?;
+            match key {
+                "drop" => spec.drop = parse_prob(clause, val)?,
+                "dup" => spec.dup = parse_prob(clause, val)?,
+                "corrupt" => spec.corrupt = parse_prob(clause, val)?,
+                "delay" => {
+                    let (ms, p) = val
+                        .split_once(':')
+                        .ok_or_else(|| bad_clause(clause, "expected delay=MS:P"))?;
+                    spec.delay_ms = ms
+                        .parse()
+                        .map_err(|_| bad_clause(clause, "bad delay milliseconds"))?;
+                    spec.delay_p = parse_prob(clause, p)?;
+                }
+                "partition" => {
+                    let (w, rest) = val
+                        .split_once('@')
+                        .ok_or_else(|| bad_clause(clause, "expected partition=W@A..B"))?;
+                    let (range, dir) = match rest.rsplit_once(':') {
+                        Some((r, "tx")) => (r, PartitionDir::Tx),
+                        Some((r, "rx")) => (r, PartitionDir::Rx),
+                        Some(_) => return Err(bad_clause(clause, "direction must be tx or rx")),
+                        None => (rest, PartitionDir::Both),
+                    };
+                    let (a, b) = range
+                        .split_once("..")
+                        .ok_or_else(|| bad_clause(clause, "expected step range A..B"))?;
+                    let from_step =
+                        a.parse().map_err(|_| bad_clause(clause, "bad start step"))?;
+                    let to_step = b.parse().map_err(|_| bad_clause(clause, "bad end step"))?;
+                    if to_step <= from_step {
+                        return Err(bad_clause(clause, "empty step range"));
+                    }
+                    spec.partitions.push(PartitionSpec {
+                        worker: w.parse().map_err(|_| bad_clause(clause, "bad worker id"))?,
+                        from_step,
+                        to_step,
+                        dir,
+                    });
+                }
+                "throttle" => {
+                    let (w, f) = val
+                        .split_once(':')
+                        .ok_or_else(|| bad_clause(clause, "expected throttle=W:F"))?;
+                    let factor: f64 =
+                        f.parse().map_err(|_| bad_clause(clause, "bad slow factor"))?;
+                    if !(factor > 1.0) || !factor.is_finite() {
+                        return Err(bad_clause(clause, "slow factor must be > 1"));
+                    }
+                    spec.throttles.push((
+                        w.parse().map_err(|_| bad_clause(clause, "bad worker id"))?,
+                        factor,
+                    ));
+                }
+                "crash" => {
+                    let (w, rest) = val
+                        .split_once('@')
+                        .ok_or_else(|| bad_clause(clause, "expected crash=W@S+K"))?;
+                    let (s0, k) = rest
+                        .split_once('+')
+                        .ok_or_else(|| bad_clause(clause, "expected crash=W@S+K"))?;
+                    spec.crashes.push(CrashSpec {
+                        worker: w.parse().map_err(|_| bad_clause(clause, "bad worker id"))?,
+                        at_step: s0.parse().map_err(|_| bad_clause(clause, "bad step"))?,
+                        down_steps: k
+                            .parse()
+                            .map_err(|_| bad_clause(clause, "bad down-step count"))?,
+                    });
+                }
+                _ => return Err(bad_clause(clause, "unknown fault class")),
+            }
+        }
+        Ok(spec)
+    }
+
+    /// True when no clause is active (the wrapper then only forwards).
+    pub fn is_empty(&self) -> bool {
+        self.drop == 0.0
+            && self.delay_p == 0.0
+            && self.dup == 0.0
+            && self.corrupt == 0.0
+            && self.partitions.is_empty()
+            && self.throttles.is_empty()
+            && self.crashes.is_empty()
+    }
+
+    fn partition_active(&self, worker: usize, step: usize, tx: bool) -> bool {
+        self.partitions.iter().any(|p| {
+            p.worker == worker
+                && step >= p.from_step
+                && step < p.to_step
+                && match p.dir {
+                    PartitionDir::Both => true,
+                    PartitionDir::Tx => tx,
+                    PartitionDir::Rx => !tx,
+                }
+        })
+    }
+
+    fn throttle_for(&self, worker: usize) -> Option<f64> {
+        self.throttles
+            .iter()
+            .find(|(w, _)| *w == worker)
+            .map(|&(_, f)| f)
+    }
+}
+
+fn bad_clause(clause: &str, why: &str) -> Error {
+    Error::Config(format!("bad --chaos clause '{clause}': {why}"))
+}
+
+fn parse_prob(clause: &str, v: &str) -> Result<f64> {
+    let p: f64 = v
+        .parse()
+        .map_err(|_| bad_clause(clause, "bad probability"))?;
+    if !(0.0..=1.0).contains(&p) {
+        return Err(bad_clause(clause, "probability must be in [0, 1]"));
+    }
+    Ok(p)
+}
+
+/// SplitMix64 finalizer — the stateless mixer behind every fault roll.
+fn mix(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// One deterministic roll in `[0, 1)`: a pure function of the seed, the
+/// fault class, the (step, worker) it concerns, and that class's
+/// occurrence counter — no wall clock, no shared RNG stream, so the same
+/// seed and schedule replay the same faults regardless of thread timing.
+fn roll(seed: u64, st: &mut ChaosState, class: FaultClass, step: usize, worker: usize) -> f64 {
+    let idx = class as usize;
+    let n = st.draws[idx];
+    st.draws[idx] = n.wrapping_add(1);
+    let z = mix(
+        seed ^ class.salt().wrapping_mul(0x0100_0000_01B3)
+            ^ (step as u64).wrapping_mul(0x9E37_79B9)
+            ^ (worker as u64).wrapping_mul(0x85EB_CA6B)
+            ^ n.wrapping_mul(0xC2B2_AE35),
+    );
+    (z >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+}
+
+/// Fault classes, used both as roll salts and journal note names.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum FaultClass {
+    Drop,
+    Delay,
+    Dup,
+    Corrupt,
+    Partition,
+    Throttle,
+    Crash,
+}
+
+impl FaultClass {
+    fn name(self) -> &'static str {
+        match self {
+            FaultClass::Drop => "drop",
+            FaultClass::Delay => "delay",
+            FaultClass::Dup => "dup",
+            FaultClass::Corrupt => "corrupt",
+            FaultClass::Partition => "partition",
+            FaultClass::Throttle => "throttle",
+            FaultClass::Crash => "crash",
+        }
+    }
+
+    fn salt(self) -> u64 {
+        match self {
+            FaultClass::Drop => 0xD80F,
+            FaultClass::Delay => 0xDE1A,
+            FaultClass::Dup => 0xD0B1,
+            FaultClass::Corrupt => 0xC0BB,
+            FaultClass::Partition => 0xBA27,
+            FaultClass::Throttle => 0x7807,
+            FaultClass::Crash => 0xCBA5,
+        }
+    }
+}
+
+#[derive(Debug)]
+struct ChaosState {
+    /// Latest step observed on the send path (events without their own
+    /// step — disconnects — are attributed to it).
+    step: usize,
+    /// Per-class occurrence counters: the roll salt that separates two
+    /// decisions about the same (class, step, worker).
+    draws: [u64; 7],
+    /// Inbound events held back by `delay=`, with their release instant.
+    delayed: Vec<(Instant, TransportEvent)>,
+    /// Synthesized `Disconnected` events awaiting delivery (crash).
+    pending_disconnects: Vec<usize>,
+    /// Crash clauses that already fired.
+    fired: Vec<bool>,
+    /// Workers currently masked dead by a crash clause.
+    crashed: Vec<bool>,
+}
+
+/// The chaos wrapper. Construct via [`ChaosTransport::new`] and install
+/// as [`AnyTransport::Chaos`]; with an empty spec it forwards verbatim
+/// (the bench's idle-overhead case).
+pub struct ChaosTransport {
+    inner: AnyTransport,
+    spec: ChaosSpec,
+    seed: u64,
+    state: Mutex<ChaosState>,
+    faults: AtomicU64,
+    recorder: Option<Recorder>,
+}
+
+impl ChaosTransport {
+    pub fn new(
+        inner: AnyTransport,
+        spec: ChaosSpec,
+        seed: u64,
+        recorder: Option<Recorder>,
+    ) -> ChaosTransport {
+        let n = inner.size();
+        let fired = vec![false; spec.crashes.len()];
+        ChaosTransport {
+            inner,
+            spec,
+            seed,
+            state: Mutex::new(ChaosState {
+                step: 0,
+                draws: [0; 7],
+                delayed: Vec::new(),
+                pending_disconnects: Vec::new(),
+                fired,
+                crashed: vec![false; n],
+            }),
+            faults: AtomicU64::new(0),
+            recorder,
+        }
+    }
+
+    /// Total faults injected so far (the harness diffs this per step).
+    pub fn faults_total(&self) -> u64 {
+        self.faults.load(Ordering::Relaxed)
+    }
+
+    /// The wrapped transport's wire counters.
+    pub fn io_counters(&self) -> Vec<IoCounters> {
+        self.inner.io_counters()
+    }
+
+    fn fault(&self, class: FaultClass, step: usize, worker: usize) {
+        self.faults.fetch_add(1, Ordering::Relaxed);
+        if let Some(rec) = &self.recorder {
+            rec.emit(
+                Event::new(EventKind::Fault, step, rec.now_ns())
+                    .worker(worker)
+                    .note(class.name()),
+            );
+        }
+    }
+
+    /// Advance the observed step and fire any crash clause whose step has
+    /// arrived. Called from the send path (dispatch defines the step).
+    fn advance_step(&self, st: &mut ChaosState, step: usize) {
+        st.step = st.step.max(step);
+        for (i, c) in self.spec.crashes.iter().enumerate() {
+            if !st.fired[i] && st.step >= c.at_step && c.worker < st.crashed.len() {
+                st.fired[i] = true;
+                st.crashed[c.worker] = true;
+                st.pending_disconnects.push(c.worker);
+                self.fault(FaultClass::Crash, st.step, c.worker);
+            }
+        }
+    }
+
+    /// Apply the inbound fault schedule to one event. `None` ⇒ consumed
+    /// (dropped or held back).
+    fn process_inbound(&self, st: &mut ChaosState, ev: TransportEvent) -> Option<TransportEvent> {
+        let (worker, step) = match &ev {
+            TransportEvent::Report(r) => (r.worker, r.step),
+            TransportEvent::Failed { worker, step, .. } => (*worker, *step),
+            TransportEvent::Disconnected { worker } => (*worker, st.step),
+        };
+        if st.crashed.get(worker).copied().unwrap_or(false) {
+            // a crashed worker is silent: even its in-flight traffic died
+            // with it (its Disconnected was already synthesized)
+            return None;
+        }
+        if self.spec.partition_active(worker, step, false) {
+            self.fault(FaultClass::Partition, step, worker);
+            return None;
+        }
+        if let TransportEvent::Report(_) = &ev {
+            if self.spec.corrupt > 0.0
+                && roll(self.seed, st, FaultClass::Corrupt, step, worker) < self.spec.corrupt
+            {
+                // checksum-detected corruption: the payload never reaches
+                // the splice — semantically a drop, counted separately
+                self.fault(FaultClass::Corrupt, step, worker);
+                return None;
+            }
+            if self.spec.dup > 0.0
+                && roll(self.seed, st, FaultClass::Dup, step, worker) < self.spec.dup
+            {
+                self.fault(FaultClass::Dup, step, worker);
+                st.delayed.push((Instant::now(), ev.clone()));
+            }
+        }
+        if self.spec.delay_p > 0.0
+            && roll(self.seed, st, FaultClass::Delay, step, worker) < self.spec.delay_p
+        {
+            self.fault(FaultClass::Delay, step, worker);
+            st.delayed
+                .push((Instant::now() + Duration::from_millis(self.spec.delay_ms), ev));
+            return None;
+        }
+        Some(ev)
+    }
+}
+
+impl std::fmt::Debug for ChaosTransport {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ChaosTransport")
+            .field("spec", &self.spec)
+            .field("seed", &self.seed)
+            .field("faults", &self.faults_total())
+            .finish_non_exhaustive()
+    }
+}
+
+impl Transport for ChaosTransport {
+    fn size(&self) -> usize {
+        self.inner.size()
+    }
+
+    fn alive(&self) -> Vec<bool> {
+        let mut alive = self.inner.alive();
+        let st = lock(&self.state);
+        for (a, &dead) in alive.iter_mut().zip(&st.crashed) {
+            if dead {
+                *a = false;
+            }
+        }
+        alive
+    }
+
+    fn send(&self, worker: usize, mut order: WorkOrder) -> Result<()> {
+        let step = order.step;
+        let mut st = lock(&self.state);
+        self.advance_step(&mut st, step);
+        if st.crashed.get(worker).copied().unwrap_or(false) {
+            // dead host: the bytes go nowhere; liveness will surface it
+            return Ok(());
+        }
+        if self.spec.partition_active(worker, step, true) {
+            self.fault(FaultClass::Partition, step, worker);
+            return Ok(());
+        }
+        if self.spec.drop > 0.0
+            && roll(self.seed, &mut st, FaultClass::Drop, step, worker) < self.spec.drop
+        {
+            self.fault(FaultClass::Drop, step, worker);
+            return Ok(());
+        }
+        if let Some(f) = self.spec.throttle_for(worker) {
+            if order.straggle.is_none() {
+                order.straggle = Some(StraggleMode::Slow(f));
+                self.fault(FaultClass::Throttle, step, worker);
+            }
+        }
+        drop(st);
+        self.inner.send(worker, order)
+    }
+
+    fn recv_timeout(&self, timeout: Duration) -> Result<TransportEvent> {
+        let deadline = Instant::now() + timeout;
+        loop {
+            // synthesized and released events take precedence
+            let wait = {
+                let mut st = lock(&self.state);
+                if let Some(w) = st.pending_disconnects.pop() {
+                    return Ok(TransportEvent::Disconnected { worker: w });
+                }
+                let now = Instant::now();
+                if let Some(pos) = st.delayed.iter().position(|(at, _)| *at <= now) {
+                    return Ok(st.delayed.remove(pos).1);
+                }
+                // bound the inner wait by both the caller's deadline and
+                // the earliest held-back event's release
+                let mut wait = deadline.saturating_duration_since(now);
+                if let Some(at) = st.delayed.iter().map(|(at, _)| *at).min() {
+                    wait = wait.min(at.saturating_duration_since(now));
+                }
+                wait.max(Duration::from_millis(1))
+            };
+            let expired = Instant::now() >= deadline;
+            match self.inner.recv_timeout(wait) {
+                Ok(ev) => {
+                    let mut st = lock(&self.state);
+                    if let Some(ev) = self.process_inbound(&mut st, ev) {
+                        return Ok(ev);
+                    }
+                }
+                Err(e) => {
+                    let st = lock(&self.state);
+                    let more = !st.pending_disconnects.is_empty() || !st.delayed.is_empty();
+                    drop(st);
+                    if expired || !more {
+                        return Err(e);
+                    }
+                }
+            }
+            if Instant::now() >= deadline {
+                let st = lock(&self.state);
+                if st.pending_disconnects.is_empty()
+                    && !st.delayed.iter().any(|(at, _)| *at <= Instant::now())
+                {
+                    return Err(Error::Cluster("receive window elapsed".into()));
+                }
+            }
+        }
+    }
+
+    fn drain(&self) -> Vec<TransportEvent> {
+        let mut out = Vec::new();
+        let mut st = lock(&self.state);
+        out.extend(
+            st.pending_disconnects
+                .drain(..)
+                .map(|w| TransportEvent::Disconnected { worker: w }),
+        );
+        // late anyway: held-back events flush here instead of lingering
+        let delayed: Vec<TransportEvent> = st.delayed.drain(..).map(|(_, ev)| ev).collect();
+        out.extend(delayed);
+        for ev in self.inner.drain() {
+            if let Some(ev) = self.process_inbound(&mut st, ev) {
+                out.push(ev);
+            }
+        }
+        out
+    }
+
+    fn readmit(&self) -> usize {
+        let eligible = vec![true; self.inner.size()];
+        self.readmit_filtered(&eligible)
+    }
+
+    fn readmit_filtered(&self, eligible: &[bool]) -> usize {
+        let mut revived = 0;
+        {
+            let mut st = lock(&self.state);
+            let step = st.step;
+            for c in &self.spec.crashes {
+                if c.worker < st.crashed.len()
+                    && st.crashed[c.worker]
+                    && eligible.get(c.worker).copied().unwrap_or(false)
+                    && step >= c.at_step.saturating_add(c.down_steps)
+                {
+                    st.crashed[c.worker] = false;
+                    revived += 1;
+                }
+            }
+        }
+        revived + self.inner.readmit_filtered(eligible)
+    }
+
+    fn migrate(&self, order: &MigrationOrder, sub_ranges: &[RowRange]) -> Result<()> {
+        self.inner.migrate(order, sub_ranges)
+    }
+
+    fn migrate_async(&self, order: &MigrationOrder, sub_ranges: &[RowRange]) -> Result<bool> {
+        self.inner.migrate_async(order, sub_ranges)
+    }
+
+    fn poll_migrations(&self) -> Vec<(u64, Result<()>)> {
+        self.inner.poll_migrations()
+    }
+
+    fn resident_bytes(&self) -> Vec<u64> {
+        self.inner.resident_bytes()
+    }
+
+    fn shutdown(&mut self) {
+        self.inner.shutdown();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_parses_every_clause() {
+        let spec = ChaosSpec::parse(
+            "drop=0.1, delay=25:0.5, dup=0.05, corrupt=0.01, \
+             partition=2@1..4:tx, throttle=0:3.5, crash=1@2+3",
+        )
+        .unwrap();
+        assert_eq!(spec.drop, 0.1);
+        assert_eq!(spec.delay_ms, 25);
+        assert_eq!(spec.delay_p, 0.5);
+        assert_eq!(spec.dup, 0.05);
+        assert_eq!(spec.corrupt, 0.01);
+        assert_eq!(
+            spec.partitions,
+            vec![PartitionSpec {
+                worker: 2,
+                from_step: 1,
+                to_step: 4,
+                dir: PartitionDir::Tx,
+            }]
+        );
+        assert_eq!(spec.throttles, vec![(0, 3.5)]);
+        assert_eq!(
+            spec.crashes,
+            vec![CrashSpec {
+                worker: 1,
+                at_step: 2,
+                down_steps: 3,
+            }]
+        );
+        assert!(ChaosSpec::parse("").unwrap().is_empty());
+        assert!(!spec.is_empty());
+    }
+
+    #[test]
+    fn spec_rejects_malformed_clauses() {
+        for bad in [
+            "drop=1.5",
+            "drop",
+            "delay=abc:0.1",
+            "delay=10",
+            "partition=1@5..5",
+            "partition=1@3..1",
+            "partition=x@1..2",
+            "partition=1@1..2:up",
+            "throttle=0:0.5",
+            "throttle=0",
+            "crash=1@2",
+            "warp=0.1",
+        ] {
+            assert!(
+                matches!(ChaosSpec::parse(bad), Err(Error::Config(_))),
+                "'{bad}' should be rejected with a config error"
+            );
+        }
+    }
+
+    #[test]
+    fn partition_activation_respects_range_and_direction() {
+        let spec = ChaosSpec::parse("partition=1@2..4:rx").unwrap();
+        assert!(!spec.partition_active(1, 1, false));
+        assert!(spec.partition_active(1, 2, false));
+        assert!(spec.partition_active(1, 3, false));
+        assert!(!spec.partition_active(1, 4, false));
+        // rx severs only worker→master
+        assert!(!spec.partition_active(1, 3, true));
+        // other workers unaffected
+        assert!(!spec.partition_active(0, 3, false));
+    }
+
+    fn fresh_state(n: usize) -> ChaosState {
+        ChaosState {
+            step: 0,
+            draws: [0; 7],
+            delayed: Vec::new(),
+            pending_disconnects: Vec::new(),
+            fired: Vec::new(),
+            crashed: vec![false; n],
+        }
+    }
+
+    #[test]
+    fn rolls_are_deterministic_in_the_seed() {
+        let seq = |seed: u64| -> Vec<u64> {
+            let mut st = fresh_state(3);
+            (0..32)
+                .map(|i| (roll(seed, &mut st, FaultClass::Drop, i / 3, i % 3) * 1e9) as u64)
+                .collect()
+        };
+        assert_eq!(seq(42), seq(42), "same seed must replay the same rolls");
+        assert_ne!(seq(42), seq(43), "different seeds must diverge");
+        // rolls are in [0, 1) and not degenerate
+        let mut st = fresh_state(2);
+        let vals: Vec<f64> = (0..64)
+            .map(|i| roll(7, &mut st, FaultClass::Delay, i, 0))
+            .collect();
+        assert!(vals.iter().all(|&v| (0.0..1.0).contains(&v)));
+        assert!(vals.iter().any(|&v| v < 0.5) && vals.iter().any(|&v| v >= 0.5));
+    }
+
+    #[test]
+    fn occurrence_counter_separates_same_step_decisions() {
+        // two decisions about the same (class, step, worker) must not be
+        // forced equal — the occurrence counter salts them apart
+        let mut st = fresh_state(1);
+        let a = roll(9, &mut st, FaultClass::Drop, 3, 0);
+        let b = roll(9, &mut st, FaultClass::Drop, 3, 0);
+        assert_ne!(a, b);
+    }
+}

@@ -112,6 +112,7 @@
 //! (decode/compute/throttle/assemble/encode/idle, 6 × u64). Untraced
 //! traffic omits both trailers and encodes byte-identically to v4.
 
+pub mod chaos;
 pub mod codec;
 pub mod daemon;
 pub mod frame;
@@ -119,6 +120,7 @@ pub mod local;
 pub mod tcp;
 pub mod transport;
 
+pub use chaos::{ChaosSpec, ChaosTransport};
 pub use codec::{
     data_checksum, DataFrame, Hello, HelloAck, PlacementUpdate, WireMsg, WIRE_VERSION,
 };
@@ -143,6 +145,9 @@ pub(crate) fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
 pub enum AnyTransport {
     Local(LocalTransport),
     Tcp(TcpTransport),
+    /// Fault-injection wrapper over either of the above (`--chaos`).
+    /// Boxed: the wrapper holds an `AnyTransport` itself.
+    Chaos(Box<ChaosTransport>),
 }
 
 impl AnyTransport {
@@ -153,6 +158,15 @@ impl AnyTransport {
         match self {
             AnyTransport::Local(t) => vec![Default::default(); t.size()],
             AnyTransport::Tcp(t) => t.io_counters(),
+            AnyTransport::Chaos(t) => t.io_counters(),
+        }
+    }
+
+    /// Faults injected so far by a chaos wrapper (0 on real transports).
+    pub fn chaos_faults(&self) -> u64 {
+        match self {
+            AnyTransport::Chaos(t) => t.faults_total(),
+            _ => 0,
         }
     }
 }
@@ -162,6 +176,7 @@ impl Transport for AnyTransport {
         match self {
             AnyTransport::Local(t) => t.size(),
             AnyTransport::Tcp(t) => t.size(),
+            AnyTransport::Chaos(t) => t.size(),
         }
     }
 
@@ -169,6 +184,7 @@ impl Transport for AnyTransport {
         match self {
             AnyTransport::Local(t) => t.alive(),
             AnyTransport::Tcp(t) => t.alive(),
+            AnyTransport::Chaos(t) => t.alive(),
         }
     }
 
@@ -176,6 +192,7 @@ impl Transport for AnyTransport {
         match self {
             AnyTransport::Local(t) => t.send(worker, order),
             AnyTransport::Tcp(t) => t.send(worker, order),
+            AnyTransport::Chaos(t) => t.send(worker, order),
         }
     }
 
@@ -183,6 +200,7 @@ impl Transport for AnyTransport {
         match self {
             AnyTransport::Local(t) => t.recv_timeout(timeout),
             AnyTransport::Tcp(t) => t.recv_timeout(timeout),
+            AnyTransport::Chaos(t) => t.recv_timeout(timeout),
         }
     }
 
@@ -190,6 +208,7 @@ impl Transport for AnyTransport {
         match self {
             AnyTransport::Local(t) => t.drain(),
             AnyTransport::Tcp(t) => t.drain(),
+            AnyTransport::Chaos(t) => t.drain(),
         }
     }
 
@@ -197,6 +216,15 @@ impl Transport for AnyTransport {
         match self {
             AnyTransport::Local(t) => t.readmit(),
             AnyTransport::Tcp(t) => t.readmit(),
+            AnyTransport::Chaos(t) => t.readmit(),
+        }
+    }
+
+    fn readmit_filtered(&self, eligible: &[bool]) -> usize {
+        match self {
+            AnyTransport::Local(t) => t.readmit_filtered(eligible),
+            AnyTransport::Tcp(t) => t.readmit_filtered(eligible),
+            AnyTransport::Chaos(t) => t.readmit_filtered(eligible),
         }
     }
 
@@ -208,6 +236,7 @@ impl Transport for AnyTransport {
         match self {
             AnyTransport::Local(t) => t.migrate(order, sub_ranges),
             AnyTransport::Tcp(t) => t.migrate(order, sub_ranges),
+            AnyTransport::Chaos(t) => t.migrate(order, sub_ranges),
         }
     }
 
@@ -219,6 +248,7 @@ impl Transport for AnyTransport {
         match self {
             AnyTransport::Local(t) => t.migrate_async(order, sub_ranges),
             AnyTransport::Tcp(t) => t.migrate_async(order, sub_ranges),
+            AnyTransport::Chaos(t) => t.migrate_async(order, sub_ranges),
         }
     }
 
@@ -226,6 +256,7 @@ impl Transport for AnyTransport {
         match self {
             AnyTransport::Local(t) => t.poll_migrations(),
             AnyTransport::Tcp(t) => t.poll_migrations(),
+            AnyTransport::Chaos(t) => t.poll_migrations(),
         }
     }
 
@@ -233,6 +264,7 @@ impl Transport for AnyTransport {
         match self {
             AnyTransport::Local(t) => t.resident_bytes(),
             AnyTransport::Tcp(t) => t.resident_bytes(),
+            AnyTransport::Chaos(t) => t.resident_bytes(),
         }
     }
 
@@ -240,6 +272,7 @@ impl Transport for AnyTransport {
         match self {
             AnyTransport::Local(t) => t.shutdown(),
             AnyTransport::Tcp(t) => t.shutdown(),
+            AnyTransport::Chaos(t) => t.shutdown(),
         }
     }
 }

@@ -885,6 +885,13 @@ impl Transport for TcpTransport {
     /// and counts toward the availability set from the caller's next
     /// `alive()` snapshot.
     fn readmit(&self) -> usize {
+        self.readmit_filtered(&vec![true; self.peers.len()])
+    }
+
+    /// [`Transport::readmit`] restricted to the eligible set: the harness
+    /// marks a dead peer eligible only when its backoff window has
+    /// elapsed, so a permanently-dead host costs O(log) dials.
+    fn readmit_filtered(&self, eligible: &[bool]) -> usize {
         let mut rejoined = 0usize;
         for (id, p) in self.peers.iter().enumerate() {
             // Only re-dial peers whose socket is actually gone (reader
@@ -895,6 +902,9 @@ impl Transport for TcpTransport {
             // traffic resumes, exactly the pre-readmit behaviour.
             if p.alive.load(Ordering::Relaxed) {
                 continue;
+            }
+            if !eligible.get(id).copied().unwrap_or(false) {
+                continue; // still inside its backoff window
             }
             // sever any half-open remains so the old reader exits and the
             // daemon's stale session (if any) ends

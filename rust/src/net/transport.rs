@@ -92,6 +92,17 @@ pub trait Transport {
         0
     }
 
+    /// Like [`Transport::readmit`], but re-dial **only** the workers whose
+    /// flag in `eligible` is set — the hook for the harness's backed-off
+    /// dial policy ([`crate::util::retry`]), so a permanently-dead host is
+    /// probed O(log) times instead of once per step. The default ignores
+    /// the filter and falls back to [`Transport::readmit`] (correct for
+    /// transports with nothing to re-dial).
+    fn readmit_filtered(&self, eligible: &[bool]) -> usize {
+        let _ = eligible;
+        self.readmit()
+    }
+
     /// Execute one replica move between steps ([`crate::rebalance`]):
     /// ship the rows to `order.to`, wait for its acknowledgement, and only
     /// then evict them from `order.from` — so the replica count of

@@ -56,10 +56,19 @@ pub enum EventKind {
     /// this span overlaps the *next* step's worker compute, which is what
     /// the Chrome export makes visible.
     Combine,
+    /// A chaos-injected fault fired (`--chaos`); the note names the fault
+    /// class (drop, delay, dup, corrupt, partition, throttle, crash).
+    Fault,
+    /// A backed-off retry attempt (dial/readmit) was made; `rows` carries
+    /// the attempt number.
+    Retry,
+    /// A checkpoint was written (or loaded, note "resume") at a step
+    /// boundary.
+    Checkpoint,
 }
 
 impl EventKind {
-    pub const ALL: [EventKind; 8] = [
+    pub const ALL: [EventKind; 11] = [
         EventKind::Step,
         EventKind::Solve,
         EventKind::Dispatch,
@@ -68,6 +77,9 @@ impl EventKind {
         EventKind::Migration,
         EventKind::HeartbeatLapse,
         EventKind::Combine,
+        EventKind::Fault,
+        EventKind::Retry,
+        EventKind::Checkpoint,
     ];
 
     /// Stable wire name, used in the JSONL `kind` field.
@@ -81,6 +93,9 @@ impl EventKind {
             EventKind::Migration => "migration",
             EventKind::HeartbeatLapse => "heartbeat_lapse",
             EventKind::Combine => "combine",
+            EventKind::Fault => "fault",
+            EventKind::Retry => "retry",
+            EventKind::Checkpoint => "checkpoint",
         }
     }
 
@@ -344,7 +359,10 @@ mod tests {
                 "recovery",
                 "migration",
                 "heartbeat_lapse",
-                "combine"
+                "combine",
+                "fault",
+                "retry",
+                "checkpoint"
             ]
         );
         for k in EventKind::ALL {

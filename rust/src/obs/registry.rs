@@ -35,11 +35,13 @@ pub struct CounterSnapshot {
     pub reconnects: u64,
     pub recoveries: u64,
     pub migrations: u64,
+    pub dial_attempts: u64,
+    pub dial_successes: u64,
 }
 
 impl CounterSnapshot {
     pub fn to_json(&self) -> Json {
-        ObjBuilder::new()
+        let mut b = ObjBuilder::new()
             .num("worker", self.worker as f64)
             .num("orders", self.orders as f64)
             .num("rows", self.rows as f64)
@@ -49,8 +51,15 @@ impl CounterSnapshot {
             .num("frames_rx", self.frames_rx as f64)
             .num("reconnects", self.reconnects as f64)
             .num("recoveries", self.recoveries as f64)
-            .num("migrations", self.migrations as f64)
-            .build()
+            .num("migrations", self.migrations as f64);
+        // Dial counters only appear once a backed-off re-dial happened,
+        // so fault-free runs keep the pre-robustness schema bytes.
+        if self.dial_attempts > 0 {
+            b = b
+                .num("dial_attempts", self.dial_attempts as f64)
+                .num("dial_successes", self.dial_successes as f64);
+        }
+        b.build()
     }
 }
 
@@ -60,6 +69,8 @@ struct WorkerCounters {
     reconnects: AtomicU64,
     recoveries: AtomicU64,
     migrations: AtomicU64,
+    dial_attempts: AtomicU64,
+    dial_successes: AtomicU64,
 }
 
 impl WorkerCounters {
@@ -70,6 +81,8 @@ impl WorkerCounters {
             reconnects: AtomicU64::new(0),
             recoveries: AtomicU64::new(0),
             migrations: AtomicU64::new(0),
+            dial_attempts: AtomicU64::new(0),
+            dial_successes: AtomicU64::new(0),
         }
     }
 }
@@ -121,6 +134,20 @@ impl Registry {
         }
     }
 
+    /// A backed-off re-dial of this (dead) worker was attempted.
+    pub fn add_dial_attempt(&self, worker: usize) {
+        if let Some(c) = self.workers.get(worker) {
+            c.dial_attempts.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// A backed-off re-dial of this worker succeeded (readmitted).
+    pub fn add_dial_success(&self, worker: usize) {
+        if let Some(c) = self.workers.get(worker) {
+            c.dial_successes.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
     /// Merge scheduler counters with the transport's I/O counters. `io`
     /// may be shorter than the worker list (e.g. local transport);
     /// missing entries read as zero.
@@ -141,6 +168,8 @@ impl Registry {
                     reconnects: c.reconnects.load(Ordering::Relaxed),
                     recoveries: c.recoveries.load(Ordering::Relaxed),
                     migrations: c.migrations.load(Ordering::Relaxed),
+                    dial_attempts: c.dial_attempts.load(Ordering::Relaxed),
+                    dial_successes: c.dial_successes.load(Ordering::Relaxed),
                 }
             })
             .collect()
@@ -188,6 +217,19 @@ mod tests {
     }
 
     #[test]
+    fn dial_counters_accumulate() {
+        let reg = Registry::new(2);
+        reg.add_dial_attempt(1);
+        reg.add_dial_attempt(1);
+        reg.add_dial_success(1);
+        reg.add_dial_attempt(9); // out of range: ignored
+        let snap = reg.snapshot(&[]);
+        assert_eq!(snap[1].dial_attempts, 2);
+        assert_eq!(snap[1].dial_successes, 1);
+        assert_eq!(snap[0].dial_attempts, 0);
+    }
+
+    #[test]
     fn snapshot_json_has_stable_keys() {
         let reg = Registry::new(1);
         reg.add_order(0, 7);
@@ -198,5 +240,12 @@ mod tests {
         ] {
             assert!(j.contains(&format!("\"{key}\":")), "missing {key} in {j}");
         }
+        // dial keys are gated: absent until a re-dial happens
+        assert!(!j.contains("dial_attempts"));
+        reg.add_dial_attempt(0);
+        reg.add_dial_success(0);
+        let j = reg.snapshot(&[])[0].to_json().to_string();
+        assert!(j.contains("\"dial_attempts\":1"));
+        assert!(j.contains("\"dial_successes\":1"));
     }
 }

@@ -1,0 +1,508 @@
+//! Master checkpoint/resume: versioned, checksummed run state at step
+//! boundaries (`--checkpoint-out` / `usec master --resume <ckpt>`).
+//!
+//! A [`Checkpoint`] captures everything the master needs to restart a
+//! killed job mid-run and land on the *same* answer as an uninterrupted
+//! oracle run:
+//!
+//! * the next step index and the iterate block `w` (bit-exact: every
+//!   `f32` is stored as its raw bit pattern in hex, so no decimal
+//!   round-trip error creeps in),
+//! * the per-worker EWMA speed estimates (`f64` bit patterns), so the
+//!   resumed assignment solve sees the same speeds the dead master saw,
+//! * the placement's stored sets, so a run that `--rebalance`d its way
+//!   to a custom placement resumes with that placement, not the seed one,
+//! * the workload spec digest, so a checkpoint cannot be replayed
+//!   against a different job, and
+//! * the pending-migration ledger (sequence numbers still awaiting
+//!   acks) — empty at a clean step boundary, recorded so a resume can
+//!   refuse a checkpoint taken mid-transfer.
+//!
+//! ## File format
+//!
+//! One canonical JSON object (sorted keys — [`ObjBuilder`] is
+//! `BTreeMap`-backed, so encoding is deterministic):
+//!
+//! ```text
+//! {"checksum":<fnv32 of payload text>,
+//!  "digest":<fnv32 of canonical workload string>,
+//!  "payload":{...},
+//!  "version":1}
+//! ```
+//!
+//! [`load`] validates in order: format version, FNV-1a checksum over the
+//! payload's canonical text, workload digest — each failure is a typed
+//! [`Error::Checkpoint`] naming what was rejected. Writes go through a
+//! temp file + rename so a crash mid-write never leaves a torn
+//! checkpoint where a good one stood.
+//!
+//! [`CheckpointWriter`] mirrors the journal's writer-thread shape
+//! ([`crate::obs::Journal`]): the step loop hands a snapshot over a
+//! channel and keeps computing; serialization and fsync-adjacent work
+//! happen off the critical path.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::sync::mpsc::{channel, Sender};
+use std::thread::JoinHandle;
+
+use crate::error::{Error, Result};
+use crate::net::WorkloadSpec;
+use crate::util::json::{Json, ObjBuilder};
+
+/// Bump when the payload schema changes incompatibly.
+pub const CHECKPOINT_VERSION: u32 = 1;
+
+/// FNV-1a over raw bytes, 32-bit (the same constants as
+/// [`crate::net::codec::data_checksum`], applied to text).
+pub fn fnv32(bytes: &[u8]) -> u32 {
+    let mut h: u32 = 0x811C_9DC5;
+    for &b in bytes {
+        h ^= b as u32;
+        h = h.wrapping_mul(0x0100_0193);
+    }
+    h
+}
+
+/// Digest of the workload identity — a checkpoint from a different job
+/// (different matrix, seed, or shape) must be rejected at load.
+pub fn workload_digest(spec: &WorkloadSpec) -> u32 {
+    let canon = match spec {
+        WorkloadSpec::PlantedSymmetric {
+            q,
+            eigval,
+            gap,
+            seed,
+        } => format!(
+            "planted:{q}:{:016x}:{:016x}:{seed}",
+            eigval.to_bits(),
+            gap.to_bits()
+        ),
+        WorkloadSpec::RandomDense { q, r, seed } => format!("dense:{q}:{r}:{seed}"),
+        WorkloadSpec::Streamed { q, r } => format!("streamed:{q}:{r}"),
+    };
+    fnv32(canon.as_bytes())
+}
+
+/// A resumable snapshot of master state at a step boundary.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Checkpoint {
+    /// First step the resumed run should execute.
+    pub next_step: usize,
+    /// Batch width of the iterate block.
+    pub nvec: usize,
+    /// Iterate `w` in interleaved layout ([`crate::linalg::Block`]).
+    pub w: Vec<f32>,
+    /// Per-worker EWMA speed estimates (rows/sec), indexed by worker id.
+    pub speeds: Vec<f64>,
+    /// Last convergence metric the app observed (e.g. eigenvalue
+    /// estimate); apps that don't track one store 0.
+    pub last_metric: f64,
+    /// `stored[n]` — sub-matrix ids worker `n` holds (the placement's
+    /// `Z_n` sets, possibly rebalanced away from the seed placement).
+    pub stored: Vec<Vec<usize>>,
+    /// Migration sequence numbers still in flight when the snapshot was
+    /// taken. Empty at a clean boundary; a resume refuses otherwise.
+    pub pending: Vec<u64>,
+}
+
+fn hex_f32s(v: &[f32]) -> String {
+    let mut s = String::with_capacity(v.len() * 8);
+    for x in v {
+        s.push_str(&format!("{:08x}", x.to_bits()));
+    }
+    s
+}
+
+fn hex_f64s(v: &[f64]) -> String {
+    let mut s = String::with_capacity(v.len() * 16);
+    for x in v {
+        s.push_str(&format!("{:016x}", x.to_bits()));
+    }
+    s
+}
+
+fn unhex_f32s(s: &str) -> Result<Vec<f32>> {
+    if s.len() % 8 != 0 {
+        return Err(Error::checkpoint("iterate hex length not a multiple of 8"));
+    }
+    s.as_bytes()
+        .chunks(8)
+        .map(|c| {
+            let txt = std::str::from_utf8(c).map_err(|_| Error::checkpoint("non-ASCII hex"))?;
+            u32::from_str_radix(txt, 16)
+                .map(f32::from_bits)
+                .map_err(|_| Error::checkpoint(format!("bad f32 hex chunk '{txt}'")))
+        })
+        .collect()
+}
+
+fn unhex_f64s(s: &str) -> Result<Vec<f64>> {
+    if s.len() % 16 != 0 {
+        return Err(Error::checkpoint("speeds hex length not a multiple of 16"));
+    }
+    s.as_bytes()
+        .chunks(16)
+        .map(|c| {
+            let txt = std::str::from_utf8(c).map_err(|_| Error::checkpoint("non-ASCII hex"))?;
+            u64::from_str_radix(txt, 16)
+                .map(f64::from_bits)
+                .map_err(|_| Error::checkpoint(format!("bad f64 hex chunk '{txt}'")))
+        })
+        .collect()
+}
+
+impl Checkpoint {
+    fn payload_json(&self) -> Json {
+        ObjBuilder::new()
+            .num("next_step", self.next_step as f64)
+            .num("nvec", self.nvec as f64)
+            .str("w", hex_f32s(&self.w))
+            .str("speeds", hex_f64s(&self.speeds))
+            .str("last_metric", format!("{:016x}", self.last_metric.to_bits()))
+            .val(
+                "stored",
+                Json::Arr(
+                    self.stored
+                        .iter()
+                        .map(|set| {
+                            Json::Arr(set.iter().map(|&g| Json::Num(g as f64)).collect())
+                        })
+                        .collect(),
+                ),
+            )
+            .val(
+                "pending",
+                Json::Arr(self.pending.iter().map(|&s| Json::Num(s as f64)).collect()),
+            )
+            .build()
+    }
+
+    /// Serialize to the canonical file text (version + checksum + digest
+    /// envelope around the payload).
+    pub fn encode(&self, spec: &WorkloadSpec) -> String {
+        let payload = self.payload_json();
+        let checksum = fnv32(payload.to_string().as_bytes());
+        let doc = ObjBuilder::new()
+            .num("version", CHECKPOINT_VERSION as f64)
+            .num("checksum", checksum as f64)
+            .num("digest", workload_digest(spec) as f64)
+            .val("payload", payload)
+            .build();
+        let mut text = doc.to_string();
+        text.push('\n');
+        text
+    }
+
+    /// Atomically write the checkpoint: temp file in the same directory,
+    /// then rename over the target, so a crash mid-write cannot corrupt
+    /// the previous good checkpoint.
+    pub fn save(&self, path: &Path, spec: &WorkloadSpec) -> Result<()> {
+        let tmp = path.with_extension("tmp");
+        fs::write(&tmp, self.encode(spec))?;
+        fs::rename(&tmp, path)?;
+        Ok(())
+    }
+
+    fn from_payload(payload: &Json) -> Result<Checkpoint> {
+        let next_step = payload
+            .get_usize("next_step")
+            .ok_or_else(|| Error::checkpoint("payload missing next_step"))?;
+        let nvec = payload
+            .get_usize("nvec")
+            .ok_or_else(|| Error::checkpoint("payload missing nvec"))?;
+        if nvec == 0 {
+            return Err(Error::checkpoint("nvec must be >= 1"));
+        }
+        let w = unhex_f32s(
+            payload
+                .get_str("w")
+                .ok_or_else(|| Error::checkpoint("payload missing iterate w"))?,
+        )?;
+        if w.is_empty() || w.len() % nvec != 0 {
+            return Err(Error::checkpoint(format!(
+                "iterate length {} is not a positive multiple of nvec {nvec}",
+                w.len()
+            )));
+        }
+        let speeds = unhex_f64s(
+            payload
+                .get_str("speeds")
+                .ok_or_else(|| Error::checkpoint("payload missing speeds"))?,
+        )?;
+        let metric_hex = payload
+            .get_str("last_metric")
+            .ok_or_else(|| Error::checkpoint("payload missing last_metric"))?;
+        let last_metric = u64::from_str_radix(metric_hex, 16)
+            .map(f64::from_bits)
+            .map_err(|_| Error::checkpoint("bad last_metric hex"))?;
+        let stored = payload
+            .get("stored")
+            .and_then(Json::items)
+            .ok_or_else(|| Error::checkpoint("payload missing stored sets"))?
+            .iter()
+            .map(|set| {
+                set.items()
+                    .ok_or_else(|| Error::checkpoint("stored entry is not an array"))?
+                    .iter()
+                    .map(|g| {
+                        g.as_num()
+                            .filter(|n| *n >= 0.0 && n.fract() == 0.0)
+                            .map(|n| n as usize)
+                            .ok_or_else(|| Error::checkpoint("stored id is not an index"))
+                    })
+                    .collect::<Result<Vec<usize>>>()
+            })
+            .collect::<Result<Vec<Vec<usize>>>>()?;
+        let pending = payload
+            .get("pending")
+            .and_then(Json::items)
+            .ok_or_else(|| Error::checkpoint("payload missing pending ledger"))?
+            .iter()
+            .map(|s| {
+                s.as_num()
+                    .filter(|n| *n >= 0.0 && n.fract() == 0.0)
+                    .map(|n| n as u64)
+                    .ok_or_else(|| Error::checkpoint("pending seq is not an integer"))
+            })
+            .collect::<Result<Vec<u64>>>()?;
+        Ok(Checkpoint {
+            next_step,
+            nvec,
+            w,
+            speeds,
+            last_metric,
+            stored,
+            pending,
+        })
+    }
+
+    /// Decode + validate file text. Checks, in order: format version,
+    /// payload checksum, workload digest — then payload shape.
+    pub fn decode(text: &str, spec: &WorkloadSpec) -> Result<Checkpoint> {
+        let doc = Json::parse(text.trim_end())
+            .map_err(|e| Error::checkpoint(format!("unparseable checkpoint: {e}")))?;
+        let version = doc
+            .get_usize("version")
+            .ok_or_else(|| Error::checkpoint("missing format version"))?;
+        if version != CHECKPOINT_VERSION as usize {
+            return Err(Error::checkpoint(format!(
+                "format version {version}, this build reads {CHECKPOINT_VERSION}"
+            )));
+        }
+        let recorded = doc
+            .get_num("checksum")
+            .ok_or_else(|| Error::checkpoint("missing checksum"))? as u32;
+        let payload = doc
+            .get("payload")
+            .ok_or_else(|| Error::checkpoint("missing payload"))?;
+        let actual = fnv32(payload.to_string().as_bytes());
+        if actual != recorded {
+            return Err(Error::checkpoint(format!(
+                "checksum mismatch: recorded {recorded:#010x}, computed {actual:#010x} \
+                 (truncated or corrupted file)"
+            )));
+        }
+        let digest = doc
+            .get_num("digest")
+            .ok_or_else(|| Error::checkpoint("missing workload digest"))? as u32;
+        let expect = workload_digest(spec);
+        if digest != expect {
+            return Err(Error::checkpoint(format!(
+                "workload digest {digest:#010x} does not match this job's {expect:#010x} \
+                 (checkpoint is from a different run)"
+            )));
+        }
+        let ckpt = Checkpoint::from_payload(payload)?;
+        if !ckpt.pending.is_empty() {
+            return Err(Error::checkpoint(format!(
+                "{} migrations were in flight at snapshot time; refusing mid-transfer resume",
+                ckpt.pending.len()
+            )));
+        }
+        Ok(ckpt)
+    }
+
+    /// Load and validate a checkpoint file for the given workload.
+    pub fn load(path: &Path, spec: &WorkloadSpec) -> Result<Checkpoint> {
+        let text = fs::read_to_string(path).map_err(|e| {
+            Error::checkpoint(format!("cannot read {}: {e}", path.display()))
+        })?;
+        Checkpoint::decode(&text, spec)
+    }
+}
+
+/// Background checkpoint writer: the step loop sends snapshots over a
+/// channel; a dedicated thread serializes and atomically replaces the
+/// file. Later snapshots supersede earlier ones, so a slow disk can at
+/// worst lose the most recent boundary, never corrupt an older one.
+pub struct CheckpointWriter {
+    tx: Sender<Option<Checkpoint>>,
+    handle: Option<JoinHandle<()>>,
+    path: PathBuf,
+}
+
+impl CheckpointWriter {
+    /// Spawn the writer thread for `path`.
+    pub fn new(path: &Path, spec: &WorkloadSpec) -> Self {
+        let (tx, rx) = channel::<Option<Checkpoint>>();
+        let spec = spec.clone();
+        let target = path.to_path_buf();
+        let thread_path = target.clone();
+        let handle = std::thread::Builder::new()
+            .name("usec-ckpt".into())
+            .spawn(move || {
+                while let Ok(Some(ckpt)) = rx.recv() {
+                    // Best-effort: a failed write must not kill the run
+                    // it exists to protect.
+                    let _ = ckpt.save(&thread_path, &spec);
+                }
+            })
+            .expect("spawn checkpoint writer");
+        CheckpointWriter {
+            tx,
+            handle: Some(handle),
+            path: target,
+        }
+    }
+
+    /// Target file path.
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Queue a snapshot for writing (non-blocking).
+    pub fn submit(&self, ckpt: Checkpoint) {
+        let _ = self.tx.send(Some(ckpt));
+    }
+
+    /// Flush queued snapshots and stop the writer thread.
+    pub fn finish(&mut self) {
+        let _ = self.tx.send(None);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for CheckpointWriter {
+    fn drop(&mut self) {
+        self.finish();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> WorkloadSpec {
+        WorkloadSpec::PlantedSymmetric {
+            q: 64,
+            eigval: 4.0,
+            gap: 0.5,
+            seed: 7,
+        }
+    }
+
+    fn sample() -> Checkpoint {
+        Checkpoint {
+            next_step: 5,
+            nvec: 2,
+            w: vec![1.0, -0.25, 3.5e-7, f32::MIN_POSITIVE, 0.0, -0.0],
+            speeds: vec![1.0, 0.37218, 2.4e9],
+            last_metric: 3.9991,
+            stored: vec![vec![0, 1], vec![1, 2], vec![2, 0]],
+            pending: vec![],
+        }
+    }
+
+    #[test]
+    fn roundtrip_is_bit_exact() {
+        let c = sample();
+        let text = c.encode(&spec());
+        let back = Checkpoint::decode(&text, &spec()).unwrap();
+        assert_eq!(back, c);
+        for (a, b) in c.w.iter().zip(&back.w) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        for (a, b) in c.speeds.iter().zip(&back.speeds) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn encode_is_canonical() {
+        let c = sample();
+        assert_eq!(c.encode(&spec()), c.encode(&spec()));
+    }
+
+    #[test]
+    fn rejects_wrong_version() {
+        let text = sample().encode(&spec()).replace("\"version\":1", "\"version\":9");
+        let err = Checkpoint::decode(&text, &spec()).unwrap_err();
+        assert!(matches!(err, Error::Checkpoint(_)), "{err}");
+        assert!(err.to_string().contains("version"), "{err}");
+    }
+
+    #[test]
+    fn rejects_corrupted_payload() {
+        // Flip one hex digit of the iterate: checksum must catch it.
+        let text = sample().encode(&spec());
+        let idx = text.find("\"w\":\"").unwrap() + 6;
+        let mut bytes = text.into_bytes();
+        bytes[idx] = if bytes[idx] == b'0' { b'1' } else { b'0' };
+        let text = String::from_utf8(bytes).unwrap();
+        let err = Checkpoint::decode(&text, &spec()).unwrap_err();
+        assert!(err.to_string().contains("checksum"), "{err}");
+    }
+
+    #[test]
+    fn rejects_wrong_job() {
+        let text = sample().encode(&spec());
+        let other = WorkloadSpec::PlantedSymmetric {
+            q: 64,
+            eigval: 4.0,
+            gap: 0.5,
+            seed: 8, // different matrix
+        };
+        let err = Checkpoint::decode(&text, &other).unwrap_err();
+        assert!(err.to_string().contains("digest"), "{err}");
+    }
+
+    #[test]
+    fn refuses_mid_transfer_snapshot() {
+        let mut c = sample();
+        c.pending = vec![3];
+        let text = c.encode(&spec());
+        let err = Checkpoint::decode(&text, &spec()).unwrap_err();
+        assert!(err.to_string().contains("in flight"), "{err}");
+    }
+
+    #[test]
+    fn save_load_via_writer_thread() {
+        let dir = std::env::temp_dir().join(format!("usec-ckpt-test-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("run.ckpt");
+        {
+            let mut w = CheckpointWriter::new(&path, &spec());
+            let mut c = sample();
+            w.submit(c.clone());
+            c.next_step = 6;
+            w.submit(c); // last submit wins
+            w.finish();
+        }
+        let back = Checkpoint::load(&path, &spec()).unwrap();
+        assert_eq!(back.next_step, 6);
+        let _ = std::fs::remove_file(&path);
+        let _ = std::fs::remove_dir(&dir);
+    }
+
+    #[test]
+    fn digest_separates_workloads() {
+        let a = workload_digest(&spec());
+        let b = workload_digest(&WorkloadSpec::RandomDense { q: 64, r: 64, seed: 7 });
+        let c = workload_digest(&WorkloadSpec::Streamed { q: 64, r: 64 });
+        assert_ne!(a, b);
+        assert_ne!(b, c);
+    }
+}

@@ -24,6 +24,7 @@
 //! ([`recovery`]), so an `S = 0` step survives preemption instead of
 //! timing out.
 
+pub mod checkpoint;
 pub mod cluster;
 pub mod elastic;
 pub mod master;
@@ -35,6 +36,7 @@ pub mod straggler;
 pub mod timer;
 pub mod worker;
 
+pub use checkpoint::{Checkpoint, CheckpointWriter, CHECKPOINT_VERSION};
 pub use cluster::Cluster;
 pub use elastic::ElasticityTrace;
 pub use master::{Master, RunResult};

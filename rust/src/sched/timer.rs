@@ -26,14 +26,18 @@ pub enum DeadlineKind {
     MigrateAck,
     /// The next heartbeat-liveness check.
     Heartbeat,
+    /// The earliest backed-off retry (dial/readmit) becoming eligible —
+    /// see [`crate::util::retry`].
+    Retry,
 }
 
 impl DeadlineKind {
-    pub const ALL: [DeadlineKind; 4] = [
+    pub const ALL: [DeadlineKind; 5] = [
         DeadlineKind::Coverage,
         DeadlineKind::Overdue,
         DeadlineKind::MigrateAck,
         DeadlineKind::Heartbeat,
+        DeadlineKind::Retry,
     ];
 
     fn slot(self) -> usize {
@@ -42,20 +46,21 @@ impl DeadlineKind {
             DeadlineKind::Overdue => 1,
             DeadlineKind::MigrateAck => 2,
             DeadlineKind::Heartbeat => 3,
+            DeadlineKind::Retry => 4,
         }
     }
 }
 
-/// Fixed-slot deadline registry. Four named slots — no allocation and no
+/// Fixed-slot deadline registry. Five named slots — no allocation and no
 /// ordering structure needed at this cardinality; `next_due` is a scan.
 #[derive(Debug, Default)]
 pub struct TimerWheel {
-    slots: [Option<Instant>; 4],
+    slots: [Option<Instant>; 5],
 }
 
 impl TimerWheel {
     pub fn new() -> TimerWheel {
-        TimerWheel { slots: [None; 4] }
+        TimerWheel { slots: [None; 5] }
     }
 
     /// Arm (or re-arm) a deadline.

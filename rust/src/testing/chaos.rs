@@ -1,0 +1,115 @@
+//! Chaos-soak support: canned fault schedules, a soak-cell config
+//! builder, and a deadline-bounded runner — shared by
+//! `tests/chaos_soak.rs` and `benches/chaos.rs`.
+//!
+//! The soak matrix crosses the four canned fault classes with batch
+//! width and straggler tolerance; every cell runs with recovery,
+//! rebalancing, and pipelining on, so the full robustness surface is
+//! exercised at once. Each cell must either match the fault-free oracle
+//! (the product `y_t = X w_t` is assignment-invariant, so a recovered
+//! run lands on the same trajectory) or return a typed error — and must
+//! do either before the deadline.
+
+use std::sync::mpsc::{channel, RecvTimeoutError};
+use std::time::Duration;
+
+use crate::apps::{run_power_iteration, PowerIterationResult};
+use crate::config::types::RunConfig;
+use crate::error::{Error, Result};
+use crate::rebalance::RebalanceConfig;
+use crate::sched::recovery::RecoveryPolicy;
+
+/// The four canned soak fault classes, each as a `--chaos` schedule
+/// kept mild enough that a recovered run still terminates quickly:
+/// order drops, delivery delays, a two-step asymmetric partition, and a
+/// crash-then-restart.
+pub fn soak_schedules() -> Vec<(&'static str, &'static str)> {
+    vec![
+        ("drop", "drop=0.1"),
+        ("delay", "delay=5:0.3,dup=0.1"),
+        ("partition", "partition=1@1..3"),
+        ("crash-restart", "crash=2@2+2"),
+    ]
+}
+
+/// One soak cell's config: a small planted-matrix power iteration with
+/// recovery, rebalancing, and pipelining all on. `chaos` is left empty —
+/// the caller sets it (the oracle run keeps it empty).
+pub fn soak_config(batch: usize, stragglers: usize) -> RunConfig {
+    RunConfig {
+        q: 96,
+        r: 96,
+        g: 6,
+        j: 3,
+        n: 6,
+        steps: 6,
+        batch,
+        stragglers,
+        speeds: vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0],
+        seed: 11,
+        recovery: RecoveryPolicy {
+            enabled: true,
+            overdue_factor: 0.5,
+        },
+        rebalance: RebalanceConfig {
+            enabled: true,
+            ..Default::default()
+        },
+        pipeline: true,
+        ..Default::default()
+    }
+}
+
+/// Run a config on a worker thread and fail with a typed error if it
+/// neither finishes nor errors before `deadline` — the soak matrix's
+/// no-hang guarantee. (A run that does hang leaks its thread; the test
+/// process is about to fail anyway.)
+pub fn run_with_deadline(
+    cfg: &RunConfig,
+    deadline: Duration,
+) -> Result<PowerIterationResult> {
+    let cfg = cfg.clone();
+    let (tx, rx) = channel();
+    std::thread::Builder::new()
+        .name("usec-soak".into())
+        .spawn(move || {
+            let _ = tx.send(run_power_iteration(&cfg));
+        })
+        .expect("spawn soak runner");
+    rx.recv_timeout(deadline).map_err(|e| match e {
+        RecvTimeoutError::Timeout => {
+            Error::Cluster(format!("soak run exceeded the {deadline:?} deadline"))
+        }
+        // sender dropped without sending: the runner thread panicked
+        RecvTimeoutError::Disconnected => {
+            Error::Cluster("soak run panicked before producing a result".into())
+        }
+    })?
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn soak_configs_validate_with_every_schedule() {
+        for batch in [1, 8] {
+            for s in [0, 1] {
+                for (_, sched) in soak_schedules() {
+                    let mut cfg = soak_config(batch, s);
+                    cfg.chaos = sched.to_string();
+                    cfg.validate().unwrap();
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn deadline_runner_times_out_instead_of_hanging() {
+        // a real (fault-free) run of this size takes well under a second;
+        // an absurdly short deadline must surface as a typed error
+        let cfg = soak_config(1, 0);
+        let err = run_with_deadline(&cfg, Duration::from_nanos(1)).unwrap_err();
+        assert!(err.to_string().contains("deadline"), "{err}");
+    }
+}

@@ -1,3 +1,5 @@
-//! Test support: mini property-testing framework — see [`prop`].
+//! Test support: mini property-testing framework ([`prop`]) and
+//! chaos-soak helpers ([`chaos`]).
 
+pub mod chaos;
 pub mod prop;

@@ -8,6 +8,7 @@ pub mod benchkit;
 pub mod fmt;
 pub mod json;
 pub mod log;
+pub mod retry;
 pub mod rng;
 
 pub use rng::Rng;

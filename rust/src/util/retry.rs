@@ -1,0 +1,198 @@
+//! Capped exponential backoff with deterministic jitter.
+//!
+//! Every retrying path in the system — worker dial, per-step readmit,
+//! migrate-ack re-sends, recovery re-dispatch — shares this one policy
+//! so a permanently-dead host costs O(log) attempts instead of one per
+//! step, and so the retry cadence is reproducible from a seed. The
+//! jitter draw comes from the caller-owned [`Rng`] stream, never from
+//! wall-clock entropy, which keeps chaos runs byte-for-byte replayable.
+//!
+//! The pieces compose with the master's [`crate::sched::TimerWheel`]:
+//! a [`RetryState`] knows *when* its target is next eligible
+//! ([`RetryState::next_due`]); the wheel's `Retry` slot is armed with
+//! the earliest such instant so the blocking receive wakes exactly when
+//! a retry becomes due.
+
+use std::time::{Duration, Instant};
+
+use crate::util::Rng;
+
+/// Backoff schedule: `base * 2^attempt`, capped at `cap`, scaled by a
+/// symmetric jitter factor in `[1 - jitter, 1 + jitter]`.
+#[derive(Debug, Clone, Copy)]
+pub struct RetryPolicy {
+    /// Delay after the first failure (before jitter).
+    pub base: Duration,
+    /// Upper bound on any single delay (before jitter).
+    pub cap: Duration,
+    /// Give up after this many failures; `0` means never give up.
+    pub max_attempts: u32,
+    /// Symmetric jitter fraction, e.g. `0.25` ⇒ ±25 %.
+    pub jitter: f64,
+}
+
+impl RetryPolicy {
+    pub fn new(base: Duration, cap: Duration) -> RetryPolicy {
+        RetryPolicy {
+            base,
+            cap,
+            max_attempts: 0,
+            jitter: 0.25,
+        }
+    }
+
+    /// The policy used for re-dialing dead peers at step boundaries.
+    pub fn dial() -> RetryPolicy {
+        RetryPolicy::new(Duration::from_millis(50), Duration::from_secs(5))
+    }
+
+    pub fn with_max_attempts(mut self, n: u32) -> RetryPolicy {
+        self.max_attempts = n;
+        self
+    }
+
+    pub fn with_jitter(mut self, j: f64) -> RetryPolicy {
+        self.jitter = j.clamp(0.0, 1.0);
+        self
+    }
+
+    /// True once `attempts` failures have exhausted the policy.
+    pub fn exhausted(&self, attempts: u32) -> bool {
+        self.max_attempts > 0 && attempts >= self.max_attempts
+    }
+
+    /// The jittered delay after failure number `attempt` (0-based).
+    /// Doubling is computed in nanoseconds with saturation, so large
+    /// attempt counts settle at `cap` instead of overflowing.
+    pub fn delay(&self, attempt: u32, rng: &mut Rng) -> Duration {
+        let base = self.base.as_nanos() as u64;
+        let cap = self.cap.as_nanos() as u64;
+        let exp = attempt.min(62);
+        let raw = base.saturating_mul(1u64.checked_shl(exp).unwrap_or(u64::MAX));
+        let capped = raw.min(cap);
+        // One draw per delay even when jitter is 0, so enabling jitter
+        // never shifts the consumption pattern of a shared stream.
+        let draw = rng.f64();
+        let factor = 1.0 + self.jitter * (2.0 * draw - 1.0);
+        Duration::from_nanos((capped as f64 * factor).max(0.0) as u64)
+    }
+}
+
+/// Per-target retry ledger: how many failures so far, and when the next
+/// attempt becomes eligible. Owns its jitter stream so two targets with
+/// the same policy still spread their retries apart.
+#[derive(Debug)]
+pub struct RetryState {
+    attempts: u32,
+    next_due: Option<Instant>,
+    rng: Rng,
+}
+
+impl RetryState {
+    pub fn new(seed: u64) -> RetryState {
+        RetryState {
+            attempts: 0,
+            next_due: None,
+            rng: Rng::new(seed),
+        }
+    }
+
+    /// True when an attempt may be made now: either no failure has been
+    /// recorded yet, or the backoff window has elapsed.
+    pub fn ready(&self, now: Instant) -> bool {
+        match self.next_due {
+            None => true,
+            Some(at) => now >= at,
+        }
+    }
+
+    /// Record a failed attempt; returns the backoff delay chosen for
+    /// the next one.
+    pub fn record_failure(&mut self, policy: &RetryPolicy, now: Instant) -> Duration {
+        let d = policy.delay(self.attempts, &mut self.rng);
+        self.attempts = self.attempts.saturating_add(1);
+        self.next_due = Some(now + d);
+        d
+    }
+
+    /// Record a success: the target is healthy again, so the ledger
+    /// resets and the next failure starts the schedule from `base`.
+    pub fn record_success(&mut self) {
+        self.attempts = 0;
+        self.next_due = None;
+    }
+
+    pub fn attempts(&self) -> u32 {
+        self.attempts
+    }
+
+    /// When the next attempt becomes eligible (`None` ⇒ eligible now).
+    pub fn next_due(&self) -> Option<Instant> {
+        self.next_due
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn delays_double_and_cap() {
+        let policy = RetryPolicy::new(Duration::from_millis(10), Duration::from_millis(80))
+            .with_jitter(0.0);
+        let mut rng = Rng::new(7);
+        let d: Vec<u128> = (0..6)
+            .map(|a| policy.delay(a, &mut rng).as_millis())
+            .collect();
+        assert_eq!(d, vec![10, 20, 40, 80, 80, 80]);
+    }
+
+    #[test]
+    fn huge_attempt_counts_saturate_at_cap() {
+        let policy =
+            RetryPolicy::new(Duration::from_secs(1), Duration::from_secs(30)).with_jitter(0.0);
+        let mut rng = Rng::new(1);
+        assert_eq!(policy.delay(500, &mut rng), Duration::from_secs(30));
+    }
+
+    #[test]
+    fn jitter_is_bounded_and_deterministic() {
+        let policy =
+            RetryPolicy::new(Duration::from_millis(100), Duration::from_secs(1)).with_jitter(0.25);
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for attempt in 0..8 {
+            let da = policy.delay(attempt, &mut a);
+            let db = policy.delay(attempt, &mut b);
+            assert_eq!(da, db, "same seed must give the same jitter");
+            let nominal = (100u64 << attempt.min(3)).min(1000) as f64;
+            let ms = da.as_secs_f64() * 1e3;
+            assert!(ms >= nominal * 0.75 - 1e-9 && ms <= nominal * 1.25 + 1e-9);
+        }
+    }
+
+    #[test]
+    fn state_gates_until_due_and_resets_on_success() {
+        let policy = RetryPolicy::new(Duration::from_millis(20), Duration::from_secs(1))
+            .with_jitter(0.0)
+            .with_max_attempts(3);
+        let mut st = RetryState::new(9);
+        let now = Instant::now();
+        assert!(st.ready(now));
+
+        let d = st.record_failure(&policy, now);
+        assert_eq!(d, Duration::from_millis(20));
+        assert!(!st.ready(now));
+        assert!(st.ready(now + d));
+        assert_eq!(st.attempts(), 1);
+
+        st.record_failure(&policy, now);
+        st.record_failure(&policy, now);
+        assert!(policy.exhausted(st.attempts()));
+
+        st.record_success();
+        assert_eq!(st.attempts(), 0);
+        assert!(st.ready(now));
+        assert_eq!(st.next_due(), None);
+    }
+}

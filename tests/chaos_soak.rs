@@ -1,0 +1,113 @@
+//! Chaos soak matrix: every canned fault class crossed with batch width
+//! and straggler tolerance, with recovery + rebalancing + pipelining on.
+//! Every cell must terminate before its deadline and either match the
+//! fault-free oracle or return a typed error — no hangs, no panics, no
+//! silently wrong answers.
+
+use std::time::Duration;
+
+use usec::config::types::RunConfig;
+use usec::error::Error;
+use usec::testing::chaos::{run_with_deadline, soak_config, soak_schedules};
+
+/// Generous per-cell ceiling: a clean cell takes well under a second;
+/// recovery adds ~1s per dropped order under the chaos-shortened
+/// coverage timeout.
+const DEADLINE: Duration = Duration::from_secs(120);
+
+fn oracle(cfg: &RunConfig) -> Vec<f32> {
+    let mut clean = cfg.clone();
+    clean.chaos.clear();
+    run_with_deadline(&clean, DEADLINE)
+        .expect("fault-free oracle must run")
+        .eigvec
+}
+
+fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0, f32::max)
+}
+
+#[test]
+fn soak_matrix_terminates_and_matches_the_oracle() {
+    for batch in [1usize, 8] {
+        for stragglers in [0usize, 1] {
+            let base = soak_config(batch, stragglers);
+            let truth = oracle(&base);
+            for (name, sched) in soak_schedules() {
+                let mut cfg = base.clone();
+                cfg.chaos = sched.to_string();
+                let cell = format!("{name} B={batch} S={stragglers}");
+                match run_with_deadline(&cfg, DEADLINE) {
+                    Ok(res) => {
+                        // the product y = Xw is assignment-invariant, so a
+                        // recovered run must land on the oracle trajectory
+                        let diff = max_abs_diff(&res.eigvec, &truth);
+                        assert!(
+                            diff <= 1e-5,
+                            "{cell}: eigvec drifted {diff} from the oracle"
+                        );
+                        // faults were actually injected and surfaced
+                        let faults: u64 =
+                            res.timeline.steps().iter().map(|s| s.faults).sum();
+                        assert!(faults > 0, "{cell}: schedule injected no faults");
+                    }
+                    // a typed error under the deadline is an accepted
+                    // outcome (e.g. coverage lost beyond what recovery
+                    // can replan); a hang or panic is not
+                    Err(e) => {
+                        let m = e.to_string();
+                        assert!(!m.contains("deadline"), "{cell}: hung — {m}");
+                        assert!(!m.contains("panicked"), "{cell}: {m}");
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn chaos_runs_are_reproducible_in_the_seed() {
+    let mut cfg = soak_config(1, 0);
+    cfg.chaos = "drop=0.15,delay=3:0.2".into();
+    cfg.chaos_seed = 42;
+    let a = run_with_deadline(&cfg, DEADLINE).expect("seeded run");
+    let b = run_with_deadline(&cfg, DEADLINE).expect("seeded rerun");
+    assert_eq!(a.eigvec, b.eigvec, "trajectory must replay exactly");
+    let fa: Vec<u64> = a.timeline.steps().iter().map(|s| s.faults).collect();
+    let fb: Vec<u64> = b.timeline.steps().iter().map(|s| s.faults).collect();
+    assert_eq!(fa, fb, "per-step fault schedule must replay exactly");
+    assert!(fa.iter().sum::<u64>() > 0, "schedule injected no faults");
+}
+
+#[test]
+fn total_blackout_fails_fast_with_a_typed_error() {
+    // every order dropped and recovery off: the run must surface a typed
+    // coverage error within the chaos-shortened timeout, not hang
+    let mut cfg = soak_config(1, 0);
+    cfg.recovery.enabled = false;
+    cfg.rebalance.enabled = false;
+    cfg.pipeline = false;
+    cfg.chaos = "drop=1.0".into();
+    let err = run_with_deadline(&cfg, Duration::from_secs(60))
+        .expect_err("a fully partitioned run cannot succeed");
+    match err {
+        Error::Cluster(m) => assert!(!m.contains("deadline"), "hang: {m}"),
+        other => panic!("expected a typed cluster error, got {other}"),
+    }
+}
+
+#[test]
+fn throttle_chaos_preserves_the_trajectory() {
+    // a throttled worker is slow, not wrong — the run must match the
+    // oracle exactly while still journaling the injected faults
+    let mut cfg = soak_config(1, 0);
+    cfg.row_cost_ns = 10_000;
+    let truth = oracle(&cfg);
+    cfg.chaos = "throttle=0:8".into();
+    let res = run_with_deadline(&cfg, DEADLINE).expect("throttled run");
+    assert!(max_abs_diff(&res.eigvec, &truth) <= 1e-5);
+    assert!(res.timeline.steps().iter().map(|s| s.faults).sum::<u64>() > 0);
+}

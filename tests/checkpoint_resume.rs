@@ -1,0 +1,252 @@
+//! Checkpoint/resume: serialization round-trips bit-exactly (property),
+//! a master killed at step k resumes to the uninterrupted oracle's
+//! answer, and damaged or mismatched checkpoints fail fast with typed
+//! errors instead of producing a silently different run.
+
+use std::path::PathBuf;
+
+use usec::config::types::RunConfig;
+use usec::error::Error;
+use usec::net::WorkloadSpec;
+use usec::sched::checkpoint::workload_digest;
+use usec::sched::Checkpoint;
+use usec::testing::prop::{run, Config};
+
+fn tmp_ckpt(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("usec-resume-{tag}-{}.ckpt", std::process::id()))
+}
+
+/// A deterministic mid-size run: no injected stragglers and no random
+/// preemption, so the resumed half sees the exact world the killed
+/// master would have seen (the injected-straggler RNG cannot be
+/// replayed across a resume — a documented caveat).
+fn base_config() -> RunConfig {
+    RunConfig {
+        q: 96,
+        r: 96,
+        g: 6,
+        j: 3,
+        n: 6,
+        steps: 8,
+        speeds: vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0],
+        seed: 23,
+        ..Default::default()
+    }
+}
+
+fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0, f32::max)
+}
+
+// ---- serialization round-trip (property) ----
+
+#[test]
+fn encode_decode_round_trips_bit_exactly() {
+    run(Config::default().cases(80).name("ckpt-roundtrip"), |rng| {
+        let spec = WorkloadSpec::PlantedSymmetric {
+            q: rng.range(4, 512),
+            eigval: rng.range_f64(1.0, 20.0),
+            gap: rng.range_f64(0.05, 0.9),
+            seed: rng.next_u64(),
+        };
+        let nvec = rng.range(1, 5);
+        let rows = rng.range(1, 64);
+        // arbitrary bit patterns: subnormals, infs, and NaNs must all
+        // survive the hex round-trip with their exact payload bits
+        let w: Vec<f32> = (0..rows * nvec)
+            .map(|_| f32::from_bits(rng.next_u64() as u32))
+            .collect();
+        let n = rng.range(1, 8);
+        let speeds: Vec<f64> = (0..n).map(|_| f64::from_bits(rng.next_u64())).collect();
+        let stored: Vec<Vec<usize>> = (0..n)
+            .map(|_| (0..rng.range(1, 5)).map(|_| rng.below(12)).collect())
+            .collect();
+        let ckpt = Checkpoint {
+            next_step: rng.below(1000),
+            nvec,
+            w,
+            speeds,
+            last_metric: f64::from_bits(rng.next_u64()),
+            stored,
+            pending: Vec::new(),
+        };
+        let back = Checkpoint::decode(&ckpt.encode(&spec), &spec).unwrap();
+        assert_eq!(back.next_step, ckpt.next_step);
+        assert_eq!(back.nvec, ckpt.nvec);
+        assert_eq!(back.stored, ckpt.stored);
+        for (a, b) in ckpt.w.iter().zip(&back.w) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        for (a, b) in ckpt.speeds.iter().zip(&back.speeds) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert_eq!(ckpt.last_metric.to_bits(), back.last_metric.to_bits());
+        // a snapshot with migrations in flight must be refused on load
+        let mut midway = ckpt;
+        midway.pending = vec![rng.next_u64() >> 12];
+        let err = Checkpoint::decode(&midway.encode(&spec), &spec).unwrap_err();
+        assert!(matches!(err, Error::Checkpoint(_)), "{err}");
+    });
+}
+
+#[test]
+fn digest_is_sensitive_to_every_workload_field() {
+    let base = WorkloadSpec::PlantedSymmetric {
+        q: 96,
+        eigval: 10.0,
+        gap: 0.35,
+        seed: 23,
+    };
+    let variants = [
+        WorkloadSpec::PlantedSymmetric { q: 97, eigval: 10.0, gap: 0.35, seed: 23 },
+        WorkloadSpec::PlantedSymmetric { q: 96, eigval: 10.5, gap: 0.35, seed: 23 },
+        WorkloadSpec::PlantedSymmetric { q: 96, eigval: 10.0, gap: 0.36, seed: 23 },
+        WorkloadSpec::PlantedSymmetric { q: 96, eigval: 10.0, gap: 0.35, seed: 24 },
+    ];
+    for v in &variants {
+        assert_ne!(workload_digest(&base), workload_digest(v), "{v:?}");
+    }
+}
+
+// ---- kill-at-step-k resume vs the uninterrupted oracle ----
+
+fn kill_and_resume(tag: &str, batch: usize, pipeline: bool) {
+    let path = tmp_ckpt(tag);
+    let total = 8;
+    let kill_at = 4;
+
+    let mut oracle_cfg = base_config();
+    oracle_cfg.batch = batch;
+    oracle_cfg.pipeline = pipeline;
+    let oracle = usec::apps::run_power_iteration(&oracle_cfg).unwrap();
+
+    // first life: checkpoint every boundary, die (= return) after step k
+    let mut first = oracle_cfg.clone();
+    first.steps = kill_at;
+    first.checkpoint_out = path.display().to_string();
+    usec::apps::run_power_iteration(&first).unwrap();
+
+    // second life: resume from the step-k snapshot, run to completion
+    let mut second = oracle_cfg.clone();
+    second.resume = path.display().to_string();
+    let resumed = usec::apps::run_power_iteration(&second).unwrap();
+
+    // the resumed run executes exactly the missing steps…
+    assert_eq!(resumed.timeline.len(), total - kill_at, "{tag}");
+    assert_eq!(resumed.timeline.steps()[0].step, kill_at, "{tag}");
+    // …and lands on the oracle's answer
+    let diff = max_abs_diff(&resumed.eigvec, &oracle.eigvec);
+    assert!(diff <= 1e-5, "{tag}: resumed eigvec drifted {diff}");
+    // per-step metrics of the second half line up with the oracle's
+    for (r, o) in resumed
+        .timeline
+        .steps()
+        .iter()
+        .zip(&oracle.timeline.steps()[kill_at..])
+    {
+        assert_eq!(r.step, o.step, "{tag}");
+        assert!((r.metric - o.metric).abs() <= 1e-9, "{tag} step {}", r.step);
+    }
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn killed_master_resumes_to_the_oracle_answer() {
+    kill_and_resume("classic", 1, false);
+}
+
+#[test]
+fn killed_block_master_resumes_to_the_oracle_answer() {
+    kill_and_resume("block", 4, false);
+}
+
+#[test]
+fn killed_pipelined_master_resumes_to_the_oracle_answer() {
+    kill_and_resume("pipelined", 1, true);
+}
+
+#[test]
+fn checkpoint_file_marks_the_kill_boundary() {
+    let path = tmp_ckpt("boundary");
+    let mut cfg = base_config();
+    cfg.steps = 3;
+    cfg.checkpoint_out = path.display().to_string();
+    let res = usec::apps::run_power_iteration(&cfg).unwrap();
+    // every boundary checkpointed (checkpoint_every defaults to 1)
+    assert!(res.timeline.steps().iter().all(|s| s.checkpoint));
+    let spec = WorkloadSpec::PlantedSymmetric {
+        q: cfg.q,
+        eigval: usec::apps::power_iteration::PLANT_EIGVAL,
+        gap: usec::apps::power_iteration::PLANT_GAP,
+        seed: cfg.seed,
+    };
+    let ckpt = Checkpoint::load(&path, &spec).unwrap();
+    assert_eq!(ckpt.next_step, 3);
+    assert_eq!(ckpt.nvec, 1);
+    assert_eq!(ckpt.w.len(), cfg.r);
+    assert_eq!(ckpt.stored.len(), cfg.n);
+    assert!(ckpt.pending.is_empty());
+    let _ = std::fs::remove_file(&path);
+}
+
+// ---- damaged / mismatched checkpoints fail fast, typed ----
+
+fn write_checkpoint(tag: &str, steps: usize) -> PathBuf {
+    let path = tmp_ckpt(tag);
+    let mut cfg = base_config();
+    cfg.steps = steps;
+    cfg.checkpoint_out = path.display().to_string();
+    usec::apps::run_power_iteration(&cfg).unwrap();
+    path
+}
+
+#[test]
+fn resuming_a_different_job_is_a_typed_error() {
+    let path = write_checkpoint("wrongjob", 2);
+    let mut other = base_config();
+    other.seed = 99; // different planted matrix
+    other.resume = path.display().to_string();
+    let err = usec::apps::run_power_iteration(&other).unwrap_err();
+    assert!(matches!(err, Error::Checkpoint(_)), "{err}");
+    assert!(err.to_string().contains("digest"), "{err}");
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn resuming_with_a_different_batch_is_a_typed_error() {
+    let path = write_checkpoint("wrongbatch", 2);
+    let mut wider = base_config();
+    wider.batch = 2; // checkpoint was nvec = 1
+    wider.resume = path.display().to_string();
+    let err = usec::apps::run_power_iteration(&wider).unwrap_err();
+    assert!(matches!(err, Error::Checkpoint(_)), "{err}");
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn resuming_a_corrupted_file_is_a_typed_error() {
+    let path = write_checkpoint("corrupt", 2);
+    // flip one hex digit inside the iterate payload
+    let text = std::fs::read_to_string(&path).unwrap();
+    let idx = text.find("\"w\":\"").unwrap() + 6;
+    let mut bytes = text.into_bytes();
+    bytes[idx] = if bytes[idx] == b'0' { b'1' } else { b'0' };
+    std::fs::write(&path, bytes).unwrap();
+    let mut cfg = base_config();
+    cfg.resume = path.display().to_string();
+    let err = usec::apps::run_power_iteration(&cfg).unwrap_err();
+    assert!(matches!(err, Error::Checkpoint(_)), "{err}");
+    assert!(err.to_string().contains("checksum"), "{err}");
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn resuming_a_missing_file_is_a_typed_error() {
+    let mut cfg = base_config();
+    cfg.resume = tmp_ckpt("never-written").display().to_string();
+    let err = usec::apps::run_power_iteration(&cfg).unwrap_err();
+    assert!(matches!(err, Error::Checkpoint(_)), "{err}");
+}

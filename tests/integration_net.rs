@@ -327,6 +327,9 @@ fn run_mid_step_kill_scenario(nvec: usize) {
         compute_p50_ms: f64::NAN,
         compute_p99_ms: f64::NAN,
         overlap_ns: 0,
+        faults: 0,
+        retries: 0,
+        checkpoint: false,
     });
     let back = usec::util::json::Json::parse(&tl.to_json().to_string()).unwrap();
     assert_eq!(back.get_usize("recoveries_total"), Some(1));
