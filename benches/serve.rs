@@ -1,0 +1,132 @@
+//! Serving benchmark: continuous batching vs one-job-per-request.
+//!
+//! A fixed offered load of personalized-PageRank requests (each riding
+//! a fixed number of elastic steps) is pushed through a resident
+//! [`ServeSession`] at batch widths B ∈ {1, 4, 16}. B=1 is the
+//! sequential baseline — every request runs alone, exactly what a
+//! one-job-per-request harness would do — while wider batches coalesce
+//! up to B request columns into one distributed mat-vec per step, so
+//! the workers traverse their stored rows once for all B tenants.
+//! Throughput should scale with B (same steps, B× the rows per
+//! traversal) while per-request latency p50/p99 stays bounded by the
+//! deficit-round-robin admission order.
+//!
+//! Run: `cargo bench --bench serve [-- --smoke] [-- --json PATH]`
+//!
+//! Results land as machine-readable JSON (default `BENCH_serve.json`);
+//! all variants share a unit count (requests), so `units_per_s` ratios
+//! are the serving speedup, and the per-width latency quantiles print
+//! alongside.
+
+use std::time::{Duration, Instant};
+
+use usec::config::types::RunConfig;
+use usec::metrics::ServeSummary;
+use usec::serve::{Query, ServeSession, SessionOpts};
+use usec::util::benchkit::Bench;
+
+const Q: usize = 96;
+const SEED: u64 = 31;
+
+fn cfg() -> RunConfig {
+    RunConfig {
+        q: Q,
+        r: Q,
+        g: 3,
+        j: 2,
+        n: 3,
+        steps: 1,
+        speeds: vec![1.0, 2.0, 3.0],
+        seed: SEED,
+        ..Default::default()
+    }
+}
+
+/// Serve `m` requests (each riding exactly `steps_per_req` steps) at
+/// batch width `b`; return the drain wall-clock and the serve summary.
+fn run_once(b: usize, m: usize, steps_per_req: usize) -> (Duration, ServeSummary) {
+    let opts = SessionOpts {
+        queue_cap: m.max(64),
+        quantum: 1,
+        max_width: b,
+    };
+    let mut session = ServeSession::build(&cfg(), &opts).unwrap();
+    for i in 0..m {
+        session
+            .submit(
+                &format!("tenant{}", i % 3),
+                Query::Pagerank {
+                    seed_node: (7 * i) % Q,
+                    damping: 0.85,
+                },
+                0.0, // never converges early: every request rides the full budget
+                steps_per_req,
+            )
+            .unwrap();
+    }
+    let t0 = Instant::now();
+    let responses = session
+        .run_until_drained(2 * m * steps_per_req + 16)
+        .unwrap();
+    let wall = t0.elapsed();
+    assert_eq!(responses.len(), m);
+    assert!(responses.iter().all(|r| r.steps == steps_per_req));
+    (wall, session.summary())
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let smoke = args.iter().any(|a| a == "--smoke");
+    let json_path = args
+        .iter()
+        .position(|a| a == "--json")
+        .and_then(|i| args.get(i + 1))
+        .map(String::as_str)
+        .unwrap_or("BENCH_serve.json")
+        .to_string();
+    let (m, steps_per_req, budget, iters) = if smoke {
+        (6, 4, Duration::from_millis(100), 1)
+    } else {
+        (24, 12, Duration::from_secs(2), 5)
+    };
+    let mut bench = Bench::with_budget(budget, iters);
+
+    let mut rows = Vec::new();
+    for b in [1usize, 4, 16] {
+        let mut best_wall = Duration::MAX;
+        let mut last_summary = ServeSummary::default();
+        let label = if b == 1 {
+            format!("serve sequential B=1 ({m} reqs x {steps_per_req} steps)")
+        } else {
+            format!("serve batched B={b} ({m} reqs x {steps_per_req} steps)")
+        };
+        bench.run_units(&label, m as f64, || {
+            let (wall, summary) = run_once(b, m, steps_per_req);
+            if wall < best_wall {
+                best_wall = wall;
+            }
+            last_summary = summary;
+            wall.as_secs_f64()
+        });
+        rows.push((b, best_wall, last_summary));
+    }
+
+    println!("{}", bench.table());
+    let base = rows[0].1.as_secs_f64();
+    for (b, wall, s) in &rows {
+        println!(
+            "B={b}: drained {m} reqs in {wall:?} ({:.2}x vs sequential), \
+             p50 {:.3} ms, p99 {:.3} ms, {:.0} rows/s, peak queue {}",
+            base / wall.as_secs_f64(),
+            s.latency_p50_ns / 1e6,
+            s.latency_p99_ns / 1e6,
+            s.rows_per_s,
+            s.queue_depth
+        );
+    }
+
+    match Bench::write_json(&[&bench], &json_path) {
+        Ok(()) => println!("wrote {json_path}"),
+        Err(e) => eprintln!("could not write {json_path}: {e}"),
+    }
+}

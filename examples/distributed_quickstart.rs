@@ -121,6 +121,27 @@
 //!     --resume run.ckpt --json-out rest.json
 //! ```
 //!
+//! The cluster doesn't have to be one-job-and-exit. `usec serve` keeps
+//! it resident behind a socket and serves a stream of tenant-tagged
+//! requests — personalized-PageRank seeds, raw mat-vecs, ridge solves —
+//! continuously batched into one block per elastic step (columns join
+//! and retire at step boundaries), with deficit-round-robin fairness
+//! across tenants and a bounded admission queue that rejects with a
+//! typed `busy` error when full:
+//!
+//! ```text
+//! usec serve --listen 127.0.0.1:7700 --workers ... --stream-data \
+//!     --q 1536 --g 3 --j 2 --placement cyclic \
+//!     --max-width 8 --queue-cap 64 --idle-ms 5000 --json-out serve.json
+//! # two tenants, concurrently:
+//! usec serve --connect 127.0.0.1:7700 --tenant alice --seed-node 3 --tol 1e-8
+//! usec serve --connect 127.0.0.1:7700 --tenant bob   --seed-node 7 --tol 1e-8
+//! ```
+//!
+//! The serve `--json-out` adds request-plane keys on top of the
+//! timeline: `requests`, `latency_p50_ns`/`latency_p99_ns`,
+//! `queue_depth`, `rows_per_s`.
+//!
 //! Either way `--json-out` reports the actual per-worker resident bytes
 //! under `timeline.storage`. Here we spawn the same daemons on threads
 //! and drive the same master code path (`RunConfig.workers` →
@@ -128,6 +149,7 @@
 //! anywhere.
 
 use std::net::TcpListener;
+use std::time::Duration;
 
 use usec::apps::run_power_iteration;
 use usec::config::types::RunConfig;
@@ -135,15 +157,16 @@ use usec::net::daemon::{serve_worker, DaemonOpts};
 use usec::placement::PlacementKind;
 use usec::rebalance::RebalanceConfig;
 use usec::sched::RecoveryPolicy;
+use usec::serve::{serve_listen, Query, ServeClient, ServeOpts, SessionOpts};
 
 fn main() {
     usec::util::log::init();
 
     // --- "terminals 1-3": three worker daemons on ephemeral ports ---
-    // (each serves nine master sessions: the generator-backed run, the
+    // (each serves ten master sessions: the generator-backed run, the
     // streamed run, the batched block run, the pipelined run, the
     // rebalanced run, the chaos run, the checkpointed run + its resume,
-    // and the traced run below)
+    // the serving session, and the traced run below)
     let mut addrs = Vec::new();
     let mut daemons = Vec::new();
     for _ in 0..3 {
@@ -153,7 +176,7 @@ fn main() {
             serve_worker(
                 listener,
                 DaemonOpts {
-                    max_sessions: 9,
+                    max_sessions: 10,
                     ..Default::default()
                 },
             )
@@ -319,6 +342,76 @@ fn main() {
         resumed.timeline.len()
     );
     let _ = std::fs::remove_file(&ckpt_path);
+
+    // --- multi-tenant serving: `usec serve` over the same daemons ---
+    // the cluster stays resident behind a socket; two tenants submit
+    // personalized-PageRank requests concurrently, the batcher coalesces
+    // their iterate columns into one block per elastic step, and each
+    // column retires when its own residual converges. Rows stream to the
+    // workers as Data frames (serve matrices have no generator seed).
+    let serve_listener = TcpListener::bind("127.0.0.1:0").expect("bind serve port");
+    let serve_addr = serve_listener.local_addr().unwrap().to_string();
+    let serve_cfg = RunConfig {
+        stream_data: true,
+        workers: addrs.clone(),
+        ..cfg.clone()
+    };
+    let server = std::thread::spawn(move || {
+        serve_listen(
+            serve_listener,
+            &serve_cfg,
+            &ServeOpts {
+                exit_after: 2,
+                idle_ms: 0,
+                session: SessionOpts::default(),
+            },
+        )
+    });
+    let tenants: Vec<_> = ["alice", "bob"]
+        .iter()
+        .enumerate()
+        .map(|(t, name)| {
+            let addr = serve_addr.clone();
+            std::thread::spawn(move || {
+                let mut client = ServeClient::connect(&addr).expect("dial serve");
+                let id = client
+                    .submit(
+                        name,
+                        Query::Pagerank {
+                            seed_node: 2 * t + 1,
+                            damping: 0.85,
+                        },
+                        1e-8,
+                        200,
+                    )
+                    .expect("submit");
+                let resp = client
+                    .wait(id, Duration::from_secs(60))
+                    .expect("serve answer");
+                client.bye();
+                (name.to_string(), resp)
+            })
+        })
+        .collect();
+    for t in tenants {
+        let (name, resp) = t.join().expect("client thread");
+        println!(
+            "serve request ({name}):     converged in {} step(s), residual {:.2e}, \
+             latency {:.2} ms",
+            resp.steps,
+            resp.residual,
+            resp.latency_ns as f64 / 1e6
+        );
+    }
+    let served = server.join().expect("server thread").expect("serve session");
+    let summary = served.serve().expect("serve summary");
+    println!(
+        "serve session:              {} request(s), p99 latency {:.2} ms, \
+         peak queue depth {}",
+        summary.requests,
+        summary.latency_p99_ns / 1e6,
+        summary.queue_depth
+    );
 
     // --- end-to-end tracing: --trace-out over the same daemons ---
     // every order ships with the trace bit set (wire v5), every report

@@ -1,1071 +1,14 @@
-//! Shared app harness: build placement + transport + master + chaos from a
-//! [`RunConfig`], and drive generic elastic iterations.
+//! Compatibility shim over the engine layer.
 //!
-//! The transport is pluggable ([`crate::net`]): with `cfg.workers` empty
-//! the harness spawns in-process worker threads ([`LocalTransport`],
-//! zero-copy `Arc` data plane); with worker addresses it dials remote
-//! `usec worker` daemons over TCP and the run becomes genuinely
-//! distributed. Worker liveness feeds the availability set each step, so a
-//! dropped connection acts exactly like an elasticity-trace preemption.
+//! The one-job harness that used to live here grew into the resident
+//! [`crate::engine::ClusterEngine`]: cluster lifecycle (transport,
+//! re-admission, rebalance, chaos, checkpointing, tracing) plus both
+//! step loops, with apps expressed as [`crate::engine::Workload`]
+//! implementations. `Harness` is now an alias so every existing caller
+//! — apps, benches, integration tests — keeps compiling and behaving
+//! bit-identically; new code should use [`crate::engine`] directly.
 
-use std::path::Path;
-use std::sync::Arc;
-use std::time::{Duration, Instant};
+pub use crate::engine::{artifact_dir, ClusterEngine};
 
-use crate::config::types::{BackendKind, RunConfig};
-use crate::error::{Error, Result};
-use crate::linalg::partition::{submatrix_ranges, RowRange};
-use crate::linalg::{Block, Matrix};
-use crate::metrics::{StepRecord, Timeline};
-use crate::net::{
-    AnyTransport, ChaosSpec, ChaosTransport, Hello, LocalTransport, TcpOptions, TcpPeer,
-    TcpTransport, Transport, WorkloadSpec, DEFAULT_HEARTBEAT_MS, WIRE_VERSION,
-};
-use crate::obs::{CounterSnapshot, Event, EventKind, Journal, OrderStat, Recorder, Registry};
-use crate::placement::{Placement, PlacementKind};
-use crate::rebalance::Rebalancer;
-use crate::runtime::{Backend, BackendSpec};
-use crate::sched::checkpoint::{Checkpoint, CheckpointWriter};
-use crate::sched::master::{Master, MasterConfig};
-use crate::sched::straggler::StraggleMode;
-use crate::sched::worker::{WorkerConfig, WorkerStorage};
-use crate::sched::{ElasticityTrace, StragglerInjector};
-use crate::util::retry::{RetryPolicy, RetryState};
-
-/// Everything needed to run elastic steps over one matrix.
-pub struct Harness {
-    pub placement: Placement,
-    pub sub_ranges: Vec<RowRange>,
-    /// Worker channel — local threads or TCP daemons.
-    pub transport: AnyTransport,
-    pub master: Master,
-    /// Master-side combine backend.
-    pub combine: Backend,
-    pub trace: ElasticityTrace,
-    pub injector: StragglerInjector,
-    pub timeline: Timeline,
-    /// Live placement adaptation (`--rebalance`): consulted between
-    /// steps; `None` keeps the placement frozen, bit-identical to the
-    /// classic behaviour.
-    rebalancer: Option<Rebalancer>,
-    /// Tracing journal (`--trace-out`): owns the writer thread; dropped
-    /// (or [`Harness::finish_trace`]d) ⇒ flushed and closed.
-    journal: Option<Journal>,
-    /// Harness-side handle on the same journal for step/migration spans.
-    recorder: Option<Recorder>,
-    /// Per-worker counters, shared with the master; snapshotted into every
-    /// [`StepRecord`] while tracing is on.
-    registry: Option<Arc<Registry>>,
-    /// Previous step's transport liveness, to count dead→alive
-    /// re-admissions as reconnects.
-    prev_alive: Vec<bool>,
-    /// Shared capped-exponential backoff policy for dead-host dials
-    /// ([`crate::util::retry`]).
-    dial_policy: RetryPolicy,
-    /// Per-worker backoff state gating re-admission dials, so a host that
-    /// stays dead costs O(log) dials per window instead of one per step.
-    dial_states: Vec<RetryState>,
-    /// Dial retries attempted since the last step record.
-    retries_step: u64,
-    /// Cumulative chaos fault count at the last step record (the timeline
-    /// surfaces per-step deltas).
-    faults_seen: u64,
-    /// Background checkpoint writer (`--checkpoint-out`).
-    checkpointer: Option<CheckpointWriter>,
-    /// First step the run loop executes (> 0 after `--resume`).
-    start_step: usize,
-    /// Iterate + last metric recovered from `--resume`, handed to the app
-    /// via [`Harness::take_resume`].
-    resume: Option<(Block, f64)>,
-    cfg: RunConfig,
-}
-
-impl Harness {
-    /// Wire up workers, master, trace and chaos from config + data matrix.
-    ///
-    /// Without a workload spec the run spans TCP daemons only when
-    /// `cfg.stream_data` is set (the master then streams each worker's
-    /// placed rows); apps whose workload can be regenerated from a seed
-    /// should call [`Harness::build_with_workload`] so distributed runs
-    /// also work without streaming.
-    pub fn build(cfg: &RunConfig, matrix: Arc<Matrix>) -> Result<Harness> {
-        Harness::build_with_workload(cfg, matrix, None)
-    }
-
-    /// Like [`Harness::build`], with a [`WorkloadSpec`] describing how
-    /// remote workers regenerate their (uncoded) stored sub-matrices when
-    /// `cfg.workers` names TCP daemons.
-    pub fn build_with_workload(
-        cfg: &RunConfig,
-        matrix: Arc<Matrix>,
-        workload: Option<WorkloadSpec>,
-    ) -> Result<Harness> {
-        cfg.validate()?;
-        if matrix.rows() != cfg.q || matrix.cols() != cfg.r {
-            return Err(Error::Shape(format!(
-                "matrix is {}x{}, config says {}x{}",
-                matrix.rows(),
-                matrix.cols(),
-                cfg.q,
-                cfg.r
-            )));
-        }
-        // `--resume`: load + validate the checkpoint before anything is
-        // wired up — the recorded placement (possibly rebalanced away from
-        // the seed one) shapes the TCP handshakes, and the recorded EWMA
-        // speeds seed the master's estimator.
-        let digest_spec = workload
-            .clone()
-            .unwrap_or(WorkloadSpec::Streamed { q: cfg.q, r: cfg.r });
-        let resume_ckpt = if cfg.resume.is_empty() {
-            None
-        } else {
-            let c = Checkpoint::load(Path::new(&cfg.resume), &digest_spec)?;
-            if c.nvec != cfg.batch {
-                return Err(Error::checkpoint(format!(
-                    "checkpoint batch width {} vs configured --batch {}",
-                    c.nvec, cfg.batch
-                )));
-            }
-            if c.w.len() != cfg.r * cfg.batch {
-                return Err(Error::checkpoint(format!(
-                    "iterate has {} values, expected r·B = {}",
-                    c.w.len(),
-                    cfg.r * cfg.batch
-                )));
-            }
-            if !c.speeds.is_empty() && c.speeds.len() != cfg.n {
-                return Err(Error::checkpoint(format!(
-                    "{} speed estimates for N={} machines",
-                    c.speeds.len(),
-                    cfg.n
-                )));
-            }
-            if c.stored.len() != cfg.n {
-                return Err(Error::checkpoint(format!(
-                    "{} stored sets for N={} machines",
-                    c.stored.len(),
-                    cfg.n
-                )));
-            }
-            Some(c)
-        };
-
-        let placement = match &resume_ckpt {
-            Some(c) => placement_from_stored(cfg, &c.stored)?,
-            None => Placement::build(cfg.placement, cfg.n, cfg.g, cfg.j)?,
-        };
-        let sub_ranges = submatrix_ranges(cfg.q, cfg.g)?;
-
-        let speeds = if cfg.speeds.is_empty() {
-            crate::sched::speed::ec2_mixed_profile(cfg.n)
-        } else {
-            cfg.speeds.clone()
-        };
-
-        let transport = if cfg.workers.is_empty() {
-            // Local simulator mode: every worker shares one zero-copy
-            // full-matrix view — bit-identical with the distributed runs.
-            let backend_spec = BackendSpec::from_kind(cfg.backend, artifact_dir());
-            let ranges = Arc::new(sub_ranges.clone());
-            let configs: Vec<WorkerConfig> = (0..cfg.n)
-                .map(|id| WorkerConfig {
-                    id,
-                    backend: backend_spec.clone(),
-                    speed: speeds[id],
-                    tile_rows: cfg.tile_rows,
-                    threads: cfg.worker_threads,
-                    storage: WorkerStorage::full(
-                        Arc::clone(&matrix),
-                        Arc::clone(&ranges),
-                    ),
-                })
-                .collect();
-            AnyTransport::Local(LocalTransport::spawn(configs)?)
-        } else {
-            // Distributed mode: every worker materializes only its placed
-            // J-out-of-G share, regenerated from the workload spec or
-            // streamed from the master's matrix (`--stream-data`).
-            let spec = if cfg.stream_data {
-                WorkloadSpec::Streamed { q: cfg.q, r: cfg.r }
-            } else {
-                workload.ok_or_else(|| {
-                    Error::Config(
-                        "this workload cannot run on TCP workers: no deterministic \
-                         workload spec to ship in the handshake (use --stream-data \
-                         to stream the rows instead)"
-                            .into(),
-                    )
-                })?
-            };
-            if spec.rows() != cfg.q || spec.cols() != cfg.r {
-                return Err(Error::Shape(format!(
-                    "workload spec is {}x{}, config says {}x{}",
-                    spec.rows(),
-                    spec.cols(),
-                    cfg.q,
-                    cfg.r
-                )));
-            }
-            let peers: Vec<TcpPeer> = (0..cfg.n)
-                .map(|id| {
-                    Ok(TcpPeer {
-                        addr: cfg.workers[id].clone(),
-                        hello: Hello {
-                            version: WIRE_VERSION,
-                            worker: id,
-                            speed: speeds[id],
-                            tile_rows: cfg.tile_rows,
-                            backend: cfg.backend,
-                            g: cfg.g,
-                            heartbeat_ms: DEFAULT_HEARTBEAT_MS,
-                            threads: cfg.worker_threads,
-                            workload: spec.clone(),
-                            stored: placement.stored_by(id).collect(),
-                        },
-                        stream_ranges: placement.stored_ranges(id, &sub_ranges)?,
-                    })
-                })
-                .collect::<Result<_>>()?;
-            // live migration streams replica rows from the master-side
-            // matrix (which the master holds anyway), so --rebalance needs
-            // it attached even for generator-backed workloads
-            let data = if cfg.stream_data || cfg.rebalance.enabled {
-                Some(Arc::clone(&matrix))
-            } else {
-                None
-            };
-            AnyTransport::Tcp(TcpTransport::connect_with_data(
-                peers,
-                TcpOptions::default(),
-                data,
-            )?)
-        };
-
-        let mut master = Master::new(MasterConfig {
-            placement: placement.clone(),
-            sub_ranges: sub_ranges.clone(),
-            params: cfg.solve_params(),
-            policy: cfg.policy,
-            gamma: cfg.gamma,
-            // a resumed master starts from the checkpointed EWMA estimates
-            // (what the dead master had learned); fresh runs learn from
-            // the uniform prior (Algorithm 1)
-            initial_speeds: resume_ckpt
-                .as_ref()
-                .map(|c| c.speeds.clone())
-                .unwrap_or_default(),
-            row_cost_ns: cfg.row_cost_ns,
-            // under chaos a dropped order with recovery off must become a
-            // typed coverage error quickly, not a minute-long hang
-            recovery_timeout: if cfg.chaos.is_empty() {
-                Duration::from_secs(60)
-            } else {
-                Duration::from_secs(2)
-            },
-            recovery: cfg.recovery,
-        })?;
-
-        // `--trace-out` attaches the whole observability stack: the JSONL
-        // journal, the master's per-order spans, and the counter registry.
-        // When the flag is absent none of this exists and the run (wire
-        // bytes included) is identical to an untraced build.
-        let (journal, recorder, registry) = if cfg.trace_out.is_empty() {
-            (None, None, None)
-        } else {
-            let journal = Journal::create(&cfg.trace_out)?;
-            let registry = Arc::new(Registry::new(cfg.n));
-            master.set_recorder(Some(journal.recorder()));
-            master.set_registry(Arc::clone(&registry));
-            let recorder = journal.recorder();
-            (Some(journal), Some(recorder), Some(registry))
-        };
-
-        // `--chaos`: wrap the transport in the seeded fault injector. The
-        // wrapper composes over either transport and journals every fault;
-        // with the flag absent nothing is wrapped and the wire traffic is
-        // byte-identical to the unwrapped run.
-        let chaos_spec = ChaosSpec::parse(&cfg.chaos)?;
-        let transport = if chaos_spec.is_empty() {
-            transport
-        } else {
-            let chaos_seed = if cfg.chaos_seed != 0 {
-                cfg.chaos_seed
-            } else {
-                cfg.seed ^ 0xC4A0
-            };
-            AnyTransport::Chaos(Box::new(ChaosTransport::new(
-                transport,
-                chaos_spec,
-                chaos_seed,
-                recorder.clone(),
-            )))
-        };
-
-        let combine = BackendSpec::from_kind(
-            // PJRT combine only works when artifacts match q; fall back.
-            if cfg.backend == BackendKind::Pjrt {
-                cfg.backend
-            } else {
-                BackendKind::Host
-            },
-            artifact_dir(),
-        )
-        .instantiate()?;
-
-        let mut trace = if cfg.preempt_prob > 0.0 || cfg.arrive_prob > 0.0 {
-            ElasticityTrace::bernoulli(
-                cfg.n,
-                cfg.preempt_prob,
-                cfg.arrive_prob,
-                cfg.min_available.max(cfg.j), // keep runs feasible by default
-                cfg.seed ^ 0xE1A5,
-            )
-        } else {
-            ElasticityTrace::static_all(cfg.n)
-        };
-        let injector = if cfg.injected_stragglers > 0 {
-            let mode = if cfg.straggler_slowdown > 1.0 {
-                StraggleMode::Slow(cfg.straggler_slowdown)
-            } else {
-                StraggleMode::Drop
-            };
-            if cfg.straggler_fixed {
-                // deterministic victims drawn once from the seed
-                let mut rng = crate::util::Rng::new(cfg.seed ^ 0x57A6);
-                let victims = rng.sample_indices(cfg.n, cfg.injected_stragglers.min(cfg.n));
-                StragglerInjector::fixed(victims, mode)
-            } else {
-                StragglerInjector::new(cfg.injected_stragglers, mode, cfg.seed ^ 0x57A6)
-            }
-        } else {
-            StragglerInjector::none()
-        };
-
-        // surface what each worker actually holds — the storage cost the
-        // placement prescribes, now measured instead of assumed
-        let mut timeline = Timeline::new();
-        timeline.set_storage_bytes(transport.resident_bytes());
-
-        let rebalancer = if cfg.rebalance.enabled {
-            Some(Rebalancer::new(
-                cfg.rebalance.clone(),
-                sub_ranges.clone(),
-                cfg.r,
-                cfg.solve_params(),
-                cfg.seed ^ 0x5EBA,
-            )?)
-        } else {
-            None
-        };
-
-        // resume: replay the elasticity trace up to the resumed step so
-        // the availability stream continues where the dead master left
-        // off. (Injected-straggler draws depend on each step's live
-        // availability and cannot be replayed blind — resumed runs match
-        // the oracle exactly for configs without injected stragglers.)
-        let start_step = resume_ckpt.as_ref().map(|c| c.next_step).unwrap_or(0);
-        for _ in 0..start_step {
-            trace.next_step();
-        }
-
-        let checkpointer = if cfg.checkpoint_out.is_empty() {
-            None
-        } else {
-            Some(CheckpointWriter::new(
-                Path::new(&cfg.checkpoint_out),
-                &digest_spec,
-            ))
-        };
-        let resume = match resume_ckpt {
-            Some(c) => {
-                if let Some(rec) = &recorder {
-                    rec.emit(
-                        Event::new(EventKind::Checkpoint, c.next_step, rec.now_ns())
-                            .rows(cfg.r)
-                            .note("resume"),
-                    );
-                }
-                Some((Block::from_interleaved(cfg.r, c.nvec, c.w)?, c.last_metric))
-            }
-            None => None,
-        };
-
-        let prev_alive = transport.alive();
-        Ok(Harness {
-            placement,
-            sub_ranges,
-            transport,
-            master,
-            combine,
-            trace,
-            injector,
-            timeline,
-            rebalancer,
-            journal,
-            recorder,
-            registry,
-            prev_alive,
-            dial_policy: RetryPolicy::dial(),
-            dial_states: (0..cfg.n)
-                .map(|w| RetryState::new(cfg.seed ^ 0xD1A1 ^ (w as u64).wrapping_mul(0x9E37)))
-                .collect(),
-            retries_step: 0,
-            faults_seen: 0,
-            checkpointer,
-            start_step,
-            resume,
-            cfg: cfg.clone(),
-        })
-    }
-
-    /// The iterate and last metric a `--resume` checkpoint recorded
-    /// (`None` for a fresh run, and after the first call). The app starts
-    /// from this block instead of its own `w0`; the step loop itself
-    /// fast-forwards to the resumed step index.
-    pub fn take_resume(&mut self) -> Option<(Block, f64)> {
-        self.resume.take()
-    }
-
-    /// First step the run loop will execute (> 0 after `--resume`).
-    pub fn start_step(&self) -> usize {
-        self.start_step
-    }
-
-    /// Run `steps` elastic iterations on the classic single-vector plane.
-    /// Per step the caller's `update` receives the master combine backend,
-    /// the current iterate `w_t`, and the assembled product `y_t = X w_t`,
-    /// and returns `(w_{t+1}, metric)`. Infeasible steps (availability
-    /// below `1+S` replicas for some sub-matrix) are skipped and recorded
-    /// with the previous metric.
-    ///
-    /// This is [`Harness::run_block`] at `B = 1` — the wrapping is
-    /// zero-copy in both directions, so the trajectory is bit-identical
-    /// to the pre-block harness.
-    pub fn run<F>(&mut self, w0: Vec<f32>, steps: usize, mut update: F) -> Result<Vec<f32>>
-    where
-        F: FnMut(&Backend, &[f32], Vec<f32>) -> Result<(Vec<f32>, f64)>,
-    {
-        let out = self.run_block(Block::single(w0), steps, |combine, w, y| {
-            let (next, metric) = update(combine, w.data(), y.into_single())?;
-            Ok((Block::single(next), metric))
-        })?;
-        Ok(out.into_single())
-    }
-
-    /// Run `steps` elastic iterations of the block data plane: the iterate
-    /// is a [`Block`] of `B` vectors, each step assembles the product
-    /// block `Y_t = X W_t`, and `update` returns the next block plus a
-    /// scalar metric.
-    ///
-    /// The availability set is the elasticity trace *intersected with
-    /// transport liveness*: a worker whose connection died is preempted
-    /// until it comes back, whatever the trace says.
-    pub fn run_block<F>(&mut self, w0: Block, steps: usize, mut update: F) -> Result<Block>
-    where
-        F: FnMut(&Backend, &Block, Block) -> Result<(Block, f64)>,
-    {
-        let q = self.cfg.q;
-        let mut w = Arc::new(w0);
-        let mut last_metric = f64::NAN;
-        for step in self.start_step..steps {
-            let avail = self.availability(step);
-            // live placement adaptation: between steps (before dispatch)
-            // the rebalancer may migrate replica rows and swap the
-            // effective placement — assignments, feasibility, and recovery
-            // below all see the post-migration layout
-            let migrations = self.rebalance_tick(step, &avail);
-            if self
-                .placement
-                .check_feasible(&avail, self.cfg.stragglers)
-                .is_err()
-            {
-                crate::log_debug!("step {step}: infeasible availability {avail:?}, skipping");
-                let (counters, [rtt_p50_ms, rtt_p99_ms, compute_p50_ms, compute_p99_ms]) =
-                    self.trace_tail(&[]);
-                let (faults, retries) = self.robustness_tail();
-                self.timeline.push(StepRecord {
-                    step,
-                    available: avail.len(),
-                    reported: 0,
-                    stragglers: 0,
-                    wall: Duration::ZERO,
-                    solve: Duration::ZERO,
-                    predicted_c: f64::NAN,
-                    metric: last_metric,
-                    recoveries: Vec::new(),
-                    migrations,
-                    counters,
-                    rtt_p50_ms,
-                    rtt_p99_ms,
-                    compute_p50_ms,
-                    compute_p99_ms,
-                    overlap_ns: 0,
-                    faults,
-                    retries,
-                    checkpoint: false,
-                });
-                continue;
-            }
-            // the Step span covers dispatch→assemble *and* the master-side
-            // combine, so order spans nest inside it in the Chrome view
-            let step_span = self.recorder.as_ref().map(|r| (r.now_ns(), Instant::now()));
-            let victims = self.injector.choose(&avail);
-            let out = self
-                .master
-                .step(&self.transport, step, &w, &avail, &victims)?;
-            let y = Block::from_interleaved(q, out.nvec, out.y)?;
-            let (next, metric) = update(&self.combine, &w, y)?;
-            last_metric = metric;
-            let wrote = self.maybe_checkpoint(step, &next, metric);
-            if let (Some(rec), Some((t_ns, start))) = (&self.recorder, step_span) {
-                rec.emit(
-                    Event::new(EventKind::Step, step, t_ns)
-                        .rows(q)
-                        .dur(start.elapsed().as_nanos() as u64),
-                );
-            }
-            let (counters, [rtt_p50_ms, rtt_p99_ms, compute_p50_ms, compute_p99_ms]) =
-                self.trace_tail(&out.order_stats);
-            let (faults, retries) = self.robustness_tail();
-            self.timeline.push(StepRecord {
-                step,
-                available: avail.len(),
-                reported: out.reporters.len(),
-                stragglers: victims.len(),
-                wall: out.wall,
-                solve: out.solve,
-                predicted_c: out.predicted_c,
-                metric,
-                recoveries: out.recoveries,
-                migrations,
-                counters,
-                rtt_p50_ms,
-                rtt_p99_ms,
-                compute_p50_ms,
-                compute_p99_ms,
-                overlap_ns: 0,
-                faults,
-                retries,
-                checkpoint: wrote,
-            });
-            w = Arc::new(next);
-        }
-        Ok(Arc::try_unwrap(w).unwrap_or_else(|a| (*a).clone()))
-    }
-
-    /// One step's availability set: the elasticity trace intersected with
-    /// transport liveness, after re-admitting any reconnected daemons and
-    /// counting dead→alive transitions as reconnects.
-    ///
-    /// Dials to still-dead hosts are gated by the shared capped-
-    /// exponential backoff ([`crate::util::retry`]): a host that stays
-    /// down is dialed O(log) times per backoff window instead of once per
-    /// step, every attempt counts into the registry's `dial_attempts`,
-    /// and a revival resets that worker's backoff.
-    fn availability(&mut self, step: usize) -> Vec<usize> {
-        let mut alive = self.transport.alive();
-        if alive.iter().any(|a| !a) {
-            let now = Instant::now();
-            let eligible: Vec<bool> = alive
-                .iter()
-                .enumerate()
-                .map(|(w, &up)| !up && self.dial_states[w].ready(now))
-                .collect();
-            if eligible.iter().any(|&e| e) {
-                // a reconnecting worker daemon rejoins the availability
-                // set at the next step instead of staying preempted forever
-                if self.transport.readmit_filtered(&eligible) > 0 {
-                    self.timeline
-                        .set_storage_bytes(self.transport.resident_bytes());
-                    alive = self.transport.alive();
-                }
-                for w in 0..eligible.len() {
-                    if !eligible[w] {
-                        continue;
-                    }
-                    self.retries_step += 1;
-                    if let Some(reg) = &self.registry {
-                        reg.add_dial_attempt(w);
-                    }
-                    if let Some(rec) = &self.recorder {
-                        rec.emit(
-                            Event::new(EventKind::Retry, step, rec.now_ns())
-                                .worker(w)
-                                .rows(self.dial_states[w].attempts() as usize + 1)
-                                .note("dial"),
-                        );
-                    }
-                    if alive[w] {
-                        self.dial_states[w].record_success();
-                        if let Some(reg) = &self.registry {
-                            reg.add_dial_success(w);
-                        }
-                    } else {
-                        let _ = self.dial_states[w].record_failure(&self.dial_policy, now);
-                    }
-                }
-            }
-        }
-        if let Some(reg) = &self.registry {
-            for (w, (&was, &is)) in self.prev_alive.iter().zip(&alive).enumerate() {
-                if !was && is {
-                    reg.add_reconnect(w);
-                }
-            }
-        }
-        self.prev_alive.clone_from(&alive);
-        self.trace
-            .next_step()
-            .into_iter()
-            .filter(|&n| alive.get(n).copied().unwrap_or(false))
-            .collect()
-    }
-
-    /// Split-closure variant of [`Harness::run`] (`B = 1`): `prepare`
-    /// derives the next iterate from the assembled product (the serial
-    /// critical path), `finish` computes the step's metric from that
-    /// iterate (deferrable master-side work). With `--pipeline` off this
-    /// fuses the closures and calls [`Harness::run_block`] — bit-identical
-    /// to the classic loop; with it on, each step's `finish` runs while
-    /// the *next* step's orders are in flight on the workers.
-    pub fn run_split<P, F>(
-        &mut self,
-        w0: Vec<f32>,
-        steps: usize,
-        mut prepare: P,
-        mut finish: F,
-    ) -> Result<Vec<f32>>
-    where
-        P: FnMut(&Backend, &[f32], Vec<f32>) -> Result<Vec<f32>>,
-        F: FnMut(&Backend, &[f32]) -> Result<f64>,
-    {
-        let out = self.run_block_split(
-            Block::single(w0),
-            steps,
-            |combine, w, y| Ok(Block::single(prepare(combine, w.data(), y.into_single())?)),
-            |combine, next| finish(combine, next.data()),
-        )?;
-        Ok(out.into_single())
-    }
-
-    /// Split-closure variant of [`Harness::run_block`] — see
-    /// [`Harness::run_split`]. Dispatches to the pipelined event loop
-    /// when `cfg.pipeline` is set, else fuses back into the synchronous
-    /// loop (same wire traffic, same trajectory, byte for byte).
-    pub fn run_block_split<P, F>(
-        &mut self,
-        w0: Block,
-        steps: usize,
-        mut prepare: P,
-        mut finish: F,
-    ) -> Result<Block>
-    where
-        P: FnMut(&Backend, &Block, Block) -> Result<Block>,
-        F: FnMut(&Backend, &Block) -> Result<f64>,
-    {
-        if self.cfg.pipeline {
-            self.run_block_pipelined(w0, steps, prepare, finish)
-        } else {
-            self.run_block(w0, steps, |combine, w, y| {
-                let next = prepare(combine, w, y)?;
-                let metric = finish(combine, &next)?;
-                Ok((next, metric))
-            })
-        }
-    }
-
-    /// The pipelined step loop (`--pipeline`): per step, completed
-    /// migrations are harvested and the next budgeted window dispatched
-    /// onto the transfer lane, step `i`'s orders are dispatched
-    /// ([`Master::begin_step`]), the *previous* step's deferred `finish`
-    /// runs while those orders are in flight (its duration is surfaced as
-    /// `timeline[i-1].overlap_ns` and a `combine` journal span), and only
-    /// then does the master block collecting step `i`'s reports
-    /// ([`Master::collect_step`]). `prepare` stays on the critical path —
-    /// the next iterate is needed before the next dispatch — so the
-    /// trajectory is bit-identical to the synchronous loop; only the
-    /// metric computation overlaps worker compute.
-    fn run_block_pipelined<P, F>(
-        &mut self,
-        w0: Block,
-        steps: usize,
-        mut prepare: P,
-        mut finish: F,
-    ) -> Result<Block>
-    where
-        P: FnMut(&Backend, &Block, Block) -> Result<Block>,
-        F: FnMut(&Backend, &Block) -> Result<f64>,
-    {
-        let q = self.cfg.q;
-        let mut w = Arc::new(w0);
-        let mut last_metric = f64::NAN;
-        let mut pending: Option<PendingFinish> = None;
-        for step in self.start_step..steps {
-            let avail = self.availability(step);
-            let migrations = self.rebalance_tick_async(step, &avail);
-            if self
-                .placement
-                .check_feasible(&avail, self.cfg.stragglers)
-                .is_err()
-            {
-                crate::log_debug!("step {step}: infeasible availability {avail:?}, skipping");
-                // flush the deferred finish first so the skip record sees
-                // the freshest metric and the timeline stays in step order
-                self.finish_pending(&mut pending, &mut finish, &mut last_metric)?;
-                let (counters, [rtt_p50_ms, rtt_p99_ms, compute_p50_ms, compute_p99_ms]) =
-                    self.trace_tail(&[]);
-                let (faults, retries) = self.robustness_tail();
-                self.timeline.push(StepRecord {
-                    step,
-                    available: avail.len(),
-                    reported: 0,
-                    stragglers: 0,
-                    wall: Duration::ZERO,
-                    solve: Duration::ZERO,
-                    predicted_c: f64::NAN,
-                    metric: last_metric,
-                    recoveries: Vec::new(),
-                    migrations,
-                    counters,
-                    rtt_p50_ms,
-                    rtt_p99_ms,
-                    compute_p50_ms,
-                    compute_p99_ms,
-                    overlap_ns: 0,
-                    faults,
-                    retries,
-                    checkpoint: false,
-                });
-                continue;
-            }
-            let step_span = self.recorder.as_ref().map(|r| (r.now_ns(), Instant::now()));
-            let victims = self.injector.choose(&avail);
-            // dispatch first; the previous step's finish overlaps the
-            // in-flight compute, then the collect loop blocks
-            let fl = self
-                .master
-                .begin_step(&self.transport, step, &w, &avail, &victims)?;
-            self.finish_pending(&mut pending, &mut finish, &mut last_metric)?;
-            let out = self.master.collect_step(&self.transport, fl)?;
-            let y = Block::from_interleaved(q, out.nvec, out.y)?;
-            let next = Arc::new(prepare(&self.combine, &w, y)?);
-            // the deferred finish hasn't produced this step's metric yet,
-            // so the snapshot records the last observed one (bit-exactly;
-            // resume correctness only needs the iterate and speeds)
-            let wrote = self.maybe_checkpoint(step, &next, last_metric);
-            if let (Some(rec), Some((t_ns, start))) = (&self.recorder, step_span) {
-                rec.emit(
-                    Event::new(EventKind::Step, step, t_ns)
-                        .rows(q)
-                        .dur(start.elapsed().as_nanos() as u64),
-                );
-            }
-            let (counters, [rtt_p50_ms, rtt_p99_ms, compute_p50_ms, compute_p99_ms]) =
-                self.trace_tail(&out.order_stats);
-            let (faults, retries) = self.robustness_tail();
-            pending = Some(PendingFinish {
-                record: StepRecord {
-                    step,
-                    available: avail.len(),
-                    reported: out.reporters.len(),
-                    stragglers: victims.len(),
-                    wall: out.wall,
-                    solve: out.solve,
-                    predicted_c: out.predicted_c,
-                    metric: f64::NAN,
-                    recoveries: out.recoveries,
-                    migrations,
-                    counters,
-                    rtt_p50_ms,
-                    rtt_p99_ms,
-                    compute_p50_ms,
-                    compute_p99_ms,
-                    overlap_ns: 0,
-                    faults,
-                    retries,
-                    checkpoint: wrote,
-                },
-                next: Arc::clone(&next),
-            });
-            w = next;
-        }
-        // the last step has no next dispatch to hide behind
-        self.finish_pending(&mut pending, &mut finish, &mut last_metric)?;
-        Ok(Arc::try_unwrap(w).unwrap_or_else(|a| (*a).clone()))
-    }
-
-    /// Run the deferred `finish` of the previous pipelined step (if any),
-    /// fill in its metric and `overlap_ns`, and push its record. Emits
-    /// the `combine` journal span whose overlap with the next step's
-    /// order spans is the pipeline's visible win.
-    fn finish_pending<F>(
-        &mut self,
-        pending: &mut Option<PendingFinish>,
-        finish: &mut F,
-        last_metric: &mut f64,
-    ) -> Result<()>
-    where
-        F: FnMut(&Backend, &Block) -> Result<f64>,
-    {
-        let Some(p) = pending.take() else {
-            return Ok(());
-        };
-        let t_ns = self.recorder.as_ref().map(|r| r.now_ns());
-        let t0 = Instant::now();
-        let metric = finish(&self.combine, &p.next)?;
-        let overlap_ns = t0.elapsed().as_nanos() as u64;
-        if let (Some(rec), Some(t_ns)) = (&self.recorder, t_ns) {
-            rec.emit(
-                Event::new(EventKind::Combine, p.record.step, t_ns)
-                    .rows(self.cfg.q)
-                    .dur(overlap_ns),
-            );
-        }
-        *last_metric = metric;
-        let mut record = p.record;
-        record.metric = metric;
-        // floor at 1: the JSON key is gated on overlap_ns > 0, and a
-        // pipelined step did overlap even if the finish was sub-tick
-        record.overlap_ns = overlap_ns.max(1);
-        self.timeline.push(record);
-        Ok(())
-    }
-
-    pub fn config(&self) -> &RunConfig {
-        &self.cfg
-    }
-
-    /// Per-step robustness tallies for the timeline record: the chaos
-    /// fault delta since the last record and the backed-off dial retries
-    /// since then. Both are 0 (and their JSON keys absent) when `--chaos`
-    /// is off and no dial was needed.
-    fn robustness_tail(&mut self) -> (u64, u64) {
-        let total = self.transport.chaos_faults();
-        let faults = total - self.faults_seen;
-        self.faults_seen = total;
-        (faults, std::mem::take(&mut self.retries_step))
-    }
-
-    /// Queue a resumable snapshot at this step boundary if checkpointing
-    /// is on and the cadence says so. `next` is the iterate the *next*
-    /// step would consume; a boundary with a shard migration still on the
-    /// transfer lane is skipped (its pending ledger would make the
-    /// snapshot unusable — the next clean boundary writes instead).
-    fn maybe_checkpoint(&self, step: usize, next: &Block, metric: f64) -> bool {
-        let Some(ck) = &self.checkpointer else {
-            return false;
-        };
-        if (step + 1) % self.cfg.checkpoint_every != 0 {
-            return false;
-        }
-        if self
-            .rebalancer
-            .as_ref()
-            .is_some_and(|rb| rb.in_transition())
-        {
-            return false;
-        }
-        ck.submit(Checkpoint {
-            next_step: step + 1,
-            nvec: next.nvec(),
-            w: next.data().to_vec(),
-            speeds: self.master.speed_estimate().to_vec(),
-            last_metric: metric,
-            stored: (0..self.cfg.n)
-                .map(|w| self.placement.stored_by(w).collect())
-                .collect(),
-            pending: Vec::new(),
-        });
-        if let Some(rec) = &self.recorder {
-            rec.emit(Event::new(EventKind::Checkpoint, step, rec.now_ns()).rows(self.cfg.r));
-        }
-        true
-    }
-
-    /// Close the tracing journal: flushes buffered events and joins the
-    /// writer thread, surfacing any write error. No-op when tracing was
-    /// never attached (or already finished); dropping the harness performs
-    /// the same flush silently.
-    pub fn finish_trace(&mut self) -> Result<()> {
-        match self.journal.take() {
-            Some(j) => j.finish(),
-            None => Ok(()),
-        }
-    }
-
-    /// Tracing tail for a [`StepRecord`]: the per-worker counter snapshot
-    /// (registry merged with transport wire IO) plus order-latency
-    /// quantiles in milliseconds — `[rtt p50, rtt p99, compute p50,
-    /// compute p99]`, NaN where no traced order landed this step.
-    fn trace_tail(&self, stats: &[OrderStat]) -> (Vec<CounterSnapshot>, [f64; 4]) {
-        let counters = match &self.registry {
-            Some(reg) => reg.snapshot(&self.transport.io_counters()),
-            None => Vec::new(),
-        };
-        let rtt: Vec<f64> = stats.iter().map(|s| s.rtt_ns as f64 / 1e6).collect();
-        let compute: Vec<f64> = stats
-            .iter()
-            .filter_map(|s| s.breakdown.map(|b| b.compute_ns as f64 / 1e6))
-            .collect();
-        let q = |xs: &[f64], p: f64| {
-            if xs.is_empty() {
-                f64::NAN
-            } else {
-                crate::metrics::stats::quantile(xs, p)
-            }
-        };
-        (
-            counters,
-            [q(&rtt, 0.5), q(&rtt, 0.99), q(&compute, 0.5), q(&compute, 0.99)],
-        )
-    }
-
-    /// One inter-step rebalance window: consult the drift monitor, execute
-    /// up to one byte-budget of replica moves, install the new effective
-    /// placement in the master, and re-report per-worker resident storage
-    /// (so `timeline.storage.per_worker_bytes` reflects every storage
-    /// change, not just the handshake snapshot). Failures are logged and
-    /// the step proceeds on the unchanged placement — rebalancing is an
-    /// optimization, never a reason to kill a run.
-    fn rebalance_tick(
-        &mut self,
-        step: usize,
-        avail: &[usize],
-    ) -> Vec<crate::rebalance::MigrationRecord> {
-        let Some(rb) = self.rebalancer.as_mut() else {
-            return Vec::new();
-        };
-        let speeds = self.master.speed_estimate().to_vec();
-        match rb.tick(step, &self.transport, self.master.placement(), avail, &speeds) {
-            Ok((placement, records)) => {
-                if records.is_empty() || self.install_placement(step, placement, &records) {
-                    records
-                } else {
-                    Vec::new()
-                }
-            }
-            Err(e) => {
-                crate::log_warn!("step {step}: rebalance tick failed: {e}");
-                Vec::new()
-            }
-        }
-    }
-
-    /// The pipelined twin of [`Harness::rebalance_tick`]: first harvest
-    /// completed transfer-lane gains ([`Rebalancer::harvest`]) — this is
-    /// the safe point, between steps, where no orders are in flight
-    /// against the old placement — then dispatch the next budgeted window
-    /// through the lane ([`Rebalancer::tick_async`]), so its bytes stream
-    /// while the upcoming step computes.
-    fn rebalance_tick_async(
-        &mut self,
-        step: usize,
-        avail: &[usize],
-    ) -> Vec<crate::rebalance::MigrationRecord> {
-        if self.rebalancer.is_none() {
-            return Vec::new();
-        }
-        let speeds = self.master.speed_estimate().to_vec();
-        let mut records = Vec::new();
-        let harvested = {
-            let rb = self.rebalancer.as_mut().expect("checked above");
-            rb.harvest(step, &self.transport, self.master.placement())
-        };
-        match harvested {
-            Ok((placement, recs)) => {
-                if !recs.is_empty() && self.install_placement(step, placement, &recs) {
-                    records.extend(recs);
-                }
-            }
-            Err(e) => crate::log_warn!("step {step}: migration harvest failed: {e}"),
-        }
-        let ticked = {
-            let rb = self.rebalancer.as_mut().expect("checked above");
-            rb.tick_async(step, &self.transport, self.master.placement(), avail, &speeds)
-        };
-        match ticked {
-            Ok((placement, recs)) => {
-                // lane-accepted moves produce no records yet; only inline
-                // completions swap the placement here
-                if !recs.is_empty() && self.install_placement(step, placement, &recs) {
-                    records.extend(recs);
-                }
-            }
-            Err(e) => crate::log_warn!("step {step}: rebalance tick failed: {e}"),
-        }
-        records
-    }
-
-    /// Install a post-migration effective placement in the master,
-    /// refresh the storage snapshot, and log the move records. Returns
-    /// false (the caller then drops the records) if the master rejects
-    /// the swap.
-    fn install_placement(
-        &mut self,
-        step: usize,
-        placement: Placement,
-        records: &[crate::rebalance::MigrationRecord],
-    ) -> bool {
-        if let Err(e) = self.master.set_placement(placement.clone()) {
-            crate::log_warn!("step {step}: placement swap rejected: {e}");
-            return false;
-        }
-        self.placement = placement;
-        self.timeline
-            .set_storage_bytes(self.transport.resident_bytes());
-        for m in records {
-            if let Some(reg) = &self.registry {
-                reg.add_migration(m.to);
-            }
-            if let Some(rec) = &self.recorder {
-                rec.emit(
-                    Event::new(EventKind::Migration, step, rec.now_ns())
-                        .worker(m.to)
-                        .rows(m.rows)
-                        .note(format!("g{} {}->{}", m.g, m.from, m.to)),
-                );
-            }
-        }
-        true
-    }
-}
-
-/// The deferred master-side tail of one pipelined step: its metric
-/// computation and timeline record, held until the next step's orders
-/// are in flight (or the loop ends).
-struct PendingFinish {
-    /// The step's record with `metric` and `overlap_ns` still unfilled.
-    record: StepRecord,
-    /// The iterate the metric is computed from.
-    next: Arc<Block>,
-}
-
-/// Rebuild the effective placement a checkpoint recorded (possibly
-/// rebalanced away from the seed placement) from its per-worker stored
-/// sets: invert `Z_n` back into per-sub-matrix replica lists.
-fn placement_from_stored(cfg: &RunConfig, stored: &[Vec<usize>]) -> Result<Placement> {
-    let mut replicas = vec![Vec::new(); cfg.g];
-    for (worker, set) in stored.iter().enumerate() {
-        for &g in set {
-            if g >= cfg.g {
-                return Err(Error::checkpoint(format!(
-                    "stored set names sub-matrix {g} >= G={}",
-                    cfg.g
-                )));
-            }
-            replicas[g].push(worker);
-        }
-    }
-    Placement::from_replicas(PlacementKind::Custom, cfg.n, replicas)
-        .map_err(|e| Error::checkpoint(format!("checkpointed placement is invalid: {e}")))
-}
-
-/// Artifact directory: `$USEC_ARTIFACTS` or `<crate>/artifacts`.
-pub fn artifact_dir() -> std::path::PathBuf {
-    std::env::var_os("USEC_ARTIFACTS")
-        .map(Into::into)
-        .unwrap_or_else(|| {
-            std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
-        })
-}
+/// The historical name for the resident cluster engine.
+pub type Harness = ClusterEngine;

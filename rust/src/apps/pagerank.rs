@@ -13,9 +13,11 @@
 use std::sync::Arc;
 
 use crate::config::types::RunConfig;
+use crate::engine::Workload;
 use crate::error::{Error, Result};
 use crate::linalg::{gen, Block, Matrix};
 use crate::metrics::Timeline;
+use crate::runtime::Backend;
 
 use super::harness::Harness;
 
@@ -31,6 +33,80 @@ pub struct PageRankResult {
     /// Personalized rank vectors, one per seed node `0..batch`, when the
     /// run was multi-seed (`cfg.batch > 1`); empty otherwise.
     pub seed_ranks: Vec<Vec<f32>>,
+}
+
+/// One damped-PageRank step as an engine [`Workload`]: the iterate
+/// update (damping + uniform teleport) is the critical path; the L1
+/// step-to-step delta is produced alongside it and handed to `finish`,
+/// so under `--pipeline` nothing re-walks the vectors.
+struct PageRankStep {
+    n: usize,
+    damping: f64,
+    /// Latest step's L1 delta, stashed by `prepare` for `finish`.
+    delta: f64,
+}
+
+impl Workload for PageRankStep {
+    fn prepare(&mut self, _combine: &Backend, p: &Block, y: Block) -> Result<Block> {
+        let teleport = ((1.0 - self.damping) / self.n as f64) as f32;
+        let d32 = self.damping as f32;
+        let pv = p.data();
+        let yv = y.data();
+        let mut next = Vec::with_capacity(self.n);
+        let mut delta = 0.0f64;
+        for i in 0..self.n {
+            let v = d32 * yv[i] + teleport;
+            delta += (v as f64 - pv[i] as f64).abs();
+            next.push(v);
+        }
+        self.delta = delta;
+        Ok(Block::single(next))
+    }
+
+    fn finish(&mut self, _combine: &Backend, _next: &Block) -> Result<f64> {
+        Ok(self.delta)
+    }
+}
+
+/// The multi-seed personalized step: seed `k` teleports all `(1−d)` mass
+/// to node `k`; the metric is the worst seed's L1 delta.
+struct MultiSeedStep {
+    n: usize,
+    b: usize,
+    damping: f64,
+    delta: f64,
+}
+
+impl Workload for MultiSeedStep {
+    fn prepare(&mut self, _combine: &Backend, p: &Block, y: Block) -> Result<Block> {
+        let (n, b) = (self.n, self.b);
+        let d32 = self.damping as f32;
+        let teleport = (1.0 - self.damping) as f32;
+        let mut next = Block::zeros(n, b);
+        let mut deltas = vec![0.0f64; b];
+        {
+            let out = next.data_mut();
+            let pv = p.data();
+            let yv = y.data();
+            for i in 0..n {
+                for k in 0..b {
+                    let idx = i * b + k;
+                    let mut v = d32 * yv[idx];
+                    if i == k {
+                        v += teleport;
+                    }
+                    deltas[k] += (v as f64 - pv[idx] as f64).abs();
+                    out[idx] = v;
+                }
+            }
+        }
+        self.delta = deltas.iter().cloned().fold(0.0f64, f64::max);
+        Ok(next)
+    }
+
+    fn finish(&mut self, _combine: &Backend, _next: &Block) -> Result<f64> {
+        Ok(self.delta)
+    }
 }
 
 /// Transpose a dense matrix (setup-time only).
@@ -69,25 +145,20 @@ pub fn run_pagerank(cfg: &RunConfig, damping: f64) -> Result<PageRankResult> {
         return run_multi_seed(cfg, &mut harness, damping);
     }
 
-    let teleport = ((1.0 - damping) / n as f64) as f32;
     let p0 = vec![1.0f32 / n as f32; n];
-    let mut final_delta = f64::NAN;
-    let ranks = harness.run(p0, cfg.steps, |_combine, p, y| {
-        let mut next = Vec::with_capacity(n);
-        let mut delta = 0.0f64;
-        for i in 0..n {
-            let v = (damping as f32) * y[i] + teleport;
-            delta += (v as f64 - p[i] as f64).abs();
-            next.push(v);
-        }
-        final_delta = delta;
-        Ok((next, delta))
-    })?;
+    let mut wl = PageRankStep {
+        n,
+        damping,
+        delta: f64::NAN,
+    };
+    let ranks = harness
+        .run_job(Block::single(p0), cfg.steps, &mut wl)?
+        .into_single();
 
     Ok(PageRankResult {
         timeline: std::mem::take(&mut harness.timeline),
         ranks,
-        final_delta,
+        final_delta: wl.delta,
         seed_ranks: Vec::new(),
     })
 }
@@ -101,43 +172,24 @@ fn run_multi_seed(
 ) -> Result<PageRankResult> {
     let n = cfg.q;
     let b = cfg.batch;
-    let d32 = damping as f32;
-    let teleport = (1.0 - damping) as f32;
     // p₀ per seed: all mass on the seed node
     let mut p0 = Block::zeros(n, b);
     for k in 0..b {
         p0.data_mut()[k * b + k] = 1.0;
     }
-    let mut final_delta = f64::NAN;
-    let final_p = harness.run_block(p0, cfg.steps, |_combine, p, y| {
-        let mut next = Block::zeros(n, b);
-        let mut deltas = vec![0.0f64; b];
-        {
-            let out = next.data_mut();
-            let pv = p.data();
-            let yv = y.data();
-            for i in 0..n {
-                for k in 0..b {
-                    let idx = i * b + k;
-                    let mut v = d32 * yv[idx];
-                    if i == k {
-                        v += teleport;
-                    }
-                    deltas[k] += (v as f64 - pv[idx] as f64).abs();
-                    out[idx] = v;
-                }
-            }
-        }
-        let worst = deltas.iter().cloned().fold(0.0f64, f64::max);
-        final_delta = worst;
-        Ok((next, worst))
-    })?;
+    let mut wl = MultiSeedStep {
+        n,
+        b,
+        damping,
+        delta: f64::NAN,
+    };
+    let final_p = harness.run_job(p0, cfg.steps, &mut wl)?;
 
     let seed_ranks: Vec<Vec<f32>> = (0..b).map(|k| final_p.column(k)).collect();
     Ok(PageRankResult {
         timeline: std::mem::take(&mut harness.timeline),
         ranks: seed_ranks[0].clone(),
-        final_delta,
+        final_delta: wl.delta,
         seed_ranks,
     })
 }

@@ -17,10 +17,12 @@
 use std::sync::Arc;
 
 use crate::config::types::RunConfig;
+use crate::engine::Workload;
 use crate::error::{Error, Result};
 use crate::linalg::gen::{planted_symmetric, PlantedMatrix};
 use crate::linalg::{ops, Block};
 use crate::metrics::Timeline;
+use crate::runtime::Backend;
 use crate::util::Rng;
 
 use super::harness::Harness;
@@ -47,6 +49,51 @@ pub struct PowerIterationResult {
 /// Default planted eigenvalue / spectral-gap parameters.
 pub const PLANT_EIGVAL: f64 = 10.0;
 pub const PLANT_GAP: f64 = 0.35;
+
+/// The classic single-vector power-iteration step as an engine
+/// [`Workload`]: normalization stays on the critical path (the next step
+/// needs the iterate), the NMSE metric is deferrable — with `--pipeline`
+/// it runs while the next step's orders are in flight.
+struct PowerStep<'a> {
+    truth: &'a [f32],
+    /// `‖X b‖` at the latest step — the running eigenvalue estimate.
+    eigval: f64,
+}
+
+impl Workload for PowerStep<'_> {
+    fn prepare(&mut self, combine: &Backend, _w: &Block, y: Block) -> Result<Block> {
+        let (b_next, norm) = combine.normalize(&y.into_single())?;
+        self.eigval = norm;
+        Ok(Block::single(b_next))
+    }
+
+    fn finish(&mut self, _combine: &Backend, next: &Block) -> Result<f64> {
+        Ok(ops::nmse_signless(next.data(), self.truth))
+    }
+}
+
+/// The `--batch B` subspace-iteration step: modified Gram–Schmidt
+/// re-orthonormalization is the critical path, the NMSE of column 0
+/// overlaps the next step's worker compute under `--pipeline`.
+struct BlockPowerStep<'a> {
+    q: usize,
+    b: usize,
+    truth: &'a [f32],
+    /// The `R` diagonal from the latest MGS pass — the running spectrum.
+    eigvals: Vec<f64>,
+}
+
+impl Workload for BlockPowerStep<'_> {
+    fn prepare(&mut self, _combine: &Backend, _w: &Block, mut y: Block) -> Result<Block> {
+        let norms = ops::mgs_orthonormalize(y.data_mut(), self.q, self.b);
+        self.eigvals.copy_from_slice(&norms);
+        Ok(y)
+    }
+
+    fn finish(&mut self, _combine: &Backend, next: &Block) -> Result<f64> {
+        Ok(ops::nmse_signless(&next.column(0), self.truth))
+    }
+}
 
 /// Build the workload matrix for a config (deterministic in `cfg.seed`).
 pub fn workload(cfg: &RunConfig) -> Result<PlantedMatrix> {
@@ -100,20 +147,14 @@ pub fn run_power_iteration(cfg: &RunConfig) -> Result<PowerIterationResult> {
         b0 = blk.into_single();
     }
 
-    // split closures: normalization stays on the critical path (the next
-    // step needs the iterate), the NMSE metric is deferrable — with
-    // `--pipeline` it runs while the next step's orders are in flight
-    let mut eigval = 0.0f64;
-    let final_b = harness.run_split(
-        b0,
-        cfg.steps,
-        |combine, _w, y| {
-            let (b_next, norm) = combine.normalize(&y)?;
-            eigval = norm;
-            Ok(b_next)
-        },
-        |_combine, b_next| Ok(ops::nmse_signless(b_next, &truth)),
-    )?;
+    let mut wl = PowerStep {
+        truth: &truth,
+        eigval: 0.0,
+    };
+    let final_b = harness
+        .run_job(Block::single(b0), cfg.steps, &mut wl)?
+        .into_single();
+    let eigval = wl.eigval;
 
     let final_nmse = ops::nmse_signless(&final_b, &truth);
     harness.finish_trace()?;
@@ -158,19 +199,14 @@ fn run_block_power(
         w0 = blk;
     }
 
-    // MGS re-orthonormalization is the critical path; the NMSE metric
-    // overlaps the next step's worker compute under `--pipeline`
-    let mut eigvals = vec![0.0f64; b];
-    let final_w = harness.run_block_split(
-        w0,
-        cfg.steps,
-        |_combine, _w, mut y| {
-            let norms = ops::mgs_orthonormalize(y.data_mut(), q, b);
-            eigvals.copy_from_slice(&norms);
-            Ok(y)
-        },
-        |_combine, next| Ok(ops::nmse_signless(&next.column(0), truth)),
-    )?;
+    let mut wl = BlockPowerStep {
+        q,
+        b,
+        truth,
+        eigvals: vec![0.0f64; b],
+    };
+    let final_w = harness.run_job(w0, cfg.steps, &mut wl)?;
+    let eigvals = wl.eigvals;
 
     let eigvec = final_w.column(0);
     let final_nmse = ops::nmse_signless(&eigvec, truth);

@@ -9,10 +9,13 @@
 use std::sync::Arc;
 
 use crate::config::types::RunConfig;
+use crate::engine::Workload;
 use crate::error::{Error, Result};
 use crate::linalg::gen::planted_symmetric;
 use crate::linalg::ops;
+use crate::linalg::Block;
 use crate::metrics::Timeline;
+use crate::runtime::Backend;
 
 use super::harness::Harness;
 
@@ -23,6 +26,39 @@ pub struct RidgeResult {
     pub solution: Vec<f32>,
     /// Final relative residual `‖b − (A+λI)w‖ / ‖b‖`.
     pub final_residual: f64,
+}
+
+/// One Richardson step as an engine [`Workload`]: the residual
+/// `r = b − Aw − λw` both drives the update `w' = w + ηr` and, as
+/// `‖r‖/‖b‖`, is the convergence metric — computed once in `prepare`,
+/// stashed for `finish`.
+struct RidgeStep {
+    b: Vec<f32>,
+    b_norm: f64,
+    lambda: f64,
+    eta: f64,
+    residual: f64,
+}
+
+impl Workload for RidgeStep {
+    fn prepare(&mut self, _combine: &Backend, w: &Block, y: Block) -> Result<Block> {
+        // y = A w ; residual r = b − y − λ w ; w' = w + η r
+        let wv = w.data();
+        let yv = y.data();
+        let mut next = Vec::with_capacity(wv.len());
+        let mut res_sq = 0.0f64;
+        for i in 0..wv.len() {
+            let r = self.b[i] as f64 - yv[i] as f64 - self.lambda * wv[i] as f64;
+            res_sq += r * r;
+            next.push((wv[i] as f64 + self.eta * r) as f32);
+        }
+        self.residual = res_sq.sqrt() / self.b_norm;
+        Ok(Block::single(next))
+    }
+
+    fn finish(&mut self, _combine: &Backend, _next: &Block) -> Result<f64> {
+        Ok(self.residual)
+    }
 }
 
 /// Run `steps` Richardson iterations for `(A + λI) w = b` where `A` is the
@@ -62,24 +98,21 @@ pub fn run_ridge(cfg: &RunConfig, lambda: f64, eta: f64) -> Result<RidgeResult> 
 
     let mut harness = Harness::build(cfg, matrix)?;
     let w0 = vec![0.0f32; cfg.q];
-    let mut final_residual = f64::NAN;
-    let solution = harness.run(w0, cfg.steps, |_combine, w, y| {
-        // y = A w ; residual r = b − y − λ w ; w' = w + η r
-        let mut next = Vec::with_capacity(w.len());
-        let mut res_sq = 0.0f64;
-        for i in 0..w.len() {
-            let r = b[i] as f64 - y[i] as f64 - lambda * w[i] as f64;
-            res_sq += r * r;
-            next.push((w[i] as f64 + eta * r) as f32);
-        }
-        final_residual = res_sq.sqrt() / b_norm;
-        Ok((next, final_residual))
-    })?;
+    let mut wl = RidgeStep {
+        b,
+        b_norm,
+        lambda,
+        eta,
+        residual: f64::NAN,
+    };
+    let solution = harness
+        .run_job(Block::single(w0), cfg.steps, &mut wl)?
+        .into_single();
 
     Ok(RidgeResult {
         timeline: std::mem::take(&mut harness.timeline),
         solution,
-        final_residual,
+        final_residual: wl.residual,
     })
 }
 

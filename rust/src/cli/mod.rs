@@ -17,6 +17,7 @@ pub fn dispatch(argv: &[String]) -> Result<()> {
         "worker" => crate::net::daemon::worker_cli(rest),
         "exp" => crate::exp::exp_cli(rest),
         "solve" => crate::exp::solve_cli(rest),
+        "serve" => crate::serve::serve_cli(rest),
         "trace" => crate::obs::trace_cli(rest),
         "help" | "--help" | "-h" => {
             println!("{}", top_help());
@@ -37,6 +38,7 @@ fn top_help() -> String {
          \x20 worker  worker daemon serving a master over TCP (--listen host:port)\n\
          \x20 exp     regenerate a paper experiment (fig1|fig2|fig3|fig4)\n\
          \x20 solve   solve one assignment instance and print M*\n\
+         \x20 serve   resident multi-tenant request server (--listen) or client (--connect)\n\
          \x20 trace   convert a --trace-out journal to Chrome trace JSON (--summary for sinks)\n\
          \x20 help    this text\n\n",
     );

@@ -1,0 +1,55 @@
+//! The resident engine's lifecycle state machine.
+
+use std::fmt;
+
+/// Where a [`super::ClusterEngine`] is in its lifecycle. The engine is
+/// synchronous — state is meaningful *between* public calls: `Stepping`
+/// is observable while a begun step awaits its completion call,
+/// `Migrating` while a rebalance window still holds replica bytes on the
+/// transfer lane, and `Draining` is terminal (trace flushed, transport
+/// shut down).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EngineState {
+    /// Between steps: no orders in flight, no migration pending.
+    Idle,
+    /// A step has been begun ([`super::ClusterEngine::begin_block_step`])
+    /// and not yet completed.
+    Stepping,
+    /// Between steps, but a budgeted migration window is still in
+    /// transition (make-before-break bytes on the lane).
+    Migrating,
+    /// [`super::ClusterEngine::drain`] ran: journal flushed, workers
+    /// released. No further steps may be begun.
+    Draining,
+}
+
+impl EngineState {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            EngineState::Idle => "idle",
+            EngineState::Stepping => "stepping",
+            EngineState::Migrating => "migrating",
+            EngineState::Draining => "draining",
+        }
+    }
+}
+
+impl fmt::Display for EngineState {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_are_stable() {
+        assert_eq!(EngineState::Idle.to_string(), "idle");
+        assert_eq!(EngineState::Stepping.as_str(), "stepping");
+        assert_eq!(EngineState::Migrating.as_str(), "migrating");
+        assert_eq!(EngineState::Draining.as_str(), "draining");
+        assert_ne!(EngineState::Idle, EngineState::Draining);
+    }
+}

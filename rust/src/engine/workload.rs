@@ -1,0 +1,148 @@
+//! The workload abstraction: what an application computes between the
+//! engine's dispatch and its next dispatch.
+//!
+//! Each elastic step the cluster assembles the product block
+//! `Y_t = X W_t`; everything app-specific happens master-side in two
+//! halves. [`Workload::prepare`] turns the product into the next iterate
+//! — the serial critical path, because the next dispatch needs it.
+//! [`Workload::finish`] computes the step's scalar metric from that
+//! iterate — deferrable work that the pipelined loop overlaps with the
+//! *next* step's in-flight worker compute. [`Workload::converged`] lets
+//! a workload end a job early (classic figure runs always return
+//! `false`, so their trajectories are unchanged).
+//!
+//! The closure shapes the apps historically passed to `Harness::run*`
+//! are bridged by [`ClosureWorkload`] (split prepare/finish) and
+//! [`FusedWorkload`] (one fused update returning `(next, metric)`), so
+//! the compatibility shims stay bit-identical to the pre-engine loops.
+
+use crate::error::Result;
+use crate::linalg::Block;
+use crate::runtime::Backend;
+
+/// One application's per-step computation, driven by
+/// [`super::ClusterEngine::run_job`].
+pub trait Workload {
+    /// Derive the next iterate from the assembled product block. Runs on
+    /// the critical path: the next step's dispatch consumes the result.
+    fn prepare(&mut self, combine: &Backend, w: &Block, y: Block) -> Result<Block>;
+
+    /// Compute the step's scalar metric from the iterate `prepare`
+    /// returned. Under `--pipeline` this runs while the next step's
+    /// orders are in flight; it is always invoked before the *following*
+    /// `prepare`, so per-step state stashed in `prepare` is safe to read.
+    fn finish(&mut self, combine: &Backend, next: &Block) -> Result<f64>;
+
+    /// Whether the job may stop after this step's metric. The default
+    /// never stops — fixed-step runs (all classic apps) keep their exact
+    /// trajectories.
+    fn converged(&self, _metric: f64, _step: usize) -> bool {
+        false
+    }
+}
+
+/// A [`Workload`] from a split prepare/finish closure pair — the
+/// `Harness::run_split` shape.
+pub struct ClosureWorkload<P, F> {
+    prepare: P,
+    finish: F,
+}
+
+impl<P, F> ClosureWorkload<P, F>
+where
+    P: FnMut(&Backend, &Block, Block) -> Result<Block>,
+    F: FnMut(&Backend, &Block) -> Result<f64>,
+{
+    pub fn new(prepare: P, finish: F) -> Self {
+        ClosureWorkload { prepare, finish }
+    }
+}
+
+impl<P, F> Workload for ClosureWorkload<P, F>
+where
+    P: FnMut(&Backend, &Block, Block) -> Result<Block>,
+    F: FnMut(&Backend, &Block) -> Result<f64>,
+{
+    fn prepare(&mut self, combine: &Backend, w: &Block, y: Block) -> Result<Block> {
+        (self.prepare)(combine, w, y)
+    }
+
+    fn finish(&mut self, combine: &Backend, next: &Block) -> Result<f64> {
+        (self.finish)(combine, next)
+    }
+}
+
+/// A [`Workload`] from one fused update closure returning
+/// `(next, metric)` — the `Harness::run_block` shape. The metric is
+/// produced inside `prepare` and stashed for `finish`, which makes the
+/// metric attribution correct in both loop modes (`finish(i)` always
+/// precedes `prepare(i+1)`).
+pub struct FusedWorkload<U> {
+    update: U,
+    metric: f64,
+}
+
+impl<U> FusedWorkload<U>
+where
+    U: FnMut(&Backend, &Block, Block) -> Result<(Block, f64)>,
+{
+    pub fn new(update: U) -> Self {
+        FusedWorkload {
+            update,
+            metric: f64::NAN,
+        }
+    }
+}
+
+impl<U> Workload for FusedWorkload<U>
+where
+    U: FnMut(&Backend, &Block, Block) -> Result<(Block, f64)>,
+{
+    fn prepare(&mut self, combine: &Backend, w: &Block, y: Block) -> Result<Block> {
+        let (next, metric) = (self.update)(combine, w, y)?;
+        self.metric = metric;
+        Ok(next)
+    }
+
+    fn finish(&mut self, _combine: &Backend, _next: &Block) -> Result<f64> {
+        Ok(self.metric)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::types::BackendKind;
+    use crate::runtime::BackendSpec;
+
+    fn backend() -> Backend {
+        BackendSpec::from_kind(BackendKind::Host, std::path::PathBuf::new())
+            .instantiate()
+            .unwrap()
+    }
+
+    #[test]
+    fn fused_stashes_metric_for_finish() {
+        let combine = backend();
+        let mut wl = FusedWorkload::new(|_c: &Backend, _w: &Block, y: Block| {
+            let m = y.data()[0] as f64;
+            Ok((y, m * 2.0))
+        });
+        let w = Block::single(vec![1.0, 2.0]);
+        let next = wl.prepare(&combine, &w, Block::single(vec![3.0, 4.0])).unwrap();
+        assert_eq!(wl.finish(&combine, &next).unwrap(), 6.0);
+        assert!(!wl.converged(6.0, 0));
+    }
+
+    #[test]
+    fn closure_pair_routes_both_halves() {
+        let combine = backend();
+        let mut wl = ClosureWorkload::new(
+            |_c: &Backend, _w: &Block, y: Block| Ok(y),
+            |_c: &Backend, next: &Block| Ok(next.data().iter().sum::<f32>() as f64),
+        );
+        let w = Block::single(vec![0.0]);
+        let next = wl.prepare(&combine, &w, Block::single(vec![1.5, 2.5])).unwrap();
+        assert_eq!(wl.finish(&combine, &next).unwrap(), 4.0);
+    }
+}

@@ -48,6 +48,11 @@ pub enum Error {
     /// wrong-job digest, truncation).
     Checkpoint(String),
 
+    /// Serving backpressure: the admission queue is full and the request
+    /// was rejected rather than silently queued. Clients should retry
+    /// later (typically with backoff).
+    Busy(String),
+
     /// Wrapped I/O error.
     Io(std::io::Error),
 
@@ -67,6 +72,7 @@ impl fmt::Display for Error {
             Error::Wire(m) => write!(f, "wire error: {m}"),
             Error::Shape(m) => write!(f, "shape error: {m}"),
             Error::Checkpoint(m) => write!(f, "checkpoint error: {m}"),
+            Error::Busy(m) => write!(f, "busy: {m}"),
             Error::Io(e) => write!(f, "io error: {e}"),
             Error::Xla(m) => write!(f, "xla error: {m}"),
         }
@@ -104,6 +110,10 @@ impl Error {
     /// Helper: build an [`Error::Checkpoint`].
     pub fn checkpoint(msg: impl Into<String>) -> Self {
         Error::Checkpoint(msg.into())
+    }
+    /// Helper: build an [`Error::Busy`].
+    pub fn busy(msg: impl Into<String>) -> Self {
+        Error::Busy(msg.into())
     }
 }
 

@@ -67,6 +67,15 @@ pub fn master_cli(argv: &[String]) -> Result<()> {
 /// when `--chaos` is set, and `resumed_from_step` only under
 /// `--resume`. The journal itself is converted offline with
 /// `usec trace <journal> [--out trace.json] [--summary]`.
+///
+/// Serving sessions (`usec serve --listen … --json-out …`) reuse the
+/// same timeline dump and add five top-level keys, present only when a
+/// serve summary was attached (classic dumps stay byte-identical):
+/// `requests` (requests answered over the session), `latency_p50_ns` /
+/// `latency_p99_ns` (submit-to-answer latency quantiles in
+/// nanoseconds, null before any request completes), `queue_depth` (the
+/// admission queue's peak depth), and `rows_per_s` (matrix rows
+/// processed per second across all batched columns).
 fn run_and_report(cfg: &RunConfig) -> Result<()> {
     let res = crate::apps::run_power_iteration(cfg)?;
     println!(

@@ -92,7 +92,7 @@
 //! ## Pipelining
 //!
 //! `--pipeline` turns the master's synchronous step loop into an
-//! event-driven pipeline ([`apps::harness::Harness::run_block_split`]):
+//! event-driven pipeline ([`engine::ClusterEngine::run_block_split`]):
 //! the combine *metric* of step `i` (MGS norms, NMSE — everything that
 //! does not feed the next iterate) runs while the workers already
 //! compute step `i+1`, migration bytes from `--rebalance` plans stream
@@ -138,12 +138,37 @@
 //!   master restarts with `--resume <ckpt>` and — because `y_t = X w_t`
 //!   is assignment-invariant — lands on the uninterrupted run's answer;
 //!   damaged, truncated or wrong-job checkpoints are rejected with a
-//!   typed [`Error::Checkpoint`]. (Caveat: the injected-straggler RNG is
-//!   not replayed across a resume, so exact oracle-matching holds for
-//!   real-fault runs, not `--injected-stragglers` simulations.)
+//!   typed [`Error::Checkpoint`]. Injected-straggler victims are drawn
+//!   from an RNG derived from `(seed, step)` — like the chaos rolls —
+//!   so a resumed run replays the uninterrupted straggler schedule
+//!   exactly, `--injected-stragglers` included.
 //!
 //! All three flags default off and are byte-identical to the
 //! pre-robustness master when off — same wire traffic, same
+//! `--json-out`.
+//!
+//! ## Serving
+//!
+//! `usec serve` ([`serve`]) turns the one-job batch harness into a
+//! resident multi-tenant query plane over the same elastic substrate.
+//! The cluster lifecycle lives in [`engine::ClusterEngine`] (an explicit
+//! `Idle → Stepping → Migrating → Draining` state machine; the classic
+//! apps are [`engine::Workload`] implementations driven by
+//! [`engine::ClusterEngine::run_job`]). On top, [`serve::ServeSession`]
+//! runs **continuous batching**: tenant-tagged requests (personalized
+//! PageRank seeds, raw mat-vec queries, ridge solves) wait in a bounded
+//! admission queue ([`serve::AdmissionQueue`], typed
+//! [`Error::Busy`] backpressure when full), a deficit-round-robin
+//! scheduler ([`serve::DrrScheduler`]) picks fairly across tenants, and
+//! picked requests' vectors coalesce into one `B`-wide iterate
+//! [`linalg::Block`] per step. Requests join and leave the block at step
+//! boundaries only — each column retires the moment its own residual
+//! converges — so one worker dispatch serves many tenants while
+//! elasticity (preemption, recovery, rebalance, chaos) keeps working
+//! untouched underneath. `usec serve --listen` exposes submit/poll over
+//! the framed TCP codec ([`serve::ServeClient`]); per-request latency
+//! quantiles (`latency_p50_ns`/`latency_p99_ns`), request counts,
+//! peak queue depth and rows/s land in [`metrics::Timeline`] /
 //! `--json-out`.
 //!
 //! ## Quickstart
@@ -164,6 +189,7 @@ pub mod apps;
 pub mod cli;
 pub mod config;
 pub mod csec;
+pub mod engine;
 pub mod error;
 pub mod exp;
 pub mod linalg;
@@ -175,6 +201,7 @@ pub mod placement;
 pub mod rebalance;
 pub mod runtime;
 pub mod sched;
+pub mod serve;
 pub mod storage;
 pub mod testing;
 pub mod util;

@@ -6,4 +6,4 @@ pub mod timeline;
 
 pub use histogram::Histogram;
 pub use stats::Stats;
-pub use timeline::{StepRecord, Timeline};
+pub use timeline::{ServeSummary, StepRecord, Timeline};

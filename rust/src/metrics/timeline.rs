@@ -60,6 +60,24 @@ pub struct StepRecord {
     pub checkpoint: bool,
 }
 
+/// Request-plane totals of a `usec serve` session
+/// ([`crate::serve::ServeSession`]). Attached to the [`Timeline`] when
+/// the run served requests; absent (and absent from the JSON) for
+/// classic one-job runs, keeping their dumps byte-identical.
+#[derive(Debug, Clone, Default)]
+pub struct ServeSummary {
+    /// Requests completed (answered) over the session.
+    pub requests: u64,
+    /// Submit→answer latency quantiles, in nanoseconds (NaN when no
+    /// request completed).
+    pub latency_p50_ns: f64,
+    pub latency_p99_ns: f64,
+    /// Peak admission-queue depth observed.
+    pub queue_depth: u64,
+    /// Iterate rows computed per second of serving wall-clock.
+    pub rows_per_s: f64,
+}
+
 /// An append-only run log.
 #[derive(Debug, Clone, Default)]
 pub struct Timeline {
@@ -68,6 +86,8 @@ pub struct Timeline {
     /// actually materialized — the placement's J/G share for distributed
     /// shard workers, the shared full view locally). Empty when unknown.
     storage_bytes: Vec<u64>,
+    /// Serving totals, present only for `usec serve` sessions.
+    serve: Option<ServeSummary>,
 }
 
 impl Timeline {
@@ -83,6 +103,16 @@ impl Timeline {
     /// Per-worker resident storage bytes (empty when unknown).
     pub fn storage_bytes(&self) -> &[u64] {
         &self.storage_bytes
+    }
+
+    /// Attach serving totals (request counts, latency quantiles).
+    pub fn set_serve(&mut self, s: ServeSummary) {
+        self.serve = Some(s);
+    }
+
+    /// Serving totals, when this run served requests.
+    pub fn serve(&self) -> Option<&ServeSummary> {
+        self.serve.as_ref()
     }
 
     pub fn push(&mut self, r: StepRecord) {
@@ -224,13 +254,23 @@ impl Timeline {
             )
             .val("per_worker_bytes", Json::Arr(per_worker))
             .build();
-        ObjBuilder::new()
+        let mut top = ObjBuilder::new()
             .num("steps", self.steps.len() as f64)
             .num("total_wall_s", self.total_wall().as_secs_f64())
             .num("recoveries_total", self.total_recoveries() as f64)
             .num("migrations_total", self.total_migrations() as f64)
-            .num("migrated_bytes_total", self.total_migrated_bytes() as f64)
-            .val("storage", storage)
+            .num("migrated_bytes_total", self.total_migrated_bytes() as f64);
+        // serving keys only on serve sessions, so classic one-job dumps
+        // keep the pre-serving schema bytes
+        if let Some(s) = &self.serve {
+            top = top
+                .num("requests", s.requests as f64)
+                .val("latency_p50_ns", num_or_null(s.latency_p50_ns))
+                .val("latency_p99_ns", num_or_null(s.latency_p99_ns))
+                .num("queue_depth", s.queue_depth as f64)
+                .val("rows_per_s", num_or_null(s.rows_per_s));
+        }
+        top.val("storage", storage)
             .val("timeline", Json::Arr(steps))
             .build()
     }
@@ -535,6 +575,41 @@ mod tests {
         assert!((moves[0].get_num("expected_before").unwrap() - 0.5).abs() < 1e-12);
         assert!((moves[0].get_num("expected_after").unwrap() - 0.31).abs() < 1e-12);
         assert!(steps[1].get("migrations").unwrap().items().unwrap().is_empty());
+    }
+
+    #[test]
+    fn serve_keys_surface_only_on_serve_sessions() {
+        let mut t = Timeline::new();
+        t.push(rec(0, 10, 0.5));
+        // a classic run: no serving keys at all
+        let back = crate::util::json::Json::parse(&t.to_json().to_string()).unwrap();
+        for key in [
+            "requests",
+            "latency_p50_ns",
+            "latency_p99_ns",
+            "queue_depth",
+            "rows_per_s",
+        ] {
+            assert!(
+                back.get(key).is_none(),
+                "classic dumps must stay byte-identical to the pre-serving schema"
+            );
+        }
+        // a serve session: totals land at the top level
+        t.set_serve(ServeSummary {
+            requests: 12,
+            latency_p50_ns: 1_500_000.0,
+            latency_p99_ns: 9_000_000.0,
+            queue_depth: 5,
+            rows_per_s: 48_000.0,
+        });
+        assert_eq!(t.serve().unwrap().requests, 12);
+        let back = crate::util::json::Json::parse(&t.to_json().to_string()).unwrap();
+        assert_eq!(back.get_usize("requests"), Some(12));
+        assert_eq!(back.get_num("latency_p50_ns"), Some(1_500_000.0));
+        assert_eq!(back.get_num("latency_p99_ns"), Some(9_000_000.0));
+        assert_eq!(back.get_usize("queue_depth"), Some(5));
+        assert_eq!(back.get_num("rows_per_s"), Some(48_000.0));
     }
 
     #[test]

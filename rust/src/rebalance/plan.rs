@@ -108,21 +108,29 @@ impl MigrationPlan {
         self.moves.iter().map(|m| m.bytes).sum()
     }
 
-    /// Pop the next batch: moves while the cumulative payload stays within
-    /// `budget_bytes` — except the first move of a non-empty plan, which
-    /// always ships so a small budget meters progress instead of
-    /// deadlocking it. `0` = unlimited.
+    /// Pop the next batch: scan the queue front-to-back, taking every move
+    /// whose payload still fits the remaining `budget_bytes` and leaving
+    /// the rest queued **in their original order** — so when
+    /// [`reorder_by`](Self::reorder_by) has front-loaded benefit-per-byte,
+    /// a window truncated by one oversized move still ships the later,
+    /// smaller moves that fit, in benefit order, instead of stalling
+    /// behind the head. The first move of a non-empty plan always ships so
+    /// a small budget meters progress instead of deadlocking it. `0` =
+    /// unlimited.
     pub fn take_batch(&mut self, budget_bytes: u64) -> Vec<ReplicaMove> {
         let mut batch = Vec::new();
+        let mut kept = VecDeque::new();
         let mut spent = 0u64;
-        while let Some(next) = self.moves.front() {
+        while let Some(next) = self.moves.pop_front() {
             let would = spent.saturating_add(next.bytes);
-            if !batch.is_empty() && budget_bytes > 0 && would > budget_bytes {
-                break;
+            if batch.is_empty() || budget_bytes == 0 || would <= budget_bytes {
+                spent = would;
+                batch.push(next);
+            } else {
+                kept.push_back(next);
             }
-            spent = would;
-            batch.push(self.moves.pop_front().expect("front just observed"));
         }
+        self.moves = kept;
         batch
     }
 
@@ -227,6 +235,49 @@ mod tests {
         let first = plan.take_batch(per_move)[0].clone();
         plan.requeue_front(first.clone());
         assert_eq!(plan.take_batch(per_move)[0], first);
+    }
+
+    #[test]
+    fn truncation_fills_the_budget_past_an_oversized_move() {
+        // a benefit-ordered queue with unequal payloads: 60 B (best
+        // per byte), then 100 B, then 30 B
+        fn mv(g: usize, bytes: u64) -> ReplicaMove {
+            ReplicaMove {
+                g,
+                from: 0,
+                to: 1,
+                rows: RowRange::new(0, 1),
+                bytes,
+            }
+        }
+        let mut plan = MigrationPlan {
+            moves: [mv(0, 60), mv(1, 100), mv(2, 30)].into_iter().collect(),
+        };
+        // budget 90: the 100 B move does not fit after the 60 B head, but
+        // the 30 B move behind it does — the window ships both fitting
+        // moves in benefit order and leaves the oversized one queued
+        let batch = plan.take_batch(90);
+        assert_eq!(
+            batch.iter().map(|m| m.g).collect::<Vec<_>>(),
+            vec![0, 2],
+            "window should skip the oversized move and take the later fit"
+        );
+        assert_eq!(plan.len(), 1);
+        // the skipped move kept its place and ships next window
+        // (oversized vs the budget, so it rides the progress guarantee)
+        let next = plan.take_batch(90);
+        assert_eq!(next.iter().map(|m| m.g).collect::<Vec<_>>(), vec![1]);
+        assert!(plan.is_empty());
+        // skipped moves keep their *relative* order too
+        let mut plan = MigrationPlan {
+            moves: [mv(0, 50), mv(1, 80), mv(2, 70), mv(3, 40)]
+                .into_iter()
+                .collect(),
+        };
+        let batch = plan.take_batch(90);
+        assert_eq!(batch.iter().map(|m| m.g).collect::<Vec<_>>(), vec![0, 3]);
+        let rest = plan.take_batch(0);
+        assert_eq!(rest.iter().map(|m| m.g).collect::<Vec<_>>(), vec![1, 2]);
     }
 
     #[test]

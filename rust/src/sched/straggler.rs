@@ -5,6 +5,11 @@
 //! each step; victims either never report (`Drop`) or report after a
 //! multiplicative slowdown (`Slow`). The master must still recover `y_t`
 //! from the remaining reports whenever the assignment tolerates `S ≥ k`.
+//!
+//! Victims are drawn from an RNG derived from `(seed, step)` — not from a
+//! stream advanced once per call — so a run resumed from a `--checkpoint`
+//! snapshot replays exactly the victim schedule the uninterrupted run
+//! would have seen (the same scheme the chaos fault rolls use).
 
 use crate::util::Rng;
 
@@ -22,7 +27,7 @@ pub enum StraggleMode {
 pub struct StragglerInjector {
     per_step: usize,
     mode: StraggleMode,
-    rng: Rng,
+    seed: u64,
     /// When set, the same machines straggle every step (the "overloaded
     /// instance" reading of the paper's EC2 stragglers) instead of fresh
     /// uniform victims per step.
@@ -34,7 +39,7 @@ impl StragglerInjector {
         StragglerInjector {
             per_step: 0,
             mode: StraggleMode::Drop,
-            rng: Rng::new(0),
+            seed: 0,
             fixed: None,
         }
     }
@@ -43,7 +48,7 @@ impl StragglerInjector {
         StragglerInjector {
             per_step,
             mode,
-            rng: Rng::new(seed),
+            seed,
             fixed: None,
         }
     }
@@ -53,7 +58,7 @@ impl StragglerInjector {
         StragglerInjector {
             per_step: victims.len(),
             mode,
-            rng: Rng::new(0),
+            seed: 0,
             fixed: Some(victims),
         }
     }
@@ -62,8 +67,10 @@ impl StragglerInjector {
         self.per_step
     }
 
-    /// Choose victims for this step: a map `machine → mode` (victims only).
-    pub fn choose(&mut self, avail: &[usize]) -> Vec<(usize, StraggleMode)> {
+    /// Choose victims for `step`: a map `machine → mode` (victims only).
+    /// Pure in `(seed, step, avail)`, so the schedule is replayable from
+    /// any resume point.
+    pub fn choose(&self, step: usize, avail: &[usize]) -> Vec<(usize, StraggleMode)> {
         if let Some(victims) = &self.fixed {
             return victims
                 .iter()
@@ -75,7 +82,8 @@ impl StragglerInjector {
         if k == 0 {
             return Vec::new();
         }
-        let picks = self.rng.sample_indices(avail.len(), k);
+        let mut rng = Rng::new(self.seed ^ (step as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let picks = rng.sample_indices(avail.len(), k);
         picks.into_iter().map(|i| (avail[i], self.mode)).collect()
     }
 }
@@ -86,15 +94,15 @@ mod tests {
 
     #[test]
     fn none_injects_nothing() {
-        let mut inj = StragglerInjector::none();
-        assert!(inj.choose(&[0, 1, 2]).is_empty());
+        let inj = StragglerInjector::none();
+        assert!(inj.choose(0, &[0, 1, 2]).is_empty());
     }
 
     #[test]
     fn chooses_k_distinct_victims_from_avail() {
-        let mut inj = StragglerInjector::new(2, StraggleMode::Drop, 3);
-        for _ in 0..50 {
-            let v = inj.choose(&[1, 3, 5, 7, 9]);
+        let inj = StragglerInjector::new(2, StraggleMode::Drop, 3);
+        for step in 0..50 {
+            let v = inj.choose(step, &[1, 3, 5, 7, 9]);
             assert_eq!(v.len(), 2);
             let mut ms: Vec<usize> = v.iter().map(|&(m, _)| m).collect();
             ms.sort_unstable();
@@ -107,20 +115,39 @@ mod tests {
     #[test]
     fn never_stragglers_everyone() {
         // keeps at least one non-straggler even if per_step >= |avail|
-        let mut inj = StragglerInjector::new(5, StraggleMode::Drop, 4);
-        let v = inj.choose(&[0, 1, 2]);
+        let inj = StragglerInjector::new(5, StraggleMode::Drop, 4);
+        let v = inj.choose(0, &[0, 1, 2]);
         assert_eq!(v.len(), 2);
     }
 
     #[test]
     fn victims_vary_across_steps() {
-        let mut inj = StragglerInjector::new(1, StraggleMode::Drop, 9);
+        let inj = StragglerInjector::new(1, StraggleMode::Drop, 9);
         let mut seen = std::collections::BTreeSet::new();
-        for _ in 0..60 {
-            for (m, _) in inj.choose(&[0, 1, 2, 3, 4, 5]) {
+        for step in 0..60 {
+            for (m, _) in inj.choose(step, &[0, 1, 2, 3, 4, 5]) {
                 seen.insert(m);
             }
         }
         assert!(seen.len() >= 4, "victims not spread: {seen:?}");
+    }
+
+    #[test]
+    fn schedule_is_replayable_from_any_step() {
+        // choosing step 7 cold gives the same victims as choosing it
+        // after a full pass 0..7 — the resume guarantee
+        let inj = StragglerInjector::new(2, StraggleMode::Slow(4.0), 21);
+        let avail = [0, 1, 2, 3, 4, 5, 6];
+        let mut warm = Vec::new();
+        for step in 0..8 {
+            warm.push(inj.choose(step, &avail));
+        }
+        let fresh = StragglerInjector::new(2, StraggleMode::Slow(4.0), 21);
+        assert_eq!(fresh.choose(7, &avail), warm[7]);
+        assert_eq!(fresh.choose(3, &avail), warm[3]);
+        // and two injectors with the same seed agree step by step
+        for (step, w) in warm.iter().enumerate() {
+            assert_eq!(&fresh.choose(step, &avail), w);
+        }
     }
 }

@@ -1,0 +1,270 @@
+//! Continuous batching: many requests, one iterate block.
+//!
+//! Admitted requests become columns of a single [`Block`] that the
+//! engine's distributed mat-vec advances once per elastic step. Columns
+//! join and leave **only at step boundaries**: a request is admitted
+//! into a free column before a step begins, rides the batch while its
+//! residual is above `tol`, and retires the moment its own residual
+//! converges (or its step budget runs out) — independently of its batch
+//! mates. Because `Y = A·W` is column-independent, a request's iterate
+//! trajectory is exactly what a dedicated single-request run would
+//! produce, whatever else shares the block (property-tested in
+//! [`super::session`]).
+
+use std::time::Instant;
+
+use crate::error::Result;
+use crate::linalg::Block;
+
+use super::request::{Query, Request, Response};
+
+/// One request currently riding the batch.
+#[derive(Debug)]
+struct ActiveRequest {
+    req: Request,
+    /// The request's iterate column.
+    w: Vec<f32>,
+    /// Steps ridden so far.
+    steps: usize,
+    /// Latest residual (NaN before the first step).
+    residual: f64,
+    /// Ridge only: `‖b‖`, precomputed at admission.
+    norm: f64,
+}
+
+/// Coalesces active requests into `B`-wide blocks at step boundaries.
+#[derive(Debug)]
+pub struct ContinuousBatcher {
+    q: usize,
+    max_width: usize,
+    active: Vec<ActiveRequest>,
+}
+
+impl ContinuousBatcher {
+    pub fn new(q: usize, max_width: usize) -> ContinuousBatcher {
+        assert!(max_width > 0, "batch width must be at least 1");
+        ContinuousBatcher {
+            q,
+            max_width,
+            active: Vec::new(),
+        }
+    }
+
+    /// Columns currently riding the batch.
+    pub fn width(&self) -> usize {
+        self.active.len()
+    }
+
+    /// Free columns before the next step.
+    pub fn room(&self) -> usize {
+        self.max_width - self.active.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.active.is_empty()
+    }
+
+    /// Request ids currently in flight (for poll/drain bookkeeping).
+    pub fn active_ids(&self) -> Vec<u64> {
+        self.active.iter().map(|a| a.req.id).collect()
+    }
+
+    /// Seat a picked request in a free column. The initial iterate is
+    /// query-specific: the seed basis vector for personalized PageRank,
+    /// the query vector itself for a raw mat-vec, zero for ridge.
+    pub fn admit(&mut self, req: Request) {
+        assert!(self.room() > 0, "admit into a full batch");
+        let (w, norm) = match &req.query {
+            Query::Pagerank { seed_node, .. } => {
+                let mut e = vec![0.0f32; self.q];
+                e[*seed_node] = 1.0;
+                (e, 0.0)
+            }
+            Query::Matvec { v } => (v.clone(), 0.0),
+            Query::Ridge { b, .. } => {
+                let norm = crate::linalg::ops::norm2(b);
+                (vec![0.0f32; self.q], norm)
+            }
+        };
+        self.active.push(ActiveRequest {
+            req,
+            w,
+            steps: 0,
+            residual: f64::NAN,
+            norm,
+        });
+    }
+
+    /// The iterate block for the next step (columns in admission order).
+    /// Must not be called on an empty batch.
+    pub fn block(&self) -> Result<Block> {
+        let cols: Vec<Vec<f32>> = self.active.iter().map(|a| a.w.clone()).collect();
+        Block::from_columns(&cols)
+    }
+
+    /// Fold one step's `Y = A·W` back into the columns: apply each
+    /// request's update rule, retire converged/exhausted columns, and
+    /// return their responses. `worst_residual` over the columns that
+    /// remain active (NaN when none) is the step metric.
+    pub fn apply(&mut self, y: &Block) -> (Vec<Response>, f64) {
+        assert_eq!(y.nvec(), self.active.len(), "block width drifted mid-step");
+        let q = self.q;
+        for (k, a) in self.active.iter_mut().enumerate() {
+            let yk = y.column(k);
+            a.steps += 1;
+            match &a.req.query {
+                Query::Pagerank { seed_node, damping } => {
+                    // p' = d·Ap + (1−d)·e_s ; residual = ‖p' − p‖₁
+                    let d32 = *damping as f32;
+                    let teleport = (1.0 - damping) as f32;
+                    let mut delta = 0.0f64;
+                    for i in 0..q {
+                        let mut v = d32 * yk[i];
+                        if i == *seed_node {
+                            v += teleport;
+                        }
+                        delta += (v as f64 - a.w[i] as f64).abs();
+                        a.w[i] = v;
+                    }
+                    a.residual = delta;
+                }
+                Query::Matvec { .. } => {
+                    // answered in one step: the answer IS y
+                    a.w = yk;
+                    a.residual = 0.0;
+                }
+                Query::Ridge { b, lambda, eta } => {
+                    // r = b − Aw − λw ; w' = w + ηr ; residual = ‖r‖/‖b‖
+                    let mut res_sq = 0.0f64;
+                    for i in 0..q {
+                        let r = b[i] as f64 - yk[i] as f64 - lambda * a.w[i] as f64;
+                        res_sq += r * r;
+                        a.w[i] = (a.w[i] as f64 + eta * r) as f32;
+                    }
+                    a.residual = res_sq.sqrt() / a.norm;
+                }
+            }
+        }
+        let mut responses = Vec::new();
+        let now = Instant::now();
+        self.active.retain_mut(|a| {
+            let done = a.residual <= a.req.tol || a.steps >= a.req.max_steps;
+            if done {
+                responses.push(Response {
+                    id: a.req.id,
+                    tenant: a.req.tenant.clone(),
+                    answer: std::mem::take(&mut a.w),
+                    residual: a.residual,
+                    steps: a.steps,
+                    latency_ns: now
+                        .saturating_duration_since(a.req.submitted)
+                        .as_nanos() as u64,
+                });
+            }
+            !done
+        });
+        let worst = self
+            .active
+            .iter()
+            .map(|a| a.residual)
+            .fold(f64::NAN, f64::max);
+        (responses, worst)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Instant;
+
+    fn req(id: u64, tenant: &str, query: Query, tol: f64, max_steps: usize) -> Request {
+        Request {
+            id,
+            tenant: tenant.to_string(),
+            query,
+            tol,
+            max_steps,
+            submitted: Instant::now(),
+        }
+    }
+
+    #[test]
+    fn matvec_retires_after_one_step_with_y() {
+        let mut b = ContinuousBatcher::new(3, 4);
+        b.admit(req(
+            1,
+            "a",
+            Query::Matvec {
+                v: vec![1.0, 2.0, 3.0],
+            },
+            1e-6,
+            10,
+        ));
+        assert_eq!(b.width(), 1);
+        assert_eq!(b.active_ids(), vec![1]);
+        let y = Block::from_columns(&[vec![9.0, 8.0, 7.0]]).unwrap();
+        let (resp, worst) = b.apply(&y);
+        assert_eq!(resp.len(), 1);
+        assert_eq!(resp[0].answer, vec![9.0, 8.0, 7.0]);
+        assert_eq!(resp[0].steps, 1);
+        assert_eq!(resp[0].residual, 0.0);
+        assert!(b.is_empty());
+        assert!(worst.is_nan(), "no active columns left");
+    }
+
+    #[test]
+    fn columns_retire_independently() {
+        let mut b = ContinuousBatcher::new(2, 4);
+        // column 0 retires on its step budget; column 1 keeps riding
+        b.admit(req(
+            1,
+            "a",
+            Query::Pagerank {
+                seed_node: 0,
+                damping: 0.85,
+            },
+            0.0,
+            1,
+        ));
+        b.admit(req(
+            2,
+            "b",
+            Query::Pagerank {
+                seed_node: 1,
+                damping: 0.85,
+            },
+            0.0,
+            50,
+        ));
+        let y = b.block().unwrap(); // pretend A = I for the test
+        let (resp, worst) = b.apply(&y);
+        assert_eq!(resp.len(), 1);
+        assert_eq!(resp[0].id, 1);
+        assert_eq!(b.width(), 1);
+        assert_eq!(b.active_ids(), vec![2]);
+        assert!(worst.is_finite());
+        assert!(b.room() == 3);
+    }
+
+    #[test]
+    fn block_interleaves_admission_order() {
+        let mut b = ContinuousBatcher::new(2, 4);
+        b.admit(req(
+            1,
+            "a",
+            Query::Matvec { v: vec![1.0, 2.0] },
+            1e-6,
+            1,
+        ));
+        b.admit(req(
+            2,
+            "b",
+            Query::Matvec { v: vec![3.0, 4.0] },
+            1e-6,
+            1,
+        ));
+        let blk = b.block().unwrap();
+        assert_eq!(blk.nvec(), 2);
+        assert_eq!(blk.data(), &[1.0, 3.0, 2.0, 4.0]);
+    }
+}

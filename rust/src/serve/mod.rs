@@ -1,0 +1,172 @@
+//! The request plane: a resident elastic cluster serving multi-tenant
+//! queries (`usec serve`).
+//!
+//! The classic binary runs one batch job and exits. This module keeps
+//! the cluster resident and feeds it a stream of tenant-tagged requests
+//! instead:
+//!
+//! * [`request`] — the query types (personalized PageRank seeds, raw
+//!   mat-vecs, ridge solves) and their answers.
+//! * [`queue`] — the bounded admission queue; a full queue rejects with
+//!   the typed [`crate::Error::Busy`] instead of growing unboundedly.
+//! * [`fairness`] — deficit round robin across tenants, so one flooding
+//!   tenant cannot starve the rest.
+//! * [`batcher`] — continuous batching: picked requests' iterate
+//!   vectors coalesce into one `B`-wide [`crate::linalg::Block`] per
+//!   elastic step; columns join/leave at step boundaries and retire
+//!   individually when their own residual converges.
+//! * [`session`] — [`ServeSession`], the glue driving the
+//!   [`crate::engine::ClusterEngine`] step primitives under the batch.
+//! * [`wire`] / [`server`] — submit/poll over the framed TCP codec
+//!   (`usec serve --listen`, [`ServeClient`] on the client side).
+//!
+//! ```text
+//! tenants ──▶ AdmissionQueue ──DRR──▶ ContinuousBatcher ──Block──▶
+//!     ClusterEngine (begin/complete step) ──Y──▶ retire columns ──▶
+//!     Responses (latency quantiles → Timeline / --json-out)
+//! ```
+
+pub mod batcher;
+pub mod fairness;
+pub mod queue;
+pub mod request;
+pub mod server;
+pub mod session;
+pub mod wire;
+
+pub use batcher::ContinuousBatcher;
+pub use fairness::DrrScheduler;
+pub use queue::AdmissionQueue;
+pub use request::{Query, Request, Response};
+pub use server::{serve_listen, ServeOpts};
+pub use session::{serve_matrix, ServeSession, SessionOpts};
+pub use wire::{ServeClient, ServeMsg};
+
+use std::net::TcpListener;
+use std::time::Duration;
+
+use crate::cli::{ArgSpec, Args};
+use crate::config::RunConfig;
+use crate::error::{Error, Result};
+
+/// Serving flags layered on top of the elastic-run flags.
+pub fn serve_arg_specs() -> Vec<ArgSpec> {
+    vec![
+        ArgSpec::opt("listen", "", "serve requests on this host:port"),
+        ArgSpec::opt("connect", "", "client mode: dial a serve server"),
+        ArgSpec::opt("queue-cap", "64", "admission queue capacity"),
+        ArgSpec::opt("quantum", "1", "DRR requests per tenant per round"),
+        ArgSpec::opt("max-width", "8", "max batch width B (columns per step)"),
+        ArgSpec::opt("exit-after", "0", "server: exit after N served requests (0 = no cap)"),
+        ArgSpec::opt("idle-ms", "0", "server: exit after this long idle (0 = never)"),
+        ArgSpec::opt("tenant", "t0", "client: tenant tag"),
+        ArgSpec::opt("seed-node", "0", "client: personalized PageRank seed node"),
+        ArgSpec::opt("damping", "0.85", "client: PageRank damping d"),
+        ArgSpec::opt("tol", "1e-6", "client: retire the request at this residual"),
+        ArgSpec::opt("req-steps", "100", "client: max steps the request may ride"),
+    ]
+}
+
+/// `usec serve --listen host:port [run flags]` — resident server; or
+/// `usec serve --connect host:port --tenant T --seed-node K` — client.
+pub fn serve_cli(argv: &[String]) -> Result<()> {
+    let mut specs = RunConfig::arg_specs();
+    specs.extend(serve_arg_specs());
+    let args = Args::parse(argv, &specs)?;
+    let listen = args.get("listen").unwrap_or("").to_string();
+    let connect = args.get("connect").unwrap_or("").to_string();
+    match (listen.is_empty(), connect.is_empty()) {
+        (false, true) => serve_server(&args, &listen),
+        (true, false) => serve_client(&args, &connect),
+        _ => Err(Error::Config(
+            "usec serve needs exactly one of --listen (server) or \
+             --connect (client)"
+                .into(),
+        )),
+    }
+}
+
+fn serve_server(args: &Args, listen: &str) -> Result<()> {
+    let cfg = RunConfig::from_args(args)?;
+    let opts = ServeOpts {
+        exit_after: args.get_usize("exit-after")?,
+        idle_ms: args.get_u64("idle-ms")?,
+        session: SessionOpts {
+            queue_cap: args.get_usize("queue-cap")?,
+            quantum: args.get_u64("quantum")?,
+            max_width: args.get_usize("max-width")?,
+        },
+    };
+    let listener = TcpListener::bind(listen)?;
+    println!(
+        "serving q={} matrix on {} (B ≤ {}, queue {}, transport={})",
+        cfg.q,
+        listener.local_addr()?,
+        opts.session.max_width,
+        opts.session.queue_cap,
+        if cfg.is_distributed() { "tcp" } else { "local" },
+    );
+    let tl = serve_listen(listener, &cfg, &opts)?;
+    if let Some(s) = tl.serve() {
+        println!(
+            "served {} request(s) over {} elastic step(s): p50 {:.3} ms, \
+             p99 {:.3} ms, peak queue depth {}, {:.0} rows/s",
+            s.requests,
+            tl.len(),
+            s.latency_p50_ns / 1e6,
+            s.latency_p99_ns / 1e6,
+            s.queue_depth,
+            s.rows_per_s,
+        );
+    }
+    if !cfg.json_out.is_empty() {
+        let doc = crate::util::json::ObjBuilder::new()
+            .str("app", "serve")
+            .str(
+                "transport",
+                if cfg.is_distributed() { "tcp" } else { "local" },
+            )
+            .num("n", cfg.n as f64)
+            .num("max_width", opts.session.max_width as f64)
+            .num("seed", cfg.seed as f64)
+            .val("timeline", tl.to_json())
+            .build();
+        std::fs::write(&cfg.json_out, format!("{doc}\n"))?;
+        println!("wrote serve timeline JSON to {}", cfg.json_out);
+    }
+    Ok(())
+}
+
+fn serve_client(args: &Args, connect: &str) -> Result<()> {
+    let tenant = args.get("tenant").unwrap_or("t0").to_string();
+    let seed_node = args.get_usize("seed-node")?;
+    let damping = args.get_f64("damping")?;
+    let tol = args.get_f64("tol")?;
+    let max_steps = args.get_usize("req-steps")?;
+    let mut client = ServeClient::connect(connect)?;
+    println!("connected to {connect} (q = {})", client.q);
+    let id = client.submit(
+        &tenant,
+        Query::Pagerank { seed_node, damping },
+        tol,
+        max_steps,
+    )?;
+    println!("submitted request {id} (tenant {tenant}, seed node {seed_node})");
+    let resp = client.wait(id, Duration::from_secs(120))?;
+    let mut top: Vec<(usize, f32)> = resp.answer.iter().copied().enumerate().collect();
+    top.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+    let show: Vec<String> = top
+        .iter()
+        .take(5)
+        .map(|(i, v)| format!("{i}:{v:.4}"))
+        .collect();
+    println!(
+        "answered in {} step(s), residual {:.3e}, latency {:.3} ms; top ranks [{}]",
+        resp.steps,
+        resp.residual,
+        resp.latency_ns as f64 / 1e6,
+        show.join(", ")
+    );
+    client.bye();
+    Ok(())
+}

@@ -1,0 +1,166 @@
+//! Bounded multi-tenant admission queue with typed backpressure.
+//!
+//! Requests wait here between submission and being picked into the
+//! continuous batch by the DRR scheduler ([`super::DrrScheduler`]). The
+//! queue is bounded: a submit against a full queue is rejected with
+//! [`Error::Busy`] rather than growing without bound — the client sees
+//! the rejection immediately and can back off, and the serving loop's
+//! memory stays proportional to `capacity`, not to offered load.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::time::Instant;
+
+use crate::error::{Error, Result};
+
+use super::request::{Query, Request};
+
+/// Bounded FIFO-per-tenant admission queue.
+#[derive(Debug)]
+pub struct AdmissionQueue {
+    capacity: usize,
+    /// Per-tenant FIFO lanes (BTreeMap ⇒ deterministic tenant order).
+    tenants: BTreeMap<String, VecDeque<Request>>,
+    len: usize,
+    next_id: u64,
+    peak_depth: usize,
+}
+
+impl AdmissionQueue {
+    pub fn new(capacity: usize) -> AdmissionQueue {
+        assert!(capacity > 0, "admission queue needs capacity ≥ 1");
+        AdmissionQueue {
+            capacity,
+            tenants: BTreeMap::new(),
+            len: 0,
+            next_id: 1,
+            peak_depth: 0,
+        }
+    }
+
+    /// Admit a request, assigning its id. Rejects with [`Error::Busy`]
+    /// when the queue is at capacity and with [`Error::Config`] when the
+    /// query is malformed for a `q`-row serve matrix.
+    pub fn submit(
+        &mut self,
+        q: usize,
+        tenant: &str,
+        query: Query,
+        tol: f64,
+        max_steps: usize,
+    ) -> Result<u64> {
+        query.validate(q)?;
+        if max_steps == 0 {
+            return Err(Error::Config("max_steps must be at least 1".into()));
+        }
+        if self.len >= self.capacity {
+            return Err(Error::busy(format!(
+                "admission queue full ({} requests queued, capacity {})",
+                self.len, self.capacity
+            )));
+        }
+        let id = self.next_id;
+        self.next_id += 1;
+        self.tenants
+            .entry(tenant.to_string())
+            .or_default()
+            .push_back(Request {
+                id,
+                tenant: tenant.to_string(),
+                query,
+                tol,
+                max_steps,
+                submitted: Instant::now(),
+            });
+        self.len += 1;
+        self.peak_depth = self.peak_depth.max(self.len);
+        Ok(id)
+    }
+
+    /// Pop the oldest queued request of `tenant`, if any.
+    pub fn pop_for(&mut self, tenant: &str) -> Option<Request> {
+        let lane = self.tenants.get_mut(tenant)?;
+        let req = lane.pop_front();
+        if req.is_some() {
+            self.len -= 1;
+        }
+        if lane.is_empty() {
+            self.tenants.remove(tenant);
+        }
+        req
+    }
+
+    /// Tenants with at least one queued request, in deterministic order.
+    pub fn waiting_tenants(&self) -> Vec<String> {
+        self.tenants.keys().cloned().collect()
+    }
+
+    /// Queued requests of one tenant.
+    pub fn depth_of(&self, tenant: &str) -> usize {
+        self.tenants.get(tenant).map_or(0, VecDeque::len)
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Highest queue depth ever observed (for the serve summary).
+    pub fn peak_depth(&self) -> usize {
+        self.peak_depth
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ppr(seed: usize) -> Query {
+        Query::Pagerank {
+            seed_node: seed,
+            damping: 0.85,
+        }
+    }
+
+    #[test]
+    fn submit_assigns_ids_and_pops_fifo_per_tenant() {
+        let mut q = AdmissionQueue::new(8);
+        let a1 = q.submit(16, "a", ppr(0), 1e-6, 50).unwrap();
+        let b1 = q.submit(16, "b", ppr(1), 1e-6, 50).unwrap();
+        let a2 = q.submit(16, "a", ppr(2), 1e-6, 50).unwrap();
+        assert_eq!(q.len(), 3);
+        assert_eq!(q.waiting_tenants(), vec!["a".to_string(), "b".to_string()]);
+        assert_eq!(q.depth_of("a"), 2);
+        assert_eq!(q.pop_for("a").unwrap().id, a1);
+        assert_eq!(q.pop_for("a").unwrap().id, a2);
+        assert!(q.pop_for("a").is_none());
+        assert_eq!(q.pop_for("b").unwrap().id, b1);
+        assert!(q.is_empty());
+        assert_eq!(q.peak_depth(), 3);
+    }
+
+    #[test]
+    fn full_queue_rejects_with_typed_busy() {
+        let mut q = AdmissionQueue::new(2);
+        q.submit(16, "a", ppr(0), 1e-6, 50).unwrap();
+        q.submit(16, "b", ppr(1), 1e-6, 50).unwrap();
+        let err = q.submit(16, "c", ppr(2), 1e-6, 50).unwrap_err();
+        assert!(
+            matches!(err, Error::Busy(_)),
+            "expected Error::Busy, got {err:?}"
+        );
+        // draining one slot re-opens admission
+        q.pop_for("a").unwrap();
+        q.submit(16, "c", ppr(2), 1e-6, 50).unwrap();
+    }
+
+    #[test]
+    fn malformed_queries_are_rejected_before_queuing() {
+        let mut q = AdmissionQueue::new(4);
+        assert!(q.submit(16, "a", ppr(99), 1e-6, 50).is_err());
+        assert!(q.submit(16, "a", ppr(0), 1e-6, 0).is_err());
+        assert!(q.is_empty(), "rejected submits must not occupy slots");
+    }
+}

@@ -1,0 +1,171 @@
+//! Tenant-tagged serving requests and their answers.
+//!
+//! A [`Request`] names a tenant, a [`Query`] over the resident serve
+//! matrix `A` (`q×q`, column-stochastic), and its convergence contract
+//! (`tol`, `max_steps`). Each query kind maps to one iterate column of
+//! the continuous batch ([`super::ContinuousBatcher`]):
+//!
+//! * [`Query::Pagerank`] — personalized PageRank from one seed node:
+//!   `p ← d·Ap + (1−d)·e_s`, L1 step delta as the residual.
+//! * [`Query::Matvec`] — one raw mat-vec `y = Av`; answered after a
+//!   single step with residual 0.
+//! * [`Query::Ridge`] — Richardson iteration for `(A + λI)w = b`:
+//!   `w ← w + η(b − Aw − λw)`, relative residual `‖r‖/‖b‖`.
+
+use std::time::Instant;
+
+use crate::error::{Error, Result};
+
+/// What a request asks of the resident serve matrix.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Query {
+    /// Personalized PageRank from `seed_node` with damping `d`.
+    Pagerank { seed_node: usize, damping: f64 },
+    /// One mat-vec `y = A v`.
+    Matvec { v: Vec<f32> },
+    /// Richardson ridge solve of `(A + λI) w = b` with step size `eta`.
+    Ridge { b: Vec<f32>, lambda: f64, eta: f64 },
+}
+
+impl Query {
+    /// Short kind name for logs and the wire protocol.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Query::Pagerank { .. } => "pagerank",
+            Query::Matvec { .. } => "matvec",
+            Query::Ridge { .. } => "ridge",
+        }
+    }
+
+    /// Reject a query that cannot run against a `q×q` serve matrix.
+    pub fn validate(&self, q: usize) -> Result<()> {
+        match self {
+            Query::Pagerank { seed_node, damping } => {
+                if *seed_node >= q {
+                    return Err(Error::Config(format!(
+                        "seed node {seed_node} out of range (q = {q})"
+                    )));
+                }
+                if !(0.0..1.0).contains(damping) {
+                    return Err(Error::Config(format!("damping {damping} not in [0,1)")));
+                }
+            }
+            Query::Matvec { v } => {
+                if v.len() != q {
+                    return Err(Error::Config(format!(
+                        "matvec query of {} rows against a q = {q} matrix",
+                        v.len()
+                    )));
+                }
+            }
+            Query::Ridge { b, lambda, eta } => {
+                if b.len() != q {
+                    return Err(Error::Config(format!(
+                        "ridge right-hand side of {} rows against a q = {q} matrix",
+                        b.len()
+                    )));
+                }
+                if !lambda.is_finite() || !eta.is_finite() || *eta <= 0.0 {
+                    return Err(Error::Config(format!(
+                        "ridge needs finite λ and positive η (got λ={lambda}, η={eta})"
+                    )));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// One admitted request, tenant-tagged and timestamped at submission.
+#[derive(Debug, Clone)]
+pub struct Request {
+    /// Session-unique id, assigned by the admission queue.
+    pub id: u64,
+    pub tenant: String,
+    pub query: Query,
+    /// Residual below which the request's column retires.
+    pub tol: f64,
+    /// Hard cap on steps the column may ride the batch.
+    pub max_steps: usize,
+    /// When the queue admitted the request (latency starts here).
+    pub submitted: Instant,
+}
+
+/// A completed request.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub id: u64,
+    pub tenant: String,
+    /// The answer vector (ranks / `Av` / the ridge solution).
+    pub answer: Vec<f32>,
+    /// Residual at retirement (0 for matvec).
+    pub residual: f64,
+    /// Elastic steps the request's column rode the batch.
+    pub steps: usize,
+    /// Submit→answer latency in nanoseconds.
+    pub latency_ns: u64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn validate_rejects_bad_shapes() {
+        assert!(Query::Pagerank {
+            seed_node: 3,
+            damping: 0.85
+        }
+        .validate(8)
+        .is_ok());
+        assert!(Query::Pagerank {
+            seed_node: 8,
+            damping: 0.85
+        }
+        .validate(8)
+        .is_err());
+        assert!(Query::Pagerank {
+            seed_node: 0,
+            damping: 1.0
+        }
+        .validate(8)
+        .is_err());
+        assert!(Query::Matvec { v: vec![0.0; 7] }.validate(8).is_err());
+        assert!(Query::Ridge {
+            b: vec![0.0; 8],
+            lambda: 3.0,
+            eta: 0.0
+        }
+        .validate(8)
+        .is_err());
+        assert!(Query::Ridge {
+            b: vec![0.0; 8],
+            lambda: 3.0,
+            eta: 0.13
+        }
+        .validate(8)
+        .is_ok());
+    }
+
+    #[test]
+    fn kind_names_are_stable() {
+        assert_eq!(
+            Query::Pagerank {
+                seed_node: 0,
+                damping: 0.85
+            }
+            .kind(),
+            "pagerank"
+        );
+        assert_eq!(Query::Matvec { v: vec![] }.kind(), "matvec");
+        assert_eq!(
+            Query::Ridge {
+                b: vec![],
+                lambda: 0.0,
+                eta: 1.0
+            }
+            .kind(),
+            "ridge"
+        );
+    }
+}

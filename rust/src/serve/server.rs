@@ -1,0 +1,312 @@
+//! `usec serve --listen`: the resident serving loop behind a socket.
+//!
+//! One thread steps the [`ServeSession`]; an acceptor thread admits
+//! clients and spawns one handler thread per connection. Handlers share
+//! the session's admission queue (submits are pushed straight into it,
+//! full-queue rejects travel back as `Reject`) and a completed-response
+//! map the stepping loop fills. The server exits after `exit_after`
+//! served requests and/or after `idle_ms` without work — both zero
+//! means serve forever.
+
+use std::collections::HashMap;
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::config::types::RunConfig;
+use crate::error::{Error, Result};
+use crate::metrics::Timeline;
+
+use super::queue::AdmissionQueue;
+use super::request::Response;
+use super::session::{ServeSession, SessionOpts};
+use super::wire::{recv_msg, send_msg, ServeMsg, SERVE_VERSION};
+
+/// Server-mode knobs on top of the session's request-plane ones.
+#[derive(Debug, Clone, Default)]
+pub struct ServeOpts {
+    /// Exit after serving this many requests (0 = no request cap).
+    pub exit_after: usize,
+    /// Exit after this long without queued or in-flight work
+    /// (0 = never idle-exit).
+    pub idle_ms: u64,
+    pub session: SessionOpts,
+}
+
+/// Is this I/O error just a read timeout (keep polling)?
+fn is_timeout(e: &Error) -> bool {
+    matches!(
+        e,
+        Error::Io(io) if io.kind() == std::io::ErrorKind::WouldBlock
+            || io.kind() == std::io::ErrorKind::TimedOut
+    )
+}
+
+/// One client connection: handshake, then submit/poll until Bye/EOF.
+fn handle_client(
+    mut stream: TcpStream,
+    q: usize,
+    queue: Arc<Mutex<AdmissionQueue>>,
+    done: Arc<Mutex<HashMap<u64, Response>>>,
+    stop: Arc<AtomicBool>,
+) {
+    stream.set_nodelay(true).ok();
+    stream
+        .set_read_timeout(Some(Duration::from_millis(100)))
+        .ok();
+    // handshake: wait (bounded by `stop`) for the client's Hello
+    loop {
+        match recv_msg(&mut stream) {
+            Ok(ServeMsg::Hello { version }) if version == SERVE_VERSION => break,
+            Ok(_) => return, // wrong opening message: drop the client
+            Err(e) if is_timeout(&e) => {
+                if stop.load(Ordering::Relaxed) {
+                    return;
+                }
+            }
+            Err(_) => return,
+        }
+    }
+    if send_msg(&mut stream, &ServeMsg::HelloAck { q: q as u64 }).is_err() {
+        return;
+    }
+    loop {
+        let msg = match recv_msg(&mut stream) {
+            Ok(m) => m,
+            Err(e) if is_timeout(&e) => {
+                if stop.load(Ordering::Relaxed) {
+                    return;
+                }
+                continue;
+            }
+            Err(_) => return, // EOF or a broken frame: connection over
+        };
+        let reply = match msg {
+            ServeMsg::Submit {
+                tenant,
+                query,
+                tol,
+                max_steps,
+            } => {
+                let res = queue
+                    .lock()
+                    .unwrap()
+                    .submit(q, &tenant, query, tol, max_steps as usize);
+                match res {
+                    Ok(id) => ServeMsg::SubmitAck { id },
+                    Err(e) => ServeMsg::Reject {
+                        reason: e.to_string(),
+                    },
+                }
+            }
+            ServeMsg::Poll { id } => match done.lock().unwrap().get(&id) {
+                Some(resp) => ServeMsg::Done { resp: resp.clone() },
+                None => ServeMsg::Pending {
+                    depth: queue.lock().unwrap().len() as u64,
+                },
+            },
+            ServeMsg::Bye => return,
+            _ => ServeMsg::Reject {
+                reason: "unexpected client message".into(),
+            },
+        };
+        if send_msg(&mut stream, &reply).is_err() {
+            return;
+        }
+    }
+}
+
+/// Serve requests over `listener` until the exit condition holds, then
+/// drain the cluster and return the timeline (serve summary attached).
+pub fn serve_listen(
+    listener: TcpListener,
+    cfg: &RunConfig,
+    opts: &ServeOpts,
+) -> Result<Timeline> {
+    let mut session = ServeSession::build(cfg, &opts.session)?;
+    let q = cfg.q;
+    let queue = session.queue_handle();
+    let done: Arc<Mutex<HashMap<u64, Response>>> = Arc::new(Mutex::new(HashMap::new()));
+    let stop = Arc::new(AtomicBool::new(false));
+
+    listener.set_nonblocking(true)?;
+    let acceptor = {
+        let queue = Arc::clone(&queue);
+        let done = Arc::clone(&done);
+        let stop = Arc::clone(&stop);
+        std::thread::spawn(move || {
+            let mut handlers = Vec::new();
+            while !stop.load(Ordering::Relaxed) {
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        let queue = Arc::clone(&queue);
+                        let done = Arc::clone(&done);
+                        let stop = Arc::clone(&stop);
+                        handlers.push(std::thread::spawn(move || {
+                            handle_client(stream, q, queue, done, stop)
+                        }));
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(Duration::from_millis(5));
+                    }
+                    Err(_) => break,
+                }
+            }
+            for h in handlers {
+                h.join().ok();
+            }
+        })
+    };
+
+    let mut served = 0usize;
+    let mut last_work = Instant::now();
+    let outcome = loop {
+        let responses = match session.step_once() {
+            Ok(r) => r,
+            Err(e) => break Err(e),
+        };
+        if !responses.is_empty() {
+            let mut map = done.lock().unwrap();
+            for r in responses {
+                served += 1;
+                map.insert(r.id, r);
+            }
+        }
+        if opts.exit_after > 0 && served >= opts.exit_after {
+            break Ok(());
+        }
+        if session.pending() {
+            last_work = Instant::now();
+        } else {
+            if opts.idle_ms > 0
+                && last_work.elapsed() >= Duration::from_millis(opts.idle_ms)
+            {
+                break Ok(());
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        }
+    };
+    stop.store(true, Ordering::Relaxed);
+    acceptor.join().ok();
+    outcome?;
+    session.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::request::Query;
+    use crate::serve::session::serve_matrix;
+    use crate::serve::wire::ServeClient;
+
+    #[test]
+    fn two_concurrent_clients_are_served_over_the_wire() {
+        let q = 32;
+        let cfg = RunConfig {
+            q,
+            r: q,
+            g: 3,
+            j: 2,
+            n: 3,
+            steps: 1,
+            speeds: vec![1.0, 2.0, 3.0],
+            seed: 19,
+            ..Default::default()
+        };
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let opts = ServeOpts {
+            exit_after: 4,
+            idle_ms: 0,
+            session: SessionOpts::default(),
+        };
+        let server = {
+            let cfg = cfg.clone();
+            std::thread::spawn(move || serve_listen(listener, &cfg, &opts))
+        };
+
+        let clients: Vec<_> = (0..2usize)
+            .map(|t| {
+                let addr = addr.clone();
+                std::thread::spawn(move || {
+                    let tenant = format!("tenant{t}");
+                    let mut c = ServeClient::connect(&addr).unwrap();
+                    assert_eq!(c.q, 32);
+                    let ids = [
+                        c.submit(
+                            &tenant,
+                            Query::Pagerank {
+                                seed_node: 2 * t + 1,
+                                damping: 0.85,
+                            },
+                            1e-8,
+                            200,
+                        )
+                        .unwrap(),
+                        c.submit(
+                            &tenant,
+                            Query::Matvec {
+                                v: (0..32).map(|i| (i + t) as f32 * 0.25).collect(),
+                            },
+                            1e-6,
+                            1,
+                        )
+                        .unwrap(),
+                    ];
+                    let resps: Vec<Response> = ids
+                        .iter()
+                        .map(|&id| c.wait(id, Duration::from_secs(20)).unwrap())
+                        .collect();
+                    c.bye();
+                    (t, resps)
+                })
+            })
+            .collect();
+
+        let a = serve_matrix(q, cfg.seed);
+        for client in clients {
+            let (t, resps) = client.join().unwrap();
+            assert_eq!(resps[0].tenant, format!("tenant{t}"));
+            assert!(resps[0].residual <= 1e-8);
+            // the matvec answer must equal the dense product exactly
+            let v: Vec<f32> = (0..32).map(|i| (i + t) as f32 * 0.25).collect();
+            let want = a.matvec(&v).unwrap();
+            let diff: f64 = resps[1]
+                .answer
+                .iter()
+                .zip(&want)
+                .map(|(&x, &y)| (x as f64 - y as f64).abs())
+                .fold(0.0, f64::max);
+            assert!(diff <= 1e-5, "matvec diverged over the wire: {diff}");
+        }
+
+        let tl = server.join().unwrap().unwrap();
+        let summary = tl.serve().expect("serve summary attached");
+        assert_eq!(summary.requests, 4);
+        assert!(summary.latency_p99_ns >= summary.latency_p50_ns);
+    }
+
+    #[test]
+    fn idle_server_exits_on_idle_timeout() {
+        let cfg = RunConfig {
+            q: 16,
+            r: 16,
+            g: 2,
+            j: 2,
+            n: 2,
+            steps: 1,
+            speeds: vec![1.0, 1.0],
+            seed: 3,
+            ..Default::default()
+        };
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let opts = ServeOpts {
+            exit_after: 0,
+            idle_ms: 50,
+            session: SessionOpts::default(),
+        };
+        let tl = serve_listen(listener, &cfg, &opts).unwrap();
+        assert_eq!(tl.serve().unwrap().requests, 0);
+    }
+}

@@ -1,0 +1,488 @@
+//! The resident serving session: engine + queue + batcher glued into a
+//! step loop.
+//!
+//! A [`ServeSession`] owns a [`ClusterEngine`] over the serve matrix
+//! `A = Mᵀ` (`M` row-stochastic, seeded from the run config) and drives
+//! it one elastic step at a time. Each [`ServeSession::step_once`]:
+//!
+//! 1. at the step boundary, lets the DRR scheduler pick waiting
+//!    requests into the batch's free columns,
+//! 2. runs one distributed `Y = A·W` over the coalesced block via the
+//!    engine's step primitives
+//!    ([`ClusterEngine::begin_block_step`] /
+//!    [`ClusterEngine::complete_block_step`]), so preemption, recovery,
+//!    rebalancing and chaos all keep working under the request plane,
+//! 3. folds `Y` back into the columns and retires the converged ones,
+//!    returning their [`Response`]s.
+//!
+//! [`ServeSession::finish`] attaches the request-plane totals
+//! ([`ServeSummary`]) to the engine's [`Timeline`] and drains the
+//! cluster.
+
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::config::types::RunConfig;
+use crate::engine::ClusterEngine;
+use crate::error::{Error, Result};
+use crate::linalg::{gen, Matrix};
+use crate::metrics::{stats, ServeSummary, Timeline};
+
+use super::batcher::ContinuousBatcher;
+use super::fairness::DrrScheduler;
+use super::queue::AdmissionQueue;
+use super::request::{Query, Response};
+
+/// Request-plane knobs of a serving session.
+#[derive(Debug, Clone)]
+pub struct SessionOpts {
+    /// Admission queue capacity (submits beyond it get [`Error::Busy`]).
+    pub queue_cap: usize,
+    /// DRR quantum: requests a tenant may take per scheduling round.
+    pub quantum: u64,
+    /// Maximum batch width `B` (columns coalesced per step).
+    pub max_width: usize,
+}
+
+impl Default for SessionOpts {
+    fn default() -> Self {
+        SessionOpts {
+            queue_cap: 64,
+            quantum: 1,
+            max_width: 8,
+        }
+    }
+}
+
+/// A resident cluster serving multi-tenant requests.
+pub struct ServeSession {
+    engine: ClusterEngine,
+    queue: Arc<Mutex<AdmissionQueue>>,
+    drr: DrrScheduler,
+    batcher: ContinuousBatcher,
+    q: usize,
+    step: usize,
+    latencies_ns: Vec<f64>,
+    requests_done: u64,
+    rows_done: u64,
+    /// First served step (rows/s clock starts here).
+    started: Option<Instant>,
+}
+
+/// Transpose a dense matrix (setup-time only).
+fn transpose(m: &Matrix) -> Matrix {
+    let mut t = Matrix::zeros(m.cols(), m.rows());
+    for r in 0..m.rows() {
+        for c in 0..m.cols() {
+            t.set(c, r, m.at(r, c));
+        }
+    }
+    t
+}
+
+/// The session's serve matrix: `A = Mᵀ` for the seeded row-stochastic
+/// link matrix `M` — column-stochastic, so personalized PageRank is a
+/// plain iterate update and mat-vec/ridge queries stay well-conditioned.
+pub fn serve_matrix(q: usize, seed: u64) -> Matrix {
+    transpose(&gen::random_stochastic(q, seed))
+}
+
+impl ServeSession {
+    /// Build the resident cluster. Distributed sessions (TCP workers)
+    /// must set `cfg.stream_data`: the serve matrix has no per-row
+    /// generator the daemons could regenerate it from.
+    pub fn build(cfg: &RunConfig, opts: &SessionOpts) -> Result<ServeSession> {
+        if cfg.q != cfg.r {
+            return Err(Error::Config("serving needs a square matrix".into()));
+        }
+        if cfg.is_distributed() && !cfg.stream_data {
+            return Err(Error::Config(
+                "distributed serving requires --stream-data (the serve matrix \
+                 has no generator the worker daemons could rebuild it from)"
+                    .into(),
+            ));
+        }
+        if opts.max_width == 0 || opts.max_width > crate::net::codec::MAX_NVEC {
+            return Err(Error::Config(format!(
+                "batch width {} not in [1, {}]",
+                opts.max_width,
+                crate::net::codec::MAX_NVEC
+            )));
+        }
+        let matrix = Arc::new(serve_matrix(cfg.q, cfg.seed));
+        let engine = ClusterEngine::build(cfg, matrix)?;
+        Ok(ServeSession {
+            engine,
+            queue: Arc::new(Mutex::new(AdmissionQueue::new(opts.queue_cap))),
+            drr: DrrScheduler::new(opts.quantum),
+            batcher: ContinuousBatcher::new(cfg.q, opts.max_width),
+            q: cfg.q,
+            step: 0,
+            latencies_ns: Vec::new(),
+            requests_done: 0,
+            rows_done: 0,
+            started: None,
+        })
+    }
+
+    /// Shared handle on the admission queue (for server threads).
+    pub fn queue_handle(&self) -> Arc<Mutex<AdmissionQueue>> {
+        Arc::clone(&self.queue)
+    }
+
+    /// The resident engine (state machine, timeline, transport).
+    pub fn engine(&self) -> &ClusterEngine {
+        &self.engine
+    }
+
+    /// Mutable engine access (tests inject faults through this).
+    pub fn engine_mut(&mut self) -> &mut ClusterEngine {
+        &mut self.engine
+    }
+
+    /// Submit a request into the admission queue.
+    pub fn submit(
+        &self,
+        tenant: &str,
+        query: Query,
+        tol: f64,
+        max_steps: usize,
+    ) -> Result<u64> {
+        self.queue
+            .lock()
+            .unwrap()
+            .submit(self.q, tenant, query, tol, max_steps)
+    }
+
+    /// Work is waiting (queued or riding the batch).
+    pub fn pending(&self) -> bool {
+        !self.batcher.is_empty() || !self.queue.lock().unwrap().is_empty()
+    }
+
+    /// Run one elastic step of the coalesced batch; returns the requests
+    /// that retired this step. A no-op returning no responses when
+    /// nothing is queued or active.
+    pub fn step_once(&mut self) -> Result<Vec<Response>> {
+        let room = self.batcher.room();
+        if room > 0 {
+            let picked = {
+                let mut q = self.queue.lock().unwrap();
+                self.drr.pick(&mut q, room)
+            };
+            for r in picked {
+                self.batcher.admit(r);
+            }
+        }
+        if self.batcher.is_empty() {
+            return Ok(Vec::new());
+        }
+        if self.started.is_none() {
+            self.started = Some(Instant::now());
+        }
+        let w = Arc::new(self.batcher.block()?);
+        let width = w.nvec();
+        let step = self.step;
+        self.step += 1;
+        let (y, tail) = match self.engine.begin_block_step(step, &w, f64::NAN)? {
+            Some(pair) => pair,
+            // infeasible (too few workers): a skip record was pushed;
+            // the batch stays seated and retries at the next boundary
+            None => return Ok(Vec::new()),
+        };
+        let (responses, worst) = self.batcher.apply(&y);
+        // the timeline metric is the worst still-active residual; the
+        // checkpoint iterate is the surviving columns' next block
+        let next = if self.batcher.is_empty() {
+            y
+        } else {
+            self.batcher.block()?
+        };
+        self.engine.complete_block_step(tail, &next, worst)?;
+        self.rows_done += (self.q * width) as u64;
+        for r in &responses {
+            self.latencies_ns.push(r.latency_ns as f64);
+        }
+        self.requests_done += responses.len() as u64;
+        Ok(responses)
+    }
+
+    /// Step until queue and batch are empty (at most `step_cap` steps).
+    pub fn run_until_drained(&mut self, step_cap: usize) -> Result<Vec<Response>> {
+        let mut out = Vec::new();
+        let mut used = 0;
+        while self.pending() {
+            if used >= step_cap {
+                return Err(Error::Cluster(format!(
+                    "serve drain exceeded {step_cap} steps with {} request(s) \
+                     still in flight",
+                    self.batcher.width()
+                )));
+            }
+            out.extend(self.step_once()?);
+            used += 1;
+        }
+        Ok(out)
+    }
+
+    /// Request-plane totals so far.
+    pub fn summary(&self) -> ServeSummary {
+        let (p50, p99) = if self.latencies_ns.is_empty() {
+            (f64::NAN, f64::NAN)
+        } else {
+            (
+                stats::quantile(&self.latencies_ns, 0.5),
+                stats::quantile(&self.latencies_ns, 0.99),
+            )
+        };
+        let rows_per_s = match self.started {
+            Some(t) => {
+                let s = t.elapsed().as_secs_f64();
+                if s > 0.0 {
+                    self.rows_done as f64 / s
+                } else {
+                    f64::NAN
+                }
+            }
+            None => f64::NAN,
+        };
+        ServeSummary {
+            requests: self.requests_done,
+            latency_p50_ns: p50,
+            latency_p99_ns: p99,
+            queue_depth: self.queue.lock().unwrap().peak_depth() as u64,
+            rows_per_s,
+        }
+    }
+
+    /// Attach the serve summary to the timeline, drain the cluster, and
+    /// hand the timeline back.
+    pub fn finish(mut self) -> Result<Timeline> {
+        let summary = self.summary();
+        self.engine.timeline.set_serve(summary);
+        let tl = std::mem::take(&mut self.engine.timeline);
+        self.engine.drain()?;
+        Ok(tl)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::prop;
+    use crate::util::Rng;
+
+    fn cfg(q: usize) -> RunConfig {
+        RunConfig {
+            q,
+            r: q,
+            g: 3,
+            j: 2,
+            n: 3,
+            steps: 1,
+            speeds: vec![1.0, 2.0, 3.0],
+            seed: 17,
+            ..Default::default()
+        }
+    }
+
+    /// Dense single-request oracle: iterate the query's update rule with
+    /// plain `Matrix::matvec` until its own tol/step budget retires it.
+    fn oracle(a: &Matrix, query: &Query, tol: f64, max_steps: usize) -> Vec<f32> {
+        let q = a.rows();
+        match query {
+            Query::Pagerank { seed_node, damping } => {
+                let mut p = vec![0.0f32; q];
+                p[*seed_node] = 1.0;
+                for _ in 0..max_steps {
+                    let y = a.matvec(&p).unwrap();
+                    let d32 = *damping as f32;
+                    let teleport = (1.0 - damping) as f32;
+                    let mut delta = 0.0f64;
+                    for i in 0..q {
+                        let mut v = d32 * y[i];
+                        if i == *seed_node {
+                            v += teleport;
+                        }
+                        delta += (v as f64 - p[i] as f64).abs();
+                        p[i] = v;
+                    }
+                    if delta <= tol {
+                        break;
+                    }
+                }
+                p
+            }
+            Query::Matvec { v } => a.matvec(v).unwrap(),
+            Query::Ridge { b, lambda, eta } => {
+                let b_norm = crate::linalg::ops::norm2(b);
+                let mut w = vec![0.0f32; q];
+                for _ in 0..max_steps {
+                    let y = a.matvec(&w).unwrap();
+                    let mut res_sq = 0.0f64;
+                    for i in 0..q {
+                        let r = b[i] as f64 - y[i] as f64 - lambda * w[i] as f64;
+                        res_sq += r * r;
+                        w[i] = (w[i] as f64 + eta * r) as f32;
+                    }
+                    if res_sq.sqrt() / b_norm <= tol {
+                        break;
+                    }
+                }
+                w
+            }
+        }
+    }
+
+    fn max_abs_diff(a: &[f32], b: &[f32]) -> f64 {
+        a.iter()
+            .zip(b)
+            .map(|(&x, &y)| (x as f64 - y as f64).abs())
+            .fold(0.0, f64::max)
+    }
+
+    #[test]
+    fn batched_answers_match_the_dedicated_oracle() {
+        let c = cfg(48);
+        let a = serve_matrix(48, c.seed);
+        let mut s = ServeSession::build(&c, &SessionOpts::default()).unwrap();
+        let queries = [
+            (
+                "alice",
+                Query::Pagerank {
+                    seed_node: 3,
+                    damping: 0.85,
+                },
+                1e-9,
+                200,
+            ),
+            (
+                "bob",
+                Query::Matvec {
+                    v: (0..48).map(|i| (i as f32).sin()).collect(),
+                },
+                1e-6,
+                1,
+            ),
+            (
+                "bob",
+                Query::Ridge {
+                    b: (0..48).map(|i| if i % 2 == 0 { 1.0 } else { -1.0 }).collect(),
+                    lambda: 3.0,
+                    eta: 0.13,
+                },
+                1e-7,
+                300,
+            ),
+        ];
+        let mut ids = Vec::new();
+        for (tenant, query, tol, max_steps) in &queries {
+            ids.push(s.submit(tenant, query.clone(), *tol, *max_steps).unwrap());
+        }
+        let responses = s.run_until_drained(2000).unwrap();
+        assert_eq!(responses.len(), 3);
+        for ((tenant, query, tol, max_steps), id) in queries.iter().zip(&ids) {
+            let r = responses.iter().find(|r| r.id == *id).unwrap();
+            assert_eq!(&r.tenant, tenant);
+            let want = oracle(&a, query, *tol, *max_steps);
+            let diff = max_abs_diff(&r.answer, &want);
+            assert!(
+                diff <= 1e-5,
+                "{} query diverged from its dedicated oracle: {diff}",
+                query.kind()
+            );
+            assert!(r.latency_ns > 0);
+        }
+        let summary = s.summary();
+        assert_eq!(summary.requests, 3);
+        assert!(summary.latency_p50_ns.is_finite());
+        assert!(summary.latency_p99_ns >= summary.latency_p50_ns);
+        assert!(summary.queue_depth >= 3);
+        let tl = s.finish().unwrap();
+        assert!(tl.serve().is_some());
+        assert!(tl.len() > 0, "served steps land in the timeline");
+    }
+
+    #[test]
+    fn idle_session_steps_are_noops() {
+        let c = cfg(24);
+        let mut s = ServeSession::build(&c, &SessionOpts::default()).unwrap();
+        assert!(!s.pending());
+        assert!(s.step_once().unwrap().is_empty());
+        let summary = s.summary();
+        assert_eq!(summary.requests, 0);
+        assert!(summary.latency_p50_ns.is_nan());
+        let tl = s.finish().unwrap();
+        assert_eq!(tl.len(), 0);
+    }
+
+    #[test]
+    fn build_rejects_distributed_without_streaming() {
+        let mut c = cfg(24);
+        c.workers = vec!["127.0.0.1:1".into(), "127.0.0.1:2".into(), "127.0.0.1:3".into()];
+        let err = ServeSession::build(&c, &SessionOpts::default()).unwrap_err();
+        assert!(err.to_string().contains("stream-data"), "{err}");
+    }
+
+    /// Satellite: continuous batching must never mix tenants' columns —
+    /// whatever shares the block, every request's answer equals the one
+    /// a dedicated single-request session produces.
+    #[test]
+    fn property_batching_never_mixes_tenant_columns() {
+        prop::run(
+            prop::Config::default().cases(6).name("batch-isolation"),
+            |rng: &mut Rng| {
+                let q = 24;
+                let c = cfg(q);
+                let n_reqs = rng.range(2, 6);
+                let tenants = ["a", "b", "c"];
+                let reqs: Vec<(String, Query)> = (0..n_reqs)
+                    .map(|_| {
+                        let tenant = tenants[rng.range(0, tenants.len())];
+                        let query = match rng.range(0, 3) {
+                            0 => Query::Pagerank {
+                                seed_node: rng.range(0, q),
+                                damping: 0.85,
+                            },
+                            1 => Query::Matvec {
+                                v: (0..q).map(|_| rng.f64() as f32).collect(),
+                            },
+                            _ => Query::Ridge {
+                                b: (0..q)
+                                    .map(|_| (rng.f64() * 2.0 - 1.0) as f32)
+                                    .collect(),
+                                lambda: 3.0,
+                                eta: 0.13,
+                            },
+                        };
+                        (tenant.to_string(), query)
+                    })
+                    .collect();
+                // one coalesced multi-tenant session…
+                let mut batched = ServeSession::build(&c, &SessionOpts::default()).unwrap();
+                let ids: Vec<u64> = reqs
+                    .iter()
+                    .map(|(t, qu)| batched.submit(t, qu.clone(), 1e-7, 120).unwrap())
+                    .collect();
+                let responses = batched.run_until_drained(2000).unwrap();
+                assert_eq!(responses.len(), reqs.len());
+                // …vs each request alone in its own dedicated session
+                for ((tenant, query), id) in reqs.iter().zip(&ids) {
+                    let got = responses.iter().find(|r| r.id == *id).unwrap();
+                    assert_eq!(&got.tenant, tenant);
+                    let mut solo = ServeSession::build(&c, &SessionOpts::default()).unwrap();
+                    solo.submit(tenant, query.clone(), 1e-7, 120).unwrap();
+                    let solo_resp = solo.run_until_drained(2000).unwrap();
+                    assert_eq!(solo_resp.len(), 1);
+                    let diff = max_abs_diff(&got.answer, &solo_resp[0].answer);
+                    assert!(
+                        diff <= 1e-5,
+                        "{} answer changed when batched with other tenants: {diff}",
+                        query.kind()
+                    );
+                    solo.finish().unwrap();
+                }
+                batched.finish().unwrap();
+            },
+        );
+    }
+}

@@ -1,0 +1,484 @@
+//! The serving wire protocol: submit/poll over framed TCP.
+//!
+//! Rides the same length-prefixed little-endian framing as the worker
+//! protocol ([`crate::net::frame`]) but is its own codec with its own
+//! magic, so a serve client dialing a worker daemon (or vice versa) is
+//! rejected at the first frame instead of mis-parsing. The exchange:
+//!
+//! ```text
+//! client                         server
+//!   Hello{version}         ──▶
+//!                          ◀──  HelloAck{q}
+//!   Submit{tenant,query,…} ──▶
+//!                          ◀──  SubmitAck{id} | Reject{reason}
+//!   Poll{id}               ──▶
+//!                          ◀──  Done{response} | Pending{depth}
+//!   Bye                    ──▶
+//! ```
+//!
+//! [`ServeClient`] wraps the client side; a `Reject` surfaces as the
+//! same typed [`Error::Busy`] the in-process queue raises.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+use crate::error::{Error, Result};
+use crate::net::frame::{read_frame, write_frame};
+
+use super::request::{Query, Response};
+
+/// Serve-protocol magic (`"USEV"` LE) — distinct from the worker codec.
+pub const SERVE_MAGIC: u32 = 0x5553_4556;
+/// Serve-protocol version.
+pub const SERVE_VERSION: u16 = 1;
+
+const TAG_HELLO: u8 = 1;
+const TAG_HELLO_ACK: u8 = 2;
+const TAG_SUBMIT: u8 = 3;
+const TAG_SUBMIT_ACK: u8 = 4;
+const TAG_REJECT: u8 = 5;
+const TAG_POLL: u8 = 6;
+const TAG_PENDING: u8 = 7;
+const TAG_DONE: u8 = 8;
+const TAG_BYE: u8 = 9;
+
+/// One serve-protocol message.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ServeMsg {
+    Hello { version: u16 },
+    HelloAck { q: u64 },
+    Submit { tenant: String, query: Query, tol: f64, max_steps: u64 },
+    SubmitAck { id: u64 },
+    Reject { reason: String },
+    Poll { id: u64 },
+    Pending { depth: u64 },
+    Done { resp: Response },
+    Bye,
+}
+
+fn put_u16(out: &mut Vec<u8>, v: u16) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f64(out: &mut Vec<u8>, v: f64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_str(out: &mut Vec<u8>, s: &str) {
+    put_u32(out, s.len() as u32);
+    out.extend_from_slice(s.as_bytes());
+}
+
+fn put_f32s(out: &mut Vec<u8>, xs: &[f32]) {
+    put_u32(out, xs.len() as u32);
+    for x in xs {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+/// Bounds-checked little-endian reader over a payload.
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn new(buf: &'a [u8]) -> Cursor<'a> {
+        Cursor { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.buf.len() {
+            return Err(Error::wire(format!(
+                "serve frame truncated at byte {} (wanted {n} more of {})",
+                self.pos,
+                self.buf.len()
+            )));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn string(&mut self) -> Result<String> {
+        let len = self.u32()? as usize;
+        let bytes = self.take(len)?;
+        String::from_utf8(bytes.to_vec())
+            .map_err(|_| Error::wire("serve frame string is not UTF-8"))
+    }
+
+    fn f32s(&mut self) -> Result<Vec<f32>> {
+        let len = self.u32()? as usize;
+        let bytes = self.take(len.checked_mul(4).ok_or_else(|| {
+            Error::wire("serve frame vector length overflows")
+        })?)?;
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    fn done(&self) -> Result<()> {
+        if self.pos != self.buf.len() {
+            return Err(Error::wire(format!(
+                "serve frame has {} trailing bytes",
+                self.buf.len() - self.pos
+            )));
+        }
+        Ok(())
+    }
+}
+
+fn encode_query(out: &mut Vec<u8>, q: &Query) {
+    match q {
+        Query::Pagerank { seed_node, damping } => {
+            out.push(0);
+            put_u64(out, *seed_node as u64);
+            put_f64(out, *damping);
+        }
+        Query::Matvec { v } => {
+            out.push(1);
+            put_f32s(out, v);
+        }
+        Query::Ridge { b, lambda, eta } => {
+            out.push(2);
+            put_f32s(out, b);
+            put_f64(out, *lambda);
+            put_f64(out, *eta);
+        }
+    }
+}
+
+fn decode_query(c: &mut Cursor) -> Result<Query> {
+    match c.u8()? {
+        0 => Ok(Query::Pagerank {
+            seed_node: c.u64()? as usize,
+            damping: c.f64()?,
+        }),
+        1 => Ok(Query::Matvec { v: c.f32s()? }),
+        2 => Ok(Query::Ridge {
+            b: c.f32s()?,
+            lambda: c.f64()?,
+            eta: c.f64()?,
+        }),
+        k => Err(Error::wire(format!("unknown serve query kind {k}"))),
+    }
+}
+
+impl ServeMsg {
+    /// Serialize into one frame payload (magic + tag + body).
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        put_u32(&mut out, SERVE_MAGIC);
+        match self {
+            ServeMsg::Hello { version } => {
+                out.push(TAG_HELLO);
+                put_u16(&mut out, *version);
+            }
+            ServeMsg::HelloAck { q } => {
+                out.push(TAG_HELLO_ACK);
+                put_u64(&mut out, *q);
+            }
+            ServeMsg::Submit {
+                tenant,
+                query,
+                tol,
+                max_steps,
+            } => {
+                out.push(TAG_SUBMIT);
+                put_str(&mut out, tenant);
+                put_f64(&mut out, *tol);
+                put_u64(&mut out, *max_steps);
+                encode_query(&mut out, query);
+            }
+            ServeMsg::SubmitAck { id } => {
+                out.push(TAG_SUBMIT_ACK);
+                put_u64(&mut out, *id);
+            }
+            ServeMsg::Reject { reason } => {
+                out.push(TAG_REJECT);
+                put_str(&mut out, reason);
+            }
+            ServeMsg::Poll { id } => {
+                out.push(TAG_POLL);
+                put_u64(&mut out, *id);
+            }
+            ServeMsg::Pending { depth } => {
+                out.push(TAG_PENDING);
+                put_u64(&mut out, *depth);
+            }
+            ServeMsg::Done { resp } => {
+                out.push(TAG_DONE);
+                put_u64(&mut out, resp.id);
+                put_str(&mut out, &resp.tenant);
+                put_f32s(&mut out, &resp.answer);
+                put_f64(&mut out, resp.residual);
+                put_u64(&mut out, resp.steps as u64);
+                put_u64(&mut out, resp.latency_ns);
+            }
+            ServeMsg::Bye => out.push(TAG_BYE),
+        }
+        out
+    }
+
+    /// Parse one frame payload.
+    pub fn decode(payload: &[u8]) -> Result<ServeMsg> {
+        let mut c = Cursor::new(payload);
+        let magic = c.u32()?;
+        if magic != SERVE_MAGIC {
+            return Err(Error::wire(format!(
+                "bad serve magic {magic:#010x} (is the peer a worker daemon?)"
+            )));
+        }
+        let msg = match c.u8()? {
+            TAG_HELLO => ServeMsg::Hello { version: c.u16()? },
+            TAG_HELLO_ACK => ServeMsg::HelloAck { q: c.u64()? },
+            TAG_SUBMIT => {
+                let tenant = c.string()?;
+                let tol = c.f64()?;
+                let max_steps = c.u64()?;
+                let query = decode_query(&mut c)?;
+                ServeMsg::Submit {
+                    tenant,
+                    query,
+                    tol,
+                    max_steps,
+                }
+            }
+            TAG_SUBMIT_ACK => ServeMsg::SubmitAck { id: c.u64()? },
+            TAG_REJECT => ServeMsg::Reject { reason: c.string()? },
+            TAG_POLL => ServeMsg::Poll { id: c.u64()? },
+            TAG_PENDING => ServeMsg::Pending { depth: c.u64()? },
+            TAG_DONE => ServeMsg::Done {
+                resp: Response {
+                    id: c.u64()?,
+                    tenant: c.string()?,
+                    answer: c.f32s()?,
+                    residual: c.f64()?,
+                    steps: c.u64()? as usize,
+                    latency_ns: c.u64()?,
+                },
+            },
+            TAG_BYE => ServeMsg::Bye,
+            t => return Err(Error::wire(format!("unknown serve tag {t}"))),
+        };
+        c.done()?;
+        Ok(msg)
+    }
+}
+
+/// Send one message as a frame.
+pub fn send_msg<W: Write>(w: &mut W, msg: &ServeMsg) -> Result<()> {
+    write_frame(w, &msg.encode())
+}
+
+/// Receive one message frame.
+pub fn recv_msg<R: Read>(r: &mut R) -> Result<ServeMsg> {
+    ServeMsg::decode(&read_frame(r)?)
+}
+
+/// Client side of the serve protocol.
+pub struct ServeClient {
+    stream: TcpStream,
+    /// Rows of the server's serve matrix (from the handshake).
+    pub q: usize,
+}
+
+impl ServeClient {
+    /// Dial a `usec serve --listen` server and shake hands.
+    pub fn connect(addr: &str) -> Result<ServeClient> {
+        let mut stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true).ok();
+        send_msg(
+            &mut stream,
+            &ServeMsg::Hello {
+                version: SERVE_VERSION,
+            },
+        )?;
+        match recv_msg(&mut stream)? {
+            ServeMsg::HelloAck { q } => Ok(ServeClient {
+                stream,
+                q: q as usize,
+            }),
+            other => Err(Error::wire(format!(
+                "expected HelloAck, got {other:?}"
+            ))),
+        }
+    }
+
+    /// Submit a request; a full queue surfaces as [`Error::Busy`].
+    pub fn submit(
+        &mut self,
+        tenant: &str,
+        query: Query,
+        tol: f64,
+        max_steps: usize,
+    ) -> Result<u64> {
+        send_msg(
+            &mut self.stream,
+            &ServeMsg::Submit {
+                tenant: tenant.to_string(),
+                query,
+                tol,
+                max_steps: max_steps as u64,
+            },
+        )?;
+        match recv_msg(&mut self.stream)? {
+            ServeMsg::SubmitAck { id } => Ok(id),
+            ServeMsg::Reject { reason } => Err(Error::busy(reason)),
+            other => Err(Error::wire(format!(
+                "expected SubmitAck/Reject, got {other:?}"
+            ))),
+        }
+    }
+
+    /// Poll a submitted request once.
+    pub fn poll(&mut self, id: u64) -> Result<Option<Response>> {
+        send_msg(&mut self.stream, &ServeMsg::Poll { id })?;
+        match recv_msg(&mut self.stream)? {
+            ServeMsg::Done { resp } => Ok(Some(resp)),
+            ServeMsg::Pending { .. } => Ok(None),
+            other => Err(Error::wire(format!(
+                "expected Done/Pending, got {other:?}"
+            ))),
+        }
+    }
+
+    /// Poll until the request completes or `timeout` elapses.
+    pub fn wait(&mut self, id: u64, timeout: Duration) -> Result<Response> {
+        let deadline = Instant::now() + timeout;
+        loop {
+            if let Some(resp) = self.poll(id)? {
+                return Ok(resp);
+            }
+            if Instant::now() >= deadline {
+                return Err(Error::Cluster(format!(
+                    "request {id} still pending after {timeout:?}"
+                )));
+            }
+            std::thread::sleep(Duration::from_millis(2));
+        }
+    }
+
+    /// Polite goodbye (errors ignored; the server also survives EOF).
+    pub fn bye(mut self) {
+        let _ = send_msg(&mut self.stream, &ServeMsg::Bye);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(msg: ServeMsg) {
+        let bytes = msg.encode();
+        assert_eq!(ServeMsg::decode(&bytes).unwrap(), msg);
+    }
+
+    #[test]
+    fn all_messages_roundtrip() {
+        roundtrip(ServeMsg::Hello {
+            version: SERVE_VERSION,
+        });
+        roundtrip(ServeMsg::HelloAck { q: 1536 });
+        roundtrip(ServeMsg::Submit {
+            tenant: "alice".into(),
+            query: Query::Pagerank {
+                seed_node: 7,
+                damping: 0.85,
+            },
+            tol: 1e-6,
+            max_steps: 100,
+        });
+        roundtrip(ServeMsg::Submit {
+            tenant: "bob".into(),
+            query: Query::Matvec {
+                v: vec![1.0, -2.5, 3.25],
+            },
+            tol: 0.0,
+            max_steps: 1,
+        });
+        roundtrip(ServeMsg::Submit {
+            tenant: "carol".into(),
+            query: Query::Ridge {
+                b: vec![0.5; 4],
+                lambda: 3.0,
+                eta: 0.13,
+            },
+            tol: 1e-7,
+            max_steps: 300,
+        });
+        roundtrip(ServeMsg::SubmitAck { id: 42 });
+        roundtrip(ServeMsg::Reject {
+            reason: "admission queue full".into(),
+        });
+        roundtrip(ServeMsg::Poll { id: 42 });
+        roundtrip(ServeMsg::Pending { depth: 3 });
+        roundtrip(ServeMsg::Done {
+            resp: Response {
+                id: 42,
+                tenant: "alice".into(),
+                answer: vec![0.25, 0.75],
+                residual: 1e-9,
+                steps: 57,
+                latency_ns: 1_234_567,
+            },
+        });
+        roundtrip(ServeMsg::Bye);
+    }
+
+    #[test]
+    fn rejects_wrong_magic_and_garbage() {
+        // a worker-codec frame must not parse as a serve message
+        let mut bytes = ServeMsg::Bye.encode();
+        bytes[0] ^= 0xFF;
+        assert!(ServeMsg::decode(&bytes).is_err());
+        assert!(ServeMsg::decode(&[]).is_err());
+        // truncated submit
+        let full = ServeMsg::Submit {
+            tenant: "t".into(),
+            query: Query::Matvec { v: vec![1.0; 8] },
+            tol: 1e-6,
+            max_steps: 10,
+        }
+        .encode();
+        assert!(ServeMsg::decode(&full[..full.len() - 3]).is_err());
+        // trailing bytes
+        let mut padded = ServeMsg::Poll { id: 1 }.encode();
+        padded.push(0);
+        assert!(ServeMsg::decode(&padded).is_err());
+        // unknown tag
+        let mut bad = ServeMsg::Bye.encode();
+        bad[4] = 200;
+        assert!(ServeMsg::decode(&bad).is_err());
+    }
+}

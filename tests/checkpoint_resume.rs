@@ -16,10 +16,11 @@ fn tmp_ckpt(tag: &str) -> PathBuf {
     std::env::temp_dir().join(format!("usec-resume-{tag}-{}.ckpt", std::process::id()))
 }
 
-/// A deterministic mid-size run: no injected stragglers and no random
-/// preemption, so the resumed half sees the exact world the killed
-/// master would have seen (the injected-straggler RNG cannot be
-/// replayed across a resume — a documented caveat).
+/// A deterministic mid-size run with no random preemption, so the
+/// resumed half sees the exact world the killed master would have seen.
+/// Injected stragglers are fine too: victims are drawn from an RNG
+/// derived from `(seed, step)`, so a resume replays the same schedule
+/// (see `injected_straggler_schedule_replays_across_a_resume`).
 fn base_config() -> RunConfig {
     RunConfig {
         q: 96,
@@ -166,6 +167,44 @@ fn killed_block_master_resumes_to_the_oracle_answer() {
 #[test]
 fn killed_pipelined_master_resumes_to_the_oracle_answer() {
     kill_and_resume("pipelined", 1, true);
+}
+
+/// Regression: the injected-straggler RNG is keyed by `(seed, step)`,
+/// not by a mutable stream, so a resumed master picks the exact victims
+/// the uninterrupted run would have picked — metrics and the answer
+/// line up step for step even with stragglers injected every step.
+#[test]
+fn injected_straggler_schedule_replays_across_a_resume() {
+    let path = tmp_ckpt("stragglers");
+    let kill_at = 4;
+
+    let mut oracle_cfg = base_config();
+    oracle_cfg.stragglers = 1;
+    oracle_cfg.injected_stragglers = 1;
+    let oracle = usec::apps::run_power_iteration(&oracle_cfg).unwrap();
+
+    let mut first = oracle_cfg.clone();
+    first.steps = kill_at;
+    first.checkpoint_out = path.display().to_string();
+    usec::apps::run_power_iteration(&first).unwrap();
+
+    let mut second = oracle_cfg.clone();
+    second.resume = path.display().to_string();
+    let resumed = usec::apps::run_power_iteration(&second).unwrap();
+
+    let diff = max_abs_diff(&resumed.eigvec, &oracle.eigvec);
+    assert!(diff <= 1e-5, "straggler schedule diverged on resume: {diff}");
+    for (r, o) in resumed
+        .timeline
+        .steps()
+        .iter()
+        .zip(&oracle.timeline.steps()[kill_at..])
+    {
+        assert_eq!(r.step, o.step);
+        assert_eq!(r.stragglers, o.stragglers, "step {}", r.step);
+        assert!((r.metric - o.metric).abs() <= 1e-9, "step {}", r.step);
+    }
+    let _ = std::fs::remove_file(&path);
 }
 
 #[test]

@@ -1,0 +1,184 @@
+//! Acceptance: a resident 3-worker TCP cluster serves two tenants'
+//! concurrent requests — every batched answer matches a dedicated
+//! single-job oracle, a worker killed mid-serve is absorbed (recovery
+//! armed, full replication), and the `--json-out` style dump carries
+//! the per-request latency quantiles.
+
+use std::net::TcpListener;
+use std::thread::JoinHandle;
+
+use usec::config::types::RunConfig;
+use usec::error::Result;
+use usec::net::daemon::{serve_worker, DaemonOpts};
+use usec::net::AnyTransport;
+use usec::placement::PlacementKind;
+use usec::sched::RecoveryPolicy;
+use usec::serve::{Query, ServeSession, SessionOpts};
+
+const Q: usize = 48;
+const SEED: u64 = 17;
+
+/// Spawn `n` worker daemons on ephemeral loopback ports.
+fn start_workers(n: usize) -> (Vec<String>, Vec<JoinHandle<Result<()>>>) {
+    let mut addrs = Vec::new();
+    let mut handles = Vec::new();
+    for _ in 0..n {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        addrs.push(listener.local_addr().unwrap().to_string());
+        handles.push(std::thread::spawn(move || {
+            serve_worker(
+                listener,
+                DaemonOpts {
+                    max_sessions: 1,
+                    ..Default::default()
+                },
+            )
+        }));
+    }
+    (addrs, handles)
+}
+
+/// Full replication (cyclic J=3 of G=3) with S=1: one worker can die
+/// mid-serve and every serve-matrix row keeps a live replica. The serve
+/// matrix has no generator seed, so distributed sessions stream rows.
+fn serve_cfg(workers: Vec<String>) -> RunConfig {
+    RunConfig {
+        q: Q,
+        r: Q,
+        g: 3,
+        j: 3,
+        n: 3,
+        placement: PlacementKind::Cyclic,
+        stragglers: 1,
+        steps: 1,
+        speeds: vec![1.0, 1.0, 1.0],
+        seed: SEED,
+        stream_data: !workers.is_empty(),
+        recovery: RecoveryPolicy::enabled(),
+        workers,
+        ..Default::default()
+    }
+}
+
+fn max_abs_diff(a: &[f32], b: &[f32]) -> f64 {
+    a.iter()
+        .zip(b)
+        .map(|(&x, &y)| (x as f64 - y as f64).abs())
+        .fold(0.0, f64::max)
+}
+
+#[test]
+fn tcp_cluster_serves_two_tenants_and_absorbs_a_mid_serve_kill() {
+    let (addrs, handles) = start_workers(3);
+
+    let cfg = serve_cfg(addrs);
+    let mut session = ServeSession::build(&cfg, &SessionOpts::default()).unwrap();
+
+    // two tenants, three concurrent requests across all query kinds
+    let queries = [
+        (
+            "alice",
+            Query::Pagerank {
+                seed_node: 3,
+                damping: 0.85,
+            },
+            1e-9,
+            200,
+        ),
+        (
+            "bob",
+            Query::Matvec {
+                v: (0..Q).map(|i| (i as f32).sin()).collect(),
+            },
+            1e-6,
+            1,
+        ),
+        (
+            "bob",
+            Query::Ridge {
+                b: (0..Q).map(|i| if i % 2 == 0 { 1.0 } else { -1.0 }).collect(),
+                lambda: 3.0,
+                eta: 0.13,
+            },
+            1e-7,
+            300,
+        ),
+    ];
+    let mut ids = Vec::new();
+    for (tenant, query, tol, max_steps) in &queries {
+        ids.push(
+            session
+                .submit(tenant, query.clone(), *tol, *max_steps)
+                .unwrap(),
+        );
+    }
+
+    // serve a few steps healthy, then kill a worker's socket mid-serve
+    let mut responses = Vec::new();
+    for _ in 0..3 {
+        responses.extend(session.step_once().unwrap());
+    }
+    match &session.engine().transport {
+        AnyTransport::Tcp(t) => t.kill(2),
+        _ => panic!("expected a TCP transport"),
+    }
+    responses.extend(session.run_until_drained(2000).unwrap());
+    assert_eq!(responses.len(), queries.len());
+
+    // every answer matches a dedicated single-job oracle: the same
+    // request, alone, on its own single-process cluster
+    for ((tenant, query, tol, max_steps), id) in queries.iter().zip(&ids) {
+        let got = responses.iter().find(|r| r.id == *id).unwrap();
+        assert_eq!(&got.tenant, tenant);
+        let solo_cfg = serve_cfg(vec![]);
+        let mut solo = ServeSession::build(&solo_cfg, &SessionOpts::default()).unwrap();
+        solo.submit(tenant, query.clone(), *tol, *max_steps).unwrap();
+        let solo_resp = solo.run_until_drained(2000).unwrap();
+        solo.finish().unwrap();
+        assert_eq!(solo_resp.len(), 1);
+        let diff = max_abs_diff(&got.answer, &solo_resp[0].answer);
+        assert!(
+            diff <= 1e-5,
+            "{} answer diverged from its dedicated oracle after the kill: {diff}",
+            query.kind()
+        );
+    }
+
+    // the kill is visible in the timeline: availability drops to 2 and
+    // serving continued regardless
+    let tl = session.finish().unwrap();
+    let avail: Vec<usize> = tl.steps().iter().map(|s| s.available).collect();
+    assert_eq!(avail[0], 3, "healthy steps saw all three workers");
+    assert_eq!(
+        *avail.last().unwrap(),
+        2,
+        "post-kill steps run on the survivors: {avail:?}"
+    );
+
+    // the --json-out style dump carries the request-plane quantiles
+    let summary = tl.serve().expect("serve summary attached");
+    assert_eq!(summary.requests, queries.len() as u64);
+    assert!(summary.latency_p99_ns >= summary.latency_p50_ns);
+    let path = std::env::temp_dir().join(format!(
+        "usec-serve-int-{}.json",
+        std::process::id()
+    ));
+    std::fs::write(&path, format!("{}\n", tl.to_json())).unwrap();
+    let dump = std::fs::read_to_string(&path).unwrap();
+    for key in [
+        "\"requests\":",
+        "\"latency_p50_ns\":",
+        "\"latency_p99_ns\":",
+        "\"queue_depth\":",
+        "\"rows_per_s\":",
+    ] {
+        assert!(dump.contains(key), "dump is missing {key}");
+    }
+    let _ = std::fs::remove_file(&path);
+
+    // daemons: worker 2's session died with the kill, 0 and 1 were shut
+    // down by the engine drain — all three daemon threads exit
+    for h in handles {
+        h.join().unwrap().unwrap();
+    }
+}
