@@ -49,6 +49,7 @@ fn run_once(b: usize, m: usize, steps_per_req: usize) -> (Duration, ServeSummary
         queue_cap: m.max(64),
         quantum: 1,
         max_width: b,
+        ..Default::default()
     };
     let mut session = ServeSession::build(&cfg(), &opts).unwrap();
     for i in 0..m {

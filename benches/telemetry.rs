@@ -1,0 +1,210 @@
+//! Telemetry-plane overhead benchmark: the live exporter must be
+//! near-free for the process being watched.
+//!
+//! Three angles, coarsest first:
+//!
+//! * **End-to-end**: the same serve-session drain with the telemetry
+//!   plane off vs on — "on" means a real [`MetricsServer`] bound on
+//!   loopback with a background scraper hammering `/metrics` the whole
+//!   time, so the number includes both the publish stores on the step
+//!   loop and any scrape-side contention on the snapshot mutexes. The
+//!   acceptance bar is <1% step-loop overhead.
+//! * **Publish hot path**: one per-step counter publication
+//!   (`Registry::add_order` + whole-snapshot republish into
+//!   [`Telemetry::set_counters`]) and one rolling-histogram latency
+//!   push — the two writes a serving step actually performs.
+//! * **Scrape render**: one `/metrics` text exposition render of a
+//!   populated telemetry handle (readers pay this, not the step loop).
+//!
+//! Run: `cargo bench --bench telemetry [-- --smoke] [-- --json PATH]`
+//! Results land as machine-readable JSON (default `BENCH_telemetry.json`).
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use usec::config::types::RunConfig;
+use usec::engine::EngineState;
+use usec::metrics::RollingHistogram;
+use usec::obs::{http_get, render_prometheus, MetricsServer, Registry, Telemetry};
+use usec::serve::{Query, ServeSession, SessionOpts};
+use usec::util::benchkit::Bench;
+
+const Q: usize = 96;
+
+fn cfg() -> RunConfig {
+    RunConfig {
+        q: Q,
+        r: Q,
+        g: 3,
+        j: 2,
+        n: 3,
+        steps: 1,
+        speeds: vec![1.0, 2.0, 3.0],
+        seed: 31,
+        ..Default::default()
+    }
+}
+
+/// Drain `m` requests (each riding `steps_per_req` steps) through a
+/// resident session, optionally publishing into a telemetry handle.
+fn run_once(m: usize, steps_per_req: usize, tel: Option<Arc<Telemetry>>) -> Duration {
+    let opts = SessionOpts {
+        queue_cap: m.max(64),
+        quantum: 1,
+        max_width: 8,
+        ..Default::default()
+    };
+    let mut session = ServeSession::build(&cfg(), &opts).unwrap();
+    if tel.is_some() {
+        session.set_telemetry(tel);
+    }
+    for i in 0..m {
+        session
+            .submit(
+                &format!("tenant{}", i % 3),
+                Query::Pagerank {
+                    seed_node: (7 * i) % Q,
+                    damping: 0.85,
+                },
+                0.0, // never converges early: every request rides the full budget
+                steps_per_req,
+            )
+            .unwrap();
+    }
+    let t0 = Instant::now();
+    let responses = session.run_until_drained(2 * m * steps_per_req + 16).unwrap();
+    let wall = t0.elapsed();
+    assert_eq!(responses.len(), m);
+    wall
+}
+
+/// A telemetry handle populated the way a live 3-worker serve looks,
+/// so the render benchmark emits every metric family.
+fn populated_telemetry() -> Arc<Telemetry> {
+    let tel = Arc::new(Telemetry::new(3, 2));
+    tel.set_state(EngineState::Stepping);
+    tel.set_coverage_ok(true);
+    tel.set_alive(&[true, true, false]);
+    for w in 0..3 {
+        tel.set_speed(w, 1.0 + w as f64);
+    }
+    tel.set_resident(&[4096, 4096, 4096]);
+    let reg = Registry::new(3);
+    for i in 0..50usize {
+        reg.add_order(i % 3, 32);
+    }
+    tel.set_counters(reg.snapshot(&[]));
+    tel
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let smoke = args.iter().any(|a| a == "--smoke");
+    let json_path = args
+        .iter()
+        .position(|a| a == "--json")
+        .and_then(|i| args.get(i + 1))
+        .map(String::as_str)
+        .unwrap_or("BENCH_telemetry.json")
+        .to_string();
+    let (m, steps_per_req, budget, iters) = if smoke {
+        (6, 4, Duration::from_millis(100), 1)
+    } else {
+        (24, 12, Duration::from_secs(2), 5)
+    };
+    let mut bench = Bench::with_budget(budget, iters);
+
+    let mut off_wall = Duration::MAX;
+    bench.run_units(
+        &format!("serve drain exporter off ({m} reqs x {steps_per_req} steps)"),
+        m as f64,
+        || {
+            let wall = run_once(m, steps_per_req, None);
+            if wall < off_wall {
+                off_wall = wall;
+            }
+            wall.as_secs_f64()
+        },
+    );
+
+    // exporter on: real scrape endpoint plus a background scraper
+    // polling it as fast as it can for the whole measured window
+    let tel = Arc::new(Telemetry::new(cfg().n, cfg().j));
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").expect("bind loopback");
+    let srv = MetricsServer::spawn(listener, Arc::clone(&tel)).expect("metrics server");
+    let addr = srv.addr().to_string();
+    let stop = Arc::new(AtomicBool::new(false));
+    let scraper = {
+        let stop = Arc::clone(&stop);
+        let addr = addr.clone();
+        std::thread::spawn(move || {
+            let mut scrapes = 0u64;
+            while !stop.load(Ordering::Relaxed) {
+                if http_get(&addr, "/metrics", Duration::from_secs(1)).is_ok() {
+                    scrapes += 1;
+                }
+            }
+            scrapes
+        })
+    };
+    let mut on_wall = Duration::MAX;
+    bench.run_units(
+        &format!("serve drain exporter on+scraped ({m} reqs x {steps_per_req} steps)"),
+        m as f64,
+        || {
+            let wall = run_once(m, steps_per_req, Some(Arc::clone(&tel)));
+            if wall < on_wall {
+                on_wall = wall;
+            }
+            wall.as_secs_f64()
+        },
+    );
+    stop.store(true, Ordering::Relaxed);
+    let scrapes = scraper.join().unwrap_or(0);
+    srv.stop();
+
+    // publish hot path: what one serving step writes into the plane
+    {
+        let tel = populated_telemetry();
+        let reg = Registry::new(3);
+        let mut i = 0usize;
+        bench.run("counter publish (add_order + set_counters)", || {
+            reg.add_order(i % 3, 32);
+            tel.set_counters(reg.snapshot(&[]));
+            i += 1;
+            i
+        });
+    }
+    {
+        let mut hist = RollingHistogram::new(Duration::from_secs(10), 10);
+        let mut i = 0u64;
+        bench.run("rolling histogram push (one latency sample)", || {
+            i += 1;
+            hist.push((i % 997) as f64 * 1e4);
+            hist.count()
+        });
+    }
+
+    // scrape render: the full /metrics text of a populated handle
+    {
+        let tel = populated_telemetry();
+        bench.run("render /metrics exposition", || render_prometheus(&tel).len());
+    }
+
+    println!("{}", bench.table());
+    let overhead = if off_wall < Duration::MAX && off_wall.as_secs_f64() > 0.0 {
+        (on_wall.as_secs_f64() - off_wall.as_secs_f64()) / off_wall.as_secs_f64() * 100.0
+    } else {
+        f64::NAN
+    };
+    println!(
+        "best drain: exporter off {off_wall:?} vs on {on_wall:?} \
+         ({overhead:+.2}% overhead under {scrapes} concurrent scrapes)"
+    );
+
+    match Bench::write_json(&[&bench], &json_path) {
+        Ok(()) => println!("wrote {json_path}"),
+        Err(e) => eprintln!("could not write {json_path}: {e}"),
+    }
+}

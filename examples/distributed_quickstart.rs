@@ -364,6 +364,7 @@ fn main() {
                 exit_after: 2,
                 idle_ms: 0,
                 session: SessionOpts::default(),
+                ..Default::default()
             },
         )
     });

@@ -2,6 +2,7 @@
 //! `usec` binary's subcommand dispatch.
 
 pub mod args;
+pub mod top;
 
 pub use args::{ArgSpec, Args};
 
@@ -19,6 +20,7 @@ pub fn dispatch(argv: &[String]) -> Result<()> {
         "solve" => crate::exp::solve_cli(rest),
         "serve" => crate::serve::serve_cli(rest),
         "trace" => crate::obs::trace_cli(rest),
+        "top" => top::top_cli(rest),
         "help" | "--help" | "-h" => {
             println!("{}", top_help());
             Ok(())
@@ -40,6 +42,7 @@ fn top_help() -> String {
          \x20 solve   solve one assignment instance and print M*\n\
          \x20 serve   resident multi-tenant request server (--listen) or client (--connect)\n\
          \x20 trace   convert a --trace-out journal to Chrome trace JSON (--summary for sinks)\n\
+         \x20 top     refreshing cluster view over a --metrics-listen endpoint (--connect)\n\
          \x20 help    this text\n\n",
     );
     s.push_str(&args::help_text(

@@ -1,0 +1,274 @@
+//! `usec top`: a refreshing cluster view over a scrape endpoint.
+//!
+//! Polls `/metrics` of a `--metrics-listen` endpoint (`usec serve` or
+//! `usec worker`) and renders the parsed samples as per-worker and
+//! per-tenant tables: engine state, readiness, worker speeds and
+//! resident bytes, in-flight orders, latency quantiles, fault counts.
+//! Rates (orders/s, steps/s) come from differencing two consecutive
+//! scrapes, so the first frame shows totals only.
+//!
+//! `--iterations N` bounds the refresh loop (tests and one-shot
+//! inspection); the default refreshes until interrupted.
+
+use std::time::Duration;
+
+use crate::cli::args::{self, ArgSpec, Args};
+use crate::error::{Error, Result};
+use crate::obs::expose::sample_value;
+use crate::obs::{http_get, parse_prometheus, Sample};
+use crate::util::fmt;
+
+fn top_specs() -> Vec<ArgSpec> {
+    vec![
+        ArgSpec::opt("connect", "", "scrape endpoint host:port (required)"),
+        ArgSpec::opt("interval-ms", "1000", "refresh period"),
+        ArgSpec::opt("iterations", "0", "exit after N refreshes (0 = until interrupted)"),
+        ArgSpec::flag("no-clear", "append frames instead of clearing the screen"),
+    ]
+}
+
+fn fmt_val(v: f64) -> String {
+    if v.is_nan() {
+        "-".to_string()
+    } else if v == v.trunc() && v.abs() < 1e15 {
+        format!("{v:.0}")
+    } else {
+        format!("{v:.2}")
+    }
+}
+
+fn fmt_ms(ns: f64) -> String {
+    if ns.is_nan() {
+        "-".to_string()
+    } else {
+        format!("{:.3}", ns / 1e6)
+    }
+}
+
+/// Sorted distinct values of `label` across samples named `name`.
+fn label_values(samples: &[Sample], name: &str, label: &str) -> Vec<String> {
+    let mut vals: Vec<String> = samples
+        .iter()
+        .filter(|s| s.name == name)
+        .filter_map(|s| s.label(label).map(str::to_string))
+        .collect();
+    vals.sort();
+    vals.dedup();
+    vals
+}
+
+/// One rendered frame. `prev` is the previous scrape (for rates) and
+/// `dt_s` the seconds between the two.
+fn render_top(samples: &[Sample], prev: Option<&[Sample]>, dt_s: f64) -> String {
+    let get = |name: &str| sample_value(samples, name, None).unwrap_or(f64::NAN);
+    let rate = |name: &str, label: Option<(&str, &str)>| -> f64 {
+        let (Some(p), true) = (prev, dt_s > 0.0) else {
+            return f64::NAN;
+        };
+        match (
+            sample_value(samples, name, label),
+            sample_value(p, name, label),
+        ) {
+            (Some(now), Some(before)) => (now - before).max(0.0) / dt_s,
+            _ => f64::NAN,
+        }
+    };
+
+    let state = samples
+        .iter()
+        .find(|s| s.name == "usec_engine_state" && s.value == 1.0)
+        .and_then(|s| s.label("state").map(str::to_string))
+        .unwrap_or_else(|| "?".to_string());
+    let mut out = format!(
+        "state {state}  ready {}  workers {}/{}  steps {} ({}/s)  \
+         faults {}  retries {}\n",
+        if get("usec_ready") == 1.0 { "yes" } else { "NO" },
+        fmt_val(get("usec_workers_alive")),
+        fmt_val(get("usec_workers")),
+        fmt_val(get("usec_steps_total")),
+        fmt_val(rate("usec_steps_total", None)),
+        fmt_val(get("usec_faults_total")),
+        fmt_val(get("usec_retries_total")),
+    );
+
+    let workers = label_values(samples, "usec_worker_alive", "worker");
+    if !workers.is_empty() {
+        let rows: Vec<Vec<String>> = workers
+            .iter()
+            .map(|w| {
+                let l = Some(("worker", w.as_str()));
+                let pick = |name: &str| {
+                    sample_value(samples, name, l).unwrap_or(f64::NAN)
+                };
+                vec![
+                    w.clone(),
+                    if pick("usec_worker_alive") == 1.0 { "up" } else { "DOWN" }.to_string(),
+                    fmt_val(pick("usec_worker_speed")),
+                    fmt_val(pick("usec_worker_resident_bytes")),
+                    fmt_val(pick("usec_worker_orders_total")),
+                    fmt_val(rate("usec_worker_orders_total", l)),
+                    fmt_val(pick("usec_worker_rows_total")),
+                    fmt_val(pick("usec_worker_recoveries_total")),
+                    fmt_val(pick("usec_worker_migrations_total")),
+                ]
+            })
+            .collect();
+        out.push('\n');
+        out.push_str(&fmt::render_table(
+            &[
+                "worker", "state", "speed", "resident_b", "orders", "orders/s", "rows",
+                "recoveries", "migrations",
+            ],
+            &rows,
+        ));
+    }
+
+    let tenants = label_values(samples, "usec_tenant_requests_total", "tenant");
+    if !tenants.is_empty() {
+        out.push_str(&format!(
+            "\nqueue depth {}  batch width {}  slo healthy {}  burns {}\n\n",
+            fmt_val(get("usec_queue_depth")),
+            fmt_val(get("usec_batch_width")),
+            if get("usec_slo_healthy") == 1.0 { "yes" } else { "NO" },
+            fmt_val(get("usec_slo_burns_total")),
+        ));
+        let rows: Vec<Vec<String>> = tenants
+            .iter()
+            .map(|t| {
+                let l = Some(("tenant", t.as_str()));
+                let pick = |name: &str| {
+                    sample_value(samples, name, l).unwrap_or(f64::NAN)
+                };
+                let q = |quant: &str| {
+                    samples
+                        .iter()
+                        .find(|s| {
+                            s.name == "usec_tenant_latency_ns"
+                                && s.label("tenant") == Some(t.as_str())
+                                && s.label("quantile") == Some(quant)
+                        })
+                        .map_or(f64::NAN, |s| s.value)
+                };
+                vec![
+                    t.clone(),
+                    fmt_val(pick("usec_tenant_requests_total")),
+                    fmt_val(pick("usec_tenant_rejects_total")),
+                    fmt_val(pick("usec_tenant_inflight")),
+                    fmt_val(pick("usec_tenant_queue_depth")),
+                    fmt_ms(q("0.5")),
+                    fmt_ms(q("0.99")),
+                    fmt_val(pick("usec_tenant_rows_per_s")),
+                    if pick("usec_slo_healthy") == 1.0 { "yes" } else { "NO" }.to_string(),
+                ]
+            })
+            .collect();
+        out.push_str(&fmt::render_table(
+            &[
+                "tenant", "requests", "rejects", "inflight", "queued", "p50_ms", "p99_ms",
+                "rows/s", "healthy",
+            ],
+            &rows,
+        ));
+    }
+    out
+}
+
+/// `usec top --connect host:port [--interval-ms N] [--iterations N]`.
+pub fn top_cli(argv: &[String]) -> Result<()> {
+    let a = Args::parse(argv, &top_specs())?;
+    let addr = a.get("connect").unwrap_or("").to_string();
+    if addr.is_empty() {
+        println!(
+            "{}",
+            args::help_text(
+                "usec top --connect host:port",
+                "refreshing cluster view over a --metrics-listen endpoint",
+                &top_specs(),
+            )
+        );
+        return Err(Error::Config("usec top needs --connect host:port".into()));
+    }
+    let interval = Duration::from_millis(a.get_u64("interval-ms")?.max(10));
+    let iterations = a.get_usize("iterations")?;
+    let mut prev: Option<Vec<Sample>> = None;
+    let mut frames = 0usize;
+    loop {
+        let (code, body) = http_get(&addr, "/metrics", Duration::from_secs(5))?;
+        if code != 200 {
+            return Err(Error::Cluster(format!(
+                "scrape of {addr} returned HTTP {code}"
+            )));
+        }
+        let samples = parse_prometheus(&body)?;
+        let frame = render_top(&samples, prev.as_deref(), interval.as_secs_f64());
+        if !a.has("no-clear") {
+            // ANSI clear + home, like watch(1)
+            print!("\x1b[2J\x1b[H");
+        }
+        println!("usec top — {addr}\n{frame}");
+        prev = Some(samples);
+        frames += 1;
+        if iterations > 0 && frames >= iterations {
+            return Ok(());
+        }
+        std::thread::sleep(interval);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scrape(text: &str) -> Vec<Sample> {
+        parse_prometheus(text).unwrap()
+    }
+
+    #[test]
+    fn renders_worker_and_tenant_tables() {
+        let now = scrape(
+            "usec_ready 1\n\
+             usec_engine_state{state=\"stepping\"} 1\n\
+             usec_workers 3\n\
+             usec_workers_alive 2\n\
+             usec_steps_total 40\n\
+             usec_worker_alive{worker=\"0\"} 1\n\
+             usec_worker_alive{worker=\"1\"} 0\n\
+             usec_worker_speed{worker=\"0\"} 2.5\n\
+             usec_worker_orders_total{worker=\"0\"} 12\n\
+             usec_queue_depth 3\n\
+             usec_batch_width 2\n\
+             usec_slo_healthy 0\n\
+             usec_tenant_requests_total{tenant=\"alice\"} 7\n\
+             usec_tenant_latency_ns{tenant=\"alice\",quantile=\"0.5\"} 2000000\n\
+             usec_slo_healthy{tenant=\"alice\"} 0\n",
+        );
+        let prev = scrape(
+            "usec_steps_total 30\n\
+             usec_worker_orders_total{worker=\"0\"} 2\n",
+        );
+        let s = render_top(&now, Some(&prev), 2.0);
+        assert!(s.contains("state stepping"), "{s}");
+        assert!(s.contains("workers 2/3"));
+        // rates: (40-30)/2 steps/s, (12-2)/2 orders/s
+        assert!(s.contains("(5/s)"), "{s}");
+        let w0 = s.lines().find(|l| l.starts_with('0')).unwrap();
+        assert!(w0.contains("up") && w0.contains("2.5") && w0.contains('5'), "{w0}");
+        let w1 = s.lines().find(|l| l.starts_with('1')).unwrap();
+        assert!(w1.contains("DOWN"), "{w1}");
+        let alice = s.lines().find(|l| l.starts_with("alice")).unwrap();
+        assert!(alice.contains('7') && alice.contains("2.000") && alice.contains("NO"), "{alice}");
+        assert!(s.contains("queue depth 3"));
+    }
+
+    #[test]
+    fn first_frame_has_no_rates() {
+        let now = scrape("usec_ready 1\nusec_steps_total 5\nusec_workers 1\n");
+        let s = render_top(&now, None, 1.0);
+        assert!(s.contains("(-/s)"), "rates dashed without a prior scrape: {s}");
+    }
+
+    #[test]
+    fn cli_requires_connect() {
+        assert!(top_cli(&[]).is_err());
+    }
+}

@@ -46,7 +46,9 @@ use crate::net::{
     AnyTransport, ChaosSpec, ChaosTransport, Hello, LocalTransport, TcpOptions, TcpPeer,
     TcpTransport, Transport, WorkloadSpec, DEFAULT_HEARTBEAT_MS, WIRE_VERSION,
 };
-use crate::obs::{CounterSnapshot, Event, EventKind, Journal, OrderStat, Recorder, Registry};
+use crate::obs::{
+    CounterSnapshot, Event, EventKind, Journal, OrderStat, Recorder, Registry, Telemetry,
+};
 use crate::placement::{Placement, PlacementKind};
 use crate::rebalance::{MigrationRecord, Rebalancer};
 use crate::runtime::{Backend, BackendSpec};
@@ -84,6 +86,10 @@ pub struct ClusterEngine {
     /// Per-worker counters, shared with the master; snapshotted into every
     /// [`StepRecord`] while tracing is on.
     registry: Option<Arc<Registry>>,
+    /// Live telemetry handle (`--metrics-listen`): state, liveness,
+    /// coverage, and per-worker gauges are published here at step
+    /// boundaries for the scrape endpoint. `None` ⇒ zero overhead.
+    telemetry: Option<Arc<Telemetry>>,
     /// Previous step's transport liveness, to count dead→alive
     /// re-admissions as reconnects.
     prev_alive: Vec<bool>,
@@ -460,6 +466,7 @@ impl ClusterEngine {
             journal,
             recorder,
             registry,
+            telemetry: None,
             prev_alive,
             dial_policy: RetryPolicy::dial(),
             dial_states: (0..cfg.n)
@@ -477,6 +484,68 @@ impl ClusterEngine {
     /// Where the engine is in its lifecycle (between public calls).
     pub fn state(&self) -> EngineState {
         self.state
+    }
+
+    /// Attach (or detach) a live telemetry handle. With one attached the
+    /// engine publishes its state machine, transport liveness, coverage,
+    /// per-worker speed/resident gauges, and counter snapshots at every
+    /// step boundary — and a counter [`Registry`] is wired into the
+    /// master even when `--trace-out` is off, so `usec_worker_*_total`
+    /// series exist without the journal. `None` (the default) skips all
+    /// of it.
+    pub fn set_telemetry(&mut self, tel: Option<Arc<Telemetry>>) {
+        if let Some(t) = &tel {
+            if self.registry.is_none() {
+                let registry = Arc::new(Registry::new(self.cfg.n));
+                self.master.set_registry(Arc::clone(&registry));
+                self.registry = Some(registry);
+            }
+            t.set_state(self.state);
+            t.set_alive(&self.transport.alive());
+            t.set_resident(&self.transport.resident_bytes());
+            for (w, s) in self.master.speed_estimate().iter().enumerate() {
+                t.set_speed(w, *s);
+            }
+        }
+        self.telemetry = tel;
+    }
+
+    /// The attached telemetry handle, if any.
+    pub fn telemetry(&self) -> Option<&Arc<Telemetry>> {
+        self.telemetry.as_ref()
+    }
+
+    /// A cloned journal recorder, when `--trace-out` is on — lets the
+    /// serve plane journal its own events (e.g. `slo_burn`) into the
+    /// same JSONL stream.
+    pub fn recorder_handle(&self) -> Option<Recorder> {
+        self.recorder.clone()
+    }
+
+    /// Publish the lifecycle state to the telemetry plane (no-op when
+    /// none is attached).
+    fn publish_state(&self) {
+        if let Some(t) = &self.telemetry {
+            t.set_state(self.state);
+        }
+    }
+
+    /// Publish one completed (or skipped) step's gauges and counter
+    /// snapshot to the telemetry plane.
+    fn publish_step_telemetry(&self, counters: &[CounterSnapshot], faults: u64, retries: u64) {
+        let Some(t) = &self.telemetry else {
+            return;
+        };
+        t.steps.inc();
+        t.faults.add(faults);
+        t.retries.add(retries);
+        for (w, s) in self.master.speed_estimate().iter().enumerate() {
+            t.set_speed(w, *s);
+        }
+        t.set_resident(&self.transport.resident_bytes());
+        if !counters.is_empty() {
+            t.set_counters(counters.to_vec());
+        }
     }
 
     /// The iterate and last metric a `--resume` checkpoint recorded
@@ -497,6 +566,7 @@ impl ClusterEngine {
     /// close). Terminal — no further steps may be begun.
     pub fn drain(&mut self) -> Result<()> {
         self.state = EngineState::Draining;
+        self.publish_state();
         let flushed = self.finish_trace();
         self.transport.shutdown();
         flushed
@@ -514,6 +584,7 @@ impl ClusterEngine {
         } else {
             EngineState::Idle
         };
+        self.publish_state();
     }
 
     /// Begin one elastic step on iterate block `w`: availability +
@@ -540,17 +611,21 @@ impl ClusterEngine {
         // effective placement — assignments, feasibility, and recovery
         // below all see the post-migration layout
         let migrations = self.rebalance_tick(step, &avail);
-        if self
+        let feasible = self
             .placement
             .check_feasible(&avail, self.cfg.stragglers)
-            .is_err()
-        {
+            .is_ok();
+        if let Some(t) = &self.telemetry {
+            t.set_coverage_ok(feasible);
+        }
+        if !feasible {
             crate::log_debug!("step {step}: infeasible availability {avail:?}, skipping");
             self.push_skip_record(step, avail.len(), migrations, last_metric);
             self.settle_state();
             return Ok(None);
         }
         self.state = EngineState::Stepping;
+        self.publish_state();
         // the Step span covers dispatch→assemble *and* the master-side
         // combine, so order spans nest inside it in the Chrome view
         let span = self.recorder.as_ref().map(|r| (r.now_ns(), Instant::now()));
@@ -595,6 +670,7 @@ impl ClusterEngine {
         let (counters, [rtt_p50_ms, rtt_p99_ms, compute_p50_ms, compute_p99_ms]) =
             self.trace_tail(&out.order_stats);
         let (faults, retries) = self.robustness_tail();
+        self.publish_step_telemetry(&counters, faults, retries);
         self.timeline.push(StepRecord {
             step,
             available,
@@ -631,6 +707,7 @@ impl ClusterEngine {
         let (counters, [rtt_p50_ms, rtt_p99_ms, compute_p50_ms, compute_p99_ms]) =
             self.trace_tail(&[]);
         let (faults, retries) = self.robustness_tail();
+        self.publish_step_telemetry(&counters, faults, retries);
         self.timeline.push(StepRecord {
             step,
             available,
@@ -843,6 +920,9 @@ impl ClusterEngine {
             }
         }
         self.prev_alive.clone_from(&alive);
+        if let Some(t) = &self.telemetry {
+            t.set_alive(&alive);
+        }
         self.trace
             .next_step()
             .into_iter()
@@ -874,11 +954,14 @@ impl ClusterEngine {
         for step in self.start_step..steps {
             let avail = self.availability(step);
             let migrations = self.rebalance_tick_async(step, &avail);
-            if self
+            let feasible = self
                 .placement
                 .check_feasible(&avail, self.cfg.stragglers)
-                .is_err()
-            {
+                .is_ok();
+            if let Some(t) = &self.telemetry {
+                t.set_coverage_ok(feasible);
+            }
+            if !feasible {
                 crate::log_debug!("step {step}: infeasible availability {avail:?}, skipping");
                 // flush the deferred finish first so the skip record sees
                 // the freshest metric and the timeline stays in step order
@@ -888,6 +971,7 @@ impl ClusterEngine {
                 continue;
             }
             self.state = EngineState::Stepping;
+            self.publish_state();
             let step_span = self.recorder.as_ref().map(|r| (r.now_ns(), Instant::now()));
             let victims = self.injector.choose(step, &avail);
             // dispatch first; the previous step's finish overlaps the
@@ -913,6 +997,7 @@ impl ClusterEngine {
             let (counters, [rtt_p50_ms, rtt_p99_ms, compute_p50_ms, compute_p99_ms]) =
                 self.trace_tail(&out.order_stats);
             let (faults, retries) = self.robustness_tail();
+            self.publish_step_telemetry(&counters, faults, retries);
             pending = Some(PendingFinish {
                 record: StepRecord {
                     step,

@@ -61,8 +61,9 @@ pub fn master_cli(argv: &[String]) -> Result<()> {
 /// faults injected during the step, `--chaos`), `retries` (backed-off
 /// re-admission dials attempted before the step), and `checkpoint`
 /// (`true` on steps whose boundary wrote a `--checkpoint-out`
-/// snapshot). With tracing on, each worker's counters also gain
-/// `dial_attempts`/`dial_successes` once any backed-off dial happened.
+/// snapshot). With tracing on, each worker's counters always carry
+/// `dial_attempts`/`dial_successes` (zero until a backed-off dial
+/// happens), so the key set is identical across steps and workers.
 /// The run-identity object gains `chaos` (the schedule string) only
 /// when `--chaos` is set, and `resumed_from_step` only under
 /// `--resume`. The journal itself is converted offline with
@@ -75,7 +76,15 @@ pub fn master_cli(argv: &[String]) -> Result<()> {
 /// `latency_p99_ns` (submit-to-answer latency quantiles in
 /// nanoseconds, null before any request completes), `queue_depth` (the
 /// admission queue's peak depth), and `rows_per_s` (matrix rows
-/// processed per second across all batched columns).
+/// processed per second across all batched columns). When the
+/// telemetry plane was on (`--metrics-listen` or any `--slo-*`
+/// threshold), the serve document additionally carries a top-level
+/// `slo` array: one object per tenant with `tenant`, `requests`,
+/// `rejects`, `rows`, `latency_p50_ns` / `latency_p99_ns` (omitted
+/// before any answered sample), `rows_per_s`, `healthy` (0/1), and
+/// `burns` — the final rolling-window snapshot that also backs the
+/// `usec_tenant_*` scrape series. The key is omitted entirely when the
+/// plane was off, keeping plain serve dumps byte-identical.
 fn run_and_report(cfg: &RunConfig) -> Result<()> {
     let res = crate::apps::run_power_iteration(cfg)?;
     println!(

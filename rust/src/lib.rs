@@ -85,7 +85,9 @@
 //!   compute p50/p99 land in [`metrics::Timeline`] / `--json-out`, and
 //!   `usec trace` converts a journal to Chrome Trace Event Format (one
 //!   track per worker) for `chrome://tracing` / Perfetto, with
-//!   `--summary` printing the top time sinks.
+//!   `--summary` printing the top time sinks. The *live* side of the
+//!   same story is the telemetry plane below ([`obs::Telemetry`] /
+//!   [`obs::MetricsServer`]).
 //! * [`apps`] — power iteration, ridge regression and PageRank built on the
 //!   elastic substrate.
 //!
@@ -169,7 +171,45 @@
 //! the framed TCP codec ([`serve::ServeClient`]); per-request latency
 //! quantiles (`latency_p50_ns`/`latency_p99_ns`), request counts,
 //! peak queue depth and rows/s land in [`metrics::Timeline`] /
-//! `--json-out`.
+//! `--json-out` (and its CSV twin), and per-tenant SLOs feed the
+//! telemetry plane below.
+//!
+//! ## Observability (live)
+//!
+//! Where `--trace-out` is the *post-mortem* record, the telemetry plane
+//! is the *live* one — and it is pure published state, not a second
+//! metrics pipeline:
+//!
+//! * [`obs::Telemetry`] — a process-wide `Arc` of atomics and snapshot
+//!   mutexes. The engine publishes its state machine, J-coverage,
+//!   per-worker liveness/speed/resident bytes and counter snapshots;
+//!   the serve session publishes queue depth, batch width and per-tenant
+//!   SLO stats. Nothing is sampled on scrape — readers only render what
+//!   writers already pushed, so the hot path cost is a handful of
+//!   relaxed atomic stores.
+//! * [`obs::MetricsServer`] (`--metrics-listen HOST:PORT` on
+//!   `usec serve` and `usec worker`) — a minimal HTTP/1.1 listener
+//!   serving `/metrics` in Prometheus text exposition format 0.0.4
+//!   (counters `usec_steps_total`, `usec_worker_orders_total{worker=}`,
+//!   … and gauges `usec_worker_speed`, `usec_tenant_latency_ns{tenant=,
+//!   quantile=}`, …), plus the probes `/healthz` (200 while the process
+//!   is up) and `/readyz` (200 only while the engine is not draining
+//!   *and* the placement's J-coverage holds — i.e. the cluster could
+//!   actually complete a step; 503 otherwise, e.g. inside a `--chaos`
+//!   crash window).
+//! * [`serve::SloTracker`] (`--slo-p99-ms`, `--slo-reject-rate`,
+//!   `--slo-min-requests`, `--slo-window-ms`) — per-tenant rolling
+//!   windows over answered latencies, admits and Busy rejects. Crossing
+//!   a threshold journals an `slo_burn` event, bumps
+//!   `usec_slo_burns_total` and flips `usec_slo_healthy{tenant=}`; the
+//!   final snapshot lands as the `slo` key of the serve `--json-out`.
+//! * `usec top --connect HOST:PORT` — a terminal dashboard polling a
+//!   scrape endpoint and rendering per-worker and per-tenant tables,
+//!   with rates differenced from consecutive scrapes.
+//!
+//! All of it defaults off: without `--metrics-listen` or `--slo-*`
+//! flags, the wire traffic, journal and `--json-out` are byte-identical
+//! to the plane never existing.
 //!
 //! ## Quickstart
 //!
@@ -183,6 +223,15 @@
 //! let avail: Vec<usize> = (0..6).collect();
 //! let sol = solve_load_matrix(&p, &avail, &speeds, &SolveParams::default()).unwrap();
 //! println!("optimal computation time: {}", sol.time);
+//! ```
+//!
+//! Watching a live cluster — start a metrics-exposing server and point
+//! `usec top` at it:
+//!
+//! ```text
+//! usec serve --listen 127.0.0.1:9000 --metrics-listen 127.0.0.1:9100 \
+//!     --slo-p99-ms 50 &
+//! usec top --connect 127.0.0.1:9100
 //! ```
 
 pub mod apps;

@@ -1,9 +1,11 @@
 //! Measurement: streaming statistics, histograms, per-step timelines.
 
 pub mod histogram;
+pub mod rolling;
 pub mod stats;
 pub mod timeline;
 
 pub use histogram::Histogram;
+pub use rolling::RollingHistogram;
 pub use stats::Stats;
 pub use timeline::{ServeSummary, StepRecord, Timeline};

@@ -1,0 +1,279 @@
+//! Sliding-window histogram: a ring of time-bucketed log-scale
+//! histograms whose old slots decay out as the window advances.
+//!
+//! The live telemetry plane ([`crate::obs::telemetry`]) needs latency
+//! quantiles over "the last few seconds", not over the whole run — a
+//! tenant whose p99 was bad an hour ago but is fine now should scrape
+//! as healthy. A [`RollingHistogram`] covers a wall-clock window split
+//! into `slots` ring positions; each push lands in the slot owning the
+//! current instant, and a slot is dropped wholesale once the window
+//! slides past it. Values are binned on a log2 scale with 8 linear
+//! sub-buckets per octave, so quantile estimates are within ~12.5% of
+//! the true value (one bucket width) at any magnitude — the "bucket
+//! resolution" the integration tests allow for.
+//!
+//! All methods take an explicit `now: Instant` variant so tests and
+//! replays stay deterministic; the plain variants use `Instant::now()`.
+
+use std::time::{Duration, Instant};
+
+/// Linear sub-buckets per power of two.
+const SUB: usize = 8;
+/// Highest octave tracked (values up to 2^50 ≈ 13 days in ns).
+const OCTAVES: usize = 50;
+const BUCKETS: usize = OCTAVES * SUB;
+
+#[derive(Debug, Clone)]
+struct Slot {
+    /// Absolute slot index this ring position currently holds; stale
+    /// positions (lapped by the window) are reset lazily on touch.
+    abs: u64,
+    counts: Vec<u32>,
+    count: u64,
+    sum: f64,
+}
+
+impl Slot {
+    fn new() -> Slot {
+        Slot {
+            abs: u64::MAX,
+            counts: vec![0; BUCKETS],
+            count: 0,
+            sum: 0.0,
+        }
+    }
+
+    fn reset(&mut self, abs: u64) {
+        self.abs = abs;
+        self.counts.iter_mut().for_each(|c| *c = 0);
+        self.count = 0;
+        self.sum = 0.0;
+    }
+}
+
+/// Map a non-negative value to its log2/linear bucket.
+fn bucket_of(v: f64) -> usize {
+    if !(v >= 1.0) {
+        // NaN and sub-unit values collapse into the first bucket.
+        return 0;
+    }
+    let exp = v.log2().floor();
+    let e = exp as usize;
+    if e >= OCTAVES {
+        return BUCKETS - 1;
+    }
+    // fraction through the octave, in [0, 1)
+    let frac = v / exp.exp2() - 1.0;
+    let s = ((frac * SUB as f64) as usize).min(SUB - 1);
+    e * SUB + s
+}
+
+/// Arithmetic midpoint of a bucket's value range (quantile estimate).
+fn bucket_mid(b: usize) -> f64 {
+    if b == 0 {
+        return 1.0;
+    }
+    let e = (b / SUB) as f64;
+    let s = (b % SUB) as f64;
+    let lo = e.exp2() * (1.0 + s / SUB as f64);
+    let hi = e.exp2() * (1.0 + (s + 1.0) / SUB as f64);
+    (lo + hi) / 2.0
+}
+
+/// A decaying histogram over the trailing `window` of wall-clock time.
+#[derive(Debug, Clone)]
+pub struct RollingHistogram {
+    slot_len: Duration,
+    slots: Vec<Slot>,
+    epoch: Instant,
+}
+
+impl RollingHistogram {
+    /// A window of `window` split into `slots` ring positions. The
+    /// effective resolution of "how fast old samples decay" is one
+    /// slot; `slots = 8..16` is plenty for SLO windows.
+    pub fn new(window: Duration, slots: usize) -> RollingHistogram {
+        assert!(slots > 0 && !window.is_zero());
+        RollingHistogram {
+            slot_len: window / slots as u32,
+            slots: vec![Slot::new(); slots],
+            epoch: Instant::now(),
+        }
+    }
+
+    /// Total window covered (slot length × slot count).
+    pub fn window(&self) -> Duration {
+        self.slot_len * self.slots.len() as u32
+    }
+
+    fn abs_slot(&self, now: Instant) -> u64 {
+        let dt = now.saturating_duration_since(self.epoch);
+        (dt.as_nanos() / self.slot_len.as_nanos().max(1)) as u64
+    }
+
+    /// A slot is live iff the window has not slid past it.
+    fn live(&self, slot: &Slot, now_abs: u64) -> bool {
+        slot.abs != u64::MAX && now_abs.saturating_sub(slot.abs) < self.slots.len() as u64
+    }
+
+    pub fn push(&mut self, v: f64) {
+        self.push_at(Instant::now(), v);
+    }
+
+    pub fn push_at(&mut self, now: Instant, v: f64) {
+        let abs = self.abs_slot(now);
+        let idx = (abs % self.slots.len() as u64) as usize;
+        let slot = &mut self.slots[idx];
+        if slot.abs != abs {
+            slot.reset(abs);
+        }
+        slot.counts[bucket_of(v)] += 1;
+        slot.count += 1;
+        slot.sum += v;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count_at(Instant::now())
+    }
+
+    /// Samples still inside the window at `now`.
+    pub fn count_at(&self, now: Instant) -> u64 {
+        let now_abs = self.abs_slot(now);
+        self.slots
+            .iter()
+            .filter(|s| self.live(s, now_abs))
+            .map(|s| s.count)
+            .sum()
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean_at(Instant::now())
+    }
+
+    pub fn mean_at(&self, now: Instant) -> f64 {
+        let now_abs = self.abs_slot(now);
+        let (mut n, mut sum) = (0u64, 0.0f64);
+        for s in self.slots.iter().filter(|s| self.live(s, now_abs)) {
+            n += s.count;
+            sum += s.sum;
+        }
+        if n == 0 {
+            f64::NAN
+        } else {
+            sum / n as f64
+        }
+    }
+
+    pub fn quantile(&self, q: f64) -> f64 {
+        self.quantile_at(Instant::now(), q)
+    }
+
+    /// Estimate the `q`-quantile of the samples inside the window:
+    /// the midpoint of the bucket where the cumulative count crosses
+    /// `q · total`. `NaN` when the window is empty.
+    pub fn quantile_at(&self, now: Instant, q: f64) -> f64 {
+        assert!((0.0..=1.0).contains(&q));
+        let now_abs = self.abs_slot(now);
+        let live: Vec<&Slot> = self
+            .slots
+            .iter()
+            .filter(|s| self.live(s, now_abs))
+            .collect();
+        let total: u64 = live.iter().map(|s| s.count).sum();
+        if total == 0 {
+            return f64::NAN;
+        }
+        let target = ((q * total as f64).ceil() as u64).max(1);
+        let mut cum = 0u64;
+        for b in 0..BUCKETS {
+            cum += live.iter().map(|s| s.counts[b] as u64).sum::<u64>();
+            if cum >= target {
+                return bucket_mid(b);
+            }
+        }
+        bucket_mid(BUCKETS - 1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn at(h: &RollingHistogram, ms: u64) -> Instant {
+        h.epoch + Duration::from_millis(ms)
+    }
+
+    #[test]
+    fn buckets_cover_magnitudes_within_one_octave_slice() {
+        for &v in &[1.0, 7.0, 1000.0, 1.5e6, 9.9e9] {
+            let b = bucket_of(v);
+            let mid = bucket_mid(b);
+            let rel = (mid - v).abs() / v;
+            assert!(rel <= 0.13, "value {v} → bucket {b} mid {mid} rel {rel}");
+        }
+    }
+
+    #[test]
+    fn quantiles_track_a_known_distribution() {
+        let mut h = RollingHistogram::new(Duration::from_secs(10), 10);
+        let now = at(&h, 1);
+        for i in 1..=1000u64 {
+            h.push_at(now, (i * 1000) as f64); // 1k..1M ns, uniform
+        }
+        assert_eq!(h.count_at(now), 1000);
+        let p50 = h.quantile_at(now, 0.5);
+        let p99 = h.quantile_at(now, 0.99);
+        assert!((p50 - 500_000.0).abs() / 500_000.0 < 0.13, "p50={p50}");
+        assert!((p99 - 990_000.0).abs() / 990_000.0 < 0.13, "p99={p99}");
+        assert!(p99 > p50);
+    }
+
+    #[test]
+    fn old_samples_decay_out_of_the_window() {
+        let mut h = RollingHistogram::new(Duration::from_millis(1000), 4);
+        h.push_at(at(&h, 0), 1e9); // slot 0: a huge outlier
+        h.push_at(at(&h, 300), 100.0);
+        // both inside the window at t=500ms
+        assert_eq!(h.count_at(at(&h, 500)), 2);
+        assert!(h.quantile_at(at(&h, 500), 1.0) > 1e8);
+        // at t=1100ms slot 0 has slid out; only the 100 remains
+        assert_eq!(h.count_at(at(&h, 1100)), 1);
+        let p100 = h.quantile_at(at(&h, 1100), 1.0);
+        assert!((90.0..130.0).contains(&p100), "p100={p100}");
+        // far past the window: empty again
+        assert_eq!(h.count_at(at(&h, 5000)), 0);
+        assert!(h.quantile_at(at(&h, 5000), 0.5).is_nan());
+        assert!(h.mean_at(at(&h, 5000)).is_nan());
+    }
+
+    #[test]
+    fn ring_positions_are_recycled_not_leaked() {
+        let mut h = RollingHistogram::new(Duration::from_millis(400), 4);
+        // wrap the ring many times; count never exceeds the window
+        for ms in (0..4000).step_by(50) {
+            h.push_at(at(&h, ms), 42.0);
+        }
+        // window holds at most 400ms of pushes = 8 samples
+        assert!(h.count_at(at(&h, 3999)) <= 8);
+        assert!(h.count_at(at(&h, 3999)) >= 6);
+    }
+
+    #[test]
+    fn sub_unit_and_nan_values_collapse_into_bucket_zero() {
+        let mut h = RollingHistogram::new(Duration::from_secs(1), 2);
+        let now = at(&h, 1);
+        h.push_at(now, 0.25);
+        h.push_at(now, f64::NAN);
+        assert_eq!(h.count_at(now), 2);
+        assert_eq!(h.quantile_at(now, 1.0), 1.0);
+    }
+
+    #[test]
+    fn mean_is_exact_not_bucketed() {
+        let mut h = RollingHistogram::new(Duration::from_secs(1), 2);
+        let now = at(&h, 1);
+        h.push_at(now, 10.0);
+        h.push_at(now, 30.0);
+        assert_eq!(h.mean_at(now), 20.0);
+    }
+}

@@ -294,13 +294,15 @@ impl Timeline {
     }
 
     /// CSV dump — the flat twin of [`Timeline::to_json`]: one row per
-    /// step with the same recovery/migration totals and order-RTT
-    /// quantiles. NaN quantiles (untraced runs) render as empty fields so
-    /// the CSV stays numeric-parseable.
+    /// step with the same recovery/migration totals, order-RTT
+    /// quantiles, and (on serve sessions) the request-plane totals. NaN
+    /// quantiles (untraced runs) and the serve columns of non-serve runs
+    /// render as empty fields so the CSV stays numeric-parseable.
     pub fn to_csv(&self) -> String {
         let mut out = String::from(
             "step,elapsed_s,metric,available,reported,solve_ms,\
-             recoveries,migrations,migrated_bytes,rtt_p50_ms,rtt_p99_ms\n",
+             recoveries,migrations,migrated_bytes,rtt_p50_ms,rtt_p99_ms,\
+             requests,latency_p50_ns,latency_p99_ns,queue_depth,rows_per_s\n",
         );
         let ms_or_empty = |v: f64| {
             if v.is_finite() {
@@ -309,12 +311,33 @@ impl Timeline {
                 String::new()
             }
         };
+        // the serve summary is a run-level total; the flat format repeats
+        // it on every row (constant per run, empty on non-serve runs)
+        let serve_tail = match &self.serve {
+            Some(s) => format!(
+                "{},{},{},{},{}",
+                s.requests,
+                if s.latency_p50_ns.is_finite() {
+                    format!("{:.0}", s.latency_p50_ns)
+                } else {
+                    String::new()
+                },
+                if s.latency_p99_ns.is_finite() {
+                    format!("{:.0}", s.latency_p99_ns)
+                } else {
+                    String::new()
+                },
+                s.queue_depth,
+                ms_or_empty(s.rows_per_s),
+            ),
+            None => ",,,,".to_string(),
+        };
         let mut t = 0.0;
         for s in &self.steps {
             t += s.wall.as_secs_f64();
             let migrated: u64 = s.migrations.iter().map(|m| m.bytes).sum();
             out.push_str(&format!(
-                "{},{:.6},{:.6e},{},{},{:.3},{},{},{},{},{}\n",
+                "{},{:.6},{:.6e},{},{},{:.3},{},{},{},{},{},{}\n",
                 s.step,
                 t,
                 s.metric,
@@ -326,6 +349,7 @@ impl Timeline {
                 migrated,
                 ms_or_empty(s.rtt_p50_ms),
                 ms_or_empty(s.rtt_p99_ms),
+                serve_tail,
             ));
         }
         out
@@ -419,16 +443,36 @@ mod tests {
         assert_eq!(
             lines.next().unwrap(),
             "step,elapsed_s,metric,available,reported,solve_ms,\
-             recoveries,migrations,migrated_bytes,rtt_p50_ms,rtt_p99_ms"
+             recoveries,migrations,migrated_bytes,rtt_p50_ms,rtt_p99_ms,\
+             requests,latency_p50_ns,latency_p99_ns,queue_depth,rows_per_s"
         );
         assert_eq!(
             lines.next().unwrap(),
-            "3,0.250000,6.250000e-2,6,6,0.100,1,1,9600,12.500,40.000"
+            "3,0.250000,6.250000e-2,6,6,0.100,1,1,9600,12.500,40.000,,,,,"
         );
-        // untraced steps leave the quantile fields empty, not NaN
+        // untraced steps leave the quantile fields empty, not NaN; a
+        // non-serve run leaves all five serve columns empty too
         let mut t2 = Timeline::new();
         t2.push(rec(0, 10, 0.5));
-        assert!(t2.to_csv().lines().nth(1).unwrap().ends_with(",0,0,0,,"));
+        assert!(t2.to_csv().lines().nth(1).unwrap().ends_with(",0,0,0,,,,,,,"));
+    }
+
+    #[test]
+    fn csv_serve_columns_golden_row() {
+        let mut t = Timeline::new();
+        t.push(rec(0, 10, 0.5));
+        t.set_serve(ServeSummary {
+            requests: 12,
+            latency_p50_ns: 1_500_000.0,
+            latency_p99_ns: 9_000_000.0,
+            queue_depth: 5,
+            rows_per_s: 48_000.0,
+        });
+        let csv = t.to_csv();
+        let row = csv.lines().nth(1).unwrap();
+        assert!(row.ends_with(",12,1500000,9000000,5,48000.000"), "{row}");
+        // the header gained exactly the five serve columns
+        assert_eq!(csv.lines().next().unwrap().matches(',').count(), 15);
     }
 
     #[test]

@@ -38,8 +38,10 @@ use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::cli::{ArgSpec, Args};
+use crate::engine::EngineState;
 use crate::error::{Error, Result};
 use crate::linalg::partition::{submatrix_ranges, RowRange, TilePlan};
+use crate::obs::{MetricsServer, Registry, Telemetry};
 use crate::runtime::BackendSpec;
 use crate::sched::worker::{execute_order, ExecScratch, WorkerConfig, WorkerStorage};
 use crate::storage::{coalesce_sub_ranges, RowShard, StorageView, StoreHandle};
@@ -70,6 +72,10 @@ pub struct DaemonOpts {
     /// cannot brick the worker. `Duration::ZERO` disables the timeout
     /// (the pre-liveness behaviour).
     pub idle_timeout: Duration,
+    /// Live telemetry handle (`usec worker --metrics-listen`): the daemon
+    /// publishes its resident bytes, order/row counters, and busy/idle
+    /// state into it. `None` (the default) skips all bookkeeping.
+    pub telemetry: Option<Arc<Telemetry>>,
 }
 
 impl Default for DaemonOpts {
@@ -77,6 +83,7 @@ impl Default for DaemonOpts {
         DaemonOpts {
             max_sessions: 0,
             idle_timeout: DEFAULT_IDLE_TIMEOUT,
+            telemetry: None,
         }
     }
 }
@@ -223,6 +230,14 @@ fn serve_session(stream: TcpStream, opts: &DaemonOpts) -> Result<()> {
             resident_bytes,
         },
     )?;
+    // single-worker telemetry view: whatever id the master assigned,
+    // this daemon scrapes as worker 0 of 1 on its own endpoint
+    let tel = opts.telemetry.as_ref();
+    let reg = tel.map(|_| Registry::new(1));
+    if let Some(t) = tel {
+        t.set_resident(&[resident_bytes]);
+        t.set_state(EngineState::Idle);
+    }
     // daemon-side liveness: a finite read timeout means a master host
     // that dies without FIN/RST ends this session instead of wedging the
     // daemon forever (the next master then gets accepted)
@@ -303,6 +318,7 @@ fn serve_session(stream: TcpStream, opts: &DaemonOpts) -> Result<()> {
         match decoded {
             Ok(WireMsg::Work(order)) => {
                 let step = order.step;
+                let order_rows: usize = order.tasks.iter().map(|t| t.rows.len()).sum();
                 if let Err(e) = validate_order(&cfg, &order) {
                     // a malformed order must produce a Failed reply, not a
                     // panic that kills the daemon
@@ -317,7 +333,17 @@ fn serve_session(stream: TcpStream, opts: &DaemonOpts) -> Result<()> {
                     idle_since = Instant::now();
                     continue;
                 }
-                match execute_order(&cfg, &backend, &tile, &order, &mut scratch) {
+                if let Some(t) = tel {
+                    t.set_state(EngineState::Stepping);
+                }
+                let executed = execute_order(&cfg, &backend, &tile, &order, &mut scratch);
+                if let (Some(t), Some(reg)) = (tel, &reg) {
+                    t.set_state(EngineState::Idle);
+                    t.steps.inc();
+                    reg.add_order(0, order_rows);
+                    t.set_counters(reg.snapshot(&[]));
+                }
+                match executed {
                     Ok(Some(mut report)) => {
                         if let Some(bd) = report.breakdown.as_mut() {
                             bd.decode_ns = decode_ns;
@@ -373,6 +399,13 @@ fn serve_session(stream: TcpStream, opts: &DaemonOpts) -> Result<()> {
                         false
                     }
                 };
+                if let (Some(t), Some(reg)) = (tel, &reg) {
+                    if ok {
+                        reg.add_migration(0);
+                    }
+                    t.set_resident(&[cfg.storage.store.resident_bytes() as u64]);
+                    t.set_counters(reg.snapshot(&[]));
+                }
                 if let Err(e) = codec::write_msg(
                     &mut *lock(&writer),
                     &WireMsg::MigrateAck {
@@ -479,7 +512,8 @@ fn validate_order(
     Ok(())
 }
 
-/// `usec worker --listen host:port [--once] [--idle-timeout-secs N]`.
+/// `usec worker --listen host:port [--once] [--idle-timeout-secs N]
+/// [--metrics-listen host:port]`.
 pub fn worker_cli(argv: &[String]) -> Result<()> {
     let specs = vec![
         ArgSpec::opt("listen", "127.0.0.1:7070", "address to bind"),
@@ -489,17 +523,37 @@ pub fn worker_cli(argv: &[String]) -> Result<()> {
             "300",
             "drop a session with no master traffic for this long (0 = never)",
         ),
+        ArgSpec::opt(
+            "metrics-listen",
+            "",
+            "serve /metrics, /healthz, /readyz on this host:port",
+        ),
     ];
     let args = Args::parse(argv, &specs)?;
     let addr = args.get("listen").unwrap_or("127.0.0.1:7070");
     let listener = TcpListener::bind(addr)
         .map_err(|e| Error::Cluster(format!("bind {addr}: {e}")))?;
+    let metrics_listen = args.get("metrics-listen").unwrap_or("").to_string();
+    let (telemetry, _metrics) = if metrics_listen.is_empty() {
+        (None, None)
+    } else {
+        let tel = Arc::new(Telemetry::new(1, 1));
+        let ml = TcpListener::bind(&metrics_listen)
+            .map_err(|e| Error::Cluster(format!("bind {metrics_listen}: {e}")))?;
+        let srv = MetricsServer::spawn(ml, Arc::clone(&tel))?;
+        println!(
+            "metrics on http://{}/metrics (probes /healthz, /readyz)",
+            srv.addr()
+        );
+        (Some(tel), Some(srv))
+    };
     println!("usec worker listening on {}", listener.local_addr()?);
     serve_worker(
         listener,
         DaemonOpts {
             max_sessions: usize::from(args.has("once")),
             idle_timeout: Duration::from_secs(args.get_u64("idle-timeout-secs")?),
+            telemetry,
         },
     )
 }
@@ -622,6 +676,7 @@ mod tests {
                 DaemonOpts {
                     max_sessions: 2,
                     idle_timeout: Duration::from_millis(200),
+                    ..Default::default()
                 },
             )
         });
@@ -757,6 +812,68 @@ mod tests {
         }
         codec::write_msg(&mut &stream, &WireMsg::Shutdown).unwrap();
         h.join().unwrap().unwrap();
+    }
+
+    #[test]
+    fn daemon_publishes_telemetry_counters() {
+        use crate::linalg::Block;
+        use crate::optim::Task;
+        use crate::sched::protocol::WorkOrder;
+
+        let tel = Arc::new(Telemetry::new(1, 1));
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let t2 = Arc::clone(&tel);
+        let h = std::thread::spawn(move || {
+            serve_worker(
+                listener,
+                DaemonOpts {
+                    max_sessions: 1,
+                    telemetry: Some(t2),
+                    ..Default::default()
+                },
+            )
+        });
+        let stream = TcpStream::connect(addr).unwrap();
+        stream
+            .set_read_timeout(Some(Duration::from_secs(5)))
+            .unwrap();
+        codec::write_msg(&mut &stream, &WireMsg::Hello(test_hello(0))).unwrap();
+        match codec::read_msg(&mut &stream).unwrap() {
+            WireMsg::HelloAck(_) => {}
+            other => panic!("expected HelloAck, got {other:?}"),
+        }
+        read_storage_ready(&stream);
+        codec::write_msg(
+            &mut &stream,
+            &WireMsg::Work(WorkOrder {
+                step: 1,
+                w: Arc::new(Block::single(vec![0.5f32; 16])),
+                tasks: vec![Task {
+                    g: 0,
+                    rows: RowRange::new(0, 4),
+                }],
+                row_cost_ns: 0,
+                straggle: None,
+                trace: false,
+            }),
+        )
+        .unwrap();
+        match codec::read_msg(&mut &stream).unwrap() {
+            WireMsg::Report(_) => {}
+            other => panic!("expected Report, got {other:?}"),
+        }
+        codec::write_msg(&mut &stream, &WireMsg::Shutdown).unwrap();
+        h.join().unwrap().unwrap();
+        // the scrape view saw the session: one order of 4 rows executed,
+        // the full 16x16 f32 matrix resident, probe ready throughout
+        assert_eq!(tel.steps.get(), 1);
+        let counters = tel.counters();
+        assert_eq!(counters.len(), 1);
+        assert_eq!(counters[0].orders, 1);
+        assert_eq!(counters[0].rows, 4);
+        assert_eq!(tel.resident(0), (16 * 16 * 4) as f64);
+        assert!(tel.ready());
     }
 
     #[test]

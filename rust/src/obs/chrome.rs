@@ -82,6 +82,9 @@ pub fn chrome_trace(events: &[Event]) -> Json {
 /// Aggregate the journal's time sinks into a plain-text table, largest
 /// total first: one row per span kind per track, plus the worker-side
 /// breakdown phases summed across all `order` events that carried one.
+/// Point events (no duration — `dispatch`, `fault`, `retry`,
+/// `migration`, `heartbeat_lapse`, `slo_burn`, …) get their own named
+/// count rows at the bottom instead of vanishing from the accounting.
 pub fn summarize(events: &[Event]) -> String {
     // sink label → (count, total_ns)
     let mut sinks: BTreeMap<String, (u64, u64)> = BTreeMap::new();
@@ -91,12 +94,16 @@ pub fn summarize(events: &[Event]) -> String {
         e.1 += dur_ns;
     };
     for ev in events {
-        if let Some(d) = ev.dur_ns {
-            let label = match ev.worker {
-                Some(w) => format!("{} (worker {w})", ev.kind.name()),
-                None => ev.kind.name().to_string(),
-            };
-            bump(label, d);
+        match ev.dur_ns {
+            Some(d) => {
+                let label = match ev.worker {
+                    Some(w) => format!("{} (worker {w})", ev.kind.name()),
+                    None => ev.kind.name().to_string(),
+                };
+                bump(label, d);
+            }
+            // durationless kinds are still counted, one row per kind
+            None => bump(format!("{} (events)", ev.kind.name()), 0),
         }
         if let Some(bd) = &ev.breakdown {
             for (phase, ns) in [
@@ -196,6 +203,17 @@ mod tests {
         ]
     }
 
+    /// PR 7/8 robustness kinds: `combine` spans plus durationless
+    /// `fault`/`retry` instants.
+    fn robustness_sample() -> Vec<Event> {
+        let mut evs = sample();
+        evs.push(Event::new(EventKind::Combine, 0, 9_100_000).dur(2_000_000));
+        evs.push(Event::new(EventKind::Fault, 1, 10_000_000).worker(0).note("drop"));
+        evs.push(Event::new(EventKind::Fault, 2, 11_000_000).worker(1).note("crash"));
+        evs.push(Event::new(EventKind::Retry, 2, 12_000_000).worker(1).rows(1));
+        evs
+    }
+
     #[test]
     fn export_tracks_and_phases() {
         let trace = chrome_trace(&sample());
@@ -247,6 +265,30 @@ mod tests {
         assert!(s.contains("worker-side compute"));
         assert!(s.contains("worker-side idle"));
         assert!(!s.contains("worker-side decode")); // zero phases omitted
+    }
+
+    #[test]
+    fn summary_names_point_kinds_with_counts() {
+        let s = summarize(&robustness_sample());
+        // combine is a span: accounted by duration like any other sink
+        assert!(s.contains("combine"), "combine span missing: {s}");
+        // fault/retry/dispatch are point events: named count rows, not
+        // silently dropped or lumped into an "other" bucket
+        let fault_row = s
+            .lines()
+            .find(|l| l.starts_with("fault (events)"))
+            .unwrap_or_else(|| panic!("no fault row in {s}"));
+        assert!(fault_row.contains('2'), "two faults counted: {fault_row}");
+        assert!(s.contains("retry (events)"));
+        assert!(s.contains("dispatch (events)"));
+        assert!(s.contains("heartbeat_lapse (events)"));
+        // zero-duration rows rank below every timed sink
+        let lines: Vec<&str> = s.lines().collect();
+        let first_count = lines
+            .iter()
+            .position(|l| l.ends_with("0.000"))
+            .unwrap();
+        assert!(first_count > 2, "count rows sort after timed sinks: {s}");
     }
 
     #[test]

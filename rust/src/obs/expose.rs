@@ -1,0 +1,683 @@
+//! Scrape endpoint: Prometheus text exposition over a minimal HTTP/1.1
+//! listener, plus the tiny GET client `usec top` and the tests use.
+//!
+//! [`MetricsServer::spawn`] serves three routes from a background
+//! thread reading a shared [`Telemetry`] handle:
+//!
+//! * `GET /metrics` — the full metric set in Prometheus text
+//!   exposition format 0.0.4 (`# HELP` / `# TYPE` comments, then
+//!   `name{label="v"} value` samples). Counters come from the
+//!   engine-republished [`CounterSnapshot`]s, gauges straight from the
+//!   telemetry atomics, per-tenant series from the serve plane's SLO
+//!   snapshot.
+//! * `GET /healthz` — `200 ok` whenever the process answers at all
+//!   (liveness).
+//! * `GET /readyz` — `200 ready` while [`Telemetry::ready`] holds;
+//!   `503` with the reason (`draining`, `lost J-coverage`, `fewer than
+//!   J workers alive`) otherwise.
+//!
+//! The listener is nonblocking and single-threaded: scrapes are tiny,
+//! a poll loop with a 5ms nap costs nothing, and a stuck client can't
+//! pile up threads. The whole crate is dependency-free, so the HTTP
+//! side is a deliberately minimal hand-rolled subset: request-line
+//! parsing only, `Connection: close` on every response.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::error::{Error, Result};
+use crate::obs::registry::CounterSnapshot;
+use crate::obs::telemetry::Telemetry;
+
+/// Content type for the Prometheus text exposition format.
+const TEXT_FORMAT: &str = "text/plain; version=0.0.4; charset=utf-8";
+
+/// Escape a label value per the exposition format.
+fn escape_label(v: &str) -> String {
+    v.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n")
+}
+
+/// Append one metric family header.
+fn family(out: &mut String, name: &str, kind: &str, help: &str) {
+    out.push_str(&format!("# HELP {name} {help}\n# TYPE {name} {kind}\n"));
+}
+
+fn sample(out: &mut String, name: &str, labels: &[(&str, &str)], v: f64) {
+    if labels.is_empty() {
+        out.push_str(&format!("{name} {v}\n"));
+        return;
+    }
+    let ls: Vec<String> = labels
+        .iter()
+        .map(|(k, val)| format!("{k}=\"{}\"", escape_label(val)))
+        .collect();
+    out.push_str(&format!("{name}{{{}}} {v}\n", ls.join(",")));
+}
+
+/// Render the full `/metrics` payload from a telemetry handle.
+pub fn render_prometheus(tel: &Telemetry) -> String {
+    let mut out = String::with_capacity(4096);
+
+    family(&mut out, "usec_up", "gauge", "1 while the process serves.");
+    sample(&mut out, "usec_up", &[], 1.0);
+
+    family(
+        &mut out,
+        "usec_engine_state",
+        "gauge",
+        "1 for the engine's current lifecycle state, by label.",
+    );
+    sample(
+        &mut out,
+        "usec_engine_state",
+        &[("state", tel.state_name())],
+        1.0,
+    );
+
+    family(
+        &mut out,
+        "usec_ready",
+        "gauge",
+        "1 when serving is possible: not draining, J-coverage holds, >=J workers alive.",
+    );
+    sample(&mut out, "usec_ready", &[], if tel.ready() { 1.0 } else { 0.0 });
+
+    family(
+        &mut out,
+        "usec_coverage_ok",
+        "gauge",
+        "1 while every sub-matrix keeps a live replica.",
+    );
+    sample(
+        &mut out,
+        "usec_coverage_ok",
+        &[],
+        if tel.coverage_ok() { 1.0 } else { 0.0 },
+    );
+
+    family(&mut out, "usec_workers", "gauge", "Configured cluster size N.");
+    sample(&mut out, "usec_workers", &[], tel.workers() as f64);
+
+    family(
+        &mut out,
+        "usec_workers_alive",
+        "gauge",
+        "Workers currently live on the transport.",
+    );
+    sample(&mut out, "usec_workers_alive", &[], tel.alive_count() as f64);
+
+    family(&mut out, "usec_steps_total", "counter", "Elastic steps completed.");
+    sample(&mut out, "usec_steps_total", &[], tel.steps.get() as f64);
+
+    family(
+        &mut out,
+        "usec_faults_total",
+        "counter",
+        "Chaos faults observed at the transport.",
+    );
+    sample(&mut out, "usec_faults_total", &[], tel.faults.get() as f64);
+
+    family(
+        &mut out,
+        "usec_retries_total",
+        "counter",
+        "Backed-off re-dial attempts.",
+    );
+    sample(&mut out, "usec_retries_total", &[], tel.retries.get() as f64);
+
+    // --- per-worker gauges ---------------------------------------------
+    family(
+        &mut out,
+        "usec_worker_alive",
+        "gauge",
+        "1 while the worker's transport lane is live.",
+    );
+    family(
+        &mut out,
+        "usec_worker_speed",
+        "gauge",
+        "EWMA speed estimate (rows/s, normalized).",
+    );
+    family(
+        &mut out,
+        "usec_worker_resident_bytes",
+        "gauge",
+        "Bytes of placed sub-matrix rows resident on the worker.",
+    );
+    for w in 0..tel.workers() {
+        let ws = w.to_string();
+        let l = [("worker", ws.as_str())];
+        sample(
+            &mut out,
+            "usec_worker_alive",
+            &l,
+            if tel.worker_alive(w) { 1.0 } else { 0.0 },
+        );
+        sample(&mut out, "usec_worker_speed", &l, tel.speed(w));
+        sample(&mut out, "usec_worker_resident_bytes", &l, tel.resident(w));
+    }
+
+    // --- per-worker counters (engine-republished snapshots) ------------
+    let counters = tel.counters();
+    if !counters.is_empty() {
+        let fams: [(&str, &str, fn(&CounterSnapshot) -> f64); 9] = [
+            ("usec_worker_orders_total", "Work orders dispatched.", |c| {
+                c.orders as f64
+            }),
+            ("usec_worker_rows_total", "Matrix rows computed.", |c| {
+                c.rows as f64
+            }),
+            ("usec_worker_bytes_tx_total", "Bytes sent to the worker.", |c| {
+                c.bytes_tx as f64
+            }),
+            (
+                "usec_worker_bytes_rx_total",
+                "Bytes received from the worker.",
+                |c| c.bytes_rx as f64,
+            ),
+            (
+                "usec_worker_reconnects_total",
+                "Times the worker rejoined after a drop.",
+                |c| c.reconnects as f64,
+            ),
+            (
+                "usec_worker_recoveries_total",
+                "Mid-step recovery re-plans that touched the worker.",
+                |c| c.recoveries as f64,
+            ),
+            (
+                "usec_worker_migrations_total",
+                "Placement moves involving the worker.",
+                |c| c.migrations as f64,
+            ),
+            (
+                "usec_worker_dial_attempts_total",
+                "Backed-off re-dials attempted.",
+                |c| c.dial_attempts as f64,
+            ),
+            (
+                "usec_worker_dial_successes_total",
+                "Backed-off re-dials that reconnected.",
+                |c| c.dial_successes as f64,
+            ),
+        ];
+        for (name, help, get) in fams {
+            family(&mut out, name, "counter", help);
+            for c in &counters {
+                let ws = c.worker.to_string();
+                sample(&mut out, name, &[("worker", ws.as_str())], get(c));
+            }
+        }
+    }
+
+    // --- serve plane ---------------------------------------------------
+    family(
+        &mut out,
+        "usec_queue_depth",
+        "gauge",
+        "Requests waiting in the admission queue.",
+    );
+    sample(&mut out, "usec_queue_depth", &[], tel.queue_depth.get());
+
+    family(
+        &mut out,
+        "usec_batch_width",
+        "gauge",
+        "Request columns riding the current iterate block.",
+    );
+    sample(&mut out, "usec_batch_width", &[], tel.batch_width.get());
+
+    family(
+        &mut out,
+        "usec_slo_burns_total",
+        "counter",
+        "Healthy→burning SLO transitions journaled.",
+    );
+    sample(&mut out, "usec_slo_burns_total", &[], tel.slo_burns.get() as f64);
+
+    let tenants = tel.tenants();
+    family(
+        &mut out,
+        "usec_slo_healthy",
+        "gauge",
+        "1 while no configured SLO threshold is burning.",
+    );
+    sample(
+        &mut out,
+        "usec_slo_healthy",
+        &[],
+        if tenants.values().all(|t| t.healthy) {
+            1.0
+        } else {
+            0.0
+        },
+    );
+    for (t, s) in &tenants {
+        sample(
+            &mut out,
+            "usec_slo_healthy",
+            &[("tenant", t)],
+            if s.healthy { 1.0 } else { 0.0 },
+        );
+    }
+
+    if !tenants.is_empty() {
+        family(
+            &mut out,
+            "usec_tenant_requests_total",
+            "counter",
+            "Requests answered.",
+        );
+        family(
+            &mut out,
+            "usec_tenant_rejects_total",
+            "counter",
+            "Submits Busy-rejected at admission.",
+        );
+        family(
+            &mut out,
+            "usec_tenant_rows_total",
+            "counter",
+            "Matrix rows processed for the tenant.",
+        );
+        family(
+            &mut out,
+            "usec_tenant_inflight",
+            "gauge",
+            "Requests riding the current batch.",
+        );
+        family(
+            &mut out,
+            "usec_tenant_queue_depth",
+            "gauge",
+            "Requests waiting in the admission queue.",
+        );
+        family(
+            &mut out,
+            "usec_tenant_rows_per_s",
+            "gauge",
+            "Rows per second since the tenant's first answer.",
+        );
+        family(
+            &mut out,
+            "usec_tenant_latency_ns",
+            "gauge",
+            "Rolling submit→answer latency quantiles.",
+        );
+        for (t, s) in &tenants {
+            let l = [("tenant", t.as_str())];
+            sample(&mut out, "usec_tenant_requests_total", &l, s.requests as f64);
+            sample(&mut out, "usec_tenant_rejects_total", &l, s.rejects as f64);
+            sample(&mut out, "usec_tenant_rows_total", &l, s.rows as f64);
+            sample(&mut out, "usec_tenant_inflight", &l, s.inflight as f64);
+            sample(&mut out, "usec_tenant_queue_depth", &l, s.queued as f64);
+            sample(&mut out, "usec_tenant_rows_per_s", &l, s.rows_per_s);
+            if s.latency_p50_ns.is_finite() {
+                sample(
+                    &mut out,
+                    "usec_tenant_latency_ns",
+                    &[("tenant", t.as_str()), ("quantile", "0.5")],
+                    s.latency_p50_ns,
+                );
+                sample(
+                    &mut out,
+                    "usec_tenant_latency_ns",
+                    &[("tenant", t.as_str()), ("quantile", "0.99")],
+                    s.latency_p99_ns,
+                );
+            }
+        }
+    }
+
+    out
+}
+
+fn http_response(code: u16, reason: &str, content_type: &str, body: &str) -> String {
+    format!(
+        "HTTP/1.1 {code} {reason}\r\nContent-Type: {content_type}\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    )
+}
+
+/// Serve one accepted connection: parse the request line, route, write
+/// the response, close. Errors are swallowed — a malformed or hung-up
+/// scraper must never disturb the serving process.
+fn handle_conn(mut stream: TcpStream, tel: &Telemetry) {
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(500)));
+    let mut buf = [0u8; 2048];
+    let mut req = Vec::new();
+    loop {
+        match stream.read(&mut buf) {
+            Ok(0) => break,
+            Ok(k) => {
+                req.extend_from_slice(&buf[..k]);
+                if req.windows(4).any(|w| w == b"\r\n\r\n") || req.len() > 16 * 1024 {
+                    break;
+                }
+            }
+            Err(_) => break,
+        }
+    }
+    let line = String::from_utf8_lossy(&req);
+    let path = line
+        .lines()
+        .next()
+        .and_then(|l| l.split_whitespace().nth(1))
+        .unwrap_or("/")
+        .to_string();
+    let resp = match path.as_str() {
+        "/metrics" => http_response(200, "OK", TEXT_FORMAT, &render_prometheus(tel)),
+        "/healthz" => http_response(200, "OK", "text/plain", "ok\n"),
+        "/readyz" => {
+            if tel.ready() {
+                http_response(200, "OK", "text/plain", "ready\n")
+            } else {
+                let why = if tel.state_name() == "draining" {
+                    "draining"
+                } else if !tel.coverage_ok() {
+                    "lost J-coverage"
+                } else {
+                    "fewer than J workers alive"
+                };
+                http_response(
+                    503,
+                    "Service Unavailable",
+                    "text/plain",
+                    &format!("not ready: {why}\n"),
+                )
+            }
+        }
+        _ => http_response(404, "Not Found", "text/plain", "not found\n"),
+    };
+    let _ = stream.write_all(resp.as_bytes());
+}
+
+/// A background scrape listener bound to a [`Telemetry`] handle.
+/// Dropping (or calling [`MetricsServer::stop`]) joins the thread.
+#[derive(Debug)]
+pub struct MetricsServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl MetricsServer {
+    /// Start serving `/metrics`, `/healthz`, `/readyz` on `listener`.
+    pub fn spawn(listener: TcpListener, tel: Arc<Telemetry>) -> Result<MetricsServer> {
+        let addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop_in = Arc::clone(&stop);
+        let handle = std::thread::spawn(move || {
+            while !stop_in.load(Ordering::Relaxed) {
+                match listener.accept() {
+                    Ok((stream, _)) => handle_conn(stream, &tel),
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(Duration::from_millis(5));
+                    }
+                    Err(_) => std::thread::sleep(Duration::from_millis(5)),
+                }
+            }
+        });
+        Ok(MetricsServer {
+            addr,
+            stop,
+            handle: Some(handle),
+        })
+    }
+
+    /// The bound address (useful with an ephemeral port).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Signal the accept loop and join it.
+    pub fn stop(mut self) {
+        self.shutdown();
+    }
+
+    fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for MetricsServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Blocking HTTP GET against `addr` (e.g. `"127.0.0.1:9100"`).
+/// Returns `(status_code, body)`.
+pub fn http_get(addr: &str, path: &str, timeout: Duration) -> Result<(u16, String)> {
+    let mut stream = TcpStream::connect(addr)?;
+    stream.set_read_timeout(Some(timeout))?;
+    stream.set_write_timeout(Some(timeout))?;
+    stream.write_all(
+        format!("GET {path} HTTP/1.1\r\nHost: {addr}\r\nConnection: close\r\n\r\n").as_bytes(),
+    )?;
+    let mut raw = String::new();
+    stream.read_to_string(&mut raw)?;
+    let code: u16 = raw
+        .split_whitespace()
+        .nth(1)
+        .and_then(|c| c.parse().ok())
+        .ok_or_else(|| Error::Wire(format!("malformed HTTP status line from {addr}")))?;
+    let body = raw
+        .split_once("\r\n\r\n")
+        .map(|(_, b)| b.to_string())
+        .unwrap_or_default();
+    Ok((code, body))
+}
+
+/// One parsed exposition sample.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Sample {
+    pub name: String,
+    pub labels: Vec<(String, String)>,
+    pub value: f64,
+}
+
+impl Sample {
+    pub fn label(&self, key: &str) -> Option<&str> {
+        self.labels
+            .iter()
+            .find(|(k, _)| k == key)
+            .map(|(_, v)| v.as_str())
+    }
+}
+
+/// Parse Prometheus text exposition format into samples. Comment and
+/// blank lines are skipped; any other malformed line is an error, so
+/// tests can assert whole scrapes are well-formed.
+pub fn parse_prometheus(text: &str) -> Result<Vec<Sample>> {
+    let mut out = Vec::new();
+    for line in text.lines() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let bad = || Error::Wire(format!("malformed exposition line: {line:?}"));
+        let (head, value) = line.rsplit_once(' ').ok_or_else(bad)?;
+        let value: f64 = value.parse().map_err(|_| bad())?;
+        let (name, labels) = match head.split_once('{') {
+            None => (head.to_string(), Vec::new()),
+            Some((name, rest)) => {
+                let body = rest.strip_suffix('}').ok_or_else(bad)?;
+                let mut labels = Vec::new();
+                for part in body.split(',').filter(|p| !p.is_empty()) {
+                    let (k, v) = part.split_once('=').ok_or_else(bad)?;
+                    let v = v
+                        .strip_prefix('"')
+                        .and_then(|v| v.strip_suffix('"'))
+                        .ok_or_else(bad)?;
+                    labels.push((
+                        k.to_string(),
+                        v.replace("\\n", "\n").replace("\\\"", "\"").replace("\\\\", "\\"),
+                    ));
+                }
+                (name.to_string(), labels)
+            }
+        };
+        out.push(Sample {
+            name,
+            labels,
+            value,
+        });
+    }
+    Ok(out)
+}
+
+/// Convenience for tests and `usec top`: the value of the first sample
+/// matching `name` and (optionally) one label equality.
+pub fn sample_value(samples: &[Sample], name: &str, label: Option<(&str, &str)>) -> Option<f64> {
+    samples
+        .iter()
+        .find(|s| {
+            s.name == name
+                && match label {
+                    None => s.labels.is_empty(),
+                    Some((k, v)) => s.label(k) == Some(v),
+                }
+        })
+        .map(|s| s.value)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::EngineState;
+    use crate::obs::telemetry::TenantStats;
+    use std::collections::BTreeMap;
+
+    fn populated() -> Telemetry {
+        let t = Telemetry::new(2, 1);
+        t.set_state(EngineState::Stepping);
+        t.set_alive(&[true, false]);
+        t.set_speed(0, 1.5);
+        t.set_resident(&[4096, 0]);
+        t.steps.add(7);
+        let mut m = BTreeMap::new();
+        m.insert(
+            "alice".to_string(),
+            TenantStats {
+                requests: 3,
+                latency_p50_ns: 2e6,
+                latency_p99_ns: 8e6,
+                rows_per_s: 1000.0,
+                healthy: true,
+                ..Default::default()
+            },
+        );
+        t.set_tenants(m);
+        t
+    }
+
+    #[test]
+    fn rendered_text_round_trips_through_the_parser() {
+        let t = populated();
+        let text = render_prometheus(&t);
+        let samples = parse_prometheus(&text).unwrap();
+        assert!(samples.len() > 10);
+        assert_eq!(sample_value(&samples, "usec_up", None), Some(1.0));
+        assert_eq!(
+            sample_value(&samples, "usec_engine_state", Some(("state", "stepping"))),
+            Some(1.0)
+        );
+        assert_eq!(sample_value(&samples, "usec_workers_alive", None), Some(1.0));
+        assert_eq!(
+            sample_value(&samples, "usec_worker_alive", Some(("worker", "1"))),
+            Some(0.0)
+        );
+        assert_eq!(
+            sample_value(&samples, "usec_worker_speed", Some(("worker", "0"))),
+            Some(1.5)
+        );
+        assert_eq!(sample_value(&samples, "usec_steps_total", None), Some(7.0));
+        assert_eq!(
+            sample_value(&samples, "usec_tenant_requests_total", Some(("tenant", "alice"))),
+            Some(3.0)
+        );
+        // quantile-labeled latency gauge carries both quantiles
+        let lat: Vec<&Sample> = samples
+            .iter()
+            .filter(|s| s.name == "usec_tenant_latency_ns")
+            .collect();
+        assert_eq!(lat.len(), 2);
+        assert!(lat.iter().any(|s| s.label("quantile") == Some("0.5")));
+    }
+
+    #[test]
+    fn every_family_has_help_and_type_comments() {
+        let text = render_prometheus(&populated());
+        let mut seen = std::collections::BTreeSet::new();
+        for s in parse_prometheus(&text).unwrap() {
+            seen.insert(s.name.clone());
+        }
+        for name in seen {
+            assert!(
+                text.contains(&format!("# HELP {name} ")),
+                "{name} missing HELP"
+            );
+            assert!(
+                text.contains(&format!("# TYPE {name} ")),
+                "{name} missing TYPE"
+            );
+        }
+    }
+
+    #[test]
+    fn label_values_are_escaped() {
+        assert_eq!(escape_label("a\"b\\c\nd"), "a\\\"b\\\\c\\nd");
+        let parsed = parse_prometheus("m{t=\"a\\\"b\"} 1\n").unwrap();
+        assert_eq!(parsed[0].label("t"), Some("a\"b"));
+    }
+
+    #[test]
+    fn parser_rejects_malformed_lines() {
+        assert!(parse_prometheus("just_a_name\n").is_err());
+        assert!(parse_prometheus("m{unterminated 1\n").is_err());
+        assert!(parse_prometheus("m notanumber\n").is_err());
+        assert!(parse_prometheus("# a comment\n\n").unwrap().is_empty());
+    }
+
+    #[test]
+    fn http_server_serves_metrics_and_probes() {
+        let tel = Arc::new(populated());
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let srv = MetricsServer::spawn(listener, Arc::clone(&tel)).unwrap();
+        let addr = srv.addr().to_string();
+        let t = Duration::from_secs(2);
+
+        let (code, body) = http_get(&addr, "/healthz", t).unwrap();
+        assert_eq!((code, body.as_str()), (200, "ok\n"));
+
+        let (code, body) = http_get(&addr, "/metrics", t).unwrap();
+        assert_eq!(code, 200);
+        assert!(parse_prometheus(&body).unwrap().len() > 10);
+
+        let (code, _) = http_get(&addr, "/readyz", t).unwrap();
+        assert_eq!(code, 200);
+        tel.set_state(EngineState::Draining);
+        let (code, body) = http_get(&addr, "/readyz", t).unwrap();
+        assert_eq!(code, 503);
+        assert!(body.contains("draining"));
+        tel.set_state(EngineState::Idle);
+        tel.set_coverage_ok(false);
+        let (code, body) = http_get(&addr, "/readyz", t).unwrap();
+        assert_eq!(code, 503);
+        assert!(body.contains("J-coverage"));
+
+        let (code, _) = http_get(&addr, "/nope", t).unwrap();
+        assert_eq!(code, 404);
+        srv.stop();
+    }
+}

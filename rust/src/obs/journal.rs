@@ -65,10 +65,13 @@ pub enum EventKind {
     /// A checkpoint was written (or loaded, note "resume") at a step
     /// boundary.
     Checkpoint,
+    /// A tenant crossed a configured SLO burn threshold (serve plane);
+    /// the note carries `tenant: slo value > threshold`.
+    SloBurn,
 }
 
 impl EventKind {
-    pub const ALL: [EventKind; 11] = [
+    pub const ALL: [EventKind; 12] = [
         EventKind::Step,
         EventKind::Solve,
         EventKind::Dispatch,
@@ -80,6 +83,7 @@ impl EventKind {
         EventKind::Fault,
         EventKind::Retry,
         EventKind::Checkpoint,
+        EventKind::SloBurn,
     ];
 
     /// Stable wire name, used in the JSONL `kind` field.
@@ -96,6 +100,7 @@ impl EventKind {
             EventKind::Fault => "fault",
             EventKind::Retry => "retry",
             EventKind::Checkpoint => "checkpoint",
+            EventKind::SloBurn => "slo_burn",
         }
     }
 
@@ -362,7 +367,8 @@ mod tests {
                 "combine",
                 "fault",
                 "retry",
-                "checkpoint"
+                "checkpoint",
+                "slo_burn"
             ]
         );
         for k in EventKind::ALL {

@@ -27,14 +27,26 @@
 //! * [`chrome`] — `usec trace`: convert a journal to Chrome Trace Event
 //!   Format (one track per worker plus a master track) for
 //!   `chrome://tracing` / Perfetto, or `--summary` for the top time sinks.
+//! * [`telemetry`] + [`expose`] — the *live* plane: a [`Telemetry`]
+//!   handle of gauges (engine state, readiness, per-worker liveness /
+//!   speed / resident bytes, per-tenant SLO stats) that the engine and
+//!   serve plane publish into at step boundaries, and a
+//!   [`MetricsServer`] scrape endpoint (`--metrics-listen`) serving
+//!   `/metrics` in Prometheus text exposition format plus `/healthz`
+//!   and `/readyz` probes. `usec top` polls it for a refreshing
+//!   cluster view.
 
 pub mod chrome;
+pub mod expose;
 pub mod journal;
 pub mod registry;
+pub mod telemetry;
 
 pub use chrome::{chrome_trace, summarize, trace_cli};
+pub use expose::{http_get, parse_prometheus, render_prometheus, MetricsServer, Sample};
 pub use journal::{load_journal, Event, EventKind, Journal, Recorder};
 pub use registry::{CounterSnapshot, IoCounters, Registry};
+pub use telemetry::{Telemetry, TenantStats};
 
 use crate::util::json::{Json, ObjBuilder};
 

@@ -41,7 +41,12 @@ pub struct CounterSnapshot {
 
 impl CounterSnapshot {
     pub fn to_json(&self) -> Json {
-        let mut b = ObjBuilder::new()
+        // Every key is emitted unconditionally: a snapshot's key set must
+        // be stable across the whole run, or scrapers and diff tools see
+        // fields pop into existence at the step of the first re-dial.
+        // (Untraced runs carry no `counters` at all, so classic dumps are
+        // unaffected.)
+        ObjBuilder::new()
             .num("worker", self.worker as f64)
             .num("orders", self.orders as f64)
             .num("rows", self.rows as f64)
@@ -51,15 +56,10 @@ impl CounterSnapshot {
             .num("frames_rx", self.frames_rx as f64)
             .num("reconnects", self.reconnects as f64)
             .num("recoveries", self.recoveries as f64)
-            .num("migrations", self.migrations as f64);
-        // Dial counters only appear once a backed-off re-dial happened,
-        // so fault-free runs keep the pre-robustness schema bytes.
-        if self.dial_attempts > 0 {
-            b = b
-                .num("dial_attempts", self.dial_attempts as f64)
-                .num("dial_successes", self.dial_successes as f64);
-        }
-        b.build()
+            .num("migrations", self.migrations as f64)
+            .num("dial_attempts", self.dial_attempts as f64)
+            .num("dial_successes", self.dial_successes as f64)
+            .build()
     }
 }
 
@@ -233,19 +233,30 @@ mod tests {
     fn snapshot_json_has_stable_keys() {
         let reg = Registry::new(1);
         reg.add_order(0, 7);
-        let j = reg.snapshot(&[])[0].to_json().to_string();
+        let before = reg.snapshot(&[])[0].to_json().to_string();
         for key in [
             "worker", "orders", "rows", "bytes_tx", "bytes_rx", "frames_tx", "frames_rx",
-            "reconnects", "recoveries", "migrations",
+            "reconnects", "recoveries", "migrations", "dial_attempts", "dial_successes",
         ] {
-            assert!(j.contains(&format!("\"{key}\":")), "missing {key} in {j}");
+            assert!(
+                before.contains(&format!("\"{key}\":")),
+                "missing {key} in {before}"
+            );
         }
-        // dial keys are gated: absent until a re-dial happens
-        assert!(!j.contains("dial_attempts"));
+        assert!(before.contains("\"dial_attempts\":0"));
+        // the key set must not change once a re-dial happens mid-run
         reg.add_dial_attempt(0);
         reg.add_dial_success(0);
-        let j = reg.snapshot(&[])[0].to_json().to_string();
-        assert!(j.contains("\"dial_attempts\":1"));
-        assert!(j.contains("\"dial_successes\":1"));
+        let after = reg.snapshot(&[])[0].to_json().to_string();
+        assert!(after.contains("\"dial_attempts\":1"));
+        assert!(after.contains("\"dial_successes\":1"));
+        let keys = |s: &str| -> Vec<String> {
+            s.split('"')
+                .skip(1)
+                .step_by(2)
+                .map(str::to_string)
+                .collect()
+        };
+        assert_eq!(keys(&before), keys(&after), "key set drifted mid-run");
     }
 }

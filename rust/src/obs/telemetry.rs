@@ -1,0 +1,391 @@
+//! Live telemetry state: gauges and labeled snapshots the scrape
+//! endpoint ([`crate::obs::expose`]) reads while the engine runs.
+//!
+//! The trace journal and `Timeline` are post-hoc — they materialize
+//! after a run drains. A [`Telemetry`] handle is the opposite: a small
+//! bundle of atomics and mutex-guarded snapshots that the engine, the
+//! serve session, and the worker daemon *publish into* at step
+//! boundaries, and that the HTTP exposition thread *reads from* at any
+//! moment, without ever blocking the data path.
+//!
+//! Three kinds of state live here:
+//!
+//! * **gauges** — engine state, readiness, per-worker liveness/speed/
+//!   resident bytes, queue depth, batch width. Plain atomics; a write
+//!   is one `store`.
+//! * **counter snapshots** — the engine re-publishes its
+//!   [`CounterSnapshot`] vector (the same per-worker monotone counters
+//!   that land in `--json-out`) once per step, so scrapes see counters
+//!   that only ever move forward.
+//! * **tenant stats** — the serve plane's per-tenant SLO view
+//!   ([`crate::serve::slo`]): rolling latency quantiles, rows/s,
+//!   queue depth, Busy-rejects, and the `usec_slo_healthy` flag.
+//!
+//! Readiness (`/readyz`) is `state != Draining && coverage_ok`, where
+//! `coverage_ok` is the engine's J-coverage check: every sub-matrix
+//! keeps at least one live replica, i.e. the placement stays feasible
+//! over the transport's live set.
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicU8, Ordering};
+use std::sync::Mutex;
+
+use crate::engine::EngineState;
+use crate::net::lock;
+use crate::obs::registry::CounterSnapshot;
+use crate::util::json::{Json, ObjBuilder};
+
+/// An `f64` gauge stored as atomic bits (one `store` to set).
+#[derive(Default)]
+pub struct Gauge(AtomicU64);
+
+impl Gauge {
+    pub fn set(&self, v: f64) {
+        self.0.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+}
+
+/// A monotone `u64` counter.
+#[derive(Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// One tenant's published SLO snapshot (refreshed each serve step).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TenantStats {
+    /// Requests answered so far (cumulative).
+    pub requests: u64,
+    /// Busy-rejected submits so far (cumulative).
+    pub rejects: u64,
+    /// Requests riding the current batch.
+    pub inflight: u64,
+    /// Requests waiting in the admission queue.
+    pub queued: u64,
+    /// Matrix rows processed for this tenant (cumulative).
+    pub rows: u64,
+    /// Rolling-window latency quantiles (NaN until the first answer).
+    pub latency_p50_ns: f64,
+    pub latency_p99_ns: f64,
+    /// Rows per second since the tenant's first answer.
+    pub rows_per_s: f64,
+    /// False while any configured SLO threshold is burning.
+    pub healthy: bool,
+    /// SLO burn transitions journaled so far (cumulative).
+    pub burns: u64,
+}
+
+impl TenantStats {
+    /// The per-tenant object inside the `--json-out` `slo` key.
+    pub fn to_json(&self, tenant: &str) -> Json {
+        let mut b = ObjBuilder::new()
+            .str("tenant", tenant)
+            .num("requests", self.requests as f64)
+            .num("rejects", self.rejects as f64)
+            .num("rows", self.rows as f64);
+        if self.latency_p50_ns.is_finite() {
+            b = b
+                .num("latency_p50_ns", self.latency_p50_ns)
+                .num("latency_p99_ns", self.latency_p99_ns);
+        }
+        b.num("rows_per_s", self.rows_per_s)
+            .num("healthy", if self.healthy { 1.0 } else { 0.0 })
+            .num("burns", self.burns as f64)
+            .build()
+    }
+}
+
+/// The shared telemetry handle: writers publish, the scrape thread
+/// renders. Create one per process (`Telemetry::new`), share it as
+/// `Arc<Telemetry>`.
+pub struct Telemetry {
+    n: usize,
+    j: usize,
+    state: AtomicU8,
+    coverage_ok: AtomicBool,
+    alive: Vec<AtomicBool>,
+    speeds: Vec<Gauge>,
+    resident: Vec<Gauge>,
+    /// Per-worker monotone counters, republished whole each step.
+    counters: Mutex<Vec<CounterSnapshot>>,
+    pub steps: Counter,
+    pub faults: Counter,
+    pub retries: Counter,
+    pub slo_burns: Counter,
+    pub queue_depth: Gauge,
+    pub batch_width: Gauge,
+    tenants: Mutex<BTreeMap<String, TenantStats>>,
+}
+
+impl fmt::Debug for Telemetry {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("Telemetry")
+            .field("n", &self.n)
+            .field("j", &self.j)
+            .field("state", &self.state_name())
+            .field("ready", &self.ready())
+            .finish_non_exhaustive()
+    }
+}
+
+fn state_to_u8(s: EngineState) -> u8 {
+    match s {
+        EngineState::Idle => 0,
+        EngineState::Stepping => 1,
+        EngineState::Migrating => 2,
+        EngineState::Draining => 3,
+    }
+}
+
+impl Telemetry {
+    /// A handle for a cluster of `n` workers replicating J=`j` ways.
+    /// Workers start presumed-alive and coverage starts ok, so a probe
+    /// racing startup reads "ready" rather than flapping.
+    pub fn new(n: usize, j: usize) -> Telemetry {
+        Telemetry {
+            n,
+            j,
+            state: AtomicU8::new(state_to_u8(EngineState::Idle)),
+            coverage_ok: AtomicBool::new(true),
+            alive: (0..n).map(|_| AtomicBool::new(true)).collect(),
+            speeds: (0..n).map(|_| Gauge::default()).collect(),
+            resident: (0..n).map(|_| Gauge::default()).collect(),
+            counters: Mutex::new(Vec::new()),
+            steps: Counter::default(),
+            faults: Counter::default(),
+            retries: Counter::default(),
+            slo_burns: Counter::default(),
+            queue_depth: Gauge::default(),
+            batch_width: Gauge::default(),
+            tenants: Mutex::new(BTreeMap::new()),
+        }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.n
+    }
+
+    pub fn replication(&self) -> usize {
+        self.j
+    }
+
+    pub fn set_state(&self, s: EngineState) {
+        self.state.store(state_to_u8(s), Ordering::Relaxed);
+    }
+
+    pub fn state_name(&self) -> &'static str {
+        match self.state.load(Ordering::Relaxed) {
+            0 => "idle",
+            1 => "stepping",
+            2 => "migrating",
+            _ => "draining",
+        }
+    }
+
+    pub fn set_coverage_ok(&self, ok: bool) {
+        self.coverage_ok.store(ok, Ordering::Relaxed);
+    }
+
+    pub fn coverage_ok(&self) -> bool {
+        self.coverage_ok.load(Ordering::Relaxed)
+    }
+
+    /// `/readyz` semantics: serving is possible — not draining, every
+    /// sub-matrix still has a live replica (the engine's published
+    /// feasibility check), and at least `J` workers are alive (the
+    /// coarse liveness floor: below the replication factor the cluster
+    /// is degraded even when the placement still happens to cover).
+    pub fn ready(&self) -> bool {
+        self.state.load(Ordering::Relaxed) != state_to_u8(EngineState::Draining)
+            && self.coverage_ok()
+            && self.alive_count() >= self.j
+    }
+
+    pub fn set_alive(&self, alive: &[bool]) {
+        for (slot, &a) in self.alive.iter().zip(alive) {
+            slot.store(a, Ordering::Relaxed);
+        }
+    }
+
+    pub fn worker_alive(&self, w: usize) -> bool {
+        self.alive.get(w).is_some_and(|a| a.load(Ordering::Relaxed))
+    }
+
+    pub fn alive_count(&self) -> usize {
+        self.alive
+            .iter()
+            .filter(|a| a.load(Ordering::Relaxed))
+            .count()
+    }
+
+    pub fn set_speed(&self, w: usize, v: f64) {
+        if let Some(g) = self.speeds.get(w) {
+            g.set(v);
+        }
+    }
+
+    pub fn speed(&self, w: usize) -> f64 {
+        self.speeds.get(w).map_or(0.0, |g| g.get())
+    }
+
+    pub fn set_resident(&self, bytes: &[u64]) {
+        for (g, &b) in self.resident.iter().zip(bytes) {
+            g.set(b as f64);
+        }
+    }
+
+    pub fn resident(&self, w: usize) -> f64 {
+        self.resident.get(w).map_or(0.0, |g| g.get())
+    }
+
+    /// Republish the per-worker counter snapshot (engine, once a step).
+    pub fn set_counters(&self, snap: Vec<CounterSnapshot>) {
+        *lock(&self.counters) = snap;
+    }
+
+    pub fn counters(&self) -> Vec<CounterSnapshot> {
+        lock(&self.counters).clone()
+    }
+
+    /// Replace the per-tenant SLO snapshot (serve plane, once a step).
+    pub fn set_tenants(&self, stats: BTreeMap<String, TenantStats>) {
+        *lock(&self.tenants) = stats;
+    }
+
+    pub fn tenants(&self) -> BTreeMap<String, TenantStats> {
+        lock(&self.tenants).clone()
+    }
+
+    /// True iff no tenant is currently burning an SLO threshold.
+    pub fn slo_healthy(&self) -> bool {
+        lock(&self.tenants).values().all(|t| t.healthy)
+    }
+
+    /// The `--json-out` `slo` key: one object per tenant, or `None`
+    /// when no tenant was ever served (key stays absent, keeping
+    /// non-serve dumps byte-identical).
+    pub fn slo_json(&self) -> Option<Json> {
+        let tenants = lock(&self.tenants);
+        if tenants.is_empty() {
+            return None;
+        }
+        Some(Json::Arr(
+            tenants.iter().map(|(t, s)| s.to_json(t)).collect(),
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fresh_handle_is_ready_and_idle() {
+        let t = Telemetry::new(3, 2);
+        assert_eq!(t.workers(), 3);
+        assert_eq!(t.replication(), 2);
+        assert_eq!(t.state_name(), "idle");
+        assert!(t.ready());
+        assert_eq!(t.alive_count(), 3);
+        assert!(t.slo_healthy(), "no tenants ⇒ vacuously healthy");
+        assert!(t.slo_json().is_none());
+    }
+
+    #[test]
+    fn readiness_tracks_drain_and_coverage() {
+        let t = Telemetry::new(3, 1);
+        t.set_state(EngineState::Stepping);
+        assert!(t.ready());
+        t.set_coverage_ok(false);
+        assert!(!t.ready(), "lost J-coverage ⇒ not ready");
+        t.set_coverage_ok(true);
+        assert!(t.ready());
+        t.set_state(EngineState::Draining);
+        assert!(!t.ready(), "draining ⇒ not ready");
+        assert_eq!(t.state_name(), "draining");
+    }
+
+    #[test]
+    fn readiness_needs_at_least_j_alive_workers() {
+        let t = Telemetry::new(3, 2);
+        t.set_alive(&[true, true, false]);
+        assert!(t.ready(), "2 alive ≥ J=2");
+        t.set_alive(&[true, false, false]);
+        assert!(!t.ready(), "1 alive < J=2 ⇒ degraded even if covered");
+        t.set_alive(&[true, true, true]);
+        assert!(t.ready());
+    }
+
+    #[test]
+    fn gauges_and_counters_round_trip() {
+        let t = Telemetry::new(2, 1);
+        t.set_alive(&[true, false]);
+        assert_eq!(t.alive_count(), 1);
+        assert!(t.worker_alive(0) && !t.worker_alive(1));
+        t.set_speed(1, 2.5);
+        assert_eq!(t.speed(1), 2.5);
+        t.set_resident(&[100, 200]);
+        assert_eq!(t.resident(1), 200.0);
+        t.steps.inc();
+        t.faults.add(3);
+        assert_eq!(t.steps.get(), 1);
+        assert_eq!(t.faults.get(), 3);
+        // out-of-range worker indices are ignored, not panics
+        t.set_speed(9, 1.0);
+        assert!(!t.worker_alive(9));
+    }
+
+    #[test]
+    fn tenant_snapshot_feeds_health_and_json() {
+        let t = Telemetry::new(1, 1);
+        let mut m = BTreeMap::new();
+        m.insert(
+            "alice".to_string(),
+            TenantStats {
+                requests: 4,
+                latency_p50_ns: 1e6,
+                latency_p99_ns: 2e6,
+                rows_per_s: 100.0,
+                healthy: true,
+                ..Default::default()
+            },
+        );
+        m.insert(
+            "bob".to_string(),
+            TenantStats {
+                requests: 1,
+                rejects: 2,
+                healthy: false,
+                burns: 1,
+                ..Default::default()
+            },
+        );
+        t.set_tenants(m);
+        assert!(!t.slo_healthy());
+        let j = t.slo_json().unwrap().to_string();
+        assert!(j.starts_with('[') && j.ends_with(']'));
+        assert!(j.contains("\"tenant\":\"alice\""));
+        assert!(j.contains("\"latency_p50_ns\":"));
+        assert!(j.contains("\"healthy\":0"), "bob is burning: {j}");
+        // bob never answered: latency keys absent from his object
+        let bob = j.split("\"tenant\":\"bob\"").nth(1).unwrap();
+        assert!(!bob.contains("latency_p50_ns"));
+    }
+}

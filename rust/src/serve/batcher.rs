@@ -69,6 +69,15 @@ impl ContinuousBatcher {
         self.active.iter().map(|a| a.req.id).collect()
     }
 
+    /// In-flight columns per tenant (for telemetry snapshots).
+    pub fn tenant_widths(&self) -> std::collections::BTreeMap<String, u64> {
+        let mut widths = std::collections::BTreeMap::new();
+        for a in &self.active {
+            *widths.entry(a.req.tenant.clone()).or_insert(0) += 1;
+        }
+        widths
+    }
+
     /// Seat a picked request in a free column. The initial iterate is
     /// query-specific: the seed basis vector for personalized PageRank,
     /// the query vector itself for a raw mat-vec, zero for ridge.
@@ -236,12 +245,16 @@ mod tests {
             0.0,
             50,
         ));
+        let widths = b.tenant_widths();
+        assert_eq!(widths.get("a"), Some(&1));
+        assert_eq!(widths.get("b"), Some(&1));
         let y = b.block().unwrap(); // pretend A = I for the test
         let (resp, worst) = b.apply(&y);
         assert_eq!(resp.len(), 1);
         assert_eq!(resp[0].id, 1);
         assert_eq!(b.width(), 1);
         assert_eq!(b.active_ids(), vec![2]);
+        assert_eq!(b.tenant_widths().get("a"), None);
         assert!(worst.is_finite());
         assert!(b.room() == 3);
     }

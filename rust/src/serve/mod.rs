@@ -17,6 +17,10 @@
 //!   individually when their own residual converges.
 //! * [`session`] — [`ServeSession`], the glue driving the
 //!   [`crate::engine::ClusterEngine`] step primitives under the batch.
+//! * [`slo`] — per-tenant SLO tracking: rolling latency quantiles,
+//!   Busy-reject rates, and burn thresholds (`--slo-p99-ms`,
+//!   `--slo-reject-rate`) journaled as `slo_burn` events and published
+//!   through the telemetry plane (`--metrics-listen`).
 //! * [`wire`] / [`server`] — submit/poll over the framed TCP codec
 //!   (`usec serve --listen`, [`ServeClient`] on the client side).
 //!
@@ -32,6 +36,7 @@ pub mod queue;
 pub mod request;
 pub mod server;
 pub mod session;
+pub mod slo;
 pub mod wire;
 
 pub use batcher::ContinuousBatcher;
@@ -40,14 +45,17 @@ pub use queue::AdmissionQueue;
 pub use request::{Query, Request, Response};
 pub use server::{serve_listen, ServeOpts};
 pub use session::{serve_matrix, ServeSession, SessionOpts};
+pub use slo::{SloBurn, SloThresholds, SloTracker};
 pub use wire::{ServeClient, ServeMsg};
 
 use std::net::TcpListener;
+use std::sync::Arc;
 use std::time::Duration;
 
 use crate::cli::{ArgSpec, Args};
 use crate::config::RunConfig;
 use crate::error::{Error, Result};
+use crate::obs::{MetricsServer, Telemetry};
 
 /// Serving flags layered on top of the elastic-run flags.
 pub fn serve_arg_specs() -> Vec<ArgSpec> {
@@ -59,6 +67,19 @@ pub fn serve_arg_specs() -> Vec<ArgSpec> {
         ArgSpec::opt("max-width", "8", "max batch width B (columns per step)"),
         ArgSpec::opt("exit-after", "0", "server: exit after N served requests (0 = no cap)"),
         ArgSpec::opt("idle-ms", "0", "server: exit after this long idle (0 = never)"),
+        ArgSpec::opt(
+            "metrics-listen",
+            "",
+            "server: serve /metrics, /healthz, /readyz on this host:port",
+        ),
+        ArgSpec::opt("slo-p99-ms", "0", "burn when rolling p99 latency exceeds this (0 = off)"),
+        ArgSpec::opt(
+            "slo-reject-rate",
+            "0",
+            "burn when rejects/submits exceeds this fraction (0 = off)",
+        ),
+        ArgSpec::opt("slo-min-requests", "1", "evaluate SLO burns only past this sample count"),
+        ArgSpec::opt("slo-window-ms", "10000", "rolling SLO window width"),
         ArgSpec::opt("tenant", "t0", "client: tenant tag"),
         ArgSpec::opt("seed-node", "0", "client: personalized PageRank seed node"),
         ArgSpec::opt("damping", "0.85", "client: PageRank damping d"),
@@ -88,6 +109,19 @@ pub fn serve_cli(argv: &[String]) -> Result<()> {
 
 fn serve_server(args: &Args, listen: &str) -> Result<()> {
     let cfg = RunConfig::from_args(args)?;
+    let slo = SloThresholds {
+        latency_p99_ms: args.get_f64("slo-p99-ms")?,
+        reject_rate: args.get_f64("slo-reject-rate")?,
+        min_requests: args.get_u64("slo-min-requests")?,
+    };
+    let metrics_listen = args.get("metrics-listen").unwrap_or("").to_string();
+    // the telemetry plane exists when it has a consumer: a scrape
+    // endpoint, or SLO thresholds that need evaluating
+    let telemetry = if !metrics_listen.is_empty() || slo.enabled() {
+        Some(Arc::new(Telemetry::new(cfg.n, cfg.j)))
+    } else {
+        None
+    };
     let opts = ServeOpts {
         exit_after: args.get_usize("exit-after")?,
         idle_ms: args.get_u64("idle-ms")?,
@@ -95,9 +129,24 @@ fn serve_server(args: &Args, listen: &str) -> Result<()> {
             queue_cap: args.get_usize("queue-cap")?,
             quantum: args.get_u64("quantum")?,
             max_width: args.get_usize("max-width")?,
+            slo,
+            slo_window: Duration::from_millis(args.get_u64("slo-window-ms")?.max(1)),
         },
+        telemetry: telemetry.clone(),
     };
     let listener = TcpListener::bind(listen)?;
+    let metrics = match (&telemetry, metrics_listen.is_empty()) {
+        (Some(tel), false) => {
+            let ml = TcpListener::bind(&metrics_listen)?;
+            let srv = MetricsServer::spawn(ml, Arc::clone(tel))?;
+            println!(
+                "metrics on http://{}/metrics (probes /healthz, /readyz)",
+                srv.addr()
+            );
+            Some(srv)
+        }
+        _ => None,
+    };
     println!(
         "serving q={} matrix on {} (B ≤ {}, queue {}, transport={})",
         cfg.q,
@@ -107,6 +156,9 @@ fn serve_server(args: &Args, listen: &str) -> Result<()> {
         if cfg.is_distributed() { "tcp" } else { "local" },
     );
     let tl = serve_listen(listener, &cfg, &opts)?;
+    if let Some(m) = metrics {
+        m.stop();
+    }
     if let Some(s) = tl.serve() {
         println!(
             "served {} request(s) over {} elastic step(s): p50 {:.3} ms, \
@@ -120,7 +172,7 @@ fn serve_server(args: &Args, listen: &str) -> Result<()> {
         );
     }
     if !cfg.json_out.is_empty() {
-        let doc = crate::util::json::ObjBuilder::new()
+        let mut doc = crate::util::json::ObjBuilder::new()
             .str("app", "serve")
             .str(
                 "transport",
@@ -129,8 +181,13 @@ fn serve_server(args: &Args, listen: &str) -> Result<()> {
             .num("n", cfg.n as f64)
             .num("max_width", opts.session.max_width as f64)
             .num("seed", cfg.seed as f64)
-            .val("timeline", tl.to_json())
-            .build();
+            .val("timeline", tl.to_json());
+        // final per-tenant SLO snapshot — present only when the
+        // telemetry plane was on, so classic dumps stay byte-identical
+        if let Some(slo) = telemetry.as_ref().and_then(|t| t.slo_json()) {
+            doc = doc.val("slo", slo);
+        }
+        let doc = doc.build();
         std::fs::write(&cfg.json_out, format!("{doc}\n"))?;
         println!("wrote serve timeline JSON to {}", cfg.json_out);
     }

@@ -23,6 +23,12 @@ pub struct AdmissionQueue {
     len: usize,
     next_id: u64,
     peak_depth: usize,
+    /// Cumulative valid submits per tenant (admitted or Busy-rejected).
+    admits: BTreeMap<String, u64>,
+    /// Cumulative `Error::Busy` rejections per tenant. Malformed queries
+    /// (`Error::Config`) are the caller's bug, not load shed, and are
+    /// not counted against the tenant's SLO.
+    rejects: BTreeMap<String, u64>,
 }
 
 impl AdmissionQueue {
@@ -34,6 +40,8 @@ impl AdmissionQueue {
             len: 0,
             next_id: 1,
             peak_depth: 0,
+            admits: BTreeMap::new(),
+            rejects: BTreeMap::new(),
         }
     }
 
@@ -53,11 +61,13 @@ impl AdmissionQueue {
             return Err(Error::Config("max_steps must be at least 1".into()));
         }
         if self.len >= self.capacity {
+            *self.rejects.entry(tenant.to_string()).or_insert(0) += 1;
             return Err(Error::busy(format!(
                 "admission queue full ({} requests queued, capacity {})",
                 self.len, self.capacity
             )));
         }
+        *self.admits.entry(tenant.to_string()).or_insert(0) += 1;
         let id = self.next_id;
         self.next_id += 1;
         self.tenants
@@ -111,6 +121,16 @@ impl AdmissionQueue {
     pub fn peak_depth(&self) -> usize {
         self.peak_depth
     }
+
+    /// Cumulative admitted submits per tenant since queue creation.
+    pub fn admits(&self) -> &BTreeMap<String, u64> {
+        &self.admits
+    }
+
+    /// Cumulative Busy rejections per tenant since queue creation.
+    pub fn rejects(&self) -> &BTreeMap<String, u64> {
+        &self.rejects
+    }
 }
 
 #[cfg(test)]
@@ -154,6 +174,12 @@ mod tests {
         // draining one slot re-opens admission
         q.pop_for("a").unwrap();
         q.submit(16, "c", ppr(2), 1e-6, 50).unwrap();
+        // admission accounting: the Busy reject is attributed to "c",
+        // the successful retry counted as its admit
+        assert_eq!(q.rejects().get("c"), Some(&1));
+        assert_eq!(q.admits().get("c"), Some(&1));
+        assert_eq!(q.admits().get("a"), Some(&1));
+        assert_eq!(q.rejects().get("a"), None);
     }
 
     #[test]
@@ -162,5 +188,8 @@ mod tests {
         assert!(q.submit(16, "a", ppr(99), 1e-6, 50).is_err());
         assert!(q.submit(16, "a", ppr(0), 1e-6, 0).is_err());
         assert!(q.is_empty(), "rejected submits must not occupy slots");
+        // malformed submits are neither admits nor Busy rejects
+        assert!(q.admits().is_empty());
+        assert!(q.rejects().is_empty());
     }
 }

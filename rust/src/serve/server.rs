@@ -17,6 +17,7 @@ use std::time::{Duration, Instant};
 use crate::config::types::RunConfig;
 use crate::error::{Error, Result};
 use crate::metrics::Timeline;
+use crate::obs::Telemetry;
 
 use super::queue::AdmissionQueue;
 use super::request::Response;
@@ -32,6 +33,9 @@ pub struct ServeOpts {
     /// (0 = never idle-exit).
     pub idle_ms: u64,
     pub session: SessionOpts,
+    /// Live telemetry handle to publish into (`--metrics-listen` or SLO
+    /// flags); `None` keeps the serving loop telemetry-free.
+    pub telemetry: Option<Arc<Telemetry>>,
 }
 
 /// Is this I/O error just a read timeout (keep polling)?
@@ -125,6 +129,9 @@ pub fn serve_listen(
     opts: &ServeOpts,
 ) -> Result<Timeline> {
     let mut session = ServeSession::build(cfg, &opts.session)?;
+    if opts.telemetry.is_some() {
+        session.set_telemetry(opts.telemetry.clone());
+    }
     let q = cfg.q;
     let queue = session.queue_handle();
     let done: Arc<Mutex<HashMap<u64, Response>>> = Arc::new(Mutex::new(HashMap::new()));
@@ -220,6 +227,7 @@ mod tests {
             exit_after: 4,
             idle_ms: 0,
             session: SessionOpts::default(),
+            telemetry: None,
         };
         let server = {
             let cfg = cfg.clone();
@@ -305,6 +313,7 @@ mod tests {
             exit_after: 0,
             idle_ms: 50,
             session: SessionOpts::default(),
+            telemetry: None,
         };
         let tl = serve_listen(listener, &cfg, &opts).unwrap();
         assert_eq!(tl.serve().unwrap().requests, 0);

@@ -20,18 +20,20 @@
 //! cluster.
 
 use std::sync::{Arc, Mutex};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::config::types::RunConfig;
 use crate::engine::ClusterEngine;
 use crate::error::{Error, Result};
 use crate::linalg::{gen, Matrix};
 use crate::metrics::{stats, ServeSummary, Timeline};
+use crate::obs::{Event, EventKind, Telemetry};
 
 use super::batcher::ContinuousBatcher;
 use super::fairness::DrrScheduler;
 use super::queue::AdmissionQueue;
 use super::request::{Query, Response};
+use super::slo::{SloThresholds, SloTracker};
 
 /// Request-plane knobs of a serving session.
 #[derive(Debug, Clone)]
@@ -42,6 +44,10 @@ pub struct SessionOpts {
     pub quantum: u64,
     /// Maximum batch width `B` (columns coalesced per step).
     pub max_width: usize,
+    /// Per-tenant SLO burn thresholds (`0` disables a threshold).
+    pub slo: SloThresholds,
+    /// Rolling window the SLO quantiles and burn checks look over.
+    pub slo_window: Duration,
 }
 
 impl Default for SessionOpts {
@@ -50,6 +56,8 @@ impl Default for SessionOpts {
             queue_cap: 64,
             quantum: 1,
             max_width: 8,
+            slo: SloThresholds::default(),
+            slo_window: Duration::from_secs(10),
         }
     }
 }
@@ -67,6 +75,8 @@ pub struct ServeSession {
     rows_done: u64,
     /// First served step (rows/s clock starts here).
     started: Option<Instant>,
+    slo: SloTracker,
+    telemetry: Option<Arc<Telemetry>>,
 }
 
 /// Transpose a dense matrix (setup-time only).
@@ -122,6 +132,8 @@ impl ServeSession {
             requests_done: 0,
             rows_done: 0,
             started: None,
+            slo: SloTracker::new(opts.slo, opts.slo_window),
+            telemetry: None,
         })
     }
 
@@ -138,6 +150,62 @@ impl ServeSession {
     /// Mutable engine access (tests inject faults through this).
     pub fn engine_mut(&mut self) -> &mut ClusterEngine {
         &mut self.engine
+    }
+
+    /// Attach (or detach) the live telemetry plane. The handle is
+    /// forwarded to the engine (state/readiness/worker gauges) and the
+    /// session starts publishing its per-tenant SLO snapshot, queue
+    /// depth, and batch width at every step boundary. With no telemetry
+    /// attached, SLO tracking is fully dormant: no journal events, no
+    /// extra work in the step loop.
+    pub fn set_telemetry(&mut self, tel: Option<Arc<Telemetry>>) {
+        self.engine.set_telemetry(tel.clone());
+        self.telemetry = tel;
+        self.tick_slo();
+    }
+
+    /// The attached telemetry handle, if any.
+    pub fn telemetry(&self) -> Option<&Arc<Telemetry>> {
+        self.telemetry.as_ref()
+    }
+
+    /// Re-evaluate per-tenant SLOs and publish the serve-plane gauges.
+    /// Burn transitions are journaled as `slo_burn` events when the
+    /// engine has a recorder. No-op without telemetry.
+    fn tick_slo(&mut self) {
+        if self.telemetry.is_none() {
+            return;
+        }
+        let now = Instant::now();
+        let (admits, rejects, queued, depth) = {
+            let q = self.queue.lock().unwrap();
+            let queued: std::collections::BTreeMap<String, u64> = q
+                .waiting_tenants()
+                .into_iter()
+                .map(|t| {
+                    let d = q.depth_of(&t) as u64;
+                    (t, d)
+                })
+                .collect();
+            (q.admits().clone(), q.rejects().clone(), queued, q.len())
+        };
+        let inflight = self.batcher.tenant_widths();
+        let (snapshot, burns) = self.slo.tick(now, &admits, &rejects, &queued, &inflight);
+        if !burns.is_empty() {
+            if let Some(rec) = self.engine.recorder_handle() {
+                for b in &burns {
+                    rec.emit(
+                        Event::new(EventKind::SloBurn, self.step, rec.now_ns())
+                            .note(b.note()),
+                    );
+                }
+            }
+        }
+        let t = self.telemetry.as_ref().expect("gated above");
+        t.slo_burns.add(burns.len() as u64);
+        t.queue_depth.set(depth as f64);
+        t.batch_width.set(self.batcher.width() as f64);
+        t.set_tenants(snapshot);
     }
 
     /// Submit a request into the admission queue.
@@ -174,6 +242,7 @@ impl ServeSession {
             }
         }
         if self.batcher.is_empty() {
+            self.tick_slo();
             return Ok(Vec::new());
         }
         if self.started.is_none() {
@@ -187,7 +256,10 @@ impl ServeSession {
             Some(pair) => pair,
             // infeasible (too few workers): a skip record was pushed;
             // the batch stays seated and retries at the next boundary
-            None => return Ok(Vec::new()),
+            None => {
+                self.tick_slo();
+                return Ok(Vec::new());
+            }
         };
         let (responses, worst) = self.batcher.apply(&y);
         // the timeline metric is the worst still-active residual; the
@@ -199,10 +271,16 @@ impl ServeSession {
         };
         self.engine.complete_block_step(tail, &next, worst)?;
         self.rows_done += (self.q * width) as u64;
+        let now = Instant::now();
         for r in &responses {
             self.latencies_ns.push(r.latency_ns as f64);
+            if self.telemetry.is_some() {
+                self.slo
+                    .record_response(now, &r.tenant, r.latency_ns, (r.steps * self.q) as u64);
+            }
         }
         self.requests_done += responses.len() as u64;
+        self.tick_slo();
         Ok(responses)
     }
 
@@ -413,6 +491,62 @@ mod tests {
         assert!(summary.latency_p50_ns.is_nan());
         let tl = s.finish().unwrap();
         assert_eq!(tl.len(), 0);
+    }
+
+    #[test]
+    fn telemetry_publishes_tenant_slo_series() {
+        use crate::obs::Telemetry;
+        let c = cfg(24);
+        let mut s = ServeSession::build(
+            &c,
+            &SessionOpts {
+                // any real latency exceeds a 1ns p99 budget → guaranteed burn
+                slo: crate::serve::SloThresholds {
+                    latency_p99_ms: 1e-6,
+                    ..Default::default()
+                },
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let tel = Arc::new(Telemetry::new(3, 2));
+        s.set_telemetry(Some(Arc::clone(&tel)));
+        s.submit(
+            "alice",
+            Query::Pagerank {
+                seed_node: 0,
+                damping: 0.85,
+            },
+            1e-7,
+            100,
+        )
+        .unwrap();
+        s.submit(
+            "bob",
+            Query::Matvec {
+                v: vec![1.0; 24],
+            },
+            1e-6,
+            1,
+        )
+        .unwrap();
+        s.run_until_drained(500).unwrap();
+        let tenants = tel.tenants();
+        assert_eq!(
+            tenants.keys().cloned().collect::<Vec<_>>(),
+            vec!["alice".to_string(), "bob".to_string()]
+        );
+        let alice = &tenants["alice"];
+        assert_eq!(alice.requests, 1);
+        assert!(alice.latency_p50_ns > 0.0);
+        assert!(!alice.healthy, "1ns p99 budget must be burning");
+        assert!(tel.slo_burns.get() >= 2, "both tenants burned");
+        assert!(!tel.slo_healthy());
+        assert!(tel.slo_json().is_some());
+        // gauges settle to the drained state
+        assert_eq!(tel.queue_depth.get(), 0.0);
+        assert_eq!(tel.batch_width.get(), 0.0);
+        s.finish().unwrap();
     }
 
     #[test]

@@ -1,0 +1,348 @@
+//! Per-tenant SLO tracking for the serve plane.
+//!
+//! The [`SloTracker`] rides inside a [`crate::serve::ServeSession`]:
+//! every retired response is recorded against its tenant's rolling
+//! latency histogram ([`crate::metrics::RollingHistogram`]), every
+//! Busy-reject is counted at admission, and once per step the session
+//! calls [`SloTracker::tick`], which
+//!
+//! 1. recomputes each tenant's rolling p50/p99 latency, rows/s, queue
+//!    depth, in-flight width, and Busy-reject rate,
+//! 2. evaluates the configured burn thresholds ([`SloThresholds`]),
+//! 3. reports healthy→burning transitions as [`SloBurn`]s — the
+//!    session journals each one as an `EventKind::SloBurn` event and
+//!    bumps the `usec_slo_burns_total` counter — and
+//! 4. returns the per-tenant snapshot the telemetry plane publishes as
+//!    `usec_tenant_*` / `usec_slo_healthy` series.
+//!
+//! Thresholds default to disabled (0), so a session without SLO flags
+//! tracks stats but never burns — and with no telemetry attached the
+//! whole tracker is invisible: no journal events, no wire or JSON
+//! changes.
+
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+use crate::metrics::RollingHistogram;
+use crate::obs::telemetry::TenantStats;
+
+/// Ring positions per SLO window (decay granularity = window / slots).
+const WINDOW_SLOTS: usize = 10;
+
+/// Burn thresholds; `0` disables a threshold.
+#[derive(Debug, Clone, Copy)]
+pub struct SloThresholds {
+    /// Burn when the rolling p99 submit→answer latency exceeds this
+    /// many milliseconds.
+    pub latency_p99_ms: f64,
+    /// Burn when `rejects / (admits + rejects)` exceeds this fraction.
+    pub reject_rate: f64,
+    /// Evaluate a threshold only once this many samples back it
+    /// (answers in the window for latency, submits for reject rate).
+    pub min_requests: u64,
+}
+
+impl Default for SloThresholds {
+    fn default() -> Self {
+        SloThresholds {
+            latency_p99_ms: 0.0,
+            reject_rate: 0.0,
+            min_requests: 1,
+        }
+    }
+}
+
+impl SloThresholds {
+    pub fn enabled(&self) -> bool {
+        self.latency_p99_ms > 0.0 || self.reject_rate > 0.0
+    }
+}
+
+/// One healthy→burning transition, ready to journal.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SloBurn {
+    pub tenant: String,
+    /// Which threshold fired: `latency_p99` or `reject_rate`.
+    pub slo: &'static str,
+    pub value: f64,
+    pub threshold: f64,
+}
+
+impl SloBurn {
+    pub fn note(&self) -> String {
+        format!(
+            "{}: {} {:.3} > {:.3}",
+            self.tenant, self.slo, self.value, self.threshold
+        )
+    }
+}
+
+#[derive(Debug)]
+struct TenantTrack {
+    latency: RollingHistogram,
+    answered: u64,
+    rows: u64,
+    first_answer: Option<Instant>,
+    healthy: bool,
+    burns: u64,
+}
+
+impl TenantTrack {
+    fn new(window: Duration) -> TenantTrack {
+        TenantTrack {
+            latency: RollingHistogram::new(window, WINDOW_SLOTS),
+            answered: 0,
+            rows: 0,
+            first_answer: None,
+            healthy: true,
+            burns: 0,
+        }
+    }
+}
+
+/// Rolling per-tenant SLO state (owned by the serve session).
+#[derive(Debug)]
+pub struct SloTracker {
+    thresholds: SloThresholds,
+    window: Duration,
+    tenants: BTreeMap<String, TenantTrack>,
+}
+
+impl SloTracker {
+    pub fn new(thresholds: SloThresholds, window: Duration) -> SloTracker {
+        SloTracker {
+            thresholds,
+            window,
+            tenants: BTreeMap::new(),
+        }
+    }
+
+    pub fn thresholds(&self) -> &SloThresholds {
+        &self.thresholds
+    }
+
+    fn track(&mut self, tenant: &str) -> &mut TenantTrack {
+        let window = self.window;
+        self.tenants
+            .entry(tenant.to_string())
+            .or_insert_with(|| TenantTrack::new(window))
+    }
+
+    /// Record one retired response (rows = matrix rows the request's
+    /// column contributed over its lifetime).
+    pub fn record_response(&mut self, now: Instant, tenant: &str, latency_ns: u64, rows: u64) {
+        let t = self.track(tenant);
+        t.latency.push_at(now, latency_ns as f64);
+        t.answered += 1;
+        t.rows += rows;
+        t.first_answer.get_or_insert(now);
+    }
+
+    /// Re-evaluate every tenant and build the telemetry snapshot.
+    /// `admits`/`rejects` are cumulative per-tenant submit outcomes
+    /// (from the admission queue); `queued`/`inflight` are current
+    /// depths. Returns the snapshot plus any healthy→burning
+    /// transitions since the previous tick.
+    pub fn tick(
+        &mut self,
+        now: Instant,
+        admits: &BTreeMap<String, u64>,
+        rejects: &BTreeMap<String, u64>,
+        queued: &BTreeMap<String, u64>,
+        inflight: &BTreeMap<String, u64>,
+    ) -> (BTreeMap<String, TenantStats>, Vec<SloBurn>) {
+        // a tenant rejected before its first answer still needs a row
+        for tenant in admits.keys().chain(rejects.keys()) {
+            self.track(tenant);
+        }
+
+        let th = self.thresholds;
+        let mut snapshot = BTreeMap::new();
+        let mut burns = Vec::new();
+        for (tenant, t) in &mut self.tenants {
+            let p50 = t.latency.quantile_at(now, 0.5);
+            let p99 = t.latency.quantile_at(now, 0.99);
+            let in_window = t.latency.count_at(now);
+            let rej = rejects.get(tenant).copied().unwrap_or(0);
+            let adm = admits.get(tenant).copied().unwrap_or(0);
+            let submits = adm + rej;
+
+            let mut burn: Option<SloBurn> = None;
+            if th.latency_p99_ms > 0.0 && in_window >= th.min_requests {
+                let p99_ms = p99 / 1e6;
+                if p99_ms > th.latency_p99_ms {
+                    burn = Some(SloBurn {
+                        tenant: tenant.clone(),
+                        slo: "latency_p99",
+                        value: p99_ms,
+                        threshold: th.latency_p99_ms,
+                    });
+                }
+            }
+            if burn.is_none() && th.reject_rate > 0.0 && submits >= th.min_requests {
+                let rate = rej as f64 / submits as f64;
+                if rate > th.reject_rate {
+                    burn = Some(SloBurn {
+                        tenant: tenant.clone(),
+                        slo: "reject_rate",
+                        value: rate,
+                        threshold: th.reject_rate,
+                    });
+                }
+            }
+
+            let burning = burn.is_some();
+            if burning && t.healthy {
+                t.burns += 1;
+                burns.push(burn.unwrap());
+            }
+            t.healthy = !burning;
+
+            let rows_per_s = match t.first_answer {
+                Some(first) if t.rows > 0 => {
+                    let dt = now.saturating_duration_since(first).as_secs_f64();
+                    if dt > 0.0 {
+                        t.rows as f64 / dt
+                    } else {
+                        0.0
+                    }
+                }
+                _ => 0.0,
+            };
+
+            snapshot.insert(
+                tenant.clone(),
+                TenantStats {
+                    requests: t.answered,
+                    rejects: rej,
+                    inflight: inflight.get(tenant).copied().unwrap_or(0),
+                    queued: queued.get(tenant).copied().unwrap_or(0),
+                    rows: t.rows,
+                    latency_p50_ns: p50,
+                    latency_p99_ns: p99,
+                    rows_per_s,
+                    healthy: t.healthy,
+                    burns: t.burns,
+                },
+            );
+        }
+        (snapshot, burns)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn maps(
+        pairs: &[(&str, u64)],
+    ) -> BTreeMap<String, u64> {
+        pairs
+            .iter()
+            .map(|(k, v)| (k.to_string(), *v))
+            .collect()
+    }
+
+    #[test]
+    fn disabled_thresholds_never_burn() {
+        let mut tr = SloTracker::new(SloThresholds::default(), Duration::from_secs(10));
+        let now = Instant::now();
+        tr.record_response(now, "alice", 500_000_000, 100); // 500ms
+        let (snap, burns) = tr.tick(
+            now,
+            &maps(&[("alice", 1)]),
+            &maps(&[("alice", 9)]),
+            &maps(&[]),
+            &maps(&[]),
+        );
+        assert!(burns.is_empty());
+        let a = &snap["alice"];
+        assert!(a.healthy);
+        assert_eq!(a.requests, 1);
+        assert_eq!(a.rejects, 9);
+        assert!(a.latency_p50_ns > 4e8);
+    }
+
+    #[test]
+    fn latency_burn_fires_once_per_transition_and_recovers() {
+        let th = SloThresholds {
+            latency_p99_ms: 10.0,
+            ..Default::default()
+        };
+        let mut tr = SloTracker::new(th, Duration::from_millis(500));
+        let now = Instant::now();
+        tr.record_response(now, "alice", 50_000_000, 10); // 50ms > 10ms
+        let empty = maps(&[]);
+        let (snap, burns) = tr.tick(now, &empty, &empty, &empty, &empty);
+        assert_eq!(burns.len(), 1);
+        assert_eq!(burns[0].slo, "latency_p99");
+        assert!(!snap["alice"].healthy);
+        assert_eq!(snap["alice"].burns, 1);
+
+        // still burning: no new transition
+        let (_, burns) = tr.tick(now, &empty, &empty, &empty, &empty);
+        assert!(burns.is_empty());
+
+        // window slides past the slow sample: healthy again
+        let later = now + Duration::from_secs(2);
+        let (snap, burns) = tr.tick(later, &empty, &empty, &empty, &empty);
+        assert!(burns.is_empty());
+        assert!(snap["alice"].healthy, "recovered once the window drained");
+        assert_eq!(snap["alice"].burns, 1, "burn count is cumulative");
+    }
+
+    #[test]
+    fn reject_rate_burn_counts_busy_rejects() {
+        let th = SloThresholds {
+            reject_rate: 0.5,
+            min_requests: 4,
+            ..Default::default()
+        };
+        let mut tr = SloTracker::new(th, Duration::from_secs(10));
+        let now = Instant::now();
+        // 1 admit, 2 rejects → below min_requests: no burn yet
+        let (snap, burns) = tr.tick(
+            now,
+            &maps(&[("bob", 1)]),
+            &maps(&[("bob", 2)]),
+            &maps(&[]),
+            &maps(&[]),
+        );
+        assert!(burns.is_empty());
+        assert!(snap["bob"].healthy);
+        // 1 admit, 3 rejects → rate 0.75 > 0.5 with 4 submits
+        let (snap, burns) = tr.tick(
+            now,
+            &maps(&[("bob", 1)]),
+            &maps(&[("bob", 3)]),
+            &maps(&[]),
+            &maps(&[]),
+        );
+        assert_eq!(burns.len(), 1);
+        assert_eq!(burns[0].slo, "reject_rate");
+        assert!(burns[0].note().contains("reject_rate"));
+        assert!(!snap["bob"].healthy);
+    }
+
+    #[test]
+    fn snapshot_carries_depths_and_rates() {
+        let mut tr = SloTracker::new(SloThresholds::default(), Duration::from_secs(10));
+        let t0 = Instant::now();
+        tr.record_response(t0, "alice", 1_000_000, 480);
+        let later = t0 + Duration::from_secs(2);
+        tr.record_response(later, "alice", 2_000_000, 480);
+        let (snap, _) = tr.tick(
+            later,
+            &maps(&[("alice", 2)]),
+            &maps(&[]),
+            &maps(&[("alice", 3)]),
+            &maps(&[("alice", 2)]),
+        );
+        let a = &snap["alice"];
+        assert_eq!(a.queued, 3);
+        assert_eq!(a.inflight, 2);
+        assert_eq!(a.rows, 960);
+        // 960 rows over 2s
+        assert!((a.rows_per_s - 480.0).abs() < 1.0, "rows/s {}", a.rows_per_s);
+    }
+}

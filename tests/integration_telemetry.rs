@@ -1,0 +1,327 @@
+//! Acceptance: the live telemetry plane under load. A resident
+//! 3-worker TCP serve cluster exposes `/metrics`, `/healthz`, `/readyz`
+//! while two tenants' requests drain; concurrent scrapes parse as valid
+//! Prometheus text format with monotone counters and stable tenant
+//! label sets, the final latency gauges agree with the `--json-out`
+//! quantiles, and `/readyz` observes both the Stepping→Draining
+//! transition and a `--chaos` crash window (503 while the crashed
+//! worker is down, 200 again once the window expires and the engine's
+//! backed-off readmit revives it).
+
+use std::net::TcpListener;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use usec::config::types::RunConfig;
+use usec::error::Result;
+use usec::net::daemon::{serve_worker, DaemonOpts};
+use usec::obs::expose::sample_value;
+use usec::obs::{http_get, parse_prometheus, MetricsServer, Sample, Telemetry};
+use usec::placement::PlacementKind;
+use usec::sched::RecoveryPolicy;
+use usec::serve::{Query, ServeSession, SessionOpts};
+
+const Q: usize = 48;
+const SEED: u64 = 17;
+
+fn start_workers(n: usize) -> (Vec<String>, Vec<JoinHandle<Result<()>>>) {
+    let mut addrs = Vec::new();
+    let mut handles = Vec::new();
+    for _ in 0..n {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        addrs.push(listener.local_addr().unwrap().to_string());
+        handles.push(std::thread::spawn(move || {
+            serve_worker(
+                listener,
+                DaemonOpts {
+                    max_sessions: 1,
+                    ..Default::default()
+                },
+            )
+        }));
+    }
+    (addrs, handles)
+}
+
+/// Full replication (cyclic J=3 of G=3) with S=1: the cluster stays
+/// dispatchable with one worker down, so chaos crash windows can expire.
+fn serve_cfg(workers: Vec<String>) -> RunConfig {
+    RunConfig {
+        q: Q,
+        r: Q,
+        g: 3,
+        j: 3,
+        n: 3,
+        placement: PlacementKind::Cyclic,
+        stragglers: 1,
+        steps: 1,
+        speeds: vec![1.0, 1.0, 1.0],
+        seed: SEED,
+        stream_data: !workers.is_empty(),
+        recovery: RecoveryPolicy::enabled(),
+        workers,
+        ..Default::default()
+    }
+}
+
+/// Sorted distinct tenant labels of `name` in one scrape.
+fn tenant_set(samples: &[Sample], name: &str) -> Vec<String> {
+    let mut vals: Vec<String> = samples
+        .iter()
+        .filter(|s| s.name == name)
+        .filter_map(|s| s.label("tenant").map(str::to_string))
+        .collect();
+    vals.sort();
+    vals.dedup();
+    vals
+}
+
+#[test]
+fn concurrent_scrapes_of_a_tcp_serve_cluster_are_valid_and_monotone() {
+    let (addrs, handles) = start_workers(3);
+    let cfg = serve_cfg(addrs);
+    let mut session = ServeSession::build(&cfg, &SessionOpts::default()).unwrap();
+    let tel = Arc::new(Telemetry::new(cfg.n, cfg.j));
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let srv = MetricsServer::spawn(listener, Arc::clone(&tel)).unwrap();
+    let addr = srv.addr().to_string();
+    session.set_telemetry(Some(Arc::clone(&tel)));
+
+    // two tenants; alice's pagerank rides many steps so the scraper
+    // overlaps a stepping cluster, not an already-drained one
+    session
+        .submit(
+            "alice",
+            Query::Pagerank {
+                seed_node: 3,
+                damping: 0.85,
+            },
+            0.0,
+            40,
+        )
+        .unwrap();
+    session
+        .submit(
+            "bob",
+            Query::Matvec {
+                v: (0..Q).map(|i| (i as f32).sin()).collect(),
+            },
+            1e-6,
+            1,
+        )
+        .unwrap();
+    session
+        .submit(
+            "bob",
+            Query::Ridge {
+                b: (0..Q).map(|i| if i % 2 == 0 { 1.0 } else { -1.0 }).collect(),
+                lambda: 3.0,
+                eta: 0.13,
+            },
+            0.0,
+            30,
+        )
+        .unwrap();
+
+    // scraper thread: hammer /metrics and /readyz while the main
+    // thread drains the session
+    let stop = Arc::new(AtomicBool::new(false));
+    let scraper = {
+        let stop = Arc::clone(&stop);
+        let addr = addr.clone();
+        std::thread::spawn(move || {
+            let mut scrapes: Vec<Vec<Sample>> = Vec::new();
+            let mut ready_codes: Vec<u16> = Vec::new();
+            while !stop.load(Ordering::Relaxed) {
+                let (code, body) = http_get(&addr, "/metrics", Duration::from_secs(2))
+                    .expect("scrape reaches the endpoint");
+                assert_eq!(code, 200);
+                scrapes.push(parse_prometheus(&body).expect("valid exposition text"));
+                let (code, _) = http_get(&addr, "/readyz", Duration::from_secs(2))
+                    .expect("probe reaches the endpoint");
+                ready_codes.push(code);
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            (scrapes, ready_codes)
+        })
+    };
+
+    let responses = session.run_until_drained(2000).unwrap();
+    stop.store(true, Ordering::Relaxed);
+    let (scrapes, ready_codes) = scraper.join().unwrap();
+    assert_eq!(responses.len(), 3);
+    assert!(
+        scrapes.len() >= 3,
+        "expected several concurrent scrapes, got {}",
+        scrapes.len()
+    );
+
+    // counters are monotone across consecutive scrapes
+    let series = |name: &str, label: Option<(&str, &str)>| -> Vec<f64> {
+        scrapes
+            .iter()
+            .filter_map(|s| sample_value(s, name, label))
+            .collect()
+    };
+    for (name, label) in [
+        ("usec_steps_total", None),
+        ("usec_worker_orders_total", Some(("worker", "0"))),
+        ("usec_worker_rows_total", Some(("worker", "1"))),
+        ("usec_tenant_requests_total", Some(("tenant", "bob"))),
+    ] {
+        let vals = series(name, label);
+        assert!(
+            vals.windows(2).all(|w| w[1] >= w[0]),
+            "{name} went backwards across scrapes: {vals:?}"
+        );
+    }
+    let steps_seen = series("usec_steps_total", None);
+    assert!(
+        steps_seen.last().copied().unwrap_or(0.0) > 0.0,
+        "no step ever surfaced in a scrape"
+    );
+
+    // tenant label sets are stable: empty before the first SLO tick,
+    // exactly {alice, bob} from then on — never a partial set
+    for s in &scrapes {
+        let tenants = tenant_set(s, "usec_tenant_requests_total");
+        assert!(
+            tenants.is_empty() || tenants == ["alice", "bob"],
+            "unstable tenant label set: {tenants:?}"
+        );
+    }
+
+    // the cluster was ready the whole time it served
+    assert!(!ready_codes.is_empty());
+    assert!(
+        ready_codes.iter().all(|&c| c == 200),
+        "healthy serving flapped /readyz: {ready_codes:?}"
+    );
+
+    // final per-tenant latency gauges agree with the published snapshot
+    // and bracket the --json-out quantiles (same latencies, rolling vs
+    // exact quantile — generous resolution bounds, not equality)
+    let (code, body) = http_get(&addr, "/metrics", Duration::from_secs(2)).unwrap();
+    assert_eq!(code, 200);
+    let last = parse_prometheus(&body).unwrap();
+    let snap = tel.tenants();
+    assert_eq!(snap.len(), 2);
+    for (tenant, stats) in &snap {
+        for (q, v) in [("0.5", stats.latency_p50_ns), ("0.99", stats.latency_p99_ns)] {
+            let gauge = last
+                .iter()
+                .find(|s| {
+                    s.name == "usec_tenant_latency_ns"
+                        && s.label("tenant") == Some(tenant.as_str())
+                        && s.label("quantile") == Some(q)
+                })
+                .unwrap_or_else(|| panic!("{tenant} missing latency quantile {q}"))
+                .value;
+            assert!(
+                (gauge - v).abs() <= 1e-3 * v.abs().max(1.0),
+                "{tenant} p{q} gauge {gauge} drifted from snapshot {v}"
+            );
+        }
+    }
+    let tl = session.finish().unwrap();
+    let summary = tl.serve().expect("serve summary attached");
+    assert_eq!(summary.requests, 3);
+    let p50s: Vec<f64> = snap.values().map(|s| s.latency_p50_ns).collect();
+    let p99s: Vec<f64> = snap.values().map(|s| s.latency_p99_ns).collect();
+    let lo = 0.25 * p50s.iter().fold(f64::MAX, |a, &b| a.min(b));
+    let hi = 4.0 * p99s.iter().fold(0.0f64, |a, &b| a.max(b));
+    assert!(
+        summary.latency_p50_ns >= lo && summary.latency_p99_ns <= hi,
+        "summary quantiles [{}, {}] escaped the tenant gauge envelope [{lo}, {hi}]",
+        summary.latency_p50_ns,
+        summary.latency_p99_ns,
+    );
+
+    // Stepping→Draining observed: the drain flipped /readyz to 503
+    let (code, body) = http_get(&addr, "/readyz", Duration::from_secs(2)).unwrap();
+    assert_eq!(code, 503, "drained engine still reports ready");
+    assert!(body.contains("draining"), "{body}");
+    srv.stop();
+    for h in handles {
+        h.join().unwrap().unwrap();
+    }
+}
+
+#[test]
+fn chaos_crash_window_flips_readyz_to_503_and_back() {
+    // local transport; worker 2 crashes at step 2 and stays down for 2
+    // chaos-observed steps. S=1 over full replication keeps the cluster
+    // dispatchable meanwhile, so the window can expire and the engine's
+    // backed-off readmit auto-revives the worker.
+    let mut cfg = serve_cfg(vec![]);
+    cfg.chaos = "crash=2@2+2".to_string();
+    // fast overdue detection: the crashed step recovers in ~100ms
+    cfg.recovery = RecoveryPolicy {
+        enabled: true,
+        overdue_factor: 0.05,
+    };
+    let mut session = ServeSession::build(&cfg, &SessionOpts::default()).unwrap();
+    let tel = Arc::new(Telemetry::new(cfg.n, cfg.j));
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let srv = MetricsServer::spawn(listener, Arc::clone(&tel)).unwrap();
+    let addr = srv.addr().to_string();
+    session.set_telemetry(Some(Arc::clone(&tel)));
+
+    // one long-riding request keeps the step loop busy across the
+    // crash, the down window, and the revival
+    session
+        .submit(
+            "alice",
+            Query::Pagerank {
+                seed_node: 1,
+                damping: 0.85,
+            },
+            0.0,
+            400,
+        )
+        .unwrap();
+
+    let mut codes = Vec::new();
+    for _ in 0..400 {
+        let done = session.step_once().unwrap();
+        let (code, _) = http_get(&addr, "/readyz", Duration::from_secs(2)).unwrap();
+        codes.push(code);
+        if !done.is_empty() {
+            break;
+        }
+        // revived after the crash window: the probe sequence is complete
+        if codes.contains(&503) && codes.last() == Some(&200) {
+            break;
+        }
+        // give the ~50ms dial backoff wall-clock room to expire
+        std::thread::sleep(Duration::from_millis(5));
+    }
+
+    assert_eq!(codes.first(), Some(&200), "cluster not ready before the crash");
+    assert!(
+        codes.contains(&503),
+        "crash window never flipped /readyz: {codes:?}"
+    );
+    assert_eq!(
+        codes.last(),
+        Some(&200),
+        "worker never auto-revived within the step budget: {codes:?}"
+    );
+    // the 503s form one contiguous window between the two ready phases
+    let first = codes.iter().position(|&c| c == 503).unwrap();
+    let last = codes.iter().rposition(|&c| c == 503).unwrap();
+    assert!(
+        codes[first..=last].iter().all(|&c| c == 503),
+        "readiness flapped inside the crash window: {codes:?}"
+    );
+    assert!(tel.faults.get() >= 1, "the crash was never counted as a fault");
+    assert!(
+        tel.worker_alive(2),
+        "telemetry still reports the revived worker dead"
+    );
+
+    srv.stop();
+    session.finish().unwrap();
+}
